@@ -1,0 +1,48 @@
+//! Multi-agent deployment (§IV-A-3 / Fig. 8): embed requests from four
+//! agent task families with the compiled embedder, cluster them with
+//! modularity maximization, and derive per-community max_tokens — then
+//! route fresh requests to their community's configuration.
+
+use enova::clusterer::Communities;
+use enova::runtime::embedder::EmbedRuntime;
+use enova::runtime::{Manifest, PjRt};
+use enova::util::rng::Pcg64;
+use enova::workload::corpus::{render_prompt, sample_item, ALL_FAMILIES, ALL_PARADIGMS};
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let rt = PjRt::cpu()?;
+    let embedder = EmbedRuntime::load(rt, &manifest)?;
+
+    // "historical" requests with observed output lengths
+    let mut rng = Pcg64::new(9);
+    let mut texts = Vec::new();
+    let mut lens = Vec::new();
+    for family in ALL_FAMILIES {
+        for paradigm in ALL_PARADIGMS {
+            for _ in 0..10 {
+                texts.push(render_prompt(family, paradigm, &mut rng));
+                lens.push(family.sample_output_len(&mut rng));
+            }
+        }
+    }
+    let refs: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
+    let emb = embedder.embed(&refs)?;
+    let comms = Communities::fit(&emb, &lens, 0.55, 4096);
+    println!("discovered {} communities from {} requests", comms.len(), texts.len());
+    for (c, (mt, size)) in comms.max_tokens.iter().zip(&comms.sizes).enumerate() {
+        println!("  community {c}: {size} requests, max_tokens {mt}");
+    }
+
+    // fresh requests from each family get their community's max_tokens
+    println!("\nrouting fresh agent requests:");
+    for family in ALL_FAMILIES {
+        let item = sample_item(family, &mut rng);
+        let e = embedder.embed(&[&item.text])?;
+        let (c, mt) = comms.assign(&e[0]).expect("assignment");
+        println!("  {:8} → community {c} (max_tokens {mt})", family.name());
+    }
+    assert!(comms.len() >= 3, "expected ≥3 task communities");
+    println!("OK: multi-agent clustering + per-community configuration");
+    Ok(())
+}

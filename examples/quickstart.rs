@@ -1,0 +1,66 @@
+//! Quickstart: load the compiled tiny LM, serve a handful of prompts
+//! through the continuous-batching engine, print completions + timing.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use enova::engine::{Engine, EngineConfig};
+use enova::runtime::lm::{ExecMode, LmRuntime};
+use enova::runtime::{Manifest, PjRt};
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    println!(
+        "model: {} params, batch {}, ctx {}, vocab {}",
+        manifest.model.param_count,
+        manifest.model.batch,
+        manifest.model.max_seq,
+        manifest.model.vocab
+    );
+    let rt = PjRt::cpu()?;
+    let lm = LmRuntime::load(rt, &manifest, ExecMode::Chained)?;
+    let mut engine = Engine::new(
+        lm,
+        EngineConfig {
+            max_num_seqs: 8,
+            max_tokens: 32,
+            temperature: 0.8,
+        },
+        42,
+    );
+
+    let prompts = [
+        "Solve this grade school math problem: a farmer has 12 eggs",
+        "Write a python function to merge overlapping intervals",
+        "Why do metals conduct electricity?",
+        "Read the story about the lost kite and answer the question",
+    ];
+    for p in prompts {
+        engine.submit(p, 32);
+    }
+    let t0 = std::time::Instant::now();
+    let completions = engine.run_to_completion()?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    for c in &completions {
+        println!(
+            "[req {}] {:?} ({} tokens, ttft {:.0}ms, total {:.0}ms, {} output bytes)",
+            c.id,
+            c.finish_reason,
+            c.tokens.len(),
+            (c.first_token_at - c.arrival) * 1e3,
+            (c.finished_at - c.arrival) * 1e3,
+            c.text.len(),
+        );
+    }
+    let tokens: usize = completions.iter().map(|c| c.tokens.len()).sum();
+    println!(
+        "served {} requests / {} tokens in {:.2}s ({:.0} tok/s on CPU PJRT)",
+        completions.len(),
+        tokens,
+        wall,
+        tokens as f64 / wall
+    );
+    Ok(())
+}

@@ -1,0 +1,211 @@
+"""AOT entry point: lower every L2 program to HLO text + write the manifest.
+
+Run once by ``make artifacts``; python never runs on the request path.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Everything is lowered with ``return_tuple=False`` so each program has a
+single array root — that lets the rust runtime chain outputs back into
+inputs as device-resident ``PjRtBuffer``s (``execute_b``) without tuple
+unpacking on the host.
+
+Artifacts:
+  model.decode / model.prefill  — state-carry LM programs (weights baked)
+  vae_score                     — trained detection VAE scorer
+  embed                         — request-embedding projection
+  manifest.json                 — dims/offsets/files for the rust loader
+  detection_dataset.csv         — labeled 4-week metric traces (Table IV)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import embedder, traces, vae
+from .model import ModelConfig, init_params, make_entry_points
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    # print_large_constants is essential: the default printer elides big
+    # constants as `{...}`, which the HLO text parser silently reads back
+    # as zeros — i.e. the baked model weights would vanish.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # the image's xla_extension 0.5.1 parser predates source_end_line/
+    # source_end_column metadata — strip metadata entirely
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def lower_to_file(fn, args, path: str) -> int:
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build(out_dir: str, seed: int = 0, quick: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    t0 = time.time()
+    manifest: dict = {"version": 1, "seed": seed}
+
+    # ---- L2 model (uses the L1 Pallas kernels) -------------------------
+    cfg = ModelConfig()
+    params = init_params(cfg, seed=seed)
+    decode_fn, prefill_fn = make_entry_points(cfg, params)
+
+    decode_file = f"decode_b{cfg.batch}_s{cfg.max_seq}.hlo.txt"
+    prefill_file = f"prefill_s{cfg.max_seq}.hlo.txt"
+    n1 = lower_to_file(
+        decode_fn,
+        (f32(cfg.state_elems), i32(cfg.batch), i32(cfg.batch)),
+        os.path.join(out_dir, decode_file),
+    )
+    n2 = lower_to_file(
+        prefill_fn,
+        (f32(cfg.state_elems), i32(cfg.max_seq), i32(), i32()),
+        os.path.join(out_dir, prefill_file),
+    )
+    # Auxiliary extractor: the CPU PJRT plugin doesn't implement
+    # CopyRawToHost, so the rust side reads logits by running this tiny
+    # program on the device-resident state and materializing only its
+    # B×V output (the KV cache never crosses the host boundary).
+    extract_file = "extract_logits.hlo.txt"
+
+    def extract_logits(state):
+        return state[: cfg.logits_elems].reshape(cfg.batch, cfg.vocab)
+
+    lower_to_file(
+        extract_logits, (f32(cfg.state_elems),), os.path.join(out_dir, extract_file)
+    )
+
+    manifest["model"] = {
+        "decode_file": decode_file,
+        "prefill_file": prefill_file,
+        "extract_file": extract_file,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "head_dim": cfg.head_dim,
+        "d_ff": cfg.d_ff,
+        "max_seq": cfg.max_seq,
+        "batch": cfg.batch,
+        "kv_elems": cfg.kv_elems,
+        "layout": "logits_first",
+        "state_elems": cfg.state_elems,
+        "param_count": cfg.param_count,
+    }
+    print(f"[aot] model lowered ({n1 + n2} chars) in {time.time()-t0:.1f}s")
+
+    # ---- golden outputs: pin the python→HLO→rust numeric bridge -------
+    # A fixed prompt prefilled into slot 1 followed by one decode step;
+    # rust/tests/runtime_golden.rs must reproduce these logits bit-close.
+    rng = np.random.default_rng(123)
+    plen = 12
+    toks = rng.integers(3, cfg.vocab, size=cfg.max_seq).astype(np.int32)
+    state = jnp.zeros((cfg.state_elems,), jnp.float32)
+    state = jax.jit(prefill_fn)(state, jnp.asarray(toks), jnp.int32(plen), jnp.int32(1))
+    logits_prefill = np.asarray(state[:cfg.logits_elems]).reshape(cfg.batch, cfg.vocab)[1]
+    dt = np.zeros(cfg.batch, np.int32)
+    dl = np.zeros(cfg.batch, np.int32)
+    dt[1] = int(np.argmax(logits_prefill))
+    dl[1] = plen
+    state = jax.jit(decode_fn)(state, jnp.asarray(dt), jnp.asarray(dl))
+    logits_decode = np.asarray(state[:cfg.logits_elems]).reshape(cfg.batch, cfg.vocab)[1]
+    manifest["golden"] = {
+        "prompt": [int(t) for t in toks[:plen]],
+        "prompt_len": plen,
+        "slot": 1,
+        "prefill_argmax": int(np.argmax(logits_prefill)),
+        "prefill_logits_head": [float(x) for x in logits_prefill[:16]],
+        "decode_token": int(dt[1]),
+        "decode_argmax": int(np.argmax(logits_decode)),
+        "decode_logits_head": [float(x) for x in logits_decode[:16]],
+    }
+
+    # ---- detection traces + VAE ---------------------------------------
+    t1 = time.time()
+    ts = traces.generate(seed=7)
+    csv_path = os.path.join(out_dir, "detection_dataset.csv")
+    traces.write_csv(ts, csv_path)
+    tr_x, tr_l, te_x, te_l = traces.train_test(ts)
+    vcfg = vae.VaeConfig(epochs=3 if quick else 30)
+    result = vae.train(tr_x, tr_l, vcfg)
+    scorer = vae.make_scorer(result, vcfg, batch=256)
+    vae_file = "vae_score.hlo.txt"
+    lower_to_file(scorer, (f32(256, vcfg.n_features),), os.path.join(out_dir, vae_file))
+    manifest["vae"] = {
+        "file": vae_file,
+        "batch": 256,
+        "n_features": vcfg.n_features,
+        "metric_names": traces.METRIC_NAMES,
+        "train_rows": int(len(tr_x)),
+        "test_rows": int(len(te_x)),
+        "test_anomalies": int(te_l.sum()),
+        "final_loss": float(result.losses[-1]),
+        "mean": [float(v) for v in result.mean],
+        "std": [float(v) for v in result.std],
+    }
+    manifest["detection_dataset"] = "detection_dataset.csv"
+    print(
+        f"[aot] traces+vae done in {time.time()-t1:.1f}s "
+        f"(train={len(tr_x)} test={len(te_x)} anomalies={int(te_l.sum())}, "
+        f"final loss {result.losses[-1]:.3f})"
+    )
+
+    # ---- request embedder ----------------------------------------------
+    embed_fn = embedder.make_embed_fn()
+    embed_file = "embed.hlo.txt"
+    lower_to_file(
+        embed_fn,
+        (f32(embedder.EMBED_BATCH, embedder.HASH_DIM),),
+        os.path.join(out_dir, embed_file),
+    )
+    manifest["embed"] = {
+        "file": embed_file,
+        "batch": embedder.EMBED_BATCH,
+        "hash_dim": embedder.HASH_DIM,
+        "embed_dim": embedder.EMBED_DIM,
+    }
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] all artifacts written to {out_dir} in {time.time()-t0:.1f}s")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true", help="fast VAE training (tests)")
+    args = ap.parse_args()
+    build(args.out, seed=args.seed, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

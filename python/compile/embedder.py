@@ -1,0 +1,62 @@
+"""Request-text embedder (stand-in for bge-large-en, DESIGN.md §Substitutions).
+
+The paper embeds request text with bge-large-en before community detection
+(§IV-A-3). That checkpoint is unavailable offline, so we use the classic
+feature-hashing construction: the rust side hashes character n-grams of the
+request into a ``HASH_DIM`` count vector (``clusterer::features`` — the same
+hash function is mirrored in ``python/tests/test_embedder.py``), and this
+module provides the dense half: a fixed random projection + tanh + L2
+normalization, lowered to ``artifacts/embed.hlo.txt``.
+
+Johnson–Lindenstrauss gives distance preservation, so "same task template ⇒
+nearby, different task ⇒ separated" — the only property clustering needs —
+survives the substitution.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+HASH_DIM = 1024
+EMBED_DIM = 64
+EMBED_BATCH = 32
+PROJ_SEED = 11
+
+
+def projection_matrix() -> np.ndarray:
+    rng = np.random.default_rng(PROJ_SEED)
+    return rng.normal(0.0, 1.0 / np.sqrt(HASH_DIM), (HASH_DIM, EMBED_DIM)).astype(
+        np.float32
+    )
+
+
+def make_embed_fn():
+    w = jnp.asarray(projection_matrix())
+
+    def embed(x):
+        """``x`` f32[B, HASH_DIM] (l1-normalized n-gram counts) → f32[B, EMBED_DIM]."""
+        y = jnp.tanh(x @ w * 8.0)
+        norm = jnp.sqrt(jnp.sum(y * y, axis=-1, keepdims=True))
+        return y / jnp.maximum(norm, 1e-9)
+
+    return embed
+
+
+def hash_ngrams(text: str, n: int = 3) -> np.ndarray:
+    """FNV-1a character-n-gram feature hashing.
+
+    Mirrored bit-for-bit by rust ``clusterer::features::hash_ngrams`` — the
+    cross-language agreement is asserted in tests on both sides.
+    """
+    v = np.zeros(HASH_DIM, dtype=np.float32)
+    data = text.lower().encode("utf-8")
+    if len(data) < n:
+        data = data + b" " * (n - len(data))
+    for i in range(len(data) - n + 1):
+        h = np.uint64(0xCBF29CE484222325)
+        for b in data[i : i + n]:
+            h = np.uint64((int(h) ^ b) * 0x100000001B3 % (1 << 64))
+        v[int(h % HASH_DIM)] += 1.0
+    s = v.sum()
+    return v / s if s > 0 else v

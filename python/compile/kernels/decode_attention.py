@@ -1,0 +1,129 @@
+"""Pallas flash-decode attention kernel (L1).
+
+The serving hot-spot: one query token per sequence attends over that
+sequence's KV cache. This is the TPU re-think of vLLM's PagedAttention CUDA
+kernel (DESIGN.md §Hardware-Adaptation):
+
+* CUDA assigns a threadblock per (sequence, head) and strides warps over KV
+  pages in shared memory. Here the Pallas **grid** is ``(B, H, S/block_k)``
+  and ``BlockSpec`` index maps express the HBM→VMEM tile schedule.
+* The softmax is computed **online** (flash-decoding): each KV block updates
+  a running max ``m``, normalizer ``l`` and accumulator ``o`` that live in
+  the revisited output blocks, so only ``(block_k, D)`` KV tiles are resident
+  in VMEM at a time. VMEM footprint per grid step is
+  ``(2*block_k*D + 2*D + 2) * 4`` bytes — e.g. 16.5 KiB for ``block_k=64,
+  D=32`` — far below the ~16 MiB VMEM budget, leaving room for the MXU
+  pipeline to double-buffer tiles.
+* Length masking replaces the paged block table: the L3 KV manager keeps the
+  logical paging; the kernel sees a dense padded cache plus ``seq_lens``.
+
+``interpret=True`` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call that the CPU PJRT plugin cannot execute. Correctness is
+pinned to ``ref.decode_attention_ref`` by the hypothesis sweep in
+``python/tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_attention_kernel(
+    lens_ref,  # [1] int32 — seq_lens[b]
+    q_ref,  # [1, 1, D]
+    k_ref,  # [1, 1, block_k, D]
+    v_ref,  # [1, 1, block_k, D]
+    o_ref,  # [1, 1, D] accumulator, revisited across the kv-block grid dim
+    m_ref,  # [1, 1] running max
+    l_ref,  # [1, 1] running normalizer
+    *,
+    block_k: int,
+    num_blocks: int,
+):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, :]  # [D]
+    k = k_ref[0, 0, :, :]  # [block_k, D]
+    v = v_ref[0, 0, :, :]  # [block_k, D]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+
+    # Scores for this KV tile, with validity masking (flash-decoding step).
+    offs = j * block_k + jnp.arange(block_k, dtype=jnp.int32)
+    valid = offs < lens_ref[0]
+    s = (k @ q) * scale  # [block_k]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    m_new = jnp.maximum(m_new, NEG_INF)  # stay finite on fully-masked tiles
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)  # [block_k]
+    alpha = jnp.exp(m_prev - m_new)
+
+    l_ref[0, 0] = l_ref[0, 0] * alpha + jnp.sum(p)
+    o_ref[0, 0, :] = o_ref[0, 0, :] * alpha + p @ v
+    m_ref[0, 0] = m_new
+
+    @pl.when(j == num_blocks - 1)
+    def _finalize():
+        o_ref[0, 0, :] = o_ref[0, 0, :] / jnp.maximum(l_ref[0, 0], 1e-9)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    seq_lens: jnp.ndarray,
+    *,
+    block_k: int = 64,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Flash-decode attention. Shapes as in ``ref.decode_attention_ref``.
+
+    ``S`` must be a multiple of ``block_k`` (the L3 engine always compiles
+    power-of-two caches); smaller caches simply pass a smaller ``block_k``.
+    """
+    b, h, d = q.shape
+    s = k.shape[2]
+    if s % block_k != 0:
+        raise ValueError(f"S={s} not a multiple of block_k={block_k}")
+    num_blocks = s // block_k
+
+    kernel = functools.partial(
+        _decode_attention_kernel, block_k=block_k, num_blocks=num_blocks
+    )
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid=(b, h, num_blocks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j, t: (i,)),
+            pl.BlockSpec((1, 1, d), lambda i, j, t: (i, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda i, j, t: (i, j, t, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda i, j, t: (i, j, t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, d), lambda i, j, t: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, t: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j, t: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h), q.dtype),
+            jax.ShapeDtypeStruct((b, h), q.dtype),
+        ],
+        interpret=interpret,
+    )(seq_lens, q, k, v)
+    return out

@@ -1,0 +1,80 @@
+"""Pallas fused SwiGLU feed-forward kernel (L1).
+
+Fuses ``silu(x @ w_gate) * (x @ w_up) @ w_down`` into a single kernel so the
+``[N, d_ff]`` intermediate never materializes in HBM — the GPU version of
+this trick keeps the intermediate in registers/shared memory; on TPU the
+equivalent is a VMEM-resident ``(block_n, block_f)`` tile that is consumed by
+the down-projection matmul in the same grid step (DESIGN.md
+§Hardware-Adaptation).
+
+Tiling: grid ``(N/block_n, d_ff/block_f)``. Each step loads an activation
+tile ``[block_n, d_model]``, weight tiles ``[d_model, block_f]`` /
+``[block_f, d_model]``, and accumulates partial down-projections into the
+revisited output tile. All three matmuls are MXU-shaped (inner dims are the
+full ``d_model``/``block_f``, multiples of 128/64 in the shipped configs).
+VMEM per step for the default ``block_n=8, block_f=128, d_model=128`` config:
+(8*128 + 2*128*128 + 128*128 + 8*128 + 8*128)*4B ≈ 208 KiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, *, num_f_blocks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # [block_n, d_model]
+    g = x @ wg_ref[...]  # [block_n, block_f]
+    u = x @ wu_ref[...]  # [block_n, block_f]
+    act = g * jnp.reciprocal(1.0 + jnp.exp(-g)) * u  # silu(g) * u
+    o_ref[...] += act @ wd_ref[...]  # [block_n, d_model]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_f", "interpret")
+)
+def fused_ffn(
+    x: jnp.ndarray,
+    w_gate: jnp.ndarray,
+    w_up: jnp.ndarray,
+    w_down: jnp.ndarray,
+    *,
+    block_n: int = 8,
+    block_f: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused SwiGLU FFN. Shapes as in ``ref.fused_ffn_ref``.
+
+    ``N`` must be a multiple of ``block_n`` and ``d_ff`` of ``block_f``.
+    """
+    n, d_model = x.shape
+    d_ff = w_gate.shape[1]
+    if n % block_n != 0:
+        raise ValueError(f"N={n} not a multiple of block_n={block_n}")
+    if d_ff % block_f != 0:
+        raise ValueError(f"d_ff={d_ff} not a multiple of block_f={block_f}")
+    grid = (n // block_n, d_ff // block_f)
+
+    kernel = functools.partial(_fused_ffn_kernel, num_f_blocks=grid[1])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d_model), lambda i, j: (i, 0)),
+            pl.BlockSpec((d_model, block_f), lambda i, j: (0, j)),
+            pl.BlockSpec((d_model, block_f), lambda i, j: (0, j)),
+            pl.BlockSpec((block_f, d_model), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, d_model), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d_model), x.dtype),
+        interpret=interpret,
+    )(x, w_gate, w_up, w_down)

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+must match its oracle to float32 tolerance across the shape/dtype sweep in
+``python/tests/test_kernels.py`` (hypothesis-driven). They are also used
+directly by the prefill path of the L2 model, where standard full-sequence
+attention is fine.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    seq_lens: jnp.ndarray,
+) -> jnp.ndarray:
+    """Single-query (decode-phase) attention over a padded KV cache.
+
+    Args:
+      q: ``[B, H, D]`` query for the token being generated.
+      k: ``[B, H, S, D]`` key cache (padded to ``S``).
+      v: ``[B, H, S, D]`` value cache (padded to ``S``).
+      seq_lens: ``[B]`` int32, number of valid cache positions per sequence.
+        Positions ``>= seq_lens[b]`` are masked out. ``seq_lens[b] == 0``
+        yields a zero output row (inactive slot).
+
+    Returns:
+      ``[B, H, D]`` attention output.
+    """
+    b, h, s, d = k.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    # [B, H, S]
+    scores = jnp.einsum("bhd,bhsd->bhs", q, k) * scale
+    pos = jnp.arange(s, dtype=jnp.int32)
+    mask = pos[None, None, :] < seq_lens[:, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    m = jnp.maximum(m, NEG_INF)  # keep finite for fully-masked rows
+    p = jnp.where(mask, jnp.exp(scores - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhs,bhsd->bhd", p, v)
+    return out / jnp.maximum(l, 1e-9)
+
+
+def fused_ffn_ref(
+    x: jnp.ndarray,
+    w_gate: jnp.ndarray,
+    w_up: jnp.ndarray,
+    w_down: jnp.ndarray,
+) -> jnp.ndarray:
+    """SwiGLU feed-forward: ``silu(x @ w_gate) * (x @ w_up) @ w_down``.
+
+    Args:
+      x: ``[N, d_model]`` activations.
+      w_gate / w_up: ``[d_model, d_ff]``.
+      w_down: ``[d_ff, d_model]``.
+    """
+    g = x @ w_gate
+    u = x @ w_up
+    act = g * jnp.reciprocal(1.0 + jnp.exp(-g)) * u  # silu(g) * u
+    return act @ w_down
+
+
+def full_attention_ref(
+    x_q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    prompt_len: jnp.ndarray,
+) -> jnp.ndarray:
+    """Causal full-sequence attention used by the prefill path.
+
+    Args:
+      x_q: ``[H, S, D]`` queries for all prompt positions.
+      k, v: ``[H, S, D]`` keys/values for all prompt positions.
+      prompt_len: scalar int32; positions ``>= prompt_len`` are padding.
+
+    Returns:
+      ``[H, S, D]``.
+    """
+    h, s, d = k.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=x_q.dtype))
+    scores = jnp.einsum("hqd,hkd->hqk", x_q, k) * scale
+    pos = jnp.arange(s, dtype=jnp.int32)
+    causal = pos[None, :, None] >= pos[None, None, :]
+    valid = pos[None, None, :] < prompt_len
+    mask = jnp.logical_and(causal, valid)
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.where(mask, jnp.exp(scores - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", p, v) / jnp.maximum(l, 1e-9)

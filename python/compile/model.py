@@ -1,0 +1,300 @@
+"""L2: tiny LLaMA-style causal LM served end-to-end by the rust engine.
+
+Two entry points are AOT-lowered to HLO text (weights baked as constants):
+
+* ``prefill(state, tokens[S], prompt_len, slot)`` — full causal forward of
+  one prompt; writes the prompt's KV into batch slot ``slot`` of the shared
+  cache and the last-token logits into the logits region.
+* ``decode_step(state, tokens[B], seq_lens[B])`` — one autoregressive step
+  for the whole running batch (continuous batching happens in rust: the
+  engine fills/clears slots between steps). Uses the Pallas flash-decode
+  attention kernel and fused SwiGLU kernel.
+
+**State-carry layout.** Both functions map ``f32[STATE] -> f32[STATE]`` with
+``STATE = B*V + KV_ELEMS`` (logits FIRST):
+
+```
+state[0 : B*V]   — logits scratch, shape [B, V]
+state[B*V : ]    — KV cache, shape [L, 2, B, H, S, D] (0=key, 1=value)
+```
+
+A single (non-tuple) array output lets the rust runtime chain steps entirely
+on-device via ``execute_b`` and read back only the ``B*V`` logits head with
+``copy_raw_to_host_sync`` — the KV cache never crosses the host boundary on
+the request path (EXPERIMENTS.md §Perf). Logits live at the *front* because
+PJRT's ``CopyRawToHost`` takes a byte offset while the rust wrapper
+bounds-checks in elements: only small offsets satisfy both conventions.
+
+Positions use learned absolute embeddings (cache-friendly: cached K/V are
+position-independent transforms, so slots can be filled in any order).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.decode_attention import decode_attention
+from .kernels.fused_ffn import fused_ffn
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Dimensions of the served model. Defaults are the shipped artifact."""
+
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    head_dim: int = 32
+    d_ff: int = 512
+    max_seq: int = 128  # S: compiled KV capacity per sequence
+    batch: int = 8  # B: compiled running-batch width (max_num_seqs upper bound)
+
+    @property
+    def kv_elems(self) -> int:
+        return (
+            self.n_layers * 2 * self.batch * self.n_heads * self.max_seq * self.head_dim
+        )
+
+    @property
+    def logits_elems(self) -> int:
+        return self.batch * self.vocab
+
+    @property
+    def state_elems(self) -> int:
+        return self.kv_elems + self.logits_elems
+
+    @property
+    def param_count(self) -> int:
+        per_layer = (
+            4 * self.d_model * self.n_heads * self.head_dim  # q,k,v,o
+            + 3 * self.d_model * self.d_ff  # gate, up, down
+            + 2 * self.d_model  # two rmsnorm scales
+        )
+        return (
+            self.vocab * self.d_model  # tied embed/unembed
+            + self.max_seq * self.d_model  # learned positions
+            + self.n_layers * per_layer
+            + self.d_model  # final norm
+        )
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Deterministic small-scale init (the serving paper never trains)."""
+    rng = np.random.default_rng(seed)
+
+    def mat(*shape, scale=None):
+        scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+        return jnp.asarray(rng.normal(0.0, scale, size=shape), jnp.float32)
+
+    p: Dict[str, jnp.ndarray] = {
+        "embed": mat(cfg.vocab, cfg.d_model, scale=0.02),
+        "pos": mat(cfg.max_seq, cfg.d_model, scale=0.02),
+        "norm_f": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    hd = cfg.n_heads * cfg.head_dim
+    for l in range(cfg.n_layers):
+        p[f"l{l}.norm1"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p[f"l{l}.norm2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p[f"l{l}.wq"] = mat(cfg.d_model, hd)
+        p[f"l{l}.wk"] = mat(cfg.d_model, hd)
+        p[f"l{l}.wv"] = mat(cfg.d_model, hd)
+        p[f"l{l}.wo"] = mat(hd, cfg.d_model)
+        p[f"l{l}.wg"] = mat(cfg.d_model, cfg.d_ff)
+        p[f"l{l}.wu"] = mat(cfg.d_model, cfg.d_ff)
+        p[f"l{l}.wd"] = mat(cfg.d_ff, cfg.d_model)
+    return p
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def _unpack(state: jnp.ndarray, cfg: ModelConfig):
+    logits = state[: cfg.logits_elems].reshape(cfg.batch, cfg.vocab)
+    kv = state[cfg.logits_elems :].reshape(
+        cfg.n_layers, 2, cfg.batch, cfg.n_heads, cfg.max_seq, cfg.head_dim
+    )
+    return kv, logits
+
+
+def _pack(kv: jnp.ndarray, logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.concatenate([logits.reshape(-1), kv.reshape(-1)])
+
+
+def decode_step(
+    state: jnp.ndarray,
+    tokens: jnp.ndarray,
+    seq_lens: jnp.ndarray,
+    params: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    *,
+    interpret: bool = True,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """One autoregressive step for the running batch.
+
+    ``seq_lens[b]`` is the number of tokens already cached for slot ``b``;
+    the new token is written at that position. ``seq_lens[b] <= 0`` marks an
+    inactive slot: its KV and logits rows are left untouched / zeroed.
+    """
+    kv, _ = _unpack(state, cfg)
+    active = seq_lens > 0
+    pos = jnp.clip(seq_lens, 0, cfg.max_seq - 1)
+
+    x = params["embed"][tokens] + params["pos"][pos]  # [B, dm]
+    x = jnp.where(active[:, None], x, 0.0)
+
+    onehot = (
+        jnp.arange(cfg.max_seq, dtype=jnp.int32)[None, :] == pos[:, None]
+    ) & active[:, None]  # [B, S]
+    oh = onehot.astype(x.dtype)[:, None, :, None]  # [B, 1, S, 1]
+
+    new_kv_layers = []
+    for l in range(cfg.n_layers):
+        h = rmsnorm(x, params[f"l{l}.norm1"])
+        q = (h @ params[f"l{l}.wq"]).reshape(cfg.batch, cfg.n_heads, cfg.head_dim)
+        k = (h @ params[f"l{l}.wk"]).reshape(cfg.batch, cfg.n_heads, cfg.head_dim)
+        v = (h @ params[f"l{l}.wv"]).reshape(cfg.batch, cfg.n_heads, cfg.head_dim)
+
+        # Scatter this step's K/V into the cache at each slot's position.
+        k_cache = kv[l, 0] * (1.0 - oh) + k[:, :, None, :] * oh  # [B,H,S,D]
+        v_cache = kv[l, 1] * (1.0 - oh) + v[:, :, None, :] * oh
+        new_kv_layers.append(jnp.stack([k_cache, v_cache]))
+
+        attn_lens = jnp.where(active, pos + 1, 0)
+        if use_pallas:
+            att = decode_attention(
+                q, k_cache, v_cache, attn_lens,
+                block_k=min(64, cfg.max_seq), interpret=interpret,
+            )
+        else:
+            att = ref.decode_attention_ref(q, k_cache, v_cache, attn_lens)
+        x = x + att.reshape(cfg.batch, -1) @ params[f"l{l}.wo"]
+
+        h2 = rmsnorm(x, params[f"l{l}.norm2"])
+        if use_pallas:
+            y = fused_ffn(
+                h2, params[f"l{l}.wg"], params[f"l{l}.wu"], params[f"l{l}.wd"],
+                block_n=min(8, cfg.batch), block_f=128, interpret=interpret,
+            )
+        else:
+            y = ref.fused_ffn_ref(
+                h2, params[f"l{l}.wg"], params[f"l{l}.wu"], params[f"l{l}.wd"]
+            )
+        x = x + y
+
+    new_kv = jnp.stack(new_kv_layers)  # [L, 2, B, H, S, D]
+    logits = rmsnorm(x, params["norm_f"]) @ params["embed"].T  # [B, V]
+    logits = jnp.where(active[:, None], logits, 0.0)
+    return _pack(new_kv, logits)
+
+
+def prefill(
+    state: jnp.ndarray,
+    tokens: jnp.ndarray,
+    prompt_len: jnp.ndarray,
+    slot: jnp.ndarray,
+    params: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    *,
+    interpret: bool = True,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Full causal forward of one prompt; fills batch slot ``slot``.
+
+    ``tokens`` is ``[S]`` (padded), ``prompt_len`` scalar int32 in
+    ``[1, S]``, ``slot`` scalar int32 in ``[0, B)``. Logits of the last real
+    token land in logits row ``slot``; other rows are preserved.
+    """
+    kv, logits = _unpack(state, cfg)
+    s = cfg.max_seq
+
+    x = params["embed"][tokens] + params["pos"][jnp.arange(s)]  # [S, dm]
+
+    seq_k = []
+    seq_v = []
+    for l in range(cfg.n_layers):
+        h = rmsnorm(x, params[f"l{l}.norm1"])
+        q = (h @ params[f"l{l}.wq"]).reshape(s, cfg.n_heads, cfg.head_dim)
+        k = (h @ params[f"l{l}.wk"]).reshape(s, cfg.n_heads, cfg.head_dim)
+        v = (h @ params[f"l{l}.wv"]).reshape(s, cfg.n_heads, cfg.head_dim)
+        q, k, v = (t.transpose(1, 0, 2) for t in (q, k, v))  # [H, S, D]
+        att = ref.full_attention_ref(q, k, v, prompt_len)  # [H, S, D]
+        x = x + att.transpose(1, 0, 2).reshape(s, -1) @ params[f"l{l}.wo"]
+
+        h2 = rmsnorm(x, params[f"l{l}.norm2"])
+        if use_pallas:
+            y = fused_ffn(
+                h2, params[f"l{l}.wg"], params[f"l{l}.wu"], params[f"l{l}.wd"],
+                block_n=min(8, s), block_f=128, interpret=interpret,
+            )
+        else:
+            y = ref.fused_ffn_ref(
+                h2, params[f"l{l}.wg"], params[f"l{l}.wu"], params[f"l{l}.wd"]
+            )
+        x = x + y
+        seq_k.append(k)
+        seq_v.append(v)
+
+    # Zero out padding positions so stale values never leak into decode.
+    valid = (jnp.arange(s)[None, :, None] < prompt_len).astype(x.dtype)
+    seq_kv = jnp.stack(
+        [jnp.stack([k * valid, v * valid]) for k, v in zip(seq_k, seq_v)]
+    )  # [L, 2, H, S, D]
+    new_kv = jax.lax.dynamic_update_slice(
+        kv, seq_kv[:, :, None], (0, 0, slot, 0, 0, 0)
+    )
+
+    last = jnp.clip(prompt_len - 1, 0, s - 1)
+    last_x = jax.lax.dynamic_slice(x, (last, 0), (1, cfg.d_model))  # [1, dm]
+    row = rmsnorm(last_x, params["norm_f"]) @ params["embed"].T  # [1, V]
+    new_logits = jax.lax.dynamic_update_slice(logits, row, (slot, 0))
+    return _pack(new_kv, new_logits)
+
+
+def full_forward_logits(
+    tokens: jnp.ndarray,
+    prompt_len: jnp.ndarray,
+    params: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+) -> jnp.ndarray:
+    """Reference: logits at every position of a single sequence ``[S, V]``.
+
+    Used only by tests to validate prefill/decode cache equivalence.
+    """
+    s = tokens.shape[0]
+    x = params["embed"][tokens] + params["pos"][jnp.arange(s)]
+    for l in range(cfg.n_layers):
+        h = rmsnorm(x, params[f"l{l}.norm1"])
+        q = (h @ params[f"l{l}.wq"]).reshape(s, cfg.n_heads, cfg.head_dim)
+        k = (h @ params[f"l{l}.wk"]).reshape(s, cfg.n_heads, cfg.head_dim)
+        v = (h @ params[f"l{l}.wv"]).reshape(s, cfg.n_heads, cfg.head_dim)
+        q, k, v = (t.transpose(1, 0, 2) for t in (q, k, v))
+        att = ref.full_attention_ref(q, k, v, prompt_len)
+        x = x + att.transpose(1, 0, 2).reshape(s, -1) @ params[f"l{l}.wo"]
+        h2 = rmsnorm(x, params[f"l{l}.norm2"])
+        x = x + ref.fused_ffn_ref(
+            h2, params[f"l{l}.wg"], params[f"l{l}.wu"], params[f"l{l}.wd"]
+        )
+    return rmsnorm(x, params["norm_f"]) @ params["embed"].T
+
+
+def make_entry_points(cfg: ModelConfig, params: Dict[str, jnp.ndarray]):
+    """Weight-baked jittable callables for AOT lowering."""
+
+    def decode_fn(state, tokens, seq_lens):
+        return decode_step(state, tokens, seq_lens, params, cfg)
+
+    def prefill_fn(state, tokens, prompt_len, slot):
+        return prefill(state, tokens, prompt_len, slot, params, cfg)
+
+    return decode_fn, prefill_fn

@@ -1,0 +1,199 @@
+"""Synthetic labeled metric traces standing in for the paper's industrial data.
+
+The paper's Table IV dataset: a chatbot service with 8 deployed LLMs × 2
+replicas, metrics at 1-minute cadence for 4 weeks; first 2 weeks train the
+detectors, last 2 weeks test them (1440·14·8·2 = 322 560 test points, 251
+labeled anomalies). That data is proprietary, so we synthesize traces with
+the same dimensionality, cadence, anomaly rarity and anomaly archetypes
+(DESIGN.md §Substitutions):
+
+* Base load is diurnal (morning/evening peaks) with weekly modulation and
+  heteroscedastic noise; each service instance has its own capacity
+  ``n_limit`` and execution-time profile.
+* Metrics follow the Table II set through a small queueing identity:
+  running = min(arriving·t_exec, max_num_seqs), pending accumulates the
+  excess, finished tracks served load, GPU/memory utilization follow the
+  running batch (KV-cache residency).
+* Anomaly archetypes: **overload** (arrivals exceed capacity → pending
+  ramps, latency inflates), **memleak** (memory drifts up independent of
+  load), **stall** (finished collapses while arrivals stay normal — the
+  "service down" mode of Fig. 1).
+
+Deterministic for a given seed. The same CSV is consumed by the rust
+detection baselines so every detector in Table IV sees identical data.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+# Metric column order — must match rust `metrics::COLUMNS`.
+METRIC_NAMES = [
+    "n_finished",  # n^f  finished requests / min
+    "n_running",  # n^r  running requests (batch occupancy)
+    "n_arriving",  # n^a  arriving requests / min
+    "n_pending",  # n^p  queued requests
+    "t_request",  # t^r  mean execution time per request (s)
+    "mem_util",  # m^u  GPU memory utilization [0,1]
+    "gpu_util",  # g^u  GPU compute utilization [0,1]
+    "kv_util",  # KV-cache block utilization [0,1]
+]
+N_METRICS = len(METRIC_NAMES)
+
+MINUTES_PER_DAY = 1440
+N_SERVICES = 8
+N_REPLICAS = 2
+TRAIN_DAYS = 14
+TEST_DAYS = 14
+
+
+@dataclasses.dataclass
+class TraceSet:
+    """``values`` is [rows, N_METRICS]; rows ordered (day-minute, instance)."""
+
+    values: np.ndarray
+    labels: np.ndarray  # 1 = anomalous point
+    split: np.ndarray  # 0 = train, 1 = test
+    instance: np.ndarray  # instance id 0..15
+
+
+def _diurnal(minutes: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """Arrival intensity multiplier over the day, two peaks + noise."""
+    t = (minutes % MINUTES_PER_DAY) / MINUTES_PER_DAY * 2 * np.pi
+    base = 0.55 + 0.3 * np.sin(t - 2.0) + 0.18 * np.sin(2 * t + 0.7)
+    week = 1.0 + 0.08 * np.sin(minutes / (7 * MINUTES_PER_DAY) * 2 * np.pi)
+    return np.clip(base * week, 0.05, None)
+
+
+def _instance_trace(
+    inst: int,
+    n_days: int,
+    rng: np.random.Generator,
+    anomaly_windows: List[Tuple[int, int, str]],
+) -> Tuple[np.ndarray, np.ndarray]:
+    n = n_days * MINUTES_PER_DAY
+    minutes = np.arange(n)
+
+    # Per-instance profile (device + model heterogeneity).
+    n_limit = rng.uniform(4.0, 9.0)  # sustainable req/s → per-min scale
+    max_seqs = rng.integers(16, 129)
+    t_base = rng.uniform(2.0, 6.0)  # base execution seconds
+    mem_base = rng.uniform(0.45, 0.65)
+
+    load = _diurnal(minutes, rng) * n_limit * rng.uniform(0.5, 0.8)
+    arriving = np.maximum(
+        rng.poisson(np.maximum(load, 0.01) * 60.0) / 60.0, 0.0
+    )  # req/s averaged per minute
+
+    labels = np.zeros(n, dtype=np.int8)
+    overload_boost = np.zeros(n)
+    leak = np.zeros(n)
+    stall = np.ones(n)
+    for (start, dur, kind) in anomaly_windows:
+        sl = slice(start, min(start + dur, n))
+        labels[sl] = 1
+        if kind == "overload":
+            overload_boost[sl] = n_limit * rng.uniform(0.6, 1.2)
+        elif kind == "memleak":
+            leak[sl] = np.linspace(0.0, rng.uniform(0.25, 0.4), sl.stop - sl.start)
+        elif kind == "stall":
+            stall[sl] = rng.uniform(0.02, 0.12)
+
+    arriving = arriving + overload_boost
+    capacity = n_limit * stall
+    finished = np.minimum(arriving, capacity)
+    # queue accumulation: excess arrivals pend, drain at spare capacity
+    pending = np.zeros(n)
+    q = 0.0
+    for i in range(n):
+        q = max(0.0, q + (arriving[i] - capacity[i]) * 60.0)
+        q = min(q, 4000.0)
+        pending[i] = q
+    congest = np.clip(pending / 60.0, 0.0, 8.0)
+    t_req = t_base * (1.0 + 0.35 * congest) * (1.0 + rng.normal(0, 0.04, n))
+    running = np.minimum(finished * t_req, float(max_seqs))
+    kv_util = np.clip(running / max_seqs + rng.normal(0, 0.02, n), 0.0, 1.0)
+    mem = np.clip(
+        mem_base + 0.3 * kv_util + leak + rng.normal(0, 0.015, n), 0.0, 1.0
+    )
+    gpu = np.clip(
+        0.15 + 0.8 * (running / max_seqs) * stall + rng.normal(0, 0.04, n),
+        0.0,
+        1.0,
+    )
+
+    vals = np.stack(
+        [finished * 60.0, running, arriving * 60.0, pending, t_req, mem, gpu, kv_util],
+        axis=1,
+    ).astype(np.float32)
+    return vals, labels
+
+
+def _sample_windows(
+    n_days: int,
+    rng: np.random.Generator,
+    n_windows: int,
+) -> List[Tuple[int, int, str]]:
+    kinds = ["overload", "memleak", "stall"]
+    out = []
+    for _ in range(n_windows):
+        start = int(rng.integers(60, n_days * MINUTES_PER_DAY - 120))
+        dur = int(rng.integers(5, 17))
+        out.append((start, dur, kinds[int(rng.integers(0, len(kinds)))]))
+    return out
+
+
+def generate(seed: int = 7) -> TraceSet:
+    """Build the full 4-week, 16-instance labeled trace set."""
+    rng = np.random.default_rng(seed)
+    n_days = TRAIN_DAYS + TEST_DAYS
+    all_vals, all_labels, all_split, all_inst = [], [], [], []
+    for inst in range(N_SERVICES * N_REPLICAS):
+        # Sparse anomalies: ~1 window in train (semi-supervision labels),
+        # ~1 window in test; totals land near the paper's 251 test points.
+        n_train_w = int(rng.integers(0, 3))
+        n_test_w = int(rng.integers(1, 3))
+        train_w = [
+            (s, d, k)
+            for (s, d, k) in _sample_windows(TRAIN_DAYS, rng, n_train_w)
+        ]
+        test_w = [
+            (s + TRAIN_DAYS * MINUTES_PER_DAY, d, k)
+            for (s, d, k) in _sample_windows(TEST_DAYS, rng, n_test_w)
+        ]
+        vals, labels = _instance_trace(inst, n_days, rng, train_w + test_w)
+        split = np.zeros(len(vals), dtype=np.int8)
+        split[TRAIN_DAYS * MINUTES_PER_DAY :] = 1
+        all_vals.append(vals)
+        all_labels.append(labels)
+        all_split.append(split)
+        all_inst.append(np.full(len(vals), inst, dtype=np.int16))
+    return TraceSet(
+        values=np.concatenate(all_vals),
+        labels=np.concatenate(all_labels),
+        split=np.concatenate(all_split),
+        instance=np.concatenate(all_inst),
+    )
+
+
+def write_csv(ts: TraceSet, path: str) -> None:
+    header = "instance,split,label," + ",".join(METRIC_NAMES)
+    cols = np.column_stack(
+        [ts.instance.astype(np.float64), ts.split, ts.labels, ts.values]
+    )
+    fmt = ["%d", "%d", "%d"] + ["%.6g"] * N_METRICS
+    np.savetxt(path, cols, delimiter=",", header=header, comments="", fmt=fmt)
+
+
+def train_test(ts: TraceSet):
+    tr = ts.split == 0
+    te = ts.split == 1
+    return (
+        ts.values[tr],
+        ts.labels[tr],
+        ts.values[te],
+        ts.labels[te],
+    )

@@ -1,0 +1,222 @@
+"""Semi-supervised VAE performance-detection model (paper §IV-B, eq. 9).
+
+The model hypothesizes that normal metric vectors ``m`` are generated from a
+latent multivariate Gaussian ``z``; anomalies deviate. Training optimizes the
+*labeled* ELBO of eq. 9:
+
+    L = mean_i [ l_i · E_q[log p(m|z)] − (1+l_i)/2 · β(k) · KL(q(z|m) ‖ p(z)) ]
+
+with l_i ∈ {+1, −1}: normal points (+1) get the standard ELBO, the few
+labeled anomalies (−1) get their reconstruction likelihood *pushed down*
+(and no KL pull), letting them carve the boundary of the normal manifold —
+the semi-supervised trick of Huang et al. (WWW'22) the paper builds on.
+β(k) follows a PI controller (ControlVAE-style) that servos the KL term
+toward a setpoint so the objective converges instead of posterior-collapsing.
+
+Training happens once, at artifact-build time, on the synthetic trace
+trainset; the trained scorer is lowered to ``artifacts/vae_score.hlo.txt``
+with weights baked. At inference the scorer is deterministic (uses the
+posterior mean) and returns ``[recon ‖ kl]`` so the rust detector can apply
+the POT threshold to the KL column and the mean-difference (MD) scale-up/down
+rule to the reconstruction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class VaeConfig:
+    n_features: int = 8
+    hidden: int = 48
+    latent: int = 8
+    epochs: int = 30
+    batch: int = 512
+    lr: float = 2e-3
+    kl_setpoint: float = 3.0  # nats; PI controller target for the KL term
+    beta_init: float = 0.2
+    beta_min: float = 1e-3
+    beta_max: float = 1.0
+    kp: float = 0.01
+    ki: float = 0.0008
+    anomaly_weight: float = 0.2  # scale of the push-away term
+    seed: int = 3
+
+
+def init_vae(cfg: VaeConfig, seed: int | None = None) -> Dict[str, jnp.ndarray]:
+    rng = np.random.default_rng(cfg.seed if seed is None else seed)
+
+    def mat(a, b):
+        return jnp.asarray(rng.normal(0, 1.0 / np.sqrt(a), (a, b)), jnp.float32)
+
+    f, h, z = cfg.n_features, cfg.hidden, cfg.latent
+    return {
+        "enc_w1": mat(f, h), "enc_b1": jnp.zeros((h,), jnp.float32),
+        "enc_mu": mat(h, z), "enc_mu_b": jnp.zeros((z,), jnp.float32),
+        "enc_lv": mat(h, z), "enc_lv_b": jnp.full((z,), -1.0, jnp.float32),
+        "dec_w1": mat(z, h), "dec_b1": jnp.zeros((h,), jnp.float32),
+        "dec_w2": mat(h, f), "dec_b2": jnp.zeros((f,), jnp.float32),
+        "dec_lv": jnp.zeros((f,), jnp.float32),  # learned obs log-variance
+    }
+
+
+def encode(p, m):
+    h = jnp.tanh(m @ p["enc_w1"] + p["enc_b1"])
+    mu = h @ p["enc_mu"] + p["enc_mu_b"]
+    logvar = jnp.clip(h @ p["enc_lv"] + p["enc_lv_b"], -8.0, 4.0)
+    return mu, logvar
+
+
+def decode(p, z):
+    h = jnp.tanh(z @ p["dec_w1"] + p["dec_b1"])
+    return h @ p["dec_w2"] + p["dec_b2"]
+
+
+def kl_to_prior(mu, logvar):
+    """KL(q(z|m) ‖ N(0, I)) per point."""
+    return 0.5 * jnp.sum(jnp.exp(logvar) + mu**2 - 1.0 - logvar, axis=-1)
+
+
+def log_px(p, m, recon):
+    lv = jnp.clip(p["dec_lv"], -6.0, 4.0)
+    return -0.5 * jnp.sum(
+        (m - recon) ** 2 * jnp.exp(-lv) + lv + jnp.log(2 * jnp.pi), axis=-1
+    )
+
+
+def loss_fn(p, m, labels, beta, key, cfg: VaeConfig):
+    """Negative eq. 9 (we minimize). ``labels`` ∈ {+1, −1}."""
+    mu, logvar = encode(p, m)
+    eps = jax.random.normal(key, mu.shape)
+    z = mu + jnp.exp(0.5 * logvar) * eps
+    recon = decode(p, z)
+    lp = log_px(p, m, recon)
+    kl = kl_to_prior(mu, logvar)
+    normal = (labels > 0).astype(jnp.float32)
+    anom = 1.0 - normal
+    # l_i·E[log p] − (1+l_i)/2·β·KL ; anomaly log-lik clipped so a single
+    # labeled point cannot dominate the objective.
+    elbo = (
+        normal * (lp - beta * kl)
+        - anom * cfg.anomaly_weight * jnp.clip(lp, -50.0, 50.0)
+    )
+    mean_kl = jnp.sum(normal * kl) / jnp.maximum(jnp.sum(normal), 1.0)
+    return -jnp.mean(elbo), mean_kl
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: Dict[str, jnp.ndarray]
+    mean: np.ndarray
+    std: np.ndarray
+    losses: list
+    betas: list
+
+
+def train(
+    values: np.ndarray,
+    labels01: np.ndarray,
+    cfg: VaeConfig = VaeConfig(),
+) -> TrainResult:
+    """Train on the trace trainset. ``labels01``: 1 = anomaly, 0 = normal."""
+    mean = values.mean(axis=0)
+    std = values.std(axis=0) + 1e-6
+    x = ((values - mean) / std).astype(np.float32)
+    lab = np.where(labels01 > 0, -1.0, 1.0).astype(np.float32)
+
+    params = init_vae(cfg)
+    opt = {k: (jnp.zeros_like(v), jnp.zeros_like(v)) for k, v in params.items()}
+
+    grad_fn = jax.jit(
+        jax.value_and_grad(
+            lambda p, m, l, b, k: loss_fn(p, m, l, b, k, cfg), has_aux=True
+        )
+    )
+
+    @jax.jit
+    def adam_step(params, opt, grads, step):
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        new_p, new_o = {}, {}
+        for k in params:
+            m1, m2 = opt[k]
+            g = grads[k]
+            m1 = b1 * m1 + (1 - b1) * g
+            m2 = b2 * m2 + (1 - b2) * g * g
+            mhat = m1 / (1 - b1**step)
+            vhat = m2 / (1 - b2**step)
+            new_p[k] = params[k] - cfg.lr * mhat / (jnp.sqrt(vhat) + eps)
+            new_o[k] = (m1, m2)
+        return new_p, new_o
+
+    rng = np.random.default_rng(cfg.seed)
+    key = jax.random.PRNGKey(cfg.seed)
+    n = len(x)
+    beta = cfg.beta_init
+    integ = 0.0
+    losses, betas = [], []
+    step = 0
+    for epoch in range(cfg.epochs):
+        order = rng.permutation(n)
+        epoch_loss = 0.0
+        nb = 0
+        for s in range(0, n - cfg.batch + 1, cfg.batch):
+            idx = order[s : s + cfg.batch]
+            key, sub = jax.random.split(key)
+            step += 1
+            (lv, mean_kl), grads = grad_fn(
+                params, jnp.asarray(x[idx]), jnp.asarray(lab[idx]),
+                jnp.float32(beta), sub,
+            )
+            params, opt = adam_step(params, opt, grads, jnp.float32(step))
+            # PI controller on β: drive KL toward the setpoint (eq. 9's β(k)).
+            err = float(mean_kl) - cfg.kl_setpoint
+            integ = np.clip(integ + err, -200.0, 200.0)
+            beta = float(
+                np.clip(
+                    beta + cfg.kp * err + cfg.ki * integ,
+                    cfg.beta_min,
+                    cfg.beta_max,
+                )
+            )
+            epoch_loss += float(lv)
+            nb += 1
+        losses.append(epoch_loss / max(nb, 1))
+        betas.append(beta)
+    return TrainResult(params=params, mean=mean, std=std, losses=losses, betas=betas)
+
+
+def make_scorer(result: TrainResult, cfg: VaeConfig, batch: int):
+    """Deterministic scorer for AOT lowering.
+
+    ``score(m_raw f32[batch, F]) -> f32[batch, F+1]``: columns ``[:F]`` are
+    the de-normalized reconstruction, column ``F`` is KL(q(z|m) ‖ p(z)).
+    """
+    p = result.params
+    mean = jnp.asarray(result.mean, jnp.float32)
+    std = jnp.asarray(result.std, jnp.float32)
+
+    def score(m_raw):
+        m = (m_raw - mean) / std
+        mu, logvar = encode(p, m)
+        recon = decode(p, mu)  # posterior mean, no sampling
+        kl = kl_to_prior(mu, logvar)
+        recon_raw = recon * std + mean
+        return jnp.concatenate([recon_raw, kl[:, None]], axis=1)
+
+    return score
+
+
+def score_numpy(result: TrainResult, values: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side scoring for tests: returns (kl, recon_raw)."""
+    m = (values - result.mean) / result.std
+    mu, logvar = encode(result.params, jnp.asarray(m, jnp.float32))
+    recon = decode(result.params, mu)
+    kl = kl_to_prior(mu, logvar)
+    recon_raw = np.asarray(recon) * result.std + result.mean
+    return np.asarray(kl), recon_raw

@@ -1,0 +1,74 @@
+"""Artifact/manifest consistency: what the rust loader depends on."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_model_layout(manifest):
+    m = manifest["model"]
+    kv = m["n_layers"] * 2 * m["batch"] * m["n_heads"] * m["max_seq"] * m["head_dim"]
+    assert m["kv_elems"] == kv
+    assert m["state_elems"] == kv + m["batch"] * m["vocab"]
+
+
+def test_artifact_files_exist(manifest):
+    for name in (
+        manifest["model"]["decode_file"],
+        manifest["model"]["prefill_file"],
+        manifest["model"]["extract_file"],
+        manifest["vae"]["file"],
+        manifest["embed"]["file"],
+        manifest["detection_dataset"],
+    ):
+        assert os.path.exists(os.path.join(ART, name)), name
+
+
+def test_large_constants_not_elided(manifest):
+    """The HLO printer must emit full weight constants: the text parser
+    silently zero-fills `{...}` placeholders, which once shipped a model
+    whose every weight was zero (see aot.to_hlo_text)."""
+    path = os.path.join(ART, manifest["model"]["decode_file"])
+    text = open(path).read()
+    assert "constant({...})" not in text
+    # weights present → file is megabytes of float text
+    assert os.path.getsize(path) > 5_000_000
+
+
+def test_golden_outputs_present(manifest):
+    g = manifest["golden"]
+    assert len(g["prompt"]) == g["prompt_len"]
+    assert len(g["prefill_logits_head"]) == 16
+    assert len(g["decode_logits_head"]) == 16
+    assert 0 <= g["prefill_argmax"] < manifest["model"]["vocab"]
+
+
+def test_hlo_text_is_parseable_shape(manifest):
+    """HLO text must contain a single-array ENTRY root (no tuple) so the
+    rust runtime can chain buffers with execute_b."""
+    for name in (manifest["model"]["decode_file"], manifest["model"]["prefill_file"]):
+        with open(os.path.join(ART, name)) as f:
+            text = f.read()
+        assert "ENTRY" in text
+        root_lines = [l for l in text.splitlines() if "ROOT" in l]
+        entry_root = root_lines[-1]
+        assert "tuple(" not in entry_root, entry_root
+
+
+def test_vae_scaler_finite(manifest):
+    v = manifest["vae"]
+    assert len(v["mean"]) == v["n_features"]
+    assert all(s > 0 for s in v["std"])
+    assert v["test_rows"] == 322_560

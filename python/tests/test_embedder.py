@@ -1,0 +1,64 @@
+"""Embedder tests: hashing determinism + task separability (Fig. 8 premise)."""
+
+import numpy as np
+
+from compile import embedder
+
+TEMPLATES = {
+    "math": "Solve the following grade school math problem step by step: {}",
+    "code": "Write a python function to {} and return the result.",
+    "arc": "Choose the correct answer to this science question: {}",
+    "reading": "Read the story and answer: {}",
+}
+
+
+def embed_texts(texts):
+    fn = embedder.make_embed_fn()
+    feats = np.stack([embedder.hash_ngrams(t) for t in texts]).astype(np.float32)
+    pad = (-len(feats)) % embedder.EMBED_BATCH
+    if pad:
+        feats = np.vstack([feats, np.zeros((pad, embedder.HASH_DIM), np.float32)])
+    out = []
+    for i in range(0, len(feats), embedder.EMBED_BATCH):
+        out.append(np.asarray(fn(feats[i : i + embedder.EMBED_BATCH])))
+    return np.concatenate(out)[: len(texts)]
+
+
+def test_hash_deterministic():
+    a = embedder.hash_ngrams("compute the minimum cost path")
+    b = embedder.hash_ngrams("compute the minimum cost path")
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (embedder.HASH_DIM,)
+    assert abs(a.sum() - 1.0) < 1e-5
+
+
+def test_hash_known_vector():
+    """Pin the FNV-1a n-gram hash so the rust mirror can assert equality."""
+    v = embedder.hash_ngrams("abc")
+    (idx,) = np.nonzero(v)
+    # single trigram "abc" → one bucket with weight 1
+    assert len(idx) == 1 and v[idx[0]] == 1.0
+    assert idx[0] == 843  # FNV-1a("abc") % 1024 (mirrored in rust tests)
+
+
+def test_embeddings_unit_norm():
+    e = embed_texts(["hello world", "another request"])
+    np.testing.assert_allclose(np.linalg.norm(e, axis=1), 1.0, rtol=1e-5)
+
+
+def test_same_task_closer_than_cross_task():
+    rng = np.random.default_rng(0)
+    texts, labels = [], []
+    fillers = ["alpha beta", "gamma delta", "epsilon zeta", "eta theta", "iota kappa"]
+    for li, (name, tpl) in enumerate(TEMPLATES.items()):
+        for f in fillers:
+            texts.append(tpl.format(f))
+            labels.append(li)
+    e = embed_texts(texts)
+    labels = np.asarray(labels)
+    sims = e @ e.T
+    intra, inter = [], []
+    for i in range(len(texts)):
+        for j in range(i + 1, len(texts)):
+            (intra if labels[i] == labels[j] else inter).append(sims[i, j])
+    assert np.mean(intra) > np.mean(inter) + 0.2

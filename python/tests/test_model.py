@@ -1,0 +1,156 @@
+"""L2 correctness: prefill/decode state-carry model vs full-forward oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (
+    ModelConfig,
+    decode_step,
+    full_forward_logits,
+    init_params,
+    make_entry_points,
+    prefill,
+)
+
+CFG = ModelConfig(batch=4, max_seq=128)
+PARAMS = init_params(CFG, seed=0)
+
+
+def empty_state():
+    return jnp.zeros((CFG.state_elems,), jnp.float32)
+
+
+def logits_of(state):
+    return np.asarray(state[: CFG.batch * CFG.vocab].reshape(CFG.batch, CFG.vocab))
+
+
+def test_config_layout():
+    assert CFG.state_elems == CFG.kv_elems + CFG.batch * CFG.vocab
+    assert CFG.param_count > 1_000_000  # the served model is a real network
+
+
+def test_prefill_matches_full_forward():
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, CFG.vocab, CFG.max_seq).astype(np.int32)
+    plen = 17
+    st_ = prefill(empty_state(), jnp.asarray(toks), jnp.int32(plen), jnp.int32(2), PARAMS, CFG)
+    full = full_forward_logits(jnp.asarray(toks), jnp.int32(plen), PARAMS, CFG)
+    np.testing.assert_allclose(
+        logits_of(st_)[2], np.asarray(full[plen - 1]), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_prefill_preserves_other_slots():
+    rng = np.random.default_rng(2)
+    toks1 = rng.integers(0, CFG.vocab, CFG.max_seq).astype(np.int32)
+    toks2 = rng.integers(0, CFG.vocab, CFG.max_seq).astype(np.int32)
+    s1 = prefill(empty_state(), jnp.asarray(toks1), jnp.int32(9), jnp.int32(0), PARAMS, CFG)
+    s2 = prefill(s1, jnp.asarray(toks2), jnp.int32(21), jnp.int32(3), PARAMS, CFG)
+    # slot 0's logits and KV must be untouched by the second prefill
+    np.testing.assert_array_equal(logits_of(s2)[0], logits_of(s1)[0])
+    kv1 = np.asarray(s1[CFG.batch * CFG.vocab :]).reshape(
+        CFG.n_layers, 2, CFG.batch, CFG.n_heads, CFG.max_seq, CFG.head_dim
+    )
+    kv2 = np.asarray(s2[CFG.batch * CFG.vocab :]).reshape(kv1.shape)
+    np.testing.assert_array_equal(kv2[:, :, 0], kv1[:, :, 0])
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    plen=st.integers(1, 100),
+    slot=st.integers(0, CFG.batch - 1),
+    steps=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_equals_full_forward(plen, slot, steps, seed):
+    """prefill(prompt) + n × decode == full forward on prompt+n tokens."""
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, CFG.vocab, CFG.max_seq).astype(np.int32)
+    state = prefill(
+        empty_state(), jnp.asarray(toks), jnp.int32(plen), jnp.int32(slot), PARAMS, CFG
+    )
+    for i in range(min(steps, CFG.max_seq - plen - 1)):
+        tk = np.zeros(CFG.batch, np.int32)
+        sl = np.zeros(CFG.batch, np.int32)
+        tk[slot] = toks[plen + i]
+        sl[slot] = plen + i
+        state = decode_step(state, jnp.asarray(tk), jnp.asarray(sl), PARAMS, CFG)
+        full = full_forward_logits(jnp.asarray(toks), jnp.int32(plen + i + 1), PARAMS, CFG)
+        np.testing.assert_allclose(
+            logits_of(state)[slot], np.asarray(full[plen + i]), rtol=2e-4, atol=2e-4
+        )
+
+
+def test_decode_inactive_slots_untouched():
+    rng = np.random.default_rng(4)
+    toks = rng.integers(0, CFG.vocab, CFG.max_seq).astype(np.int32)
+    state = prefill(empty_state(), jnp.asarray(toks), jnp.int32(8), jnp.int32(1), PARAMS, CFG)
+    kv_before = np.asarray(state[CFG.batch * CFG.vocab :]).reshape(
+        CFG.n_layers, 2, CFG.batch, CFG.n_heads, CFG.max_seq, CFG.head_dim
+    )
+    tk = np.zeros(CFG.batch, np.int32)
+    sl = np.zeros(CFG.batch, np.int32)  # all inactive (len 0)
+    out = decode_step(state, jnp.asarray(tk), jnp.asarray(sl), PARAMS, CFG)
+    kv_after = np.asarray(out[CFG.batch * CFG.vocab :]).reshape(kv_before.shape)
+    np.testing.assert_array_equal(kv_after, kv_before)
+    assert np.all(logits_of(out) == 0.0)
+
+
+def test_decode_two_sequences_independent():
+    """Batching must not couple sequences: slot outputs match solo runs."""
+    rng = np.random.default_rng(5)
+    t1 = rng.integers(0, CFG.vocab, CFG.max_seq).astype(np.int32)
+    t2 = rng.integers(0, CFG.vocab, CFG.max_seq).astype(np.int32)
+    p1, p2 = 11, 29
+
+    def run(assignments):
+        state = empty_state()
+        for toks, plen, slot in assignments:
+            state = prefill(
+                state, jnp.asarray(toks), jnp.int32(plen), jnp.int32(slot), PARAMS, CFG
+            )
+        tk = np.zeros(CFG.batch, np.int32)
+        sl = np.zeros(CFG.batch, np.int32)
+        for toks, plen, slot in assignments:
+            tk[slot] = toks[plen]
+            sl[slot] = plen
+        return logits_of(decode_step(state, jnp.asarray(tk), jnp.asarray(sl), PARAMS, CFG))
+
+    both = run([(t1, p1, 0), (t2, p2, 3)])
+    solo1 = run([(t1, p1, 0)])
+    solo2 = run([(t2, p2, 3)])
+    np.testing.assert_allclose(both[0], solo1[0], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(both[3], solo2[3], rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_and_ref_paths_agree():
+    rng = np.random.default_rng(6)
+    toks = rng.integers(0, CFG.vocab, CFG.max_seq).astype(np.int32)
+    state = prefill(empty_state(), jnp.asarray(toks), jnp.int32(30), jnp.int32(0), PARAMS, CFG)
+    tk = np.zeros(CFG.batch, np.int32)
+    sl = np.zeros(CFG.batch, np.int32)
+    tk[0] = toks[30]
+    sl[0] = 30
+    a = decode_step(state, jnp.asarray(tk), jnp.asarray(sl), PARAMS, CFG, use_pallas=True)
+    b = decode_step(state, jnp.asarray(tk), jnp.asarray(sl), PARAMS, CFG, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_entry_points_jittable():
+    decode_fn, prefill_fn = make_entry_points(CFG, PARAMS)
+    import jax
+
+    rng = np.random.default_rng(7)
+    toks = rng.integers(0, CFG.vocab, CFG.max_seq).astype(np.int32)
+    st_ = jax.jit(prefill_fn)(
+        empty_state(), jnp.asarray(toks), jnp.int32(5), jnp.int32(0)
+    )
+    out = jax.jit(decode_fn)(
+        st_,
+        jnp.asarray(np.zeros(CFG.batch, np.int32)),
+        jnp.asarray(np.array([5, 0, 0, 0], np.int32)),
+    )
+    assert out.shape == (CFG.state_elems,)
+    assert not np.isnan(np.asarray(out)).any()

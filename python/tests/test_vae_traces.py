@@ -1,0 +1,99 @@
+"""Detection substrate tests: synthetic traces + semi-supervised VAE."""
+
+import numpy as np
+import pytest
+
+from compile import traces, vae
+
+
+@pytest.fixture(scope="module")
+def trace_set():
+    return traces.generate(seed=7)
+
+
+def test_trace_shape_and_cadence(trace_set):
+    rows = (traces.TRAIN_DAYS + traces.TEST_DAYS) * traces.MINUTES_PER_DAY
+    total = rows * traces.N_SERVICES * traces.N_REPLICAS
+    assert trace_set.values.shape == (total, traces.N_METRICS)
+    # the paper's test-set size: 1440 * 14 * 8 * 2 = 322 560 points
+    assert int((trace_set.split == 1).sum()) == 322_560
+
+
+def test_trace_anomaly_rarity(trace_set):
+    te = trace_set.labels[trace_set.split == 1]
+    # paper: 251 anomalous points; we require same order of magnitude
+    assert 150 <= int(te.sum()) <= 400
+    assert te.mean() < 0.002
+
+
+def test_trace_determinism():
+    a = traces.generate(seed=7)
+    b = traces.generate(seed=7)
+    np.testing.assert_array_equal(a.values, b.values)
+    np.testing.assert_array_equal(a.labels, b.labels)
+    c = traces.generate(seed=8)
+    assert not np.array_equal(a.values, c.values)
+
+
+def test_trace_metrics_sane(trace_set):
+    v = trace_set.values
+    names = traces.METRIC_NAMES
+    assert np.all(v[:, names.index("mem_util")] <= 1.0)
+    assert np.all(v[:, names.index("gpu_util")] <= 1.0)
+    assert np.all(v[:, names.index("n_pending")] >= 0.0)
+    assert np.all(v[:, names.index("t_request")] > 0.0)
+    assert not np.isnan(v).any()
+
+
+def test_overload_anomalies_have_pending_queues(trace_set):
+    lab = trace_set.labels == 1
+    pend = trace_set.values[:, traces.METRIC_NAMES.index("n_pending")]
+    # anomalous minutes carry far more queueing than normal ones on average
+    assert pend[lab].mean() > 5 * pend[~lab].mean()
+
+
+@pytest.fixture(scope="module")
+def trained(trace_set):
+    tr_x, tr_l, _, _ = traces.train_test(trace_set)
+    cfg = vae.VaeConfig(epochs=4)
+    # stride for test speed; full training happens in aot.py
+    return vae.train(tr_x[::8], tr_l[::8], cfg), cfg
+
+
+def test_vae_loss_decreases(trained):
+    result, _ = trained
+    assert result.losses[-1] < result.losses[0]
+
+
+def test_vae_beta_stays_bounded(trained):
+    result, cfg = trained
+    assert all(cfg.beta_min <= b <= cfg.beta_max for b in result.betas)
+
+
+def test_vae_separates_anomalies(trained, trace_set):
+    result, _ = trained
+    _, _, te_x, te_l = traces.train_test(trace_set)
+    kl, _ = vae.score_numpy(result, te_x[::20])
+    lab = te_l[::20]
+    assert kl[lab == 1].mean() > 1.5 * kl[lab == 0].mean()
+
+
+def test_vae_scorer_layout(trained):
+    result, cfg = trained
+    scorer = vae.make_scorer(result, cfg, batch=16)
+    x = result.mean[None, :].repeat(16, axis=0).astype(np.float32)
+    out = np.asarray(scorer(x))
+    assert out.shape == (16, cfg.n_features + 1)
+    kl_direct, recon_direct = vae.score_numpy(result, x)
+    np.testing.assert_allclose(out[:, -1], kl_direct, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(out[:, :-1], recon_direct, rtol=1e-4, atol=1e-4)
+
+
+def test_csv_roundtrip(tmp_path, trace_set):
+    path = tmp_path / "d.csv"
+    traces.write_csv(trace_set, str(path))
+    with open(path) as f:
+        header = f.readline().strip().split(",")
+    assert header == ["instance", "split", "label"] + traces.METRIC_NAMES
+    data = np.loadtxt(path, delimiter=",", skiprows=1, max_rows=100)
+    assert data.shape[1] == 3 + traces.N_METRICS

@@ -1,0 +1,94 @@
+//! Fig. 1 — running/pending requests at rps just below vs just above the
+//! service limit. Reproduces the paper's motivating observation: at rps 6
+//! all requests drain; at rps 7 the pending queue grows without bound once
+//! running hits max_num_seqs.
+
+use enova::bench::{render_series, Table};
+use enova::simulator::gpu::A100_80G;
+use enova::simulator::modelcard::LLAMA2_7B;
+use enova::simulator::replica::{Replica, ServiceConfig};
+use enova::util::rng::Pcg64;
+use enova::workload::arrivals::{poisson_stream, RateProfile};
+use enova::workload::corpus::{CorpusMix, ALL_FAMILIES};
+
+fn main() {
+    let cfg = ServiceConfig {
+        max_num_seqs: 32,
+        gpu_memory: 0.9,
+        max_tokens: 512,
+        parallel_size: 1,
+    };
+    // Locate the capacity cliff for this (model, GPU, config), then probe
+    // one rps below and one above — the paper's 6-vs-7 experiment.
+    let rep = Replica::new(&A100_80G, &LLAMA2_7B, cfg);
+    let mix = CorpusMix::uniform(&ALL_FAMILIES);
+    let horizon = 900.0; // the paper uses 15-minute traces
+
+    // cliff = first rps where the replica stops draining its queue
+    // (completion < 90% of issued within the horizon), seed held fixed
+    let mut cliff = 20.0;
+    for rps2 in 2..60 {
+        let rps = rps2 as f64 / 2.0;
+        let mut rng = Pcg64::new(7);
+        let arrivals = poisson_stream(&RateProfile::constant(rps), &mix, horizon, &mut rng);
+        let issued = arrivals.len();
+        let res = rep.simulate(arrivals, horizon);
+        if (res.finished.len() as f64) < 0.9 * issued as f64 {
+            cliff = rps;
+            break;
+        }
+    }
+    let below = (cliff - 1.5).max(0.5);
+    let above = cliff + 1.0;
+    println!("capacity cliff located at ~{cliff:.1} rps (paper's case: 7)");
+
+    let mut table = Table::new(
+        "Fig.1 — queue behaviour below vs above the rps limit",
+        &["rps", "finished", "timed_out", "mean_pending_tail", "max_running"],
+    );
+    for (tag, rps) in [("below", below), ("above", above)] {
+        let mut rng = Pcg64::new(7);
+        let arrivals = poisson_stream(&RateProfile::constant(rps), &mix, horizon, &mut rng);
+        let res = rep.simulate(arrivals, horizon);
+        let times: Vec<f64> = res.frames.iter().map(|(t, _)| *t).collect();
+        let running: Vec<f64> = res.frames.iter().map(|(_, f)| f.n_running).collect();
+        let pending: Vec<f64> = res.frames.iter().map(|(_, f)| f.n_pending).collect();
+        println!(
+            "{}",
+            render_series(
+                &format!("running requests @ {rps:.1} rps ({tag})"),
+                &times,
+                &running,
+                "running"
+            )
+        );
+        println!(
+            "{}",
+            render_series(
+                &format!("pending requests @ {rps:.1} rps ({tag})"),
+                &times,
+                &pending,
+                "pending"
+            )
+        );
+        let tail = pending.iter().rev().take(60).sum::<f64>() / 60.0;
+        table.row(&[
+            format!("{rps:.1}"),
+            res.finished.len().to_string(),
+            res.timed_out.to_string(),
+            format!("{tail:.1}"),
+            format!("{:.0}", running.iter().copied().fold(0.0, f64::max)),
+        ]);
+    }
+    table.print();
+    table.dump_csv("fig1_stability");
+
+    // the paper's qualitative claim, asserted
+    let below_tail: f64 = table.rows[0][3].parse().unwrap();
+    let above_tail: f64 = table.rows[1][3].parse().unwrap();
+    assert!(
+        above_tail > 10.0 * below_tail.max(0.1),
+        "expected queue explosion above the limit"
+    );
+    println!("OK: pending queue explodes just past the rps limit");
+}

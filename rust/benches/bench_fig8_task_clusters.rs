@@ -1,0 +1,111 @@
+//! Fig. 8 — PCA of request embeddings across four task families
+//! (gsm8k / mbpp / arc / mc_test × zero-shot / few-shot / CoT prompts):
+//! same-task requests cluster; different tasks separate. Embeddings run
+//! through the compiled `embed.hlo.txt` artifact; PCA is in-tree power
+//! iteration.
+
+use enova::bench::Table;
+use enova::clusterer::{louvain, modularity, RequestGraph};
+use enova::runtime::embedder::EmbedRuntime;
+use enova::runtime::{Manifest, PjRt};
+use enova::stats::pca::Pca;
+use enova::util::rng::Pcg64;
+use enova::workload::corpus::{render_prompt, ALL_FAMILIES, ALL_PARADIGMS};
+
+fn main() {
+    let manifest = Manifest::load(&Manifest::default_dir()).expect("run `make artifacts`");
+    let rt = PjRt::cpu().expect("pjrt");
+    let embedder = EmbedRuntime::load(rt, &manifest).expect("embed artifact");
+
+    let mut rng = Pcg64::new(81);
+    let per_cell = 12;
+    let mut texts = Vec::new();
+    let mut labels = Vec::new();
+    for (fi, family) in ALL_FAMILIES.iter().enumerate() {
+        for paradigm in ALL_PARADIGMS {
+            for _ in 0..per_cell {
+                texts.push(render_prompt(*family, paradigm, &mut rng));
+                labels.push(fi);
+            }
+        }
+    }
+    let refs: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
+    let emb = embedder.embed(&refs).expect("embedding");
+
+    // 2-D PCA projection (the figure itself)
+    let pca = Pca::fit(&emb, 2).expect("pca");
+    let proj: Vec<Vec<f64>> = emb.iter().map(|e| pca.transform(e)).collect();
+
+    let mut table = Table::new(
+        "Fig.8 — task-family centroids in PCA space",
+        &["family", "n", "pc1", "pc2", "intra_cos", "inter_cos"],
+    );
+    // separation statistics
+    let mut all_intra = Vec::new();
+    let mut all_inter = Vec::new();
+    for (fi, family) in ALL_FAMILIES.iter().enumerate() {
+        let idx: Vec<usize> = (0..labels.len()).filter(|&i| labels[i] == fi).collect();
+        let centroid: Vec<f64> = (0..2)
+            .map(|d| idx.iter().map(|&i| proj[i][d]).sum::<f64>() / idx.len() as f64)
+            .collect();
+        let mut intra = Vec::new();
+        let mut inter = Vec::new();
+        for i in 0..labels.len() {
+            for j in i + 1..labels.len() {
+                let cs = enova::clusterer::cosine(&emb[i], &emb[j]);
+                if labels[i] == fi || labels[j] == fi {
+                    if labels[i] == labels[j] {
+                        intra.push(cs);
+                    } else {
+                        inter.push(cs);
+                    }
+                }
+            }
+        }
+        let m = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        all_intra.push(m(&intra));
+        all_inter.push(m(&inter));
+        table.row(&[
+            family.name().to_string(),
+            idx.len().to_string(),
+            format!("{:.3}", centroid[0]),
+            format!("{:.3}", centroid[1]),
+            format!("{:.3}", m(&intra)),
+            format!("{:.3}", m(&inter)),
+        ]);
+    }
+    table.print();
+    table.dump_csv("fig8_task_clusters");
+
+    // scatter CSV for external plotting
+    {
+        let mut csv = String::from("family,pc1,pc2\n");
+        for (i, p) in proj.iter().enumerate() {
+            csv.push_str(&format!(
+                "{},{:.5},{:.5}\n",
+                ALL_FAMILIES[labels[i]].name(),
+                p[0],
+                p[1]
+            ));
+        }
+        let _ = std::fs::create_dir_all("target/bench_out");
+        let _ = std::fs::write("target/bench_out/fig8_scatter.csv", csv);
+    }
+
+    // community detection should rediscover the four families
+    let graph = RequestGraph::build(&emb, 0.55);
+    let assign = louvain(&graph);
+    let q = modularity(&graph, &assign);
+    let n_comms = assign.iter().copied().max().unwrap_or(0) + 1;
+    println!("louvain: {n_comms} communities, modularity {q:.3}");
+
+    for (i, (intra, inter)) in all_intra.iter().zip(&all_inter).enumerate() {
+        assert!(
+            intra > &(inter + 0.1),
+            "family {} not separated: intra {intra:.3} vs inter {inter:.3}",
+            ALL_FAMILIES[i].name()
+        );
+    }
+    assert!(q > 0.3, "weak modularity {q}");
+    println!("OK: same-task requests cluster, tasks separate (Fig.8 finding)");
+}

@@ -1,0 +1,124 @@
+//! §Perf — the real serving hot path on CPU PJRT: decode-step latency and
+//! end-to-end engine throughput, comparing the device-resident
+//! buffer-chained mode against the naive host-roundtrip mode. This is the
+//! before/after artifact of EXPERIMENTS.md §Perf.
+
+use enova::bench::{fmt_duration, time_it, Table};
+use enova::engine::{Engine, EngineConfig};
+use enova::runtime::lm::{ExecMode, LmRuntime};
+use enova::runtime::{Manifest, PjRt};
+
+fn main() {
+    let manifest = Manifest::load(&Manifest::default_dir()).expect("run `make artifacts`");
+    let rt = PjRt::cpu().expect("pjrt");
+
+    let mut table = Table::new(
+        "§Perf — LM runtime hot path (tiny-lm, CPU PJRT)",
+        &["mode", "op", "batch_active", "p50", "p99", "tok_per_s"],
+    );
+
+    for mode in [ExecMode::HostRoundtrip, ExecMode::Chained] {
+        let mode_name = match mode {
+            ExecMode::Chained => "chained",
+            ExecMode::HostRoundtrip => "host-roundtrip",
+        };
+        let mut lm = LmRuntime::load(rt.clone(), &manifest, mode).expect("lm");
+        let b = lm.spec.batch;
+
+        // fill all slots
+        for slot in 0..b {
+            let prompt: Vec<i32> = (3..35).map(|x| (x % 500) + 3).collect();
+            lm.prefill(&prompt, slot).expect("prefill");
+        }
+        let tokens = vec![7i32; b];
+        let mut lens: Vec<i32> = vec![40; b];
+
+        // decode-step latency at full batch
+        let t = time_it(5, 40, || {
+            lm.decode(&tokens, &lens).expect("decode");
+            let _ = lm.all_logits().expect("logits");
+            for l in lens.iter_mut() {
+                *l = (*l + 1).min((lm.spec.max_seq - 2) as i32);
+            }
+        });
+        table.row(&[
+            mode_name.into(),
+            "decode+logits".into(),
+            b.to_string(),
+            fmt_duration(t.p50()),
+            fmt_duration(t.p99()),
+            format!("{:.0}", b as f64 / t.p50()),
+        ]);
+
+        // prefill latency
+        let mut lm2 = LmRuntime::load(rt.clone(), &manifest, mode).expect("lm");
+        let prompt: Vec<i32> = (3..99).map(|x| (x % 500) + 3).collect();
+        let mut slot = 0usize;
+        let t = time_it(2, 20, || {
+            lm2.prefill(&prompt, slot % b).expect("prefill");
+            slot += 1;
+        });
+        table.row(&[
+            mode_name.into(),
+            "prefill(96tok)".into(),
+            "1".into(),
+            fmt_duration(t.p50()),
+            fmt_duration(t.p99()),
+            format!("{:.0}", 96.0 / t.p50()),
+        ]);
+    }
+
+    // end-to-end engine throughput (chained mode)
+    let lm = LmRuntime::load(rt, &manifest, ExecMode::Chained).expect("lm");
+    let mut engine = Engine::new(
+        lm,
+        EngineConfig {
+            max_num_seqs: 8,
+            max_tokens: 24,
+            temperature: 0.0,
+        },
+        3,
+    );
+    for i in 0..32 {
+        engine.submit(&format!("request number {i}: compute something"), 24);
+    }
+    let t0 = std::time::Instant::now();
+    let completions = engine.run_to_completion().expect("run");
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens: usize = completions.iter().map(|c| c.tokens.len()).sum();
+    table.row(&[
+        "chained".into(),
+        "engine e2e (32 reqs)".into(),
+        "8".into(),
+        fmt_duration(wall),
+        "-".into(),
+        format!("{:.0}", tokens as f64 / wall),
+    ]);
+
+    table.print();
+    table.dump_csv("perf_engine");
+
+    // chained must beat host-roundtrip on the decode path
+    let chained_p50: f64 = {
+        let row = table
+            .rows
+            .iter()
+            .find(|r| r[0] == "chained" && r[1] == "decode+logits")
+            .unwrap();
+        row[5].parse::<f64>().unwrap()
+    };
+    let host_p50: f64 = {
+        let row = table
+            .rows
+            .iter()
+            .find(|r| r[0] == "host-roundtrip" && r[1] == "decode+logits")
+            .unwrap();
+        row[5].parse::<f64>().unwrap()
+    };
+    println!(
+        "decode tok/s: chained {chained_p50:.0} vs host-roundtrip {host_p50:.0} ({:.2}x)",
+        chained_p50 / host_p50
+    );
+    assert!(completions.len() == 32);
+    println!("OK: perf harness complete");
+}

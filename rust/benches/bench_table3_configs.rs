@@ -1,0 +1,78 @@
+//! Table III — recommended configurations of Default / COSE / DDPG / ENOVA
+//! for L-7B and L-70B on A100-80G and RTX4090-24G, including the
+//! per-task max_tokens (gsm8k / mbpp) and routing weights.
+
+use enova::bench::scenarios;
+use enova::bench::Table;
+use enova::simulator::gpu::{A100_80G, RTX4090_24G};
+use enova::simulator::modelcard::{LLAMA2_70B, LLAMA2_7B};
+
+fn main() {
+    let (gsm_mt, mbpp_mt) = scenarios::enova_max_tokens_per_task(11);
+    println!("ENOVA per-community max_tokens: gsm8k={gsm_mt} mbpp={mbpp_mt} (paper: 414 / 956)");
+
+    let mut table = Table::new(
+        "Table III — recommended configurations",
+        &["method", "LLM", "device", "max_num_seqs", "max_tokens(gsm8k/mbpp)", "gpu_mem", "tp", "weight"],
+    );
+
+    for model in [&LLAMA2_7B, &LLAMA2_70B] {
+        // per-device method configs
+        let a100 = scenarios::all_method_configs(&A100_80G, model, 21);
+        let r4090 = scenarios::all_method_configs(&RTX4090_24G, model, 22);
+        for (ma, mr) in a100.iter().zip(&r4090) {
+            assert_eq!(ma.method, mr.method);
+            let wmax = ma.weight_basis.max(mr.weight_basis).max(1e-9);
+            for (dev, m, basis) in [
+                ("A100", ma, ma.weight_basis),
+                ("4090", mr, mr.weight_basis),
+            ] {
+                let tokens = if m.method == "ENOVA" {
+                    format!("{gsm_mt}/{mbpp_mt}")
+                } else if m.method == "Default" {
+                    "256/256".to_string()
+                } else {
+                    format!("{}/{}", m.config.max_tokens, m.config.max_tokens)
+                };
+                table.row(&[
+                    m.method.to_string(),
+                    model.name.to_string(),
+                    dev.to_string(),
+                    m.config.max_num_seqs.to_string(),
+                    tokens,
+                    format!("{:.2}", m.config.gpu_memory),
+                    m.config.parallel_size.to_string(),
+                    format!("{:.2}", basis / wmax),
+                ]);
+            }
+        }
+    }
+    table.print();
+    table.dump_csv("table3_configs");
+
+    // Shape assertions mirroring the paper's reading of Table III:
+    let get = |method: &str, model: &str, dev: &str| -> usize {
+        table
+            .rows
+            .iter()
+            .find(|r| r[0] == method && r[1] == model && r[2] == dev)
+            .map(|r| r[3].parse().unwrap())
+            .unwrap()
+    };
+    // 1. throughput-maximizing baselines over-provision max_num_seqs vs
+    //    ENOVA (DDPG is a noisy learner, so compare the baseline average)
+    assert!(get("COSE", "L-7B", "A100") > get("ENOVA", "L-7B", "A100"));
+    let baseline_avg = (get("COSE", "L-7B", "A100") + get("DDPG", "L-7B", "A100")) as f64 / 2.0;
+    assert!(baseline_avg > get("ENOVA", "L-7B", "A100") as f64);
+    // 2. everyone recommends far less concurrency for 70B than 7B
+    assert!(get("ENOVA", "L-70B", "A100") < get("ENOVA", "L-7B", "A100"));
+    // 3. the 4090 gets a lower weight than the A100 under ENOVA
+    let w4090: f64 = table
+        .rows
+        .iter()
+        .find(|r| r[0] == "ENOVA" && r[1] == "L-7B" && r[2] == "4090")
+        .map(|r| r[7].parse().unwrap())
+        .unwrap();
+    assert!(w4090 < 1.0, "4090 weight {w4090}");
+    println!("OK: Table III shape reproduced (baselines over-provision; 70B ≪ 7B; 4090 down-weighted)");
+}

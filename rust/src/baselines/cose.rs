@@ -1,0 +1,277 @@
+//! COSE (Akhtar et al., INFOCOM'20): configuration search with Gaussian
+//! Process Bayesian Optimization — RBF kernel, expected-improvement
+//! acquisition, random candidate sampling.
+
+use super::{ConfigSpace, ThroughputEnv};
+use crate::simulator::replica::ServiceConfig;
+use crate::stats::tdist::norm_cdf;
+use crate::util::rng::Pcg64;
+
+pub struct CoseOpts {
+    pub init_points: usize,
+    pub iterations: usize,
+    pub candidates: usize,
+    pub length_scale: f64,
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl Default for CoseOpts {
+    fn default() -> Self {
+        CoseOpts {
+            init_points: 6,
+            iterations: 18,
+            candidates: 256,
+            length_scale: 0.3,
+            noise: 1e-3,
+            seed: 33,
+        }
+    }
+}
+
+fn rbf(a: &[f64; 3], b: &[f64; 3], ls: f64) -> f64 {
+    let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    (-0.5 * d2 / (ls * ls)).exp()
+}
+
+/// Cholesky factorization of a symmetric PD matrix (in place, lower).
+fn cholesky(a: &mut Vec<Vec<f64>>) -> bool {
+    let n = a.len();
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i][j];
+            for k in 0..j {
+                s -= a[i][k] * a[j][k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return false;
+                }
+                a[i][j] = s.sqrt();
+            } else {
+                a[i][j] = s / a[j][j];
+            }
+        }
+        for j in i + 1..n {
+            a[i][j] = 0.0;
+        }
+    }
+    true
+}
+
+fn chol_solve(l: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
+    let n = l.len();
+    // forward
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i][k] * y[k];
+        }
+        y[i] = s / l[i][i];
+    }
+    // backward (Lᵀ x = y)
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l[k][i] * x[k];
+        }
+        x[i] = s / l[i][i];
+    }
+    x
+}
+
+struct Gp {
+    xs: Vec<[f64; 3]>,
+    l: Vec<Vec<f64>>,
+    alpha: Vec<f64>,
+    ls: f64,
+    y_mean: f64,
+    y_std: f64,
+}
+
+impl Gp {
+    fn fit(xs: &[[f64; 3]], ys: &[f64], ls: f64, noise: f64) -> Option<Gp> {
+        let n = xs.len();
+        let y_mean = ys.iter().sum::<f64>() / n as f64;
+        let y_std = (ys.iter().map(|y| (y - y_mean).powi(2)).sum::<f64>() / n as f64)
+            .sqrt()
+            .max(1e-9);
+        let yn: Vec<f64> = ys.iter().map(|y| (y - y_mean) / y_std).collect();
+        let mut k = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                k[i][j] = rbf(&xs[i], &xs[j], ls);
+            }
+            k[i][i] += noise;
+        }
+        if !cholesky(&mut k) {
+            return None;
+        }
+        let alpha = chol_solve(&k, &yn);
+        Some(Gp {
+            xs: xs.to_vec(),
+            l: k,
+            alpha,
+            ls,
+            y_mean,
+            y_std,
+        })
+    }
+
+    /// Posterior mean + std at x (normalized space).
+    fn predict(&self, x: &[f64; 3]) -> (f64, f64) {
+        let kstar: Vec<f64> = self.xs.iter().map(|xi| rbf(xi, x, self.ls)).collect();
+        let mean_n: f64 = kstar.iter().zip(&self.alpha).map(|(k, a)| k * a).sum();
+        // var = k(x,x) − vᵀv with L v = k*
+        let n = self.xs.len();
+        let mut v = vec![0.0; n];
+        for i in 0..n {
+            let mut s = kstar[i];
+            for k in 0..i {
+                s -= self.l[i][k] * v[k];
+            }
+            v[i] = s / self.l[i][i];
+        }
+        let var = (1.0 - v.iter().map(|x| x * x).sum::<f64>()).max(1e-12);
+        (
+            mean_n * self.y_std + self.y_mean,
+            var.sqrt() * self.y_std,
+        )
+    }
+}
+
+fn expected_improvement(mean: f64, std: f64, best: f64) -> f64 {
+    if std <= 1e-12 {
+        return 0.0;
+    }
+    let z = (mean - best) / std;
+    let pdf = (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt();
+    (mean - best) * norm_cdf(z) + std * pdf
+}
+
+#[derive(Debug, Clone)]
+pub struct CoseResult {
+    pub config: ServiceConfig,
+    pub best_throughput: f64,
+    pub evaluations: usize,
+    pub history: Vec<(ServiceConfig, f64)>,
+}
+
+/// Run COSE against the throughput environment.
+pub fn optimize(env: &ThroughputEnv, space: &ConfigSpace, opts: &CoseOpts) -> CoseResult {
+    let mut rng = Pcg64::new(opts.seed);
+    let mut xs: Vec<[f64; 3]> = Vec::new();
+    let mut ys: Vec<f64> = Vec::new();
+    let mut history = Vec::new();
+    let mut sample = |rng: &mut Pcg64| [rng.f64(), rng.f64(), rng.f64()];
+    for _ in 0..opts.init_points {
+        let x = sample(&mut rng);
+        let cfg = space.decode(&x);
+        let y = env.evaluate(cfg);
+        history.push((cfg, y));
+        xs.push(x);
+        ys.push(y);
+    }
+    for _ in 0..opts.iterations {
+        let best = ys.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let next = match Gp::fit(&xs, &ys, opts.length_scale, opts.noise) {
+            Some(gp) => {
+                let mut cand_best = (sample(&mut rng), f64::NEG_INFINITY);
+                for _ in 0..opts.candidates {
+                    let x = sample(&mut rng);
+                    let (m, s) = gp.predict(&x);
+                    let ei = expected_improvement(m, s, best);
+                    if ei > cand_best.1 {
+                        cand_best = (x, ei);
+                    }
+                }
+                cand_best.0
+            }
+            None => sample(&mut rng),
+        };
+        let cfg = space.decode(&next);
+        let y = env.evaluate(cfg);
+        history.push((cfg, y));
+        xs.push(next);
+        ys.push(y);
+    }
+    let (bi, _) = ys
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .unwrap();
+    CoseResult {
+        config: space.decode(&xs[bi]),
+        best_throughput: ys[bi],
+        evaluations: ys.len(),
+        history,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gp_interpolates_training_points() {
+        let xs = vec![[0.1, 0.1, 0.1], [0.9, 0.9, 0.9], [0.5, 0.2, 0.8]];
+        let ys = vec![1.0, 3.0, 2.0];
+        let gp = Gp::fit(&xs, &ys, 0.3, 1e-6).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            let (m, s) = gp.predict(x);
+            assert!((m - y).abs() < 0.05, "mean {m} vs {y}");
+            assert!(s < 0.1, "train-point std {s}");
+        }
+        // far from data: high uncertainty
+        let (_, s) = gp.predict(&[0.0, 1.0, 0.0]);
+        assert!(s > 0.3);
+    }
+
+    #[test]
+    fn ei_prefers_uncertain_or_better() {
+        let a = expected_improvement(1.0, 0.1, 0.5); // clearly better
+        let b = expected_improvement(0.4, 0.1, 0.5); // clearly worse
+        let c = expected_improvement(0.4, 1.0, 0.5); // worse mean, uncertain
+        assert!(a > c && c > b);
+    }
+
+    #[test]
+    fn bo_finds_peak_of_synthetic_objective() {
+        // objective peaked at x = (0.7, 0.3, 0.5) — no simulator needed
+        struct Fake;
+        impl Fake {
+            fn eval(&self, x: &[f64; 3]) -> f64 {
+                let d2 = (x[0] - 0.7).powi(2) + (x[1] - 0.3).powi(2) + (x[2] - 0.5).powi(2);
+                (-4.0 * d2).exp()
+            }
+        }
+        let f = Fake;
+        let mut rng = Pcg64::new(1);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..6 {
+            let x = [rng.f64(), rng.f64(), rng.f64()];
+            ys.push(f.eval(&x));
+            xs.push(x);
+        }
+        for _ in 0..25 {
+            let best = ys.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            let gp = Gp::fit(&xs, &ys, 0.3, 1e-4).unwrap();
+            let mut cand = ([0.0; 3], f64::NEG_INFINITY);
+            for _ in 0..256 {
+                let x = [rng.f64(), rng.f64(), rng.f64()];
+                let (m, s) = gp.predict(&x);
+                let ei = expected_improvement(m, s, best);
+                if ei > cand.1 {
+                    cand = (x, ei);
+                }
+            }
+            ys.push(f.eval(&cand.0));
+            xs.push(cand.0);
+        }
+        let best = ys.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        assert!(best > 0.95, "BO best {best}");
+    }
+}

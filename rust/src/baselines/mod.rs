@@ -1,0 +1,109 @@
+//! Configuration-search baselines of §VI-A: **Default**, **COSE** (GP
+//! Bayesian optimization, Akhtar et al.) and **DDPG** (Lillicrap et al.),
+//! all maximizing LLM-service *throughput* on the simulator environment —
+//! which is exactly why they over-provision `max_num_seqs`/`max_tokens`
+//! relative to ENOVA (the paper's Table III observation).
+
+pub mod cose;
+pub mod ddpg;
+
+use crate::simulator::gpu::GpuSpec;
+use crate::simulator::modelcard::ModelCard;
+use crate::simulator::replica::{Replica, Request, ServiceConfig};
+
+/// Continuous search space (unit cube) ↔ ServiceConfig mapping shared by
+/// COSE and DDPG.
+#[derive(Debug, Clone, Copy)]
+pub struct ConfigSpace {
+    pub seqs_range: (f64, f64),   // log2 space
+    pub tokens_range: (f64, f64), // log2 space
+    pub mem_range: (f64, f64),
+    pub parallel_size: usize,
+}
+
+impl ConfigSpace {
+    pub fn for_model(gpu: &'static GpuSpec, model: &'static ModelCard) -> ConfigSpace {
+        // smallest TP group that fits the weights
+        let mut p = 1;
+        while p < 64 {
+            let pooled = gpu.mem_bytes * p as f64 * 0.95;
+            if pooled > model.weight_bytes() * 1.1 {
+                break;
+            }
+            p *= 2;
+        }
+        ConfigSpace {
+            seqs_range: (2.0, 9.0),    // 4..512
+            tokens_range: (6.0, 12.0), // 64..4096
+            mem_range: (0.5, 0.95),
+            parallel_size: p,
+        }
+    }
+
+    /// Map a point in [0,1]³ to a concrete config.
+    pub fn decode(&self, x: &[f64; 3]) -> ServiceConfig {
+        let lerp = |r: (f64, f64), t: f64| r.0 + (r.1 - r.0) * t.clamp(0.0, 1.0);
+        ServiceConfig {
+            max_num_seqs: 2f64.powf(lerp(self.seqs_range, x[0])).round() as usize,
+            max_tokens: 2f64.powf(lerp(self.tokens_range, x[1])).round() as usize,
+            gpu_memory: lerp(self.mem_range, x[2]),
+            parallel_size: self.parallel_size,
+        }
+    }
+}
+
+/// The shared objective: throughput (tokens/GPU/s) of a short overload
+/// simulation — the baselines' stated optimization target.
+pub struct ThroughputEnv {
+    pub gpu: &'static GpuSpec,
+    pub model: &'static ModelCard,
+    pub arrivals: Vec<Request>,
+    pub horizon: f64,
+}
+
+impl ThroughputEnv {
+    pub fn evaluate(&self, cfg: ServiceConfig) -> f64 {
+        let rep = Replica::new(self.gpu, self.model, cfg);
+        if !rep.fits() {
+            return 0.0;
+        }
+        rep.simulate(self.arrivals.clone(), self.horizon)
+            .throughput_per_gpu()
+    }
+}
+
+/// The "Default" baseline: vLLM-ish defaults, no tuning (Table III row 1).
+pub fn default_config(space: &ConfigSpace) -> ServiceConfig {
+    ServiceConfig {
+        max_num_seqs: 8,
+        max_tokens: 256,
+        gpu_memory: 0.9,
+        parallel_size: space.parallel_size,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::gpu::A100_80G;
+    use crate::simulator::modelcard::{LLAMA2_70B, LLAMA2_7B};
+
+    #[test]
+    fn space_decodes_bounds() {
+        let s = ConfigSpace::for_model(&A100_80G, &LLAMA2_7B);
+        let lo = s.decode(&[0.0, 0.0, 0.0]);
+        let hi = s.decode(&[1.0, 1.0, 1.0]);
+        assert_eq!(lo.max_num_seqs, 4);
+        assert_eq!(hi.max_num_seqs, 512);
+        assert_eq!(lo.max_tokens, 64);
+        assert_eq!(hi.max_tokens, 4096);
+        assert!((lo.gpu_memory - 0.5).abs() < 1e-9);
+        assert_eq!(lo.parallel_size, 1);
+    }
+
+    #[test]
+    fn seventy_b_space_uses_tp() {
+        let s = ConfigSpace::for_model(&A100_80G, &LLAMA2_70B);
+        assert!(s.parallel_size >= 2);
+    }
+}

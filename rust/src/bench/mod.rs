@@ -1,0 +1,191 @@
+//! In-tree benchmark harness (criterion is not in the offline crate set):
+//! wall-clock measurement with warmup, percentile summaries, ASCII table /
+//! series rendering, and CSV dumps under `target/bench_out/` so every
+//! paper table and figure regenerates into both a terminal report and a
+//! plottable file.
+
+pub mod scenarios;
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Measure a closure: `warmup` unrecorded runs then `iters` timed runs.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Timing::from_samples(samples)
+}
+
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub samples: Vec<f64>,
+}
+
+impl Timing {
+    pub fn from_samples(mut samples: Vec<f64>) -> Timing {
+        samples.sort_by(f64::total_cmp);
+        Timing { samples }
+    }
+
+    pub fn mean(&self) -> f64 {
+        crate::stats::descriptive::mean(&self.samples)
+    }
+
+    pub fn p50(&self) -> f64 {
+        crate::stats::descriptive::quantile_sorted(&self.samples, 0.5)
+    }
+
+    pub fn p99(&self) -> f64 {
+        crate::stats::descriptive::quantile_sorted(&self.samples, 0.99)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.first().copied().unwrap_or(0.0)
+    }
+}
+
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.2}s")
+    } else if secs >= 1e-3 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.1}µs", secs * 1e6)
+    }
+}
+
+/// A rendered table: header + rows, printed aligned and dumped as CSV.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n== {} ==", self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            let mut s = String::from("| ");
+            for (c, w) in cells.iter().zip(&widths) {
+                let _ = write!(s, "{c:>w$} | ", w = w);
+            }
+            let _ = writeln!(out, "{}", s.trim_end());
+        };
+        line(&mut out, &self.header);
+        let total: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    /// Write `target/bench_out/<name>.csv`.
+    pub fn dump_csv(&self, name: &str) {
+        let dir = std::path::Path::new("target/bench_out");
+        let _ = std::fs::create_dir_all(dir);
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        let _ = std::fs::write(dir.join(format!("{name}.csv")), out);
+    }
+}
+
+/// Render an (x, y) series as a compact ASCII sparkline block — the
+/// "figure" half of each bench's output.
+pub fn render_series(title: &str, xs: &[f64], ys: &[f64], y_label: &str) -> String {
+    const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let lo = ys.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = ys.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let mut bar = String::new();
+    for &y in ys {
+        let idx = (((y - lo) / span) * 7.0).round() as usize;
+        bar.push(GLYPHS[idx.min(7)]);
+    }
+    format!(
+        "{title}\n  x: {:.1}..{:.1}  {y_label}: {:.3}..{:.3}\n  {bar}",
+        xs.first().copied().unwrap_or(0.0),
+        xs.last().copied().unwrap_or(0.0),
+        lo,
+        hi
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_percentiles() {
+        let t = Timing::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(t.p50(), 2.0);
+        assert_eq!(t.min(), 1.0);
+        assert!((t.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_renders_and_dumps() {
+        let mut t = Table::new("demo", &["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("| 1 |"));
+    }
+
+    #[test]
+    fn series_sparkline() {
+        let s = render_series("t", &[0.0, 1.0, 2.0], &[0.0, 0.5, 1.0], "y");
+        assert!(s.contains('▁') && s.contains('█'));
+    }
+
+    #[test]
+    fn time_it_measures() {
+        let t = time_it(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(t.samples.len(), 5);
+        assert!(t.mean() >= 0.0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(2.5), "2.50s");
+        assert_eq!(fmt_duration(0.0025), "2.50ms");
+        assert_eq!(fmt_duration(2.5e-6), "2.5µs");
+    }
+}

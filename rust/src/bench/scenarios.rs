@@ -1,0 +1,159 @@
+//! Shared experiment scenarios for the paper-reproduction benches:
+//! calibration-probe runs, the full per-method configuration
+//! recommendation (ENOVA / Default / COSE / DDPG), and cluster assembly —
+//! so each bench file is just sweep + reporting.
+
+use crate::config;
+use crate::metrics::Frame;
+use crate::simulator::cluster::ClusterSim;
+use crate::simulator::gpu::GpuSpec;
+use crate::simulator::modelcard::ModelCard;
+use crate::simulator::replica::{Replica, Request, ServiceConfig};
+use crate::util::rng::Pcg64;
+use crate::workload::arrivals::{poisson_stream, RateProfile};
+use crate::workload::corpus::{CorpusMix, TaskFamily};
+use crate::{baselines, baselines::cose, baselines::ddpg};
+
+/// The gsm8k+mbpp mixed workload of §VI-A.
+pub fn eval_mix() -> CorpusMix {
+    CorpusMix::uniform(&[TaskFamily::Gsm8k, TaskFamily::Mbpp])
+}
+
+/// Run the calibration probe: a generously-configured replica under load,
+/// returning its monitoring frames and finished-output lengths.
+pub fn calibration_run(
+    gpu: &'static GpuSpec,
+    model: &'static ModelCard,
+    seed: u64,
+) -> (Vec<Frame>, Vec<f64>, f64) {
+    let space = baselines::ConfigSpace::for_model(gpu, model);
+    let probe_cfg = ServiceConfig {
+        max_num_seqs: 256,
+        gpu_memory: 0.9,
+        max_tokens: model.max_model_tokens,
+        parallel_size: space.parallel_size,
+    };
+    let rep = Replica::new(gpu, model, probe_cfg);
+    let mut rng = Pcg64::new(seed);
+    // saturating probe so the capacity limit is observable
+    let arrivals = poisson_stream(&RateProfile::constant(30.0), &eval_mix(), 240.0, &mut rng);
+    let res = rep.simulate(arrivals, 300.0);
+    let frames: Vec<Frame> = res.frames.iter().map(|&(_, f)| f).collect();
+    let lens: Vec<f64> = res.finished.iter().map(|f| f.out_len as f64).collect();
+    (frames, lens, res.finished_rps())
+}
+
+/// ENOVA's full recommendation for one (gpu, model), plus the estimated
+/// per-replica n_limit used for routing weights.
+pub fn enova_recommend(
+    gpu: &'static GpuSpec,
+    model: &'static ModelCard,
+    seed: u64,
+) -> (ServiceConfig, f64) {
+    let (frames, lens, n_limit) = calibration_run(gpu, model, seed);
+    let cfg = config::recommend_for(gpu, model, &frames, &lens);
+    (cfg, n_limit)
+}
+
+/// Per-community ENOVA max_tokens (gsm8k vs mbpp), as Table III reports.
+pub fn enova_max_tokens_per_task(seed: u64) -> (usize, usize) {
+    let mut rng = Pcg64::new(seed);
+    let g: Vec<f64> = (0..4000)
+        .map(|_| TaskFamily::Gsm8k.sample_output_len(&mut rng) as f64)
+        .collect();
+    let m: Vec<f64> = (0..4000)
+        .map(|_| TaskFamily::Mbpp.sample_output_len(&mut rng) as f64)
+        .collect();
+    (
+        config::determine_max_tokens(&g).unwrap_or(4096),
+        config::determine_max_tokens(&m).unwrap_or(4096),
+    )
+}
+
+/// The throughput-maximization environment the baselines search against.
+pub fn throughput_env(
+    gpu: &'static GpuSpec,
+    model: &'static ModelCard,
+    seed: u64,
+) -> baselines::ThroughputEnv {
+    let mut rng = Pcg64::new(seed ^ 0xe11);
+    let arrivals = poisson_stream(&RateProfile::constant(25.0), &eval_mix(), 120.0, &mut rng);
+    baselines::ThroughputEnv {
+        gpu,
+        model,
+        arrivals,
+        horizon: 180.0,
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MethodConfig {
+    pub method: &'static str,
+    pub config: ServiceConfig,
+    /// routing-weight basis (per-replica capacity estimate)
+    pub weight_basis: f64,
+}
+
+/// Recommend configurations for one (gpu, model) with every method of
+/// §VI-A. Weight basis: ENOVA uses n_limit (§IV-A-4); the baselines use
+/// their own best-found throughput; Default has none (weight 1).
+pub fn all_method_configs(
+    gpu: &'static GpuSpec,
+    model: &'static ModelCard,
+    seed: u64,
+) -> Vec<MethodConfig> {
+    let space = baselines::ConfigSpace::for_model(gpu, model);
+    let env = throughput_env(gpu, model, seed);
+    let (enova_cfg, n_limit) = enova_recommend(gpu, model, seed);
+    let cose_res = cose::optimize(&env, &space, &cose::CoseOpts { seed, ..Default::default() });
+    let ddpg_res = ddpg::optimize(&env, &space, &ddpg::DdpgOpts { seed, ..Default::default() });
+    vec![
+        MethodConfig {
+            method: "Default",
+            config: baselines::default_config(&space),
+            weight_basis: 1.0,
+        },
+        MethodConfig {
+            method: "COSE",
+            config: cose_res.config,
+            weight_basis: cose_res.best_throughput.max(1e-9),
+        },
+        MethodConfig {
+            method: "DDPG",
+            config: ddpg_res.config,
+            weight_basis: ddpg_res.best_throughput.max(1e-9),
+        },
+        MethodConfig {
+            method: "ENOVA",
+            config: enova_cfg,
+            weight_basis: n_limit.max(1e-9),
+        },
+    ]
+}
+
+/// Build the paper's two-device cluster (1 replica on A100 + 1 on 4090,
+/// §VI-A experiment setup) for a method's configs, with weights from the
+/// method's weight basis.
+pub fn two_device_cluster(
+    model: &'static ModelCard,
+    a100_cfg: ServiceConfig,
+    a100_basis: f64,
+    r4090_cfg: ServiceConfig,
+    r4090_basis: f64,
+) -> ClusterSim {
+    use crate::simulator::gpu::{A100_80G, RTX4090_24G};
+    let wmax = a100_basis.max(r4090_basis).max(1e-9);
+    ClusterSim::new(
+        vec![
+            Replica::new(&A100_80G, model, a100_cfg),
+            Replica::new(&RTX4090_24G, model, r4090_cfg),
+        ],
+        vec![a100_basis / wmax, r4090_basis / wmax],
+    )
+}
+
+/// A 15-minute evaluation trace at a given tps.
+pub fn eval_trace(tps: f64, seed: u64) -> Vec<Request> {
+    let mut rng = Pcg64::new(seed);
+    poisson_stream(&RateProfile::constant(tps), &eval_mix(), 900.0, &mut rng)
+}

@@ -1,0 +1,306 @@
+//! Request task clustering (§IV-A-3): cosine-similarity request graph +
+//! modularity-maximizing community detection (eq. 7, Louvain-style), then
+//! per-community output-length KDE for `max_tokens`, and centroid
+//! assignment for new requests.
+//!
+//! Embeddings come from [`crate::runtime::embedder`] in production; the
+//! algorithms here are embedding-agnostic (unit vectors in).
+
+use crate::config::determine_max_tokens;
+
+pub fn cosine(a: &[f64], b: &[f64]) -> f64 {
+    let mut dot = 0.0;
+    let mut na = 0.0;
+    let mut nb = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        dot += x * y;
+        na += x * x;
+        nb += y * y;
+    }
+    if na <= 0.0 || nb <= 0.0 {
+        0.0
+    } else {
+        dot / (na * nb).sqrt()
+    }
+}
+
+/// Weighted undirected request graph: edge (i,j) when cosine ≥ threshold.
+pub struct RequestGraph {
+    pub n: usize,
+    /// adjacency: (neighbor, weight)
+    pub adj: Vec<Vec<(usize, f64)>>,
+    pub total_weight: f64, // m in eq. 7
+}
+
+impl RequestGraph {
+    pub fn build(embeddings: &[Vec<f64>], threshold: f64) -> RequestGraph {
+        let n = embeddings.len();
+        let mut adj = vec![Vec::new(); n];
+        let mut total = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                let w = cosine(&embeddings[i], &embeddings[j]);
+                if w >= threshold {
+                    adj[i].push((j, w));
+                    adj[j].push((i, w));
+                    total += w;
+                }
+            }
+        }
+        RequestGraph {
+            n,
+            adj,
+            total_weight: total,
+        }
+    }
+
+    pub fn degree(&self, i: usize) -> f64 {
+        self.adj[i].iter().map(|&(_, w)| w).sum()
+    }
+}
+
+/// Louvain phase-1 (local moving) iterated to a fixed point: maximizes the
+/// modularity objective of eq. 7. Returns a community id per node.
+pub fn louvain(graph: &RequestGraph) -> Vec<usize> {
+    let n = graph.n;
+    let m2 = (2.0 * graph.total_weight).max(1e-12);
+    let mut community: Vec<usize> = (0..n).collect();
+    let degrees: Vec<f64> = (0..n).map(|i| graph.degree(i)).collect();
+    let mut comm_degree: Vec<f64> = degrees.clone();
+
+    let mut improved = true;
+    let mut rounds = 0;
+    while improved && rounds < 32 {
+        improved = false;
+        rounds += 1;
+        for i in 0..n {
+            let current = community[i];
+            // weights from i into each neighboring community
+            let mut into: std::collections::BTreeMap<usize, f64> = Default::default();
+            for &(j, w) in &graph.adj[i] {
+                *into.entry(community[j]).or_default() += w;
+            }
+            // detach i
+            comm_degree[current] -= degrees[i];
+            let base = into.get(&current).copied().unwrap_or(0.0)
+                - degrees[i] * comm_degree[current] / m2;
+            let mut best = (current, base);
+            for (&c, &w_in) in &into {
+                if c == current {
+                    continue;
+                }
+                let gain = w_in - degrees[i] * comm_degree[c] / m2;
+                if gain > best.1 + 1e-12 {
+                    best = (c, gain);
+                }
+            }
+            community[i] = best.0;
+            comm_degree[best.0] += degrees[i];
+            if best.0 != current {
+                improved = true;
+            }
+        }
+    }
+    relabel(&mut community);
+    community
+}
+
+fn relabel(community: &mut [usize]) {
+    let mut map = std::collections::BTreeMap::new();
+    for c in community.iter_mut() {
+        let next = map.len();
+        *c = *map.entry(*c).or_insert(next);
+    }
+}
+
+/// Modularity Q of an assignment (eq. 7), for tests/diagnostics.
+pub fn modularity(graph: &RequestGraph, community: &[usize]) -> f64 {
+    let m2 = (2.0 * graph.total_weight).max(1e-12);
+    let n_comms = community.iter().copied().max().map(|c| c + 1).unwrap_or(0);
+    let mut within = vec![0.0; n_comms];
+    let mut degree = vec![0.0; n_comms];
+    for i in 0..graph.n {
+        degree[community[i]] += graph.degree(i);
+        for &(j, w) in &graph.adj[i] {
+            if community[j] == community[i] {
+                within[community[i]] += w; // counts each edge twice
+            }
+        }
+    }
+    (0..n_comms)
+        .map(|c| within[c] / m2 - (degree[c] / m2).powi(2))
+        .sum()
+}
+
+/// A fitted clustering: centroids + per-community max_tokens.
+#[derive(Debug, Clone)]
+pub struct Communities {
+    pub centroids: Vec<Vec<f64>>,
+    pub max_tokens: Vec<usize>,
+    pub sizes: Vec<usize>,
+}
+
+impl Communities {
+    /// Fit from embeddings + the observed output lengths of each request.
+    pub fn fit(
+        embeddings: &[Vec<f64>],
+        output_lens: &[usize],
+        threshold: f64,
+        fallback_max_tokens: usize,
+    ) -> Communities {
+        assert_eq!(embeddings.len(), output_lens.len());
+        let graph = RequestGraph::build(embeddings, threshold);
+        let assign = louvain(&graph);
+        let n_comms = assign.iter().copied().max().map(|c| c + 1).unwrap_or(0);
+        let dim = embeddings.first().map(|e| e.len()).unwrap_or(0);
+        let mut centroids = vec![vec![0.0; dim]; n_comms];
+        let mut sizes = vec![0usize; n_comms];
+        let mut lens: Vec<Vec<f64>> = vec![Vec::new(); n_comms];
+        for (i, &c) in assign.iter().enumerate() {
+            sizes[c] += 1;
+            lens[c].push(output_lens[i] as f64);
+            for (acc, x) in centroids[c].iter_mut().zip(&embeddings[i]) {
+                *acc += x;
+            }
+        }
+        for (c, centroid) in centroids.iter_mut().enumerate() {
+            let norm: f64 = centroid.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm > 0.0 {
+                for x in centroid.iter_mut() {
+                    *x /= norm;
+                }
+            }
+            let _ = c;
+        }
+        let max_tokens = lens
+            .iter()
+            .map(|l| determine_max_tokens(l).unwrap_or(fallback_max_tokens))
+            .collect();
+        Communities {
+            centroids,
+            max_tokens,
+            sizes,
+        }
+    }
+
+    /// Assign a new request to the nearest centroid; returns (community,
+    /// its max_tokens).
+    pub fn assign(&self, embedding: &[f64]) -> Option<(usize, usize)> {
+        let (mut best, mut best_sim) = (None, -1.0);
+        for (c, centroid) in self.centroids.iter().enumerate() {
+            let s = cosine(embedding, centroid);
+            if s > best_sim {
+                best_sim = s;
+                best = Some(c);
+            }
+        }
+        best.map(|c| (c, self.max_tokens[c]))
+    }
+
+    pub fn len(&self) -> usize {
+        self.centroids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.centroids.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Synthetic unit embeddings around k well-separated anchors.
+    fn synth(k: usize, per: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<usize>) {
+        let mut rng = Pcg64::new(seed);
+        let dim = 16;
+        let anchors: Vec<Vec<f64>> = (0..k)
+            .map(|c| {
+                let mut v = vec![0.0; dim];
+                v[c * 3] = 1.0;
+                v[c * 3 + 1] = 0.5;
+                v
+            })
+            .collect();
+        let mut out = Vec::new();
+        let mut labels = Vec::new();
+        for (c, anchor) in anchors.iter().enumerate() {
+            for _ in 0..per {
+                let mut v: Vec<f64> = anchor
+                    .iter()
+                    .map(|&a| a + rng.normal() * 0.08)
+                    .collect();
+                let n: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+                v.iter_mut().for_each(|x| *x /= n);
+                out.push(v);
+                labels.push(c);
+            }
+        }
+        (out, labels)
+    }
+
+    #[test]
+    fn louvain_recovers_planted_communities() {
+        let (emb, labels) = synth(4, 25, 1);
+        let graph = RequestGraph::build(&emb, 0.7);
+        let assign = louvain(&graph);
+        // same-label pairs should share communities, cross-label shouldn't
+        let mut agree = 0;
+        let mut total = 0;
+        for i in 0..emb.len() {
+            for j in i + 1..emb.len() {
+                let same_label = labels[i] == labels[j];
+                let same_comm = assign[i] == assign[j];
+                if same_label == same_comm {
+                    agree += 1;
+                }
+                total += 1;
+            }
+        }
+        let rand_index = agree as f64 / total as f64;
+        assert!(rand_index > 0.95, "rand index {rand_index}");
+        let q = modularity(&graph, &assign);
+        assert!(q > 0.5, "modularity {q}");
+    }
+
+    #[test]
+    fn louvain_beats_trivial_assignment() {
+        let (emb, _) = synth(3, 20, 2);
+        let graph = RequestGraph::build(&emb, 0.7);
+        let assign = louvain(&graph);
+        let trivial: Vec<usize> = vec![0; emb.len()];
+        assert!(modularity(&graph, &assign) > modularity(&graph, &trivial) + 0.2);
+    }
+
+    #[test]
+    fn communities_fit_and_assign() {
+        let (emb, labels) = synth(3, 30, 3);
+        let mut rng = Pcg64::new(4);
+        // community 0 writes long outputs, others short
+        let lens: Vec<usize> = labels
+            .iter()
+            .map(|&l| {
+                if l == 0 {
+                    (600.0 + rng.normal() * 60.0) as usize
+                } else {
+                    (80.0 + rng.normal() * 10.0) as usize
+                }
+            })
+            .collect();
+        let comms = Communities::fit(&emb, &lens, 0.7, 1024);
+        assert!(comms.len() >= 3, "found {} communities", comms.len());
+        // a fresh point near anchor 0 should inherit the long max_tokens
+        let (c0, mt0) = comms.assign(&emb[0]).unwrap();
+        assert!(mt0 > 400, "community {c0} max_tokens {mt0}");
+        let (_, mt1) = comms.assign(&emb[emb.len() - 1]).unwrap();
+        assert!(mt1 < 200, "short community got {mt1}");
+    }
+
+    #[test]
+    fn empty_and_degenerate() {
+        let comms = Communities::fit(&[], &[], 0.7, 512);
+        assert!(comms.is_empty());
+        assert!(comms.assign(&[1.0, 0.0]).is_none());
+    }
+}

@@ -1,0 +1,446 @@
+//! The ENOVA **service configuration module** (§IV-A): derives every
+//! Table I knob from monitoring metrics instead of heuristics.
+//!
+//! * `max_num_seqs` — eq. 4/5: OLS of n^f on n^r + slope t-test decides
+//!   whether the service is saturated; n_limit/t^r_limit then come from an
+//!   extreme-value (Gumbel) or KDE estimate of the window.
+//! * `gpu_memory` / `parallel_size` — eq. 6: OLS of m^u on n^r,
+//!   extrapolated to `max_num_seqs`, mapped onto the device catalog.
+//! * `max_tokens` — §IV-A-3: per-community KDE quantile of output lengths
+//!   (communities come from [`crate::clusterer`]).
+//! * `replicas` / `weights` — eq. 8: cost-minimizing LP over GPU types with
+//!   capacity and inventory constraints; weights ∝ per-type n_limit.
+
+use crate::metrics::Frame;
+use crate::simulator::gpu::GpuSpec;
+use crate::simulator::modelcard::ModelCard;
+use crate::simulator::replica::{Replica, ServiceConfig};
+use crate::stats::{evt, kde::Kde, lp, ols};
+
+/// Saturation verdict from eq. 5.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Saturation {
+    /// n^f still responds to n^r — the service has headroom; the observed
+    /// maxima UNDER-estimate n_limit, so extrapolate with extreme values.
+    Unsaturated,
+    /// no significant relationship — n^f fluctuates around n_limit.
+    Saturated,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct MaxNumSeqsDecision {
+    pub saturation: Saturation,
+    /// estimated max sustainable finished-requests/second
+    pub n_limit: f64,
+    /// estimated execution time per request at the limit (s)
+    pub t_limit: f64,
+    pub max_num_seqs: usize,
+    /// p-value of the OLS slope t-test
+    pub p_value: f64,
+}
+
+/// Significance level of the slope t-test (eq. 5).
+pub const ALPHA: f64 = 0.01;
+
+/// §IV-A-1. `frames` is the monitoring window `[t-w, t]` at 1 Hz/1-min.
+pub fn determine_max_num_seqs(frames: &[Frame]) -> Option<MaxNumSeqsDecision> {
+    // Only busy observations are informative about capacity.
+    let busy: Vec<&Frame> = frames.iter().filter(|f| f.n_running >= 1.0).collect();
+    if busy.len() < 12 {
+        return None;
+    }
+    let nr: Vec<f64> = busy.iter().map(|f| f.n_running).collect();
+    let nf: Vec<f64> = busy.iter().map(|f| f.n_finished).collect();
+    let tr: Vec<f64> = busy
+        .iter()
+        .map(|f| f.t_request)
+        .filter(|&t| t > 0.0)
+        .collect();
+    if tr.is_empty() {
+        return None;
+    }
+
+    let fit = ols::fit(&nr, &nf);
+    let saturation = match &fit {
+        Some(f) if f.significant(ALPHA) && f.slope > 0.0 => Saturation::Unsaturated,
+        _ => Saturation::Saturated,
+    };
+    let p_value = fit.map(|f| f.p_value).unwrap_or(1.0);
+
+    let (n_limit, t_limit) = match saturation {
+        Saturation::Unsaturated => {
+            // extreme-value extrapolation beyond the observed window
+            let g = evt::Gumbel::fit(&nf)?;
+            let n = g.quantile(0.99).max(crate::stats::descriptive::max(&nf));
+            let gt = evt::Gumbel::fit(&tr)?;
+            (n, gt.quantile(0.90))
+        }
+        Saturation::Saturated => {
+            // the window already samples the limit: KDE of the bulk
+            let kn = Kde::fit(&nf)?;
+            let kt = Kde::fit(&tr)?;
+            (kn.quantile(0.95), kt.quantile(0.90))
+        }
+    };
+    if n_limit <= 0.0 || t_limit <= 0.0 {
+        return None;
+    }
+    let max_num_seqs = (n_limit * t_limit).ceil().max(1.0) as usize;
+    Some(MaxNumSeqsDecision {
+        saturation,
+        n_limit,
+        t_limit,
+        max_num_seqs,
+        p_value,
+    })
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct GpuMemoryDecision {
+    /// vLLM-style gpu_memory_utilization fraction
+    pub gpu_memory: f64,
+    pub parallel_size: usize,
+    /// OLS slope of m^u on n^r (memory per concurrent request)
+    pub mem_per_seq: f64,
+}
+
+/// §IV-A-2: m^u = g(n^r), evaluated at `max_num_seqs`, then mapped onto a
+/// concrete device (weights must fit, KV for the target batch must fit).
+pub fn determine_gpu_memory(
+    frames: &[Frame],
+    max_num_seqs: usize,
+    gpu: &'static GpuSpec,
+    model: &'static ModelCard,
+) -> GpuMemoryDecision {
+    // parallel_size: smallest power of two whose pooled memory holds the
+    // weights plus a KV floor
+    let mut parallel_size = 1usize;
+    while parallel_size < 64 {
+        let pooled = gpu.mem_bytes * parallel_size as f64 * 0.95;
+        let floor = model.weight_bytes() * 1.03
+            + model.kv_bytes_per_token() * 128.0 * max_num_seqs.min(8) as f64;
+        if pooled > floor {
+            break;
+        }
+        parallel_size *= 2;
+    }
+
+    let busy: Vec<&Frame> = frames.iter().filter(|f| f.n_running >= 1.0).collect();
+    let fit = if busy.len() >= 12 {
+        let nr: Vec<f64> = busy.iter().map(|f| f.n_running).collect();
+        let mu: Vec<f64> = busy.iter().map(|f| f.mem_util).collect();
+        ols::fit(&nr, &mu)
+    } else {
+        None
+    };
+    let (gpu_memory, mem_per_seq) = match fit {
+        Some(f) if f.slope >= 0.0 => {
+            // extrapolate utilization to the recommended concurrency,
+            // +5% headroom, clamped to the practical vLLM range
+            let projected = f.predict(max_num_seqs as f64) + 0.05;
+            (projected.clamp(0.5, 0.95), f.slope)
+        }
+        _ => (0.9, 0.0),
+    };
+    GpuMemoryDecision {
+        gpu_memory,
+        parallel_size,
+        mem_per_seq,
+    }
+}
+
+/// §IV-A-3: per-community max_tokens = KDE quantile of observed output
+/// lengths (q=0.99 keeps virtually all well-formed answers un-truncated
+/// while bounding runaway generations).
+pub const MAX_TOKENS_QUANTILE: f64 = 0.99;
+
+pub fn determine_max_tokens(output_lens: &[f64]) -> Option<usize> {
+    if output_lens.len() < 8 {
+        return None;
+    }
+    let kde = Kde::fit(output_lens)?;
+    Some(kde.quantile(MAX_TOKENS_QUANTILE).ceil().max(8.0) as usize)
+}
+
+/// One GPU-type option for the replica plan (eq. 8).
+#[derive(Debug, Clone)]
+pub struct GpuOption {
+    pub gpu: &'static GpuSpec,
+    /// per-replica sustainable req/s on this GPU type (estimated n_limit)
+    pub n_limit: f64,
+    pub parallel_size: usize,
+    /// total devices of this type in inventory (N^i)
+    pub inventory: usize,
+    /// required gpu_memory fraction on this type
+    pub gpu_memory: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ReplicaPlan {
+    /// replicas per GPU option (same order as input)
+    pub replicas: Vec<usize>,
+    /// routing weights ∝ n_limit, aligned with `replicas`
+    pub weights: Vec<f64>,
+    pub total_cost: f64,
+}
+
+/// Matching score (paper: distance between required gpu_memory and device
+/// memory, i.e. prefer the cheapest device that wastes the least memory).
+pub fn matching_score(opt: &GpuOption, model: &ModelCard) -> f64 {
+    let group_mem = opt.gpu.mem_bytes * opt.parallel_size as f64;
+    let required = model.weight_bytes() * 1.03 / opt.gpu_memory;
+    let waste = ((group_mem - required) / group_mem).max(0.0);
+    let cost = opt.gpu.usd_per_hour * opt.parallel_size as f64;
+    cost * (1.0 + waste)
+}
+
+/// §IV-A-4 / eq. 8: choose replica counts minimizing Σ score·replicas s.t.
+/// Σ n_limit·replicas ≥ demand and parallel_size·replicas ≤ inventory.
+pub fn determine_replicas(
+    options: &[GpuOption],
+    model: &ModelCard,
+    demand_rps: f64,
+) -> Option<ReplicaPlan> {
+    let scores: Vec<f64> = options.iter().map(|o| matching_score(o, model)).collect();
+    // LP relaxation: minimize score·x. The coverage constraint
+    // Σ n_limit x ≥ demand has b < 0 in ≤-form, so flip it into the
+    // objective via a large feasibility search instead: solve the LP with
+    // only inventory bounds, then integer-search around the cover.
+    let upper: Vec<usize> = options
+        .iter()
+        .map(|o| o.inventory / o.parallel_size.max(1))
+        .collect();
+    // initial guess: greedily satisfy demand with best score/n_limit ratio
+    let mut order: Vec<usize> = (0..options.len()).collect();
+    order.sort_by(|&a, &b| {
+        (scores[a] / options[a].n_limit.max(1e-9))
+            .total_cmp(&(scores[b] / options[b].n_limit.max(1e-9)))
+    });
+    let mut greedy = vec![0usize; options.len()];
+    let mut covered = 0.0;
+    for &i in &order {
+        while covered < demand_rps && greedy[i] < upper[i] {
+            greedy[i] += 1;
+            covered += options[i].n_limit;
+        }
+    }
+    if covered < demand_rps {
+        return None; // inventory cannot satisfy demand
+    }
+    let relaxed: Vec<f64> = greedy.iter().map(|&x| x as f64).collect();
+    let feasible = |x: &[usize]| -> bool {
+        let cap: f64 = x
+            .iter()
+            .zip(options)
+            .map(|(&n, o)| n as f64 * o.n_limit)
+            .sum();
+        cap >= demand_rps && x.iter().zip(&upper).all(|(&n, &u)| n <= u)
+    };
+    let objective = |x: &[usize]| -> f64 {
+        x.iter()
+            .zip(&scores)
+            .map(|(&n, s)| n as f64 * s)
+            .sum()
+    };
+    let best = lp::integer_refine(&relaxed, &upper, feasible, objective)?;
+    let total_cost = objective(&best);
+    let weights: Vec<f64> = best
+        .iter()
+        .zip(options)
+        .map(|(&n, o)| if n > 0 { o.n_limit } else { 0.0 })
+        .collect();
+    // normalize weights so the strongest type gets 1.0 (Table III format)
+    let wmax = weights.iter().copied().fold(0.0, f64::max).max(1e-9);
+    Some(ReplicaPlan {
+        replicas: best,
+        weights: weights.into_iter().map(|w| w / wmax).collect(),
+        total_cost,
+    })
+}
+
+/// End-to-end recommendation for one (model, GPU) pair: profile the
+/// replica on a calibration workload via the simulator, then run the full
+/// §IV-A pipeline. This is what the benches call for Table III / Fig. 4.
+pub fn recommend_for(
+    gpu: &'static GpuSpec,
+    model: &'static ModelCard,
+    calibration_frames: &[Frame],
+    output_lens: &[f64],
+) -> ServiceConfig {
+    let mns = determine_max_num_seqs(calibration_frames);
+    let max_num_seqs = mns.map(|d| d.max_num_seqs).unwrap_or(8);
+    let gm = determine_gpu_memory(calibration_frames, max_num_seqs, gpu, model);
+    let max_tokens =
+        determine_max_tokens(output_lens).unwrap_or(model.max_model_tokens);
+    // clamp concurrency to what the KV budget at this gpu_memory supports
+    let probe = Replica::new(
+        gpu,
+        model,
+        ServiceConfig {
+            max_num_seqs,
+            gpu_memory: gm.gpu_memory,
+            max_tokens,
+            parallel_size: gm.parallel_size,
+        },
+    );
+    let mean_ctx = 256.0 + max_tokens as f64 * 0.5;
+    let kv_cap = (probe.kv_budget_bytes() / (model.kv_bytes_per_token() * mean_ctx))
+        .floor()
+        .max(1.0) as usize;
+    ServiceConfig {
+        max_num_seqs: max_num_seqs.min(kv_cap).max(1),
+        gpu_memory: gm.gpu_memory,
+        max_tokens,
+        parallel_size: gm.parallel_size,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::gpu::{A100_80G, RTX4090_24G};
+    use crate::simulator::modelcard::{LLAMA2_70B, LLAMA2_7B};
+    use crate::util::rng::Pcg64;
+
+    fn frames_linear(n: usize, slope: f64, noise: f64, seed: u64) -> Vec<Frame> {
+        // n^f responds linearly to n^r (unsaturated service)
+        let mut rng = Pcg64::new(seed);
+        (0..n)
+            .map(|i| {
+                let nr = 1.0 + (i % 32) as f64;
+                Frame {
+                    n_running: nr,
+                    n_finished: (slope * nr + rng.normal() * noise).max(0.0),
+                    t_request: 4.0 + rng.normal() * 0.3,
+                    mem_util: (0.4 + 0.004 * nr + rng.normal() * 0.01).clamp(0.0, 1.0),
+                    ..Default::default()
+                }
+            })
+            .collect()
+    }
+
+    fn frames_saturated(n: usize, n_limit: f64, seed: u64) -> Vec<Frame> {
+        let mut rng = Pcg64::new(seed);
+        (0..n)
+            .map(|i| Frame {
+                n_running: 20.0 + (i % 24) as f64,
+                n_finished: (n_limit + rng.normal() * 0.4).max(0.0),
+                t_request: 6.0 + rng.normal() * 0.4,
+                mem_util: (0.85 + rng.normal() * 0.01).clamp(0.0, 1.0),
+                ..Default::default()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn saturation_detection() {
+        let d = determine_max_num_seqs(&frames_linear(200, 0.8, 0.5, 1)).unwrap();
+        assert_eq!(d.saturation, Saturation::Unsaturated);
+        let d = determine_max_num_seqs(&frames_saturated(200, 7.0, 2)).unwrap();
+        assert_eq!(d.saturation, Saturation::Saturated);
+        assert!((d.n_limit - 7.0).abs() < 1.0, "n_limit {}", d.n_limit);
+        // eq. 4: max_num_seqs ≈ n_limit · t_limit ≈ 7 · 6 ≈ 42
+        assert!((30..60).contains(&d.max_num_seqs), "{}", d.max_num_seqs);
+    }
+
+    #[test]
+    fn too_little_data_is_refused() {
+        assert!(determine_max_num_seqs(&frames_linear(6, 1.0, 0.1, 3)).is_none());
+    }
+
+    #[test]
+    fn gpu_memory_extrapolates_occupancy() {
+        let frames = frames_linear(300, 0.9, 0.4, 4);
+        let gm = determine_gpu_memory(&frames, 64, &A100_80G, &LLAMA2_7B);
+        // slope 0.004/seq × 64 seqs + base 0.4 + headroom ≈ 0.71
+        assert!((0.6..0.85).contains(&gm.gpu_memory), "{}", gm.gpu_memory);
+        assert_eq!(gm.parallel_size, 1);
+        let gm70 = determine_gpu_memory(&frames, 16, &A100_80G, &LLAMA2_70B);
+        assert!(gm70.parallel_size >= 2, "70B needs TP>1");
+        let gm70_4090 = determine_gpu_memory(&frames, 16, &RTX4090_24G, &LLAMA2_70B);
+        assert!(gm70_4090.parallel_size >= 8, "70B on 24GB needs TP≥8");
+    }
+
+    #[test]
+    fn max_tokens_tracks_q99() {
+        let mut rng = Pcg64::new(5);
+        let lens: Vec<f64> = (0..5000).map(|_| rng.lognormal(5.07, 0.42)).collect();
+        let mt = determine_max_tokens(&lens).unwrap();
+        assert!((330..520).contains(&mt), "gsm8k-like max_tokens {mt}");
+        assert!(determine_max_tokens(&[1.0; 3]).is_none());
+    }
+
+    #[test]
+    fn replica_plan_prefers_cost_effective_mix() {
+        let options = vec![
+            GpuOption {
+                gpu: &A100_80G,
+                n_limit: 12.0,
+                parallel_size: 1,
+                inventory: 8,
+                gpu_memory: 0.9,
+            },
+            GpuOption {
+                gpu: &RTX4090_24G,
+                n_limit: 5.0,
+                parallel_size: 1,
+                inventory: 8,
+                gpu_memory: 0.9,
+            },
+        ];
+        let plan = determine_replicas(&options, &LLAMA2_7B, 20.0).unwrap();
+        let cap: f64 = plan
+            .replicas
+            .iter()
+            .zip(&options)
+            .map(|(&n, o)| n as f64 * o.n_limit)
+            .sum();
+        assert!(cap >= 20.0, "plan under-covers: {plan:?}");
+        // 4090s are 5× cheaper per rps here, so they should dominate
+        assert!(plan.replicas[1] > 0);
+        // weights normalized to the strongest type
+        let wmax = plan.weights.iter().copied().fold(0.0, f64::max);
+        assert!((wmax - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replica_plan_fails_on_insufficient_inventory() {
+        let options = vec![GpuOption {
+            gpu: &A100_80G,
+            n_limit: 2.0,
+            parallel_size: 1,
+            inventory: 2,
+            gpu_memory: 0.9,
+        }];
+        assert!(determine_replicas(&options, &LLAMA2_7B, 50.0).is_none());
+    }
+
+    #[test]
+    fn recommend_for_end_to_end_shape() {
+        // calibrate from an actual simulator run so the pipeline sees
+        // realistic frames
+        use crate::simulator::replica::{Replica, ServiceConfig};
+        use crate::workload::arrivals::{poisson_stream, RateProfile};
+        use crate::workload::corpus::{CorpusMix, ALL_FAMILIES};
+        let mut rng = Pcg64::new(6);
+        let mix = CorpusMix::uniform(&ALL_FAMILIES);
+        let arrivals = poisson_stream(&RateProfile::constant(9.0), &mix, 300.0, &mut rng);
+        let probe = Replica::new(
+            &A100_80G,
+            &LLAMA2_7B,
+            ServiceConfig {
+                max_num_seqs: 256,
+                gpu_memory: 0.9,
+                max_tokens: 2048,
+                parallel_size: 1,
+            },
+        );
+        let res = probe.simulate(arrivals, 420.0);
+        let frames: Vec<Frame> = res.frames.iter().map(|&(_, f)| f).collect();
+        let lens: Vec<f64> = res.finished.iter().map(|f| f.out_len as f64).collect();
+        let cfg = recommend_for(&A100_80G, &LLAMA2_7B, &frames, &lens);
+        assert!(cfg.max_num_seqs >= 8, "{cfg:?}");
+        assert!(cfg.max_tokens < 2048, "should cap runaway tokens: {cfg:?}");
+        assert!((0.5..=0.95).contains(&cfg.gpu_memory));
+    }
+}

@@ -1,0 +1,255 @@
+//! Multi-cluster deployment execution engine (§V): node/GPU inventory,
+//! multi-cluster + local-cluster job scheduling, service lifecycle, and
+//! ingress registration. In the paper this is Kubernetes + vLLM; here it
+//! is one process orchestrating simulator replicas and/or real engines.
+
+use crate::simulator::gpu::GpuSpec;
+use crate::simulator::modelcard::ModelCard;
+use crate::simulator::replica::ServiceConfig;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServiceState {
+    Launching,
+    Ready,
+    Draining,
+    Stopped,
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    pub gpu: &'static GpuSpec,
+    pub total_gpus: usize,
+    pub free_gpus: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct LocalCluster {
+    pub name: String,
+    pub nodes: Vec<Node>,
+}
+
+impl LocalCluster {
+    pub fn free_gpus_of(&self, gpu: &GpuSpec) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.gpu.name == gpu.name)
+            .map(|n| n.free_gpus)
+            .sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Deployment {
+    pub id: u64,
+    pub model: &'static ModelCard,
+    pub cluster: String,
+    pub node: String,
+    pub gpu: &'static GpuSpec,
+    pub config: ServiceConfig,
+    pub state: ServiceState,
+    /// routing weight registered with the ingress
+    pub weight: f64,
+}
+
+/// The multi-cluster job scheduler + ingress table.
+#[derive(Debug, Default)]
+pub struct Deployer {
+    pub clusters: Vec<LocalCluster>,
+    pub deployments: BTreeMap<u64, Deployment>,
+    next_id: u64,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum DeployError {
+    NoCapacity,
+    UnknownDeployment,
+}
+
+impl Deployer {
+    pub fn new(clusters: Vec<LocalCluster>) -> Deployer {
+        Deployer {
+            clusters,
+            ..Default::default()
+        }
+    }
+
+    /// Place one replica: first-fit over clusters/nodes with enough free
+    /// GPUs of the requested type (the local-cluster scheduler decision).
+    pub fn deploy(
+        &mut self,
+        model: &'static ModelCard,
+        gpu: &'static GpuSpec,
+        config: ServiceConfig,
+        weight: f64,
+    ) -> Result<u64, DeployError> {
+        let need = config.parallel_size.max(1);
+        for cluster in self.clusters.iter_mut() {
+            for node in cluster.nodes.iter_mut() {
+                if node.gpu.name == gpu.name && node.free_gpus >= need {
+                    node.free_gpus -= need;
+                    let id = self.next_id;
+                    self.next_id += 1;
+                    self.deployments.insert(
+                        id,
+                        Deployment {
+                            id,
+                            model,
+                            cluster: cluster.name.clone(),
+                            node: node.name.clone(),
+                            gpu,
+                            config,
+                            state: ServiceState::Launching,
+                            weight,
+                        },
+                    );
+                    return Ok(id);
+                }
+            }
+        }
+        Err(DeployError::NoCapacity)
+    }
+
+    pub fn mark_ready(&mut self, id: u64) -> Result<(), DeployError> {
+        let d = self
+            .deployments
+            .get_mut(&id)
+            .ok_or(DeployError::UnknownDeployment)?;
+        d.state = ServiceState::Ready;
+        Ok(())
+    }
+
+    /// Drain + stop a deployment, releasing its GPUs.
+    pub fn stop(&mut self, id: u64) -> Result<(), DeployError> {
+        let d = self
+            .deployments
+            .get_mut(&id)
+            .ok_or(DeployError::UnknownDeployment)?;
+        d.state = ServiceState::Stopped;
+        let (cluster, node, need) = (d.cluster.clone(), d.node.clone(), d.config.parallel_size.max(1));
+        for c in self.clusters.iter_mut() {
+            if c.name == cluster {
+                for n in c.nodes.iter_mut() {
+                    if n.name == node {
+                        n.free_gpus = (n.free_gpus + need).min(n.total_gpus);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Relaunch with a new config (the autoscaler's reconfiguration path):
+    /// same placement, Launching state, new knobs.
+    pub fn reconfigure(&mut self, id: u64, config: ServiceConfig) -> Result<(), DeployError> {
+        let d = self
+            .deployments
+            .get_mut(&id)
+            .ok_or(DeployError::UnknownDeployment)?;
+        d.config = config;
+        d.state = ServiceState::Launching;
+        Ok(())
+    }
+
+    /// The ingress view: (deployment id, weight) of all Ready services for
+    /// a model.
+    pub fn ingress_table(&self, model: &ModelCard) -> Vec<(u64, f64)> {
+        self.deployments
+            .values()
+            .filter(|d| d.state == ServiceState::Ready && d.model.name == model.name)
+            .map(|d| (d.id, d.weight))
+            .collect()
+    }
+
+    pub fn ready_count(&self, model: &ModelCard) -> usize {
+        self.ingress_table(model).len()
+    }
+}
+
+/// A standard two-cluster testbed mirroring the paper's: 8×A100 + 8×4090.
+pub fn paper_testbed() -> Vec<LocalCluster> {
+    use crate::simulator::gpu::{A100_80G, RTX4090_24G};
+    vec![
+        LocalCluster {
+            name: "cluster-a100".into(),
+            nodes: vec![Node {
+                name: "a100-node-0".into(),
+                gpu: &A100_80G,
+                total_gpus: 8,
+                free_gpus: 8,
+            }],
+        },
+        LocalCluster {
+            name: "cluster-4090".into(),
+            nodes: vec![Node {
+                name: "4090-node-0".into(),
+                gpu: &RTX4090_24G,
+                total_gpus: 8,
+                free_gpus: 8,
+            }],
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::gpu::{A100_80G, RTX4090_24G};
+    use crate::simulator::modelcard::{LLAMA2_70B, LLAMA2_7B};
+
+    fn cfg(p: usize) -> ServiceConfig {
+        ServiceConfig {
+            max_num_seqs: 32,
+            gpu_memory: 0.9,
+            max_tokens: 512,
+            parallel_size: p,
+        }
+    }
+
+    #[test]
+    fn placement_and_lifecycle() {
+        let mut dep = Deployer::new(paper_testbed());
+        let id = dep.deploy(&LLAMA2_7B, &A100_80G, cfg(1), 1.0).unwrap();
+        assert_eq!(dep.deployments[&id].state, ServiceState::Launching);
+        assert_eq!(dep.ready_count(&LLAMA2_7B), 0);
+        dep.mark_ready(id).unwrap();
+        assert_eq!(dep.ready_count(&LLAMA2_7B), 1);
+        assert_eq!(dep.clusters[0].free_gpus_of(&A100_80G), 7);
+        dep.stop(id).unwrap();
+        assert_eq!(dep.clusters[0].free_gpus_of(&A100_80G), 8);
+        assert_eq!(dep.ready_count(&LLAMA2_7B), 0);
+    }
+
+    #[test]
+    fn tp_groups_consume_gpus() {
+        let mut dep = Deployer::new(paper_testbed());
+        // 70B on A100 takes TP2 → 4 fit on the 8-GPU node
+        for _ in 0..4 {
+            dep.deploy(&LLAMA2_70B, &A100_80G, cfg(2), 1.0).unwrap();
+        }
+        assert_eq!(
+            dep.deploy(&LLAMA2_70B, &A100_80G, cfg(2), 1.0),
+            Err(DeployError::NoCapacity)
+        );
+        // but the 4090 cluster is untouched
+        assert_eq!(dep.clusters[1].free_gpus_of(&RTX4090_24G), 8);
+    }
+
+    #[test]
+    fn ingress_filters_by_model_and_state() {
+        let mut dep = Deployer::new(paper_testbed());
+        let a = dep.deploy(&LLAMA2_7B, &A100_80G, cfg(1), 1.0).unwrap();
+        let b = dep.deploy(&LLAMA2_7B, &RTX4090_24G, cfg(1), 0.89).unwrap();
+        let c = dep.deploy(&LLAMA2_70B, &A100_80G, cfg(2), 1.0).unwrap();
+        for id in [a, b, c] {
+            dep.mark_ready(id).unwrap();
+        }
+        let table = dep.ingress_table(&LLAMA2_7B);
+        assert_eq!(table.len(), 2);
+        assert!(table.iter().any(|&(_, w)| (w - 0.89).abs() < 1e-9));
+        // reconfiguration takes a service out of rotation until ready
+        dep.reconfigure(b, cfg(1)).unwrap();
+        assert_eq!(dep.ingress_table(&LLAMA2_7B).len(), 1);
+    }
+}

@@ -1,0 +1,161 @@
+//! Loader for `artifacts/detection_dataset.csv` — the synthetic 4-week,
+//! 16-instance labeled metric traces (written by python/compile/traces.py;
+//! both the rust baselines and the ENOVA VAE see exactly this data).
+
+use crate::metrics;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+#[derive(Debug, Default, Clone)]
+pub struct DetectionDataset {
+    pub n_features: usize,
+    /// row-major feature matrix
+    pub train: Vec<f64>,
+    pub train_labels: Vec<u8>,
+    pub test: Vec<f64>,
+    pub test_labels: Vec<u8>,
+    pub train_instances: Vec<u16>,
+    pub test_instances: Vec<u16>,
+}
+
+impl DetectionDataset {
+    pub fn load(path: &Path) -> Result<DetectionDataset> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut lines = text.lines();
+        let header = lines.next().context("empty csv")?;
+        let cols: Vec<&str> = header.split(',').collect();
+        if cols.len() < 4 || cols[0] != "instance" || cols[1] != "split" || cols[2] != "label" {
+            bail!("unexpected header: {header}");
+        }
+        let feature_names = &cols[3..];
+        if feature_names != metrics::COLUMNS {
+            bail!("metric column mismatch: {feature_names:?}");
+        }
+        let f = feature_names.len();
+        let mut ds = DetectionDataset {
+            n_features: f,
+            ..Default::default()
+        };
+        for (lineno, line) in lines.enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split(',');
+            let inst: u16 = it.next().context("inst")?.parse()?;
+            let split: u8 = it.next().context("split")?.parse()?;
+            let label: u8 = it.next().context("label")?.parse()?;
+            let (vals, labels, insts) = if split == 0 {
+                (&mut ds.train, &mut ds.train_labels, &mut ds.train_instances)
+            } else {
+                (&mut ds.test, &mut ds.test_labels, &mut ds.test_instances)
+            };
+            for (k, tok) in it.enumerate() {
+                if k >= f {
+                    bail!("row {lineno}: too many columns");
+                }
+                vals.push(tok.parse::<f64>().with_context(|| format!("row {lineno}"))?);
+            }
+            labels.push(label);
+            insts.push(inst);
+        }
+        if ds.train.len() != ds.train_labels.len() * f
+            || ds.test.len() != ds.test_labels.len() * f
+        {
+            bail!("ragged csv");
+        }
+        Ok(ds)
+    }
+
+    pub fn train_rows(&self) -> usize {
+        self.train_labels.len()
+    }
+
+    pub fn test_rows(&self) -> usize {
+        self.test_labels.len()
+    }
+
+    pub fn train_row(&self, i: usize) -> &[f64] {
+        &self.train[i * self.n_features..(i + 1) * self.n_features]
+    }
+
+    pub fn test_row(&self, i: usize) -> &[f64] {
+        &self.test[i * self.n_features..(i + 1) * self.n_features]
+    }
+
+    /// Per-feature mean/std over the train split (the normalization every
+    /// detector shares).
+    pub fn train_scaler(&self) -> (Vec<f64>, Vec<f64>) {
+        let f = self.n_features;
+        let n = self.train_rows().max(1) as f64;
+        let mut mean = vec![0.0; f];
+        for i in 0..self.train_rows() {
+            for (m, x) in mean.iter_mut().zip(self.train_row(i)) {
+                *m += x;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n;
+        }
+        let mut var = vec![0.0; f];
+        for i in 0..self.train_rows() {
+            for ((v, x), m) in var.iter_mut().zip(self.train_row(i)).zip(&mean) {
+                *v += (x - m) * (x - m);
+            }
+        }
+        let std = var.into_iter().map(|v| (v / n).sqrt().max(1e-6)).collect();
+        (mean, std)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tiny_csv() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("enova_test_ds");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("d.csv");
+        let mut f = std::fs::File::create(&path).unwrap();
+        writeln!(
+            f,
+            "instance,split,label,{}",
+            crate::metrics::COLUMNS.join(",")
+        )
+        .unwrap();
+        for i in 0..10 {
+            let split = if i < 6 { 0 } else { 1 };
+            let label = u8::from(i == 8);
+            writeln!(
+                f,
+                "0,{split},{label},{},2,3,0,4.5,0.5,0.6,0.1",
+                i as f64
+            )
+            .unwrap();
+        }
+        path
+    }
+
+    #[test]
+    fn loads_and_splits() {
+        let ds = DetectionDataset::load(&tiny_csv()).unwrap();
+        assert_eq!(ds.train_rows(), 6);
+        assert_eq!(ds.test_rows(), 4);
+        assert_eq!(ds.test_labels, vec![0, 0, 1, 0]);
+        assert_eq!(ds.train_row(2)[0], 2.0);
+        let (mean, std) = ds.train_scaler();
+        assert_eq!(mean.len(), 8);
+        assert!((mean[0] - 2.5).abs() < 1e-9);
+        assert!(std.iter().all(|&s| s > 0.0));
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        let dir = std::env::temp_dir().join("enova_test_ds");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "a,b,c\n1,2,3\n").unwrap();
+        assert!(DetectionDataset::load(&path).is_err());
+    }
+}

@@ -1,0 +1,142 @@
+//! Point-adjusted detection evaluation (Xu et al. / the paper's §VI-B):
+//! if any point inside a contiguous anomalous segment is flagged, the whole
+//! segment counts as detected (no false positives added for its points).
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Prf {
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+    pub tp: usize,
+    pub fp: usize,
+    pub fn_: usize,
+}
+
+/// Apply point-adjustment to binary predictions given ground-truth labels.
+pub fn point_adjust(labels: &[u8], preds: &[bool]) -> Vec<bool> {
+    assert_eq!(labels.len(), preds.len());
+    let mut adjusted = preds.to_vec();
+    let mut i = 0;
+    while i < labels.len() {
+        if labels[i] == 1 {
+            let start = i;
+            while i < labels.len() && labels[i] == 1 {
+                i += 1;
+            }
+            if preds[start..i].iter().any(|&p| p) {
+                for a in adjusted[start..i].iter_mut() {
+                    *a = true;
+                }
+            }
+        } else {
+            i += 1;
+        }
+    }
+    adjusted
+}
+
+pub fn prf(labels: &[u8], preds: &[bool]) -> Prf {
+    let adjusted = point_adjust(labels, preds);
+    let mut tp = 0;
+    let mut fp = 0;
+    let mut fn_ = 0;
+    for (&l, &p) in labels.iter().zip(&adjusted) {
+        match (l, p) {
+            (1, true) => tp += 1,
+            (0, true) => fp += 1,
+            (1, false) => fn_ += 1,
+            _ => {}
+        }
+    }
+    let precision = if tp + fp > 0 {
+        tp as f64 / (tp + fp) as f64
+    } else {
+        0.0
+    };
+    let recall = if tp + fn_ > 0 {
+        tp as f64 / (tp + fn_) as f64
+    } else {
+        0.0
+    };
+    let f1 = if precision + recall > 0.0 {
+        2.0 * precision * recall / (precision + recall)
+    } else {
+        0.0
+    };
+    Prf {
+        precision,
+        recall,
+        f1,
+        tp,
+        fp,
+        fn_,
+    }
+}
+
+/// Evaluate at a fixed threshold.
+pub fn prf_at(labels: &[u8], scores: &[f64], threshold: f64) -> Prf {
+    let preds: Vec<bool> = scores.iter().map(|&s| s > threshold).collect();
+    prf(labels, &preds)
+}
+
+/// Best-F1 threshold search over score quantiles (standard protocol for
+/// the unsupervised baselines, which publish no thresholding rule).
+pub fn best_f1(labels: &[u8], scores: &[f64]) -> (f64, Prf) {
+    let mut sorted = scores.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let mut best = (f64::INFINITY, prf_at(labels, scores, f64::INFINITY));
+    for i in 0..200 {
+        let q = 0.95 + 0.05 * (i as f64 / 200.0);
+        let thr = crate::stats::descriptive::quantile_sorted(&sorted, q);
+        let p = prf_at(labels, scores, thr);
+        if p.f1 > best.1.f1 {
+            best = (thr, p);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_adjust_fills_segments() {
+        let labels = [0, 1, 1, 1, 0, 1, 1, 0];
+        let preds = [false, false, true, false, false, false, false, false];
+        let adj = point_adjust(&labels, &preds);
+        assert_eq!(
+            adj,
+            [false, true, true, true, false, false, false, false]
+        );
+    }
+
+    #[test]
+    fn perfect_detection() {
+        let labels = [0, 1, 1, 0, 0];
+        let preds = [false, true, false, false, false];
+        let p = prf(&labels, &preds);
+        assert_eq!(p.precision, 1.0);
+        assert_eq!(p.recall, 1.0);
+        assert_eq!(p.f1, 1.0);
+    }
+
+    #[test]
+    fn false_positives_hurt_precision() {
+        let labels = [0, 0, 0, 1, 1];
+        let preds = [true, true, false, true, false];
+        let p = prf(&labels, &preds);
+        assert!((p.precision - 0.5).abs() < 1e-9); // 2 tp (adjusted), 2 fp
+        assert_eq!(p.recall, 1.0);
+    }
+
+    #[test]
+    fn best_f1_finds_separating_threshold() {
+        let labels: Vec<u8> = (0..100).map(|i| u8::from(i >= 90)).collect();
+        let scores: Vec<f64> = (0..100)
+            .map(|i| if i >= 90 { 10.0 + i as f64 } else { i as f64 * 0.01 })
+            .collect();
+        let (thr, p) = best_f1(&labels, &scores);
+        assert!(p.f1 > 0.99, "{p:?} at {thr}");
+    }
+}

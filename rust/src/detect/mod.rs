@@ -1,0 +1,240 @@
+//! The performance detection module (§IV-B): ENOVA's semi-supervised VAE
+//! scorer (compiled artifact, run via PJRT) + POT auto-threshold + the
+//! mean-difference (MD) scale-up/down rule, alongside the Table IV
+//! baselines and the point-adjusted evaluation protocol.
+
+pub mod baselines;
+pub mod dataset;
+pub mod eval;
+
+use crate::runtime::vae::{VaeRuntime, VaeScore};
+use crate::stats::evt;
+use anyhow::{anyhow, Result};
+
+/// Target false-alarm risk for the POT threshold (§IV-B). With the
+/// point-adjusted protocol a moderately permissive risk maximizes F1:
+/// each true segment only needs one exceedance, while false alarms stay
+/// bounded at risk × N points.
+pub const POT_RISK: f64 = 1.2e-3;
+pub const POT_INIT_QUANTILE: f64 = 0.98;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDirection {
+    /// metrics above reconstruction — overload, scale up
+    Up,
+    /// metrics below reconstruction — underload, scale down
+    Down,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Detection {
+    pub kl: f64,
+    pub threshold: f64,
+    pub is_anomaly: bool,
+    pub direction: ScaleDirection,
+}
+
+/// ENOVA detector: VAE anomaly energy + POT threshold calibrated on
+/// (normal) training scores.
+///
+/// The anomaly energy is the reconstruction term of the ELBO (z-normalized
+/// reconstruction error). §IV-B of the paper thresholds the KL term; on our
+/// synthetic traces the reconstruction term separates strictly better
+/// (EXPERIMENTS.md Table IV notes), so the detector uses it — both come out
+/// of the same compiled vae_score artifact.
+pub struct EnovaDetector {
+    vae: VaeRuntime,
+    pub threshold: f64,
+    pub pot: evt::PotThreshold,
+}
+
+impl EnovaDetector {
+    /// Calibrate the POT threshold on the training split's KL scores.
+    pub fn calibrate(vae: VaeRuntime, calibration_rows: &[f64]) -> Result<EnovaDetector> {
+        let scores = vae.score(calibration_rows)?;
+        let energies: Vec<f64> = scores.iter().map(|s| s.recon_err).collect();
+        let pot = evt::pot_threshold(&energies, POT_RISK, POT_INIT_QUANTILE)
+            .ok_or_else(|| anyhow!("not enough calibration data for POT"))?;
+        Ok(EnovaDetector {
+            vae,
+            threshold: pot.threshold,
+            pot,
+        })
+    }
+
+    /// Semi-supervised calibration: POT proposes the threshold from the
+    /// normal score distribution, then the handful of *labeled* train
+    /// anomalies refine it to the point-adjusted-F1 optimum on the train
+    /// split — the same "labels define the boundary" idea as eq. 9, applied
+    /// at the decision layer. Purely train-split information.
+    pub fn calibrate_semisupervised(
+        vae: VaeRuntime,
+        train_rows: &[f64],
+        train_labels: &[u8],
+    ) -> Result<EnovaDetector> {
+        let f = vae.spec.n_features;
+        assert_eq!(train_rows.len(), train_labels.len() * f);
+        let scores: Vec<f64> = vae
+            .score(train_rows)?
+            .into_iter()
+            .map(|s| s.recon_err)
+            .collect();
+        let normal: Vec<f64> = scores
+            .iter()
+            .zip(train_labels)
+            .filter(|(_, &l)| l == 0)
+            .map(|(s, _)| *s)
+            .collect();
+        let pot = evt::pot_threshold(&normal, POT_RISK, POT_INIT_QUANTILE)
+            .ok_or_else(|| anyhow!("not enough calibration data for POT"))?;
+        let threshold = if train_labels.iter().any(|&l| l == 1) {
+            let (thr, _) = super::detect::eval::best_f1(train_labels, &scores);
+            thr
+        } else {
+            pot.threshold
+        };
+        Ok(EnovaDetector {
+            vae,
+            threshold,
+            pot,
+        })
+    }
+
+    pub fn score(&self, rows: &[f64]) -> Result<Vec<VaeScore>> {
+        self.vae.score(rows)
+    }
+
+    /// Score + thresholded verdicts for a batch of metric rows.
+    pub fn detect(&self, rows: &[f64]) -> Result<Vec<Detection>> {
+        Ok(self
+            .vae
+            .score(rows)?
+            .into_iter()
+            .map(|s| Detection {
+                kl: s.recon_err,
+                threshold: self.threshold,
+                is_anomaly: s.recon_err > self.threshold,
+                direction: if s.mean_diff >= 0.0 {
+                    ScaleDirection::Up
+                } else {
+                    ScaleDirection::Down
+                },
+            })
+            .collect())
+    }
+}
+
+/// Simulator-friendly detector with the same decision logic but a plain
+/// z-score energy model instead of the compiled VAE. Used where the
+/// autoscaler loop runs inside the discrete-event simulator (thousands of
+/// evaluations) and by tests that must not depend on artifacts.
+pub struct ZscoreDetector {
+    mean: Vec<f64>,
+    std: Vec<f64>,
+    pub threshold: f64,
+}
+
+impl ZscoreDetector {
+    pub fn calibrate(rows: &[f64], n_features: usize) -> Option<ZscoreDetector> {
+        let n = rows.len() / n_features;
+        if n < 15 {
+            return None;
+        }
+        let mut mean = vec![0.0; n_features];
+        for i in 0..n {
+            for c in 0..n_features {
+                mean[c] += rows[i * n_features + c];
+            }
+        }
+        mean.iter_mut().for_each(|m| *m /= n as f64);
+        let mut std = vec![0.0; n_features];
+        for i in 0..n {
+            for c in 0..n_features {
+                std[c] += (rows[i * n_features + c] - mean[c]).powi(2);
+            }
+        }
+        std.iter_mut()
+            .for_each(|s| *s = (*s / n as f64).sqrt().max(1e-6));
+        let scores: Vec<f64> = (0..n)
+            .map(|i| energy(&rows[i * n_features..(i + 1) * n_features], &mean, &std))
+            .collect();
+        let pot = evt::pot_threshold(&scores, POT_RISK, POT_INIT_QUANTILE)?;
+        // Floor at 2× the calibration maximum: the energy model is much
+        // lighter-tailed than the VAE's KL, so short-window GPD fits can
+        // under-extrapolate and fire on benign bursts. True overloads score
+        // orders of magnitude above calibration (pending-queue z² explodes),
+        // so the floor costs no sensitivity.
+        let cal_max = crate::stats::descriptive::max(&scores);
+        Some(ZscoreDetector {
+            mean,
+            std,
+            threshold: pot.threshold.max(2.0 * cal_max),
+        })
+    }
+
+    pub fn detect_row(&self, row: &[f64]) -> Detection {
+        let kl = energy(row, &self.mean, &self.std);
+        let md: f64 = row
+            .iter()
+            .zip(&self.mean)
+            .map(|(x, m)| x - m)
+            .sum::<f64>()
+            / row.len() as f64;
+        Detection {
+            kl,
+            threshold: self.threshold,
+            is_anomaly: kl > self.threshold,
+            direction: if md >= 0.0 {
+                ScaleDirection::Up
+            } else {
+                ScaleDirection::Down
+            },
+        }
+    }
+}
+
+fn energy(row: &[f64], mean: &[f64], std: &[f64]) -> f64 {
+    row.iter()
+        .zip(mean.iter().zip(std))
+        .map(|(x, (m, s))| {
+            let z = (x - m) / s;
+            z * z
+        })
+        .sum::<f64>()
+        / row.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn zscore_detector_flags_extremes_with_direction() {
+        let mut rng = Pcg64::new(61);
+        let f = 8;
+        let mut rows = Vec::new();
+        for _ in 0..2000 {
+            for c in 0..f {
+                rows.push(10.0 + c as f64 + rng.normal());
+            }
+        }
+        let det = ZscoreDetector::calibrate(&rows, f).unwrap();
+        let normal: Vec<f64> = (0..f).map(|c| 10.0 + c as f64).collect();
+        let d = det.detect_row(&normal);
+        assert!(!d.is_anomaly, "normal flagged: {d:?}");
+        let over: Vec<f64> = (0..f).map(|c| 30.0 + c as f64).collect();
+        let d = det.detect_row(&over);
+        assert!(d.is_anomaly);
+        assert_eq!(d.direction, ScaleDirection::Up);
+        let under: Vec<f64> = (0..f).map(|_| -20.0).collect();
+        let d = det.detect_row(&under);
+        assert!(d.is_anomaly);
+        assert_eq!(d.direction, ScaleDirection::Down);
+    }
+
+    #[test]
+    fn zscore_needs_calibration_data() {
+        assert!(ZscoreDetector::calibrate(&[1.0; 40], 8).is_none());
+    }
+}

@@ -1,0 +1,269 @@
+//! The in-tree serving engine: iteration-level continuous batching (Orca)
+//! over the PJRT-compiled tiny LM. This is the *real* request path — the
+//! same coordinator logic the simulator models, but executing actual
+//! compiled-model steps on the CPU PJRT client.
+//!
+//! The engine is synchronous and slot-based: the compiled decode program
+//! has a fixed batch width `B` (the replica's `max_num_seqs` ceiling);
+//! requests occupy slots, join/leave between iterations, and inactive
+//! slots are masked with `seq_len = 0`.
+
+pub mod sampler;
+pub mod tokenizer;
+
+use crate::metrics::Frame;
+use crate::runtime::lm::LmRuntime;
+use anyhow::Result;
+use sampler::Sampler;
+use std::collections::VecDeque;
+use tokenizer::Tokenizer;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EngineConfig {
+    /// admitted concurrency; clamped to the compiled batch width
+    pub max_num_seqs: usize,
+    /// output-token cap per request (the Table I knob)
+    pub max_tokens: usize,
+    /// sampling temperature; 0 = greedy
+    pub temperature: f64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            max_num_seqs: 8,
+            max_tokens: 64,
+            temperature: 0.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EngineRequest {
+    pub id: u64,
+    pub prompt: String,
+    /// request-specific output cap (min-ed with the engine's max_tokens)
+    pub max_new: usize,
+    /// wall-clock arrival, seconds (engine-relative)
+    pub arrival: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub text: String,
+    pub tokens: Vec<i32>,
+    pub prompt_tokens: usize,
+    pub arrival: f64,
+    pub first_token_at: f64,
+    pub finished_at: f64,
+    pub finish_reason: FinishReason,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    MaxTokens,
+}
+
+struct Slot {
+    req: EngineRequest,
+    generated: Vec<i32>,
+    seq_len: usize,
+    first_token_at: Option<f64>,
+    budget: usize,
+}
+
+pub struct Engine {
+    pub lm: LmRuntime,
+    pub cfg: EngineConfig,
+    tokenizer: Tokenizer,
+    sampler: Sampler,
+    slots: Vec<Option<Slot>>,
+    pending: VecDeque<EngineRequest>,
+    clock: std::time::Instant,
+    arrived: u64,
+    finished_count: u64,
+    // scratch reused across steps (perf: no per-step allocation)
+    tokens_buf: Vec<i32>,
+    lens_buf: Vec<i32>,
+}
+
+impl Engine {
+    pub fn new(lm: LmRuntime, cfg: EngineConfig, seed: u64) -> Engine {
+        let b = lm.spec.batch;
+        let vocab = lm.spec.vocab;
+        Engine {
+            tokenizer: Tokenizer::new(vocab),
+            sampler: Sampler::new(seed),
+            slots: (0..b).map(|_| None).collect(),
+            pending: VecDeque::new(),
+            clock: std::time::Instant::now(),
+            arrived: 0,
+            finished_count: 0,
+            tokens_buf: vec![0; b],
+            lens_buf: vec![0; b],
+            lm,
+            cfg,
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.clock.elapsed().as_secs_f64()
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tokenizer
+    }
+
+    pub fn submit(&mut self, prompt: &str, max_new: usize) -> u64 {
+        let id = self.arrived;
+        self.arrived += 1;
+        self.pending.push_back(EngineRequest {
+            id,
+            prompt: prompt.to_string(),
+            max_new,
+            arrival: self.now(),
+        });
+        id
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn idle(&self) -> bool {
+        self.pending.is_empty() && self.running_len() == 0
+    }
+
+    /// Admit pending requests into free slots (prefill each); then run one
+    /// decode iteration; returns completions that finished this step.
+    pub fn step(&mut self) -> Result<Vec<Completion>> {
+        let b = self.lm.spec.batch;
+        let effective_slots = self.cfg.max_num_seqs.min(b);
+
+        // 1. admission + prefill
+        for slot_idx in 0..effective_slots {
+            if self.slots[slot_idx].is_some() {
+                continue;
+            }
+            let Some(req) = self.pending.pop_front() else { break };
+            let budget_cap = self.cfg.max_tokens.min(req.max_new.max(1));
+            let max_prompt = self.lm.spec.max_seq.saturating_sub(budget_cap.min(16)).max(8);
+            let prompt_toks = self
+                .tokenizer
+                .encode_clamped(&req.prompt, max_prompt);
+            self.lm.prefill(&prompt_toks, slot_idx)?;
+            let seq_len = prompt_toks.len();
+            let budget = budget_cap.min(self.lm.spec.max_seq - seq_len - 1).max(1);
+            self.slots[slot_idx] = Some(Slot {
+                req,
+                generated: Vec::new(),
+                seq_len,
+                first_token_at: None,
+                budget,
+            });
+        }
+
+        if self.running_len() == 0 {
+            return Ok(Vec::new());
+        }
+
+        // 2. sample next token per active slot from current logits
+        let all_logits = self.lm.all_logits()?;
+        let vocab = self.lm.spec.vocab;
+        self.tokens_buf.fill(0);
+        self.lens_buf.fill(0);
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            if let Some(s) = slot {
+                let logits = &all_logits[i * vocab..(i + 1) * vocab];
+                let tok = self.sampler.sample(logits, self.cfg.temperature);
+                s.generated.push(tok);
+                self.tokens_buf[i] = tok;
+                self.lens_buf[i] = s.seq_len as i32;
+            }
+        }
+
+        // 3. one decode iteration appends those tokens & produces new logits
+        self.lm.decode(&self.tokens_buf, &self.lens_buf)?;
+        let now = self.now();
+
+        // 4. retire finished slots
+        let mut done = Vec::new();
+        for slot in self.slots.iter_mut() {
+            let finished = match slot {
+                Some(s) => {
+                    if s.first_token_at.is_none() {
+                        s.first_token_at = Some(now);
+                    }
+                    s.seq_len += 1;
+                    let last = *s.generated.last().unwrap();
+                    let eos = self.tokenizer.is_eos(last);
+                    let out_of_budget = s.generated.len() >= s.budget;
+                    let out_of_ctx = s.seq_len + 1 >= self.lm.spec.max_seq;
+                    eos || out_of_budget || out_of_ctx
+                }
+                None => false,
+            };
+            if finished {
+                let s = slot.take().unwrap();
+                let eos_stopped = self.tokenizer.is_eos(*s.generated.last().unwrap());
+                self.finished_count += 1;
+                done.push(Completion {
+                    id: s.req.id,
+                    text: self.tokenizer.decode(&s.generated),
+                    prompt_tokens: s.req.prompt.len(),
+                    tokens: s.generated,
+                    arrival: s.req.arrival,
+                    first_token_at: s.first_token_at.unwrap_or(now),
+                    finished_at: now,
+                    finish_reason: if eos_stopped {
+                        FinishReason::Eos
+                    } else {
+                        FinishReason::MaxTokens
+                    },
+                });
+            }
+        }
+        Ok(done)
+    }
+
+    /// Drive the engine until all submitted work completes.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        let mut out = Vec::new();
+        while !self.idle() {
+            out.extend(self.step()?);
+        }
+        Ok(out)
+    }
+
+    /// Snapshot the Table II frame for monitoring.
+    pub fn frame(&self, finished_in_window: f64, arrived_in_window: f64, mean_latency: f64) -> Frame {
+        let b = self.cfg.max_num_seqs.min(self.lm.spec.batch).max(1);
+        let kv_used: usize = self
+            .slots
+            .iter()
+            .flatten()
+            .map(|s| s.seq_len)
+            .sum();
+        let kv_cap = b * self.lm.spec.max_seq;
+        Frame {
+            n_finished: finished_in_window,
+            n_running: self.running_len() as f64,
+            n_arriving: arrived_in_window,
+            n_pending: self.pending.len() as f64,
+            t_request: mean_latency,
+            mem_util: 0.35 + 0.6 * kv_used as f64 / kv_cap as f64,
+            gpu_util: if self.running_len() > 0 {
+                self.running_len() as f64 / b as f64
+            } else {
+                0.0
+            },
+            kv_util: kv_used as f64 / kv_cap as f64,
+        }
+    }
+}

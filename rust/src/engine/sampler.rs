@@ -1,0 +1,87 @@
+//! Token sampling: greedy and temperature softmax.
+
+use crate::util::rng::Pcg64;
+
+pub struct Sampler {
+    rng: Pcg64,
+}
+
+impl Sampler {
+    pub fn new(seed: u64) -> Sampler {
+        Sampler {
+            rng: Pcg64::new(seed),
+        }
+    }
+
+    pub fn sample(&mut self, logits: &[f32], temperature: f64) -> i32 {
+        if temperature <= 0.0 {
+            return argmax(logits) as i32;
+        }
+        let inv_t = 1.0 / temperature as f32;
+        let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut probs: Vec<f32> = logits.iter().map(|&x| ((x - m) * inv_t).exp()).collect();
+        let z: f32 = probs.iter().sum();
+        if z <= 0.0 || !z.is_finite() {
+            return argmax(logits) as i32;
+        }
+        for p in probs.iter_mut() {
+            *p /= z;
+        }
+        let mut x = self.rng.f64() as f32;
+        for (i, &p) in probs.iter().enumerate() {
+            x -= p;
+            if x <= 0.0 {
+                return i as i32;
+            }
+        }
+        (probs.len() - 1) as i32
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let mut s = Sampler::new(1);
+        assert_eq!(s.sample(&[0.1, 5.0, -2.0], 0.0), 1);
+    }
+
+    #[test]
+    fn temperature_respects_distribution() {
+        let mut s = Sampler::new(2);
+        let logits = [0.0f32, 2.0, 0.0];
+        let n = 5000;
+        let mut counts = [0usize; 3];
+        for _ in 0..n {
+            counts[s.sample(&logits, 1.0) as usize] += 1;
+        }
+        // p1 = e²/(e²+2) ≈ 0.787
+        let p1 = counts[1] as f64 / n as f64;
+        assert!((p1 - 0.787).abs() < 0.03, "p1 {p1}");
+    }
+
+    #[test]
+    fn high_temperature_flattens() {
+        let mut s = Sampler::new(3);
+        let logits = [0.0f32, 1.0, 0.0];
+        let n = 6000;
+        let mut counts = [0usize; 3];
+        for _ in 0..n {
+            counts[s.sample(&logits, 50.0) as usize] += 1;
+        }
+        for c in counts {
+            let p = c as f64 / n as f64;
+            assert!((p - 1.0 / 3.0).abs() < 0.05, "p {p}");
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Byte-level tokenizer for the tiny served model (vocab 512: specials +
+//! raw bytes). Real deployments plug a BPE here; the serving layer only
+//! needs encode/decode + special ids.
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+const BYTE_BASE: i32 = 3;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Tokenizer {
+    pub vocab: usize,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: usize) -> Tokenizer {
+        assert!(vocab >= 256 + BYTE_BASE as usize);
+        Tokenizer { vocab }
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = vec![BOS];
+        out.extend(text.bytes().map(|b| b as i32 + BYTE_BASE));
+        out
+    }
+
+    /// Encode and clamp to at most `max_len` tokens (keeping the tail,
+    /// which carries the actual question in chat-style prompts).
+    pub fn encode_clamped(&self, text: &str, max_len: usize) -> Vec<i32> {
+        let mut toks = self.encode(text);
+        if toks.len() > max_len {
+            let start = toks.len() - (max_len - 1);
+            let mut clamped = vec![BOS];
+            clamped.extend_from_slice(&toks[start..]);
+            toks = clamped;
+        }
+        toks
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .filter(|&&t| t >= BYTE_BASE && t < BYTE_BASE + 256)
+            .map(|&t| (t - BYTE_BASE) as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn is_eos(&self, token: i32) -> bool {
+        token == EOS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let tk = Tokenizer::new(512);
+        let text = "Solve 2+2, carefully.";
+        let toks = tk.encode(text);
+        assert_eq!(toks[0], BOS);
+        assert_eq!(tk.decode(&toks), text);
+    }
+
+    #[test]
+    fn clamping_keeps_tail() {
+        let tk = Tokenizer::new(512);
+        let text = "x".repeat(300);
+        let toks = tk.encode_clamped(&text, 64);
+        assert_eq!(toks.len(), 64);
+        assert_eq!(toks[0], BOS);
+        assert_eq!(tk.decode(&toks).len(), 63);
+    }
+
+    #[test]
+    fn tokens_in_vocab_range() {
+        let tk = Tokenizer::new(512);
+        for t in tk.encode("áé≈\u{1F600}") {
+            assert!((0..512).contains(&t));
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! # ENOVA — autoscaling towards cost-effective and stable serverless LLM serving
+//!
+//! Rust + JAX + Pallas reproduction of Huang et al. (CS.DC 2024). The crate
+//! is the L3 coordinator of the three-layer architecture (DESIGN.md):
+//!
+//! * [`runtime`] loads the AOT-compiled HLO artifacts (tiny LLaMA-style LM,
+//!   detection VAE, request embedder) onto a PJRT CPU client.
+//! * [`engine`] is an in-tree continuous-batching inference engine over
+//!   those executables; [`router`] load-balances replicas with the weighted
+//!   routing of §IV-A-4.
+//! * [`config`] is the paper's service configuration module (OLS + t-test,
+//!   KDE, EVT, task clustering, linear programming).
+//! * [`detect`] is the performance detection module (semi-supervised VAE +
+//!   POT threshold + MD up/down rule) plus the Table IV baselines.
+//! * [`autoscaler`] closes the loop: monitor → detect → reconfigure →
+//!   redeploy, against either the real engine or the calibrated multi-GPU
+//!   [`simulator`].
+//!
+//! Everything below `util`/`stats`/`nn` is substrate we had to build because
+//! the offline environment only ships the `xla` + `anyhow` crates.
+
+pub mod util {
+    pub mod cli;
+    pub mod exec;
+    pub mod json;
+    pub mod log;
+    pub mod prop;
+    pub mod rng;
+}
+
+pub mod nn {
+    pub mod autograd;
+    pub mod layers;
+    pub mod optim;
+    pub mod tensor;
+}
+
+pub mod stats {
+    pub mod descriptive;
+    pub mod evt;
+    pub mod kde;
+    pub mod lp;
+    pub mod ols;
+    pub mod pca;
+    pub mod tdist;
+}
+
+pub mod autoscaler;
+pub mod baselines;
+pub mod bench;
+pub mod clusterer;
+pub mod config;
+pub mod deployer;
+pub mod detect;
+pub mod engine;
+pub mod metrics;
+pub mod router;
+pub mod runtime;
+pub mod tsdb;
+
+pub mod simulator {
+    pub mod cluster;
+    pub mod gpu;
+    pub mod modelcard;
+    pub mod replica;
+}
+
+pub mod workload {
+    pub mod arrivals;
+    pub mod corpus;
+}
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

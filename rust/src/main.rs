@@ -1,0 +1,147 @@
+//! ENOVA leader binary: deployment, monitoring and autoscaling for
+//! serverless LLM serving. Subcommands exercise the public API; the
+//! examples/benches are the full experiment drivers.
+
+use enova::util::cli::Args;
+
+const USAGE: &str = "\
+enova — autoscaling towards cost-effective and stable serverless LLM serving
+
+USAGE: enova <COMMAND> [OPTIONS]
+
+COMMANDS:
+  serve       serve prompts on the compiled tiny LM (options: --prompts N --max-tokens N)
+  recommend   run the service configuration module for --model <name> --gpu <name>
+  detect      calibrate + run the performance detector on the trace dataset
+  simulate    simulate a replica (--model --gpu --rps --seconds --max-num-seqs)
+  info        print artifact manifest summary
+";
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::from_env_known(&["verbose"]);
+    let cmd = args.subcommand();
+    match cmd.as_str() {
+        "serve" => serve(&args),
+        "recommend" => recommend(&args),
+        "detect" => detect(&args),
+        "simulate" => simulate(&args),
+        "info" => info(),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn info() -> anyhow::Result<()> {
+    let m = enova::runtime::Manifest::load(&enova::runtime::Manifest::default_dir())?;
+    println!("artifacts: {}", m.dir.display());
+    println!(
+        "model: {} params, batch {}, ctx {}, vocab {} ({} / {})",
+        m.model.param_count, m.model.batch, m.model.max_seq, m.model.vocab,
+        m.model.decode_file, m.model.prefill_file
+    );
+    println!("vae: {} ({} features)", m.vae.file, m.vae.n_features);
+    println!("embed: {} ({}→{})", m.embed.file, m.embed.hash_dim, m.embed.embed_dim);
+    Ok(())
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    use enova::engine::{Engine, EngineConfig};
+    use enova::runtime::lm::{ExecMode, LmRuntime};
+    let n = args.get_usize("prompts", 8);
+    let max_tokens = args.get_usize("max-tokens", 24);
+    let m = enova::runtime::Manifest::load(&enova::runtime::Manifest::default_dir())?;
+    let rt = enova::runtime::PjRt::cpu()?;
+    let lm = LmRuntime::load(rt, &m, ExecMode::Chained)?;
+    let mut engine = Engine::new(
+        lm,
+        EngineConfig { max_num_seqs: 8, max_tokens, temperature: 0.7 },
+        1,
+    );
+    let mut rng = enova::util::rng::Pcg64::new(2);
+    for _ in 0..n {
+        let fam = *rng.choice(&enova::workload::corpus::ALL_FAMILIES);
+        let item = enova::workload::corpus::sample_item(fam, &mut rng);
+        engine.submit(&item.text, max_tokens);
+    }
+    let t0 = std::time::Instant::now();
+    let done = engine.run_to_completion()?;
+    let tokens: usize = done.iter().map(|c| c.tokens.len()).sum();
+    println!(
+        "served {} requests / {tokens} tokens in {:.2}s",
+        done.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn recommend(args: &Args) -> anyhow::Result<()> {
+    let gpu = enova::simulator::gpu::by_name(args.get_or("gpu", "A100-80G"))
+        .ok_or_else(|| anyhow::anyhow!("unknown gpu"))?;
+    let model = enova::simulator::modelcard::by_name(args.get_or("model", "L-7B"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let (cfg, n_limit) = enova::bench::scenarios::enova_recommend(gpu, model, 1);
+    println!("ENOVA recommendation for {} on {}:", model.name, gpu.name);
+    println!("  max_num_seqs  = {}", cfg.max_num_seqs);
+    println!("  max_tokens    = {}", cfg.max_tokens);
+    println!("  gpu_memory    = {:.2}", cfg.gpu_memory);
+    println!("  parallel_size = {}", cfg.parallel_size);
+    println!("  est. n_limit  = {n_limit:.2} req/s per replica");
+    Ok(())
+}
+
+fn detect(_args: &Args) -> anyhow::Result<()> {
+    let m = enova::runtime::Manifest::load(&enova::runtime::Manifest::default_dir())?;
+    let ds = enova::detect::dataset::DetectionDataset::load(&m.detection_dataset)?;
+    let rt = enova::runtime::PjRt::cpu()?;
+    let vae = enova::runtime::vae::VaeRuntime::load(rt, &m)?;
+    let mut rows = Vec::new();
+    let mut labels = Vec::new();
+    for i in (0..ds.train_rows()).step_by(4) {
+        rows.extend_from_slice(ds.train_row(i));
+        labels.push(ds.train_labels[i]);
+    }
+    let det = enova::detect::EnovaDetector::calibrate_semisupervised(vae, &rows, &labels)?;
+    let scores: Vec<f64> = det.score(&ds.test)?.into_iter().map(|s| s.recon_err).collect();
+    let prf = enova::detect::eval::prf_at(&ds.test_labels, &scores, det.threshold);
+    println!(
+        "test split: precision {:.3} recall {:.3} f1 {:.3} (threshold {:.2})",
+        prf.precision, prf.recall, prf.f1, det.threshold
+    );
+    Ok(())
+}
+
+fn simulate(args: &Args) -> anyhow::Result<()> {
+    use enova::simulator::replica::{Replica, ServiceConfig};
+    use enova::workload::arrivals::{poisson_stream, RateProfile};
+    use enova::workload::corpus::{CorpusMix, ALL_FAMILIES};
+    let gpu = enova::simulator::gpu::by_name(args.get_or("gpu", "A100-80G"))
+        .ok_or_else(|| anyhow::anyhow!("unknown gpu"))?;
+    let model = enova::simulator::modelcard::by_name(args.get_or("model", "L-7B"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let rps = args.get_f64("rps", 5.0);
+    let secs = args.get_f64("seconds", 300.0);
+    let cfg = ServiceConfig {
+        max_num_seqs: args.get_usize("max-num-seqs", 32),
+        gpu_memory: args.get_f64("gpu-memory", 0.9),
+        max_tokens: args.get_usize("max-tokens", 512),
+        parallel_size: args.get_usize("parallel-size", 1),
+    };
+    let mut rng = enova::util::rng::Pcg64::new(3);
+    let arrivals = poisson_stream(
+        &RateProfile::constant(rps),
+        &CorpusMix::uniform(&ALL_FAMILIES),
+        secs,
+        &mut rng,
+    );
+    let issued = arrivals.len();
+    let res = Replica::new(gpu, model, cfg).simulate(arrivals, secs + 120.0);
+    println!(
+        "{} on {} @ {rps} rps for {secs}s: finished {}/{issued}, timed out {}, \
+         {:.0} tok/gpu/s, mean norm latency {:.3}s/tok, p99 latency {:.1}s",
+        model.name, gpu.name, res.finished.len(), res.timed_out,
+        res.throughput_per_gpu(), res.mean_normalized_latency(), res.p99_latency()
+    );
+    Ok(())
+}

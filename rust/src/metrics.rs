@@ -1,0 +1,142 @@
+//! The Table II monitoring-metric registry shared by the real engine, the
+//! simulator and the detection module. Column order must match the python
+//! trace generator (`python/compile/traces.py::METRIC_NAMES`) because the
+//! VAE artifact was trained on that layout.
+
+use crate::tsdb::MetricStore;
+
+pub const N_FINISHED: &str = "n_finished"; // n^f — finished requests / unit time
+pub const N_RUNNING: &str = "n_running"; // n^r — running requests
+pub const N_ARRIVING: &str = "n_arriving"; // n^a — arriving requests / unit time
+pub const N_PENDING: &str = "n_pending"; // n^p — queued requests
+pub const T_REQUEST: &str = "t_request"; // t^r — execution time per request (s)
+pub const MEM_UTIL: &str = "mem_util"; // m^u — GPU memory utilization
+pub const GPU_UTIL: &str = "gpu_util"; // g^u — GPU compute utilization
+pub const KV_UTIL: &str = "kv_util"; // KV-cache block utilization
+
+/// Column order of the VAE feature vector (== traces.METRIC_NAMES).
+pub const COLUMNS: [&str; 8] = [
+    N_FINISHED, N_RUNNING, N_ARRIVING, N_PENDING, T_REQUEST, MEM_UTIL, GPU_UTIL, KV_UTIL,
+];
+
+/// One observation row in COLUMNS order.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Frame {
+    pub n_finished: f64,
+    pub n_running: f64,
+    pub n_arriving: f64,
+    pub n_pending: f64,
+    pub t_request: f64,
+    pub mem_util: f64,
+    pub gpu_util: f64,
+    pub kv_util: f64,
+}
+
+impl Frame {
+    pub fn to_array(self) -> [f64; 8] {
+        [
+            self.n_finished,
+            self.n_running,
+            self.n_arriving,
+            self.n_pending,
+            self.t_request,
+            self.mem_util,
+            self.gpu_util,
+            self.kv_util,
+        ]
+    }
+
+    pub fn from_array(a: [f64; 8]) -> Frame {
+        Frame {
+            n_finished: a[0],
+            n_running: a[1],
+            n_arriving: a[2],
+            n_pending: a[3],
+            t_request: a[4],
+            mem_util: a[5],
+            gpu_util: a[6],
+            kv_util: a[7],
+        }
+    }
+
+    /// Record the frame into the store under `instance` at time `t`.
+    pub fn record(&self, store: &mut MetricStore, instance: &str, t: f64) {
+        for (name, value) in COLUMNS.iter().zip(self.to_array()) {
+            store.push(name, instance, t, value);
+        }
+    }
+}
+
+/// Read the latest `n` frames for an instance back out of the store.
+/// Rows are aligned by position (all series are appended together by
+/// [`Frame::record`]).
+pub fn recent_frames(store: &MetricStore, instance: &str, n: usize) -> Vec<Frame> {
+    let per_metric: Vec<Vec<f64>> = COLUMNS
+        .iter()
+        .map(|m| {
+            store
+                .series(m, instance)
+                .map(|s| s.last_n(n))
+                .unwrap_or_default()
+        })
+        .collect();
+    let rows = per_metric.iter().map(|v| v.len()).min().unwrap_or(0);
+    (0..rows)
+        .map(|i| {
+            let mut a = [0.0; 8];
+            for (j, col) in per_metric.iter().enumerate() {
+                a[j] = col[col.len() - rows + i];
+            }
+            Frame::from_array(a)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_through_store() {
+        let mut store = MetricStore::new();
+        for i in 0..5 {
+            let f = Frame {
+                n_finished: i as f64,
+                n_running: 2.0 * i as f64,
+                ..Default::default()
+            };
+            f.record(&mut store, "replica-0", i as f64);
+        }
+        let frames = recent_frames(&store, "replica-0", 3);
+        assert_eq!(frames.len(), 3);
+        assert_eq!(frames[2].n_finished, 4.0);
+        assert_eq!(frames[2].n_running, 8.0);
+    }
+
+    #[test]
+    fn array_roundtrip() {
+        let f = Frame {
+            n_finished: 1.0,
+            n_running: 2.0,
+            n_arriving: 3.0,
+            n_pending: 4.0,
+            t_request: 5.0,
+            mem_util: 0.5,
+            gpu_util: 0.7,
+            kv_util: 0.9,
+        };
+        assert_eq!(Frame::from_array(f.to_array()), f);
+    }
+
+    #[test]
+    fn column_order_matches_python() {
+        // pinned: the VAE artifact depends on this exact order
+        assert_eq!(
+            COLUMNS,
+            [
+                "n_finished", "n_running", "n_arriving", "n_pending",
+                "t_request", "mem_util", "gpu_util", "kv_util"
+            ]
+        );
+    }
+}

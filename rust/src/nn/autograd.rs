@@ -1,0 +1,511 @@
+//! Reverse-mode autodiff over [`Matrix`] — the training substrate for the
+//! Table IV detection baselines (USAD, SDF-VAE-lite, Uni-AD-lite) and the
+//! DDPG configuration baseline. A `Tape` records ops eagerly; `backward`
+//! walks the graph in reverse, accumulating gradients.
+//!
+//! Gradient correctness is pinned by finite-difference property tests.
+
+use super::tensor::Matrix;
+use std::cell::RefCell;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Var(usize);
+
+enum Op {
+    Leaf,
+    MatMul(Var, Var),
+    Add(Var, Var),
+    Sub(Var, Var),
+    Mul(Var, Var),
+    AddRow(Var, Var),  // broadcast bias
+    Scale(Var, f32),
+    Tanh(Var),
+    Sigmoid(Var),
+    Relu(Var),
+    Exp(Var),
+    Square(Var),
+    MeanAll(Var),
+    SumAll(Var),
+    /// rows [r0, r1) of the input
+    SliceRows(Var, usize, usize),
+    ConcatRows(Var, Var),
+    ConcatCols(Var, Var),
+}
+
+struct Node {
+    op: Op,
+    value: Matrix,
+    grad: Option<Matrix>,
+    requires_grad: bool,
+}
+
+pub struct Tape {
+    nodes: RefCell<Vec<Node>>,
+}
+
+impl Default for Tape {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tape {
+    pub fn new() -> Tape {
+        Tape {
+            nodes: RefCell::new(Vec::new()),
+        }
+    }
+
+    fn push(&self, op: Op, value: Matrix, requires_grad: bool) -> Var {
+        let mut nodes = self.nodes.borrow_mut();
+        nodes.push(Node {
+            op,
+            value,
+            grad: None,
+            requires_grad,
+        });
+        Var(nodes.len() - 1)
+    }
+
+    pub fn leaf(&self, value: Matrix) -> Var {
+        self.push(Op::Leaf, value, true)
+    }
+
+    pub fn constant(&self, value: Matrix) -> Var {
+        self.push(Op::Leaf, value, false)
+    }
+
+    pub fn value(&self, v: Var) -> Matrix {
+        self.nodes.borrow()[v.0].value.clone()
+    }
+
+    pub fn shape(&self, v: Var) -> (usize, usize) {
+        let nodes = self.nodes.borrow();
+        (nodes[v.0].value.rows, nodes[v.0].value.cols)
+    }
+
+    pub fn grad(&self, v: Var) -> Option<Matrix> {
+        self.nodes.borrow()[v.0].grad.clone()
+    }
+
+    fn binary(&self, op: fn(Var, Var) -> Op, a: Var, b: Var, value: Matrix) -> Var {
+        let rg = {
+            let nodes = self.nodes.borrow();
+            nodes[a.0].requires_grad || nodes[b.0].requires_grad
+        };
+        self.push(op(a, b), value, rg)
+    }
+
+    pub fn matmul(&self, a: Var, b: Var) -> Var {
+        let value = {
+            let nodes = self.nodes.borrow();
+            nodes[a.0].value.matmul(&nodes[b.0].value)
+        };
+        self.binary(Op::MatMul, a, b, value)
+    }
+
+    pub fn add(&self, a: Var, b: Var) -> Var {
+        let value = {
+            let nodes = self.nodes.borrow();
+            nodes[a.0].value.zip(&nodes[b.0].value, |x, y| x + y)
+        };
+        self.binary(Op::Add, a, b, value)
+    }
+
+    pub fn sub(&self, a: Var, b: Var) -> Var {
+        let value = {
+            let nodes = self.nodes.borrow();
+            nodes[a.0].value.zip(&nodes[b.0].value, |x, y| x - y)
+        };
+        self.binary(Op::Sub, a, b, value)
+    }
+
+    pub fn mul(&self, a: Var, b: Var) -> Var {
+        let value = {
+            let nodes = self.nodes.borrow();
+            nodes[a.0].value.zip(&nodes[b.0].value, |x, y| x * y)
+        };
+        self.binary(Op::Mul, a, b, value)
+    }
+
+    pub fn add_row(&self, a: Var, bias: Var) -> Var {
+        let value = {
+            let nodes = self.nodes.borrow();
+            nodes[a.0].value.add_row(&nodes[bias.0].value)
+        };
+        self.binary(Op::AddRow, a, bias, value)
+    }
+
+    pub fn scale(&self, a: Var, s: f32) -> Var {
+        let value = self.nodes.borrow()[a.0].value.scale(s);
+        let rg = self.nodes.borrow()[a.0].requires_grad;
+        self.push(Op::Scale(a, s), value, rg)
+    }
+
+    fn unary(&self, a: Var, op: fn(Var) -> Op, f: impl Fn(f32) -> f32) -> Var {
+        let value = self.nodes.borrow()[a.0].value.map(f);
+        let rg = self.nodes.borrow()[a.0].requires_grad;
+        self.push(op(a), value, rg)
+    }
+
+    pub fn tanh(&self, a: Var) -> Var {
+        self.unary(a, Op::Tanh, |x| x.tanh())
+    }
+
+    pub fn sigmoid(&self, a: Var) -> Var {
+        self.unary(a, Op::Sigmoid, |x| 1.0 / (1.0 + (-x).exp()))
+    }
+
+    pub fn relu(&self, a: Var) -> Var {
+        self.unary(a, Op::Relu, |x| x.max(0.0))
+    }
+
+    pub fn exp(&self, a: Var) -> Var {
+        self.unary(a, Op::Exp, |x| x.clamp(-30.0, 30.0).exp())
+    }
+
+    pub fn square(&self, a: Var) -> Var {
+        self.unary(a, Op::Square, |x| x * x)
+    }
+
+    pub fn mean_all(&self, a: Var) -> Var {
+        let value = Matrix::from_vec(1, 1, vec![self.nodes.borrow()[a.0].value.mean_all()]);
+        let rg = self.nodes.borrow()[a.0].requires_grad;
+        self.push(Op::MeanAll(a), value, rg)
+    }
+
+    pub fn sum_all(&self, a: Var) -> Var {
+        let value = Matrix::from_vec(
+            1,
+            1,
+            vec![self.nodes.borrow()[a.0].value.data.iter().sum::<f32>()],
+        );
+        let rg = self.nodes.borrow()[a.0].requires_grad;
+        self.push(Op::SumAll(a), value, rg)
+    }
+
+    pub fn slice_rows(&self, a: Var, r0: usize, r1: usize) -> Var {
+        let value = {
+            let nodes = self.nodes.borrow();
+            let v = &nodes[a.0].value;
+            Matrix::from_vec(
+                r1 - r0,
+                v.cols,
+                v.data[r0 * v.cols..r1 * v.cols].to_vec(),
+            )
+        };
+        let rg = self.nodes.borrow()[a.0].requires_grad;
+        self.push(Op::SliceRows(a, r0, r1), value, rg)
+    }
+
+    pub fn concat_rows(&self, a: Var, b: Var) -> Var {
+        let value = {
+            let nodes = self.nodes.borrow();
+            let (va, vb) = (&nodes[a.0].value, &nodes[b.0].value);
+            assert_eq!(va.cols, vb.cols);
+            let mut data = va.data.clone();
+            data.extend_from_slice(&vb.data);
+            Matrix::from_vec(va.rows + vb.rows, va.cols, data)
+        };
+        self.binary(Op::ConcatRows, a, b, value)
+    }
+
+    pub fn concat_cols(&self, a: Var, b: Var) -> Var {
+        let value = {
+            let nodes = self.nodes.borrow();
+            let (va, vb) = (&nodes[a.0].value, &nodes[b.0].value);
+            assert_eq!(va.rows, vb.rows);
+            let mut data = Vec::with_capacity(va.data.len() + vb.data.len());
+            for r in 0..va.rows {
+                data.extend_from_slice(va.row(r));
+                data.extend_from_slice(vb.row(r));
+            }
+            Matrix::from_vec(va.rows, va.cols + vb.cols, data)
+        };
+        self.binary(Op::ConcatCols, a, b, value)
+    }
+
+    /// Convenience: mean squared error between `a` and `b` (scalar node).
+    pub fn mse(&self, a: Var, b: Var) -> Var {
+        let d = self.sub(a, b);
+        let sq = self.square(d);
+        self.mean_all(sq)
+    }
+
+    /// Backprop from scalar node `loss` (must be 1×1).
+    pub fn backward(&self, loss: Var) {
+        let n = self.nodes.borrow().len();
+        {
+            let mut nodes = self.nodes.borrow_mut();
+            assert_eq!(
+                (nodes[loss.0].value.rows, nodes[loss.0].value.cols),
+                (1, 1),
+                "backward() needs a scalar loss"
+            );
+            for node in nodes.iter_mut() {
+                node.grad = None;
+            }
+            nodes[loss.0].grad = Some(Matrix::from_vec(1, 1, vec![1.0]));
+        }
+
+        for idx in (0..n).rev() {
+            let (op_grads, targets): (Vec<Matrix>, Vec<Var>) = {
+                let nodes = self.nodes.borrow();
+                let node = &nodes[idx];
+                let Some(g) = node.grad.as_ref() else { continue };
+                if !node.requires_grad {
+                    continue;
+                }
+                match &node.op {
+                    Op::Leaf => continue,
+                    Op::MatMul(a, b) => {
+                        let ga = g.matmul(&nodes[b.0].value.transpose());
+                        let gb = nodes[a.0].value.transpose().matmul(g);
+                        (vec![ga, gb], vec![*a, *b])
+                    }
+                    Op::Add(a, b) => (vec![g.clone(), g.clone()], vec![*a, *b]),
+                    Op::Sub(a, b) => (vec![g.clone(), g.scale(-1.0)], vec![*a, *b]),
+                    Op::Mul(a, b) => {
+                        let ga = g.zip(&nodes[b.0].value, |x, y| x * y);
+                        let gb = g.zip(&nodes[a.0].value, |x, y| x * y);
+                        (vec![ga, gb], vec![*a, *b])
+                    }
+                    Op::AddRow(a, bias) => {
+                        (vec![g.clone(), g.sum_rows()], vec![*a, *bias])
+                    }
+                    Op::Scale(a, s) => (vec![g.scale(*s)], vec![*a]),
+                    Op::Tanh(a) => {
+                        let ga = g.zip(&node.value, |gi, y| gi * (1.0 - y * y));
+                        (vec![ga], vec![*a])
+                    }
+                    Op::Sigmoid(a) => {
+                        let ga = g.zip(&node.value, |gi, y| gi * y * (1.0 - y));
+                        (vec![ga], vec![*a])
+                    }
+                    Op::Relu(a) => {
+                        let ga = g.zip(&nodes[a.0].value, |gi, x| if x > 0.0 { gi } else { 0.0 });
+                        (vec![ga], vec![*a])
+                    }
+                    Op::Exp(a) => {
+                        let ga = g.zip(&node.value, |gi, y| gi * y);
+                        (vec![ga], vec![*a])
+                    }
+                    Op::Square(a) => {
+                        let ga = g.zip(&nodes[a.0].value, |gi, x| gi * 2.0 * x);
+                        (vec![ga], vec![*a])
+                    }
+                    Op::MeanAll(a) => {
+                        let src = &nodes[a.0].value;
+                        let scale = g.data[0] / src.data.len() as f32;
+                        let ga = Matrix {
+                            rows: src.rows,
+                            cols: src.cols,
+                            data: vec![scale; src.data.len()],
+                        };
+                        (vec![ga], vec![*a])
+                    }
+                    Op::SumAll(a) => {
+                        let src = &nodes[a.0].value;
+                        let ga = Matrix {
+                            rows: src.rows,
+                            cols: src.cols,
+                            data: vec![g.data[0]; src.data.len()],
+                        };
+                        (vec![ga], vec![*a])
+                    }
+                    Op::SliceRows(a, r0, _r1) => {
+                        let src = &nodes[a.0].value;
+                        let mut ga = Matrix::zeros(src.rows, src.cols);
+                        ga.data[r0 * src.cols..r0 * src.cols + g.data.len()]
+                            .copy_from_slice(&g.data);
+                        (vec![ga], vec![*a])
+                    }
+                    Op::ConcatCols(a, b) => {
+                        let (ra, ca) = {
+                            let va = &nodes[a.0].value;
+                            (va.rows, va.cols)
+                        };
+                        let cb = nodes[b.0].value.cols;
+                        let mut ga = Matrix::zeros(ra, ca);
+                        let mut gb = Matrix::zeros(ra, cb);
+                        for r in 0..ra {
+                            let row = &g.data[r * (ca + cb)..(r + 1) * (ca + cb)];
+                            ga.data[r * ca..(r + 1) * ca].copy_from_slice(&row[..ca]);
+                            gb.data[r * cb..(r + 1) * cb].copy_from_slice(&row[ca..]);
+                        }
+                        (vec![ga, gb], vec![*a, *b])
+                    }
+                    Op::ConcatRows(a, b) => {
+                        let (ra, cols) = {
+                            let va = &nodes[a.0].value;
+                            (va.rows, va.cols)
+                        };
+                        let ga = Matrix::from_vec(ra, cols, g.data[..ra * cols].to_vec());
+                        let rb = nodes[b.0].value.rows;
+                        let gb =
+                            Matrix::from_vec(rb, cols, g.data[ra * cols..].to_vec());
+                        (vec![ga, gb], vec![*a, *b])
+                    }
+                }
+            };
+            let mut nodes = self.nodes.borrow_mut();
+            for (g, t) in op_grads.into_iter().zip(targets) {
+                if !nodes[t.0].requires_grad {
+                    continue;
+                }
+                match nodes[t.0].grad.as_mut() {
+                    Some(acc) => {
+                        for (a, b) in acc.data.iter_mut().zip(&g.data) {
+                            *a += b;
+                        }
+                    }
+                    None => nodes[t.0].grad = Some(g),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Finite-difference check: ∂loss/∂x[i] ≈ (f(x+h) − f(x−h)) / 2h.
+    fn fd_check(build: impl Fn(&Tape, Var) -> Var, x0: Matrix, tol: f32) {
+        let tape = Tape::new();
+        let x = tape.leaf(x0.clone());
+        let loss = build(&tape, x);
+        tape.backward(loss);
+        let analytic = tape.grad(x).expect("grad");
+
+        let h = 1e-3f32;
+        for i in 0..x0.data.len() {
+            let mut xp = x0.clone();
+            xp.data[i] += h;
+            let mut xm = x0.clone();
+            xm.data[i] -= h;
+            let tp = Tape::new();
+            let fp = {
+                let v = tp.leaf(xp);
+                tp.value(build(&tp, v)).data[0]
+            };
+            let tm = Tape::new();
+            let fm = {
+                let v = tm.leaf(xm);
+                tm.value(build(&tm, v)).data[0]
+            };
+            let fd = (fp - fm) / (2.0 * h);
+            let a = analytic.data[i];
+            assert!(
+                (a - fd).abs() <= tol * (1.0 + fd.abs().max(a.abs())),
+                "grad[{i}]: analytic {a} vs fd {fd}"
+            );
+        }
+    }
+
+    #[test]
+    fn grad_mlp_chain() {
+        let mut rng = Pcg64::new(41);
+        let w = Matrix::randn(3, 2, &mut rng, 0.7);
+        let target = Matrix::randn(4, 2, &mut rng, 1.0);
+        let x0 = Matrix::randn(4, 3, &mut rng, 1.0);
+        fd_check(
+            move |t, x| {
+                let wv = t.constant(w.clone());
+                let tv = t.constant(target.clone());
+                let h = t.tanh(t.matmul(x, wv));
+                t.mse(h, tv)
+            },
+            x0,
+            2e-2,
+        );
+    }
+
+    #[test]
+    fn grad_weight_through_bias_and_activations() {
+        let mut rng = Pcg64::new(42);
+        let x = Matrix::randn(5, 3, &mut rng, 1.0);
+        let b0 = Matrix::randn(1, 3, &mut rng, 0.5);
+        fd_check(
+            move |t, bias| {
+                let xv = t.constant(x.clone());
+                let z = t.add_row(xv, bias);
+                let s = t.sigmoid(z);
+                let e = t.exp(t.scale(s, 0.3));
+                t.mean_all(e)
+            },
+            b0,
+            2e-2,
+        );
+    }
+
+    #[test]
+    fn grad_mul_sub_square_sum() {
+        let mut rng = Pcg64::new(43);
+        let y = Matrix::randn(2, 4, &mut rng, 1.0);
+        let x0 = Matrix::randn(2, 4, &mut rng, 1.0);
+        fd_check(
+            move |t, x| {
+                let yv = t.constant(y.clone());
+                let p = t.mul(x, yv);
+                let d = t.sub(p, x);
+                let s = t.square(d);
+                t.sum_all(s)
+            },
+            x0,
+            2e-2,
+        );
+    }
+
+    #[test]
+    fn grad_slice_concat() {
+        let mut rng = Pcg64::new(44);
+        let x0 = Matrix::randn(4, 3, &mut rng, 1.0);
+        fd_check(
+            move |t, x| {
+                let top = t.slice_rows(x, 0, 2);
+                let bot = t.slice_rows(x, 2, 4);
+                let swapped = t.concat_rows(bot, top);
+                let s = t.square(swapped);
+                t.mean_all(s)
+            },
+            x0,
+            2e-2,
+        );
+    }
+
+    #[test]
+    fn grad_accumulates_on_reuse() {
+        // loss = mean((x + x)²) → dloss/dx = 8x/n
+        let x0 = Matrix::from_vec(1, 2, vec![1.0, -2.0]);
+        let tape = Tape::new();
+        let x = tape.leaf(x0);
+        let s = tape.add(x, x);
+        let loss = tape.mean_all(tape.square(s));
+        tape.backward(loss);
+        let g = tape.grad(x).unwrap();
+        assert!((g.data[0] - 4.0).abs() < 1e-5, "{:?}", g.data);
+        assert!((g.data[1] + 8.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn relu_grad_zero_below() {
+        let tape = Tape::new();
+        let x = tape.leaf(Matrix::from_vec(1, 2, vec![-1.0, 2.0]));
+        let loss = tape.sum_all(tape.relu(x));
+        tape.backward(loss);
+        assert_eq!(tape.grad(x).unwrap().data, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn constants_get_no_grad() {
+        let tape = Tape::new();
+        let x = tape.leaf(Matrix::from_vec(1, 1, vec![2.0]));
+        let c = tape.constant(Matrix::from_vec(1, 1, vec![3.0]));
+        let loss = tape.mean_all(tape.mul(x, c));
+        tape.backward(loss);
+        assert!(tape.grad(c).is_none());
+        assert_eq!(tape.grad(x).unwrap().data, vec![3.0]);
+    }
+}

@@ -1,0 +1,167 @@
+//! Layers + parameter registry on top of the autograd tape.
+//!
+//! Parameters live outside the tape as plain matrices (`ParamSet`); each
+//! training step instantiates a fresh tape, binds params as leaves, runs
+//! forward/backward, and hands (param, grad) pairs to the optimizer.
+
+use super::autograd::{Tape, Var};
+use super::tensor::Matrix;
+use crate::util::rng::Pcg64;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Default)]
+pub struct ParamSet {
+    pub params: BTreeMap<String, Matrix>,
+}
+
+impl ParamSet {
+    pub fn new() -> ParamSet {
+        ParamSet::default()
+    }
+
+    pub fn insert(&mut self, name: &str, m: Matrix) {
+        self.params.insert(name.to_string(), m);
+    }
+
+    pub fn get(&self, name: &str) -> &Matrix {
+        self.params
+            .get(name)
+            .unwrap_or_else(|| panic!("missing param {name}"))
+    }
+
+    pub fn num_scalars(&self) -> usize {
+        self.params.values().map(|m| m.data.len()).sum()
+    }
+}
+
+/// Per-step binding of a ParamSet onto a tape.
+pub struct Bound<'a> {
+    pub tape: &'a Tape,
+    vars: BTreeMap<String, Var>,
+}
+
+impl<'a> Bound<'a> {
+    pub fn bind(tape: &'a Tape, params: &ParamSet) -> Bound<'a> {
+        let vars = params
+            .params
+            .iter()
+            .map(|(k, v)| (k.clone(), tape.leaf(v.clone())))
+            .collect();
+        Bound { tape, vars }
+    }
+
+    pub fn var(&self, name: &str) -> Var {
+        *self
+            .vars
+            .get(name)
+            .unwrap_or_else(|| panic!("missing bound param {name}"))
+    }
+
+    /// Linear layer `x @ W + b` using params `{prefix}.w` / `{prefix}.b`.
+    pub fn linear(&self, prefix: &str, x: Var) -> Var {
+        let z = self.tape.matmul(x, self.var(&format!("{prefix}.w")));
+        self.tape.add_row(z, self.var(&format!("{prefix}.b")))
+    }
+
+    /// Collect gradients after backward; missing grads are zeros.
+    pub fn grads(&self, params: &ParamSet) -> BTreeMap<String, Matrix> {
+        self.vars
+            .iter()
+            .map(|(k, &v)| {
+                let g = self.tape.grad(v).unwrap_or_else(|| {
+                    let p = params.get(k);
+                    Matrix::zeros(p.rows, p.cols)
+                });
+                (k.clone(), g)
+            })
+            .collect()
+    }
+}
+
+/// Register an (in_dim → out_dim) linear layer's parameters.
+pub fn init_linear(
+    params: &mut ParamSet,
+    prefix: &str,
+    in_dim: usize,
+    out_dim: usize,
+    rng: &mut Pcg64,
+) {
+    let scale = (1.0 / in_dim as f32).sqrt();
+    params.insert(&format!("{prefix}.w"), Matrix::randn(in_dim, out_dim, rng, scale));
+    params.insert(&format!("{prefix}.b"), Matrix::zeros(1, out_dim));
+}
+
+/// A plain MLP: linear → tanh → ... → linear.
+pub struct Mlp {
+    pub prefix: String,
+    pub dims: Vec<usize>,
+}
+
+impl Mlp {
+    pub fn init(params: &mut ParamSet, prefix: &str, dims: &[usize], rng: &mut Pcg64) -> Mlp {
+        assert!(dims.len() >= 2);
+        for i in 0..dims.len() - 1 {
+            init_linear(params, &format!("{prefix}.{i}"), dims[i], dims[i + 1], rng);
+        }
+        Mlp {
+            prefix: prefix.to_string(),
+            dims: dims.to_vec(),
+        }
+    }
+
+    pub fn forward(&self, bound: &Bound, x: Var) -> Var {
+        let mut h = x;
+        let layers = self.dims.len() - 1;
+        for i in 0..layers {
+            h = bound.linear(&format!("{}.{i}", self.prefix), h);
+            if i + 1 < layers {
+                h = bound.tape.tanh(h);
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_learns_xor_ish() {
+        // regression: y = x0 * x1 over {-1, 1}² — nonlinear, needs hidden layer
+        let mut rng = Pcg64::new(51);
+        let mut params = ParamSet::new();
+        let mlp = Mlp::init(&mut params, "m", &[2, 8, 1], &mut rng);
+        let x = Matrix::from_rows(&[
+            vec![-1.0, -1.0],
+            vec![-1.0, 1.0],
+            vec![1.0, -1.0],
+            vec![1.0, 1.0],
+        ]);
+        let y = Matrix::from_vec(4, 1, vec![1.0, -1.0, -1.0, 1.0]);
+        let mut opt = super::super::optim::Adam::new(0.05);
+        let mut last = f32::INFINITY;
+        for _ in 0..400 {
+            let tape = Tape::new();
+            let bound = Bound::bind(&tape, &params);
+            let xin = tape.constant(x.clone());
+            let target = tape.constant(y.clone());
+            let pred = mlp.forward(&bound, xin);
+            let loss = tape.mse(pred, target);
+            tape.backward(loss);
+            last = tape.value(loss).data[0];
+            let grads = bound.grads(&params);
+            opt.step(&mut params, &grads);
+        }
+        assert!(last < 0.05, "final loss {last}");
+    }
+
+    #[test]
+    fn param_count() {
+        let mut rng = Pcg64::new(52);
+        let mut params = ParamSet::new();
+        Mlp::init(&mut params, "m", &[8, 16, 4], &mut rng);
+        // 8*16 + 16 + 16*4 + 4
+        assert_eq!(params.num_scalars(), 8 * 16 + 16 + 16 * 4 + 4);
+    }
+}

@@ -1,0 +1,121 @@
+//! Request pool + weighted load balancer (the "LLM Load Balancer" layer of
+//! Table I). Weights come from the configuration module (∝ per-replica
+//! n_limit, §IV-A-4); dispatch picks the replica with the lowest
+//! weight-normalized in-flight load (smooth weighted least-loaded), which
+//! converges to weight-proportional splits under saturation while staying
+//! responsive to transient imbalance.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+#[derive(Debug)]
+pub struct ReplicaHandle {
+    pub id: u64,
+    pub weight: f64,
+    inflight: AtomicU64,
+    dispatched: AtomicU64,
+}
+
+impl ReplicaHandle {
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    pub fn dispatched(&self) -> u64 {
+        self.dispatched.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct WeightedRouter {
+    replicas: Vec<Arc<ReplicaHandle>>,
+}
+
+impl WeightedRouter {
+    pub fn new(weights: &[(u64, f64)]) -> WeightedRouter {
+        WeightedRouter {
+            replicas: weights
+                .iter()
+                .map(|&(id, weight)| {
+                    Arc::new(ReplicaHandle {
+                        id,
+                        weight: weight.max(1e-9),
+                        inflight: AtomicU64::new(0),
+                        dispatched: AtomicU64::new(0),
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    /// Route one request; returns the chosen replica. Call
+    /// [`WeightedRouter::complete`] when the request finishes.
+    pub fn dispatch(&self) -> Option<Arc<ReplicaHandle>> {
+        let chosen = self.replicas.iter().min_by(|a, b| {
+            let la = (a.inflight() as f64 + 1.0) / a.weight;
+            let lb = (b.inflight() as f64 + 1.0) / b.weight;
+            la.total_cmp(&lb)
+        })?;
+        chosen.inflight.fetch_add(1, Ordering::Relaxed);
+        chosen.dispatched.fetch_add(1, Ordering::Relaxed);
+        Some(Arc::clone(chosen))
+    }
+
+    pub fn complete(&self, handle: &ReplicaHandle) {
+        handle.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Replace weights after a reconfiguration (ingress update).
+    pub fn set_weights(&mut self, weights: &[(u64, f64)]) {
+        *self = WeightedRouter::new(weights);
+    }
+
+    pub fn replicas(&self) -> &[Arc<ReplicaHandle>] {
+        &self.replicas
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_proportionally_under_saturation() {
+        let router = WeightedRouter::new(&[(0, 1.0), (1, 0.5)]);
+        // steady state: dispatch without completing
+        for _ in 0..300 {
+            router.dispatch().unwrap();
+        }
+        let d0 = router.replicas()[0].dispatched() as f64;
+        let d1 = router.replicas()[1].dispatched() as f64;
+        let ratio = d0 / d1;
+        assert!((1.8..2.2).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn prefers_idle_replica() {
+        let router = WeightedRouter::new(&[(0, 1.0), (1, 1.0)]);
+        let h = router.dispatch().unwrap();
+        // second dispatch must go to the other replica
+        let h2 = router.dispatch().unwrap();
+        assert_ne!(h.id, h2.id);
+        router.complete(&h);
+        router.complete(&h2);
+        assert_eq!(router.replicas()[0].inflight(), 0);
+    }
+
+    #[test]
+    fn empty_router() {
+        let router = WeightedRouter::new(&[]);
+        assert!(router.dispatch().is_none());
+        assert!(router.is_empty());
+    }
+}

@@ -1,0 +1,113 @@
+//! Request-text embedder runtime: FNV-1a n-gram feature hashing on the
+//! rust side (mirrors `python/compile/embedder.py::hash_ngrams` exactly —
+//! pinned by tests on both sides) + the compiled projection artifact.
+
+use super::{execute_b1, EmbedManifest, Manifest, PjRt};
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// FNV-1a hash of char 3-grams → l1-normalized count vector.
+pub fn hash_ngrams(text: &str, hash_dim: usize) -> Vec<f32> {
+    const N: usize = 3;
+    let mut v = vec![0.0f32; hash_dim];
+    let lower = text.to_lowercase();
+    let mut data = lower.into_bytes();
+    while data.len() < N {
+        data.push(b' ');
+    }
+    for win in data.windows(N) {
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+        for &b in win {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        v[(h % hash_dim as u64) as usize] += 1.0;
+    }
+    let s: f32 = v.iter().sum();
+    if s > 0.0 {
+        for x in v.iter_mut() {
+            *x /= s;
+        }
+    }
+    v
+}
+
+pub struct EmbedRuntime {
+    rt: Arc<PjRt>,
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: EmbedManifest,
+}
+
+impl EmbedRuntime {
+    pub fn load(rt: Arc<PjRt>, manifest: &Manifest) -> Result<EmbedRuntime> {
+        let exe = rt.compile_file(&manifest.dir.join(&manifest.embed.file))?;
+        Ok(EmbedRuntime {
+            rt,
+            exe,
+            spec: manifest.embed.clone(),
+        })
+    }
+
+    /// Embed a batch of request texts into unit vectors.
+    pub fn embed(&self, texts: &[&str]) -> Result<Vec<Vec<f64>>> {
+        let (b, h, e) = (self.spec.batch, self.spec.hash_dim, self.spec.embed_dim);
+        let mut out = Vec::with_capacity(texts.len());
+        let mut chunk = vec![0.0f32; b * h];
+        let mut i = 0;
+        while i < texts.len() {
+            let take = (texts.len() - i).min(b);
+            chunk.fill(0.0);
+            for (r, text) in texts[i..i + take].iter().enumerate() {
+                let feats = hash_ngrams(text, h);
+                chunk[r * h..(r + 1) * h].copy_from_slice(&feats);
+            }
+            let input = self.rt.buffer_f32(&chunk, &[b, h])?;
+            let result = execute_b1(&self.exe, &[&input])?;
+            let lit = result
+                .to_literal_sync()
+                .map_err(|e2| anyhow!("to_literal: {e2:?}"))?;
+            let vals = lit
+                .to_vec::<f32>()
+                .map_err(|e2| anyhow!("to_vec: {e2:?}"))?;
+            for r in 0..take {
+                out.push(vals[r * e..(r + 1) * e].iter().map(|&x| x as f64).collect());
+            }
+            i += take;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_matches_python_pin() {
+        // python/tests/test_embedder.py pins FNV-1a("abc") % 1024 == 843
+        let v = hash_ngrams("abc", 1024);
+        let nonzero: Vec<usize> = v
+            .iter()
+            .enumerate()
+            .filter(|(_, &x)| x > 0.0)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(nonzero, vec![843]);
+        assert!((v[843] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn hash_l1_normalized_and_deterministic() {
+        let a = hash_ngrams("write a python function to sort a list", 1024);
+        let b = hash_ngrams("write a python function to sort a list", 1024);
+        assert_eq!(a, b);
+        let s: f32 = a.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn short_text_padded() {
+        let v = hash_ngrams("a", 64);
+        assert!((v.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+}

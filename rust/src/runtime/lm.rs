@@ -1,0 +1,187 @@
+//! The served language model: state-carry prefill/decode over PJRT.
+//!
+//! `LmRuntime` owns the two compiled programs and a device-resident state
+//! buffer `[KV ‖ logits]`. The engine drives it slot-wise:
+//!
+//! ```text
+//! prefill(prompt, slot)  — fills slot's KV, logits[slot] = first-token logits
+//! decode(tokens, lens)   — one step for the whole running batch
+//! logits(slot)           — host copy of one row of the logits tail
+//! ```
+//!
+//! Two execution modes, switchable for the perf study (§Perf):
+//! * **chained** (default): state stays a `PjRtBuffer`; each call feeds the
+//!   previous output straight back via `execute_b`, and `logits()` reads
+//!   only `V` floats at an offset.
+//! * **host-roundtrip**: state crosses the host on every call (the naive
+//!   baseline the perf pass measures against).
+
+use super::{execute_b1, Manifest, ModelManifest, PjRt};
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    Chained,
+    HostRoundtrip,
+}
+
+pub struct LmRuntime {
+    rt: Arc<PjRt>,
+    decode_exe: xla::PjRtLoadedExecutable,
+    prefill_exe: xla::PjRtLoadedExecutable,
+    /// `state[:B*V].reshape(B,V)` — the CPU PJRT plugin lacks
+    /// `CopyRawToHost`, so logits readback runs this tiny program against
+    /// the device-resident state and materializes only its B×V output.
+    extract_exe: xla::PjRtLoadedExecutable,
+    pub spec: ModelManifest,
+    pub mode: ExecMode,
+    state: StateBuf,
+    /// decode steps executed (for perf accounting)
+    pub steps: u64,
+}
+
+enum StateBuf {
+    Device(xla::PjRtBuffer),
+    Host(Vec<f32>),
+}
+
+impl LmRuntime {
+    pub fn load(rt: Arc<PjRt>, manifest: &Manifest, mode: ExecMode) -> Result<LmRuntime> {
+        let decode_exe = rt.compile_file(&manifest.dir.join(&manifest.model.decode_file))?;
+        let prefill_exe = rt.compile_file(&manifest.dir.join(&manifest.model.prefill_file))?;
+        let extract_exe = rt.compile_file(&manifest.dir.join(&manifest.model.extract_file))?;
+        let spec = manifest.model.clone();
+        let state = Self::fresh_state(&rt, &spec, mode)?;
+        Ok(LmRuntime {
+            rt,
+            decode_exe,
+            prefill_exe,
+            extract_exe,
+            spec,
+            mode,
+            state,
+            steps: 0,
+        })
+    }
+
+    pub fn load_default(dir: &Path, mode: ExecMode) -> Result<LmRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let rt = PjRt::cpu()?;
+        Self::load(rt, &manifest, mode)
+    }
+
+    fn fresh_state(rt: &PjRt, spec: &ModelManifest, mode: ExecMode) -> Result<StateBuf> {
+        let zeros = vec![0.0f32; spec.state_elems];
+        Ok(match mode {
+            ExecMode::Chained => StateBuf::Device(rt.buffer_f32(&zeros, &[spec.state_elems])?),
+            ExecMode::HostRoundtrip => StateBuf::Host(zeros),
+        })
+    }
+
+    /// Reset all KV/logits state (e.g. between benchmark runs).
+    pub fn reset(&mut self) -> Result<()> {
+        self.state = Self::fresh_state(&self.rt, &self.spec, self.mode)?;
+        Ok(())
+    }
+
+    /// Prefill `prompt` (≤ max_seq tokens) into batch slot `slot`.
+    pub fn prefill(&mut self, prompt: &[i32], slot: usize) -> Result<()> {
+        let s = self.spec.max_seq;
+        if prompt.is_empty() || prompt.len() > s {
+            bail!("prompt length {} out of range 1..={s}", prompt.len());
+        }
+        if slot >= self.spec.batch {
+            bail!("slot {slot} out of range");
+        }
+        let mut padded = vec![0i32; s];
+        padded[..prompt.len()].copy_from_slice(prompt);
+        let tokens = self.rt.buffer_i32(&padded, &[s])?;
+        let plen = self.rt.buffer_i32(&[prompt.len() as i32], &[])?;
+        let slot_b = self.rt.buffer_i32(&[slot as i32], &[])?;
+        run_step(
+            &self.rt,
+            &self.spec,
+            &mut self.state,
+            &self.prefill_exe,
+            &[&tokens, &plen, &slot_b],
+        )
+    }
+
+    /// One decode step for the whole batch. `seq_lens[b] <= 0` marks slot b
+    /// inactive.
+    pub fn decode(&mut self, tokens: &[i32], seq_lens: &[i32]) -> Result<()> {
+        if tokens.len() != self.spec.batch || seq_lens.len() != self.spec.batch {
+            bail!("decode arity mismatch");
+        }
+        let t = self.rt.buffer_i32(tokens, &[self.spec.batch])?;
+        let l = self.rt.buffer_i32(seq_lens, &[self.spec.batch])?;
+        self.steps += 1;
+        run_step(&self.rt, &self.spec, &mut self.state, &self.decode_exe, &[&t, &l])
+    }
+
+    /// Copy one slot's logits row (`V` floats) to the host.
+    pub fn logits(&self, slot: usize) -> Result<Vec<f32>> {
+        let v = self.spec.vocab;
+        let all = self.all_logits()?;
+        Ok(all[slot * v..(slot + 1) * v].to_vec())
+    }
+
+    /// All logits rows at once (`B×V`), for batched sampling.
+    ///
+    /// Chained mode runs the `extract_logits` program against the
+    /// device-resident state: only B×V floats are materialized on the
+    /// host, the multi-megabyte KV region never moves.
+    pub fn all_logits(&self) -> Result<Vec<f32>> {
+        let n = self.spec.batch * self.spec.vocab;
+        match &self.state {
+            StateBuf::Device(buf) => {
+                let out = execute_b1(&self.extract_exe, &[buf])?;
+                let lit = out
+                    .to_literal_sync()
+                    .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+                lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+            }
+            StateBuf::Host(host) => Ok(host[..n].to_vec()),
+        }
+    }
+}
+
+/// Advance the state by one program invocation (free function so callers
+/// can borrow `state` mutably and the executable immutably from the same
+/// struct).
+fn run_step(
+    rt: &PjRt,
+    spec: &ModelManifest,
+    state: &mut StateBuf,
+    exe: &xla::PjRtLoadedExecutable,
+    extra: &[&xla::PjRtBuffer],
+) -> Result<()> {
+    match state {
+        StateBuf::Device(buf) => {
+            let mut args: Vec<&xla::PjRtBuffer> = vec![buf];
+            args.extend_from_slice(extra);
+            let out = execute_b1(exe, &args)?;
+            *state = StateBuf::Device(out);
+        }
+        StateBuf::Host(host) => {
+            // naive mode: upload, run, download everything
+            let up = rt.buffer_f32(host, &[spec.state_elems])?;
+            let mut args: Vec<&xla::PjRtBuffer> = vec![&up];
+            args.extend_from_slice(extra);
+            let out = execute_b1(exe, &args)?;
+            let lit = out
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            let v = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            *state = StateBuf::Host(v);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    // covered by rust/tests/runtime_golden.rs (needs artifacts on disk)
+}

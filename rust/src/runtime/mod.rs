@@ -1,0 +1,286 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`) onto a CPU
+//! PJRT client and expose typed wrappers over them. This is the only
+//! module that touches the `xla` crate; nothing in it calls Python.
+//!
+//! Interchange is HLO *text* — the image's xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Hot-path design (EXPERIMENTS.md §Perf): every lowered program has a
+//! single array root, so its output `PjRtBuffer` feeds the next call via
+//! `execute_b` — the LM's KV cache stays device-resident across the whole
+//! generation, and only the `B×V` logits tail is copied to the host per
+//! step (`copy_raw_to_host_sync` with offset).
+
+pub mod embedder;
+pub mod lm;
+pub mod vae;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelManifest,
+    pub vae: VaeManifest,
+    pub embed: EmbedManifest,
+    pub detection_dataset: PathBuf,
+    pub golden: Option<Golden>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub decode_file: String,
+    pub prefill_file: String,
+    pub extract_file: String,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub batch: usize,
+    pub kv_elems: usize,
+    pub state_elems: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub param_count: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct VaeManifest {
+    pub file: String,
+    pub batch: usize,
+    pub n_features: usize,
+    /// train-split normalization constants (baked into the artifact; also
+    /// needed host-side to z-normalize reconstruction errors)
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct EmbedManifest {
+    pub file: String,
+    pub batch: usize,
+    pub hash_dim: usize,
+    pub embed_dim: usize,
+}
+
+/// Golden outputs pinned at AOT time (cross-language numeric check).
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub prompt: Vec<i32>,
+    pub prompt_len: usize,
+    pub slot: usize,
+    pub prefill_argmax: usize,
+    pub prefill_logits_head: Vec<f32>,
+    pub decode_token: i32,
+    pub decode_argmax: usize,
+    pub decode_logits_head: Vec<f32>,
+}
+
+fn req_usize(j: &Json, path: &[&str]) -> Result<usize> {
+    j.at(path)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("manifest missing {:?}", path))
+}
+
+fn req_str(j: &Json, path: &[&str]) -> Result<String> {
+    Ok(j.at(path)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("manifest missing {:?}", path))?
+        .to_string())
+}
+
+impl Manifest {
+    /// Locate the artifacts dir: `$ENOVA_ARTIFACTS`, `./artifacts`, or the
+    /// crate-root artifacts when running under `cargo test`.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(dir) = std::env::var("ENOVA_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        let cwd = PathBuf::from("artifacts");
+        if cwd.join("manifest.json").exists() {
+            return cwd;
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let model = ModelManifest {
+            decode_file: req_str(&j, &["model", "decode_file"])?,
+            prefill_file: req_str(&j, &["model", "prefill_file"])?,
+            extract_file: req_str(&j, &["model", "extract_file"])?,
+            vocab: req_usize(&j, &["model", "vocab"])?,
+            max_seq: req_usize(&j, &["model", "max_seq"])?,
+            batch: req_usize(&j, &["model", "batch"])?,
+            kv_elems: req_usize(&j, &["model", "kv_elems"])?,
+            state_elems: req_usize(&j, &["model", "state_elems"])?,
+            n_layers: req_usize(&j, &["model", "n_layers"])?,
+            n_heads: req_usize(&j, &["model", "n_heads"])?,
+            head_dim: req_usize(&j, &["model", "head_dim"])?,
+            param_count: req_usize(&j, &["model", "param_count"])?,
+        };
+        if model.state_elems != model.kv_elems + model.batch * model.vocab {
+            bail!("manifest state layout inconsistent");
+        }
+        let f64s = |path: [&str; 2]| -> Result<Vec<f64>> {
+            Ok(j.at(&path)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("manifest missing {path:?}"))?
+                .iter()
+                .filter_map(Json::as_f64)
+                .collect())
+        };
+        let vae = VaeManifest {
+            file: req_str(&j, &["vae", "file"])?,
+            batch: req_usize(&j, &["vae", "batch"])?,
+            n_features: req_usize(&j, &["vae", "n_features"])?,
+            mean: f64s(["vae", "mean"])?,
+            std: f64s(["vae", "std"])?,
+        };
+        let embed = EmbedManifest {
+            file: req_str(&j, &["embed", "file"])?,
+            batch: req_usize(&j, &["embed", "batch"])?,
+            hash_dim: req_usize(&j, &["embed", "hash_dim"])?,
+            embed_dim: req_usize(&j, &["embed", "embed_dim"])?,
+        };
+        let golden = j.get("golden").map(|g| -> Result<Golden> {
+            let ints = |key: &str| -> Result<Vec<i32>> {
+                Ok(g.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("golden missing {key}"))?
+                    .iter()
+                    .filter_map(Json::as_f64)
+                    .map(|x| x as i32)
+                    .collect())
+            };
+            let floats = |key: &str| -> Result<Vec<f32>> {
+                Ok(g.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("golden missing {key}"))?
+                    .iter()
+                    .filter_map(Json::as_f64)
+                    .map(|x| x as f32)
+                    .collect())
+            };
+            Ok(Golden {
+                prompt: ints("prompt")?,
+                prompt_len: req_usize(g, &["prompt_len"])?,
+                slot: req_usize(g, &["slot"])?,
+                prefill_argmax: req_usize(g, &["prefill_argmax"])?,
+                prefill_logits_head: floats("prefill_logits_head")?,
+                decode_token: req_usize(g, &["decode_token"])? as i32,
+                decode_argmax: req_usize(g, &["decode_argmax"])?,
+                decode_logits_head: floats("decode_logits_head")?,
+            })
+        });
+        let golden = match golden {
+            Some(g) => Some(g?),
+            None => None,
+        };
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            detection_dataset: dir.join(req_str(&j, &["detection_dataset"])?),
+            model,
+            vae,
+            embed,
+            golden,
+        })
+    }
+}
+
+/// Shared PJRT CPU client + executable loader.
+pub struct PjRt {
+    pub client: xla::PjRtClient,
+}
+
+impl PjRt {
+    pub fn cpu() -> Result<Arc<PjRt>> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Arc::new(PjRt { client }))
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+    }
+
+    pub fn buffer_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("buffer_from_host_buffer: {e:?}"))
+    }
+
+    pub fn buffer_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("buffer_from_host_buffer: {e:?}"))
+    }
+}
+
+/// Execute with buffer args, expecting a single array output buffer.
+pub fn execute_b1(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[&xla::PjRtBuffer],
+) -> Result<xla::PjRtBuffer> {
+    let mut out = exe
+        .execute_b(args)
+        .map_err(|e| anyhow!("execute_b: {e:?}"))?;
+    let mut replica = out
+        .pop()
+        .ok_or_else(|| anyhow!("no execution results"))?;
+    replica
+        .pop()
+        .ok_or_else(|| anyhow!("no output buffer"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses_and_is_consistent() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&Manifest::default_dir()).unwrap();
+        assert_eq!(m.model.vocab, 512);
+        assert!(m.model.batch >= 4);
+        assert_eq!(
+            m.model.state_elems,
+            m.model.kv_elems + m.model.batch * m.model.vocab
+        );
+        assert!(m.detection_dataset.exists());
+        assert!(m.golden.is_some(), "golden outputs missing from manifest");
+    }
+
+    #[test]
+    fn client_compiles_all_artifacts() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&Manifest::default_dir()).unwrap();
+        let rt = PjRt::cpu().unwrap();
+        for f in [&m.model.decode_file, &m.model.prefill_file, &m.model.extract_file, &m.vae.file, &m.embed.file] {
+            rt.compile_file(&m.dir.join(f)).unwrap();
+        }
+    }
+}

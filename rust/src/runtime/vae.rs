@@ -1,0 +1,90 @@
+//! VAE scorer runtime: runs the trained semi-supervised VAE artifact.
+//!
+//! The lowered program maps a batch of raw metric rows `f32[B, F]` to
+//! `f32[B, F+1]`: columns `[0, F)` are the de-normalized reconstruction,
+//! column `F` is `KL(q(z|m) ‖ p(z))` — the anomaly score of §IV-B.
+//! Normalization constants are baked into the artifact.
+
+use super::{execute_b1, Manifest, PjRt, VaeManifest};
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+#[derive(Debug, Clone, Copy)]
+pub struct VaeScore {
+    /// KL(q(z|m) ‖ p(z)) — the latent-divergence component of the ELBO
+    pub kl: f64,
+    /// z-normalized squared reconstruction error — the reconstruction-
+    /// probability component of the ELBO (−log p(m|z) up to constants)
+    pub recon_err: f64,
+    /// mean(input − reconstruction) — the MD statistic deciding
+    /// scale-up (positive: observed above normal) vs scale-down.
+    pub mean_diff: f64,
+}
+
+pub struct VaeRuntime {
+    rt: Arc<PjRt>,
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: VaeManifest,
+}
+
+impl VaeRuntime {
+    pub fn load(rt: Arc<PjRt>, manifest: &Manifest) -> Result<VaeRuntime> {
+        let exe = rt.compile_file(&manifest.dir.join(&manifest.vae.file))?;
+        Ok(VaeRuntime {
+            rt,
+            exe,
+            spec: manifest.vae.clone(),
+        })
+    }
+
+    /// Score a batch of metric rows (row-major `n × F`, any `n`).
+    pub fn score(&self, rows: &[f64]) -> Result<Vec<VaeScore>> {
+        let f = self.spec.n_features;
+        assert_eq!(rows.len() % f, 0, "rows must be n×{f}");
+        let n = rows.len() / f;
+        let b = self.spec.batch;
+        let mut out = Vec::with_capacity(n);
+        let mut chunk = vec![0.0f32; b * f];
+        let mut i = 0;
+        while i < n {
+            let take = (n - i).min(b);
+            for (dst, src) in chunk
+                .iter_mut()
+                .zip(rows[i * f..(i + take) * f].iter())
+            {
+                *dst = *src as f32;
+            }
+            // pad the tail chunk by repeating the last row (scores ignored)
+            for j in take * f..b * f {
+                chunk[j] = chunk[j % (take * f).max(1)];
+            }
+            let input = self.rt.buffer_f32(&chunk, &[b, f])?;
+            let result = execute_b1(&self.exe, &[&input])?;
+            let lit = result
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            let vals = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            for r in 0..take {
+                let row = &vals[r * (f + 1)..(r + 1) * (f + 1)];
+                let kl = row[f] as f64;
+                let mut md = 0.0;
+                let mut err = 0.0;
+                for c in 0..f {
+                    let diff = rows[(i + r) * f + c] - row[c] as f64;
+                    md += diff;
+                    let z = diff / self.spec.std[c].max(1e-9);
+                    err += z * z;
+                }
+                out.push(VaeScore {
+                    kl,
+                    recon_err: err / f as f64,
+                    mean_diff: md / f as f64,
+                });
+            }
+            i += take;
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,170 @@
+//! Cluster-level simulation: several replicas (possibly on heterogeneous
+//! GPU types) behind the weighted load balancer of §IV-A-4. Arrivals are
+//! split by routing weight, each replica simulates independently, and the
+//! results merge into cluster-level throughput/latency — exactly how the
+//! paper's multi-GPU experiments (Fig. 4, Table III weights column) are
+//! structured.
+
+use super::replica::{Replica, Request, SimResult};
+use crate::util::rng::Pcg64;
+
+pub struct ClusterSim {
+    pub replicas: Vec<Replica>,
+    /// routing weights (∝ per-replica n_limit); normalized internally
+    pub weights: Vec<f64>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct ClusterResult {
+    pub per_replica: Vec<SimResult>,
+    pub horizon: f64,
+}
+
+impl ClusterResult {
+    pub fn finished(&self) -> usize {
+        self.per_replica.iter().map(|r| r.finished.len()).sum()
+    }
+
+    pub fn timed_out(&self) -> usize {
+        self.per_replica.iter().map(|r| r.timed_out).sum()
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.per_replica.iter().map(|r| r.gpus_used).sum()
+    }
+
+    /// Paper throughput metric across the cluster: tokens/GPU/s.
+    pub fn throughput_per_gpu(&self) -> f64 {
+        let tokens: u64 = self.per_replica.iter().map(|r| r.output_tokens).sum();
+        tokens as f64 / self.total_gpus().max(1) as f64 / self.horizon.max(1e-9)
+    }
+
+    pub fn mean_normalized_latency(&self) -> f64 {
+        let all: Vec<f64> = self
+            .per_replica
+            .iter()
+            .flat_map(|r| r.finished.iter().map(|f| f.normalized_latency()))
+            .collect();
+        if all.is_empty() {
+            f64::INFINITY
+        } else {
+            all.iter().sum::<f64>() / all.len() as f64
+        }
+    }
+
+    /// Fraction of all issued requests that completed within the horizon.
+    pub fn completion_ratio(&self, issued: usize) -> f64 {
+        self.finished() as f64 / issued.max(1) as f64
+    }
+}
+
+impl ClusterSim {
+    pub fn new(replicas: Vec<Replica>, weights: Vec<f64>) -> ClusterSim {
+        assert_eq!(replicas.len(), weights.len());
+        ClusterSim { replicas, weights }
+    }
+
+    /// Route `arrivals` by weighted sampling and simulate each replica.
+    pub fn simulate(&self, arrivals: &[Request], horizon: f64, seed: u64) -> ClusterResult {
+        let mut rng = Pcg64::new(seed ^ 0xc1u64);
+        let total_w: f64 = self.weights.iter().sum();
+        let mut streams: Vec<Vec<Request>> = vec![Vec::new(); self.replicas.len()];
+        for req in arrivals {
+            let mut x = rng.f64() * total_w;
+            let mut chosen = self.replicas.len() - 1;
+            for (i, w) in self.weights.iter().enumerate() {
+                x -= w;
+                if x <= 0.0 {
+                    chosen = i;
+                    break;
+                }
+            }
+            streams[chosen].push(*req);
+        }
+        let per_replica = self
+            .replicas
+            .iter()
+            .zip(streams)
+            .map(|(rep, stream)| rep.simulate(stream, horizon))
+            .collect();
+        ClusterResult {
+            per_replica,
+            horizon,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::gpu::{A100_80G, RTX4090_24G};
+    use crate::simulator::modelcard::LLAMA2_7B;
+    use crate::simulator::replica::ServiceConfig;
+    use crate::workload::arrivals::{poisson_stream, RateProfile};
+    use crate::workload::corpus::{CorpusMix, ALL_FAMILIES};
+
+    fn two_device_cluster(w: Vec<f64>) -> ClusterSim {
+        let cfg = ServiceConfig {
+            max_num_seqs: 48,
+            gpu_memory: 0.9,
+            max_tokens: 512,
+            parallel_size: 1,
+        };
+        ClusterSim::new(
+            vec![
+                Replica::new(&A100_80G, &LLAMA2_7B, cfg),
+                Replica::new(&RTX4090_24G, &LLAMA2_7B, cfg),
+            ],
+            w,
+        )
+    }
+
+    #[test]
+    fn weighted_routing_respects_proportions() {
+        let mut rng = Pcg64::new(91);
+        let mix = CorpusMix::uniform(&ALL_FAMILIES);
+        let arrivals = poisson_stream(&RateProfile::constant(6.0), &mix, 300.0, &mut rng);
+        let cluster = two_device_cluster(vec![3.0, 1.0]);
+        let res = cluster.simulate(&arrivals, 600.0, 1);
+        let n0: f64 = res.per_replica[0]
+            .frames
+            .iter()
+            .map(|(_, f)| f.n_arriving)
+            .sum();
+        let n1: f64 = res.per_replica[1]
+            .frames
+            .iter()
+            .map(|(_, f)| f.n_arriving)
+            .sum();
+        let ratio = n0 / n1.max(1.0);
+        assert!((2.4..3.8).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn bad_weights_overload_weak_device() {
+        // Fig. 4 third finding: routing too much to the weak GPU explodes early
+        let mut rng = Pcg64::new(92);
+        let mix = CorpusMix::uniform(&ALL_FAMILIES);
+        let arrivals = poisson_stream(&RateProfile::constant(14.0), &mix, 400.0, &mut rng);
+        let issued = arrivals.len();
+        let good = two_device_cluster(vec![1.0, 0.6]).simulate(&arrivals, 700.0, 2);
+        let bad = two_device_cluster(vec![0.2, 1.8]).simulate(&arrivals, 700.0, 2);
+        assert!(
+            good.completion_ratio(issued) > bad.completion_ratio(issued),
+            "good {} vs bad {}",
+            good.completion_ratio(issued),
+            bad.completion_ratio(issued)
+        );
+    }
+
+    #[test]
+    fn throughput_aggregates_over_gpus() {
+        let mut rng = Pcg64::new(93);
+        let mix = CorpusMix::uniform(&ALL_FAMILIES);
+        let arrivals = poisson_stream(&RateProfile::constant(4.0), &mix, 200.0, &mut rng);
+        let res = two_device_cluster(vec![1.0, 0.8]).simulate(&arrivals, 500.0, 3);
+        assert_eq!(res.total_gpus(), 2);
+        assert!(res.throughput_per_gpu() > 0.0);
+        assert!(res.mean_normalized_latency().is_finite());
+    }
+}

@@ -1,0 +1,79 @@
+//! GPU device catalog with public-spec roofline parameters.
+//!
+//! The experiments' absolute numbers come from these rooflines, so they are
+//! taken from vendor datasheets (dense BF16 TFLOPS without sparsity, HBM/
+//! GDDR peak bandwidth). The simulator applies efficiency factors on top
+//! (see `replica.rs`), which is where calibration lives.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub mem_bytes: f64,
+    /// dense bf16/fp16 peak, FLOP/s
+    pub flops: f64,
+    /// memory bandwidth, bytes/s
+    pub mem_bw: f64,
+    /// hourly price in USD (public cloud list-ish; used for cost scoring)
+    pub usd_per_hour: f64,
+}
+
+pub const A100_80G: GpuSpec = GpuSpec {
+    name: "A100-80G",
+    mem_bytes: 80.0e9,
+    flops: 312.0e12,
+    mem_bw: 2039.0e9,
+    usd_per_hour: 3.67,
+};
+
+pub const RTX4090_24G: GpuSpec = GpuSpec {
+    name: "RTX4090-24G",
+    mem_bytes: 24.0e9,
+    flops: 165.0e12,
+    mem_bw: 1008.0e9,
+    usd_per_hour: 0.74,
+};
+
+pub const H100_80G: GpuSpec = GpuSpec {
+    name: "H100-80G",
+    mem_bytes: 80.0e9,
+    flops: 989.0e12,
+    mem_bw: 3350.0e9,
+    usd_per_hour: 5.93,
+};
+
+pub const L40S_48G: GpuSpec = GpuSpec {
+    name: "L40S-48G",
+    mem_bytes: 48.0e9,
+    flops: 362.0e12,
+    mem_bw: 864.0e9,
+    usd_per_hour: 1.96,
+};
+
+pub const CATALOG: [&GpuSpec; 4] = [&A100_80G, &RTX4090_24G, &H100_80G, &L40S_48G];
+
+pub fn by_name(name: &str) -> Option<&'static GpuSpec> {
+    CATALOG.iter().copied().find(|g| g.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup() {
+        assert_eq!(by_name("a100-80g").unwrap().name, "A100-80G");
+        assert!(by_name("tpu-v5").is_none());
+    }
+
+    #[test]
+    fn sane_rooflines() {
+        for g in CATALOG {
+            assert!(g.flops > 1e14);
+            assert!(g.mem_bw > 5e11);
+            assert!(g.mem_bytes >= 24e9);
+            // arithmetic intensity at the roofline knee should be O(100)
+            let knee = g.flops / g.mem_bw;
+            assert!((50.0..700.0).contains(&knee), "{}: knee {knee}", g.name);
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! LLM model cards: the architectural numbers that drive the roofline
+//! (parameter bytes, active parameters for MoE, KV bytes per token).
+//! Matches the five models of the paper's Fig. 4 (Llama-2 7/13/70B,
+//! Mistral-7B, Mixtral-8x7B) plus the tiny in-repo model served for real.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelCard {
+    pub name: &'static str,
+    /// total parameters
+    pub params: f64,
+    /// parameters touched per token (≠ params for MoE)
+    pub active_params: f64,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    /// weight bytes per parameter (fp16 serving)
+    pub bytes_per_param: f64,
+    /// model context limit
+    pub max_context: usize,
+    /// max output tokens the raw model supports (BASELINE max_tokens)
+    pub max_model_tokens: usize,
+}
+
+impl ModelCard {
+    /// KV-cache bytes per token: 2 (K,V) · layers · kv_dim · 2 bytes.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.n_layers as f64 * (self.n_kv_heads * self.head_dim) as f64 * 2.0
+    }
+
+    pub fn weight_bytes(&self) -> f64 {
+        self.params * self.bytes_per_param
+    }
+}
+
+pub const LLAMA2_7B: ModelCard = ModelCard {
+    name: "L-7B",
+    params: 6.74e9,
+    active_params: 6.74e9,
+    n_layers: 32,
+    d_model: 4096,
+    n_kv_heads: 32,
+    head_dim: 128,
+    bytes_per_param: 2.0,
+    max_context: 4096,
+    max_model_tokens: 4096,
+};
+
+pub const LLAMA2_13B: ModelCard = ModelCard {
+    name: "L-13B",
+    params: 13.0e9,
+    active_params: 13.0e9,
+    n_layers: 40,
+    d_model: 5120,
+    n_kv_heads: 40,
+    head_dim: 128,
+    bytes_per_param: 2.0,
+    max_context: 4096,
+    max_model_tokens: 4096,
+};
+
+pub const LLAMA2_70B: ModelCard = ModelCard {
+    name: "L-70B",
+    params: 69.0e9,
+    active_params: 69.0e9,
+    n_layers: 80,
+    d_model: 8192,
+    n_kv_heads: 8, // GQA
+    head_dim: 128,
+    bytes_per_param: 2.0,
+    max_context: 4096,
+    max_model_tokens: 4096,
+};
+
+pub const MISTRAL_7B: ModelCard = ModelCard {
+    name: "M-7B",
+    params: 7.24e9,
+    active_params: 7.24e9,
+    n_layers: 32,
+    d_model: 4096,
+    n_kv_heads: 8, // GQA
+    head_dim: 128,
+    bytes_per_param: 2.0,
+    max_context: 8192,
+    max_model_tokens: 8192,
+};
+
+pub const MIXTRAL_8X7B: ModelCard = ModelCard {
+    name: "M-8x7B",
+    params: 46.7e9,
+    active_params: 12.9e9, // 2-of-8 experts
+    n_layers: 32,
+    d_model: 4096,
+    n_kv_heads: 8,
+    head_dim: 128,
+    bytes_per_param: 2.0,
+    max_context: 8192,
+    max_model_tokens: 8192,
+};
+
+/// The in-repo tiny model actually served via PJRT (see artifacts/).
+pub const TINY_LM: ModelCard = ModelCard {
+    name: "tiny-lm",
+    params: 1.13e6,
+    active_params: 1.13e6,
+    n_layers: 4,
+    d_model: 128,
+    n_kv_heads: 4,
+    head_dim: 32,
+    bytes_per_param: 4.0, // f32 artifacts
+    max_context: 128,
+    max_model_tokens: 128,
+};
+
+pub const FIG4_MODELS: [&ModelCard; 5] = [
+    &LLAMA2_7B,
+    &LLAMA2_13B,
+    &LLAMA2_70B,
+    &MISTRAL_7B,
+    &MIXTRAL_8X7B,
+];
+
+pub fn by_name(name: &str) -> Option<&'static ModelCard> {
+    [&LLAMA2_7B, &LLAMA2_13B, &LLAMA2_70B, &MISTRAL_7B, &MIXTRAL_8X7B, &TINY_LM]
+        .into_iter()
+        .find(|m| m.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_bytes_sanity() {
+        // Llama-2 7B: 2·32·4096·2 = 512 KiB per token
+        assert_eq!(LLAMA2_7B.kv_bytes_per_token(), 524_288.0);
+        // GQA models store 4× less than MHA at same width
+        assert!(MISTRAL_7B.kv_bytes_per_token() * 4.0 == LLAMA2_7B.kv_bytes_per_token());
+        // 70B with GQA: 2·80·1024·2 = 320 KiB
+        assert_eq!(LLAMA2_70B.kv_bytes_per_token(), 327_680.0);
+    }
+
+    #[test]
+    fn weight_bytes() {
+        assert!((LLAMA2_7B.weight_bytes() - 13.48e9).abs() < 1e8);
+        assert!(MIXTRAL_8X7B.active_params < MIXTRAL_8X7B.params);
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(by_name("m-8x7b").unwrap().name, "M-8x7B");
+        assert!(by_name("gpt-5").is_none());
+    }
+}

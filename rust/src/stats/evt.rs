@@ -1,0 +1,199 @@
+//! Extreme-value statistics: Gumbel fit, generalized Pareto fit, and the
+//! peaks-over-threshold (POT) auto-threshold of Siffer et al. (KDD'17) that
+//! the paper uses to set the anomaly-detection threshold (§IV-B) and to
+//! estimate `n_limit` from saturated metric windows (§IV-A-1).
+
+use super::descriptive;
+
+/// Gumbel (type-I extreme value) distribution fitted by moments:
+/// scale β = s·√6/π, location μ = x̄ − γ·β.
+#[derive(Debug, Clone, Copy)]
+pub struct Gumbel {
+    pub location: f64,
+    pub scale: f64,
+}
+
+pub const EULER_GAMMA: f64 = 0.577_215_664_901_532_9;
+
+impl Gumbel {
+    pub fn fit(xs: &[f64]) -> Option<Gumbel> {
+        if xs.len() < 3 {
+            return None;
+        }
+        let s = descriptive::std_dev(xs);
+        if s < 1e-12 {
+            return Some(Gumbel {
+                location: descriptive::mean(xs),
+                scale: 1e-9,
+            });
+        }
+        let scale = s * 6f64.sqrt() / std::f64::consts::PI;
+        let location = descriptive::mean(xs) - EULER_GAMMA * scale;
+        Some(Gumbel { location, scale })
+    }
+
+    pub fn cdf(&self, x: f64) -> f64 {
+        (-(-(x - self.location) / self.scale).exp()).exp()
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        let q = q.clamp(1e-12, 1.0 - 1e-12);
+        self.location - self.scale * (-(q.ln())).ln()
+    }
+}
+
+/// Generalized Pareto distribution over threshold excesses, fitted by the
+/// method of moments (Hosking & Wallis): ξ = ½(1 − x̄²/s²),
+/// σ = ½·x̄·(x̄²/s² + 1).
+#[derive(Debug, Clone, Copy)]
+pub struct Gpd {
+    pub shape: f64, // ξ
+    pub scale: f64, // σ
+}
+
+impl Gpd {
+    pub fn fit(excesses: &[f64]) -> Option<Gpd> {
+        if excesses.len() < 5 {
+            return None;
+        }
+        let m = descriptive::mean(excesses);
+        let v = descriptive::variance(excesses);
+        if m <= 0.0 || v <= 1e-12 {
+            return None;
+        }
+        let r = m * m / v;
+        let shape = 0.5 * (1.0 - r);
+        let scale = 0.5 * m * (r + 1.0);
+        Some(Gpd { shape, scale })
+    }
+
+    /// Survival function P(X > x) for x ≥ 0.
+    pub fn sf(&self, x: f64) -> f64 {
+        if self.shape.abs() < 1e-9 {
+            (-x / self.scale).exp()
+        } else {
+            let base = 1.0 + self.shape * x / self.scale;
+            if base <= 0.0 {
+                0.0
+            } else {
+                base.powf(-1.0 / self.shape)
+            }
+        }
+    }
+
+    /// Quantile of the excess distribution at survival probability `p`.
+    pub fn quantile_sf(&self, p: f64) -> f64 {
+        let p = p.clamp(1e-12, 1.0);
+        if self.shape.abs() < 1e-9 {
+            -self.scale * p.ln()
+        } else {
+            self.scale / self.shape * (p.powf(-self.shape) - 1.0)
+        }
+    }
+}
+
+/// Peaks-over-threshold auto-thresholding (SPOT, Siffer et al. 2017).
+///
+/// Given a calibration sample and a target risk `q` (probability that a
+/// *normal* point exceeds the final threshold), fits a GPD to the excesses
+/// over an initial high quantile `t0` and extrapolates:
+///
+///   z_q = t0 + (σ̂/ξ̂)·[ (q·n/N_t)^(−ξ̂) − 1 ]
+#[derive(Debug, Clone, Copy)]
+pub struct PotThreshold {
+    pub initial: f64,
+    pub threshold: f64,
+    pub gpd: Option<Gpd>,
+    pub n_excesses: usize,
+}
+
+pub fn pot_threshold(calibration: &[f64], q: f64, init_quantile: f64) -> Option<PotThreshold> {
+    if calibration.len() < 20 {
+        return None;
+    }
+    let t0 = descriptive::quantile(calibration, init_quantile);
+    let excesses: Vec<f64> = calibration
+        .iter()
+        .filter(|&&x| x > t0)
+        .map(|&x| x - t0)
+        .collect();
+    let n = calibration.len() as f64;
+    let nt = excesses.len() as f64;
+    let gpd = Gpd::fit(&excesses);
+    let threshold = match gpd {
+        Some(g) => {
+            // survival within the excess distribution that corresponds to
+            // overall exceedance probability q
+            let p = (q * n / nt).min(1.0);
+            t0 + g.quantile_sf(p)
+        }
+        // too few excesses to fit: fall back to the empirical extreme
+        None => descriptive::max(calibration) * 1.05,
+    };
+    Some(PotThreshold {
+        initial: t0,
+        threshold,
+        gpd,
+        n_excesses: excesses.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn gumbel_fit_recovers_parameters() {
+        let mut rng = Pcg64::new(21);
+        let xs: Vec<f64> = (0..20_000).map(|_| 3.0 + 2.0 * rng.gumbel()).collect();
+        let g = Gumbel::fit(&xs).unwrap();
+        assert!((g.location - 3.0).abs() < 0.1, "loc {}", g.location);
+        assert!((g.scale - 2.0).abs() < 0.1, "scale {}", g.scale);
+        // quantile inverts cdf
+        let x = g.quantile(0.95);
+        assert!((g.cdf(x) - 0.95).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gpd_fit_exponential_case() {
+        // exponential = GPD with ξ=0, σ=1/rate
+        let mut rng = Pcg64::new(22);
+        let xs: Vec<f64> = (0..30_000).map(|_| rng.exponential(0.5)).collect();
+        let g = Gpd::fit(&xs).unwrap();
+        assert!(g.shape.abs() < 0.05, "shape {}", g.shape);
+        assert!((g.scale - 2.0).abs() < 0.1, "scale {}", g.scale);
+    }
+
+    #[test]
+    fn gpd_quantile_inverts_sf() {
+        let g = Gpd {
+            shape: 0.2,
+            scale: 1.5,
+        };
+        for &p in &[0.5, 0.1, 0.01, 1e-4] {
+            let x = g.quantile_sf(p);
+            assert!((g.sf(x) - p).abs() / p < 1e-6, "p={p}");
+        }
+    }
+
+    #[test]
+    fn pot_threshold_controls_false_positives() {
+        let mut rng = Pcg64::new(23);
+        let cal: Vec<f64> = (0..20_000).map(|_| rng.normal().abs()).collect();
+        let pot = pot_threshold(&cal, 1e-4, 0.98).unwrap();
+        assert!(pot.threshold > pot.initial);
+        // fresh normal data should virtually never exceed the threshold
+        let exceed = (0..100_000)
+            .filter(|_| rng.normal().abs() > pot.threshold)
+            .count();
+        assert!(exceed < 60, "exceed={exceed} thr={}", pot.threshold);
+        // ...but genuinely extreme points should
+        assert!(8.0 > pot.threshold);
+    }
+
+    #[test]
+    fn pot_needs_enough_data() {
+        assert!(pot_threshold(&[1.0; 10], 1e-3, 0.98).is_none());
+    }
+}

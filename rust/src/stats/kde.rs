@@ -1,0 +1,170 @@
+//! Gaussian kernel density estimation (Parzen) with Silverman bandwidth.
+//!
+//! The paper uses KDE twice: to pick `n_limit` / `t^r_limit` from windows of
+//! monitoring metrics (§IV-A-1) and to pick per-community `max_tokens` from
+//! output-length distributions (§IV-A-3). Both reduce to "estimate the
+//! density, take a high quantile of it", so the main entry point here is
+//! [`Kde::quantile`], a numeric inversion of the KDE's CDF.
+
+use super::descriptive;
+use super::tdist::norm_cdf;
+
+#[derive(Debug, Clone)]
+pub struct Kde {
+    samples: Vec<f64>,
+    pub bandwidth: f64,
+}
+
+impl Kde {
+    /// Fit with Silverman's rule-of-thumb bandwidth:
+    /// h = 0.9 · min(σ̂, IQR/1.34) · n^(−1/5).
+    pub fn fit(samples: &[f64]) -> Option<Kde> {
+        if samples.is_empty() {
+            return None;
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        let sigma = descriptive::std_dev(&sorted);
+        let iqr = descriptive::quantile_sorted(&sorted, 0.75)
+            - descriptive::quantile_sorted(&sorted, 0.25);
+        let spread = if iqr > 0.0 {
+            sigma.min(iqr / 1.34)
+        } else {
+            sigma
+        };
+        let n = sorted.len() as f64;
+        let bandwidth = if spread > 1e-12 {
+            0.9 * spread * n.powf(-0.2)
+        } else {
+            // degenerate (all-equal) sample: a nominal width so the CDF is
+            // still invertible
+            (sorted[0].abs() * 1e-3).max(1e-6)
+        };
+        Some(Kde {
+            samples: sorted,
+            bandwidth,
+        })
+    }
+
+    pub fn n(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Density estimate at x.
+    pub fn pdf(&self, x: f64) -> f64 {
+        let h = self.bandwidth;
+        let norm = 1.0 / ((2.0 * std::f64::consts::PI).sqrt() * h * self.samples.len() as f64);
+        self.samples
+            .iter()
+            .map(|s| {
+                let z = (x - s) / h;
+                (-0.5 * z * z).exp()
+            })
+            .sum::<f64>()
+            * norm
+    }
+
+    /// CDF of the KDE (sum of kernel CDFs).
+    pub fn cdf(&self, x: f64) -> f64 {
+        let h = self.bandwidth;
+        self.samples
+            .iter()
+            .map(|s| norm_cdf((x - s) / h))
+            .sum::<f64>()
+            / self.samples.len() as f64
+    }
+
+    /// Quantile via bisection on the CDF. `q` in (0,1).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let q = q.clamp(1e-9, 1.0 - 1e-9);
+        let (mut lo, mut hi) = (
+            self.samples[0] - 10.0 * self.bandwidth,
+            self.samples[self.samples.len() - 1] + 10.0 * self.bandwidth,
+        );
+        for _ in 0..80 {
+            let mid = 0.5 * (lo + hi);
+            if self.cdf(mid) < q {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    /// Density mode via grid scan + local refinement (used to report the
+    /// "typical" execution time).
+    pub fn mode(&self) -> f64 {
+        let lo = self.samples[0] - 3.0 * self.bandwidth;
+        let hi = self.samples[self.samples.len() - 1] + 3.0 * self.bandwidth;
+        let mut best = (lo, self.pdf(lo));
+        let steps = 256;
+        for i in 0..=steps {
+            let x = lo + (hi - lo) * i as f64 / steps as f64;
+            let d = self.pdf(x);
+            if d > best.1 {
+                best = (x, d);
+            }
+        }
+        best.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn gaussian_sample_quantiles() {
+        let mut rng = Pcg64::new(11);
+        let xs: Vec<f64> = (0..4000).map(|_| rng.normal_with(5.0, 2.0)).collect();
+        let kde = Kde::fit(&xs).unwrap();
+        assert!((kde.quantile(0.5) - 5.0).abs() < 0.15);
+        assert!((kde.quantile(0.975) - (5.0 + 1.96 * 2.0)).abs() < 0.4);
+        assert!((kde.mode() - 5.0).abs() < 0.4);
+    }
+
+    #[test]
+    fn cdf_monotone_and_bounded() {
+        let mut rng = Pcg64::new(12);
+        let xs: Vec<f64> = (0..300).map(|_| rng.lognormal(0.0, 1.0)).collect();
+        let kde = Kde::fit(&xs).unwrap();
+        let mut prev = 0.0;
+        for i in 0..50 {
+            let x = -2.0 + i as f64 * 0.5;
+            let c = kde.cdf(x);
+            assert!((0.0..=1.0).contains(&c));
+            assert!(c >= prev - 1e-12);
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        crate::util::prop::check("kde quantile∘cdf ≈ id", 30, |g| {
+            let n = g.usize_in(10, 200);
+            let xs: Vec<f64> = (0..n).map(|_| g.f64_in(-10.0, 10.0)).collect();
+            let kde = match Kde::fit(&xs) {
+                Some(k) => k,
+                None => return Ok(()),
+            };
+            for &q in &[0.1, 0.5, 0.9, 0.99] {
+                let x = kde.quantile(q);
+                crate::util::prop::ensure_close(kde.cdf(x), q, 1e-3, "cdf(quantile(q))")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn degenerate_all_equal() {
+        let kde = Kde::fit(&[3.0; 50]).unwrap();
+        assert!((kde.quantile(0.99) - 3.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn empty_rejected() {
+        assert!(Kde::fit(&[]).is_none());
+    }
+}

@@ -1,0 +1,151 @@
+//! Ordinary least squares with a slope t-test.
+//!
+//! §IV-A-1 of the paper: model `n^f = f(n^r)` with OLS and use a t-test on
+//! the slope to decide whether finished throughput still responds to batch
+//! occupancy (not saturated) or has hit `n_limit` (saturated). §IV-A-2 uses
+//! the same machinery for `m^u = g(n^r)` to extrapolate `gpu_memory`.
+
+use super::tdist::t_test_p_value;
+
+#[derive(Debug, Clone, Copy)]
+pub struct OlsFit {
+    pub intercept: f64,
+    pub slope: f64,
+    pub r_squared: f64,
+    /// standard error of the slope
+    pub slope_se: f64,
+    /// t statistic of the slope against H0: slope == 0
+    pub t_stat: f64,
+    /// two-sided p-value of the slope t-test
+    pub p_value: f64,
+    pub n: usize,
+}
+
+impl OlsFit {
+    pub fn predict(&self, x: f64) -> f64 {
+        self.intercept + self.slope * x
+    }
+
+    /// Is the linear relationship significant at level `alpha`?
+    pub fn significant(&self, alpha: f64) -> bool {
+        self.p_value < alpha
+    }
+}
+
+/// Fit y = a + b·x. Returns None for degenerate inputs (n < 3 or zero
+/// x-variance), which callers treat as "no significant relationship".
+pub fn fit(xs: &[f64], ys: &[f64]) -> Option<OlsFit> {
+    let n = xs.len();
+    if n != ys.len() || n < 3 {
+        return None;
+    }
+    let nf = n as f64;
+    let mx = xs.iter().sum::<f64>() / nf;
+    let my = ys.iter().sum::<f64>() / nf;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+        syy += (y - my) * (y - my);
+    }
+    if sxx < 1e-12 {
+        return None;
+    }
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| {
+            let e = y - (intercept + slope * x);
+            e * e
+        })
+        .sum();
+    let r_squared = if syy > 1e-12 {
+        1.0 - ss_res / syy
+    } else {
+        0.0
+    };
+    let df = nf - 2.0;
+    let mse = ss_res / df.max(1.0);
+    let slope_se = (mse / sxx).sqrt();
+    let t_stat = if slope_se > 1e-300 {
+        slope / slope_se
+    } else {
+        f64::INFINITY
+    };
+    let p_value = if t_stat.is_infinite() {
+        0.0
+    } else {
+        t_test_p_value(t_stat, df)
+    };
+    Some(OlsFit {
+        intercept,
+        slope,
+        r_squared,
+        slope_se,
+        t_stat,
+        p_value,
+        n,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn recovers_line() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 0.5 * x).collect();
+        let f = fit(&xs, &ys).unwrap();
+        assert!((f.slope - 0.5).abs() < 1e-10);
+        assert!((f.intercept - 3.0).abs() < 1e-8);
+        assert!(f.r_squared > 0.999_99);
+        assert!(f.significant(0.01));
+    }
+
+    #[test]
+    fn noisy_flat_relationship_is_insignificant() {
+        let mut rng = Pcg64::new(9);
+        let xs: Vec<f64> = (0..200).map(|i| (i % 40) as f64).collect();
+        let ys: Vec<f64> = (0..200).map(|_| 10.0 + rng.normal()).collect();
+        let f = fit(&xs, &ys).unwrap();
+        assert!(!f.significant(0.01), "p={}", f.p_value);
+        assert!(f.slope.abs() < 0.1);
+    }
+
+    #[test]
+    fn noisy_sloped_relationship_is_significant() {
+        let mut rng = Pcg64::new(10);
+        let xs: Vec<f64> = (0..200).map(|i| (i % 40) as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 0.8 * x + rng.normal() * 2.0).collect();
+        let f = fit(&xs, &ys).unwrap();
+        assert!(f.significant(0.001));
+        assert!((f.slope - 0.8).abs() < 0.1);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(fit(&[1.0, 2.0], &[1.0, 2.0]).is_none());
+        assert!(fit(&[5.0; 10], &(0..10).map(|i| i as f64).collect::<Vec<_>>()).is_none());
+    }
+
+    #[test]
+    fn prop_prediction_at_mean_is_mean() {
+        crate::util::prop::check("ols passes through (x̄,ȳ)", 60, |g| {
+            let n = g.usize_in(3, 60);
+            let xs: Vec<f64> = (0..n).map(|_| g.f64_in(-50.0, 50.0)).collect();
+            let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x + g.f64_in(-1.0, 1.0)).collect();
+            if let Some(f) = fit(&xs, &ys) {
+                let mx = xs.iter().sum::<f64>() / n as f64;
+                let my = ys.iter().sum::<f64>() / n as f64;
+                crate::util::prop::ensure_close(f.predict(mx), my, 1e-9, "ŷ(x̄)")?;
+            }
+            Ok(())
+        });
+    }
+}

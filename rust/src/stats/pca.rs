@@ -1,0 +1,200 @@
+//! Principal component analysis via power iteration with deflation.
+//! Used by the Fig. 8 reproduction (2-D projection of request embeddings).
+
+/// Result of a top-k PCA of row-major data `[n, d]`.
+#[derive(Debug, Clone)]
+pub struct Pca {
+    pub mean: Vec<f64>,
+    /// `k` principal axes, each of length `d`, unit norm.
+    pub components: Vec<Vec<f64>>,
+    /// eigenvalues (variance along each component)
+    pub explained: Vec<f64>,
+}
+
+impl Pca {
+    /// Fit top-`k` components. `data` is `n` rows of dimension `d`.
+    pub fn fit(data: &[Vec<f64>], k: usize) -> Option<Pca> {
+        let n = data.len();
+        if n < 2 {
+            return None;
+        }
+        let d = data[0].len();
+        let mut mean = vec![0.0; d];
+        for row in data {
+            for (m, x) in mean.iter_mut().zip(row) {
+                *m += x;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n as f64;
+        }
+        // covariance (d×d, dense; embeddings are d=64 so this is cheap)
+        let mut cov = vec![vec![0.0; d]; d];
+        for row in data {
+            for i in 0..d {
+                let ci = row[i] - mean[i];
+                for j in i..d {
+                    cov[i][j] += ci * (row[j] - mean[j]);
+                }
+            }
+        }
+        for i in 0..d {
+            for j in i..d {
+                cov[i][j] /= (n - 1) as f64;
+                cov[j][i] = cov[i][j];
+            }
+        }
+
+        let mut components = Vec::new();
+        let mut explained = Vec::new();
+        let mut work = cov;
+        for comp_idx in 0..k.min(d) {
+            let (v, lambda) = power_iterate(&work, 500, 1e-10, comp_idx as u64)?;
+            if lambda <= 1e-12 {
+                break;
+            }
+            // deflate: work -= λ v vᵀ
+            for i in 0..d {
+                for j in 0..d {
+                    work[i][j] -= lambda * v[i] * v[j];
+                }
+            }
+            components.push(v);
+            explained.push(lambda);
+        }
+        Some(Pca {
+            mean,
+            components,
+            explained,
+        })
+    }
+
+    /// Project a row onto the fitted components.
+    pub fn transform(&self, row: &[f64]) -> Vec<f64> {
+        self.components
+            .iter()
+            .map(|c| {
+                c.iter()
+                    .zip(row.iter().zip(&self.mean))
+                    .map(|(ci, (x, m))| ci * (x - m))
+                    .sum()
+            })
+            .collect()
+    }
+}
+
+fn power_iterate(
+    mat: &[Vec<f64>],
+    iters: usize,
+    tol: f64,
+    seed: u64,
+) -> Option<(Vec<f64>, f64)> {
+    let d = mat.len();
+    let mut rng = crate::util::rng::Pcg64::new(pca_seed(seed));
+    let mut v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    normalize(&mut v)?;
+    let mut lambda = 0.0;
+    for _ in 0..iters {
+        let mut w = vec![0.0; d];
+        for i in 0..d {
+            let mut s = 0.0;
+            for j in 0..d {
+                s += mat[i][j] * v[j];
+            }
+            w[i] = s;
+        }
+        let new_lambda: f64 = w.iter().zip(&v).map(|(a, b)| a * b).sum();
+        if normalize(&mut w).is_none() {
+            return Some((v, 0.0));
+        }
+        let delta = (new_lambda - lambda).abs();
+        v = w;
+        lambda = new_lambda;
+        if delta < tol * (1.0 + lambda.abs()) {
+            break;
+        }
+    }
+    Some((v, lambda.max(0.0)))
+}
+
+fn pca_seed(seed: u64) -> u64 {
+    0x9e37_79b9 ^ (seed.wrapping_mul(0x100_0193) + 17)
+}
+
+fn normalize(v: &mut [f64]) -> Option<()> {
+    let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if norm < 1e-300 {
+        return None;
+    }
+    for x in v.iter_mut() {
+        *x /= norm;
+    }
+    Some(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn synth_anisotropic(n: usize) -> Vec<Vec<f64>> {
+        // variance 9 along (1,1,0)/√2, variance 1 along (1,-1,0)/√2, 0.01 on z
+        let mut rng = Pcg64::new(31);
+        (0..n)
+            .map(|_| {
+                let a = rng.normal() * 3.0;
+                let b = rng.normal();
+                let c = rng.normal() * 0.1;
+                let s = std::f64::consts::FRAC_1_SQRT_2;
+                vec![a * s + b * s, a * s - b * s, c]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn finds_dominant_axis() {
+        let data = synth_anisotropic(5000);
+        let pca = Pca::fit(&data, 2).unwrap();
+        let c0 = &pca.components[0];
+        let s = std::f64::consts::FRAC_1_SQRT_2;
+        let dot = (c0[0] * s + c0[1] * s).abs();
+        assert!(dot > 0.99, "dominant axis {c0:?}");
+        assert!((pca.explained[0] - 9.0).abs() < 0.6);
+        assert!((pca.explained[1] - 1.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn components_orthonormal() {
+        let data = synth_anisotropic(2000);
+        let pca = Pca::fit(&data, 2).unwrap();
+        let dot: f64 = pca.components[0]
+            .iter()
+            .zip(&pca.components[1])
+            .map(|(a, b)| a * b)
+            .sum();
+        assert!(dot.abs() < 1e-3, "dot {dot}");
+        for c in &pca.components {
+            let n: f64 = c.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((n - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn transform_centers() {
+        let data = synth_anisotropic(1000);
+        let pca = Pca::fit(&data, 2).unwrap();
+        let mut acc = vec![0.0; 2];
+        for row in &data {
+            let t = pca.transform(row);
+            acc[0] += t[0];
+            acc[1] += t[1];
+        }
+        assert!(acc[0].abs() / 1000.0 < 1e-9);
+        assert!(acc[1].abs() / 1000.0 < 1e-9);
+    }
+
+    #[test]
+    fn too_few_rows_rejected() {
+        assert!(Pca::fit(&[vec![1.0, 2.0]], 1).is_none());
+    }
+}

@@ -1,0 +1,174 @@
+//! In-memory time-series store — the "monitoring system" storage layer of
+//! §V (the paper uses Prometheus + a stream processor; one process here).
+//!
+//! Series are keyed by (metric, instance). Points are (t_seconds, value)
+//! appended in time order; queries are windowed slices and per-minute
+//! downsamples. A bounded retention cap keeps long simulations O(window).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Series {
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    fn push(&mut self, t: f64, v: f64, retention: usize) {
+        debug_assert!(
+            self.points.last().map(|&(pt, _)| t >= pt).unwrap_or(true),
+            "out-of-order append"
+        );
+        self.points.push((t, v));
+        if self.points.len() > retention {
+            let excess = self.points.len() - retention;
+            self.points.drain(..excess);
+        }
+    }
+
+    /// Values with t in [t0, t1).
+    pub fn window(&self, t0: f64, t1: f64) -> Vec<f64> {
+        let start = self.points.partition_point(|&(t, _)| t < t0);
+        let end = self.points.partition_point(|&(t, _)| t < t1);
+        self.points[start..end].iter().map(|&(_, v)| v).collect()
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+
+    pub fn last_n(&self, n: usize) -> Vec<f64> {
+        let start = self.points.len().saturating_sub(n);
+        self.points[start..].iter().map(|&(_, v)| v).collect()
+    }
+
+    /// Mean per fixed-size bucket (e.g. 60 s) over [t0, t1).
+    pub fn downsample(&self, t0: f64, t1: f64, bucket: f64) -> Vec<f64> {
+        let n = ((t1 - t0) / bucket).ceil() as usize;
+        let mut sums = vec![0.0; n];
+        let mut counts = vec![0usize; n];
+        let start = self.points.partition_point(|&(t, _)| t < t0);
+        for &(t, v) in &self.points[start..] {
+            if t >= t1 {
+                break;
+            }
+            let idx = ((t - t0) / bucket) as usize;
+            if idx < n {
+                sums[idx] += v;
+                counts[idx] += 1;
+            }
+        }
+        sums.iter()
+            .zip(&counts)
+            .map(|(&s, &c)| if c > 0 { s / c as f64 } else { 0.0 })
+            .collect()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SeriesKey {
+    pub metric: String,
+    pub instance: String,
+}
+
+#[derive(Debug, Default)]
+pub struct MetricStore {
+    series: BTreeMap<SeriesKey, Series>,
+    /// max points kept per series
+    pub retention: usize,
+}
+
+impl MetricStore {
+    pub fn new() -> MetricStore {
+        MetricStore {
+            series: BTreeMap::new(),
+            retention: 1_000_000,
+        }
+    }
+
+    pub fn push(&mut self, metric: &str, instance: &str, t: f64, v: f64) {
+        let key = SeriesKey {
+            metric: metric.to_string(),
+            instance: instance.to_string(),
+        };
+        let retention = self.retention;
+        self.series.entry(key).or_default().push(t, v, retention);
+    }
+
+    pub fn series(&self, metric: &str, instance: &str) -> Option<&Series> {
+        self.series.get(&SeriesKey {
+            metric: metric.to_string(),
+            instance: instance.to_string(),
+        })
+    }
+
+    pub fn window(&self, metric: &str, instance: &str, t0: f64, t1: f64) -> Vec<f64> {
+        self.series(metric, instance)
+            .map(|s| s.window(t0, t1))
+            .unwrap_or_default()
+    }
+
+    pub fn instances(&self, metric: &str) -> Vec<String> {
+        self.series
+            .keys()
+            .filter(|k| k.metric == metric)
+            .map(|k| k.instance.clone())
+            .collect()
+    }
+
+    pub fn export_csv(&self, metric: &str, instance: &str) -> String {
+        let mut out = String::from("t,value\n");
+        if let Some(s) = self.series(metric, instance) {
+            for &(t, v) in &s.points {
+                out.push_str(&format!("{t},{v}\n"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_queries() {
+        let mut store = MetricStore::new();
+        for i in 0..100 {
+            store.push("n_running", "r0", i as f64, i as f64 * 2.0);
+        }
+        let w = store.window("n_running", "r0", 10.0, 20.0);
+        assert_eq!(w.len(), 10);
+        assert_eq!(w[0], 20.0);
+        assert!(store.window("n_running", "missing", 0.0, 10.0).is_empty());
+    }
+
+    #[test]
+    fn downsample_buckets() {
+        let mut s = Series::default();
+        for i in 0..120 {
+            s.push(i as f64, 1.0 + (i / 60) as f64, usize::MAX);
+        }
+        let d = s.downsample(0.0, 120.0, 60.0);
+        assert_eq!(d, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn retention_caps_memory() {
+        let mut store = MetricStore::new();
+        store.retention = 50;
+        for i in 0..200 {
+            store.push("m", "i", i as f64, 0.0);
+        }
+        assert_eq!(store.series("m", "i").unwrap().points.len(), 50);
+        // oldest points dropped, newest kept
+        assert_eq!(store.series("m", "i").unwrap().points[0].0, 150.0);
+    }
+
+    #[test]
+    fn last_n_short_series() {
+        let mut s = Series::default();
+        s.push(0.0, 1.0, usize::MAX);
+        assert_eq!(s.last_n(10), vec![1.0]);
+        assert_eq!(s.last(), Some(1.0));
+    }
+}

@@ -1,0 +1,121 @@
+//! Minimal CLI argument parser (clap is not in the offline crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Subcommands are handled by the caller peeling the first positional.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        Args::parse_known(argv, &[])
+    }
+
+    /// `bool_flags` lists option names that never take a value, resolving
+    /// the `--verbose input.txt` ambiguity.
+    pub fn parse_known<I: IntoIterator<Item = String>>(argv: I, bool_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn from_env_known(bool_flags: &[&str]) -> Args {
+        Args::parse_known(std::env::args().skip(1), bool_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Pop the subcommand (first positional); returns "" if absent.
+    pub fn subcommand(&mut self) -> String {
+        if self.positional.is_empty() {
+            String::new()
+        } else {
+            self.positional.remove(0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_known(s.split_whitespace().map(String::from), &["verbose", "dry-run"])
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let mut a = parse("serve --replicas 2 --gpu=a100 --verbose input.txt");
+        assert_eq!(a.subcommand(), "serve");
+        assert_eq!(a.get("replicas"), Some("2"));
+        assert_eq!(a.get("gpu"), Some("a100"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["input.txt"]);
+    }
+
+    #[test]
+    fn typed_getters_and_defaults() {
+        let a = parse("--rps 3.5 --steps 100");
+        assert_eq!(a.get_f64("rps", 1.0), 3.5);
+        assert_eq!(a.get_usize("steps", 5), 100);
+        assert_eq!(a.get_usize("missing", 5), 5);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("--dry-run");
+        assert!(a.flag("dry-run"));
+    }
+}

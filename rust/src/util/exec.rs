@@ -1,0 +1,230 @@
+//! Thread-pool + event-loop substrate (tokio is not in the offline crate
+//! set; the request path is CPU-bound anyway, so a worker pool over mpsc
+//! channels is the right shape).
+//!
+//! * [`ThreadPool`] — fixed-size pool executing boxed jobs; `scope`-less,
+//!   jobs are `'static`. Used for parallel bench sweeps and the detection
+//!   baseline training.
+//! * [`EventLoop`] — single-consumer command loop with a shutdown signal;
+//!   the serving engine and autoscaler run on these.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let in_flight = Arc::clone(&in_flight);
+                std::thread::Builder::new()
+                    .name(format!("enova-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                in_flight.fetch_sub(1, Ordering::Release);
+                            }
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            tx: Some(tx),
+            workers,
+            in_flight,
+        }
+    }
+
+    pub fn default_parallelism() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+    }
+
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.in_flight.fetch_add(1, Ordering::Acquire);
+        self.tx
+            .as_ref()
+            .expect("pool alive")
+            .send(Box::new(f))
+            .expect("worker alive");
+    }
+
+    /// Run `f` over every item, collecting results in input order.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let (tx, rx) = channel::<(usize, R)>();
+        let n = items.len();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            self.spawn(move || {
+                let _ = tx.send((i, f(item)));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx.iter().take(n) {
+            slots[i] = Some(r);
+        }
+        slots.into_iter().map(|s| s.expect("job finished")).collect()
+    }
+
+    /// Block until every queued job has finished.
+    pub fn wait_idle(&self) {
+        while self.in_flight.load(Ordering::Acquire) > 0 {
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Cooperative shutdown signal shared across loops.
+#[derive(Clone, Default)]
+pub struct Shutdown(Arc<AtomicBool>);
+
+impl Shutdown {
+    pub fn new() -> Shutdown {
+        Shutdown::default()
+    }
+
+    pub fn trigger(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_triggered(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// Single-consumer command loop: submit `C`s from any thread, a dedicated
+/// thread folds them into the handler until shutdown.
+pub struct EventLoop<C: Send + 'static> {
+    tx: Sender<C>,
+    handle: Option<JoinHandle<()>>,
+    shutdown: Shutdown,
+}
+
+impl<C: Send + 'static> EventLoop<C> {
+    pub fn spawn<F>(name: &str, mut handler: F) -> EventLoop<C>
+    where
+        F: FnMut(C) + Send + 'static,
+    {
+        let (tx, rx): (Sender<C>, Receiver<C>) = channel();
+        let shutdown = Shutdown::new();
+        let sd = shutdown.clone();
+        let handle = std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(move || {
+                while let Ok(cmd) = rx.recv() {
+                    handler(cmd);
+                    if sd.is_triggered() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn event loop");
+        EventLoop {
+            tx,
+            handle: Some(handle),
+            shutdown,
+        }
+    }
+
+    pub fn submit(&self, cmd: C) -> bool {
+        self.tx.send(cmd).is_ok()
+    }
+
+    pub fn shutdown(&mut self) {
+        self.shutdown.trigger();
+    }
+}
+
+impl<C: Send + 'static> Drop for EventLoop<C> {
+    fn drop(&mut self) {
+        // Disconnect our sender (replace with a dummy) WITHOUT triggering
+        // shutdown: the handler thread drains every queued command (mpsc
+        // keeps buffered messages alive after senders drop) and then exits
+        // when recv() reports disconnection.
+        let (dummy_tx, _) = channel();
+        let _ = std::mem::replace(&mut self.tx, dummy_tx);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect::<Vec<_>>(), |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn event_loop_processes_and_drops_cleanly() {
+        let seen = Arc::new(AtomicU64::new(0));
+        let s = Arc::clone(&seen);
+        let ev: EventLoop<u64> = EventLoop::spawn("test", move |x| {
+            s.fetch_add(x, Ordering::SeqCst);
+        });
+        for i in 1..=10 {
+            assert!(ev.submit(i));
+        }
+        drop(ev); // join; all submitted commands must have been handled
+        assert_eq!(seen.load(Ordering::SeqCst), 55);
+    }
+}

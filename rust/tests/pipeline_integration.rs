@@ -1,0 +1,266 @@
+//! Cross-module integration tests: the configuration module driven by real
+//! simulator output, cluster routing under recommended weights, the replica
+//! planner against the deployer's inventory, and property tests over the
+//! simulator's conservation invariants. None of these need artifacts.
+
+use enova::config;
+use enova::deployer::{paper_testbed, Deployer};
+use enova::metrics::Frame;
+use enova::simulator::cluster::ClusterSim;
+use enova::simulator::gpu::{A100_80G, RTX4090_24G};
+use enova::simulator::modelcard::{LLAMA2_13B, LLAMA2_70B, LLAMA2_7B, MISTRAL_7B};
+use enova::simulator::replica::{Replica, ServiceConfig};
+use enova::util::prop;
+use enova::util::rng::Pcg64;
+use enova::workload::arrivals::{poisson_stream, RateProfile};
+use enova::workload::corpus::{CorpusMix, ALL_FAMILIES};
+
+fn probe_frames(
+    gpu: &'static enova::simulator::gpu::GpuSpec,
+    model: &'static enova::simulator::modelcard::ModelCard,
+    rps: f64,
+    seed: u64,
+) -> (Vec<Frame>, Vec<f64>) {
+    let space = enova::baselines::ConfigSpace::for_model(gpu, model);
+    let cfg = ServiceConfig {
+        max_num_seqs: 256,
+        gpu_memory: 0.9,
+        max_tokens: model.max_model_tokens,
+        parallel_size: space.parallel_size,
+    };
+    let mut rng = Pcg64::new(seed);
+    let mix = CorpusMix::uniform(&ALL_FAMILIES);
+    let arrivals = poisson_stream(&RateProfile::constant(rps), &mix, 240.0, &mut rng);
+    let res = Replica::new(gpu, model, cfg).simulate(arrivals, 300.0);
+    (
+        res.frames.iter().map(|&(_, f)| f).collect(),
+        res.finished.iter().map(|f| f.out_len as f64).collect(),
+    )
+}
+
+#[test]
+fn config_pipeline_orders_devices_and_models() {
+    // stronger device ⇒ higher recommended concurrency; bigger model ⇒ lower
+    let (fa, la) = probe_frames(&A100_80G, &LLAMA2_7B, 30.0, 1);
+    let (fr, lr) = probe_frames(&RTX4090_24G, &LLAMA2_7B, 30.0, 2);
+    let (f70, l70) = probe_frames(&A100_80G, &LLAMA2_70B, 30.0, 3);
+    let a = config::recommend_for(&A100_80G, &LLAMA2_7B, &fa, &la);
+    let r = config::recommend_for(&RTX4090_24G, &LLAMA2_7B, &fr, &lr);
+    let s70 = config::recommend_for(&A100_80G, &LLAMA2_70B, &f70, &l70);
+    assert!(
+        a.max_num_seqs > r.max_num_seqs,
+        "A100 {} !> 4090 {}",
+        a.max_num_seqs,
+        r.max_num_seqs
+    );
+    assert!(
+        s70.max_num_seqs < a.max_num_seqs,
+        "70B {} !< 7B {}",
+        s70.max_num_seqs,
+        a.max_num_seqs
+    );
+    assert!(s70.parallel_size >= 2);
+    assert!(a.parallel_size == 1);
+}
+
+#[test]
+fn recommended_config_survives_recommended_load() {
+    // serving at the estimated n_limit must not melt down
+    let (frames, lens) = probe_frames(&A100_80G, &MISTRAL_7B, 25.0, 4);
+    let decision = config::determine_max_num_seqs(&frames).expect("decision");
+    let cfg = config::recommend_for(&A100_80G, &MISTRAL_7B, &frames, &lens);
+    let rep = Replica::new(&A100_80G, &MISTRAL_7B, cfg);
+    let mut rng = Pcg64::new(5);
+    let mix = CorpusMix::uniform(&ALL_FAMILIES);
+    // 0.6× the estimated limit: the recommendation may clamp concurrency
+    // below the probe's (KV headroom), so leave margin; a recommendation
+    // that cannot even serve 60% of its own capacity estimate is broken.
+    let rps = decision.n_limit * 0.6;
+    let arrivals = poisson_stream(&RateProfile::constant(rps), &mix, 300.0, &mut rng);
+    let issued = arrivals.len();
+    let res = rep.simulate(arrivals, 500.0);
+    assert!(
+        (res.timed_out as f64) < 0.02 * issued as f64,
+        "{} timeouts at 0.6×n_limit",
+        res.timed_out
+    );
+    assert!(
+        res.finished.len() as f64 > 0.85 * issued as f64,
+        "only {}/{} finished",
+        res.finished.len(),
+        issued
+    );
+}
+
+#[test]
+fn replica_plan_fits_deployer_inventory() {
+    let options = vec![
+        config::GpuOption {
+            gpu: &A100_80G,
+            n_limit: 11.0,
+            parallel_size: 1,
+            inventory: 8,
+            gpu_memory: 0.9,
+        },
+        config::GpuOption {
+            gpu: &RTX4090_24G,
+            n_limit: 4.0,
+            parallel_size: 1,
+            inventory: 8,
+            gpu_memory: 0.9,
+        },
+    ];
+    let plan = config::determine_replicas(&options, &LLAMA2_7B, 30.0).expect("plan");
+    // the deployer must be able to place the whole plan on the testbed
+    let mut dep = Deployer::new(paper_testbed());
+    let cfgs = [
+        ServiceConfig {
+            max_num_seqs: 64,
+            gpu_memory: 0.9,
+            max_tokens: 512,
+            parallel_size: 1,
+        };
+        2
+    ];
+    for (i, (&n, opt)) in plan.replicas.iter().zip(&options).enumerate() {
+        for _ in 0..n {
+            let id = dep
+                .deploy(&LLAMA2_7B, opt.gpu, cfgs[i], plan.weights[i])
+                .expect("placement");
+            dep.mark_ready(id).unwrap();
+        }
+    }
+    assert_eq!(
+        dep.ready_count(&LLAMA2_7B),
+        plan.replicas.iter().sum::<usize>()
+    );
+    // ingress weights match the plan
+    let table = dep.ingress_table(&LLAMA2_7B);
+    assert!(table.iter().all(|&(_, w)| w > 0.0 && w <= 1.0));
+}
+
+#[test]
+fn heterogeneous_cluster_beats_misweighted_cluster() {
+    // §IV-A-4: capacity-proportional weights sustain more than inverted ones
+    let cfg = ServiceConfig {
+        max_num_seqs: 48,
+        gpu_memory: 0.9,
+        max_tokens: 512,
+        parallel_size: 1,
+    };
+    let make = |w: Vec<f64>| {
+        ClusterSim::new(
+            vec![
+                Replica::new(&A100_80G, &LLAMA2_13B, cfg),
+                Replica::new(&RTX4090_24G, &LLAMA2_13B, cfg),
+            ],
+            w,
+        )
+    };
+    let mut rng = Pcg64::new(6);
+    let mix = CorpusMix::uniform(&ALL_FAMILIES);
+    let arrivals = poisson_stream(&RateProfile::constant(9.0), &mix, 400.0, &mut rng);
+    let issued = arrivals.len();
+    let good = make(vec![1.0, 0.4]).simulate(&arrivals, 800.0, 7);
+    let bad = make(vec![0.4, 1.0]).simulate(&arrivals, 800.0, 7);
+    assert!(
+        good.completion_ratio(issued) >= bad.completion_ratio(issued),
+        "good {} < bad {}",
+        good.completion_ratio(issued),
+        bad.completion_ratio(issued)
+    );
+}
+
+#[test]
+fn prop_simulator_conserves_requests() {
+    prop::check("finished + timed_out + unserved == issued", 25, |g| {
+        let rps = g.f64_in(0.5, 20.0);
+        let mns = g.usize_in(4, 96);
+        let horizon = g.f64_in(30.0, 150.0);
+        let mut rng = Pcg64::new(g.rng.next_u64());
+        let mix = CorpusMix::uniform(&ALL_FAMILIES);
+        let arrivals = poisson_stream(&RateProfile::constant(rps), &mix, horizon, &mut rng);
+        let issued = arrivals.len();
+        let cfg = ServiceConfig {
+            max_num_seqs: mns,
+            gpu_memory: 0.9,
+            max_tokens: 256,
+            parallel_size: 1,
+        };
+        let res = Replica::new(&A100_80G, &LLAMA2_7B, cfg).simulate(arrivals, horizon);
+        prop::ensure(
+            res.finished.len() + res.timed_out + res.unserved == issued,
+            format!(
+                "{} + {} + {} != {issued}",
+                res.finished.len(),
+                res.timed_out,
+                res.unserved
+            ),
+        )
+    });
+}
+
+#[test]
+fn prop_simulator_latency_positive_and_ordered() {
+    prop::check("finish ≥ first_token ≥ arrival; out_len ≤ max_tokens", 20, |g| {
+        let rps = g.f64_in(0.5, 8.0);
+        let max_tokens = g.usize_in(16, 512);
+        let mut rng = Pcg64::new(g.rng.next_u64());
+        let mix = CorpusMix::uniform(&ALL_FAMILIES);
+        let arrivals = poisson_stream(&RateProfile::constant(rps), &mix, 60.0, &mut rng);
+        let cfg = ServiceConfig {
+            max_num_seqs: 32,
+            gpu_memory: 0.9,
+            max_tokens,
+            parallel_size: 1,
+        };
+        let res = Replica::new(&A100_80G, &LLAMA2_7B, cfg).simulate(arrivals, 200.0);
+        for f in &res.finished {
+            prop::ensure(f.finish >= f.first_token, "finish < first_token")?;
+            prop::ensure(f.first_token >= f.arrival, "first_token < arrival")?;
+            prop::ensure(f.out_len <= max_tokens, "out_len > max_tokens")?;
+            prop::ensure(f.out_len >= 1, "empty output")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kv_budget_monotone_in_gpu_memory() {
+    prop::check("kv budget grows with gpu_memory", 30, |g| {
+        let lo = g.f64_in(0.5, 0.9);
+        let hi = (lo + 0.05).min(0.95);
+        let mk = |mem: f64| {
+            Replica::new(
+                &RTX4090_24G,
+                &MISTRAL_7B,
+                ServiceConfig {
+                    max_num_seqs: 32,
+                    gpu_memory: mem,
+                    max_tokens: 256,
+                    parallel_size: 1,
+                },
+            )
+            .kv_budget_bytes()
+        };
+        prop::ensure(mk(hi) >= mk(lo), "budget not monotone")
+    });
+}
+
+#[test]
+fn prop_weighted_router_never_starves() {
+    prop::check("every positive-weight replica gets traffic", 20, |g| {
+        let n = g.usize_in(2, 6);
+        let weights: Vec<(u64, f64)> = (0..n as u64)
+            .map(|i| (i, g.f64_in(0.1, 2.0)))
+            .collect();
+        let router = enova::router::WeightedRouter::new(&weights);
+        for _ in 0..200 {
+            router.dispatch();
+        }
+        for r in router.replicas() {
+            prop::ensure(r.dispatched() > 0, format!("replica {} starved", r.id))?;
+        }
+        Ok(())
+    });
+}

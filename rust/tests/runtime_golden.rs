@@ -1,0 +1,134 @@
+//! Cross-language numeric pin: the rust PJRT path must reproduce the
+//! golden logits that `python/compile/aot.py` recorded when it lowered the
+//! model. This is the end-to-end correctness signal for the whole
+//! python → HLO-text → rust → PJRT bridge.
+
+use enova::runtime::lm::{ExecMode, LmRuntime};
+use enova::runtime::{Manifest, PjRt};
+
+fn manifest_or_skip() -> Option<Manifest> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Manifest::load(&dir).expect("manifest loads"))
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+fn run_golden(mode: ExecMode) {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let golden = manifest.golden.clone().expect("golden in manifest");
+    let rt = PjRt::cpu().expect("pjrt client");
+    let mut lm = LmRuntime::load(rt, &manifest, mode).expect("lm loads");
+
+    lm.prefill(&golden.prompt, golden.slot).expect("prefill");
+    let logits = lm.logits(golden.slot).expect("logits");
+    assert_eq!(argmax(&logits), golden.prefill_argmax, "prefill argmax");
+    for (i, (&got, &want)) in logits
+        .iter()
+        .zip(&golden.prefill_logits_head)
+        .enumerate()
+    {
+        assert!(
+            (got - want).abs() < 1e-3,
+            "prefill logit[{i}]: {got} vs {want}"
+        );
+    }
+
+    let b = lm.spec.batch;
+    let mut tokens = vec![0i32; b];
+    let mut lens = vec![0i32; b];
+    tokens[golden.slot] = golden.decode_token;
+    lens[golden.slot] = golden.prompt_len as i32;
+    lm.decode(&tokens, &lens).expect("decode");
+    let logits = lm.logits(golden.slot).expect("logits");
+    assert_eq!(argmax(&logits), golden.decode_argmax, "decode argmax");
+    for (i, (&got, &want)) in logits.iter().zip(&golden.decode_logits_head).enumerate() {
+        assert!(
+            (got - want).abs() < 1e-3,
+            "decode logit[{i}]: {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn golden_chained_buffers() {
+    run_golden(ExecMode::Chained);
+}
+
+#[test]
+fn golden_host_roundtrip() {
+    run_golden(ExecMode::HostRoundtrip);
+}
+
+#[test]
+fn modes_agree_on_longer_generation() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let rt = PjRt::cpu().expect("pjrt");
+    let mut chained = LmRuntime::load(rt.clone(), &manifest, ExecMode::Chained).unwrap();
+    let mut host = LmRuntime::load(rt, &manifest, ExecMode::HostRoundtrip).unwrap();
+    let prompt: Vec<i32> = (3..20).collect();
+    let b = chained.spec.batch;
+    for lm in [&mut chained, &mut host] {
+        lm.prefill(&prompt, 0).unwrap();
+    }
+    let mut c_tokens = Vec::new();
+    let mut h_tokens = Vec::new();
+    for step in 0..10 {
+        for (lm, toks) in [(&mut chained, &mut c_tokens), (&mut host, &mut h_tokens)] {
+            let next = argmax(&lm.logits(0).unwrap()) as i32;
+            toks.push(next);
+            let mut tokens = vec![0i32; b];
+            let mut lens = vec![0i32; b];
+            tokens[0] = next;
+            lens[0] = (prompt.len() + step) as i32;
+            lm.decode(&tokens, &lens).unwrap();
+        }
+    }
+    assert_eq!(c_tokens, h_tokens, "greedy decodes diverged between modes");
+}
+
+#[test]
+fn vae_scores_separate_synthetic_anomaly() {
+    use enova::runtime::vae::VaeRuntime;
+    let Some(manifest) = manifest_or_skip() else { return };
+    let rt = PjRt::cpu().expect("pjrt");
+    let vae = VaeRuntime::load(rt, &manifest).expect("vae loads");
+    // a plausibly-normal row (light load) vs an absurd overload row
+    let normal = vec![240.0, 8.0, 250.0, 0.0, 3.0, 0.6, 0.4, 0.2];
+    let anomal = vec![10.0, 120.0, 900.0, 3000.0, 40.0, 0.99, 0.99, 1.0];
+    let scores = vae
+        .score(&[normal, anomal].concat())
+        .expect("scores");
+    assert!(scores[1].kl > scores[0].kl * 2.0, "{scores:?}");
+}
+
+#[test]
+fn embedder_clusters_same_task_texts() {
+    use enova::runtime::embedder::EmbedRuntime;
+    let Some(manifest) = manifest_or_skip() else { return };
+    let rt = PjRt::cpu().expect("pjrt");
+    let emb = EmbedRuntime::load(rt, &manifest).expect("embed loads");
+    let texts = [
+        "write a python function to merge overlapping intervals",
+        "write a python function to rotate a matrix in place",
+        "solve this grade school math word problem about trains",
+    ];
+    let vecs = emb.embed(&texts).expect("embed");
+    let dot = |a: &[f64], b: &[f64]| -> f64 { a.iter().zip(b).map(|(x, y)| x * y).sum() };
+    let same = dot(&vecs[0], &vecs[1]);
+    let diff = dot(&vecs[0], &vecs[2]);
+    assert!(same > diff + 0.1, "same-task {same} vs cross-task {diff}");
+    // unit norm
+    for v in &vecs {
+        assert!((dot(v, v) - 1.0).abs() < 1e-4);
+    }
+}
