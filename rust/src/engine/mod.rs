@@ -9,6 +9,7 @@
 //! slots are masked with `seq_len = 0`.
 
 pub mod sampler;
+pub mod sim;
 pub mod tokenizer;
 
 use crate::metrics::Frame;
@@ -66,12 +67,93 @@ pub enum FinishReason {
     MaxTokens,
 }
 
+impl FinishReason {
+    /// OpenAI wire name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Eos => "stop",
+            FinishReason::MaxTokens => "length",
+        }
+    }
+}
+
+/// One token produced for one request during a single engine step — the
+/// unit the gateway turns into an SSE `chat.completion.chunk`.
+#[derive(Debug, Clone)]
+pub struct TokenDelta {
+    pub id: u64,
+    pub token: i32,
+    /// decoded text of just this token ("" for specials like EOS)
+    pub text: String,
+    /// 0-based position in the request's output
+    pub index: usize,
+    /// set on the request's last delta
+    pub finish: Option<FinishReason>,
+}
+
+/// Result of one iteration of a step-wise engine.
+#[derive(Debug, Clone, Default)]
+pub struct StepOutput {
+    pub deltas: Vec<TokenDelta>,
+    pub finished: Vec<Completion>,
+}
+
+/// Step-wise completion engine: what the gateway's replica workers drive.
+/// Implemented by the real PJRT [`Engine`] and by the artifact-free
+/// [`sim::SimEngine`] used in tests and offline demos.
+pub trait StreamEngine {
+    fn submit(&mut self, prompt: &str, max_new: usize) -> u64;
+    /// Admit pending work and run one decode iteration; returns per-token
+    /// deltas plus any completions that finished this step.
+    fn step_stream(&mut self) -> Result<StepOutput>;
+    fn idle(&self) -> bool;
+    fn pending_len(&self) -> usize;
+    fn running_len(&self) -> usize;
+    /// Snapshot the Table II monitoring frame.
+    fn frame(&self, finished_in_window: f64, arrived_in_window: f64, mean_latency: f64) -> Frame;
+}
+
+/// Pop every complete UTF-8 sequence off the front of `pending`, replacing
+/// definitively-invalid byte runs with U+FFFD (the same policy as
+/// `from_utf8_lossy`). A trailing incomplete sequence stays buffered for
+/// the next token. Keeps streamed deltas valid UTF-8 even though the
+/// byte-level LM emits multi-byte characters one token at a time.
+fn drain_valid_utf8(pending: &mut Vec<u8>) -> String {
+    let mut out = String::new();
+    loop {
+        match std::str::from_utf8(pending) {
+            Ok(valid) => {
+                out.push_str(valid);
+                pending.clear();
+                return out;
+            }
+            Err(e) => {
+                let valid = e.valid_up_to();
+                out.push_str(std::str::from_utf8(&pending[..valid]).unwrap());
+                match e.error_len() {
+                    Some(bad) => {
+                        out.push('\u{fffd}');
+                        pending.drain(..valid + bad);
+                    }
+                    None => {
+                        // incomplete tail: keep buffering
+                        pending.drain(..valid);
+                        return out;
+                    }
+                }
+            }
+        }
+    }
+}
+
 struct Slot {
     req: EngineRequest,
     generated: Vec<i32>,
     seq_len: usize,
     first_token_at: Option<f64>,
     budget: usize,
+    /// bytes of a partially-emitted UTF-8 character (streaming)
+    utf8_pending: Vec<u8>,
 }
 
 pub struct Engine {
@@ -142,7 +224,19 @@ impl Engine {
 
     /// Admit pending requests into free slots (prefill each); then run one
     /// decode iteration; returns completions that finished this step.
+    /// Skips per-token delta assembly — the decode hot loop stays
+    /// allocation-free for non-streaming callers.
     pub fn step(&mut self) -> Result<Vec<Completion>> {
+        Ok(self.step_inner(false)?.finished)
+    }
+
+    /// Step-wise variant of [`Engine::step`]: additionally reports every
+    /// token sampled this iteration so callers can stream incrementally.
+    pub fn step_stream(&mut self) -> Result<StepOutput> {
+        self.step_inner(true)
+    }
+
+    fn step_inner(&mut self, collect_deltas: bool) -> Result<StepOutput> {
         let b = self.lm.spec.batch;
         let effective_slots = self.cfg.max_num_seqs.min(b);
 
@@ -166,11 +260,12 @@ impl Engine {
                 seq_len,
                 first_token_at: None,
                 budget,
+                utf8_pending: Vec::new(),
             });
         }
 
         if self.running_len() == 0 {
-            return Ok(Vec::new());
+            return Ok(StepOutput::default());
         }
 
         // 2. sample next token per active slot from current logits
@@ -178,6 +273,7 @@ impl Engine {
         let vocab = self.lm.spec.vocab;
         self.tokens_buf.fill(0);
         self.lens_buf.fill(0);
+        let mut deltas = Vec::new();
         for (i, slot) in self.slots.iter_mut().enumerate() {
             if let Some(s) = slot {
                 let logits = &all_logits[i * vocab..(i + 1) * vocab];
@@ -185,6 +281,22 @@ impl Engine {
                 s.generated.push(tok);
                 self.tokens_buf[i] = tok;
                 self.lens_buf[i] = s.seq_len as i32;
+                if collect_deltas {
+                    let text = match self.tokenizer.byte_of(tok) {
+                        Some(byte) => {
+                            s.utf8_pending.push(byte);
+                            drain_valid_utf8(&mut s.utf8_pending)
+                        }
+                        None => String::new(), // specials contribute no text
+                    };
+                    deltas.push(TokenDelta {
+                        id: s.req.id,
+                        token: tok,
+                        text,
+                        index: s.generated.len() - 1,
+                        finish: None,
+                    });
+                }
             }
         }
 
@@ -194,6 +306,7 @@ impl Engine {
 
         // 4. retire finished slots
         let mut done = Vec::new();
+        let mut tails: Vec<(u64, String)> = Vec::new();
         for slot in self.slots.iter_mut() {
             let finished = match slot {
                 Some(s) => {
@@ -213,6 +326,14 @@ impl Engine {
                 let s = slot.take().unwrap();
                 let eos_stopped = self.tokenizer.is_eos(*s.generated.last().unwrap());
                 self.finished_count += 1;
+                if collect_deltas && !s.utf8_pending.is_empty() {
+                    // generation ended mid-character: flush lossily, like
+                    // the full decode below does for the same bytes
+                    tails.push((
+                        s.req.id,
+                        String::from_utf8_lossy(&s.utf8_pending).into_owned(),
+                    ));
+                }
                 done.push(Completion {
                     id: s.req.id,
                     text: self.tokenizer.decode(&s.generated),
@@ -229,7 +350,20 @@ impl Engine {
                 });
             }
         }
-        Ok(done)
+        if collect_deltas {
+            for c in &done {
+                if let Some(d) = deltas.iter_mut().find(|d| d.id == c.id) {
+                    d.finish = Some(c.finish_reason);
+                    if let Some((_, tail)) = tails.iter().find(|(id, _)| *id == c.id) {
+                        d.text.push_str(tail);
+                    }
+                }
+            }
+        }
+        Ok(StepOutput {
+            deltas,
+            finished: done,
+        })
     }
 
     /// Drive the engine until all submitted work completes.
@@ -265,5 +399,71 @@ impl Engine {
             },
             kv_util: kv_used as f64 / kv_cap as f64,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::drain_valid_utf8;
+
+    #[test]
+    fn utf8_draining_holds_incomplete_sequences() {
+        // "é" = 0xC3 0xA9 arrives one byte per decode step
+        let mut pending = Vec::new();
+        pending.push(0xC3);
+        assert_eq!(drain_valid_utf8(&mut pending), "");
+        assert_eq!(pending, vec![0xC3]);
+        pending.push(0xA9);
+        assert_eq!(drain_valid_utf8(&mut pending), "é");
+        assert!(pending.is_empty());
+    }
+
+    #[test]
+    fn utf8_draining_mixes_ascii_and_multibyte() {
+        // "a☕" byte-by-byte: ascii flushes immediately, the 3-byte char
+        // only once complete
+        let bytes = "a☕b".as_bytes();
+        let mut pending = Vec::new();
+        let mut out = String::new();
+        for &b in bytes {
+            pending.push(b);
+            out.push_str(&drain_valid_utf8(&mut pending));
+        }
+        assert_eq!(out, "a☕b");
+        assert!(pending.is_empty());
+    }
+
+    #[test]
+    fn utf8_draining_replaces_definitively_invalid_bytes() {
+        // stray continuation byte can never start a character
+        let mut pending = vec![0x80, b'x'];
+        assert_eq!(drain_valid_utf8(&mut pending), "\u{fffd}x");
+        assert!(pending.is_empty());
+    }
+}
+
+impl StreamEngine for Engine {
+    fn submit(&mut self, prompt: &str, max_new: usize) -> u64 {
+        Engine::submit(self, prompt, max_new)
+    }
+
+    fn step_stream(&mut self) -> Result<StepOutput> {
+        Engine::step_stream(self)
+    }
+
+    fn idle(&self) -> bool {
+        Engine::idle(self)
+    }
+
+    fn pending_len(&self) -> usize {
+        Engine::pending_len(self)
+    }
+
+    fn running_len(&self) -> usize {
+        Engine::running_len(self)
+    }
+
+    fn frame(&self, finished_in_window: f64, arrived_in_window: f64, mean_latency: f64) -> Frame {
+        Engine::frame(self, finished_in_window, arrived_in_window, mean_latency)
     }
 }

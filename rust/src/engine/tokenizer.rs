@@ -49,6 +49,16 @@ impl Tokenizer {
     pub fn is_eos(&self, token: i32) -> bool {
         token == EOS
     }
+
+    /// The raw byte a token encodes, if it is a byte token (specials and
+    /// out-of-range ids return `None`).
+    pub fn byte_of(&self, token: i32) -> Option<u8> {
+        if (BYTE_BASE..BYTE_BASE + 256).contains(&token) {
+            Some((token - BYTE_BASE) as u8)
+        } else {
+            None
+        }
+    }
 }
 
 #[cfg(test)]
@@ -72,6 +82,15 @@ mod tests {
         assert_eq!(toks.len(), 64);
         assert_eq!(toks[0], BOS);
         assert_eq!(tk.decode(&toks).len(), 63);
+    }
+
+    #[test]
+    fn byte_of_classifies_tokens() {
+        let tk = Tokenizer::new(512);
+        assert_eq!(tk.byte_of(BYTE_BASE), Some(0));
+        assert_eq!(tk.byte_of(BYTE_BASE + 255), Some(255));
+        assert_eq!(tk.byte_of(EOS), None);
+        assert_eq!(tk.byte_of(BYTE_BASE + 256), None);
     }
 
     #[test]

@@ -1,0 +1,149 @@
+//! Gateway-side admission control — the queueing-model guardrails of the
+//! paper's §III: a token-bucket rate limiter smooths arrival bursts and a
+//! bounded in-flight gate caps queued + running requests, so overload turns
+//! into fast 429s at the edge instead of unbounded engine queues (the
+//! t^p blow-up ENOVA's detector would otherwise have to catch downstream).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Classic token bucket: `rate` tokens/s refill, `burst` capacity.
+#[derive(Debug)]
+pub struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    /// seconds since `epoch` at the last refill (kept as f64 so tests can
+    /// drive time deterministically through [`TokenBucket::try_take_at`])
+    last: f64,
+    epoch: Instant,
+}
+
+impl TokenBucket {
+    pub fn new(rate: f64, burst: usize) -> TokenBucket {
+        let burst = (burst.max(1)) as f64;
+        TokenBucket {
+            rate: rate.max(0.0),
+            burst,
+            tokens: burst,
+            last: 0.0,
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Take one token at an explicit clock reading (test seam).
+    pub fn try_take_at(&mut self, now_secs: f64) -> bool {
+        let dt = (now_secs - self.last).max(0.0);
+        self.last = now_secs;
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn try_take(&mut self) -> bool {
+        let now = self.epoch.elapsed().as_secs_f64();
+        self.try_take_at(now)
+    }
+}
+
+/// Bounded count of requests inside the serving pipeline (engine pending +
+/// running). Acquire before dispatch; the returned permit releases on drop.
+#[derive(Debug)]
+pub struct AdmissionGate {
+    cap: usize,
+    inflight: AtomicUsize,
+}
+
+impl AdmissionGate {
+    pub fn new(cap: usize) -> Arc<AdmissionGate> {
+        Arc::new(AdmissionGate {
+            cap: cap.max(1),
+            inflight: AtomicUsize::new(0),
+        })
+    }
+
+    pub fn try_acquire(gate: &Arc<AdmissionGate>) -> Option<AdmissionPermit> {
+        gate.inflight
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| {
+                if v < gate.cap {
+                    Some(v + 1)
+                } else {
+                    None
+                }
+            })
+            .ok()?;
+        Some(AdmissionPermit {
+            gate: Arc::clone(gate),
+        })
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[derive(Debug)]
+pub struct AdmissionPermit {
+    gate: Arc<AdmissionGate>,
+}
+
+impl Drop for AdmissionPermit {
+    fn drop(&mut self) {
+        self.gate.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_enforces_rate_and_burst() {
+        let mut b = TokenBucket::new(2.0, 3);
+        // burst drains first
+        assert!(b.try_take_at(0.0));
+        assert!(b.try_take_at(0.0));
+        assert!(b.try_take_at(0.0));
+        assert!(!b.try_take_at(0.0), "burst exhausted");
+        // 0.5s at 2/s refills exactly one token
+        assert!(b.try_take_at(0.5));
+        assert!(!b.try_take_at(0.5));
+        // refill caps at burst
+        assert!(b.try_take_at(100.0));
+        assert!(b.try_take_at(100.0));
+        assert!(b.try_take_at(100.0));
+        assert!(!b.try_take_at(100.0));
+    }
+
+    #[test]
+    fn bucket_tolerates_clock_going_backwards() {
+        let mut b = TokenBucket::new(1.0, 1);
+        assert!(b.try_take_at(10.0));
+        assert!(!b.try_take_at(5.0)); // negative dt must not mint tokens
+    }
+
+    #[test]
+    fn gate_caps_inflight_and_releases_on_drop() {
+        let gate = AdmissionGate::new(2);
+        let a = AdmissionGate::try_acquire(&gate).unwrap();
+        let b = AdmissionGate::try_acquire(&gate).unwrap();
+        assert!(AdmissionGate::try_acquire(&gate).is_none(), "over capacity");
+        assert_eq!(gate.inflight(), 2);
+        drop(a);
+        assert_eq!(gate.inflight(), 1);
+        let c = AdmissionGate::try_acquire(&gate).unwrap();
+        assert!(AdmissionGate::try_acquire(&gate).is_none());
+        drop(b);
+        drop(c);
+        assert_eq!(gate.inflight(), 0);
+    }
+}

@@ -1,0 +1,399 @@
+//! Hand-rolled HTTP/1.1 request parsing and response writing (hyper is not
+//! in the offline crate set). Deliberately small: enough of RFC 9112 for an
+//! OpenAI-style JSON API — start line, headers, Content-Length bodies,
+//! keep-alive. Every malformed input maps to a 4xx [`HttpError`], never a
+//! panic; bounded line/header/body limits keep a hostile peer from forcing
+//! unbounded allocation.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, Write};
+
+/// Longest accepted start/header line, bytes.
+pub const MAX_LINE_BYTES: usize = 16 * 1024;
+/// Most headers accepted per request.
+pub const MAX_HEADERS: usize = 128;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HttpError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl HttpError {
+    pub fn new(status: u16, message: impl Into<String>) -> HttpError {
+        HttpError {
+            status,
+            message: message.into(),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    /// path with the query string stripped
+    pub path: String,
+    pub query: Option<String>,
+    pub version: String,
+    /// header names lowercased
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+
+    /// HTTP/1.1 defaults to keep-alive unless the client asks to close.
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection") {
+            Some(v) => !v.eq_ignore_ascii_case("close"),
+            None => self.version != "HTTP/1.0",
+        }
+    }
+
+    pub fn body_str(&self) -> Result<&str, HttpError> {
+        std::str::from_utf8(&self.body)
+            .map_err(|_| HttpError::new(400, "request body is not valid UTF-8"))
+    }
+}
+
+/// Read one line (terminated by `\n`, `\r` trimmed) without unbounded
+/// buffering. `Ok(None)` means clean EOF before any byte.
+fn read_line_limited<R: BufRead>(r: &mut R, cap: usize) -> Result<Option<String>, HttpError> {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let chunk = match r.fill_buf() {
+            Ok(c) => c,
+            // timeouts / resets: drop the connection silently
+            Err(_) => return Ok(None),
+        };
+        if chunk.is_empty() {
+            // EOF: mid-line EOF is a truncated request
+            if line.is_empty() {
+                return Ok(None);
+            }
+            return Err(HttpError::new(400, "truncated request line"));
+        }
+        if let Some(pos) = chunk.iter().position(|&b| b == b'\n') {
+            line.extend_from_slice(&chunk[..pos]);
+            r.consume(pos + 1);
+            break;
+        }
+        line.extend_from_slice(chunk);
+        let n = chunk.len();
+        r.consume(n);
+        if line.len() > cap {
+            return Err(HttpError::new(431, "header line too long"));
+        }
+    }
+    if line.len() > cap {
+        return Err(HttpError::new(431, "header line too long"));
+    }
+    if line.last() == Some(&b'\r') {
+        line.pop();
+    }
+    String::from_utf8(line)
+        .map(Some)
+        .map_err(|_| HttpError::new(400, "header line is not valid UTF-8"))
+}
+
+/// Parse one request off the wire. `Ok(None)` = connection closed cleanly
+/// between requests (keep-alive loop should just exit).
+pub fn read_request<R: BufRead>(
+    r: &mut R,
+    max_body_bytes: usize,
+) -> Result<Option<Request>, HttpError> {
+    // tolerate a few stray blank lines between pipelined requests
+    let mut start = String::new();
+    for _ in 0..4 {
+        match read_line_limited(r, MAX_LINE_BYTES)? {
+            None => return Ok(None),
+            Some(l) if l.is_empty() => continue,
+            Some(l) => {
+                start = l;
+                break;
+            }
+        }
+    }
+    if start.is_empty() {
+        return Ok(None);
+    }
+
+    let mut parts = start.split_whitespace();
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+    {
+        (Some(m), Some(t), Some(v), None) if v.starts_with("HTTP/") => (m, t, v),
+        _ => return Err(HttpError::new(400, format!("malformed start line: {start:?}"))),
+    };
+    if !method.chars().all(|c| c.is_ascii_uppercase()) {
+        return Err(HttpError::new(400, "malformed method"));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target.to_string(), None),
+    };
+
+    let mut headers = BTreeMap::new();
+    loop {
+        let line = match read_line_limited(r, MAX_LINE_BYTES)? {
+            None => return Err(HttpError::new(400, "EOF inside headers")),
+            Some(l) => l,
+        };
+        if line.is_empty() {
+            break;
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::new(400, format!("malformed header: {line:?}")))?;
+        if name.trim().is_empty() {
+            return Err(HttpError::new(400, "empty header name"));
+        }
+        headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+        if headers.len() > MAX_HEADERS {
+            return Err(HttpError::new(431, "too many headers"));
+        }
+    }
+
+    let has_body_method = matches!(method, "POST" | "PUT" | "PATCH");
+    // Transfer-Encoding is rejected outright — including alongside a
+    // Content-Length, where honoring either header invites request
+    // smuggling / connection desync (RFC 9112 §6.1)
+    if headers.contains_key("transfer-encoding") {
+        return Err(HttpError::new(501, "chunked request bodies not supported"));
+    }
+    let body = match headers.get("content-length") {
+        Some(v) => {
+            let len: usize = v
+                .parse()
+                .map_err(|_| HttpError::new(400, format!("bad Content-Length: {v:?}")))?;
+            if len > max_body_bytes {
+                return Err(HttpError::new(
+                    413,
+                    format!("body of {len} bytes exceeds limit of {max_body_bytes}"),
+                ));
+            }
+            let mut buf = vec![0u8; len];
+            std::io::Read::read_exact(r, &mut buf)
+                .map_err(|_| HttpError::new(400, "truncated body"))?;
+            buf
+        }
+        None if has_body_method => {
+            return Err(HttpError::new(411, "Content-Length required"));
+        }
+        None => Vec::new(),
+    };
+
+    Ok(Some(Request {
+        method: method.to_string(),
+        path,
+        query,
+        version: version.to_string(),
+        headers,
+        body,
+    }))
+}
+
+pub fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+    pub extra_headers: Vec<(String, String)>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.into_bytes(),
+            extra_headers: Vec::new(),
+        }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.into().into_bytes(),
+            extra_headers: Vec::new(),
+        }
+    }
+
+    pub fn prometheus(body: String) -> Response {
+        Response {
+            status: 200,
+            content_type: "text/plain; version=0.0.4; charset=utf-8",
+            body: body.into_bytes(),
+            extra_headers: Vec::new(),
+        }
+    }
+
+    pub fn with_header(mut self, name: &str, value: impl Into<String>) -> Response {
+        self.extra_headers.push((name.to_string(), value.into()));
+        self
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W, keep_alive: bool) -> std::io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+            self.status,
+            status_text(self.status),
+            self.content_type,
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        );
+        for (name, value) in &self.extra_headers {
+            head.push_str(name);
+            head.push_str(": ");
+            head.push_str(value);
+            head.push_str("\r\n");
+        }
+        head.push_str("\r\n");
+        w.write_all(head.as_bytes())?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<Option<Request>, HttpError> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()), 1024)
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = parse(
+            "POST /v1/completions?probe=1 HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/completions");
+        assert_eq!(req.query.as_deref(), Some("probe=1"));
+        assert_eq!(req.body, b"abcd");
+        assert_eq!(req.header("host"), Some("x"));
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn keep_alive_pipelining() {
+        let raw = "GET /healthz HTTP/1.1\r\n\r\nGET /ready HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut cur = Cursor::new(raw.as_bytes().to_vec());
+        let a = read_request(&mut cur, 1024).unwrap().unwrap();
+        assert_eq!(a.path, "/healthz");
+        assert!(a.keep_alive());
+        let b = read_request(&mut cur, 1024).unwrap().unwrap();
+        assert_eq!(b.path, "/ready");
+        assert!(!b.keep_alive());
+        assert!(read_request(&mut cur, 1024).unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_start_line_is_400() {
+        for raw in [
+            "NOT-HTTP\r\n\r\n",
+            "GET\r\n\r\n",
+            "GET / HTTP/1.1 extra\r\n\r\n",
+            "get / HTTP/1.1\r\n\r\n",
+            "GET / FTP/1.1\r\n\r\n",
+        ] {
+            let err = parse(raw).unwrap_err();
+            assert_eq!(err.status, 400, "{raw:?} -> {err:?}");
+        }
+    }
+
+    #[test]
+    fn missing_content_length_is_411() {
+        let err = parse("POST /v1/completions HTTP/1.1\r\n\r\n").unwrap_err();
+        assert_eq!(err.status, 411);
+    }
+
+    #[test]
+    fn bad_content_length_is_400() {
+        let err = parse("POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n").unwrap_err();
+        assert_eq!(err.status, 400);
+    }
+
+    #[test]
+    fn oversized_body_is_413_not_panic() {
+        let err = parse("POST / HTTP/1.1\r\nContent-Length: 999999\r\n\r\n").unwrap_err();
+        assert_eq!(err.status, 413);
+    }
+
+    #[test]
+    fn truncated_body_is_400() {
+        let err = parse("POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc").unwrap_err();
+        assert_eq!(err.status, 400);
+    }
+
+    #[test]
+    fn transfer_encoding_is_rejected_even_with_content_length() {
+        // honoring either header when both are present invites smuggling
+        let err = parse(
+            "POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\nContent-Length: 4\r\n\r\n4\r\nab",
+        )
+        .unwrap_err();
+        assert_eq!(err.status, 501);
+        let err = parse("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n").unwrap_err();
+        assert_eq!(err.status, 501);
+    }
+
+    #[test]
+    fn oversized_header_line_is_431() {
+        let raw = format!("GET /{} HTTP/1.1\r\n\r\n", "x".repeat(MAX_LINE_BYTES + 10));
+        let err = parse(&raw).unwrap_err();
+        assert_eq!(err.status, 431);
+    }
+
+    #[test]
+    fn header_without_colon_is_400() {
+        let err = parse("GET / HTTP/1.1\r\nbroken header\r\n\r\n").unwrap_err();
+        assert_eq!(err.status, 400);
+    }
+
+    #[test]
+    fn eof_is_clean_none() {
+        assert!(parse("").unwrap().is_none());
+        assert!(parse("\r\n\r\n").unwrap().is_none());
+    }
+
+    #[test]
+    fn response_writes_well_formed_http() {
+        let mut out = Vec::new();
+        Response::json(429, "{}".into())
+            .with_header("Retry-After", "1")
+            .write_to(&mut out, false)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("Content-Length: 2\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+    }
+}

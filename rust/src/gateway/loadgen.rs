@@ -1,0 +1,379 @@
+//! Self-contained HTTP client + closed-loop load generator that drives the
+//! gateway over real sockets — the integration-test harness and the
+//! `examples/serve_http.rs` demo driver. The client understands exactly
+//! what the gateway emits: Content-Length bodies and chunked SSE streams.
+
+use crate::util::json::{num, obj, s, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    /// header names lowercased
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn body_str(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+
+    pub fn json(&self) -> Result<Json> {
+        Json::parse(&self.body_str()).map_err(|e| anyhow!("response is not JSON: {e}"))
+    }
+
+    /// The `data:` payloads of an SSE body, in order (including `[DONE]`).
+    pub fn sse_data(&self) -> Vec<String> {
+        self.body_str()
+            .split("\n\n")
+            .filter_map(|event| event.trim().strip_prefix("data: ").map(str::to_string))
+            .collect()
+    }
+}
+
+fn read_chunked<R: BufRead>(r: &mut R) -> Result<Vec<u8>> {
+    let mut body = Vec::new();
+    loop {
+        let mut size_line = String::new();
+        r.read_line(&mut size_line)?;
+        let size_str = size_line.trim().split(';').next().unwrap_or("").trim();
+        let size = usize::from_str_radix(size_str, 16)
+            .with_context(|| format!("bad chunk size line {size_line:?}"))?;
+        if size == 0 {
+            // trailers (we send none) up to the blank line
+            loop {
+                let mut trailer = String::new();
+                if r.read_line(&mut trailer)? == 0 || trailer.trim().is_empty() {
+                    break;
+                }
+            }
+            return Ok(body);
+        }
+        let mut chunk = vec![0u8; size];
+        r.read_exact(&mut chunk)?;
+        body.extend_from_slice(&chunk);
+        let mut crlf = [0u8; 2];
+        r.read_exact(&mut crlf)?;
+    }
+}
+
+/// One blocking HTTP/1.1 exchange on a fresh connection
+/// (`Connection: close`).
+pub fn request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    timeout: Duration,
+) -> Result<HttpResponse> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    stream.set_nodelay(true)?;
+
+    let mut head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nAccept: */*\r\nConnection: close\r\n"
+    );
+    if let Some(b) = body {
+        head.push_str(&format!(
+            "Content-Type: application/json\r\nContent-Length: {}\r\n",
+            b.len()
+        ));
+    }
+    head.push_str("\r\n");
+    let mut w = &stream;
+    w.write_all(head.as_bytes())?;
+    if let Some(b) = body {
+        w.write_all(b.as_bytes())?;
+    }
+    w.flush()?;
+
+    let mut r = BufReader::new(&stream);
+    let mut status_line = String::new();
+    r.read_line(&mut status_line)?;
+    let mut parts = status_line.split_whitespace();
+    let proto = parts.next().unwrap_or("");
+    let status: u16 = parts
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("bad status line {status_line:?}"))?;
+    if !proto.starts_with("HTTP/") {
+        bail!("bad status line {status_line:?}");
+    }
+
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut line = String::new();
+        if r.read_line(&mut line)? == 0 {
+            bail!("EOF inside response headers");
+        }
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+        }
+    }
+
+    let body = if headers
+        .get("transfer-encoding")
+        .map(|v| v.eq_ignore_ascii_case("chunked"))
+        .unwrap_or(false)
+    {
+        read_chunked(&mut r)?
+    } else if let Some(len) = headers.get("content-length") {
+        let len: usize = len.parse().context("bad Content-Length in response")?;
+        let mut buf = vec![0u8; len];
+        r.read_exact(&mut buf)?;
+        buf
+    } else {
+        let mut buf = Vec::new();
+        r.read_to_end(&mut buf)?;
+        buf
+    };
+
+    Ok(HttpResponse {
+        status,
+        headers,
+        body,
+    })
+}
+
+pub fn get(addr: &str, path: &str) -> Result<HttpResponse> {
+    request(addr, "GET", path, None, Duration::from_secs(30))
+}
+
+pub fn post_json(addr: &str, path: &str, body: &str) -> Result<HttpResponse> {
+    request(addr, "POST", path, Some(body), Duration::from_secs(60))
+}
+
+/// Closed-loop driver configuration: `concurrency` workers each issue
+/// `requests_per_worker` sequential requests on fresh connections.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    pub concurrency: usize,
+    pub requests_per_worker: usize,
+    pub max_tokens: usize,
+    /// every k-th request of a worker streams (0 = never)
+    pub stream_every: usize,
+    /// every k-th request goes to /v1/chat/completions (0 = never)
+    pub chat_every: usize,
+    pub prompt_prefix: String,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            concurrency: 8,
+            requests_per_worker: 4,
+            max_tokens: 8,
+            stream_every: 2,
+            chat_every: 3,
+            prompt_prefix: "benchmark this serving gateway".into(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct LoadgenReport {
+    pub requests: usize,
+    pub ok: usize,
+    /// transport-level failures (connect/read errors)
+    pub errors: usize,
+    pub status_counts: BTreeMap<u16, usize>,
+    pub sse_events: usize,
+    pub completion_tokens: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub elapsed_secs: f64,
+}
+
+impl LoadgenReport {
+    pub fn count(&self, status: u16) -> usize {
+        self.status_counts.get(&status).copied().unwrap_or(0)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} requests in {:.2}s ({:.1} req/s): {} ok, {} errors, statuses {:?}, \
+             {} completion tokens, {} SSE events, p50 {:.1}ms p99 {:.1}ms",
+            self.requests,
+            self.elapsed_secs,
+            self.requests as f64 / self.elapsed_secs.max(1e-9),
+            self.ok,
+            self.errors,
+            self.status_counts,
+            self.completion_tokens,
+            self.sse_events,
+            self.p50_ms,
+            self.p99_ms,
+        )
+    }
+}
+
+struct OneResult {
+    status: Option<u16>,
+    latency: Duration,
+    sse_events: usize,
+    completion_tokens: usize,
+}
+
+fn one_request(addr: &str, cfg: &LoadgenConfig, worker: usize, k: usize) -> OneResult {
+    let stream = cfg.stream_every != 0 && (worker + k) % cfg.stream_every == 0;
+    let chat = cfg.chat_every != 0 && (worker + k) % cfg.chat_every == 0;
+    let prompt = format!("{} w{worker} r{k}", cfg.prompt_prefix);
+    // build through util::json so arbitrary prompt_prefix content is escaped
+    let body = if chat {
+        obj([
+            (
+                "messages",
+                Json::Arr(vec![obj([("role", s("user")), ("content", s(&prompt))])]),
+            ),
+            ("max_tokens", num(cfg.max_tokens as f64)),
+            ("stream", Json::Bool(stream)),
+        ])
+    } else {
+        obj([
+            ("prompt", s(&prompt)),
+            ("max_tokens", num(cfg.max_tokens as f64)),
+            ("stream", Json::Bool(stream)),
+        ])
+    }
+    .to_string_compact();
+    let path = if chat {
+        "/v1/chat/completions"
+    } else {
+        "/v1/completions"
+    };
+    let t0 = Instant::now();
+    match post_json(addr, path, &body) {
+        Err(_) => OneResult {
+            status: None,
+            latency: t0.elapsed(),
+            sse_events: 0,
+            completion_tokens: 0,
+        },
+        Ok(resp) => {
+            let mut sse_events = 0;
+            let mut completion_tokens = 0;
+            if resp.status == 200 {
+                if stream {
+                    let events = resp.sse_data();
+                    sse_events = events.len();
+                    completion_tokens = events
+                        .iter()
+                        .filter(|e| e.as_str() != "[DONE]")
+                        .filter(|e| {
+                            Json::parse(e)
+                                .ok()
+                                .and_then(|j| {
+                                    j.get("choices")?.as_arr()?.first().map(|c| {
+                                        c.get("text").is_some()
+                                            || c.at(&["delta", "content"]).is_some()
+                                    })
+                                })
+                                .unwrap_or(false)
+                        })
+                        .count();
+                } else if let Ok(j) = resp.json() {
+                    completion_tokens = j
+                        .at(&["usage", "completion_tokens"])
+                        .and_then(Json::as_usize)
+                        .unwrap_or(0);
+                }
+            }
+            OneResult {
+                status: Some(resp.status),
+                latency: t0.elapsed(),
+                sse_events,
+                completion_tokens,
+            }
+        }
+    }
+}
+
+/// Run the closed loop against `addr` and aggregate a report.
+pub fn run(addr: &str, cfg: &LoadgenConfig) -> LoadgenReport {
+    let t0 = Instant::now();
+    let (tx, rx) = std::sync::mpsc::channel::<OneResult>();
+    let mut handles = Vec::new();
+    for worker in 0..cfg.concurrency {
+        let tx = tx.clone();
+        let cfg = cfg.clone();
+        let addr = addr.to_string();
+        handles.push(std::thread::spawn(move || {
+            for k in 0..cfg.requests_per_worker {
+                let _ = tx.send(one_request(&addr, &cfg, worker, k));
+            }
+        }));
+    }
+    drop(tx);
+
+    let mut report = LoadgenReport::default();
+    let mut latencies_ms: Vec<f64> = Vec::new();
+    for r in rx {
+        report.requests += 1;
+        match r.status {
+            None => report.errors += 1,
+            Some(code) => {
+                *report.status_counts.entry(code).or_insert(0) += 1;
+                if code == 200 {
+                    report.ok += 1;
+                    latencies_ms.push(r.latency.as_secs_f64() * 1e3);
+                }
+            }
+        }
+        report.sse_events += r.sse_events;
+        report.completion_tokens += r.completion_tokens;
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    report.elapsed_secs = t0.elapsed().as_secs_f64();
+    latencies_ms.sort_by(f64::total_cmp);
+    let pct = |q: f64| -> f64 {
+        if latencies_ms.is_empty() {
+            return 0.0;
+        }
+        let idx = ((latencies_ms.len() - 1) as f64 * q).round() as usize;
+        latencies_ms[idx]
+    };
+    report.p50_ms = pct(0.50);
+    report.p99_ms = pct(0.99);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sse_data_extraction() {
+        let resp = HttpResponse {
+            status: 200,
+            headers: BTreeMap::new(),
+            body: b"data: {\"a\":1}\n\ndata: {\"b\":2}\n\ndata: [DONE]\n\n".to_vec(),
+        };
+        assert_eq!(resp.sse_data(), vec!["{\"a\":1}", "{\"b\":2}", "[DONE]"]);
+    }
+
+    #[test]
+    fn chunked_body_decoding() {
+        let wire = b"5\r\nhello\r\n6\r\n world\r\n0\r\n\r\n";
+        let mut r = std::io::BufReader::new(&wire[..]);
+        assert_eq!(read_chunked(&mut r).unwrap(), b"hello world");
+    }
+
+    #[test]
+    fn chunked_rejects_garbage_size() {
+        let wire = b"zz\r\nhello\r\n";
+        let mut r = std::io::BufReader::new(&wire[..]);
+        assert!(read_chunked(&mut r).is_err());
+    }
+}

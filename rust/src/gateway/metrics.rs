@@ -1,0 +1,323 @@
+//! Gateway observability: lock-light request counters and latency
+//! histograms, rendered together with the per-replica Table II frames from
+//! [`crate::tsdb::MetricStore`] as Prometheus text exposition (the format
+//! the paper's monitoring system scrapes). Also ships a small exposition
+//! parser so tests can verify the scrape body instead of substring-matching.
+
+use crate::metrics::COLUMNS;
+use crate::tsdb::MetricStore;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Upper bounds (seconds) of the request-latency histogram buckets.
+pub const LATENCY_BUCKETS: [f64; 10] = [
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 1.0, 5.0,
+];
+
+#[derive(Debug, Default)]
+pub struct GatewayMetrics {
+    /// (endpoint, status) -> count
+    requests: Mutex<BTreeMap<(String, u16), u64>>,
+    bucket_counts: [AtomicU64; LATENCY_BUCKETS.len()],
+    latency_sum_micros: AtomicU64,
+    latency_count: AtomicU64,
+    tokens_generated: AtomicU64,
+    sse_events: AtomicU64,
+    rejected_queue_full: AtomicU64,
+    rejected_rate_limited: AtomicU64,
+}
+
+impl GatewayMetrics {
+    pub fn new() -> GatewayMetrics {
+        GatewayMetrics::default()
+    }
+
+    /// Record one finished HTTP exchange.
+    pub fn observe(&self, endpoint: &str, status: u16, latency_secs: f64) {
+        *self
+            .requests
+            .lock()
+            .unwrap()
+            .entry((endpoint.to_string(), status))
+            .or_insert(0) += 1;
+        for (i, &le) in LATENCY_BUCKETS.iter().enumerate() {
+            if latency_secs <= le {
+                self.bucket_counts[i].fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.latency_sum_micros
+            .fetch_add((latency_secs * 1e6) as u64, Ordering::Relaxed);
+        self.latency_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_tokens(&self, n: usize) {
+        self.tokens_generated.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_sse_events(&self, n: usize) {
+        self.sse_events.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn note_queue_full(&self) {
+        self.rejected_queue_full.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_rate_limited(&self) {
+        self.rejected_rate_limited.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn requests_total(&self) -> u64 {
+        self.requests.lock().unwrap().values().sum()
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Render the full `/metrics` body: gateway request metrics plus the last
+/// Table II frame of every replica instance in `store`.
+pub fn render_prometheus(
+    gw: &GatewayMetrics,
+    store: &MetricStore,
+    inflight: usize,
+    uptime_secs: f64,
+) -> String {
+    let mut out = String::with_capacity(4096);
+
+    out.push_str("# HELP enova_gateway_requests_total HTTP requests served, by endpoint and status code.\n");
+    out.push_str("# TYPE enova_gateway_requests_total counter\n");
+    for ((endpoint, status), count) in gw.requests.lock().unwrap().iter() {
+        let _ = writeln!(
+            out,
+            "enova_gateway_requests_total{{endpoint=\"{}\",code=\"{}\"}} {}",
+            escape_label(endpoint),
+            status,
+            count
+        );
+    }
+
+    out.push_str("# HELP enova_gateway_request_seconds End-to-end request latency.\n");
+    out.push_str("# TYPE enova_gateway_request_seconds histogram\n");
+    let total = gw.latency_count.load(Ordering::Relaxed);
+    for (i, &le) in LATENCY_BUCKETS.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "enova_gateway_request_seconds_bucket{{le=\"{}\"}} {}",
+            le,
+            gw.bucket_counts[i].load(Ordering::Relaxed)
+        );
+    }
+    let _ = writeln!(
+        out,
+        "enova_gateway_request_seconds_bucket{{le=\"+Inf\"}} {total}"
+    );
+    let _ = writeln!(
+        out,
+        "enova_gateway_request_seconds_sum {}",
+        gw.latency_sum_micros.load(Ordering::Relaxed) as f64 / 1e6
+    );
+    let _ = writeln!(out, "enova_gateway_request_seconds_count {total}");
+
+    for (name, help, value) in [
+        (
+            "enova_gateway_tokens_generated_total",
+            "Completion tokens produced by all replicas.",
+            gw.tokens_generated.load(Ordering::Relaxed),
+        ),
+        (
+            "enova_gateway_sse_events_total",
+            "Server-sent events written to streaming clients.",
+            gw.sse_events.load(Ordering::Relaxed),
+        ),
+    ] {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {value}");
+    }
+
+    out.push_str("# HELP enova_gateway_admission_rejected_total Requests rejected with 429 at admission.\n");
+    out.push_str("# TYPE enova_gateway_admission_rejected_total counter\n");
+    let _ = writeln!(
+        out,
+        "enova_gateway_admission_rejected_total{{reason=\"queue_full\"}} {}",
+        gw.rejected_queue_full.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(
+        out,
+        "enova_gateway_admission_rejected_total{{reason=\"rate_limited\"}} {}",
+        gw.rejected_rate_limited.load(Ordering::Relaxed)
+    );
+
+    out.push_str("# HELP enova_gateway_inflight_requests Requests admitted and not yet finished.\n");
+    out.push_str("# TYPE enova_gateway_inflight_requests gauge\n");
+    let _ = writeln!(out, "enova_gateway_inflight_requests {inflight}");
+
+    out.push_str("# HELP enova_gateway_uptime_seconds Gateway uptime.\n");
+    out.push_str("# TYPE enova_gateway_uptime_seconds gauge\n");
+    let _ = writeln!(out, "enova_gateway_uptime_seconds {uptime_secs:.3}");
+
+    // Table II per replica: the last recorded frame value of each column
+    for metric in COLUMNS {
+        let _ = writeln!(
+            out,
+            "# HELP enova_replica_{metric} Table II monitoring metric `{metric}` per replica."
+        );
+        let _ = writeln!(out, "# TYPE enova_replica_{metric} gauge");
+        for instance in store.instances(metric) {
+            if let Some(v) = store.series(metric, &instance).and_then(|s| s.last()) {
+                let _ = writeln!(
+                    out,
+                    "enova_replica_{metric}{{instance=\"{}\"}} {v}",
+                    escape_label(&instance)
+                );
+            }
+        }
+    }
+    out
+}
+
+/// One parsed sample line of a text exposition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub labels: BTreeMap<String, String>,
+    pub value: f64,
+}
+
+fn valid_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().map(|c| c.is_ascii_alphabetic() || c == '_' || c == ':').unwrap_or(false)
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Strict-enough parser for the Prometheus text format (what our renderer
+/// emits): used by tests to verify `/metrics` really is an exposition.
+pub fn parse_exposition(text: &str) -> Result<Vec<Sample>, String> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let err = |what: &str| format!("line {}: {what}: {line:?}", lineno + 1);
+        let (head, value_str) = line
+            .rsplit_once(|c: char| c.is_ascii_whitespace())
+            .ok_or_else(|| err("missing value"))?;
+        let value: f64 = value_str.parse().map_err(|_| err("bad value"))?;
+        let (name, labels) = match head.split_once('{') {
+            None => (head.trim().to_string(), BTreeMap::new()),
+            Some((n, rest)) => {
+                let rest = rest.trim_end();
+                let body = rest
+                    .strip_suffix('}')
+                    .ok_or_else(|| err("unterminated label set"))?;
+                let mut labels = BTreeMap::new();
+                for pair in body.split(',').filter(|p| !p.is_empty()) {
+                    let (k, v) = pair.split_once('=').ok_or_else(|| err("bad label pair"))?;
+                    let v = v
+                        .strip_prefix('"')
+                        .and_then(|v| v.strip_suffix('"'))
+                        .ok_or_else(|| err("unquoted label value"))?;
+                    labels.insert(k.trim().to_string(), v.replace("\\\"", "\"").replace("\\\\", "\\"));
+                }
+                (n.trim().to_string(), labels)
+            }
+        };
+        if !valid_name(&name) {
+            return Err(err("invalid metric name"));
+        }
+        out.push(Sample { name, labels, value });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Frame;
+
+    #[test]
+    fn render_includes_all_table2_columns_per_replica() {
+        let gw = GatewayMetrics::new();
+        gw.observe("/v1/completions", 200, 0.02);
+        gw.observe("/v1/completions", 429, 0.0001);
+        gw.add_tokens(12);
+        gw.note_queue_full();
+
+        let mut store = MetricStore::new();
+        for i in 0..2 {
+            Frame {
+                n_finished: 1.0 + i as f64,
+                ..Default::default()
+            }
+            .record(&mut store, &format!("replica-{i}"), 1.0);
+        }
+
+        let body = render_prometheus(&gw, &store, 3, 12.5);
+        let samples = parse_exposition(&body).expect("valid exposition");
+        for col in COLUMNS {
+            for replica in ["replica-0", "replica-1"] {
+                assert!(
+                    samples.iter().any(|s| s.name == format!("enova_replica_{col}")
+                        && s.labels.get("instance").map(String::as_str) == Some(replica)),
+                    "missing {col} for {replica}"
+                );
+            }
+        }
+        let ok = samples
+            .iter()
+            .find(|s| {
+                s.name == "enova_gateway_requests_total"
+                    && s.labels.get("code").map(String::as_str) == Some("200")
+            })
+            .unwrap();
+        assert_eq!(ok.value, 1.0);
+        assert!(samples.iter().any(|s| s.name == "enova_gateway_request_seconds_count" && s.value == 2.0));
+        assert!(samples
+            .iter()
+            .any(|s| s.name == "enova_gateway_request_seconds_bucket"
+                && s.labels.get("le").map(String::as_str) == Some("+Inf")
+                && s.value == 2.0));
+        assert!(samples
+            .iter()
+            .any(|s| s.name == "enova_gateway_admission_rejected_total"
+                && s.labels.get("reason").map(String::as_str) == Some("queue_full")
+                && s.value == 1.0));
+        assert!(samples.iter().any(|s| s.name == "enova_gateway_inflight_requests" && s.value == 3.0));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let gw = GatewayMetrics::new();
+        gw.observe("/x", 200, 0.002); // lands in le=0.0025 and wider
+        gw.observe("/x", 200, 0.3); // lands in le=1.0 and wider
+        let body = render_prometheus(&gw, &MetricStore::new(), 0, 0.0);
+        let samples = parse_exposition(&body).unwrap();
+        let bucket = |le: &str| {
+            samples
+                .iter()
+                .find(|s| s.name == "enova_gateway_request_seconds_bucket"
+                    && s.labels.get("le").map(String::as_str) == Some(le))
+                .unwrap()
+                .value
+        };
+        assert_eq!(bucket("0.001"), 0.0);
+        assert_eq!(bucket("0.0025"), 1.0);
+        assert_eq!(bucket("0.25"), 1.0);
+        assert_eq!(bucket("1"), 2.0);
+        assert_eq!(bucket("+Inf"), 2.0);
+    }
+
+    #[test]
+    fn parser_rejects_garbage() {
+        assert!(parse_exposition("metric_no_value\n").is_err());
+        assert!(parse_exposition("1metric 2\n").is_err());
+        assert!(parse_exposition("m{a=b} 2\n").is_err());
+        assert!(parse_exposition("m{a=\"b\" 2\n").is_err());
+        assert!(parse_exposition("m abc\n").is_err());
+        assert!(parse_exposition("# just a comment\n\n").unwrap().is_empty());
+    }
+}

@@ -1,0 +1,920 @@
+//! The network-facing serving surface (the "API Gateway + LLM Load
+//! Balancer" layers of Table I): a dependency-free threaded HTTP/1.1
+//! server exposing OpenAI-compatible endpoints over N in-process engine
+//! replicas.
+//!
+//! * `POST /v1/completions`, `POST /v1/chat/completions` — JSON in, JSON
+//!   out; `"stream": true` is served token-by-token as SSE from the
+//!   engines' step-wise API ([`crate::engine::StreamEngine`]).
+//! * `GET /metrics` — Prometheus text exposition: gateway counters and
+//!   latency histograms plus the Table II frame of every replica.
+//! * `GET /healthz`, `GET /ready` — liveness / replica readiness.
+//! * `POST /admin/scale` — apply a new replica weight set through the
+//!   [`WeightedRouter`] (the autoscaler's ingress-update path, §IV-A-4).
+//!
+//! Requests pass admission control first (token-bucket rate limiter +
+//! bounded in-flight gate → fast 429s under overload), then dispatch via
+//! weighted least-loaded routing to a replica worker thread that drives
+//! its engine's continuous-batching loop and streams deltas back over a
+//! channel.
+
+pub mod admission;
+pub mod http;
+pub mod loadgen;
+pub mod metrics;
+pub mod openai;
+pub mod sse;
+
+use crate::engine::{Completion, FinishReason, StreamEngine};
+use crate::router::{ReplicaHandle, WeightedRouter};
+use crate::tsdb::MetricStore;
+use crate::util::json::Json;
+use admission::{AdmissionGate, AdmissionPermit, TokenBucket};
+use anyhow::{anyhow, Result};
+use metrics::GatewayMetrics;
+use std::collections::{BTreeMap, HashMap};
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Constructs one replica's engine *inside* its worker thread, so engines
+/// themselves never cross thread boundaries (PJRT handles are not
+/// guaranteed `Send`).
+pub type EngineFactory = Box<dyn FnOnce() -> Result<Box<dyn StreamEngine>> + Send + 'static>;
+
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    pub host: String,
+    /// 0 = ephemeral (tests)
+    pub port: u16,
+    /// default completion budget when the request omits `max_tokens`
+    pub max_tokens_default: usize,
+    /// admission bound on queued + running requests (429 beyond)
+    pub max_pending: usize,
+    /// token-bucket refill, requests/second; 0 disables rate limiting
+    pub rate_limit: f64,
+    pub rate_burst: usize,
+    /// HTTP worker threads == max concurrently served connections
+    pub http_workers: usize,
+    pub max_body_bytes: usize,
+    /// cadence of Table II frame recording per replica
+    pub monitor_interval: Duration,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            host: "127.0.0.1".into(),
+            port: 0,
+            max_tokens_default: 64,
+            max_pending: 256,
+            rate_limit: 0.0,
+            rate_burst: 64,
+            http_workers: 64,
+            max_body_bytes: 1024 * 1024,
+            monitor_interval: Duration::from_millis(50),
+        }
+    }
+}
+
+/// What a replica worker sends back to the HTTP handler, per request.
+enum StreamItem {
+    Delta {
+        text: String,
+        finish: Option<FinishReason>,
+    },
+    Done(Completion),
+    Error(String),
+}
+
+/// One admitted request, queued to a replica worker. The job owns its
+/// admission permit and router handle: capacity and routing counts are
+/// released when the *engine* finishes the request (see
+/// [`Job::release`]), not when the HTTP handler responds — a request the
+/// handler gave up on (timeout, client disconnect) still occupies engine
+/// queue/slots until it completes.
+struct Job {
+    prompt: String,
+    max_new: usize,
+    stream: bool,
+    tx: Sender<StreamItem>,
+    permit: AdmissionPermit,
+    handle: Arc<ReplicaHandle>,
+}
+
+impl Job {
+    /// Release routing + admission accounting (the permit drops with self).
+    fn release(self) -> Sender<StreamItem> {
+        self.handle.complete();
+        drop(self.permit);
+        self.tx
+    }
+}
+
+struct GatewayState {
+    cfg: GatewayConfig,
+    router: RwLock<WeightedRouter>,
+    /// replica id -> job queue into that replica's worker thread
+    replicas: BTreeMap<u64, Mutex<Sender<Job>>>,
+    gate: Arc<AdmissionGate>,
+    bucket: Option<Mutex<TokenBucket>>,
+    metrics: GatewayMetrics,
+    store: Mutex<MetricStore>,
+    started: Instant,
+    ready_replicas: AtomicUsize,
+    next_req_id: AtomicU64,
+    stop: AtomicBool,
+}
+
+/// Handle to a running gateway. [`Gateway::shutdown`] stops and joins all
+/// threads; dropping without shutdown leaves daemon threads running (the
+/// CLI path, where the process exit reaps them).
+pub struct Gateway {
+    pub addr: SocketAddr,
+    state: Arc<GatewayState>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Gateway {
+    /// Bind, spawn one worker thread per engine factory plus the HTTP
+    /// accept/worker pool, and wait until every replica engine is built.
+    pub fn start(cfg: GatewayConfig, factories: Vec<EngineFactory>) -> Result<Gateway> {
+        if factories.is_empty() {
+            return Err(anyhow!("gateway needs at least one engine replica"));
+        }
+        let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+
+        let n = factories.len();
+        let mut replicas = BTreeMap::new();
+        let mut job_rxs = Vec::new();
+        for id in 0..n as u64 {
+            let (tx, rx) = mpsc::channel::<Job>();
+            replicas.insert(id, Mutex::new(tx));
+            job_rxs.push(rx);
+        }
+        let weights: Vec<(u64, f64)> = (0..n as u64).map(|id| (id, 1.0)).collect();
+
+        let state = Arc::new(GatewayState {
+            router: RwLock::new(WeightedRouter::new(&weights)),
+            replicas,
+            gate: AdmissionGate::new(cfg.max_pending),
+            bucket: (cfg.rate_limit > 0.0)
+                .then(|| Mutex::new(TokenBucket::new(cfg.rate_limit, cfg.rate_burst))),
+            metrics: GatewayMetrics::new(),
+            store: Mutex::new({
+                // /metrics only reads the newest point per series; a small
+                // history bound keeps a long-running gateway's RSS flat
+                let mut store = MetricStore::new();
+                store.retention = 4096;
+                store
+            }),
+            started: Instant::now(),
+            ready_replicas: AtomicUsize::new(0),
+            next_req_id: AtomicU64::new(1),
+            stop: AtomicBool::new(false),
+            cfg,
+        });
+
+        let mut threads = Vec::new();
+        let (init_tx, init_rx) = mpsc::channel::<std::result::Result<u64, String>>();
+        for (id, (factory, rx)) in factories.into_iter().zip(job_rxs).enumerate() {
+            let state = Arc::clone(&state);
+            let init_tx = init_tx.clone();
+            threads.push(std::thread::spawn(move || {
+                let engine = match factory() {
+                    Ok(e) => e,
+                    Err(e) => {
+                        let _ = init_tx.send(Err(format!("replica {id}: {e}")));
+                        return;
+                    }
+                };
+                // initial frame before declaring ready, so /metrics exposes
+                // every replica deterministically once start() returns
+                record_frame(engine.as_ref(), &state, &format!("replica-{id}"), 0.0, 0.0, 0.0);
+                state.ready_replicas.fetch_add(1, Ordering::Release);
+                let _ = init_tx.send(Ok(id as u64));
+                replica_loop(id as u64, engine, rx, &state);
+            }));
+        }
+        drop(init_tx);
+        for _ in 0..n {
+            match init_rx.recv_timeout(Duration::from_secs(300)) {
+                Ok(Ok(_)) => {}
+                Ok(Err(e)) => {
+                    state.stop.store(true, Ordering::Release);
+                    return Err(anyhow!("engine init failed: {e}"));
+                }
+                Err(_) => {
+                    state.stop.store(true, Ordering::Release);
+                    return Err(anyhow!("engine init timed out"));
+                }
+            }
+        }
+
+        // connection fan-out: accept thread -> worker pool
+        let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        {
+            let state = Arc::clone(&state);
+            threads.push(std::thread::spawn(move || {
+                accept_loop(listener, conn_tx, &state);
+            }));
+        }
+        for _ in 0..state.cfg.http_workers.max(1) {
+            let state = Arc::clone(&state);
+            let conn_rx = Arc::clone(&conn_rx);
+            threads.push(std::thread::spawn(move || loop {
+                if state.stop.load(Ordering::Acquire) {
+                    break;
+                }
+                let next = conn_rx
+                    .lock()
+                    .unwrap()
+                    .recv_timeout(Duration::from_millis(100));
+                match next {
+                    Ok(stream) => handle_connection(stream, &state),
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }));
+        }
+
+        crate::info!(
+            "gateway",
+            "listening on http://{addr} with {n} replica(s), {} http workers",
+            state.cfg.http_workers
+        );
+        Ok(Gateway {
+            addr,
+            state,
+            threads,
+        })
+    }
+
+    pub fn addr_string(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// Replicas that finished constructing their engine.
+    pub fn ready_replicas(&self) -> usize {
+        self.state.ready_replicas.load(Ordering::Acquire)
+    }
+
+    /// Stop accepting, drain workers, join all threads.
+    pub fn shutdown(self) {
+        self.state.stop.store(true, Ordering::Release);
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+
+    /// Block forever serving (CLI path).
+    pub fn serve_forever(self) {
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, conn_tx: Sender<TcpStream>, state: &GatewayState) {
+    loop {
+        if state.stop.load(Ordering::Acquire) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_nodelay(true);
+                // short read timeout doubles as the idle keep-alive
+                // deadline: a worker parked in read_request re-checks the
+                // stop flag within this bound, so shutdown stays prompt
+                let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+                let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+                if conn_tx.send(stream).is_err() {
+                    break;
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+/// Per-replica accounting for the current Table II monitoring window.
+struct FrameWindow {
+    finished: u64,
+    arrived: u64,
+    latency_sum: f64,
+    latency_n: u64,
+    last: Instant,
+}
+
+impl FrameWindow {
+    fn new() -> FrameWindow {
+        FrameWindow {
+            finished: 0,
+            arrived: 0,
+            latency_sum: 0.0,
+            latency_n: 0,
+            last: Instant::now(),
+        }
+    }
+
+    /// Record a frame and reset the window once the monitor interval has
+    /// elapsed. Counts are normalized by the actual window length: Table II
+    /// defines n^f/n^a as rates per unit time, and windows here vary with
+    /// engine step duration.
+    fn maybe_flush(&mut self, engine: &dyn StreamEngine, state: &GatewayState, instance: &str) {
+        let elapsed = self.last.elapsed();
+        if elapsed < state.cfg.monitor_interval {
+            return;
+        }
+        let secs = elapsed.as_secs_f64().max(1e-9);
+        let mean = if self.latency_n > 0 {
+            self.latency_sum / self.latency_n as f64
+        } else {
+            0.0
+        };
+        record_frame(
+            engine,
+            state,
+            instance,
+            self.finished as f64 / secs,
+            self.arrived as f64 / secs,
+            mean,
+        );
+        *self = FrameWindow::new();
+    }
+}
+
+/// Drive one replica's engine: admit queued jobs, step, fan deltas and
+/// completions back out, and record Table II frames into the shared store.
+fn replica_loop(
+    id: u64,
+    mut engine: Box<dyn StreamEngine>,
+    rx: Receiver<Job>,
+    state: &GatewayState,
+) {
+    let instance = format!("replica-{id}");
+    let mut jobs: HashMap<u64, Job> = HashMap::new();
+    let mut window = FrameWindow::new();
+
+    loop {
+        if state.stop.load(Ordering::Acquire) {
+            break;
+        }
+        // block while idle; drain opportunistically while busy
+        if engine.idle() && jobs.is_empty() {
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(job) => {
+                    admit(engine.as_mut(), &mut jobs, job);
+                    window.arrived += 1;
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    window.maybe_flush(engine.as_ref(), state, &instance);
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        while let Ok(job) = rx.try_recv() {
+            admit(engine.as_mut(), &mut jobs, job);
+            window.arrived += 1;
+        }
+
+        match engine.step_stream() {
+            Ok(out) => {
+                for d in out.deltas {
+                    if let Some(job) = jobs.get(&d.id) {
+                        if job.stream {
+                            let _ = job.tx.send(StreamItem::Delta {
+                                text: d.text,
+                                finish: d.finish,
+                            });
+                        }
+                    }
+                }
+                for c in out.finished {
+                    window.finished += 1;
+                    window.latency_sum += (c.finished_at - c.arrival).max(0.0);
+                    window.latency_n += 1;
+                    if let Some(job) = jobs.remove(&c.id) {
+                        let tx = job.release();
+                        let _ = tx.send(StreamItem::Done(c));
+                    }
+                }
+            }
+            Err(e) => {
+                crate::error!("gateway", "replica {id} engine step failed: {e}");
+                for (_, job) in jobs.drain() {
+                    let tx = job.release();
+                    let _ = tx.send(StreamItem::Error(format!("engine failure: {e}")));
+                }
+                // a persistently broken engine keeps its slots occupied
+                // (never idle), so back off instead of hot-spinning
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+
+        window.maybe_flush(engine.as_ref(), state, &instance);
+    }
+}
+
+fn admit(engine: &mut dyn StreamEngine, jobs: &mut HashMap<u64, Job>, job: Job) {
+    let id = engine.submit(&job.prompt, job.max_new);
+    jobs.insert(id, job);
+}
+
+fn record_frame(
+    engine: &dyn StreamEngine,
+    state: &GatewayState,
+    instance: &str,
+    finished: f64,
+    arrived: f64,
+    mean_latency: f64,
+) {
+    let frame = engine.frame(finished, arrived, mean_latency);
+    let t = state.started.elapsed().as_secs_f64();
+    frame.record(&mut state.store.lock().unwrap(), instance, t);
+}
+
+fn handle_connection(mut stream: TcpStream, state: &GatewayState) {
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    loop {
+        if state.stop.load(Ordering::Acquire) {
+            break;
+        }
+        let req = match http::read_request(&mut reader, state.cfg.max_body_bytes) {
+            Ok(Some(r)) => r,
+            Ok(None) => break,
+            Err(e) => {
+                let body = openai::to_wire(&openai::error_body("invalid_request_error", &e.message));
+                let _ = http::Response::json(e.status, body).write_to(&mut stream, false);
+                break;
+            }
+        };
+        let keep_alive = req.keep_alive();
+        if route(&req, &mut stream, state).is_err() {
+            break; // client went away mid-response
+        }
+        if !keep_alive {
+            break;
+        }
+    }
+}
+
+fn route(req: &http::Request, stream: &mut TcpStream, state: &GatewayState) -> std::io::Result<()> {
+    let t0 = Instant::now();
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/completions") => serve_completion(req, stream, state, false, t0),
+        ("POST", "/v1/chat/completions") => serve_completion(req, stream, state, true, t0),
+        ("GET", "/metrics") => {
+            let body = {
+                let store = state.store.lock().unwrap();
+                metrics::render_prometheus(
+                    &state.metrics,
+                    &store,
+                    state.gate.inflight(),
+                    state.started.elapsed().as_secs_f64(),
+                )
+            };
+            finish(req, stream, state, "/metrics", t0, http::Response::prometheus(body))
+        }
+        ("GET", "/healthz") => {
+            let body = format!(
+                "{{\"status\":\"ok\",\"uptime_seconds\":{:.3},\"replicas\":{}}}",
+                state.started.elapsed().as_secs_f64(),
+                state.replicas.len()
+            );
+            finish(req, stream, state, "/healthz", t0, http::Response::json(200, body))
+        }
+        ("GET", "/ready") => {
+            let ready = state.ready_replicas.load(Ordering::Acquire) == state.replicas.len();
+            let status = if ready { 200 } else { 503 };
+            let body = format!(
+                "{{\"ready\":{ready},\"replicas_ready\":{},\"replicas\":{}}}",
+                state.ready_replicas.load(Ordering::Acquire),
+                state.replicas.len()
+            );
+            finish(req, stream, state, "/ready", t0, http::Response::json(status, body))
+        }
+        ("POST", "/admin/scale") => admin_scale(req, stream, state, t0),
+        (_, "/v1/completions" | "/v1/chat/completions" | "/admin/scale" | "/metrics" | "/healthz"
+        | "/ready") => {
+            let body = openai::to_wire(&openai::error_body(
+                "invalid_request_error",
+                &format!("method {} not allowed on {}", req.method, req.path),
+            ));
+            finish(req, stream, state, "other", t0, http::Response::json(405, body))
+        }
+        _ => {
+            let body = openai::to_wire(&openai::error_body(
+                "invalid_request_error",
+                &format!("unknown path {}", req.path),
+            ));
+            finish(req, stream, state, "other", t0, http::Response::json(404, body))
+        }
+    }
+}
+
+/// Write the response and record request metrics.
+fn finish(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &GatewayState,
+    endpoint: &str,
+    t0: Instant,
+    resp: http::Response,
+) -> std::io::Result<()> {
+    state
+        .metrics
+        .observe(endpoint, resp.status, t0.elapsed().as_secs_f64());
+    resp.write_to(stream, req.keep_alive())
+}
+
+fn serve_completion(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &GatewayState,
+    chat: bool,
+    t0: Instant,
+) -> std::io::Result<()> {
+    let endpoint = if chat {
+        "/v1/chat/completions"
+    } else {
+        "/v1/completions"
+    };
+    let bad = |msg: &str| {
+        http::Response::json(
+            400,
+            openai::to_wire(&openai::error_body("invalid_request_error", msg)),
+        )
+    };
+
+    let body = match req.body_str() {
+        Ok(b) => b,
+        Err(e) => return finish(req, stream, state, endpoint, t0, bad(&e.message)),
+    };
+    let json = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => {
+            return finish(req, stream, state, endpoint, t0, bad(&format!("invalid JSON: {e}")))
+        }
+    };
+    let params = match if chat {
+        openai::parse_chat(&json, state.cfg.max_tokens_default)
+    } else {
+        openai::parse_completion(&json, state.cfg.max_tokens_default)
+    } {
+        Ok(p) => p,
+        Err(e) => return finish(req, stream, state, endpoint, t0, bad(&e)),
+    };
+
+    // admission control: rate limiter, then the bounded in-flight gate
+    if let Some(bucket) = &state.bucket {
+        if !bucket.lock().unwrap().try_take() {
+            state.metrics.note_rate_limited();
+            let resp = http::Response::json(
+                429,
+                openai::to_wire(&openai::error_body(
+                    "rate_limit_exceeded",
+                    "request rate over the configured limit; retry later",
+                )),
+            )
+            .with_header("Retry-After", "1");
+            return finish(req, stream, state, endpoint, t0, resp);
+        }
+    }
+    let Some(permit) = AdmissionGate::try_acquire(&state.gate) else {
+        state.metrics.note_queue_full();
+        let resp = http::Response::json(
+            429,
+            openai::to_wire(&openai::error_body(
+                "server_overloaded",
+                &format!(
+                    "admission queue full ({} in flight); retry later",
+                    state.gate.capacity()
+                ),
+            )),
+        )
+        .with_header("Retry-After", "1");
+        return finish(req, stream, state, endpoint, t0, resp);
+    };
+
+    let Some(handle) = state.router.read().unwrap().dispatch() else {
+        drop(permit);
+        let resp = http::Response::json(
+            503,
+            openai::to_wire(&openai::error_body("service_unavailable", "no replicas routable")),
+        );
+        return finish(req, stream, state, endpoint, t0, resp);
+    };
+
+    let (tx, rx) = mpsc::channel::<StreamItem>();
+    let job = Job {
+        prompt: params.prompt.clone(),
+        max_new: params.max_tokens,
+        stream: params.stream,
+        tx,
+        permit,
+        handle: Arc::clone(&handle),
+    };
+    let sent = {
+        let sender = state.replicas[&handle.id].lock().unwrap().clone();
+        sender.send(job)
+    };
+    if let Err(mpsc::SendError(job)) = sent {
+        drop(job.release()); // never reached the engine: undo accounting
+        // deroute the dead replica: least-loaded dispatch would otherwise
+        // keep preferring it (inflight pinned at 0) and black-hole traffic
+        {
+            let mut router = state.router.write().unwrap();
+            let weights: Vec<(u64, f64)> = router
+                .replicas()
+                .iter()
+                .filter(|r| r.id != handle.id)
+                .map(|r| (r.id, r.weight()))
+                .collect();
+            router.set_weights(&weights);
+        }
+        crate::error!(
+            "gateway",
+            "replica {} worker is down; removed from routing",
+            handle.id
+        );
+        let resp = http::Response::json(
+            503,
+            openai::to_wire(&openai::error_body("service_unavailable", "replica worker down")),
+        );
+        return finish(req, stream, state, endpoint, t0, resp);
+    }
+
+    let seq = state.next_req_id.fetch_add(1, Ordering::Relaxed);
+    let req_id = if chat {
+        format!("chatcmpl-{seq}")
+    } else {
+        format!("cmpl-{seq}")
+    };
+
+    // admission + routing accounting is released by the replica worker
+    // when the engine finishes this job, not here: responding early (504,
+    // client gone) must not free capacity the engine is still using
+    if params.stream {
+        stream_response(req, stream, state, &params, &req_id, &rx, chat, endpoint, t0)
+    } else {
+        unary_response(req, stream, state, &params, &req_id, &rx, chat, endpoint, t0)
+    }
+}
+
+/// How long a handler waits for its engine to produce a completion.
+const REQUEST_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Wait for the next engine item, polling in short slices so
+/// [`Gateway::shutdown`] is never blocked for the full request timeout.
+/// `None` means timed out, gateway stopping, or replica worker gone.
+fn next_item(
+    rx: &Receiver<StreamItem>,
+    state: &GatewayState,
+    deadline: Instant,
+) -> Option<StreamItem> {
+    loop {
+        if state.stop.load(Ordering::Acquire) || Instant::now() >= deadline {
+            return None;
+        }
+        match rx.recv_timeout(Duration::from_millis(250)) {
+            Ok(item) => return Some(item),
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => return None,
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn unary_response(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &GatewayState,
+    params: &openai::CompletionParams,
+    req_id: &str,
+    rx: &Receiver<StreamItem>,
+    chat: bool,
+    endpoint: &str,
+    t0: Instant,
+) -> std::io::Result<()> {
+    let deadline = Instant::now() + REQUEST_TIMEOUT;
+    loop {
+        match next_item(rx, state, deadline) {
+            Some(StreamItem::Delta { .. }) => continue,
+            Some(StreamItem::Done(c)) => {
+                state.metrics.add_tokens(c.tokens.len());
+                let body = if chat {
+                    openai::chat_body(
+                        req_id,
+                        &params.model,
+                        &c.text,
+                        c.finish_reason,
+                        c.prompt_tokens,
+                        c.tokens.len(),
+                    )
+                } else {
+                    openai::completion_body(
+                        req_id,
+                        &params.model,
+                        &c.text,
+                        c.finish_reason,
+                        c.prompt_tokens,
+                        c.tokens.len(),
+                    )
+                };
+                let resp = http::Response::json(200, openai::to_wire(&body));
+                return finish(req, stream, state, endpoint, t0, resp);
+            }
+            Some(StreamItem::Error(msg)) => {
+                let resp = http::Response::json(
+                    500,
+                    openai::to_wire(&openai::error_body("internal_error", &msg)),
+                );
+                return finish(req, stream, state, endpoint, t0, resp);
+            }
+            None => {
+                let resp = http::Response::json(
+                    504,
+                    openai::to_wire(&openai::error_body(
+                        "timeout",
+                        "engine did not produce a completion in time",
+                    )),
+                );
+                return finish(req, stream, state, endpoint, t0, resp);
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn stream_response(
+    _req: &http::Request,
+    stream: &mut TcpStream,
+    state: &GatewayState,
+    params: &openai::CompletionParams,
+    req_id: &str,
+    rx: &Receiver<StreamItem>,
+    chat: bool,
+    endpoint: &str,
+    t0: Instant,
+) -> std::io::Result<()> {
+    sse::write_sse_head(stream)?;
+    let mut writer = sse::SseWriter::new(stream);
+    let mut write_failed: Option<std::io::Error> = None;
+
+    if chat {
+        let chunk = openai::chat_role_chunk(req_id, &params.model);
+        if let Err(e) = writer.event(&openai::to_wire(&chunk)) {
+            write_failed = Some(e);
+        }
+    }
+
+    // the wire status is already 200 (SSE head is out); this tracks the
+    // *outcome* for metrics so incidents are visible on the scrape
+    let mut outcome_status = 200u16;
+    let deadline = Instant::now() + REQUEST_TIMEOUT;
+    loop {
+        match next_item(rx, state, deadline) {
+            Some(StreamItem::Delta { text, finish }) => {
+                if write_failed.is_none() {
+                    let chunk = openai::stream_chunk(req_id, &params.model, &text, finish, chat);
+                    if let Err(e) = writer.event(&openai::to_wire(&chunk)) {
+                        write_failed = Some(e);
+                    }
+                }
+            }
+            Some(StreamItem::Done(c)) => {
+                state.metrics.add_tokens(c.tokens.len());
+                break;
+            }
+            Some(StreamItem::Error(msg)) => {
+                outcome_status = 500;
+                if write_failed.is_none() {
+                    let chunk = openai::error_body("internal_error", &msg);
+                    let _ = writer.event(&openai::to_wire(&chunk));
+                }
+                break;
+            }
+            None => {
+                outcome_status = 504; // engine stalled or gateway stopping
+                break;
+            }
+        }
+    }
+
+    // only a cleanly finished stream earns the `[DONE]` success marker; an
+    // errored/stalled stream ends with the bare chunked terminator so
+    // clients can tell truncation from completion
+    let io_result = if write_failed.is_none() && outcome_status == 200 {
+        writer.done()
+    } else {
+        writer.finish()
+    };
+    state.metrics.add_sse_events(writer.events_written);
+    state
+        .metrics
+        .observe(endpoint, outcome_status, t0.elapsed().as_secs_f64());
+    match write_failed {
+        Some(e) => Err(e),
+        None => io_result,
+    }
+}
+
+fn admin_scale(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &GatewayState,
+    t0: Instant,
+) -> std::io::Result<()> {
+    let bad = |msg: &str| {
+        http::Response::json(
+            400,
+            openai::to_wire(&openai::error_body("invalid_request_error", msg)),
+        )
+    };
+    let body = match req.body_str() {
+        Ok(b) => b,
+        Err(e) => return finish(req, stream, state, "/admin/scale", t0, bad(&e.message)),
+    };
+    let json = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => {
+            return finish(req, stream, state, "/admin/scale", t0, bad(&format!("invalid JSON: {e}")))
+        }
+    };
+    let Some(entries) = json.get("replicas").and_then(Json::as_arr) else {
+        return finish(
+            req,
+            stream,
+            state,
+            "/admin/scale",
+            t0,
+            bad("body must be {\"replicas\": [{\"id\": N, \"weight\": W}, ...]}"),
+        );
+    };
+    if entries.is_empty() {
+        return finish(req, stream, state, "/admin/scale", t0, bad("replica set must not be empty"));
+    }
+    let mut weights: Vec<(u64, f64)> = Vec::with_capacity(entries.len());
+    for e in entries {
+        let id = match e.get("id").and_then(Json::as_f64) {
+            Some(x) if x >= 0.0 && x.fract() == 0.0 => x as u64,
+            _ => {
+                return finish(
+                    req,
+                    stream,
+                    state,
+                    "/admin/scale",
+                    t0,
+                    bad("each replica needs a non-negative integer \"id\""),
+                )
+            }
+        };
+        let weight = match e.get("weight").and_then(Json::as_f64) {
+            Some(w) if w > 0.0 => w,
+            _ => return finish(req, stream, state, "/admin/scale", t0, bad("each replica needs a positive \"weight\"")),
+        };
+        if !state.replicas.contains_key(&id) {
+            let known: Vec<u64> = state.replicas.keys().copied().collect();
+            return finish(
+                req,
+                stream,
+                state,
+                "/admin/scale",
+                t0,
+                bad(&format!("unknown replica id {id}; live replicas are {known:?}")),
+            );
+        }
+        if weights.iter().any(|&(seen, _)| seen == id) {
+            return finish(req, stream, state, "/admin/scale", t0, bad(&format!("duplicate replica id {id}")));
+        }
+        weights.push((id, weight));
+    }
+    state.router.write().unwrap().set_weights(&weights);
+    crate::info!("gateway", "ingress update applied: {weights:?}");
+    let applied: Vec<String> = weights
+        .iter()
+        .map(|(id, w)| format!("{{\"id\":{id},\"weight\":{w}}}"))
+        .collect();
+    let body = format!(
+        "{{\"applied\":[{}],\"routable_replicas\":{}}}",
+        applied.join(","),
+        weights.len()
+    );
+    finish(req, stream, state, "/admin/scale", t0, http::Response::json(200, body))
+}

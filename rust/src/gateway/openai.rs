@@ -1,0 +1,335 @@
+//! OpenAI-compatible request parsing and response building on top of
+//! [`crate::util::json`]. Covers the subset the serving engine implements:
+//! `/v1/completions` and `/v1/chat/completions`, streaming or not, with
+//! usage accounting. Chat messages are flattened into a single prompt —
+//! the tiny byte-level LM has no chat template.
+
+use crate::engine::FinishReason;
+use crate::util::json::{num, obj, s, Json};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+pub const DEFAULT_MODEL: &str = "enova-tiny-lm";
+
+/// Normalized parameters shared by both completion endpoints.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompletionParams {
+    pub prompt: String,
+    pub max_tokens: usize,
+    pub stream: bool,
+    pub model: String,
+}
+
+fn opt_usize(j: &Json, key: &str) -> Result<Option<usize>, String> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .filter(|x| *x >= 1.0 && x.fract() == 0.0)
+            .map(|x| Some(x as usize))
+            .ok_or_else(|| format!("\"{key}\" must be a positive integer")),
+    }
+}
+
+fn common(j: &Json, prompt: String, default_max: usize) -> Result<CompletionParams, String> {
+    Ok(CompletionParams {
+        prompt,
+        max_tokens: opt_usize(j, "max_tokens")?.unwrap_or(default_max),
+        stream: match j.get("stream") {
+            None | Some(Json::Null) => false,
+            Some(v) => v.as_bool().ok_or("\"stream\" must be a boolean")?,
+        },
+        model: j
+            .get("model")
+            .and_then(Json::as_str)
+            .unwrap_or(DEFAULT_MODEL)
+            .to_string(),
+    })
+}
+
+/// `POST /v1/completions` body. `prompt` may be a string or a one-element
+/// array of strings (the OpenAI SDK sends both).
+pub fn parse_completion(j: &Json, default_max: usize) -> Result<CompletionParams, String> {
+    let prompt = match j.get("prompt") {
+        Some(Json::Str(p)) => p.clone(),
+        Some(Json::Arr(items)) => match items.first() {
+            Some(Json::Str(p)) if items.len() == 1 => p.clone(),
+            _ => return Err("\"prompt\" array must hold exactly one string".into()),
+        },
+        Some(_) => return Err("\"prompt\" must be a string".into()),
+        None => return Err("missing required field \"prompt\"".into()),
+    };
+    common(j, prompt, default_max)
+}
+
+/// `POST /v1/chat/completions` body: messages flattened role-tagged into
+/// one prompt, ending with the assistant cue.
+pub fn parse_chat(j: &Json, default_max: usize) -> Result<CompletionParams, String> {
+    let messages = j
+        .get("messages")
+        .and_then(Json::as_arr)
+        .ok_or("missing required field \"messages\"")?;
+    if messages.is_empty() {
+        return Err("\"messages\" must not be empty".into());
+    }
+    let mut prompt = String::new();
+    for m in messages {
+        let role = m
+            .get("role")
+            .and_then(Json::as_str)
+            .ok_or("each message needs a string \"role\"")?;
+        let content = m
+            .get("content")
+            .and_then(Json::as_str)
+            .ok_or("each message needs a string \"content\"")?;
+        prompt.push_str(role);
+        prompt.push_str(": ");
+        prompt.push_str(content);
+        prompt.push('\n');
+    }
+    prompt.push_str("assistant:");
+    common(j, prompt, default_max)
+}
+
+fn created() -> f64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0)
+}
+
+fn usage(prompt_tokens: usize, completion_tokens: usize) -> Json {
+    obj([
+        ("prompt_tokens", num(prompt_tokens as f64)),
+        ("completion_tokens", num(completion_tokens as f64)),
+        ("total_tokens", num((prompt_tokens + completion_tokens) as f64)),
+    ])
+}
+
+/// Non-streaming `/v1/completions` response.
+pub fn completion_body(
+    req_id: &str,
+    model: &str,
+    text: &str,
+    finish: FinishReason,
+    prompt_tokens: usize,
+    completion_tokens: usize,
+) -> Json {
+    obj([
+        ("id", s(req_id)),
+        ("object", s("text_completion")),
+        ("created", num(created())),
+        ("model", s(model)),
+        (
+            "choices",
+            Json::Arr(vec![obj([
+                ("index", num(0.0)),
+                ("text", s(text)),
+                ("finish_reason", s(finish.as_str())),
+                ("logprobs", Json::Null),
+            ])]),
+        ),
+        ("usage", usage(prompt_tokens, completion_tokens)),
+    ])
+}
+
+/// Non-streaming `/v1/chat/completions` response.
+pub fn chat_body(
+    req_id: &str,
+    model: &str,
+    text: &str,
+    finish: FinishReason,
+    prompt_tokens: usize,
+    completion_tokens: usize,
+) -> Json {
+    obj([
+        ("id", s(req_id)),
+        ("object", s("chat.completion")),
+        ("created", num(created())),
+        ("model", s(model)),
+        (
+            "choices",
+            Json::Arr(vec![obj([
+                ("index", num(0.0)),
+                (
+                    "message",
+                    obj([("role", s("assistant")), ("content", s(text))]),
+                ),
+                ("finish_reason", s(finish.as_str())),
+            ])]),
+        ),
+        ("usage", usage(prompt_tokens, completion_tokens)),
+    ])
+}
+
+/// One streamed token chunk for either endpoint. `finish` is only set on
+/// the last content-carrying chunk.
+pub fn stream_chunk(
+    req_id: &str,
+    model: &str,
+    delta_text: &str,
+    finish: Option<FinishReason>,
+    chat: bool,
+) -> Json {
+    let finish_json = match finish {
+        Some(f) => s(f.as_str()),
+        None => Json::Null,
+    };
+    let choice = if chat {
+        obj([
+            ("index", num(0.0)),
+            ("delta", obj([("content", s(delta_text))])),
+            ("finish_reason", finish_json),
+        ])
+    } else {
+        obj([
+            ("index", num(0.0)),
+            ("text", s(delta_text)),
+            ("finish_reason", finish_json),
+        ])
+    };
+    obj([
+        ("id", s(req_id)),
+        (
+            "object",
+            s(if chat {
+                "chat.completion.chunk"
+            } else {
+                "text_completion"
+            }),
+        ),
+        ("created", num(created())),
+        ("model", s(model)),
+        ("choices", Json::Arr(vec![choice])),
+    ])
+}
+
+/// First chunk of a chat stream: the assistant role announcement.
+pub fn chat_role_chunk(req_id: &str, model: &str) -> Json {
+    obj([
+        ("id", s(req_id)),
+        ("object", s("chat.completion.chunk")),
+        ("created", num(created())),
+        ("model", s(model)),
+        (
+            "choices",
+            Json::Arr(vec![obj([
+                ("index", num(0.0)),
+                ("delta", obj([("role", s("assistant"))])),
+                ("finish_reason", Json::Null),
+            ])]),
+        ),
+    ])
+}
+
+/// OpenAI-shaped error envelope.
+pub fn error_body(kind: &str, message: &str) -> Json {
+    obj([(
+        "error",
+        obj([
+            ("message", s(message)),
+            ("type", s(kind)),
+            ("param", Json::Null),
+            ("code", Json::Null),
+        ]),
+    )])
+}
+
+/// Compact (single-line) rendering for SSE payloads and response bodies.
+pub fn to_wire(j: &Json) -> String {
+    j.to_string_compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_completion_request() {
+        let j = Json::parse(r#"{"prompt": "hi", "max_tokens": 4, "stream": true}"#).unwrap();
+        let p = parse_completion(&j, 64).unwrap();
+        assert_eq!(p.prompt, "hi");
+        assert_eq!(p.max_tokens, 4);
+        assert!(p.stream);
+        assert_eq!(p.model, DEFAULT_MODEL);
+
+        let arr = Json::parse(r#"{"prompt": ["only one"]}"#).unwrap();
+        assert_eq!(parse_completion(&arr, 64).unwrap().prompt, "only one");
+    }
+
+    #[test]
+    fn rejects_bad_completion_requests() {
+        for body in [
+            r#"{}"#,
+            r#"{"prompt": 5}"#,
+            r#"{"prompt": ["a", "b"]}"#,
+            r#"{"prompt": "x", "max_tokens": -1}"#,
+            r#"{"prompt": "x", "max_tokens": 2.9}"#,
+            r#"{"prompt": "x", "stream": "yes"}"#,
+        ] {
+            let j = Json::parse(body).unwrap();
+            assert!(parse_completion(&j, 64).is_err(), "{body}");
+        }
+    }
+
+    #[test]
+    fn chat_flattens_messages() {
+        let j = Json::parse(
+            r#"{"messages": [{"role": "system", "content": "be brief"},
+                             {"role": "user", "content": "hello"}]}"#,
+        )
+        .unwrap();
+        let p = parse_chat(&j, 32).unwrap();
+        assert_eq!(p.prompt, "system: be brief\nuser: hello\nassistant:");
+        assert_eq!(p.max_tokens, 32);
+
+        let bad = Json::parse(r#"{"messages": []}"#).unwrap();
+        assert!(parse_chat(&bad, 32).is_err());
+        let bad2 = Json::parse(r#"{"messages": [{"role": "user"}]}"#).unwrap();
+        assert!(parse_chat(&bad2, 32).is_err());
+    }
+
+    #[test]
+    fn bodies_roundtrip_as_json() {
+        let b = completion_body("cmpl-1", "m", "out", FinishReason::MaxTokens, 3, 7);
+        let parsed = Json::parse(&to_wire(&b)).unwrap();
+        assert_eq!(
+            parsed.at(&["choices"]).unwrap().as_arr().unwrap()[0]
+                .get("text")
+                .unwrap()
+                .as_str(),
+            Some("out")
+        );
+        assert_eq!(
+            parsed.at(&["usage", "total_tokens"]).unwrap().as_usize(),
+            Some(10)
+        );
+
+        let c = chat_body("chatcmpl-1", "m", "hi", FinishReason::Eos, 1, 2);
+        let parsed = Json::parse(&to_wire(&c)).unwrap();
+        assert_eq!(
+            parsed.at(&["choices"]).unwrap().as_arr().unwrap()[0]
+                .at(&["message", "content"])
+                .unwrap()
+                .as_str(),
+            Some("hi")
+        );
+    }
+
+    #[test]
+    fn wire_format_is_single_line_and_preserves_strings() {
+        let j = obj([("a", s("x y\nz \" q")), ("b", Json::Arr(vec![num(1.0)]))]);
+        let wire = to_wire(&j);
+        assert!(!wire.contains('\n'));
+        assert_eq!(Json::parse(&wire).unwrap(), j);
+    }
+
+    #[test]
+    fn stream_chunk_shapes() {
+        let chat = stream_chunk("id", "m", "tok", None, true);
+        let t = to_wire(&chat);
+        assert!(t.contains("chat.completion.chunk"));
+        assert!(t.contains("\"content\":\"tok\""));
+        let fin = stream_chunk("id", "m", "", Some(FinishReason::MaxTokens), false);
+        assert!(to_wire(&fin).contains("\"finish_reason\":\"length\""));
+    }
+}

@@ -1,0 +1,141 @@
+//! Server-Sent Events over HTTP/1.1 chunked transfer encoding — the
+//! OpenAI streaming wire format (`Content-Type: text/event-stream`, one
+//! `data: <json>\n\n` event per token chunk, terminated by `data: [DONE]`).
+//! Each SSE event is flushed as its own HTTP chunk so clients see tokens
+//! the moment the engine samples them.
+
+use std::io::Write;
+
+/// Writes the response head that switches the connection into SSE mode.
+/// After this, the body must be produced exclusively through
+/// [`ChunkedWriter`] / [`SseWriter`].
+pub fn write_sse_head<W: Write>(w: &mut W) -> std::io::Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\n\
+          Content-Type: text/event-stream\r\n\
+          Cache-Control: no-cache\r\n\
+          Transfer-Encoding: chunked\r\n\
+          Connection: keep-alive\r\n\
+          \r\n",
+    )?;
+    w.flush()
+}
+
+/// RFC 9112 §7.1 chunked body framing: `<hex len>\r\n<payload>\r\n`,
+/// terminated by a zero-length chunk.
+pub struct ChunkedWriter<W: Write> {
+    w: W,
+    finished: bool,
+}
+
+impl<W: Write> ChunkedWriter<W> {
+    pub fn new(w: W) -> ChunkedWriter<W> {
+        ChunkedWriter { w, finished: false }
+    }
+
+    pub fn write_chunk(&mut self, payload: &[u8]) -> std::io::Result<()> {
+        if payload.is_empty() || self.finished {
+            return Ok(()); // empty chunk would terminate the body early
+        }
+        write!(self.w, "{:x}\r\n", payload.len())?;
+        self.w.write_all(payload)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+
+    /// Terminating zero chunk; the connection can keep serving afterwards.
+    pub fn finish(&mut self) -> std::io::Result<()> {
+        if self.finished {
+            return Ok(());
+        }
+        self.finished = true;
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+pub struct SseWriter<W: Write> {
+    chunks: ChunkedWriter<W>,
+    pub events_written: usize,
+}
+
+impl<W: Write> SseWriter<W> {
+    pub fn new(w: W) -> SseWriter<W> {
+        SseWriter {
+            chunks: ChunkedWriter::new(w),
+            events_written: 0,
+        }
+    }
+
+    /// One `data:` event. `data` must not contain newlines (the gateway
+    /// only ever sends single-line JSON payloads).
+    pub fn event(&mut self, data: &str) -> std::io::Result<()> {
+        debug_assert!(!data.contains('\n'), "multi-line SSE payload");
+        let framed = format!("data: {data}\n\n");
+        self.events_written += 1;
+        self.chunks.write_chunk(framed.as_bytes())
+    }
+
+    /// The OpenAI stream terminator followed by the chunked-body
+    /// terminator.
+    pub fn done(&mut self) -> std::io::Result<()> {
+        self.event("[DONE]")?;
+        self.chunks.finish()
+    }
+
+    /// Abort the body without the `[DONE]` marker (error mid-stream).
+    pub fn finish(&mut self) -> std::io::Result<()> {
+        self.chunks.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_framing_is_rfc9112() {
+        let mut buf = Vec::new();
+        let mut w = ChunkedWriter::new(&mut buf);
+        w.write_chunk(b"hello").unwrap();
+        w.write_chunk(b"0123456789abcdef").unwrap(); // 16 bytes -> "10"
+        w.finish().unwrap();
+        assert_eq!(
+            String::from_utf8(buf).unwrap(),
+            "5\r\nhello\r\n10\r\n0123456789abcdef\r\n0\r\n\r\n"
+        );
+    }
+
+    #[test]
+    fn finish_is_idempotent_and_blocks_further_chunks() {
+        let mut buf = Vec::new();
+        let mut w = ChunkedWriter::new(&mut buf);
+        w.finish().unwrap();
+        w.finish().unwrap();
+        w.write_chunk(b"late").unwrap();
+        assert_eq!(buf, b"0\r\n\r\n");
+    }
+
+    #[test]
+    fn sse_events_and_done_marker() {
+        let mut buf = Vec::new();
+        let mut w = SseWriter::new(&mut buf);
+        w.event(r#"{"token":"a"}"#).unwrap();
+        w.done().unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("data: {\"token\":\"a\"}\n\n"));
+        assert!(text.contains("data: [DONE]\n\n"));
+        assert!(text.ends_with("0\r\n\r\n"));
+        assert_eq!(w.events_written, 2);
+    }
+
+    #[test]
+    fn sse_head_declares_event_stream() {
+        let mut buf = Vec::new();
+        write_sse_head(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Type: text/event-stream\r\n"));
+        assert!(text.contains("Transfer-Encoding: chunked\r\n"));
+    }
+}

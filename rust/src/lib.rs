@@ -8,6 +8,9 @@
 //! * [`engine`] is an in-tree continuous-batching inference engine over
 //!   those executables; [`router`] load-balances replicas with the weighted
 //!   routing of §IV-A-4.
+//! * [`gateway`] is the network-facing serving surface: an OpenAI-compatible
+//!   HTTP server with SSE streaming, admission control and a Prometheus
+//!   `/metrics` endpoint, dispatching through the router to engine replicas.
 //! * [`config`] is the paper's service configuration module (OLS + t-test,
 //!   KDE, EVT, task clustering, linear programming).
 //! * [`detect`] is the performance detection module (semi-supervised VAE +
@@ -53,6 +56,7 @@ pub mod config;
 pub mod deployer;
 pub mod detect;
 pub mod engine;
+pub mod gateway;
 pub mod metrics;
 pub mod router;
 pub mod runtime;

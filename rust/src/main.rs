@@ -11,6 +11,9 @@ USAGE: enova <COMMAND> [OPTIONS]
 
 COMMANDS:
   serve       serve prompts on the compiled tiny LM (options: --prompts N --max-tokens N)
+  serve-http  OpenAI-compatible HTTP gateway (--port 8080 --replicas 2 --engine auto|lm|sim
+              --max-num-seqs N --max-tokens N --max-pending N --rate RPS --burst N
+              --http-workers N --sim-delay-ms N --host ADDR)
   recommend   run the service configuration module for --model <name> --gpu <name>
   detect      calibrate + run the performance detector on the trace dataset
   simulate    simulate a replica (--model --gpu --rps --seconds --max-num-seqs)
@@ -22,6 +25,7 @@ fn main() -> anyhow::Result<()> {
     let cmd = args.subcommand();
     match cmd.as_str() {
         "serve" => serve(&args),
+        "serve-http" => serve_http(&args),
         "recommend" => recommend(&args),
         "detect" => detect(&args),
         "simulate" => simulate(&args),
@@ -73,6 +77,85 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         done.len(),
         t0.elapsed().as_secs_f64()
     );
+    Ok(())
+}
+
+/// `enova serve-http`: the OpenAI-compatible serving gateway. `--engine
+/// auto` (default) uses the compiled LM when artifacts exist and falls
+/// back to the deterministic sim engine otherwise.
+fn serve_http(args: &Args) -> anyhow::Result<()> {
+    use enova::engine::sim::{SimEngine, SimEngineConfig};
+    use enova::engine::{Engine, EngineConfig, StreamEngine};
+    use enova::gateway::{EngineFactory, Gateway, GatewayConfig};
+    use enova::runtime::lm::{ExecMode, LmRuntime};
+    use std::time::Duration;
+
+    let replicas = args.get_usize("replicas", 2).max(1);
+    let max_num_seqs = args.get_usize("max-num-seqs", 8);
+    let max_tokens = args.get_usize("max-tokens", 64);
+    let temperature = args.get_f64("temperature", 0.7);
+    let sim_delay = Duration::from_millis(args.get_usize("sim-delay-ms", 0) as u64);
+
+    let engine_kind = match args.get_or("engine", "auto") {
+        "auto" => {
+            if enova::runtime::Manifest::artifacts_exist() {
+                "lm"
+            } else {
+                eprintln!("artifacts not found; serving with the deterministic sim engine");
+                "sim"
+            }
+        }
+        "lm" => "lm",
+        "sim" => "sim",
+        other => anyhow::bail!("--engine must be auto, lm or sim (got {other:?})"),
+    };
+
+    let use_lm = engine_kind == "lm";
+    let factories: Vec<EngineFactory> = (0..replicas as u64)
+        .map(|id| -> EngineFactory {
+            if use_lm {
+                Box::new(move || {
+                    let m = enova::runtime::Manifest::load(&enova::runtime::Manifest::default_dir())?;
+                    let rt = enova::runtime::PjRt::cpu()?;
+                    let lm = LmRuntime::load(rt, &m, ExecMode::Chained)?;
+                    let cfg = EngineConfig {
+                        max_num_seqs,
+                        max_tokens,
+                        temperature,
+                    };
+                    Ok(Box::new(Engine::new(lm, cfg, 100 + id)) as Box<dyn StreamEngine>)
+                })
+            } else {
+                Box::new(move || {
+                    Ok(Box::new(SimEngine::new(SimEngineConfig {
+                        max_num_seqs,
+                        max_tokens,
+                        step_delay: sim_delay,
+                    })) as Box<dyn StreamEngine>)
+                })
+            }
+        })
+        .collect();
+
+    let port = args.get_usize("port", 8080);
+    anyhow::ensure!(port <= u16::MAX as usize, "--port must be 0..=65535 (got {port})");
+    let cfg = GatewayConfig {
+        host: args.get_or("host", "127.0.0.1").to_string(),
+        port: port as u16,
+        max_tokens_default: max_tokens,
+        max_pending: args.get_usize("max-pending", 256),
+        rate_limit: args.get_f64("rate", 0.0),
+        rate_burst: args.get_usize("burst", 64),
+        http_workers: args.get_usize("http-workers", 64),
+        ..GatewayConfig::default()
+    };
+    let gw = Gateway::start(cfg, factories)?;
+    println!(
+        "enova gateway: {replicas}x {engine_kind} replica(s) on http://{}",
+        gw.addr
+    );
+    println!("  try: curl -s http://{}/healthz", gw.addr);
+    gw.serve_forever();
     Ok(())
 }
 

@@ -114,6 +114,37 @@ mod tests {
     }
 
     #[test]
+    fn recent_frames_tolerates_misaligned_series() {
+        let mut store = MetricStore::new();
+        for i in 0..3 {
+            Frame {
+                n_finished: i as f64,
+                n_running: 2.0 * i as f64,
+                ..Default::default()
+            }
+            .record(&mut store, "r", i as f64);
+        }
+        // one series runs ahead by two points (partial frame write): row
+        // count must clamp to the shortest series, aligned from the tail
+        store.push(N_FINISHED, "r", 3.0, 100.0);
+        store.push(N_FINISHED, "r", 4.0, 101.0);
+        let frames = recent_frames(&store, "r", 5);
+        assert_eq!(frames.len(), 3, "bounded by the shortest series");
+        assert_eq!(frames[2].n_finished, 101.0, "tail-aligned");
+        assert_eq!(frames[2].n_running, 4.0);
+        assert_eq!(frames[0].n_finished, 2.0);
+
+        // an instance missing one column entirely yields no rows rather
+        // than panicking or fabricating values
+        let mut partial = MetricStore::new();
+        for m in COLUMNS.iter().take(7) {
+            partial.push(m, "q", 0.0, 1.0);
+        }
+        assert!(recent_frames(&partial, "q", 4).is_empty());
+        assert!(recent_frames(&partial, "absent", 4).is_empty());
+    }
+
+    #[test]
     fn array_roundtrip() {
         let f = Frame {
             n_finished: 1.0,

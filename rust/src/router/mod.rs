@@ -4,25 +4,60 @@
 //! weight-normalized in-flight load (smooth weighted least-loaded), which
 //! converges to weight-proportional splits under saturation while staying
 //! responsive to transient imbalance.
+//!
+//! Reconfiguration ([`WeightedRouter::set_weights`], the autoscaler's
+//! ingress-update path) preserves the live [`ReplicaHandle`] for every
+//! replica id that survives: in-flight requests hold `Arc`s into the
+//! router, so counters must not reset mid-flight.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 #[derive(Debug)]
 pub struct ReplicaHandle {
     pub id: u64,
-    pub weight: f64,
+    /// routing weight as f64 bits — atomically updatable while requests
+    /// are in flight
+    weight_bits: AtomicU64,
     inflight: AtomicU64,
     dispatched: AtomicU64,
 }
 
 impl ReplicaHandle {
+    fn new(id: u64, weight: f64) -> ReplicaHandle {
+        ReplicaHandle {
+            id,
+            weight_bits: AtomicU64::new(weight.max(1e-9).to_bits()),
+            inflight: AtomicU64::new(0),
+            dispatched: AtomicU64::new(0),
+        }
+    }
+
+    pub fn weight(&self) -> f64 {
+        f64::from_bits(self.weight_bits.load(Ordering::Relaxed))
+    }
+
+    fn set_weight(&self, weight: f64) {
+        self.weight_bits
+            .store(weight.max(1e-9).to_bits(), Ordering::Relaxed);
+    }
+
     pub fn inflight(&self) -> u64 {
         self.inflight.load(Ordering::Relaxed)
     }
 
     pub fn dispatched(&self) -> u64 {
         self.dispatched.load(Ordering::Relaxed)
+    }
+
+    /// Mark one in-flight request finished. Saturates at zero: a stale
+    /// handle (replica removed and its id later reused) must never wrap a
+    /// fresh counter to `u64::MAX`.
+    pub fn complete(&self) {
+        let _ = self
+            .inflight
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
     }
 }
 
@@ -36,14 +71,7 @@ impl WeightedRouter {
         WeightedRouter {
             replicas: weights
                 .iter()
-                .map(|&(id, weight)| {
-                    Arc::new(ReplicaHandle {
-                        id,
-                        weight: weight.max(1e-9),
-                        inflight: AtomicU64::new(0),
-                        dispatched: AtomicU64::new(0),
-                    })
-                })
+                .map(|&(id, weight)| Arc::new(ReplicaHandle::new(id, weight)))
                 .collect(),
         }
     }
@@ -60,8 +88,8 @@ impl WeightedRouter {
     /// [`WeightedRouter::complete`] when the request finishes.
     pub fn dispatch(&self) -> Option<Arc<ReplicaHandle>> {
         let chosen = self.replicas.iter().min_by(|a, b| {
-            let la = (a.inflight() as f64 + 1.0) / a.weight;
-            let lb = (b.inflight() as f64 + 1.0) / b.weight;
+            let la = (a.inflight() as f64 + 1.0) / a.weight();
+            let lb = (b.inflight() as f64 + 1.0) / b.weight();
             la.total_cmp(&lb)
         })?;
         chosen.inflight.fetch_add(1, Ordering::Relaxed);
@@ -70,12 +98,31 @@ impl WeightedRouter {
     }
 
     pub fn complete(&self, handle: &ReplicaHandle) {
-        handle.inflight.fetch_sub(1, Ordering::Relaxed);
+        handle.complete();
     }
 
-    /// Replace weights after a reconfiguration (ingress update).
+    /// Replace the replica set after a reconfiguration (ingress update).
+    /// Ids that survive keep their handle — and therefore their `inflight`
+    /// and `dispatched` counters — so completions of requests dispatched
+    /// before the update still land on the right counter. Duplicate ids in
+    /// the new set are ignored after their first occurrence (two handles
+    /// with one id would split the load accounting).
     pub fn set_weights(&mut self, weights: &[(u64, f64)]) {
-        *self = WeightedRouter::new(weights);
+        let mut old: BTreeMap<u64, Arc<ReplicaHandle>> =
+            self.replicas.drain(..).map(|r| (r.id, r)).collect();
+        let mut new: Vec<Arc<ReplicaHandle>> = Vec::with_capacity(weights.len());
+        for &(id, weight) in weights {
+            if new.iter().any(|r| r.id == id) {
+                continue;
+            }
+            new.push(if let Some(existing) = old.remove(&id) {
+                existing.set_weight(weight);
+                existing
+            } else {
+                Arc::new(ReplicaHandle::new(id, weight))
+            });
+        }
+        self.replicas = new;
     }
 
     pub fn replicas(&self) -> &[Arc<ReplicaHandle>] {
@@ -117,5 +164,57 @@ mod tests {
         let router = WeightedRouter::new(&[]);
         assert!(router.dispatch().is_none());
         assert!(router.is_empty());
+    }
+
+    #[test]
+    fn set_weights_preserves_surviving_state() {
+        let mut router = WeightedRouter::new(&[(0, 1.0), (1, 1.0)]);
+        let h0 = router.dispatch().unwrap();
+        let h1 = router.dispatch().unwrap();
+        assert_ne!(h0.id, h1.id);
+
+        // reconfigure mid-flight: replica 1 is removed, replica 2 is new,
+        // replica 0 survives with a new weight
+        router.set_weights(&[(0, 2.0), (2, 1.0)]);
+        let r0 = router
+            .replicas()
+            .iter()
+            .find(|r| r.id == 0)
+            .unwrap()
+            .clone();
+        assert_eq!(r0.inflight(), 1, "surviving replica kept inflight");
+        assert_eq!(r0.dispatched(), 1);
+        assert!((r0.weight() - 2.0).abs() < 1e-12);
+
+        // completing the pre-reconfig request lands on the same counter
+        router.complete(if h0.id == 0 { &h0 } else { &h1 });
+        assert_eq!(r0.inflight(), 0);
+
+        // completing the removed replica's request must not touch live ones
+        router.complete(if h0.id == 0 { &h1 } else { &h0 });
+        let r2 = router.replicas().iter().find(|r| r.id == 2).unwrap();
+        assert_eq!(r2.inflight(), 0);
+    }
+
+    #[test]
+    fn set_weights_ignores_duplicate_ids() {
+        let mut router = WeightedRouter::new(&[(0, 1.0)]);
+        let h = router.dispatch().unwrap();
+        router.set_weights(&[(0, 1.0), (0, 3.0), (1, 1.0)]);
+        assert_eq!(router.len(), 2, "duplicate id collapsed");
+        let r0 = router.replicas().iter().find(|r| r.id == 0).unwrap();
+        assert_eq!(r0.inflight(), 1, "first occurrence kept the live handle");
+        router.complete(&h);
+        assert_eq!(r0.inflight(), 0);
+    }
+
+    #[test]
+    fn complete_saturates_at_zero() {
+        let router = WeightedRouter::new(&[(0, 1.0)]);
+        let h = router.dispatch().unwrap();
+        router.complete(&h);
+        router.complete(&h); // double-complete: no underflow
+        assert_eq!(router.replicas()[0].inflight(), 0);
+        assert!(router.dispatch().is_some());
     }
 }

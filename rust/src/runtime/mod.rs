@@ -107,6 +107,12 @@ impl Manifest {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
+    /// Whether the AOT artifacts are present (callers use this to fall
+    /// back to artifact-free code paths, e.g. the gateway's sim engine).
+    pub fn artifacts_exist() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
     pub fn load(dir: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
@@ -251,7 +257,7 @@ mod tests {
     use super::*;
 
     fn have_artifacts() -> bool {
-        Manifest::default_dir().join("manifest.json").exists()
+        Manifest::artifacts_exist()
     }
 
     #[test]

@@ -4,24 +4,27 @@
 //! Series are keyed by (metric, instance). Points are (t_seconds, value)
 //! appended in time order; queries are windowed slices and per-minute
 //! downsamples. A bounded retention cap keeps long simulations O(window).
+//!
+//! Points live in a `VecDeque`: retention trimming pops from the front in
+//! O(1) instead of memmoving the whole buffer on every push once a series
+//! reaches the cap (the old `Vec::drain(..1)` was O(n) per point).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 
 #[derive(Debug, Default, Clone)]
 pub struct Series {
-    pub points: Vec<(f64, f64)>,
+    pub points: VecDeque<(f64, f64)>,
 }
 
 impl Series {
     fn push(&mut self, t: f64, v: f64, retention: usize) {
         debug_assert!(
-            self.points.last().map(|&(pt, _)| t >= pt).unwrap_or(true),
+            self.points.back().map(|&(pt, _)| t >= pt).unwrap_or(true),
             "out-of-order append"
         );
-        self.points.push((t, v));
-        if self.points.len() > retention {
-            let excess = self.points.len() - retention;
-            self.points.drain(..excess);
+        self.points.push_back((t, v));
+        while self.points.len() > retention {
+            self.points.pop_front();
         }
     }
 
@@ -29,16 +32,16 @@ impl Series {
     pub fn window(&self, t0: f64, t1: f64) -> Vec<f64> {
         let start = self.points.partition_point(|&(t, _)| t < t0);
         let end = self.points.partition_point(|&(t, _)| t < t1);
-        self.points[start..end].iter().map(|&(_, v)| v).collect()
+        self.points.range(start..end).map(|&(_, v)| v).collect()
     }
 
     pub fn last(&self) -> Option<f64> {
-        self.points.last().map(|&(_, v)| v)
+        self.points.back().map(|&(_, v)| v)
     }
 
     pub fn last_n(&self, n: usize) -> Vec<f64> {
         let start = self.points.len().saturating_sub(n);
-        self.points[start..].iter().map(|&(_, v)| v).collect()
+        self.points.range(start..).map(|&(_, v)| v).collect()
     }
 
     /// Mean per fixed-size bucket (e.g. 60 s) over [t0, t1).
@@ -47,7 +50,7 @@ impl Series {
         let mut sums = vec![0.0; n];
         let mut counts = vec![0usize; n];
         let start = self.points.partition_point(|&(t, _)| t < t0);
-        for &(t, v) in &self.points[start..] {
+        for &(t, v) in self.points.range(start..) {
             if t >= t1 {
                 break;
             }
@@ -162,6 +165,21 @@ mod tests {
         assert_eq!(store.series("m", "i").unwrap().points.len(), 50);
         // oldest points dropped, newest kept
         assert_eq!(store.series("m", "i").unwrap().points[0].0, 150.0);
+    }
+
+    #[test]
+    fn window_after_retention_wraparound() {
+        // the deque's ring buffer has wrapped many times by the end; binary
+        // search + range must still see a logically contiguous series
+        let mut store = MetricStore::new();
+        store.retention = 64;
+        for i in 0..1000 {
+            store.push("m", "i", i as f64, i as f64);
+        }
+        let w = store.window("m", "i", 950.0, 960.0);
+        assert_eq!(w.len(), 10);
+        assert_eq!(w[0], 950.0);
+        assert_eq!(store.series("m", "i").unwrap().last(), Some(999.0));
     }
 
     #[test]

@@ -86,6 +86,14 @@ impl Json {
         out
     }
 
+    /// Single-line rendering with no insignificant whitespace — the wire
+    /// format for SSE payloads and HTTP response bodies.
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, false);
+        out
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         let pad = |out: &mut String, n: usize| {
             if pretty {
@@ -420,5 +428,15 @@ mod tests {
     fn integer_formatting() {
         assert_eq!(Json::Num(8.0).to_string_pretty(), "8");
         assert_eq!(Json::Num(0.5).to_string_pretty(), "0.5");
+    }
+
+    #[test]
+    fn compact_is_single_line_and_roundtrips() {
+        let src = r#"{"a": [1, {"b": "x y\nz"}], "c": true}"#;
+        let j = Json::parse(src).unwrap();
+        let wire = j.to_string_compact();
+        assert!(!wire.contains('\n'), "in-string newlines are escaped");
+        assert_eq!(wire, r#"{"a":[1,{"b":"x y\nz"}],"c":true}"#);
+        assert_eq!(Json::parse(&wire).unwrap(), j);
     }
 }

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the gate every PR must keep green (ROADMAP.md).
+# Usage: scripts/tier1.sh [--no-fmt]
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+if [[ "${1:-}" != "--no-fmt" ]]; then
+    if cargo fmt --version >/dev/null 2>&1; then
+        echo "==> cargo fmt --check"
+        cargo fmt --check
+    else
+        echo "==> cargo fmt unavailable; skipping format check"
+    fi
+fi
+
+echo "tier-1 OK"
