@@ -1,45 +1,44 @@
 //! End-to-end gateway demo: boot the OpenAI-compatible HTTP gateway on an
 //! ephemeral port, drive it closed-loop over real sockets with the
-//! built-in load generator (unary + streaming + chat traffic), apply an
-//! ingress update through /admin/scale, and scrape /metrics. Runs against
-//! the compiled tiny LM when artifacts exist, the deterministic sim
-//! engine otherwise — so this demo works in any environment.
+//! built-in load generator (unary + streaming + chat traffic on keep-alive
+//! connections), hot-add a replica at runtime, apply an ingress update
+//! through /admin/scale, retire the replica with the drain protocol, and
+//! scrape /metrics. Runs against the compiled tiny LM when artifacts
+//! exist, the deterministic sim engine otherwise — so this demo works in
+//! any environment.
 
 use enova::engine::sim::{SimEngine, SimEngineConfig};
 use enova::engine::{Engine, EngineConfig, StreamEngine};
-use enova::gateway::{loadgen, metrics::parse_exposition, EngineFactory, Gateway, GatewayConfig};
+use enova::gateway::{loadgen, metrics::parse_exposition, EngineSpawner, Gateway, GatewayConfig};
 use enova::runtime::lm::{ExecMode, LmRuntime};
 use enova::runtime::{Manifest, PjRt};
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
-    let replicas = 2u64;
+    let replicas = 2usize;
     let use_lm = Manifest::artifacts_exist();
-    let factories: Vec<EngineFactory> = (0..replicas)
-        .map(|id| -> EngineFactory {
-            if use_lm {
-                Box::new(move || {
-                    let m = Manifest::load(&Manifest::default_dir())?;
-                    let lm = LmRuntime::load(PjRt::cpu()?, &m, ExecMode::Chained)?;
-                    let cfg = EngineConfig {
-                        max_num_seqs: 8,
-                        max_tokens: 16,
-                        temperature: 0.7,
-                    };
-                    Ok(Box::new(Engine::new(lm, cfg, 100 + id)) as Box<dyn StreamEngine>)
-                })
-            } else {
-                Box::new(|| {
-                    Ok(Box::new(SimEngine::new(SimEngineConfig {
-                        max_num_seqs: 8,
-                        max_tokens: 16,
-                        ..Default::default()
-                    })) as Box<dyn StreamEngine>)
-                })
-            }
+    let spawner: EngineSpawner = if use_lm {
+        Arc::new(|id| {
+            let m = Manifest::load(&Manifest::default_dir())?;
+            let lm = LmRuntime::load(PjRt::cpu()?, &m, ExecMode::Chained)?;
+            let cfg = EngineConfig {
+                max_num_seqs: 8,
+                max_tokens: 16,
+                temperature: 0.7,
+            };
+            Ok(Box::new(Engine::new(lm, cfg, 100 + id)) as Box<dyn StreamEngine>)
         })
-        .collect();
+    } else {
+        Arc::new(|_id| {
+            Ok(Box::new(SimEngine::new(SimEngineConfig {
+                max_num_seqs: 8,
+                max_tokens: 16,
+                ..Default::default()
+            })) as Box<dyn StreamEngine>)
+        })
+    };
 
-    let gw = Gateway::start(GatewayConfig::default(), factories)?;
+    let gw = Gateway::start_scalable(GatewayConfig::default(), spawner, replicas, None)?;
     let addr = gw.addr_string();
     println!(
         "gateway up on http://{addr} ({} engine)",
@@ -55,7 +54,8 @@ fn main() -> anyhow::Result<()> {
     println!("\nPOST /v1/completions -> {}", resp.status);
     println!("{}", resp.body_str());
 
-    // closed-loop load: 32 workers mixing unary, streaming and chat
+    // closed-loop load: 32 workers mixing unary, streaming and chat,
+    // each on one persistent keep-alive connection
     let report = loadgen::run(
         &addr,
         &loadgen::LoadgenConfig {
@@ -67,13 +67,24 @@ fn main() -> anyhow::Result<()> {
     );
     println!("\nloadgen: {}", report.summary());
 
-    // the autoscaler's ingress-update path
+    // the replica lifecycle the autoscaling supervisor drives: hot-add...
+    let added = gw.add_replica()?;
+    println!("\nhot-added replica {added}; live set: {:?}", gw.live_replicas());
+
+    // ...reweight through the autoscaler's ingress-update path...
     let resp = loadgen::post_json(
         &addr,
         "/admin/scale",
-        "{\"replicas\": [{\"id\": 0, \"weight\": 1.0}, {\"id\": 1, \"weight\": 0.5}]}",
+        &format!(
+            "{{\"replicas\": [{{\"id\": 0, \"weight\": 1.0}}, {{\"id\": 1, \"weight\": 0.5}}, \
+             {{\"id\": {added}, \"weight\": 2.0}}]}}"
+        ),
     )?;
-    println!("\nPOST /admin/scale -> {} {}", resp.status, resp.body_str());
+    println!("POST /admin/scale -> {} {}", resp.status, resp.body_str());
+
+    // ...and retire it again: deroute, drain in-flight work, join
+    gw.retire_replica(added)?;
+    println!("retired replica {added}; live set: {:?}", gw.live_replicas());
 
     // scrape and summarize the exposition
     let scrape = loadgen::get(&addr, "/metrics")?;

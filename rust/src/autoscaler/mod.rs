@@ -5,6 +5,12 @@
 //! reconfiguration relaunches the service, exactly like the Fig. 6 case
 //! study where Mistral-7B's gpu_memory is bumped 90%→95% and the replica
 //! restarts ~7 simulated minutes after detection).
+//!
+//! The *live* counterpart — the same detect → act loop executed against
+//! real engine workers inside the serving process, with replica
+//! hot-add/retire instead of simulated relaunches — is
+//! [`crate::gateway::supervisor`]; it shares this module's [`Action`]
+//! vocabulary.
 
 use crate::detect::{ScaleDirection, ZscoreDetector};
 use crate::metrics::Frame;

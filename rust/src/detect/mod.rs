@@ -7,6 +7,7 @@ pub mod baselines;
 pub mod dataset;
 pub mod eval;
 
+use crate::metrics::Frame;
 use crate::runtime::vae::{VaeRuntime, VaeScore};
 use crate::stats::evt;
 use anyhow::{anyhow, Result};
@@ -172,6 +173,18 @@ impl ZscoreDetector {
         })
     }
 
+    /// Calibrate on Table II frames — the shape the gateway's autoscaling
+    /// supervisor collects from the live metric store.
+    pub fn calibrate_frames(frames: &[Frame]) -> Option<ZscoreDetector> {
+        let rows: Vec<f64> = frames.iter().flat_map(|f| f.to_array()).collect();
+        ZscoreDetector::calibrate(&rows, 8)
+    }
+
+    /// Score one Table II frame.
+    pub fn detect_frame(&self, frame: &Frame) -> Detection {
+        self.detect_row(&frame.to_array())
+    }
+
     pub fn detect_row(&self, row: &[f64]) -> Detection {
         let kl = energy(row, &self.mean, &self.std);
         let md: f64 = row
@@ -236,5 +249,27 @@ mod tests {
     #[test]
     fn zscore_needs_calibration_data() {
         assert!(ZscoreDetector::calibrate(&[1.0; 40], 8).is_none());
+    }
+
+    #[test]
+    fn frame_helpers_match_row_api() {
+        let mut rng = Pcg64::new(3);
+        let mut frames = Vec::new();
+        for _ in 0..100 {
+            let mut a = [0.0; 8];
+            for v in a.iter_mut() {
+                *v = 5.0 + rng.normal();
+            }
+            frames.push(Frame::from_array(a));
+        }
+        let det = ZscoreDetector::calibrate_frames(&frames).unwrap();
+        let overload = Frame::from_array([50.0; 8]);
+        let d = det.detect_frame(&overload);
+        assert!(d.is_anomaly);
+        assert_eq!(d.direction, ScaleDirection::Up);
+        // identical decision to the flat-row API
+        let d2 = det.detect_row(&overload.to_array());
+        assert_eq!(d.is_anomaly, d2.is_anomaly);
+        assert!((d.kl - d2.kl).abs() < 1e-12);
     }
 }

@@ -109,6 +109,11 @@ pub trait StreamEngine {
     fn idle(&self) -> bool;
     fn pending_len(&self) -> usize;
     fn running_len(&self) -> usize;
+    /// Concurrency the engine can actually run (its slot count). The
+    /// gateway's replica workers use this to backpressure admission:
+    /// jobs wait in the worker queue — where queue-time budgets apply —
+    /// instead of piling into an unbounded engine pending queue.
+    fn capacity(&self) -> usize;
     /// Snapshot the Table II monitoring frame.
     fn frame(&self, finished_in_window: f64, arrived_in_window: f64, mean_latency: f64) -> Frame;
 }
@@ -220,6 +225,12 @@ impl Engine {
 
     pub fn idle(&self) -> bool {
         self.pending.is_empty() && self.running_len() == 0
+    }
+
+    /// Slots the engine can actually occupy: the configured concurrency
+    /// clamped to the compiled batch width.
+    pub fn capacity(&self) -> usize {
+        self.cfg.max_num_seqs.min(self.slots.len()).max(1)
     }
 
     /// Admit pending requests into free slots (prefill each); then run one
@@ -461,6 +472,10 @@ impl StreamEngine for Engine {
 
     fn running_len(&self) -> usize {
         Engine::running_len(self)
+    }
+
+    fn capacity(&self) -> usize {
+        Engine::capacity(self)
     }
 
     fn frame(&self, finished_in_window: f64, arrived_in_window: f64, mean_latency: f64) -> Frame {

@@ -178,6 +178,10 @@ impl StreamEngine for SimEngine {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
 
+    fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
     fn frame(&self, finished_in_window: f64, arrived_in_window: f64, mean_latency: f64) -> Frame {
         let b = self.slots.len().max(1);
         let kv_used: usize = self

@@ -33,9 +33,14 @@ impl TokenBucket {
     }
 
     /// Take one token at an explicit clock reading (test seam).
+    ///
+    /// `last` is clamped to be monotonic: a non-monotonic clock reading
+    /// (NTP step, test-driven time) must not rewind it, or the span it
+    /// rewound over would be refilled a second time on the next call —
+    /// minting free tokens.
     pub fn try_take_at(&mut self, now_secs: f64) -> bool {
         let dt = (now_secs - self.last).max(0.0);
-        self.last = now_secs;
+        self.last = self.last.max(now_secs);
         self.tokens = (self.tokens + dt * self.rate).min(self.burst);
         if self.tokens >= 1.0 {
             self.tokens -= 1.0;
@@ -129,6 +134,42 @@ mod tests {
         let mut b = TokenBucket::new(1.0, 1);
         assert!(b.try_take_at(10.0));
         assert!(!b.try_take_at(5.0)); // negative dt must not mint tokens
+        // the rewind must not have reset `last`: only 0.5s really elapsed
+        // since the take at t=10, so no token yet — the pre-clamp bug
+        // refilled [5.0, 10.5] here and handed out a free token
+        assert!(!b.try_take_at(10.5));
+        assert!(b.try_take_at(11.0)); // a full second since t=10
+    }
+
+    #[test]
+    fn bucket_never_mints_tokens_from_clock_rewinds() {
+        // property: over any clock walk (forwards and backwards), grants
+        // never exceed burst + rate × furthest-forward-progress
+        crate::util::prop::check("token bucket monotonic refill", 300, |g| {
+            let rate = g.f64_in(0.5, 50.0);
+            let burst = g.usize_in(1, 16);
+            let mut b = TokenBucket::new(rate, burst);
+            let mut now = 0.0f64;
+            let mut hi = 0.0f64;
+            let mut granted = 0usize;
+            let steps = g.usize_in(1, 200);
+            for _ in 0..steps {
+                now = (now + g.f64_in(-2.0, 2.0)).max(0.0);
+                hi = hi.max(now);
+                if b.try_take_at(now) {
+                    granted += 1;
+                }
+            }
+            let budget = burst as f64 + rate * hi + 1e-6;
+            if granted as f64 <= budget {
+                Ok(())
+            } else {
+                Err(format!(
+                    "granted {granted} tokens > budget {budget:.3} \
+                     (rate {rate:.3}, burst {burst}, furthest clock {hi:.3})"
+                ))
+            }
+        });
     }
 
     #[test]

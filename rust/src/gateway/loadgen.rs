@@ -2,6 +2,11 @@
 //! gateway over real sockets — the integration-test harness and the
 //! `examples/serve_http.rs` demo driver. The client understands exactly
 //! what the gateway emits: Content-Length bodies and chunked SSE streams.
+//!
+//! The closed loop runs on persistent HTTP/1.1 keep-alive connections
+//! ([`Client`]): one socket per worker for its whole request sequence, so
+//! attainable attack rates are not capped by per-request TCP handshakes.
+//! [`LoadgenReport::connections_opened`] lets tests assert the reuse.
 
 use crate::util::json::{num, obj, s, Json};
 use anyhow::{anyhow, bail, Context, Result};
@@ -62,23 +67,14 @@ fn read_chunked<R: BufRead>(r: &mut R) -> Result<Vec<u8>> {
     }
 }
 
-/// One blocking HTTP/1.1 exchange on a fresh connection
-/// (`Connection: close`).
-pub fn request(
-    addr: &str,
-    method: &str,
-    path: &str,
-    body: Option<&str>,
-    timeout: Duration,
-) -> Result<HttpResponse> {
-    let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
-    stream.set_read_timeout(Some(timeout))?;
-    stream.set_write_timeout(Some(timeout))?;
-    stream.set_nodelay(true)?;
-
-    let mut head = format!(
-        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nAccept: */*\r\nConnection: close\r\n"
-    );
+/// The request head for one exchange. `close` asks the server to close
+/// the connection after responding; omitted, HTTP/1.1 defaults to
+/// keep-alive.
+fn request_head(method: &str, path: &str, addr: &str, body: Option<&str>, close: bool) -> String {
+    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\nAccept: */*\r\n");
+    if close {
+        head.push_str("Connection: close\r\n");
+    }
     if let Some(b) = body {
         head.push_str(&format!(
             "Content-Type: application/json\r\nContent-Length: {}\r\n",
@@ -86,14 +82,16 @@ pub fn request(
         ));
     }
     head.push_str("\r\n");
-    let mut w = &stream;
-    w.write_all(head.as_bytes())?;
-    if let Some(b) = body {
-        w.write_all(b.as_bytes())?;
-    }
-    w.flush()?;
+    head
+}
 
-    let mut r = BufReader::new(&stream);
+/// Read one response off the stream. The `BufReader` is scoped to this
+/// exchange: the gateway never pushes unsolicited bytes, and both
+/// Content-Length and chunked bodies are exactly delimited, so no buffered
+/// bytes are lost when it drops — which is what makes keep-alive reuse of
+/// the bare `TcpStream` safe.
+fn read_response(stream: &TcpStream) -> Result<HttpResponse> {
+    let mut r = BufReader::new(stream);
     let mut status_line = String::new();
     r.read_line(&mut status_line)?;
     let mut parts = status_line.split_whitespace();
@@ -133,6 +131,7 @@ pub fn request(
         r.read_exact(&mut buf)?;
         buf
     } else {
+        // no framing: the peer signals the end by closing
         let mut buf = Vec::new();
         r.read_to_end(&mut buf)?;
         buf
@@ -145,6 +144,29 @@ pub fn request(
     })
 }
 
+/// One blocking HTTP/1.1 exchange on a fresh connection
+/// (`Connection: close`). For request sequences, prefer [`Client`].
+pub fn request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    timeout: Duration,
+) -> Result<HttpResponse> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    stream.set_nodelay(true)?;
+
+    let mut w = &stream;
+    w.write_all(request_head(method, path, addr, body, true).as_bytes())?;
+    if let Some(b) = body {
+        w.write_all(b.as_bytes())?;
+    }
+    w.flush()?;
+    read_response(&stream)
+}
+
 pub fn get(addr: &str, path: &str) -> Result<HttpResponse> {
     request(addr, "GET", path, None, Duration::from_secs(30))
 }
@@ -153,8 +175,125 @@ pub fn post_json(addr: &str, path: &str, body: &str) -> Result<HttpResponse> {
     request(addr, "POST", path, Some(body), Duration::from_secs(60))
 }
 
+/// Persistent HTTP/1.1 client: one keep-alive connection reused across
+/// exchanges, redialed transparently when the server closes it (or when a
+/// previously-idle socket turns out stale on send). Counts dials so the
+/// integration suite can assert that a closed loop reuses sockets.
+pub struct Client {
+    addr: String,
+    timeout: Duration,
+    stream: Option<TcpStream>,
+    /// sockets dialed over this client's lifetime
+    pub connections_opened: usize,
+}
+
+impl Client {
+    pub fn new(addr: &str) -> Client {
+        Client {
+            addr: addr.to_string(),
+            timeout: Duration::from_secs(60),
+            stream: None,
+            connections_opened: 0,
+        }
+    }
+
+    fn connect(&mut self) -> Result<()> {
+        if self.stream.is_none() {
+            let stream = TcpStream::connect(&self.addr)
+                .with_context(|| format!("connect {}", self.addr))?;
+            stream.set_read_timeout(Some(self.timeout))?;
+            stream.set_write_timeout(Some(self.timeout))?;
+            stream.set_nodelay(true)?;
+            self.connections_opened += 1;
+            self.stream = Some(stream);
+        }
+        Ok(())
+    }
+
+    /// One exchange on the persistent connection. Only a *stale-socket*
+    /// failure on a reused connection (the server closed an idle
+    /// keep-alive socket: reset/EOF before any response byte) redials and
+    /// retries once. Timeouts and mid-response failures are returned as
+    /// errors — blindly retrying would re-execute a non-idempotent POST
+    /// whose first copy may still be running on the server.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<HttpResponse> {
+        let reused = self.stream.is_some();
+        match self.try_request(method, path, body) {
+            Ok(resp) => Ok(resp),
+            Err(e) => {
+                self.stream = None;
+                if reused && stale_socket_error(&e) {
+                    self.try_request(method, path, body)
+                } else {
+                    Err(e)
+                }
+            }
+        }
+    }
+
+    fn try_request(&mut self, method: &str, path: &str, body: Option<&str>) -> Result<HttpResponse> {
+        self.connect()?;
+        let resp = {
+            let stream = self.stream.as_ref().expect("connected above");
+            let mut w = stream;
+            w.write_all(request_head(method, path, &self.addr, body, false).as_bytes())?;
+            if let Some(b) = body {
+                w.write_all(b.as_bytes())?;
+            }
+            w.flush()?;
+            read_response(stream)?
+        };
+        // honor the server's wish to close; an unframed body also means
+        // the connection is done
+        let close = resp
+            .headers
+            .get("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false);
+        let unframed = !resp.headers.contains_key("content-length")
+            && !resp.headers.contains_key("transfer-encoding");
+        if close || unframed {
+            self.stream = None;
+        }
+        Ok(resp)
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<HttpResponse> {
+        self.request("GET", path, None)
+    }
+
+    pub fn post_json(&mut self, path: &str, body: &str) -> Result<HttpResponse> {
+        self.request("POST", path, Some(body))
+    }
+}
+
+/// True for failures that mean the server closed a previously-idle
+/// keep-alive socket — reset/abort/broken pipe, or EOF before any status
+/// byte (which parses as an empty status line). A timeout or an error
+/// after response bytes arrived is NOT stale: the request may well be
+/// executing server-side, so a retry would duplicate it.
+fn stale_socket_error(e: &anyhow::Error) -> bool {
+    for cause in e.chain() {
+        if let Some(io) = cause.downcast_ref::<std::io::Error>() {
+            return matches!(
+                io.kind(),
+                std::io::ErrorKind::BrokenPipe
+                    | std::io::ErrorKind::ConnectionReset
+                    | std::io::ErrorKind::ConnectionAborted
+                    | std::io::ErrorKind::UnexpectedEof
+            );
+        }
+    }
+    e.to_string().contains("bad status line \"\"")
+}
+
 /// Closed-loop driver configuration: `concurrency` workers each issue
-/// `requests_per_worker` sequential requests on fresh connections.
+/// `requests_per_worker` sequential requests on one keep-alive connection.
 #[derive(Debug, Clone)]
 pub struct LoadgenConfig {
     pub concurrency: usize,
@@ -189,6 +328,9 @@ pub struct LoadgenReport {
     pub status_counts: BTreeMap<u16, usize>,
     pub sse_events: usize,
     pub completion_tokens: usize,
+    /// TCP connections dialed across all workers; == concurrency when
+    /// keep-alive reuse held for every request
+    pub connections_opened: usize,
     pub p50_ms: f64,
     pub p99_ms: f64,
     pub elapsed_secs: f64,
@@ -201,11 +343,12 @@ impl LoadgenReport {
 
     pub fn summary(&self) -> String {
         format!(
-            "{} requests in {:.2}s ({:.1} req/s): {} ok, {} errors, statuses {:?}, \
-             {} completion tokens, {} SSE events, p50 {:.1}ms p99 {:.1}ms",
+            "{} requests in {:.2}s ({:.1} req/s) over {} connections: {} ok, {} errors, \
+             statuses {:?}, {} completion tokens, {} SSE events, p50 {:.1}ms p99 {:.1}ms",
             self.requests,
             self.elapsed_secs,
             self.requests as f64 / self.elapsed_secs.max(1e-9),
+            self.connections_opened,
             self.ok,
             self.errors,
             self.status_counts,
@@ -224,7 +367,7 @@ struct OneResult {
     completion_tokens: usize,
 }
 
-fn one_request(addr: &str, cfg: &LoadgenConfig, worker: usize, k: usize) -> OneResult {
+fn one_request(client: &mut Client, cfg: &LoadgenConfig, worker: usize, k: usize) -> OneResult {
     let stream = cfg.stream_every != 0 && (worker + k) % cfg.stream_every == 0;
     let chat = cfg.chat_every != 0 && (worker + k) % cfg.chat_every == 0;
     let prompt = format!("{} w{worker} r{k}", cfg.prompt_prefix);
@@ -252,7 +395,7 @@ fn one_request(addr: &str, cfg: &LoadgenConfig, worker: usize, k: usize) -> OneR
         "/v1/completions"
     };
     let t0 = Instant::now();
-    match post_json(addr, path, &body) {
+    match client.post_json(path, &body) {
         Err(_) => OneResult {
             status: None,
             latency: t0.elapsed(),
@@ -302,18 +445,23 @@ fn one_request(addr: &str, cfg: &LoadgenConfig, worker: usize, k: usize) -> OneR
 pub fn run(addr: &str, cfg: &LoadgenConfig) -> LoadgenReport {
     let t0 = Instant::now();
     let (tx, rx) = std::sync::mpsc::channel::<OneResult>();
+    let (conn_tx, conn_rx) = std::sync::mpsc::channel::<usize>();
     let mut handles = Vec::new();
     for worker in 0..cfg.concurrency {
         let tx = tx.clone();
+        let conn_tx = conn_tx.clone();
         let cfg = cfg.clone();
         let addr = addr.to_string();
         handles.push(std::thread::spawn(move || {
+            let mut client = Client::new(&addr);
             for k in 0..cfg.requests_per_worker {
-                let _ = tx.send(one_request(&addr, &cfg, worker, k));
+                let _ = tx.send(one_request(&mut client, &cfg, worker, k));
             }
+            let _ = conn_tx.send(client.connections_opened);
         }));
     }
     drop(tx);
+    drop(conn_tx);
 
     let mut report = LoadgenReport::default();
     let mut latencies_ms: Vec<f64> = Vec::new();
@@ -332,6 +480,7 @@ pub fn run(addr: &str, cfg: &LoadgenConfig) -> LoadgenReport {
         report.sse_events += r.sse_events;
         report.completion_tokens += r.completion_tokens;
     }
+    report.connections_opened = conn_rx.iter().sum();
     for h in handles {
         let _ = h.join();
     }
@@ -375,5 +524,15 @@ mod tests {
         let wire = b"zz\r\nhello\r\n";
         let mut r = std::io::BufReader::new(&wire[..]);
         assert!(read_chunked(&mut r).is_err());
+    }
+
+    #[test]
+    fn request_heads_differ_on_connection_policy() {
+        let one_shot = request_head("POST", "/x", "h:1", Some("{}"), true);
+        assert!(one_shot.contains("Connection: close\r\n"));
+        assert!(one_shot.contains("Content-Length: 2\r\n"));
+        let keep_alive = request_head("GET", "/x", "h:1", None, false);
+        assert!(!keep_alive.contains("Connection:"));
+        assert!(keep_alive.ends_with("\r\n\r\n"));
     }
 }

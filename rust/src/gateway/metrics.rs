@@ -4,6 +4,7 @@
 //! the paper's monitoring system scrapes). Also ships a small exposition
 //! parser so tests can verify the scrape body instead of substring-matching.
 
+use super::supervisor::SupervisorSnapshot;
 use crate::metrics::COLUMNS;
 use crate::tsdb::MetricStore;
 use std::collections::BTreeMap;
@@ -27,6 +28,7 @@ pub struct GatewayMetrics {
     sse_events: AtomicU64,
     rejected_queue_full: AtomicU64,
     rejected_rate_limited: AtomicU64,
+    queue_shed: AtomicU64,
 }
 
 impl GatewayMetrics {
@@ -68,6 +70,12 @@ impl GatewayMetrics {
         self.rejected_rate_limited.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// An admitted job was failed with a 503 because it overshot its
+    /// queue-time budget or deadline before reaching the engine.
+    pub fn note_queue_shed(&self) {
+        self.queue_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn requests_total(&self) -> u64 {
         self.requests.lock().unwrap().values().sum()
     }
@@ -77,13 +85,16 @@ fn escape_label(v: &str) -> String {
     v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
 }
 
-/// Render the full `/metrics` body: gateway request metrics plus the last
-/// Table II frame of every replica instance in `store`.
+/// Render the full `/metrics` body: gateway request metrics, the replica
+/// set + supervisor state, and the last Table II frame of every replica
+/// instance in `store`.
 pub fn render_prometheus(
     gw: &GatewayMetrics,
     store: &MetricStore,
     inflight: usize,
+    live_replicas: usize,
     uptime_secs: f64,
+    sup: &SupervisorSnapshot,
 ) -> String {
     let mut out = String::with_capacity(4096);
 
@@ -151,6 +162,62 @@ pub fn render_prometheus(
         gw.rejected_rate_limited.load(Ordering::Relaxed)
     );
 
+    out.push_str(
+        "# HELP enova_gateway_queue_shed_total Admitted jobs failed with 503 after \
+         overshooting their queue-time budget or deadline.\n",
+    );
+    out.push_str("# TYPE enova_gateway_queue_shed_total counter\n");
+    let _ = writeln!(
+        out,
+        "enova_gateway_queue_shed_total {}",
+        gw.queue_shed.load(Ordering::Relaxed)
+    );
+
+    out.push_str("# HELP enova_gateway_replicas Live (routable) engine replicas.\n");
+    out.push_str("# TYPE enova_gateway_replicas gauge\n");
+    let _ = writeln!(out, "enova_gateway_replicas {live_replicas}");
+
+    for (name, help, value) in [
+        (
+            "enova_supervisor_enabled",
+            "1 when the closed-loop autoscaling supervisor is running.",
+            sup.enabled as u64 as f64,
+        ),
+        (
+            "enova_supervisor_calibrated",
+            "1 once the supervisor's detector finished calibration.",
+            sup.calibrated as u64 as f64,
+        ),
+        (
+            "enova_supervisor_anomaly_energy",
+            "Detector energy of the latest supervisor sample.",
+            sup.last_energy,
+        ),
+        (
+            "enova_supervisor_anomaly_threshold",
+            "POT threshold the supervisor scores against.",
+            sup.last_threshold,
+        ),
+    ] {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        let _ = writeln!(out, "{name} {value}");
+    }
+    out.push_str(
+        "# HELP enova_supervisor_scale_events_total Scaling actions executed by the supervisor.\n",
+    );
+    out.push_str("# TYPE enova_supervisor_scale_events_total counter\n");
+    let _ = writeln!(
+        out,
+        "enova_supervisor_scale_events_total{{direction=\"up\"}} {}",
+        sup.scale_ups
+    );
+    let _ = writeln!(
+        out,
+        "enova_supervisor_scale_events_total{{direction=\"down\"}} {}",
+        sup.scale_downs
+    );
+
     out.push_str("# HELP enova_gateway_inflight_requests Requests admitted and not yet finished.\n");
     out.push_str("# TYPE enova_gateway_inflight_requests gauge\n");
     let _ = writeln!(out, "enova_gateway_inflight_requests {inflight}");
@@ -174,6 +241,22 @@ pub fn render_prometheus(
                     escape_label(&instance)
                 );
             }
+        }
+    }
+
+    // mean queue wait per replica (recorded alongside the Table II frame)
+    out.push_str(
+        "# HELP enova_replica_queue_wait_seconds Mean worker-queue wait per replica over \
+         the last monitoring window.\n",
+    );
+    out.push_str("# TYPE enova_replica_queue_wait_seconds gauge\n");
+    for instance in store.instances(super::QUEUE_WAIT) {
+        if let Some(v) = store.series(super::QUEUE_WAIT, &instance).and_then(|s| s.last()) {
+            let _ = writeln!(
+                out,
+                "enova_replica_queue_wait_seconds{{instance=\"{}\"}} {v}",
+                escape_label(&instance)
+            );
         }
     }
     out
@@ -256,7 +339,16 @@ mod tests {
             .record(&mut store, &format!("replica-{i}"), 1.0);
         }
 
-        let body = render_prometheus(&gw, &store, 3, 12.5);
+        let sup = SupervisorSnapshot {
+            enabled: true,
+            calibrated: true,
+            scale_ups: 2,
+            scale_downs: 1,
+            last_energy: 4.5,
+            last_threshold: 3.0,
+            events: 3,
+        };
+        let body = render_prometheus(&gw, &store, 3, 2, 12.5, &sup);
         let samples = parse_exposition(&body).expect("valid exposition");
         for col in COLUMNS {
             for replica in ["replica-0", "replica-1"] {
@@ -287,6 +379,16 @@ mod tests {
                 && s.labels.get("reason").map(String::as_str) == Some("queue_full")
                 && s.value == 1.0));
         assert!(samples.iter().any(|s| s.name == "enova_gateway_inflight_requests" && s.value == 3.0));
+        assert!(samples.iter().any(|s| s.name == "enova_gateway_replicas" && s.value == 2.0));
+        assert!(samples
+            .iter()
+            .any(|s| s.name == "enova_supervisor_scale_events_total"
+                && s.labels.get("direction").map(String::as_str) == Some("up")
+                && s.value == 2.0));
+        assert!(samples.iter().any(|s| s.name == "enova_supervisor_enabled" && s.value == 1.0));
+        assert!(samples
+            .iter()
+            .any(|s| s.name == "enova_supervisor_anomaly_energy" && s.value == 4.5));
     }
 
     #[test]
@@ -294,7 +396,8 @@ mod tests {
         let gw = GatewayMetrics::new();
         gw.observe("/x", 200, 0.002); // lands in le=0.0025 and wider
         gw.observe("/x", 200, 0.3); // lands in le=1.0 and wider
-        let body = render_prometheus(&gw, &MetricStore::new(), 0, 0.0);
+        let body =
+            render_prometheus(&gw, &MetricStore::new(), 0, 1, 0.0, &SupervisorSnapshot::default());
         let samples = parse_exposition(&body).unwrap();
         let bucket = |le: &str| {
             samples

@@ -12,11 +12,21 @@
 //! * `POST /admin/scale` — apply a new replica weight set through the
 //!   [`WeightedRouter`] (the autoscaler's ingress-update path, §IV-A-4).
 //!
+//! Replicas are a *lifecycle-managed* set, not a boxed-at-startup array:
+//! workers are hot-spawned from an [`EngineSpawner`] and retired with a
+//! drain-then-join protocol (in-flight requests finish; queued jobs are
+//! handed to the engine before the worker exits). The closed-loop
+//! autoscaling supervisor ([`supervisor`]) drives that lifecycle from the
+//! detector (§IV-B): monitor → detect → act, inside the serving process.
+//!
 //! Requests pass admission control first (token-bucket rate limiter +
 //! bounded in-flight gate → fast 429s under overload), then dispatch via
-//! weighted least-loaded routing to a replica worker thread that drives
-//! its engine's continuous-batching loop and streams deltas back over a
-//! channel.
+//! weighted least-loaded routing to a replica worker thread. Each worker
+//! holds admitted jobs in a bounded-wait queue — jobs that overshoot the
+//! queue-time budget or their deadline are shed with a 503 instead of
+//! occupying engine slots — and promotes them into free engine capacity,
+//! so Table II's n^p reflects real queue pressure the supervisor can act
+//! on.
 
 pub mod admission;
 pub mod http;
@@ -24,6 +34,7 @@ pub mod loadgen;
 pub mod metrics;
 pub mod openai;
 pub mod sse;
+pub mod supervisor;
 
 use crate::engine::{Completion, FinishReason, StreamEngine};
 use crate::router::{ReplicaHandle, WeightedRouter};
@@ -32,7 +43,7 @@ use crate::util::json::Json;
 use admission::{AdmissionGate, AdmissionPermit, TokenBucket};
 use anyhow::{anyhow, Result};
 use metrics::GatewayMetrics;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -45,6 +56,19 @@ use std::time::{Duration, Instant};
 /// themselves never cross thread boundaries (PJRT handles are not
 /// guaranteed `Send`).
 pub type EngineFactory = Box<dyn FnOnce() -> Result<Box<dyn StreamEngine>> + Send + 'static>;
+
+/// Reusable engine constructor for the replica lifecycle manager: unlike
+/// the one-shot [`EngineFactory`], a spawner can build engines for
+/// replicas that do not exist yet (hot-add by the supervisor or
+/// [`Gateway::add_replica`]).
+pub type EngineSpawner = Arc<dyn Fn(u64) -> Result<Box<dyn StreamEngine>> + Send + Sync + 'static>;
+
+/// Series name for the per-replica mean queue wait recorded next to the
+/// Table II frame columns.
+pub(crate) const QUEUE_WAIT: &str = "queue_wait";
+
+/// How long a spawning replica may take to construct its engine.
+const ENGINE_INIT_TIMEOUT: Duration = Duration::from_secs(300);
 
 #[derive(Debug, Clone)]
 pub struct GatewayConfig {
@@ -63,6 +87,12 @@ pub struct GatewayConfig {
     pub max_body_bytes: usize,
     /// cadence of Table II frame recording per replica
     pub monitor_interval: Duration,
+    /// longest a job may wait in a replica's queue before it is shed with
+    /// a 503 instead of ever reaching the engine; zero disables shedding
+    pub queue_budget: Duration,
+    /// per-request deadline: how long a handler waits for its engine, and
+    /// the point past which a still-queued job is shed rather than run
+    pub request_timeout: Duration,
 }
 
 impl Default for GatewayConfig {
@@ -77,6 +107,8 @@ impl Default for GatewayConfig {
             http_workers: 64,
             max_body_bytes: 1024 * 1024,
             monitor_interval: Duration::from_millis(50),
+            queue_budget: Duration::ZERO,
+            request_timeout: Duration::from_secs(120),
         }
     }
 }
@@ -89,6 +121,9 @@ enum StreamItem {
     },
     Done(Completion),
     Error(String),
+    /// Shed before reaching the engine (queue budget, deadline, shutdown,
+    /// drain) — the handler answers 503 / a terminal SSE event.
+    Unavailable(String),
 }
 
 /// One admitted request, queued to a replica worker. The job owns its
@@ -104,6 +139,10 @@ struct Job {
     tx: Sender<StreamItem>,
     permit: AdmissionPermit,
     handle: Arc<ReplicaHandle>,
+    /// when the handler handed the job to the replica worker
+    enqueued_at: Instant,
+    /// past this instant the job is shed instead of submitted
+    deadline: Instant,
 }
 
 impl Job {
@@ -115,19 +154,44 @@ impl Job {
     }
 }
 
+/// One live replica as the lifecycle manager sees it: the job channel into
+/// its worker thread, the drain request flag, and the thread handle joined
+/// on retirement or shutdown.
+struct ReplicaSlot {
+    tx: Mutex<Sender<Job>>,
+    /// asks the worker to finish queued + in-flight work and exit
+    draining: Arc<AtomicBool>,
+    join: Mutex<Option<JoinHandle<()>>>,
+}
+
 struct GatewayState {
     cfg: GatewayConfig,
     router: RwLock<WeightedRouter>,
-    /// replica id -> job queue into that replica's worker thread
-    replicas: BTreeMap<u64, Mutex<Sender<Job>>>,
+    /// the live replica set; mutated by hot-add / retire. Lock order:
+    /// never acquire `router` while holding `replicas` write (and vice
+    /// versa) — every path takes them sequentially, not nested.
+    replicas: RwLock<BTreeMap<u64, Arc<ReplicaSlot>>>,
+    /// present when the gateway was started scalable: lets the supervisor
+    /// and [`Gateway::add_replica`] hot-spawn workers at runtime
+    spawner: Option<EngineSpawner>,
+    next_replica_id: AtomicU64,
     gate: Arc<AdmissionGate>,
     bucket: Option<Mutex<TokenBucket>>,
     metrics: GatewayMetrics,
     store: Mutex<MetricStore>,
+    supervisor: Mutex<supervisor::SupervisorStatus>,
     started: Instant,
     ready_replicas: AtomicUsize,
     next_req_id: AtomicU64,
     stop: AtomicBool,
+}
+
+/// A replica worker mid-launch: the engine is constructed inside the
+/// spawned thread; `init_rx` reports success or failure.
+struct PendingReplica {
+    id: u64,
+    slot: Arc<ReplicaSlot>,
+    init_rx: Receiver<std::result::Result<(), String>>,
 }
 
 /// Handle to a running gateway. [`Gateway::shutdown`] stops and joins all
@@ -142,7 +206,36 @@ pub struct Gateway {
 impl Gateway {
     /// Bind, spawn one worker thread per engine factory plus the HTTP
     /// accept/worker pool, and wait until every replica engine is built.
+    /// The replica set is fixed (no spawner): hot-add is unavailable.
     pub fn start(cfg: GatewayConfig, factories: Vec<EngineFactory>) -> Result<Gateway> {
+        Gateway::start_inner(cfg, factories, None, None)
+    }
+
+    /// Start with a reusable [`EngineSpawner`] so replicas can be
+    /// hot-added and retired at runtime; with `supervisor_cfg`, the
+    /// closed-loop autoscaling supervisor drives that lifecycle from the
+    /// performance detector.
+    pub fn start_scalable(
+        cfg: GatewayConfig,
+        spawner: EngineSpawner,
+        initial_replicas: usize,
+        supervisor_cfg: Option<supervisor::SupervisorConfig>,
+    ) -> Result<Gateway> {
+        let factories: Vec<EngineFactory> = (0..initial_replicas.max(1) as u64)
+            .map(|id| -> EngineFactory {
+                let spawner = Arc::clone(&spawner);
+                Box::new(move || spawner(id))
+            })
+            .collect();
+        Gateway::start_inner(cfg, factories, Some(spawner), supervisor_cfg)
+    }
+
+    fn start_inner(
+        cfg: GatewayConfig,
+        factories: Vec<EngineFactory>,
+        spawner: Option<EngineSpawner>,
+        supervisor_cfg: Option<supervisor::SupervisorConfig>,
+    ) -> Result<Gateway> {
         if factories.is_empty() {
             return Err(anyhow!("gateway needs at least one engine replica"));
         }
@@ -151,18 +244,11 @@ impl Gateway {
         listener.set_nonblocking(true)?;
 
         let n = factories.len();
-        let mut replicas = BTreeMap::new();
-        let mut job_rxs = Vec::new();
-        for id in 0..n as u64 {
-            let (tx, rx) = mpsc::channel::<Job>();
-            replicas.insert(id, Mutex::new(tx));
-            job_rxs.push(rx);
-        }
-        let weights: Vec<(u64, f64)> = (0..n as u64).map(|id| (id, 1.0)).collect();
-
         let state = Arc::new(GatewayState {
-            router: RwLock::new(WeightedRouter::new(&weights)),
-            replicas,
+            router: RwLock::new(WeightedRouter::new(&[])),
+            replicas: RwLock::new(BTreeMap::new()),
+            spawner,
+            next_replica_id: AtomicU64::new(n as u64),
             gate: AdmissionGate::new(cfg.max_pending),
             bucket: (cfg.rate_limit > 0.0)
                 .then(|| Mutex::new(TokenBucket::new(cfg.rate_limit, cfg.rate_burst))),
@@ -174,6 +260,7 @@ impl Gateway {
                 store.retention = 4096;
                 store
             }),
+            supervisor: Mutex::new(supervisor::SupervisorStatus::new(supervisor_cfg.is_some())),
             started: Instant::now(),
             ready_replicas: AtomicUsize::new(0),
             next_req_id: AtomicU64::new(1),
@@ -181,45 +268,25 @@ impl Gateway {
             cfg,
         });
 
-        let mut threads = Vec::new();
-        let (init_tx, init_rx) = mpsc::channel::<std::result::Result<u64, String>>();
-        for (id, (factory, rx)) in factories.into_iter().zip(job_rxs).enumerate() {
-            let state = Arc::clone(&state);
-            let init_tx = init_tx.clone();
-            threads.push(std::thread::spawn(move || {
-                let engine = match factory() {
-                    Ok(e) => e,
-                    Err(e) => {
-                        let _ = init_tx.send(Err(format!("replica {id}: {e}")));
-                        return;
-                    }
-                };
-                // initial frame before declaring ready, so /metrics exposes
-                // every replica deterministically once start() returns
-                record_frame(engine.as_ref(), &state, &format!("replica-{id}"), 0.0, 0.0, 0.0);
-                state.ready_replicas.fetch_add(1, Ordering::Release);
-                let _ = init_tx.send(Ok(id as u64));
-                replica_loop(id as u64, engine, rx, &state);
-            }));
-        }
-        drop(init_tx);
-        for _ in 0..n {
-            match init_rx.recv_timeout(Duration::from_secs(300)) {
-                Ok(Ok(_)) => {}
-                Ok(Err(e)) => {
-                    state.stop.store(true, Ordering::Release);
-                    return Err(anyhow!("engine init failed: {e}"));
-                }
-                Err(_) => {
-                    state.stop.store(true, Ordering::Release);
-                    return Err(anyhow!("engine init timed out"));
-                }
+        // launch every initial replica in parallel, then wait for each and
+        // register it, so start() returns with the full set routable
+        let pending: Vec<PendingReplica> = factories
+            .into_iter()
+            .enumerate()
+            .map(|(id, factory)| launch_replica(&state, id as u64, factory))
+            .collect();
+        for p in pending {
+            if let Err(e) = await_replica(&p) {
+                state.stop.store(true, Ordering::Release);
+                return Err(e);
             }
+            register_replica(&state, p.id, p.slot, 1.0);
         }
 
         // connection fan-out: accept thread -> worker pool
         let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
         let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut threads = Vec::new();
         {
             let state = Arc::clone(&state);
             threads.push(std::thread::spawn(move || {
@@ -245,6 +312,13 @@ impl Gateway {
             }));
         }
 
+        if let Some(sup) = supervisor_cfg {
+            let state = Arc::clone(&state);
+            threads.push(std::thread::spawn(move || {
+                supervisor::supervisor_loop(&state, sup);
+            }));
+        }
+
         crate::info!(
             "gateway",
             "listening on http://{addr} with {n} replica(s), {} http workers",
@@ -266,9 +340,59 @@ impl Gateway {
         self.state.ready_replicas.load(Ordering::Acquire)
     }
 
-    /// Stop accepting, drain workers, join all threads.
+    /// Ids of the live (routable) replica set, ascending.
+    pub fn live_replicas(&self) -> Vec<u64> {
+        self.state.replicas.read().unwrap().keys().copied().collect()
+    }
+
+    /// Per-replica routing counters: `(id, inflight, dispatched)`.
+    pub fn replica_stats(&self) -> Vec<(u64, u64, u64)> {
+        self.state
+            .router
+            .read()
+            .unwrap()
+            .replicas()
+            .iter()
+            .map(|r| (r.id, r.inflight(), r.dispatched()))
+            .collect()
+    }
+
+    /// Hot-spawn one replica from the engine spawner and route to it.
+    /// Errors when the gateway was started without a spawner.
+    pub fn add_replica(&self) -> Result<u64> {
+        hot_add_replica(&self.state)
+    }
+
+    /// Retire a replica: deroute it, let its worker drain queued and
+    /// in-flight jobs, then join the worker thread. Blocks until drained.
+    pub fn retire_replica(&self, id: u64) -> Result<()> {
+        retire_replica(&self.state, id)
+    }
+
+    /// Scaling actions the supervisor has executed so far.
+    pub fn scaling_events(&self) -> Vec<supervisor::ScalingEvent> {
+        self.state.supervisor.lock().unwrap().events.clone()
+    }
+
+    /// Snapshot of the supervisor's state (enabled/calibrated/counters).
+    pub fn supervisor_snapshot(&self) -> supervisor::SupervisorSnapshot {
+        self.state.supervisor.lock().unwrap().snapshot()
+    }
+
+    /// Stop accepting, fail outstanding jobs with 503s, join all threads.
     pub fn shutdown(self) {
         self.state.stop.store(true, Ordering::Release);
+        // replica workers shed queued + in-flight jobs (clients get 503s)
+        // and exit; join them via the slots — hot-added workers were never
+        // in `threads`
+        let slots: Vec<Arc<ReplicaSlot>> =
+            self.state.replicas.read().unwrap().values().cloned().collect();
+        for slot in slots {
+            let join = slot.join.lock().unwrap().take();
+            if let Some(h) = join {
+                let _ = h.join();
+            }
+        }
         for t in self.threads {
             let _ = t.join();
         }
@@ -280,6 +404,141 @@ impl Gateway {
             let _ = t.join();
         }
     }
+}
+
+/// Spawn a replica worker thread; the engine is built inside it.
+fn launch_replica(state: &Arc<GatewayState>, id: u64, factory: EngineFactory) -> PendingReplica {
+    let (tx, rx) = mpsc::channel::<Job>();
+    let draining = Arc::new(AtomicBool::new(false));
+    let (init_tx, init_rx) = mpsc::channel::<std::result::Result<(), String>>();
+    let thread_state = Arc::clone(state);
+    let thread_draining = Arc::clone(&draining);
+    let join = std::thread::spawn(move || {
+        let engine = match factory() {
+            Ok(e) => e,
+            Err(e) => {
+                let _ = init_tx.send(Err(format!("replica {id}: {e}")));
+                return;
+            }
+        };
+        // initial frame before declaring ready, so /metrics exposes the
+        // replica deterministically once registration returns
+        record_frame(
+            engine.as_ref(),
+            &thread_state,
+            &format!("replica-{id}"),
+            &WindowStats::default(),
+        );
+        thread_state.ready_replicas.fetch_add(1, Ordering::Release);
+        let _ = init_tx.send(Ok(()));
+        replica_loop(id, engine, rx, &thread_draining, &thread_state);
+        thread_state.ready_replicas.fetch_sub(1, Ordering::Release);
+    });
+    PendingReplica {
+        id,
+        slot: Arc::new(ReplicaSlot {
+            tx: Mutex::new(tx),
+            draining,
+            join: Mutex::new(Some(join)),
+        }),
+        init_rx,
+    }
+}
+
+fn await_replica(p: &PendingReplica) -> Result<()> {
+    match p.init_rx.recv_timeout(ENGINE_INIT_TIMEOUT) {
+        Ok(Ok(())) => Ok(()),
+        Ok(Err(e)) => Err(anyhow!("engine init failed: {e}")),
+        Err(_) => Err(anyhow!("replica {} engine init timed out", p.id)),
+    }
+}
+
+/// Insert a ready replica into the live set, then make it routable.
+fn register_replica(state: &Arc<GatewayState>, id: u64, slot: Arc<ReplicaSlot>, weight: f64) {
+    state.replicas.write().unwrap().insert(id, slot);
+    let mut router = state.router.write().unwrap();
+    let mut weights = router.weights();
+    weights.push((id, weight));
+    router.set_weights(&weights);
+}
+
+/// Hot-spawn one replica from the configured spawner (supervisor
+/// scale-up / `Gateway::add_replica`).
+fn hot_add_replica(state: &Arc<GatewayState>) -> Result<u64> {
+    let spawner = state
+        .spawner
+        .as_ref()
+        .ok_or_else(|| anyhow!("gateway was started without an engine spawner; cannot hot-add"))?
+        .clone();
+    let id = state.next_replica_id.fetch_add(1, Ordering::Relaxed);
+    let factory: EngineFactory = Box::new(move || spawner(id));
+    let p = launch_replica(state, id, factory);
+    await_replica(&p)?;
+    register_replica(state, id, p.slot, 1.0);
+    let live = state.replicas.read().unwrap().len();
+    crate::info!("gateway", "replica {id} hot-added ({live} live)");
+    Ok(id)
+}
+
+/// Retire a replica with the drain-then-join protocol:
+///
+/// 1. deroute — new dispatches stop picking it;
+/// 2. drop it from the live set under the write lock — any handler
+///    mid-send holds the read lock, so once the write is granted every
+///    sent job is in the worker's queue;
+/// 3. set the drain flag — the worker finishes queued + in-flight jobs
+///    and exits;
+/// 4. join the worker thread.
+///
+/// No in-flight request is dropped: the worker only exits once its queue,
+/// job table and engine are all empty.
+fn retire_replica(state: &Arc<GatewayState>, id: u64) -> Result<()> {
+    {
+        let mut router = state.router.write().unwrap();
+        let weights: Vec<(u64, f64)> = router
+            .weights()
+            .into_iter()
+            .filter(|&(rid, _)| rid != id)
+            .collect();
+        if weights.len() != router.len() {
+            if weights.is_empty() {
+                return Err(anyhow!("refusing to retire the last routable replica"));
+            }
+            router.set_weights(&weights);
+        }
+    }
+    let slot = state
+        .replicas
+        .write()
+        .unwrap()
+        .remove(&id)
+        .ok_or_else(|| anyhow!("unknown replica id {id}"))?;
+    slot.draining.store(true, Ordering::Release);
+    let join = slot.join.lock().unwrap().take();
+    if let Some(h) = join {
+        let _ = h.join();
+    }
+    // stop exporting the dead worker's frozen gauges
+    state.store.lock().unwrap().remove_instance(&format!("replica-{id}"));
+    let live = state.replicas.read().unwrap().len();
+    crate::info!("gateway", "replica {id} retired and drained ({live} live)");
+    Ok(())
+}
+
+/// Drop a replica whose worker died without draining (send failed): pull
+/// it out of the live set, the routing table, and the metric export.
+fn deregister_replica(state: &GatewayState, id: u64) {
+    state.replicas.write().unwrap().remove(&id);
+    {
+        let mut router = state.router.write().unwrap();
+        let weights: Vec<(u64, f64)> = router
+            .weights()
+            .into_iter()
+            .filter(|&(rid, _)| rid != id)
+            .collect();
+        router.set_weights(&weights);
+    }
+    state.store.lock().unwrap().remove_instance(&format!("replica-{id}"));
 }
 
 fn accept_loop(listener: TcpListener, conn_tx: Sender<TcpStream>, state: &GatewayState) {
@@ -314,7 +573,20 @@ struct FrameWindow {
     arrived: u64,
     latency_sum: f64,
     latency_n: u64,
+    queue_wait_sum: f64,
+    queue_wait_n: u64,
     last: Instant,
+}
+
+/// One flushed window, normalized for [`record_frame`].
+#[derive(Debug, Default)]
+struct WindowStats {
+    finished: f64,
+    arrived: f64,
+    mean_latency: f64,
+    mean_queue_wait: f64,
+    /// jobs still waiting in the worker queue at flush time
+    queued: usize,
 }
 
 impl FrameWindow {
@@ -324,6 +596,8 @@ impl FrameWindow {
             arrived: 0,
             latency_sum: 0.0,
             latency_n: 0,
+            queue_wait_sum: 0.0,
+            queue_wait_n: 0,
             last: Instant::now(),
         }
     }
@@ -332,62 +606,114 @@ impl FrameWindow {
     /// elapsed. Counts are normalized by the actual window length: Table II
     /// defines n^f/n^a as rates per unit time, and windows here vary with
     /// engine step duration.
-    fn maybe_flush(&mut self, engine: &dyn StreamEngine, state: &GatewayState, instance: &str) {
+    fn maybe_flush(
+        &mut self,
+        engine: &dyn StreamEngine,
+        state: &GatewayState,
+        instance: &str,
+        queued: usize,
+    ) {
         let elapsed = self.last.elapsed();
         if elapsed < state.cfg.monitor_interval {
             return;
         }
         let secs = elapsed.as_secs_f64().max(1e-9);
-        let mean = if self.latency_n > 0 {
-            self.latency_sum / self.latency_n as f64
-        } else {
-            0.0
+        let stats = WindowStats {
+            finished: self.finished as f64 / secs,
+            arrived: self.arrived as f64 / secs,
+            mean_latency: if self.latency_n > 0 {
+                self.latency_sum / self.latency_n as f64
+            } else {
+                0.0
+            },
+            mean_queue_wait: if self.queue_wait_n > 0 {
+                self.queue_wait_sum / self.queue_wait_n as f64
+            } else {
+                0.0
+            },
+            queued,
         };
-        record_frame(
-            engine,
-            state,
-            instance,
-            self.finished as f64 / secs,
-            self.arrived as f64 / secs,
-            mean,
-        );
+        record_frame(engine, state, instance, &stats);
         *self = FrameWindow::new();
     }
 }
 
-/// Drive one replica's engine: admit queued jobs, step, fan deltas and
+/// Drive one replica's engine: queue admitted jobs, promote them into free
+/// engine capacity (shedding budget-overshooters), step, fan deltas and
 /// completions back out, and record Table II frames into the shared store.
 fn replica_loop(
     id: u64,
     mut engine: Box<dyn StreamEngine>,
     rx: Receiver<Job>,
+    draining: &AtomicBool,
     state: &GatewayState,
 ) {
     let instance = format!("replica-{id}");
+    let mut queue: VecDeque<Job> = VecDeque::new();
     let mut jobs: HashMap<u64, Job> = HashMap::new();
     let mut window = FrameWindow::new();
 
     loop {
         if state.stop.load(Ordering::Acquire) {
+            // shutdown: answer every queued and in-flight job with a 503
+            // (terminal SSE event for streams) instead of silently
+            // dropping them and leaving clients to hit their timeouts
+            while let Ok(job) = rx.try_recv() {
+                queue.push_back(job);
+            }
+            for job in queue.drain(..) {
+                shed(job, "gateway is shutting down");
+            }
+            for (_, job) in jobs.drain() {
+                shed(job, "gateway is shutting down");
+            }
             break;
         }
+
         // block while idle; drain opportunistically while busy
-        if engine.idle() && jobs.is_empty() {
+        if engine.idle()
+            && jobs.is_empty()
+            && queue.is_empty()
+            && !draining.load(Ordering::Acquire)
+        {
             match rx.recv_timeout(Duration::from_millis(50)) {
                 Ok(job) => {
-                    admit(engine.as_mut(), &mut jobs, job);
                     window.arrived += 1;
+                    queue.push_back(job);
                 }
                 Err(RecvTimeoutError::Timeout) => {
-                    window.maybe_flush(engine.as_ref(), state, &instance);
+                    window.maybe_flush(engine.as_ref(), state, &instance, queue.len());
                     continue;
                 }
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
         while let Ok(job) = rx.try_recv() {
-            admit(engine.as_mut(), &mut jobs, job);
             window.arrived += 1;
+            queue.push_back(job);
+        }
+        promote(engine.as_mut(), &mut queue, &mut jobs, state, &mut window);
+
+        // retire exit check. Observing `draining` here means retirement
+        // already removed this replica from the live set, and every send
+        // (made under the `replicas` read lock) has fully landed in rx —
+        // but possibly *after* the opportunistic drain above. Re-drain
+        // once more under that guarantee; only an empty channel may break.
+        if draining.load(Ordering::Acquire)
+            && queue.is_empty()
+            && jobs.is_empty()
+            && engine.idle()
+        {
+            let mut late_arrival = false;
+            while let Ok(job) = rx.try_recv() {
+                window.arrived += 1;
+                queue.push_back(job);
+                late_arrival = true;
+            }
+            if !late_arrival {
+                break;
+            }
+            promote(engine.as_mut(), &mut queue, &mut jobs, state, &mut window);
         }
 
         match engine.step_stream() {
@@ -424,26 +750,60 @@ fn replica_loop(
             }
         }
 
-        window.maybe_flush(engine.as_ref(), state, &instance);
+        window.maybe_flush(engine.as_ref(), state, &instance, queue.len());
     }
 }
 
-fn admit(engine: &mut dyn StreamEngine, jobs: &mut HashMap<u64, Job>, job: Job) {
-    let id = engine.submit(&job.prompt, job.max_new);
-    jobs.insert(id, job);
+/// Promote queued jobs into free engine capacity. A job that overshot the
+/// queue-time budget or its deadline while waiting is shed with a 503 —
+/// the engine never spends compute on a request whose client has already
+/// been failed.
+fn promote(
+    engine: &mut dyn StreamEngine,
+    queue: &mut VecDeque<Job>,
+    jobs: &mut HashMap<u64, Job>,
+    state: &GatewayState,
+    window: &mut FrameWindow,
+) {
+    while engine.pending_len() + engine.running_len() < engine.capacity() {
+        let Some(job) = queue.pop_front() else { break };
+        let waited = job.enqueued_at.elapsed();
+        window.queue_wait_sum += waited.as_secs_f64();
+        window.queue_wait_n += 1;
+        let budget = state.cfg.queue_budget;
+        let over_budget = budget > Duration::ZERO && waited > budget;
+        if over_budget || Instant::now() >= job.deadline {
+            state.metrics.note_queue_shed();
+            shed(job, "request queued past its queue-time budget; retry later");
+            continue;
+        }
+        let id = engine.submit(&job.prompt, job.max_new);
+        jobs.insert(id, job);
+    }
+}
+
+/// Fail a job the engine will never serve: release its accounting and
+/// send the terminal 503 item.
+fn shed(job: Job, msg: &str) {
+    let tx = job.release();
+    let _ = tx.send(StreamItem::Unavailable(msg.to_string()));
 }
 
 fn record_frame(
     engine: &dyn StreamEngine,
     state: &GatewayState,
     instance: &str,
-    finished: f64,
-    arrived: f64,
-    mean_latency: f64,
+    stats: &WindowStats,
 ) {
-    let frame = engine.frame(finished, arrived, mean_latency);
+    let mut frame = engine.frame(stats.finished, stats.arrived, stats.mean_latency);
+    // queue pressure lives in the worker-side queue now that engine
+    // admission is backpressured; fold it into Table II's n^p so the
+    // detector sees it
+    frame.n_pending += stats.queued as f64;
     let t = state.started.elapsed().as_secs_f64();
-    frame.record(&mut state.store.lock().unwrap(), instance, t);
+    let mut store = state.store.lock().unwrap();
+    frame.record(&mut store, instance, t);
+    store.push(QUEUE_WAIT, instance, t, stats.mean_queue_wait);
 }
 
 fn handle_connection(mut stream: TcpStream, state: &GatewayState) {
@@ -480,13 +840,17 @@ fn route(req: &http::Request, stream: &mut TcpStream, state: &GatewayState) -> s
         ("POST", "/v1/completions") => serve_completion(req, stream, state, false, t0),
         ("POST", "/v1/chat/completions") => serve_completion(req, stream, state, true, t0),
         ("GET", "/metrics") => {
+            let live = state.replicas.read().unwrap().len();
+            let sup = state.supervisor.lock().unwrap().snapshot();
             let body = {
                 let store = state.store.lock().unwrap();
                 metrics::render_prometheus(
                     &state.metrics,
                     &store,
                     state.gate.inflight(),
+                    live,
                     state.started.elapsed().as_secs_f64(),
+                    &sup,
                 )
             };
             finish(req, stream, state, "/metrics", t0, http::Response::prometheus(body))
@@ -495,18 +859,17 @@ fn route(req: &http::Request, stream: &mut TcpStream, state: &GatewayState) -> s
             let body = format!(
                 "{{\"status\":\"ok\",\"uptime_seconds\":{:.3},\"replicas\":{}}}",
                 state.started.elapsed().as_secs_f64(),
-                state.replicas.len()
+                state.replicas.read().unwrap().len()
             );
             finish(req, stream, state, "/healthz", t0, http::Response::json(200, body))
         }
         ("GET", "/ready") => {
-            let ready = state.ready_replicas.load(Ordering::Acquire) == state.replicas.len();
+            let live = state.replicas.read().unwrap().len();
+            let ready_n = state.ready_replicas.load(Ordering::Acquire);
+            let ready = live > 0 && ready_n >= live;
             let status = if ready { 200 } else { 503 };
-            let body = format!(
-                "{{\"ready\":{ready},\"replicas_ready\":{},\"replicas\":{}}}",
-                state.ready_replicas.load(Ordering::Acquire),
-                state.replicas.len()
-            );
+            let body =
+                format!("{{\"ready\":{ready},\"replicas_ready\":{ready_n},\"replicas\":{live}}}");
             finish(req, stream, state, "/ready", t0, http::Response::json(status, body))
         }
         ("POST", "/admin/scale") => admin_scale(req, stream, state, t0),
@@ -612,50 +975,61 @@ fn serve_completion(
         return finish(req, stream, state, endpoint, t0, resp);
     };
 
-    let Some(handle) = state.router.read().unwrap().dispatch() else {
+    // weighted least-loaded dispatch with a stale-pick retry: a replica
+    // can be retired between the router's choice and the live-set lookup
+    let (tx, rx) = mpsc::channel::<StreamItem>();
+    let mut permit = Some(permit);
+    let mut failure = "no replicas routable";
+    let mut sent = false;
+    for _ in 0..4 {
+        let Some(handle) = state.router.read().unwrap().dispatch() else {
+            break;
+        };
+        let replicas = state.replicas.read().unwrap();
+        let Some(slot) = replicas.get(&handle.id) else {
+            handle.complete(); // stale pick: retired mid-dispatch; retry
+            continue;
+        };
+        let now = Instant::now();
+        let job = Job {
+            prompt: params.prompt.clone(),
+            max_new: params.max_tokens,
+            stream: params.stream,
+            tx: tx.clone(),
+            permit: permit.take().expect("permit consumed once"),
+            handle: Arc::clone(&handle),
+            enqueued_at: now,
+            deadline: now + state.cfg.request_timeout,
+        };
+        // sending under the read lock is the drain invariant: retirement
+        // removes the slot under the write lock *before* asking the worker
+        // to drain, so a job that lands here is always picked up
+        let send_result = slot.tx.lock().unwrap().send(job);
+        drop(replicas);
+        match send_result {
+            Ok(()) => {
+                sent = true;
+            }
+            Err(mpsc::SendError(job)) => {
+                drop(job.release());
+                // the worker died without draining: deroute it so
+                // least-loaded dispatch stops black-holing traffic into it
+                deregister_replica(state, handle.id);
+                crate::error!(
+                    "gateway",
+                    "replica {} worker is down; removed from routing",
+                    handle.id
+                );
+                failure = "replica worker down";
+            }
+        }
+        break;
+    }
+    if !sent {
         drop(permit);
         let resp = http::Response::json(
             503,
-            openai::to_wire(&openai::error_body("service_unavailable", "no replicas routable")),
-        );
-        return finish(req, stream, state, endpoint, t0, resp);
-    };
-
-    let (tx, rx) = mpsc::channel::<StreamItem>();
-    let job = Job {
-        prompt: params.prompt.clone(),
-        max_new: params.max_tokens,
-        stream: params.stream,
-        tx,
-        permit,
-        handle: Arc::clone(&handle),
-    };
-    let sent = {
-        let sender = state.replicas[&handle.id].lock().unwrap().clone();
-        sender.send(job)
-    };
-    if let Err(mpsc::SendError(job)) = sent {
-        drop(job.release()); // never reached the engine: undo accounting
-        // deroute the dead replica: least-loaded dispatch would otherwise
-        // keep preferring it (inflight pinned at 0) and black-hole traffic
-        {
-            let mut router = state.router.write().unwrap();
-            let weights: Vec<(u64, f64)> = router
-                .replicas()
-                .iter()
-                .filter(|r| r.id != handle.id)
-                .map(|r| (r.id, r.weight()))
-                .collect();
-            router.set_weights(&weights);
-        }
-        crate::error!(
-            "gateway",
-            "replica {} worker is down; removed from routing",
-            handle.id
-        );
-        let resp = http::Response::json(
-            503,
-            openai::to_wire(&openai::error_body("service_unavailable", "replica worker down")),
+            openai::to_wire(&openai::error_body("service_unavailable", failure)),
         );
         return finish(req, stream, state, endpoint, t0, resp);
     }
@@ -677,20 +1051,24 @@ fn serve_completion(
     }
 }
 
-/// How long a handler waits for its engine to produce a completion.
-const REQUEST_TIMEOUT: Duration = Duration::from_secs(120);
-
 /// Wait for the next engine item, polling in short slices so
 /// [`Gateway::shutdown`] is never blocked for the full request timeout.
-/// `None` means timed out, gateway stopping, or replica worker gone.
+/// `None` means timed out, gateway stopped without a terminal item, or
+/// replica worker gone.
 fn next_item(
     rx: &Receiver<StreamItem>,
     state: &GatewayState,
     deadline: Instant,
 ) -> Option<StreamItem> {
     loop {
-        if state.stop.load(Ordering::Acquire) || Instant::now() >= deadline {
+        if Instant::now() >= deadline {
             return None;
+        }
+        if state.stop.load(Ordering::Acquire) {
+            // shutdown: the replica workers shed every outstanding job
+            // with a terminal item; wait briefly for it so the client gets
+            // its 503 instead of a timeout on a dying connection
+            return rx.recv_timeout(Duration::from_millis(500)).ok();
         }
         match rx.recv_timeout(Duration::from_millis(250)) {
             Ok(item) => return Some(item),
@@ -712,7 +1090,7 @@ fn unary_response(
     endpoint: &str,
     t0: Instant,
 ) -> std::io::Result<()> {
-    let deadline = Instant::now() + REQUEST_TIMEOUT;
+    let deadline = Instant::now() + state.cfg.request_timeout;
     loop {
         match next_item(rx, state, deadline) {
             Some(StreamItem::Delta { .. }) => continue,
@@ -745,6 +1123,14 @@ fn unary_response(
                     500,
                     openai::to_wire(&openai::error_body("internal_error", &msg)),
                 );
+                return finish(req, stream, state, endpoint, t0, resp);
+            }
+            Some(StreamItem::Unavailable(msg)) => {
+                let resp = http::Response::json(
+                    503,
+                    openai::to_wire(&openai::error_body("service_unavailable", &msg)),
+                )
+                .with_header("Retry-After", "1");
                 return finish(req, stream, state, endpoint, t0, resp);
             }
             None => {
@@ -787,7 +1173,7 @@ fn stream_response(
     // the wire status is already 200 (SSE head is out); this tracks the
     // *outcome* for metrics so incidents are visible on the scrape
     let mut outcome_status = 200u16;
-    let deadline = Instant::now() + REQUEST_TIMEOUT;
+    let deadline = Instant::now() + state.cfg.request_timeout;
     loop {
         match next_item(rx, state, deadline) {
             Some(StreamItem::Delta { text, finish }) => {
@@ -810,15 +1196,23 @@ fn stream_response(
                 }
                 break;
             }
+            Some(StreamItem::Unavailable(msg)) => {
+                outcome_status = 503;
+                if write_failed.is_none() {
+                    let chunk = openai::error_body("service_unavailable", &msg);
+                    let _ = writer.event(&openai::to_wire(&chunk));
+                }
+                break;
+            }
             None => {
-                outcome_status = 504; // engine stalled or gateway stopping
+                outcome_status = 504; // engine stalled or handler deadline
                 break;
             }
         }
     }
 
     // only a cleanly finished stream earns the `[DONE]` success marker; an
-    // errored/stalled stream ends with the bare chunked terminator so
+    // errored/shed/stalled stream ends with the bare chunked terminator so
     // clients can tell truncation from completion
     let io_result = if write_failed.is_none() && outcome_status == 200 {
         writer.done()
@@ -889,21 +1283,34 @@ fn admin_scale(
             Some(w) if w > 0.0 => w,
             _ => return finish(req, stream, state, "/admin/scale", t0, bad("each replica needs a positive \"weight\"")),
         };
-        if !state.replicas.contains_key(&id) {
-            let known: Vec<u64> = state.replicas.keys().copied().collect();
-            return finish(
-                req,
-                stream,
-                state,
-                "/admin/scale",
-                t0,
-                bad(&format!("unknown replica id {id}; live replicas are {known:?}")),
-            );
-        }
         if weights.iter().any(|&(seen, _)| seen == id) {
             return finish(req, stream, state, "/admin/scale", t0, bad(&format!("duplicate replica id {id}")));
         }
         weights.push((id, weight));
+    }
+    // validate the whole id set against *live workers*: weighting a
+    // retired or never-spawned replica would route traffic into the void
+    // (requests would hang until timeout with no worker to serve them)
+    let (unknown, known): (Vec<u64>, Vec<u64>) = {
+        let live = state.replicas.read().unwrap();
+        (
+            weights
+                .iter()
+                .map(|&(id, _)| id)
+                .filter(|id| !live.contains_key(id))
+                .collect(),
+            live.keys().copied().collect(),
+        )
+    };
+    if !unknown.is_empty() {
+        return finish(
+            req,
+            stream,
+            state,
+            "/admin/scale",
+            t0,
+            bad(&format!("unknown replica ids {unknown:?}; live replicas are {known:?}")),
+        );
     }
     state.router.write().unwrap().set_weights(&weights);
     crate::info!("gateway", "ingress update applied: {weights:?}");

@@ -1,0 +1,438 @@
+//! The closed-loop autoscaling supervisor (§IV-B + §V): the paper's
+//! monitor → detect → act loop running *inside* the serving process,
+//! against live replicas instead of the offline simulator that
+//! [`crate::autoscaler`] drives.
+//!
+//! Every `sample_interval` the supervisor averages the newest Table II
+//! frame of each live replica into one cluster row. The first
+//! `calib_samples` rows (healthy traffic assumed) calibrate a
+//! [`ZscoreDetector`] — the same energy + POT-threshold + mean-difference
+//! decision logic the offline loop uses. After calibration each row is
+//! scored: `patience` consecutive anomalous rows with MD > 0 hot-spawn a
+//! replica ([`super::hot_add_replica`]); MD < 0 retires the newest one
+//! with the drain-then-join protocol. A queue-pressure guard scales up
+//! when the cluster-mean queue wait stays over its budget even while the
+//! detector is within threshold — real queue pressure, not only
+//! throughput, drives the decision.
+
+use super::GatewayState;
+use crate::autoscaler::Action;
+use crate::detect::{Detection, ScaleDirection, ZscoreDetector};
+use crate::metrics::Frame;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// cadence at which cluster-averaged frames are sampled and scored
+    pub sample_interval: Duration,
+    /// rows collected (healthy traffic assumed) before the detector is
+    /// calibrated; raised to the detector's minimum internally
+    pub calib_samples: usize,
+    /// consecutive anomalous samples in one direction required to act
+    pub patience: usize,
+    /// minimum wall-clock between scaling actions
+    pub cooldown: Duration,
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    /// scale up when the cluster-mean queue wait stays above this for
+    /// `patience` samples, even if the detector is within threshold;
+    /// zero disables the guard
+    pub queue_wait_budget: Duration,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            sample_interval: Duration::from_secs(1),
+            calib_samples: 30,
+            patience: 3,
+            cooldown: Duration::from_secs(30),
+            min_replicas: 1,
+            max_replicas: 4,
+            queue_wait_budget: Duration::from_millis(500),
+        }
+    }
+}
+
+/// What tripped a scaling decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trigger {
+    /// the anomaly detector (energy over POT threshold, MD direction)
+    Detector,
+    /// the queue-pressure guard (mean queue wait over budget)
+    QueueWait,
+}
+
+/// One executed scaling action.
+#[derive(Debug, Clone)]
+pub struct ScalingEvent {
+    /// seconds since gateway start
+    pub at: f64,
+    pub direction: ScaleDirection,
+    pub action: Action,
+    pub trigger: Trigger,
+    /// detector energy and threshold at decision time
+    pub energy: f64,
+    pub threshold: f64,
+    /// the replica the action spawned or retired
+    pub replica_id: u64,
+    pub replicas_after: usize,
+}
+
+/// Supervisor state shared with `/metrics` and the [`super::Gateway`]
+/// accessors.
+#[derive(Debug, Default)]
+pub(super) struct SupervisorStatus {
+    pub enabled: bool,
+    pub calibrated: bool,
+    pub events: Vec<ScalingEvent>,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub last_energy: f64,
+    pub last_threshold: f64,
+}
+
+impl SupervisorStatus {
+    pub fn new(enabled: bool) -> SupervisorStatus {
+        SupervisorStatus {
+            enabled,
+            ..SupervisorStatus::default()
+        }
+    }
+
+    pub fn snapshot(&self) -> SupervisorSnapshot {
+        SupervisorSnapshot {
+            enabled: self.enabled,
+            calibrated: self.calibrated,
+            scale_ups: self.scale_ups,
+            scale_downs: self.scale_downs,
+            last_energy: self.last_energy,
+            last_threshold: self.last_threshold,
+            events: self.events.len(),
+        }
+    }
+}
+
+/// Cheap copy of the supervisor's state for rendering and tests.
+#[derive(Debug, Clone, Default)]
+pub struct SupervisorSnapshot {
+    pub enabled: bool,
+    pub calibrated: bool,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub last_energy: f64,
+    pub last_threshold: f64,
+    pub events: usize,
+}
+
+/// Consecutive-sample counters feeding the patience rule. Pure logic so
+/// the decision layer is testable without threads or sockets.
+#[derive(Debug, Default)]
+struct Streaks {
+    up: usize,
+    down: usize,
+    wait: usize,
+}
+
+impl Streaks {
+    fn observe(&mut self, d: &Detection, queue_wait: f64, wait_budget: f64) {
+        if d.is_anomaly && d.direction == ScaleDirection::Up {
+            self.up += 1;
+            self.down = 0;
+        } else if d.is_anomaly {
+            self.down += 1;
+            self.up = 0;
+        } else {
+            self.up = 0;
+            self.down = 0;
+        }
+        if wait_budget > 0.0 && queue_wait > wait_budget {
+            self.wait += 1;
+        } else {
+            self.wait = 0;
+        }
+    }
+
+    /// The action the patience rule asks for, if any. Scale-up wins ties:
+    /// under genuine overload both the detector and the queue guard fire,
+    /// and adding capacity is the safe direction.
+    fn decide(&self, patience: usize) -> Option<(ScaleDirection, Trigger)> {
+        let patience = patience.max(1);
+        if self.up >= patience {
+            Some((ScaleDirection::Up, Trigger::Detector))
+        } else if self.wait >= patience {
+            Some((ScaleDirection::Up, Trigger::QueueWait))
+        } else if self.down >= patience {
+            Some((ScaleDirection::Down, Trigger::Detector))
+        } else {
+            None
+        }
+    }
+
+    fn reset(&mut self) {
+        *self = Streaks::default();
+    }
+}
+
+/// Run the supervisor until the gateway stops. Spawned by
+/// [`super::Gateway::start_scalable`] when a [`SupervisorConfig`] is
+/// given.
+pub(super) fn supervisor_loop(state: &Arc<GatewayState>, cfg: SupervisorConfig) {
+    // detector minimums: ZscoreDetector wants ≥15 rows, POT wants ≥20
+    let calib_target = cfg.calib_samples.max(20);
+    let mut calib_frames: Vec<Frame> = Vec::new();
+    let mut detector: Option<ZscoreDetector> = None;
+    let mut streaks = Streaks::default();
+    let mut last_action: Option<Instant> = None;
+
+    crate::info!(
+        "gateway",
+        "autoscaling supervisor up: interval {:?}, calib {} samples, patience {}, \
+         replicas {}..={}",
+        cfg.sample_interval,
+        calib_target,
+        cfg.patience,
+        cfg.min_replicas,
+        cfg.max_replicas
+    );
+
+    loop {
+        if sleep_interruptible(state, cfg.sample_interval) {
+            break;
+        }
+        let Some((frame, queue_wait)) = cluster_sample(state) else {
+            continue;
+        };
+
+        let Some(det) = &detector else {
+            calib_frames.push(frame);
+            if calib_frames.len() >= calib_target {
+                match ZscoreDetector::calibrate_frames(&calib_frames) {
+                    // a zero threshold means the calibration traffic was
+                    // degenerate (constant rows); keep extending the window
+                    Some(d) if d.threshold > 1e-9 => {
+                        crate::info!(
+                            "gateway",
+                            "supervisor calibrated on {} samples (threshold {:.3})",
+                            calib_frames.len(),
+                            d.threshold
+                        );
+                        state.supervisor.lock().unwrap().calibrated = true;
+                        detector = Some(d);
+                    }
+                    _ => {
+                        // bound the window so a forever-idle gateway does
+                        // not grow the buffer unboundedly
+                        let cap = calib_target * 50;
+                        if calib_frames.len() > cap {
+                            calib_frames.drain(..calib_frames.len() - cap / 2);
+                        }
+                    }
+                }
+            }
+            continue;
+        };
+
+        let d = det.detect_frame(&frame);
+        {
+            let mut status = state.supervisor.lock().unwrap();
+            status.last_energy = d.kl;
+            status.last_threshold = d.threshold;
+        }
+        streaks.observe(&d, queue_wait, cfg.queue_wait_budget.as_secs_f64());
+
+        let cooled = last_action
+            .map(|t| t.elapsed() >= cfg.cooldown)
+            .unwrap_or(true);
+        if !cooled {
+            continue;
+        }
+        let Some((direction, trigger)) = streaks.decide(cfg.patience) else {
+            continue;
+        };
+
+        let live = state.replicas.read().unwrap().len();
+        match direction {
+            ScaleDirection::Up if live < cfg.max_replicas => {
+                match super::hot_add_replica(state) {
+                    Ok(id) => {
+                        record_event(state, &d, direction, trigger, Action::AddReplica, id);
+                        last_action = Some(Instant::now());
+                    }
+                    Err(e) => crate::error!("gateway", "supervisor scale-up failed: {e}"),
+                }
+                streaks.reset();
+            }
+            ScaleDirection::Down if live > cfg.min_replicas => {
+                // retire the newest replica: the oldest ids carry the
+                // calibration-era traffic history
+                let id = state.replicas.read().unwrap().keys().max().copied();
+                if let Some(id) = id {
+                    match super::retire_replica(state, id) {
+                        Ok(()) => {
+                            record_event(state, &d, direction, trigger, Action::ScaleDown, id);
+                            last_action = Some(Instant::now());
+                        }
+                        Err(e) => crate::error!("gateway", "supervisor scale-down failed: {e}"),
+                    }
+                }
+                streaks.reset();
+            }
+            // at the configured bound: hold the decision, keep observing
+            _ => streaks.reset(),
+        }
+    }
+}
+
+fn record_event(
+    state: &GatewayState,
+    d: &Detection,
+    direction: ScaleDirection,
+    trigger: Trigger,
+    action: Action,
+    replica_id: u64,
+) {
+    let replicas_after = state.replicas.read().unwrap().len();
+    let event = ScalingEvent {
+        at: state.started.elapsed().as_secs_f64(),
+        direction,
+        action,
+        trigger,
+        energy: d.kl,
+        threshold: d.threshold,
+        replica_id,
+        replicas_after,
+    };
+    crate::info!(
+        "gateway",
+        "supervisor action: {:?} via {:?} (energy {:.3} > {:.3}) -> replica {} ({} live)",
+        action,
+        trigger,
+        d.kl,
+        d.threshold,
+        replica_id,
+        replicas_after
+    );
+    let mut status = state.supervisor.lock().unwrap();
+    match direction {
+        ScaleDirection::Up => status.scale_ups += 1,
+        ScaleDirection::Down => status.scale_downs += 1,
+    }
+    status.events.push(event);
+}
+
+/// Average the newest Table II frame (and mean queue wait) of every live
+/// replica into one detector row. `None` until at least one replica has
+/// recorded a frame.
+fn cluster_sample(state: &GatewayState) -> Option<(Frame, f64)> {
+    let ids: Vec<u64> = state.replicas.read().unwrap().keys().copied().collect();
+    if ids.is_empty() {
+        return None;
+    }
+    let store = state.store.lock().unwrap();
+    let mut acc = [0.0f64; 8];
+    let mut wait = 0.0f64;
+    let mut n = 0usize;
+    for id in &ids {
+        let instance = format!("replica-{id}");
+        let frames = crate::metrics::recent_frames(&store, &instance, 1);
+        let Some(f) = frames.last() else { continue };
+        for (a, v) in acc.iter_mut().zip(f.to_array()) {
+            *a += v;
+        }
+        wait += store
+            .series(super::QUEUE_WAIT, &instance)
+            .and_then(|s| s.last())
+            .unwrap_or(0.0);
+        n += 1;
+    }
+    if n == 0 {
+        return None;
+    }
+    for a in acc.iter_mut() {
+        *a /= n as f64;
+    }
+    Some((Frame::from_array(acc), wait / n as f64))
+}
+
+/// Sleep `total` in short slices; true means the gateway is stopping.
+fn sleep_interruptible(state: &GatewayState, total: Duration) -> bool {
+    let deadline = Instant::now() + total;
+    loop {
+        if state.stop.load(Ordering::Acquire) {
+            return true;
+        }
+        match deadline.checked_duration_since(Instant::now()) {
+            None => return false,
+            Some(rem) => std::thread::sleep(rem.min(Duration::from_millis(20))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det(anomaly: bool, direction: ScaleDirection) -> Detection {
+        Detection {
+            kl: if anomaly { 10.0 } else { 0.1 },
+            threshold: 1.0,
+            is_anomaly: anomaly,
+            direction,
+        }
+    }
+
+    #[test]
+    fn patience_gates_detector_decisions() {
+        let mut s = Streaks::default();
+        s.observe(&det(true, ScaleDirection::Up), 0.0, 1.0);
+        assert_eq!(s.decide(2), None, "one anomalous sample is not enough");
+        s.observe(&det(true, ScaleDirection::Up), 0.0, 1.0);
+        assert_eq!(s.decide(2), Some((ScaleDirection::Up, Trigger::Detector)));
+        // a healthy sample resets the streak
+        s.observe(&det(false, ScaleDirection::Up), 0.0, 1.0);
+        assert_eq!(s.decide(2), None);
+    }
+
+    #[test]
+    fn down_streak_requires_consecutive_underload() {
+        let mut s = Streaks::default();
+        for _ in 0..3 {
+            s.observe(&det(true, ScaleDirection::Down), 0.0, 1.0);
+        }
+        assert_eq!(s.decide(3), Some((ScaleDirection::Down, Trigger::Detector)));
+        // flipping direction restarts from zero
+        s.observe(&det(true, ScaleDirection::Up), 0.0, 1.0);
+        assert_eq!(s.decide(3), None);
+    }
+
+    #[test]
+    fn queue_wait_guard_fires_without_detector_anomaly() {
+        let mut s = Streaks::default();
+        for _ in 0..2 {
+            s.observe(&det(false, ScaleDirection::Up), 2.0, 1.0);
+        }
+        assert_eq!(s.decide(2), Some((ScaleDirection::Up, Trigger::QueueWait)));
+        // wait back under budget resets the guard
+        s.observe(&det(false, ScaleDirection::Up), 0.5, 1.0);
+        assert_eq!(s.decide(2), None);
+        // zero budget disables the guard entirely
+        let mut s = Streaks::default();
+        for _ in 0..5 {
+            s.observe(&det(false, ScaleDirection::Up), 100.0, 0.0);
+        }
+        assert_eq!(s.decide(2), None);
+    }
+
+    #[test]
+    fn detector_up_outranks_queue_guard_and_down() {
+        let mut s = Streaks::default();
+        for _ in 0..3 {
+            s.observe(&det(true, ScaleDirection::Up), 2.0, 1.0);
+        }
+        // both up and wait streaks are ≥ patience; the detector wins
+        assert_eq!(s.decide(2), Some((ScaleDirection::Up, Trigger::Detector)));
+    }
+}

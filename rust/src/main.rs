@@ -13,7 +13,9 @@ COMMANDS:
   serve       serve prompts on the compiled tiny LM (options: --prompts N --max-tokens N)
   serve-http  OpenAI-compatible HTTP gateway (--port 8080 --replicas 2 --engine auto|lm|sim
               --max-num-seqs N --max-tokens N --max-pending N --rate RPS --burst N
-              --http-workers N --sim-delay-ms N --host ADDR)
+              --http-workers N --sim-delay-ms N --host ADDR --queue-budget-ms N
+              --autoscale [--min-replicas N --max-replicas N --scale-interval-ms N
+              --calib-samples N --patience N --cooldown-ms N --queue-wait-budget-ms N])
   recommend   run the service configuration module for --model <name> --gpu <name>
   detect      calibrate + run the performance detector on the trace dataset
   simulate    simulate a replica (--model --gpu --rps --seconds --max-num-seqs)
@@ -21,7 +23,7 @@ COMMANDS:
 ";
 
 fn main() -> anyhow::Result<()> {
-    let mut args = Args::from_env_known(&["verbose"]);
+    let mut args = Args::from_env_known(&["verbose", "autoscale"]);
     let cmd = args.subcommand();
     match cmd.as_str() {
         "serve" => serve(&args),
@@ -82,12 +84,16 @@ fn serve(args: &Args) -> anyhow::Result<()> {
 
 /// `enova serve-http`: the OpenAI-compatible serving gateway. `--engine
 /// auto` (default) uses the compiled LM when artifacts exist and falls
-/// back to the deterministic sim engine otherwise.
+/// back to the deterministic sim engine otherwise. With `--autoscale`,
+/// the closed-loop supervisor hot-adds / retires replicas from the
+/// performance detector's decisions.
 fn serve_http(args: &Args) -> anyhow::Result<()> {
     use enova::engine::sim::{SimEngine, SimEngineConfig};
     use enova::engine::{Engine, EngineConfig, StreamEngine};
-    use enova::gateway::{EngineFactory, Gateway, GatewayConfig};
+    use enova::gateway::supervisor::SupervisorConfig;
+    use enova::gateway::{EngineSpawner, Gateway, GatewayConfig};
     use enova::runtime::lm::{ExecMode, LmRuntime};
+    use std::sync::Arc;
     use std::time::Duration;
 
     let replicas = args.get_usize("replicas", 2).max(1);
@@ -110,32 +116,43 @@ fn serve_http(args: &Args) -> anyhow::Result<()> {
         other => anyhow::bail!("--engine must be auto, lm or sim (got {other:?})"),
     };
 
+    // a reusable spawner (not one-shot factories) so the supervisor can
+    // hot-add replicas beyond the initial set
     let use_lm = engine_kind == "lm";
-    let factories: Vec<EngineFactory> = (0..replicas as u64)
-        .map(|id| -> EngineFactory {
-            if use_lm {
-                Box::new(move || {
-                    let m = enova::runtime::Manifest::load(&enova::runtime::Manifest::default_dir())?;
-                    let rt = enova::runtime::PjRt::cpu()?;
-                    let lm = LmRuntime::load(rt, &m, ExecMode::Chained)?;
-                    let cfg = EngineConfig {
-                        max_num_seqs,
-                        max_tokens,
-                        temperature,
-                    };
-                    Ok(Box::new(Engine::new(lm, cfg, 100 + id)) as Box<dyn StreamEngine>)
-                })
-            } else {
-                Box::new(move || {
-                    Ok(Box::new(SimEngine::new(SimEngineConfig {
-                        max_num_seqs,
-                        max_tokens,
-                        step_delay: sim_delay,
-                    })) as Box<dyn StreamEngine>)
-                })
-            }
+    let spawner: EngineSpawner = if use_lm {
+        Arc::new(move |id| {
+            let m = enova::runtime::Manifest::load(&enova::runtime::Manifest::default_dir())?;
+            let rt = enova::runtime::PjRt::cpu()?;
+            let lm = LmRuntime::load(rt, &m, ExecMode::Chained)?;
+            let cfg = EngineConfig {
+                max_num_seqs,
+                max_tokens,
+                temperature,
+            };
+            Ok(Box::new(Engine::new(lm, cfg, 100 + id)) as Box<dyn StreamEngine>)
         })
-        .collect();
+    } else {
+        Arc::new(move |_id| {
+            Ok(Box::new(SimEngine::new(SimEngineConfig {
+                max_num_seqs,
+                max_tokens,
+                step_delay: sim_delay,
+            })) as Box<dyn StreamEngine>)
+        })
+    };
+
+    let autoscale = args.flag("autoscale");
+    let supervisor = autoscale.then(|| SupervisorConfig {
+        sample_interval: Duration::from_millis(args.get_usize("scale-interval-ms", 1000) as u64),
+        calib_samples: args.get_usize("calib-samples", 30),
+        patience: args.get_usize("patience", 3),
+        cooldown: Duration::from_millis(args.get_usize("cooldown-ms", 30_000) as u64),
+        min_replicas: args.get_usize("min-replicas", 1).max(1),
+        max_replicas: args.get_usize("max-replicas", replicas.max(4)),
+        queue_wait_budget: Duration::from_millis(
+            args.get_usize("queue-wait-budget-ms", 500) as u64,
+        ),
+    });
 
     let port = args.get_usize("port", 8080);
     anyhow::ensure!(port <= u16::MAX as usize, "--port must be 0..=65535 (got {port})");
@@ -147,12 +164,14 @@ fn serve_http(args: &Args) -> anyhow::Result<()> {
         rate_limit: args.get_f64("rate", 0.0),
         rate_burst: args.get_usize("burst", 64),
         http_workers: args.get_usize("http-workers", 64),
+        queue_budget: Duration::from_millis(args.get_usize("queue-budget-ms", 0) as u64),
         ..GatewayConfig::default()
     };
-    let gw = Gateway::start(cfg, factories)?;
+    let gw = Gateway::start_scalable(cfg, spawner, replicas, supervisor)?;
     println!(
-        "enova gateway: {replicas}x {engine_kind} replica(s) on http://{}",
-        gw.addr
+        "enova gateway: {replicas}x {engine_kind} replica(s) on http://{} (autoscale: {})",
+        gw.addr,
+        if autoscale { "on" } else { "off" }
     );
     println!("  try: curl -s http://{}/healthz", gw.addr);
     gw.serve_forever();

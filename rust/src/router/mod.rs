@@ -128,6 +128,12 @@ impl WeightedRouter {
     pub fn replicas(&self) -> &[Arc<ReplicaHandle>] {
         &self.replicas
     }
+
+    /// The current `(id, weight)` set — the base input for add-one /
+    /// remove-one reconfigurations (replica hot-add and retirement).
+    pub fn weights(&self) -> Vec<(u64, f64)> {
+        self.replicas.iter().map(|r| (r.id, r.weight())).collect()
+    }
 }
 
 #[cfg(test)]
@@ -206,6 +212,20 @@ mod tests {
         assert_eq!(r0.inflight(), 1, "first occurrence kept the live handle");
         router.complete(&h);
         assert_eq!(r0.inflight(), 0);
+    }
+
+    #[test]
+    fn weights_roundtrip_through_set_weights() {
+        let mut router = WeightedRouter::new(&[(0, 1.0), (3, 0.5)]);
+        assert_eq!(router.weights(), vec![(0, 1.0), (3, 0.5)]);
+        // add-one update built on weights(): existing handles survive
+        let h = router.dispatch().unwrap();
+        let mut w = router.weights();
+        w.push((7, 2.0));
+        router.set_weights(&w);
+        assert_eq!(router.len(), 3);
+        let kept = router.replicas().iter().find(|r| r.id == h.id).unwrap();
+        assert_eq!(kept.inflight(), 1);
     }
 
     #[test]

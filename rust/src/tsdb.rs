@@ -118,6 +118,12 @@ impl MetricStore {
             .collect()
     }
 
+    /// Drop every series of an instance (all metrics). Used when a replica
+    /// is retired so exports stop showing frozen gauges for dead workers.
+    pub fn remove_instance(&mut self, instance: &str) {
+        self.series.retain(|k, _| k.instance != instance);
+    }
+
     pub fn export_csv(&self, metric: &str, instance: &str) -> String {
         let mut out = String::from("t,value\n");
         if let Some(s) = self.series(metric, instance) {
@@ -180,6 +186,19 @@ mod tests {
         assert_eq!(w.len(), 10);
         assert_eq!(w[0], 950.0);
         assert_eq!(store.series("m", "i").unwrap().last(), Some(999.0));
+    }
+
+    #[test]
+    fn remove_instance_drops_all_its_series() {
+        let mut store = MetricStore::new();
+        store.push("n_running", "replica-0", 0.0, 1.0);
+        store.push("n_pending", "replica-0", 0.0, 2.0);
+        store.push("n_running", "replica-1", 0.0, 3.0);
+        store.remove_instance("replica-0");
+        assert!(store.series("n_running", "replica-0").is_none());
+        assert!(store.series("n_pending", "replica-0").is_none());
+        assert_eq!(store.series("n_running", "replica-1").unwrap().last(), Some(3.0));
+        assert_eq!(store.instances("n_running"), vec!["replica-1"]);
     }
 
     #[test]

@@ -413,3 +413,173 @@ fn malformed_http_is_4xx_not_panic() {
 
     gw.shutdown();
 }
+
+/// Satellite regression: a multi-request closed loop must reuse sockets
+/// (HTTP/1.1 keep-alive), not dial one TCP connection per request.
+#[test]
+fn closed_loop_reuses_keep_alive_connections() {
+    let gw = sim_gateway(2, 256, 0, 16, 0.0, 64);
+    let addr = gw.addr_string();
+
+    let report = loadgen::run(
+        &addr,
+        &loadgen::LoadgenConfig {
+            concurrency: 4,
+            requests_per_worker: 8,
+            max_tokens: 4,
+            stream_every: 3, // mix of SSE and unary on the same sockets
+            chat_every: 5,
+            prompt_prefix: "keep-alive".into(),
+        },
+    );
+    assert_eq!(report.errors, 0, "{}", report.summary());
+    assert_eq!(report.count(200), 32, "{}", report.summary());
+    assert_eq!(
+        report.connections_opened, 4,
+        "each worker must hold one socket for its whole sequence: {}",
+        report.summary()
+    );
+
+    gw.shutdown();
+}
+
+/// A single client reuses its connection across unary, SSE and admin
+/// exchanges.
+#[test]
+fn client_reuses_one_socket_across_request_kinds() {
+    let gw = sim_gateway(1, 64, 0, 8, 0.0, 64);
+    let addr = gw.addr_string();
+
+    let mut client = loadgen::Client::new(&addr);
+    let h = client.get("/healthz").unwrap();
+    assert_eq!(h.status, 200);
+    let unary = client
+        .post_json("/v1/completions", "{\"prompt\": \"one socket\", \"max_tokens\": 3}")
+        .unwrap();
+    assert_eq!(unary.status, 200);
+    let streamed = client
+        .post_json(
+            "/v1/completions",
+            "{\"prompt\": \"one socket\", \"max_tokens\": 3, \"stream\": true}",
+        )
+        .unwrap();
+    assert_eq!(streamed.status, 200);
+    assert_eq!(streamed.sse_data().last().map(String::as_str), Some("[DONE]"));
+    let m = client.get("/metrics").unwrap();
+    assert_eq!(m.status, 200);
+    assert_eq!(client.connections_opened, 1, "all four exchanges on one socket");
+
+    gw.shutdown();
+}
+
+/// Satellite regression: shutdown must fail in-flight jobs with a 503 (and
+/// a terminal SSE event for streams) instead of silently dropping them and
+/// leaving clients blocked on dead connections.
+#[test]
+fn shutdown_fails_inflight_requests_with_503() {
+    // slow engine: 400 tokens at 20ms/step keeps requests in flight for
+    // ~8s, far past the shutdown point
+    let gw = sim_gateway(1, 8, 20, 400, 0.0, 64);
+    let addr = gw.addr_string();
+
+    let slow_unary = "{\"prompt\": \"hold unary\", \"max_tokens\": 400}";
+    let slow_stream = "{\"prompt\": \"hold stream\", \"max_tokens\": 400, \"stream\": true}";
+    let unary_thread = {
+        let addr = addr.clone();
+        std::thread::spawn(move || loadgen::post_json(&addr, "/v1/completions", slow_unary))
+    };
+    let stream_thread = {
+        let addr = addr.clone();
+        std::thread::spawn(move || loadgen::post_json(&addr, "/v1/completions", slow_stream))
+    };
+
+    // wait until both requests are admitted and running
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let scrape = loadgen::get(&addr, "/metrics").unwrap();
+        let samples = parse_exposition(&scrape.body_str()).unwrap();
+        let inflight = samples
+            .iter()
+            .find(|s| s.name == "enova_gateway_inflight_requests")
+            .map(|s| s.value)
+            .unwrap_or(0.0);
+        if inflight >= 2.0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "requests not admitted, inflight={inflight}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    gw.shutdown();
+
+    let unary = unary_thread.join().unwrap().expect("unary got a response");
+    assert_eq!(unary.status, 503, "in-flight unary answered, not dropped");
+    assert_eq!(
+        unary.json().unwrap().at(&["error", "type"]).unwrap().as_str(),
+        Some("service_unavailable")
+    );
+
+    let streamed = stream_thread.join().unwrap().expect("stream got a response");
+    assert_eq!(streamed.status, 200, "SSE head was already out");
+    let events = streamed.sse_data();
+    assert!(
+        events.iter().any(|e| e.contains("service_unavailable")),
+        "terminal SSE error event present: {events:?}"
+    );
+    assert_ne!(
+        events.last().map(String::as_str),
+        Some("[DONE]"),
+        "an interrupted stream must not claim success"
+    );
+}
+
+/// Satellite regression: jobs that overshoot the queue-time budget are
+/// shed with a 503 before ever occupying engine capacity.
+#[test]
+fn queue_budget_sheds_overdue_jobs_with_503() {
+    // one replica with a single engine slot and 30ms steps: the second
+    // concurrent request waits in the worker queue behind an ~1.2s run,
+    // far past the 100ms budget
+    let factories: Vec<EngineFactory> = vec![Box::new(|| {
+        Ok(Box::new(SimEngine::new(SimEngineConfig {
+            max_num_seqs: 1,
+            max_tokens: 64,
+            step_delay: Duration::from_millis(30),
+        })) as Box<dyn StreamEngine>)
+    })];
+    let gw = Gateway::start(
+        GatewayConfig {
+            max_tokens_default: 64,
+            queue_budget: Duration::from_millis(100),
+            ..Default::default()
+        },
+        factories,
+    )
+    .unwrap();
+    let addr = gw.addr_string();
+
+    let hold = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            loadgen::post_json(&addr, "/v1/completions", "{\"prompt\": \"hog\", \"max_tokens\": 40}")
+        })
+    };
+    // let the hog occupy the only slot
+    std::thread::sleep(Duration::from_millis(200));
+    let shed = loadgen::post_json(&addr, "/v1/completions", "{\"prompt\": \"late\", \"max_tokens\": 2}")
+        .unwrap();
+    assert_eq!(shed.status, 503, "queued past budget -> shed: {}", shed.body_str());
+    assert!(shed.body_str().contains("queue-time budget"));
+
+    let held = hold.join().unwrap().unwrap();
+    assert_eq!(held.status, 200, "the running request was not disturbed");
+
+    // the shed is visible on the scrape
+    let scrape = loadgen::get(&addr, "/metrics").unwrap();
+    let samples = parse_exposition(&scrape.body_str()).unwrap();
+    assert!(samples
+        .iter()
+        .any(|s| s.name == "enova_gateway_queue_shed_total" && s.value >= 1.0));
+
+    gw.shutdown();
+}

@@ -1,0 +1,265 @@
+//! End-to-end tests of the closed autoscaling loop on the live gateway,
+//! over real sockets against the deterministic sim engine: sustained
+//! overload → the detector fires → an engine worker is hot-spawned and
+//! receives traffic → retirement drains without dropping in-flight work.
+
+use enova::autoscaler::Action;
+use enova::detect::ScaleDirection;
+use enova::engine::sim::{SimEngine, SimEngineConfig};
+use enova::engine::StreamEngine;
+use enova::gateway::supervisor::{SupervisorConfig, Trigger};
+use enova::gateway::{loadgen, EngineSpawner, Gateway, GatewayConfig};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn sim_spawner(max_num_seqs: usize, step_delay_ms: u64) -> EngineSpawner {
+    Arc::new(move |_id| {
+        Ok(Box::new(SimEngine::new(SimEngineConfig {
+            max_num_seqs,
+            max_tokens: 64,
+            step_delay: Duration::from_millis(step_delay_ms),
+        })) as Box<dyn StreamEngine>)
+    })
+}
+
+/// The full live loop, deterministically: calibrate on healthy traffic,
+/// overload, watch the detector hot-spawn a replica that then serves
+/// traffic, and verify p95 TTFT recovers within the test horizon.
+#[test]
+fn overload_triggers_detector_scale_up_and_ttft_recovers() {
+    let cfg = GatewayConfig {
+        max_pending: 512,
+        max_tokens_default: 16,
+        monitor_interval: Duration::from_millis(25),
+        ..Default::default()
+    };
+    let sup = SupervisorConfig {
+        sample_interval: Duration::from_millis(50),
+        calib_samples: 20,
+        patience: 2,
+        cooldown: Duration::from_secs(2),
+        min_replicas: 1,
+        max_replicas: 3,
+        // out of the way: this test must prove the *detector* path
+        queue_wait_budget: Duration::from_secs(3600),
+    };
+    let gw = Gateway::start_scalable(cfg, sim_spawner(2, 10), 1, Some(sup)).unwrap();
+    let addr = gw.addr_string();
+    assert!(gw.supervisor_snapshot().enabled);
+
+    // phase 1 — calibration: light sequential traffic gives the detector
+    // a healthy baseline with natural frame variance
+    let mut client = loadgen::Client::new(&addr);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !gw.supervisor_snapshot().calibrated {
+        let r = client
+            .post_json("/v1/completions", "{\"prompt\": \"calibration\", \"max_tokens\": 2}")
+            .unwrap();
+        assert_eq!(r.status, 200);
+        assert!(Instant::now() < deadline, "supervisor never calibrated");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(gw.live_replicas(), vec![0], "healthy traffic must not scale");
+
+    // phase 2 — sustained overload: 16 closed-loop workers against one
+    // 2-slot engine with 10ms steps pushes n^p far outside calibration
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut load = Vec::new();
+    for w in 0..16 {
+        let addr = addr.clone();
+        let stop = Arc::clone(&stop);
+        load.push(std::thread::spawn(move || {
+            let mut client = loadgen::Client::new(&addr);
+            let mut k = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let body =
+                    format!("{{\"prompt\": \"overload w{w} r{k}\", \"max_tokens\": 24}}");
+                let _ = client.post_json("/v1/completions", &body);
+                k += 1;
+            }
+        }));
+    }
+
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while gw.live_replicas().len() < 2 {
+        assert!(
+            Instant::now() < deadline,
+            "no scale-up within the horizon; snapshot: {:?}",
+            gw.supervisor_snapshot()
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    let events = gw.scaling_events();
+    assert!(!events.is_empty());
+    let ev = &events[0];
+    assert_eq!(ev.direction, ScaleDirection::Up);
+    assert_eq!(ev.action, Action::AddReplica);
+    assert_eq!(ev.trigger, Trigger::Detector, "detector, not the queue guard");
+    assert!(ev.energy > ev.threshold, "{ev:?}");
+    assert!(ev.replicas_after >= 2);
+
+    // the hot-spawned worker receives traffic
+    let new_id = ev.replica_id;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let served = gw
+            .replica_stats()
+            .iter()
+            .any(|&(id, _, dispatched)| id == new_id && dispatched > 0);
+        if served {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "hot-added replica {new_id} never dispatched to: {:?}",
+            gw.replica_stats()
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+
+    // ...and its Table II frames appear on the scrape
+    let scrape = client.get("/metrics").unwrap();
+    assert!(scrape
+        .body_str()
+        .contains(&format!("instance=\"replica-{new_id}\"")));
+
+    stop.store(true, Ordering::Relaxed);
+    for h in load {
+        let _ = h.join();
+    }
+
+    // phase 3 — recovery: with the scaled-out set and the burst over, p95
+    // TTFT (~= unary latency at max_tokens 1) is back to interactive
+    let mut lat: Vec<f64> = Vec::new();
+    for k in 0..20 {
+        let t0 = Instant::now();
+        let r = client
+            .post_json(
+                "/v1/completions",
+                &format!("{{\"prompt\": \"probe {k}\", \"max_tokens\": 1}}"),
+            )
+            .unwrap();
+        assert_eq!(r.status, 200);
+        lat.push(t0.elapsed().as_secs_f64());
+    }
+    lat.sort_by(f64::total_cmp);
+    let p95 = lat[(lat.len() * 95 / 100).min(lat.len() - 1)];
+    assert!(p95 < 2.0, "p95 TTFT did not recover within the horizon: {p95:.3}s");
+
+    gw.shutdown();
+}
+
+/// Replica lifecycle without the supervisor: hot-add serves traffic, and
+/// the retire path drains without dropping an in-flight request. Also the
+/// /admin/scale regression: a retired id is rejected with a 400 naming it.
+#[test]
+fn hot_add_then_drain_retire_without_dropping_inflight() {
+    let gw = Gateway::start_scalable(
+        GatewayConfig {
+            max_tokens_default: 64,
+            ..Default::default()
+        },
+        sim_spawner(4, 10),
+        1,
+        None,
+    )
+    .unwrap();
+    let addr = gw.addr_string();
+    assert_eq!(gw.live_replicas(), vec![0]);
+
+    let added = gw.add_replica().unwrap();
+    assert_eq!(added, 1);
+    assert_eq!(gw.live_replicas(), vec![0, 1]);
+    let ready = loadgen::get(&addr, "/ready").unwrap();
+    assert_eq!(ready.status, 200, "{}", ready.body_str());
+    assert!(ready.body_str().contains("\"replicas\":2"));
+
+    // park one slow request on each replica, staggered so least-loaded
+    // dispatch deterministically picks the idle one the second time
+    let slow = "{\"prompt\": \"hold during retire\", \"max_tokens\": 150}";
+    let mut holders = Vec::new();
+    for round in 1..=2u64 {
+        let addr = addr.clone();
+        holders.push(std::thread::spawn(move || {
+            loadgen::post_json(&addr, "/v1/completions", slow)
+        }));
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let stats = gw.replica_stats();
+            let busy = stats.iter().filter(|&&(_, inflight, _)| inflight >= 1).count();
+            if busy as u64 >= round {
+                break;
+            }
+            assert!(Instant::now() < deadline, "round {round} not placed: {stats:?}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    let stats = gw.replica_stats();
+    assert!(
+        stats.iter().all(|&(_, inflight, _)| inflight == 1),
+        "one held request per replica: {stats:?}"
+    );
+
+    // retire the busy new replica: blocks until its in-flight request
+    // finished — nothing is dropped
+    gw.retire_replica(added).unwrap();
+    assert_eq!(gw.live_replicas(), vec![0]);
+    for h in holders {
+        let resp = h.join().unwrap().unwrap();
+        assert_eq!(resp.status, 200, "drained, not dropped: {}", resp.body_str());
+        let tokens = resp
+            .json()
+            .unwrap()
+            .at(&["usage", "completion_tokens"])
+            .and_then(enova::util::json::Json::as_usize);
+        assert_eq!(tokens, Some(64), "the drained request ran to completion");
+    }
+
+    // satellite regression: the ingress-update path validates ids against
+    // live workers and names the unknown ones
+    let bad = loadgen::post_json(
+        &addr,
+        "/admin/scale",
+        "{\"replicas\": [{\"id\": 0, \"weight\": 1.0}, {\"id\": 1, \"weight\": 1.0}]}",
+    )
+    .unwrap();
+    assert_eq!(bad.status, 400, "retired replica must not be weightable");
+    let msg = bad.body_str();
+    assert!(msg.contains("unknown replica ids [1]"), "names the dead id: {msg}");
+    assert!(msg.contains("live replicas are [0]"), "names the live set: {msg}");
+
+    // several unknown ids are all named
+    let bad2 = loadgen::post_json(
+        &addr,
+        "/admin/scale",
+        "{\"replicas\": [{\"id\": 5, \"weight\": 1.0}, {\"id\": 9, \"weight\": 1.0}]}",
+    )
+    .unwrap();
+    assert_eq!(bad2.status, 400);
+    assert!(bad2.body_str().contains("unknown replica ids [5, 9]"), "{}", bad2.body_str());
+
+    // the survivor still serves
+    let ok = loadgen::post_json(&addr, "/v1/completions", "{\"prompt\": \"after\", \"max_tokens\": 2}")
+        .unwrap();
+    assert_eq!(ok.status, 200);
+
+    // retiring the last routable replica is refused
+    assert!(gw.retire_replica(0).is_err());
+
+    gw.shutdown();
+}
+
+/// A gateway started with fixed factories (no spawner) cannot hot-add and
+/// says so instead of panicking.
+#[test]
+fn fixed_gateway_has_no_hot_add() {
+    use enova::gateway::EngineFactory;
+    let factories: Vec<EngineFactory> = vec![Box::new(|| {
+        Ok(Box::new(SimEngine::new(SimEngineConfig::default())) as Box<dyn StreamEngine>)
+    })];
+    let gw = Gateway::start(GatewayConfig::default(), factories).unwrap();
+    let err = gw.add_replica().unwrap_err().to_string();
+    assert!(err.contains("spawner"), "{err}");
+    gw.shutdown();
+}

@@ -11,6 +11,13 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "==> cargo clippy -- -D warnings"
+    cargo clippy -- -D warnings
+else
+    echo "==> cargo clippy unavailable; skipping lint"
+fi
+
 if [[ "${1:-}" != "--no-fmt" ]]; then
     if cargo fmt --version >/dev/null 2>&1; then
         echo "==> cargo fmt --check"
