@@ -1,24 +1,27 @@
 //! End-to-end gateway demo: boot the OpenAI-compatible HTTP gateway on an
-//! ephemeral port, drive it closed-loop over real sockets with the
-//! built-in load generator (unary + streaming + chat traffic on keep-alive
-//! connections), hot-add a replica at runtime, apply an ingress update
-//! through /admin/scale, retire the replica with the drain protocol, and
-//! scrape /metrics. Runs against the compiled tiny LM when artifacts
-//! exist, the deterministic sim engine otherwise — so this demo works in
-//! any environment.
+//! ephemeral port with a warm replica pool, drive it closed-loop over real
+//! sockets with the built-in load generator (unary + streaming + chat
+//! traffic on keep-alive connections), promote a replica from the warm
+//! pool at runtime, apply a live `max_num_seqs`/`gpu_memory`
+//! reconfiguration to a running replica, apply an ingress update through
+//! /admin/scale, retire a replica (demoting it back to warm), and scrape
+//! /metrics. Runs against the compiled tiny LM when the build has the
+//! xla-runtime feature and artifacts exist, the deterministic sim engine
+//! otherwise — so this demo works in any environment.
 
 use enova::engine::sim::{SimEngine, SimEngineConfig};
-use enova::engine::{Engine, EngineConfig, StreamEngine};
+use enova::engine::StreamEngine;
 use enova::gateway::{loadgen, metrics::parse_exposition, EngineSpawner, Gateway, GatewayConfig};
-use enova::runtime::lm::{ExecMode, LmRuntime};
-use enova::runtime::{Manifest, PjRt};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-fn main() -> anyhow::Result<()> {
-    let replicas = 2usize;
-    let use_lm = Manifest::artifacts_exist();
-    let spawner: EngineSpawner = if use_lm {
-        Arc::new(|id| {
+#[cfg(feature = "xla-runtime")]
+fn make_spawner() -> (EngineSpawner, &'static str) {
+    use enova::engine::{Engine, EngineConfig};
+    use enova::runtime::lm::{ExecMode, LmRuntime};
+    use enova::runtime::{Manifest, PjRt};
+    if Manifest::artifacts_exist() {
+        let spawner: EngineSpawner = Arc::new(|id| {
             let m = Manifest::load(&Manifest::default_dir())?;
             let lm = LmRuntime::load(PjRt::cpu()?, &m, ExecMode::Chained)?;
             let cfg = EngineConfig {
@@ -27,23 +30,39 @@ fn main() -> anyhow::Result<()> {
                 temperature: 0.7,
             };
             Ok(Box::new(Engine::new(lm, cfg, 100 + id)) as Box<dyn StreamEngine>)
-        })
+        });
+        (spawner, "compiled LM")
     } else {
-        Arc::new(|_id| {
-            Ok(Box::new(SimEngine::new(SimEngineConfig {
-                max_num_seqs: 8,
-                max_tokens: 16,
-                ..Default::default()
-            })) as Box<dyn StreamEngine>)
-        })
-    };
+        (sim_spawner(), "sim")
+    }
+}
 
-    let gw = Gateway::start_scalable(GatewayConfig::default(), spawner, replicas, None)?;
+#[cfg(not(feature = "xla-runtime"))]
+fn make_spawner() -> (EngineSpawner, &'static str) {
+    (sim_spawner(), "sim")
+}
+
+fn sim_spawner() -> EngineSpawner {
+    Arc::new(|_id| {
+        Ok(Box::new(SimEngine::new(SimEngineConfig {
+            max_num_seqs: 8,
+            max_tokens: 16,
+            ..Default::default()
+        })) as Box<dyn StreamEngine>)
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let replicas = 2usize;
+    let (spawner, kind) = make_spawner();
+
+    let cfg = GatewayConfig {
+        warm_pool: 1,
+        ..GatewayConfig::default()
+    };
+    let gw = Gateway::start_scalable(cfg, spawner, replicas, None)?;
     let addr = gw.addr_string();
-    println!(
-        "gateway up on http://{addr} ({} engine)",
-        if use_lm { "compiled LM" } else { "sim" }
-    );
+    println!("gateway up on http://{addr} ({kind} engine, warm pool 1)");
 
     // one interactive-style exchange first
     let resp = loadgen::post_json(
@@ -67,9 +86,37 @@ fn main() -> anyhow::Result<()> {
     );
     println!("\nloadgen: {}", report.summary());
 
-    // the replica lifecycle the autoscaling supervisor drives: hot-add...
+    // scale-up the way the supervisor does it: the warm pool hides engine
+    // init, so promotion is O(route-update)
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while gw.warm_pool_size() < 1 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let t0 = Instant::now();
     let added = gw.add_replica()?;
-    println!("\nhot-added replica {added}; live set: {:?}", gw.live_replicas());
+    println!(
+        "\npromoted replica {added} in {:.1}ms (warm pool now {}); live set: {:?}",
+        t0.elapsed().as_secs_f64() * 1e3,
+        gw.warm_pool_size(),
+        gw.live_replicas()
+    );
+
+    // the live Fig. 6 knob: mutate a running replica's capacity without a
+    // relaunch — in production the supervisor derives this from the live
+    // Table II window (§IV-A) with --reconfig
+    gw.reconfigure_replica(added, 16, 0.95)?;
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while Instant::now() < deadline {
+        if gw
+            .replica_capacities()
+            .iter()
+            .any(|&(id, cap)| id == added && cap == 16)
+        {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    println!("reconfigured replica {added} live: capacities {:?}", gw.replica_capacities());
 
     // ...reweight through the autoscaler's ingress-update path...
     let resp = loadgen::post_json(
@@ -82,9 +129,14 @@ fn main() -> anyhow::Result<()> {
     )?;
     println!("POST /admin/scale -> {} {}", resp.status, resp.body_str());
 
-    // ...and retire it again: deroute, drain in-flight work, join
+    // ...and retire it again: demoted back to a warm standby when the
+    // pool is below target, drained-then-joined otherwise
     gw.retire_replica(added)?;
-    println!("retired replica {added}; live set: {:?}", gw.live_replicas());
+    println!(
+        "retired replica {added}; live set: {:?}, warm pool {}",
+        gw.live_replicas(),
+        gw.warm_pool_size()
+    );
 
     // scrape and summarize the exposition
     let scrape = loadgen::get(&addr, "/metrics")?;
@@ -94,7 +146,12 @@ fn main() -> anyhow::Result<()> {
         samples.len(),
         samples.iter().filter(|s| s.name.starts_with("enova_replica_")).count()
     );
-    for s in samples.iter().filter(|s| s.name == "enova_gateway_requests_total") {
+    for s in samples.iter().filter(|s| {
+        s.name == "enova_gateway_requests_total"
+            || s.name == "enova_gateway_promotion_seconds_count"
+            || s.name == "enova_gateway_warm_pool_replicas"
+            || s.name == "enova_gateway_reconfigure_events_total"
+    }) {
         println!("  {} {:?} = {}", s.name, s.labels, s.value);
     }
 

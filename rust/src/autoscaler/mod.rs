@@ -27,6 +27,10 @@ pub enum Action {
     AddReplica,
     /// lower gpu_memory / remove replica on sustained underload
     ScaleDown,
+    /// re-derive the Table I knobs from the live monitoring window
+    /// (§IV-A on the serving path) and apply them to running replicas
+    /// without a relaunch — the gateway supervisor's reconfiguration loop
+    Reconfigure { max_num_seqs: usize, gpu_memory: f64 },
 }
 
 #[derive(Debug, Clone)]

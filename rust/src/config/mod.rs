@@ -362,6 +362,98 @@ mod tests {
     }
 
     #[test]
+    fn gpu_memory_degenerate_windows_fall_back_to_defaults() {
+        // all-idle window: no busy frames at all — the fit is refused and
+        // the conservative vLLM default comes back
+        let idle: Vec<Frame> = (0..200)
+            .map(|_| Frame {
+                n_running: 0.0,
+                n_finished: 0.0,
+                mem_util: 0.4,
+                ..Default::default()
+            })
+            .collect();
+        let gm = determine_gpu_memory(&idle, 64, &A100_80G, &LLAMA2_7B);
+        assert_eq!(gm.gpu_memory, 0.9, "idle window must use the default");
+        assert_eq!(gm.mem_per_seq, 0.0);
+        assert_eq!(gm.parallel_size, 1);
+
+        // constant n_running: zero x-variance, OLS refuses the fit — no
+        // extrapolation from a window that never varied occupancy
+        let constant: Vec<Frame> = (0..200)
+            .map(|i| Frame {
+                n_running: 16.0,
+                n_finished: 5.0,
+                mem_util: 0.5 + 0.001 * (i % 7) as f64,
+                ..Default::default()
+            })
+            .collect();
+        let gm = determine_gpu_memory(&constant, 64, &A100_80G, &LLAMA2_7B);
+        assert_eq!(gm.gpu_memory, 0.9, "constant occupancy must use the default");
+        assert_eq!(gm.mem_per_seq, 0.0);
+
+        // single busy sample: far under the 12-frame evidence floor
+        let single = vec![Frame {
+            n_running: 3.0,
+            n_finished: 2.0,
+            mem_util: 0.6,
+            t_request: 1.0,
+            ..Default::default()
+        }];
+        let gm = determine_gpu_memory(&single, 8, &A100_80G, &LLAMA2_7B);
+        assert_eq!(gm.gpu_memory, 0.9, "one sample is not evidence");
+        assert_eq!(gm.mem_per_seq, 0.0);
+        // the TP sizing still works off the model/device alone
+        let gm70 = determine_gpu_memory(&single, 16, &RTX4090_24G, &LLAMA2_70B);
+        assert!(gm70.parallel_size >= 8);
+
+        // a negative memory/occupancy slope (monitoring noise) is also
+        // refused rather than extrapolated below the observed window
+        let mut rng = Pcg64::new(11);
+        let negative: Vec<Frame> = (0..100)
+            .map(|i| {
+                let nr = 1.0 + (i % 24) as f64;
+                Frame {
+                    n_running: nr,
+                    n_finished: nr * 0.8,
+                    mem_util: (0.9 - 0.01 * nr + rng.normal() * 1e-4).clamp(0.0, 1.0),
+                    ..Default::default()
+                }
+            })
+            .collect();
+        let gm = determine_gpu_memory(&negative, 64, &A100_80G, &LLAMA2_7B);
+        assert_eq!(gm.gpu_memory, 0.9, "negative slope must not extrapolate");
+    }
+
+    #[test]
+    fn max_num_seqs_degenerate_windows_are_refused() {
+        // the same degenerate windows must make the §IV-A-1 estimator
+        // abstain entirely (the supervisor's reconfig loop relies on this
+        // to hold steady at idle)
+        let idle: Vec<Frame> = (0..200).map(|_| Frame::default()).collect();
+        assert!(determine_max_num_seqs(&idle).is_none(), "all-idle window");
+
+        let single = vec![Frame {
+            n_running: 3.0,
+            n_finished: 2.0,
+            t_request: 1.0,
+            ..Default::default()
+        }];
+        assert!(determine_max_num_seqs(&single).is_none(), "single sample");
+
+        // busy frames but no latency evidence (t_request all zero)
+        let no_latency: Vec<Frame> = (0..50)
+            .map(|i| Frame {
+                n_running: 1.0 + (i % 5) as f64,
+                n_finished: 2.0,
+                t_request: 0.0,
+                ..Default::default()
+            })
+            .collect();
+        assert!(determine_max_num_seqs(&no_latency).is_none(), "no latency");
+    }
+
+    #[test]
     fn max_tokens_tracks_q99() {
         let mut rng = Pcg64::new(5);
         let lens: Vec<f64> = (0..5000).map(|_| rng.lognormal(5.07, 0.42)).collect();

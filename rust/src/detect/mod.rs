@@ -8,8 +8,10 @@ pub mod dataset;
 pub mod eval;
 
 use crate::metrics::Frame;
+#[cfg(feature = "xla-runtime")]
 use crate::runtime::vae::{VaeRuntime, VaeScore};
 use crate::stats::evt;
+#[cfg(feature = "xla-runtime")]
 use anyhow::{anyhow, Result};
 
 /// Target false-alarm risk for the POT threshold (§IV-B). With the
@@ -43,12 +45,14 @@ pub struct Detection {
 /// synthetic traces the reconstruction term separates strictly better
 /// (EXPERIMENTS.md Table IV notes), so the detector uses it — both come out
 /// of the same compiled vae_score artifact.
+#[cfg(feature = "xla-runtime")]
 pub struct EnovaDetector {
     vae: VaeRuntime,
     pub threshold: f64,
     pub pot: evt::PotThreshold,
 }
 
+#[cfg(feature = "xla-runtime")]
 impl EnovaDetector {
     /// Calibrate the POT threshold on the training split's KL scores.
     pub fn calibrate(vae: VaeRuntime, calibration_rows: &[f64]) -> Result<EnovaDetector> {

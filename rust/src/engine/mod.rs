@@ -13,10 +13,14 @@ pub mod sim;
 pub mod tokenizer;
 
 use crate::metrics::Frame;
+#[cfg(feature = "xla-runtime")]
 use crate::runtime::lm::LmRuntime;
 use anyhow::Result;
+#[cfg(feature = "xla-runtime")]
 use sampler::Sampler;
+#[cfg(feature = "xla-runtime")]
 use std::collections::VecDeque;
+#[cfg(feature = "xla-runtime")]
 use tokenizer::Tokenizer;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -98,6 +102,14 @@ pub struct StepOutput {
     pub finished: Vec<Completion>,
 }
 
+/// What a live capacity mutation actually applied, after clamping to the
+/// engine's hard limits (compiled batch width, sane gpu_memory range).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReconfigOutcome {
+    pub max_num_seqs: usize,
+    pub gpu_memory: f64,
+}
+
 /// Step-wise completion engine: what the gateway's replica workers drive.
 /// Implemented by the real PJRT [`Engine`] and by the artifact-free
 /// [`sim::SimEngine`] used in tests and offline demos.
@@ -114,6 +126,13 @@ pub trait StreamEngine {
     /// jobs wait in the worker queue — where queue-time budgets apply —
     /// instead of piling into an unbounded engine pending queue.
     fn capacity(&self) -> usize;
+    /// Mutate live capacity — the Fig. 6 knobs (`max_num_seqs`,
+    /// `gpu_memory`) re-derived by the configuration module — without a
+    /// relaunch and without dropping work. Shrinking below current
+    /// occupancy must *drain*: requests already running above the new
+    /// ceiling finish naturally; only new admissions see the lower limit.
+    /// Returns what was actually applied after clamping.
+    fn reconfigure(&mut self, max_num_seqs: usize, gpu_memory: f64) -> Result<ReconfigOutcome>;
     /// Snapshot the Table II monitoring frame.
     fn frame(&self, finished_in_window: f64, arrived_in_window: f64, mean_latency: f64) -> Frame;
 }
@@ -123,6 +142,7 @@ pub trait StreamEngine {
 /// `from_utf8_lossy`). A trailing incomplete sequence stays buffered for
 /// the next token. Keeps streamed deltas valid UTF-8 even though the
 /// byte-level LM emits multi-byte characters one token at a time.
+#[cfg(feature = "xla-runtime")]
 fn drain_valid_utf8(pending: &mut Vec<u8>) -> String {
     let mut out = String::new();
     loop {
@@ -151,6 +171,7 @@ fn drain_valid_utf8(pending: &mut Vec<u8>) -> String {
     }
 }
 
+#[cfg(feature = "xla-runtime")]
 struct Slot {
     req: EngineRequest,
     generated: Vec<i32>,
@@ -161,9 +182,13 @@ struct Slot {
     utf8_pending: Vec<u8>,
 }
 
+#[cfg(feature = "xla-runtime")]
 pub struct Engine {
     pub lm: LmRuntime,
     pub cfg: EngineConfig,
+    /// live gpu_memory fraction (the Fig. 6 knob): scales the KV budget
+    /// the monitoring frame reports against
+    gpu_memory: f64,
     tokenizer: Tokenizer,
     sampler: Sampler,
     slots: Vec<Option<Slot>>,
@@ -176,6 +201,7 @@ pub struct Engine {
     lens_buf: Vec<i32>,
 }
 
+#[cfg(feature = "xla-runtime")]
 impl Engine {
     pub fn new(lm: LmRuntime, cfg: EngineConfig, seed: u64) -> Engine {
         let b = lm.spec.batch;
@@ -190,6 +216,7 @@ impl Engine {
             finished_count: 0,
             tokens_buf: vec![0; b],
             lens_buf: vec![0; b],
+            gpu_memory: 0.9,
             lm,
             cfg,
         }
@@ -386,6 +413,20 @@ impl Engine {
         Ok(out)
     }
 
+    /// Apply a live capacity mutation: `max_num_seqs` is clamped to the
+    /// compiled batch width (the program's slot count is fixed at AOT
+    /// time), `gpu_memory` to the practical vLLM range. Shrinking never
+    /// drops work — the admission loop simply stops refilling slots above
+    /// the new ceiling while occupied ones decode to completion.
+    pub fn reconfigure(&mut self, max_num_seqs: usize, gpu_memory: f64) -> ReconfigOutcome {
+        self.cfg.max_num_seqs = max_num_seqs.clamp(1, self.lm.spec.batch);
+        self.gpu_memory = gpu_memory.clamp(0.05, 0.98);
+        ReconfigOutcome {
+            max_num_seqs: self.cfg.max_num_seqs,
+            gpu_memory: self.gpu_memory,
+        }
+    }
+
     /// Snapshot the Table II frame for monitoring.
     pub fn frame(&self, finished_in_window: f64, arrived_in_window: f64, mean_latency: f64) -> Frame {
         let b = self.cfg.max_num_seqs.min(self.lm.spec.batch).max(1);
@@ -395,25 +436,28 @@ impl Engine {
             .flatten()
             .map(|s| s.seq_len)
             .sum();
-        let kv_cap = b * self.lm.spec.max_seq;
+        // the KV budget scales with the configured gpu_memory fraction
+        let kv_cap = (b * self.lm.spec.max_seq) as f64 * (self.gpu_memory / 0.9);
         Frame {
             n_finished: finished_in_window,
             n_running: self.running_len() as f64,
             n_arriving: arrived_in_window,
             n_pending: self.pending.len() as f64,
             t_request: mean_latency,
-            mem_util: 0.35 + 0.6 * kv_used as f64 / kv_cap as f64,
+            mem_util: (0.35 + 0.6 * kv_used as f64 / kv_cap).min(1.0),
+            // clamped: slots draining above a shrunk max_num_seqs would
+            // push the ratio past 1
             gpu_util: if self.running_len() > 0 {
-                self.running_len() as f64 / b as f64
+                (self.running_len() as f64 / b as f64).min(1.0)
             } else {
                 0.0
             },
-            kv_util: kv_used as f64 / kv_cap as f64,
+            kv_util: (kv_used as f64 / kv_cap).min(1.0),
         }
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "xla-runtime"))]
 mod tests {
     use super::drain_valid_utf8;
 
@@ -453,6 +497,7 @@ mod tests {
     }
 }
 
+#[cfg(feature = "xla-runtime")]
 impl StreamEngine for Engine {
     fn submit(&mut self, prompt: &str, max_new: usize) -> u64 {
         Engine::submit(self, prompt, max_new)
@@ -476,6 +521,10 @@ impl StreamEngine for Engine {
 
     fn capacity(&self) -> usize {
         Engine::capacity(self)
+    }
+
+    fn reconfigure(&mut self, max_num_seqs: usize, gpu_memory: f64) -> Result<ReconfigOutcome> {
+        Ok(Engine::reconfigure(self, max_num_seqs, gpu_memory))
     }
 
     fn frame(&self, finished_in_window: f64, arrived_in_window: f64, mean_latency: f64) -> Frame {

@@ -6,7 +6,9 @@
 //! without the AOT artifacts — and so closed-loop tests are byte-for-byte
 //! reproducible.
 
-use super::{Completion, EngineRequest, FinishReason, StepOutput, StreamEngine, TokenDelta};
+use super::{
+    Completion, EngineRequest, FinishReason, ReconfigOutcome, StepOutput, StreamEngine, TokenDelta,
+};
 use crate::metrics::Frame;
 use anyhow::Result;
 use std::collections::VecDeque;
@@ -18,6 +20,10 @@ const WORDS: [&str; 16] = [
     "the", "service", "scales", "replicas", "under", "bursty", "traffic", "while", "latency",
     "stays", "stable", "and", "throughput", "improves", "per", "gpu",
 ];
+
+/// Hard ceiling on the simulated slot count: reconfiguration clamps here,
+/// mirroring the real engine's compiled batch width.
+pub const MAX_SIM_SLOTS: usize = 4096;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SimEngineConfig {
@@ -52,6 +58,12 @@ struct SimSlot {
 
 pub struct SimEngine {
     pub cfg: SimEngineConfig,
+    /// effective concurrency ceiling (live-reconfigurable). The slot
+    /// vector only ever grows: shrinking lowers this ceiling while
+    /// occupied slots above it drain to completion.
+    limit: usize,
+    /// live gpu_memory fraction; scales the simulated KV budget
+    gpu_memory: f64,
     slots: Vec<Option<SimSlot>>,
     pending: VecDeque<EngineRequest>,
     clock: Instant,
@@ -72,6 +84,8 @@ impl SimEngine {
         let b = cfg.max_num_seqs.max(1);
         SimEngine {
             cfg,
+            limit: b,
+            gpu_memory: 0.9,
             slots: (0..b).map(|_| None).collect(),
             pending: VecDeque::new(),
             clock: Instant::now(),
@@ -98,8 +112,9 @@ impl StreamEngine for SimEngine {
     }
 
     fn step_stream(&mut self) -> Result<StepOutput> {
-        // 1. admission
-        for slot in self.slots.iter_mut() {
+        // 1. admission — only into slots under the live ceiling; slots
+        // above it (occupied before a shrink) drain but never refill
+        for slot in self.slots.iter_mut().take(self.limit) {
             if slot.is_some() {
                 continue;
             }
@@ -179,27 +194,46 @@ impl StreamEngine for SimEngine {
     }
 
     fn capacity(&self) -> usize {
-        self.slots.len()
+        self.limit
+    }
+
+    fn reconfigure(&mut self, max_num_seqs: usize, gpu_memory: f64) -> Result<ReconfigOutcome> {
+        // the sim has no compiled batch width; MAX_SIM_SLOTS stands in as
+        // the hard ceiling so a wild recommendation cannot balloon the
+        // slot vector (the real Engine clamps to lm.spec.batch)
+        let target = max_num_seqs.clamp(1, MAX_SIM_SLOTS);
+        if target > self.slots.len() {
+            self.slots.resize_with(target, || None);
+        }
+        self.limit = target;
+        self.gpu_memory = gpu_memory.clamp(0.05, 0.98);
+        Ok(ReconfigOutcome {
+            max_num_seqs: self.limit,
+            gpu_memory: self.gpu_memory,
+        })
     }
 
     fn frame(&self, finished_in_window: f64, arrived_in_window: f64, mean_latency: f64) -> Frame {
-        let b = self.slots.len().max(1);
+        let b = self.limit.max(1);
         let kv_used: usize = self
             .slots
             .iter()
             .flatten()
             .map(|s| s.req.prompt.len() / 4 + s.tokens.len())
             .sum();
-        let kv_cap = b * 256;
+        // simulated KV budget scales with the live gpu_memory fraction
+        let kv_cap = (b * 256) as f64 * (self.gpu_memory / 0.9);
         Frame {
             n_finished: finished_in_window,
             n_running: self.running_len() as f64,
             n_arriving: arrived_in_window,
             n_pending: self.pending.len() as f64,
             t_request: mean_latency,
-            mem_util: (0.35 + 0.6 * kv_used as f64 / kv_cap as f64).min(1.0),
-            gpu_util: self.running_len() as f64 / b as f64,
-            kv_util: (kv_used as f64 / kv_cap as f64).min(1.0),
+            mem_util: (0.35 + 0.6 * kv_used as f64 / kv_cap).min(1.0),
+            // clamped: slots draining above a shrunk limit would push the
+            // ratio past 1 and skew a freshly-calibrating detector
+            gpu_util: (self.running_len() as f64 / b as f64).min(1.0),
+            kv_util: (kv_used as f64 / kv_cap).min(1.0),
         }
     }
 }
@@ -266,6 +300,63 @@ mod tests {
         assert_eq!(e.running_len() + out.finished.len(), 2);
         assert!(e.pending_len() >= 3);
         assert_eq!(drain(&mut e).len() + out.finished.len(), 5);
+    }
+
+    #[test]
+    fn reconfigure_grows_capacity_live() {
+        let mut e = SimEngine::new(SimEngineConfig {
+            max_num_seqs: 2,
+            max_tokens: 4,
+            step_delay: Duration::ZERO,
+        });
+        for i in 0..6 {
+            e.submit(&format!("req {i}"), 4);
+        }
+        let _ = e.step_stream().unwrap();
+        assert_eq!(e.running_len(), 2);
+        let out = e.reconfigure(4, 0.95).unwrap();
+        assert_eq!(out.max_num_seqs, 4);
+        assert!((out.gpu_memory - 0.95).abs() < 1e-12);
+        assert_eq!(e.capacity(), 4);
+        let _ = e.step_stream().unwrap();
+        assert_eq!(e.running_len(), 4, "new slots admit immediately");
+        assert_eq!(drain(&mut e).len(), 6);
+    }
+
+    #[test]
+    fn reconfigure_shrink_drains_above_capacity_work() {
+        let mut e = SimEngine::new(SimEngineConfig {
+            max_num_seqs: 4,
+            max_tokens: 8,
+            step_delay: Duration::ZERO,
+        });
+        for i in 0..4 {
+            e.submit(&format!("held {i}"), 8);
+        }
+        let _ = e.step_stream().unwrap();
+        assert_eq!(e.running_len(), 4);
+        // shrink to 1 while 4 are mid-generation: nothing is dropped
+        let out = e.reconfigure(1, 0.9).unwrap();
+        assert_eq!(out.max_num_seqs, 1);
+        assert_eq!(e.capacity(), 1);
+        // queue more work than the new ceiling admits at once
+        for i in 0..3 {
+            e.submit(&format!("queued {i}"), 2);
+        }
+        let mut peak_after_drain = 0usize;
+        let mut done = Vec::new();
+        while !e.idle() {
+            done.extend(e.step_stream().unwrap().finished);
+            // once the pre-shrink cohort drained, occupancy obeys the limit
+            if done.len() >= 4 {
+                peak_after_drain = peak_after_drain.max(e.running_len());
+            }
+        }
+        assert_eq!(done.len(), 7, "every request completed: {}", done.len());
+        assert!(
+            peak_after_drain <= 1,
+            "post-drain occupancy exceeded the shrunk limit: {peak_after_drain}"
+        );
     }
 
     #[test]

@@ -341,6 +341,33 @@ impl LoadgenReport {
         self.status_counts.get(&status).copied().unwrap_or(0)
     }
 
+    /// The full report as JSON — what `enova loadgen --report FILE`
+    /// writes and the CI gateway-smoke job uploads as its artifact.
+    pub fn to_json(&self) -> Json {
+        let statuses = Json::Obj(
+            self.status_counts
+                .iter()
+                .map(|(code, n)| (code.to_string(), num(*n as f64)))
+                .collect(),
+        );
+        obj([
+            ("requests", num(self.requests as f64)),
+            ("ok", num(self.ok as f64)),
+            ("errors", num(self.errors as f64)),
+            ("status_counts", statuses),
+            ("sse_events", num(self.sse_events as f64)),
+            ("completion_tokens", num(self.completion_tokens as f64)),
+            ("connections_opened", num(self.connections_opened as f64)),
+            ("p50_ms", num(self.p50_ms)),
+            ("p99_ms", num(self.p99_ms)),
+            ("elapsed_secs", num(self.elapsed_secs)),
+            (
+                "requests_per_sec",
+                num(self.requests as f64 / self.elapsed_secs.max(1e-9)),
+            ),
+        ])
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "{} requests in {:.2}s ({:.1} req/s) over {} connections: {} ok, {} errors, \
@@ -524,6 +551,25 @@ mod tests {
         let wire = b"zz\r\nhello\r\n";
         let mut r = std::io::BufReader::new(&wire[..]);
         assert!(read_chunked(&mut r).is_err());
+    }
+
+    #[test]
+    fn report_json_roundtrips() {
+        let mut report = LoadgenReport {
+            requests: 3,
+            ok: 2,
+            errors: 1,
+            elapsed_secs: 2.0,
+            p99_ms: 12.5,
+            ..Default::default()
+        };
+        report.status_counts.insert(200, 2);
+        let j = Json::parse(&report.to_json().to_string_pretty()).unwrap();
+        assert_eq!(j.get("requests").and_then(Json::as_usize), Some(3));
+        assert_eq!(j.get("errors").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.at(&["status_counts", "200"]).and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("p99_ms").and_then(Json::as_f64), Some(12.5));
+        assert_eq!(j.get("requests_per_sec").and_then(Json::as_f64), Some(1.5));
     }
 
     #[test]

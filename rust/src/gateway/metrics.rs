@@ -5,7 +5,7 @@
 //! parser so tests can verify the scrape body instead of substring-matching.
 
 use super::supervisor::SupervisorSnapshot;
-use crate::metrics::COLUMNS;
+use crate::metrics::{COLUMNS, N_RUNNING};
 use crate::tsdb::MetricStore;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -16,6 +16,32 @@ use std::sync::Mutex;
 pub const LATENCY_BUCKETS: [f64; 10] = [
     0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 1.0, 5.0,
 ];
+
+/// Upper bounds (seconds) of the replica-promotion latency histogram: warm
+/// promotions land in the sub-millisecond buckets, cold hot-spawns pay
+/// engine init and land in the tail.
+pub const PROMOTION_BUCKETS: [f64; 8] = [0.0005, 0.002, 0.01, 0.05, 0.25, 1.0, 5.0, 30.0];
+
+/// One cumulative latency histogram (lock-free).
+#[derive(Debug, Default)]
+struct PromotionHisto {
+    buckets: [AtomicU64; PROMOTION_BUCKETS.len()],
+    sum_micros: AtomicU64,
+    count: AtomicU64,
+}
+
+impl PromotionHisto {
+    fn observe(&self, secs: f64) {
+        for (i, &le) in PROMOTION_BUCKETS.iter().enumerate() {
+            if secs <= le {
+                self.buckets[i].fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.sum_micros
+            .fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+}
 
 #[derive(Debug, Default)]
 pub struct GatewayMetrics {
@@ -29,6 +55,11 @@ pub struct GatewayMetrics {
     rejected_queue_full: AtomicU64,
     rejected_rate_limited: AtomicU64,
     queue_shed: AtomicU64,
+    /// live capacity mutations applied by replica workers
+    reconfigure_applied: AtomicU64,
+    /// AddReplica latency, split by whether a warm standby was promoted
+    promotion_warm: PromotionHisto,
+    promotion_cold: PromotionHisto,
 }
 
 impl GatewayMetrics {
@@ -76,6 +107,38 @@ impl GatewayMetrics {
         self.queue_shed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A replica worker applied a live capacity mutation.
+    pub fn note_reconfigure(&self) {
+        self.reconfigure_applied.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record how long bringing one more replica live took; `warm` marks a
+    /// warm-pool promotion, otherwise a cold hot-spawn.
+    pub fn observe_promotion(&self, warm: bool, secs: f64) {
+        if warm {
+            self.promotion_warm.observe(secs);
+        } else {
+            self.promotion_cold.observe(secs);
+        }
+    }
+
+    /// `(count, mean seconds)` of promotions by kind — test/report helper
+    /// mirroring the `enova_gateway_promotion_seconds` histogram.
+    pub fn promotion_stats(&self, warm: bool) -> (u64, f64) {
+        let h = if warm {
+            &self.promotion_warm
+        } else {
+            &self.promotion_cold
+        };
+        let count = h.count.load(Ordering::Relaxed);
+        let mean = if count > 0 {
+            h.sum_micros.load(Ordering::Relaxed) as f64 / 1e6 / count as f64
+        } else {
+            0.0
+        };
+        (count, mean)
+    }
+
     pub fn requests_total(&self) -> u64 {
         self.requests.lock().unwrap().values().sum()
     }
@@ -86,16 +149,18 @@ fn escape_label(v: &str) -> String {
 }
 
 /// Render the full `/metrics` body: gateway request metrics, the replica
-/// set + supervisor state, and the last Table II frame of every replica
-/// instance in `store`.
+/// set + warm pool + supervisor state, and the last Table II frame of
+/// every replica instance in `store`.
 pub fn render_prometheus(
     gw: &GatewayMetrics,
     store: &MetricStore,
     inflight: usize,
-    live_replicas: usize,
+    live_instances: &[String],
+    warm_pool: usize,
     uptime_secs: f64,
     sup: &SupervisorSnapshot,
 ) -> String {
+    let live_replicas = live_instances.len();
     let mut out = String::with_capacity(4096);
 
     out.push_str("# HELP enova_gateway_requests_total HTTP requests served, by endpoint and status code.\n");
@@ -177,6 +242,53 @@ pub fn render_prometheus(
     out.push_str("# TYPE enova_gateway_replicas gauge\n");
     let _ = writeln!(out, "enova_gateway_replicas {live_replicas}");
 
+    out.push_str(
+        "# HELP enova_gateway_warm_pool_replicas Pre-initialized standby replicas awaiting \
+         promotion.\n",
+    );
+    out.push_str("# TYPE enova_gateway_warm_pool_replicas gauge\n");
+    let _ = writeln!(out, "enova_gateway_warm_pool_replicas {warm_pool}");
+
+    out.push_str(
+        "# HELP enova_gateway_reconfigure_events_total Live capacity mutations applied by \
+         replica workers (max_num_seqs / gpu_memory).\n",
+    );
+    out.push_str("# TYPE enova_gateway_reconfigure_events_total counter\n");
+    let _ = writeln!(
+        out,
+        "enova_gateway_reconfigure_events_total {}",
+        gw.reconfigure_applied.load(Ordering::Relaxed)
+    );
+
+    out.push_str(
+        "# HELP enova_gateway_promotion_seconds Latency of bringing one more replica live, \
+         by promotion kind (warm pool vs cold hot-spawn).\n",
+    );
+    out.push_str("# TYPE enova_gateway_promotion_seconds histogram\n");
+    for (kind, histo) in [("warm", &gw.promotion_warm), ("cold", &gw.promotion_cold)] {
+        let total = histo.count.load(Ordering::Relaxed);
+        for (i, &le) in PROMOTION_BUCKETS.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "enova_gateway_promotion_seconds_bucket{{kind=\"{kind}\",le=\"{le}\"}} {}",
+                histo.buckets[i].load(Ordering::Relaxed)
+            );
+        }
+        let _ = writeln!(
+            out,
+            "enova_gateway_promotion_seconds_bucket{{kind=\"{kind}\",le=\"+Inf\"}} {total}"
+        );
+        let _ = writeln!(
+            out,
+            "enova_gateway_promotion_seconds_sum{{kind=\"{kind}\"}} {}",
+            histo.sum_micros.load(Ordering::Relaxed) as f64 / 1e6
+        );
+        let _ = writeln!(
+            out,
+            "enova_gateway_promotion_seconds_count{{kind=\"{kind}\"}} {total}"
+        );
+    }
+
     for (name, help, value) in [
         (
             "enova_supervisor_enabled",
@@ -216,6 +328,22 @@ pub fn render_prometheus(
         out,
         "enova_supervisor_scale_events_total{{direction=\"down\"}} {}",
         sup.scale_downs
+    );
+    out.push_str(
+        "# HELP enova_supervisor_reconfigure_total Reconfiguration verdicts the supervisor \
+         applied to the live replica set.\n",
+    );
+    out.push_str("# TYPE enova_supervisor_reconfigure_total counter\n");
+    let _ = writeln!(out, "enova_supervisor_reconfigure_total {}", sup.reconfigures);
+    out.push_str(
+        "# HELP enova_supervisor_applied_max_num_seqs Last max_num_seqs the supervisor \
+         applied cluster-wide (0 = never reconfigured).\n",
+    );
+    out.push_str("# TYPE enova_supervisor_applied_max_num_seqs gauge\n");
+    let _ = writeln!(
+        out,
+        "enova_supervisor_applied_max_num_seqs {}",
+        sup.last_max_num_seqs
     );
 
     out.push_str("# HELP enova_gateway_inflight_requests Requests admitted and not yet finished.\n");
@@ -258,6 +386,40 @@ pub fn render_prometheus(
                 escape_label(&instance)
             );
         }
+    }
+
+    // applied concurrency ceiling per replica (the live Fig. 6 knob)
+    out.push_str(
+        "# HELP enova_replica_max_num_seqs Applied max_num_seqs (live concurrency ceiling) \
+         per replica.\n",
+    );
+    out.push_str("# TYPE enova_replica_max_num_seqs gauge\n");
+    for instance in store.instances(super::MAX_SEQS) {
+        if let Some(v) = store.series(super::MAX_SEQS, &instance).and_then(|s| s.last()) {
+            let _ = writeln!(
+                out,
+                "enova_replica_max_num_seqs{{instance=\"{}\"}} {v}",
+                escape_label(&instance)
+            );
+        }
+    }
+
+    // warm standbys keep reporting frames while derouted; this gauge lets
+    // dashboards tell live replicas (1) from parked ones (0) so averages
+    // do not silently include idle standbys
+    out.push_str(
+        "# HELP enova_replica_routable 1 when the replica instance is in the routable \
+         (live) set, 0 for a warm standby.\n",
+    );
+    out.push_str("# TYPE enova_replica_routable gauge\n");
+    for instance in store.instances(N_RUNNING) {
+        let routable = live_instances.iter().any(|l| l == &instance);
+        let _ = writeln!(
+            out,
+            "enova_replica_routable{{instance=\"{}\"}} {}",
+            escape_label(&instance),
+            routable as u8
+        );
     }
     out
 }
@@ -338,6 +500,12 @@ mod tests {
             }
             .record(&mut store, &format!("replica-{i}"), 1.0);
         }
+        // a warm standby also reports frames but is not in the live set
+        Frame::default().record(&mut store, "replica-2", 1.0);
+
+        gw.note_reconfigure();
+        gw.observe_promotion(true, 0.001);
+        gw.observe_promotion(false, 2.0);
 
         let sup = SupervisorSnapshot {
             enabled: true,
@@ -347,8 +515,11 @@ mod tests {
             last_energy: 4.5,
             last_threshold: 3.0,
             events: 3,
+            reconfigures: 1,
+            last_max_num_seqs: 12,
         };
-        let body = render_prometheus(&gw, &store, 3, 2, 12.5, &sup);
+        let live = vec!["replica-0".to_string(), "replica-1".to_string()];
+        let body = render_prometheus(&gw, &store, 3, &live, 1, 12.5, &sup);
         let samples = parse_exposition(&body).expect("valid exposition");
         for col in COLUMNS {
             for replica in ["replica-0", "replica-1"] {
@@ -389,6 +560,56 @@ mod tests {
         assert!(samples
             .iter()
             .any(|s| s.name == "enova_supervisor_anomaly_energy" && s.value == 4.5));
+        assert!(samples
+            .iter()
+            .any(|s| s.name == "enova_gateway_warm_pool_replicas" && s.value == 1.0));
+        assert!(samples
+            .iter()
+            .any(|s| s.name == "enova_gateway_reconfigure_events_total" && s.value == 1.0));
+        assert!(samples
+            .iter()
+            .any(|s| s.name == "enova_supervisor_reconfigure_total" && s.value == 1.0));
+        assert!(samples
+            .iter()
+            .any(|s| s.name == "enova_supervisor_applied_max_num_seqs" && s.value == 12.0));
+        // the promotion histogram carries both kinds, and the warm sample
+        // lands in a strictly lower bucket than the cold one
+        for kind in ["warm", "cold"] {
+            assert!(
+                samples.iter().any(|s| {
+                    s.name == "enova_gateway_promotion_seconds_count"
+                        && s.labels.get("kind").map(String::as_str) == Some(kind)
+                        && s.value == 1.0
+                }),
+                "missing promotion count for {kind}"
+            );
+        }
+        let bucket = |kind: &str, le: &str| {
+            samples
+                .iter()
+                .find(|s| {
+                    s.name == "enova_gateway_promotion_seconds_bucket"
+                        && s.labels.get("kind").map(String::as_str) == Some(kind)
+                        && s.labels.get("le").map(String::as_str) == Some(le)
+                })
+                .unwrap()
+                .value
+        };
+        assert_eq!(bucket("warm", "0.002"), 1.0);
+        assert_eq!(bucket("cold", "0.002"), 0.0);
+        assert_eq!(bucket("cold", "5"), 1.0);
+        // live replicas are routable=1, the standby instance routable=0
+        let routable = |instance: &str| {
+            samples
+                .iter()
+                .find(|s| s.name == "enova_replica_routable"
+                    && s.labels.get("instance").map(String::as_str) == Some(instance))
+                .unwrap()
+                .value
+        };
+        assert_eq!(routable("replica-0"), 1.0);
+        assert_eq!(routable("replica-1"), 1.0);
+        assert_eq!(routable("replica-2"), 0.0);
     }
 
     #[test]
@@ -396,8 +617,16 @@ mod tests {
         let gw = GatewayMetrics::new();
         gw.observe("/x", 200, 0.002); // lands in le=0.0025 and wider
         gw.observe("/x", 200, 0.3); // lands in le=1.0 and wider
-        let body =
-            render_prometheus(&gw, &MetricStore::new(), 0, 1, 0.0, &SupervisorSnapshot::default());
+        let live = vec!["replica-0".to_string()];
+        let body = render_prometheus(
+            &gw,
+            &MetricStore::new(),
+            0,
+            &live,
+            0,
+            0.0,
+            &SupervisorSnapshot::default(),
+        );
         let samples = parse_exposition(&body).unwrap();
         let bucket = |le: &str| {
             samples

@@ -67,8 +67,17 @@ pub type EngineSpawner = Arc<dyn Fn(u64) -> Result<Box<dyn StreamEngine>> + Send
 /// Table II frame columns.
 pub(crate) const QUEUE_WAIT: &str = "queue_wait";
 
+/// Series name for the per-replica applied `max_num_seqs` (the engine's
+/// live concurrency ceiling), recorded alongside the Table II frame so
+/// reconfigurations are visible on `/metrics`.
+pub(crate) const MAX_SEQS: &str = "max_num_seqs";
+
 /// How long a spawning replica may take to construct its engine.
 const ENGINE_INIT_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// Consecutive spawn failures after which the warm-pool filler gives up
+/// (until the next scale event re-triggers it).
+const WARM_FILL_MAX_FAILURES: u32 = 5;
 
 #[derive(Debug, Clone)]
 pub struct GatewayConfig {
@@ -93,6 +102,11 @@ pub struct GatewayConfig {
     /// per-request deadline: how long a handler waits for its engine, and
     /// the point past which a still-queued job is shed rather than run
     pub request_timeout: Duration,
+    /// standby replicas kept pre-initialized but derouted, so scale-up
+    /// promotes in O(route-update) instead of paying engine init; 0
+    /// disables the pool. Retirement demotes back to warm while the pool
+    /// is below this target.
+    pub warm_pool: usize,
 }
 
 impl Default for GatewayConfig {
@@ -109,6 +123,7 @@ impl Default for GatewayConfig {
             monitor_interval: Duration::from_millis(50),
             queue_budget: Duration::ZERO,
             request_timeout: Duration::from_secs(120),
+            warm_pool: 0,
         }
     }
 }
@@ -161,7 +176,19 @@ struct ReplicaSlot {
     tx: Mutex<Sender<Job>>,
     /// asks the worker to finish queued + in-flight work and exit
     draining: Arc<AtomicBool>,
+    /// mailbox for a pending live capacity mutation `(max_num_seqs,
+    /// gpu_memory)`; the worker applies it between engine steps
+    reconfig: Arc<Mutex<Option<(usize, f64)>>>,
+    /// engine concurrency as last applied by the worker (gauge + tests)
+    applied_max_num_seqs: Arc<AtomicUsize>,
     join: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// A pre-initialized standby replica: engine built, worker thread parked
+/// on an empty queue, not routable. Promotion to live is O(route-update).
+struct WarmReplica {
+    id: u64,
+    slot: Arc<ReplicaSlot>,
 }
 
 struct GatewayState {
@@ -174,6 +201,14 @@ struct GatewayState {
     /// present when the gateway was started scalable: lets the supervisor
     /// and [`Gateway::add_replica`] hot-spawn workers at runtime
     spawner: Option<EngineSpawner>,
+    /// pre-initialized standby replicas awaiting promotion (LIFO)
+    warm: Mutex<Vec<WarmReplica>>,
+    /// true while a background warm-pool filler thread is running
+    warm_filling: AtomicBool,
+    /// last cluster-wide capacity verdict; replayed onto replicas that
+    /// join later (warm promotions, cold spawns, refilled standbys) so a
+    /// late joiner never serves with a pre-reconfiguration config
+    last_reconfig: Mutex<Option<(usize, f64)>>,
     next_replica_id: AtomicU64,
     gate: Arc<AdmissionGate>,
     bucket: Option<Mutex<TokenBucket>>,
@@ -248,6 +283,9 @@ impl Gateway {
             router: RwLock::new(WeightedRouter::new(&[])),
             replicas: RwLock::new(BTreeMap::new()),
             spawner,
+            warm: Mutex::new(Vec::new()),
+            warm_filling: AtomicBool::new(false),
+            last_reconfig: Mutex::new(None),
             next_replica_id: AtomicU64::new(n as u64),
             gate: AdmissionGate::new(cfg.max_pending),
             bucket: (cfg.rate_limit > 0.0)
@@ -319,6 +357,10 @@ impl Gateway {
             }));
         }
 
+        // pre-warm standby replicas in the background so the first
+        // scale-up already finds a built engine in the pool
+        ensure_warm_fill(&state);
+
         crate::info!(
             "gateway",
             "listening on http://{addr} with {n} replica(s), {} http workers",
@@ -357,16 +399,60 @@ impl Gateway {
             .collect()
     }
 
-    /// Hot-spawn one replica from the engine spawner and route to it.
-    /// Errors when the gateway was started without a spawner.
+    /// Bring one more replica live: promote a warm standby when the pool
+    /// has one (O(route-update)), else hot-spawn cold from the engine
+    /// spawner. Errors when the gateway was started without a spawner.
     pub fn add_replica(&self) -> Result<u64> {
         hot_add_replica(&self.state)
     }
 
-    /// Retire a replica: deroute it, let its worker drain queued and
-    /// in-flight jobs, then join the worker thread. Blocks until drained.
+    /// Retire a replica: deroute it, then either demote it to a warm
+    /// standby (pool below target; its worker keeps draining in-flight
+    /// work) or drain-then-join the worker thread. The drain path blocks
+    /// until every queued and in-flight job finished.
     pub fn retire_replica(&self, id: u64) -> Result<()> {
         retire_replica(&self.state, id)
+    }
+
+    /// Standby replicas currently parked in the warm pool.
+    pub fn warm_pool_size(&self) -> usize {
+        self.state.warm.lock().unwrap().len()
+    }
+
+    /// `(count, mean seconds)` of AddReplica promotions by kind — the
+    /// programmatic view of the `enova_gateway_promotion_seconds`
+    /// histogram (`warm` = pool promotion, else cold hot-spawn).
+    pub fn promotion_stats(&self, warm: bool) -> (u64, f64) {
+        self.state.metrics.promotion_stats(warm)
+    }
+
+    /// Post a live capacity mutation to one replica's worker; it is
+    /// applied between engine steps without dropping queued or in-flight
+    /// work.
+    pub fn reconfigure_replica(&self, id: u64, max_num_seqs: usize, gpu_memory: f64) -> Result<()> {
+        let replicas = self.state.replicas.read().unwrap();
+        let slot = replicas
+            .get(&id)
+            .ok_or_else(|| anyhow!("unknown replica id {id}"))?;
+        *slot.reconfig.lock().unwrap() = Some((max_num_seqs, gpu_memory));
+        Ok(())
+    }
+
+    /// Post a live capacity mutation to every live replica; returns how
+    /// many workers were asked.
+    pub fn reconfigure_all(&self, max_num_seqs: usize, gpu_memory: f64) -> usize {
+        reconfigure_live(&self.state, max_num_seqs, gpu_memory)
+    }
+
+    /// Per-replica applied `max_num_seqs`: `(id, capacity)`, ascending id.
+    pub fn replica_capacities(&self) -> Vec<(u64, usize)> {
+        self.state
+            .replicas
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(id, slot)| (*id, slot.applied_max_num_seqs.load(Ordering::Acquire)))
+            .collect()
     }
 
     /// Scaling actions the supervisor has executed so far.
@@ -384,9 +470,17 @@ impl Gateway {
         self.state.stop.store(true, Ordering::Release);
         // replica workers shed queued + in-flight jobs (clients get 503s)
         // and exit; join them via the slots — hot-added workers were never
-        // in `threads`
-        let slots: Vec<Arc<ReplicaSlot>> =
+        // in `threads`. Warm standbys exit on the stop flag too.
+        let mut slots: Vec<Arc<ReplicaSlot>> =
             self.state.replicas.read().unwrap().values().cloned().collect();
+        slots.extend(
+            self.state
+                .warm
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|w| Arc::clone(&w.slot)),
+        );
         for slot in slots {
             let join = slot.join.lock().unwrap().take();
             if let Some(h) = join {
@@ -410,9 +504,13 @@ impl Gateway {
 fn launch_replica(state: &Arc<GatewayState>, id: u64, factory: EngineFactory) -> PendingReplica {
     let (tx, rx) = mpsc::channel::<Job>();
     let draining = Arc::new(AtomicBool::new(false));
+    let reconfig: Arc<Mutex<Option<(usize, f64)>>> = Arc::new(Mutex::new(None));
+    let applied = Arc::new(AtomicUsize::new(0));
     let (init_tx, init_rx) = mpsc::channel::<std::result::Result<(), String>>();
     let thread_state = Arc::clone(state);
     let thread_draining = Arc::clone(&draining);
+    let thread_reconfig = Arc::clone(&reconfig);
+    let thread_applied = Arc::clone(&applied);
     let join = std::thread::spawn(move || {
         let engine = match factory() {
             Ok(e) => e,
@@ -421,6 +519,7 @@ fn launch_replica(state: &Arc<GatewayState>, id: u64, factory: EngineFactory) ->
                 return;
             }
         };
+        thread_applied.store(engine.capacity(), Ordering::Release);
         // initial frame before declaring ready, so /metrics exposes the
         // replica deterministically once registration returns
         record_frame(
@@ -431,7 +530,15 @@ fn launch_replica(state: &Arc<GatewayState>, id: u64, factory: EngineFactory) ->
         );
         thread_state.ready_replicas.fetch_add(1, Ordering::Release);
         let _ = init_tx.send(Ok(()));
-        replica_loop(id, engine, rx, &thread_draining, &thread_state);
+        replica_loop(
+            id,
+            engine,
+            rx,
+            &thread_draining,
+            &thread_reconfig,
+            &thread_applied,
+            &thread_state,
+        );
         thread_state.ready_replicas.fetch_sub(1, Ordering::Release);
     });
     PendingReplica {
@@ -439,6 +546,8 @@ fn launch_replica(state: &Arc<GatewayState>, id: u64, factory: EngineFactory) ->
         slot: Arc::new(ReplicaSlot {
             tx: Mutex::new(tx),
             draining,
+            reconfig,
+            applied_max_num_seqs: applied,
             join: Mutex::new(Some(join)),
         }),
         init_rx,
@@ -462,9 +571,112 @@ fn register_replica(state: &Arc<GatewayState>, id: u64, slot: Arc<ReplicaSlot>, 
     router.set_weights(&weights);
 }
 
-/// Hot-spawn one replica from the configured spawner (supervisor
-/// scale-up / `Gateway::add_replica`).
+/// Build one standby replica (blocking on its engine init) and park it in
+/// the warm pool, derouted. The last cluster-wide reconfiguration verdict
+/// is replayed into its mailbox so a freshly built standby matches the
+/// live configuration it will be promoted into.
+fn spawn_warm(state: &Arc<GatewayState>) -> Result<u64> {
+    let spawner = state
+        .spawner
+        .as_ref()
+        .ok_or_else(|| anyhow!("gateway was started without an engine spawner; cannot pre-warm"))?
+        .clone();
+    let id = state.next_replica_id.fetch_add(1, Ordering::Relaxed);
+    let factory: EngineFactory = Box::new(move || spawner(id));
+    let p = launch_replica(state, id, factory);
+    await_replica(&p)?;
+    replay_last_reconfig(state, &p.slot);
+    state.warm.lock().unwrap().push(WarmReplica { id, slot: p.slot });
+    Ok(id)
+}
+
+/// Post the last cluster-wide capacity verdict (if any) to one replica's
+/// mailbox — used for replicas that join after a reconfiguration.
+fn replay_last_reconfig(state: &GatewayState, slot: &ReplicaSlot) {
+    if let Some(v) = *state.last_reconfig.lock().unwrap() {
+        *slot.reconfig.lock().unwrap() = Some(v);
+    }
+}
+
+/// Keep the warm pool at its configured size by building standbys in a
+/// background thread, so neither startup nor promotions ever wait on
+/// engine init. At most one filler runs at a time.
+fn ensure_warm_fill(state: &Arc<GatewayState>) {
+    if state.cfg.warm_pool == 0 || state.spawner.is_none() {
+        return;
+    }
+    if state.warm_filling.swap(true, Ordering::AcqRel) {
+        return; // a filler is already running
+    }
+    let st = Arc::clone(state);
+    std::thread::spawn(move || {
+        let mut failures = 0u32;
+        'fill: loop {
+            while !st.stop.load(Ordering::Acquire) {
+                if st.warm.lock().unwrap().len() >= st.cfg.warm_pool {
+                    break;
+                }
+                match spawn_warm(&st) {
+                    Ok(id) => {
+                        failures = 0;
+                        let pooled = st.warm.lock().unwrap().len();
+                        crate::info!("gateway", "warm replica {id} standing by ({pooled} pooled)");
+                    }
+                    Err(e) => {
+                        // transient init flakes get a bounded backoff; a
+                        // persistently failing spawner stops the filler
+                        // until the next scale event retriggers it
+                        failures += 1;
+                        if failures >= WARM_FILL_MAX_FAILURES {
+                            crate::error!(
+                                "gateway",
+                                "warm pool fill stopped after {failures} consecutive failures: {e}"
+                            );
+                            st.warm_filling.store(false, Ordering::Release);
+                            break 'fill;
+                        }
+                        let delay = Duration::from_millis(250u64 << failures.min(6));
+                        crate::error!(
+                            "gateway",
+                            "warm pool fill failed (attempt {failures}, retrying in {delay:?}): {e}"
+                        );
+                        std::thread::sleep(delay);
+                    }
+                }
+            }
+            st.warm_filling.store(false, Ordering::Release);
+            // close the lost-refill race: a promotion may have drained the
+            // pool after our last check but before the flag cleared — its
+            // ensure_warm_fill call saw the stale flag and bailed. Re-check,
+            // and only exit while the pool is genuinely full (or stopping).
+            if st.stop.load(Ordering::Acquire)
+                || st.warm.lock().unwrap().len() >= st.cfg.warm_pool
+                || st.warm_filling.swap(true, Ordering::AcqRel)
+            {
+                break;
+            }
+        }
+    });
+}
+
+/// Bring one more replica live (supervisor scale-up /
+/// `Gateway::add_replica`): promote from the warm pool when a standby is
+/// ready — O(route-update), the latency-hiding path — else hot-spawn cold
+/// and pay engine init inline. Either way the promotion latency lands in
+/// the `enova_gateway_promotion_seconds` histogram under its `kind`.
 fn hot_add_replica(state: &Arc<GatewayState>) -> Result<u64> {
+    let t0 = Instant::now();
+    let promoted = state.warm.lock().unwrap().pop();
+    if let Some(w) = promoted {
+        // replay the cluster verdict in case it changed while parked
+        replay_last_reconfig(state, &w.slot);
+        register_replica(state, w.id, Arc::clone(&w.slot), 1.0);
+        state.metrics.observe_promotion(true, t0.elapsed().as_secs_f64());
+        ensure_warm_fill(state); // refill behind the promotion
+        let live = state.replicas.read().unwrap().len();
+        crate::info!("gateway", "replica {} promoted from warm pool ({live} live)", w.id);
+        return Ok(w.id);
+    }
     let spawner = state
         .spawner
         .as_ref()
@@ -474,10 +686,60 @@ fn hot_add_replica(state: &Arc<GatewayState>) -> Result<u64> {
     let factory: EngineFactory = Box::new(move || spawner(id));
     let p = launch_replica(state, id, factory);
     await_replica(&p)?;
+    replay_last_reconfig(state, &p.slot);
     register_replica(state, id, p.slot, 1.0);
+    state.metrics.observe_promotion(false, t0.elapsed().as_secs_f64());
+    ensure_warm_fill(state);
     let live = state.replicas.read().unwrap().len();
-    crate::info!("gateway", "replica {id} hot-added ({live} live)");
+    crate::info!("gateway", "replica {id} hot-added cold ({live} live)");
     Ok(id)
+}
+
+/// Post a live capacity mutation to every live replica's worker mailbox
+/// (and every parked standby, so promotions come up configured); returns
+/// how many live workers were asked. The verdict is remembered and
+/// replayed onto replicas that join later.
+fn reconfigure_live(state: &GatewayState, max_num_seqs: usize, gpu_memory: f64) -> usize {
+    *state.last_reconfig.lock().unwrap() = Some((max_num_seqs, gpu_memory));
+    let asked = {
+        let replicas = state.replicas.read().unwrap();
+        for slot in replicas.values() {
+            *slot.reconfig.lock().unwrap() = Some((max_num_seqs, gpu_memory));
+        }
+        replicas.len()
+    };
+    for w in state.warm.lock().unwrap().iter() {
+        *w.slot.reconfig.lock().unwrap() = Some((max_num_seqs, gpu_memory));
+    }
+    asked
+}
+
+/// Highest applied `max_num_seqs` across the live set — the value the
+/// supervisor's reconfiguration loop compares recommendations against.
+fn applied_max_num_seqs(state: &GatewayState) -> Option<usize> {
+    state
+        .replicas
+        .read()
+        .unwrap()
+        .values()
+        .map(|s| s.applied_max_num_seqs.load(Ordering::Acquire))
+        .max()
+}
+
+/// Concatenate the last `window` Table II frames of every live replica —
+/// the monitoring window the supervisor feeds to the §IV-A estimators.
+fn window_frames(state: &GatewayState, window: usize) -> Vec<crate::metrics::Frame> {
+    let ids: Vec<u64> = state.replicas.read().unwrap().keys().copied().collect();
+    let store = state.store.lock().unwrap();
+    let mut frames = Vec::new();
+    for id in ids {
+        frames.extend(crate::metrics::recent_frames(
+            &store,
+            &format!("replica-{id}"),
+            window,
+        ));
+    }
+    frames
 }
 
 /// Retire a replica with the drain-then-join protocol:
@@ -513,6 +775,19 @@ fn retire_replica(state: &Arc<GatewayState>, id: u64) -> Result<()> {
         .unwrap()
         .remove(&id)
         .ok_or_else(|| anyhow!("unknown replica id {id}"))?;
+    // demote instead of drain-kill while the warm pool is under target:
+    // the worker stays alive (finishing any in-flight work on its own
+    // schedule) and the built engine is reused by the next promotion
+    {
+        let mut warm = state.warm.lock().unwrap();
+        if state.cfg.warm_pool > 0 && warm.len() < state.cfg.warm_pool {
+            warm.push(WarmReplica { id, slot });
+            drop(warm);
+            let live = state.replicas.read().unwrap().len();
+            crate::info!("gateway", "replica {id} demoted to warm standby ({live} live)");
+            return Ok(());
+        }
+    }
     slot.draining.store(true, Ordering::Release);
     let join = slot.join.lock().unwrap().take();
     if let Some(h) = join {
@@ -646,6 +921,8 @@ fn replica_loop(
     mut engine: Box<dyn StreamEngine>,
     rx: Receiver<Job>,
     draining: &AtomicBool,
+    reconfig: &Mutex<Option<(usize, f64)>>,
+    applied: &AtomicUsize,
     state: &GatewayState,
 ) {
     let instance = format!("replica-{id}");
@@ -654,6 +931,25 @@ fn replica_loop(
     let mut window = FrameWindow::new();
 
     loop {
+        // apply any pending live reconfiguration (the supervisor's §IV-A
+        // verdict) between steps: queued and in-flight work is untouched —
+        // a shrink only lowers the ceiling new admissions see
+        if let Some((seqs, mem)) = reconfig.lock().unwrap().take() {
+            match engine.reconfigure(seqs, mem) {
+                Ok(out) => {
+                    applied.store(out.max_num_seqs, Ordering::Release);
+                    state.metrics.note_reconfigure();
+                    crate::info!(
+                        "gateway",
+                        "replica {id} reconfigured live: max_num_seqs {} gpu_memory {:.2}",
+                        out.max_num_seqs,
+                        out.gpu_memory
+                    );
+                }
+                Err(e) => crate::error!("gateway", "replica {id} reconfigure failed: {e}"),
+            }
+        }
+
         if state.stop.load(Ordering::Acquire) {
             // shutdown: answer every queued and in-flight job with a 503
             // (terminal SSE event for streams) instead of silently
@@ -804,6 +1100,7 @@ fn record_frame(
     let mut store = state.store.lock().unwrap();
     frame.record(&mut store, instance, t);
     store.push(QUEUE_WAIT, instance, t, stats.mean_queue_wait);
+    store.push(MAX_SEQS, instance, t, engine.capacity() as f64);
 }
 
 fn handle_connection(mut stream: TcpStream, state: &GatewayState) {
@@ -840,7 +1137,14 @@ fn route(req: &http::Request, stream: &mut TcpStream, state: &GatewayState) -> s
         ("POST", "/v1/completions") => serve_completion(req, stream, state, false, t0),
         ("POST", "/v1/chat/completions") => serve_completion(req, stream, state, true, t0),
         ("GET", "/metrics") => {
-            let live = state.replicas.read().unwrap().len();
+            let live: Vec<String> = state
+                .replicas
+                .read()
+                .unwrap()
+                .keys()
+                .map(|id| format!("replica-{id}"))
+                .collect();
+            let warm = state.warm.lock().unwrap().len();
             let sup = state.supervisor.lock().unwrap().snapshot();
             let body = {
                 let store = state.store.lock().unwrap();
@@ -848,7 +1152,8 @@ fn route(req: &http::Request, stream: &mut TcpStream, state: &GatewayState) -> s
                     &state.metrics,
                     &store,
                     state.gate.inflight(),
-                    live,
+                    &live,
+                    warm,
                     state.started.elapsed().as_secs_f64(),
                     &sup,
                 )

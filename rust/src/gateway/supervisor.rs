@@ -19,6 +19,8 @@ use super::GatewayState;
 use crate::autoscaler::Action;
 use crate::detect::{Detection, ScaleDirection, ZscoreDetector};
 use crate::metrics::Frame;
+use crate::simulator::gpu::{GpuSpec, RTX4090_24G};
+use crate::simulator::modelcard::{ModelCard, MISTRAL_7B};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -40,6 +42,12 @@ pub struct SupervisorConfig {
     /// `patience` samples, even if the detector is within threshold;
     /// zero disables the guard
     pub queue_wait_budget: Duration,
+    /// run the detector-driven replica-count loop; off, the supervisor
+    /// only executes the reconfiguration policy (if any)
+    pub detector_scaling: bool,
+    /// live §IV-A reconfiguration of `max_num_seqs`/`gpu_memory`; `None`
+    /// disables the loop
+    pub reconfig: Option<ReconfigPolicy>,
 }
 
 impl Default for SupervisorConfig {
@@ -52,6 +60,47 @@ impl Default for SupervisorConfig {
             min_replicas: 1,
             max_replicas: 4,
             queue_wait_budget: Duration::from_millis(500),
+            detector_scaling: true,
+            reconfig: None,
+        }
+    }
+}
+
+/// Policy for the live configuration-recommendation loop: how often to
+/// re-derive the Table I knobs from the monitoring window, and the
+/// hysteresis that keeps it from thrashing or fighting the scale loop.
+#[derive(Debug, Clone)]
+pub struct ReconfigPolicy {
+    /// cadence at which the §IV-A estimators run over the live window
+    pub interval: Duration,
+    /// minimum wall-clock between applied reconfigurations, *and* the
+    /// keep-out period after any scale-up/down action
+    pub cooldown: Duration,
+    /// relative dead-band: |recommended − applied| / applied must exceed
+    /// this before a verdict is applied
+    pub deadband: f64,
+    /// clamp bounds on the recommended `max_num_seqs`
+    pub min_max_num_seqs: usize,
+    pub max_max_num_seqs: usize,
+    /// Table II frames per replica fed to the estimators
+    pub window: usize,
+    /// device/model card the gpu_memory projection maps onto (Fig. 6
+    /// pairs Mistral-7B with an RTX 4090 by default)
+    pub gpu: &'static GpuSpec,
+    pub model: &'static ModelCard,
+}
+
+impl Default for ReconfigPolicy {
+    fn default() -> Self {
+        ReconfigPolicy {
+            interval: Duration::from_secs(10),
+            cooldown: Duration::from_secs(60),
+            deadband: 0.25,
+            min_max_num_seqs: 1,
+            max_max_num_seqs: 256,
+            window: 120,
+            gpu: &RTX4090_24G,
+            model: &MISTRAL_7B,
         }
     }
 }
@@ -63,6 +112,8 @@ pub enum Trigger {
     Detector,
     /// the queue-pressure guard (mean queue wait over budget)
     QueueWait,
+    /// the §IV-A configuration recommender (live window re-derivation)
+    Recommender,
 }
 
 /// One executed scaling action.
@@ -73,10 +124,12 @@ pub struct ScalingEvent {
     pub direction: ScaleDirection,
     pub action: Action,
     pub trigger: Trigger,
-    /// detector energy and threshold at decision time
+    /// detector energy and threshold at decision time (0/0 for
+    /// recommender-triggered reconfigurations — no detector involved)
     pub energy: f64,
     pub threshold: f64,
-    /// the replica the action spawned or retired
+    /// the replica the action spawned or retired; for a cluster-wide
+    /// [`Action::Reconfigure`], the lowest live replica id
     pub replica_id: u64,
     pub replicas_after: usize,
 }
@@ -92,6 +145,10 @@ pub(super) struct SupervisorStatus {
     pub scale_downs: u64,
     pub last_energy: f64,
     pub last_threshold: f64,
+    /// reconfiguration verdicts applied to the live replica set
+    pub reconfigures: u64,
+    /// last max_num_seqs applied cluster-wide (0 = never)
+    pub last_max_num_seqs: usize,
 }
 
 impl SupervisorStatus {
@@ -111,6 +168,8 @@ impl SupervisorStatus {
             last_energy: self.last_energy,
             last_threshold: self.last_threshold,
             events: self.events.len(),
+            reconfigures: self.reconfigures,
+            last_max_num_seqs: self.last_max_num_seqs,
         }
     }
 }
@@ -125,6 +184,8 @@ pub struct SupervisorSnapshot {
     pub last_energy: f64,
     pub last_threshold: f64,
     pub events: usize,
+    pub reconfigures: u64,
+    pub last_max_num_seqs: usize,
 }
 
 /// Consecutive-sample counters feeding the patience rule. Pure logic so
@@ -176,6 +237,16 @@ impl Streaks {
     }
 }
 
+/// Mutable state of the reconfiguration loop between ticks.
+struct ReconfigState {
+    next_due: Instant,
+    last_applied: Option<Instant>,
+    /// last *requested* target. The engine may clamp below the request
+    /// (compiled batch width), so the dead-band must also compare against
+    /// what was asked — otherwise a clamped verdict re-fires forever.
+    last_target: Option<usize>,
+}
+
 /// Run the supervisor until the gateway stops. Spawned by
 /// [`super::Gateway::start_scalable`] when a [`SupervisorConfig`] is
 /// given.
@@ -186,22 +257,45 @@ pub(super) fn supervisor_loop(state: &Arc<GatewayState>, cfg: SupervisorConfig) 
     let mut detector: Option<ZscoreDetector> = None;
     let mut streaks = Streaks::default();
     let mut last_action: Option<Instant> = None;
+    let mut reconfig_state = cfg.reconfig.as_ref().map(|p| ReconfigState {
+        next_due: Instant::now() + p.interval,
+        last_applied: None,
+        last_target: None,
+    });
 
     crate::info!(
         "gateway",
         "autoscaling supervisor up: interval {:?}, calib {} samples, patience {}, \
-         replicas {}..={}",
+         replicas {}..={}, detector scaling {}, reconfig {}",
         cfg.sample_interval,
         calib_target,
         cfg.patience,
         cfg.min_replicas,
-        cfg.max_replicas
+        cfg.max_replicas,
+        cfg.detector_scaling,
+        cfg.reconfig.is_some()
     );
 
     loop {
         if sleep_interruptible(state, cfg.sample_interval) {
             break;
         }
+
+        // the §IV-A reconfiguration loop runs on its own cadence; an
+        // applied verdict changes the service the detector was calibrated
+        // on, so calibration and streaks restart from scratch
+        if let (Some(policy), Some(rs)) = (cfg.reconfig.as_ref(), reconfig_state.as_mut()) {
+            if maybe_reconfigure(state, policy, rs, last_action) {
+                streaks.reset();
+                detector = None;
+                calib_frames.clear();
+                state.supervisor.lock().unwrap().calibrated = false;
+            }
+        }
+        if !cfg.detector_scaling {
+            continue;
+        }
+
         let Some((frame, queue_wait)) = cluster_sample(state) else {
             continue;
         };
@@ -258,7 +352,15 @@ pub(super) fn supervisor_loop(state: &Arc<GatewayState>, cfg: SupervisorConfig) 
             ScaleDirection::Up if live < cfg.max_replicas => {
                 match super::hot_add_replica(state) {
                     Ok(id) => {
-                        record_event(state, &d, direction, trigger, Action::AddReplica, id);
+                        record_event(
+                            state,
+                            d.kl,
+                            d.threshold,
+                            direction,
+                            trigger,
+                            Action::AddReplica,
+                            id,
+                        );
                         last_action = Some(Instant::now());
                     }
                     Err(e) => crate::error!("gateway", "supervisor scale-up failed: {e}"),
@@ -272,7 +374,15 @@ pub(super) fn supervisor_loop(state: &Arc<GatewayState>, cfg: SupervisorConfig) 
                 if let Some(id) = id {
                     match super::retire_replica(state, id) {
                         Ok(()) => {
-                            record_event(state, &d, direction, trigger, Action::ScaleDown, id);
+                            record_event(
+                                state,
+                                d.kl,
+                                d.threshold,
+                                direction,
+                                trigger,
+                                Action::ScaleDown,
+                                id,
+                            );
                             last_action = Some(Instant::now());
                         }
                         Err(e) => crate::error!("gateway", "supervisor scale-down failed: {e}"),
@@ -286,9 +396,109 @@ pub(super) fn supervisor_loop(state: &Arc<GatewayState>, cfg: SupervisorConfig) 
     }
 }
 
+/// One tick of the reconfiguration loop: re-derive the Table I knobs from
+/// the live window and apply them when the verdict clears the dead-band
+/// and every cooldown. Returns true when a verdict was applied.
+fn maybe_reconfigure(
+    state: &Arc<GatewayState>,
+    policy: &ReconfigPolicy,
+    rs: &mut ReconfigState,
+    last_scale_action: Option<Instant>,
+) -> bool {
+    let now = Instant::now();
+    if now < rs.next_due {
+        return false;
+    }
+    rs.next_due = now + policy.interval;
+    // hysteresis: never reconfigure while the scale loop just acted (the
+    // new replica set needs fresh evidence), nor twice within cooldown
+    if let Some(t) = last_scale_action {
+        if t.elapsed() < policy.cooldown {
+            return false;
+        }
+    }
+    if let Some(t) = rs.last_applied {
+        if t.elapsed() < policy.cooldown {
+            return false;
+        }
+    }
+    let Some(current) = super::applied_max_num_seqs(state) else {
+        return false;
+    };
+    let frames = super::window_frames(state, policy.window);
+    // §IV-A-1: refuses degenerate windows (idle traffic, too few busy
+    // frames) — the service is only re-derived from real evidence
+    let Some(decision) = crate::config::determine_max_num_seqs(&frames) else {
+        return false;
+    };
+    let hi = policy.max_max_num_seqs.max(policy.min_max_num_seqs);
+    let target = decision.max_num_seqs.clamp(policy.min_max_num_seqs, hi);
+    let rel = (target as f64 - current as f64).abs() / current.max(1) as f64;
+    if rel <= policy.deadband {
+        return false;
+    }
+    // the engine may have clamped the previous request below what was
+    // asked (compiled batch width); re-applying a near-identical verdict
+    // would churn forever without changing anything
+    if let Some(prev) = rs.last_target {
+        let rel_prev = (target as f64 - prev as f64).abs() / prev.max(1) as f64;
+        if rel_prev <= policy.deadband {
+            return false;
+        }
+    }
+    // §IV-A-2: project gpu_memory at the recommended concurrency
+    let gm = crate::config::determine_gpu_memory(&frames, target, policy.gpu, policy.model);
+    let asked = super::reconfigure_live(state, target, gm.gpu_memory);
+    if asked == 0 {
+        return false;
+    }
+    rs.last_applied = Some(Instant::now());
+    rs.last_target = Some(target);
+    let direction = if target > current {
+        ScaleDirection::Up
+    } else {
+        ScaleDirection::Down
+    };
+    let subject = state
+        .replicas
+        .read()
+        .unwrap()
+        .keys()
+        .min()
+        .copied()
+        .unwrap_or(0);
+    crate::info!(
+        "gateway",
+        "supervisor reconfigure: max_num_seqs {current} -> {target} (n_limit {:.2}, \
+         t_limit {:.2}s, {:?}), gpu_memory {:.2} -> {} replica(s)",
+        decision.n_limit,
+        decision.t_limit,
+        decision.saturation,
+        gm.gpu_memory,
+        asked
+    );
+    record_event(
+        state,
+        0.0,
+        0.0,
+        direction,
+        Trigger::Recommender,
+        Action::Reconfigure {
+            max_num_seqs: target,
+            gpu_memory: gm.gpu_memory,
+        },
+        subject,
+    );
+    let mut status = state.supervisor.lock().unwrap();
+    status.reconfigures += 1;
+    status.last_max_num_seqs = target;
+    true
+}
+
 fn record_event(
     state: &GatewayState,
-    d: &Detection,
+    energy: f64,
+    threshold: f64,
     direction: ScaleDirection,
     trigger: Trigger,
     action: Action,
@@ -300,25 +510,29 @@ fn record_event(
         direction,
         action,
         trigger,
-        energy: d.kl,
-        threshold: d.threshold,
+        energy,
+        threshold,
         replica_id,
         replicas_after,
     };
     crate::info!(
         "gateway",
-        "supervisor action: {:?} via {:?} (energy {:.3} > {:.3}) -> replica {} ({} live)",
+        "supervisor action: {:?} via {:?} (energy {:.3} vs {:.3}) -> replica {} ({} live)",
         action,
         trigger,
-        d.kl,
-        d.threshold,
+        energy,
+        threshold,
         replica_id,
         replicas_after
     );
     let mut status = state.supervisor.lock().unwrap();
-    match direction {
-        ScaleDirection::Up => status.scale_ups += 1,
-        ScaleDirection::Down => status.scale_downs += 1,
+    // reconfigurations have their own counter; only replica-count actions
+    // feed the scale-up/down tallies
+    if !matches!(action, Action::Reconfigure { .. }) {
+        match direction {
+            ScaleDirection::Up => status.scale_ups += 1,
+            ScaleDirection::Down => status.scale_downs += 1,
+        }
     }
     status.events.push(event);
 }

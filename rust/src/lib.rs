@@ -59,6 +59,7 @@ pub mod engine;
 pub mod gateway;
 pub mod metrics;
 pub mod router;
+#[cfg(feature = "xla-runtime")]
 pub mod runtime;
 pub mod tsdb;
 

@@ -14,8 +14,14 @@ COMMANDS:
   serve-http  OpenAI-compatible HTTP gateway (--port 8080 --replicas 2 --engine auto|lm|sim
               --max-num-seqs N --max-tokens N --max-pending N --rate RPS --burst N
               --http-workers N --sim-delay-ms N --host ADDR --queue-budget-ms N
+              --warm-pool N
               --autoscale [--min-replicas N --max-replicas N --scale-interval-ms N
-              --calib-samples N --patience N --cooldown-ms N --queue-wait-budget-ms N])
+              --calib-samples N --patience N --cooldown-ms N --queue-wait-budget-ms N]
+              --reconfig [--reconfig-interval-ms N --reconfig-cooldown-ms N
+              --reconfig-deadband F --reconfig-min-seqs N --reconfig-max-seqs N
+              --reconfig-window N])
+  loadgen     closed-loop load against a gateway (--addr HOST:PORT --concurrency N
+              --requests N --max-tokens N [--report FILE] [--strict])
   recommend   run the service configuration module for --model <name> --gpu <name>
   detect      calibrate + run the performance detector on the trace dataset
   simulate    simulate a replica (--model --gpu --rps --seconds --max-num-seqs)
@@ -23,11 +29,12 @@ COMMANDS:
 ";
 
 fn main() -> anyhow::Result<()> {
-    let mut args = Args::from_env_known(&["verbose", "autoscale"]);
+    let mut args = Args::from_env_known(&["verbose", "autoscale", "reconfig", "strict"]);
     let cmd = args.subcommand();
     match cmd.as_str() {
         "serve" => serve(&args),
         "serve-http" => serve_http(&args),
+        "loadgen" => loadgen_cmd(&args),
         "recommend" => recommend(&args),
         "detect" => detect(&args),
         "simulate" => simulate(&args),
@@ -39,6 +46,7 @@ fn main() -> anyhow::Result<()> {
     }
 }
 
+#[cfg(feature = "xla-runtime")]
 fn info() -> anyhow::Result<()> {
     let m = enova::runtime::Manifest::load(&enova::runtime::Manifest::default_dir())?;
     println!("artifacts: {}", m.dir.display());
@@ -52,6 +60,12 @@ fn info() -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla-runtime"))]
+fn info() -> anyhow::Result<()> {
+    anyhow::bail!("`info` reads the AOT artifact manifest; rebuild with the `xla-runtime` feature")
+}
+
+#[cfg(feature = "xla-runtime")]
 fn serve(args: &Args) -> anyhow::Result<()> {
     use enova::engine::{Engine, EngineConfig};
     use enova::runtime::lm::{ExecMode, LmRuntime};
@@ -82,17 +96,76 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla-runtime"))]
+fn serve(_args: &Args) -> anyhow::Result<()> {
+    anyhow::bail!("`serve` drives the compiled tiny LM; rebuild with the `xla-runtime` feature")
+}
+
+/// Which engine `--engine auto` resolves to: the compiled LM when the
+/// build has the runtime and the artifacts exist, the sim engine
+/// otherwise.
+fn auto_engine_kind() -> &'static str {
+    #[cfg(feature = "xla-runtime")]
+    {
+        if enova::runtime::Manifest::artifacts_exist() {
+            return "lm";
+        }
+        eprintln!("artifacts not found; serving with the deterministic sim engine");
+    }
+    #[cfg(not(feature = "xla-runtime"))]
+    eprintln!("built without the xla-runtime feature; serving with the deterministic sim engine");
+    "sim"
+}
+
+/// Reusable spawner for compiled-LM replicas (supervisor hot-add path).
+#[cfg(feature = "xla-runtime")]
+fn lm_spawner(
+    max_num_seqs: usize,
+    max_tokens: usize,
+    temperature: f64,
+) -> enova::gateway::EngineSpawner {
+    use enova::engine::{Engine, EngineConfig, StreamEngine};
+    use enova::runtime::lm::{ExecMode, LmRuntime};
+    std::sync::Arc::new(move |id| {
+        let m = enova::runtime::Manifest::load(&enova::runtime::Manifest::default_dir())?;
+        let rt = enova::runtime::PjRt::cpu()?;
+        let lm = LmRuntime::load(rt, &m, ExecMode::Chained)?;
+        let cfg = EngineConfig {
+            max_num_seqs,
+            max_tokens,
+            temperature,
+        };
+        Ok(Box::new(Engine::new(lm, cfg, 100 + id)) as Box<dyn StreamEngine>)
+    })
+}
+
+/// Stub: `--engine lm` is rejected before this can ever be called.
+#[cfg(not(feature = "xla-runtime"))]
+fn lm_spawner(
+    _max_num_seqs: usize,
+    _max_tokens: usize,
+    _temperature: f64,
+) -> enova::gateway::EngineSpawner {
+    std::sync::Arc::new(|_id| {
+        Err(anyhow::anyhow!(
+            "this binary was built without the xla-runtime feature"
+        ))
+    })
+}
+
 /// `enova serve-http`: the OpenAI-compatible serving gateway. `--engine
 /// auto` (default) uses the compiled LM when artifacts exist and falls
 /// back to the deterministic sim engine otherwise. With `--autoscale`,
 /// the closed-loop supervisor hot-adds / retires replicas from the
-/// performance detector's decisions.
+/// performance detector's decisions; with `--reconfig` it also re-derives
+/// `max_num_seqs`/`gpu_memory` from the live monitoring window (§IV-A)
+/// and applies the verdict to running replicas. `--warm-pool N` keeps N
+/// standby replicas pre-initialized so scale-ups skip engine init.
 fn serve_http(args: &Args) -> anyhow::Result<()> {
     use enova::engine::sim::{SimEngine, SimEngineConfig};
-    use enova::engine::{Engine, EngineConfig, StreamEngine};
-    use enova::gateway::supervisor::SupervisorConfig;
+    use enova::engine::StreamEngine;
+    use enova::gateway::supervisor::{ReconfigPolicy, SupervisorConfig};
     use enova::gateway::{EngineSpawner, Gateway, GatewayConfig};
-    use enova::runtime::lm::{ExecMode, LmRuntime};
     use std::sync::Arc;
     use std::time::Duration;
 
@@ -103,34 +176,21 @@ fn serve_http(args: &Args) -> anyhow::Result<()> {
     let sim_delay = Duration::from_millis(args.get_usize("sim-delay-ms", 0) as u64);
 
     let engine_kind = match args.get_or("engine", "auto") {
-        "auto" => {
-            if enova::runtime::Manifest::artifacts_exist() {
-                "lm"
-            } else {
-                eprintln!("artifacts not found; serving with the deterministic sim engine");
-                "sim"
-            }
-        }
+        "auto" => auto_engine_kind(),
         "lm" => "lm",
         "sim" => "sim",
         other => anyhow::bail!("--engine must be auto, lm or sim (got {other:?})"),
     };
+    #[cfg(not(feature = "xla-runtime"))]
+    anyhow::ensure!(
+        engine_kind != "lm",
+        "--engine lm needs the xla-runtime feature (rebuild with default features)"
+    );
 
     // a reusable spawner (not one-shot factories) so the supervisor can
-    // hot-add replicas beyond the initial set
-    let use_lm = engine_kind == "lm";
-    let spawner: EngineSpawner = if use_lm {
-        Arc::new(move |id| {
-            let m = enova::runtime::Manifest::load(&enova::runtime::Manifest::default_dir())?;
-            let rt = enova::runtime::PjRt::cpu()?;
-            let lm = LmRuntime::load(rt, &m, ExecMode::Chained)?;
-            let cfg = EngineConfig {
-                max_num_seqs,
-                max_tokens,
-                temperature,
-            };
-            Ok(Box::new(Engine::new(lm, cfg, 100 + id)) as Box<dyn StreamEngine>)
-        })
+    // hot-add replicas beyond the initial set and pre-warm standbys
+    let spawner: EngineSpawner = if engine_kind == "lm" {
+        lm_spawner(max_num_seqs, max_tokens, temperature)
     } else {
         Arc::new(move |_id| {
             Ok(Box::new(SimEngine::new(SimEngineConfig {
@@ -142,7 +202,17 @@ fn serve_http(args: &Args) -> anyhow::Result<()> {
     };
 
     let autoscale = args.flag("autoscale");
-    let supervisor = autoscale.then(|| SupervisorConfig {
+    let reconfig = args.flag("reconfig");
+    let reconfig_policy = reconfig.then(|| ReconfigPolicy {
+        interval: Duration::from_millis(args.get_usize("reconfig-interval-ms", 10_000) as u64),
+        cooldown: Duration::from_millis(args.get_usize("reconfig-cooldown-ms", 60_000) as u64),
+        deadband: args.get_f64("reconfig-deadband", 0.25),
+        min_max_num_seqs: args.get_usize("reconfig-min-seqs", 1).max(1),
+        max_max_num_seqs: args.get_usize("reconfig-max-seqs", 256),
+        window: args.get_usize("reconfig-window", 120),
+        ..ReconfigPolicy::default()
+    });
+    let supervisor = (autoscale || reconfig).then(|| SupervisorConfig {
         sample_interval: Duration::from_millis(args.get_usize("scale-interval-ms", 1000) as u64),
         calib_samples: args.get_usize("calib-samples", 30),
         patience: args.get_usize("patience", 3),
@@ -152,6 +222,8 @@ fn serve_http(args: &Args) -> anyhow::Result<()> {
         queue_wait_budget: Duration::from_millis(
             args.get_usize("queue-wait-budget-ms", 500) as u64,
         ),
+        detector_scaling: autoscale,
+        reconfig: reconfig_policy,
     });
 
     let port = args.get_usize("port", 8080);
@@ -165,16 +237,57 @@ fn serve_http(args: &Args) -> anyhow::Result<()> {
         rate_burst: args.get_usize("burst", 64),
         http_workers: args.get_usize("http-workers", 64),
         queue_budget: Duration::from_millis(args.get_usize("queue-budget-ms", 0) as u64),
+        warm_pool: args.get_usize("warm-pool", 0),
         ..GatewayConfig::default()
     };
+    let warm_pool = cfg.warm_pool;
     let gw = Gateway::start_scalable(cfg, spawner, replicas, supervisor)?;
     println!(
-        "enova gateway: {replicas}x {engine_kind} replica(s) on http://{} (autoscale: {})",
+        "enova gateway: {replicas}x {engine_kind} replica(s) on http://{} \
+         (autoscale: {}, reconfig: {}, warm pool: {warm_pool})",
         gw.addr,
-        if autoscale { "on" } else { "off" }
+        if autoscale { "on" } else { "off" },
+        if reconfig { "on" } else { "off" },
     );
     println!("  try: curl -s http://{}/healthz", gw.addr);
     gw.serve_forever();
+    Ok(())
+}
+
+/// `enova loadgen`: drive a running gateway closed-loop and report. With
+/// `--report FILE` the full report is written as JSON (the CI smoke job's
+/// artifact); with `--strict` any transport error or non-2xx response
+/// makes the command fail.
+fn loadgen_cmd(args: &Args) -> anyhow::Result<()> {
+    use enova::gateway::loadgen;
+    let addr = args.get_or("addr", "127.0.0.1:8080").to_string();
+    let cfg = loadgen::LoadgenConfig {
+        concurrency: args.get_usize("concurrency", 8).max(1),
+        requests_per_worker: args.get_usize("requests", 4).max(1),
+        max_tokens: args.get_usize("max-tokens", 8),
+        ..Default::default()
+    };
+    let report = loadgen::run(&addr, &cfg);
+    println!("{}", report.summary());
+    if let Some(path) = args.get("report") {
+        std::fs::write(path, report.to_json().to_string_pretty())?;
+        println!("report written to {path}");
+    }
+    if args.flag("strict") {
+        let non_2xx: usize = report
+            .status_counts
+            .iter()
+            .filter(|&(&code, _)| !(200..300).contains(&code))
+            .map(|(_, &n)| n)
+            .sum();
+        anyhow::ensure!(
+            report.errors == 0 && non_2xx == 0,
+            "strict loadgen failed: {} transport errors, {} non-2xx responses ({:?})",
+            report.errors,
+            non_2xx,
+            report.status_counts
+        );
+    }
     Ok(())
 }
 
@@ -193,6 +306,12 @@ fn recommend(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla-runtime"))]
+fn detect(_args: &Args) -> anyhow::Result<()> {
+    anyhow::bail!("`detect` runs the compiled VAE; rebuild with the `xla-runtime` feature")
+}
+
+#[cfg(feature = "xla-runtime")]
 fn detect(_args: &Args) -> anyhow::Result<()> {
     let m = enova::runtime::Manifest::load(&enova::runtime::Manifest::default_dir())?;
     let ds = enova::detect::dataset::DetectionDataset::load(&m.detection_dataset)?;

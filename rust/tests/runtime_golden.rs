@@ -2,6 +2,7 @@
 //! golden logits that `python/compile/aot.py` recorded when it lowered the
 //! model. This is the end-to-end correctness signal for the whole
 //! python → HLO-text → rust → PJRT bridge.
+#![cfg(feature = "xla-runtime")]
 
 use enova::runtime::lm::{ExecMode, LmRuntime};
 use enova::runtime::{Manifest, PjRt};

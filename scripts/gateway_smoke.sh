@@ -1,0 +1,46 @@
+#!/usr/bin/env bash
+# CI gateway smoke: boot `enova serve-http` on the deterministic sim
+# engine, drive a short closed-loop burst with the built-in loadgen, and
+# fail on any transport error or non-2xx response (incl. 503) — a gateway
+# at idle load must serve everything. Writes the loadgen report JSON
+# (uploaded as a CI artifact).
+#
+# Expects the release binary to be built already:
+#   cargo build --release --no-default-features  (or with default features)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+BIN=rust/target/release/enova
+PORT="${SMOKE_PORT:-18431}"
+REPORT="${SMOKE_REPORT:-loadgen-report.json}"
+
+if [[ ! -x "$BIN" ]]; then
+    echo "release binary missing at $BIN; build it first" >&2
+    exit 2
+fi
+
+"$BIN" serve-http --engine sim --port "$PORT" --replicas 2 --warm-pool 1 &
+SERVER=$!
+trap 'kill "$SERVER" 2>/dev/null || true' EXIT
+
+# wait for readiness (the /ready endpoint is 503 until all replicas built)
+READY=0
+for _ in $(seq 1 150); do
+    if curl -fsS "http://127.0.0.1:$PORT/ready" >/dev/null 2>&1; then
+        READY=1
+        break
+    fi
+    sleep 0.1
+done
+if [[ "$READY" != "1" ]]; then
+    echo "gateway never became ready on :$PORT" >&2
+    exit 1
+fi
+
+"$BIN" loadgen --addr "127.0.0.1:$PORT" --concurrency 8 --requests 5 \
+    --max-tokens 8 --strict --report "$REPORT"
+
+echo "==> smoke scrape sanity"
+curl -fsS "http://127.0.0.1:$PORT/metrics" | grep -c '^enova_' >/dev/null
+
+echo "gateway smoke OK; report at $REPORT"

@@ -1,24 +1,46 @@
 #!/usr/bin/env bash
 # Tier-1 verification: the gate every PR must keep green (ROADMAP.md).
-# Usage: scripts/tier1.sh [--no-fmt]
+# Usage: scripts/tier1.sh [--no-fmt] [--no-default-features]
+#
+#   --no-default-features  sim-only build (drops the `xla-runtime` feature,
+#                          so no xla_extension native lib is needed) — what
+#                          the CI `tier1-sim` job runs on stock runners.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
 
-echo "==> cargo build --release"
-cargo build --release
+NO_FMT=0
+FEATURES=()
+for arg in "$@"; do
+    case "$arg" in
+        --no-fmt) NO_FMT=1 ;;
+        --no-default-features) FEATURES+=("--no-default-features") ;;
+        *) echo "unknown option: $arg" >&2; exit 2 ;;
+    esac
+done
 
-echo "==> cargo test -q"
-cargo test -q
+# Reproducible builds: pin the dependency graph and refuse drift. The
+# lockfile should be committed; when absent (first run in a fresh
+# environment), generate and keep it so CI caching keys stay stable.
+if [[ ! -f Cargo.lock ]]; then
+    echo "==> Cargo.lock missing; generating (commit rust/Cargo.lock to pin CI)"
+    cargo generate-lockfile
+fi
+
+echo "==> cargo build --release --locked"
+cargo build --release --locked ${FEATURES[@]+"${FEATURES[@]}"}
+
+echo "==> cargo test -q --locked"
+cargo test -q --locked ${FEATURES[@]+"${FEATURES[@]}"}
 
 if cargo clippy --version >/dev/null 2>&1; then
     echo "==> cargo clippy -- -D warnings"
-    cargo clippy -- -D warnings
+    cargo clippy --locked ${FEATURES[@]+"${FEATURES[@]}"} -- -D warnings
 else
     echo "==> cargo clippy unavailable; skipping lint"
 fi
 
-if [[ "${1:-}" != "--no-fmt" ]]; then
+if [[ "$NO_FMT" != "1" ]]; then
     if cargo fmt --version >/dev/null 2>&1; then
         echo "==> cargo fmt --check"
         cargo fmt --check
