@@ -86,6 +86,31 @@ fn main() -> anyhow::Result<()> {
     );
     println!("\nloadgen: {}", report.summary());
 
+    // the scenario engine: the same traffic shapes the CI smoke matrix
+    // and bench-trend job replay (steady/diurnal/spike/ramp/mixture),
+    // here a short open-loop burst with its shape recorded in the report
+    let scenario = loadgen::ScenarioConfig {
+        kind: loadgen::ScenarioKind::Spike,
+        duration: Duration::from_secs(3),
+        base_rps: 3.0,
+        peak_rps: 12.0,
+        seed: 7,
+        workers: 8,
+        max_tokens: 6,
+        ..loadgen::ScenarioConfig::default()
+    };
+    let sr = loadgen::run_scenario(&addr, &scenario);
+    println!(
+        "scenario {} ({} offered): {}",
+        scenario.kind.name(),
+        sr.scenario
+            .as_ref()
+            .and_then(|j| j.get("offered"))
+            .and_then(enova::util::json::Json::as_usize)
+            .unwrap_or(0),
+        sr.summary()
+    );
+
     // scale-up the way the supervisor does it: the warm pool hides engine
     // init, so promotion is O(route-update)
     let deadline = Instant::now() + Duration::from_secs(60);

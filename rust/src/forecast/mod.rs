@@ -1,0 +1,584 @@
+//! Short-horizon request-rate forecasting for proactive autoscaling.
+//!
+//! ENOVA's performance-detection loop (§IV-B) is purely reactive: it waits
+//! for a z-score anomaly before acting, so a predictable diurnal ramp is
+//! always chased with cold-start lag. This module closes that gap the way
+//! SageServe-style systems do — forecast the arrival rate a few sampling
+//! steps ahead and pre-provision capacity *before* the demand arrives:
+//!
+//! * [`Forecaster`] runs two online models over the sampled rate series:
+//!   a seasonal-naive baseline (last season's value; plain naive without a
+//!   season) and Holt / Holt-Winters exponential smoothing (double when no
+//!   season is configured, triple additive when one is). Every observation
+//!   also matures the predictions made `horizon` steps earlier, so each
+//!   model carries a trailing weighted-MAPE at exactly the horizon the
+//!   supervisor plans against, and [`Forecaster::forecast`] always answers
+//!   with the currently-better model.
+//! * [`replicas_for_rate`] turns a predicted rate into a replica target
+//!   given per-replica service capacity and a safety headroom — the pure
+//!   half of the supervisor's proactive planner.
+//!
+//! The error tracking is the fallback story: when the trailing error rises
+//! over the configured budget ([`Forecaster::degraded`]), the supervisor
+//! stands the proactive planner down and the reactive detector loop keeps
+//! the gateway safe — a wrong forecast can cost money, but never
+//! correctness.
+//!
+//! Everything is NaN-free by construction: non-finite observations are
+//! ignored, forecasts of a degenerate (constant, even all-zero) window are
+//! the constant itself, and rates are clamped non-negative.
+
+use std::collections::VecDeque;
+
+/// Which model produced (or would produce) a forecast.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// value one season ago (last value when no season is configured)
+    SeasonalNaive,
+    /// Holt double smoothing, or Holt-Winters additive triple smoothing
+    /// once a full season has been observed
+    Smoothing,
+}
+
+impl Method {
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::SeasonalNaive => "seasonal_naive",
+            Method::Smoothing => "smoothing",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ForecastConfig {
+    /// steps ahead the planner asks about; errors are tracked at exactly
+    /// this horizon
+    pub horizon: usize,
+    /// season length in samples; 0 disables the seasonal components
+    pub season: usize,
+    /// level smoothing factor (0, 1]
+    pub alpha: f64,
+    /// trend smoothing factor (0, 1]
+    pub beta: f64,
+    /// seasonal smoothing factor (0, 1]
+    pub gamma: f64,
+    /// matured prediction errors kept per model
+    pub err_window: usize,
+    /// observations required before any forecast is answered
+    pub min_history: usize,
+}
+
+impl Default for ForecastConfig {
+    fn default() -> Self {
+        ForecastConfig {
+            horizon: 5,
+            season: 0,
+            alpha: 0.35,
+            beta: 0.15,
+            gamma: 0.25,
+            err_window: 120,
+            min_history: 5,
+        }
+    }
+}
+
+/// Holt / Holt-Winters state. Runs plain double smoothing until a full
+/// season has been buffered, then switches to additive triple smoothing.
+#[derive(Debug)]
+struct Smoother {
+    alpha: f64,
+    beta: f64,
+    gamma: f64,
+    season: usize,
+    level: f64,
+    trend: f64,
+    /// additive seasonal indices, phase-aligned to observation count
+    seasonal: Vec<f64>,
+    /// first-season buffer used to initialize the seasonal indices
+    init_buf: Vec<f64>,
+    /// observations consumed
+    n: u64,
+}
+
+impl Smoother {
+    fn new(alpha: f64, beta: f64, gamma: f64, season: usize) -> Smoother {
+        Smoother {
+            alpha,
+            beta,
+            gamma,
+            season,
+            level: 0.0,
+            trend: 0.0,
+            seasonal: Vec::new(),
+            init_buf: Vec::new(),
+            n: 0,
+        }
+    }
+
+    fn seasonal_ready(&self) -> bool {
+        !self.seasonal.is_empty()
+    }
+
+    fn observe(&mut self, y: f64) {
+        if self.n == 0 {
+            self.level = y;
+            self.trend = 0.0;
+        } else if self.seasonal_ready() {
+            let idx = (self.n as usize) % self.season;
+            let s = self.seasonal[idx];
+            let prev_level = self.level;
+            self.level = self.alpha * (y - s) + (1.0 - self.alpha) * (self.level + self.trend);
+            self.trend = self.beta * (self.level - prev_level) + (1.0 - self.beta) * self.trend;
+            self.seasonal[idx] = self.gamma * (y - self.level) + (1.0 - self.gamma) * s;
+        } else {
+            let prev_level = self.level;
+            self.level = self.alpha * y + (1.0 - self.alpha) * (self.level + self.trend);
+            self.trend = self.beta * (self.level - prev_level) + (1.0 - self.beta) * self.trend;
+        }
+        // a series shorter than one season runs on double smoothing; once
+        // the first season completes, its values seed the additive indices
+        if self.season > 1 && !self.seasonal_ready() {
+            self.init_buf.push(y);
+            if self.init_buf.len() == self.season {
+                let mean = self.init_buf.iter().sum::<f64>() / self.season as f64;
+                self.level = mean;
+                self.trend =
+                    (self.init_buf[self.season - 1] - self.init_buf[0]) / (self.season - 1) as f64;
+                self.seasonal = self.init_buf.iter().map(|&v| v - mean).collect();
+                self.init_buf.clear();
+            }
+        }
+        self.n += 1;
+    }
+
+    /// Projection `h ≥ 1` steps past the last observation.
+    fn forecast(&self, h: usize) -> f64 {
+        let h = h.max(1);
+        let base = self.level + h as f64 * self.trend;
+        if self.seasonal_ready() {
+            // phase of the last observation is (n-1) % season
+            let idx = (self.n as usize + h - 1) % self.season;
+            base + self.seasonal[idx]
+        } else {
+            base
+        }
+    }
+}
+
+/// A prediction waiting for its target observation to arrive.
+#[derive(Debug, Clone, Copy)]
+struct Pending {
+    /// observation index the prediction refers to
+    due: u64,
+    naive: f64,
+    smooth: f64,
+}
+
+/// Trailing (|error|, |actual|) pairs; the ratio of their sums is a
+/// weighted MAPE (WMAPE) that stays finite on zero-rate windows.
+#[derive(Debug, Default)]
+struct ErrWindow {
+    pairs: VecDeque<(f64, f64)>,
+}
+
+impl ErrWindow {
+    fn push(&mut self, err: f64, actual: f64, cap: usize) {
+        self.pairs.push_back((err, actual));
+        while self.pairs.len() > cap.max(1) {
+            self.pairs.pop_front();
+        }
+    }
+
+    fn wmape(&self) -> Option<f64> {
+        if self.pairs.is_empty() {
+            return None;
+        }
+        let (err, act) = self
+            .pairs
+            .iter()
+            .fold((0.0, 0.0), |(e, a), &(pe, pa)| (e + pe, a + pa));
+        if err <= 1e-12 {
+            return Some(0.0);
+        }
+        Some(err / act.max(1e-9))
+    }
+}
+
+/// Online short-horizon forecaster with per-horizon error tracking and
+/// automatic model selection.
+#[derive(Debug)]
+pub struct Forecaster {
+    cfg: ForecastConfig,
+    smoother: Smoother,
+    /// last `max(season, 1)` observations for the seasonal-naive baseline
+    history: VecDeque<f64>,
+    pending: VecDeque<Pending>,
+    errs_naive: ErrWindow,
+    errs_smooth: ErrWindow,
+    /// finite observations consumed
+    step: u64,
+}
+
+impl Forecaster {
+    pub fn new(cfg: ForecastConfig) -> Forecaster {
+        let cfg = ForecastConfig {
+            horizon: cfg.horizon.max(1),
+            season: if cfg.season == 1 { 0 } else { cfg.season },
+            alpha: cfg.alpha.clamp(0.01, 1.0),
+            beta: cfg.beta.clamp(0.01, 1.0),
+            gamma: cfg.gamma.clamp(0.01, 1.0),
+            err_window: cfg.err_window.max(8),
+            min_history: cfg.min_history.max(2),
+        };
+        Forecaster {
+            smoother: Smoother::new(cfg.alpha, cfg.beta, cfg.gamma, cfg.season),
+            history: VecDeque::with_capacity(cfg.season.max(1)),
+            pending: VecDeque::new(),
+            errs_naive: ErrWindow::default(),
+            errs_smooth: ErrWindow::default(),
+            step: 0,
+            cfg,
+        }
+    }
+
+    /// Finite observations consumed so far.
+    pub fn len(&self) -> usize {
+        self.step as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.step == 0
+    }
+
+    /// Feed a backlog (e.g. the stored Table II window) in one call.
+    pub fn warm_start(&mut self, values: &[f64]) {
+        for &v in values {
+            self.observe(v);
+        }
+    }
+
+    /// Consume one sample. Non-finite values are ignored entirely, so the
+    /// forecaster can never be poisoned into NaN state.
+    pub fn observe(&mut self, y: f64) {
+        if !y.is_finite() {
+            return;
+        }
+        // mature every prediction whose target step this observation is
+        while let Some(p) = self.pending.front().copied() {
+            if p.due > self.step {
+                break;
+            }
+            self.pending.pop_front();
+            if p.due == self.step {
+                let cap = self.cfg.err_window;
+                self.errs_naive.push((p.naive - y).abs(), y.abs(), cap);
+                self.errs_smooth.push((p.smooth - y).abs(), y.abs(), cap);
+            }
+        }
+
+        self.smoother.observe(y);
+        self.history.push_back(y);
+        while self.history.len() > self.cfg.season.max(1) {
+            self.history.pop_front();
+        }
+        self.step += 1;
+
+        // book the predictions this sample enables, to be scored when the
+        // horizon-ahead observation lands
+        if self.len() >= self.cfg.min_history {
+            let h = self.cfg.horizon;
+            if let Some(naive) = self.naive_forecast(h) {
+                self.pending.push_back(Pending {
+                    due: self.step - 1 + h as u64,
+                    naive,
+                    smooth: self.smoother.forecast(h).max(0.0),
+                });
+            }
+        }
+    }
+
+    /// Seasonal-naive projection: the value one season before the target
+    /// step; the last observation when no (full) season is available.
+    fn naive_forecast(&self, h: usize) -> Option<f64> {
+        let last = *self.history.back()?;
+        let m = self.cfg.season;
+        if m >= 2 && self.history.len() >= m {
+            // target step t+h looks back to t+h-m; for h <= m that index
+            // is len-m+(h-1); larger horizons wrap within the season
+            let off = (h.max(1) - 1) % m;
+            Some(self.history[self.history.len() - m + off])
+        } else {
+            Some(last)
+        }
+    }
+
+    /// Trailing WMAPE of each model at the configured horizon.
+    fn errors(&self) -> (Option<f64>, Option<f64>) {
+        (self.errs_naive.wmape(), self.errs_smooth.wmape())
+    }
+
+    /// The model [`Forecaster::forecast`] currently answers with: whichever
+    /// has the lower matured trailing error, smoothing by default.
+    pub fn method(&self) -> Method {
+        match self.errors() {
+            (Some(n), Some(s)) if n < s => Method::SeasonalNaive,
+            _ => Method::Smoothing,
+        }
+    }
+
+    /// Trailing WMAPE of the selected model. `None` until a prediction has
+    /// matured.
+    pub fn error(&self) -> Option<f64> {
+        let (n, s) = self.errors();
+        match self.method() {
+            Method::SeasonalNaive => n,
+            Method::Smoothing => s.or(n),
+        }
+    }
+
+    /// True once the trailing error exceeds `budget` — the signal to stand
+    /// proactive planning down and fall back to the reactive loop.
+    pub fn degraded(&self, budget: f64) -> bool {
+        self.error().map(|e| e > budget).unwrap_or(false)
+    }
+
+    /// Predicted value `h ≥ 1` steps ahead, clamped non-negative (rates
+    /// cannot go below zero). `None` until `min_history` observations.
+    pub fn forecast(&self, h: usize) -> Option<f64> {
+        if self.len() < self.cfg.min_history {
+            return None;
+        }
+        let v = match self.method() {
+            Method::SeasonalNaive => self.naive_forecast(h)?,
+            Method::Smoothing => self.smoother.forecast(h),
+        };
+        v.is_finite().then_some(v.max(0.0))
+    }
+
+    /// [`Forecaster::forecast`] at the configured horizon.
+    pub fn forecast_horizon(&self) -> Option<f64> {
+        self.forecast(self.cfg.horizon)
+    }
+}
+
+/// Replicas needed to serve `pred_rps` with `capacity_rps` per replica and
+/// a relative safety `headroom`, clamped to `[min, max]` — the pure core
+/// of the supervisor's proactive planner.
+pub fn replicas_for_rate(
+    pred_rps: f64,
+    capacity_rps: f64,
+    headroom: f64,
+    min: usize,
+    max: usize,
+) -> usize {
+    let min = min.max(1);
+    let max = max.max(min);
+    if !pred_rps.is_finite() || capacity_rps <= 0.0 {
+        return min;
+    }
+    let demand = pred_rps.max(0.0) * (1.0 + headroom.max(0.0));
+    let needed = (demand / capacity_rps).ceil();
+    if !needed.is_finite() {
+        return max;
+    }
+    (needed as usize).clamp(min, max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn forecaster(season: usize) -> Forecaster {
+        Forecaster::new(ForecastConfig {
+            horizon: 3,
+            season,
+            min_history: 4,
+            ..ForecastConfig::default()
+        })
+    }
+
+    #[test]
+    fn empty_window_answers_none() {
+        let f = forecaster(0);
+        assert!(f.is_empty());
+        assert_eq!(f.forecast(3), None);
+        assert_eq!(f.error(), None);
+        assert!(!f.degraded(0.1), "no evidence is not degradation");
+    }
+
+    #[test]
+    fn single_sample_window_answers_none() {
+        // mirrors the config module's degenerate-window refusals: one
+        // point is not evidence to extrapolate from
+        let mut f = forecaster(0);
+        f.observe(7.0);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.forecast(3), None);
+        assert_eq!(f.error(), None);
+    }
+
+    #[test]
+    fn constant_series_forecasts_the_constant() {
+        let mut f = forecaster(0);
+        for _ in 0..50 {
+            f.observe(4.25);
+        }
+        let pred = f.forecast(3).expect("enough history");
+        assert!((pred - 4.25).abs() < 1e-9, "got {pred}");
+        // matured predictions were perfect
+        assert_eq!(f.error(), Some(0.0));
+        assert!(!f.degraded(0.01));
+    }
+
+    #[test]
+    fn zero_variance_zero_valued_window_is_nan_free() {
+        // an all-idle window: rates are 0.0 everywhere. WMAPE must not
+        // divide by zero and every output must be finite.
+        let mut f = forecaster(6);
+        for _ in 0..40 {
+            f.observe(0.0);
+        }
+        let pred = f.forecast(3).expect("enough history");
+        assert!(pred.is_finite());
+        assert!(pred.abs() < 1e-9, "idle stays idle: {pred}");
+        let err = f.error().expect("predictions matured");
+        assert!(err.is_finite());
+        assert_eq!(err, 0.0);
+    }
+
+    #[test]
+    fn series_shorter_than_one_season_falls_back() {
+        // season of 24 samples but only 10 observed: the seasonal models
+        // cannot engage, yet forecasts still come (double smoothing /
+        // last-value) and are finite
+        let mut f = forecaster(24);
+        for i in 0..10 {
+            f.observe(5.0 + (i % 2) as f64);
+        }
+        let pred = f.forecast(3).expect("falls back below one season");
+        assert!(pred.is_finite());
+        assert!((3.0..=9.0).contains(&pred), "sane fallback: {pred}");
+    }
+
+    #[test]
+    fn non_finite_observations_are_ignored() {
+        let mut f = forecaster(0);
+        for _ in 0..10 {
+            f.observe(3.0);
+        }
+        f.observe(f64::NAN);
+        f.observe(f64::INFINITY);
+        assert_eq!(f.len(), 10, "poison samples not consumed");
+        let pred = f.forecast(3).unwrap();
+        assert!(pred.is_finite());
+        assert!((pred - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ramp_is_projected_by_the_trend() {
+        let mut f = Forecaster::new(ForecastConfig {
+            horizon: 5,
+            season: 0,
+            min_history: 4,
+            ..ForecastConfig::default()
+        });
+        for i in 0..80 {
+            f.observe(i as f64);
+        }
+        // last observation 79; a trend-aware model lands near 84 at h=5,
+        // far above the last value a naive model would answer
+        let pred = f.forecast(5).unwrap();
+        assert!(pred > 80.0, "trend extrapolated: {pred}");
+        assert!(pred < 90.0, "not runaway: {pred}");
+    }
+
+    #[test]
+    fn seasonal_series_is_tracked_across_seasons() {
+        let season = 12;
+        let mut f = Forecaster::new(ForecastConfig {
+            horizon: 3,
+            season,
+            min_history: 4,
+            ..ForecastConfig::default()
+        });
+        // a strongly seasonal sawtooth, several seasons long
+        let wave = |i: usize| 10.0 + 8.0 * ((i % season) as f64 - 6.0).abs();
+        for i in 0..(season * 12) {
+            f.observe(wave(i));
+        }
+        let err = f.error().expect("errors matured");
+        assert!(err.is_finite());
+        assert!(err < 0.5, "seasonal structure is learnable: {err}");
+        // the forecast tracks the wave, not its mean
+        let t = season * 12;
+        let pred = f.forecast(3).unwrap();
+        let actual = wave(t + 2); // h=3 ahead of last index t-1
+        assert!(
+            (pred - actual).abs() < 8.0,
+            "pred {pred} vs upcoming {actual}"
+        );
+    }
+
+    #[test]
+    fn degraded_flags_a_broken_forecast() {
+        let mut f = Forecaster::new(ForecastConfig {
+            horizon: 2,
+            season: 0,
+            min_history: 2,
+            err_window: 16,
+            ..ForecastConfig::default()
+        });
+        // calm series, then a violent regime change the smoother lags on:
+        // matured predictions become badly wrong
+        for _ in 0..20 {
+            f.observe(1.0);
+        }
+        for i in 0..10 {
+            f.observe(1.0 + i as f64 * 50.0);
+        }
+        let err = f.error().unwrap();
+        assert!(err.is_finite());
+        assert!(f.degraded(0.2), "regime change must trip the budget: {err}");
+    }
+
+    #[test]
+    fn warm_start_equals_sequential_observe() {
+        let values: Vec<f64> = (0..30).map(|i| (i as f64 * 0.7).sin() + 2.0).collect();
+        let mut a = forecaster(0);
+        a.warm_start(&values);
+        let mut b = forecaster(0);
+        for &v in &values {
+            b.observe(v);
+        }
+        assert_eq!(a.forecast(3), b.forecast(3));
+        assert_eq!(a.error(), b.error());
+    }
+
+    #[test]
+    fn replicas_for_rate_sizing() {
+        // 55 rps at 25 rps/replica with 10% headroom -> ceil(60.5/25) = 3
+        assert_eq!(replicas_for_rate(55.0, 25.0, 0.1, 1, 8), 3);
+        // clamped by max
+        assert_eq!(replicas_for_rate(1000.0, 10.0, 0.0, 1, 4), 4);
+        // clamped by min, and min is at least 1
+        assert_eq!(replicas_for_rate(0.0, 10.0, 0.0, 2, 4), 2);
+        assert_eq!(replicas_for_rate(0.0, 10.0, 0.0, 0, 4), 1);
+        // degenerate capacity / non-finite predictions never panic
+        assert_eq!(replicas_for_rate(5.0, 0.0, 0.0, 1, 4), 1);
+        assert_eq!(replicas_for_rate(f64::NAN, 10.0, 0.0, 1, 4), 1);
+        assert_eq!(replicas_for_rate(f64::INFINITY, 10.0, 0.0, 1, 4), 4);
+    }
+
+    #[test]
+    fn model_selection_tracks_the_better_model() {
+        // white-noise-free constant: both models are perfect, smoothing is
+        // the default tie-break
+        let mut f = forecaster(0);
+        for _ in 0..30 {
+            f.observe(2.0);
+        }
+        assert_eq!(f.method(), Method::Smoothing);
+        assert_eq!(f.method().name(), "smoothing");
+        assert_eq!(Method::SeasonalNaive.name(), "seasonal_naive");
+    }
+}

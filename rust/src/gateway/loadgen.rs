@@ -7,12 +7,23 @@
 //! ([`Client`]): one socket per worker for its whole request sequence, so
 //! attainable attack rates are not capped by per-request TCP handshakes.
 //! [`LoadgenReport::connections_opened`] lets tests assert the reuse.
+//!
+//! Beyond the closed loop, [`run_scenario`] is an *open-loop* scenario
+//! engine: named arrival-pattern generators (`steady`, `diurnal`, `spike`,
+//! `ramp` and a multi-tenant `mixture` of heterogeneous prompt/output
+//! lengths, matching the paper's co-located-applications setting) produce
+//! a seeded non-homogeneous Poisson schedule that a worker pool replays
+//! against the gateway in real time. Each scenario emits its shape
+//! parameters into the JSON report, so a CI artifact says exactly what
+//! traffic produced its numbers.
 
 use crate::util::json::{num, obj, s, Json};
+use crate::util::rng::Pcg64;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
@@ -332,8 +343,12 @@ pub struct LoadgenReport {
     /// keep-alive reuse held for every request
     pub connections_opened: usize,
     pub p50_ms: f64,
+    pub p95_ms: f64,
     pub p99_ms: f64,
     pub elapsed_secs: f64,
+    /// shape parameters of the scenario that generated this report
+    /// (open-loop runs only)
+    pub scenario: Option<Json>,
 }
 
 impl LoadgenReport {
@@ -350,7 +365,7 @@ impl LoadgenReport {
                 .map(|(code, n)| (code.to_string(), num(*n as f64)))
                 .collect(),
         );
-        obj([
+        let mut j = obj([
             ("requests", num(self.requests as f64)),
             ("ok", num(self.ok as f64)),
             ("errors", num(self.errors as f64)),
@@ -359,19 +374,25 @@ impl LoadgenReport {
             ("completion_tokens", num(self.completion_tokens as f64)),
             ("connections_opened", num(self.connections_opened as f64)),
             ("p50_ms", num(self.p50_ms)),
+            ("p95_ms", num(self.p95_ms)),
             ("p99_ms", num(self.p99_ms)),
             ("elapsed_secs", num(self.elapsed_secs)),
             (
                 "requests_per_sec",
                 num(self.requests as f64 / self.elapsed_secs.max(1e-9)),
             ),
-        ])
+        ]);
+        if let (Json::Obj(m), Some(scn)) = (&mut j, &self.scenario) {
+            m.insert("scenario".to_string(), scn.clone());
+        }
+        j
     }
 
     pub fn summary(&self) -> String {
         format!(
             "{} requests in {:.2}s ({:.1} req/s) over {} connections: {} ok, {} errors, \
-             statuses {:?}, {} completion tokens, {} SSE events, p50 {:.1}ms p99 {:.1}ms",
+             statuses {:?}, {} completion tokens, {} SSE events, p50 {:.1}ms p95 {:.1}ms \
+             p99 {:.1}ms",
             self.requests,
             self.elapsed_secs,
             self.requests as f64 / self.elapsed_secs.max(1e-9),
@@ -382,6 +403,7 @@ impl LoadgenReport {
             self.completion_tokens,
             self.sse_events,
             self.p50_ms,
+            self.p95_ms,
             self.p99_ms,
         )
     }
@@ -398,20 +420,32 @@ fn one_request(client: &mut Client, cfg: &LoadgenConfig, worker: usize, k: usize
     let stream = cfg.stream_every != 0 && (worker + k) % cfg.stream_every == 0;
     let chat = cfg.chat_every != 0 && (worker + k) % cfg.chat_every == 0;
     let prompt = format!("{} w{worker} r{k}", cfg.prompt_prefix);
-    // build through util::json so arbitrary prompt_prefix content is escaped
+    exchange(client, &prompt, cfg.max_tokens, stream, chat)
+}
+
+/// One completion exchange (unary or streaming, completion or chat) with
+/// the same accounting the closed loop and the scenario engine share.
+fn exchange(
+    client: &mut Client,
+    prompt: &str,
+    max_tokens: usize,
+    stream: bool,
+    chat: bool,
+) -> OneResult {
+    // build through util::json so arbitrary prompt content is escaped
     let body = if chat {
         obj([
             (
                 "messages",
-                Json::Arr(vec![obj([("role", s("user")), ("content", s(&prompt))])]),
+                Json::Arr(vec![obj([("role", s("user")), ("content", s(prompt))])]),
             ),
-            ("max_tokens", num(cfg.max_tokens as f64)),
+            ("max_tokens", num(max_tokens as f64)),
             ("stream", Json::Bool(stream)),
         ])
     } else {
         obj([
-            ("prompt", s(&prompt)),
-            ("max_tokens", num(cfg.max_tokens as f64)),
+            ("prompt", s(prompt)),
+            ("max_tokens", num(max_tokens as f64)),
             ("stream", Json::Bool(stream)),
         ])
     }
@@ -468,28 +502,9 @@ fn one_request(client: &mut Client, cfg: &LoadgenConfig, worker: usize, k: usize
     }
 }
 
-/// Run the closed loop against `addr` and aggregate a report.
-pub fn run(addr: &str, cfg: &LoadgenConfig) -> LoadgenReport {
-    let t0 = Instant::now();
-    let (tx, rx) = std::sync::mpsc::channel::<OneResult>();
-    let (conn_tx, conn_rx) = std::sync::mpsc::channel::<usize>();
-    let mut handles = Vec::new();
-    for worker in 0..cfg.concurrency {
-        let tx = tx.clone();
-        let conn_tx = conn_tx.clone();
-        let cfg = cfg.clone();
-        let addr = addr.to_string();
-        handles.push(std::thread::spawn(move || {
-            let mut client = Client::new(&addr);
-            for k in 0..cfg.requests_per_worker {
-                let _ = tx.send(one_request(&mut client, &cfg, worker, k));
-            }
-            let _ = conn_tx.send(client.connections_opened);
-        }));
-    }
-    drop(tx);
-    drop(conn_tx);
-
+/// Fold a stream of per-request results into a report; returns the sorted
+/// 200-latency list alongside for the percentile fill-in.
+fn collect_results(rx: mpsc::Receiver<OneResult>) -> (LoadgenReport, Vec<f64>) {
     let mut report = LoadgenReport::default();
     let mut latencies_ms: Vec<f64> = Vec::new();
     for r in rx {
@@ -507,12 +522,11 @@ pub fn run(addr: &str, cfg: &LoadgenConfig) -> LoadgenReport {
         report.sse_events += r.sse_events;
         report.completion_tokens += r.completion_tokens;
     }
-    report.connections_opened = conn_rx.iter().sum();
-    for h in handles {
-        let _ = h.join();
-    }
-    report.elapsed_secs = t0.elapsed().as_secs_f64();
     latencies_ms.sort_by(f64::total_cmp);
+    (report, latencies_ms)
+}
+
+fn fill_percentiles(report: &mut LoadgenReport, latencies_ms: &[f64]) {
     let pct = |q: f64| -> f64 {
         if latencies_ms.is_empty() {
             return 0.0;
@@ -521,7 +535,407 @@ pub fn run(addr: &str, cfg: &LoadgenConfig) -> LoadgenReport {
         latencies_ms[idx]
     };
     report.p50_ms = pct(0.50);
+    report.p95_ms = pct(0.95);
     report.p99_ms = pct(0.99);
+}
+
+/// Run the closed loop against `addr` and aggregate a report.
+pub fn run(addr: &str, cfg: &LoadgenConfig) -> LoadgenReport {
+    let t0 = Instant::now();
+    let (tx, rx) = mpsc::channel::<OneResult>();
+    let (conn_tx, conn_rx) = mpsc::channel::<usize>();
+    let mut handles = Vec::new();
+    for worker in 0..cfg.concurrency {
+        let tx = tx.clone();
+        let conn_tx = conn_tx.clone();
+        let cfg = cfg.clone();
+        let addr = addr.to_string();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::new(&addr);
+            for k in 0..cfg.requests_per_worker {
+                let _ = tx.send(one_request(&mut client, &cfg, worker, k));
+            }
+            let _ = conn_tx.send(client.connections_opened);
+        }));
+    }
+    drop(tx);
+    drop(conn_tx);
+
+    let (mut report, latencies_ms) = collect_results(rx);
+    report.connections_opened = conn_rx.iter().sum();
+    for h in handles {
+        let _ = h.join();
+    }
+    report.elapsed_secs = t0.elapsed().as_secs_f64();
+    fill_percentiles(&mut report, &latencies_ms);
+    report
+}
+
+/// Named arrival-pattern generators for the scenario engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioKind {
+    /// constant rate at `base_rps`
+    Steady,
+    /// raised-cosine day: starts at `base_rps`, peaks at `peak_rps` half a
+    /// period in, returns to base — the predictable ramp a forecaster
+    /// should get ahead of
+    Diurnal,
+    /// flat base with a rectangular burst to `peak_rps` — the shape a
+    /// purely reactive loop handles least badly
+    Spike,
+    /// linear climb from `base_rps` to `peak_rps` over the whole run
+    Ramp,
+    /// steady aggregate rate split across heterogeneous co-located tenants
+    /// (different prompt lengths, output budgets and streaming habits)
+    Mixture,
+}
+
+impl ScenarioKind {
+    pub const ALL: [ScenarioKind; 5] = [
+        ScenarioKind::Steady,
+        ScenarioKind::Diurnal,
+        ScenarioKind::Spike,
+        ScenarioKind::Ramp,
+        ScenarioKind::Mixture,
+    ];
+
+    pub fn parse(name: &str) -> Option<ScenarioKind> {
+        match name {
+            "steady" => Some(ScenarioKind::Steady),
+            "diurnal" => Some(ScenarioKind::Diurnal),
+            "spike" => Some(ScenarioKind::Spike),
+            "ramp" => Some(ScenarioKind::Ramp),
+            "mixture" => Some(ScenarioKind::Mixture),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ScenarioKind::Steady => "steady",
+            ScenarioKind::Diurnal => "diurnal",
+            ScenarioKind::Spike => "spike",
+            ScenarioKind::Ramp => "ramp",
+            ScenarioKind::Mixture => "mixture",
+        }
+    }
+}
+
+/// One co-located application in a `mixture` scenario.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    /// share of the aggregate arrival rate (normalized over all tenants)
+    pub weight: f64,
+    /// approximate prompt length in words
+    pub prompt_words: usize,
+    /// per-request completion budget
+    pub max_tokens: usize,
+    /// whether this tenant's requests stream
+    pub stream: bool,
+}
+
+/// The paper's co-location setting in miniature: an interactive chat app,
+/// a long-prompt/short-output summarizer, and a short-prompt/long-output
+/// code generator sharing one gateway.
+pub fn default_tenants() -> Vec<TenantSpec> {
+    vec![
+        TenantSpec {
+            name: "chat".into(),
+            weight: 0.5,
+            prompt_words: 24,
+            max_tokens: 16,
+            stream: true,
+        },
+        TenantSpec {
+            name: "summarize".into(),
+            weight: 0.3,
+            prompt_words: 120,
+            max_tokens: 6,
+            stream: false,
+        },
+        TenantSpec {
+            name: "codegen".into(),
+            weight: 0.2,
+            prompt_words: 40,
+            max_tokens: 32,
+            stream: false,
+        },
+    ]
+}
+
+/// Shape parameters of one open-loop scenario run.
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    pub kind: ScenarioKind,
+    pub duration: Duration,
+    pub base_rps: f64,
+    pub peak_rps: f64,
+    /// diurnal period; `ZERO` means one full period per run
+    pub period: Duration,
+    /// spike window start/length as fractions of the duration
+    pub spike_start: f64,
+    pub spike_len: f64,
+    /// seeds the Poisson schedule and tenant assignment — identical seeds
+    /// replay identical offered load
+    pub seed: u64,
+    /// dispatcher pool size (upper bound on in-flight requests)
+    pub workers: usize,
+    /// completion budget for non-mixture scenarios
+    pub max_tokens: usize,
+    /// co-located applications (used by `mixture`)
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            kind: ScenarioKind::Steady,
+            duration: Duration::from_secs(10),
+            base_rps: 2.0,
+            peak_rps: 8.0,
+            period: Duration::ZERO,
+            spike_start: 0.5,
+            spike_len: 0.2,
+            seed: 42,
+            workers: 32,
+            max_tokens: 8,
+            tenants: default_tenants(),
+        }
+    }
+}
+
+/// Safety cap on a generated schedule, so a typo'd rate cannot allocate
+/// an unbounded arrival list.
+const MAX_SCHEDULED_ARRIVALS: usize = 250_000;
+
+/// One scheduled request of a scenario run.
+#[derive(Debug, Clone)]
+struct Arrival {
+    /// seconds into the run
+    at: f64,
+    prompt: String,
+    max_tokens: usize,
+    stream: bool,
+    chat: bool,
+}
+
+impl ScenarioConfig {
+    fn duration_secs(&self) -> f64 {
+        self.duration.as_secs_f64().max(1e-9)
+    }
+
+    fn period_secs(&self) -> f64 {
+        if self.period.is_zero() {
+            self.duration_secs()
+        } else {
+            self.period.as_secs_f64().max(1e-9)
+        }
+    }
+
+    /// Arrival intensity λ(t) in requests/second at `t` seconds into the
+    /// run.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let d = self.duration_secs();
+        let base = self.base_rps.max(0.0);
+        let peak = self.peak_rps.max(base);
+        match self.kind {
+            ScenarioKind::Steady | ScenarioKind::Mixture => base,
+            ScenarioKind::Diurnal => {
+                let p = self.period_secs();
+                let phase = 2.0 * std::f64::consts::PI * (t / p);
+                base + (peak - base) * 0.5 * (1.0 - phase.cos())
+            }
+            ScenarioKind::Spike => {
+                let s0 = self.spike_start.clamp(0.0, 1.0) * d;
+                let s1 = (self.spike_start + self.spike_len).clamp(0.0, 1.0) * d;
+                if t >= s0 && t < s1 {
+                    peak
+                } else {
+                    base
+                }
+            }
+            ScenarioKind::Ramp => base + (peak - base) * (t / d).clamp(0.0, 1.0),
+        }
+    }
+
+    /// Seconds into the run at which λ(t) first peaks — what a proactive
+    /// gateway must beat.
+    pub fn peak_time_secs(&self) -> f64 {
+        let d = self.duration_secs();
+        match self.kind {
+            ScenarioKind::Steady | ScenarioKind::Mixture => 0.0,
+            ScenarioKind::Diurnal => (self.period_secs() / 2.0).min(d),
+            ScenarioKind::Spike => self.spike_start.clamp(0.0, 1.0) * d,
+            ScenarioKind::Ramp => d,
+        }
+    }
+
+    /// Shape parameters as JSON — embedded in the report so every
+    /// artifact names the traffic that produced it.
+    pub fn to_json(&self, offered: usize) -> Json {
+        let mut j = obj([
+            ("kind", s(self.kind.name())),
+            ("duration_secs", num(self.duration_secs())),
+            ("base_rps", num(self.base_rps)),
+            ("peak_rps", num(self.peak_rps)),
+            ("period_secs", num(self.period_secs())),
+            ("spike_start", num(self.spike_start)),
+            ("spike_len", num(self.spike_len)),
+            ("seed", num(self.seed as f64)),
+            ("workers", num(self.workers as f64)),
+            ("max_tokens", num(self.max_tokens as f64)),
+            ("peak_time_secs", num(self.peak_time_secs())),
+            ("offered", num(offered as f64)),
+            ("offered_rps", num(offered as f64 / self.duration_secs())),
+        ]);
+        if self.kind == ScenarioKind::Mixture {
+            let tenants = Json::Arr(
+                self.tenants
+                    .iter()
+                    .map(|t| {
+                        obj([
+                            ("name", s(&t.name)),
+                            ("weight", num(t.weight)),
+                            ("prompt_words", num(t.prompt_words as f64)),
+                            ("max_tokens", num(t.max_tokens as f64)),
+                            ("stream", Json::Bool(t.stream)),
+                        ])
+                    })
+                    .collect(),
+            );
+            if let Json::Obj(m) = &mut j {
+                m.insert("tenants".to_string(), tenants);
+            }
+        }
+        j
+    }
+
+    /// The seeded arrival schedule: non-homogeneous Poisson by thinning,
+    /// with per-arrival request bodies (tenant-assigned for `mixture`).
+    fn arrivals(&self) -> Vec<Arrival> {
+        let d = self.duration_secs();
+        // every shape is bounded by max(base, peak), so thinning against
+        // that envelope is exact even for sub-sample-width spikes
+        let lambda_max = self.base_rps.max(self.peak_rps).max(1e-9);
+        let mut rng = Pcg64::new(self.seed);
+        let total_weight: f64 = self.tenants.iter().map(|t| t.weight.max(0.0)).sum();
+        let mut out = Vec::new();
+        let mut t = 0.0;
+        let mut i = 0usize;
+        loop {
+            t += rng.exponential(lambda_max);
+            if t >= d || out.len() >= MAX_SCHEDULED_ARRIVALS {
+                break;
+            }
+            // thinning: accept with probability λ(t)/λ_max
+            if rng.f64() > self.rate_at(t) / lambda_max {
+                continue;
+            }
+            let arrival = if self.kind == ScenarioKind::Mixture && total_weight > 0.0 {
+                let mut pick = rng.f64() * total_weight;
+                let mut chosen = &self.tenants[self.tenants.len() - 1];
+                for tenant in &self.tenants {
+                    pick -= tenant.weight.max(0.0);
+                    if pick <= 0.0 {
+                        chosen = tenant;
+                        break;
+                    }
+                }
+                Arrival {
+                    at: t,
+                    prompt: filler_prompt(&chosen.name, i, chosen.prompt_words),
+                    max_tokens: chosen.max_tokens,
+                    stream: chosen.stream,
+                    chat: false,
+                }
+            } else {
+                Arrival {
+                    at: t,
+                    prompt: format!("scenario {} req {i}", self.kind.name()),
+                    max_tokens: self.max_tokens,
+                    stream: i % 4 == 0,
+                    chat: i % 3 == 0,
+                }
+            };
+            out.push(arrival);
+            i += 1;
+        }
+        out
+    }
+}
+
+/// Deterministic prompt of roughly `words` words for a tenant.
+fn filler_prompt(tenant: &str, i: usize, words: usize) -> String {
+    let mut p = format!("tenant {tenant} request {i}");
+    for w in 0..words.saturating_sub(3) {
+        p.push_str(if w % 2 == 0 { " serve" } else { " tokens" });
+    }
+    p
+}
+
+/// Replay a scenario's arrival schedule against `addr` in real time: a
+/// scheduler thread paces the seeded offsets, a pool of `workers`
+/// keep-alive clients issues the requests. Open loop: latency is measured
+/// from the *scheduled arrival time*, so a saturated worker pool or a
+/// slow gateway shows up as latency — never as a silently slower attack
+/// rate.
+pub fn run_scenario(addr: &str, cfg: &ScenarioConfig) -> LoadgenReport {
+    let arrivals = cfg.arrivals();
+    let offered = arrivals.len();
+    let (tx, rx) = mpsc::channel::<OneResult>();
+    let (conn_tx, conn_rx) = mpsc::channel::<usize>();
+    let (job_tx, job_rx) = mpsc::channel::<(Arrival, Instant)>();
+    let job_rx = Arc::new(Mutex::new(job_rx));
+    let mut handles = Vec::new();
+    for _ in 0..cfg.workers.max(1) {
+        let tx = tx.clone();
+        let conn_tx = conn_tx.clone();
+        let job_rx = Arc::clone(&job_rx);
+        let addr = addr.to_string();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::new(&addr);
+            loop {
+                let job = job_rx.lock().unwrap().recv();
+                match job {
+                    Ok((a, due)) => {
+                        let mut r =
+                            exchange(&mut client, &a.prompt, a.max_tokens, a.stream, a.chat);
+                        // open-loop latency: from the scheduled arrival,
+                        // including any wait for a free worker
+                        r.latency = due.elapsed().max(r.latency);
+                        let _ = tx.send(r);
+                    }
+                    Err(_) => break,
+                }
+            }
+            let _ = conn_tx.send(client.connections_opened);
+        }));
+    }
+    drop(tx);
+    drop(conn_tx);
+
+    let t0 = Instant::now();
+    for a in arrivals {
+        let due = t0 + Duration::from_secs_f64(a.at.max(0.0));
+        let wait = due.saturating_duration_since(Instant::now());
+        if !wait.is_zero() {
+            std::thread::sleep(wait);
+        }
+        if job_tx.send((a, due)).is_err() {
+            break;
+        }
+    }
+    drop(job_tx);
+
+    let (mut report, latencies_ms) = collect_results(rx);
+    report.connections_opened = conn_rx.iter().sum();
+    for h in handles {
+        let _ = h.join();
+    }
+    report.elapsed_secs = t0.elapsed().as_secs_f64();
+    fill_percentiles(&mut report, &latencies_ms);
+    report.scenario = Some(cfg.to_json(offered));
     report
 }
 
@@ -580,5 +994,152 @@ mod tests {
         let keep_alive = request_head("GET", "/x", "h:1", None, false);
         assert!(!keep_alive.contains("Connection:"));
         assert!(keep_alive.ends_with("\r\n\r\n"));
+    }
+
+    #[test]
+    fn scenario_kind_names_roundtrip() {
+        for kind in ScenarioKind::ALL {
+            assert_eq!(ScenarioKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(ScenarioKind::parse("tsunami"), None);
+    }
+
+    fn scenario(kind: ScenarioKind) -> ScenarioConfig {
+        ScenarioConfig {
+            kind,
+            duration: Duration::from_secs(60),
+            base_rps: 2.0,
+            peak_rps: 10.0,
+            seed: 7,
+            ..ScenarioConfig::default()
+        }
+    }
+
+    #[test]
+    fn rate_shapes_match_their_names() {
+        let steady = scenario(ScenarioKind::Steady);
+        assert_eq!(steady.rate_at(0.0), 2.0);
+        assert_eq!(steady.rate_at(59.0), 2.0);
+
+        let diurnal = scenario(ScenarioKind::Diurnal);
+        assert!((diurnal.rate_at(0.0) - 2.0).abs() < 1e-9, "starts at base");
+        assert!((diurnal.rate_at(30.0) - 10.0).abs() < 1e-9, "peaks mid-period");
+        assert!((diurnal.peak_time_secs() - 30.0).abs() < 1e-9);
+        // symmetric around the peak
+        assert!((diurnal.rate_at(20.0) - diurnal.rate_at(40.0)).abs() < 1e-9);
+
+        let spike = scenario(ScenarioKind::Spike);
+        assert_eq!(spike.rate_at(10.0), 2.0, "before the burst");
+        assert_eq!(spike.rate_at(31.0), 10.0, "inside the burst");
+        assert_eq!(spike.rate_at(43.0), 2.0, "after the burst");
+        assert!((spike.peak_time_secs() - 30.0).abs() < 1e-9);
+
+        let ramp = scenario(ScenarioKind::Ramp);
+        assert!((ramp.rate_at(0.0) - 2.0).abs() < 1e-9);
+        assert!((ramp.rate_at(60.0) - 10.0).abs() < 1e-9);
+        assert!((ramp.rate_at(30.0) - 6.0).abs() < 1e-9);
+
+        let mixture = scenario(ScenarioKind::Mixture);
+        assert_eq!(mixture.rate_at(17.0), 2.0, "aggregate stays steady");
+    }
+
+    #[test]
+    fn schedules_are_seeded_sorted_and_in_range() {
+        let cfg = scenario(ScenarioKind::Diurnal);
+        let a = cfg.arrivals();
+        let b = cfg.arrivals();
+        assert_eq!(a.len(), b.len(), "same seed, same schedule");
+        assert!(a
+            .iter()
+            .zip(&b)
+            .all(|(x, y)| x.at == y.at && x.prompt == y.prompt));
+        assert!(a.windows(2).all(|w| w[0].at <= w[1].at), "sorted arrivals");
+        assert!(a.iter().all(|x| x.at >= 0.0 && x.at < 60.0));
+
+        let other = ScenarioConfig {
+            seed: 8,
+            ..cfg.clone()
+        };
+        let c = other.arrivals();
+        assert!(
+            a.len() != c.len() || a.iter().zip(&c).any(|(x, y)| x.at != y.at),
+            "different seed, different schedule"
+        );
+
+        // offered volume tracks the λ(t) integral: mean rate of the
+        // raised cosine is (base+peak)/2 = 6 rps over 60 s ≈ 360
+        let n = a.len() as f64;
+        assert!((250.0..=470.0).contains(&n), "diurnal volume {n}");
+    }
+
+    #[test]
+    fn mixture_assigns_heterogeneous_tenants() {
+        let cfg = ScenarioConfig {
+            kind: ScenarioKind::Mixture,
+            duration: Duration::from_secs(120),
+            base_rps: 4.0,
+            seed: 3,
+            ..ScenarioConfig::default()
+        };
+        let arrivals = cfg.arrivals();
+        assert!(arrivals.len() > 100, "enough volume: {}", arrivals.len());
+        // all three tenants show up, with their own budgets
+        for tenant in default_tenants() {
+            let of_tenant: Vec<_> = arrivals
+                .iter()
+                .filter(|a| a.prompt.contains(&format!("tenant {}", tenant.name)))
+                .collect();
+            assert!(!of_tenant.is_empty(), "tenant {} missing", tenant.name);
+            assert!(of_tenant.iter().all(|a| a.max_tokens == tenant.max_tokens));
+            assert!(of_tenant.iter().all(|a| a.stream == tenant.stream));
+        }
+        // the dominant tenant dominates
+        let chat = arrivals
+            .iter()
+            .filter(|a| a.prompt.contains("tenant chat"))
+            .count();
+        assert!(
+            chat * 3 > arrivals.len(),
+            "chat holds its ~50% share: {chat}/{}",
+            arrivals.len()
+        );
+    }
+
+    #[test]
+    fn scenario_params_land_in_the_report_json() {
+        let cfg = ScenarioConfig {
+            kind: ScenarioKind::Diurnal,
+            duration: Duration::from_secs(30),
+            base_rps: 1.0,
+            peak_rps: 5.0,
+            seed: 9,
+            ..ScenarioConfig::default()
+        };
+        let report = LoadgenReport {
+            requests: 10,
+            ok: 10,
+            elapsed_secs: 30.0,
+            p95_ms: 7.5,
+            scenario: Some(cfg.to_json(42)),
+            ..Default::default()
+        };
+        let j = Json::parse(&report.to_json().to_string_pretty()).unwrap();
+        assert_eq!(j.at(&["scenario", "kind"]).and_then(Json::as_str), Some("diurnal"));
+        assert_eq!(j.at(&["scenario", "base_rps"]).and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.at(&["scenario", "peak_rps"]).and_then(Json::as_f64), Some(5.0));
+        assert_eq!(j.at(&["scenario", "seed"]).and_then(Json::as_usize), Some(9));
+        assert_eq!(j.at(&["scenario", "offered"]).and_then(Json::as_usize), Some(42));
+        assert_eq!(
+            j.at(&["scenario", "peak_time_secs"]).and_then(Json::as_f64),
+            Some(15.0)
+        );
+        assert_eq!(j.get("p95_ms").and_then(Json::as_f64), Some(7.5));
+        // mixture reports its tenant set
+        let mix = ScenarioConfig {
+            kind: ScenarioKind::Mixture,
+            ..ScenarioConfig::default()
+        };
+        let mj = mix.to_json(0);
+        assert_eq!(mj.get("tenants").and_then(Json::as_arr).map(<[Json]>::len), Some(3));
     }
 }

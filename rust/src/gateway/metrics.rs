@@ -22,17 +22,36 @@ pub const LATENCY_BUCKETS: [f64; 10] = [
 /// engine init and land in the tail.
 pub const PROMOTION_BUCKETS: [f64; 8] = [0.0005, 0.002, 0.01, 0.05, 0.25, 1.0, 5.0, 30.0];
 
-/// One cumulative latency histogram (lock-free).
-#[derive(Debug, Default)]
-struct PromotionHisto {
-    buckets: [AtomicU64; PROMOTION_BUCKETS.len()],
+/// Upper bounds (seconds) of the time-in-queue histogram: how long
+/// admitted jobs waited in a replica's worker queue before reaching the
+/// engine (or being shed). The proactive-vs-reactive e2e comparison reads
+/// its quantiles.
+pub const QUEUE_WAIT_BUCKETS: [f64; 11] = [
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 5.0,
+];
+
+/// One cumulative latency histogram (lock-free) over a fixed set of
+/// upper bounds.
+#[derive(Debug)]
+struct Histo {
+    bounds: &'static [f64],
+    buckets: Vec<AtomicU64>,
     sum_micros: AtomicU64,
     count: AtomicU64,
 }
 
-impl PromotionHisto {
+impl Histo {
+    fn new(bounds: &'static [f64]) -> Histo {
+        Histo {
+            bounds,
+            buckets: bounds.iter().map(|_| AtomicU64::new(0)).collect(),
+            sum_micros: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
     fn observe(&self, secs: f64) {
-        for (i, &le) in PROMOTION_BUCKETS.iter().enumerate() {
+        for (i, &le) in self.bounds.iter().enumerate() {
             if secs <= le {
                 self.buckets[i].fetch_add(1, Ordering::Relaxed);
             }
@@ -41,9 +60,26 @@ impl PromotionHisto {
             .fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
     }
+
+    /// Upper-bound `q`-quantile estimate: the smallest bucket bound whose
+    /// cumulative count reaches the rank. 0 with no observations; +inf
+    /// past the largest bound.
+    fn quantile(&self, q: f64) -> f64 {
+        let total = self.count.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((total as f64) * q.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+        for (i, &le) in self.bounds.iter().enumerate() {
+            if self.buckets[i].load(Ordering::Relaxed) >= rank {
+                return le;
+            }
+        }
+        f64::INFINITY
+    }
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct GatewayMetrics {
     /// (endpoint, status) -> count
     requests: Mutex<BTreeMap<(String, u16), u64>>,
@@ -58,8 +94,30 @@ pub struct GatewayMetrics {
     /// live capacity mutations applied by replica workers
     reconfigure_applied: AtomicU64,
     /// AddReplica latency, split by whether a warm standby was promoted
-    promotion_warm: PromotionHisto,
-    promotion_cold: PromotionHisto,
+    promotion_warm: Histo,
+    promotion_cold: Histo,
+    /// time admitted jobs spent in replica worker queues
+    queue_wait: Histo,
+}
+
+impl Default for GatewayMetrics {
+    fn default() -> Self {
+        GatewayMetrics {
+            requests: Mutex::new(BTreeMap::new()),
+            bucket_counts: Default::default(),
+            latency_sum_micros: AtomicU64::new(0),
+            latency_count: AtomicU64::new(0),
+            tokens_generated: AtomicU64::new(0),
+            sse_events: AtomicU64::new(0),
+            rejected_queue_full: AtomicU64::new(0),
+            rejected_rate_limited: AtomicU64::new(0),
+            queue_shed: AtomicU64::new(0),
+            reconfigure_applied: AtomicU64::new(0),
+            promotion_warm: Histo::new(&PROMOTION_BUCKETS),
+            promotion_cold: Histo::new(&PROMOTION_BUCKETS),
+            queue_wait: Histo::new(&QUEUE_WAIT_BUCKETS),
+        }
+    }
 }
 
 impl GatewayMetrics {
@@ -107,6 +165,18 @@ impl GatewayMetrics {
         self.queue_shed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record how long a job waited in a replica's worker queue before it
+    /// was promoted into the engine or shed.
+    pub fn observe_queue_wait(&self, secs: f64) {
+        self.queue_wait.observe(secs);
+    }
+
+    /// Upper-bound `q`-quantile of time-in-queue from the histogram
+    /// buckets (see [`QUEUE_WAIT_BUCKETS`]).
+    pub fn queue_wait_quantile(&self, q: f64) -> f64 {
+        self.queue_wait.quantile(q)
+    }
+
     /// A replica worker applied a live capacity mutation.
     pub fn note_reconfigure(&self) {
         self.reconfigure_applied.fetch_add(1, Ordering::Relaxed);
@@ -151,12 +221,14 @@ fn escape_label(v: &str) -> String {
 /// Render the full `/metrics` body: gateway request metrics, the replica
 /// set + warm pool + supervisor state, and the last Table II frame of
 /// every replica instance in `store`.
+#[allow(clippy::too_many_arguments)]
 pub fn render_prometheus(
     gw: &GatewayMetrics,
     store: &MetricStore,
     inflight: usize,
     live_instances: &[String],
     warm_pool: usize,
+    warm_target: usize,
     uptime_secs: f64,
     sup: &SupervisorSnapshot,
 ) -> String {
@@ -250,6 +322,38 @@ pub fn render_prometheus(
     let _ = writeln!(out, "enova_gateway_warm_pool_replicas {warm_pool}");
 
     out.push_str(
+        "# HELP enova_gateway_warm_pool_target Live warm-pool size target (forecast-sized \
+         when the proactive planner runs).\n",
+    );
+    out.push_str("# TYPE enova_gateway_warm_pool_target gauge\n");
+    let _ = writeln!(out, "enova_gateway_warm_pool_target {warm_target}");
+
+    out.push_str(
+        "# HELP enova_gateway_queue_wait_seconds Time admitted jobs spent in replica worker \
+         queues before reaching the engine (or being shed).\n",
+    );
+    out.push_str("# TYPE enova_gateway_queue_wait_seconds histogram\n");
+    let qw_total = gw.queue_wait.count.load(Ordering::Relaxed);
+    for (i, &le) in QUEUE_WAIT_BUCKETS.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "enova_gateway_queue_wait_seconds_bucket{{le=\"{}\"}} {}",
+            le,
+            gw.queue_wait.buckets[i].load(Ordering::Relaxed)
+        );
+    }
+    let _ = writeln!(
+        out,
+        "enova_gateway_queue_wait_seconds_bucket{{le=\"+Inf\"}} {qw_total}"
+    );
+    let _ = writeln!(
+        out,
+        "enova_gateway_queue_wait_seconds_sum {}",
+        gw.queue_wait.sum_micros.load(Ordering::Relaxed) as f64 / 1e6
+    );
+    let _ = writeln!(out, "enova_gateway_queue_wait_seconds_count {qw_total}");
+
+    out.push_str(
         "# HELP enova_gateway_reconfigure_events_total Live capacity mutations applied by \
          replica workers (max_num_seqs / gpu_memory).\n",
     );
@@ -310,6 +414,26 @@ pub fn render_prometheus(
             "POT threshold the supervisor scores against.",
             sup.last_threshold,
         ),
+        (
+            "enova_supervisor_forecast_enabled",
+            "1 when the forecast-aware proactive planner is running.",
+            sup.forecast_enabled as u64 as f64,
+        ),
+        (
+            "enova_supervisor_forecast_rps",
+            "Predicted cluster arrival rate at the planning horizon (requests/second).",
+            sup.last_forecast,
+        ),
+        (
+            "enova_supervisor_forecast_error",
+            "Trailing weighted-MAPE of the forecaster at the planning horizon.",
+            sup.forecast_error,
+        ),
+        (
+            "enova_supervisor_forecast_degraded",
+            "1 while forecast error is over budget and the planner stands down to reactive.",
+            sup.forecast_degraded as u64 as f64,
+        ),
     ] {
         let _ = writeln!(out, "# HELP {name} {help}");
         let _ = writeln!(out, "# TYPE {name} gauge");
@@ -328,6 +452,21 @@ pub fn render_prometheus(
         out,
         "enova_supervisor_scale_events_total{{direction=\"down\"}} {}",
         sup.scale_downs
+    );
+    out.push_str(
+        "# HELP enova_supervisor_scale_origin_total Scaling actions by origin: proactive = \
+         forecast-triggered pre-promotion, reactive = detector or queue-guard.\n",
+    );
+    out.push_str("# TYPE enova_supervisor_scale_origin_total counter\n");
+    let _ = writeln!(
+        out,
+        "enova_supervisor_scale_origin_total{{origin=\"proactive\"}} {}",
+        sup.proactive_events
+    );
+    let _ = writeln!(
+        out,
+        "enova_supervisor_scale_origin_total{{origin=\"reactive\"}} {}",
+        sup.reactive_events
     );
     out.push_str(
         "# HELP enova_supervisor_reconfigure_total Reconfiguration verdicts the supervisor \
@@ -507,6 +646,9 @@ mod tests {
         gw.observe_promotion(true, 0.001);
         gw.observe_promotion(false, 2.0);
 
+        gw.observe_queue_wait(0.002);
+        gw.observe_queue_wait(0.3);
+
         let sup = SupervisorSnapshot {
             enabled: true,
             calibrated: true,
@@ -517,9 +659,15 @@ mod tests {
             events: 3,
             reconfigures: 1,
             last_max_num_seqs: 12,
+            forecast_enabled: true,
+            last_forecast: 42.5,
+            forecast_error: 0.25,
+            forecast_degraded: false,
+            proactive_events: 2,
+            reactive_events: 1,
         };
         let live = vec!["replica-0".to_string(), "replica-1".to_string()];
-        let body = render_prometheus(&gw, &store, 3, &live, 1, 12.5, &sup);
+        let body = render_prometheus(&gw, &store, 3, &live, 1, 2, 12.5, &sup);
         let samples = parse_exposition(&body).expect("valid exposition");
         for col in COLUMNS {
             for replica in ["replica-0", "replica-1"] {
@@ -572,6 +720,48 @@ mod tests {
         assert!(samples
             .iter()
             .any(|s| s.name == "enova_supervisor_applied_max_num_seqs" && s.value == 12.0));
+        // forecast gauges and the proactive/reactive origin split
+        assert!(samples
+            .iter()
+            .any(|s| s.name == "enova_supervisor_forecast_enabled" && s.value == 1.0));
+        assert!(samples
+            .iter()
+            .any(|s| s.name == "enova_supervisor_forecast_rps" && s.value == 42.5));
+        assert!(samples
+            .iter()
+            .any(|s| s.name == "enova_supervisor_forecast_error" && s.value == 0.25));
+        assert!(samples
+            .iter()
+            .any(|s| s.name == "enova_supervisor_forecast_degraded" && s.value == 0.0));
+        assert!(samples
+            .iter()
+            .any(|s| s.name == "enova_supervisor_scale_origin_total"
+                && s.labels.get("origin").map(String::as_str) == Some("proactive")
+                && s.value == 2.0));
+        assert!(samples
+            .iter()
+            .any(|s| s.name == "enova_supervisor_scale_origin_total"
+                && s.labels.get("origin").map(String::as_str) == Some("reactive")
+                && s.value == 1.0));
+        assert!(samples
+            .iter()
+            .any(|s| s.name == "enova_gateway_warm_pool_target" && s.value == 2.0));
+        // the queue-wait histogram is cumulative and counts both samples
+        assert!(samples
+            .iter()
+            .any(|s| s.name == "enova_gateway_queue_wait_seconds_count" && s.value == 2.0));
+        let qw_bucket = |le: &str| {
+            samples
+                .iter()
+                .find(|s| s.name == "enova_gateway_queue_wait_seconds_bucket"
+                    && s.labels.get("le").map(String::as_str) == Some(le))
+                .unwrap()
+                .value
+        };
+        assert_eq!(qw_bucket("0.001"), 0.0);
+        assert_eq!(qw_bucket("0.0025"), 1.0);
+        assert_eq!(qw_bucket("0.5"), 2.0);
+        assert_eq!(qw_bucket("+Inf"), 2.0);
         // the promotion histogram carries both kinds, and the warm sample
         // lands in a strictly lower bucket than the cold one
         for kind in ["warm", "cold"] {
@@ -624,6 +814,7 @@ mod tests {
             0,
             &live,
             0,
+            0,
             0.0,
             &SupervisorSnapshot::default(),
         );
@@ -641,6 +832,25 @@ mod tests {
         assert_eq!(bucket("0.25"), 1.0);
         assert_eq!(bucket("1"), 2.0);
         assert_eq!(bucket("+Inf"), 2.0);
+    }
+
+    #[test]
+    fn queue_wait_quantile_estimates_from_buckets() {
+        let gw = GatewayMetrics::new();
+        assert_eq!(gw.queue_wait_quantile(0.95), 0.0, "no observations yet");
+        for _ in 0..95 {
+            gw.observe_queue_wait(0.003); // le=0.005 bucket
+        }
+        for _ in 0..5 {
+            gw.observe_queue_wait(0.8); // le=1.0 bucket
+        }
+        assert_eq!(gw.queue_wait_quantile(0.5), 0.005);
+        assert_eq!(gw.queue_wait_quantile(0.95), 0.005);
+        assert_eq!(gw.queue_wait_quantile(1.0), 1.0);
+        // past the largest bound the estimate is +inf, never a lie
+        let gw = GatewayMetrics::new();
+        gw.observe_queue_wait(30.0);
+        assert!(gw.queue_wait_quantile(0.95).is_infinite());
     }
 
     #[test]

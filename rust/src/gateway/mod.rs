@@ -203,6 +203,10 @@ struct GatewayState {
     spawner: Option<EngineSpawner>,
     /// pre-initialized standby replicas awaiting promotion (LIFO)
     warm: Mutex<Vec<WarmReplica>>,
+    /// live warm-pool size target. Seeded from `cfg.warm_pool`; the
+    /// forecast-aware supervisor re-sizes it from predicted demand, so
+    /// the pool tracks anticipated promotions instead of a fixed number
+    warm_target: AtomicUsize,
     /// true while a background warm-pool filler thread is running
     warm_filling: AtomicBool,
     /// last cluster-wide capacity verdict; replayed onto replicas that
@@ -284,6 +288,7 @@ impl Gateway {
             replicas: RwLock::new(BTreeMap::new()),
             spawner,
             warm: Mutex::new(Vec::new()),
+            warm_target: AtomicUsize::new(cfg.warm_pool),
             warm_filling: AtomicBool::new(false),
             last_reconfig: Mutex::new(None),
             next_replica_id: AtomicU64::new(n as u64),
@@ -298,7 +303,13 @@ impl Gateway {
                 store.retention = 4096;
                 store
             }),
-            supervisor: Mutex::new(supervisor::SupervisorStatus::new(supervisor_cfg.is_some())),
+            supervisor: Mutex::new(supervisor::SupervisorStatus::new(
+                supervisor_cfg.is_some(),
+                supervisor_cfg
+                    .as_ref()
+                    .map(|c| c.forecast.is_some())
+                    .unwrap_or(false),
+            )),
             started: Instant::now(),
             ready_replicas: AtomicUsize::new(0),
             next_req_id: AtomicU64::new(1),
@@ -417,6 +428,26 @@ impl Gateway {
     /// Standby replicas currently parked in the warm pool.
     pub fn warm_pool_size(&self) -> usize {
         self.state.warm.lock().unwrap().len()
+    }
+
+    /// The live warm-pool size target (seeded from the config; re-sized
+    /// by the forecast-aware supervisor).
+    pub fn warm_pool_target(&self) -> usize {
+        self.state.warm_target.load(Ordering::Acquire)
+    }
+
+    /// Re-size the warm pool target: grows refill in the background,
+    /// shrinks drain the excess standbys.
+    pub fn set_warm_pool_target(&self, target: usize) {
+        set_warm_target(&self.state, target);
+    }
+
+    /// Upper-bound estimate of the `q`-quantile of time-in-queue
+    /// (seconds), read from the `enova_gateway_queue_wait_seconds`
+    /// histogram buckets. 0 with no observations; +inf when the quantile
+    /// lies beyond the largest bucket bound.
+    pub fn queue_wait_quantile(&self, q: f64) -> f64 {
+        self.state.metrics.queue_wait_quantile(q)
     }
 
     /// `(count, mean seconds)` of AddReplica promotions by kind — the
@@ -598,11 +629,55 @@ fn replay_last_reconfig(state: &GatewayState, slot: &ReplicaSlot) {
     }
 }
 
-/// Keep the warm pool at its configured size by building standbys in a
+/// Re-size the warm-pool target at runtime (the forecast-aware
+/// supervisor's pre-provisioning knob). Growing triggers a background
+/// refill; excess standbys are drained by a background reaper so the
+/// caller (the supervisor tick) never blocks on thread joins.
+///
+/// The drain check runs on every call, not only when the target
+/// decreases: a filler that completes a build just after the target moved
+/// under it leaves the pool over target with `prev == target` on all
+/// later calls, so a `target < prev` guard would leak that standby (a
+/// live engine) forever. The planner calls this every tick, which makes
+/// the next tick the cleanup bound.
+pub(crate) fn set_warm_target(state: &Arc<GatewayState>, target: usize) {
+    let prev = state.warm_target.swap(target, Ordering::AcqRel);
+    let excess: Vec<WarmReplica> = {
+        let mut warm = state.warm.lock().unwrap();
+        let mut out = Vec::new();
+        while warm.len() > target {
+            // LIFO: drop the most recently parked standby
+            match warm.pop() {
+                Some(w) => out.push(w),
+                None => break,
+            }
+        }
+        out
+    };
+    if !excess.is_empty() {
+        let st = Arc::clone(state);
+        std::thread::spawn(move || {
+            for w in excess {
+                w.slot.draining.store(true, Ordering::Release);
+                let join = w.slot.join.lock().unwrap().take();
+                if let Some(h) = join {
+                    let _ = h.join();
+                }
+                st.store.lock().unwrap().remove_instance(&format!("replica-{}", w.id));
+                crate::info!("gateway", "warm standby {} drained (target {target})", w.id);
+            }
+        });
+    }
+    if target > prev {
+        ensure_warm_fill(state);
+    }
+}
+
+/// Keep the warm pool at its target size by building standbys in a
 /// background thread, so neither startup nor promotions ever wait on
 /// engine init. At most one filler runs at a time.
 fn ensure_warm_fill(state: &Arc<GatewayState>) {
-    if state.cfg.warm_pool == 0 || state.spawner.is_none() {
+    if state.warm_target.load(Ordering::Acquire) == 0 || state.spawner.is_none() {
         return;
     }
     if state.warm_filling.swap(true, Ordering::AcqRel) {
@@ -613,7 +688,7 @@ fn ensure_warm_fill(state: &Arc<GatewayState>) {
         let mut failures = 0u32;
         'fill: loop {
             while !st.stop.load(Ordering::Acquire) {
-                if st.warm.lock().unwrap().len() >= st.cfg.warm_pool {
+                if st.warm.lock().unwrap().len() >= st.warm_target.load(Ordering::Acquire) {
                     break;
                 }
                 match spawn_warm(&st) {
@@ -650,7 +725,7 @@ fn ensure_warm_fill(state: &Arc<GatewayState>) {
             // ensure_warm_fill call saw the stale flag and bailed. Re-check,
             // and only exit while the pool is genuinely full (or stopping).
             if st.stop.load(Ordering::Acquire)
-                || st.warm.lock().unwrap().len() >= st.cfg.warm_pool
+                || st.warm.lock().unwrap().len() >= st.warm_target.load(Ordering::Acquire)
                 || st.warm_filling.swap(true, Ordering::AcqRel)
             {
                 break;
@@ -779,8 +854,9 @@ fn retire_replica(state: &Arc<GatewayState>, id: u64) -> Result<()> {
     // the worker stays alive (finishing any in-flight work on its own
     // schedule) and the built engine is reused by the next promotion
     {
+        let target = state.warm_target.load(Ordering::Acquire);
         let mut warm = state.warm.lock().unwrap();
-        if state.cfg.warm_pool > 0 && warm.len() < state.cfg.warm_pool {
+        if target > 0 && warm.len() < target {
             warm.push(WarmReplica { id, slot });
             drop(warm);
             let live = state.replicas.read().unwrap().len();
@@ -1066,6 +1142,7 @@ fn promote(
         let waited = job.enqueued_at.elapsed();
         window.queue_wait_sum += waited.as_secs_f64();
         window.queue_wait_n += 1;
+        state.metrics.observe_queue_wait(waited.as_secs_f64());
         let budget = state.cfg.queue_budget;
         let over_budget = budget > Duration::ZERO && waited > budget;
         if over_budget || Instant::now() >= job.deadline {
@@ -1145,6 +1222,7 @@ fn route(req: &http::Request, stream: &mut TcpStream, state: &GatewayState) -> s
                 .map(|id| format!("replica-{id}"))
                 .collect();
             let warm = state.warm.lock().unwrap().len();
+            let warm_target = state.warm_target.load(Ordering::Acquire);
             let sup = state.supervisor.lock().unwrap().snapshot();
             let body = {
                 let store = state.store.lock().unwrap();
@@ -1154,6 +1232,7 @@ fn route(req: &http::Request, stream: &mut TcpStream, state: &GatewayState) -> s
                     state.gate.inflight(),
                     &live,
                     warm,
+                    warm_target,
                     state.started.elapsed().as_secs_f64(),
                     &sup,
                 )

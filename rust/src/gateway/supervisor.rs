@@ -15,9 +15,22 @@
 //! detector is within threshold — real queue pressure, not only
 //! throughput, drives the decision.
 
+//!
+//! With a [`ForecastPolicy`] the supervisor also runs a *proactive*
+//! planner ahead of the reactive loop: a [`crate::forecast::Forecaster`]
+//! over the sampled cluster arrival rate predicts demand `horizon_steps`
+//! ahead, [`crate::forecast::replicas_for_rate`] converts the prediction
+//! into a replica target from per-replica service capacity, and the
+//! planner pre-promotes warm standbys (and re-sizes the warm pool) before
+//! the ramp arrives instead of after the detector notices it. When the
+//! forecaster's trailing error overshoots the policy's budget the planner
+//! stands down and the reactive loop alone drives scaling — a wrong
+//! forecast can cost efficiency, never stability.
+
 use super::GatewayState;
 use crate::autoscaler::Action;
 use crate::detect::{Detection, ScaleDirection, ZscoreDetector};
+use crate::forecast::{ForecastConfig, Forecaster};
 use crate::metrics::Frame;
 use crate::simulator::gpu::{GpuSpec, RTX4090_24G};
 use crate::simulator::modelcard::{ModelCard, MISTRAL_7B};
@@ -48,6 +61,9 @@ pub struct SupervisorConfig {
     /// live §IV-A reconfiguration of `max_num_seqs`/`gpu_memory`; `None`
     /// disables the loop
     pub reconfig: Option<ReconfigPolicy>,
+    /// forecast-aware proactive planning (pre-promotion + warm-pool
+    /// sizing); `None` leaves the supervisor purely reactive
+    pub forecast: Option<ForecastPolicy>,
 }
 
 impl Default for SupervisorConfig {
@@ -62,6 +78,44 @@ impl Default for SupervisorConfig {
             queue_wait_budget: Duration::from_millis(500),
             detector_scaling: true,
             reconfig: None,
+            forecast: None,
+        }
+    }
+}
+
+/// Policy for the proactive planner: how far ahead to predict, what error
+/// makes the forecast untrustworthy, and how a predicted rate maps onto
+/// replicas.
+#[derive(Debug, Clone)]
+pub struct ForecastPolicy {
+    /// prediction horizon in `sample_interval` steps (≥ 1); pre-promotion
+    /// leads demand by roughly this much wall-clock
+    pub horizon_steps: usize,
+    /// season length in samples for the seasonal models; 0 disables them
+    pub season_steps: usize,
+    /// trailing weighted-MAPE above which the planner stands down and the
+    /// reactive loop alone drives scaling
+    pub err_budget: f64,
+    /// per-replica service capacity in requests/second; 0 learns it from
+    /// the peak per-replica finish rate observed while the cluster was
+    /// under pressure (queueing or ≥90% slot occupancy)
+    pub replica_capacity_rps: f64,
+    /// relative safety margin applied to the predicted rate
+    pub headroom: f64,
+    /// warm standbys kept even when no promotions are anticipated, so the
+    /// first proactive scale-up is always O(route-update)
+    pub min_warm: usize,
+}
+
+impl Default for ForecastPolicy {
+    fn default() -> Self {
+        ForecastPolicy {
+            horizon_steps: 5,
+            season_steps: 0,
+            err_budget: 1.0,
+            replica_capacity_rps: 0.0,
+            headroom: 0.15,
+            min_warm: 1,
         }
     }
 }
@@ -114,6 +168,8 @@ pub enum Trigger {
     QueueWait,
     /// the §IV-A configuration recommender (live window re-derivation)
     Recommender,
+    /// the proactive planner (predicted arrival rate over capacity)
+    Forecast,
 }
 
 /// One executed scaling action.
@@ -125,7 +181,7 @@ pub struct ScalingEvent {
     pub action: Action,
     pub trigger: Trigger,
     /// detector energy and threshold at decision time (0/0 for
-    /// recommender-triggered reconfigurations — no detector involved)
+    /// recommender- and forecast-triggered actions — no detector involved)
     pub energy: f64,
     pub threshold: f64,
     /// the replica the action spawned or retired; for a cluster-wide
@@ -149,12 +205,25 @@ pub(super) struct SupervisorStatus {
     pub reconfigures: u64,
     /// last max_num_seqs applied cluster-wide (0 = never)
     pub last_max_num_seqs: usize,
+    /// true when a [`ForecastPolicy`] is active
+    pub forecast_enabled: bool,
+    /// latest predicted cluster arrival rate (requests/second)
+    pub last_forecast: f64,
+    /// trailing weighted-MAPE of the forecaster at the planning horizon
+    pub forecast_error: f64,
+    /// true while the error budget is blown and the planner stands down
+    pub forecast_degraded: bool,
+    /// scale actions by origin: proactive = forecast-triggered, reactive =
+    /// detector- or queue-guard-triggered
+    pub proactive_events: u64,
+    pub reactive_events: u64,
 }
 
 impl SupervisorStatus {
-    pub fn new(enabled: bool) -> SupervisorStatus {
+    pub fn new(enabled: bool, forecast_enabled: bool) -> SupervisorStatus {
         SupervisorStatus {
             enabled,
+            forecast_enabled,
             ..SupervisorStatus::default()
         }
     }
@@ -170,6 +239,12 @@ impl SupervisorStatus {
             events: self.events.len(),
             reconfigures: self.reconfigures,
             last_max_num_seqs: self.last_max_num_seqs,
+            forecast_enabled: self.forecast_enabled,
+            last_forecast: self.last_forecast,
+            forecast_error: self.forecast_error,
+            forecast_degraded: self.forecast_degraded,
+            proactive_events: self.proactive_events,
+            reactive_events: self.reactive_events,
         }
     }
 }
@@ -186,6 +261,12 @@ pub struct SupervisorSnapshot {
     pub events: usize,
     pub reconfigures: u64,
     pub last_max_num_seqs: usize,
+    pub forecast_enabled: bool,
+    pub last_forecast: f64,
+    pub forecast_error: f64,
+    pub forecast_degraded: bool,
+    pub proactive_events: u64,
+    pub reactive_events: u64,
 }
 
 /// Consecutive-sample counters feeding the patience rule. Pure logic so
@@ -247,6 +328,22 @@ struct ReconfigState {
     last_target: Option<usize>,
 }
 
+/// Consecutive frames of each replica's `n_arriving` series averaged into
+/// one de-noised arrival sample for the forecaster.
+const FORECAST_SAMPLE_FRAMES: usize = 3;
+
+/// Minimum per-replica capacity evidence (requests/second) before the
+/// planner converts predictions into replica counts.
+const MIN_CAPACITY_EVIDENCE: f64 = 0.05;
+
+/// Mutable state of the proactive planner between ticks.
+struct ForecastState {
+    forecaster: Forecaster,
+    /// peak per-replica finish rate observed under pressure — the learned
+    /// stand-in for service capacity when the policy does not configure one
+    learned_capacity: f64,
+}
+
 /// Run the supervisor until the gateway stops. Spawned by
 /// [`super::Gateway::start_scalable`] when a [`SupervisorConfig`] is
 /// given.
@@ -262,18 +359,27 @@ pub(super) fn supervisor_loop(state: &Arc<GatewayState>, cfg: SupervisorConfig) 
         last_applied: None,
         last_target: None,
     });
+    let mut forecast_state = cfg.forecast.as_ref().map(|p| ForecastState {
+        forecaster: Forecaster::new(ForecastConfig {
+            horizon: p.horizon_steps.max(1),
+            season: p.season_steps,
+            ..ForecastConfig::default()
+        }),
+        learned_capacity: 0.0,
+    });
 
     crate::info!(
         "gateway",
         "autoscaling supervisor up: interval {:?}, calib {} samples, patience {}, \
-         replicas {}..={}, detector scaling {}, reconfig {}",
+         replicas {}..={}, detector scaling {}, reconfig {}, forecast {}",
         cfg.sample_interval,
         calib_target,
         cfg.patience,
         cfg.min_replicas,
         cfg.max_replicas,
         cfg.detector_scaling,
-        cfg.reconfig.is_some()
+        cfg.reconfig.is_some(),
+        cfg.forecast.is_some()
     );
 
     loop {
@@ -292,11 +398,31 @@ pub(super) fn supervisor_loop(state: &Arc<GatewayState>, cfg: SupervisorConfig) 
                 state.supervisor.lock().unwrap().calibrated = false;
             }
         }
+
+        // only the detector and the planner consume cluster samples; a
+        // reconfig-only supervisor skips the per-tick store walk entirely
+        let sample = if cfg.detector_scaling || cfg.forecast.is_some() {
+            cluster_sample(state)
+        } else {
+            None
+        };
+
+        // the proactive planner runs ahead of the reactive loop: it acts
+        // on where demand is *going*, the detector on where it already is
+        if let (Some(policy), Some(fs), Some((frame, _))) =
+            (cfg.forecast.as_ref(), forecast_state.as_mut(), sample.as_ref())
+        {
+            if maybe_forecast_scale(state, &cfg, policy, fs, frame, &mut last_action) {
+                // the cluster the detector calibrated on just changed size
+                streaks.reset();
+            }
+        }
+
         if !cfg.detector_scaling {
             continue;
         }
 
-        let Some((frame, queue_wait)) = cluster_sample(state) else {
+        let Some((frame, queue_wait)) = sample else {
             continue;
         };
 
@@ -495,6 +621,143 @@ fn maybe_reconfigure(
     true
 }
 
+/// One tick of the proactive planner: feed the forecaster, publish the
+/// forecast gauges, size the warm pool for the anticipated promotions and
+/// pre-promote when predicted demand exceeds live capacity. Returns true
+/// when a proactive scale-up was executed.
+fn maybe_forecast_scale(
+    state: &Arc<GatewayState>,
+    cfg: &SupervisorConfig,
+    policy: &ForecastPolicy,
+    fs: &mut ForecastState,
+    frame: &Frame,
+    last_action: &mut Option<Instant>,
+) -> bool {
+    let live = state.replicas.read().unwrap().len();
+    // de-noised sample: mean of the last few frames per replica, summed
+    // across the live set — the total rate the cluster must absorb
+    let total = forecast_sample(state, FORECAST_SAMPLE_FRAMES)
+        .unwrap_or(frame.n_arriving * live as f64);
+    // capacity is only learnable under pressure: a lightly loaded
+    // replica's finish rate equals its *demand*, not its capacity, and
+    // learning from it would make the planner over-provision any steady
+    // load (ceil(demand/demand·live) > live, forever)
+    let under_pressure = frame.n_pending > 0.5 || frame.gpu_util >= 0.9;
+    if under_pressure && frame.n_finished > fs.learned_capacity {
+        fs.learned_capacity = frame.n_finished;
+    }
+    fs.forecaster.observe(total);
+
+    let pred = fs.forecaster.forecast(policy.horizon_steps.max(1));
+    let err = fs.forecaster.error();
+    let degraded = fs.forecaster.degraded(policy.err_budget);
+    {
+        let mut status = state.supervisor.lock().unwrap();
+        status.last_forecast = pred.unwrap_or(0.0);
+        status.forecast_error = err.unwrap_or(0.0);
+        status.forecast_degraded = degraded;
+    }
+
+    let capacity = if policy.replica_capacity_rps > 0.0 {
+        policy.replica_capacity_rps
+    } else {
+        fs.learned_capacity
+    };
+    // stand down to reactive-only while there is nothing trustworthy to
+    // plan from: no capacity evidence yet, not enough history, or the
+    // trailing error blew its budget. Standing down includes releasing
+    // any forecast-sized pre-provisioning back to the configured floor —
+    // parked standby engines must not outlive the forecast that asked
+    // for them.
+    let trustworthy = capacity >= MIN_CAPACITY_EVIDENCE && !degraded;
+    let pred = match pred {
+        Some(p) if trustworthy => p,
+        _ => {
+            super::set_warm_target(state, policy.min_warm);
+            return false;
+        }
+    };
+
+    let needed = crate::forecast::replicas_for_rate(
+        pred,
+        capacity,
+        policy.headroom,
+        cfg.min_replicas,
+        cfg.max_replicas,
+    );
+    // keep enough standbys that reaching `needed` stays O(route-update)
+    let warm_target = needed.saturating_sub(live).max(policy.min_warm);
+    super::set_warm_target(state, warm_target);
+    if needed <= live {
+        return false;
+    }
+    let cooled = last_action
+        .map(|t| t.elapsed() >= cfg.cooldown)
+        .unwrap_or(true);
+    if !cooled || live >= cfg.max_replicas {
+        return false;
+    }
+    match super::hot_add_replica(state) {
+        Ok(id) => {
+            crate::info!(
+                "gateway",
+                "proactive scale-up: predicted {pred:.1} rps vs {capacity:.1} rps/replica \
+                 x{live} live -> target {needed} (err {:.3})",
+                err.unwrap_or(0.0)
+            );
+            record_event(
+                state,
+                0.0,
+                0.0,
+                ScaleDirection::Up,
+                Trigger::Forecast,
+                Action::AddReplica,
+                id,
+            );
+            *last_action = Some(Instant::now());
+            true
+        }
+        Err(e) => {
+            crate::error!("gateway", "proactive scale-up failed: {e}");
+            false
+        }
+    }
+}
+
+/// Metric-store instance names of the live replica set — the one walk
+/// both sampling paths (detector and forecaster) key their reads on.
+fn live_instances(state: &GatewayState) -> Vec<String> {
+    state
+        .replicas
+        .read()
+        .unwrap()
+        .keys()
+        .map(|id| format!("replica-{id}"))
+        .collect()
+}
+
+/// Mean of the newest `k` `n_arriving` frame values per live replica,
+/// summed across the live set: the cluster arrival rate the forecaster
+/// consumes. `None` until at least one replica recorded a frame.
+fn forecast_sample(state: &GatewayState, k: usize) -> Option<f64> {
+    let instances = live_instances(state);
+    if instances.is_empty() {
+        return None;
+    }
+    let store = state.store.lock().unwrap();
+    let mut total = 0.0;
+    let mut seen = false;
+    for instance in &instances {
+        let vals = store.tail(crate::metrics::N_ARRIVING, instance, k.max(1));
+        if vals.is_empty() {
+            continue;
+        }
+        total += vals.iter().sum::<f64>() / vals.len() as f64;
+        seen = true;
+    }
+    seen.then_some(total)
+}
+
 fn record_event(
     state: &GatewayState,
     energy: f64,
@@ -527,11 +790,16 @@ fn record_event(
     );
     let mut status = state.supervisor.lock().unwrap();
     // reconfigurations have their own counter; only replica-count actions
-    // feed the scale-up/down tallies
+    // feed the scale-up/down tallies and the origin split
     if !matches!(action, Action::Reconfigure { .. }) {
         match direction {
             ScaleDirection::Up => status.scale_ups += 1,
             ScaleDirection::Down => status.scale_downs += 1,
+        }
+        match trigger {
+            Trigger::Forecast => status.proactive_events += 1,
+            Trigger::Detector | Trigger::QueueWait => status.reactive_events += 1,
+            Trigger::Recommender => {}
         }
     }
     status.events.push(event);
@@ -541,23 +809,22 @@ fn record_event(
 /// replica into one detector row. `None` until at least one replica has
 /// recorded a frame.
 fn cluster_sample(state: &GatewayState) -> Option<(Frame, f64)> {
-    let ids: Vec<u64> = state.replicas.read().unwrap().keys().copied().collect();
-    if ids.is_empty() {
+    let instances = live_instances(state);
+    if instances.is_empty() {
         return None;
     }
     let store = state.store.lock().unwrap();
     let mut acc = [0.0f64; 8];
     let mut wait = 0.0f64;
     let mut n = 0usize;
-    for id in &ids {
-        let instance = format!("replica-{id}");
-        let frames = crate::metrics::recent_frames(&store, &instance, 1);
+    for instance in &instances {
+        let frames = crate::metrics::recent_frames(&store, instance, 1);
         let Some(f) = frames.last() else { continue };
         for (a, v) in acc.iter_mut().zip(f.to_array()) {
             *a += v;
         }
         wait += store
-            .series(super::QUEUE_WAIT, &instance)
+            .series(super::QUEUE_WAIT, instance)
             .and_then(|s| s.last())
             .unwrap_or(0.0);
         n += 1;

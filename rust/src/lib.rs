@@ -56,6 +56,7 @@ pub mod config;
 pub mod deployer;
 pub mod detect;
 pub mod engine;
+pub mod forecast;
 pub mod gateway;
 pub mod metrics;
 pub mod router;

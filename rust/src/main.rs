@@ -19,9 +19,17 @@ COMMANDS:
               --calib-samples N --patience N --cooldown-ms N --queue-wait-budget-ms N]
               --reconfig [--reconfig-interval-ms N --reconfig-cooldown-ms N
               --reconfig-deadband F --reconfig-min-seqs N --reconfig-max-seqs N
-              --reconfig-window N])
-  loadgen     closed-loop load against a gateway (--addr HOST:PORT --concurrency N
-              --requests N --max-tokens N [--report FILE] [--strict])
+              --reconfig-window N]
+              --forecast [--forecast-horizon-ms N --forecast-err-budget F
+              --forecast-season-ms N --forecast-capacity RPS --forecast-headroom F
+              --forecast-min-warm N])
+  loadgen     load against a gateway (--addr HOST:PORT [--report FILE] [--strict];
+              closed loop: --concurrency N --requests N --max-tokens N;
+              open-loop scenarios: --scenario steady|diurnal|spike|ramp|mixture
+              --duration-s F --base-rps F --peak-rps F --period-s F --spike-start F
+              --spike-len F --seed N --workers N)
+  bench-gateway  in-process scenario benchmark (--report FILE --baseline FILE
+              --scenarios a,b,c --duration-s F --regression-pct F)
   recommend   run the service configuration module for --model <name> --gpu <name>
   detect      calibrate + run the performance detector on the trace dataset
   simulate    simulate a replica (--model --gpu --rps --seconds --max-num-seqs)
@@ -29,12 +37,14 @@ COMMANDS:
 ";
 
 fn main() -> anyhow::Result<()> {
-    let mut args = Args::from_env_known(&["verbose", "autoscale", "reconfig", "strict"]);
+    let mut args =
+        Args::from_env_known(&["verbose", "autoscale", "reconfig", "strict", "forecast"]);
     let cmd = args.subcommand();
     match cmd.as_str() {
         "serve" => serve(&args),
         "serve-http" => serve_http(&args),
         "loadgen" => loadgen_cmd(&args),
+        "bench-gateway" => bench_gateway(&args),
         "recommend" => recommend(&args),
         "detect" => detect(&args),
         "simulate" => simulate(&args),
@@ -164,7 +174,7 @@ fn lm_spawner(
 fn serve_http(args: &Args) -> anyhow::Result<()> {
     use enova::engine::sim::{SimEngine, SimEngineConfig};
     use enova::engine::StreamEngine;
-    use enova::gateway::supervisor::{ReconfigPolicy, SupervisorConfig};
+    use enova::gateway::supervisor::{ForecastPolicy, ReconfigPolicy, SupervisorConfig};
     use enova::gateway::{EngineSpawner, Gateway, GatewayConfig};
     use std::sync::Arc;
     use std::time::Duration;
@@ -203,6 +213,16 @@ fn serve_http(args: &Args) -> anyhow::Result<()> {
 
     let autoscale = args.flag("autoscale");
     let reconfig = args.flag("reconfig");
+    let forecast = args.flag("forecast");
+    let scale_interval_ms = args.get_usize("scale-interval-ms", 1000).max(1);
+    let forecast_policy = forecast.then(|| ForecastPolicy {
+        horizon_steps: (args.get_usize("forecast-horizon-ms", 30_000) / scale_interval_ms).max(1),
+        season_steps: args.get_usize("forecast-season-ms", 0) / scale_interval_ms,
+        err_budget: args.get_f64("forecast-err-budget", 1.0),
+        replica_capacity_rps: args.get_f64("forecast-capacity", 0.0),
+        headroom: args.get_f64("forecast-headroom", 0.15),
+        min_warm: args.get_usize("forecast-min-warm", 1),
+    });
     let reconfig_policy = reconfig.then(|| ReconfigPolicy {
         interval: Duration::from_millis(args.get_usize("reconfig-interval-ms", 10_000) as u64),
         cooldown: Duration::from_millis(args.get_usize("reconfig-cooldown-ms", 60_000) as u64),
@@ -212,8 +232,8 @@ fn serve_http(args: &Args) -> anyhow::Result<()> {
         window: args.get_usize("reconfig-window", 120),
         ..ReconfigPolicy::default()
     });
-    let supervisor = (autoscale || reconfig).then(|| SupervisorConfig {
-        sample_interval: Duration::from_millis(args.get_usize("scale-interval-ms", 1000) as u64),
+    let supervisor = (autoscale || reconfig || forecast).then(|| SupervisorConfig {
+        sample_interval: Duration::from_millis(scale_interval_ms as u64),
         calib_samples: args.get_usize("calib-samples", 30),
         patience: args.get_usize("patience", 3),
         cooldown: Duration::from_millis(args.get_usize("cooldown-ms", 30_000) as u64),
@@ -224,6 +244,7 @@ fn serve_http(args: &Args) -> anyhow::Result<()> {
         ),
         detector_scaling: autoscale,
         reconfig: reconfig_policy,
+        forecast: forecast_policy,
     });
 
     let port = args.get_usize("port", 8080);
@@ -244,30 +265,68 @@ fn serve_http(args: &Args) -> anyhow::Result<()> {
     let gw = Gateway::start_scalable(cfg, spawner, replicas, supervisor)?;
     println!(
         "enova gateway: {replicas}x {engine_kind} replica(s) on http://{} \
-         (autoscale: {}, reconfig: {}, warm pool: {warm_pool})",
+         (autoscale: {}, reconfig: {}, forecast: {}, warm pool: {warm_pool})",
         gw.addr,
         if autoscale { "on" } else { "off" },
         if reconfig { "on" } else { "off" },
+        if forecast { "on" } else { "off" },
     );
     println!("  try: curl -s http://{}/healthz", gw.addr);
     gw.serve_forever();
     Ok(())
 }
 
-/// `enova loadgen`: drive a running gateway closed-loop and report. With
-/// `--report FILE` the full report is written as JSON (the CI smoke job's
+/// `enova loadgen`: drive a running gateway and report. Without
+/// `--scenario` this is the classic closed loop; with one it replays a
+/// named open-loop arrival pattern (the scenario engine). With `--report
+/// FILE` the full report is written as JSON (the CI smoke/bench jobs'
 /// artifact); with `--strict` any transport error or non-2xx response
 /// makes the command fail.
 fn loadgen_cmd(args: &Args) -> anyhow::Result<()> {
-    use enova::gateway::loadgen;
+    use enova::gateway::loadgen::{self, ScenarioConfig, ScenarioKind};
+    use std::time::Duration;
     let addr = args.get_or("addr", "127.0.0.1:8080").to_string();
-    let cfg = loadgen::LoadgenConfig {
-        concurrency: args.get_usize("concurrency", 8).max(1),
-        requests_per_worker: args.get_usize("requests", 4).max(1),
-        max_tokens: args.get_usize("max-tokens", 8),
-        ..Default::default()
+    let report = match args.get("scenario") {
+        Some(name) => {
+            let kind = ScenarioKind::parse(name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown scenario {name:?}; expected one of steady, diurnal, spike, ramp, \
+                     mixture"
+                )
+            })?;
+            let cfg = ScenarioConfig {
+                kind,
+                duration: Duration::from_secs_f64(args.get_f64("duration-s", 10.0).max(0.1)),
+                base_rps: args.get_f64("base-rps", 2.0),
+                peak_rps: args.get_f64("peak-rps", 8.0),
+                period: Duration::from_secs_f64(args.get_f64("period-s", 0.0).max(0.0)),
+                spike_start: args.get_f64("spike-start", 0.5),
+                spike_len: args.get_f64("spike-len", 0.2),
+                seed: args.get_usize("seed", 42) as u64,
+                workers: args.get_usize("workers", 32).max(1),
+                max_tokens: args.get_usize("max-tokens", 8),
+                ..ScenarioConfig::default()
+            };
+            println!(
+                "scenario {} for {:.1}s: base {} rps, peak {} rps, seed {}",
+                kind.name(),
+                cfg.duration.as_secs_f64(),
+                cfg.base_rps,
+                cfg.peak_rps,
+                cfg.seed
+            );
+            loadgen::run_scenario(&addr, &cfg)
+        }
+        None => {
+            let cfg = loadgen::LoadgenConfig {
+                concurrency: args.get_usize("concurrency", 8).max(1),
+                requests_per_worker: args.get_usize("requests", 4).max(1),
+                max_tokens: args.get_usize("max-tokens", 8),
+                ..Default::default()
+            };
+            loadgen::run(&addr, &cfg)
+        }
     };
-    let report = loadgen::run(&addr, &cfg);
     println!("{}", report.summary());
     if let Some(path) = args.get("report") {
         std::fs::write(path, report.to_json().to_string_pretty())?;
@@ -287,6 +346,149 @@ fn loadgen_cmd(args: &Args) -> anyhow::Result<()> {
             non_2xx,
             report.status_counts
         );
+    }
+    Ok(())
+}
+
+/// `enova bench-gateway`: the CI bench-trend driver. Boots an in-process
+/// sim-engine gateway with the forecast-aware supervisor per scenario,
+/// replays the scenario open-loop, and writes one JSON artifact with
+/// p50/p95 latency, shed counts and the proactive/reactive scale-event
+/// split. With `--baseline FILE` present on disk, fails when any
+/// scenario's p95 regresses more than `--regression-pct` (default 20%).
+fn bench_gateway(args: &Args) -> anyhow::Result<()> {
+    use enova::engine::sim::{SimEngine, SimEngineConfig};
+    use enova::engine::StreamEngine;
+    use enova::gateway::loadgen::{self, ScenarioConfig, ScenarioKind};
+    use enova::gateway::supervisor::{ForecastPolicy, SupervisorConfig};
+    use enova::gateway::{EngineSpawner, Gateway, GatewayConfig};
+    use enova::util::json::{num, obj, s, Json};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let duration = args.get_f64("duration-s", 6.0).max(0.5);
+    let regression_pct = args.get_f64("regression-pct", 20.0).max(0.0);
+    let report_path = args.get_or("report", "BENCH_gateway.json").to_string();
+    let baseline_path = args.get_or("baseline", "").to_string();
+    let mut kinds = Vec::new();
+    for name in args.get_or("scenarios", "steady,spike,diurnal").split(',') {
+        let name = name.trim();
+        if name.is_empty() {
+            continue;
+        }
+        kinds.push(
+            ScenarioKind::parse(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown scenario {name:?}"))?,
+        );
+    }
+    anyhow::ensure!(!kinds.is_empty(), "--scenarios must name at least one scenario");
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut proactive_total = 0u64;
+    let mut reactive_total = 0u64;
+    for kind in kinds {
+        let spawner: EngineSpawner = Arc::new(|_id| {
+            Ok(Box::new(SimEngine::new(SimEngineConfig {
+                max_num_seqs: 4,
+                max_tokens: 64,
+                step_delay: Duration::from_millis(2),
+            })) as Box<dyn StreamEngine>)
+        });
+        let sup = SupervisorConfig {
+            sample_interval: Duration::from_millis(100),
+            calib_samples: 20,
+            patience: 2,
+            cooldown: Duration::from_millis(1000),
+            min_replicas: 1,
+            max_replicas: 3,
+            queue_wait_budget: Duration::from_millis(500),
+            detector_scaling: true,
+            reconfig: None,
+            forecast: Some(ForecastPolicy {
+                horizon_steps: 10,
+                err_budget: 1.5,
+                replica_capacity_rps: 40.0,
+                ..ForecastPolicy::default()
+            }),
+        };
+        let gw = Gateway::start_scalable(
+            GatewayConfig {
+                warm_pool: 1,
+                monitor_interval: Duration::from_millis(50),
+                max_pending: 1024,
+                ..GatewayConfig::default()
+            },
+            spawner,
+            1,
+            Some(sup),
+        )?;
+        let scn = ScenarioConfig {
+            kind,
+            duration: Duration::from_secs_f64(duration),
+            base_rps: 4.0,
+            peak_rps: 24.0,
+            seed: 11,
+            workers: 32,
+            max_tokens: 8,
+            ..ScenarioConfig::default()
+        };
+        let report = loadgen::run_scenario(&gw.addr_string(), &scn);
+        let snap = gw.supervisor_snapshot();
+        let p95_queue_wait = gw.queue_wait_quantile(0.95);
+        gw.shutdown();
+        println!("{}: {}", kind.name(), report.summary());
+        proactive_total += snap.proactive_events;
+        reactive_total += snap.reactive_events;
+        rows.push(obj([
+            ("scenario", s(kind.name())),
+            ("requests", num(report.requests as f64)),
+            ("errors", num(report.errors as f64)),
+            ("shed_503", num(report.count(503) as f64)),
+            ("p50_ms", num(report.p50_ms)),
+            ("p95_ms", num(report.p95_ms)),
+            ("p99_ms", num(report.p99_ms)),
+            ("p95_queue_wait_s", num(p95_queue_wait)),
+            ("proactive_scale_events", num(snap.proactive_events as f64)),
+            ("reactive_scale_events", num(snap.reactive_events as f64)),
+        ]));
+    }
+    let out = obj([
+        ("bench", s("gateway_scenarios")),
+        ("duration_s", num(duration)),
+        ("scenarios", Json::Arr(rows.clone())),
+        ("proactive_scale_events_total", num(proactive_total as f64)),
+        ("reactive_scale_events_total", num(reactive_total as f64)),
+    ]);
+    std::fs::write(&report_path, out.to_string_pretty())?;
+    println!("bench report written to {report_path}");
+
+    if baseline_path.is_empty() || !std::path::Path::new(&baseline_path).exists() {
+        println!("no committed baseline; regression gate skipped");
+        return Ok(());
+    }
+    let baseline = Json::parse(&std::fs::read_to_string(&baseline_path)?)
+        .map_err(|e| anyhow::anyhow!("bad baseline JSON at {baseline_path}: {e}"))?;
+    let empty: Vec<Json> = Vec::new();
+    let base_rows = baseline
+        .get("scenarios")
+        .and_then(Json::as_arr)
+        .unwrap_or(&empty);
+    for row in &rows {
+        let name = row.get("scenario").and_then(Json::as_str).unwrap_or("");
+        let new_p95 = row.get("p95_ms").and_then(Json::as_f64).unwrap_or(0.0);
+        let old_p95 = base_rows
+            .iter()
+            .find(|b| b.get("scenario").and_then(Json::as_str) == Some(name))
+            .and_then(|b| b.get("p95_ms"))
+            .and_then(Json::as_f64);
+        let Some(old_p95) = old_p95 else { continue };
+        if old_p95 > 0.0 && new_p95 > old_p95 * (1.0 + regression_pct / 100.0) {
+            anyhow::bail!(
+                "p95 regression on {name}: {new_p95:.1}ms vs baseline {old_p95:.1}ms \
+                 (> {regression_pct:.0}% worse)"
+            );
+        }
+        println!("{name}: p95 {new_p95:.1}ms vs baseline {old_p95:.1}ms — ok");
     }
     Ok(())
 }

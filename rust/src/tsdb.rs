@@ -110,6 +110,14 @@ impl MetricStore {
             .unwrap_or_default()
     }
 
+    /// Last `n` values of a series, oldest first; empty when the series
+    /// does not exist. The forecaster's de-noised sampling path.
+    pub fn tail(&self, metric: &str, instance: &str, n: usize) -> Vec<f64> {
+        self.series(metric, instance)
+            .map(|s| s.last_n(n))
+            .unwrap_or_default()
+    }
+
     pub fn instances(&self, metric: &str) -> Vec<String> {
         self.series
             .keys()
@@ -199,6 +207,18 @@ mod tests {
         assert!(store.series("n_pending", "replica-0").is_none());
         assert_eq!(store.series("n_running", "replica-1").unwrap().last(), Some(3.0));
         assert_eq!(store.instances("n_running"), vec!["replica-1"]);
+    }
+
+    #[test]
+    fn tail_reads_newest_values_or_nothing() {
+        let mut store = MetricStore::new();
+        for i in 0..10 {
+            store.push("n_arriving", "replica-0", i as f64, i as f64 * 3.0);
+        }
+        assert_eq!(store.tail("n_arriving", "replica-0", 3), vec![21.0, 24.0, 27.0]);
+        assert_eq!(store.tail("n_arriving", "replica-0", 100).len(), 10);
+        assert!(store.tail("n_arriving", "absent", 3).is_empty());
+        assert!(store.tail("missing", "replica-0", 3).is_empty());
     }
 
     #[test]

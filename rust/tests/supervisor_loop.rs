@@ -45,6 +45,7 @@ fn overload_triggers_detector_scale_up_and_ttft_recovers() {
         queue_wait_budget: Duration::from_secs(3600),
         detector_scaling: true,
         reconfig: None,
+        forecast: None,
     };
     let gw = Gateway::start_scalable(cfg, sim_spawner(2, 10), 1, Some(sup)).unwrap();
     let addr = gw.addr_string();

@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# CI bench-trend driver: run the loadgen scenarios against an in-process
+# forecast-aware gateway (enova bench-gateway) on the release build, emit
+# BENCH_gateway.json (p50/p95 latency, shed counts, proactive/reactive
+# scale events per scenario), and fail on >20% p95 regression against the
+# committed baseline when one exists at rust/benches/BENCH_gateway_baseline.json.
+#
+# Expects the release binary to be built already:
+#   cargo build --release --no-default-features  (or with default features)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+BIN=rust/target/release/enova
+OUT="${BENCH_OUT:-BENCH_gateway.json}"
+BASELINE="${BENCH_BASELINE:-rust/benches/BENCH_gateway_baseline.json}"
+DURATION="${BENCH_DURATION_S:-6}"
+
+if [[ ! -x "$BIN" ]]; then
+    echo "release binary missing at $BIN; build it first" >&2
+    exit 2
+fi
+
+"$BIN" bench-gateway --report "$OUT" --baseline "$BASELINE" \
+    --scenarios steady,spike,diurnal --duration-s "$DURATION" \
+    --regression-pct "${BENCH_REGRESSION_PCT:-20}"
+
+echo "bench report at $OUT"

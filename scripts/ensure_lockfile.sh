@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Lockfile guard shared by every CI job.
+#
+# * rust/Cargo.lock committed (the expected state): verify it matches
+#   Cargo.toml with `cargo metadata --locked`, which refuses to update the
+#   lockfile — any drift fails the job loudly instead of being silently
+#   regenerated away.
+# * rust/Cargo.lock absent (a fresh environment before the lockfile has
+#   been committed): generate it so this run is still pinned and cache
+#   keys stay stable, and warn that it must be committed. The tier1-sim
+#   job uploads the generated file as an artifact so committing it is a
+#   copy, not a toolchain hunt.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+if [[ -f Cargo.lock ]]; then
+    echo "==> Cargo.lock present; verifying no drift against Cargo.toml (--locked)"
+    if ! cargo metadata --locked --format-version 1 > /dev/null; then
+        echo "::error::rust/Cargo.lock is out of date with Cargo.toml." \
+             "Run 'cargo generate-lockfile' in rust/ and commit the result." >&2
+        exit 1
+    fi
+else
+    echo "::warning::rust/Cargo.lock is missing — generating for this run." \
+         "Commit rust/Cargo.lock so every job runs --locked against a pinned graph."
+    cargo generate-lockfile
+fi

@@ -1,9 +1,12 @@
 #!/usr/bin/env bash
 # CI gateway smoke: boot `enova serve-http` on the deterministic sim
-# engine, drive a short closed-loop burst with the built-in loadgen, and
-# fail on any transport error or non-2xx response (incl. 503) — a gateway
-# at idle load must serve everything. Writes the loadgen report JSON
-# (uploaded as a CI artifact).
+# engine with the forecast-aware supervisor on, drive load, and fail on
+# any transport error or non-2xx response (incl. 503) — a gateway at this
+# load must serve everything. Writes the loadgen report JSON (uploaded as
+# a CI artifact).
+#
+# SMOKE_SCENARIO selects an open-loop scenario (steady|diurnal|spike|ramp|
+# mixture, the CI matrix); unset, the legacy closed-loop burst runs.
 #
 # Expects the release binary to be built already:
 #   cargo build --release --no-default-features  (or with default features)
@@ -12,14 +15,17 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 BIN=rust/target/release/enova
 PORT="${SMOKE_PORT:-18431}"
-REPORT="${SMOKE_REPORT:-loadgen-report.json}"
+SCENARIO="${SMOKE_SCENARIO:-}"
+REPORT="${SMOKE_REPORT:-loadgen-report${SCENARIO:+-$SCENARIO}.json}"
 
 if [[ ! -x "$BIN" ]]; then
     echo "release binary missing at $BIN; build it first" >&2
     exit 2
 fi
 
-"$BIN" serve-http --engine sim --port "$PORT" --replicas 2 --warm-pool 1 &
+"$BIN" serve-http --engine sim --port "$PORT" --replicas 2 --warm-pool 1 \
+    --autoscale --forecast --max-replicas 3 \
+    --scale-interval-ms 200 --forecast-horizon-ms 2000 &
 SERVER=$!
 trap 'kill "$SERVER" 2>/dev/null || true' EXIT
 
@@ -37,10 +43,21 @@ if [[ "$READY" != "1" ]]; then
     exit 1
 fi
 
-"$BIN" loadgen --addr "127.0.0.1:$PORT" --concurrency 8 --requests 5 \
-    --max-tokens 8 --strict --report "$REPORT"
+if [[ -n "$SCENARIO" ]]; then
+    "$BIN" loadgen --addr "127.0.0.1:$PORT" --scenario "$SCENARIO" \
+        --duration-s 6 --base-rps 2 --peak-rps 10 --seed 7 --workers 16 \
+        --max-tokens 8 --strict --report "$REPORT"
+else
+    "$BIN" loadgen --addr "127.0.0.1:$PORT" --concurrency 8 --requests 5 \
+        --max-tokens 8 --strict --report "$REPORT"
+fi
 
 echo "==> smoke scrape sanity"
-curl -fsS "http://127.0.0.1:$PORT/metrics" | grep -c '^enova_' >/dev/null
+SCRAPE=$(curl -fsS "http://127.0.0.1:$PORT/metrics")
+echo "$SCRAPE" | grep -c '^enova_' >/dev/null
+# the forecast surface is live on the scrape
+echo "$SCRAPE" | grep -q '^enova_supervisor_forecast_enabled 1'
+echo "$SCRAPE" | grep -q '^enova_supervisor_forecast_rps'
+echo "$SCRAPE" | grep -q '^enova_supervisor_scale_origin_total{origin="proactive"}'
 
 echo "gateway smoke OK; report at $REPORT"

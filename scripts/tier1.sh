@@ -7,7 +7,8 @@
 #                          the CI `tier1-sim` job runs on stock runners.
 set -euo pipefail
 
-cd "$(dirname "$0")/../rust"
+SCRIPT_DIR="$(cd "$(dirname "$0")" && pwd)"
+cd "$SCRIPT_DIR/../rust"
 
 NO_FMT=0
 FEATURES=()
@@ -19,13 +20,11 @@ for arg in "$@"; do
     esac
 done
 
-# Reproducible builds: pin the dependency graph and refuse drift. The
-# lockfile should be committed; when absent (first run in a fresh
-# environment), generate and keep it so CI caching keys stay stable.
-if [[ ! -f Cargo.lock ]]; then
-    echo "==> Cargo.lock missing; generating (commit rust/Cargo.lock to pin CI)"
-    cargo generate-lockfile
-fi
+# Reproducible builds: pin the dependency graph and refuse drift. A
+# committed lockfile that drifted from Cargo.toml fails here; when absent
+# (first run in a fresh environment), the guard generates one and keeps it
+# so CI caching keys stay stable — commit rust/Cargo.lock to pin CI.
+bash "$SCRIPT_DIR/ensure_lockfile.sh"
 
 echo "==> cargo build --release --locked"
 cargo build --release --locked ${FEATURES[@]+"${FEATURES[@]}"}
