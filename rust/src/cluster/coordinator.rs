@@ -1,0 +1,1445 @@
+//! The cluster coordinator: the ingress owner of the distributed plane
+//! (`enova serve-http --cluster`). Clients speak to it exactly as they
+//! would to a single-node gateway — same OpenAI endpoints, same SSE wire
+//! format, same admission 429s — and it places every request on a node
+//! via node-aware weighted least-loaded routing, retrying on another node
+//! when the chosen one dies or sheds, so a node failure is a routing
+//! event rather than an error budget event.
+//!
+//! Three background loops:
+//!
+//! * **heartbeat** — polls every registered node's `/cluster/status`,
+//!   flips health after consecutive misses, and rebuilds the node router
+//!   (weights ∝ live replicas) on every sweep.
+//! * **supervisor** — the single-node monitor → detect → act loop run
+//!   cluster-wide: a [`ZscoreDetector`] over cluster-mean Table II rows,
+//!   the queue-wait guard, and the forecast planner
+//!   ([`crate::forecast::replicas_for_cluster_rate`] over per-node
+//!   replica capacities). Decisions become *placements*: which node gets
+//!   the next replica is [`super::placement`]'s bin-packing +
+//!   anti-affinity call; drains pick the most-fragmented node.
+//!   A dead node's replicas are backfilled on survivors — the supervisor
+//!   tracks the replica count it wants, not where it happens to live.
+//! * **HTTP workers** — the same accept/worker pattern as the gateway.
+
+use super::metrics::{render_prometheus, ClusterMetrics, NodeSample};
+use super::placement;
+use super::proto::{NodeAnnounce, NodeStatus};
+use crate::deployer::NodeInventory;
+use crate::detect::{ScaleDirection, ZscoreDetector};
+use crate::forecast::{replicas_for_cluster_rate, ForecastConfig, Forecaster};
+use crate::gateway::admission::{AdmissionGate, TokenBucket};
+use crate::gateway::http;
+use crate::gateway::loadgen::{self, read_chunk, read_response_head};
+use crate::gateway::openai;
+use crate::gateway::sse::{write_sse_head, ChunkedWriter};
+use crate::gateway::supervisor::{ForecastPolicy, Streaks, Trigger};
+use crate::metrics::Frame;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Largest upstream response body the proxy will buffer (unary paths;
+/// streams are relayed chunk-by-chunk and never buffered).
+const MAX_PROXY_BODY: usize = 16 * 1024 * 1024;
+/// Timeout on one heartbeat poll.
+const HEARTBEAT_RPC_TIMEOUT: Duration = Duration::from_secs(2);
+/// Timeout on one scale RPC — bounded by the node's cold engine init.
+const SCALE_RPC_TIMEOUT: Duration = Duration::from_secs(310);
+/// Minimum per-replica capacity evidence (requests/second) before the
+/// forecast planner converts predictions into placements — the same floor
+/// the single-node planner applies.
+const MIN_CAPACITY_EVIDENCE: f64 = 0.05;
+
+/// Cluster-wide scaling policy: the [`crate::gateway::supervisor`] knobs,
+/// re-scoped from one process's replicas to the fleet.
+#[derive(Debug, Clone)]
+pub struct ClusterPolicy {
+    pub sample_interval: Duration,
+    pub calib_samples: usize,
+    pub patience: usize,
+    pub cooldown: Duration,
+    /// cluster-wide replica floor/ceiling (nodes also enforce their own)
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    pub queue_wait_budget: Duration,
+    pub detector_scaling: bool,
+    pub forecast: Option<ForecastPolicy>,
+}
+
+impl Default for ClusterPolicy {
+    fn default() -> Self {
+        ClusterPolicy {
+            sample_interval: Duration::from_secs(1),
+            calib_samples: 30,
+            patience: 3,
+            cooldown: Duration::from_secs(30),
+            min_replicas: 1,
+            max_replicas: 8,
+            queue_wait_budget: Duration::from_millis(500),
+            detector_scaling: false,
+            forecast: None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub host: String,
+    /// 0 = ephemeral (tests)
+    pub port: u16,
+    pub http_workers: usize,
+    pub max_body_bytes: usize,
+    /// admission bound on in-flight proxied requests (429 beyond)
+    pub max_pending: usize,
+    /// token-bucket refill, requests/second; 0 disables rate limiting
+    pub rate_limit: f64,
+    pub rate_burst: usize,
+    pub heartbeat_interval: Duration,
+    /// consecutive missed heartbeats before a node is declared dead
+    pub node_timeout_beats: u32,
+    /// per-request proxy deadline (per attempt)
+    pub request_timeout: Duration,
+    /// distinct nodes tried per request before answering 503
+    pub dispatch_attempts: usize,
+    pub policy: ClusterPolicy,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            host: "127.0.0.1".into(),
+            port: 0,
+            http_workers: 64,
+            max_body_bytes: 1024 * 1024,
+            max_pending: 1024,
+            rate_limit: 0.0,
+            rate_burst: 64,
+            heartbeat_interval: Duration::from_millis(500),
+            node_timeout_beats: 3,
+            request_timeout: Duration::from_secs(120),
+            dispatch_attempts: 3,
+            policy: ClusterPolicy::default(),
+        }
+    }
+}
+
+/// One executed placement (scale-up) or drain (scale-down).
+#[derive(Debug, Clone)]
+pub struct PlacementEvent {
+    /// seconds since coordinator start
+    pub at: f64,
+    pub node_id: String,
+    /// spawned/promoted replica id for scale-ups, retired id for drains
+    pub replica_id: u64,
+    /// metric label: `forecast`, `detector`, `queue_wait`, `backfill`
+    pub reason: &'static str,
+    pub up: bool,
+}
+
+/// Cheap copy of the cluster supervisor's state for `/metrics` and tests.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterSupervisorSnapshot {
+    pub enabled: bool,
+    pub calibrated: bool,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub target_replicas: usize,
+    pub forecast_enabled: bool,
+    pub last_forecast: f64,
+    pub forecast_error: f64,
+    pub forecast_degraded: bool,
+    pub events: usize,
+}
+
+#[derive(Debug, Default)]
+struct ClusterSupervisorStatus {
+    enabled: bool,
+    calibrated: bool,
+    scale_ups: u64,
+    scale_downs: u64,
+    forecast_enabled: bool,
+    last_forecast: f64,
+    forecast_error: f64,
+    forecast_degraded: bool,
+    events: Vec<PlacementEvent>,
+}
+
+/// One registered node as the coordinator tracks it.
+#[derive(Debug, Clone)]
+struct NodeEntry {
+    announce: NodeAnnounce,
+    status: Option<NodeStatus>,
+    healthy: bool,
+    failures: u32,
+}
+
+struct CoordinatorState {
+    cfg: CoordinatorConfig,
+    nodes: RwLock<BTreeMap<String, NodeEntry>>,
+    router: RwLock<crate::router::NodeRouter>,
+    gate: Arc<AdmissionGate>,
+    bucket: Option<Mutex<TokenBucket>>,
+    metrics: ClusterMetrics,
+    supervisor: Mutex<ClusterSupervisorStatus>,
+    /// replica count the supervisor wants cluster-wide; node death leaves
+    /// it unchanged, which is exactly what makes backfill fire. 0 = not
+    /// yet initialized from the first observation.
+    target_replicas: AtomicUsize,
+    started: Instant,
+    stop: AtomicBool,
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    pub addr: SocketAddr,
+    state: Arc<CoordinatorState>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+
+        let supervisor_enabled = cfg.policy.detector_scaling || cfg.policy.forecast.is_some();
+        let state = Arc::new(CoordinatorState {
+            nodes: RwLock::new(BTreeMap::new()),
+            router: RwLock::new(crate::router::NodeRouter::new()),
+            gate: AdmissionGate::new(cfg.max_pending),
+            bucket: (cfg.rate_limit > 0.0)
+                .then(|| Mutex::new(TokenBucket::new(cfg.rate_limit, cfg.rate_burst))),
+            metrics: ClusterMetrics::new(),
+            supervisor: Mutex::new(ClusterSupervisorStatus {
+                enabled: supervisor_enabled,
+                forecast_enabled: cfg.policy.forecast.is_some(),
+                ..ClusterSupervisorStatus::default()
+            }),
+            target_replicas: AtomicUsize::new(0),
+            started: Instant::now(),
+            stop: AtomicBool::new(false),
+            cfg,
+        });
+
+        let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut threads = Vec::new();
+        {
+            let state = Arc::clone(&state);
+            threads.push(std::thread::spawn(move || {
+                accept_loop(listener, conn_tx, &state);
+            }));
+        }
+        for _ in 0..state.cfg.http_workers.max(1) {
+            let state = Arc::clone(&state);
+            let conn_rx = Arc::clone(&conn_rx);
+            threads.push(std::thread::spawn(move || loop {
+                if state.stop.load(Ordering::Acquire) {
+                    break;
+                }
+                let next = conn_rx
+                    .lock()
+                    .unwrap()
+                    .recv_timeout(Duration::from_millis(100));
+                match next {
+                    Ok(stream) => handle_connection(stream, &state),
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }));
+        }
+        {
+            let state = Arc::clone(&state);
+            threads.push(std::thread::spawn(move || heartbeat_loop(&state)));
+        }
+        {
+            let state = Arc::clone(&state);
+            threads.push(std::thread::spawn(move || supervisor_loop(&state)));
+        }
+
+        crate::info!(
+            "cluster",
+            "coordinator listening on http://{addr} ({} http workers, heartbeat {:?}, \
+             supervisor {})",
+            state.cfg.http_workers,
+            state.cfg.heartbeat_interval,
+            if supervisor_enabled { "on" } else { "backfill-only" }
+        );
+        Ok(Coordinator {
+            addr,
+            state,
+            threads,
+        })
+    }
+
+    pub fn addr_string(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// Per-node snapshot rows (the `/metrics` view).
+    pub fn nodes(&self) -> Vec<NodeSample> {
+        node_samples(&self.state)
+    }
+
+    pub fn healthy_nodes(&self) -> usize {
+        self.nodes().iter().filter(|n| n.healthy).count()
+    }
+
+    /// Live replicas across healthy nodes.
+    pub fn total_replicas(&self) -> usize {
+        self.nodes()
+            .iter()
+            .filter(|n| n.healthy)
+            .map(|n| n.live_replicas)
+            .sum()
+    }
+
+    /// Live replicas the coordinator believes one node has.
+    pub fn replicas_on(&self, node_id: &str) -> usize {
+        self.nodes()
+            .iter()
+            .find(|n| n.node_id == node_id)
+            .map(|n| n.live_replicas)
+            .unwrap_or(0)
+    }
+
+    /// Placements and drains the cluster supervisor executed, in order.
+    pub fn placements(&self) -> Vec<PlacementEvent> {
+        self.state.supervisor.lock().unwrap().events.clone()
+    }
+
+    pub fn supervisor_snapshot(&self) -> ClusterSupervisorSnapshot {
+        supervisor_snapshot(&self.state)
+    }
+
+    /// Total scale-up placements by metric reason (test helper).
+    pub fn placements_for(&self, reason: &str) -> u64 {
+        self.state.metrics.placements_for(reason)
+    }
+
+    /// Block until `n` healthy, ready nodes are registered (true) or the
+    /// timeout elapses (false).
+    pub fn wait_for_nodes(&self, n: usize, timeout: Duration) -> bool {
+        self.wait(timeout, || {
+            self.nodes()
+                .iter()
+                .filter(|s| s.healthy && s.ready && s.live_replicas > 0)
+                .count()
+                >= n
+        })
+    }
+
+    /// Block until the healthy fleet holds at least `n` live replicas.
+    pub fn wait_for_replicas(&self, n: usize, timeout: Duration) -> bool {
+        self.wait(timeout, || self.total_replicas() >= n)
+    }
+
+    fn wait(&self, timeout: Duration, ready: impl Fn() -> bool) -> bool {
+        let deadline = Instant::now() + timeout;
+        while Instant::now() < deadline {
+            if ready() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        ready()
+    }
+
+    /// Stop all loops and join the threads. Nodes are left running — the
+    /// coordinator owns routing, not node lifecycles.
+    pub fn shutdown(self) {
+        self.state.stop.store(true, Ordering::Release);
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+
+    /// Block forever serving (CLI path).
+    pub fn serve_forever(self) {
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+fn supervisor_snapshot(state: &CoordinatorState) -> ClusterSupervisorSnapshot {
+    let sup = state.supervisor.lock().unwrap();
+    ClusterSupervisorSnapshot {
+        enabled: sup.enabled,
+        calibrated: sup.calibrated,
+        scale_ups: sup.scale_ups,
+        scale_downs: sup.scale_downs,
+        target_replicas: state.target_replicas.load(Ordering::Acquire),
+        forecast_enabled: sup.forecast_enabled,
+        last_forecast: sup.last_forecast,
+        forecast_error: sup.forecast_error,
+        forecast_degraded: sup.forecast_degraded,
+        events: sup.events.len(),
+    }
+}
+
+fn node_samples(state: &CoordinatorState) -> Vec<NodeSample> {
+    let router = state.router.read().unwrap();
+    state
+        .nodes
+        .read()
+        .unwrap()
+        .values()
+        .map(|e| NodeSample {
+            node_id: e.announce.node_id.clone(),
+            healthy: e.healthy,
+            ready: e.status.as_ref().map(|s| s.ready).unwrap_or(false),
+            live_replicas: e.status.as_ref().map(|s| s.live_replicas).unwrap_or(0),
+            warm_replicas: e.status.as_ref().map(|s| s.warm_replicas).unwrap_or(0),
+            gpu_memory_total: e.announce.gpu_memory_total,
+            gpu_memory_free: e
+                .status
+                .as_ref()
+                .map(|s| s.gpu_memory_free)
+                .unwrap_or(e.announce.gpu_memory_total),
+            arrival_rps: e.status.as_ref().map(|s| s.arrival_rps).unwrap_or(0.0),
+            queue_wait: e.status.as_ref().map(|s| s.queue_wait).unwrap_or(0.0),
+            inflight: router.inflight_of(&e.announce.node_id),
+        })
+        .collect()
+}
+
+/// Rebuild the node router from the registry: healthy nodes, weighted by
+/// live replica count (a node whose status is still unknown gets weight 1
+/// — it just announced, so its gateway is up).
+fn rebuild_router(state: &CoordinatorState) {
+    let weights: Vec<(String, f64)> = state
+        .nodes
+        .read()
+        .unwrap()
+        .values()
+        .filter(|e| e.healthy)
+        .filter(|e| e.status.as_ref().map(|s| s.live_replicas > 0).unwrap_or(true))
+        .map(|e| {
+            let w = e
+                .status
+                .as_ref()
+                .map(|s| s.live_replicas.max(1) as f64)
+                .unwrap_or(1.0);
+            (e.announce.node_id.clone(), w)
+        })
+        .collect();
+    state.router.write().unwrap().set_nodes(&weights);
+}
+
+/// A proxy attempt on one node failed at the transport layer: count it,
+/// and after `node_timeout_beats` consecutive failures deroute the node
+/// without waiting for the heartbeat sweep to notice.
+fn note_node_error(state: &CoordinatorState, node_id: &str) {
+    let mut died = false;
+    {
+        let mut nodes = state.nodes.write().unwrap();
+        if let Some(e) = nodes.get_mut(node_id) {
+            e.failures += 1;
+            if e.healthy && e.failures >= state.cfg.node_timeout_beats {
+                e.healthy = false;
+                died = true;
+            }
+        }
+    }
+    if died {
+        state.metrics.note_node_death();
+        crate::warn!("cluster", "node {node_id} declared dead after repeated failures");
+        rebuild_router(state);
+    }
+}
+
+fn accept_loop(listener: TcpListener, conn_tx: Sender<TcpStream>, state: &CoordinatorState) {
+    loop {
+        if state.stop.load(Ordering::Acquire) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_nodelay(true);
+                let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+                let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+                if conn_tx.send(stream).is_err() {
+                    break;
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, state: &Arc<CoordinatorState>) {
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    loop {
+        if state.stop.load(Ordering::Acquire) {
+            break;
+        }
+        let req = match http::read_request(&mut reader, state.cfg.max_body_bytes) {
+            Ok(Some(r)) => r,
+            Ok(None) => break,
+            Err(e) => {
+                let body =
+                    openai::to_wire(&openai::error_body("invalid_request_error", &e.message));
+                let _ = http::Response::json(e.status, body).write_to(&mut stream, false);
+                break;
+            }
+        };
+        let keep_alive = req.keep_alive();
+        if route(&req, &mut stream, state).is_err() {
+            break; // client went away mid-response
+        }
+        if !keep_alive {
+            break;
+        }
+    }
+}
+
+/// Write the response and record request metrics.
+fn finish(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &CoordinatorState,
+    endpoint: &str,
+    resp: http::Response,
+) -> std::io::Result<()> {
+    state.metrics.observe(endpoint, resp.status);
+    resp.write_to(stream, req.keep_alive())
+}
+
+fn route(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &Arc<CoordinatorState>,
+) -> std::io::Result<()> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/completions" | "/v1/chat/completions") => serve_proxy(req, stream, state),
+        ("POST", "/cluster/join") => cluster_join(req, stream, state),
+        ("GET", "/cluster/nodes") => {
+            let rows: Vec<String> = node_samples(state)
+                .iter()
+                .map(|n| {
+                    format!(
+                        "{{\"node_id\":{},\"healthy\":{},\"ready\":{},\"live_replicas\":{}}}",
+                        Json::Str(n.node_id.clone()).to_string_compact(),
+                        n.healthy,
+                        n.ready,
+                        n.live_replicas
+                    )
+                })
+                .collect();
+            let body = format!("{{\"nodes\":[{}]}}", rows.join(","));
+            finish(req, stream, state, "/cluster/nodes", http::Response::json(200, body))
+        }
+        ("GET", "/metrics") => {
+            let nodes = node_samples(state);
+            let sup = supervisor_snapshot(state);
+            let body = render_prometheus(
+                &state.metrics,
+                &nodes,
+                &sup,
+                state.gate.inflight(),
+                state.started.elapsed().as_secs_f64(),
+            );
+            finish(req, stream, state, "/metrics", http::Response::prometheus(body))
+        }
+        ("GET", "/healthz") => {
+            let nodes = state.nodes.read().unwrap().len();
+            let body = format!(
+                "{{\"status\":\"ok\",\"role\":\"coordinator\",\"uptime_seconds\":{:.3},\
+                 \"nodes\":{nodes}}}",
+                state.started.elapsed().as_secs_f64()
+            );
+            finish(req, stream, state, "/healthz", http::Response::json(200, body))
+        }
+        ("GET", "/ready") => {
+            let serving = node_samples(state)
+                .iter()
+                .filter(|n| n.healthy && n.ready && n.live_replicas > 0)
+                .count();
+            let status = if serving > 0 { 200 } else { 503 };
+            let body = format!("{{\"ready\":{},\"serving_nodes\":{serving}}}", serving > 0);
+            finish(req, stream, state, "/ready", http::Response::json(status, body))
+        }
+        (_, "/v1/completions" | "/v1/chat/completions" | "/cluster/join" | "/cluster/nodes"
+        | "/metrics" | "/healthz" | "/ready") => {
+            let body = openai::to_wire(&openai::error_body(
+                "invalid_request_error",
+                &format!("method {} not allowed on {}", req.method, req.path),
+            ));
+            finish(req, stream, state, "other", http::Response::json(405, body))
+        }
+        _ => {
+            let body = openai::to_wire(&openai::error_body(
+                "invalid_request_error",
+                &format!("unknown path {}", req.path),
+            ));
+            finish(req, stream, state, "other", http::Response::json(404, body))
+        }
+    }
+}
+
+fn cluster_join(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &Arc<CoordinatorState>,
+) -> std::io::Result<()> {
+    let bad = |msg: &str| {
+        http::Response::json(
+            400,
+            openai::to_wire(&openai::error_body("invalid_request_error", msg)),
+        )
+    };
+    let body = match req.body_str() {
+        Ok(b) => b,
+        Err(e) => return finish(req, stream, state, "/cluster/join", bad(&e.message)),
+    };
+    let json = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => {
+            return finish(req, stream, state, "/cluster/join", bad(&format!("invalid JSON: {e}")))
+        }
+    };
+    let announce = match NodeAnnounce::from_json(&json) {
+        Ok(a) => a,
+        Err(e) => return finish(req, stream, state, "/cluster/join", bad(&e)),
+    };
+    let (fresh, moved) = {
+        let mut nodes = state.nodes.write().unwrap();
+        let prior = nodes.get(&announce.node_id);
+        let fresh = prior.is_none();
+        let moved = prior.map(|e| e.announce.addr != announce.addr).unwrap_or(false);
+        // a re-announce from the SAME address is bookkeeping, not health
+        // evidence: an unhealthy node's outbound announces must not
+        // override missed heartbeats — only a successful status poll (or a
+        // restart at a new address) revives it. Status survives an
+        // unchanged address; a node at a new address restarted, and its
+        // old replica counts are history.
+        let (status, healthy, failures) = match prior {
+            Some(e) if !moved => (e.status.clone(), e.healthy, e.failures),
+            _ => (None, true, 0),
+        };
+        nodes.insert(
+            announce.node_id.clone(),
+            NodeEntry {
+                announce: announce.clone(),
+                status,
+                healthy,
+                failures,
+            },
+        );
+        (fresh, moved)
+    };
+    if fresh || moved {
+        crate::info!(
+            "cluster",
+            "node {} {} at {}",
+            announce.node_id,
+            if fresh { "joined" } else { "re-announced from a new address" },
+            announce.addr
+        );
+        rebuild_router(state);
+    }
+    let nodes = state.nodes.read().unwrap().len();
+    let body = format!("{{\"ok\":true,\"nodes\":{nodes}}}");
+    finish(req, stream, state, "/cluster/join", http::Response::json(200, body))
+}
+
+/// What one proxy attempt produced.
+enum Attempt {
+    /// a response (any status) was fully delivered to the client
+    Done(u16),
+    /// writing to the *client* failed — abort the connection
+    ClientGone(std::io::Error),
+    /// the node failed before anything was committed to the client:
+    /// transport error, or a retryable shed/overload status
+    Retry { transport: bool, status: Option<u16> },
+}
+
+/// Statuses that are safe and useful to re-dispatch: the node refused or
+/// could not serve (shed, shutting down, overloaded, engine failure) and
+/// no completion was produced, so another node can take the request.
+fn retryable_status(status: u16) -> bool {
+    matches!(status, 429 | 500 | 502 | 503 | 504)
+}
+
+fn serve_proxy(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &Arc<CoordinatorState>,
+) -> std::io::Result<()> {
+    let endpoint = req.path.clone();
+    let bad = |msg: &str| {
+        http::Response::json(
+            400,
+            openai::to_wire(&openai::error_body("invalid_request_error", msg)),
+        )
+    };
+    let body = match req.body_str() {
+        Ok(b) => b.to_string(),
+        Err(e) => return finish(req, stream, state, &endpoint, bad(&e.message)),
+    };
+    let json = match Json::parse(&body) {
+        Ok(j) => j,
+        Err(e) => return finish(req, stream, state, &endpoint, bad(&format!("invalid JSON: {e}"))),
+    };
+    let stream_mode = json.get("stream").and_then(Json::as_bool).unwrap_or(false);
+
+    // admission control at the ingress owner: rate, then bounded in-flight
+    if let Some(bucket) = &state.bucket {
+        if !bucket.lock().unwrap().try_take() {
+            state.metrics.note_rate_limited();
+            let resp = http::Response::json(
+                429,
+                openai::to_wire(&openai::error_body(
+                    "rate_limit_exceeded",
+                    "request rate over the configured limit; retry later",
+                )),
+            )
+            .with_header("Retry-After", "1");
+            return finish(req, stream, state, &endpoint, resp);
+        }
+    }
+    let Some(_permit) = AdmissionGate::try_acquire(&state.gate) else {
+        state.metrics.note_queue_full();
+        let resp = http::Response::json(
+            429,
+            openai::to_wire(&openai::error_body(
+                "server_overloaded",
+                &format!(
+                    "admission queue full ({} in flight); retry later",
+                    state.gate.capacity()
+                ),
+            )),
+        )
+        .with_header("Retry-After", "1");
+        return finish(req, stream, state, &endpoint, resp);
+    };
+
+    let mut excluded: Vec<String> = Vec::new();
+    let mut last_failure = String::from("no serving nodes registered");
+    for attempt in 0..state.cfg.dispatch_attempts.max(1) {
+        let picked = {
+            let router = state.router.read().unwrap();
+            if excluded.is_empty() {
+                router.dispatch()
+            } else {
+                router.dispatch_excluding(&excluded)
+            }
+        };
+        let Some((node_id, handle)) = picked else {
+            break;
+        };
+        let addr = state
+            .nodes
+            .read()
+            .unwrap()
+            .get(&node_id)
+            .map(|e| e.announce.addr.clone());
+        let Some(addr) = addr else {
+            handle.complete();
+            excluded.push(node_id);
+            continue;
+        };
+        if attempt > 0 {
+            state.metrics.note_proxy_retry();
+        }
+        let outcome = proxy_attempt(state, &addr, &endpoint, &body, stream_mode, stream);
+        handle.complete();
+        match outcome {
+            Attempt::Done(status) => {
+                state.metrics.observe(&endpoint, status);
+                return Ok(());
+            }
+            Attempt::ClientGone(e) => {
+                state.metrics.observe(&endpoint, 499);
+                return Err(e);
+            }
+            Attempt::Retry { transport, status } => {
+                last_failure = match status {
+                    Some(code) => format!("node {node_id} answered {code}"),
+                    None => format!("node {node_id} transport failure"),
+                };
+                if transport {
+                    note_node_error(state, &node_id);
+                }
+                excluded.push(node_id);
+            }
+        }
+    }
+    let resp = http::Response::json(
+        503,
+        openai::to_wire(&openai::error_body(
+            "service_unavailable",
+            &format!("no node could serve the request: {last_failure}"),
+        )),
+    )
+    .with_header("Retry-After", "1");
+    finish(req, stream, state, &endpoint, resp)
+}
+
+/// Run one exchange against `addr`, relaying the outcome to the client
+/// per the atomicity rules: unary responses are buffered (so nothing
+/// reaches the client unless the node answered), SSE streams are relayed
+/// chunk-by-chunk and only become non-retryable once the first chunk has
+/// been forwarded.
+fn proxy_attempt(
+    state: &CoordinatorState,
+    addr: &str,
+    path: &str,
+    body: &str,
+    stream_mode: bool,
+    client: &mut TcpStream,
+) -> Attempt {
+    let upstream = match open_upstream(addr, state.cfg.request_timeout) {
+        Ok(s) => s,
+        Err(_) => return Attempt::Retry { transport: true, status: None },
+    };
+    {
+        let mut w = &upstream;
+        let head = format!(
+            "POST {path} HTTP/1.1\r\nHost: {addr}\r\nAccept: */*\r\nConnection: close\r\n\
+             Content-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        );
+        if w.write_all(head.as_bytes())
+            .and_then(|_| w.write_all(body.as_bytes()))
+            .and_then(|_| w.flush())
+            .is_err()
+        {
+            return Attempt::Retry { transport: true, status: None };
+        }
+    }
+    let mut reader = BufReader::new(upstream);
+    let (status, headers) = match read_response_head(&mut reader) {
+        Ok(h) => h,
+        Err(_) => return Attempt::Retry { transport: true, status: None },
+    };
+
+    let is_sse = headers
+        .get("content-type")
+        .map(|v| v.starts_with("text/event-stream"))
+        .unwrap_or(false);
+    if stream_mode && status == 200 && is_sse {
+        return relay_sse(state, &mut reader, client);
+    }
+
+    // unary (or error) path: buffer the whole upstream body first, so a
+    // node that dies mid-response never half-commits the client
+    let upstream_body = match read_framed_body(&mut reader, &headers) {
+        Ok(b) => b,
+        Err(_) => return Attempt::Retry { transport: true, status: None },
+    };
+    if retryable_status(status) {
+        return Attempt::Retry { transport: false, status: Some(status) };
+    }
+    let resp = http::Response::json(status, String::from_utf8_lossy(&upstream_body).into_owned());
+    // the client asked for keep-alive handling at the outer layer; the
+    // proxy always answers framed bodies, so keep-alive is safe
+    match resp.write_to(client, true) {
+        Ok(()) => Attempt::Done(status),
+        Err(e) => Attempt::ClientGone(e),
+    }
+}
+
+/// Relay an SSE stream chunk-by-chunk. The client's SSE head is written
+/// lazily on the first relayed chunk: until then an upstream death simply
+/// re-dispatches. After it, an upstream death terminates the stream with
+/// a `service_unavailable` event and a clean chunked close — the same
+/// shape a single-node gateway gives a mid-stream engine failure.
+fn relay_sse<R: BufRead>(
+    state: &CoordinatorState,
+    upstream: &mut R,
+    client: &mut TcpStream,
+) -> Attempt {
+    let mut started = false;
+    let mut relayed = 0usize;
+    let mut chunks = ChunkedWriter::new(client);
+    loop {
+        match read_chunk(upstream) {
+            Ok(Some(data)) => {
+                if !started {
+                    // `chunks` borrows the client, so the head goes
+                    // through the writer's inner reference
+                    if let Err(e) = write_sse_head_via(&mut chunks) {
+                        return Attempt::ClientGone(e);
+                    }
+                    started = true;
+                }
+                if let Err(e) = chunks.write_chunk(&data) {
+                    return Attempt::ClientGone(e);
+                }
+                relayed += 1;
+            }
+            Ok(None) => {
+                if !started {
+                    if let Err(e) = write_sse_head_via(&mut chunks) {
+                        return Attempt::ClientGone(e);
+                    }
+                }
+                state.metrics.add_sse_chunks(relayed);
+                return match chunks.finish() {
+                    Ok(()) => Attempt::Done(200),
+                    Err(e) => Attempt::ClientGone(e),
+                };
+            }
+            Err(_) => {
+                if !started {
+                    // nothing committed to the client yet: safe to retry
+                    return Attempt::Retry { transport: true, status: None };
+                }
+                state.metrics.add_sse_chunks(relayed);
+                let event = format!(
+                    "data: {}\n\n",
+                    openai::to_wire(&openai::error_body(
+                        "service_unavailable",
+                        "serving node went away mid-stream",
+                    ))
+                );
+                let _ = chunks.write_chunk(event.as_bytes());
+                return match chunks.finish() {
+                    Ok(()) => Attempt::Done(200),
+                    Err(e) => Attempt::ClientGone(e),
+                };
+            }
+        }
+    }
+}
+
+/// Write the SSE response head through the chunked writer's underlying
+/// stream (the head itself is not chunk-framed).
+fn write_sse_head_via(chunks: &mut ChunkedWriter<&mut TcpStream>) -> std::io::Result<()> {
+    write_sse_head(chunks.inner_mut())
+}
+
+fn open_upstream(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let stream = match addr.parse::<SocketAddr>() {
+        Ok(sa) => TcpStream::connect_timeout(&sa, Duration::from_secs(2))
+            .with_context(|| format!("connect {addr}"))?,
+        Err(_) => TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?,
+    };
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    stream.set_nodelay(true)?;
+    Ok(stream)
+}
+
+fn read_framed_body<R: BufRead>(
+    r: &mut R,
+    headers: &BTreeMap<String, String>,
+) -> Result<Vec<u8>> {
+    if headers
+        .get("transfer-encoding")
+        .map(|v| v.eq_ignore_ascii_case("chunked"))
+        .unwrap_or(false)
+    {
+        let mut body = Vec::new();
+        while let Some(chunk) = read_chunk(r)? {
+            body.extend_from_slice(&chunk);
+            if body.len() > MAX_PROXY_BODY {
+                bail!("upstream body over the proxy limit");
+            }
+        }
+        return Ok(body);
+    }
+    if let Some(len) = headers.get("content-length") {
+        let len: usize = len.parse().context("bad upstream Content-Length")?;
+        if len > MAX_PROXY_BODY {
+            bail!("upstream body of {len} bytes over the proxy limit");
+        }
+        let mut buf = vec![0u8; len];
+        r.read_exact(&mut buf)?;
+        return Ok(buf);
+    }
+    let mut buf = Vec::new();
+    r.take(MAX_PROXY_BODY as u64 + 1).read_to_end(&mut buf)?;
+    if buf.len() > MAX_PROXY_BODY {
+        bail!("unframed upstream body over the proxy limit");
+    }
+    Ok(buf)
+}
+
+/// Poll every registered node's `/cluster/status`, flip health on
+/// consecutive misses, and rebuild the router each sweep.
+fn heartbeat_loop(state: &Arc<CoordinatorState>) {
+    loop {
+        if sleep_interruptible(state, state.cfg.heartbeat_interval) {
+            break;
+        }
+        let targets: Vec<(String, String)> = state
+            .nodes
+            .read()
+            .unwrap()
+            .values()
+            .map(|e| (e.announce.node_id.clone(), e.announce.addr.clone()))
+            .collect();
+        // poll concurrently: one wedged node (2s RPC timeout) must not
+        // stretch the sweep for the whole fleet and delay dead-node
+        // deroute of the others
+        let polls: Vec<(String, Option<NodeStatus>)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = targets
+                .into_iter()
+                .map(|(node_id, addr)| {
+                    scope.spawn(move || {
+                        let polled = loadgen::request(
+                            &addr,
+                            "GET",
+                            "/cluster/status",
+                            None,
+                            HEARTBEAT_RPC_TIMEOUT,
+                        )
+                        .ok()
+                        .filter(|resp| resp.status == 200)
+                        .and_then(|resp| resp.json().ok())
+                        .and_then(|j| NodeStatus::from_json(&j).ok());
+                        (node_id, polled)
+                    })
+                })
+                .collect();
+            handles.into_iter().filter_map(|h| h.join().ok()).collect()
+        });
+        for (node_id, polled) in polls {
+            let mut died = false;
+            let mut revived = false;
+            {
+                let mut nodes = state.nodes.write().unwrap();
+                let Some(entry) = nodes.get_mut(&node_id) else {
+                    continue;
+                };
+                match polled {
+                    Some(status) if status.node_id == node_id => {
+                        revived = !entry.healthy;
+                        entry.status = Some(status);
+                        entry.healthy = true;
+                        entry.failures = 0;
+                    }
+                    _ => {
+                        entry.failures += 1;
+                        if entry.healthy && entry.failures >= state.cfg.node_timeout_beats {
+                            entry.healthy = false;
+                            died = true;
+                        }
+                    }
+                }
+            }
+            if died {
+                state.metrics.note_node_death();
+                crate::warn!(
+                    "cluster",
+                    "node {node_id} missed {} heartbeats; derouted",
+                    state.cfg.node_timeout_beats
+                );
+            }
+            if revived {
+                crate::info!("cluster", "node {node_id} back from the dead; rerouting");
+            }
+        }
+        rebuild_router(state);
+    }
+}
+
+/// Healthy-node inventories for the placement math.
+fn inventories(state: &CoordinatorState) -> Vec<NodeInventory> {
+    state
+        .nodes
+        .read()
+        .unwrap()
+        .values()
+        .filter(|e| e.healthy)
+        .filter_map(|e| {
+            let status = e.status.as_ref()?;
+            Some(NodeInventory {
+                node_id: e.announce.node_id.clone(),
+                gpu_memory_total: e.announce.gpu_memory_total,
+                gpu_memory_free: status.gpu_memory_free,
+                replica_gpu_memory: e.announce.replica_gpu_memory,
+                live_replicas: status.live_replicas,
+                max_replicas: e.announce.max_replicas,
+            })
+        })
+        .collect()
+}
+
+/// Execute one scale-up placement: choose the node, ask it, and account
+/// optimistically so a second placement in the same heartbeat window sees
+/// the updated fill.
+fn scale_up(state: &Arc<CoordinatorState>, reason: &'static str) -> Result<PlacementEvent> {
+    let invs = inventories(state);
+    let chosen = placement::place_replica(&invs)
+        .ok_or_else(|| anyhow!("no node has room for another replica"))?
+        .node_id
+        .clone();
+    let addr = state
+        .nodes
+        .read()
+        .unwrap()
+        .get(&chosen)
+        .map(|e| e.announce.addr.clone())
+        .ok_or_else(|| anyhow!("node {chosen} vanished mid-placement"))?;
+    let resp = loadgen::request(&addr, "POST", "/cluster/scale-up", Some("{}"), SCALE_RPC_TIMEOUT)
+        .with_context(|| format!("scale-up RPC to {chosen}"))?;
+    if !(200..300).contains(&resp.status) {
+        bail!("node {chosen} refused scale-up with {}: {}", resp.status, resp.body_str());
+    }
+    let replica_id = resp
+        .json()
+        .ok()
+        .and_then(|j| j.get("replica_id").and_then(Json::as_usize))
+        .unwrap_or(0) as u64;
+    {
+        let mut nodes = state.nodes.write().unwrap();
+        if let Some(e) = nodes.get_mut(&chosen) {
+            if let Some(s) = e.status.as_mut() {
+                s.live_replicas += 1;
+                s.gpu_memory_free =
+                    (s.gpu_memory_free - e.announce.replica_gpu_memory).max(0.0);
+            }
+        }
+    }
+    rebuild_router(state);
+    state.metrics.note_placement(reason);
+    let event = PlacementEvent {
+        at: state.started.elapsed().as_secs_f64(),
+        node_id: chosen.clone(),
+        replica_id,
+        reason,
+        up: true,
+    };
+    crate::info!(
+        "cluster",
+        "placed replica {replica_id} on node {chosen} (reason: {reason})"
+    );
+    let mut sup = state.supervisor.lock().unwrap();
+    sup.scale_ups += 1;
+    sup.events.push(event.clone());
+    Ok(event)
+}
+
+/// Execute one scale-down: drain the most-fragmented node's newest
+/// replica.
+fn scale_down(state: &Arc<CoordinatorState>, reason: &'static str) -> Result<PlacementEvent> {
+    let invs = inventories(state);
+    let chosen = placement::drain_node(&invs)
+        .ok_or_else(|| anyhow!("no node can give up a replica"))?
+        .node_id
+        .clone();
+    let addr = state
+        .nodes
+        .read()
+        .unwrap()
+        .get(&chosen)
+        .map(|e| e.announce.addr.clone())
+        .ok_or_else(|| anyhow!("node {chosen} vanished mid-drain"))?;
+    let resp =
+        loadgen::request(&addr, "POST", "/cluster/scale-down", Some("{}"), SCALE_RPC_TIMEOUT)
+            .with_context(|| format!("scale-down RPC to {chosen}"))?;
+    if !(200..300).contains(&resp.status) {
+        bail!("node {chosen} refused scale-down with {}: {}", resp.status, resp.body_str());
+    }
+    let replica_id = resp
+        .json()
+        .ok()
+        .and_then(|j| j.get("retired").and_then(Json::as_usize))
+        .unwrap_or(0) as u64;
+    {
+        let mut nodes = state.nodes.write().unwrap();
+        if let Some(e) = nodes.get_mut(&chosen) {
+            if let Some(s) = e.status.as_mut() {
+                s.live_replicas = s.live_replicas.saturating_sub(1);
+                s.gpu_memory_free = (s.gpu_memory_free + e.announce.replica_gpu_memory)
+                    .min(e.announce.gpu_memory_total);
+            }
+        }
+    }
+    rebuild_router(state);
+    state.metrics.note_retire(reason);
+    let event = PlacementEvent {
+        at: state.started.elapsed().as_secs_f64(),
+        node_id: chosen.clone(),
+        replica_id,
+        reason,
+        up: false,
+    };
+    crate::info!(
+        "cluster",
+        "drained replica {replica_id} from node {chosen} (reason: {reason})"
+    );
+    let mut sup = state.supervisor.lock().unwrap();
+    sup.scale_downs += 1;
+    sup.events.push(event.clone());
+    Ok(event)
+}
+
+/// The cluster-wide supervisor: backfill first (a dead node's replicas
+/// come back on survivors before anything else is considered), then the
+/// forecast planner, then the reactive detector + queue guard.
+fn supervisor_loop(state: &Arc<CoordinatorState>) {
+    let policy = state.cfg.policy.clone();
+    let calib_target = policy.calib_samples.max(20);
+    let mut calib_frames: Vec<Frame> = Vec::new();
+    let mut detector: Option<ZscoreDetector> = None;
+    let mut streaks = Streaks::default();
+    let mut last_action: Option<Instant> = None;
+    let mut last_backfill: Option<Instant> = None;
+    let mut forecaster = policy.forecast.as_ref().map(|p| {
+        Forecaster::new(ForecastConfig {
+            horizon: p.horizon_steps.max(1),
+            season: p.season_steps,
+            ..ForecastConfig::default()
+        })
+    });
+    let mut learned_capacity = 0.0f64;
+
+    loop {
+        if sleep_interruptible(state, policy.sample_interval) {
+            break;
+        }
+        let samples: Vec<NodeSample> = node_samples(state)
+            .into_iter()
+            .filter(|n| n.healthy && n.ready)
+            .collect();
+        let live: usize = samples.iter().map(|n| n.live_replicas).sum();
+        if samples.is_empty() || live == 0 {
+            continue;
+        }
+
+        // the target ratchets up to the observed replica count (nodes may
+        // register after the first tick) and is lowered only by explicit
+        // scale-downs — so a node death leaves it high, which is exactly
+        // the gap backfill closes
+        let mut target = state.target_replicas.load(Ordering::Acquire);
+        let observed = live.clamp(policy.min_replicas, policy.max_replicas);
+        if observed > target {
+            target = observed;
+            state.target_replicas.store(target, Ordering::Release);
+        }
+
+        // backfill: a dead node dropped `live` under what the supervisor
+        // wants. One placement per tick, spaced by two heartbeats so the
+        // optimistic accounting has been confirmed by a real status.
+        if live < target {
+            let spaced = last_backfill
+                .map(|t| t.elapsed() >= state.cfg.heartbeat_interval * 2)
+                .unwrap_or(true);
+            if spaced {
+                match scale_up(state, "backfill") {
+                    Ok(_) => last_backfill = Some(Instant::now()),
+                    Err(e) => crate::warn!("cluster", "backfill placement failed: {e}"),
+                }
+            }
+            continue; // restore capacity before planning on top of it
+        }
+
+        // cluster row: node frames (already per-replica means) weighted by
+        // replica count, plus the summed arrival rate for the forecaster
+        let mut acc = [0.0f64; 8];
+        let mut weight = 0.0f64;
+        let mut queue_wait = 0.0f64;
+        let mut arrival_total = 0.0f64;
+        for n in &samples {
+            arrival_total += n.arrival_rps;
+            queue_wait += n.queue_wait * n.live_replicas as f64;
+        }
+        let frames: Vec<(Frame, f64)> = {
+            let nodes = state.nodes.read().unwrap();
+            samples
+                .iter()
+                .filter_map(|n| {
+                    let e = nodes.get(&n.node_id)?;
+                    let f = e.status.as_ref()?.frame?;
+                    Some((f, n.live_replicas as f64))
+                })
+                .collect()
+        };
+        for (f, w) in &frames {
+            for (a, v) in acc.iter_mut().zip(f.to_array()) {
+                *a += v * w;
+            }
+            weight += w;
+        }
+        if weight <= 0.0 {
+            continue;
+        }
+        for a in acc.iter_mut() {
+            *a /= weight;
+        }
+        let row = Frame::from_array(acc);
+        let queue_wait = queue_wait / weight;
+
+        // ---- proactive: the forecast planner over per-node capacities
+        if let (Some(fp), Some(fc)) = (policy.forecast.as_ref(), forecaster.as_mut()) {
+            let under_pressure = row.n_pending > 0.5 || row.gpu_util >= 0.9;
+            if under_pressure && row.n_finished > learned_capacity {
+                learned_capacity = row.n_finished;
+            }
+            fc.observe(arrival_total);
+            let pred = fc.forecast(fp.horizon_steps.max(1));
+            let err = fc.error();
+            let degraded = fc.degraded(fp.err_budget);
+            {
+                let mut sup = state.supervisor.lock().unwrap();
+                sup.last_forecast = pred.unwrap_or(0.0);
+                sup.forecast_error = err.unwrap_or(0.0);
+                sup.forecast_degraded = degraded;
+            }
+            let fallback = if fp.replica_capacity_rps > 0.0 {
+                fp.replica_capacity_rps
+            } else {
+                learned_capacity
+            };
+            // per-node capacity in the planner: each node contributes
+            // max_replicas slots at its advertised per-replica rate,
+            // falling back to the configured/learned capacity
+            let slots: Vec<f64> = {
+                let nodes = state.nodes.read().unwrap();
+                samples
+                    .iter()
+                    .flat_map(|n| {
+                        let per = nodes
+                            .get(&n.node_id)
+                            .map(|e| e.announce.replica_capacity_rps)
+                            .filter(|c| *c > 0.0)
+                            .unwrap_or(fallback);
+                        let max = nodes
+                            .get(&n.node_id)
+                            .map(|e| e.announce.max_replicas)
+                            .unwrap_or(n.live_replicas);
+                        std::iter::repeat(per).take(max)
+                    })
+                    .collect()
+            };
+            // capacity evidence can come from ANY source: node
+            // advertisements count, so a fleet of self-describing nodes
+            // plans proactively from the first tick instead of waiting
+            // for an overload episode to learn from
+            let trustworthy =
+                !degraded && slots.iter().any(|c| *c >= MIN_CAPACITY_EVIDENCE);
+            if let (Some(pred), true) = (pred, trustworthy) {
+                let needed = replicas_for_cluster_rate(pred, &slots, fp.headroom, policy.min_replicas)
+                    .min(policy.max_replicas);
+                let cooled = last_action
+                    .map(|t| t.elapsed() >= policy.cooldown)
+                    .unwrap_or(true);
+                if needed > live && cooled && live < policy.max_replicas {
+                    match scale_up(state, "forecast") {
+                        Ok(_) => {
+                            crate::info!(
+                                "cluster",
+                                "proactive cluster scale-up: predicted {pred:.1} rps needs \
+                                 {needed} replicas, {live} live"
+                            );
+                            state
+                                .target_replicas
+                                .store((live + 1).clamp(policy.min_replicas, policy.max_replicas), Ordering::Release);
+                            last_action = Some(Instant::now());
+                            streaks.reset();
+                            continue;
+                        }
+                        Err(e) => crate::warn!("cluster", "proactive placement failed: {e}"),
+                    }
+                }
+            }
+        }
+
+        // ---- reactive: the detector + queue guard over the cluster row
+        if !policy.detector_scaling {
+            continue;
+        }
+        let Some(det) = &detector else {
+            calib_frames.push(row);
+            if calib_frames.len() >= calib_target {
+                match ZscoreDetector::calibrate_frames(&calib_frames) {
+                    Some(d) if d.threshold > 1e-9 => {
+                        crate::info!(
+                            "cluster",
+                            "cluster detector calibrated on {} samples (threshold {:.3})",
+                            calib_frames.len(),
+                            d.threshold
+                        );
+                        state.supervisor.lock().unwrap().calibrated = true;
+                        detector = Some(d);
+                    }
+                    _ => {
+                        let cap = calib_target * 50;
+                        if calib_frames.len() > cap {
+                            calib_frames.drain(..calib_frames.len() - cap / 2);
+                        }
+                    }
+                }
+            }
+            continue;
+        };
+        let d = det.detect_frame(&row);
+        streaks.observe(&d, queue_wait, policy.queue_wait_budget.as_secs_f64());
+        let cooled = last_action
+            .map(|t| t.elapsed() >= policy.cooldown)
+            .unwrap_or(true);
+        if !cooled {
+            continue;
+        }
+        let Some((direction, trigger)) = streaks.decide(policy.patience) else {
+            continue;
+        };
+        let reason = match trigger {
+            Trigger::QueueWait => "queue_wait",
+            _ => "detector",
+        };
+        match direction {
+            ScaleDirection::Up if live < policy.max_replicas => {
+                match scale_up(state, reason) {
+                    Ok(_) => {
+                        state.target_replicas.store(
+                            (live + 1).clamp(policy.min_replicas, policy.max_replicas),
+                            Ordering::Release,
+                        );
+                        last_action = Some(Instant::now());
+                    }
+                    Err(e) => crate::warn!("cluster", "reactive placement failed: {e}"),
+                }
+                streaks.reset();
+            }
+            ScaleDirection::Down if live > policy.min_replicas => {
+                match scale_down(state, reason) {
+                    Ok(_) => {
+                        state.target_replicas.store(
+                            live.saturating_sub(1).max(policy.min_replicas),
+                            Ordering::Release,
+                        );
+                        last_action = Some(Instant::now());
+                    }
+                    Err(e) => crate::warn!("cluster", "cluster drain failed: {e}"),
+                }
+                streaks.reset();
+            }
+            _ => streaks.reset(),
+        }
+    }
+}
+
+/// Sleep `total` in short slices; true means the coordinator is stopping.
+fn sleep_interruptible(state: &CoordinatorState, total: Duration) -> bool {
+    let deadline = Instant::now() + total;
+    loop {
+        if state.stop.load(Ordering::Acquire) {
+            return true;
+        }
+        match deadline.checked_duration_since(Instant::now()) {
+            None => return false,
+            Some(rem) => std::thread::sleep(rem.min(Duration::from_millis(20))),
+        }
+    }
+}

@@ -1,0 +1,463 @@
+//! Coordinator observability: cluster-level counters plus per-node
+//! labeled gauges, rendered as the same Prometheus text exposition the
+//! single-node gateway serves (and parseable by
+//! [`crate::gateway::metrics::parse_exposition`], which the tests use).
+
+use super::coordinator::ClusterSupervisorSnapshot;
+use crate::gateway::metrics::escape_label;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Placement reasons that always appear on the scrape (at zero before the
+/// first event), so dashboards and CI greps never miss a series that
+/// simply has not fired yet.
+pub const PLACEMENT_REASONS: [&str; 5] =
+    ["forecast", "detector", "queue_wait", "backfill", "admin"];
+
+#[derive(Debug, Default)]
+pub struct ClusterMetrics {
+    /// coordinator ingress: (endpoint, status) -> count
+    requests: Mutex<BTreeMap<(String, u16), u64>>,
+    /// scale-up placements by reason
+    placement: Mutex<BTreeMap<String, u64>>,
+    /// scale-down drains by reason
+    retire: Mutex<BTreeMap<String, u64>>,
+    proxy_retries: AtomicU64,
+    node_deaths: AtomicU64,
+    rejected_queue_full: AtomicU64,
+    rejected_rate_limited: AtomicU64,
+    sse_chunks_relayed: AtomicU64,
+}
+
+impl ClusterMetrics {
+    pub fn new() -> ClusterMetrics {
+        ClusterMetrics::default()
+    }
+
+    pub fn observe(&self, endpoint: &str, status: u16) {
+        *self
+            .requests
+            .lock()
+            .unwrap()
+            .entry((endpoint.to_string(), status))
+            .or_insert(0) += 1;
+    }
+
+    pub fn note_placement(&self, reason: &str) {
+        *self
+            .placement
+            .lock()
+            .unwrap()
+            .entry(reason.to_string())
+            .or_insert(0) += 1;
+    }
+
+    pub fn note_retire(&self, reason: &str) {
+        *self
+            .retire
+            .lock()
+            .unwrap()
+            .entry(reason.to_string())
+            .or_insert(0) += 1;
+    }
+
+    pub fn note_proxy_retry(&self) {
+        self.proxy_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_node_death(&self) {
+        self.node_deaths.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_queue_full(&self) {
+        self.rejected_queue_full.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_rate_limited(&self) {
+        self.rejected_rate_limited.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_sse_chunks(&self, n: usize) {
+        self.sse_chunks_relayed.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Total scale-up placements across all reasons (test/report helper
+    /// mirroring `enova_cluster_placement_total`).
+    pub fn placements_total(&self) -> u64 {
+        self.placement.lock().unwrap().values().sum()
+    }
+
+    /// Placements recorded for one reason.
+    pub fn placements_for(&self, reason: &str) -> u64 {
+        self.placement.lock().unwrap().get(reason).copied().unwrap_or(0)
+    }
+}
+
+/// One node row of the `/metrics` exposition — a snapshot the coordinator
+/// builds from its registry under lock, so rendering itself is lock-free
+/// over node state.
+#[derive(Debug, Clone)]
+pub struct NodeSample {
+    pub node_id: String,
+    pub healthy: bool,
+    pub ready: bool,
+    pub live_replicas: usize,
+    pub warm_replicas: usize,
+    pub gpu_memory_total: f64,
+    pub gpu_memory_free: f64,
+    pub arrival_rps: f64,
+    pub queue_wait: f64,
+    /// coordinator-side in-flight proxied requests on this node
+    pub inflight: u64,
+}
+
+/// Render the coordinator's `/metrics` body.
+pub fn render_prometheus(
+    m: &ClusterMetrics,
+    nodes: &[NodeSample],
+    sup: &ClusterSupervisorSnapshot,
+    inflight: usize,
+    uptime_secs: f64,
+) -> String {
+    let mut out = String::with_capacity(4096);
+    let healthy = nodes.iter().filter(|n| n.healthy).count();
+    let replicas: usize = nodes
+        .iter()
+        .filter(|n| n.healthy)
+        .map(|n| n.live_replicas)
+        .sum();
+
+    out.push_str("# HELP enova_cluster_nodes Healthy serving nodes registered with the coordinator.\n");
+    out.push_str("# TYPE enova_cluster_nodes gauge\n");
+    let _ = writeln!(out, "enova_cluster_nodes {healthy}");
+
+    out.push_str("# HELP enova_cluster_nodes_registered Nodes ever registered (healthy or not).\n");
+    out.push_str("# TYPE enova_cluster_nodes_registered gauge\n");
+    let _ = writeln!(out, "enova_cluster_nodes_registered {}", nodes.len());
+
+    out.push_str("# HELP enova_cluster_replicas Live engine replicas across healthy nodes.\n");
+    out.push_str("# TYPE enova_cluster_replicas gauge\n");
+    let _ = writeln!(out, "enova_cluster_replicas {replicas}");
+
+    out.push_str("# HELP enova_cluster_replicas_per_node Live replicas per node.\n");
+    out.push_str("# TYPE enova_cluster_replicas_per_node gauge\n");
+    for n in nodes {
+        let _ = writeln!(
+            out,
+            "enova_cluster_replicas_per_node{{node=\"{}\"}} {}",
+            escape_label(&n.node_id),
+            n.live_replicas
+        );
+    }
+
+    for (name, help, value) in [
+        (
+            "enova_cluster_node_healthy",
+            "1 while the node answers heartbeats.",
+            (|n: &NodeSample| n.healthy as u64 as f64) as fn(&NodeSample) -> f64,
+        ),
+        (
+            "enova_cluster_node_ready",
+            "1 while every live replica on the node is ready.",
+            |n: &NodeSample| n.ready as u64 as f64,
+        ),
+        (
+            "enova_cluster_node_warm_replicas",
+            "Warm standby replicas parked on the node.",
+            |n: &NodeSample| n.warm_replicas as f64,
+        ),
+        (
+            "enova_cluster_node_gpu_memory_total",
+            "GPU memory the node advertises in total.",
+            |n: &NodeSample| n.gpu_memory_total,
+        ),
+        (
+            "enova_cluster_node_gpu_memory_free",
+            "GPU memory not yet claimed by a live replica.",
+            |n: &NodeSample| n.gpu_memory_free,
+        ),
+        (
+            "enova_cluster_node_arrival_rps",
+            "De-noised request arrival rate the node reports (requests/second).",
+            |n: &NodeSample| n.arrival_rps,
+        ),
+        (
+            "enova_cluster_node_queue_wait_seconds",
+            "Mean worker-queue wait the node reports.",
+            |n: &NodeSample| n.queue_wait,
+        ),
+        (
+            "enova_cluster_node_inflight_requests",
+            "Coordinator-side in-flight proxied requests per node.",
+            |n: &NodeSample| n.inflight as f64,
+        ),
+    ] {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        for n in nodes {
+            let _ = writeln!(out, "{name}{{node=\"{}\"}} {}", escape_label(&n.node_id), value(n));
+        }
+    }
+
+    out.push_str(
+        "# HELP enova_cluster_placement_total Replica placements executed by the cluster \
+         supervisor, by reason.\n",
+    );
+    out.push_str("# TYPE enova_cluster_placement_total counter\n");
+    {
+        let placement = m.placement.lock().unwrap();
+        let mut reasons: Vec<&str> = PLACEMENT_REASONS.to_vec();
+        for r in placement.keys() {
+            if !reasons.contains(&r.as_str()) {
+                reasons.push(r);
+            }
+        }
+        for reason in reasons {
+            let _ = writeln!(
+                out,
+                "enova_cluster_placement_total{{reason=\"{}\"}} {}",
+                escape_label(reason),
+                placement.get(reason).copied().unwrap_or(0)
+            );
+        }
+    }
+
+    out.push_str(
+        "# HELP enova_cluster_retire_total Replica drains executed by the cluster supervisor, \
+         by reason.\n",
+    );
+    out.push_str("# TYPE enova_cluster_retire_total counter\n");
+    for (reason, count) in m.retire.lock().unwrap().iter() {
+        let _ = writeln!(
+            out,
+            "enova_cluster_retire_total{{reason=\"{}\"}} {count}",
+            escape_label(reason)
+        );
+    }
+
+    out.push_str("# HELP enova_cluster_requests_total Coordinator ingress requests, by endpoint and status code.\n");
+    out.push_str("# TYPE enova_cluster_requests_total counter\n");
+    for ((endpoint, status), count) in m.requests.lock().unwrap().iter() {
+        let _ = writeln!(
+            out,
+            "enova_cluster_requests_total{{endpoint=\"{}\",code=\"{}\"}} {}",
+            escape_label(endpoint),
+            status,
+            count
+        );
+    }
+
+    out.push_str("# HELP enova_cluster_admission_rejected_total Requests rejected with 429 at the coordinator.\n");
+    out.push_str("# TYPE enova_cluster_admission_rejected_total counter\n");
+    let _ = writeln!(
+        out,
+        "enova_cluster_admission_rejected_total{{reason=\"queue_full\"}} {}",
+        m.rejected_queue_full.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(
+        out,
+        "enova_cluster_admission_rejected_total{{reason=\"rate_limited\"}} {}",
+        m.rejected_rate_limited.load(Ordering::Relaxed)
+    );
+
+    for (name, help, value) in [
+        (
+            "enova_cluster_proxy_retries_total",
+            "Proxied requests re-dispatched to another node after a node failed an attempt.",
+            m.proxy_retries.load(Ordering::Relaxed),
+        ),
+        (
+            "enova_cluster_node_deaths_total",
+            "Nodes declared dead after consecutive missed heartbeats.",
+            m.node_deaths.load(Ordering::Relaxed),
+        ),
+        (
+            "enova_cluster_sse_chunks_relayed_total",
+            "SSE chunks passed through from nodes to streaming clients.",
+            m.sse_chunks_relayed.load(Ordering::Relaxed),
+        ),
+    ] {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {value}");
+    }
+
+    for (name, help, value) in [
+        (
+            "enova_cluster_supervisor_enabled",
+            "1 when the cluster-wide scaling supervisor is running.",
+            sup.enabled as u64 as f64,
+        ),
+        (
+            "enova_cluster_supervisor_calibrated",
+            "1 once the cluster detector finished calibration.",
+            sup.calibrated as u64 as f64,
+        ),
+        (
+            "enova_cluster_target_replicas",
+            "Cluster-wide replica count the supervisor currently wants (backfilled on node death).",
+            sup.target_replicas as f64,
+        ),
+        (
+            "enova_cluster_forecast_enabled",
+            "1 when the cluster forecast planner is running.",
+            sup.forecast_enabled as u64 as f64,
+        ),
+        (
+            "enova_cluster_forecast_rps",
+            "Predicted cluster arrival rate at the planning horizon (requests/second).",
+            sup.last_forecast,
+        ),
+        (
+            "enova_cluster_forecast_error",
+            "Trailing weighted-MAPE of the cluster forecaster.",
+            sup.forecast_error,
+        ),
+        (
+            "enova_cluster_forecast_degraded",
+            "1 while forecast error is over budget and the planner stands down.",
+            sup.forecast_degraded as u64 as f64,
+        ),
+    ] {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        let _ = writeln!(out, "{name} {value}");
+    }
+
+    out.push_str("# HELP enova_cluster_scale_events_total Scaling actions executed cluster-wide.\n");
+    out.push_str("# TYPE enova_cluster_scale_events_total counter\n");
+    let _ = writeln!(
+        out,
+        "enova_cluster_scale_events_total{{direction=\"up\"}} {}",
+        sup.scale_ups
+    );
+    let _ = writeln!(
+        out,
+        "enova_cluster_scale_events_total{{direction=\"down\"}} {}",
+        sup.scale_downs
+    );
+
+    out.push_str("# HELP enova_cluster_inflight_requests Requests admitted at the coordinator and not yet finished.\n");
+    out.push_str("# TYPE enova_cluster_inflight_requests gauge\n");
+    let _ = writeln!(out, "enova_cluster_inflight_requests {inflight}");
+
+    out.push_str("# HELP enova_cluster_uptime_seconds Coordinator uptime.\n");
+    out.push_str("# TYPE enova_cluster_uptime_seconds gauge\n");
+    let _ = writeln!(out, "enova_cluster_uptime_seconds {uptime_secs:.3}");
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gateway::metrics::parse_exposition;
+
+    fn sample(id: &str, healthy: bool, live: usize) -> NodeSample {
+        NodeSample {
+            node_id: id.to_string(),
+            healthy,
+            ready: healthy,
+            live_replicas: live,
+            warm_replicas: 1,
+            gpu_memory_total: 24.0,
+            gpu_memory_free: 24.0 - live as f64 * 8.0,
+            arrival_rps: 3.5,
+            queue_wait: 0.01,
+            inflight: 2,
+        }
+    }
+
+    #[test]
+    fn render_is_a_parseable_exposition_with_per_node_labels() {
+        let m = ClusterMetrics::new();
+        m.observe("/v1/completions", 200);
+        m.observe("/v1/completions", 503);
+        m.note_placement("forecast");
+        m.note_placement("backfill");
+        m.note_placement("backfill");
+        m.note_retire("detector");
+        m.note_proxy_retry();
+        m.note_node_death();
+        m.note_queue_full();
+        m.add_sse_chunks(7);
+
+        let nodes = vec![sample("node-a", true, 2), sample("node-b", false, 1)];
+        let sup = ClusterSupervisorSnapshot {
+            enabled: true,
+            calibrated: false,
+            scale_ups: 3,
+            scale_downs: 1,
+            target_replicas: 3,
+            forecast_enabled: true,
+            last_forecast: 12.5,
+            forecast_error: 0.2,
+            forecast_degraded: false,
+            events: 4,
+        };
+        let body = render_prometheus(&m, &nodes, &sup, 5, 9.5);
+        let samples = parse_exposition(&body).expect("valid exposition");
+
+        let find = |name: &str, label: Option<(&str, &str)>| {
+            samples
+                .iter()
+                .find(|s| {
+                    s.name == name
+                        && label
+                            .map(|(k, v)| s.labels.get(k).map(String::as_str) == Some(v))
+                            .unwrap_or(true)
+                })
+                .unwrap_or_else(|| panic!("missing {name} {label:?}"))
+                .value
+        };
+        // only node-a is healthy: one healthy node, its 2 replicas counted
+        assert_eq!(find("enova_cluster_nodes", None), 1.0);
+        assert_eq!(find("enova_cluster_nodes_registered", None), 2.0);
+        assert_eq!(find("enova_cluster_replicas", None), 2.0);
+        assert_eq!(
+            find("enova_cluster_replicas_per_node", Some(("node", "node-b"))),
+            1.0
+        );
+        assert_eq!(find("enova_cluster_node_healthy", Some(("node", "node-a"))), 1.0);
+        assert_eq!(find("enova_cluster_node_healthy", Some(("node", "node-b"))), 0.0);
+        assert_eq!(
+            find("enova_cluster_node_gpu_memory_free", Some(("node", "node-a"))),
+            8.0
+        );
+        // placement counter: recorded reasons count, unfired reasons are 0
+        assert_eq!(
+            find("enova_cluster_placement_total", Some(("reason", "backfill"))),
+            2.0
+        );
+        assert_eq!(
+            find("enova_cluster_placement_total", Some(("reason", "forecast"))),
+            1.0
+        );
+        assert_eq!(
+            find("enova_cluster_placement_total", Some(("reason", "detector"))),
+            0.0
+        );
+        assert_eq!(
+            find("enova_cluster_retire_total", Some(("reason", "detector"))),
+            1.0
+        );
+        assert_eq!(
+            find("enova_cluster_requests_total", Some(("code", "503"))),
+            1.0
+        );
+        assert_eq!(find("enova_cluster_proxy_retries_total", None), 1.0);
+        assert_eq!(find("enova_cluster_node_deaths_total", None), 1.0);
+        assert_eq!(find("enova_cluster_sse_chunks_relayed_total", None), 7.0);
+        assert_eq!(find("enova_cluster_target_replicas", None), 3.0);
+        assert_eq!(
+            find("enova_cluster_scale_events_total", Some(("direction", "up"))),
+            3.0
+        );
+        assert_eq!(find("enova_cluster_inflight_requests", None), 5.0);
+        assert_eq!(m.placements_total(), 3);
+        assert_eq!(m.placements_for("backfill"), 2);
+        assert_eq!(m.placements_for("never"), 0);
+    }
+}

@@ -1,0 +1,93 @@
+//! The distributed multi-node serving plane (§V's "deployment execution
+//! engine" made live): one **coordinator** owns ingress and places work
+//! across N **nodes**, each of which is a full single-node gateway (engine
+//! replicas, warm pool, Table II monitoring) wearing a small HTTP control
+//! surface.
+//!
+//! ```text
+//!                clients
+//!                   │  POST /v1/completions (SSE or unary)
+//!            ┌──────▼───────┐   per-node weighted least-loaded routing,
+//!            │ coordinator  │   health masks, retry-on-node-death
+//!            │ serve-http   │──────────────┐
+//!            │  --cluster   │  proxy       │ proxy
+//!            └──┬───▲───────┘              │
+//!   join/status │   │ heartbeat            │
+//!         ┌─────▼───┴────┐          ┌──────▼───────┐
+//!         │ enova node A │          │ enova node B │
+//!         │ gateway +    │          │ gateway +    │
+//!         │ replicas     │          │ replicas     │
+//!         └──────────────┘          └──────────────┘
+//! ```
+//!
+//! Control protocol (JSON over the same hand-rolled HTTP/1.1 stack):
+//!
+//! * node → coordinator `POST /cluster/join` — a [`proto::NodeAnnounce`]:
+//!   the node's gateway address plus its capacity advertisement (GPU
+//!   memory total, per-replica footprint, replica ceiling, per-replica
+//!   service rate). Re-announced periodically, so a restarted coordinator
+//!   re-learns its fleet without operator help.
+//! * coordinator → node `GET /cluster/status` — a [`proto::NodeStatus`]
+//!   heartbeat: live/warm replica counts, free GPU memory and the node's
+//!   aggregated Table II frame + arrival rate, the rows the cluster-wide
+//!   supervisor scores.
+//! * coordinator → node `POST /cluster/scale-up` / `POST
+//!   /cluster/scale-down` — the placement decision's actuation: promote a
+//!   warm standby (or cold-spawn) on *that* node, or drain-then-retire
+//!   its newest replica.
+//!
+//! Placement policy lives in [`placement`] (pure math over
+//! [`crate::deployer::NodeInventory`]): scale-ups bin-pack by free
+//! `gpu_memory` with spread-by-default anti-affinity, retires drain the
+//! most-fragmented node first. The coordinator's supervisor
+//! ([`coordinator`]) runs the same monitor → detect → act loop as the
+//! single-node [`crate::gateway::supervisor`], but over cluster-mean
+//! frames, and its forecast planner sizes the fleet with
+//! [`crate::forecast::replicas_for_cluster_rate`] over per-node replica
+//! capacities.
+//!
+//! Ingress makes the node set invisible to clients: unary requests are
+//! retried on another node if the chosen node dies or sheds (a response
+//! was never committed, so re-dispatch is safe — completions have no
+//! server-side state to duplicate); SSE streams are passed through
+//! chunk-by-chunk, and an upstream death before the first relayed chunk
+//! re-dispatches too, so killing a node mid-run drops nothing.
+
+pub mod coordinator;
+pub mod metrics;
+pub mod node;
+pub mod placement;
+pub mod proto;
+
+/// What a gateway in node mode knows about itself — set via
+/// [`crate::gateway::GatewayConfig::node`], it turns on the
+/// `/cluster/status` and `/cluster/scale-{up,down}` control endpoints and
+/// is the capacity advertisement sent to the coordinator on join.
+#[derive(Debug, Clone)]
+pub struct NodeIdentity {
+    /// operator-chosen stable name (`node-a`); label value on the
+    /// coordinator's per-node gauges
+    pub node_id: String,
+    /// GPU memory the node offers, in abstract units (the axis the
+    /// paper's `gpu_memory` knob is denominated in)
+    pub gpu_memory_total: f64,
+    /// memory one replica claims; `free = total - live·footprint`
+    pub replica_gpu_memory: f64,
+    /// replica ceiling for this node
+    pub max_replicas: usize,
+    /// advertised per-replica service rate in requests/second; 0 lets the
+    /// coordinator fall back to its configured or learned capacity
+    pub replica_capacity_rps: f64,
+}
+
+impl Default for NodeIdentity {
+    fn default() -> Self {
+        NodeIdentity {
+            node_id: "node-0".into(),
+            gpu_memory_total: 24.0,
+            replica_gpu_memory: 8.0,
+            max_replicas: 3,
+            replica_capacity_rps: 0.0,
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! One serving node of the distributed plane: today's full single-node
+//! gateway (engine replicas, warm pool, admission, `/metrics`) started in
+//! node mode — so it answers the `/cluster/*` control surface — plus a
+//! background announce loop that registers the node with its coordinator
+//! and keeps the registration fresh. The node is deliberately dumb about
+//! the fleet: it advertises capacity and executes placement decisions;
+//! *where* replicas go is the coordinator's problem.
+
+use super::proto::NodeAnnounce;
+use super::NodeIdentity;
+use crate::gateway::{loadgen, EngineSpawner, Gateway, GatewayConfig};
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct NodeConfig {
+    /// the wrapped gateway's configuration; [`NodeServer::start`] fills in
+    /// `gateway.node` from `identity`
+    pub gateway: GatewayConfig,
+    pub identity: NodeIdentity,
+    /// engine replicas to boot with
+    pub initial_replicas: usize,
+    /// coordinator `host:port` to register with; `None` runs the node
+    /// standalone (control surface up, nobody driving it)
+    pub coordinator: Option<String>,
+    /// cadence of the registration refresh — also how fast a restarted
+    /// coordinator re-learns this node
+    pub announce_interval: Duration,
+    /// address advertised to the coordinator; defaults to the bound
+    /// listener address (override when the node sits behind NAT)
+    pub advertise_addr: Option<String>,
+}
+
+impl Default for NodeConfig {
+    fn default() -> Self {
+        NodeConfig {
+            gateway: GatewayConfig::default(),
+            identity: NodeIdentity::default(),
+            initial_replicas: 1,
+            coordinator: None,
+            announce_interval: Duration::from_millis(1000),
+            advertise_addr: None,
+        }
+    }
+}
+
+/// A running node: the wrapped [`Gateway`] plus the announce thread.
+pub struct NodeServer {
+    gateway: Gateway,
+    announce: NodeAnnounce,
+    coordinator: Option<String>,
+    stop: Arc<AtomicBool>,
+    announcer: Option<JoinHandle<()>>,
+}
+
+impl NodeServer {
+    /// Boot the gateway in node mode and start announcing to the
+    /// coordinator (when one is configured). Returns once the initial
+    /// replica set is routable; registration happens in the background so
+    /// a node can come up before its coordinator does.
+    pub fn start(cfg: NodeConfig, spawner: EngineSpawner) -> Result<NodeServer> {
+        if cfg.identity.initial_fit(cfg.initial_replicas).is_err() {
+            return Err(anyhow!(
+                "node {} cannot fit {} initial replicas: {} gpu_memory total, {} per replica, \
+                 max {} replicas",
+                cfg.identity.node_id,
+                cfg.initial_replicas,
+                cfg.identity.gpu_memory_total,
+                cfg.identity.replica_gpu_memory,
+                cfg.identity.max_replicas
+            ));
+        }
+        let mut gw_cfg = cfg.gateway.clone();
+        gw_cfg.node = Some(cfg.identity.clone());
+        let gateway = Gateway::start_scalable(gw_cfg, spawner, cfg.initial_replicas, None)?;
+        let advertised = cfg
+            .advertise_addr
+            .clone()
+            .unwrap_or_else(|| gateway.addr_string());
+        let announce = NodeAnnounce::new(&cfg.identity, &advertised);
+        let stop = Arc::new(AtomicBool::new(false));
+        let announcer = cfg.coordinator.clone().map(|coordinator| {
+            let announce = announce.clone();
+            let stop = Arc::clone(&stop);
+            let interval = cfg.announce_interval.max(Duration::from_millis(50));
+            std::thread::spawn(move || announce_loop(&coordinator, &announce, &stop, interval))
+        });
+        crate::info!(
+            "cluster",
+            "node {} serving on {} ({} replica(s), {} gpu_memory, coordinator: {})",
+            announce.node_id,
+            advertised,
+            cfg.initial_replicas,
+            cfg.identity.gpu_memory_total,
+            cfg.coordinator.as_deref().unwrap_or("none")
+        );
+        Ok(NodeServer {
+            gateway,
+            announce,
+            coordinator: cfg.coordinator,
+            stop,
+            announcer,
+        })
+    }
+
+    pub fn addr_string(&self) -> String {
+        self.gateway.addr_string()
+    }
+
+    pub fn node_id(&self) -> &str {
+        &self.announce.node_id
+    }
+
+    /// The wrapped gateway, for tests and programmatic drivers.
+    pub fn gateway(&self) -> &Gateway {
+        &self.gateway
+    }
+
+    /// Block until the coordinator acknowledged a registration, or the
+    /// timeout elapsed. Purely a convenience for tests and scripts — the
+    /// announce loop keeps retrying either way.
+    pub fn wait_registered(&self, timeout: Duration) -> bool {
+        let Some(coordinator) = &self.coordinator else {
+            return false;
+        };
+        let deadline = Instant::now() + timeout;
+        while Instant::now() < deadline {
+            if announce_once(coordinator, &self.announce) {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        false
+    }
+
+    /// Stop announcing and shut the gateway down (drains as
+    /// [`Gateway::shutdown`] does). This is the in-process stand-in for
+    /// killing a node: from the coordinator's view the node simply stops
+    /// answering.
+    pub fn shutdown(self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.announcer {
+            let _ = h.join();
+        }
+        self.gateway.shutdown();
+    }
+
+    /// Block forever serving (CLI path).
+    pub fn serve_forever(self) {
+        if let Some(h) = self.announcer {
+            let _ = h.join();
+        }
+        self.gateway.serve_forever();
+    }
+}
+
+impl NodeIdentity {
+    /// Checks that `n` replicas fit the advertisement — the same bound the
+    /// coordinator's placement math will enforce later, applied up front
+    /// so a node never advertises a state it could not have reached.
+    pub fn initial_fit(&self, n: usize) -> Result<(), String> {
+        if n > self.max_replicas {
+            return Err(format!("{n} replicas over the ceiling of {}", self.max_replicas));
+        }
+        if n as f64 * self.replica_gpu_memory > self.gpu_memory_total {
+            return Err(format!(
+                "{n} replicas x {} gpu_memory exceed the {} advertised",
+                self.replica_gpu_memory, self.gpu_memory_total
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// POST one announce; true on a 2xx acknowledgment.
+fn announce_once(coordinator: &str, announce: &NodeAnnounce) -> bool {
+    let body = announce.to_json().to_string_compact();
+    match loadgen::request(
+        coordinator,
+        "POST",
+        "/cluster/join",
+        Some(&body),
+        Duration::from_secs(2),
+    ) {
+        Ok(resp) => (200..300).contains(&resp.status),
+        Err(_) => false,
+    }
+}
+
+/// Register with the coordinator, then keep the registration fresh until
+/// the node stops. Failures only log at a low duty cycle: a node starting
+/// before its coordinator is normal, not an incident.
+fn announce_loop(
+    coordinator: &str,
+    announce: &NodeAnnounce,
+    stop: &AtomicBool,
+    interval: Duration,
+) {
+    let mut registered = false;
+    let mut failures = 0u32;
+    while !stop.load(Ordering::Acquire) {
+        if announce_once(coordinator, announce) {
+            if !registered {
+                crate::info!(
+                    "cluster",
+                    "node {} registered with coordinator {coordinator}",
+                    announce.node_id
+                );
+            }
+            registered = true;
+            failures = 0;
+        } else {
+            failures += 1;
+            if failures == 1 || failures % 20 == 0 {
+                crate::warn!(
+                    "cluster",
+                    "node {} cannot reach coordinator {coordinator} (attempt {failures})",
+                    announce.node_id
+                );
+            }
+        }
+        // short slices so shutdown is prompt even with long intervals
+        let deadline = Instant::now() + interval;
+        while Instant::now() < deadline {
+            if stop.load(Ordering::Acquire) {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Pure placement math for the cluster supervisor: which node receives
+//! the next replica, and which node is drained first on scale-down. Kept
+//! free of I/O and locks so every decision rule is unit-testable the same
+//! way the `config` module's estimators are.
+//!
+//! Scale-up is **bin-packing by free `gpu_memory` with spread-by-default
+//! anti-affinity**: among nodes with room (under their replica ceiling,
+//! enough free memory for their per-replica footprint), pick the one with
+//! the fewest live replicas — spreading load and blast radius — breaking
+//! ties toward the most free memory (the best-packed bin for a later,
+//! bigger tenant), then lexicographically by node id so equal clusters
+//! place deterministically.
+//!
+//! Scale-down drains the **most-fragmented node first**: the highest
+//! free/total memory ratio among drainable nodes, so retires consolidate
+//! the fleet instead of nibbling evenly at every node. Nodes with a
+//! single live replica are not drainable — a node's gateway refuses to
+//! retire its last routable replica, and an empty-but-running node is the
+//! coordinator's decision to make by *removing* the node, not this
+//! function's.
+
+use crate::deployer::NodeInventory;
+
+/// The node that should receive the next replica, or `None` when no node
+/// has room (cluster full — the caller should hold the scale-up and keep
+/// observing, exactly like the single-node supervisor at `max_replicas`).
+pub fn place_replica(nodes: &[NodeInventory]) -> Option<&NodeInventory> {
+    nodes.iter().filter(|n| n.has_room()).min_by(|a, b| {
+        a.live_replicas
+            .cmp(&b.live_replicas)
+            .then(b.gpu_memory_free.total_cmp(&a.gpu_memory_free))
+            .then(a.node_id.cmp(&b.node_id))
+    })
+}
+
+/// The node to drain on scale-down: most-fragmented first (highest
+/// free/total ratio), ties toward fewer live replicas (cheapest to empty),
+/// then node id. `None` when no node can give up a replica.
+pub fn drain_node(nodes: &[NodeInventory]) -> Option<&NodeInventory> {
+    nodes
+        .iter()
+        .filter(|n| n.live_replicas >= 2)
+        .max_by(|a, b| {
+            a.fragmentation()
+                .total_cmp(&b.fragmentation())
+                .then(b.live_replicas.cmp(&a.live_replicas))
+                .then(b.node_id.cmp(&a.node_id))
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node(id: &str, live: usize, max: usize, total: f64, footprint: f64) -> NodeInventory {
+        NodeInventory {
+            node_id: id.to_string(),
+            gpu_memory_total: total,
+            gpu_memory_free: (total - live as f64 * footprint).max(0.0),
+            replica_gpu_memory: footprint,
+            live_replicas: live,
+            max_replicas: max,
+        }
+    }
+
+    #[test]
+    fn empty_cluster_places_nowhere() {
+        assert_eq!(place_replica(&[]), None);
+        assert_eq!(drain_node(&[]), None);
+    }
+
+    #[test]
+    fn full_node_is_skipped() {
+        // node-a is at its replica ceiling; node-b has room
+        let nodes = vec![node("node-a", 3, 3, 24.0, 8.0), node("node-b", 2, 3, 24.0, 8.0)];
+        assert_eq!(place_replica(&nodes).unwrap().node_id, "node-b");
+        // every node full -> no placement at all
+        let full = vec![node("node-a", 3, 3, 24.0, 8.0), node("node-b", 3, 3, 24.0, 8.0)];
+        assert_eq!(place_replica(&full), None);
+    }
+
+    #[test]
+    fn spread_prefers_the_emptier_node() {
+        let nodes = vec![node("node-a", 2, 4, 32.0, 8.0), node("node-b", 1, 4, 32.0, 8.0)];
+        assert_eq!(place_replica(&nodes).unwrap().node_id, "node-b");
+    }
+
+    #[test]
+    fn equal_fill_tie_break_is_deterministic() {
+        // identical fill and free memory: lexicographic node id decides,
+        // and the answer never depends on slice order
+        let ab = vec![node("node-a", 1, 3, 24.0, 8.0), node("node-b", 1, 3, 24.0, 8.0)];
+        let ba = vec![node("node-b", 1, 3, 24.0, 8.0), node("node-a", 1, 3, 24.0, 8.0)];
+        assert_eq!(place_replica(&ab).unwrap().node_id, "node-a");
+        assert_eq!(place_replica(&ba).unwrap().node_id, "node-a");
+        // same replica count but more free memory wins over the id
+        let nodes = vec![node("node-a", 1, 3, 24.0, 8.0), node("node-b", 1, 3, 48.0, 8.0)];
+        assert_eq!(place_replica(&nodes).unwrap().node_id, "node-b");
+    }
+
+    #[test]
+    fn zero_free_memory_is_never_selected() {
+        // under the replica ceiling, but memory exhausted
+        let mut broke = node("node-a", 1, 4, 8.0, 8.0);
+        assert_eq!(broke.gpu_memory_free, 0.0);
+        assert_eq!(place_replica(&[broke.clone()]), None);
+        // even a zero-footprint advertisement cannot make an empty node fit
+        broke.replica_gpu_memory = 0.0;
+        assert_eq!(place_replica(&[broke]), None);
+        // and a node with free memory below its footprint is skipped too
+        let tight = node("node-b", 2, 4, 20.0, 8.0); // free = 4 < 8
+        let roomy = node("node-c", 2, 4, 24.0, 8.0); // free = 8
+        assert_eq!(place_replica(&[tight, roomy]).unwrap().node_id, "node-c");
+    }
+
+    #[test]
+    fn drain_picks_the_most_fragmented_node() {
+        // node-a: 2/24 used ratio free 16/24; node-b: 3 replicas, free 0/24
+        let nodes = vec![node("node-a", 2, 3, 24.0, 4.0), node("node-b", 3, 3, 24.0, 8.0)];
+        assert_eq!(drain_node(&nodes).unwrap().node_id, "node-a");
+    }
+
+    #[test]
+    fn drain_never_empties_a_node() {
+        // single-replica nodes are not drainable, however fragmented
+        let nodes = vec![node("node-a", 1, 3, 24.0, 4.0), node("node-b", 1, 3, 24.0, 8.0)];
+        assert_eq!(drain_node(&nodes), None);
+        // ties on fragmentation break deterministically by node id
+        let tied = vec![node("node-a", 2, 3, 24.0, 6.0), node("node-b", 2, 3, 24.0, 6.0)];
+        assert_eq!(drain_node(&tied).unwrap().node_id, "node-a");
+    }
+}

@@ -1,0 +1,231 @@
+//! Wire types of the coordinator ↔ node control protocol: plain JSON
+//! bodies over the crate's hand-rolled HTTP stack. Every type serializes
+//! with [`crate::util::json`] and parses defensively — a malformed peer
+//! yields an error string, never a panic — so a version-skewed node and
+//! coordinator fail loudly at the protocol boundary.
+
+use super::NodeIdentity;
+use crate::metrics::Frame;
+use crate::util::json::{arr_f64, num, obj, s, Json};
+
+/// What a node POSTs to the coordinator's `/cluster/join`: where its
+/// gateway listens plus its capacity advertisement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeAnnounce {
+    pub node_id: String,
+    /// `host:port` of the node's gateway (ingress proxy + control target)
+    pub addr: String,
+    pub gpu_memory_total: f64,
+    pub replica_gpu_memory: f64,
+    pub max_replicas: usize,
+    /// advertised per-replica service rate (requests/second); 0 = unknown
+    pub replica_capacity_rps: f64,
+}
+
+impl NodeAnnounce {
+    pub fn new(identity: &NodeIdentity, addr: &str) -> NodeAnnounce {
+        NodeAnnounce {
+            node_id: identity.node_id.clone(),
+            addr: addr.to_string(),
+            gpu_memory_total: identity.gpu_memory_total,
+            replica_gpu_memory: identity.replica_gpu_memory,
+            max_replicas: identity.max_replicas,
+            replica_capacity_rps: identity.replica_capacity_rps,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("node_id", s(&self.node_id)),
+            ("addr", s(&self.addr)),
+            ("gpu_memory_total", num(self.gpu_memory_total)),
+            ("replica_gpu_memory", num(self.replica_gpu_memory)),
+            ("max_replicas", num(self.max_replicas as f64)),
+            ("replica_capacity_rps", num(self.replica_capacity_rps)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<NodeAnnounce, String> {
+        let node_id = j
+            .get("node_id")
+            .and_then(Json::as_str)
+            .ok_or("announce needs a string \"node_id\"")?
+            .to_string();
+        if node_id.is_empty() {
+            return Err("announce \"node_id\" must not be empty".into());
+        }
+        let addr = j
+            .get("addr")
+            .and_then(Json::as_str)
+            .ok_or("announce needs a string \"addr\"")?
+            .to_string();
+        if addr.is_empty() {
+            return Err("announce \"addr\" must not be empty".into());
+        }
+        let f = |key: &str| j.get(key).and_then(Json::as_f64).filter(|v| v.is_finite());
+        Ok(NodeAnnounce {
+            node_id,
+            addr,
+            gpu_memory_total: f("gpu_memory_total").unwrap_or(0.0).max(0.0),
+            replica_gpu_memory: f("replica_gpu_memory").unwrap_or(0.0).max(0.0),
+            max_replicas: j
+                .get("max_replicas")
+                .and_then(Json::as_usize)
+                .ok_or("announce needs an integer \"max_replicas\"")?,
+            replica_capacity_rps: f("replica_capacity_rps").unwrap_or(0.0).max(0.0),
+        })
+    }
+}
+
+/// What a node answers on `GET /cluster/status`: the heartbeat row the
+/// cluster supervisor monitors. `frame` is the mean of the newest Table II
+/// frame across the node's live replicas (the same aggregation the
+/// single-node supervisor scores); `arrival_rps` is the de-noised total
+/// arrival rate across them (what the forecaster consumes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeStatus {
+    pub node_id: String,
+    pub live_replicas: usize,
+    pub warm_replicas: usize,
+    /// every live replica's engine finished construction
+    pub ready: bool,
+    pub gpu_memory_total: f64,
+    pub gpu_memory_free: f64,
+    /// `None` until the first monitoring window flushed
+    pub frame: Option<Frame>,
+    pub arrival_rps: f64,
+    /// mean worker-queue wait across live replicas (seconds)
+    pub queue_wait: f64,
+}
+
+impl NodeStatus {
+    pub fn to_json(&self) -> Json {
+        let mut j = obj([
+            ("node_id", s(&self.node_id)),
+            ("live_replicas", num(self.live_replicas as f64)),
+            ("warm_replicas", num(self.warm_replicas as f64)),
+            ("ready", Json::Bool(self.ready)),
+            ("gpu_memory_total", num(self.gpu_memory_total)),
+            ("gpu_memory_free", num(self.gpu_memory_free)),
+            ("arrival_rps", num(self.arrival_rps)),
+            ("queue_wait", num(self.queue_wait)),
+        ]);
+        if let (Json::Obj(m), Some(frame)) = (&mut j, &self.frame) {
+            m.insert("frame".to_string(), arr_f64(&frame.to_array()));
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<NodeStatus, String> {
+        let node_id = j
+            .get("node_id")
+            .and_then(Json::as_str)
+            .ok_or("status needs a string \"node_id\"")?
+            .to_string();
+        let frame = match j.get("frame").and_then(Json::as_arr) {
+            None => None,
+            Some(cols) => {
+                if cols.len() != 8 {
+                    return Err(format!("status \"frame\" must have 8 columns, got {}", cols.len()));
+                }
+                let mut a = [0.0f64; 8];
+                for (slot, col) in a.iter_mut().zip(cols) {
+                    *slot = col
+                        .as_f64()
+                        .filter(|v| v.is_finite())
+                        .ok_or("status \"frame\" columns must be finite numbers")?;
+                }
+                Some(Frame::from_array(a))
+            }
+        };
+        let f = |key: &str| j.get(key).and_then(Json::as_f64).filter(|v| v.is_finite());
+        Ok(NodeStatus {
+            node_id,
+            live_replicas: j
+                .get("live_replicas")
+                .and_then(Json::as_usize)
+                .ok_or("status needs an integer \"live_replicas\"")?,
+            warm_replicas: j.get("warm_replicas").and_then(Json::as_usize).unwrap_or(0),
+            ready: j.get("ready").and_then(Json::as_bool).unwrap_or(false),
+            gpu_memory_total: f("gpu_memory_total").unwrap_or(0.0).max(0.0),
+            gpu_memory_free: f("gpu_memory_free").unwrap_or(0.0).max(0.0),
+            frame,
+            arrival_rps: f("arrival_rps").unwrap_or(0.0).max(0.0),
+            queue_wait: f("queue_wait").unwrap_or(0.0).max(0.0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn announce_roundtrips_through_json() {
+        let a = NodeAnnounce {
+            node_id: "node-a".into(),
+            addr: "127.0.0.1:18501".into(),
+            gpu_memory_total: 24.0,
+            replica_gpu_memory: 8.0,
+            max_replicas: 3,
+            replica_capacity_rps: 12.5,
+        };
+        let wire = a.to_json().to_string_compact();
+        let back = NodeAnnounce::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn announce_rejects_malformed_peers() {
+        let missing_id = Json::parse(r#"{"addr":"x:1","max_replicas":2}"#).unwrap();
+        assert!(NodeAnnounce::from_json(&missing_id).is_err());
+        let empty_id =
+            Json::parse(r#"{"node_id":"","addr":"x:1","max_replicas":2}"#).unwrap();
+        assert!(NodeAnnounce::from_json(&empty_id).is_err());
+        let no_addr = Json::parse(r#"{"node_id":"n","max_replicas":2}"#).unwrap();
+        assert!(NodeAnnounce::from_json(&no_addr).is_err());
+        let no_max = Json::parse(r#"{"node_id":"n","addr":"x:1"}"#).unwrap();
+        assert!(NodeAnnounce::from_json(&no_max).is_err());
+    }
+
+    #[test]
+    fn status_roundtrips_with_and_without_frame() {
+        let mut st = NodeStatus {
+            node_id: "node-b".into(),
+            live_replicas: 2,
+            warm_replicas: 1,
+            ready: true,
+            gpu_memory_total: 24.0,
+            gpu_memory_free: 8.0,
+            frame: None,
+            arrival_rps: 7.5,
+            queue_wait: 0.02,
+        };
+        let back =
+            NodeStatus::from_json(&Json::parse(&st.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back, st);
+
+        st.frame = Some(Frame {
+            n_finished: 3.0,
+            n_arriving: 4.0,
+            gpu_util: 0.8,
+            ..Default::default()
+        });
+        let back =
+            NodeStatus::from_json(&Json::parse(&st.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back, st);
+    }
+
+    #[test]
+    fn status_rejects_short_or_nan_frames() {
+        let short = Json::parse(r#"{"node_id":"n","live_replicas":1,"frame":[1,2,3]}"#).unwrap();
+        assert!(NodeStatus::from_json(&short).is_err());
+        let nan = Json::parse(
+            r#"{"node_id":"n","live_replicas":1,"frame":[1,2,3,4,5,6,7,"x"]}"#,
+        )
+        .unwrap();
+        assert!(NodeStatus::from_json(&nan).is_err());
+    }
+}

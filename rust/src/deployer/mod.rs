@@ -167,6 +167,48 @@ impl Deployer {
     }
 }
 
+/// One serving node as the *distributed* control plane sees it: the
+/// capacity advertisement a [`crate::cluster`] node registers with the
+/// coordinator, refreshed from its heartbeat status. Unlike [`Node`]
+/// (whole GPUs of a named device type), inventory is tracked in abstract
+/// GPU-memory units so heterogeneous nodes compare on one axis — the
+/// quantity the paper's `gpu_memory` knob is denominated in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeInventory {
+    pub node_id: String,
+    /// GPU memory the node advertises in total
+    pub gpu_memory_total: f64,
+    /// GPU memory not yet claimed by a live replica
+    pub gpu_memory_free: f64,
+    /// memory one more replica on this node would claim
+    pub replica_gpu_memory: f64,
+    pub live_replicas: usize,
+    /// the node's own replica ceiling
+    pub max_replicas: usize,
+}
+
+impl NodeInventory {
+    /// Whether one more replica fits: under the node's replica ceiling and
+    /// with enough free GPU memory for the node's per-replica footprint.
+    /// A node with no free memory never has room, whatever its footprint
+    /// claims.
+    pub fn has_room(&self) -> bool {
+        self.live_replicas < self.max_replicas
+            && self.gpu_memory_free > 0.0
+            && self.gpu_memory_free >= self.replica_gpu_memory
+    }
+
+    /// Free-to-total ratio — the fragmentation axis the retire path drains
+    /// by (most-fragmented first). 0 for a degenerate zero-memory node.
+    pub fn fragmentation(&self) -> f64 {
+        if self.gpu_memory_total > 0.0 {
+            (self.gpu_memory_free / self.gpu_memory_total).clamp(0.0, 1.0)
+        } else {
+            0.0
+        }
+    }
+}
+
 /// A standard two-cluster testbed mirroring the paper's: 8×A100 + 8×4090.
 pub fn paper_testbed() -> Vec<LocalCluster> {
     use crate::simulator::gpu::{A100_80G, RTX4090_24G};

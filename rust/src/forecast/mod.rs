@@ -384,6 +384,48 @@ pub fn replicas_for_rate(
     (needed as usize).clamp(min, max)
 }
 
+/// Cluster form of [`replicas_for_rate`]: replica slots can have
+/// heterogeneous service capacities (different GPUs on different nodes),
+/// so the planner fills the fastest slots first and returns how many
+/// replicas are needed for their summed capacity to cover the predicted
+/// demand (with relative `headroom`). The answer is floored at `min` and
+/// capped at `slots.len()`; when the demand exceeds everything the
+/// cluster can offer, every slot is asked for — capacity the cluster does
+/// not have cannot be planned into existence.
+pub fn replicas_for_cluster_rate(
+    pred_rps: f64,
+    slot_capacities_rps: &[f64],
+    headroom: f64,
+    min: usize,
+) -> usize {
+    let min = min.max(1);
+    if slot_capacities_rps.is_empty() {
+        return min;
+    }
+    let max = slot_capacities_rps.len();
+    if !pred_rps.is_finite() {
+        return min.min(max);
+    }
+    let demand = pred_rps.max(0.0) * (1.0 + headroom.max(0.0));
+    if demand <= 0.0 {
+        return min.min(max);
+    }
+    let mut caps: Vec<f64> = slot_capacities_rps
+        .iter()
+        .map(|c| if c.is_finite() { c.max(0.0) } else { 0.0 })
+        .collect();
+    caps.sort_by(|a, b| b.total_cmp(a));
+    let mut covered = 0.0;
+    for (i, cap) in caps.iter().enumerate() {
+        covered += cap;
+        if covered >= demand {
+            return (i + 1).clamp(min.min(max), max);
+        }
+    }
+    // demand exceeds total cluster capacity: all hands
+    max
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -567,6 +609,33 @@ mod tests {
         assert_eq!(replicas_for_rate(5.0, 0.0, 0.0, 1, 4), 1);
         assert_eq!(replicas_for_rate(f64::NAN, 10.0, 0.0, 1, 4), 1);
         assert_eq!(replicas_for_rate(f64::INFINITY, 10.0, 0.0, 1, 4), 4);
+    }
+
+    #[test]
+    fn cluster_rate_fills_fastest_slots_first() {
+        // one fast slot covers 30 rps alone; the uniform case matches the
+        // homogeneous planner
+        assert_eq!(replicas_for_cluster_rate(30.0, &[10.0, 40.0, 10.0], 0.0, 1), 1);
+        assert_eq!(replicas_for_cluster_rate(55.0, &[25.0, 25.0, 25.0, 25.0], 0.1, 1), 3);
+        // heterogeneous: 60 rps needs the 40-rps slot plus one 15-rps slot
+        assert_eq!(replicas_for_cluster_rate(50.0, &[15.0, 40.0, 15.0], 0.0, 1), 2);
+    }
+
+    #[test]
+    fn cluster_rate_degenerate_inputs_never_panic() {
+        // no slots at all: the floor is still answered
+        assert_eq!(replicas_for_cluster_rate(10.0, &[], 0.0, 2), 2);
+        // demand over total capacity asks for every slot — the planner
+        // cannot invent capacity the cluster does not have
+        assert_eq!(replicas_for_cluster_rate(1000.0, &[10.0, 10.0], 0.0, 1), 2);
+        assert_eq!(replicas_for_cluster_rate(5.0, &[0.0, 0.0], 0.0, 1), 2);
+        // zero / non-finite predictions fall back to the floor, capped by
+        // the slot count
+        assert_eq!(replicas_for_cluster_rate(0.0, &[10.0, 10.0, 10.0], 0.0, 2), 2);
+        assert_eq!(replicas_for_cluster_rate(f64::NAN, &[10.0; 4], 0.0, 1), 1);
+        assert_eq!(replicas_for_cluster_rate(10.0, &[f64::NAN, 20.0], 0.0, 1), 1);
+        // min floor larger than the cluster clamps to the slot count
+        assert_eq!(replicas_for_cluster_rate(1.0, &[10.0], 0.0, 5), 1);
     }
 
     #[test]

@@ -52,30 +52,39 @@ impl HttpResponse {
     }
 }
 
+/// One chunk of an RFC 9112 chunked body; `None` is the terminal zero
+/// chunk (with its trailers consumed). Shared with the cluster
+/// coordinator's SSE relay, which forwards chunk-by-chunk instead of
+/// buffering.
+pub(crate) fn read_chunk<R: BufRead>(r: &mut R) -> Result<Option<Vec<u8>>> {
+    let mut size_line = String::new();
+    r.read_line(&mut size_line)?;
+    let size_str = size_line.trim().split(';').next().unwrap_or("").trim();
+    let size = usize::from_str_radix(size_str, 16)
+        .with_context(|| format!("bad chunk size line {size_line:?}"))?;
+    if size == 0 {
+        // trailers (we send none) up to the blank line
+        loop {
+            let mut trailer = String::new();
+            if r.read_line(&mut trailer)? == 0 || trailer.trim().is_empty() {
+                break;
+            }
+        }
+        return Ok(None);
+    }
+    let mut chunk = vec![0u8; size];
+    r.read_exact(&mut chunk)?;
+    let mut crlf = [0u8; 2];
+    r.read_exact(&mut crlf)?;
+    Ok(Some(chunk))
+}
+
 fn read_chunked<R: BufRead>(r: &mut R) -> Result<Vec<u8>> {
     let mut body = Vec::new();
-    loop {
-        let mut size_line = String::new();
-        r.read_line(&mut size_line)?;
-        let size_str = size_line.trim().split(';').next().unwrap_or("").trim();
-        let size = usize::from_str_radix(size_str, 16)
-            .with_context(|| format!("bad chunk size line {size_line:?}"))?;
-        if size == 0 {
-            // trailers (we send none) up to the blank line
-            loop {
-                let mut trailer = String::new();
-                if r.read_line(&mut trailer)? == 0 || trailer.trim().is_empty() {
-                    break;
-                }
-            }
-            return Ok(body);
-        }
-        let mut chunk = vec![0u8; size];
-        r.read_exact(&mut chunk)?;
+    while let Some(chunk) = read_chunk(r)? {
         body.extend_from_slice(&chunk);
-        let mut crlf = [0u8; 2];
-        r.read_exact(&mut crlf)?;
     }
+    Ok(body)
 }
 
 /// The request head for one exchange. `close` asks the server to close
@@ -101,10 +110,17 @@ fn request_head(method: &str, path: &str, addr: &str, body: Option<&str>, close:
 /// Content-Length and chunked bodies are exactly delimited, so no buffered
 /// bytes are lost when it drops — which is what makes keep-alive reuse of
 /// the bare `TcpStream` safe.
-fn read_response(stream: &TcpStream) -> Result<HttpResponse> {
-    let mut r = BufReader::new(stream);
+/// Parse one response head (status line + headers, names lowercased) off
+/// the stream, leaving the body unread — shared by the buffered client
+/// below and the cluster coordinator's proxy, which branches on the head
+/// before deciding to buffer or relay.
+pub(crate) fn read_response_head<R: BufRead>(
+    r: &mut R,
+) -> Result<(u16, BTreeMap<String, String>)> {
     let mut status_line = String::new();
-    r.read_line(&mut status_line)?;
+    if r.read_line(&mut status_line)? == 0 {
+        bail!("EOF before status line");
+    }
     let mut parts = status_line.split_whitespace();
     let proto = parts.next().unwrap_or("");
     let status: u16 = parts
@@ -114,7 +130,6 @@ fn read_response(stream: &TcpStream) -> Result<HttpResponse> {
     if !proto.starts_with("HTTP/") {
         bail!("bad status line {status_line:?}");
     }
-
     let mut headers = BTreeMap::new();
     loop {
         let mut line = String::new();
@@ -129,6 +144,12 @@ fn read_response(stream: &TcpStream) -> Result<HttpResponse> {
             headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
         }
     }
+    Ok((status, headers))
+}
+
+fn read_response(stream: &TcpStream) -> Result<HttpResponse> {
+    let mut r = BufReader::new(stream);
+    let (status, headers) = read_response_head(&mut r)?;
 
     let body = if headers
         .get("transfer-encoding")
@@ -285,9 +306,9 @@ impl Client {
 
 /// True for failures that mean the server closed a previously-idle
 /// keep-alive socket — reset/abort/broken pipe, or EOF before any status
-/// byte (which parses as an empty status line). A timeout or an error
-/// after response bytes arrived is NOT stale: the request may well be
-/// executing server-side, so a retry would duplicate it.
+/// byte ([`read_response_head`]'s "EOF before status line"). A timeout or
+/// an error after response bytes arrived is NOT stale: the request may
+/// well be executing server-side, so a retry would duplicate it.
 fn stale_socket_error(e: &anyhow::Error) -> bool {
     for cause in e.chain() {
         if let Some(io) = cause.downcast_ref::<std::io::Error>() {
@@ -300,7 +321,7 @@ fn stale_socket_error(e: &anyhow::Error) -> bool {
             );
         }
     }
-    e.to_string().contains("bad status line \"\"")
+    e.to_string().contains("EOF before status line")
 }
 
 /// Closed-loop driver configuration: `concurrency` workers each issue

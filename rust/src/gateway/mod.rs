@@ -107,6 +107,10 @@ pub struct GatewayConfig {
     /// disables the pool. Retirement demotes back to warm while the pool
     /// is below this target.
     pub warm_pool: usize,
+    /// distributed-plane node identity: when set, the gateway answers the
+    /// `/cluster/status` and `/cluster/scale-{up,down}` control endpoints
+    /// so a [`crate::cluster::coordinator`] can place replicas on it
+    pub node: Option<crate::cluster::NodeIdentity>,
 }
 
 impl Default for GatewayConfig {
@@ -124,6 +128,7 @@ impl Default for GatewayConfig {
             queue_budget: Duration::ZERO,
             request_timeout: Duration::from_secs(120),
             warm_pool: 0,
+            node: None,
         }
     }
 }
@@ -1180,7 +1185,7 @@ fn record_frame(
     store.push(MAX_SEQS, instance, t, engine.capacity() as f64);
 }
 
-fn handle_connection(mut stream: TcpStream, state: &GatewayState) {
+fn handle_connection(mut stream: TcpStream, state: &Arc<GatewayState>) {
     let Ok(read_half) = stream.try_clone() else {
         return;
     };
@@ -1208,7 +1213,11 @@ fn handle_connection(mut stream: TcpStream, state: &GatewayState) {
     }
 }
 
-fn route(req: &http::Request, stream: &mut TcpStream, state: &GatewayState) -> std::io::Result<()> {
+fn route(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &Arc<GatewayState>,
+) -> std::io::Result<()> {
     let t0 = Instant::now();
     match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/v1/completions") => serve_completion(req, stream, state, false, t0),
@@ -1257,8 +1266,11 @@ fn route(req: &http::Request, stream: &mut TcpStream, state: &GatewayState) -> s
             finish(req, stream, state, "/ready", t0, http::Response::json(status, body))
         }
         ("POST", "/admin/scale") => admin_scale(req, stream, state, t0),
+        ("GET", "/cluster/status") => cluster_status(req, stream, state, t0),
+        ("POST", "/cluster/scale-up") => cluster_scale_up(req, stream, state, t0),
+        ("POST", "/cluster/scale-down") => cluster_scale_down(req, stream, state, t0),
         (_, "/v1/completions" | "/v1/chat/completions" | "/admin/scale" | "/metrics" | "/healthz"
-        | "/ready") => {
+        | "/ready" | "/cluster/status" | "/cluster/scale-up" | "/cluster/scale-down") => {
             let body = openai::to_wire(&openai::error_body(
                 "invalid_request_error",
                 &format!("method {} not allowed on {}", req.method, req.path),
@@ -1610,6 +1622,153 @@ fn stream_response(
     match write_failed {
         Some(e) => Err(e),
         None => io_result,
+    }
+}
+
+/// `404` for the `/cluster/*` control surface when the gateway was not
+/// started in node mode — a plain gateway must look exactly like one.
+fn not_a_node(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &GatewayState,
+    endpoint: &str,
+    t0: Instant,
+) -> std::io::Result<()> {
+    let body = openai::to_wire(&openai::error_body(
+        "invalid_request_error",
+        "this gateway is not running in cluster node mode",
+    ));
+    finish(req, stream, state, endpoint, t0, http::Response::json(404, body))
+}
+
+/// `GET /cluster/status` — the heartbeat row a cluster coordinator polls:
+/// replica counts, free GPU memory against the node's advertisement, and
+/// the node-aggregated Table II frame + arrival rate the cluster-wide
+/// supervisor scores.
+fn cluster_status(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &Arc<GatewayState>,
+    t0: Instant,
+) -> std::io::Result<()> {
+    let Some(identity) = state.cfg.node.clone() else {
+        return not_a_node(req, stream, state, "/cluster/status", t0);
+    };
+    let live = state.replicas.read().unwrap().len();
+    let warm = state.warm.lock().unwrap().len();
+    let ready_n = state.ready_replicas.load(Ordering::Acquire);
+    let (frame, queue_wait) = match supervisor::cluster_sample(state) {
+        Some((f, w)) => (Some(f), w),
+        None => (None, 0.0),
+    };
+    let status = crate::cluster::proto::NodeStatus {
+        node_id: identity.node_id.clone(),
+        live_replicas: live,
+        warm_replicas: warm,
+        ready: live > 0 && ready_n >= live,
+        gpu_memory_total: identity.gpu_memory_total,
+        // warm standbys hold fully initialized engines: their memory is
+        // just as claimed as a live replica's, so the advertisement the
+        // coordinator bin-packs on must count them
+        gpu_memory_free: (identity.gpu_memory_total
+            - (live + warm) as f64 * identity.replica_gpu_memory)
+            .max(0.0),
+        frame,
+        arrival_rps: supervisor::forecast_sample(state, 3).unwrap_or(0.0),
+        queue_wait,
+    };
+    let resp = http::Response::json(200, status.to_json().to_string_compact());
+    finish(req, stream, state, "/cluster/status", t0, resp)
+}
+
+/// `POST /cluster/scale-up` — a coordinator placement landing on this
+/// node: bring one more replica live (warm promotion when the pool has a
+/// standby). `409` when the node is at its advertised ceiling, so the
+/// coordinator's inventory and the node's truth cannot drift silently.
+fn cluster_scale_up(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &Arc<GatewayState>,
+    t0: Instant,
+) -> std::io::Result<()> {
+    let Some(identity) = state.cfg.node.clone() else {
+        return not_a_node(req, stream, state, "/cluster/scale-up", t0);
+    };
+    let live = state.replicas.read().unwrap().len();
+    let warm = state.warm.lock().unwrap().len();
+    // promotion consumes a warm engine rather than building a new one, but
+    // the background refill rebuilds the standby — so admission counts
+    // warm engines too: a node never holds more initialized engines than
+    // its advertisement fits
+    let free = identity.gpu_memory_total - (live + warm) as f64 * identity.replica_gpu_memory;
+    if live >= identity.max_replicas || free < identity.replica_gpu_memory || free <= 0.0 {
+        let body = openai::to_wire(&openai::error_body(
+            "node_full",
+            &format!(
+                "node {} has no room: {live} live + {warm} warm replicas, {free:.2} \
+                 gpu_memory free",
+                identity.node_id
+            ),
+        ));
+        return finish(req, stream, state, "/cluster/scale-up", t0, http::Response::json(409, body));
+    }
+    match hot_add_replica(state) {
+        Ok(id) => {
+            let live = state.replicas.read().unwrap().len();
+            let body = format!(
+                "{{\"node_id\":{},\"replica_id\":{id},\"live_replicas\":{live}}}",
+                crate::util::json::s(&identity.node_id).to_string_compact()
+            );
+            finish(req, stream, state, "/cluster/scale-up", t0, http::Response::json(200, body))
+        }
+        Err(e) => {
+            let body = openai::to_wire(&openai::error_body("internal_error", &format!("{e}")));
+            finish(req, stream, state, "/cluster/scale-up", t0, http::Response::json(500, body))
+        }
+    }
+}
+
+/// `POST /cluster/scale-down` — drain-then-retire this node's newest
+/// replica. `409` when only one replica is live: a node never retires its
+/// last routable replica (removing the whole node is the coordinator's
+/// call, not a drain's side effect).
+fn cluster_scale_down(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &Arc<GatewayState>,
+    t0: Instant,
+) -> std::io::Result<()> {
+    let Some(identity) = state.cfg.node.clone() else {
+        return not_a_node(req, stream, state, "/cluster/scale-down", t0);
+    };
+    let newest = {
+        let replicas = state.replicas.read().unwrap();
+        if replicas.len() <= 1 {
+            None
+        } else {
+            replicas.keys().max().copied()
+        }
+    };
+    let Some(id) = newest else {
+        let body = openai::to_wire(&openai::error_body(
+            "node_at_floor",
+            &format!("node {} will not retire its last replica", identity.node_id),
+        ));
+        return finish(req, stream, state, "/cluster/scale-down", t0, http::Response::json(409, body));
+    };
+    match retire_replica(state, id) {
+        Ok(()) => {
+            let live = state.replicas.read().unwrap().len();
+            let body = format!(
+                "{{\"node_id\":{},\"retired\":{id},\"live_replicas\":{live}}}",
+                crate::util::json::s(&identity.node_id).to_string_compact()
+            );
+            finish(req, stream, state, "/cluster/scale-down", t0, http::Response::json(200, body))
+        }
+        Err(e) => {
+            let body = openai::to_wire(&openai::error_body("internal_error", &format!("{e}")));
+            finish(req, stream, state, "/cluster/scale-down", t0, http::Response::json(500, body))
+        }
     }
 }
 

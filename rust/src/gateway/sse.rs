@@ -33,6 +33,13 @@ impl<W: Write> ChunkedWriter<W> {
         ChunkedWriter { w, finished: false }
     }
 
+    /// The underlying writer — for response-head bytes that must precede
+    /// the chunked body (the cluster coordinator's SSE relay writes the
+    /// head lazily, only once the upstream produced its first chunk).
+    pub fn inner_mut(&mut self) -> &mut W {
+        &mut self.w
+    }
+
     pub fn write_chunk(&mut self, payload: &[u8]) -> std::io::Result<()> {
         if payload.is_empty() || self.finished {
             return Ok(()); // empty chunk would terminate the body early

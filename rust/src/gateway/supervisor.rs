@@ -270,16 +270,18 @@ pub struct SupervisorSnapshot {
 }
 
 /// Consecutive-sample counters feeding the patience rule. Pure logic so
-/// the decision layer is testable without threads or sockets.
+/// the decision layer is testable without threads or sockets — and shared
+/// with the cluster-wide supervisor ([`crate::cluster::coordinator`]),
+/// which runs the same rule over cluster-mean rows.
 #[derive(Debug, Default)]
-struct Streaks {
+pub(crate) struct Streaks {
     up: usize,
     down: usize,
     wait: usize,
 }
 
 impl Streaks {
-    fn observe(&mut self, d: &Detection, queue_wait: f64, wait_budget: f64) {
+    pub(crate) fn observe(&mut self, d: &Detection, queue_wait: f64, wait_budget: f64) {
         if d.is_anomaly && d.direction == ScaleDirection::Up {
             self.up += 1;
             self.down = 0;
@@ -300,7 +302,7 @@ impl Streaks {
     /// The action the patience rule asks for, if any. Scale-up wins ties:
     /// under genuine overload both the detector and the queue guard fire,
     /// and adding capacity is the safe direction.
-    fn decide(&self, patience: usize) -> Option<(ScaleDirection, Trigger)> {
+    pub(crate) fn decide(&self, patience: usize) -> Option<(ScaleDirection, Trigger)> {
         let patience = patience.max(1);
         if self.up >= patience {
             Some((ScaleDirection::Up, Trigger::Detector))
@@ -313,7 +315,7 @@ impl Streaks {
         }
     }
 
-    fn reset(&mut self) {
+    pub(crate) fn reset(&mut self) {
         *self = Streaks::default();
     }
 }
@@ -738,8 +740,9 @@ fn live_instances(state: &GatewayState) -> Vec<String> {
 
 /// Mean of the newest `k` `n_arriving` frame values per live replica,
 /// summed across the live set: the cluster arrival rate the forecaster
-/// consumes. `None` until at least one replica recorded a frame.
-fn forecast_sample(state: &GatewayState, k: usize) -> Option<f64> {
+/// consumes (also the `arrival_rps` a node reports on `/cluster/status`).
+/// `None` until at least one replica recorded a frame.
+pub(crate) fn forecast_sample(state: &GatewayState, k: usize) -> Option<f64> {
     let instances = live_instances(state);
     if instances.is_empty() {
         return None;
@@ -806,9 +809,10 @@ fn record_event(
 }
 
 /// Average the newest Table II frame (and mean queue wait) of every live
-/// replica into one detector row. `None` until at least one replica has
-/// recorded a frame.
-fn cluster_sample(state: &GatewayState) -> Option<(Frame, f64)> {
+/// replica into one detector row (also the aggregate a node reports on
+/// `/cluster/status`). `None` until at least one replica has recorded a
+/// frame.
+pub(crate) fn cluster_sample(state: &GatewayState) -> Option<(Frame, f64)> {
     let instances = live_instances(state);
     if instances.is_empty() {
         return None;

@@ -11,6 +11,10 @@
 //! * [`gateway`] is the network-facing serving surface: an OpenAI-compatible
 //!   HTTP server with SSE streaming, admission control and a Prometheus
 //!   `/metrics` endpoint, dispatching through the router to engine replicas.
+//! * [`cluster`] is the distributed serving plane (§V's deployment
+//!   execution engine): a coordinator that owns ingress, routes across
+//!   `enova node` processes, and turns scaling decisions into cross-node
+//!   *placements* (bin-packing by free `gpu_memory`, spread-by-default).
 //! * [`config`] is the paper's service configuration module (OLS + t-test,
 //!   KDE, EVT, task clustering, linear programming).
 //! * [`detect`] is the performance detection module (semi-supervised VAE +
@@ -51,6 +55,7 @@ pub mod stats {
 pub mod autoscaler;
 pub mod baselines;
 pub mod bench;
+pub mod cluster;
 pub mod clusterer;
 pub mod config;
 pub mod deployer;

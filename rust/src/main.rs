@@ -23,13 +23,25 @@ COMMANDS:
               --forecast [--forecast-horizon-ms N --forecast-err-budget F
               --forecast-season-ms N --forecast-capacity RPS --forecast-headroom F
               --forecast-min-warm N])
+              distributed plane: --cluster turns this process into the cluster
+              coordinator (ingress + heartbeats + cross-node placement; no local
+              engines): [--heartbeat-ms N --node-timeout-beats N
+              --dispatch-attempts N] plus the --autoscale/--forecast supervisor
+              flags above, now scoped cluster-wide
+  node        one serving node of the distributed plane: the gateway plus the
+              /cluster/* control surface, registering with a coordinator
+              (--coordinator HOST:PORT --node-id NAME --gpu-memory F
+              --replica-gpu-memory F --node-max-replicas N --capacity-rps F
+              --announce-ms N --advertise HOST:PORT + the serve-http engine
+              flags: --engine --replicas --port --warm-pool ...)
   loadgen     load against a gateway (--addr HOST:PORT [--report FILE] [--strict];
               closed loop: --concurrency N --requests N --max-tokens N;
               open-loop scenarios: --scenario steady|diurnal|spike|ramp|mixture
               --duration-s F --base-rps F --peak-rps F --period-s F --spike-start F
               --spike-len F --seed N --workers N)
   bench-gateway  in-process scenario benchmark (--report FILE --baseline FILE
-              --scenarios a,b,c --duration-s F --regression-pct F)
+              --scenarios a,b,c --duration-s F --regression-pct F
+              [--no-cluster-bench to skip the 2-node cluster scenario])
   recommend   run the service configuration module for --model <name> --gpu <name>
   detect      calibrate + run the performance detector on the trace dataset
   simulate    simulate a replica (--model --gpu --rps --seconds --max-num-seqs)
@@ -37,12 +49,20 @@ COMMANDS:
 ";
 
 fn main() -> anyhow::Result<()> {
-    let mut args =
-        Args::from_env_known(&["verbose", "autoscale", "reconfig", "strict", "forecast"]);
+    let mut args = Args::from_env_known(&[
+        "verbose",
+        "autoscale",
+        "reconfig",
+        "strict",
+        "forecast",
+        "cluster",
+        "no-cluster-bench",
+    ]);
     let cmd = args.subcommand();
     match cmd.as_str() {
         "serve" => serve(&args),
         "serve-http" => serve_http(&args),
+        "node" => node_cmd(&args),
         "loadgen" => loadgen_cmd(&args),
         "bench-gateway" => bench_gateway(&args),
         "recommend" => recommend(&args),
@@ -163,23 +183,18 @@ fn lm_spawner(
     })
 }
 
-/// `enova serve-http`: the OpenAI-compatible serving gateway. `--engine
-/// auto` (default) uses the compiled LM when artifacts exist and falls
-/// back to the deterministic sim engine otherwise. With `--autoscale`,
-/// the closed-loop supervisor hot-adds / retires replicas from the
-/// performance detector's decisions; with `--reconfig` it also re-derives
-/// `max_num_seqs`/`gpu_memory` from the live monitoring window (§IV-A)
-/// and applies the verdict to running replicas. `--warm-pool N` keeps N
-/// standby replicas pre-initialized so scale-ups skip engine init.
-fn serve_http(args: &Args) -> anyhow::Result<()> {
+/// Build the reusable engine spawner the `serve-http` and `node`
+/// subcommands share, from the engine CLI flags. Returns the spawner and
+/// the resolved engine kind.
+fn spawner_from_args(
+    args: &Args,
+) -> anyhow::Result<(enova::gateway::EngineSpawner, &'static str)> {
     use enova::engine::sim::{SimEngine, SimEngineConfig};
     use enova::engine::StreamEngine;
-    use enova::gateway::supervisor::{ForecastPolicy, ReconfigPolicy, SupervisorConfig};
-    use enova::gateway::{EngineSpawner, Gateway, GatewayConfig};
+    use enova::gateway::EngineSpawner;
     use std::sync::Arc;
     use std::time::Duration;
 
-    let replicas = args.get_usize("replicas", 2).max(1);
     let max_num_seqs = args.get_usize("max-num-seqs", 8);
     let max_tokens = args.get_usize("max-tokens", 64);
     let temperature = args.get_f64("temperature", 0.7);
@@ -210,6 +225,34 @@ fn serve_http(args: &Args) -> anyhow::Result<()> {
             })) as Box<dyn StreamEngine>)
         })
     };
+    Ok((spawner, engine_kind))
+}
+
+/// `enova serve-http`: the OpenAI-compatible serving gateway. `--engine
+/// auto` (default) uses the compiled LM when artifacts exist and falls
+/// back to the deterministic sim engine otherwise. With `--autoscale`,
+/// the closed-loop supervisor hot-adds / retires replicas from the
+/// performance detector's decisions; with `--reconfig` it also re-derives
+/// `max_num_seqs`/`gpu_memory` from the live monitoring window (§IV-A)
+/// and applies the verdict to running replicas. `--warm-pool N` keeps N
+/// standby replicas pre-initialized so scale-ups skip engine init.
+///
+/// `--cluster` turns this process into the *cluster coordinator* instead:
+/// no local engines — it owns ingress, heartbeats the registered `enova
+/// node` fleet, and turns the same supervisor flags into cross-node
+/// placement decisions.
+fn serve_http(args: &Args) -> anyhow::Result<()> {
+    use enova::gateway::supervisor::{ForecastPolicy, ReconfigPolicy, SupervisorConfig};
+    use enova::gateway::{Gateway, GatewayConfig};
+    use std::time::Duration;
+
+    if args.flag("cluster") {
+        return serve_cluster(args);
+    }
+
+    let replicas = args.get_usize("replicas", 2).max(1);
+    let max_tokens = args.get_usize("max-tokens", 64);
+    let (spawner, engine_kind) = spawner_from_args(args)?;
 
     let autoscale = args.flag("autoscale");
     let reconfig = args.flag("reconfig");
@@ -273,6 +316,128 @@ fn serve_http(args: &Args) -> anyhow::Result<()> {
     );
     println!("  try: curl -s http://{}/healthz", gw.addr);
     gw.serve_forever();
+    Ok(())
+}
+
+/// `enova serve-http --cluster`: the coordinator of the distributed
+/// serving plane. Owns ingress (same OpenAI surface, node-aware routing
+/// with retry-on-node-death), heartbeats the registered node fleet, and
+/// runs the supervisor cluster-wide — scale decisions become placements
+/// (`/metrics` exports `enova_cluster_*`).
+fn serve_cluster(args: &Args) -> anyhow::Result<()> {
+    use enova::cluster::coordinator::{ClusterPolicy, Coordinator, CoordinatorConfig};
+    use enova::gateway::supervisor::ForecastPolicy;
+    use std::time::Duration;
+
+    let autoscale = args.flag("autoscale");
+    let forecast = args.flag("forecast");
+    anyhow::ensure!(
+        !args.flag("reconfig"),
+        "--reconfig is a single-node loop; the coordinator does not reconfigure engines (yet)"
+    );
+    let scale_interval_ms = args.get_usize("scale-interval-ms", 1000).max(1);
+    let forecast_policy = forecast.then(|| ForecastPolicy {
+        horizon_steps: (args.get_usize("forecast-horizon-ms", 30_000) / scale_interval_ms).max(1),
+        season_steps: args.get_usize("forecast-season-ms", 0) / scale_interval_ms,
+        err_budget: args.get_f64("forecast-err-budget", 1.0),
+        replica_capacity_rps: args.get_f64("forecast-capacity", 0.0),
+        headroom: args.get_f64("forecast-headroom", 0.15),
+        min_warm: args.get_usize("forecast-min-warm", 1),
+    });
+    let port = args.get_usize("port", 8080);
+    anyhow::ensure!(port <= u16::MAX as usize, "--port must be 0..=65535 (got {port})");
+    let cfg = CoordinatorConfig {
+        host: args.get_or("host", "127.0.0.1").to_string(),
+        port: port as u16,
+        http_workers: args.get_usize("http-workers", 64),
+        max_pending: args.get_usize("max-pending", 1024),
+        rate_limit: args.get_f64("rate", 0.0),
+        rate_burst: args.get_usize("burst", 64),
+        heartbeat_interval: Duration::from_millis(args.get_usize("heartbeat-ms", 500) as u64),
+        node_timeout_beats: args.get_usize("node-timeout-beats", 3).max(1) as u32,
+        dispatch_attempts: args.get_usize("dispatch-attempts", 3).max(1),
+        policy: ClusterPolicy {
+            sample_interval: Duration::from_millis(scale_interval_ms as u64),
+            calib_samples: args.get_usize("calib-samples", 30),
+            patience: args.get_usize("patience", 3),
+            cooldown: Duration::from_millis(args.get_usize("cooldown-ms", 30_000) as u64),
+            min_replicas: args.get_usize("min-replicas", 1).max(1),
+            max_replicas: args.get_usize("max-replicas", 8),
+            queue_wait_budget: Duration::from_millis(
+                args.get_usize("queue-wait-budget-ms", 500) as u64,
+            ),
+            detector_scaling: autoscale,
+            forecast: forecast_policy,
+        },
+        ..CoordinatorConfig::default()
+    };
+    let coordinator = Coordinator::start(cfg)?;
+    println!(
+        "enova cluster coordinator on http://{} (autoscale: {}, forecast: {})",
+        coordinator.addr,
+        if autoscale { "on" } else { "off" },
+        if forecast { "on" } else { "off" },
+    );
+    println!("  nodes join with: enova node --coordinator {}", coordinator.addr);
+    coordinator.serve_forever();
+    Ok(())
+}
+
+/// `enova node`: one serving node of the distributed plane — the full
+/// gateway (engines, warm pool, `/metrics`) in node mode, registering
+/// with a coordinator and executing its placement decisions.
+fn node_cmd(args: &Args) -> anyhow::Result<()> {
+    use enova::cluster::node::{NodeConfig, NodeServer};
+    use enova::cluster::NodeIdentity;
+    use enova::gateway::GatewayConfig;
+    use std::time::Duration;
+
+    let replicas = args.get_usize("replicas", 1).max(1);
+    let (spawner, engine_kind) = spawner_from_args(args)?;
+    let port = args.get_usize("port", 8081);
+    anyhow::ensure!(port <= u16::MAX as usize, "--port must be 0..=65535 (got {port})");
+
+    let gpu_memory_total = args.get_f64("gpu-memory", 24.0);
+    let replica_gpu_memory = args.get_f64("replica-gpu-memory", 8.0);
+    anyhow::ensure!(
+        gpu_memory_total > 0.0 && replica_gpu_memory > 0.0,
+        "--gpu-memory and --replica-gpu-memory must be positive"
+    );
+    let fit = (gpu_memory_total / replica_gpu_memory).floor() as usize;
+    let identity = NodeIdentity {
+        node_id: args.get_or("node-id", &format!("node-{port}")).to_string(),
+        gpu_memory_total,
+        replica_gpu_memory,
+        max_replicas: args.get_usize("node-max-replicas", fit.max(1)),
+        replica_capacity_rps: args.get_f64("capacity-rps", 0.0),
+    };
+    let cfg = NodeConfig {
+        gateway: GatewayConfig {
+            host: args.get_or("host", "127.0.0.1").to_string(),
+            port: port as u16,
+            max_tokens_default: args.get_usize("max-tokens", 64),
+            max_pending: args.get_usize("max-pending", 256),
+            rate_limit: args.get_f64("rate", 0.0),
+            rate_burst: args.get_usize("burst", 64),
+            http_workers: args.get_usize("http-workers", 64),
+            queue_budget: Duration::from_millis(args.get_usize("queue-budget-ms", 0) as u64),
+            warm_pool: args.get_usize("warm-pool", 0),
+            ..GatewayConfig::default()
+        },
+        identity,
+        initial_replicas: replicas,
+        coordinator: args.get("coordinator").map(str::to_string),
+        announce_interval: Duration::from_millis(args.get_usize("announce-ms", 1000).max(50) as u64),
+        advertise_addr: args.get("advertise").map(str::to_string),
+    };
+    let node = NodeServer::start(cfg, spawner)?;
+    println!(
+        "enova node {} on http://{} ({replicas}x {engine_kind} replica(s), coordinator: {})",
+        node.node_id(),
+        node.addr_string(),
+        args.get_or("coordinator", "none"),
+    );
+    node.serve_forever();
     Ok(())
 }
 
@@ -452,6 +617,11 @@ fn bench_gateway(args: &Args) -> anyhow::Result<()> {
             ("reactive_scale_events", num(snap.reactive_events as f64)),
         ]));
     }
+    // the distributed plane rides the same perf trajectory: a 2-node
+    // in-process cluster under the spike scenario, same report columns
+    if !args.flag("no-cluster-bench") {
+        rows.push(bench_cluster_row(duration)?);
+    }
     let out = obj([
         ("bench", s("gateway_scenarios")),
         ("duration_s", num(duration)),
@@ -491,6 +661,106 @@ fn bench_gateway(args: &Args) -> anyhow::Result<()> {
         println!("{name}: p95 {new_p95:.1}ms vs baseline {old_p95:.1}ms — ok");
     }
     Ok(())
+}
+
+/// The 2-node cluster scenario of `bench-gateway`: an in-process
+/// coordinator + two sim-engine nodes under the spike scenario, driven
+/// through the coordinator's ingress — so the distributed plane is on the
+/// same p95 regression trajectory as the single-gateway scenarios.
+fn bench_cluster_row(duration: f64) -> anyhow::Result<enova::util::json::Json> {
+    use enova::cluster::coordinator::{ClusterPolicy, Coordinator, CoordinatorConfig};
+    use enova::cluster::node::{NodeConfig, NodeServer};
+    use enova::cluster::NodeIdentity;
+    use enova::engine::sim::{SimEngine, SimEngineConfig};
+    use enova::engine::StreamEngine;
+    use enova::gateway::loadgen::{self, ScenarioConfig, ScenarioKind};
+    use enova::gateway::supervisor::ForecastPolicy;
+    use enova::gateway::{EngineSpawner, GatewayConfig};
+    use enova::util::json::{num, obj, s, Json};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let sim_spawner = || -> EngineSpawner {
+        Arc::new(|_id| {
+            Ok(Box::new(SimEngine::new(SimEngineConfig {
+                max_num_seqs: 4,
+                max_tokens: 64,
+                step_delay: Duration::from_millis(2),
+            })) as Box<dyn StreamEngine>)
+        })
+    };
+    let coordinator = Coordinator::start(CoordinatorConfig {
+        heartbeat_interval: Duration::from_millis(100),
+        policy: ClusterPolicy {
+            sample_interval: Duration::from_millis(100),
+            cooldown: Duration::from_millis(1000),
+            min_replicas: 2,
+            max_replicas: 4,
+            detector_scaling: false,
+            forecast: Some(ForecastPolicy {
+                horizon_steps: 10,
+                err_budget: 1.5,
+                replica_capacity_rps: 40.0,
+                ..ForecastPolicy::default()
+            }),
+            ..ClusterPolicy::default()
+        },
+        ..CoordinatorConfig::default()
+    })?;
+    let node_cfg = |id: &str| NodeConfig {
+        gateway: GatewayConfig {
+            max_pending: 1024,
+            monitor_interval: Duration::from_millis(50),
+            warm_pool: 1,
+            ..GatewayConfig::default()
+        },
+        identity: NodeIdentity {
+            node_id: id.to_string(),
+            gpu_memory_total: 24.0,
+            replica_gpu_memory: 8.0,
+            max_replicas: 2,
+            replica_capacity_rps: 40.0,
+        },
+        initial_replicas: 1,
+        coordinator: Some(coordinator.addr_string()),
+        announce_interval: Duration::from_millis(200),
+        advertise_addr: None,
+    };
+    let node_a = NodeServer::start(node_cfg("bench-node-a"), sim_spawner())?;
+    let node_b = NodeServer::start(node_cfg("bench-node-b"), sim_spawner())?;
+    anyhow::ensure!(
+        coordinator.wait_for_nodes(2, Duration::from_secs(10)),
+        "bench cluster never reached 2 serving nodes"
+    );
+    let scn = ScenarioConfig {
+        kind: ScenarioKind::Spike,
+        duration: Duration::from_secs_f64(duration),
+        base_rps: 4.0,
+        peak_rps: 24.0,
+        seed: 11,
+        workers: 32,
+        max_tokens: 8,
+        ..ScenarioConfig::default()
+    };
+    let report = loadgen::run_scenario(&coordinator.addr_string(), &scn);
+    let placements = coordinator.placements().len();
+    let nodes = coordinator.healthy_nodes();
+    coordinator.shutdown();
+    node_a.shutdown();
+    node_b.shutdown();
+    println!("cluster_spike_2node: {}", report.summary());
+    let row: Json = obj([
+        ("scenario", s("cluster_spike_2node")),
+        ("nodes", num(nodes as f64)),
+        ("requests", num(report.requests as f64)),
+        ("errors", num(report.errors as f64)),
+        ("shed_503", num(report.count(503) as f64)),
+        ("p50_ms", num(report.p50_ms)),
+        ("p95_ms", num(report.p95_ms)),
+        ("p99_ms", num(report.p99_ms)),
+        ("placements", num(placements as f64)),
+    ]);
+    Ok(row)
 }
 
 fn recommend(args: &Args) -> anyhow::Result<()> {

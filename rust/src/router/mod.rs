@@ -87,11 +87,23 @@ impl WeightedRouter {
     /// Route one request; returns the chosen replica. Call
     /// [`WeightedRouter::complete`] when the request finishes.
     pub fn dispatch(&self) -> Option<Arc<ReplicaHandle>> {
-        let chosen = self.replicas.iter().min_by(|a, b| {
-            let la = (a.inflight() as f64 + 1.0) / a.weight();
-            let lb = (b.inflight() as f64 + 1.0) / b.weight();
-            la.total_cmp(&lb)
-        })?;
+        self.dispatch_where(|_| true)
+    }
+
+    /// [`WeightedRouter::dispatch`] restricted to the replicas `keep`
+    /// admits — the retry path's building block (re-dispatch excluding
+    /// nodes that already failed this request). One implementation of the
+    /// load formula and the counter updates, shared by both paths.
+    pub fn dispatch_where(&self, keep: impl Fn(u64) -> bool) -> Option<Arc<ReplicaHandle>> {
+        let chosen = self
+            .replicas
+            .iter()
+            .filter(|r| keep(r.id))
+            .min_by(|a, b| {
+                let la = (a.inflight() as f64 + 1.0) / a.weight();
+                let lb = (b.inflight() as f64 + 1.0) / b.weight();
+                la.total_cmp(&lb)
+            })?;
         chosen.inflight.fetch_add(1, Ordering::Relaxed);
         chosen.dispatched.fetch_add(1, Ordering::Relaxed);
         Some(Arc::clone(chosen))
@@ -133,6 +145,107 @@ impl WeightedRouter {
     /// remove-one reconfigurations (replica hot-add and retirement).
     pub fn weights(&self) -> Vec<(u64, f64)> {
         self.replicas.iter().map(|r| (r.id, r.weight())).collect()
+    }
+}
+
+/// Node-aware facade over [`WeightedRouter`] for the distributed serving
+/// plane: the coordinator routes *across nodes* (string-identified, since
+/// node ids are operator-chosen names), with the same smooth weighted
+/// least-loaded policy and the same mid-flight counter preservation. Each
+/// node gets a stable internal slot id for its whole registration
+/// lifetime, so reconfigurations (health flips, weight updates from new
+/// replica counts) keep the in-flight accounting of surviving nodes.
+#[derive(Debug, Default)]
+pub struct NodeRouter {
+    inner: WeightedRouter,
+    /// node id -> stable slot; entries persist across deroutes so a node
+    /// that flaps unhealthy/healthy keeps its slot (and its counters,
+    /// while requests still hold its handle)
+    slots: BTreeMap<String, u64>,
+    names: BTreeMap<u64, String>,
+    next_slot: u64,
+}
+
+impl NodeRouter {
+    pub fn new() -> NodeRouter {
+        NodeRouter::default()
+    }
+
+    /// Number of currently routable nodes.
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    /// Replace the routable node set. Weights are typically the node's
+    /// live replica count, so least-loaded dispatch converges to
+    /// replica-proportional splits; nodes absent from `nodes` (unhealthy,
+    /// departed) stop receiving traffic but keep their slot for a later
+    /// return.
+    pub fn set_nodes(&mut self, nodes: &[(String, f64)]) {
+        let weights: Vec<(u64, f64)> = nodes
+            .iter()
+            .map(|(name, weight)| {
+                let slot = *self.slots.entry(name.clone()).or_insert_with(|| {
+                    let s = self.next_slot;
+                    self.next_slot += 1;
+                    self.names.insert(s, name.clone());
+                    s
+                });
+                (slot, *weight)
+            })
+            .collect();
+        self.inner.set_weights(&weights);
+    }
+
+    /// Route one request: the routable node with the lowest
+    /// weight-normalized in-flight load. The caller must call
+    /// [`ReplicaHandle::complete`] on the handle when the request
+    /// finishes (or is abandoned).
+    pub fn dispatch(&self) -> Option<(String, Arc<ReplicaHandle>)> {
+        let handle = self.inner.dispatch()?;
+        let name = self.names.get(&handle.id)?.clone();
+        Some((name, handle))
+    }
+
+    /// Like [`NodeRouter::dispatch`] but never picks a node in `exclude` —
+    /// the retry path after a node failed an attempt for this request.
+    pub fn dispatch_excluding(&self, exclude: &[String]) -> Option<(String, Arc<ReplicaHandle>)> {
+        let excluded_slots: Vec<u64> = exclude
+            .iter()
+            .filter_map(|n| self.slots.get(n).copied())
+            .collect();
+        let handle = self
+            .inner
+            .dispatch_where(|id| !excluded_slots.contains(&id))?;
+        let name = self.names.get(&handle.id)?.clone();
+        Some((name, handle))
+    }
+
+    /// In-flight count of one node (0 when unknown or derouted with no
+    /// outstanding requests).
+    pub fn inflight_of(&self, node: &str) -> u64 {
+        let Some(slot) = self.slots.get(node) else {
+            return 0;
+        };
+        self.inner
+            .replicas()
+            .iter()
+            .find(|r| r.id == *slot)
+            .map(|r| r.inflight())
+            .unwrap_or(0)
+    }
+
+    /// Currently routable node names, ascending by slot age.
+    pub fn routable(&self) -> Vec<String> {
+        self.inner
+            .replicas()
+            .iter()
+            .filter_map(|r| self.names.get(&r.id).cloned())
+            .collect()
     }
 }
 
@@ -236,5 +349,73 @@ mod tests {
         router.complete(&h); // double-complete: no underflow
         assert_eq!(router.replicas()[0].inflight(), 0);
         assert!(router.dispatch().is_some());
+    }
+
+    fn node_router(nodes: &[(&str, f64)]) -> NodeRouter {
+        let mut r = NodeRouter::new();
+        r.set_nodes(
+            &nodes
+                .iter()
+                .map(|(n, w)| (n.to_string(), *w))
+                .collect::<Vec<_>>(),
+        );
+        r
+    }
+
+    #[test]
+    fn node_router_dispatches_least_loaded_by_name() {
+        let r = node_router(&[("node-a", 1.0), ("node-b", 1.0)]);
+        let (first, h1) = r.dispatch().unwrap();
+        let (second, h2) = r.dispatch().unwrap();
+        assert_ne!(first, second, "idle node preferred");
+        h1.complete();
+        h2.complete();
+        assert_eq!(r.inflight_of("node-a"), 0);
+        assert_eq!(r.inflight_of("node-b"), 0);
+        assert_eq!(r.inflight_of("node-unknown"), 0);
+    }
+
+    #[test]
+    fn node_router_update_preserves_surviving_inflight() {
+        let mut r = node_router(&[("node-a", 1.0), ("node-b", 1.0)]);
+        let (name, h) = r.dispatch().unwrap();
+        // reconfigure: the other node leaves, the survivor is re-weighted
+        let survivor = name.clone();
+        r.set_nodes(&[(survivor.clone(), 3.0)]);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.inflight_of(&survivor), 1, "counter survived the update");
+        h.complete();
+        assert_eq!(r.inflight_of(&survivor), 0);
+        // and a flap back in reuses the old slot (counters intact)
+        r.set_nodes(&[(survivor.clone(), 1.0), ("node-c".into(), 1.0)]);
+        assert_eq!(r.routable().len(), 2);
+    }
+
+    #[test]
+    fn node_router_weight_proportional_under_saturation() {
+        let r = node_router(&[("big", 2.0), ("small", 1.0)]);
+        for _ in 0..300 {
+            r.dispatch().unwrap();
+        }
+        let big = r.inflight_of("big") as f64;
+        let small = r.inflight_of("small") as f64;
+        let ratio = big / small;
+        assert!((1.8..2.2).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn node_router_excluding_skips_failed_nodes() {
+        let r = node_router(&[("node-a", 1.0), ("node-b", 1.0)]);
+        for _ in 0..8 {
+            let (name, _h) = r.dispatch_excluding(&["node-a".to_string()]).unwrap();
+            assert_eq!(name, "node-b");
+        }
+        // excluding every node yields None, not a panic
+        assert!(r
+            .dispatch_excluding(&["node-a".to_string(), "node-b".to_string()])
+            .is_none());
+        let empty = NodeRouter::new();
+        assert!(empty.dispatch().is_none());
+        assert!(empty.is_empty());
     }
 }

@@ -1,0 +1,321 @@
+//! End-to-end tests of the distributed serving plane: a coordinator and
+//! two in-process nodes over real sockets. Under a `spike` scenario the
+//! cluster supervisor's scale-up is *placed* on the less-loaded node
+//! (spread anti-affinity), and killing a node mid-run sheds nothing — the
+//! coordinator re-routes in-flight traffic to the survivor and backfills
+//! the lost replica there.
+
+use enova::cluster::coordinator::{ClusterPolicy, Coordinator, CoordinatorConfig};
+use enova::cluster::node::{NodeConfig, NodeServer};
+use enova::cluster::NodeIdentity;
+use enova::engine::sim::{SimEngine, SimEngineConfig};
+use enova::engine::StreamEngine;
+use enova::gateway::loadgen::{self, run_scenario, LoadgenReport, ScenarioConfig, ScenarioKind};
+use enova::gateway::metrics::parse_exposition;
+use enova::gateway::supervisor::ForecastPolicy;
+use enova::gateway::{EngineSpawner, GatewayConfig};
+use enova::util::json::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn sim_spawner() -> EngineSpawner {
+    Arc::new(|_id| {
+        Ok(Box::new(SimEngine::new(SimEngineConfig {
+            max_num_seqs: 4,
+            max_tokens: 64,
+            step_delay: Duration::from_millis(2),
+        })) as Box<dyn StreamEngine>)
+    })
+}
+
+fn node_config(id: &str, coordinator: &str, initial_replicas: usize) -> NodeConfig {
+    NodeConfig {
+        gateway: GatewayConfig {
+            max_pending: 1024,
+            max_tokens_default: 8,
+            monitor_interval: Duration::from_millis(25),
+            warm_pool: 1,
+            ..GatewayConfig::default()
+        },
+        identity: NodeIdentity {
+            node_id: id.to_string(),
+            gpu_memory_total: 24.0,
+            replica_gpu_memory: 8.0,
+            max_replicas: 3,
+            replica_capacity_rps: 0.0,
+        },
+        initial_replicas,
+        coordinator: Some(coordinator.to_string()),
+        announce_interval: Duration::from_millis(100),
+        advertise_addr: None,
+    }
+}
+
+fn non_2xx(report: &LoadgenReport) -> usize {
+    report
+        .status_counts
+        .iter()
+        .filter(|&(&code, _)| !(200..300).contains(&code))
+        .map(|(_, &n)| n)
+        .sum()
+}
+
+/// The headline placement behavior: a spike drives the forecast planner
+/// over per-replica capacity, and the resulting scale-up lands on the
+/// *emptier* node (node-b with 1 replica, not node-a with 2) — spread
+/// anti-affinity over free gpu_memory, decided at the coordinator.
+#[test]
+fn spike_scale_up_lands_on_the_emptier_node() {
+    let coordinator = Coordinator::start(CoordinatorConfig {
+        heartbeat_interval: Duration::from_millis(50),
+        node_timeout_beats: 4,
+        max_pending: 2048,
+        policy: ClusterPolicy {
+            sample_interval: Duration::from_millis(50),
+            cooldown: Duration::from_millis(400),
+            min_replicas: 1,
+            max_replicas: 6,
+            // this test must prove the *placement* of proactive
+            // decisions; the reactive detector stays off
+            detector_scaling: false,
+            forecast: Some(ForecastPolicy {
+                horizon_steps: 4,
+                season_steps: 0,
+                err_budget: 50.0,
+                replica_capacity_rps: 6.0,
+                headroom: 0.0,
+                min_warm: 0,
+            }),
+            ..ClusterPolicy::default()
+        },
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let addr = coordinator.addr_string();
+
+    // node-a carries 2 replicas, node-b only 1: the next placement must
+    // prefer node-b
+    let node_a = NodeServer::start(node_config("node-a", &addr, 2), sim_spawner()).unwrap();
+    let node_b = NodeServer::start(node_config("node-b", &addr, 1), sim_spawner()).unwrap();
+    assert!(
+        coordinator.wait_for_nodes(2, Duration::from_secs(10)),
+        "both nodes registered and serving"
+    );
+    assert!(
+        coordinator.wait_for_replicas(3, Duration::from_secs(10)),
+        "heartbeats observed all 3 initial replicas"
+    );
+
+    let scn = ScenarioConfig {
+        kind: ScenarioKind::Spike,
+        duration: Duration::from_secs(8),
+        base_rps: 2.0,
+        peak_rps: 30.0,
+        spike_start: 0.3,
+        spike_len: 0.5,
+        seed: 7,
+        workers: 48,
+        max_tokens: 4,
+        ..ScenarioConfig::default()
+    };
+    let report = run_scenario(&addr, &scn);
+    assert_eq!(report.errors, 0, "no transport errors: {}", report.summary());
+    assert_eq!(non_2xx(&report), 0, "clean run: {:?}", report.status_counts);
+
+    // the spike produced at least one placement, and the first landed on
+    // the emptier node
+    let placements = coordinator.placements();
+    let first_up = placements
+        .iter()
+        .find(|p| p.up)
+        .expect("the spike forced at least one placement");
+    assert_eq!(first_up.node_id, "node-b", "spread anti-affinity: {placements:?}");
+    assert_eq!(first_up.reason, "forecast", "the proactive planner placed it");
+    assert!(
+        coordinator.replicas_on("node-b") >= 2,
+        "node-b grew: {:?}",
+        coordinator.nodes()
+    );
+    assert!(node_b.gateway().live_replicas().len() >= 2, "the node really scaled");
+
+    // the coordinator's scrape speaks the cluster vocabulary
+    let scrape = loadgen::get(&addr, "/metrics").unwrap();
+    assert_eq!(scrape.status, 200);
+    let samples = parse_exposition(&scrape.body_str()).expect("valid exposition");
+    let value = |name: &str| {
+        samples
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("missing {name}"))
+            .value
+    };
+    assert_eq!(value("enova_cluster_nodes"), 2.0);
+    let placement_total: f64 = samples
+        .iter()
+        .filter(|s| s.name == "enova_cluster_placement_total")
+        .map(|s| s.value)
+        .sum();
+    assert!(placement_total >= 1.0, "placement counter moved");
+    for node in ["node-a", "node-b"] {
+        assert!(
+            samples.iter().any(|s| s.name == "enova_cluster_replicas_per_node"
+                && s.labels.get("node").map(String::as_str) == Some(node)),
+            "missing per-node replica gauge for {node}"
+        );
+    }
+
+    coordinator.shutdown();
+    node_a.shutdown();
+    node_b.shutdown();
+}
+
+/// Kill a node mid-run: the loadgen report still shows zero transport
+/// errors and zero non-2xx (unary requests re-dispatch to the survivor),
+/// the coordinator declares the node dead, and the lost replica is
+/// backfilled on the surviving node.
+#[test]
+fn killing_a_node_mid_run_sheds_nothing() {
+    let coordinator = Coordinator::start(CoordinatorConfig {
+        heartbeat_interval: Duration::from_millis(50),
+        node_timeout_beats: 2,
+        max_pending: 2048,
+        dispatch_attempts: 4,
+        policy: ClusterPolicy {
+            sample_interval: Duration::from_millis(50),
+            // reactive/proactive loops off: this test isolates routing,
+            // death detection and backfill
+            detector_scaling: false,
+            forecast: None,
+            cooldown: Duration::from_secs(30),
+            min_replicas: 1,
+            max_replicas: 4,
+            ..ClusterPolicy::default()
+        },
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let addr = coordinator.addr_string();
+
+    let node_a = NodeServer::start(node_config("node-a", &addr, 1), sim_spawner()).unwrap();
+    let node_b = NodeServer::start(node_config("node-b", &addr, 1), sim_spawner()).unwrap();
+    assert!(coordinator.wait_for_nodes(2, Duration::from_secs(10)));
+    assert!(coordinator.wait_for_replicas(2, Duration::from_secs(10)));
+
+    // steady traffic through the whole incident
+    let scn = ScenarioConfig {
+        kind: ScenarioKind::Steady,
+        duration: Duration::from_secs(6),
+        base_rps: 6.0,
+        peak_rps: 6.0,
+        seed: 13,
+        workers: 32,
+        max_tokens: 4,
+        ..ScenarioConfig::default()
+    };
+    let loadgen_addr = addr.clone();
+    let driver = std::thread::spawn(move || run_scenario(&loadgen_addr, &scn));
+
+    // kill node-b a third of the way in
+    std::thread::sleep(Duration::from_millis(2000));
+    node_b.shutdown();
+
+    let report = driver.join().unwrap();
+    assert_eq!(
+        report.errors, 0,
+        "zero transport errors through the node death: {}",
+        report.summary()
+    );
+    assert_eq!(
+        non_2xx(&report),
+        0,
+        "zero non-2xx through the node death: {:?}",
+        report.status_counts
+    );
+
+    // the coordinator noticed the death...
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while coordinator.healthy_nodes() != 1 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(coordinator.healthy_nodes(), 1, "node-b declared dead");
+    // ...and backfilled the lost replica on the survivor
+    assert!(
+        coordinator.wait_for_replicas(2, Duration::from_secs(5)),
+        "backfill restored 2 replicas: {:?}",
+        coordinator.nodes()
+    );
+    assert!(coordinator.placements_for("backfill") >= 1, "backfill counter moved");
+    let backfill = coordinator
+        .placements()
+        .into_iter()
+        .find(|p| p.reason == "backfill")
+        .expect("a backfill placement event exists");
+    assert_eq!(backfill.node_id, "node-a", "backfill landed on the survivor");
+    assert!(
+        node_a.gateway().live_replicas().len() >= 2,
+        "the survivor really grew: {:?}",
+        node_a.gateway().live_replicas()
+    );
+
+    coordinator.shutdown();
+    node_a.shutdown();
+}
+
+/// The node control surface stands alone: status is a parseable
+/// advertisement, scale-up adds a live replica (and accounts memory),
+/// scale-down drains the newest, and the last replica is refused with a
+/// 409 — placement invariants enforced at the node boundary too.
+#[test]
+fn node_control_surface_scales_and_refuses_the_floor() {
+    let node = NodeServer::start(
+        NodeConfig {
+            identity: NodeIdentity {
+                node_id: "solo".into(),
+                gpu_memory_total: 16.0,
+                replica_gpu_memory: 8.0,
+                max_replicas: 2,
+                replica_capacity_rps: 0.0,
+            },
+            initial_replicas: 1,
+            coordinator: None,
+            ..NodeConfig::default()
+        },
+        sim_spawner(),
+    )
+    .unwrap();
+    let addr = node.addr_string();
+
+    let status = loadgen::get(&addr, "/cluster/status").unwrap();
+    assert_eq!(status.status, 200);
+    let j = status.json().unwrap();
+    assert_eq!(j.get("node_id").and_then(Json::as_str), Some("solo"));
+    assert_eq!(j.get("live_replicas").and_then(Json::as_usize), Some(1));
+    assert_eq!(j.get("gpu_memory_free").and_then(Json::as_f64), Some(8.0));
+
+    // scale up to the ceiling
+    let up = loadgen::post_json(&addr, "/cluster/scale-up", "{}").unwrap();
+    assert_eq!(up.status, 200, "{}", up.body_str());
+    assert_eq!(node.gateway().live_replicas().len(), 2);
+    let full = loadgen::post_json(&addr, "/cluster/scale-up", "{}").unwrap();
+    assert_eq!(full.status, 409, "at the ceiling: {}", full.body_str());
+    let status = loadgen::get(&addr, "/cluster/status").unwrap();
+    assert_eq!(
+        status.json().unwrap().get("gpu_memory_free").and_then(Json::as_f64),
+        Some(0.0),
+        "memory accounting followed the scale-up"
+    );
+
+    // drain back down; the floor is refused
+    let down = loadgen::post_json(&addr, "/cluster/scale-down", "{}").unwrap();
+    assert_eq!(down.status, 200, "{}", down.body_str());
+    assert_eq!(node.gateway().live_replicas().len(), 1);
+    let floor = loadgen::post_json(&addr, "/cluster/scale-down", "{}").unwrap();
+    assert_eq!(floor.status, 409, "last replica refused: {}", floor.body_str());
+
+    // a non-node gateway hides the control surface entirely (404), which
+    // this node does not
+    let missing = loadgen::get(&addr, "/cluster/nope").unwrap();
+    assert_eq!(missing.status, 404);
+
+    node.shutdown();
+}

@@ -1,0 +1,100 @@
+#!/usr/bin/env bash
+# CI cluster smoke: the distributed plane, end to end, on one runner.
+#
+#   1. boot `enova serve-http --cluster` (the coordinator) + two
+#      `enova node` processes on the sim engine;
+#   2. wait until the coordinator reports both nodes serving
+#      (enova_cluster_nodes == 2, asserted on a pre-run scrape);
+#   3. replay the `spike` scenario open-loop through the coordinator with
+#      `--strict` — any transport error or non-2xx fails the job;
+#   4. kill one node mid-run (plain `kill`, no drain — a real death) and
+#      require the report to STILL be clean: the coordinator re-routes
+#      and backfills on the survivor;
+#   5. assert the post-run scrape shows the death (1 healthy node,
+#      node_deaths_total moved) and at least one placement.
+#
+# Artifacts: the loadgen report plus both scrapes. Cleanup runs through
+# scripts/smoke_common.sh (one EXIT trap kills and reaps everything).
+#
+# Expects the release binary to be built already:
+#   cargo build --release --no-default-features  (or with default features)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+# shellcheck source=scripts/smoke_common.sh
+source scripts/smoke_common.sh
+
+BIN=rust/target/release/enova
+PORT="${CLUSTER_PORT:-18500}"
+NODE_A_PORT="${CLUSTER_NODE_A_PORT:-18501}"
+NODE_B_PORT="${CLUSTER_NODE_B_PORT:-18502}"
+REPORT="${CLUSTER_REPORT:-loadgen-cluster-report.json}"
+SCRAPE_PRE="${CLUSTER_SCRAPE_PRE:-cluster-scrape-pre.txt}"
+SCRAPE_POST="${CLUSTER_SCRAPE_POST:-cluster-scrape-post.txt}"
+
+if [[ ! -x "$BIN" ]]; then
+    echo "release binary missing at $BIN; build it first" >&2
+    exit 2
+fi
+
+start_bg "$BIN" serve-http --cluster --port "$PORT" \
+    --heartbeat-ms 100 --node-timeout-beats 3 --dispatch-attempts 4 \
+    --forecast --forecast-capacity 5 --forecast-horizon-ms 1000 \
+    --scale-interval-ms 200 --cooldown-ms 1000 --max-replicas 4 \
+    --max-pending 2048
+
+start_bg "$BIN" node --engine sim --port "$NODE_A_PORT" \
+    --coordinator "127.0.0.1:$PORT" --node-id node-a --replicas 1 --warm-pool 1 \
+    --gpu-memory 24 --replica-gpu-memory 8 --max-pending 1024 --announce-ms 200
+
+start_bg "$BIN" node --engine sim --port "$NODE_B_PORT" \
+    --coordinator "127.0.0.1:$PORT" --node-id node-b --replicas 1 --warm-pool 1 \
+    --gpu-memory 24 --replica-gpu-memory 8 --max-pending 1024 --announce-ms 200
+NODE_B_PID=$SMOKE_LAST_PID
+
+# coordinator is ready once at least one node serves; then wait until the
+# heartbeats have seen both nodes' replicas (nodes flip healthy on join,
+# but replica counts only arrive with their first status poll)
+wait_http_ok "http://127.0.0.1:$PORT/ready"
+REPLICAS=0
+for _ in $(seq 1 100); do
+    REPLICAS=$(curl -fsS "http://127.0.0.1:$PORT/metrics" \
+        | sed -n 's/^enova_cluster_replicas \(.*\)$/\1/p')
+    [[ "$REPLICAS" == "2" ]] && break
+    sleep 0.1
+done
+if [[ "$REPLICAS" != "2" ]]; then
+    echo "cluster never reached 2 observed replicas (saw ${REPLICAS:-none})" >&2
+    exit 1
+fi
+
+curl -fsS "http://127.0.0.1:$PORT/metrics" > "$SCRAPE_PRE"
+grep -q '^enova_cluster_nodes 2$' "$SCRAPE_PRE"
+grep -q '^enova_cluster_replicas 2$' "$SCRAPE_PRE"
+
+# spike through the coordinator; node-b dies mid-run
+start_bg "$BIN" loadgen --addr "127.0.0.1:$PORT" --scenario spike \
+    --duration-s 8 --base-rps 2 --peak-rps 10 --seed 7 --workers 16 \
+    --max-tokens 8 --strict --report "$REPORT"
+LOADGEN_PID=$SMOKE_LAST_PID
+
+sleep 4
+echo "==> killing node-b (pid $NODE_B_PID) mid-run"
+kill "$NODE_B_PID" 2>/dev/null || true
+
+# --strict: the wait propagates loadgen's exit code, so any transport
+# error or non-2xx through the node death fails the job here
+wait "$LOADGEN_PID"
+
+echo "==> post-run scrape assertions"
+curl -fsS "http://127.0.0.1:$PORT/metrics" > "$SCRAPE_POST"
+grep -q '^enova_cluster_nodes 1$' "$SCRAPE_POST"
+grep -Eq '^enova_cluster_node_deaths_total [1-9]' "$SCRAPE_POST"
+PLACEMENTS=$(sed -n 's/^enova_cluster_placement_total{reason="[a-z_]*"} //p' "$SCRAPE_POST" \
+    | awk '{s+=$1} END {print s+0}')
+if [[ "${PLACEMENTS:-0}" -lt 1 ]]; then
+    echo "expected at least one placement, saw ${PLACEMENTS:-0}" >&2
+    exit 1
+fi
+
+echo "cluster smoke OK; report at $REPORT ($PLACEMENTS placements, node-b death absorbed)"

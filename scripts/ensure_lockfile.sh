@@ -1,15 +1,16 @@
 #!/usr/bin/env bash
-# Lockfile guard shared by every CI job.
+# Lockfile guard shared by every CI job and scripts/tier1.sh.
 #
 # * rust/Cargo.lock committed (the expected state): verify it matches
 #   Cargo.toml with `cargo metadata --locked`, which refuses to update the
 #   lockfile — any drift fails the job loudly instead of being silently
 #   regenerated away.
-# * rust/Cargo.lock absent (a fresh environment before the lockfile has
-#   been committed): generate it so this run is still pinned and cache
-#   keys stay stable, and warn that it must be committed. The tier1-sim
-#   job uploads the generated file as an artifact so committing it is a
-#   copy, not a toolchain hunt.
+# * rust/Cargo.lock absent: HARD FAIL. Running `--locked` against a
+#   lockfile generated seconds earlier pins nothing, so the old
+#   generate-on-missing fallback is gone from CI. The one escape hatch is
+#   explicit bootstrap mode (ENOVA_LOCKFILE_BOOTSTRAP=1, what
+#   scripts/tier1.sh uses for first-run developer environments): it
+#   generates a lockfile for this run and insists you commit it.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -21,8 +22,13 @@ if [[ -f Cargo.lock ]]; then
              "Run 'cargo generate-lockfile' in rust/ and commit the result." >&2
         exit 1
     fi
-else
-    echo "::warning::rust/Cargo.lock is missing — generating for this run." \
-         "Commit rust/Cargo.lock so every job runs --locked against a pinned graph."
+elif [[ "${ENOVA_LOCKFILE_BOOTSTRAP:-0}" == "1" ]]; then
+    echo "::warning::rust/Cargo.lock is missing — bootstrap mode generated one for this" \
+         "run only. Commit rust/Cargo.lock so --locked pins a real dependency graph."
     cargo generate-lockfile
+else
+    echo "::error::rust/Cargo.lock is missing. Run 'cargo generate-lockfile' in rust/" \
+         "and commit the result. (Local first run without a lockfile? Re-run with" \
+         "ENOVA_LOCKFILE_BOOTSTRAP=1.)" >&2
+    exit 1
 fi

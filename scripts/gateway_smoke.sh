@@ -8,11 +8,18 @@
 # SMOKE_SCENARIO selects an open-loop scenario (steady|diurnal|spike|ramp|
 # mixture, the CI matrix); unset, the legacy closed-loop burst runs.
 #
+# Cleanup runs through scripts/smoke_common.sh: every background process
+# is killed and reaped on EXIT, success or failure, so a failed assertion
+# never leaves a server bound to the port to poison retries.
+#
 # Expects the release binary to be built already:
 #   cargo build --release --no-default-features  (or with default features)
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
+# shellcheck source=scripts/smoke_common.sh
+source scripts/smoke_common.sh
+
 BIN=rust/target/release/enova
 PORT="${SMOKE_PORT:-18431}"
 SCENARIO="${SMOKE_SCENARIO:-}"
@@ -23,25 +30,12 @@ if [[ ! -x "$BIN" ]]; then
     exit 2
 fi
 
-"$BIN" serve-http --engine sim --port "$PORT" --replicas 2 --warm-pool 1 \
+start_bg "$BIN" serve-http --engine sim --port "$PORT" --replicas 2 --warm-pool 1 \
     --autoscale --forecast --max-replicas 3 \
-    --scale-interval-ms 200 --forecast-horizon-ms 2000 &
-SERVER=$!
-trap 'kill "$SERVER" 2>/dev/null || true' EXIT
+    --scale-interval-ms 200 --forecast-horizon-ms 2000
 
 # wait for readiness (the /ready endpoint is 503 until all replicas built)
-READY=0
-for _ in $(seq 1 150); do
-    if curl -fsS "http://127.0.0.1:$PORT/ready" >/dev/null 2>&1; then
-        READY=1
-        break
-    fi
-    sleep 0.1
-done
-if [[ "$READY" != "1" ]]; then
-    echo "gateway never became ready on :$PORT" >&2
-    exit 1
-fi
+wait_http_ok "http://127.0.0.1:$PORT/ready"
 
 if [[ -n "$SCENARIO" ]]; then
     "$BIN" loadgen --addr "127.0.0.1:$PORT" --scenario "$SCENARIO" \

@@ -1,0 +1,44 @@
+# Shared helpers for the CI smoke scripts (gateway_smoke.sh,
+# cluster_smoke.sh). Sourced, not executed.
+#
+# Every background process goes through start_bg so ONE EXIT trap kills
+# and reaps them all — a failed assertion (or ctrl-C) never leaves a
+# server bound to the port, which used to poison retries on self-hosted
+# runners.
+
+SMOKE_PIDS=()
+SMOKE_LAST_PID=""
+
+# Run a command in the background and register it for cleanup. The PID is
+# exposed via $SMOKE_LAST_PID (not stdout: command substitution would eat
+# the server's own output).
+start_bg() {
+    "$@" &
+    SMOKE_LAST_PID=$!
+    SMOKE_PIDS+=("$SMOKE_LAST_PID")
+}
+
+smoke_cleanup() {
+    local pid
+    for pid in ${SMOKE_PIDS[@]+"${SMOKE_PIDS[@]}"}; do
+        kill "$pid" 2>/dev/null || true
+    done
+    for pid in ${SMOKE_PIDS[@]+"${SMOKE_PIDS[@]}"}; do
+        wait "$pid" 2>/dev/null || true
+    done
+}
+trap smoke_cleanup EXIT
+
+# Poll a URL until it answers 2xx (default 150 x 0.1s).
+wait_http_ok() {
+    local url=$1 attempts=${2:-150}
+    local i
+    for i in $(seq 1 "$attempts"); do
+        if curl -fsS "$url" >/dev/null 2>&1; then
+            return 0
+        fi
+        sleep 0.1
+    done
+    echo "timed out waiting for $url" >&2
+    return 1
+}
