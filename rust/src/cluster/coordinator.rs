@@ -35,6 +35,10 @@ use crate::gateway::openai;
 use crate::gateway::sse::{write_sse_head, ChunkedWriter};
 use crate::gateway::supervisor::{ForecastPolicy, Streaks, Trigger};
 use crate::metrics::Frame;
+use crate::trace::{
+    ActiveTrace, DecisionRecorder, SpanKind, TraceContext, TraceRecorder, TraceSettings,
+    PHASE_ADMISSION,
+};
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
@@ -110,6 +114,8 @@ pub struct CoordinatorConfig {
     /// distinct nodes tried per request before answering 503
     pub dispatch_attempts: usize,
     pub policy: ClusterPolicy,
+    /// request tracing: sample rate, slow-trace SLO, ring capacity
+    pub trace: TraceSettings,
 }
 
 impl Default for CoordinatorConfig {
@@ -127,6 +133,7 @@ impl Default for CoordinatorConfig {
             request_timeout: Duration::from_secs(120),
             dispatch_attempts: 3,
             policy: ClusterPolicy::default(),
+            trace: TraceSettings::default(),
         }
     }
 }
@@ -188,6 +195,8 @@ struct CoordinatorState {
     gate: Arc<AdmissionGate>,
     bucket: Option<Mutex<TokenBucket>>,
     metrics: ClusterMetrics,
+    tracer: TraceRecorder,
+    decisions: DecisionRecorder,
     supervisor: Mutex<ClusterSupervisorStatus>,
     /// replica count the supervisor wants cluster-wide; node death leaves
     /// it unchanged, which is exactly what makes backfill fire. 0 = not
@@ -218,6 +227,8 @@ impl Coordinator {
             bucket: (cfg.rate_limit > 0.0)
                 .then(|| Mutex::new(TokenBucket::new(cfg.rate_limit, cfg.rate_burst))),
             metrics: ClusterMetrics::new(),
+            tracer: TraceRecorder::new(cfg.trace.clone()),
+            decisions: DecisionRecorder::new(256),
             supervisor: Mutex::new(ClusterSupervisorStatus {
                 enabled: supervisor_enabled,
                 forecast_enabled: cfg.policy.forecast.is_some(),
@@ -323,6 +334,23 @@ impl Coordinator {
     /// Total scale-up placements by metric reason (test helper).
     pub fn placements_for(&self, reason: &str) -> u64 {
         self.state.metrics.placements_for(reason)
+    }
+
+    /// Coordinator-side trace records (proxy + retry spans), oldest first.
+    pub fn traces(&self) -> Vec<crate::trace::TraceRecord> {
+        self.state.tracer.traces()
+    }
+
+    /// The decision flight recorder: every placement/drain with its cause
+    /// snapshot, oldest first.
+    pub fn decisions(&self) -> Vec<crate::trace::Decision> {
+        self.state.decisions.decisions()
+    }
+
+    /// Cluster-wide trace view: coordinator records with the node-side
+    /// spans of the same trace ID merged in (the `/debug/traces` body).
+    pub fn aggregated_traces(&self) -> Json {
+        aggregated_traces(&self.state)
     }
 
     /// Block until `n` healthy, ready nodes are registered (true) or the
@@ -557,6 +585,14 @@ fn route(
             );
             finish(req, stream, state, "/metrics", http::Response::prometheus(body))
         }
+        ("GET", "/debug/traces") => {
+            let body = aggregated_traces(state).to_string_compact();
+            finish(req, stream, state, "/debug/traces", http::Response::json(200, body))
+        }
+        ("GET", "/debug/decisions") => {
+            let body = state.decisions.export_json().to_string_compact();
+            finish(req, stream, state, "/debug/decisions", http::Response::json(200, body))
+        }
         ("GET", "/healthz") => {
             let nodes = state.nodes.read().unwrap().len();
             let body = format!(
@@ -576,7 +612,7 @@ fn route(
             finish(req, stream, state, "/ready", http::Response::json(status, body))
         }
         (_, "/v1/completions" | "/v1/chat/completions" | "/cluster/join" | "/cluster/nodes"
-        | "/metrics" | "/healthz" | "/ready") => {
+        | "/metrics" | "/healthz" | "/ready" | "/debug/traces" | "/debug/decisions") => {
             let body = openai::to_wire(&openai::error_body(
                 "invalid_request_error",
                 &format!("method {} not allowed on {}", req.method, req.path),
@@ -699,10 +735,23 @@ fn serve_proxy(
     };
     let stream_mode = json.get("stream").and_then(Json::as_bool).unwrap_or(false);
 
+    // trace context: adopt an inbound `traceparent` (the coordinator is
+    // usually the mint point, but a fronting proxy may own the ID) or
+    // mint one; the sampling decision made here rides the flags bit to
+    // every node this request touches.
+    let ctx = req
+        .header("traceparent")
+        .and_then(TraceContext::parse)
+        .map(|c| c.child())
+        .unwrap_or_else(|| TraceContext::mint(state.cfg.trace.sample_rate));
+    let trace = ActiveTrace::begin(ctx, "coordinator", &endpoint);
+
     // admission control at the ingress owner: rate, then bounded in-flight
     if let Some(bucket) = &state.bucket {
         if !bucket.lock().unwrap().try_take() {
             state.metrics.note_rate_limited();
+            trace.phase(PHASE_ADMISSION, trace.started(), Instant::now());
+            record_trace(state, &trace, 429);
             let resp = http::Response::json(
                 429,
                 openai::to_wire(&openai::error_body(
@@ -716,6 +765,8 @@ fn serve_proxy(
     }
     let Some(_permit) = AdmissionGate::try_acquire(&state.gate) else {
         state.metrics.note_queue_full();
+        trace.phase(PHASE_ADMISSION, trace.started(), Instant::now());
+        record_trace(state, &trace, 429);
         let resp = http::Response::json(
             429,
             openai::to_wire(&openai::error_body(
@@ -729,6 +780,7 @@ fn serve_proxy(
         .with_header("Retry-After", "1");
         return finish(req, stream, state, &endpoint, resp);
     };
+    trace.phase(PHASE_ADMISSION, trace.started(), Instant::now());
 
     let mut excluded: Vec<String> = Vec::new();
     let mut last_failure = String::from("no serving nodes registered");
@@ -758,14 +810,36 @@ fn serve_proxy(
         if attempt > 0 {
             state.metrics.note_proxy_retry();
         }
-        let outcome = proxy_attempt(state, &addr, &endpoint, &body, stream_mode, stream);
+        // each attempt is a child span so node-side spans parent onto the
+        // attempt that actually carried them
+        let attempt_ctx = trace.ctx().child();
+        let attempt_start = Instant::now();
+        let outcome = proxy_attempt(
+            state,
+            &addr,
+            &endpoint,
+            &body,
+            stream_mode,
+            &attempt_ctx.to_traceparent(),
+            stream,
+        );
         handle.complete();
+        let attempt_end = Instant::now();
+        trace.span(
+            "proxy",
+            SpanKind::Proxy,
+            attempt_start,
+            attempt_end,
+            vec![("node", node_id.clone()), ("attempt", attempt.to_string())],
+        );
         match outcome {
             Attempt::Done(status) => {
+                record_trace(state, &trace, status);
                 state.metrics.observe(&endpoint, status);
                 return Ok(());
             }
             Attempt::ClientGone(e) => {
+                record_trace(state, &trace, 499);
                 state.metrics.observe(&endpoint, 499);
                 return Err(e);
             }
@@ -774,6 +848,17 @@ fn serve_proxy(
                     Some(code) => format!("node {node_id} answered {code}"),
                     None => format!("node {node_id} transport failure"),
                 };
+                let cause = match status {
+                    Some(code) if !transport => format!("shed_{code}"),
+                    _ => "node_death".to_string(),
+                };
+                trace.span(
+                    "retry",
+                    SpanKind::Retry,
+                    attempt_start,
+                    attempt_end,
+                    vec![("cause", cause), ("node", node_id.clone())],
+                );
                 if transport {
                     note_node_error(state, &node_id);
                 }
@@ -781,6 +866,7 @@ fn serve_proxy(
             }
         }
     }
+    record_trace(state, &trace, 503);
     let resp = http::Response::json(
         503,
         openai::to_wire(&openai::error_body(
@@ -790,6 +876,76 @@ fn serve_proxy(
     )
     .with_header("Retry-After", "1");
     finish(req, stream, state, &endpoint, resp)
+}
+
+/// Finish the request's trace and hand it to the tail-retention ring.
+fn record_trace(state: &CoordinatorState, trace: &ActiveTrace, status: u16) {
+    state.tracer.record(trace.finish(status, state.cfg.trace.slo));
+}
+
+/// The cluster `/debug/traces` body: the coordinator's own records, with
+/// every healthy node's `/debug/traces` fetched and its spans merged into
+/// the coordinator record of the same trace ID — one trace, both sides.
+/// Node records whose coordinator side was dropped (sampling, ring
+/// eviction) surface under `node_only_traces` rather than vanishing.
+fn aggregated_traces(state: &CoordinatorState) -> Json {
+    let targets: Vec<String> = state
+        .nodes
+        .read()
+        .unwrap()
+        .values()
+        .filter(|e| e.healthy)
+        .map(|e| e.announce.addr.clone())
+        .collect();
+    let mut nodes_polled = 0usize;
+    let mut remote: BTreeMap<String, Vec<Json>> = BTreeMap::new();
+    for addr in &targets {
+        let Some(json) =
+            loadgen::request(addr, "GET", "/debug/traces", None, HEARTBEAT_RPC_TIMEOUT)
+                .ok()
+                .filter(|r| r.status == 200)
+                .and_then(|r| r.json().ok())
+        else {
+            continue;
+        };
+        nodes_polled += 1;
+        if let Some(traces) = json.get("traces").and_then(Json::as_arr) {
+            for t in traces {
+                let Some(id) = t.get("trace_id").and_then(Json::as_str) else {
+                    continue;
+                };
+                remote.entry(id.to_string()).or_default().push(t.clone());
+            }
+        }
+    }
+    let mut export = state.tracer.export_json();
+    if let Json::Obj(map) = &mut export {
+        if let Some(Json::Arr(traces)) = map.get_mut("traces") {
+            for t in traces.iter_mut() {
+                let Json::Obj(rec) = t else { continue };
+                let Some(id) = rec.get("trace_id").and_then(Json::as_str).map(str::to_string)
+                else {
+                    continue;
+                };
+                let Some(node_recs) = remote.remove(&id) else {
+                    continue;
+                };
+                if let Some(Json::Arr(spans)) = rec.get_mut("spans") {
+                    for r in &node_recs {
+                        if let Some(rs) = r.get("spans").and_then(Json::as_arr) {
+                            spans.extend(rs.iter().cloned());
+                        }
+                    }
+                }
+            }
+        }
+        map.insert("nodes_polled".to_string(), Json::Num(nodes_polled as f64));
+        map.insert(
+            "node_only_traces".to_string(),
+            Json::Arr(remote.into_values().flatten().collect()),
+        );
+    }
+    export
 }
 
 /// Run one exchange against `addr`, relaying the outcome to the client
@@ -803,6 +959,7 @@ fn proxy_attempt(
     path: &str,
     body: &str,
     stream_mode: bool,
+    traceparent: &str,
     client: &mut TcpStream,
 ) -> Attempt {
     let upstream = match open_upstream(addr, state.cfg.request_timeout) {
@@ -813,6 +970,7 @@ fn proxy_attempt(
         let mut w = &upstream;
         let head = format!(
             "POST {path} HTTP/1.1\r\nHost: {addr}\r\nAccept: */*\r\nConnection: close\r\n\
+             traceparent: {traceparent}\r\n\
              Content-Type: application/json\r\nContent-Length: {}\r\n\r\n",
             body.len()
         );
@@ -1123,10 +1281,39 @@ fn scale_up(state: &Arc<CoordinatorState>, reason: &'static str) -> Result<Place
         "cluster",
         "placed replica {replica_id} on node {chosen} (reason: {reason})"
     );
-    let mut sup = state.supervisor.lock().unwrap();
-    sup.scale_ups += 1;
-    sup.events.push(event.clone());
+    let (forecast_rps, forecast_wmape) = {
+        let mut sup = state.supervisor.lock().unwrap();
+        sup.scale_ups += 1;
+        sup.events.push(event.clone());
+        (sup.last_forecast, sup.forecast_error)
+    };
+    state.decisions.record(
+        "coordinator",
+        "placement",
+        reason,
+        vec![
+            ("node", chosen.clone()),
+            ("replica_id", replica_id.to_string()),
+            ("bin_packing", inventory_summary(&invs)),
+            ("forecast_rps", format!("{forecast_rps:.3}")),
+            ("forecast_wmape", format!("{forecast_wmape:.4}")),
+        ],
+    );
     Ok(event)
+}
+
+/// One-line bin-packing input snapshot: what every candidate node looked
+/// like when the placement chose among them.
+fn inventory_summary(invs: &[NodeInventory]) -> String {
+    invs.iter()
+        .map(|i| {
+            format!(
+                "{}={:.1}/{:.1}GB,{}r/{}max",
+                i.node_id, i.gpu_memory_free, i.gpu_memory_total, i.live_replicas, i.max_replicas
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(" ")
 }
 
 /// Execute one scale-down: drain the most-fragmented node's newest
@@ -1178,9 +1365,24 @@ fn scale_down(state: &Arc<CoordinatorState>, reason: &'static str) -> Result<Pla
         "cluster",
         "drained replica {replica_id} from node {chosen} (reason: {reason})"
     );
-    let mut sup = state.supervisor.lock().unwrap();
-    sup.scale_downs += 1;
-    sup.events.push(event.clone());
+    let (forecast_rps, forecast_wmape) = {
+        let mut sup = state.supervisor.lock().unwrap();
+        sup.scale_downs += 1;
+        sup.events.push(event.clone());
+        (sup.last_forecast, sup.forecast_error)
+    };
+    state.decisions.record(
+        "coordinator",
+        "retirement",
+        reason,
+        vec![
+            ("node", chosen.clone()),
+            ("replica_id", replica_id.to_string()),
+            ("bin_packing", inventory_summary(&invs)),
+            ("forecast_rps", format!("{forecast_rps:.3}")),
+            ("forecast_wmape", format!("{forecast_wmape:.4}")),
+        ],
+    );
     Ok(event)
 }
 

@@ -79,9 +79,18 @@ pub(crate) fn read_chunk<R: BufRead>(r: &mut R) -> Result<Option<Vec<u8>>> {
     Ok(Some(chunk))
 }
 
-fn read_chunked<R: BufRead>(r: &mut R) -> Result<Vec<u8>> {
+/// Drain a chunked body, optionally recording the wall-clock arrival of
+/// every chunk — the gateway writes one SSE event per chunk, so these
+/// instants are per-token timestamps (TTFT and inter-token gaps).
+fn read_chunked_timed<R: BufRead>(
+    r: &mut R,
+    mut chunk_times: Option<&mut Vec<Instant>>,
+) -> Result<Vec<u8>> {
     let mut body = Vec::new();
     while let Some(chunk) = read_chunk(r)? {
+        if let Some(times) = chunk_times.as_mut() {
+            times.push(Instant::now());
+        }
         body.extend_from_slice(&chunk);
     }
     Ok(body)
@@ -148,6 +157,13 @@ pub(crate) fn read_response_head<R: BufRead>(
 }
 
 fn read_response(stream: &TcpStream) -> Result<HttpResponse> {
+    read_response_timed(stream, None)
+}
+
+fn read_response_timed(
+    stream: &TcpStream,
+    chunk_times: Option<&mut Vec<Instant>>,
+) -> Result<HttpResponse> {
     let mut r = BufReader::new(stream);
     let (status, headers) = read_response_head(&mut r)?;
 
@@ -156,7 +172,7 @@ fn read_response(stream: &TcpStream) -> Result<HttpResponse> {
         .map(|v| v.eq_ignore_ascii_case("chunked"))
         .unwrap_or(false)
     {
-        read_chunked(&mut r)?
+        read_chunked_timed(&mut r, chunk_times)?
     } else if let Some(len) = headers.get("content-length") {
         let len: usize = len.parse().context("bad Content-Length in response")?;
         let mut buf = vec![0u8; len];
@@ -254,13 +270,39 @@ impl Client {
         path: &str,
         body: Option<&str>,
     ) -> Result<HttpResponse> {
+        self.request_inner(method, path, body, None)
+    }
+
+    /// [`Client::request`] that also records the arrival instant of every
+    /// chunk of a chunked (SSE) response body into `chunk_times` — the
+    /// raw material for TTFT and inter-token-latency percentiles.
+    pub fn request_timed(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+        chunk_times: &mut Vec<Instant>,
+    ) -> Result<HttpResponse> {
+        self.request_inner(method, path, body, Some(chunk_times))
+    }
+
+    fn request_inner(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+        mut chunk_times: Option<&mut Vec<Instant>>,
+    ) -> Result<HttpResponse> {
         let reused = self.stream.is_some();
-        match self.try_request(method, path, body) {
+        match self.try_request(method, path, body, chunk_times.as_mut().map(|t| &mut **t)) {
             Ok(resp) => Ok(resp),
             Err(e) => {
                 self.stream = None;
                 if reused && stale_socket_error(&e) {
-                    self.try_request(method, path, body)
+                    if let Some(times) = chunk_times.as_mut() {
+                        times.clear();
+                    }
+                    self.try_request(method, path, body, chunk_times)
                 } else {
                     Err(e)
                 }
@@ -268,7 +310,13 @@ impl Client {
         }
     }
 
-    fn try_request(&mut self, method: &str, path: &str, body: Option<&str>) -> Result<HttpResponse> {
+    fn try_request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+        chunk_times: Option<&mut Vec<Instant>>,
+    ) -> Result<HttpResponse> {
         self.connect()?;
         let resp = {
             let stream = self.stream.as_ref().expect("connected above");
@@ -278,7 +326,7 @@ impl Client {
                 w.write_all(b.as_bytes())?;
             }
             w.flush()?;
-            read_response(stream)?
+            read_response_timed(stream, chunk_times)?
         };
         // honor the server's wish to close; an unframed body also means
         // the connection is done
@@ -366,6 +414,15 @@ pub struct LoadgenReport {
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
+    /// time-to-first-token over streamed 200s, from request send to the
+    /// first SSE chunk on the wire (0 when nothing streamed)
+    pub ttft_p50_ms: f64,
+    pub ttft_p95_ms: f64,
+    pub ttft_p99_ms: f64,
+    /// inter-token latency: gaps between consecutive SSE content chunks
+    pub itl_p50_ms: f64,
+    pub itl_p95_ms: f64,
+    pub itl_p99_ms: f64,
     pub elapsed_secs: f64,
     /// shape parameters of the scenario that generated this report
     /// (open-loop runs only)
@@ -397,6 +454,12 @@ impl LoadgenReport {
             ("p50_ms", num(self.p50_ms)),
             ("p95_ms", num(self.p95_ms)),
             ("p99_ms", num(self.p99_ms)),
+            ("ttft_p50_ms", num(self.ttft_p50_ms)),
+            ("ttft_p95_ms", num(self.ttft_p95_ms)),
+            ("ttft_p99_ms", num(self.ttft_p99_ms)),
+            ("itl_p50_ms", num(self.itl_p50_ms)),
+            ("itl_p95_ms", num(self.itl_p95_ms)),
+            ("itl_p99_ms", num(self.itl_p99_ms)),
             ("elapsed_secs", num(self.elapsed_secs)),
             (
                 "requests_per_sec",
@@ -413,7 +476,7 @@ impl LoadgenReport {
         format!(
             "{} requests in {:.2}s ({:.1} req/s) over {} connections: {} ok, {} errors, \
              statuses {:?}, {} completion tokens, {} SSE events, p50 {:.1}ms p95 {:.1}ms \
-             p99 {:.1}ms",
+             p99 {:.1}ms, ttft p50 {:.1}ms p95 {:.1}ms, itl p50 {:.1}ms p95 {:.1}ms",
             self.requests,
             self.elapsed_secs,
             self.requests as f64 / self.elapsed_secs.max(1e-9),
@@ -426,6 +489,10 @@ impl LoadgenReport {
             self.p50_ms,
             self.p95_ms,
             self.p99_ms,
+            self.ttft_p50_ms,
+            self.ttft_p95_ms,
+            self.itl_p50_ms,
+            self.itl_p95_ms,
         )
     }
 }
@@ -435,6 +502,10 @@ struct OneResult {
     latency: Duration,
     sse_events: usize,
     completion_tokens: usize,
+    /// streamed 200s only: send → first SSE chunk, in seconds
+    ttft: Option<f64>,
+    /// streamed 200s only: gaps between consecutive content chunks
+    inter_token_gaps: Vec<f64>,
 }
 
 fn one_request(client: &mut Client, cfg: &LoadgenConfig, worker: usize, k: usize) -> OneResult {
@@ -477,16 +548,26 @@ fn exchange(
         "/v1/completions"
     };
     let t0 = Instant::now();
-    match client.post_json(path, &body) {
+    let mut chunk_times: Vec<Instant> = Vec::new();
+    let result = if stream {
+        client.request_timed("POST", path, Some(&body), &mut chunk_times)
+    } else {
+        client.post_json(path, &body)
+    };
+    match result {
         Err(_) => OneResult {
             status: None,
             latency: t0.elapsed(),
             sse_events: 0,
             completion_tokens: 0,
+            ttft: None,
+            inter_token_gaps: Vec::new(),
         },
         Ok(resp) => {
             let mut sse_events = 0;
             let mut completion_tokens = 0;
+            let mut ttft = None;
+            let mut inter_token_gaps = Vec::new();
             if resp.status == 200 {
                 if stream {
                     let events = resp.sse_data();
@@ -506,6 +587,26 @@ fn exchange(
                                 .unwrap_or(false)
                         })
                         .count();
+                    ttft = chunk_times
+                        .first()
+                        .map(|t| t.saturating_duration_since(t0).as_secs_f64());
+                    // gaps between consecutive *content* chunks; the
+                    // trailing [DONE] flush is excluded when the
+                    // one-event-per-chunk alignment holds
+                    let content_times: Vec<Instant> = if chunk_times.len() == events.len() {
+                        events
+                            .iter()
+                            .zip(&chunk_times)
+                            .filter(|(e, _)| e.as_str() != "[DONE]")
+                            .map(|(_, t)| *t)
+                            .collect()
+                    } else {
+                        chunk_times.clone()
+                    };
+                    inter_token_gaps = content_times
+                        .windows(2)
+                        .map(|w| w[1].saturating_duration_since(w[0]).as_secs_f64())
+                        .collect();
                 } else if let Ok(j) = resp.json() {
                     completion_tokens = j
                         .at(&["usage", "completion_tokens"])
@@ -518,16 +619,26 @@ fn exchange(
                 latency: t0.elapsed(),
                 sse_events,
                 completion_tokens,
+                ttft,
+                inter_token_gaps,
             }
         }
     }
 }
 
+/// Sorted per-request samples that become the report's percentile lines.
+#[derive(Default)]
+struct LatencySamples {
+    latencies_ms: Vec<f64>,
+    ttft_ms: Vec<f64>,
+    inter_token_ms: Vec<f64>,
+}
+
 /// Fold a stream of per-request results into a report; returns the sorted
-/// 200-latency list alongside for the percentile fill-in.
-fn collect_results(rx: mpsc::Receiver<OneResult>) -> (LoadgenReport, Vec<f64>) {
+/// sample lists alongside for the percentile fill-in.
+fn collect_results(rx: mpsc::Receiver<OneResult>) -> (LoadgenReport, LatencySamples) {
     let mut report = LoadgenReport::default();
-    let mut latencies_ms: Vec<f64> = Vec::new();
+    let mut samples = LatencySamples::default();
     for r in rx {
         report.requests += 1;
         match r.status {
@@ -536,28 +647,43 @@ fn collect_results(rx: mpsc::Receiver<OneResult>) -> (LoadgenReport, Vec<f64>) {
                 *report.status_counts.entry(code).or_insert(0) += 1;
                 if code == 200 {
                     report.ok += 1;
-                    latencies_ms.push(r.latency.as_secs_f64() * 1e3);
+                    samples.latencies_ms.push(r.latency.as_secs_f64() * 1e3);
                 }
             }
         }
+        if let Some(ttft) = r.ttft {
+            samples.ttft_ms.push(ttft * 1e3);
+        }
+        samples
+            .inter_token_ms
+            .extend(r.inter_token_gaps.iter().map(|g| g * 1e3));
         report.sse_events += r.sse_events;
         report.completion_tokens += r.completion_tokens;
     }
-    latencies_ms.sort_by(f64::total_cmp);
-    (report, latencies_ms)
+    samples.latencies_ms.sort_by(f64::total_cmp);
+    samples.ttft_ms.sort_by(f64::total_cmp);
+    samples.inter_token_ms.sort_by(f64::total_cmp);
+    (report, samples)
 }
 
-fn fill_percentiles(report: &mut LoadgenReport, latencies_ms: &[f64]) {
-    let pct = |q: f64| -> f64 {
-        if latencies_ms.is_empty() {
-            return 0.0;
-        }
-        let idx = ((latencies_ms.len() - 1) as f64 * q).round() as usize;
-        latencies_ms[idx]
-    };
-    report.p50_ms = pct(0.50);
-    report.p95_ms = pct(0.95);
-    report.p99_ms = pct(0.99);
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+fn fill_percentiles(report: &mut LoadgenReport, samples: &LatencySamples) {
+    report.p50_ms = percentile(&samples.latencies_ms, 0.50);
+    report.p95_ms = percentile(&samples.latencies_ms, 0.95);
+    report.p99_ms = percentile(&samples.latencies_ms, 0.99);
+    report.ttft_p50_ms = percentile(&samples.ttft_ms, 0.50);
+    report.ttft_p95_ms = percentile(&samples.ttft_ms, 0.95);
+    report.ttft_p99_ms = percentile(&samples.ttft_ms, 0.99);
+    report.itl_p50_ms = percentile(&samples.inter_token_ms, 0.50);
+    report.itl_p95_ms = percentile(&samples.inter_token_ms, 0.95);
+    report.itl_p99_ms = percentile(&samples.inter_token_ms, 0.99);
 }
 
 /// Run the closed loop against `addr` and aggregate a report.
@@ -582,13 +708,13 @@ pub fn run(addr: &str, cfg: &LoadgenConfig) -> LoadgenReport {
     drop(tx);
     drop(conn_tx);
 
-    let (mut report, latencies_ms) = collect_results(rx);
+    let (mut report, samples) = collect_results(rx);
     report.connections_opened = conn_rx.iter().sum();
     for h in handles {
         let _ = h.join();
     }
     report.elapsed_secs = t0.elapsed().as_secs_f64();
-    fill_percentiles(&mut report, &latencies_ms);
+    fill_percentiles(&mut report, &samples);
     report
 }
 
@@ -949,13 +1075,13 @@ pub fn run_scenario(addr: &str, cfg: &ScenarioConfig) -> LoadgenReport {
     }
     drop(job_tx);
 
-    let (mut report, latencies_ms) = collect_results(rx);
+    let (mut report, samples) = collect_results(rx);
     report.connections_opened = conn_rx.iter().sum();
     for h in handles {
         let _ = h.join();
     }
     report.elapsed_secs = t0.elapsed().as_secs_f64();
-    fill_percentiles(&mut report, &latencies_ms);
+    fill_percentiles(&mut report, &samples);
     report.scenario = Some(cfg.to_json(offered));
     report
 }
@@ -978,14 +1104,19 @@ mod tests {
     fn chunked_body_decoding() {
         let wire = b"5\r\nhello\r\n6\r\n world\r\n0\r\n\r\n";
         let mut r = std::io::BufReader::new(&wire[..]);
-        assert_eq!(read_chunked(&mut r).unwrap(), b"hello world");
+        let mut times = Vec::new();
+        assert_eq!(
+            read_chunked_timed(&mut r, Some(&mut times)).unwrap(),
+            b"hello world"
+        );
+        assert_eq!(times.len(), 2, "one arrival instant per chunk");
     }
 
     #[test]
     fn chunked_rejects_garbage_size() {
         let wire = b"zz\r\nhello\r\n";
         let mut r = std::io::BufReader::new(&wire[..]);
-        assert!(read_chunked(&mut r).is_err());
+        assert!(read_chunked_timed(&mut r, None).is_err());
     }
 
     #[test]
@@ -1005,6 +1136,29 @@ mod tests {
         assert_eq!(j.at(&["status_counts", "200"]).and_then(Json::as_usize), Some(2));
         assert_eq!(j.get("p99_ms").and_then(Json::as_f64), Some(12.5));
         assert_eq!(j.get("requests_per_sec").and_then(Json::as_f64), Some(1.5));
+    }
+
+    #[test]
+    fn stream_timing_percentiles_land_in_report() {
+        let mut report = LoadgenReport::default();
+        let samples = LatencySamples {
+            latencies_ms: vec![1.0, 2.0, 3.0],
+            ttft_ms: vec![5.0, 7.0, 9.0],
+            inter_token_ms: vec![0.5, 1.5, 2.5],
+        };
+        fill_percentiles(&mut report, &samples);
+        assert_eq!(report.p50_ms, 2.0);
+        assert_eq!(report.ttft_p50_ms, 7.0);
+        assert_eq!(report.ttft_p99_ms, 9.0);
+        assert_eq!(report.itl_p50_ms, 1.5);
+        assert_eq!(report.itl_p95_ms, 2.5);
+        let j = Json::parse(&report.to_json().to_string_compact()).unwrap();
+        assert_eq!(j.get("ttft_p50_ms").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(j.get("itl_p99_ms").and_then(Json::as_f64), Some(2.5));
+        // empty sample lists stay at zero instead of panicking
+        let mut empty = LoadgenReport::default();
+        fill_percentiles(&mut empty, &LatencySamples::default());
+        assert_eq!(empty.ttft_p99_ms, 0.0);
     }
 
     #[test]

@@ -30,6 +30,20 @@ pub const QUEUE_WAIT_BUCKETS: [f64; 11] = [
     0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 5.0,
 ];
 
+/// Upper bounds (seconds) of the per-phase lifecycle histogram: phases
+/// range from sub-millisecond admission checks to multi-second decodes.
+pub const PHASE_BUCKETS: [f64; 12] = [
+    0.0001, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 1.0, 5.0,
+];
+
+/// Upper bounds (seconds) of the time-to-first-token histogram.
+pub const TTFT_BUCKETS: [f64; 11] = QUEUE_WAIT_BUCKETS;
+
+/// Upper bounds (seconds) of the inter-token (decode step gap) histogram.
+pub const INTER_TOKEN_BUCKETS: [f64; 10] = [
+    0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 1.0,
+];
+
 /// One cumulative latency histogram (lock-free) over a fixed set of
 /// upper bounds.
 #[derive(Debug)]
@@ -98,6 +112,13 @@ pub struct GatewayMetrics {
     promotion_cold: Histo,
     /// time admitted jobs spent in replica worker queues
     queue_wait: Histo,
+    /// per-lifecycle-phase durations, indexed parallel to
+    /// [`crate::trace::PHASES`]
+    phases: [Histo; crate::trace::PHASES.len()],
+    /// request arrival → first generated token (TTFT)
+    ttft: Histo,
+    /// gap between consecutive generated tokens of one request
+    inter_token: Histo,
 }
 
 impl Default for GatewayMetrics {
@@ -116,6 +137,9 @@ impl Default for GatewayMetrics {
             promotion_warm: Histo::new(&PROMOTION_BUCKETS),
             promotion_cold: Histo::new(&PROMOTION_BUCKETS),
             queue_wait: Histo::new(&QUEUE_WAIT_BUCKETS),
+            phases: std::array::from_fn(|_| Histo::new(&PHASE_BUCKETS)),
+            ttft: Histo::new(&TTFT_BUCKETS),
+            inter_token: Histo::new(&INTER_TOKEN_BUCKETS),
         }
     }
 }
@@ -175,6 +199,33 @@ impl GatewayMetrics {
     /// buckets (see [`QUEUE_WAIT_BUCKETS`]).
     pub fn queue_wait_quantile(&self, q: f64) -> f64 {
         self.queue_wait.quantile(q)
+    }
+
+    /// Record the duration of one lifecycle phase (see
+    /// [`crate::trace::PHASES`]); unknown names are ignored.
+    pub fn observe_phase(&self, phase: &str, secs: f64) {
+        if let Some(idx) = crate::trace::PHASES.iter().position(|p| *p == phase) {
+            self.phases[idx].observe(secs);
+        }
+    }
+
+    /// Observations recorded for one phase — test/report helper.
+    pub fn phase_count(&self, phase: &str) -> u64 {
+        crate::trace::PHASES
+            .iter()
+            .position(|p| *p == phase)
+            .map(|idx| self.phases[idx].count.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Record request arrival → first generated token.
+    pub fn observe_ttft(&self, secs: f64) {
+        self.ttft.observe(secs);
+    }
+
+    /// Record the gap between two consecutive tokens of one request.
+    pub fn observe_inter_token(&self, secs: f64) {
+        self.inter_token.observe(secs);
     }
 
     /// A replica worker applied a live capacity mutation.
@@ -352,6 +403,69 @@ pub fn render_prometheus(
         gw.queue_wait.sum_micros.load(Ordering::Relaxed) as f64 / 1e6
     );
     let _ = writeln!(out, "enova_gateway_queue_wait_seconds_count {qw_total}");
+
+    out.push_str(
+        "# HELP enova_request_phase_seconds Request lifecycle phase durations (admission, \
+         dispatch, queue_wait, prefill, decode, sse) from the tracing layer.\n",
+    );
+    out.push_str("# TYPE enova_request_phase_seconds histogram\n");
+    for (idx, phase) in crate::trace::PHASES.iter().enumerate() {
+        let histo = &gw.phases[idx];
+        let total = histo.count.load(Ordering::Relaxed);
+        for (i, &le) in PHASE_BUCKETS.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "enova_request_phase_seconds_bucket{{phase=\"{phase}\",le=\"{le}\"}} {}",
+                histo.buckets[i].load(Ordering::Relaxed)
+            );
+        }
+        let _ = writeln!(
+            out,
+            "enova_request_phase_seconds_bucket{{phase=\"{phase}\",le=\"+Inf\"}} {total}"
+        );
+        let _ = writeln!(
+            out,
+            "enova_request_phase_seconds_sum{{phase=\"{phase}\"}} {}",
+            histo.sum_micros.load(Ordering::Relaxed) as f64 / 1e6
+        );
+        let _ = writeln!(
+            out,
+            "enova_request_phase_seconds_count{{phase=\"{phase}\"}} {total}"
+        );
+    }
+
+    for (name, help, histo, bounds) in [
+        (
+            "enova_gateway_ttft_seconds",
+            "Request arrival to first generated token (time-to-first-token).",
+            &gw.ttft,
+            &TTFT_BUCKETS[..],
+        ),
+        (
+            "enova_gateway_inter_token_seconds",
+            "Gap between consecutive generated tokens of one request.",
+            &gw.inter_token,
+            &INTER_TOKEN_BUCKETS[..],
+        ),
+    ] {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        let total = histo.count.load(Ordering::Relaxed);
+        for (i, &le) in bounds.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "{name}_bucket{{le=\"{le}\"}} {}",
+                histo.buckets[i].load(Ordering::Relaxed)
+            );
+        }
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {total}");
+        let _ = writeln!(
+            out,
+            "{name}_sum {}",
+            histo.sum_micros.load(Ordering::Relaxed) as f64 / 1e6
+        );
+        let _ = writeln!(out, "{name}_count {total}");
+    }
 
     out.push_str(
         "# HELP enova_gateway_reconfigure_events_total Live capacity mutations applied by \
@@ -800,6 +914,106 @@ mod tests {
         assert_eq!(routable("replica-0"), 1.0);
         assert_eq!(routable("replica-1"), 1.0);
         assert_eq!(routable("replica-2"), 0.0);
+    }
+
+    #[test]
+    fn phase_histograms_render_per_phase_with_stream_timing() {
+        use crate::trace::{PHASES, PHASE_ADMISSION, PHASE_DECODE, PHASE_PREFILL};
+        let gw = GatewayMetrics::new();
+        gw.observe_phase(PHASE_ADMISSION, 0.0002); // le=0.0005 bucket
+        gw.observe_phase(PHASE_PREFILL, 0.02);
+        gw.observe_phase(PHASE_DECODE, 0.2);
+        gw.observe_phase("not_a_phase", 9.0); // silently ignored
+        gw.observe_ttft(0.03);
+        gw.observe_ttft(0.7);
+        gw.observe_inter_token(0.004);
+
+        assert_eq!(gw.phase_count(PHASE_ADMISSION), 1);
+        assert_eq!(gw.phase_count("not_a_phase"), 0);
+
+        let live: Vec<String> = Vec::new();
+        let body = render_prometheus(
+            &gw,
+            &MetricStore::new(),
+            0,
+            &live,
+            0,
+            0,
+            0.0,
+            &SupervisorSnapshot::default(),
+        );
+        let samples = parse_exposition(&body).expect("valid exposition");
+
+        // every phase renders a full histogram even before any traffic
+        for phase in PHASES {
+            assert!(
+                samples.iter().any(|s| s.name == "enova_request_phase_seconds_count"
+                    && s.labels.get("phase").map(String::as_str) == Some(phase)),
+                "missing phase histogram for {phase}"
+            );
+        }
+        let bucket = |phase: &str, le: &str| {
+            samples
+                .iter()
+                .find(|s| {
+                    s.name == "enova_request_phase_seconds_bucket"
+                        && s.labels.get("phase").map(String::as_str) == Some(phase)
+                        && s.labels.get("le").map(String::as_str) == Some(le)
+                })
+                .unwrap()
+                .value
+        };
+        assert_eq!(bucket(PHASE_ADMISSION, "0.0001"), 0.0);
+        assert_eq!(bucket(PHASE_ADMISSION, "0.0005"), 1.0);
+        assert_eq!(bucket(PHASE_ADMISSION, "+Inf"), 1.0);
+        assert_eq!(bucket(PHASE_DECODE, "0.1"), 0.0);
+        assert_eq!(bucket(PHASE_DECODE, "0.25"), 1.0);
+        assert_eq!(bucket("sse", "+Inf"), 0.0);
+
+        // TTFT and inter-token histograms
+        let named = |name: &str, le: &str| {
+            samples
+                .iter()
+                .find(|s| s.name == name && s.labels.get("le").map(String::as_str) == Some(le))
+                .unwrap()
+                .value
+        };
+        assert!(samples
+            .iter()
+            .any(|s| s.name == "enova_gateway_ttft_seconds_count" && s.value == 2.0));
+        assert_eq!(named("enova_gateway_ttft_seconds_bucket", "0.05"), 1.0);
+        assert_eq!(named("enova_gateway_ttft_seconds_bucket", "+Inf"), 2.0);
+        assert!(samples
+            .iter()
+            .any(|s| s.name == "enova_gateway_inter_token_seconds_count" && s.value == 1.0));
+        assert_eq!(named("enova_gateway_inter_token_seconds_bucket", "0.005"), 1.0);
+    }
+
+    /// Regression for the instrumented request path: recording lifecycle
+    /// phases, TTFT and inter-token gaps must never bump the request
+    /// counters — one finished exchange is exactly one `observe`, no
+    /// matter how many trace spans it left behind.
+    #[test]
+    fn phase_observations_do_not_double_count_requests() {
+        use crate::trace::PHASES;
+        let gw = GatewayMetrics::new();
+        for phase in PHASES {
+            gw.observe_phase(phase, 0.01);
+        }
+        gw.observe_ttft(0.02);
+        gw.observe_inter_token(0.002);
+        gw.observe_queue_wait(0.003);
+        assert_eq!(gw.requests_total(), 0, "tracing alone moved no request counter");
+        assert_eq!(gw.latency_count.load(Ordering::Relaxed), 0);
+
+        // the one exchange lands exactly once, and re-observing a phase
+        // moves only that phase's histogram
+        gw.observe("/v1/completions", 200, 0.05);
+        assert_eq!(gw.requests_total(), 1);
+        let before = gw.phase_count("decode");
+        gw.observe_phase("decode", 0.01);
+        assert_eq!(gw.phase_count("decode"), before + 1);
+        assert_eq!(gw.requests_total(), 1, "request counter stayed put");
     }
 
     #[test]

@@ -38,6 +38,10 @@ pub mod supervisor;
 
 use crate::engine::{Completion, FinishReason, StreamEngine};
 use crate::router::{ReplicaHandle, WeightedRouter};
+use crate::trace::{
+    ActiveTrace, DecisionRecorder, TraceContext, TraceRecorder, TraceSettings, PHASE_ADMISSION,
+    PHASE_DECODE, PHASE_DISPATCH, PHASE_PREFILL, PHASE_QUEUE_WAIT, PHASE_SSE,
+};
 use crate::tsdb::MetricStore;
 use crate::util::json::Json;
 use admission::{AdmissionGate, AdmissionPermit, TokenBucket};
@@ -111,6 +115,8 @@ pub struct GatewayConfig {
     /// `/cluster/status` and `/cluster/scale-{up,down}` control endpoints
     /// so a [`crate::cluster::coordinator`] can place replicas on it
     pub node: Option<crate::cluster::NodeIdentity>,
+    /// request-tracing knobs: sampling rate, slow-trace SLO, ring capacity
+    pub trace: TraceSettings,
 }
 
 impl Default for GatewayConfig {
@@ -129,6 +135,7 @@ impl Default for GatewayConfig {
             request_timeout: Duration::from_secs(120),
             warm_pool: 0,
             node: None,
+            trace: TraceSettings::default(),
         }
     }
 }
@@ -163,6 +170,15 @@ struct Job {
     enqueued_at: Instant,
     /// past this instant the job is shed instead of submitted
     deadline: Instant,
+    /// the request's trace, shared with the HTTP handler; the worker
+    /// records queue_wait / prefill / decode phase spans into it
+    trace: Arc<ActiveTrace>,
+    /// when the worker promoted the job into the engine (prefill start)
+    submitted_at: Option<Instant>,
+    /// when the engine produced the first token (prefill end / TTFT)
+    first_token_at: Option<Instant>,
+    /// when the engine produced the latest token (inter-token gaps)
+    last_token_at: Option<Instant>,
 }
 
 impl Job {
@@ -228,6 +244,13 @@ struct GatewayState {
     ready_replicas: AtomicUsize,
     next_req_id: AtomicU64,
     stop: AtomicBool,
+    /// service name stamped on spans: "gateway", or "node:<id>" when the
+    /// gateway runs as a cluster node
+    service: String,
+    /// finished request traces (`/debug/traces`)
+    tracer: TraceRecorder,
+    /// autoscaling decision flight recorder (`/debug/decisions`)
+    decisions: DecisionRecorder,
 }
 
 /// A replica worker mid-launch: the engine is constructed inside the
@@ -319,6 +342,13 @@ impl Gateway {
             ready_replicas: AtomicUsize::new(0),
             next_req_id: AtomicU64::new(1),
             stop: AtomicBool::new(false),
+            service: cfg
+                .node
+                .as_ref()
+                .map(|n| format!("node:{}", n.node_id))
+                .unwrap_or_else(|| "gateway".to_string()),
+            tracer: TraceRecorder::new(cfg.trace.clone()),
+            decisions: DecisionRecorder::new(256),
             cfg,
         });
 
@@ -499,6 +529,18 @@ impl Gateway {
     /// Snapshot of the supervisor's state (enabled/calibrated/counters).
     pub fn supervisor_snapshot(&self) -> supervisor::SupervisorSnapshot {
         self.state.supervisor.lock().unwrap().snapshot()
+    }
+
+    /// Retained request traces, oldest first — the programmatic view of
+    /// `/debug/traces`.
+    pub fn traces(&self) -> Vec<crate::trace::TraceRecord> {
+        self.state.tracer.traces()
+    }
+
+    /// Recorded control-plane decisions, oldest first — the programmatic
+    /// view of `/debug/decisions`.
+    pub fn decisions(&self) -> Vec<crate::trace::Decision> {
+        self.state.decisions.decisions()
     }
 
     /// Stop accepting, fail outstanding jobs with 503s, join all threads.
@@ -1096,7 +1138,24 @@ fn replica_loop(
         match engine.step_stream() {
             Ok(out) => {
                 for d in out.deltas {
-                    if let Some(job) = jobs.get(&d.id) {
+                    if let Some(job) = jobs.get_mut(&d.id) {
+                        let now = Instant::now();
+                        if job.first_token_at.is_none() {
+                            // first token: prefill ends, TTFT is measured
+                            // from request ingress (the trace start)
+                            job.first_token_at = Some(now);
+                            let from = job.submitted_at.unwrap_or(job.enqueued_at);
+                            trace_phase(state, &job.trace, PHASE_PREFILL, from, now);
+                            state.metrics.observe_ttft(
+                                now.saturating_duration_since(job.trace.started())
+                                    .as_secs_f64(),
+                            );
+                        } else if let Some(prev) = job.last_token_at {
+                            state.metrics.observe_inter_token(
+                                now.saturating_duration_since(prev).as_secs_f64(),
+                            );
+                        }
+                        job.last_token_at = Some(now);
                         if job.stream {
                             let _ = job.tx.send(StreamItem::Delta {
                                 text: d.text,
@@ -1110,6 +1169,14 @@ fn replica_loop(
                     window.latency_sum += (c.finished_at - c.arrival).max(0.0);
                     window.latency_n += 1;
                     if let Some(job) = jobs.remove(&c.id) {
+                        // decode span closes before the Done item is sent,
+                        // so the handler always sees the complete phase set
+                        let now = Instant::now();
+                        let from = job
+                            .first_token_at
+                            .or(job.submitted_at)
+                            .unwrap_or(job.enqueued_at);
+                        trace_phase(state, &job.trace, PHASE_DECODE, from, now);
                         let tx = job.release();
                         let _ = tx.send(StreamItem::Done(c));
                     }
@@ -1143,21 +1210,60 @@ fn promote(
     window: &mut FrameWindow,
 ) {
     while engine.pending_len() + engine.running_len() < engine.capacity() {
-        let Some(job) = queue.pop_front() else { break };
+        let Some(mut job) = queue.pop_front() else { break };
         let waited = job.enqueued_at.elapsed();
         window.queue_wait_sum += waited.as_secs_f64();
         window.queue_wait_n += 1;
         state.metrics.observe_queue_wait(waited.as_secs_f64());
+        let promoted_at = Instant::now();
+        trace_phase(state, &job.trace, PHASE_QUEUE_WAIT, job.enqueued_at, promoted_at);
         let budget = state.cfg.queue_budget;
         let over_budget = budget > Duration::ZERO && waited > budget;
-        if over_budget || Instant::now() >= job.deadline {
+        if over_budget || promoted_at >= job.deadline {
             state.metrics.note_queue_shed();
             shed(job, "request queued past its queue-time budget; retry later");
             continue;
         }
         let id = engine.submit(&job.prompt, job.max_new);
+        job.submitted_at = Some(promoted_at);
         jobs.insert(id, job);
     }
+}
+
+/// Record one lifecycle phase on both the request's trace and the phase
+/// histogram, so `/debug/traces` and `/metrics` never disagree.
+fn trace_phase(
+    state: &GatewayState,
+    trace: &ActiveTrace,
+    name: &'static str,
+    from: Instant,
+    to: Instant,
+) {
+    trace.phase(name, from, to);
+    state
+        .metrics
+        .observe_phase(name, to.saturating_duration_since(from).as_secs_f64());
+}
+
+/// Snapshot a finished request's trace into the ring buffer.
+fn record_trace(state: &GatewayState, trace: &ActiveTrace, status: u16) {
+    state.tracer.record(trace.finish(status, state.cfg.trace.slo));
+}
+
+/// [`finish`] plus trace finalization — every completion-path response
+/// goes through here so no request leaves without a trace record.
+#[allow(clippy::too_many_arguments)]
+fn finish_traced(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &GatewayState,
+    endpoint: &str,
+    t0: Instant,
+    trace: &ActiveTrace,
+    resp: http::Response,
+) -> std::io::Result<()> {
+    record_trace(state, trace, resp.status);
+    finish(req, stream, state, endpoint, t0, resp)
 }
 
 /// Fail a job the engine will never serve: release its accounting and
@@ -1266,11 +1372,20 @@ fn route(
             finish(req, stream, state, "/ready", t0, http::Response::json(status, body))
         }
         ("POST", "/admin/scale") => admin_scale(req, stream, state, t0),
+        ("GET", "/debug/traces") => {
+            let body = state.tracer.export_json().to_string_compact();
+            finish(req, stream, state, "/debug/traces", t0, http::Response::json(200, body))
+        }
+        ("GET", "/debug/decisions") => {
+            let body = state.decisions.export_json().to_string_compact();
+            finish(req, stream, state, "/debug/decisions", t0, http::Response::json(200, body))
+        }
         ("GET", "/cluster/status") => cluster_status(req, stream, state, t0),
         ("POST", "/cluster/scale-up") => cluster_scale_up(req, stream, state, t0),
         ("POST", "/cluster/scale-down") => cluster_scale_down(req, stream, state, t0),
         (_, "/v1/completions" | "/v1/chat/completions" | "/admin/scale" | "/metrics" | "/healthz"
-        | "/ready" | "/cluster/status" | "/cluster/scale-up" | "/cluster/scale-down") => {
+        | "/ready" | "/debug/traces" | "/debug/decisions" | "/cluster/status"
+        | "/cluster/scale-up" | "/cluster/scale-down") => {
             let body = openai::to_wire(&openai::error_body(
                 "invalid_request_error",
                 &format!("method {} not allowed on {}", req.method, req.path),
@@ -1340,10 +1455,21 @@ fn serve_completion(
         Err(e) => return finish(req, stream, state, endpoint, t0, bad(&e)),
     };
 
+    // trace ingress: adopt an upstream traceparent (the coordinator's
+    // proxy hop) with a fresh span ID, or mint a context here — the head
+    // sampling decision travels in the flags byte either way
+    let ctx = req
+        .header("traceparent")
+        .and_then(TraceContext::parse)
+        .map(|c| c.child())
+        .unwrap_or_else(|| TraceContext::mint(state.cfg.trace.sample_rate));
+    let trace = ActiveTrace::begin(ctx, &state.service, endpoint);
+
     // admission control: rate limiter, then the bounded in-flight gate
     if let Some(bucket) = &state.bucket {
         if !bucket.lock().unwrap().try_take() {
             state.metrics.note_rate_limited();
+            trace_phase(state, &trace, PHASE_ADMISSION, trace.started(), Instant::now());
             let resp = http::Response::json(
                 429,
                 openai::to_wire(&openai::error_body(
@@ -1352,11 +1478,12 @@ fn serve_completion(
                 )),
             )
             .with_header("Retry-After", "1");
-            return finish(req, stream, state, endpoint, t0, resp);
+            return finish_traced(req, stream, state, endpoint, t0, &trace, resp);
         }
     }
     let Some(permit) = AdmissionGate::try_acquire(&state.gate) else {
         state.metrics.note_queue_full();
+        trace_phase(state, &trace, PHASE_ADMISSION, trace.started(), Instant::now());
         let resp = http::Response::json(
             429,
             openai::to_wire(&openai::error_body(
@@ -1368,8 +1495,10 @@ fn serve_completion(
             )),
         )
         .with_header("Retry-After", "1");
-        return finish(req, stream, state, endpoint, t0, resp);
+        return finish_traced(req, stream, state, endpoint, t0, &trace, resp);
     };
+    let admitted_at = Instant::now();
+    trace_phase(state, &trace, PHASE_ADMISSION, trace.started(), admitted_at);
 
     // weighted least-loaded dispatch with a stale-pick retry: a replica
     // can be retired between the router's choice and the live-set lookup
@@ -1396,6 +1525,10 @@ fn serve_completion(
             handle: Arc::clone(&handle),
             enqueued_at: now,
             deadline: now + state.cfg.request_timeout,
+            trace: Arc::clone(&trace),
+            submitted_at: None,
+            first_token_at: None,
+            last_token_at: None,
         };
         // sending under the read lock is the drain invariant: retirement
         // removes the slot under the write lock *before* asking the worker
@@ -1421,13 +1554,14 @@ fn serve_completion(
         }
         break;
     }
+    trace_phase(state, &trace, PHASE_DISPATCH, admitted_at, Instant::now());
     if !sent {
         drop(permit);
         let resp = http::Response::json(
             503,
             openai::to_wire(&openai::error_body("service_unavailable", failure)),
         );
-        return finish(req, stream, state, endpoint, t0, resp);
+        return finish_traced(req, stream, state, endpoint, t0, &trace, resp);
     }
 
     let seq = state.next_req_id.fetch_add(1, Ordering::Relaxed);
@@ -1441,9 +1575,9 @@ fn serve_completion(
     // when the engine finishes this job, not here: responding early (504,
     // client gone) must not free capacity the engine is still using
     if params.stream {
-        stream_response(req, stream, state, &params, &req_id, &rx, chat, endpoint, t0)
+        stream_response(req, stream, state, &params, &req_id, &rx, chat, endpoint, t0, &trace)
     } else {
-        unary_response(req, stream, state, &params, &req_id, &rx, chat, endpoint, t0)
+        unary_response(req, stream, state, &params, &req_id, &rx, chat, endpoint, t0, &trace)
     }
 }
 
@@ -1485,6 +1619,7 @@ fn unary_response(
     chat: bool,
     endpoint: &str,
     t0: Instant,
+    trace: &ActiveTrace,
 ) -> std::io::Result<()> {
     let deadline = Instant::now() + state.cfg.request_timeout;
     loop {
@@ -1512,14 +1647,14 @@ fn unary_response(
                     )
                 };
                 let resp = http::Response::json(200, openai::to_wire(&body));
-                return finish(req, stream, state, endpoint, t0, resp);
+                return finish_traced(req, stream, state, endpoint, t0, trace, resp);
             }
             Some(StreamItem::Error(msg)) => {
                 let resp = http::Response::json(
                     500,
                     openai::to_wire(&openai::error_body("internal_error", &msg)),
                 );
-                return finish(req, stream, state, endpoint, t0, resp);
+                return finish_traced(req, stream, state, endpoint, t0, trace, resp);
             }
             Some(StreamItem::Unavailable(msg)) => {
                 let resp = http::Response::json(
@@ -1527,7 +1662,7 @@ fn unary_response(
                     openai::to_wire(&openai::error_body("service_unavailable", &msg)),
                 )
                 .with_header("Retry-After", "1");
-                return finish(req, stream, state, endpoint, t0, resp);
+                return finish_traced(req, stream, state, endpoint, t0, trace, resp);
             }
             None => {
                 let resp = http::Response::json(
@@ -1537,7 +1672,7 @@ fn unary_response(
                         "engine did not produce a completion in time",
                     )),
                 );
-                return finish(req, stream, state, endpoint, t0, resp);
+                return finish_traced(req, stream, state, endpoint, t0, trace, resp);
             }
         }
     }
@@ -1554,6 +1689,7 @@ fn stream_response(
     chat: bool,
     endpoint: &str,
     t0: Instant,
+    trace: &ActiveTrace,
 ) -> std::io::Result<()> {
     sse::write_sse_head(stream)?;
     let mut writer = sse::SseWriter::new(stream);
@@ -1610,12 +1746,17 @@ fn stream_response(
     // only a cleanly finished stream earns the `[DONE]` success marker; an
     // errored/shed/stalled stream ends with the bare chunked terminator so
     // clients can tell truncation from completion
+    let tail_start = Instant::now();
     let io_result = if write_failed.is_none() && outcome_status == 200 {
         writer.done()
     } else {
         writer.finish()
     };
     state.metrics.add_sse_events(writer.events_written);
+    // the sse phase covers the post-completion flush; per-delta writes
+    // overlap the decode phase and are already accounted there
+    trace_phase(state, trace, PHASE_SSE, tail_start, Instant::now());
+    record_trace(state, trace, outcome_status);
     state
         .metrics
         .observe(endpoint, outcome_status, t0.elapsed().as_secs_f64());
@@ -1715,6 +1856,15 @@ fn cluster_scale_up(
     match hot_add_replica(state) {
         Ok(id) => {
             let live = state.replicas.read().unwrap().len();
+            state.decisions.record(
+                &state.service,
+                "node_scale_up",
+                "coordinator",
+                vec![
+                    ("replica_id", id.to_string()),
+                    ("live_replicas", live.to_string()),
+                ],
+            );
             let body = format!(
                 "{{\"node_id\":{},\"replica_id\":{id},\"live_replicas\":{live}}}",
                 crate::util::json::s(&identity.node_id).to_string_compact()
@@ -1759,6 +1909,15 @@ fn cluster_scale_down(
     match retire_replica(state, id) {
         Ok(()) => {
             let live = state.replicas.read().unwrap().len();
+            state.decisions.record(
+                &state.service,
+                "node_scale_down",
+                "coordinator",
+                vec![
+                    ("replica_id", id.to_string()),
+                    ("live_replicas", live.to_string()),
+                ],
+            );
             let body = format!(
                 "{{\"node_id\":{},\"retired\":{id},\"live_replicas\":{live}}}",
                 crate::util::json::s(&identity.node_id).to_string_compact()

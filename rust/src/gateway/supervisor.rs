@@ -806,6 +806,50 @@ fn record_event(
         }
     }
     status.events.push(event);
+    let (last_forecast, forecast_error, forecast_degraded) = (
+        status.last_forecast,
+        status.forecast_error,
+        status.forecast_degraded,
+    );
+    drop(status);
+
+    // the decision flight recorder gets the full cause snapshot: what the
+    // detector and forecaster saw, and the queue pressure at that instant
+    let kind = match action {
+        Action::Reconfigure { .. } => "reconfigure",
+        _ => match direction {
+            ScaleDirection::Up => "scale_up",
+            ScaleDirection::Down => "scale_down",
+        },
+    };
+    let reason = match trigger {
+        Trigger::Detector => "detector",
+        Trigger::QueueWait => "queue_wait",
+        Trigger::Recommender => "recommender",
+        Trigger::Forecast => "forecast",
+    };
+    let mut attrs = vec![
+        ("detector_energy", format!("{energy:.4}")),
+        ("detector_threshold", format!("{threshold:.4}")),
+        ("replica_id", replica_id.to_string()),
+        ("replicas_after", replicas_after.to_string()),
+        (
+            "queue_wait_p95_s",
+            format!("{:.4}", state.metrics.queue_wait_quantile(0.95)),
+        ),
+        ("forecast_rps", format!("{last_forecast:.3}")),
+        ("forecast_wmape", format!("{forecast_error:.4}")),
+        ("forecast_degraded", forecast_degraded.to_string()),
+    ];
+    if let Action::Reconfigure {
+        max_num_seqs,
+        gpu_memory,
+    } = action
+    {
+        attrs.push(("max_num_seqs", max_num_seqs.to_string()));
+        attrs.push(("gpu_memory", format!("{gpu_memory:.2}")));
+    }
+    state.decisions.record(&state.service, kind, reason, attrs);
 }
 
 /// Average the newest Table II frame (and mean queue wait) of every live

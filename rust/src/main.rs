@@ -14,7 +14,7 @@ COMMANDS:
   serve-http  OpenAI-compatible HTTP gateway (--port 8080 --replicas 2 --engine auto|lm|sim
               --max-num-seqs N --max-tokens N --max-pending N --rate RPS --burst N
               --http-workers N --sim-delay-ms N --host ADDR --queue-budget-ms N
-              --warm-pool N
+              --warm-pool N --log-json --trace-sample F --trace-slo-ms N
               --autoscale [--min-replicas N --max-replicas N --scale-interval-ms N
               --calib-samples N --patience N --cooldown-ms N --queue-wait-budget-ms N]
               --reconfig [--reconfig-interval-ms N --reconfig-cooldown-ms N
@@ -57,7 +57,11 @@ fn main() -> anyhow::Result<()> {
         "forecast",
         "cluster",
         "no-cluster-bench",
+        "log-json",
     ]);
+    if args.flag("log-json") {
+        enova::util::log::set_json(true);
+    }
     let cmd = args.subcommand();
     match cmd.as_str() {
         "serve" => serve(&args),
@@ -228,6 +232,16 @@ fn spawner_from_args(
     Ok((spawner, engine_kind))
 }
 
+/// The request-tracing knobs (`--trace-sample F --trace-slo-ms N`) shared
+/// by the gateway, the node and the coordinator.
+fn trace_settings_from_args(args: &Args) -> enova::trace::TraceSettings {
+    enova::trace::TraceSettings {
+        sample_rate: args.get_f64("trace-sample", 1.0).clamp(0.0, 1.0),
+        slo: std::time::Duration::from_millis(args.get_usize("trace-slo-ms", 2000) as u64),
+        ..enova::trace::TraceSettings::default()
+    }
+}
+
 /// `enova serve-http`: the OpenAI-compatible serving gateway. `--engine
 /// auto` (default) uses the compiled LM when artifacts exist and falls
 /// back to the deterministic sim engine otherwise. With `--autoscale`,
@@ -241,6 +255,9 @@ fn spawner_from_args(
 /// no local engines — it owns ingress, heartbeats the registered `enova
 /// node` fleet, and turns the same supervisor flags into cross-node
 /// placement decisions.
+///
+/// `--trace-sample F --trace-slo-ms N`: the request-tracing knobs shared
+/// by the gateway, the node and the coordinator.
 fn serve_http(args: &Args) -> anyhow::Result<()> {
     use enova::gateway::supervisor::{ForecastPolicy, ReconfigPolicy, SupervisorConfig};
     use enova::gateway::{Gateway, GatewayConfig};
@@ -302,6 +319,7 @@ fn serve_http(args: &Args) -> anyhow::Result<()> {
         http_workers: args.get_usize("http-workers", 64),
         queue_budget: Duration::from_millis(args.get_usize("queue-budget-ms", 0) as u64),
         warm_pool: args.get_usize("warm-pool", 0),
+        trace: trace_settings_from_args(args),
         ..GatewayConfig::default()
     };
     let warm_pool = cfg.warm_pool;
@@ -369,6 +387,7 @@ fn serve_cluster(args: &Args) -> anyhow::Result<()> {
             detector_scaling: autoscale,
             forecast: forecast_policy,
         },
+        trace: trace_settings_from_args(args),
         ..CoordinatorConfig::default()
     };
     let coordinator = Coordinator::start(cfg)?;
@@ -422,6 +441,7 @@ fn node_cmd(args: &Args) -> anyhow::Result<()> {
             http_workers: args.get_usize("http-workers", 64),
             queue_budget: Duration::from_millis(args.get_usize("queue-budget-ms", 0) as u64),
             warm_pool: args.get_usize("warm-pool", 0),
+            trace: trace_settings_from_args(args),
             ..GatewayConfig::default()
         },
         identity,

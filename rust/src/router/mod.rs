@@ -351,6 +351,40 @@ mod tests {
         assert!(router.dispatch().is_some());
     }
 
+    /// Regression for the traced retry path: the proxy loop does one
+    /// dispatch + one complete per *attempt*, with span recording in
+    /// between. `dispatched` must count attempts monotonically (exactly
+    /// one bump per dispatch, none from tracing) and every attempt's
+    /// complete must rebalance `inflight` to zero — no double count when
+    /// a request takes several attempts.
+    #[test]
+    fn retry_attempts_keep_counters_balanced() {
+        let router = WeightedRouter::new(&[(0, 1.0), (1, 1.0)]);
+        let total_dispatched =
+            |r: &WeightedRouter| r.replicas().iter().map(|h| h.dispatched()).sum::<u64>();
+
+        // attempt 1 fails: span recorded, handle completed, id excluded
+        let first = router.dispatch().unwrap();
+        router.complete(&first);
+        assert_eq!(total_dispatched(&router), 1);
+
+        // attempt 2 re-dispatches excluding the failed replica
+        let second = router.dispatch_where(|id| id != first.id).unwrap();
+        assert_ne!(second.id, first.id, "retry avoided the failed replica");
+        router.complete(&second);
+        assert_eq!(total_dispatched(&router), 2, "one bump per attempt");
+        for r in router.replicas() {
+            assert_eq!(r.inflight(), 0, "every attempt completed exactly once");
+        }
+
+        // the counter is monotonic: later traffic only moves it forward
+        let before = total_dispatched(&router);
+        router.complete(&first); // stale double-complete saturates...
+        let h = router.dispatch().unwrap();
+        router.complete(&h);
+        assert_eq!(total_dispatched(&router), before + 1, "...and never rewinds");
+    }
+
     fn node_router(nodes: &[(&str, f64)]) -> NodeRouter {
         let mut r = NodeRouter::new();
         r.set_nodes(

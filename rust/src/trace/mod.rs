@@ -1,0 +1,812 @@
+//! End-to-end request tracing + decision flight recorder (§IV: ENOVA
+//! "deconstructs the execution process of LLM service comprehensively").
+//!
+//! A trace ID is minted at ingress (coordinator or single-node gateway)
+//! and propagated coordinator→node via a W3C-`traceparent`-style header
+//! on the proxy hop:
+//!
+//! ```text
+//! traceparent: 00-<32 hex trace-id>-<16 hex parent-span-id>-<2 hex flags>
+//! ```
+//!
+//! Each service accumulates *phase spans* — admission, dispatch,
+//! queue_wait, prefill (TTFT), decode, sse — plus proxy/retry spans on
+//! the coordinator side. Phases are a non-overlapping partition of the
+//! request's node-side timeline, so `sum(phase durations) ≈ total`; the
+//! e2e test holds that to within 10%.
+//!
+//! Finished traces land in a sharded ring buffer with tail-based
+//! retention: error (status ≥ 500) and slow-over-SLO traces are always
+//! kept in a dedicated ring, the rest only when the head-based sampling
+//! decision (made at mint, carried in the flags byte) said yes. Scaling
+//! and placement decisions land in a separate flight-recorder ring with
+//! a structured cause snapshot. Both export as JSON via `/debug/traces`
+//! and `/debug/decisions`.
+//!
+//! std-only: randomness comes from hashing an atomic counter + the clock
+//! through `RandomState` (SipHash with a per-process random key).
+
+use crate::util::json::{num, obj, s, Json};
+use std::collections::hash_map::RandomState;
+use std::collections::VecDeque;
+use std::hash::{BuildHasher, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// Lifecycle phase names, in timeline order. `queue_wait` covers
+/// enqueue→engine-submit, `prefill` covers submit→first token (TTFT),
+/// `decode` first token→completion, `sse` completion→stream flushed.
+pub const PHASE_ADMISSION: &str = "admission";
+pub const PHASE_DISPATCH: &str = "dispatch";
+pub const PHASE_QUEUE_WAIT: &str = "queue_wait";
+pub const PHASE_PREFILL: &str = "prefill";
+pub const PHASE_DECODE: &str = "decode";
+pub const PHASE_SSE: &str = "sse";
+
+/// Every phase a request can pass through, for metrics registration and
+/// smoke-test assertions.
+pub const PHASES: [&str; 6] = [
+    PHASE_ADMISSION,
+    PHASE_DISPATCH,
+    PHASE_QUEUE_WAIT,
+    PHASE_PREFILL,
+    PHASE_DECODE,
+    PHASE_SSE,
+];
+
+fn unix_now() -> f64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+/// Process-local pseudo-random 64-bit value: an atomic counter + clock
+/// nanos hashed through SipHash keyed with `RandomState`'s per-process
+/// random seed. Never returns 0 (the W3C spec reserves all-zero IDs).
+fn rand_u64() -> u64 {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let t = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.subsec_nanos() as u64 ^ d.as_secs())
+        .unwrap_or(0);
+    let mut h = RandomState::new().build_hasher();
+    h.write_u64(n);
+    h.write_u64(t);
+    let v = h.finish();
+    if v == 0 {
+        1
+    } else {
+        v
+    }
+}
+
+/// Deterministic head-based sampling: the trace ID doubles as the coin,
+/// so every service along the path agrees without extra coordination.
+fn decide_sample(trace_id: u128, rate: f64) -> bool {
+    if rate >= 1.0 {
+        return true;
+    }
+    if rate <= 0.0 {
+        return false;
+    }
+    let frac = ((trace_id as u64) >> 11) as f64 / (1u64 << 53) as f64;
+    frac < rate
+}
+
+fn is_lower_hex(sx: &str) -> bool {
+    sx.bytes().all(|b| matches!(b, b'0'..=b'9' | b'a'..=b'f'))
+}
+
+/// The propagated trace context: trace ID, parent span ID and the
+/// sampled flag, exactly the fields a `traceparent` header carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceContext {
+    pub trace_id: u128,
+    pub span_id: u64,
+    pub sampled: bool,
+}
+
+impl TraceContext {
+    /// Mint a fresh context at ingress; the sampling decision is made
+    /// here and carried in the flags byte for the rest of the path.
+    pub fn mint(sample_rate: f64) -> TraceContext {
+        let hi = rand_u64() as u128;
+        let lo = rand_u64() as u128;
+        let trace_id = (hi << 64) | lo;
+        TraceContext {
+            trace_id,
+            span_id: rand_u64(),
+            sampled: decide_sample(trace_id, sample_rate),
+        }
+    }
+
+    /// A child context for the next hop: same trace, fresh span ID,
+    /// inherited sampling decision.
+    pub fn child(&self) -> TraceContext {
+        TraceContext {
+            trace_id: self.trace_id,
+            span_id: rand_u64(),
+            sampled: self.sampled,
+        }
+    }
+
+    /// Strict parse of a `00-`-version traceparent header. Rejects
+    /// wrong field counts/lengths, non-lowercase-hex, unknown versions
+    /// and the all-zero IDs the spec forbids.
+    pub fn parse(header: &str) -> Option<TraceContext> {
+        let parts: Vec<&str> = header.trim().split('-').collect();
+        if parts.len() != 4 {
+            return None;
+        }
+        let (version, trace_hex, span_hex, flags_hex) = (parts[0], parts[1], parts[2], parts[3]);
+        if version != "00" || trace_hex.len() != 32 || span_hex.len() != 16 || flags_hex.len() != 2
+        {
+            return None;
+        }
+        if !is_lower_hex(trace_hex) || !is_lower_hex(span_hex) || !is_lower_hex(flags_hex) {
+            return None;
+        }
+        let trace_id = u128::from_str_radix(trace_hex, 16).ok()?;
+        let span_id = u64::from_str_radix(span_hex, 16).ok()?;
+        let flags = u8::from_str_radix(flags_hex, 16).ok()?;
+        if trace_id == 0 || span_id == 0 {
+            return None;
+        }
+        Some(TraceContext {
+            trace_id,
+            span_id,
+            sampled: flags & 0x01 == 0x01,
+        })
+    }
+
+    pub fn to_traceparent(&self) -> String {
+        format!(
+            "00-{:032x}-{:016x}-{:02x}",
+            self.trace_id,
+            self.span_id,
+            u8::from(self.sampled)
+        )
+    }
+
+    pub fn trace_id_hex(&self) -> String {
+        format!("{:032x}", self.trace_id)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// A lifecycle phase: phases partition the timeline, so their
+    /// durations sum to ≈ the trace total.
+    Phase,
+    /// A coordinator-side proxy attempt to a node (overlaps phases).
+    Proxy,
+    /// A failed attempt that forced a re-dispatch.
+    Retry,
+}
+
+impl SpanKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Phase => "phase",
+            SpanKind::Proxy => "proxy",
+            SpanKind::Retry => "retry",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub name: &'static str,
+    pub kind: SpanKind,
+    /// Offset from the trace's local start, seconds.
+    pub start_s: f64,
+    pub dur_s: f64,
+    pub attrs: Vec<(&'static str, String)>,
+}
+
+/// A trace being built while its request is in flight. Shared across
+/// the HTTP handler and the replica worker via `Arc`; the span list is
+/// the only shared mutable state, behind a short-hold mutex.
+pub struct ActiveTrace {
+    ctx: TraceContext,
+    service: String,
+    endpoint: String,
+    started: Instant,
+    start_unix: f64,
+    spans: Mutex<Vec<Span>>,
+}
+
+impl ActiveTrace {
+    pub fn begin(ctx: TraceContext, service: &str, endpoint: &str) -> Arc<ActiveTrace> {
+        Arc::new(ActiveTrace {
+            ctx,
+            service: service.to_string(),
+            endpoint: endpoint.to_string(),
+            started: Instant::now(),
+            start_unix: unix_now(),
+            spans: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn ctx(&self) -> TraceContext {
+        self.ctx
+    }
+
+    pub fn started(&self) -> Instant {
+        self.started
+    }
+
+    fn offset(&self, at: Instant) -> f64 {
+        at.saturating_duration_since(self.started).as_secs_f64()
+    }
+
+    pub fn span(
+        &self,
+        name: &'static str,
+        kind: SpanKind,
+        from: Instant,
+        to: Instant,
+        attrs: Vec<(&'static str, String)>,
+    ) {
+        let span = Span {
+            name,
+            kind,
+            start_s: self.offset(from),
+            dur_s: to.saturating_duration_since(from).as_secs_f64(),
+            attrs,
+        };
+        self.spans.lock().unwrap().push(span);
+    }
+
+    /// Record a lifecycle phase span over [from, to).
+    pub fn phase(&self, name: &'static str, from: Instant, to: Instant) {
+        self.span(name, SpanKind::Phase, from, to, Vec::new());
+    }
+
+    /// Snapshot the trace into an immutable record. Spans are sorted by
+    /// start offset so exports read as a timeline.
+    pub fn finish(&self, status: u16, slo: Duration) -> TraceRecord {
+        let total_s = self.started.elapsed().as_secs_f64();
+        let mut spans = self.spans.lock().unwrap().clone();
+        spans.sort_by(|a, b| a.start_s.total_cmp(&b.start_s));
+        TraceRecord {
+            trace_id: self.ctx.trace_id_hex(),
+            sampled: self.ctx.sampled,
+            service: self.service.clone(),
+            endpoint: self.endpoint.clone(),
+            status,
+            start_unix: self.start_unix,
+            total_s,
+            error: status >= 500,
+            slow: slo > Duration::ZERO && total_s > slo.as_secs_f64(),
+            spans,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    /// 32-char lowercase hex.
+    pub trace_id: String,
+    pub sampled: bool,
+    pub service: String,
+    pub endpoint: String,
+    pub status: u16,
+    pub start_unix: f64,
+    pub total_s: f64,
+    pub error: bool,
+    pub slow: bool,
+    pub spans: Vec<Span>,
+}
+
+impl TraceRecord {
+    /// Sum of phase-kind span durations. Phases partition the local
+    /// timeline, so this tracks `total_s` closely.
+    pub fn phase_total(&self) -> f64 {
+        self.spans
+            .iter()
+            .filter(|sp| sp.kind == SpanKind::Phase)
+            .map(|sp| sp.dur_s)
+            .sum()
+    }
+
+    pub fn has_phase(&self, name: &str) -> bool {
+        self.spans
+            .iter()
+            .any(|sp| sp.kind == SpanKind::Phase && sp.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let spans: Vec<Json> = self
+            .spans
+            .iter()
+            .map(|sp| span_json(sp, &self.service))
+            .collect();
+        obj([
+            ("trace_id", s(&self.trace_id)),
+            ("service", s(&self.service)),
+            ("endpoint", s(&self.endpoint)),
+            ("status", num(f64::from(self.status))),
+            ("start_unix", num(self.start_unix)),
+            ("total_seconds", num(self.total_s)),
+            ("phase_seconds_total", num(self.phase_total())),
+            ("error", Json::Bool(self.error)),
+            ("slow", Json::Bool(self.slow)),
+            ("sampled", Json::Bool(self.sampled)),
+            ("spans", Json::Arr(spans)),
+        ])
+    }
+}
+
+fn span_json(sp: &Span, service: &str) -> Json {
+    let mut fields = vec![
+        ("name", s(sp.name)),
+        ("kind", s(sp.kind.name())),
+        ("service", s(service)),
+        ("start_seconds", num(sp.start_s)),
+        ("duration_seconds", num(sp.dur_s)),
+    ];
+    if !sp.attrs.is_empty() {
+        fields.push((
+            "attrs",
+            Json::Obj(
+                sp.attrs
+                    .iter()
+                    .map(|(k, v)| ((*k).to_string(), Json::Str(v.clone())))
+                    .collect(),
+            ),
+        ));
+    }
+    obj(fields)
+}
+
+/// Trace subsystem knobs, shared by gateway and coordinator configs.
+#[derive(Debug, Clone)]
+pub struct TraceSettings {
+    /// Head-based sampling rate in [0, 1] for normal traces; error and
+    /// slow traces are always retained regardless.
+    pub sample_rate: f64,
+    /// A trace slower than this is "slow" and always retained. Zero
+    /// disables the slow classification.
+    pub slo: Duration,
+    /// Total ring capacity (split across shards, kept and sampled rings
+    /// each get the per-shard share).
+    pub capacity: usize,
+}
+
+impl Default for TraceSettings {
+    fn default() -> TraceSettings {
+        TraceSettings {
+            sample_rate: 1.0,
+            slo: Duration::from_secs(2),
+            capacity: 512,
+        }
+    }
+}
+
+const TRACE_SHARDS: usize = 8;
+
+#[derive(Default)]
+struct Shard {
+    /// error/slow traces — never evicted by normal traffic.
+    kept: VecDeque<TraceRecord>,
+    /// head-sampled normal traces.
+    sampled: VecDeque<TraceRecord>,
+}
+
+/// Lock-light finished-trace store: 8 shards keyed by trace ID so
+/// concurrent HTTP workers rarely contend, two rings per shard for
+/// tail-based retention.
+pub struct TraceRecorder {
+    settings: TraceSettings,
+    shards: Vec<Mutex<Shard>>,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl TraceRecorder {
+    pub fn new(settings: TraceSettings) -> TraceRecorder {
+        TraceRecorder {
+            settings,
+            shards: (0..TRACE_SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
+            recorded: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn settings(&self) -> &TraceSettings {
+        &self.settings
+    }
+
+    fn shard_cap(&self) -> usize {
+        (self.settings.capacity / TRACE_SHARDS).max(1)
+    }
+
+    fn shard_index(trace_id: &str) -> usize {
+        let h = trace_id
+            .as_bytes()
+            .iter()
+            .fold(0usize, |acc, &b| acc.wrapping_mul(31).wrapping_add(b as usize));
+        h % TRACE_SHARDS
+    }
+
+    /// Tail-based retention: error/slow records always land in the kept
+    /// ring; everything else is admitted only if head-sampled.
+    pub fn record(&self, rec: TraceRecord) {
+        let important = rec.error || rec.slow;
+        if !important && !rec.sampled {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let cap = self.shard_cap();
+        let mut shard = self.shards[Self::shard_index(&rec.trace_id)].lock().unwrap();
+        let ring = if important {
+            &mut shard.kept
+        } else {
+            &mut shard.sampled
+        };
+        ring.push_back(rec);
+        while ring.len() > cap {
+            ring.pop_front();
+        }
+        drop(shard);
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// All retained records, oldest first.
+    pub fn traces(&self) -> Vec<TraceRecord> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let shard = shard.lock().unwrap();
+            out.extend(shard.kept.iter().cloned());
+            out.extend(shard.sampled.iter().cloned());
+        }
+        out.sort_by(|a, b| a.start_unix.total_cmp(&b.start_unix));
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|sh| {
+                let sh = sh.lock().unwrap();
+                sh.kept.len() + sh.sampled.len()
+            })
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// The `/debug/traces` payload.
+    pub fn export_json(&self) -> Json {
+        let traces: Vec<Json> = self.traces().iter().map(TraceRecord::to_json).collect();
+        obj([
+            ("recorded", num(self.recorded() as f64)),
+            ("dropped_unsampled", num(self.dropped() as f64)),
+            ("sample_rate", num(self.settings.sample_rate)),
+            ("slo_seconds", num(self.settings.slo.as_secs_f64())),
+            ("capacity", num(self.settings.capacity as f64)),
+            ("traces", Json::Arr(traces)),
+        ])
+    }
+}
+
+/// One autoscaling/placement decision with its cause snapshot.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    pub at_unix: f64,
+    pub service: String,
+    /// What happened: scale_up | scale_down | reconfigure | placement |
+    /// retirement | node_scale_up | node_scale_down.
+    pub kind: String,
+    /// Why: detector | queue_wait | forecast | backfill | recommender |
+    /// coordinator | admin.
+    pub reason: String,
+    /// Structured cause snapshot: detector score, forecast rps + WMAPE,
+    /// queue-wait quantile, chosen node, bin-packing inputs, …
+    pub attrs: Vec<(&'static str, String)>,
+}
+
+impl Decision {
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("at_unix", num(self.at_unix)),
+            ("service", s(&self.service)),
+            ("kind", s(&self.kind)),
+            ("reason", s(&self.reason)),
+            (
+                "attrs",
+                Json::Obj(
+                    self.attrs
+                        .iter()
+                        .map(|(k, v)| ((*k).to_string(), Json::Str(v.clone())))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// The decision flight recorder: a bounded ring of every scale,
+/// reconfigure, placement and backfill decision the control plane made,
+/// each with the inputs that caused it. `/debug/decisions` serves it.
+pub struct DecisionRecorder {
+    capacity: usize,
+    ring: Mutex<VecDeque<Decision>>,
+    recorded: AtomicU64,
+}
+
+impl DecisionRecorder {
+    pub fn new(capacity: usize) -> DecisionRecorder {
+        DecisionRecorder {
+            capacity: capacity.max(1),
+            ring: Mutex::new(VecDeque::new()),
+            recorded: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(
+        &self,
+        service: &str,
+        kind: &str,
+        reason: &str,
+        attrs: Vec<(&'static str, String)>,
+    ) {
+        let decision = Decision {
+            at_unix: unix_now(),
+            service: service.to_string(),
+            kind: kind.to_string(),
+            reason: reason.to_string(),
+            attrs,
+        };
+        let mut ring = self.ring.lock().unwrap();
+        ring.push_back(decision);
+        while ring.len() > self.capacity {
+            ring.pop_front();
+        }
+        drop(ring);
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn decisions(&self) -> Vec<Decision> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// The `/debug/decisions` payload.
+    pub fn export_json(&self) -> Json {
+        let decisions: Vec<Json> = self.decisions().iter().map(Decision::to_json).collect();
+        obj([
+            ("recorded", num(self.recorded() as f64)),
+            ("capacity", num(self.capacity as f64)),
+            ("decisions", Json::Arr(decisions)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traceparent_round_trips() {
+        let ctx = TraceContext::mint(1.0);
+        assert!(ctx.sampled);
+        let header = ctx.to_traceparent();
+        assert_eq!(header.len(), 55);
+        let back = TraceContext::parse(&header).expect("own header parses");
+        assert_eq!(back, ctx);
+
+        let unsampled = TraceContext {
+            trace_id: 0xabcdef,
+            span_id: 0x1234,
+            sampled: false,
+        };
+        let back = TraceContext::parse(&unsampled.to_traceparent()).unwrap();
+        assert_eq!(back, unsampled);
+        assert!(!back.sampled);
+    }
+
+    #[test]
+    fn traceparent_rejects_malformed() {
+        let good = "00-0af7651916cd43dd8448eb211c80319c-b7ad6b7169203331-01";
+        assert!(TraceContext::parse(good).is_some());
+        let bad = [
+            "",
+            "garbage",
+            // wrong version
+            "01-0af7651916cd43dd8448eb211c80319c-b7ad6b7169203331-01",
+            // uppercase hex
+            "00-0AF7651916CD43DD8448EB211C80319C-b7ad6b7169203331-01",
+            // short trace id
+            "00-0af7651916cd43dd8448eb211c8031-b7ad6b7169203331-01",
+            // short span id
+            "00-0af7651916cd43dd8448eb211c80319c-b7ad6b71692033-01",
+            // non-hex
+            "00-0af7651916cd43dd8448eb211c80319z-b7ad6b7169203331-01",
+            // all-zero ids are forbidden
+            "00-00000000000000000000000000000000-b7ad6b7169203331-01",
+            "00-0af7651916cd43dd8448eb211c80319c-0000000000000000-01",
+            // missing / extra fields
+            "00-0af7651916cd43dd8448eb211c80319c-b7ad6b7169203331",
+            "00-0af7651916cd43dd8448eb211c80319c-b7ad6b7169203331-01-extra",
+        ];
+        for case in bad {
+            assert!(TraceContext::parse(case).is_none(), "accepted: {case:?}");
+        }
+    }
+
+    #[test]
+    fn child_keeps_trace_id_and_sampling() {
+        let parent = TraceContext::mint(1.0);
+        let child = parent.child();
+        assert_eq!(child.trace_id, parent.trace_id);
+        assert_ne!(child.span_id, parent.span_id);
+        assert_eq!(child.sampled, parent.sampled);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_trace() {
+        let ctx = TraceContext::mint(0.5);
+        // re-deciding with the same id gives the same answer everywhere
+        assert_eq!(decide_sample(ctx.trace_id, 0.5), ctx.sampled);
+        assert!(decide_sample(ctx.trace_id, 1.0));
+        assert!(!decide_sample(ctx.trace_id, 0.0));
+    }
+
+    #[test]
+    fn spans_export_sorted_and_phases_partition_the_timeline() {
+        let trace = ActiveTrace::begin(TraceContext::mint(1.0), "gateway", "/v1/completions");
+        let t0 = trace.started();
+        let t1 = t0 + Duration::from_millis(10);
+        let t2 = t0 + Duration::from_millis(30);
+        let t3 = t0 + Duration::from_millis(70);
+        // record out of order on purpose
+        trace.phase(PHASE_QUEUE_WAIT, t1, t2);
+        trace.phase(PHASE_ADMISSION, t0, t1);
+        trace.span(
+            "attempt",
+            SpanKind::Retry,
+            t0,
+            t1,
+            vec![("cause", "node_death".to_string())],
+        );
+        trace.phase(PHASE_DECODE, t2, t3);
+        std::thread::sleep(Duration::from_millis(1));
+        let rec = trace.finish(200, Duration::from_secs(2));
+
+        let names: Vec<&str> = rec.spans.iter().map(|sp| sp.name).collect();
+        // sorted by start offset; the retry span shares t0 with admission
+        assert_eq!(names.len(), 4);
+        assert_eq!(names[2], PHASE_QUEUE_WAIT);
+        assert_eq!(names[3], PHASE_DECODE);
+        let starts: Vec<f64> = rec.spans.iter().map(|sp| sp.start_s).collect();
+        assert!(starts.windows(2).all(|w| w[0] <= w[1]), "sorted: {starts:?}");
+
+        // phases sum to 70ms exactly; the retry span is excluded
+        assert!((rec.phase_total() - 0.070).abs() < 1e-9, "{}", rec.phase_total());
+        assert!(rec.has_phase(PHASE_ADMISSION));
+        assert!(!rec.has_phase("attempt"));
+        assert!(!rec.error && !rec.slow);
+
+        // JSON carries the retry attrs
+        let j = rec.to_json();
+        let spans = j.get("spans").and_then(Json::as_arr).unwrap();
+        let retry = spans
+            .iter()
+            .find(|sp| sp.get("kind").and_then(Json::as_str) == Some("retry"))
+            .unwrap();
+        assert_eq!(
+            retry.get("attrs").and_then(|a| a.get("cause")).and_then(Json::as_str),
+            Some("node_death")
+        );
+    }
+
+    fn rec(id: u64, status: u16, sampled: bool, slow: bool) -> TraceRecord {
+        TraceRecord {
+            trace_id: format!("{:032x}", id as u128),
+            sampled,
+            service: "gateway".into(),
+            endpoint: "/v1/completions".into(),
+            status,
+            start_unix: id as f64,
+            total_s: if slow { 9.0 } else { 0.01 },
+            error: status >= 500,
+            slow,
+            spans: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn ring_retention_under_overflow_keeps_errors_and_slow() {
+        let recorder = TraceRecorder::new(TraceSettings {
+            sample_rate: 1.0,
+            slo: Duration::from_secs(2),
+            capacity: 16,
+        });
+        // two important records early on
+        recorder.record(rec(1, 503, true, false));
+        recorder.record(rec(2, 200, true, true));
+        // then a flood of normal traffic far past capacity
+        for i in 10..500 {
+            recorder.record(rec(i, 200, true, false));
+        }
+        assert!(recorder.len() <= 16 + 2 * 8, "bounded: {}", recorder.len());
+        let traces = recorder.traces();
+        assert!(
+            traces.iter().any(|t| t.trace_id.ends_with('1') && t.error),
+            "error trace survived the flood"
+        );
+        assert!(traces.iter().any(|t| t.slow), "slow trace survived the flood");
+        // newest normal traffic is present, oldest evicted
+        assert!(traces.iter().any(|t| t.start_unix > 490.0));
+        assert!(!traces
+            .iter()
+            .any(|t| (10.0..20.0).contains(&t.start_unix) && !t.error && !t.slow));
+    }
+
+    #[test]
+    fn unsampled_normal_traces_drop_but_unsampled_errors_keep() {
+        let recorder = TraceRecorder::new(TraceSettings {
+            sample_rate: 0.0,
+            slo: Duration::from_secs(2),
+            capacity: 16,
+        });
+        recorder.record(rec(1, 200, false, false));
+        assert_eq!(recorder.len(), 0);
+        assert_eq!(recorder.dropped(), 1);
+        // tail-based: errors survive even when head-sampling said no
+        recorder.record(rec(2, 500, false, false));
+        recorder.record(rec(3, 200, false, true));
+        assert_eq!(recorder.len(), 2);
+        assert_eq!(recorder.recorded(), 2);
+    }
+
+    #[test]
+    fn decision_ring_caps_and_exports() {
+        let recorder = DecisionRecorder::new(4);
+        for i in 0..10 {
+            recorder.record(
+                "coordinator",
+                "placement",
+                if i % 2 == 0 { "forecast" } else { "backfill" },
+                vec![("node", format!("node-{i}"))],
+            );
+        }
+        assert_eq!(recorder.len(), 4);
+        assert_eq!(recorder.recorded(), 10);
+        let j = recorder.export_json();
+        let ds = j.get("decisions").and_then(Json::as_arr).unwrap();
+        assert_eq!(ds.len(), 4);
+        // oldest evicted: the ring starts at i=6
+        assert_eq!(
+            ds[0].get("attrs").and_then(|a| a.get("node")).and_then(Json::as_str),
+            Some("node-6")
+        );
+        assert_eq!(j.get("recorded").and_then(Json::as_f64), Some(10.0));
+    }
+}

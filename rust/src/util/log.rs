@@ -2,6 +2,10 @@
 //!
 //! `ENOVA_LOG=debug|info|warn|error` selects the level (default `info`).
 //! Thread-safe via a global atomic level + line-buffered stderr writes.
+//!
+//! `--log-json` (or `ENOVA_LOG_JSON=1`) switches every line to a single
+//! structured JSON object `{"ts":…,"level":…,"target":…,"msg":…}` so
+//! trace IDs embedded in messages survive log shipping verbatim.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::{SystemTime, UNIX_EPOCH};
@@ -16,6 +20,7 @@ pub enum Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
+static JSON: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized, 0 = text, 1 = json
 
 fn init_from_env() -> u8 {
     let lvl = match std::env::var("ENOVA_LOG").as_deref() {
@@ -30,6 +35,40 @@ fn init_from_env() -> u8 {
 
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Switch to structured JSON lines (the `--log-json` flag).
+pub fn set_json(on: bool) {
+    JSON.store(u8::from(on), Ordering::Relaxed);
+}
+
+pub fn json_enabled() -> bool {
+    let mut cur = JSON.load(Ordering::Relaxed);
+    if cur == u8::MAX {
+        cur = u8::from(matches!(
+            std::env::var("ENOVA_LOG_JSON").as_deref(),
+            Ok("1") | Ok("true")
+        ));
+        JSON.store(cur, Ordering::Relaxed);
+    }
+    cur == 1
+}
+
+/// Minimal JSON string escape (quotes, backslashes, control chars).
+fn escape_json(input: &str) -> String {
+    let mut out = String::with_capacity(input.len() + 2);
+    for c in input.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 pub fn enabled(level: Level) -> bool {
@@ -48,6 +87,22 @@ pub fn log(level: Level, target: &str, msg: std::fmt::Arguments) {
         .duration_since(UNIX_EPOCH)
         .unwrap_or_default();
     let secs = now.as_secs();
+    if json_enabled() {
+        let level_name = match level {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        };
+        eprintln!(
+            "{{\"ts\":{:.3},\"level\":\"{}\",\"target\":\"{}\",\"msg\":\"{}\"}}",
+            now.as_secs_f64(),
+            level_name,
+            escape_json(target),
+            escape_json(&msg.to_string())
+        );
+        return;
+    }
     let (h, m, s) = ((secs / 3600) % 24, (secs / 60) % 60, secs % 60);
     let tag = match level {
         Level::Debug => "DEBUG",
@@ -89,6 +144,14 @@ macro_rules! error {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(escape_json("plain"), "plain");
+        assert_eq!(escape_json("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(escape_json("line\nbreak\ttab"), "line\\nbreak\\ttab");
+        assert_eq!(escape_json("\u{1}"), "\\u0001");
+    }
 
     #[test]
     fn level_ordering() {

@@ -1,0 +1,310 @@
+//! End-to-end tests of the distributed tracing plane: a coordinator and
+//! two in-process nodes over real sockets. Every proxied request must
+//! leave ONE trace whose coordinator-side and node-side spans share a
+//! trace ID, whose node-side lifecycle phases partition the node timeline
+//! (durations sum to ≈ the measured latency), and a node death mid-run
+//! must leave `cause=node_death` retry spans plus a matching backfill
+//! entry in the decision flight recorder — all with zero non-2xx.
+
+use enova::cluster::coordinator::{ClusterPolicy, Coordinator, CoordinatorConfig};
+use enova::cluster::node::{NodeConfig, NodeServer};
+use enova::cluster::NodeIdentity;
+use enova::engine::sim::{SimEngine, SimEngineConfig};
+use enova::engine::StreamEngine;
+use enova::gateway::loadgen::{self, run_scenario, LoadgenReport, ScenarioConfig, ScenarioKind};
+use enova::gateway::metrics::parse_exposition;
+use enova::gateway::{EngineSpawner, GatewayConfig};
+use enova::trace::SpanKind;
+use enova::util::json::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn sim_spawner() -> EngineSpawner {
+    Arc::new(|_id| {
+        Ok(Box::new(SimEngine::new(SimEngineConfig {
+            max_num_seqs: 4,
+            max_tokens: 64,
+            step_delay: Duration::from_millis(2),
+        })) as Box<dyn StreamEngine>)
+    })
+}
+
+fn node_config(id: &str, coordinator: &str, initial_replicas: usize) -> NodeConfig {
+    NodeConfig {
+        gateway: GatewayConfig {
+            max_pending: 1024,
+            max_tokens_default: 8,
+            monitor_interval: Duration::from_millis(25),
+            warm_pool: 1,
+            ..GatewayConfig::default()
+        },
+        identity: NodeIdentity {
+            node_id: id.to_string(),
+            gpu_memory_total: 24.0,
+            replica_gpu_memory: 8.0,
+            max_replicas: 3,
+            replica_capacity_rps: 0.0,
+        },
+        initial_replicas,
+        coordinator: Some(coordinator.to_string()),
+        announce_interval: Duration::from_millis(100),
+        advertise_addr: None,
+    }
+}
+
+fn non_2xx(report: &LoadgenReport) -> usize {
+    report
+        .status_counts
+        .iter()
+        .filter(|&(&code, _)| !(200..300).contains(&code))
+        .map(|(_, &n)| n)
+        .sum()
+}
+
+/// The lifecycle phases every served request must record node-side.
+const LIFECYCLE_PHASES: [&str; 5] = ["admission", "dispatch", "queue_wait", "prefill", "decode"];
+
+/// The headline tracing behavior: a spike through the 2-node cluster
+/// leaves, for every request, one trace whose coordinator-side and
+/// node-side spans share a trace ID (visible in the coordinator's
+/// aggregated `/debug/traces`), and whose node-side phase durations sum
+/// to within 10% of that request's measured latency.
+#[test]
+fn cross_node_traces_share_one_id_and_phases_partition_the_latency() {
+    let coordinator = Coordinator::start(CoordinatorConfig {
+        heartbeat_interval: Duration::from_millis(50),
+        node_timeout_beats: 4,
+        max_pending: 2048,
+        policy: ClusterPolicy {
+            // tracing is the subject here; scaling loops stay off
+            detector_scaling: false,
+            forecast: None,
+            ..ClusterPolicy::default()
+        },
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let addr = coordinator.addr_string();
+
+    let node_a = NodeServer::start(node_config("node-a", &addr, 1), sim_spawner()).unwrap();
+    let node_b = NodeServer::start(node_config("node-b", &addr, 1), sim_spawner()).unwrap();
+    assert!(coordinator.wait_for_nodes(2, Duration::from_secs(10)));
+    assert!(coordinator.wait_for_replicas(2, Duration::from_secs(10)));
+
+    let scn = ScenarioConfig {
+        kind: ScenarioKind::Spike,
+        duration: Duration::from_secs(8),
+        base_rps: 2.0,
+        peak_rps: 12.0,
+        spike_start: 0.3,
+        spike_len: 0.5,
+        seed: 7,
+        workers: 48,
+        max_tokens: 4,
+        ..ScenarioConfig::default()
+    };
+    let report = run_scenario(&addr, &scn);
+    assert_eq!(report.errors, 0, "strict: no transport errors: {}", report.summary());
+    assert_eq!(non_2xx(&report), 0, "strict: zero non-2xx: {:?}", report.status_counts);
+    // the scenario streams every 4th request, so SSE timing percentiles
+    // are real measurements, not zero-fills
+    assert!(report.ttft_p50_ms > 0.0, "TTFT measured: {}", report.summary());
+    assert!(report.itl_p50_ms > 0.0, "inter-token gaps measured: {}", report.summary());
+
+    // ---- the coordinator's aggregated view: both sides of every trace
+    let scrape = loadgen::get(&addr, "/debug/traces").unwrap();
+    assert_eq!(scrape.status, 200);
+    let view = scrape.json().unwrap();
+    let traces = view.get("traces").and_then(Json::as_arr).expect("traces array");
+    assert!(!traces.is_empty(), "the spike left traces behind");
+    assert!(
+        view.get("nodes_polled").and_then(Json::as_usize) == Some(2),
+        "both nodes contributed spans: {}",
+        view.to_string_compact()
+    );
+    let mut cross_node = 0usize;
+    for t in traces {
+        let spans = t.get("spans").and_then(Json::as_arr).expect("spans array");
+        let service_of =
+            |sp: &Json| sp.get("service").and_then(Json::as_str).unwrap_or("").to_string();
+        let has_coord = spans.iter().any(|sp| service_of(sp) == "coordinator");
+        let has_node = spans.iter().any(|sp| service_of(sp).starts_with("node:"));
+        assert!(has_coord, "coordinator spans present: {}", t.to_string_compact());
+        if !has_node {
+            continue; // a 429/edge case without a node hop would be legal
+        }
+        cross_node += 1;
+        // one trace ID spans both services — and the node side carries
+        // the full request lifecycle
+        for phase in LIFECYCLE_PHASES {
+            assert!(
+                spans.iter().any(|sp| {
+                    sp.get("kind").and_then(Json::as_str) == Some("phase")
+                        && sp.get("name").and_then(Json::as_str) == Some(phase)
+                        && service_of(sp).starts_with("node:")
+                }),
+                "phase {phase} missing node-side: {}",
+                t.to_string_compact()
+            );
+        }
+    }
+    assert!(
+        cross_node * 10 >= traces.len() * 9,
+        "nearly every trace crossed to a node: {cross_node}/{}",
+        traces.len()
+    );
+
+    // ---- node-side records: phases partition the measured latency
+    for node in [&node_a, &node_b] {
+        let node_view = loadgen::get(&node.addr_string(), "/debug/traces").unwrap().json().unwrap();
+        let node_traces = node_view.get("traces").and_then(Json::as_arr).expect("traces");
+        assert!(!node_traces.is_empty(), "node kept traces");
+        for t in node_traces {
+            let total = t.get("total_seconds").and_then(Json::as_f64).unwrap();
+            let phase_sum = t.get("phase_seconds_total").and_then(Json::as_f64).unwrap();
+            assert!(
+                (phase_sum - total).abs() <= total * 0.10,
+                "phase sum {phase_sum:.6}s within 10% of latency {total:.6}s: {}",
+                t.to_string_compact()
+            );
+        }
+    }
+
+    // ---- the phase histograms made it to the node scrape
+    let exposition = loadgen::get(&node_a.addr_string(), "/metrics").unwrap();
+    let samples = parse_exposition(&exposition.body_str()).expect("valid exposition");
+    for phase in LIFECYCLE_PHASES {
+        let count: f64 = samples
+            .iter()
+            .filter(|s| {
+                s.name == "enova_request_phase_seconds_count"
+                    && s.labels.get("phase").map(String::as_str) == Some(phase)
+            })
+            .map(|s| s.value)
+            .sum();
+        assert!(count > 0.0, "phase {phase} histogram counted requests");
+    }
+    assert!(
+        samples.iter().any(|s| s.name == "enova_gateway_ttft_seconds_count" && s.value > 0.0),
+        "TTFT histogram moved"
+    );
+
+    coordinator.shutdown();
+    node_a.shutdown();
+    node_b.shutdown();
+}
+
+/// Kill a node mid-run: the affected requests re-dispatch (zero non-2xx),
+/// each re-dispatch leaves a `cause=node_death` retry span on its trace,
+/// and the decision flight recorder holds the matching backfill placement
+/// with its bin-packing cause snapshot.
+#[test]
+fn node_death_leaves_retry_spans_and_a_backfill_decision() {
+    let coordinator = Coordinator::start(CoordinatorConfig {
+        // slow death detection a little so in-flight traffic actually
+        // hits the dead node and exercises the retry path
+        heartbeat_interval: Duration::from_millis(250),
+        node_timeout_beats: 3,
+        max_pending: 2048,
+        dispatch_attempts: 4,
+        policy: ClusterPolicy {
+            sample_interval: Duration::from_millis(50),
+            detector_scaling: false,
+            forecast: None,
+            cooldown: Duration::from_secs(30),
+            min_replicas: 1,
+            max_replicas: 4,
+            ..ClusterPolicy::default()
+        },
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let addr = coordinator.addr_string();
+
+    let node_a = NodeServer::start(node_config("node-a", &addr, 1), sim_spawner()).unwrap();
+    let node_b = NodeServer::start(node_config("node-b", &addr, 1), sim_spawner()).unwrap();
+    assert!(coordinator.wait_for_nodes(2, Duration::from_secs(10)));
+    assert!(coordinator.wait_for_replicas(2, Duration::from_secs(10)));
+
+    let scn = ScenarioConfig {
+        kind: ScenarioKind::Steady,
+        duration: Duration::from_secs(6),
+        base_rps: 12.0,
+        peak_rps: 12.0,
+        seed: 13,
+        workers: 32,
+        max_tokens: 4,
+        ..ScenarioConfig::default()
+    };
+    let loadgen_addr = addr.clone();
+    let driver = std::thread::spawn(move || run_scenario(&loadgen_addr, &scn));
+
+    std::thread::sleep(Duration::from_millis(2000));
+    node_b.shutdown();
+
+    let report = driver.join().unwrap();
+    assert_eq!(report.errors, 0, "strict through the death: {}", report.summary());
+    assert_eq!(non_2xx(&report), 0, "zero non-2xx: {:?}", report.status_counts);
+
+    let deadline = std::time::Instant::now() + Duration::from_secs(8);
+    while coordinator.healthy_nodes() != 1 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(coordinator.healthy_nodes(), 1, "node-b declared dead");
+    assert!(
+        coordinator.wait_for_replicas(2, Duration::from_secs(8)),
+        "backfill restored 2 replicas: {:?}",
+        coordinator.nodes()
+    );
+
+    // ---- the retried requests carry the cause on their traces
+    let death_retries: Vec<_> = coordinator
+        .traces()
+        .into_iter()
+        .filter(|t| {
+            t.spans.iter().any(|sp| {
+                sp.kind == SpanKind::Retry
+                    && sp.attrs.iter().any(|(k, v)| *k == "cause" && v == "node_death")
+            })
+        })
+        .collect();
+    assert!(
+        !death_retries.is_empty(),
+        "at least one trace recorded a node_death retry span"
+    );
+    for t in &death_retries {
+        assert_eq!(t.status, 200, "the retried request still succeeded");
+        let proxies = t.spans.iter().filter(|sp| sp.kind == SpanKind::Proxy).count();
+        assert!(proxies >= 2, "a failed and a successful attempt: {t:?}");
+    }
+
+    // ---- and the flight recorder explains the backfill that followed
+    let backfill = coordinator
+        .decisions()
+        .into_iter()
+        .find(|d| d.kind == "placement" && d.reason == "backfill")
+        .expect("a backfill decision was recorded");
+    assert_eq!(backfill.service, "coordinator");
+    assert!(
+        backfill.attrs.iter().any(|(k, v)| *k == "node" && v == "node-a"),
+        "backfill chose the survivor: {backfill:?}"
+    );
+    assert!(
+        backfill.attrs.iter().any(|(k, v)| *k == "bin_packing" && v.contains("node-a")),
+        "the bin-packing inputs were snapshotted: {backfill:?}"
+    );
+
+    // the same entry is served over HTTP
+    let over_http = loadgen::get(&addr, "/debug/decisions").unwrap();
+    assert_eq!(over_http.status, 200);
+    let body = over_http.json().unwrap();
+    let decisions = body.get("decisions").and_then(Json::as_arr).expect("decisions array");
+    assert!(
+        decisions.iter().any(|d| d.get("reason").and_then(Json::as_str) == Some("backfill")),
+        "backfill visible at /debug/decisions: {}",
+        body.to_string_compact()
+    );
+
+    coordinator.shutdown();
+    node_a.shutdown();
+}

@@ -97,4 +97,44 @@ if [[ "${PLACEMENTS:-0}" -lt 1 ]]; then
     exit 1
 fi
 
-echo "cluster smoke OK; report at $REPORT ($PLACEMENTS placements, node-b death absorbed)"
+echo "==> trace + decision assertions (cross-node traces, flight recorder)"
+TRACES="${CLUSTER_TRACES:-cluster-traces.json}"
+DECISIONS="${CLUSTER_DECISIONS:-cluster-decisions.json}"
+curl -fsS "http://127.0.0.1:$PORT/debug/traces" > "$TRACES"
+curl -fsS "http://127.0.0.1:$PORT/debug/decisions" > "$DECISIONS"
+python3 - "$TRACES" "$DECISIONS" <<'PY'
+import json, sys
+
+view = json.load(open(sys.argv[1]))
+traces = view["traces"]
+assert view["recorded"] > 0 and traces, "the run left no traces on the coordinator"
+# node-b is dead at scrape time, so only the survivor contributes spans
+assert view["nodes_polled"] >= 1, f"no node answered the trace poll: {view['nodes_polled']}"
+
+# at least one merged trace must hold BOTH sides under one trace ID, with
+# the full node-side lifecycle (node-b's share died with node-b)
+lifecycle = {"admission", "dispatch", "queue_wait", "prefill", "decode"}
+cross = 0
+for t in traces:
+    services = {s["service"] for s in t["spans"]}
+    if "coordinator" not in services or not any(x.startswith("node:") for x in services):
+        continue
+    node_phases = {
+        s["name"]
+        for s in t["spans"]
+        if s["kind"] == "phase" and s["service"].startswith("node:")
+    }
+    if lifecycle <= node_phases:
+        cross += 1
+assert cross > 0, "no cross-node trace carried the full lifecycle on the node side"
+
+decisions = json.load(open(sys.argv[2]))["decisions"]
+assert decisions, "the decision flight recorder is empty"
+placements = [d for d in decisions if d["kind"] == "placement"]
+assert placements, f"no placement decision recorded: {decisions}"
+for d in placements:
+    assert d["attrs"].get("bin_packing"), f"placement without bin-packing snapshot: {d}"
+print(f"traces OK: {cross} cross-node traces; {len(placements)} placement decisions recorded")
+PY
+
+echo "cluster smoke OK; report at $REPORT ($PLACEMENTS placements, node-b death absorbed, $TRACES + $DECISIONS saved)"

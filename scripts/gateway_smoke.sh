@@ -53,5 +53,30 @@ echo "$SCRAPE" | grep -c '^enova_' >/dev/null
 echo "$SCRAPE" | grep -q '^enova_supervisor_forecast_enabled 1'
 echo "$SCRAPE" | grep -q '^enova_supervisor_forecast_rps'
 echo "$SCRAPE" | grep -q '^enova_supervisor_scale_origin_total{origin="proactive"}'
+# the tracing surface is live: phase histograms counted the run
+echo "$SCRAPE" | grep -q '^enova_request_phase_seconds_count{phase="admission"}'
+echo "$SCRAPE" | grep -Eq '^enova_request_phase_seconds_count\{phase="decode"\} [1-9]'
 
-echo "gateway smoke OK; report at $REPORT"
+echo "==> trace assertions (every request left a full-lifecycle trace)"
+TRACES="${SMOKE_TRACES:-gateway-traces${SCENARIO:+-$SCENARIO}.json}"
+curl -fsS "http://127.0.0.1:$PORT/debug/traces" > "$TRACES"
+python3 - "$TRACES" <<'PY'
+import json, sys
+
+view = json.load(open(sys.argv[1]))
+traces = view["traces"]
+assert view["recorded"] > 0 and traces, "the run left no traces behind"
+lifecycle = {"admission", "dispatch", "queue_wait", "prefill", "decode"}
+full = 0
+for t in traces:
+    if t["status"] != 200:
+        continue
+    phases = {s["name"] for s in t["spans"] if s["kind"] == "phase"}
+    missing = lifecycle - phases
+    assert not missing, f"trace {t['trace_id']} missing phases {missing}: {t}"
+    full += 1
+assert full > 0, "no successful trace carried the full lifecycle"
+print(f"traces OK: {full} full-lifecycle traces of {len(traces)} recorded")
+PY
+
+echo "gateway smoke OK; report at $REPORT, traces at $TRACES"
