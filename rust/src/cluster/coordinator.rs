@@ -20,10 +20,15 @@
 //!   anti-affinity call; drains pick the most-fragmented node.
 //!   A dead node's replicas are backfilled on survivors — the supervisor
 //!   tracks the replica count it wants, not where it happens to live.
-//! * **HTTP workers** — the same accept/worker pattern as the gateway.
+//! * **ingress** — the same sharded reactor as the gateway
+//!   ([`crate::gateway::reactor`]), with the legacy thread-per-connection
+//!   pool behind [`IngressMode::Threaded`]. The proxy hop reuses
+//!   keep-alive node connections from a [`super::pool::NodePool`] and
+//!   relays SSE chunk frames zero-copy.
 
 use super::metrics::{render_prometheus, ClusterMetrics, NodeSample};
 use super::placement;
+use super::pool::{ChunkFrameScanner, NodePool};
 use super::proto::{NodeAnnounce, NodeStatus};
 use crate::deployer::NodeInventory;
 use crate::detect::{ScaleDirection, ZscoreDetector};
@@ -32,7 +37,9 @@ use crate::gateway::admission::{AdmissionGate, TokenBucket};
 use crate::gateway::http;
 use crate::gateway::loadgen::{self, read_chunk, read_response_head};
 use crate::gateway::openai;
-use crate::gateway::sse::{write_sse_head, ChunkedWriter};
+use crate::gateway::reactor;
+use crate::gateway::sse::write_sse_head;
+use crate::gateway::IngressMode;
 use crate::gateway::supervisor::{ForecastPolicy, Streaks, Trigger};
 use crate::metrics::Frame;
 use crate::trace::{
@@ -100,6 +107,8 @@ pub struct CoordinatorConfig {
     /// 0 = ephemeral (tests)
     pub port: u16,
     pub http_workers: usize,
+    /// connection acceptance model; [`IngressMode::Reactor`] by default
+    pub ingress: IngressMode,
     pub max_body_bytes: usize,
     /// admission bound on in-flight proxied requests (429 beyond)
     pub max_pending: usize,
@@ -124,6 +133,7 @@ impl Default for CoordinatorConfig {
             host: "127.0.0.1".into(),
             port: 0,
             http_workers: 64,
+            ingress: IngressMode::Reactor,
             max_body_bytes: 1024 * 1024,
             max_pending: 1024,
             rate_limit: 0.0,
@@ -194,6 +204,8 @@ struct CoordinatorState {
     router: RwLock<crate::router::NodeRouter>,
     gate: Arc<AdmissionGate>,
     bucket: Option<Mutex<TokenBucket>>,
+    /// idle keep-alive connections to nodes, reused across proxy attempts
+    pool: NodePool,
     metrics: ClusterMetrics,
     tracer: TraceRecorder,
     decisions: DecisionRecorder,
@@ -226,6 +238,7 @@ impl Coordinator {
             gate: AdmissionGate::new(cfg.max_pending),
             bucket: (cfg.rate_limit > 0.0)
                 .then(|| Mutex::new(TokenBucket::new(cfg.rate_limit, cfg.rate_burst))),
+            pool: NodePool::new(),
             metrics: ClusterMetrics::new(),
             tracer: TraceRecorder::new(cfg.trace.clone()),
             decisions: DecisionRecorder::new(256),
@@ -240,32 +253,83 @@ impl Coordinator {
             cfg,
         });
 
-        let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
-        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        // connection fan-out, per the configured ingress mode (same
+        // split as the gateway's)
         let mut threads = Vec::new();
-        {
-            let state = Arc::clone(&state);
-            threads.push(std::thread::spawn(move || {
-                accept_loop(listener, conn_tx, &state);
-            }));
-        }
-        for _ in 0..state.cfg.http_workers.max(1) {
-            let state = Arc::clone(&state);
-            let conn_rx = Arc::clone(&conn_rx);
-            threads.push(std::thread::spawn(move || loop {
-                if state.stop.load(Ordering::Acquire) {
-                    break;
+        match state.cfg.ingress {
+            IngressMode::Reactor => {
+                // no stop-flag fast-exit in the handler: requests already
+                // dispatched when a drain starts still run route() and
+                // get well-formed responses
+                let handler: reactor::Handler = {
+                    let state = Arc::clone(&state);
+                    Arc::new(move |stream: &mut TcpStream, req: &http::Request| {
+                        let keep = req.keep_alive();
+                        route(req, stream, &state).is_ok() && keep
+                    })
+                };
+                let on_parse_error: reactor::ErrorResponder = Arc::new(|e| {
+                    let body =
+                        openai::to_wire(&openai::error_body("invalid_request_error", &e.message));
+                    http::Response::json(e.status, body)
+                });
+                let stop: reactor::StopCheck = {
+                    let state = Arc::clone(&state);
+                    Arc::new(move || state.stop.load(Ordering::Acquire))
+                };
+                let rcfg = reactor::ReactorConfig {
+                    shards: reactor::default_shards(),
+                    handler_threads: state.cfg.http_workers.max(1),
+                    max_body_bytes: state.cfg.max_body_bytes,
+                    idle_timeout: Duration::from_secs(5),
+                };
+                let r = reactor::Reactor::start(
+                    listener,
+                    rcfg,
+                    handler,
+                    on_parse_error,
+                    stop,
+                    Arc::clone(&state.metrics.ingress),
+                )?;
+                threads.extend(r.into_threads());
+            }
+            IngressMode::Threaded => {
+                // legacy: accept thread -> worker pool
+                state
+                    .metrics
+                    .ingress
+                    .handler_threads
+                    .store(state.cfg.http_workers.max(1) as u64, Ordering::Release);
+                let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
+                let conn_rx = Arc::new(Mutex::new(conn_rx));
+                {
+                    let state = Arc::clone(&state);
+                    threads.push(std::thread::spawn(move || {
+                        accept_loop(listener, conn_tx, &state);
+                    }));
                 }
-                let next = conn_rx
-                    .lock()
-                    .unwrap()
-                    .recv_timeout(Duration::from_millis(100));
-                match next {
-                    Ok(stream) => handle_connection(stream, &state),
-                    Err(RecvTimeoutError::Timeout) => continue,
-                    Err(RecvTimeoutError::Disconnected) => break,
+                for _ in 0..state.cfg.http_workers.max(1) {
+                    let state = Arc::clone(&state);
+                    let conn_rx = Arc::clone(&conn_rx);
+                    threads.push(std::thread::spawn(move || loop {
+                        if state.stop.load(Ordering::Acquire) {
+                            break;
+                        }
+                        let next = conn_rx
+                            .lock()
+                            .unwrap()
+                            .recv_timeout(Duration::from_millis(100));
+                        match next {
+                            Ok(stream) => {
+                                handle_connection(stream, &state);
+                                state.metrics.ingress.open.fetch_sub(1, Ordering::AcqRel);
+                            }
+                            Err(RecvTimeoutError::Timeout) => continue,
+                            Err(RecvTimeoutError::Disconnected) => break,
+                        }
+                    }));
                 }
-            }));
+            }
         }
         {
             let state = Arc::clone(&state);
@@ -467,18 +531,19 @@ fn rebuild_router(state: &CoordinatorState) {
 /// and after `node_timeout_beats` consecutive failures deroute the node
 /// without waiting for the heartbeat sweep to notice.
 fn note_node_error(state: &CoordinatorState, node_id: &str) {
-    let mut died = false;
+    let mut died: Option<String> = None;
     {
         let mut nodes = state.nodes.write().unwrap();
         if let Some(e) = nodes.get_mut(node_id) {
             e.failures += 1;
             if e.healthy && e.failures >= state.cfg.node_timeout_beats {
                 e.healthy = false;
-                died = true;
+                died = Some(e.announce.addr.clone());
             }
         }
     }
-    if died {
+    if let Some(addr) = died {
+        state.pool.purge(&addr);
         state.metrics.note_node_death();
         crate::warn!("cluster", "node {node_id} declared dead after repeated failures");
         rebuild_router(state);
@@ -496,6 +561,8 @@ fn accept_loop(listener: TcpListener, conn_tx: Sender<TcpStream>, state: &Coordi
                 let _ = stream.set_nodelay(true);
                 let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
                 let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+                state.metrics.ingress.accepted_total.fetch_add(1, Ordering::Relaxed);
+                state.metrics.ingress.open.fetch_add(1, Ordering::AcqRel);
                 if conn_tx.send(stream).is_err() {
                     break;
                 }
@@ -785,13 +852,14 @@ fn serve_proxy(
     let mut excluded: Vec<String> = Vec::new();
     let mut last_failure = String::from("no serving nodes registered");
     for attempt in 0..state.cfg.dispatch_attempts.max(1) {
-        let picked = {
-            let router = state.router.read().unwrap();
-            if excluded.is_empty() {
-                router.dispatch()
-            } else {
-                router.dispatch_excluding(&excluded)
-            }
+        // lock-free dispatch: hold the router lock only for the O(1)
+        // snapshot clone, then scan without serializing against
+        // heartbeat-driven rebuilds
+        let routable = state.router.read().unwrap().snapshot();
+        let picked = if excluded.is_empty() {
+            routable.dispatch()
+        } else {
+            routable.dispatch_excluding(&excluded)
         };
         let Some((node_id, handle)) = picked else {
             break;
@@ -948,11 +1016,26 @@ fn aggregated_traces(state: &CoordinatorState) -> Json {
     export
 }
 
+/// The per-attempt proxy parameters that travel together.
+struct ProxyHop<'a> {
+    addr: &'a str,
+    path: &'a str,
+    body: &'a str,
+    stream_mode: bool,
+    traceparent: &'a str,
+}
+
 /// Run one exchange against `addr`, relaying the outcome to the client
 /// per the atomicity rules: unary responses are buffered (so nothing
 /// reaches the client unless the node answered), SSE streams are relayed
-/// chunk-by-chunk and only become non-retryable once the first chunk has
+/// frame-by-frame and only become non-retryable once the first frame has
 /// been forwarded.
+///
+/// Connections come from the keep-alive [`NodePool`] when one is parked.
+/// A transport failure on a *reused* socket before anything was committed
+/// to the client redials once on a fresh connection — the node may simply
+/// have reaped the idle socket — so pooling never turns an ordinary idle
+/// sweep into node blame (`note_node_error`) or a burned dispatch attempt.
 fn proxy_attempt(
     state: &CoordinatorState,
     addr: &str,
@@ -962,20 +1045,72 @@ fn proxy_attempt(
     traceparent: &str,
     client: &mut TcpStream,
 ) -> Attempt {
-    let upstream = match open_upstream(addr, state.cfg.request_timeout) {
-        Ok(s) => s,
-        Err(_) => return Attempt::Retry { transport: true, status: None },
+    let hop = ProxyHop {
+        addr,
+        path,
+        body,
+        stream_mode,
+        traceparent,
     };
+    let mut force_fresh = false;
+    loop {
+        let pooled = if force_fresh {
+            None
+        } else {
+            state.pool.checkout(addr)
+        };
+        let reused = pooled.is_some();
+        let upstream = match pooled {
+            Some(s) => {
+                state.metrics.note_upstream_reuse();
+                s
+            }
+            None => {
+                state.metrics.note_upstream_dial();
+                match open_upstream(addr, state.cfg.request_timeout) {
+                    Ok(s) => s,
+                    Err(_) => return Attempt::Retry { transport: true, status: None },
+                }
+            }
+        };
+        state.metrics.set_upstream_pool_idle(state.pool.idle_count());
+        match proxy_once(state, upstream, &hop, client) {
+            Attempt::Retry {
+                transport: true,
+                status: None,
+            } if reused => force_fresh = true,
+            outcome => return outcome,
+        }
+    }
+}
+
+/// One request/response exchange on an already-open node connection.
+/// Parks the connection back in the pool when the response ended at a
+/// clean framing boundary and the node did not ask to close.
+fn proxy_once(
+    state: &CoordinatorState,
+    upstream: TcpStream,
+    hop: &ProxyHop<'_>,
+    client: &mut TcpStream,
+) -> Attempt {
+    // pooled sockets keep whatever timeouts they had; re-arm per attempt
+    let _ = upstream.set_read_timeout(Some(state.cfg.request_timeout));
+    let _ = upstream.set_write_timeout(Some(state.cfg.request_timeout));
     {
         let mut w = &upstream;
+        // keep-alive head (no `Connection: close`): the node parks the
+        // connection after answering and the pool reuses it
         let head = format!(
-            "POST {path} HTTP/1.1\r\nHost: {addr}\r\nAccept: */*\r\nConnection: close\r\n\
-             traceparent: {traceparent}\r\n\
+            "POST {} HTTP/1.1\r\nHost: {}\r\nAccept: */*\r\n\
+             traceparent: {}\r\n\
              Content-Type: application/json\r\nContent-Length: {}\r\n\r\n",
-            body.len()
+            hop.path,
+            hop.addr,
+            hop.traceparent,
+            hop.body.len()
         );
         if w.write_all(head.as_bytes())
-            .and_then(|_| w.write_all(body.as_bytes()))
+            .and_then(|_| w.write_all(hop.body.as_bytes()))
             .and_then(|_| w.flush())
             .is_err()
         {
@@ -987,21 +1122,36 @@ fn proxy_attempt(
         Ok(h) => h,
         Err(_) => return Attempt::Retry { transport: true, status: None },
     };
+    let upstream_keep_alive = !headers
+        .get("connection")
+        .map(|v| v.eq_ignore_ascii_case("close"))
+        .unwrap_or(false);
 
     let is_sse = headers
         .get("content-type")
         .map(|v| v.starts_with("text/event-stream"))
         .unwrap_or(false);
-    if stream_mode && status == 200 && is_sse {
-        return relay_sse(state, &mut reader, client);
+    if hop.stream_mode && status == 200 && is_sse {
+        let (outcome, clean) = relay_sse(state, &mut reader, client);
+        if clean && upstream_keep_alive {
+            checkin_upstream(state, hop.addr, reader);
+        }
+        return outcome;
     }
 
     // unary (or error) path: buffer the whole upstream body first, so a
     // node that dies mid-response never half-commits the client
+    let framed =
+        headers.contains_key("transfer-encoding") || headers.contains_key("content-length");
     let upstream_body = match read_framed_body(&mut reader, &headers) {
         Ok(b) => b,
         Err(_) => return Attempt::Retry { transport: true, status: None },
     };
+    // a framed body ends at a known boundary, so the socket is reusable
+    // even when the node answered a retryable shed status
+    if framed && upstream_keep_alive {
+        checkin_upstream(state, hop.addr, reader);
+    }
     if retryable_status(status) {
         return Attempt::Retry { transport: false, status: Some(status) };
     }
@@ -1014,51 +1164,91 @@ fn proxy_attempt(
     }
 }
 
-/// Relay an SSE stream chunk-by-chunk. The client's SSE head is written
-/// lazily on the first relayed chunk: until then an upstream death simply
-/// re-dispatches. After it, an upstream death terminates the stream with
-/// a `service_unavailable` event and a clean chunked close — the same
-/// shape a single-node gateway gives a mid-stream engine failure.
+/// Park an upstream connection whose response was fully consumed. A
+/// non-empty read-ahead buffer means unconsumed response bytes would be
+/// lost with the `BufReader` — those sockets are dropped instead.
+fn checkin_upstream(state: &CoordinatorState, addr: &str, reader: BufReader<TcpStream>) {
+    if reader.buffer().is_empty() {
+        state.pool.checkin(addr, reader.into_inner());
+        state.metrics.set_upstream_pool_idle(state.pool.idle_count());
+    }
+}
+
+/// Relay an SSE stream zero-copy: upstream chunk frames are forwarded to
+/// the client *verbatim* at frame boundaries (no decode, no re-framing —
+/// the terminal `0\r\n\r\n` ends the client's response exactly where the
+/// node's ended), with a [`ChunkFrameScanner`] tracking boundaries. The
+/// client's SSE head is written lazily on the first complete frame: until
+/// then an upstream death simply re-dispatches. After it, an upstream
+/// death terminates the stream with a `service_unavailable` event and a
+/// clean chunked close — the same shape a single-node gateway gives a
+/// mid-stream engine failure (the client only ever saw whole frames, so
+/// the injected event lands on a valid boundary).
+///
+/// The second return value is true when the stream ended at a clean
+/// response boundary (the connection is poolable).
 fn relay_sse<R: BufRead>(
     state: &CoordinatorState,
     upstream: &mut R,
     client: &mut TcpStream,
-) -> Attempt {
+) -> (Attempt, bool) {
+    enum Step {
+        Forwarded { consumed: usize, terminal: bool },
+        UpstreamGone,
+    }
+    let mut scanner = ChunkFrameScanner::new();
     let mut started = false;
     let mut relayed = 0usize;
-    let mut chunks = ChunkedWriter::new(client);
     loop {
-        match read_chunk(upstream) {
-            Ok(Some(data)) => {
-                if !started {
-                    // `chunks` borrows the client, so the head goes
-                    // through the writer's inner reference
-                    if let Err(e) = write_sse_head_via(&mut chunks) {
-                        return Attempt::ClientGone(e);
+        let step = match upstream.fill_buf() {
+            Ok(buf) if buf.is_empty() => Step::UpstreamGone,
+            Err(_) => Step::UpstreamGone,
+            Ok(buf) => {
+                let n = buf.len();
+                match scanner.push(buf) {
+                    // malformed chunk framing is handled like a death:
+                    // terminate (or retry, pre-commit) rather than
+                    // forward bytes we cannot bound
+                    Err(_) => Step::UpstreamGone,
+                    Ok(scan) => {
+                        if !scan.carry_flush.is_empty() || !scan.emit.is_empty() {
+                            if !started {
+                                if let Err(e) = write_sse_head(client) {
+                                    return (Attempt::ClientGone(e), false);
+                                }
+                                started = true;
+                            }
+                            if let Err(e) = client
+                                .write_all(&scan.carry_flush)
+                                .and_then(|_| client.write_all(scan.emit))
+                                .and_then(|_| client.flush())
+                            {
+                                return (Attempt::ClientGone(e), false);
+                            }
+                        }
+                        relayed += scan.data_frames;
+                        Step::Forwarded {
+                            consumed: n,
+                            terminal: scan.terminal,
+                        }
                     }
-                    started = true;
                 }
-                if let Err(e) = chunks.write_chunk(&data) {
-                    return Attempt::ClientGone(e);
-                }
-                relayed += 1;
             }
-            Ok(None) => {
-                if !started {
-                    if let Err(e) = write_sse_head_via(&mut chunks) {
-                        return Attempt::ClientGone(e);
-                    }
+        };
+        match step {
+            Step::Forwarded { consumed, terminal } => {
+                upstream.consume(consumed);
+                if terminal {
+                    state.metrics.add_sse_chunks(relayed);
+                    // the terminal frame passed through verbatim, so the
+                    // client's chunked response is already complete
+                    return (Attempt::Done(200), scanner.is_clean());
                 }
-                state.metrics.add_sse_chunks(relayed);
-                return match chunks.finish() {
-                    Ok(()) => Attempt::Done(200),
-                    Err(e) => Attempt::ClientGone(e),
-                };
             }
-            Err(_) => {
+            Step::UpstreamGone => {
                 if !started {
                     // nothing committed to the client yet: safe to retry
-                    return Attempt::Retry { transport: true, status: None };
+                    return (Attempt::Retry { transport: true, status: None }, false);
                 }
                 state.metrics.add_sse_chunks(relayed);
                 let event = format!(
@@ -1068,20 +1258,17 @@ fn relay_sse<R: BufRead>(
                         "serving node went away mid-stream",
                     ))
                 );
-                let _ = chunks.write_chunk(event.as_bytes());
-                return match chunks.finish() {
-                    Ok(()) => Attempt::Done(200),
-                    Err(e) => Attempt::ClientGone(e),
+                let framed = format!("{:x}\r\n{event}\r\n0\r\n\r\n", event.len());
+                return match client
+                    .write_all(framed.as_bytes())
+                    .and_then(|_| client.flush())
+                {
+                    Ok(()) => (Attempt::Done(200), false),
+                    Err(e) => (Attempt::ClientGone(e), false),
                 };
             }
         }
     }
-}
-
-/// Write the SSE response head through the chunked writer's underlying
-/// stream (the head itself is not chunk-framed).
-fn write_sse_head_via(chunks: &mut ChunkedWriter<&mut TcpStream>) -> std::io::Result<()> {
-    write_sse_head(chunks.inner_mut())
 }
 
 fn open_upstream(addr: &str, timeout: Duration) -> Result<TcpStream> {
@@ -1190,6 +1377,7 @@ fn heartbeat_loop(state: &Arc<CoordinatorState>) {
                         if entry.healthy && entry.failures >= state.cfg.node_timeout_beats {
                             entry.healthy = false;
                             died = true;
+                            state.pool.purge(&entry.announce.addr);
                         }
                     }
                 }

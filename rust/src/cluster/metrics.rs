@@ -4,7 +4,7 @@
 //! [`crate::gateway::metrics::parse_exposition`], which the tests use).
 
 use super::coordinator::ClusterSupervisorSnapshot;
-use crate::gateway::metrics::escape_label;
+use crate::gateway::metrics::{escape_label, StatusCounters};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -18,8 +18,9 @@ pub const PLACEMENT_REASONS: [&str; 5] =
 
 #[derive(Debug, Default)]
 pub struct ClusterMetrics {
-    /// coordinator ingress: (endpoint, status) -> count
-    requests: Mutex<BTreeMap<(String, u16), u64>>,
+    /// coordinator ingress: (endpoint, status) -> count, relaxed so
+    /// reactor handler threads don't serialize on a map mutex per request
+    requests: StatusCounters,
     /// scale-up placements by reason
     placement: Mutex<BTreeMap<String, u64>>,
     /// scale-down drains by reason
@@ -29,6 +30,13 @@ pub struct ClusterMetrics {
     rejected_queue_full: AtomicU64,
     rejected_rate_limited: AtomicU64,
     sse_chunks_relayed: AtomicU64,
+    /// coordinator→node keep-alive pool accounting
+    upstream_reused: AtomicU64,
+    upstream_dialed: AtomicU64,
+    upstream_pool_idle: AtomicU64,
+    /// connection-level ingress accounting, shared with the reactor (or the
+    /// legacy accept loop) serving this coordinator's listener
+    pub ingress: std::sync::Arc<crate::gateway::reactor::IngressStats>,
 }
 
 impl ClusterMetrics {
@@ -37,12 +45,7 @@ impl ClusterMetrics {
     }
 
     pub fn observe(&self, endpoint: &str, status: u16) {
-        *self
-            .requests
-            .lock()
-            .unwrap()
-            .entry((endpoint.to_string(), status))
-            .or_insert(0) += 1;
+        self.requests.bump(endpoint, status);
     }
 
     pub fn note_placement(&self, reason: &str) {
@@ -81,6 +84,21 @@ impl ClusterMetrics {
 
     pub fn add_sse_chunks(&self, n: usize) {
         self.sse_chunks_relayed.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// A proxy attempt ran on a pooled keep-alive node connection.
+    pub fn note_upstream_reuse(&self) {
+        self.upstream_reused.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A proxy attempt had to dial a fresh node connection.
+    pub fn note_upstream_dial(&self) {
+        self.upstream_dialed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Refresh the idle-pool gauge (called after checkout/checkin).
+    pub fn set_upstream_pool_idle(&self, n: usize) {
+        self.upstream_pool_idle.store(n as u64, Ordering::Relaxed);
     }
 
     /// Total scale-up placements across all reasons (test/report helper
@@ -239,11 +257,11 @@ pub fn render_prometheus(
 
     out.push_str("# HELP enova_cluster_requests_total Coordinator ingress requests, by endpoint and status code.\n");
     out.push_str("# TYPE enova_cluster_requests_total counter\n");
-    for ((endpoint, status), count) in m.requests.lock().unwrap().iter() {
+    for ((endpoint, status), count) in m.requests.snapshot() {
         let _ = writeln!(
             out,
             "enova_cluster_requests_total{{endpoint=\"{}\",code=\"{}\"}} {}",
-            escape_label(endpoint),
+            escape_label(&endpoint),
             status,
             count
         );
@@ -342,6 +360,61 @@ pub fn render_prometheus(
     out.push_str("# HELP enova_cluster_inflight_requests Requests admitted at the coordinator and not yet finished.\n");
     out.push_str("# TYPE enova_cluster_inflight_requests gauge\n");
     let _ = writeln!(out, "enova_cluster_inflight_requests {inflight}");
+
+    for (name, kind, help, value) in [
+        (
+            "enova_ingress_connections_accepted_total",
+            "counter",
+            "Client connections accepted by the coordinator listener.",
+            m.ingress.accepted_total.load(Ordering::Relaxed),
+        ),
+        (
+            "enova_ingress_connections_open",
+            "gauge",
+            "Client connections currently open at the coordinator.",
+            m.ingress.open.load(Ordering::Relaxed),
+        ),
+        (
+            "enova_ingress_handler_inflight",
+            "gauge",
+            "Requests currently executing in the coordinator handler pool.",
+            m.ingress.handler_inflight.load(Ordering::Relaxed),
+        ),
+        (
+            "enova_ingress_handler_threads",
+            "gauge",
+            "Handler threads serving parsed requests at the coordinator.",
+            m.ingress.handler_threads.load(Ordering::Relaxed),
+        ),
+        (
+            "enova_ingress_reactor_mode",
+            "gauge",
+            "1 when the sharded reactor serves ingress, 0 on the legacy thread-per-connection path.",
+            m.ingress.reactor_mode.load(Ordering::Relaxed),
+        ),
+        (
+            "enova_cluster_upstream_reused_total",
+            "counter",
+            "Proxy attempts served over a pooled keep-alive node connection.",
+            m.upstream_reused.load(Ordering::Relaxed),
+        ),
+        (
+            "enova_cluster_upstream_dialed_total",
+            "counter",
+            "Proxy attempts that dialed a fresh node connection.",
+            m.upstream_dialed.load(Ordering::Relaxed),
+        ),
+        (
+            "enova_cluster_upstream_pool_idle",
+            "gauge",
+            "Idle keep-alive node connections parked in the coordinator pool.",
+            m.upstream_pool_idle.load(Ordering::Relaxed),
+        ),
+    ] {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} {kind}");
+        let _ = writeln!(out, "{name} {value}");
+    }
 
     out.push_str("# HELP enova_cluster_uptime_seconds Coordinator uptime.\n");
     out.push_str("# TYPE enova_cluster_uptime_seconds gauge\n");
@@ -456,6 +529,18 @@ mod tests {
             3.0
         );
         assert_eq!(find("enova_cluster_inflight_requests", None), 5.0);
+        for ingress_metric in [
+            "enova_ingress_connections_accepted_total",
+            "enova_ingress_connections_open",
+            "enova_ingress_handler_inflight",
+            "enova_ingress_handler_threads",
+            "enova_ingress_reactor_mode",
+            "enova_cluster_upstream_reused_total",
+            "enova_cluster_upstream_dialed_total",
+            "enova_cluster_upstream_pool_idle",
+        ] {
+            find(ingress_metric, None);
+        }
         assert_eq!(m.placements_total(), 3);
         assert_eq!(m.placements_for("backfill"), 2);
         assert_eq!(m.placements_for("never"), 0);

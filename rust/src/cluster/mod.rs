@@ -57,6 +57,7 @@ pub mod coordinator;
 pub mod metrics;
 pub mod node;
 pub mod placement;
+pub mod pool;
 pub mod proto;
 
 /// What a gateway in node mode knows about itself — set via

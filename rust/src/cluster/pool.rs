@@ -1,0 +1,341 @@
+//! Coordinator→node connection reuse for the proxy hot path.
+//!
+//! Two pieces:
+//!
+//! * [`NodePool`] — a per-address stash of idle keep-alive TCP connections.
+//!   A proxy attempt checks one out instead of dialing; a connection goes
+//!   back in only when the previous response ended at a clean framing
+//!   boundary, so a checked-out stream is always positioned at the start
+//!   of a request/response exchange. Nodes reap silent connections after a
+//!   few seconds, so the pool discards entries older than [`MAX_IDLE_AGE`]
+//!   on checkout rather than handing the caller a half-dead socket.
+//!
+//! * [`ChunkFrameScanner`] — an incremental scanner over the upstream's
+//!   chunked transfer coding that lets the coordinator forward SSE bytes
+//!   to the client *verbatim*: no per-chunk decode, no re-framing through
+//!   a second `ChunkedWriter`. The scanner only marks byte ranges that end
+//!   at a complete chunk-frame boundary as forwardable, which keeps two
+//!   invariants the proxy relies on: the client never sees a torn frame
+//!   (so a terminal `service_unavailable` event can be injected cleanly if
+//!   the node dies mid-stream), and the terminal `0\r\n\r\n` passes through
+//!   unmodified to end the client's response exactly where the node's did.
+
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Idle connections kept per node address. The proxy gate caps global
+/// concurrency far above this, but one node rarely needs more parked
+/// sockets than its worker count.
+const MAX_IDLE_PER_NODE: usize = 16;
+
+/// Gateway/node ingress reaps connections silent for ~5s; discard pooled
+/// entries comfortably before that so checkout never returns a socket the
+/// remote has already closed under normal operation.
+const MAX_IDLE_AGE: Duration = Duration::from_secs(3);
+
+/// Upper bound on one chunk frame (size line + payload). SSE events are
+/// token deltas — anything near this is a protocol violation upstream.
+const MAX_FRAME_BYTES: usize = 16 * 1024 * 1024;
+
+/// Longest size/trailer line the scanner will buffer before declaring the
+/// stream malformed.
+const MAX_LINE_BYTES: usize = 256;
+
+#[derive(Debug, Default)]
+pub struct NodePool {
+    idle: Mutex<HashMap<String, Vec<(TcpStream, Instant)>>>,
+}
+
+impl NodePool {
+    pub fn new() -> NodePool {
+        NodePool::default()
+    }
+
+    /// Pop a fresh-enough idle connection for `addr`, discarding any that
+    /// sat past [`MAX_IDLE_AGE`].
+    pub fn checkout(&self, addr: &str) -> Option<TcpStream> {
+        let mut idle = self.idle.lock().unwrap();
+        let stash = idle.get_mut(addr)?;
+        while let Some((stream, parked)) = stash.pop() {
+            if parked.elapsed() <= MAX_IDLE_AGE {
+                return Some(stream);
+            }
+            // too old: likely reaped by the node's idle sweep — drop it
+        }
+        None
+    }
+
+    /// Park a connection whose previous response ended at a clean framing
+    /// boundary.
+    pub fn checkin(&self, addr: &str, stream: TcpStream) {
+        let mut idle = self.idle.lock().unwrap();
+        let stash = idle.entry(addr.to_string()).or_default();
+        if stash.len() < MAX_IDLE_PER_NODE {
+            stash.push((stream, Instant::now()));
+        }
+    }
+
+    /// Drop every idle connection to `addr` — called when the coordinator
+    /// declares the node dead so no attempt wastes a retry on its corpses.
+    pub fn purge(&self, addr: &str) {
+        self.idle.lock().unwrap().remove(addr);
+    }
+
+    /// Idle connections across all nodes (feeds the pool gauge).
+    pub fn idle_count(&self) -> usize {
+        self.idle.lock().unwrap().values().map(Vec::len).sum()
+    }
+}
+
+/// What one [`ChunkFrameScanner::push`] made forwardable.
+///
+/// Wire order is `carry_flush` then `emit`: `carry_flush` holds bytes of a
+/// frame that started in an earlier push and completed in this one, `emit`
+/// borrows the prefix of *this* push's input that ends at the last complete
+/// frame boundary. Bytes past that boundary are carried internally until a
+/// later push completes their frame.
+#[derive(Debug)]
+pub struct Scan<'a> {
+    pub carry_flush: Vec<u8>,
+    pub emit: &'a [u8],
+    /// data frames (chunk size > 0) completed by this push
+    pub data_frames: usize,
+    /// the terminal `0`-size frame (plus trailer end) completed
+    pub terminal: bool,
+}
+
+#[derive(Debug)]
+enum ScanState {
+    /// accumulating a chunk-size line up to its `\n`
+    SizeLine { line: Vec<u8> },
+    /// inside a data chunk payload; `remaining` includes the trailing CRLF
+    Payload { remaining: usize },
+    /// after the `0`-size line: trailer lines until the blank line
+    Trailers { line: Vec<u8> },
+    /// terminal frame fully seen — the response is over
+    Done,
+}
+
+/// Incremental scanner over an HTTP/1.1 chunked body that reports, per
+/// feed, which input bytes form *complete* chunk frames. The caller
+/// forwards exactly those bytes; partial frames are held internally so the
+/// downstream writer only ever sees whole frames.
+#[derive(Debug)]
+pub struct ChunkFrameScanner {
+    state: ScanState,
+    carry: Vec<u8>,
+}
+
+impl Default for ChunkFrameScanner {
+    fn default() -> Self {
+        ChunkFrameScanner::new()
+    }
+}
+
+impl ChunkFrameScanner {
+    pub fn new() -> ChunkFrameScanner {
+        ChunkFrameScanner {
+            state: ScanState::SizeLine { line: Vec::new() },
+            carry: Vec::new(),
+        }
+    }
+
+    /// True once the terminal frame was consumed with nothing left over —
+    /// the connection is positioned at a clean response boundary and safe
+    /// to return to the pool.
+    pub fn is_clean(&self) -> bool {
+        matches!(self.state, ScanState::Done) && self.carry.is_empty()
+    }
+
+    /// Advance the scanner over `input`.
+    pub fn push<'a>(&mut self, input: &'a [u8]) -> Result<Scan<'a>, String> {
+        let mut data_frames = 0usize;
+        let mut terminal = false;
+        let mut last_boundary: Option<usize> = None;
+        let mut i = 0usize;
+        while i < input.len() && !terminal {
+            match &mut self.state {
+                ScanState::SizeLine { line } => {
+                    let b = input[i];
+                    i += 1;
+                    line.push(b);
+                    if b == b'\n' {
+                        let size = parse_size_line(line)?;
+                        self.state = if size == 0 {
+                            ScanState::Trailers { line: Vec::new() }
+                        } else {
+                            // fold the payload's trailing CRLF into the count
+                            ScanState::Payload { remaining: size + 2 }
+                        };
+                    } else if line.len() > MAX_LINE_BYTES {
+                        return Err("chunk size line too long".to_string());
+                    }
+                }
+                ScanState::Payload { remaining } => {
+                    let take = (*remaining).min(input.len() - i);
+                    i += take;
+                    *remaining -= take;
+                    if *remaining == 0 {
+                        self.state = ScanState::SizeLine { line: Vec::new() };
+                        data_frames += 1;
+                        last_boundary = Some(i);
+                    }
+                }
+                ScanState::Trailers { line } => {
+                    let b = input[i];
+                    i += 1;
+                    line.push(b);
+                    if b == b'\n' {
+                        if line == b"\r\n" || line == b"\n" {
+                            self.state = ScanState::Done;
+                            terminal = true;
+                            last_boundary = Some(i);
+                        } else {
+                            line.clear();
+                        }
+                    } else if line.len() > MAX_LINE_BYTES {
+                        return Err("chunk trailer line too long".to_string());
+                    }
+                }
+                ScanState::Done => {
+                    return Err("bytes after terminal chunk".to_string());
+                }
+            }
+        }
+        match last_boundary {
+            Some(b) => {
+                let carry_flush = std::mem::take(&mut self.carry);
+                self.carry.extend_from_slice(&input[b..]);
+                Ok(Scan {
+                    carry_flush,
+                    emit: &input[..b],
+                    data_frames,
+                    terminal,
+                })
+            }
+            None => {
+                self.carry.extend_from_slice(input);
+                if self.carry.len() > MAX_FRAME_BYTES {
+                    return Err("chunk frame exceeds relay cap".to_string());
+                }
+                Ok(Scan {
+                    carry_flush: Vec::new(),
+                    emit: &input[..0],
+                    data_frames: 0,
+                    terminal: false,
+                })
+            }
+        }
+    }
+}
+
+/// Parse one `\n`-terminated chunk-size line (chunk extensions after `;`
+/// are tolerated and ignored).
+fn parse_size_line(line: &[u8]) -> Result<usize, String> {
+    let text = std::str::from_utf8(line)
+        .map_err(|_| "non-utf8 chunk size line".to_string())?
+        .trim_end_matches(['\r', '\n']);
+    let size_part = text.split(';').next().unwrap_or("").trim();
+    let size = usize::from_str_radix(size_part, 16)
+        .map_err(|_| format!("bad chunk size line: {text:?}"))?;
+    if size > MAX_FRAME_BYTES {
+        return Err(format!("chunk of {size} bytes exceeds relay cap"));
+    }
+    Ok(size)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(payload: &str) -> Vec<u8> {
+        format!("{:x}\r\n{payload}\r\n", payload.len()).into_bytes()
+    }
+
+    /// Replays `wire` into a scanner in `step`-byte slices and returns the
+    /// concatenation of everything it marked forwardable.
+    fn relay_in_steps(wire: &[u8], step: usize) -> (Vec<u8>, usize, bool) {
+        let mut scanner = ChunkFrameScanner::new();
+        let mut out = Vec::new();
+        let mut frames = 0;
+        let mut terminal = false;
+        for piece in wire.chunks(step) {
+            let scan = scanner.push(piece).expect("well-formed wire");
+            out.extend_from_slice(&scan.carry_flush);
+            out.extend_from_slice(scan.emit);
+            frames += scan.data_frames;
+            terminal = terminal || scan.terminal;
+        }
+        (out, frames, terminal)
+    }
+
+    #[test]
+    fn forwards_whole_stream_verbatim_at_any_split() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&frame("data: {\"token\":\"a\"}\n\n"));
+        wire.extend_from_slice(&frame("data: {\"token\":\"b\"}\n\n"));
+        wire.extend_from_slice(&frame("data: [DONE]\n\n"));
+        wire.extend_from_slice(b"0\r\n\r\n");
+        for step in [1, 2, 3, 7, 16, wire.len()] {
+            let (out, frames, terminal) = relay_in_steps(&wire, step);
+            assert_eq!(out, wire, "split {step}");
+            assert_eq!(frames, 3, "split {step}");
+            assert!(terminal, "split {step}");
+        }
+    }
+
+    #[test]
+    fn only_complete_frames_are_forwardable() {
+        let mut scanner = ChunkFrameScanner::new();
+        let wire = frame("data: hello\n\n");
+        // everything but the last byte: nothing may be emitted yet
+        let scan = scanner.push(&wire[..wire.len() - 1]).unwrap();
+        assert!(scan.carry_flush.is_empty() && scan.emit.is_empty());
+        assert_eq!(scan.data_frames, 0);
+        // final byte completes the frame; carried bytes flush in wire order
+        let scan2 = scanner.push(&wire[wire.len() - 1..]).unwrap();
+        let mut got = scan2.carry_flush.clone();
+        got.extend_from_slice(scan2.emit);
+        assert_eq!(got, wire);
+        assert_eq!(scan2.data_frames, 1);
+        assert!(!scanner.is_clean(), "stream not terminated yet");
+    }
+
+    #[test]
+    fn terminal_frame_marks_scanner_clean() {
+        let mut scanner = ChunkFrameScanner::new();
+        let mut wire = frame("data: bye\n\n");
+        wire.extend_from_slice(b"0\r\n\r\n");
+        let scan = scanner.push(&wire).unwrap();
+        assert!(scan.terminal);
+        assert_eq!(scan.emit, &wire[..]);
+        assert!(scanner.is_clean());
+        // anything after the terminal frame is a protocol violation
+        assert!(scanner.push(b"x").is_err());
+    }
+
+    #[test]
+    fn malformed_size_line_is_an_error() {
+        let mut scanner = ChunkFrameScanner::new();
+        assert!(scanner.push(b"zz\r\npayload\r\n").is_err());
+    }
+
+    #[test]
+    fn pool_round_trips_and_purges() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let pool = NodePool::new();
+        assert!(pool.checkout(&addr).is_none());
+        let conn = TcpStream::connect(&addr).unwrap();
+        pool.checkin(&addr, conn);
+        assert_eq!(pool.idle_count(), 1);
+        assert!(pool.checkout(&addr).is_some());
+        assert_eq!(pool.idle_count(), 0);
+        let conn = TcpStream::connect(&addr).unwrap();
+        pool.checkin(&addr, conn);
+        pool.purge(&addr);
+        assert_eq!(pool.idle_count(), 0);
+    }
+}

@@ -4,6 +4,13 @@
 //! keep-alive. Every malformed input maps to a 4xx [`HttpError`], never a
 //! panic; bounded line/header/body limits keep a hostile peer from forcing
 //! unbounded allocation.
+//!
+//! Parsing is *incremental and resumable* ([`RequestParser`]): bytes are
+//! fed in as they arrive off a nonblocking socket and the parser suspends
+//! mid-line, mid-headers or mid-body without losing state — what the
+//! reactor's connection state machines are built on. The blocking
+//! [`read_request`] is a thin loop over the same state machine, so both
+//! ingress paths share one grammar.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, Write};
@@ -59,68 +66,239 @@ impl Request {
     }
 }
 
-/// Read one line (terminated by `\n`, `\r` trimmed) without unbounded
-/// buffering. `Ok(None)` means clean EOF before any byte.
-fn read_line_limited<R: BufRead>(r: &mut R, cap: usize) -> Result<Option<String>, HttpError> {
-    let mut line: Vec<u8> = Vec::new();
-    loop {
-        let chunk = match r.fill_buf() {
-            Ok(c) => c,
-            // timeouts / resets: drop the connection silently
-            Err(_) => return Ok(None),
-        };
-        if chunk.is_empty() {
-            // EOF: mid-line EOF is a truncated request
-            if line.is_empty() {
-                return Ok(None);
-            }
-            return Err(HttpError::new(400, "truncated request line"));
-        }
-        if let Some(pos) = chunk.iter().position(|&b| b == b'\n') {
-            line.extend_from_slice(&chunk[..pos]);
-            r.consume(pos + 1);
-            break;
-        }
-        line.extend_from_slice(chunk);
-        let n = chunk.len();
-        r.consume(n);
-        if line.len() > cap {
-            return Err(HttpError::new(431, "header line too long"));
-        }
-    }
-    if line.len() > cap {
-        return Err(HttpError::new(431, "header line too long"));
-    }
-    if line.last() == Some(&b'\r') {
-        line.pop();
-    }
-    String::from_utf8(line)
-        .map(Some)
-        .map_err(|_| HttpError::new(400, "header line is not valid UTF-8"))
+/// What one [`RequestParser::poll`] step produced.
+#[derive(Debug)]
+pub enum Poll {
+    /// A complete request was parsed off the buffered bytes.
+    Ready(Request),
+    /// The buffered bytes don't hold a complete request yet; feed more.
+    NeedMore,
+    /// The peer sent only stray blank lines — close the connection
+    /// cleanly, exactly like the legacy blocking path did.
+    Close,
 }
 
-/// Parse one request off the wire. `Ok(None)` = connection closed cleanly
-/// between requests (keep-alive loop should just exit).
-pub fn read_request<R: BufRead>(
-    r: &mut R,
+/// A partially-parsed request head, carried across `NeedMore` suspensions.
+#[derive(Debug)]
+struct Partial {
+    method: String,
+    path: String,
+    query: Option<String>,
+    version: String,
+    headers: BTreeMap<String, String>,
+}
+
+impl Partial {
+    fn into_request(self, body: Vec<u8>) -> Request {
+        Request {
+            method: self.method,
+            path: self.path,
+            query: self.query,
+            version: self.version,
+            headers: self.headers,
+            body,
+        }
+    }
+}
+
+#[derive(Debug)]
+enum ParseState {
+    StartLine,
+    Headers(Partial),
+    Body(Partial, usize),
+}
+
+/// Incremental, resumable HTTP/1.1 request parser: [`feed`] bytes as they
+/// arrive, [`poll`] for complete requests. Suspends losslessly at any byte
+/// boundary (mid-line, mid-headers, mid-body), so a nonblocking reactor
+/// can park a connection between readable events — and a slow-loris peer
+/// holds a buffer, not a thread. Enforces the same limits and maps to the
+/// same [`HttpError`]s as the blocking [`read_request`], which is now a
+/// thin loop over this state machine. After an `Err` the parser is
+/// poisoned; close the connection (every caller already does).
+///
+/// [`feed`]: RequestParser::feed
+/// [`poll`]: RequestParser::poll
+#[derive(Debug)]
+pub struct RequestParser {
     max_body_bytes: usize,
-) -> Result<Option<Request>, HttpError> {
-    // tolerate a few stray blank lines between pipelined requests
-    let mut start = String::new();
-    for _ in 0..4 {
-        match read_line_limited(r, MAX_LINE_BYTES)? {
-            None => return Ok(None),
-            Some(l) if l.is_empty() => continue,
-            Some(l) => {
-                start = l;
-                break;
+    buf: Vec<u8>,
+    /// parse cursor: `buf[..pos]` is consumed, `buf[pos..]` pending
+    pos: usize,
+    state: ParseState,
+    /// stray blank lines tolerated before a start line (capped at 4)
+    blanks: usize,
+}
+
+impl RequestParser {
+    pub fn new(max_body_bytes: usize) -> RequestParser {
+        RequestParser {
+            max_body_bytes,
+            buf: Vec::new(),
+            pos: 0,
+            state: ParseState::StartLine,
+            blanks: 0,
+        }
+    }
+
+    /// Append bytes read off the wire. Cheap; parsing happens in `poll`.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// True when the parser sits cleanly between requests with nothing
+    /// buffered — the only state in which an idle connection may be
+    /// reaped without losing a request in flight.
+    pub fn is_clean(&self) -> bool {
+        matches!(self.state, ParseState::StartLine) && self.pos >= self.buf.len()
+    }
+
+    /// True once the head is complete and body bytes are being awaited.
+    pub fn in_body(&self) -> bool {
+        matches!(self.state, ParseState::Body(..))
+    }
+
+    /// Unconsumed bytes (pipelined follow-up requests), surrendered so the
+    /// connection can move between threads; the parser resets to clean.
+    pub fn take_leftover(&mut self) -> Vec<u8> {
+        let rest = self.buf.split_off(self.pos);
+        self.buf.clear();
+        self.pos = 0;
+        self.state = ParseState::StartLine;
+        rest
+    }
+
+    /// The peer half-closed. `Ok(())` iff the close is clean (between
+    /// requests); mid-request EOF maps to the legacy 400s.
+    pub fn eof(&self) -> Result<(), HttpError> {
+        let mid_line = self.pos < self.buf.len();
+        match &self.state {
+            ParseState::StartLine if !mid_line => Ok(()),
+            ParseState::StartLine => Err(HttpError::new(400, "truncated request line")),
+            ParseState::Headers(_) if mid_line => {
+                Err(HttpError::new(400, "truncated request line"))
+            }
+            ParseState::Headers(_) => Err(HttpError::new(400, "EOF inside headers")),
+            ParseState::Body(..) => Err(HttpError::new(400, "truncated body")),
+        }
+    }
+
+    /// Advance the state machine as far as the buffered bytes allow.
+    pub fn poll(&mut self) -> Result<Poll, HttpError> {
+        loop {
+            match std::mem::replace(&mut self.state, ParseState::StartLine) {
+                ParseState::StartLine => match self.take_line()? {
+                    None => return Ok(Poll::NeedMore),
+                    Some(l) if l.is_empty() => {
+                        // tolerate a few stray blank lines between
+                        // pipelined requests; a peer sending only blanks
+                        // gets a clean close
+                        self.blanks += 1;
+                        if self.blanks >= 4 {
+                            self.compact();
+                            return Ok(Poll::Close);
+                        }
+                    }
+                    Some(l) => self.state = ParseState::Headers(parse_start_line(&l)?),
+                },
+                ParseState::Headers(mut p) => match self.take_line()? {
+                    None => {
+                        self.state = ParseState::Headers(p);
+                        return Ok(Poll::NeedMore);
+                    }
+                    Some(l) if l.is_empty() => match self.body_len(&p)? {
+                        0 => {
+                            self.finish_one();
+                            return Ok(Poll::Ready(p.into_request(Vec::new())));
+                        }
+                        len => self.state = ParseState::Body(p, len),
+                    },
+                    Some(l) => {
+                        push_header(&mut p, &l)?;
+                        self.state = ParseState::Headers(p);
+                    }
+                },
+                ParseState::Body(p, len) => {
+                    if self.buf.len() - self.pos < len {
+                        self.state = ParseState::Body(p, len);
+                        return Ok(Poll::NeedMore);
+                    }
+                    let body = self.buf[self.pos..self.pos + len].to_vec();
+                    self.pos += len;
+                    self.finish_one();
+                    return Ok(Poll::Ready(p.into_request(body)));
+                }
             }
         }
     }
-    if start.is_empty() {
-        return Ok(None);
+
+    /// One `\n`-terminated line off the buffer (`\r` trimmed), or `None`
+    /// when no full line is buffered yet. Bounded: an unterminated run
+    /// longer than [`MAX_LINE_BYTES`] is a 431 without waiting for the
+    /// newline, so a hostile peer cannot force unbounded buffering.
+    fn take_line(&mut self) -> Result<Option<String>, HttpError> {
+        let avail = &self.buf[self.pos..];
+        let Some(idx) = avail.iter().position(|&b| b == b'\n') else {
+            if avail.len() > MAX_LINE_BYTES {
+                return Err(HttpError::new(431, "header line too long"));
+            }
+            return Ok(None);
+        };
+        if idx > MAX_LINE_BYTES {
+            return Err(HttpError::new(431, "header line too long"));
+        }
+        let mut line = avail[..idx].to_vec();
+        if line.last() == Some(&b'\r') {
+            line.pop();
+        }
+        self.pos += idx + 1;
+        String::from_utf8(line)
+            .map(Some)
+            .map_err(|_| HttpError::new(400, "header line is not valid UTF-8"))
     }
 
+    /// Body length once the head is complete, enforcing the framing rules.
+    fn body_len(&self, p: &Partial) -> Result<usize, HttpError> {
+        // Transfer-Encoding is rejected outright — including alongside a
+        // Content-Length, where honoring either header invites request
+        // smuggling / connection desync (RFC 9112 §6.1)
+        if p.headers.contains_key("transfer-encoding") {
+            return Err(HttpError::new(501, "chunked request bodies not supported"));
+        }
+        match p.headers.get("content-length") {
+            Some(v) => {
+                let len: usize = v
+                    .parse()
+                    .map_err(|_| HttpError::new(400, format!("bad Content-Length: {v:?}")))?;
+                if len > self.max_body_bytes {
+                    return Err(HttpError::new(
+                        413,
+                        format!("body of {len} bytes exceeds limit of {}", self.max_body_bytes),
+                    ));
+                }
+                Ok(len)
+            }
+            None if matches!(p.method.as_str(), "POST" | "PUT" | "PATCH") => {
+                Err(HttpError::new(411, "Content-Length required"))
+            }
+            None => Ok(0),
+        }
+    }
+
+    /// A request completed: drop its consumed bytes, keep any pipelined
+    /// tail, rearm for the next request.
+    fn finish_one(&mut self) {
+        self.compact();
+        self.blanks = 0;
+    }
+
+    fn compact(&mut self) {
+        self.buf.drain(..self.pos);
+        self.pos = 0;
+    }
+}
+
+fn parse_start_line(start: &str) -> Result<Partial, HttpError> {
     let mut parts = start.split_whitespace();
     let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
     {
@@ -134,65 +312,59 @@ pub fn read_request<R: BufRead>(
         Some((p, q)) => (p.to_string(), Some(q.to_string())),
         None => (target.to_string(), None),
     };
-
-    let mut headers = BTreeMap::new();
-    loop {
-        let line = match read_line_limited(r, MAX_LINE_BYTES)? {
-            None => return Err(HttpError::new(400, "EOF inside headers")),
-            Some(l) => l,
-        };
-        if line.is_empty() {
-            break;
-        }
-        let (name, value) = line
-            .split_once(':')
-            .ok_or_else(|| HttpError::new(400, format!("malformed header: {line:?}")))?;
-        if name.trim().is_empty() {
-            return Err(HttpError::new(400, "empty header name"));
-        }
-        headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
-        if headers.len() > MAX_HEADERS {
-            return Err(HttpError::new(431, "too many headers"));
-        }
-    }
-
-    let has_body_method = matches!(method, "POST" | "PUT" | "PATCH");
-    // Transfer-Encoding is rejected outright — including alongside a
-    // Content-Length, where honoring either header invites request
-    // smuggling / connection desync (RFC 9112 §6.1)
-    if headers.contains_key("transfer-encoding") {
-        return Err(HttpError::new(501, "chunked request bodies not supported"));
-    }
-    let body = match headers.get("content-length") {
-        Some(v) => {
-            let len: usize = v
-                .parse()
-                .map_err(|_| HttpError::new(400, format!("bad Content-Length: {v:?}")))?;
-            if len > max_body_bytes {
-                return Err(HttpError::new(
-                    413,
-                    format!("body of {len} bytes exceeds limit of {max_body_bytes}"),
-                ));
-            }
-            let mut buf = vec![0u8; len];
-            std::io::Read::read_exact(r, &mut buf)
-                .map_err(|_| HttpError::new(400, "truncated body"))?;
-            buf
-        }
-        None if has_body_method => {
-            return Err(HttpError::new(411, "Content-Length required"));
-        }
-        None => Vec::new(),
-    };
-
-    Ok(Some(Request {
+    Ok(Partial {
         method: method.to_string(),
         path,
         query,
         version: version.to_string(),
-        headers,
-        body,
-    }))
+        headers: BTreeMap::new(),
+    })
+}
+
+fn push_header(p: &mut Partial, line: &str) -> Result<(), HttpError> {
+    let (name, value) = line
+        .split_once(':')
+        .ok_or_else(|| HttpError::new(400, format!("malformed header: {line:?}")))?;
+    if name.trim().is_empty() {
+        return Err(HttpError::new(400, "empty header name"));
+    }
+    p.headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+    if p.headers.len() > MAX_HEADERS {
+        return Err(HttpError::new(431, "too many headers"));
+    }
+    Ok(())
+}
+
+/// Parse one request off the wire. `Ok(None)` = connection closed cleanly
+/// between requests (keep-alive loop should just exit). A thin blocking
+/// loop over [`RequestParser`], so both ingress paths share one grammar.
+pub fn read_request<R: BufRead>(
+    r: &mut R,
+    max_body_bytes: usize,
+) -> Result<Option<Request>, HttpError> {
+    let mut parser = RequestParser::new(max_body_bytes);
+    loop {
+        match parser.poll()? {
+            Poll::Ready(req) => return Ok(Some(req)),
+            Poll::Close => return Ok(None),
+            Poll::NeedMore => {}
+        }
+        let chunk = match r.fill_buf() {
+            Ok(c) => c,
+            // timeouts / resets: a truncated body is reported, anything
+            // earlier drops the connection silently (legacy behavior)
+            Err(_) if parser.in_body() => {
+                return Err(HttpError::new(400, "truncated body"));
+            }
+            Err(_) => return Ok(None),
+        };
+        if chunk.is_empty() {
+            return parser.eof().map(|_| None);
+        }
+        let n = chunk.len();
+        parser.feed(chunk);
+        r.consume(n);
+    }
 }
 
 pub fn status_text(status: u16) -> &'static str {
@@ -382,6 +554,83 @@ mod tests {
     fn eof_is_clean_none() {
         assert!(parse("").unwrap().is_none());
         assert!(parse("\r\n\r\n").unwrap().is_none());
+    }
+
+    #[test]
+    fn incremental_parser_survives_byte_at_a_time_feed() {
+        // slow-loris shape: the whole request dribbles in one byte per
+        // feed; the parser suspends and resumes without losing state
+        let raw = "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd";
+        let mut parser = RequestParser::new(1024);
+        let mut got = None;
+        for (i, b) in raw.as_bytes().iter().enumerate() {
+            parser.feed(&[*b]);
+            match parser.poll().unwrap() {
+                Poll::Ready(req) => {
+                    assert_eq!(i, raw.len() - 1, "completed only on the last byte");
+                    got = Some(req);
+                }
+                Poll::NeedMore => {}
+                Poll::Close => panic!("spurious close"),
+            }
+        }
+        let req = got.expect("request completed");
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"abcd");
+        assert!(parser.is_clean());
+    }
+
+    #[test]
+    fn incremental_parser_pipelines_and_surrenders_leftover() {
+        let raw = "GET /healthz HTTP/1.1\r\n\r\nGET /ready HTTP/1.1\r\n\r\n";
+        let mut parser = RequestParser::new(1024);
+        parser.feed(raw.as_bytes());
+        let first = match parser.poll().unwrap() {
+            Poll::Ready(req) => req,
+            other => panic!("expected first request, got {other:?}"),
+        };
+        assert_eq!(first.path, "/healthz");
+        assert!(!parser.is_clean(), "pipelined tail still buffered");
+        // a connection moving to another thread takes its tail along...
+        let leftover = parser.take_leftover();
+        assert!(parser.is_clean());
+        // ...and a fresh parser resumes exactly where this one stopped
+        let mut resumed = RequestParser::new(1024);
+        resumed.feed(&leftover);
+        match resumed.poll().unwrap() {
+            Poll::Ready(req) => assert_eq!(req.path, "/ready"),
+            other => panic!("expected second request, got {other:?}"),
+        }
+        assert!(matches!(resumed.poll().unwrap(), Poll::NeedMore));
+    }
+
+    #[test]
+    fn incremental_parser_eof_maps_to_legacy_errors() {
+        // clean between requests
+        assert!(RequestParser::new(1024).eof().is_ok());
+        // mid start line
+        let mut p = RequestParser::new(1024);
+        p.feed(b"GET /hea");
+        assert!(matches!(p.poll().unwrap(), Poll::NeedMore));
+        assert_eq!(p.eof().unwrap_err().status, 400);
+        // between headers
+        let mut p = RequestParser::new(1024);
+        p.feed(b"GET / HTTP/1.1\r\nHost: x\r\n");
+        assert!(matches!(p.poll().unwrap(), Poll::NeedMore));
+        assert_eq!(p.eof().unwrap_err().message, "EOF inside headers");
+        // mid body
+        let mut p = RequestParser::new(1024);
+        p.feed(b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc");
+        assert!(matches!(p.poll().unwrap(), Poll::NeedMore));
+        assert!(p.in_body());
+        assert_eq!(p.eof().unwrap_err().message, "truncated body");
+    }
+
+    #[test]
+    fn incremental_parser_bounds_unterminated_lines() {
+        let mut p = RequestParser::new(1024);
+        p.feed("x".repeat(MAX_LINE_BYTES + 1).as_bytes());
+        assert_eq!(p.poll().unwrap_err().status, 431);
     }
 
     #[test]

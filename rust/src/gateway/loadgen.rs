@@ -4,8 +4,10 @@
 //! what the gateway emits: Content-Length bodies and chunked SSE streams.
 //!
 //! The closed loop runs on persistent HTTP/1.1 keep-alive connections
-//! ([`Client`]): one socket per worker for its whole request sequence, so
-//! attainable attack rates are not capped by per-request TCP handshakes.
+//! multiplexed over a shared [`ConnPool`]: workers check sockets out per
+//! exchange and park them back on clean framing boundaries, so attainable
+//! attack rates are not capped by per-request TCP handshakes and the
+//! socket count tracks peak concurrency, not worker count.
 //! [`LoadgenReport::connections_opened`] lets tests assert the reuse.
 //!
 //! Beyond the closed loop, [`run_scenario`] is an *open-loop* scenario
@@ -23,6 +25,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -223,36 +226,114 @@ pub fn post_json(addr: &str, path: &str, body: &str) -> Result<HttpResponse> {
     request(addr, "POST", path, Some(body), Duration::from_secs(60))
 }
 
-/// Persistent HTTP/1.1 client: one keep-alive connection reused across
-/// exchanges, redialed transparently when the server closes it (or when a
-/// previously-idle socket turns out stale on send). Counts dials so the
-/// integration suite can assert that a closed loop reuses sockets.
-pub struct Client {
+/// Idle keep-alive connections parked in a [`ConnPool`] beyond this cap
+/// are closed instead of checked in.
+const POOL_MAX_IDLE: usize = 32;
+
+/// Thread-safe pool of idle keep-alive connections to one address,
+/// shareable across loadgen workers: a worker that finishes an exchange
+/// parks its socket here, and any worker's next request reuses it instead
+/// of dialing. Every dial is counted, so a closed loop over a shared pool
+/// still reports how many sockets it really opened.
+pub struct ConnPool {
     addr: String,
     timeout: Duration,
+    idle: Mutex<Vec<TcpStream>>,
+    dials: AtomicUsize,
+}
+
+impl ConnPool {
+    pub fn new(addr: &str) -> ConnPool {
+        ConnPool {
+            addr: addr.to_string(),
+            timeout: Duration::from_secs(60),
+            idle: Mutex::new(Vec::new()),
+            dials: AtomicUsize::new(0),
+        }
+    }
+
+    /// Pop an idle pooled socket (`true` = reused) or dial a fresh one.
+    fn checkout(&self) -> Result<(TcpStream, bool)> {
+        if let Some(stream) = self.idle.lock().unwrap().pop() {
+            return Ok((stream, true));
+        }
+        Ok((self.dial()?, false))
+    }
+
+    fn dial(&self) -> Result<TcpStream> {
+        let stream =
+            TcpStream::connect(&self.addr).with_context(|| format!("connect {}", self.addr))?;
+        stream.set_read_timeout(Some(self.timeout))?;
+        stream.set_write_timeout(Some(self.timeout))?;
+        stream.set_nodelay(true)?;
+        self.dials.fetch_add(1, Ordering::Relaxed);
+        Ok(stream)
+    }
+
+    fn checkin(&self, stream: TcpStream) {
+        let mut idle = self.idle.lock().unwrap();
+        if idle.len() < POOL_MAX_IDLE {
+            idle.push(stream);
+        }
+    }
+
+    /// Total sockets dialed through this pool over its lifetime.
+    pub fn connections_opened(&self) -> usize {
+        self.dials.load(Ordering::Relaxed)
+    }
+
+    /// Idle sockets currently parked.
+    pub fn idle_count(&self) -> usize {
+        self.idle.lock().unwrap().len()
+    }
+}
+
+/// Persistent HTTP/1.1 client over a (possibly shared) connection pool:
+/// each exchange checks a keep-alive socket out of the pool — dialing only
+/// when none is idle — and parks it back on a clean framing boundary, so
+/// concurrent workers multiplex a small set of sockets instead of owning
+/// one each. A socket that turns out stale on send (the server reaped it
+/// while idle) is replaced by a *fresh dial* and the request retried once.
+/// Counts this client's dials so the integration suite can assert reuse.
+pub struct Client {
+    addr: String,
+    pool: Arc<ConnPool>,
     stream: Option<TcpStream>,
-    /// sockets dialed over this client's lifetime
+    /// whether `stream` came out of the pool rather than a fresh dial —
+    /// gates the stale-socket retry
+    reused: bool,
+    /// sockets dialed by this client (every pool dial is attributed to
+    /// exactly one client, so per-worker counts sum to the pool total)
     pub connections_opened: usize,
 }
 
 impl Client {
     pub fn new(addr: &str) -> Client {
+        Client::with_pool(Arc::new(ConnPool::new(addr)))
+    }
+
+    /// A client multiplexing over a shared pool.
+    pub fn with_pool(pool: Arc<ConnPool>) -> Client {
         Client {
-            addr: addr.to_string(),
-            timeout: Duration::from_secs(60),
+            addr: pool.addr.clone(),
+            pool,
             stream: None,
+            reused: false,
             connections_opened: 0,
         }
     }
 
-    fn connect(&mut self) -> Result<()> {
+    fn connect(&mut self, force_fresh: bool) -> Result<()> {
         if self.stream.is_none() {
-            let stream = TcpStream::connect(&self.addr)
-                .with_context(|| format!("connect {}", self.addr))?;
-            stream.set_read_timeout(Some(self.timeout))?;
-            stream.set_write_timeout(Some(self.timeout))?;
-            stream.set_nodelay(true)?;
-            self.connections_opened += 1;
+            let (stream, reused) = if force_fresh {
+                (self.pool.dial()?, false)
+            } else {
+                self.pool.checkout()?
+            };
+            if !reused {
+                self.connections_opened += 1;
+            }
+            self.reused = reused;
             self.stream = Some(stream);
         }
         Ok(())
@@ -293,16 +374,18 @@ impl Client {
         body: Option<&str>,
         mut chunk_times: Option<&mut Vec<Instant>>,
     ) -> Result<HttpResponse> {
-        let reused = self.stream.is_some();
-        match self.try_request(method, path, body, chunk_times.as_mut().map(|t| &mut **t)) {
+        match self.try_request(method, path, body, chunk_times.as_mut().map(|t| &mut **t), false) {
             Ok(resp) => Ok(resp),
             Err(e) => {
+                let was_reused = self.reused;
                 self.stream = None;
-                if reused && stale_socket_error(&e) {
+                if was_reused && stale_socket_error(&e) {
                     if let Some(times) = chunk_times.as_mut() {
                         times.clear();
                     }
-                    self.try_request(method, path, body, chunk_times)
+                    // retry on a guaranteed-fresh dial: popping another
+                    // pooled socket could hand us a second stale one
+                    self.try_request(method, path, body, chunk_times, true)
                 } else {
                     Err(e)
                 }
@@ -316,8 +399,9 @@ impl Client {
         path: &str,
         body: Option<&str>,
         chunk_times: Option<&mut Vec<Instant>>,
+        force_fresh: bool,
     ) -> Result<HttpResponse> {
-        self.connect()?;
+        self.connect(force_fresh)?;
         let resp = {
             let stream = self.stream.as_ref().expect("connected above");
             let mut w = stream;
@@ -339,6 +423,9 @@ impl Client {
             && !resp.headers.contains_key("transfer-encoding");
         if close || unframed {
             self.stream = None;
+        } else if let Some(stream) = self.stream.take() {
+            // clean framing boundary: park the socket for any worker
+            self.pool.checkin(stream);
         }
         Ok(resp)
     }
@@ -692,13 +779,14 @@ pub fn run(addr: &str, cfg: &LoadgenConfig) -> LoadgenReport {
     let (tx, rx) = mpsc::channel::<OneResult>();
     let (conn_tx, conn_rx) = mpsc::channel::<usize>();
     let mut handles = Vec::new();
+    let pool = Arc::new(ConnPool::new(addr));
     for worker in 0..cfg.concurrency {
         let tx = tx.clone();
         let conn_tx = conn_tx.clone();
         let cfg = cfg.clone();
-        let addr = addr.to_string();
+        let pool = Arc::clone(&pool);
         handles.push(std::thread::spawn(move || {
-            let mut client = Client::new(&addr);
+            let mut client = Client::with_pool(pool);
             for k in 0..cfg.requests_per_worker {
                 let _ = tx.send(one_request(&mut client, &cfg, worker, k));
             }
@@ -1035,13 +1123,14 @@ pub fn run_scenario(addr: &str, cfg: &ScenarioConfig) -> LoadgenReport {
     let (job_tx, job_rx) = mpsc::channel::<(Arrival, Instant)>();
     let job_rx = Arc::new(Mutex::new(job_rx));
     let mut handles = Vec::new();
+    let pool = Arc::new(ConnPool::new(addr));
     for _ in 0..cfg.workers.max(1) {
         let tx = tx.clone();
         let conn_tx = conn_tx.clone();
         let job_rx = Arc::clone(&job_rx);
-        let addr = addr.to_string();
+        let pool = Arc::clone(&pool);
         handles.push(std::thread::spawn(move || {
-            let mut client = Client::new(&addr);
+            let mut client = Client::with_pool(pool);
             loop {
                 let job = job_rx.lock().unwrap().recv();
                 match job {
@@ -1089,6 +1178,28 @@ pub fn run_scenario(addr: &str, cfg: &ScenarioConfig) -> LoadgenReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn conn_pool_reuses_checked_in_sockets() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            let mut held = Vec::new();
+            for s in listener.incoming().flatten() {
+                held.push(s);
+            }
+        });
+        let pool = ConnPool::new(&addr);
+        let (a, reused) = pool.checkout().unwrap();
+        assert!(!reused, "empty pool must dial");
+        assert_eq!(pool.connections_opened(), 1);
+        pool.checkin(a);
+        assert_eq!(pool.idle_count(), 1);
+        let (_b, reused) = pool.checkout().unwrap();
+        assert!(reused, "parked socket must be reused before dialing");
+        assert_eq!(pool.connections_opened(), 1);
+        assert_eq!(pool.idle_count(), 0);
+    }
 
     #[test]
     fn sse_data_extraction() {

@@ -10,7 +10,65 @@ use crate::tsdb::MetricStore;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, RwLock};
+
+/// `(endpoint, status) -> count`, relaxed for the request hot path: the
+/// common case — a pair that has been seen before — is a shared read lock
+/// plus one relaxed atomic bump, so concurrent handler threads don't
+/// serialize on a map mutex. Only a pair's *first* occurrence takes the
+/// write lock to insert its counter. Used by both the gateway and the
+/// cluster coordinator metrics.
+#[derive(Debug, Default)]
+pub struct StatusCounters {
+    counters: RwLock<BTreeMap<String, BTreeMap<u16, Arc<AtomicU64>>>>,
+}
+
+impl StatusCounters {
+    pub fn bump(&self, endpoint: &str, status: u16) {
+        if let Some(c) = self
+            .counters
+            .read()
+            .unwrap()
+            .get(endpoint)
+            .and_then(|m| m.get(&status))
+        {
+            c.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        self.counters
+            .write()
+            .unwrap()
+            .entry(endpoint.to_string())
+            .or_default()
+            .entry(status)
+            .or_default()
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Ordered `((endpoint, status), count)` rows for rendering.
+    pub fn snapshot(&self) -> Vec<((String, u16), u64)> {
+        self.counters
+            .read()
+            .unwrap()
+            .iter()
+            .flat_map(|(endpoint, by_status)| {
+                by_status.iter().map(move |(status, count)| {
+                    ((endpoint.clone(), *status), count.load(Ordering::Relaxed))
+                })
+            })
+            .collect()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counters
+            .read()
+            .unwrap()
+            .values()
+            .flat_map(|m| m.values())
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum()
+    }
+}
 
 /// Upper bounds (seconds) of the request-latency histogram buckets.
 pub const LATENCY_BUCKETS: [f64; 10] = [
@@ -96,7 +154,7 @@ impl Histo {
 #[derive(Debug)]
 pub struct GatewayMetrics {
     /// (endpoint, status) -> count
-    requests: Mutex<BTreeMap<(String, u16), u64>>,
+    requests: StatusCounters,
     bucket_counts: [AtomicU64; LATENCY_BUCKETS.len()],
     latency_sum_micros: AtomicU64,
     latency_count: AtomicU64,
@@ -119,12 +177,15 @@ pub struct GatewayMetrics {
     ttft: Histo,
     /// gap between consecutive generated tokens of one request
     inter_token: Histo,
+    /// ingress connection accounting, shared with the reactor (or the
+    /// legacy threaded accept loop) that actually moves the counters
+    pub ingress: std::sync::Arc<super::reactor::IngressStats>,
 }
 
 impl Default for GatewayMetrics {
     fn default() -> Self {
         GatewayMetrics {
-            requests: Mutex::new(BTreeMap::new()),
+            requests: StatusCounters::default(),
             bucket_counts: Default::default(),
             latency_sum_micros: AtomicU64::new(0),
             latency_count: AtomicU64::new(0),
@@ -140,6 +201,7 @@ impl Default for GatewayMetrics {
             phases: std::array::from_fn(|_| Histo::new(&PHASE_BUCKETS)),
             ttft: Histo::new(&TTFT_BUCKETS),
             inter_token: Histo::new(&INTER_TOKEN_BUCKETS),
+            ingress: std::sync::Arc::new(super::reactor::IngressStats::default()),
         }
     }
 }
@@ -151,12 +213,7 @@ impl GatewayMetrics {
 
     /// Record one finished HTTP exchange.
     pub fn observe(&self, endpoint: &str, status: u16, latency_secs: f64) {
-        *self
-            .requests
-            .lock()
-            .unwrap()
-            .entry((endpoint.to_string(), status))
-            .or_insert(0) += 1;
+        self.requests.bump(endpoint, status);
         for (i, &le) in LATENCY_BUCKETS.iter().enumerate() {
             if latency_secs <= le {
                 self.bucket_counts[i].fetch_add(1, Ordering::Relaxed);
@@ -261,7 +318,7 @@ impl GatewayMetrics {
     }
 
     pub fn requests_total(&self) -> u64 {
-        self.requests.lock().unwrap().values().sum()
+        self.requests.total()
     }
 }
 
@@ -288,11 +345,11 @@ pub fn render_prometheus(
 
     out.push_str("# HELP enova_gateway_requests_total HTTP requests served, by endpoint and status code.\n");
     out.push_str("# TYPE enova_gateway_requests_total counter\n");
-    for ((endpoint, status), count) in gw.requests.lock().unwrap().iter() {
+    for ((endpoint, status), count) in gw.requests.snapshot() {
         let _ = writeln!(
             out,
             "enova_gateway_requests_total{{endpoint=\"{}\",code=\"{}\"}} {}",
-            escape_label(endpoint),
+            escape_label(&endpoint),
             status,
             count
         );
@@ -603,6 +660,53 @@ pub fn render_prometheus(
     out.push_str("# TYPE enova_gateway_inflight_requests gauge\n");
     let _ = writeln!(out, "enova_gateway_inflight_requests {inflight}");
 
+    // ingress connection accounting (reactor or threaded accept loop)
+    out.push_str(
+        "# HELP enova_ingress_connections_accepted_total Ingress connections accepted since boot.\n",
+    );
+    out.push_str("# TYPE enova_ingress_connections_accepted_total counter\n");
+    let _ = writeln!(
+        out,
+        "enova_ingress_connections_accepted_total {}",
+        gw.ingress.accepted_total.load(Ordering::Relaxed)
+    );
+    out.push_str("# HELP enova_ingress_connections_open Currently-open ingress connections.\n");
+    out.push_str("# TYPE enova_ingress_connections_open gauge\n");
+    let _ = writeln!(
+        out,
+        "enova_ingress_connections_open {}",
+        gw.ingress.open.load(Ordering::Relaxed)
+    );
+    out.push_str(
+        "# HELP enova_ingress_handler_inflight Requests currently executing on the handler pool.\n",
+    );
+    out.push_str("# TYPE enova_ingress_handler_inflight gauge\n");
+    let _ = writeln!(
+        out,
+        "enova_ingress_handler_inflight {}",
+        gw.ingress.handler_inflight.load(Ordering::Relaxed)
+    );
+    out.push_str(
+        "# HELP enova_ingress_handler_threads Configured handler-pool size (bounds concurrent \
+         request execution regardless of open connections).\n",
+    );
+    out.push_str("# TYPE enova_ingress_handler_threads gauge\n");
+    let _ = writeln!(
+        out,
+        "enova_ingress_handler_threads {}",
+        gw.ingress.handler_threads.load(Ordering::Relaxed)
+    );
+    out.push_str(
+        "# HELP enova_ingress_reactor_mode 1 when the sharded epoll reactor serves ingress, \
+         0 for the legacy thread-per-connection pool.\n",
+    );
+    out.push_str("# TYPE enova_ingress_reactor_mode gauge\n");
+    let _ = writeln!(
+        out,
+        "enova_ingress_reactor_mode {}",
+        gw.ingress.reactor_mode.load(Ordering::Relaxed)
+    );
+
     out.push_str("# HELP enova_gateway_uptime_seconds Gateway uptime.\n");
     out.push_str("# TYPE enova_gateway_uptime_seconds gauge\n");
     let _ = writeln!(out, "enova_gateway_uptime_seconds {uptime_secs:.3}");
@@ -812,6 +916,16 @@ mod tests {
                 && s.labels.get("reason").map(String::as_str) == Some("queue_full")
                 && s.value == 1.0));
         assert!(samples.iter().any(|s| s.name == "enova_gateway_inflight_requests" && s.value == 3.0));
+        // the ingress connection surface always renders, even before traffic
+        for gauge in [
+            "enova_ingress_connections_accepted_total",
+            "enova_ingress_connections_open",
+            "enova_ingress_handler_inflight",
+            "enova_ingress_handler_threads",
+            "enova_ingress_reactor_mode",
+        ] {
+            assert!(samples.iter().any(|s| s.name == gauge), "missing {gauge}");
+        }
         assert!(samples.iter().any(|s| s.name == "enova_gateway_replicas" && s.value == 2.0));
         assert!(samples
             .iter()

@@ -33,6 +33,7 @@ pub mod http;
 pub mod loadgen;
 pub mod metrics;
 pub mod openai;
+pub mod reactor;
 pub mod sse;
 pub mod supervisor;
 
@@ -83,6 +84,29 @@ const ENGINE_INIT_TIMEOUT: Duration = Duration::from_secs(300);
 /// (until the next scale event re-triggers it).
 const WARM_FILL_MAX_FAILURES: u32 = 5;
 
+/// How the serving surface accepts and parses connections.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IngressMode {
+    /// sharded nonblocking reactor (default): a connection costs an fd
+    /// and a parse state machine; handler threads are occupied only
+    /// while a request is actually being served
+    Reactor,
+    /// legacy thread-per-connection worker pool, kept for same-run A/B
+    /// benchmarking (`bench-gateway` emits both rows) and as a fallback
+    Threaded,
+}
+
+impl IngressMode {
+    /// CLI spelling (`--ingress reactor|threaded`).
+    pub fn parse(s: &str) -> Option<IngressMode> {
+        match s {
+            "reactor" => Some(IngressMode::Reactor),
+            "threaded" => Some(IngressMode::Threaded),
+            _ => None,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct GatewayConfig {
     pub host: String,
@@ -95,8 +119,12 @@ pub struct GatewayConfig {
     /// token-bucket refill, requests/second; 0 disables rate limiting
     pub rate_limit: f64,
     pub rate_burst: usize,
-    /// HTTP worker threads == max concurrently served connections
+    /// HTTP worker threads. Reactor ingress: the handler-pool size (max
+    /// concurrently *served* requests; idle keep-alive connections are
+    /// free). Threaded ingress: max concurrently *open* connections.
     pub http_workers: usize,
+    /// connection acceptance model; [`IngressMode::Reactor`] by default
+    pub ingress: IngressMode,
     pub max_body_bytes: usize,
     /// cadence of Table II frame recording per replica
     pub monitor_interval: Duration,
@@ -129,6 +157,7 @@ impl Default for GatewayConfig {
             rate_limit: 0.0,
             rate_burst: 64,
             http_workers: 64,
+            ingress: IngressMode::Reactor,
             max_body_bytes: 1024 * 1024,
             monitor_interval: Duration::from_millis(50),
             queue_budget: Duration::ZERO,
@@ -367,33 +396,83 @@ impl Gateway {
             register_replica(&state, p.id, p.slot, 1.0);
         }
 
-        // connection fan-out: accept thread -> worker pool
-        let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
-        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        // connection fan-out, per the configured ingress mode
         let mut threads = Vec::new();
-        {
-            let state = Arc::clone(&state);
-            threads.push(std::thread::spawn(move || {
-                accept_loop(listener, conn_tx, &state);
-            }));
-        }
-        for _ in 0..state.cfg.http_workers.max(1) {
-            let state = Arc::clone(&state);
-            let conn_rx = Arc::clone(&conn_rx);
-            threads.push(std::thread::spawn(move || loop {
-                if state.stop.load(Ordering::Acquire) {
-                    break;
+        match state.cfg.ingress {
+            IngressMode::Reactor => {
+                // the handler intentionally skips a stop-flag fast-exit:
+                // during a drain, already-dispatched requests run route()
+                // and get well-formed responses (replica workers shed
+                // with 503s once stopping)
+                let handler: reactor::Handler = {
+                    let state = Arc::clone(&state);
+                    Arc::new(move |stream: &mut TcpStream, req: &http::Request| {
+                        let keep = req.keep_alive();
+                        route(req, stream, &state).is_ok() && keep
+                    })
+                };
+                let on_parse_error: reactor::ErrorResponder = Arc::new(|e| {
+                    let body =
+                        openai::to_wire(&openai::error_body("invalid_request_error", &e.message));
+                    http::Response::json(e.status, body)
+                });
+                let stop: reactor::StopCheck = {
+                    let state = Arc::clone(&state);
+                    Arc::new(move || state.stop.load(Ordering::Acquire))
+                };
+                let rcfg = reactor::ReactorConfig {
+                    shards: reactor::default_shards(),
+                    handler_threads: state.cfg.http_workers.max(1),
+                    max_body_bytes: state.cfg.max_body_bytes,
+                    idle_timeout: Duration::from_secs(5),
+                };
+                let r = reactor::Reactor::start(
+                    listener,
+                    rcfg,
+                    handler,
+                    on_parse_error,
+                    stop,
+                    Arc::clone(&state.metrics.ingress),
+                )?;
+                threads.extend(r.into_threads());
+            }
+            IngressMode::Threaded => {
+                // legacy: accept thread -> worker pool
+                state
+                    .metrics
+                    .ingress
+                    .handler_threads
+                    .store(state.cfg.http_workers.max(1) as u64, Ordering::Release);
+                let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
+                let conn_rx = Arc::new(Mutex::new(conn_rx));
+                {
+                    let state = Arc::clone(&state);
+                    threads.push(std::thread::spawn(move || {
+                        accept_loop(listener, conn_tx, &state);
+                    }));
                 }
-                let next = conn_rx
-                    .lock()
-                    .unwrap()
-                    .recv_timeout(Duration::from_millis(100));
-                match next {
-                    Ok(stream) => handle_connection(stream, &state),
-                    Err(RecvTimeoutError::Timeout) => continue,
-                    Err(RecvTimeoutError::Disconnected) => break,
+                for _ in 0..state.cfg.http_workers.max(1) {
+                    let state = Arc::clone(&state);
+                    let conn_rx = Arc::clone(&conn_rx);
+                    threads.push(std::thread::spawn(move || loop {
+                        if state.stop.load(Ordering::Acquire) {
+                            break;
+                        }
+                        let next = conn_rx
+                            .lock()
+                            .unwrap()
+                            .recv_timeout(Duration::from_millis(100));
+                        match next {
+                            Ok(stream) => {
+                                handle_connection(stream, &state);
+                                state.metrics.ingress.open.fetch_sub(1, Ordering::AcqRel);
+                            }
+                            Err(RecvTimeoutError::Timeout) => continue,
+                            Err(RecvTimeoutError::Disconnected) => break,
+                        }
+                    }));
                 }
-            }));
+            }
         }
 
         if let Some(sup) = supervisor_cfg {
@@ -948,6 +1027,8 @@ fn accept_loop(listener: TcpListener, conn_tx: Sender<TcpStream>, state: &Gatewa
             Ok((stream, _peer)) => {
                 let _ = stream.set_nonblocking(false);
                 let _ = stream.set_nodelay(true);
+                state.metrics.ingress.accepted_total.fetch_add(1, Ordering::AcqRel);
+                state.metrics.ingress.open.fetch_add(1, Ordering::AcqRel);
                 // short read timeout doubles as the idle keep-alive
                 // deadline: a worker parked in read_request re-checks the
                 // stop flag within this bound, so shutdown stays prompt
@@ -1507,7 +1588,11 @@ fn serve_completion(
     let mut failure = "no replicas routable";
     let mut sent = false;
     for _ in 0..4 {
-        let Some(handle) = state.router.read().unwrap().dispatch() else {
+        // lock-free dispatch: the read lock is held only for the O(1)
+        // snapshot clone, never for the least-loaded scan — reactor
+        // handler threads don't serialize on routing state
+        let routable = state.router.read().unwrap().snapshot();
+        let Some(handle) = routable.dispatch() else {
             break;
         };
         let replicas = state.replicas.read().unwrap();

@@ -1,0 +1,888 @@
+//! Sharded nonblocking reactor ingress: the epoll-based replacement for
+//! the thread-per-connection accept loops.
+//!
+//! Architecture (one [`Reactor`] per listening socket):
+//!
+//! * N **shard threads**, each owning a private `epoll` instance (raw
+//!   syscalls through `std::os::fd` — no new crates; a `poll(2)` fallback
+//!   keeps non-Linux unix hosts working). Every shard registers the
+//!   shared nonblocking listener, so accepts spread across shards without
+//!   a dedicated accept thread.
+//! * Each shard owns its connections' **parse state machines**: a
+//!   [`http::RequestParser`] per connection is fed whatever bytes are
+//!   readable and resumed on the next readiness event, so a slow client
+//!   trickling a header never pins a thread (slow-loris costs one idle
+//!   fd, not one parked worker).
+//! * A bounded **handler pool** runs the application callback. Once a
+//!   request head+body is fully parsed the connection is deregistered
+//!   from the shard, flipped back to blocking with the legacy socket
+//!   timeouts, and handed over; the handler writes the response exactly
+//!   like the old per-connection worker did, so response semantics
+//!   (SSE streaming, chunked framing, trace recording) are unchanged.
+//! * **Keep-alive return path**: when the handler keeps the connection,
+//!   it travels back to a shard over a return channel plus a socketpair
+//!   waker, carrying any pipelined leftover bytes, which are replayed
+//!   into a fresh parser before the fd is re-armed — pipelined requests
+//!   dispatch immediately without waiting for new readability.
+//!
+//! The win over thread-per-connection: the old model served at most
+//! `http_workers` connections *total* because a worker was pinned to its
+//! keep-alive connection for the connection's lifetime. The reactor pins
+//! workers only while a request is actually being served, so fan-in is
+//! bounded by fds, not threads.
+//!
+//! Shutdown drains: shards stop accepting and drop idle connections;
+//! dispatched requests finish on the handler pool (the pool exits only
+//! after its queue is empty), so an in-flight client always receives a
+//! complete HTTP response.
+
+use super::http;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Application callback, run on a handler-pool thread with a *blocking*
+/// stream (legacy timeouts applied). Returns whether the connection may
+/// be kept alive for another request; an `Err`-ish outcome is expressed
+/// by returning `false` (the reactor then closes the connection).
+pub type Handler = Arc<dyn Fn(&mut TcpStream, &http::Request) -> bool + Send + Sync>;
+
+/// Maps a parse failure to the wire response the application wants (the
+/// gateway answers OpenAI-style error JSON; the coordinator the same).
+pub type ErrorResponder = Arc<dyn Fn(&http::HttpError) -> http::Response + Send + Sync>;
+
+/// Polled every tick by shard threads; `true` starts the drain.
+pub type StopCheck = Arc<dyn Fn() -> bool + Send + Sync>;
+
+/// Ingress connection accounting, rendered as `/metrics` gauges. Shared
+/// by reference between the reactor (or the legacy threaded path) and
+/// the metrics exporter, so `render_prometheus` signatures stay put.
+#[derive(Debug, Default)]
+pub struct IngressStats {
+    /// connections accepted since boot
+    pub accepted_total: AtomicU64,
+    /// currently-open ingress connections (accepted, not yet closed)
+    pub open: AtomicU64,
+    /// requests currently executing on the handler pool
+    pub handler_inflight: AtomicU64,
+    /// configured handler-pool size (threads that can serve concurrently)
+    pub handler_threads: AtomicU64,
+    /// 1 = reactor ingress, 0 = legacy thread-per-connection
+    pub reactor_mode: AtomicU64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ReactorConfig {
+    /// event-loop shards (each with its own epoll instance)
+    pub shards: usize,
+    /// handler-pool threads == max concurrently *served* requests
+    pub handler_threads: usize,
+    /// request body cap handed to the incremental parser
+    pub max_body_bytes: usize,
+    /// idle keep-alive / mid-parse silence deadline (legacy: the 5s read
+    /// timeout on blocking sockets)
+    pub idle_timeout: Duration,
+}
+
+impl Default for ReactorConfig {
+    fn default() -> Self {
+        ReactorConfig {
+            shards: default_shards(),
+            handler_threads: 64,
+            max_body_bytes: 1024 * 1024,
+            idle_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Shards default to a small constant: each shard is purely event-loop
+/// work (parse + dispatch), so a handful saturates well before the
+/// handler pool does.
+pub fn default_shards() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().min(4))
+        .unwrap_or(2)
+        .max(1)
+}
+
+/// How often a shard wakes up regardless of events, to check the stop
+/// flag and reap idle connections.
+const TICK: Duration = Duration::from_millis(100);
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// Blocking-mode socket deadlines applied when a parsed request is
+/// handed to the handler pool (mirrors the legacy accept loop).
+const HANDLER_READ_TIMEOUT: Duration = Duration::from_secs(5);
+const HANDLER_WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+// ---------------------------------------------------------------------------
+// poller: hand-rolled epoll (Linux) with a poll(2) fallback (other unix)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod sys {
+    //! Raw epoll bindings. std already links libc, so plain `extern "C"`
+    //! declarations resolve without adding a crate.
+    use std::os::fd::{FromRawFd, OwnedFd};
+
+    pub const EPOLL_CLOEXEC: i32 = 0o2000000;
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    /// Mirrors the kernel's `struct epoll_event` ABI: packed on x86 so
+    /// the 64-bit data field sits at offset 4, natural alignment
+    /// elsewhere.
+    #[cfg_attr(any(target_arch = "x86", target_arch = "x86_64"), repr(C, packed))]
+    #[cfg_attr(not(any(target_arch = "x86", target_arch = "x86_64")), repr(C))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+    }
+
+    pub fn create() -> std::io::Result<OwnedFd> {
+        let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(unsafe { OwnedFd::from_raw_fd(fd) })
+    }
+
+    pub fn ctl(epfd: i32, op: i32, fd: i32, event: Option<&mut EpollEvent>) -> std::io::Result<()> {
+        let ptr = match event {
+            Some(e) => e as *mut EpollEvent,
+            None => std::ptr::null_mut(),
+        };
+        if unsafe { epoll_ctl(epfd, op, fd, ptr) } < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    pub fn wait(epfd: i32, events: &mut [EpollEvent], timeout_ms: i32) -> std::io::Result<usize> {
+        let n = unsafe { epoll_wait(epfd, events.as_mut_ptr(), events.len() as i32, timeout_ms) };
+        if n < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(n as usize)
+    }
+}
+
+/// Readiness poller: one instance per shard, single-threaded use.
+#[cfg(target_os = "linux")]
+pub struct Poller {
+    epfd: std::os::fd::OwnedFd,
+}
+
+#[cfg(target_os = "linux")]
+impl Poller {
+    pub fn new() -> std::io::Result<Poller> {
+        Ok(Poller { epfd: sys::create()? })
+    }
+
+    pub fn add(&mut self, fd: i32, token: u64) -> std::io::Result<()> {
+        let mut ev = sys::EpollEvent {
+            events: sys::EPOLLIN | sys::EPOLLRDHUP,
+            data: token,
+        };
+        sys::ctl(self.epfd.as_raw_fd(), sys::EPOLL_CTL_ADD, fd, Some(&mut ev))
+    }
+
+    pub fn del(&mut self, fd: i32) -> std::io::Result<()> {
+        sys::ctl(self.epfd.as_raw_fd(), sys::EPOLL_CTL_DEL, fd, None)
+    }
+
+    /// Collect ready tokens into `out`; returns after `timeout` with an
+    /// empty set when nothing fired. EINTR is surfaced as an empty tick.
+    pub fn wait(&mut self, out: &mut Vec<u64>, timeout: Duration) -> std::io::Result<()> {
+        out.clear();
+        let mut events = [sys::EpollEvent { events: 0, data: 0 }; 64];
+        let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+        match sys::wait(self.epfd.as_raw_fd(), &mut events, ms) {
+            Ok(n) => {
+                for ev in &events[..n] {
+                    out.push(ev.data);
+                }
+                Ok(())
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => Ok(()),
+            Err(e) => Err(e),
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod sys {
+    //! `poll(2)` fallback for non-Linux unix hosts.
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: usize, timeout: i32) -> i32;
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub struct Poller {
+    fds: Vec<(i32, u64)>,
+}
+
+#[cfg(not(target_os = "linux"))]
+impl Poller {
+    pub fn new() -> std::io::Result<Poller> {
+        Ok(Poller { fds: Vec::new() })
+    }
+
+    pub fn add(&mut self, fd: i32, token: u64) -> std::io::Result<()> {
+        self.fds.push((fd, token));
+        Ok(())
+    }
+
+    pub fn del(&mut self, fd: i32) -> std::io::Result<()> {
+        self.fds.retain(|&(f, _)| f != fd);
+        Ok(())
+    }
+
+    pub fn wait(&mut self, out: &mut Vec<u64>, timeout: Duration) -> std::io::Result<()> {
+        out.clear();
+        let mut pfds: Vec<sys::PollFd> = self
+            .fds
+            .iter()
+            .map(|&(fd, _)| sys::PollFd { fd, events: sys::POLLIN, revents: 0 })
+            .collect();
+        let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+        let n = unsafe { sys::poll(pfds.as_mut_ptr(), pfds.len(), ms) };
+        if n < 0 {
+            let e = std::io::Error::last_os_error();
+            if e.kind() == std::io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(e);
+        }
+        for (pfd, &(_, token)) in pfds.iter().zip(self.fds.iter()) {
+            if pfd.revents != 0 {
+                out.push(token);
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// connection plumbing
+// ---------------------------------------------------------------------------
+
+/// A connection's stream plus the accounting guard: wherever the
+/// connection is finally dropped (shard close path, handler close path,
+/// failed return), the open-connections gauge decrements exactly once.
+struct TrackedConn {
+    stream: TcpStream,
+    stats: Arc<IngressStats>,
+}
+
+impl Drop for TrackedConn {
+    fn drop(&mut self) {
+        self.stats.open.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Shard-resident connection state: the resumable parser plus the idle
+/// clock.
+struct Conn {
+    tracked: TrackedConn,
+    parser: http::RequestParser,
+    last_active: Instant,
+}
+
+/// A fully-parsed request in flight to the handler pool.
+struct DispatchJob {
+    tracked: TrackedConn,
+    req: http::Request,
+    /// pipelined bytes read past the request end; replayed on return
+    leftover: Vec<u8>,
+    /// route back to the originating shard for keep-alive re-arming
+    return_tx: Sender<ReturnedConn>,
+    waker: Waker,
+}
+
+/// A kept-alive connection returning from the handler pool.
+struct ReturnedConn {
+    tracked: TrackedConn,
+    leftover: Vec<u8>,
+}
+
+/// Write end of a shard's socketpair; one byte per wake, nonblocking so
+/// a saturated pipe never stalls a handler thread.
+#[derive(Clone)]
+struct Waker {
+    tx: Arc<UnixStream>,
+}
+
+impl Waker {
+    fn wake(&self) {
+        let _ = (&*self.tx).write(&[1u8]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the reactor
+// ---------------------------------------------------------------------------
+
+/// Handle to a running reactor; its threads are surrendered to the
+/// owner's join list via [`Reactor::into_threads`].
+pub struct Reactor {
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Reactor {
+    /// Spawn shard + handler threads over an already-nonblocking
+    /// listener. `stop` is polled every tick; once it reports true the
+    /// shards drain (stop accepting, drop idle connections, exit) and
+    /// the handler pool finishes every dispatched request before
+    /// exiting.
+    pub fn start(
+        listener: TcpListener,
+        cfg: ReactorConfig,
+        handler: Handler,
+        on_parse_error: ErrorResponder,
+        stop: StopCheck,
+        stats: Arc<IngressStats>,
+    ) -> std::io::Result<Reactor> {
+        stats.reactor_mode.store(1, Ordering::Release);
+        stats
+            .handler_threads
+            .store(cfg.handler_threads.max(1) as u64, Ordering::Release);
+        let listener = Arc::new(listener);
+        let (job_tx, job_rx) = mpsc::channel::<DispatchJob>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let mut threads = Vec::new();
+
+        for shard in 0..cfg.shards.max(1) {
+            let (ret_tx, ret_rx) = mpsc::channel::<ReturnedConn>();
+            let (wake_rx, wake_tx) = UnixStream::pair()?;
+            wake_rx.set_nonblocking(true)?;
+            wake_tx.set_nonblocking(true)?;
+            let waker = Waker { tx: Arc::new(wake_tx) };
+            let listener = Arc::clone(&listener);
+            let job_tx = job_tx.clone();
+            let on_parse_error = Arc::clone(&on_parse_error);
+            let stop = Arc::clone(&stop);
+            let stats = Arc::clone(&stats);
+            let cfg = cfg.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("ingress-shard-{shard}"))
+                    .spawn(move || {
+                        shard_loop(
+                            &listener,
+                            &cfg,
+                            job_tx,
+                            ret_tx,
+                            ret_rx,
+                            wake_rx,
+                            waker,
+                            &on_parse_error,
+                            &stop,
+                            &stats,
+                        );
+                    })?,
+            );
+        }
+        drop(job_tx); // handler pool exits when the last shard sender drops
+
+        for i in 0..cfg.handler_threads.max(1) {
+            let job_rx = Arc::clone(&job_rx);
+            let handler = Arc::clone(&handler);
+            let stop = Arc::clone(&stop);
+            let stats = Arc::clone(&stats);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("ingress-handler-{i}"))
+                    .spawn(move || handler_loop(&job_rx, &handler, &stop, &stats))?,
+            );
+        }
+
+        Ok(Reactor { threads })
+    }
+
+    /// Surrender the thread handles for the owner's shutdown join.
+    pub fn into_threads(self) -> Vec<JoinHandle<()>> {
+        self.threads
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn shard_loop(
+    listener: &TcpListener,
+    cfg: &ReactorConfig,
+    job_tx: Sender<DispatchJob>,
+    ret_tx: Sender<ReturnedConn>,
+    ret_rx: Receiver<ReturnedConn>,
+    wake_rx: UnixStream,
+    waker: Waker,
+    on_parse_error: &ErrorResponder,
+    stop: &StopCheck,
+    stats: &Arc<IngressStats>,
+) {
+    let mut poller = match Poller::new() {
+        Ok(p) => p,
+        Err(e) => {
+            crate::warn!("ingress", "poller init failed, shard down: {e}");
+            return;
+        }
+    };
+    if poller.add(listener.as_raw_fd(), TOKEN_LISTENER).is_err()
+        || poller.add(wake_rx.as_raw_fd(), TOKEN_WAKER).is_err()
+    {
+        crate::warn!("ingress", "poller registration failed, shard down");
+        return;
+    }
+
+    let mut conns: BTreeMap<u64, Conn> = BTreeMap::new();
+    let mut next_token = FIRST_CONN_TOKEN;
+    let mut ready = Vec::with_capacity(64);
+
+    loop {
+        if stop() {
+            // drain: accepting stops (loop exits), idle and mid-parse
+            // connections drop here; dispatched requests finish on the
+            // handler pool, which outlives the shards.
+            break;
+        }
+        if poller.wait(&mut ready, TICK).is_err() {
+            break;
+        }
+        for &token in &ready {
+            match token {
+                TOKEN_LISTENER => accept_burst(
+                    listener,
+                    &mut poller,
+                    &mut conns,
+                    &mut next_token,
+                    cfg,
+                    stats,
+                ),
+                TOKEN_WAKER => {
+                    drain_waker(&wake_rx);
+                    while let Ok(ret) = ret_rx.try_recv() {
+                        adopt_returned(
+                            ret,
+                            &mut poller,
+                            &mut conns,
+                            &mut next_token,
+                            cfg,
+                            &job_tx,
+                            &ret_tx,
+                            &waker,
+                            on_parse_error,
+                        );
+                    }
+                }
+                conn_token => drive_conn(
+                    conn_token,
+                    &mut poller,
+                    &mut conns,
+                    &job_tx,
+                    &ret_tx,
+                    &waker,
+                    on_parse_error,
+                ),
+            }
+        }
+        reap_idle(&mut poller, &mut conns, cfg.idle_timeout);
+    }
+}
+
+/// Accept everything currently pending on the shared listener.
+fn accept_burst(
+    listener: &TcpListener,
+    poller: &mut Poller,
+    conns: &mut BTreeMap<u64, Conn>,
+    next_token: &mut u64,
+    cfg: &ReactorConfig,
+    stats: &Arc<IngressStats>,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nodelay(true);
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                stats.accepted_total.fetch_add(1, Ordering::AcqRel);
+                stats.open.fetch_add(1, Ordering::AcqRel);
+                let token = *next_token;
+                *next_token += 1;
+                if poller.add(stream.as_raw_fd(), token).is_err() {
+                    // TrackedConn drop rebalances the gauge
+                    drop(TrackedConn { stream, stats: Arc::clone(stats) });
+                    continue;
+                }
+                conns.insert(
+                    token,
+                    Conn {
+                        tracked: TrackedConn { stream, stats: Arc::clone(stats) },
+                        parser: http::RequestParser::new(cfg.max_body_bytes),
+                        last_active: Instant::now(),
+                    },
+                );
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            // transient accept error (EMFILE, aborted handshake): back
+            // off briefly so a level-triggered listener can't busy-spin
+            Err(_) => {
+                std::thread::sleep(Duration::from_millis(20));
+                break;
+            }
+        }
+    }
+}
+
+fn drain_waker(wake_rx: &UnixStream) {
+    let mut buf = [0u8; 64];
+    while matches!((&*wake_rx).read(&mut buf), Ok(n) if n > 0) {}
+}
+
+/// Re-arm a keep-alive connection coming back from the handler pool and
+/// immediately replay its pipelined leftover (a queued second request
+/// dispatches without waiting for new bytes).
+#[allow(clippy::too_many_arguments)]
+fn adopt_returned(
+    ret: ReturnedConn,
+    poller: &mut Poller,
+    conns: &mut BTreeMap<u64, Conn>,
+    next_token: &mut u64,
+    cfg: &ReactorConfig,
+    job_tx: &Sender<DispatchJob>,
+    ret_tx: &Sender<ReturnedConn>,
+    waker: &Waker,
+    on_parse_error: &ErrorResponder,
+) {
+    if ret.tracked.stream.set_nonblocking(true).is_err() {
+        return; // drop; gauge rebalanced by TrackedConn
+    }
+    let mut parser = http::RequestParser::new(cfg.max_body_bytes);
+    parser.feed(&ret.leftover);
+    let token = *next_token;
+    *next_token += 1;
+    if poller.add(ret.tracked.stream.as_raw_fd(), token).is_err() {
+        return;
+    }
+    conns.insert(
+        token,
+        Conn { tracked: ret.tracked, parser, last_active: Instant::now() },
+    );
+    drive_conn(token, poller, conns, job_tx, ret_tx, waker, on_parse_error);
+}
+
+/// What a readiness event did to a connection.
+enum Drive {
+    /// still parsing; stays registered
+    Keep,
+    /// parsed a full request: deregister and hand to the handler pool
+    Dispatch(http::Request),
+    /// close silently (EOF, stray blank lines, transport error)
+    Close,
+    /// close after answering a parse error
+    Reject(http::HttpError),
+}
+
+/// Pump one connection: replay already-buffered bytes through the
+/// parser, then read until `WouldBlock`, dispatching at most one request
+/// (pipelined successors ride along as leftover).
+fn drive_conn(
+    token: u64,
+    poller: &mut Poller,
+    conns: &mut BTreeMap<u64, Conn>,
+    job_tx: &Sender<DispatchJob>,
+    ret_tx: &Sender<ReturnedConn>,
+    waker: &Waker,
+    on_parse_error: &ErrorResponder,
+) {
+    let outcome = {
+        let Some(conn) = conns.get_mut(&token) else {
+            return; // already closed this tick
+        };
+        let mut buf = [0u8; 8192];
+        loop {
+            // parse-before-read: leftover replay and multi-request reads
+            // make progress without waiting for another readiness event
+            match conn.parser.poll() {
+                Ok(http::Poll::Ready(req)) => break Drive::Dispatch(req),
+                Ok(http::Poll::Close) => break Drive::Close,
+                Err(e) => break Drive::Reject(e),
+                Ok(http::Poll::NeedMore) => {}
+            }
+            match conn.tracked.stream.read(&mut buf) {
+                Ok(0) => {
+                    break match conn.parser.eof() {
+                        Ok(()) => Drive::Close,
+                        Err(e) => Drive::Reject(e),
+                    };
+                }
+                Ok(n) => {
+                    conn.parser.feed(&buf[..n]);
+                    conn.last_active = Instant::now();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break Drive::Keep,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => break Drive::Close,
+            }
+        }
+    };
+
+    match outcome {
+        Drive::Keep => {}
+        Drive::Close => {
+            if let Some(conn) = conns.remove(&token) {
+                let _ = poller.del(conn.tracked.stream.as_raw_fd());
+            }
+        }
+        Drive::Reject(e) => {
+            if let Some(conn) = conns.remove(&token) {
+                let _ = poller.del(conn.tracked.stream.as_raw_fd());
+                respond_and_close(conn.tracked, &on_parse_error(&e));
+            }
+        }
+        Drive::Dispatch(req) => {
+            let Some(mut conn) = conns.remove(&token) else {
+                return;
+            };
+            let _ = poller.del(conn.tracked.stream.as_raw_fd());
+            let leftover = conn.parser.take_leftover();
+            // back to blocking with the legacy per-request deadlines:
+            // the handler writes responses exactly like the old worker
+            let s = &conn.tracked.stream;
+            if s.set_nonblocking(false).is_err()
+                || s.set_read_timeout(Some(HANDLER_READ_TIMEOUT)).is_err()
+                || s.set_write_timeout(Some(HANDLER_WRITE_TIMEOUT)).is_err()
+            {
+                return; // drop
+            }
+            let job = DispatchJob {
+                tracked: conn.tracked,
+                req,
+                leftover,
+                return_tx: ret_tx.clone(),
+                waker: waker.clone(),
+            };
+            // send fails only during teardown; the drop closes the conn
+            let _ = job_tx.send(job);
+        }
+    }
+}
+
+/// Write a parse-error response on a best-effort blocking socket, then
+/// close (mirrors the legacy error path).
+fn respond_and_close(mut tracked: TrackedConn, resp: &http::Response) {
+    let _ = tracked.stream.set_nonblocking(false);
+    let _ = tracked.stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let _ = resp.write_to(&mut tracked.stream, false);
+}
+
+/// Close connections silent past the idle deadline — the reactor
+/// equivalent of the legacy 5s blocking read timeout, covering idle
+/// keep-alive *and* stalled mid-parse (slow-loris) connections alike.
+fn reap_idle(poller: &mut Poller, conns: &mut BTreeMap<u64, Conn>, idle: Duration) {
+    let expired: Vec<u64> = conns
+        .iter()
+        .filter(|(_, c)| c.last_active.elapsed() > idle)
+        .map(|(&t, _)| t)
+        .collect();
+    for token in expired {
+        if let Some(conn) = conns.remove(&token) {
+            let _ = poller.del(conn.tracked.stream.as_raw_fd());
+        }
+    }
+}
+
+/// Handler-pool thread: serve dispatched requests until every shard
+/// sender has dropped *and* the queue is empty — that ordering is the
+/// drain guarantee (an accepted, parsed request is always answered).
+fn handler_loop(
+    job_rx: &Arc<Mutex<Receiver<DispatchJob>>>,
+    handler: &Handler,
+    stop: &StopCheck,
+    stats: &Arc<IngressStats>,
+) {
+    loop {
+        let job = {
+            let rx = job_rx.lock().unwrap();
+            match rx.recv() {
+                Ok(j) => j,
+                Err(_) => break,
+            }
+        };
+        stats.handler_inflight.fetch_add(1, Ordering::AcqRel);
+        let mut tracked = job.tracked;
+        let keep = job.req.keep_alive() && handler(&mut tracked.stream, &job.req);
+        stats.handler_inflight.fetch_sub(1, Ordering::AcqRel);
+        if keep && !stop() {
+            let waker = job.waker;
+            if job
+                .return_tx
+                .send(ReturnedConn { tracked, leftover: job.leftover })
+                .is_ok()
+            {
+                waker.wake();
+            }
+            // send failure = shard gone (drain); the conn drops here
+        }
+        // !keep: tracked drops, closing the conn + decrementing the gauge
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader};
+
+    fn start_echo_reactor(handler_threads: usize) -> (Reactor, std::net::SocketAddr, Arc<IngressStats>, Arc<std::sync::atomic::AtomicBool>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let stats = Arc::new(IngressStats::default());
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let handler: Handler = Arc::new(|stream, req| {
+            let body = format!("{{\"path\":{:?}}}", req.path);
+            http::Response::json(200, body).write_to(stream, req.keep_alive()).is_ok()
+        });
+        let on_err: ErrorResponder =
+            Arc::new(|e| http::Response::json(e.status, format!("{{\"error\":{:?}}}", e.message)));
+        let reactor = Reactor::start(
+            listener,
+            ReactorConfig {
+                shards: 2,
+                handler_threads,
+                max_body_bytes: 64 * 1024,
+                idle_timeout: Duration::from_secs(5),
+            },
+            handler,
+            on_err,
+            Arc::new(move || stop_flag.load(Ordering::Acquire)),
+            Arc::clone(&stats),
+        )
+        .unwrap();
+        (reactor, addr, stats, stop)
+    }
+
+    fn read_one_response(reader: &mut BufReader<TcpStream>) -> (u16, String) {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let status: u16 = line.split_whitespace().nth(1).unwrap().parse().unwrap();
+        let mut len = 0usize;
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h).unwrap();
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+                len = v.trim().parse().unwrap();
+            }
+        }
+        let mut body = vec![0u8; len];
+        reader.read_exact(&mut body).unwrap();
+        (status, String::from_utf8(body).unwrap())
+    }
+
+    #[test]
+    fn serves_requests_written_byte_by_byte() {
+        let (reactor, addr, _stats, stop) = start_echo_reactor(2);
+        let mut s = TcpStream::connect(addr).unwrap();
+        for b in b"GET /slow HTTP/1.1\r\nhost: x\r\n\r\n" {
+            s.write_all(&[*b]).unwrap();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let (status, body) = read_one_response(&mut reader);
+        assert_eq!(status, 200);
+        assert!(body.contains("/slow"), "{body}");
+        stop.store(true, Ordering::Release);
+        for t in reactor.into_threads() {
+            let _ = t.join();
+        }
+    }
+
+    #[test]
+    fn pipelined_requests_on_one_connection_all_answered() {
+        let (reactor, addr, stats, stop) = start_echo_reactor(2);
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\nGET /c HTTP/1.1\r\nconnection: close\r\n\r\n")
+            .unwrap();
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        for path in ["/a", "/b", "/c"] {
+            let (status, body) = read_one_response(&mut reader);
+            assert_eq!(status, 200);
+            assert!(body.contains(path), "expected {path} in {body}");
+        }
+        assert!(stats.accepted_total.load(Ordering::Acquire) >= 1);
+        stop.store(true, Ordering::Release);
+        for t in reactor.into_threads() {
+            let _ = t.join();
+        }
+    }
+
+    #[test]
+    fn parse_errors_get_a_response_and_a_close() {
+        let (reactor, addr, _stats, stop) = start_echo_reactor(1);
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"NOT A VALID START LINE AT ALL\r\n\r\n").unwrap();
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let (status, _body) = read_one_response(&mut reader);
+        assert_eq!(status, 400);
+        stop.store(true, Ordering::Release);
+        for t in reactor.into_threads() {
+            let _ = t.join();
+        }
+    }
+
+    #[test]
+    fn open_gauge_returns_to_zero_after_close() {
+        let (reactor, addr, stats, stop) = start_echo_reactor(2);
+        {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"GET /x HTTP/1.1\r\nconnection: close\r\n\r\n").unwrap();
+            let mut reader = BufReader::new(s.try_clone().unwrap());
+            let (status, _) = read_one_response(&mut reader);
+            assert_eq!(status, 200);
+        }
+        // the close is observed on the next readiness tick
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while stats.open.load(Ordering::Acquire) != 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert_eq!(stats.open.load(Ordering::Acquire), 0);
+        stop.store(true, Ordering::Release);
+        for t in reactor.into_threads() {
+            let _ = t.join();
+        }
+    }
+}

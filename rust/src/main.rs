@@ -13,7 +13,8 @@ COMMANDS:
   serve       serve prompts on the compiled tiny LM (options: --prompts N --max-tokens N)
   serve-http  OpenAI-compatible HTTP gateway (--port 8080 --replicas 2 --engine auto|lm|sim
               --max-num-seqs N --max-tokens N --max-pending N --rate RPS --burst N
-              --http-workers N --sim-delay-ms N --host ADDR --queue-budget-ms N
+              --http-workers N --ingress reactor|threaded --sim-delay-ms N --host ADDR
+              --queue-budget-ms N
               --warm-pool N --log-json --trace-sample F --trace-slo-ms N
               --autoscale [--min-replicas N --max-replicas N --scale-interval-ms N
               --calib-samples N --patience N --cooldown-ms N --queue-wait-budget-ms N]
@@ -41,7 +42,9 @@ COMMANDS:
               --spike-len F --seed N --workers N)
   bench-gateway  in-process scenario benchmark (--report FILE --baseline FILE
               --scenarios a,b,c --duration-s F --regression-pct F
-              [--no-cluster-bench to skip the 2-node cluster scenario])
+              [--no-cluster-bench to skip the 2-node cluster scenario]
+              [--no-saturation-bench to skip the reactor-vs-threaded
+              max-throughput rows; --saturation-s F sets their duration])
   recommend   run the service configuration module for --model <name> --gpu <name>
   detect      calibrate + run the performance detector on the trace dataset
   simulate    simulate a replica (--model --gpu --rps --seconds --max-num-seqs)
@@ -57,6 +60,7 @@ fn main() -> anyhow::Result<()> {
         "forecast",
         "cluster",
         "no-cluster-bench",
+        "no-saturation-bench",
         "log-json",
     ]);
     if args.flag("log-json") {
@@ -242,6 +246,15 @@ fn trace_settings_from_args(args: &Args) -> enova::trace::TraceSettings {
     }
 }
 
+/// `--ingress reactor|threaded`, shared by the gateway, the coordinator
+/// and the node.
+fn ingress_from_args(args: &Args) -> anyhow::Result<enova::gateway::IngressMode> {
+    let spelling = args.get_or("ingress", "reactor");
+    enova::gateway::IngressMode::parse(spelling).ok_or_else(|| {
+        anyhow::anyhow!("unknown --ingress {spelling:?}; expected reactor or threaded")
+    })
+}
+
 /// `enova serve-http`: the OpenAI-compatible serving gateway. `--engine
 /// auto` (default) uses the compiled LM when artifacts exist and falls
 /// back to the deterministic sim engine otherwise. With `--autoscale`,
@@ -319,6 +332,7 @@ fn serve_http(args: &Args) -> anyhow::Result<()> {
         http_workers: args.get_usize("http-workers", 64),
         queue_budget: Duration::from_millis(args.get_usize("queue-budget-ms", 0) as u64),
         warm_pool: args.get_usize("warm-pool", 0),
+        ingress: ingress_from_args(args)?,
         trace: trace_settings_from_args(args),
         ..GatewayConfig::default()
     };
@@ -387,6 +401,7 @@ fn serve_cluster(args: &Args) -> anyhow::Result<()> {
             detector_scaling: autoscale,
             forecast: forecast_policy,
         },
+        ingress: ingress_from_args(args)?,
         trace: trace_settings_from_args(args),
         ..CoordinatorConfig::default()
     };
@@ -441,6 +456,7 @@ fn node_cmd(args: &Args) -> anyhow::Result<()> {
             http_workers: args.get_usize("http-workers", 64),
             queue_budget: Duration::from_millis(args.get_usize("queue-budget-ms", 0) as u64),
             warm_pool: args.get_usize("warm-pool", 0),
+            ingress: ingress_from_args(args)?,
             trace: trace_settings_from_args(args),
             ..GatewayConfig::default()
         },
@@ -642,6 +658,22 @@ fn bench_gateway(args: &Args) -> anyhow::Result<()> {
     if !args.flag("no-cluster-bench") {
         rows.push(bench_cluster_row(duration)?);
     }
+    // ingress max-throughput: requests-to-saturation on fresh connections,
+    // reactor and thread-per-connection measured in the same run so the
+    // comparison is apples-to-apples on this machine
+    if !args.flag("no-saturation-bench") {
+        let sat_secs = args.get_f64("saturation-s", 3.0).max(0.5);
+        let reactor = bench_saturation_row(enova::gateway::IngressMode::Reactor, sat_secs)?;
+        let threaded = bench_saturation_row(enova::gateway::IngressMode::Threaded, sat_secs)?;
+        let r_rps = reactor.get("max_rps").and_then(Json::as_f64).unwrap_or(0.0);
+        let t_rps = threaded.get("max_rps").and_then(Json::as_f64).unwrap_or(0.0);
+        println!(
+            "saturation (same run): reactor {r_rps:.0} rps vs threaded {t_rps:.0} rps ({:+.1}%)",
+            if t_rps > 0.0 { (r_rps / t_rps - 1.0) * 100.0 } else { 0.0 }
+        );
+        rows.push(reactor);
+        rows.push(threaded);
+    }
     let out = obj([
         ("bench", s("gateway_scenarios")),
         ("duration_s", num(duration)),
@@ -665,22 +697,146 @@ fn bench_gateway(args: &Args) -> anyhow::Result<()> {
         .unwrap_or(&empty);
     for row in &rows {
         let name = row.get("scenario").and_then(Json::as_str).unwrap_or("");
-        let new_p95 = row.get("p95_ms").and_then(Json::as_f64).unwrap_or(0.0);
-        let old_p95 = base_rows
+        let base = base_rows
             .iter()
-            .find(|b| b.get("scenario").and_then(Json::as_str) == Some(name))
-            .and_then(|b| b.get("p95_ms"))
-            .and_then(Json::as_f64);
-        let Some(old_p95) = old_p95 else { continue };
-        if old_p95 > 0.0 && new_p95 > old_p95 * (1.0 + regression_pct / 100.0) {
-            anyhow::bail!(
-                "p95 regression on {name}: {new_p95:.1}ms vs baseline {old_p95:.1}ms \
-                 (> {regression_pct:.0}% worse)"
-            );
+            .find(|b| b.get("scenario").and_then(Json::as_str) == Some(name));
+        let Some(base) = base else { continue };
+        let new_p95 = row.get("p95_ms").and_then(Json::as_f64).unwrap_or(0.0);
+        if let Some(old_p95) = base.get("p95_ms").and_then(Json::as_f64) {
+            if old_p95 > 0.0 && new_p95 > old_p95 * (1.0 + regression_pct / 100.0) {
+                anyhow::bail!(
+                    "p95 regression on {name}: {new_p95:.1}ms vs baseline {old_p95:.1}ms \
+                     (> {regression_pct:.0}% worse)"
+                );
+            }
+            println!("{name}: p95 {new_p95:.1}ms vs baseline {old_p95:.1}ms — ok");
         }
-        println!("{name}: p95 {new_p95:.1}ms vs baseline {old_p95:.1}ms — ok");
+        // throughput floor on the saturation rows: max attack rate must
+        // not drop by more than the regression budget
+        if let (Some(new_rps), Some(old_rps)) = (
+            row.get("max_rps").and_then(Json::as_f64),
+            base.get("max_rps").and_then(Json::as_f64),
+        ) {
+            if old_rps > 0.0 && new_rps < old_rps * (1.0 - regression_pct / 100.0) {
+                anyhow::bail!(
+                    "throughput regression on {name}: {new_rps:.0} rps vs baseline \
+                     {old_rps:.0} rps (> {regression_pct:.0}% worse)"
+                );
+            }
+            println!("{name}: {new_rps:.0} rps vs baseline {old_rps:.0} rps — ok");
+        }
     }
     Ok(())
+}
+
+/// The ingress max-throughput scenario of `bench-gateway`: a closed loop
+/// of fresh (`Connection: close`) requests against a near-free sim
+/// engine, so connection setup + parse + dispatch — the part the ingress
+/// mode changes — dominates the cost. Reports the attack rate the
+/// gateway sustained as `max_rps`, which the regression gate checks as a
+/// floor, alongside the usual latency columns. Run once per
+/// [`enova::gateway::IngressMode`] so the two rows are measured
+/// back-to-back in the same process on the same machine.
+fn bench_saturation_row(
+    mode: enova::gateway::IngressMode,
+    secs: f64,
+) -> anyhow::Result<enova::util::json::Json> {
+    use enova::engine::sim::{SimEngine, SimEngineConfig};
+    use enova::engine::StreamEngine;
+    use enova::gateway::{loadgen, EngineSpawner, Gateway, GatewayConfig, IngressMode};
+    use enova::util::json::{num, obj, s};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    let spawner: EngineSpawner = Arc::new(|_id| {
+        Ok(Box::new(SimEngine::new(SimEngineConfig {
+            max_num_seqs: 64,
+            max_tokens: 16,
+            step_delay: Duration::ZERO,
+        })) as Box<dyn StreamEngine>)
+    });
+    let gw = Gateway::start_scalable(
+        GatewayConfig {
+            ingress: mode,
+            max_pending: 4096,
+            ..GatewayConfig::default()
+        },
+        spawner,
+        2,
+        None,
+    )?;
+    let addr = gw.addr_string();
+
+    const WORKERS: usize = 32;
+    let t0 = Instant::now();
+    let deadline = t0 + Duration::from_secs_f64(secs);
+    let mut handles = Vec::new();
+    for w in 0..WORKERS {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let body = format!("{{\"prompt\":\"saturation {w}\",\"max_tokens\":1}}");
+            let mut lat_ms: Vec<f64> = Vec::new();
+            let (mut shed, mut errors) = (0u64, 0u64);
+            while Instant::now() < deadline {
+                let t = Instant::now();
+                match loadgen::request(
+                    &addr,
+                    "POST",
+                    "/v1/completions",
+                    Some(&body),
+                    Duration::from_secs(10),
+                ) {
+                    Ok(resp) if resp.status == 200 => {
+                        lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+                    }
+                    Ok(resp) if resp.status == 503 => shed += 1,
+                    Ok(_) | Err(_) => errors += 1,
+                }
+            }
+            (lat_ms, shed, errors)
+        }));
+    }
+    let mut lat_ms: Vec<f64> = Vec::new();
+    let (mut shed, mut errors) = (0u64, 0u64);
+    for h in handles {
+        if let Ok((worker_lat, worker_shed, worker_errors)) = h.join() {
+            lat_ms.extend(worker_lat);
+            shed += worker_shed;
+            errors += worker_errors;
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-6);
+    gw.shutdown();
+
+    lat_ms.sort_by(f64::total_cmp);
+    let pct = |q: f64| -> f64 {
+        if lat_ms.is_empty() {
+            0.0
+        } else {
+            lat_ms[((lat_ms.len() - 1) as f64 * q).round() as usize]
+        }
+    };
+    let ok = lat_ms.len() as u64;
+    let name = match mode {
+        IngressMode::Reactor => "saturation_reactor",
+        IngressMode::Threaded => "saturation_threaded",
+    };
+    println!(
+        "{name}: {ok} ok, {shed} shed, {errors} errors in {elapsed:.2}s — {:.0} rps, \
+         p95 {:.1}ms",
+        ok as f64 / elapsed,
+        pct(0.95),
+    );
+    Ok(obj([
+        ("scenario", s(name)),
+        ("requests", num((ok + shed + errors) as f64)),
+        ("errors", num(errors as f64)),
+        ("shed_503", num(shed as f64)),
+        ("p50_ms", num(pct(0.50))),
+        ("p95_ms", num(pct(0.95))),
+        ("p99_ms", num(pct(0.99))),
+        ("max_rps", num(ok as f64 / elapsed)),
+    ]))
 }
 
 /// The 2-node cluster scenario of `bench-gateway`: an in-process

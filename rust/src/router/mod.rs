@@ -9,6 +9,13 @@
 //! ingress-update path) preserves the live [`ReplicaHandle`] for every
 //! replica id that survives: in-flight requests hold `Arc`s into the
 //! router, so counters must not reset mid-flight.
+//!
+//! Contention: the replica set lives behind an `Arc`, so the serving hot
+//! path clones a [`RouterSnapshot`] out of the caller's `RwLock` (an
+//! atomic refcount bump) and runs the least-loaded scan with no lock held
+//! at all — reactor handler threads never serialize on routing state.
+//! Handles are shared between the router and its snapshots, so in-flight
+//! accounting stays live either way.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -61,18 +68,64 @@ impl ReplicaHandle {
     }
 }
 
+/// The least-loaded scan + counter updates, shared by the router and its
+/// snapshots — one implementation of the load formula for every path.
+fn pick(replicas: &[Arc<ReplicaHandle>], keep: impl Fn(u64) -> bool) -> Option<Arc<ReplicaHandle>> {
+    let chosen = replicas
+        .iter()
+        .filter(|r| keep(r.id))
+        .min_by(|a, b| {
+            let la = (a.inflight() as f64 + 1.0) / a.weight();
+            let lb = (b.inflight() as f64 + 1.0) / b.weight();
+            la.total_cmp(&lb)
+        })?;
+    chosen.inflight.fetch_add(1, Ordering::Relaxed);
+    chosen.dispatched.fetch_add(1, Ordering::Relaxed);
+    Some(Arc::clone(chosen))
+}
+
+/// A lock-free view of the replica set, cloned out of the owning lock in
+/// O(1) by [`WeightedRouter::snapshot`]. Dispatching through a snapshot
+/// updates the *live* handles (they are shared with the router), so the
+/// in-flight accounting is identical to dispatching through the router —
+/// only the lock hold time changes.
+#[derive(Debug, Clone)]
+pub struct RouterSnapshot {
+    replicas: Arc<Vec<Arc<ReplicaHandle>>>,
+}
+
+impl RouterSnapshot {
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    pub fn dispatch(&self) -> Option<Arc<ReplicaHandle>> {
+        pick(&self.replicas, |_| true)
+    }
+
+    pub fn dispatch_where(&self, keep: impl Fn(u64) -> bool) -> Option<Arc<ReplicaHandle>> {
+        pick(&self.replicas, keep)
+    }
+}
+
 #[derive(Debug, Default)]
 pub struct WeightedRouter {
-    replicas: Vec<Arc<ReplicaHandle>>,
+    replicas: Arc<Vec<Arc<ReplicaHandle>>>,
 }
 
 impl WeightedRouter {
     pub fn new(weights: &[(u64, f64)]) -> WeightedRouter {
         WeightedRouter {
-            replicas: weights
-                .iter()
-                .map(|&(id, weight)| Arc::new(ReplicaHandle::new(id, weight)))
-                .collect(),
+            replicas: Arc::new(
+                weights
+                    .iter()
+                    .map(|&(id, weight)| Arc::new(ReplicaHandle::new(id, weight)))
+                    .collect(),
+            ),
         }
     }
 
@@ -84,29 +137,25 @@ impl WeightedRouter {
         self.replicas.is_empty()
     }
 
+    /// O(1) handle for lock-free dispatch: clone this under the owning
+    /// read lock, drop the lock, then dispatch against the snapshot.
+    pub fn snapshot(&self) -> RouterSnapshot {
+        RouterSnapshot {
+            replicas: Arc::clone(&self.replicas),
+        }
+    }
+
     /// Route one request; returns the chosen replica. Call
     /// [`WeightedRouter::complete`] when the request finishes.
     pub fn dispatch(&self) -> Option<Arc<ReplicaHandle>> {
-        self.dispatch_where(|_| true)
+        pick(&self.replicas, |_| true)
     }
 
     /// [`WeightedRouter::dispatch`] restricted to the replicas `keep`
     /// admits — the retry path's building block (re-dispatch excluding
-    /// nodes that already failed this request). One implementation of the
-    /// load formula and the counter updates, shared by both paths.
+    /// nodes that already failed this request).
     pub fn dispatch_where(&self, keep: impl Fn(u64) -> bool) -> Option<Arc<ReplicaHandle>> {
-        let chosen = self
-            .replicas
-            .iter()
-            .filter(|r| keep(r.id))
-            .min_by(|a, b| {
-                let la = (a.inflight() as f64 + 1.0) / a.weight();
-                let lb = (b.inflight() as f64 + 1.0) / b.weight();
-                la.total_cmp(&lb)
-            })?;
-        chosen.inflight.fetch_add(1, Ordering::Relaxed);
-        chosen.dispatched.fetch_add(1, Ordering::Relaxed);
-        Some(Arc::clone(chosen))
+        pick(&self.replicas, keep)
     }
 
     pub fn complete(&self, handle: &ReplicaHandle) {
@@ -118,10 +167,15 @@ impl WeightedRouter {
     /// and `dispatched` counters — so completions of requests dispatched
     /// before the update still land on the right counter. Duplicate ids in
     /// the new set are ignored after their first occurrence (two handles
-    /// with one id would split the load accounting).
+    /// with one id would split the load accounting). Snapshots taken
+    /// before the update keep the old set (copy-on-write), which is the
+    /// same race a pre-update dispatch always had.
     pub fn set_weights(&mut self, weights: &[(u64, f64)]) {
-        let mut old: BTreeMap<u64, Arc<ReplicaHandle>> =
-            self.replicas.drain(..).map(|r| (r.id, r)).collect();
+        let mut old: BTreeMap<u64, Arc<ReplicaHandle>> = self
+            .replicas
+            .iter()
+            .map(|r| (r.id, Arc::clone(r)))
+            .collect();
         let mut new: Vec<Arc<ReplicaHandle>> = Vec::with_capacity(weights.len());
         for &(id, weight) in weights {
             if new.iter().any(|r| r.id == id) {
@@ -134,7 +188,7 @@ impl WeightedRouter {
                 Arc::new(ReplicaHandle::new(id, weight))
             });
         }
-        self.replicas = new;
+        self.replicas = Arc::new(new);
     }
 
     pub fn replicas(&self) -> &[Arc<ReplicaHandle>] {
@@ -160,10 +214,41 @@ pub struct NodeRouter {
     inner: WeightedRouter,
     /// node id -> stable slot; entries persist across deroutes so a node
     /// that flaps unhealthy/healthy keeps its slot (and its counters,
-    /// while requests still hold its handle)
-    slots: BTreeMap<String, u64>,
-    names: BTreeMap<u64, String>,
+    /// while requests still hold its handle). Behind `Arc`s so a
+    /// [`NodeRouterSnapshot`] is three refcount bumps, not a map clone.
+    slots: Arc<BTreeMap<String, u64>>,
+    names: Arc<BTreeMap<u64, String>>,
     next_slot: u64,
+}
+
+/// Lock-free dispatch view of a [`NodeRouter`] — the coordinator's proxy
+/// loop clones one per attempt under a brief read lock and routes without
+/// serializing against heartbeat-driven router rebuilds.
+#[derive(Debug, Clone)]
+pub struct NodeRouterSnapshot {
+    inner: RouterSnapshot,
+    slots: Arc<BTreeMap<String, u64>>,
+    names: Arc<BTreeMap<u64, String>>,
+}
+
+impl NodeRouterSnapshot {
+    pub fn dispatch(&self) -> Option<(String, Arc<ReplicaHandle>)> {
+        let handle = self.inner.dispatch()?;
+        let name = self.names.get(&handle.id)?.clone();
+        Some((name, handle))
+    }
+
+    pub fn dispatch_excluding(&self, exclude: &[String]) -> Option<(String, Arc<ReplicaHandle>)> {
+        let excluded_slots: Vec<u64> = exclude
+            .iter()
+            .filter_map(|n| self.slots.get(n).copied())
+            .collect();
+        let handle = self
+            .inner
+            .dispatch_where(|id| !excluded_slots.contains(&id))?;
+        let name = self.names.get(&handle.id)?.clone();
+        Some((name, handle))
+    }
 }
 
 impl NodeRouter {
@@ -180,24 +265,42 @@ impl NodeRouter {
         self.inner.is_empty()
     }
 
+    /// O(1) handle for lock-free dispatch (see [`NodeRouterSnapshot`]).
+    pub fn snapshot(&self) -> NodeRouterSnapshot {
+        NodeRouterSnapshot {
+            inner: self.inner.snapshot(),
+            slots: Arc::clone(&self.slots),
+            names: Arc::clone(&self.names),
+        }
+    }
+
     /// Replace the routable node set. Weights are typically the node's
     /// live replica count, so least-loaded dispatch converges to
     /// replica-proportional splits; nodes absent from `nodes` (unhealthy,
     /// departed) stop receiving traffic but keep their slot for a later
     /// return.
     pub fn set_nodes(&mut self, nodes: &[(String, f64)]) {
+        // copy-on-write: outstanding snapshots keep the maps they saw
+        let slots = Arc::make_mut(&mut self.slots);
+        let names = Arc::make_mut(&mut self.names);
+        let mut next_slot = self.next_slot;
         let weights: Vec<(u64, f64)> = nodes
             .iter()
             .map(|(name, weight)| {
-                let slot = *self.slots.entry(name.clone()).or_insert_with(|| {
-                    let s = self.next_slot;
-                    self.next_slot += 1;
-                    self.names.insert(s, name.clone());
-                    s
-                });
+                let slot = match slots.get(name) {
+                    Some(&s) => s,
+                    None => {
+                        let s = next_slot;
+                        next_slot += 1;
+                        slots.insert(name.clone(), s);
+                        names.insert(s, name.clone());
+                        s
+                    }
+                };
                 (slot, *weight)
             })
             .collect();
+        self.next_slot = next_slot;
         self.inner.set_weights(&weights);
     }
 
@@ -383,6 +486,32 @@ mod tests {
         let h = router.dispatch().unwrap();
         router.complete(&h);
         assert_eq!(total_dispatched(&router), before + 1, "...and never rewinds");
+    }
+
+    #[test]
+    fn snapshot_dispatch_is_live_and_survives_reconfigure() {
+        let mut router = WeightedRouter::new(&[(0, 1.0), (1, 1.0)]);
+        let snap = router.snapshot();
+        let h = snap.dispatch().unwrap();
+        // handles are shared: the router sees the snapshot's dispatch
+        let inflight: u64 = router.replicas().iter().map(|r| r.inflight()).sum();
+        assert_eq!(inflight, 1);
+        // reconfigure while the snapshot is out: copy-on-write keeps the
+        // snapshot's set intact (same race a pre-update dispatch had)
+        router.set_weights(&[(7, 1.0)]);
+        assert_eq!(snap.len(), 2, "snapshot kept the pre-update set");
+        assert!(snap.dispatch().is_some());
+        assert_eq!(router.len(), 1);
+        router.complete(&h);
+
+        let mut nr = NodeRouter::new();
+        nr.set_nodes(&[("a".to_string(), 1.0), ("b".to_string(), 1.0)]);
+        let nsnap = nr.snapshot();
+        let (name, nh) = nsnap.dispatch_excluding(&["a".to_string()]).unwrap();
+        assert_eq!(name, "b");
+        assert_eq!(nr.inflight_of("b"), 1, "live counters through the snapshot");
+        nh.complete();
+        assert_eq!(nr.inflight_of("b"), 0);
     }
 
     fn node_router(nodes: &[(&str, f64)]) -> NodeRouter {

@@ -1,0 +1,343 @@
+//! Connection-level e2e tests for the sharded reactor ingress, over raw
+//! sockets against the deterministic sim engine: slow-loris partial
+//! header reads must not occupy handler threads, request pipelining on
+//! one keep-alive connection, a client vanishing mid-SSE-stream must not
+//! destabilize the gateway, and a draining shutdown must answer every
+//! dispatched request (zero transport failures).
+
+use enova::engine::sim::{SimEngine, SimEngineConfig};
+use enova::engine::StreamEngine;
+use enova::gateway::metrics::parse_exposition;
+use enova::gateway::{loadgen, EngineFactory, Gateway, GatewayConfig, IngressMode};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+fn sim_gateway(
+    replicas: usize,
+    max_pending: usize,
+    step_delay_ms: u64,
+    engine_max_tokens: usize,
+) -> Gateway {
+    let factories: Vec<EngineFactory> = (0..replicas)
+        .map(|_| -> EngineFactory {
+            Box::new(move || {
+                Ok(Box::new(SimEngine::new(SimEngineConfig {
+                    max_num_seqs: 8,
+                    max_tokens: engine_max_tokens,
+                    step_delay: Duration::from_millis(step_delay_ms),
+                })) as Box<dyn StreamEngine>)
+            })
+        })
+        .collect();
+    Gateway::start(
+        GatewayConfig {
+            max_pending,
+            max_tokens_default: engine_max_tokens,
+            ingress: IngressMode::Reactor,
+            ..Default::default()
+        },
+        factories,
+    )
+    .expect("gateway start")
+}
+
+/// One HTTP/1.1 response off a buffered raw socket: status, the
+/// Content-Length body (or chunked frames drained to the terminal chunk).
+fn read_one_response(r: &mut BufReader<TcpStream>) -> (u16, String) {
+    let mut status_line = String::new();
+    r.read_line(&mut status_line).expect("status line");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line {status_line:?}"));
+    let mut content_length: Option<usize> = None;
+    let mut chunked = false;
+    loop {
+        let mut line = String::new();
+        r.read_line(&mut line).expect("header line");
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim();
+            if name == "content-length" {
+                content_length = value.parse().ok();
+            } else if name == "transfer-encoding" && value.eq_ignore_ascii_case("chunked") {
+                chunked = true;
+            }
+        }
+    }
+    let mut body = Vec::new();
+    if chunked {
+        loop {
+            let mut size_line = String::new();
+            r.read_line(&mut size_line).expect("chunk size");
+            let size = usize::from_str_radix(size_line.trim(), 16).expect("hex chunk size");
+            if size == 0 {
+                let mut blank = String::new();
+                let _ = r.read_line(&mut blank);
+                break;
+            }
+            let mut chunk = vec![0u8; size + 2];
+            r.read_exact(&mut chunk).expect("chunk body");
+            chunk.truncate(size);
+            body.extend_from_slice(&chunk);
+        }
+    } else if let Some(n) = content_length {
+        body.resize(n, 0);
+        r.read_exact(&mut body).expect("body");
+    }
+    (status, String::from_utf8_lossy(&body).into_owned())
+}
+
+/// A client dribbling its request head a few bytes at a time (slow loris)
+/// must neither be dropped nor pin a handler thread: while it dribbles,
+/// other clients get served at full speed, and once its request finally
+/// completes it is answered normally.
+#[test]
+fn slow_loris_partial_headers_dont_block_serving() {
+    let gw = sim_gateway(1, 64, 0, 8);
+    let addr = gw.addr_string();
+
+    let loris = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let body = "{\"prompt\": \"loris\", \"max_tokens\": 2}";
+            let head = format!(
+                "POST /v1/completions HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+                body.len()
+            );
+            let stream = TcpStream::connect(&addr).unwrap();
+            stream.set_nodelay(true).unwrap();
+            let mut w = &stream;
+            // 3-byte pieces, 20ms apart: the head alone takes ~700ms
+            for piece in head.as_bytes().chunks(3) {
+                w.write_all(piece).unwrap();
+                w.flush().unwrap();
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            w.write_all(body.as_bytes()).unwrap();
+            w.flush().unwrap();
+            let mut r = BufReader::new(stream);
+            read_one_response(&mut r)
+        })
+    };
+
+    // while the loris dribbles, the gateway serves others immediately
+    let t0 = Instant::now();
+    for i in 0..5 {
+        let resp = loadgen::post_json(
+            &addr,
+            "/v1/completions",
+            &format!("{{\"prompt\": \"fast {i}\", \"max_tokens\": 2}}"),
+        )
+        .unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body_str());
+    }
+    assert!(
+        t0.elapsed() < Duration::from_millis(600),
+        "full-speed requests stalled behind a slow-loris connection: {:?}",
+        t0.elapsed()
+    );
+
+    let (status, body) = loris.join().expect("loris thread");
+    assert_eq!(status, 200, "loris answered once complete: {body}");
+    gw.shutdown();
+}
+
+/// Two requests written back-to-back on one keep-alive connection before
+/// reading anything: both must be answered, in order, on that connection.
+#[test]
+fn pipelined_requests_on_one_connection() {
+    let gw = sim_gateway(1, 64, 0, 8);
+    let addr = gw.addr_string();
+
+    let body_a = "{\"prompt\": \"pipeline a\", \"max_tokens\": 2}";
+    let body_b = "{\"prompt\": \"pipeline b\", \"max_tokens\": 3}";
+    let mut wire = String::new();
+    for body in [body_a, body_b] {
+        wire.push_str(&format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ));
+    }
+    let stream = TcpStream::connect(&addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut w = &stream;
+    w.write_all(wire.as_bytes()).unwrap();
+    w.flush().unwrap();
+
+    let mut r = BufReader::new(stream);
+    let (status_a, resp_a) = read_one_response(&mut r);
+    let (status_b, resp_b) = read_one_response(&mut r);
+    assert_eq!(status_a, 200, "{resp_a}");
+    assert_eq!(status_b, 200, "{resp_b}");
+    // responses come back in request order: token budgets tell them apart
+    let tokens = |raw: &str| {
+        enova::util::json::Json::parse(raw)
+            .unwrap_or_else(|e| panic!("non-JSON response {raw:?}: {e}"))
+            .at(&["usage", "completion_tokens"])
+            .and_then(enova::util::json::Json::as_usize)
+    };
+    assert_eq!(tokens(&resp_a), Some(2), "first response answers the first request");
+    assert_eq!(tokens(&resp_b), Some(3), "second response answers the second request");
+    gw.shutdown();
+}
+
+/// A client that vanishes mid-SSE-stream must not wedge the gateway: the
+/// handler notices the dead socket, the connection gauge returns to zero,
+/// and new requests keep being served.
+#[test]
+fn client_disconnect_mid_sse_stream_is_contained() {
+    // slow-ish stream so the disconnect lands mid-flight
+    let gw = sim_gateway(1, 64, 10, 200);
+    let addr = gw.addr_string();
+
+    {
+        let body = "{\"prompt\": \"abandoned\", \"max_tokens\": 200, \"stream\": true}";
+        let stream = TcpStream::connect(&addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        let mut w = &stream;
+        w.write_all(
+            format!(
+                "POST /v1/completions HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        w.flush().unwrap();
+        // read just the head + first bytes of the stream, then vanish
+        let mut first = [0u8; 64];
+        let mut r = &stream;
+        let n = r.read(&mut first).unwrap();
+        assert!(n > 0, "stream started before disconnect");
+        drop(stream);
+    }
+
+    // the gateway keeps serving new work afterwards
+    let resp = loadgen::post_json(
+        &addr,
+        "/v1/completions",
+        "{\"prompt\": \"after disconnect\", \"max_tokens\": 2}",
+    )
+    .unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+
+    // and the abandoned connection is reaped: open connections drain to 0
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let metrics = loadgen::get(&addr, "/metrics").unwrap();
+        let samples = parse_exposition(&metrics.body_str()).unwrap();
+        let open = samples
+            .iter()
+            .find(|s| s.name == "enova_ingress_connections_open")
+            .map(|s| s.value)
+            .unwrap_or(-1.0);
+        // the /metrics connection itself is not kept open by loadgen::get
+        if open == 0.0 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "abandoned SSE connection never reaped, open={open}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    gw.shutdown();
+}
+
+/// Draining shutdown: requests already dispatched when shutdown begins
+/// are all answered with a well-formed response (200 if they finish, 503
+/// with a terminal event if shed) — never a torn connection.
+#[test]
+fn draining_shutdown_answers_every_inflight_request() {
+    // slow engine keeps requests in flight across the shutdown point
+    let gw = sim_gateway(2, 64, 20, 300);
+    let addr = gw.addr_string();
+
+    let mut clients = Vec::new();
+    for i in 0..6 {
+        let addr = addr.clone();
+        let stream = i % 2 == 1;
+        clients.push(std::thread::spawn(move || {
+            let body = format!(
+                "{{\"prompt\": \"drain {i}\", \"max_tokens\": 300, \"stream\": {stream}}}"
+            );
+            loadgen::post_json(&addr, "/v1/completions", &body)
+        }));
+    }
+
+    // wait until the fleet is actually in flight
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let metrics = loadgen::get(&addr, "/metrics").unwrap();
+        let samples = parse_exposition(&metrics.body_str()).unwrap();
+        let inflight = samples
+            .iter()
+            .find(|s| s.name == "enova_gateway_inflight_requests")
+            .map(|s| s.value)
+            .unwrap_or(0.0);
+        if inflight >= 4.0 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "requests not admitted, inflight={inflight}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    gw.shutdown();
+
+    // zero in-flight transport failures: every client got a well-formed
+    // HTTP response — completed (200) or shed with a 503
+    for c in clients {
+        let resp = c
+            .join()
+            .expect("client thread")
+            .expect("well-formed response across draining shutdown");
+        assert!(
+            resp.status == 200 || resp.status == 503,
+            "unexpected status {} across drain",
+            resp.status
+        );
+    }
+}
+
+/// The reactor path advertises itself and its connection accounting on
+/// `/metrics`.
+#[test]
+fn reactor_exports_ingress_gauges() {
+    let gw = sim_gateway(1, 64, 0, 8);
+    let addr = gw.addr_string();
+    let resp = loadgen::post_json(
+        &addr,
+        "/v1/completions",
+        "{\"prompt\": \"gauge\", \"max_tokens\": 2}",
+    )
+    .unwrap();
+    assert_eq!(resp.status, 200);
+
+    let metrics = loadgen::get(&addr, "/metrics").unwrap();
+    let samples = parse_exposition(&metrics.body_str()).unwrap();
+    let find = |name: &str| {
+        samples
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("missing {name}"))
+            .value
+    };
+    assert_eq!(find("enova_ingress_reactor_mode"), 1.0);
+    assert!(find("enova_ingress_connections_accepted_total") >= 2.0);
+    assert!(find("enova_ingress_handler_threads") >= 1.0);
+    gw.shutdown();
+}

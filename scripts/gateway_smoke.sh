@@ -79,4 +79,38 @@ assert full > 0, "no successful trace carried the full lifecycle"
 print(f"traces OK: {full} full-lifecycle traces of {len(traces)} recorded")
 PY
 
-echo "gateway smoke OK; report at $REPORT, traces at $TRACES"
+echo "==> ingress saturation smoke (reactor under a high-concurrency burst)"
+# burst well above the steady-state load: every response must still be
+# 2xx (no 5xx under saturation), and the reactor must keep its resource
+# footprint bounded — connection gauges on /metrics, not one thread per
+# connection
+SAT_REPORT="${SMOKE_SAT_REPORT:-loadgen-saturation${SCENARIO:+-$SCENARIO}.json}"
+"$BIN" loadgen --addr "127.0.0.1:$PORT" --concurrency 32 --requests 8 \
+    --max-tokens 2 --strict --report "$SAT_REPORT"
+
+SAT_SCRAPE=$(mktemp)
+curl -fsS "http://127.0.0.1:$PORT/metrics" > "$SAT_SCRAPE"
+grep -q '^enova_ingress_reactor_mode 1' "$SAT_SCRAPE"
+python3 - "$SAT_SCRAPE" <<'PY'
+import sys
+
+gauges = {}
+for line in open(sys.argv[1]):
+    line = line.strip()
+    if line.startswith("enova_ingress_"):
+        name, value = line.rsplit(None, 1)
+        gauges[name] = float(value)
+accepted = gauges["enova_ingress_connections_accepted_total"]
+open_now = gauges["enova_ingress_connections_open"]
+threads = gauges["enova_ingress_handler_threads"]
+assert accepted >= 16, f"burst barely registered: accepted={accepted}"
+# bounded footprint: the burst is over, so no connection leak beyond the
+# /metrics scrape itself, and the handler pool stays at its configured
+# size instead of scaling with connection count
+assert open_now <= 4, f"connection leak after burst: open={open_now}"
+assert threads <= 64, f"handler pool exceeded its bound: threads={threads}"
+print(f"saturation OK: accepted={accepted:.0f} open={open_now:.0f} handler_threads={threads:.0f}")
+PY
+rm -f "$SAT_SCRAPE"
+
+echo "gateway smoke OK; report at $REPORT, traces at $TRACES, saturation at $SAT_REPORT"
