@@ -4,7 +4,7 @@
 //! traffic on keep-alive connections), promote a replica from the warm
 //! pool at runtime, apply a live `max_num_seqs`/`gpu_memory`
 //! reconfiguration to a running replica, apply an ingress update through
-//! /admin/scale, retire a replica (demoting it back to warm), and scrape
+//! /v1/admin/scale, retire a replica (demoting it back to warm), and scrape
 //! /metrics. Runs against the compiled tiny LM when the build has the
 //! xla-runtime feature and artifacts exist, the deterministic sim engine
 //! otherwise — so this demo works in any environment.
@@ -146,13 +146,13 @@ fn main() -> anyhow::Result<()> {
     // ...reweight through the autoscaler's ingress-update path...
     let resp = loadgen::post_json(
         &addr,
-        "/admin/scale",
+        "/v1/admin/scale",
         &format!(
             "{{\"replicas\": [{{\"id\": 0, \"weight\": 1.0}}, {{\"id\": 1, \"weight\": 0.5}}, \
              {{\"id\": {added}, \"weight\": 2.0}}]}}"
         ),
     )?;
-    println!("POST /admin/scale -> {} {}", resp.status, resp.body_str());
+    println!("POST /v1/admin/scale -> {} {}", resp.status, resp.body_str());
 
     // ...and retire it again: demoted back to a warm standby when the
     // pool is below target, drained-then-joined otherwise

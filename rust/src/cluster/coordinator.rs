@@ -8,7 +8,7 @@
 //!
 //! Three background loops:
 //!
-//! * **heartbeat** — polls every registered node's `/cluster/status`,
+//! * **heartbeat** — polls every registered node's `/v1/admin/status`,
 //!   flips health after consecutive misses, and rebuilds the node router
 //!   (weights ∝ live replicas) on every sweep.
 //! * **supervisor** — the single-node monitor → detect → act loop run
@@ -29,11 +29,16 @@
 use super::metrics::{render_prometheus, ClusterMetrics, NodeSample};
 use super::placement;
 use super::pool::{ChunkFrameScanner, NodePool};
-use super::proto::{NodeAnnounce, NodeStatus};
+use super::proto::{
+    AdminError, AdminNodeScaleResponse, NodeAnnounce, NodeStatus,
+    ScaleDirection as AdminScaleDirection,
+};
 use crate::deployer::NodeInventory;
 use crate::detect::{ScaleDirection, ZscoreDetector};
 use crate::forecast::{replicas_for_cluster_rate, ForecastConfig, Forecaster};
-use crate::gateway::admission::{AdmissionGate, TokenBucket};
+use crate::gateway::admission::{
+    AdmissionGate, SloTier, TenantRegistry, TenantSpec, TokenBucket,
+};
 use crate::gateway::http;
 use crate::gateway::loadgen::{self, read_chunk, read_response_head};
 use crate::gateway::openai;
@@ -125,6 +130,11 @@ pub struct CoordinatorConfig {
     pub policy: ClusterPolicy,
     /// request tracing: sample rate, slow-trace SLO, ring capacity
     pub trace: TraceSettings,
+    /// tenant registry specs; empty = the built-in mixture tenants. The
+    /// coordinator resolves tenants only for SLO-tier proxy steering —
+    /// per-tenant admission and the cost ledger live on the nodes, which
+    /// see the forwarded `x-enova-tenant` / `Authorization` headers.
+    pub tenants: Vec<TenantSpec>,
 }
 
 impl Default for CoordinatorConfig {
@@ -144,6 +154,7 @@ impl Default for CoordinatorConfig {
             dispatch_attempts: 3,
             policy: ClusterPolicy::default(),
             trace: TraceSettings::default(),
+            tenants: Vec::new(),
         }
     }
 }
@@ -202,6 +213,8 @@ struct CoordinatorState {
     cfg: CoordinatorConfig,
     nodes: RwLock<BTreeMap<String, NodeEntry>>,
     router: RwLock<crate::router::NodeRouter>,
+    /// tenant identities, for SLO-tier-aware proxy steering
+    tenants: Arc<TenantRegistry>,
     gate: Arc<AdmissionGate>,
     bucket: Option<Mutex<TokenBucket>>,
     /// idle keep-alive connections to nodes, reused across proxy attempts
@@ -232,9 +245,15 @@ impl Coordinator {
         listener.set_nonblocking(true)?;
 
         let supervisor_enabled = cfg.policy.detector_scaling || cfg.policy.forecast.is_some();
+        let tenants = if cfg.tenants.is_empty() {
+            TenantRegistry::with_defaults()
+        } else {
+            TenantRegistry::new(cfg.tenants.clone())
+        };
         let state = Arc::new(CoordinatorState {
             nodes: RwLock::new(BTreeMap::new()),
             router: RwLock::new(crate::router::NodeRouter::new()),
+            tenants,
             gate: AdmissionGate::new(cfg.max_pending),
             bucket: (cfg.rate_limit > 0.0)
                 .then(|| Mutex::new(TokenBucket::new(cfg.rate_limit, cfg.rate_burst))),
@@ -499,6 +518,7 @@ fn node_samples(state: &CoordinatorState) -> Vec<NodeSample> {
                 .unwrap_or(e.announce.gpu_memory_total),
             arrival_rps: e.status.as_ref().map(|s| s.arrival_rps).unwrap_or(0.0),
             queue_wait: e.status.as_ref().map(|s| s.queue_wait).unwrap_or(0.0),
+            batch_rps: e.status.as_ref().map(|s| s.batch_rps).unwrap_or(0.0),
             inflight: router.inflight_of(&e.announce.node_id),
         })
         .collect()
@@ -624,6 +644,13 @@ fn route(
     match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/v1/completions" | "/v1/chat/completions") => serve_proxy(req, stream, state),
         ("POST", "/cluster/join") => cluster_join(req, stream, state),
+        // the versioned control API, served cluster-scoped by the
+        // coordinator (nodes serve the same paths replica-scoped);
+        // `GET /cluster/status` stays as a deprecated alias
+        ("GET", "/v1/admin/status" | "/cluster/status") => admin_status(req, stream, state),
+        ("POST", "/v1/admin/scale-up") => admin_scale_node(req, stream, state, true),
+        ("POST", "/v1/admin/scale-down") => admin_scale_node(req, stream, state, false),
+        ("POST", "/v1/admin/scale") => admin_scale_weights(req, stream, state),
         ("GET", "/cluster/nodes") => {
             let rows: Vec<String> = node_samples(state)
                 .iter()
@@ -679,7 +706,9 @@ fn route(
             finish(req, stream, state, "/ready", http::Response::json(status, body))
         }
         (_, "/v1/completions" | "/v1/chat/completions" | "/cluster/join" | "/cluster/nodes"
-        | "/metrics" | "/healthz" | "/ready" | "/debug/traces" | "/debug/decisions") => {
+        | "/cluster/status" | "/v1/admin/status" | "/v1/admin/scale" | "/v1/admin/scale-up"
+        | "/v1/admin/scale-down" | "/metrics" | "/healthz" | "/ready" | "/debug/traces"
+        | "/debug/decisions") => {
             let body = openai::to_wire(&openai::error_body(
                 "invalid_request_error",
                 &format!("method {} not allowed on {}", req.method, req.path),
@@ -762,6 +791,172 @@ fn cluster_join(
     finish(req, stream, state, "/cluster/join", http::Response::json(200, body))
 }
 
+/// The coordinator's cluster-scoped [`NodeStatus`]: the same wire shape a
+/// node answers, aggregated over the healthy fleet — so one client can
+/// poll `GET /v1/admin/status` against any role and parse one type.
+fn cluster_status_body(state: &CoordinatorState) -> NodeStatus {
+    let samples = node_samples(state);
+    let mut status = NodeStatus {
+        node_id: "coordinator".to_string(),
+        live_replicas: 0,
+        warm_replicas: 0,
+        ready: false,
+        gpu_memory_total: 0.0,
+        gpu_memory_free: 0.0,
+        frame: None,
+        arrival_rps: 0.0,
+        queue_wait: 0.0,
+        batch_rps: 0.0,
+    };
+    let mut wait_weighted = 0.0f64;
+    for n in samples.iter().filter(|n| n.healthy) {
+        status.live_replicas += n.live_replicas;
+        status.warm_replicas += n.warm_replicas;
+        status.ready |= n.ready && n.live_replicas > 0;
+        status.gpu_memory_total += n.gpu_memory_total;
+        status.gpu_memory_free += n.gpu_memory_free;
+        status.arrival_rps += n.arrival_rps;
+        status.batch_rps += n.batch_rps;
+        wait_weighted += n.queue_wait * n.live_replicas as f64;
+    }
+    if status.live_replicas > 0 {
+        status.queue_wait = wait_weighted / status.live_replicas as f64;
+    }
+    status
+}
+
+/// `GET /v1/admin/status` (and the deprecated `/cluster/status` alias).
+fn admin_status(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &Arc<CoordinatorState>,
+) -> std::io::Result<()> {
+    let endpoint = req.path.clone();
+    let body = cluster_status_body(state).to_json().to_string_compact();
+    finish(req, stream, state, &endpoint, http::Response::json(200, body))
+}
+
+/// `POST /v1/admin/scale-{up,down}` at the cluster level: one placement
+/// (or drain) through the same path the supervisor uses, with reason
+/// `admin`. The supervisor's target follows the manual change so backfill
+/// does not immediately undo an admin drain.
+fn admin_scale_node(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &Arc<CoordinatorState>,
+    up: bool,
+) -> std::io::Result<()> {
+    let endpoint = req.path.clone();
+    let admin_err = |status: u16, err: AdminError| {
+        http::Response::json(status, err.to_json().to_string_compact())
+    };
+    let live: usize = node_samples(state)
+        .iter()
+        .filter(|n| n.healthy)
+        .map(|n| n.live_replicas)
+        .sum();
+    let policy = &state.cfg.policy;
+    if up && live >= policy.max_replicas {
+        let err = AdminError::new("cluster_full", "cluster is at its replica ceiling")
+            .with_detail("live_replicas", &live.to_string())
+            .with_detail("max_replicas", &policy.max_replicas.to_string());
+        return finish(req, stream, state, &endpoint, admin_err(409, err));
+    }
+    if !up && live <= policy.min_replicas {
+        let err = AdminError::new("cluster_at_floor", "cluster is at its replica floor")
+            .with_detail("live_replicas", &live.to_string())
+            .with_detail("min_replicas", &policy.min_replicas.to_string());
+        return finish(req, stream, state, &endpoint, admin_err(409, err));
+    }
+    let result = if up {
+        scale_up(state, "admin")
+    } else {
+        scale_down(state, "admin")
+    };
+    match result {
+        Ok(event) => {
+            let live_now = if up { live + 1 } else { live.saturating_sub(1) };
+            state.target_replicas.store(
+                live_now.clamp(policy.min_replicas, policy.max_replicas),
+                Ordering::Release,
+            );
+            let body = AdminNodeScaleResponse {
+                node_id: event.node_id,
+                direction: if up {
+                    AdminScaleDirection::Up
+                } else {
+                    AdminScaleDirection::Down
+                },
+                replica_id: event.replica_id,
+                live_replicas: live_now,
+            }
+            .to_json()
+            .to_string_compact();
+            finish(req, stream, state, &endpoint, http::Response::json(200, body))
+        }
+        Err(e) => {
+            let code = if up { "placement_failed" } else { "drain_failed" };
+            finish(
+                req,
+                stream,
+                state,
+                &endpoint,
+                admin_err(409, AdminError::new(code, &format!("{e:#}"))),
+            )
+        }
+    }
+}
+
+/// `POST /v1/admin/scale` — replica router weights are a per-process
+/// concern; the coordinator routes *nodes*, so it answers a structured
+/// error pointing at the right target instead of a bare 404.
+fn admin_scale_weights(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &Arc<CoordinatorState>,
+) -> std::io::Result<()> {
+    let err = AdminError::new(
+        "unsupported",
+        "replica weights are per-process; POST /v1/admin/scale to a node's gateway",
+    )
+    .with_detail("role", "coordinator");
+    finish(
+        req,
+        stream,
+        state,
+        "/v1/admin/scale",
+        http::Response::json(400, err.to_json().to_string_compact()),
+    )
+}
+
+/// Per-node batch-traffic share from the latest heartbeat statuses, and
+/// the SLO tier the next placement should serve: batch when the fleet's
+/// mixture is batch-dominated (consolidate throughput traffic), latency
+/// otherwise (new capacity lands away from batch-heavy nodes, where the
+/// interactive tenants route).
+fn placement_context(state: &CoordinatorState) -> (BTreeMap<String, f64>, SloTier) {
+    let nodes = state.nodes.read().unwrap();
+    let mut shares = BTreeMap::new();
+    let (mut total, mut batch) = (0.0f64, 0.0f64);
+    for e in nodes.values().filter(|e| e.healthy) {
+        let Some(s) = e.status.as_ref() else { continue };
+        total += s.arrival_rps;
+        batch += s.batch_rps;
+        if s.arrival_rps > 1e-9 {
+            shares.insert(
+                e.announce.node_id.clone(),
+                (s.batch_rps / s.arrival_rps).clamp(0.0, 1.0),
+            );
+        }
+    }
+    let tier = if total > 1e-9 && batch / total > placement::BATCH_HEAVY_SHARE {
+        SloTier::Batch
+    } else {
+        SloTier::Latency
+    };
+    (shares, tier)
+}
+
 /// What one proxy attempt produced.
 enum Attempt {
     /// a response (any status) was fully delivered to the client
@@ -801,6 +996,50 @@ fn serve_proxy(
         Err(e) => return finish(req, stream, state, &endpoint, bad(&format!("invalid JSON: {e}"))),
     };
     let stream_mode = json.get("stream").and_then(Json::as_bool).unwrap_or(false);
+
+    // tenant identity, resolved exactly the way a node's gateway resolves
+    // it (header > API key > body `user` hint). The coordinator uses only
+    // the SLO tier — to steer latency traffic away from batch-heavy nodes
+    // — while per-tenant admission and the cost ledger stay node-side,
+    // fed by the forwarded identity headers below.
+    let tenant = state.tenants.resolve(
+        req.header("x-enova-tenant"),
+        req.header("authorization")
+            .map(str::trim)
+            .map(|v| v.strip_prefix("Bearer ").unwrap_or(v)),
+        json.get("user").and_then(Json::as_str),
+    );
+    let mut forward_head = String::new();
+    if let Some(v) = req.header("x-enova-tenant") {
+        forward_head.push_str(&format!("x-enova-tenant: {v}\r\n"));
+    }
+    if let Some(v) = req.header("authorization") {
+        forward_head.push_str(&format!("Authorization: {v}\r\n"));
+    }
+    // latency-tier steering: prefer nodes whose traffic is not
+    // batch-dominated. A preference, never a filter — when only
+    // batch-heavy nodes have capacity they still serve the request.
+    let prefer: Vec<String> = if tenant.tier() == SloTier::Latency {
+        state
+            .nodes
+            .read()
+            .unwrap()
+            .values()
+            .filter(|e| e.healthy)
+            .filter(|e| {
+                e.status
+                    .as_ref()
+                    .map(|s| {
+                        s.arrival_rps <= 1e-9
+                            || s.batch_rps / s.arrival_rps <= placement::BATCH_HEAVY_SHARE
+                    })
+                    .unwrap_or(true)
+            })
+            .map(|e| e.announce.node_id.clone())
+            .collect()
+    } else {
+        Vec::new()
+    };
 
     // trace context: adopt an inbound `traceparent` (the coordinator is
     // usually the mint point, but a fronting proxy may own the ID) or
@@ -856,7 +1095,9 @@ fn serve_proxy(
         // snapshot clone, then scan without serializing against
         // heartbeat-driven rebuilds
         let routable = state.router.read().unwrap().snapshot();
-        let picked = if excluded.is_empty() {
+        let picked = if !prefer.is_empty() {
+            routable.dispatch_preferring(&prefer, &excluded)
+        } else if excluded.is_empty() {
             routable.dispatch()
         } else {
             routable.dispatch_excluding(&excluded)
@@ -889,6 +1130,7 @@ fn serve_proxy(
             &body,
             stream_mode,
             &attempt_ctx.to_traceparent(),
+            &forward_head,
             stream,
         );
         handle.complete();
@@ -1023,6 +1265,10 @@ struct ProxyHop<'a> {
     body: &'a str,
     stream_mode: bool,
     traceparent: &'a str,
+    /// pre-rendered `header: value\r\n` lines forwarded verbatim (tenant
+    /// identity: `x-enova-tenant`, `Authorization`); empty when the client
+    /// sent neither
+    extra_head: &'a str,
 }
 
 /// Run one exchange against `addr`, relaying the outcome to the client
@@ -1043,6 +1289,7 @@ fn proxy_attempt(
     body: &str,
     stream_mode: bool,
     traceparent: &str,
+    extra_head: &str,
     client: &mut TcpStream,
 ) -> Attempt {
     let hop = ProxyHop {
@@ -1051,6 +1298,7 @@ fn proxy_attempt(
         body,
         stream_mode,
         traceparent,
+        extra_head,
     };
     let mut force_fresh = false;
     loop {
@@ -1102,11 +1350,12 @@ fn proxy_once(
         // connection after answering and the pool reuses it
         let head = format!(
             "POST {} HTTP/1.1\r\nHost: {}\r\nAccept: */*\r\n\
-             traceparent: {}\r\n\
+             traceparent: {}\r\n{}\
              Content-Type: application/json\r\nContent-Length: {}\r\n\r\n",
             hop.path,
             hop.addr,
             hop.traceparent,
+            hop.extra_head,
             hop.body.len()
         );
         if w.write_all(head.as_bytes())
@@ -1318,7 +1567,7 @@ fn read_framed_body<R: BufRead>(
     Ok(buf)
 }
 
-/// Poll every registered node's `/cluster/status`, flip health on
+/// Poll every registered node's `/v1/admin/status`, flip health on
 /// consecutive misses, and rebuild the router each sweep.
 fn heartbeat_loop(state: &Arc<CoordinatorState>) {
     loop {
@@ -1343,7 +1592,7 @@ fn heartbeat_loop(state: &Arc<CoordinatorState>) {
                         let polled = loadgen::request(
                             &addr,
                             "GET",
-                            "/cluster/status",
+                            "/v1/admin/status",
                             None,
                             HEARTBEAT_RPC_TIMEOUT,
                         )
@@ -1425,7 +1674,12 @@ fn inventories(state: &CoordinatorState) -> Vec<NodeInventory> {
 /// the updated fill.
 fn scale_up(state: &Arc<CoordinatorState>, reason: &'static str) -> Result<PlacementEvent> {
     let invs = inventories(state);
-    let chosen = placement::place_replica(&invs)
+    // tier-aware bin packing: the demand tier and per-node batch shares
+    // come from the latest heartbeat statuses, so latency-driven growth
+    // lands away from batch-heavy nodes (and batch-driven growth
+    // consolidates onto them)
+    let (batch_share, tier) = placement_context(state);
+    let chosen = placement::place_replica_tiered(&invs, &batch_share, tier)
         .ok_or_else(|| anyhow!("no node has room for another replica"))?
         .node_id
         .clone();
@@ -1436,7 +1690,7 @@ fn scale_up(state: &Arc<CoordinatorState>, reason: &'static str) -> Result<Place
         .get(&chosen)
         .map(|e| e.announce.addr.clone())
         .ok_or_else(|| anyhow!("node {chosen} vanished mid-placement"))?;
-    let resp = loadgen::request(&addr, "POST", "/cluster/scale-up", Some("{}"), SCALE_RPC_TIMEOUT)
+    let resp = loadgen::request(&addr, "POST", "/v1/admin/scale-up", Some("{}"), SCALE_RPC_TIMEOUT)
         .with_context(|| format!("scale-up RPC to {chosen}"))?;
     if !(200..300).contains(&resp.status) {
         bail!("node {chosen} refused scale-up with {}: {}", resp.status, resp.body_str());
@@ -1520,7 +1774,7 @@ fn scale_down(state: &Arc<CoordinatorState>, reason: &'static str) -> Result<Pla
         .map(|e| e.announce.addr.clone())
         .ok_or_else(|| anyhow!("node {chosen} vanished mid-drain"))?;
     let resp =
-        loadgen::request(&addr, "POST", "/cluster/scale-down", Some("{}"), SCALE_RPC_TIMEOUT)
+        loadgen::request(&addr, "POST", "/v1/admin/scale-down", Some("{}"), SCALE_RPC_TIMEOUT)
             .with_context(|| format!("scale-down RPC to {chosen}"))?;
     if !(200..300).contains(&resp.status) {
         bail!("node {chosen} refused scale-down with {}: {}", resp.status, resp.body_str());

@@ -127,6 +127,8 @@ pub struct NodeSample {
     pub gpu_memory_free: f64,
     pub arrival_rps: f64,
     pub queue_wait: f64,
+    /// share of `arrival_rps` from batch-tier tenants (absolute req/s)
+    pub batch_rps: f64,
     /// coordinator-side in-flight proxied requests on this node
     pub inflight: u64,
 }
@@ -205,6 +207,11 @@ pub fn render_prometheus(
             "enova_cluster_node_queue_wait_seconds",
             "Mean worker-queue wait the node reports.",
             |n: &NodeSample| n.queue_wait,
+        ),
+        (
+            "enova_cluster_node_batch_rps",
+            "Arrival rate from batch-tier tenants on the node (requests/second).",
+            |n: &NodeSample| n.batch_rps,
         ),
         (
             "enova_cluster_node_inflight_requests",
@@ -439,6 +446,7 @@ mod tests {
             gpu_memory_free: 24.0 - live as f64 * 8.0,
             arrival_rps: 3.5,
             queue_wait: 0.01,
+            batch_rps: 1.5,
             inflight: 2,
         }
     }
@@ -498,6 +506,10 @@ mod tests {
         assert_eq!(
             find("enova_cluster_node_gpu_memory_free", Some(("node", "node-a"))),
             8.0
+        );
+        assert_eq!(
+            find("enova_cluster_node_batch_rps", Some(("node", "node-a"))),
+            1.5
         );
         // placement counter: recorded reasons count, unfired reasons are 0
         assert_eq!(

@@ -27,14 +27,18 @@
 //!   memory total, per-replica footprint, replica ceiling, per-replica
 //!   service rate). Re-announced periodically, so a restarted coordinator
 //!   re-learns its fleet without operator help.
-//! * coordinator → node `GET /cluster/status` — a [`proto::NodeStatus`]
+//! * coordinator → node `GET /v1/admin/status` — a [`proto::NodeStatus`]
 //!   heartbeat: live/warm replica counts, free GPU memory and the node's
 //!   aggregated Table II frame + arrival rate, the rows the cluster-wide
-//!   supervisor scores.
-//! * coordinator → node `POST /cluster/scale-up` / `POST
-//!   /cluster/scale-down` — the placement decision's actuation: promote a
-//!   warm standby (or cold-spawn) on *that* node, or drain-then-retire
-//!   its newest replica.
+//!   supervisor scores (deprecated alias: `GET /cluster/status`).
+//! * coordinator → node `POST /v1/admin/scale-up` / `POST
+//!   /v1/admin/scale-down` — the placement decision's actuation: promote
+//!   a warm standby (or cold-spawn) on *that* node, or drain-then-retire
+//!   its newest replica (deprecated aliases under `/cluster/`).
+//!
+//! All control exchanges speak the typed request/response structs and
+//! structured `{code, message, details}` errors of [`proto`], under the
+//! versioned [`proto::ADMIN_API_PREFIX`].
 //!
 //! Placement policy lives in [`placement`] (pure math over
 //! [`crate::deployer::NodeInventory`]): scale-ups bin-pack by free
@@ -61,9 +65,10 @@ pub mod pool;
 pub mod proto;
 
 /// What a gateway in node mode knows about itself — set via
-/// [`crate::gateway::GatewayConfig::node`], it turns on the
-/// `/cluster/status` and `/cluster/scale-{up,down}` control endpoints and
-/// is the capacity advertisement sent to the coordinator on join.
+/// [`crate::gateway::GatewayConfig::node`], it turns on the node-only
+/// `/v1/admin/{status,scale-up,scale-down}` control endpoints (and their
+/// deprecated `/cluster/*` aliases) and is the capacity advertisement
+/// sent to the coordinator on join.
 #[derive(Debug, Clone)]
 pub struct NodeIdentity {
     /// operator-chosen stable name (`node-a`); label value on the

@@ -19,15 +19,50 @@
 //! coordinator's decision to make by *removing* the node, not this
 //! function's.
 
+use std::collections::BTreeMap;
+
 use crate::deployer::NodeInventory;
+use crate::gateway::admission::SloTier;
 
 /// The node that should receive the next replica, or `None` when no node
 /// has room (cluster full — the caller should hold the scale-up and keep
 /// observing, exactly like the single-node supervisor at `max_replicas`).
 pub fn place_replica(nodes: &[NodeInventory]) -> Option<&NodeInventory> {
+    place_replica_tiered(nodes, &BTreeMap::new(), SloTier::Standard)
+}
+
+/// A node whose arrival traffic is more than half batch-tier is
+/// "batch-heavy" for anti-affinity purposes (placement here, and the
+/// coordinator's latency-tier proxy steering).
+pub const BATCH_HEAVY_SHARE: f64 = 0.5;
+
+/// Tier-aware scale-up (the SLO-tier placement constraint): a placement
+/// driven by **latency**-tier demand avoids batch-heavy nodes (latency
+/// tenants get anti-affinity from batch tenants' replicas), a placement
+/// driven by **batch** demand prefers them (the two classes consolidate
+/// apart instead of interleaving), and **standard** keeps the plain
+/// spread-by-default rule. `batch_share` maps node id → the fraction
+/// [0, 1] of that node's arrival rate coming from batch-tier tenants
+/// (from [`crate::cluster::proto::NodeStatus`]'s `batch_rps /
+/// arrival_rps`); missing nodes count as batch-free. The tier preference
+/// is a coarse bucket, never a hard filter — when only a "wrong" node has
+/// room, it is still used: capacity beats affinity.
+pub fn place_replica_tiered<'a>(
+    nodes: &'a [NodeInventory],
+    batch_share: &BTreeMap<String, f64>,
+    tier: SloTier,
+) -> Option<&'a NodeInventory> {
+    let heavy = |n: &NodeInventory| {
+        batch_share.get(&n.node_id).copied().unwrap_or(0.0) > BATCH_HEAVY_SHARE
+    };
     nodes.iter().filter(|n| n.has_room()).min_by(|a, b| {
-        a.live_replicas
-            .cmp(&b.live_replicas)
+        let affinity = match tier {
+            SloTier::Latency => heavy(a).cmp(&heavy(b)), // false < true: avoid heavy
+            SloTier::Batch => heavy(b).cmp(&heavy(a)),   // prefer heavy
+            SloTier::Standard => std::cmp::Ordering::Equal,
+        };
+        affinity
+            .then(a.live_replicas.cmp(&b.live_replicas))
             .then(b.gpu_memory_free.total_cmp(&a.gpu_memory_free))
             .then(a.node_id.cmp(&b.node_id))
     })
@@ -111,6 +146,47 @@ mod tests {
         let tight = node("node-b", 2, 4, 20.0, 8.0); // free = 4 < 8
         let roomy = node("node-c", 2, 4, 24.0, 8.0); // free = 8
         assert_eq!(place_replica(&[tight, roomy]).unwrap().node_id, "node-c");
+    }
+
+    #[test]
+    fn latency_placement_avoids_batch_heavy_nodes() {
+        // node-a is emptier but 80% batch traffic; a latency-driven
+        // placement pays the spread penalty to stay away from it
+        let nodes = vec![node("node-a", 1, 4, 32.0, 8.0), node("node-b", 2, 4, 32.0, 8.0)];
+        let share = BTreeMap::from([("node-a".to_string(), 0.8)]);
+        assert_eq!(
+            place_replica_tiered(&nodes, &share, SloTier::Latency).unwrap().node_id,
+            "node-b"
+        );
+        // standard ignores the shares entirely
+        assert_eq!(
+            place_replica_tiered(&nodes, &share, SloTier::Standard).unwrap().node_id,
+            "node-a"
+        );
+        // batch consolidates onto the batch-heavy node
+        assert_eq!(
+            place_replica_tiered(&nodes, &share, SloTier::Batch).unwrap().node_id,
+            "node-a"
+        );
+    }
+
+    #[test]
+    fn affinity_is_a_preference_not_a_filter() {
+        // the only node with room is batch-heavy: a latency placement
+        // still lands there — capacity beats affinity
+        let nodes = vec![node("node-a", 2, 4, 32.0, 8.0), node("node-b", 3, 3, 24.0, 8.0)];
+        let share = BTreeMap::from([("node-a".to_string(), 1.0)]);
+        assert_eq!(
+            place_replica_tiered(&nodes, &share, SloTier::Latency).unwrap().node_id,
+            "node-a"
+        );
+        // nodes absent from the share map count as batch-free
+        let nodes = vec![node("node-a", 1, 4, 32.0, 8.0), node("node-b", 1, 4, 32.0, 8.0)];
+        let share = BTreeMap::from([("node-b".to_string(), 0.9)]);
+        assert_eq!(
+            place_replica_tiered(&nodes, &share, SloTier::Latency).unwrap().node_id,
+            "node-a"
+        );
     }
 
     #[test]

@@ -96,6 +96,11 @@ pub struct NodeStatus {
     pub arrival_rps: f64,
     /// mean worker-queue wait across live replicas (seconds)
     pub queue_wait: f64,
+    /// share of `arrival_rps` coming from batch-tier tenants; the
+    /// coordinator's tier-aware placement uses it to keep latency tenants
+    /// away from batch-heavy nodes. Optional on the wire (version skew:
+    /// an older node simply reports 0.0).
+    pub batch_rps: f64,
 }
 
 impl NodeStatus {
@@ -109,6 +114,7 @@ impl NodeStatus {
             ("gpu_memory_free", num(self.gpu_memory_free)),
             ("arrival_rps", num(self.arrival_rps)),
             ("queue_wait", num(self.queue_wait)),
+            ("batch_rps", num(self.batch_rps)),
         ]);
         if let (Json::Obj(m), Some(frame)) = (&mut j, &self.frame) {
             m.insert("frame".to_string(), arr_f64(&frame.to_array()));
@@ -152,6 +158,268 @@ impl NodeStatus {
             frame,
             arrival_rps: f("arrival_rps").unwrap_or(0.0).max(0.0),
             queue_wait: f("queue_wait").unwrap_or(0.0).max(0.0),
+            batch_rps: f("batch_rps").unwrap_or(0.0).max(0.0),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The versioned `/v1/admin/*` control API.
+//
+// Gateway, node, and coordinator all serve the same four operations —
+// `GET /v1/admin/status`, `POST /v1/admin/scale` (router weights),
+// `POST /v1/admin/scale-up`, `POST /v1/admin/scale-down` — with typed JSON
+// requests/responses and structured `{code, message, details}` error
+// bodies. The pre-v1 paths (`/admin/scale`, `/cluster/status`,
+// `/cluster/scale-{up,down}`) remain as thin deprecated aliases for one
+// release.
+// ---------------------------------------------------------------------------
+
+/// Path prefix of the unified control API.
+pub const ADMIN_API_PREFIX: &str = "/v1/admin";
+
+/// Structured error body of every `/v1/admin/*` failure:
+/// `{"code": "...", "message": "...", "details": {...}}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdminError {
+    /// stable machine-readable code, e.g. `invalid_request`, `node_full`
+    pub code: String,
+    /// human-readable explanation
+    pub message: String,
+    /// optional string key/value context, e.g. the offending replica id
+    pub details: Vec<(String, String)>,
+}
+
+impl AdminError {
+    pub fn new(code: &str, message: &str) -> AdminError {
+        AdminError {
+            code: code.to_string(),
+            message: message.to_string(),
+            details: Vec::new(),
+        }
+    }
+
+    pub fn with_detail(mut self, key: &str, value: &str) -> AdminError {
+        self.details.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        let details = Json::Obj(
+            self.details
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                .collect(),
+        );
+        obj([
+            ("code", s(&self.code)),
+            ("message", s(&self.message)),
+            ("details", details),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<AdminError, String> {
+        let code = j
+            .get("code")
+            .and_then(Json::as_str)
+            .ok_or("admin error needs a string \"code\"")?
+            .to_string();
+        let message = j
+            .get("message")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string();
+        let mut details = Vec::new();
+        if let Some(Json::Obj(m)) = j.get("details") {
+            for (k, v) in m {
+                if let Some(v) = v.as_str() {
+                    details.push((k.clone(), v.to_string()));
+                }
+            }
+        }
+        Ok(AdminError {
+            code,
+            message,
+            details,
+        })
+    }
+}
+
+/// One router weight entry in a scale request/response.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplicaWeight {
+    pub id: u64,
+    pub weight: f64,
+}
+
+/// `POST /v1/admin/scale` body: the full desired router weight set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdminScaleRequest {
+    pub replicas: Vec<ReplicaWeight>,
+}
+
+impl AdminScaleRequest {
+    pub fn to_json(&self) -> Json {
+        let entries = self
+            .replicas
+            .iter()
+            .map(|r| obj([("id", num(r.id as f64)), ("weight", num(r.weight))]))
+            .collect();
+        obj([("replicas", Json::Arr(entries))])
+    }
+
+    /// Parse and validate. Errors are ready-to-serve [`AdminError`]s with
+    /// code `invalid_request` and the offending entry in `details`.
+    pub fn from_json(j: &Json) -> Result<AdminScaleRequest, AdminError> {
+        let bad = |msg: &str| AdminError::new("invalid_request", msg);
+        let entries = j
+            .get("replicas")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("body must be {\"replicas\": [{\"id\": N, \"weight\": W}, ...]}"))?;
+        if entries.is_empty() {
+            return Err(bad("\"replicas\" must not be empty"));
+        }
+        let mut replicas: Vec<ReplicaWeight> = Vec::with_capacity(entries.len());
+        for e in entries {
+            let id = e
+                .get("id")
+                .and_then(Json::as_f64)
+                .filter(|v| v.is_finite() && *v >= 0.0 && v.fract() == 0.0)
+                .ok_or_else(|| bad("every entry needs a non-negative integer \"id\""))?
+                as u64;
+            let weight = e
+                .get("weight")
+                .and_then(Json::as_f64)
+                .filter(|w| w.is_finite() && *w > 0.0)
+                .ok_or_else(|| {
+                    bad("every entry needs a positive finite \"weight\"")
+                        .with_detail("id", &id.to_string())
+                })?;
+            if replicas.iter().any(|r| r.id == id) {
+                return Err(bad("duplicate replica id").with_detail("id", &id.to_string()));
+            }
+            replicas.push(ReplicaWeight { id, weight });
+        }
+        Ok(AdminScaleRequest { replicas })
+    }
+}
+
+/// `POST /v1/admin/scale` success body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdminScaleResponse {
+    pub applied: Vec<ReplicaWeight>,
+    pub routable_replicas: usize,
+}
+
+impl AdminScaleResponse {
+    pub fn to_json(&self) -> Json {
+        obj([
+            (
+                "applied",
+                Json::Arr(
+                    self.applied
+                        .iter()
+                        .map(|r| obj([("id", num(r.id as f64)), ("weight", num(r.weight))]))
+                        .collect(),
+                ),
+            ),
+            ("routable_replicas", num(self.routable_replicas as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<AdminScaleResponse, String> {
+        let applied = j
+            .get("applied")
+            .and_then(Json::as_arr)
+            .ok_or("scale response needs an array \"applied\"")?
+            .iter()
+            .map(|e| {
+                let id = e
+                    .get("id")
+                    .and_then(Json::as_usize)
+                    .ok_or("applied entries need an integer \"id\"")? as u64;
+                let weight = e
+                    .get("weight")
+                    .and_then(Json::as_f64)
+                    .ok_or("applied entries need a numeric \"weight\"")?;
+                Ok(ReplicaWeight { id, weight })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(AdminScaleResponse {
+            applied,
+            routable_replicas: j
+                .get("routable_replicas")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+        })
+    }
+}
+
+/// Direction of a node replica-count change.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDirection {
+    Up,
+    Down,
+}
+
+impl ScaleDirection {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ScaleDirection::Up => "up",
+            ScaleDirection::Down => "down",
+        }
+    }
+}
+
+/// `POST /v1/admin/scale-{up,down}` success body. For wire compatibility
+/// with the pre-v1 endpoints the JSON also carries the legacy field name
+/// (`replica_id` for up, `retired` for down).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdminNodeScaleResponse {
+    pub node_id: String,
+    pub direction: ScaleDirection,
+    /// the replica added (up) or retired (down)
+    pub replica_id: u64,
+    pub live_replicas: usize,
+}
+
+impl AdminNodeScaleResponse {
+    pub fn to_json(&self) -> Json {
+        let legacy_key = match self.direction {
+            ScaleDirection::Up => "replica_id",
+            ScaleDirection::Down => "retired",
+        };
+        obj([
+            ("node_id", s(&self.node_id)),
+            ("action", s(self.direction.as_str())),
+            (legacy_key, num(self.replica_id as f64)),
+            ("live_replicas", num(self.live_replicas as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<AdminNodeScaleResponse, String> {
+        let node_id = j
+            .get("node_id")
+            .and_then(Json::as_str)
+            .ok_or("scale response needs a string \"node_id\"")?
+            .to_string();
+        let (direction, replica_id) = if let Some(id) =
+            j.get("retired").and_then(Json::as_usize)
+        {
+            (ScaleDirection::Down, id as u64)
+        } else if let Some(id) = j.get("replica_id").and_then(Json::as_usize) {
+            (ScaleDirection::Up, id as u64)
+        } else {
+            return Err("scale response needs \"replica_id\" or \"retired\"".into());
+        };
+        Ok(AdminNodeScaleResponse {
+            node_id,
+            direction,
+            replica_id,
+            live_replicas: j
+                .get("live_replicas")
+                .and_then(Json::as_usize)
+                .ok_or("scale response needs an integer \"live_replicas\"")?,
         })
     }
 }
@@ -200,6 +468,7 @@ mod tests {
             frame: None,
             arrival_rps: 7.5,
             queue_wait: 0.02,
+            batch_rps: 2.5,
         };
         let back =
             NodeStatus::from_json(&Json::parse(&st.to_json().to_string_compact()).unwrap())
@@ -216,6 +485,83 @@ mod tests {
             NodeStatus::from_json(&Json::parse(&st.to_json().to_string_compact()).unwrap())
                 .unwrap();
         assert_eq!(back, st);
+    }
+
+    #[test]
+    fn status_without_batch_rps_defaults_to_zero() {
+        // version skew: an older node omits the field entirely
+        let old = Json::parse(r#"{"node_id":"n","live_replicas":1}"#).unwrap();
+        let st = NodeStatus::from_json(&old).unwrap();
+        assert_eq!(st.batch_rps, 0.0);
+    }
+
+    #[test]
+    fn admin_error_roundtrips_with_details() {
+        let e = AdminError::new("node_full", "no replica slot free")
+            .with_detail("node_id", "node-a")
+            .with_detail("live_replicas", "3");
+        let wire = e.to_json().to_string_compact();
+        assert!(wire.contains("\"code\":\"node_full\""));
+        assert!(wire.contains("\"details\""));
+        let back = AdminError::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.code, "node_full");
+        assert_eq!(back.message, "no replica slot free");
+        assert!(back
+            .details
+            .iter()
+            .any(|(k, v)| k == "node_id" && v == "node-a"));
+        // a body without a code is not an admin error
+        assert!(AdminError::from_json(&Json::parse(r#"{"message":"x"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn admin_scale_request_validates() {
+        let ok = Json::parse(r#"{"replicas":[{"id":0,"weight":1.5},{"id":2,"weight":0.5}]}"#)
+            .unwrap();
+        let req = AdminScaleRequest::from_json(&ok).unwrap();
+        assert_eq!(req.replicas.len(), 2);
+        assert_eq!(req.replicas[1].id, 2);
+        // roundtrip
+        let again = AdminScaleRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(again, req);
+
+        for bad in [
+            r#"{"weights":[]}"#,
+            r#"{"replicas":[]}"#,
+            r#"{"replicas":[{"id":-1,"weight":1}]}"#,
+            r#"{"replicas":[{"id":0.5,"weight":1}]}"#,
+            r#"{"replicas":[{"id":0,"weight":0}]}"#,
+            r#"{"replicas":[{"id":0,"weight":1},{"id":0,"weight":2}]}"#,
+        ] {
+            let err = AdminScaleRequest::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+            assert_eq!(err.code, "invalid_request", "body {bad} -> {err:?}");
+        }
+    }
+
+    #[test]
+    fn node_scale_response_keeps_legacy_field_names() {
+        let up = AdminNodeScaleResponse {
+            node_id: "node-a".into(),
+            direction: ScaleDirection::Up,
+            replica_id: 7,
+            live_replicas: 3,
+        };
+        let wire = up.to_json().to_string_compact();
+        assert!(wire.contains("\"replica_id\":7"), "{wire}");
+        assert_eq!(
+            AdminNodeScaleResponse::from_json(&Json::parse(&wire).unwrap()).unwrap(),
+            up
+        );
+        let down = AdminNodeScaleResponse {
+            direction: ScaleDirection::Down,
+            ..up.clone()
+        };
+        let wire = down.to_json().to_string_compact();
+        assert!(wire.contains("\"retired\":7"), "{wire}");
+        assert_eq!(
+            AdminNodeScaleResponse::from_json(&Json::parse(&wire).unwrap()).unwrap(),
+            down
+        );
     }
 
     #[test]

@@ -28,7 +28,7 @@
 //! ignored, forecasts of a degenerate (constant, even all-zero) window are
 //! the constant itself, and rates are clamped non-negative.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 /// Which model produced (or would produce) a forecast.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -361,6 +361,90 @@ impl Forecaster {
     }
 }
 
+/// A family of [`Forecaster`]s keyed by workload component (one per
+/// tenant), forecasting a mixture as the sum of its parts.
+///
+/// ENOVA's mixture scenario co-locates tenants with very different arrival
+/// shapes; one aggregate forecaster smears them together, while per-tenant
+/// models can see e.g. the batch tenant's trough even while the chat
+/// tenant holds steady — the signal the cost-aware scale-down needs.
+///
+/// Contract: the caller (the supervisor's sampling loop) must observe
+/// **every** key on **every** tick — zero-rate ticks included — so all
+/// component models mature in lockstep and [`MultiForecaster::forecast_sum`]
+/// never silently under-counts demand by summing a partial mixture.
+#[derive(Debug)]
+pub struct MultiForecaster {
+    cfg: ForecastConfig,
+    by_key: BTreeMap<String, Forecaster>,
+}
+
+impl MultiForecaster {
+    pub fn new(cfg: ForecastConfig) -> MultiForecaster {
+        MultiForecaster {
+            cfg,
+            by_key: BTreeMap::new(),
+        }
+    }
+
+    /// Number of tracked components.
+    pub fn len(&self) -> usize {
+        self.by_key.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_key.is_empty()
+    }
+
+    /// Feed one sample for one component, creating its model on first use.
+    pub fn observe(&mut self, key: &str, y: f64) {
+        if let Some(f) = self.by_key.get_mut(key) {
+            f.observe(y);
+        } else {
+            let mut f = Forecaster::new(self.cfg.clone());
+            f.observe(y);
+            self.by_key.insert(key.to_string(), f);
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Forecaster> {
+        self.by_key.get(key)
+    }
+
+    /// Tracked keys in stable (sorted) order.
+    pub fn keys(&self) -> Vec<&str> {
+        self.by_key.keys().map(String::as_str).collect()
+    }
+
+    /// Sum of the per-component forecasts `h` steps ahead. `None` until
+    /// every component answers: a partial sum would under-estimate the
+    /// mixture and is worse than no answer for both scale-up and the
+    /// trough scale-down.
+    pub fn forecast_sum(&self, h: usize) -> Option<f64> {
+        if self.by_key.is_empty() {
+            return None;
+        }
+        let mut total = 0.0;
+        for f in self.by_key.values() {
+            total += f.forecast(h)?;
+        }
+        Some(total)
+    }
+
+    /// Worst trailing WMAPE across components. `None` until any matures.
+    pub fn error(&self) -> Option<f64> {
+        self.by_key
+            .values()
+            .filter_map(Forecaster::error)
+            .fold(None, |acc, e| Some(acc.map_or(e, |a: f64| a.max(e))))
+    }
+
+    /// The mixture forecast is only as good as its worst component.
+    pub fn degraded(&self, budget: f64) -> bool {
+        self.by_key.values().any(|f| f.degraded(budget))
+    }
+}
+
 /// Replicas needed to serve `pred_rps` with `capacity_rps` per replica and
 /// a relative safety `headroom`, clamped to `[min, max]` — the pure core
 /// of the supervisor's proactive planner.
@@ -636,6 +720,77 @@ mod tests {
         assert_eq!(replicas_for_cluster_rate(10.0, &[f64::NAN, 20.0], 0.0, 1), 1);
         // min floor larger than the cluster clamps to the slot count
         assert_eq!(replicas_for_cluster_rate(1.0, &[10.0], 0.0, 5), 1);
+    }
+
+    #[test]
+    fn multi_forecaster_sums_components() {
+        let mut m = MultiForecaster::new(ForecastConfig {
+            horizon: 3,
+            season: 0,
+            min_history: 4,
+            ..ForecastConfig::default()
+        });
+        assert!(m.is_empty());
+        assert_eq!(m.forecast_sum(3), None);
+        // two constant tenants: the mixture forecast is their sum
+        for _ in 0..20 {
+            m.observe("chat", 4.0);
+            m.observe("codegen", 1.5);
+        }
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.keys(), vec!["chat", "codegen"]);
+        let sum = m.forecast_sum(3).expect("both matured");
+        assert!((sum - 5.5).abs() < 1e-6, "got {sum}");
+        // component models stay isolated
+        let chat = m.get("chat").unwrap().forecast(3).unwrap();
+        assert!((chat - 4.0).abs() < 1e-6);
+        assert!(!m.degraded(0.1));
+        assert_eq!(m.error(), Some(0.0));
+    }
+
+    #[test]
+    fn multi_forecaster_withholds_partial_sums() {
+        let mut m = MultiForecaster::new(ForecastConfig {
+            horizon: 3,
+            season: 0,
+            min_history: 4,
+            ..ForecastConfig::default()
+        });
+        for _ in 0..20 {
+            m.observe("chat", 2.0);
+        }
+        // a brand-new component without history blocks the sum rather than
+        // letting the mixture silently under-count
+        m.observe("late", 9.0);
+        assert_eq!(m.forecast_sum(3), None);
+        for _ in 0..10 {
+            m.observe("chat", 2.0);
+            m.observe("late", 9.0);
+        }
+        let sum = m.forecast_sum(3).expect("late component matured");
+        assert!((sum - 11.0).abs() < 0.5, "got {sum}");
+    }
+
+    #[test]
+    fn multi_forecaster_degrades_on_worst_component() {
+        let cfg = ForecastConfig {
+            horizon: 2,
+            season: 0,
+            min_history: 2,
+            err_window: 16,
+            ..ForecastConfig::default()
+        };
+        let mut m = MultiForecaster::new(cfg);
+        for _ in 0..20 {
+            m.observe("calm", 1.0);
+            m.observe("wild", 1.0);
+        }
+        for i in 0..10 {
+            m.observe("calm", 1.0);
+            m.observe("wild", 1.0 + i as f64 * 50.0);
+        }
+        assert!(m.degraded(0.2), "one broken component degrades the mixture");
+        assert!(m.error().unwrap() > 0.2);
     }
 
     #[test]

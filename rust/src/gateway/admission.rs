@@ -4,9 +4,10 @@
 //! into fast 429s at the edge instead of unbounded engine queues (the
 //! t^p blow-up ENOVA's detector would otherwise have to catch downstream).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
-use std::time::Instant;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Classic token bucket: `rate` tokens/s refill, `burst` capacity.
 #[derive(Debug)]
@@ -107,6 +108,354 @@ impl Drop for AdmissionPermit {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Multi-tenant admission: SLO tiers, per-tenant budgets, and the cost ledger.
+//
+// ENOVA's premise is that *diverse co-located applications* on shared GPUs
+// degrade service quality unless the stack understands them individually
+// (§I); SageServe and DeepServe (PAPERS.md) both split heterogeneous
+// workloads into latency-sensitive and batch lanes. The types below give
+// every request a tenant identity resolved at ingress, and give every
+// tenant an SLO tier, optional private token bucket, queue-time budget,
+// a GPU-seconds cost ledger, and a non-consuming arrival-rate sample the
+// supervisor's per-tenant forecasters read.
+// ---------------------------------------------------------------------------
+
+/// Service-level tier of a tenant. `Latency` and `Standard` ride the fast
+/// lane of the worker queues; `Batch` rides the slow lane and never blocks
+/// the other two.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SloTier {
+    /// interactive traffic: strictest queue budgets, fast lane, placement
+    /// anti-affinity from batch-heavy replicas
+    Latency,
+    /// the default tier: fast lane, default budgets
+    Standard,
+    /// throughput traffic: slow lane, shed last, no placement privileges
+    Batch,
+}
+
+impl SloTier {
+    pub fn parse(s: &str) -> Option<SloTier> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "latency" => Some(SloTier::Latency),
+            "standard" => Some(SloTier::Standard),
+            "batch" => Some(SloTier::Batch),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SloTier::Latency => "latency",
+            SloTier::Standard => "standard",
+            SloTier::Batch => "batch",
+        }
+    }
+
+    /// Fast-lane membership: everything except batch.
+    pub fn is_fast(self) -> bool {
+        !matches!(self, SloTier::Batch)
+    }
+}
+
+/// Static configuration of one tenant (from `enova.toml` or built-in
+/// defaults). Zero-valued limits mean "inherit the gateway-wide setting".
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub id: String,
+    pub tier: SloTier,
+    /// API keys (`Authorization: Bearer <key>`) that resolve to this tenant
+    pub api_keys: Vec<String>,
+    /// private token-bucket refill rate in req/s; 0 disables the bucket
+    pub rate_limit: f64,
+    /// private token-bucket burst; only meaningful with `rate_limit > 0`
+    pub rate_burst: usize,
+    /// per-tenant queue-time budget in ms; 0 inherits the gateway default
+    pub queue_budget_ms: u64,
+}
+
+impl TenantSpec {
+    pub fn new(id: &str, tier: SloTier) -> TenantSpec {
+        TenantSpec {
+            id: id.to_string(),
+            tier,
+            api_keys: Vec::new(),
+            rate_limit: 0.0,
+            rate_burst: 0,
+            queue_budget_ms: 0,
+        }
+    }
+}
+
+/// Seconds of history the arrival-rate ring keeps per tenant.
+const RATE_RING_SECS: usize = 32;
+
+/// Fixed ring of per-second arrival counts. Unlike the forecaster feed
+/// (which consumes counter deltas), reading a rate here does not consume
+/// anything, so `/metrics` and `/cluster/status` can both sample it.
+#[derive(Debug)]
+struct RateRing {
+    counts: [u32; RATE_RING_SECS],
+    /// absolute second index the head slot corresponds to
+    head: u64,
+}
+
+impl RateRing {
+    fn new() -> RateRing {
+        RateRing {
+            counts: [0; RATE_RING_SECS],
+            head: 0,
+        }
+    }
+
+    fn advance(&mut self, sec: u64) {
+        if sec <= self.head {
+            return;
+        }
+        let steps = (sec - self.head).min(RATE_RING_SECS as u64);
+        for i in 1..=steps {
+            let idx = ((self.head + i) % RATE_RING_SECS as u64) as usize;
+            self.counts[idx] = 0;
+        }
+        self.head = sec;
+    }
+
+    fn mark(&mut self, sec: u64) {
+        self.advance(sec);
+        let idx = (self.head % RATE_RING_SECS as u64) as usize;
+        self.counts[idx] = self.counts[idx].saturating_add(1);
+    }
+
+    /// Mean arrivals/s over the trailing `window` seconds ending at `sec`
+    /// (inclusive of the current second).
+    fn rate(&mut self, sec: u64, window: u64) -> f64 {
+        self.advance(sec);
+        let w = window.clamp(1, RATE_RING_SECS as u64 - 1);
+        let mut total = 0u64;
+        for i in 0..w {
+            let idx = ((self.head + RATE_RING_SECS as u64 - i) % RATE_RING_SECS as u64) as usize;
+            total += self.counts[idx] as u64;
+        }
+        total as f64 / w as f64
+    }
+}
+
+/// Point-in-time view of one tenant for `/metrics` and `/cluster/status`.
+#[derive(Debug, Clone)]
+pub struct TenantSnapshot {
+    pub id: String,
+    pub tier: SloTier,
+    pub admitted: u64,
+    pub rejected: u64,
+    pub gpu_seconds: f64,
+    pub arrival_rps: f64,
+}
+
+/// Live per-tenant state: counters, the private bucket, the cost ledger,
+/// and the arrival-rate ring. Shared via `Arc` between the ingress path
+/// (resolution + admission), the worker loop (cost crediting) and the
+/// supervisor (forecaster feed).
+#[derive(Debug)]
+pub struct TenantState {
+    pub spec: TenantSpec,
+    bucket: Option<Mutex<TokenBucket>>,
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+    /// GPU busy time credited at request completion, in microseconds
+    gpu_micros: AtomicU64,
+    rate: Mutex<RateRing>,
+    started: Instant,
+}
+
+impl TenantState {
+    fn new(spec: TenantSpec) -> Arc<TenantState> {
+        let bucket = (spec.rate_limit > 0.0)
+            .then(|| Mutex::new(TokenBucket::new(spec.rate_limit, spec.rate_burst.max(1))));
+        Arc::new(TenantState {
+            spec,
+            bucket,
+            admitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            gpu_micros: AtomicU64::new(0),
+            rate: Mutex::new(RateRing::new()),
+            started: Instant::now(),
+        })
+    }
+
+    pub fn id(&self) -> &str {
+        &self.spec.id
+    }
+
+    pub fn tier(&self) -> SloTier {
+        self.spec.tier
+    }
+
+    /// Per-tenant token bucket; vacuously true for unthrottled tenants.
+    pub fn try_admit(&self) -> bool {
+        match &self.bucket {
+            Some(b) => b.lock().unwrap().try_take(),
+            None => true,
+        }
+    }
+
+    fn now_sec(&self) -> u64 {
+        self.started.elapsed().as_secs()
+    }
+
+    pub fn note_admitted(&self) {
+        self.note_admitted_at(self.now_sec());
+    }
+
+    /// Test seam: record an admission at an explicit second.
+    pub fn note_admitted_at(&self, sec: u64) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        self.rate.lock().unwrap().mark(sec);
+    }
+
+    pub fn note_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Credit GPU busy time (submit → completion) to the cost ledger.
+    pub fn credit_gpu(&self, secs: f64) {
+        if secs.is_finite() && secs > 0.0 {
+            self.gpu_micros
+                .fetch_add((secs * 1e6).round() as u64, Ordering::Relaxed);
+        }
+    }
+
+    pub fn gpu_seconds(&self) -> f64 {
+        self.gpu_micros.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    pub fn admitted_total(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    pub fn rejected_total(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Trailing mean arrival rate over `window_secs` (non-consuming).
+    pub fn arrival_rps(&self, window_secs: u64) -> f64 {
+        self.arrival_rps_at(self.now_sec(), window_secs)
+    }
+
+    /// Test seam: rate read at an explicit second.
+    pub fn arrival_rps_at(&self, sec: u64, window_secs: u64) -> f64 {
+        self.rate.lock().unwrap().rate(sec, window_secs)
+    }
+
+    /// This tenant's queue-time budget, or the gateway default when unset.
+    pub fn queue_budget(&self, default: Duration) -> Duration {
+        if self.spec.queue_budget_ms > 0 {
+            Duration::from_millis(self.spec.queue_budget_ms)
+        } else {
+            default
+        }
+    }
+
+    pub fn snapshot(&self) -> TenantSnapshot {
+        TenantSnapshot {
+            id: self.spec.id.clone(),
+            tier: self.spec.tier,
+            admitted: self.admitted_total(),
+            rejected: self.rejected_total(),
+            gpu_seconds: self.gpu_seconds(),
+            arrival_rps: self.arrival_rps(5),
+        }
+    }
+}
+
+/// Tenant id every unmatched request resolves to.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// Immutable registry of tenants, resolved once per request at ingress.
+/// Unknown tenants never fail a request — they fall back to the built-in
+/// `default` standard-tier tenant so admission semantics for anonymous
+/// traffic are unchanged.
+#[derive(Debug)]
+pub struct TenantRegistry {
+    tenants: BTreeMap<String, Arc<TenantState>>,
+    by_key: BTreeMap<String, String>,
+}
+
+impl TenantRegistry {
+    pub fn new(specs: Vec<TenantSpec>) -> Arc<TenantRegistry> {
+        let mut tenants = BTreeMap::new();
+        let mut by_key = BTreeMap::new();
+        for spec in specs {
+            if spec.id.is_empty() || tenants.contains_key(&spec.id) {
+                continue;
+            }
+            for key in &spec.api_keys {
+                if !key.is_empty() {
+                    by_key.entry(key.clone()).or_insert_with(|| spec.id.clone());
+                }
+            }
+            tenants.insert(spec.id.clone(), TenantState::new(spec));
+        }
+        tenants
+            .entry(DEFAULT_TENANT.to_string())
+            .or_insert_with(|| TenantState::new(TenantSpec::new(DEFAULT_TENANT, SloTier::Standard)));
+        Arc::new(TenantRegistry { tenants, by_key })
+    }
+
+    /// The built-in registry: the three mixture-scenario tenants mapped to
+    /// their natural tiers (chat is interactive, summarize is ordinary,
+    /// codegen is throughput), plus the `default` fallback.
+    pub fn with_defaults() -> Arc<TenantRegistry> {
+        TenantRegistry::new(vec![
+            TenantSpec::new("chat", SloTier::Latency),
+            TenantSpec::new("summarize", SloTier::Standard),
+            TenantSpec::new("codegen", SloTier::Batch),
+        ])
+    }
+
+    /// Resolve a request to a tenant. Precedence: explicit `x-enova-tenant`
+    /// header, then API key (`Authorization: Bearer`), then the optional
+    /// body hint (OpenAI `user` field), then the default tenant. Unknown
+    /// ids and keys fall through rather than erroring.
+    pub fn resolve(
+        &self,
+        header: Option<&str>,
+        api_key: Option<&str>,
+        hint: Option<&str>,
+    ) -> Arc<TenantState> {
+        if let Some(t) = header.map(str::trim).and_then(|h| self.tenants.get(h)) {
+            return Arc::clone(t);
+        }
+        if let Some(t) = api_key
+            .and_then(|k| self.by_key.get(k.trim()))
+            .and_then(|id| self.tenants.get(id))
+        {
+            return Arc::clone(t);
+        }
+        if let Some(t) = hint.map(str::trim).and_then(|h| self.tenants.get(h)) {
+            return Arc::clone(t);
+        }
+        self.default_tenant()
+    }
+
+    pub fn get(&self, id: &str) -> Option<Arc<TenantState>> {
+        self.tenants.get(id).map(Arc::clone)
+    }
+
+    pub fn default_tenant(&self) -> Arc<TenantState> {
+        Arc::clone(&self.tenants[DEFAULT_TENANT])
+    }
+
+    /// All tenants in stable (id-sorted) order.
+    pub fn all(&self) -> Vec<Arc<TenantState>> {
+        self.tenants.values().map(Arc::clone).collect()
+    }
+
+    pub fn snapshots(&self) -> Vec<TenantSnapshot> {
+        self.tenants.values().map(|t| t.snapshot()).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -170,6 +519,127 @@ mod tests {
                 ))
             }
         });
+    }
+
+    #[test]
+    fn tier_parse_roundtrip() {
+        for tier in [SloTier::Latency, SloTier::Standard, SloTier::Batch] {
+            assert_eq!(SloTier::parse(tier.as_str()), Some(tier));
+        }
+        assert_eq!(SloTier::parse(" LATENCY "), Some(SloTier::Latency));
+        assert_eq!(SloTier::parse("gold"), None);
+        assert!(SloTier::Latency.is_fast());
+        assert!(SloTier::Standard.is_fast());
+        assert!(!SloTier::Batch.is_fast());
+    }
+
+    #[test]
+    fn registry_resolves_header_key_hint_then_default() {
+        let mut vip = TenantSpec::new("vip", SloTier::Latency);
+        vip.api_keys = vec!["sk-vip-1".to_string()];
+        let reg = TenantRegistry::new(vec![vip, TenantSpec::new("bulk", SloTier::Batch)]);
+
+        // header wins over everything
+        let t = reg.resolve(Some("bulk"), Some("sk-vip-1"), Some("vip"));
+        assert_eq!(t.id(), "bulk");
+        assert_eq!(t.tier(), SloTier::Batch);
+        // API key when no header
+        assert_eq!(reg.resolve(None, Some("sk-vip-1"), None).id(), "vip");
+        // body hint when neither
+        assert_eq!(reg.resolve(None, None, Some("bulk")).id(), "bulk");
+        // unknown everything falls back to the default standard tenant
+        let t = reg.resolve(Some("nobody"), Some("sk-stale"), Some("ghost"));
+        assert_eq!(t.id(), DEFAULT_TENANT);
+        assert_eq!(t.tier(), SloTier::Standard);
+        // whitespace around ids is tolerated
+        assert_eq!(reg.resolve(Some(" vip "), None, None).id(), "vip");
+    }
+
+    #[test]
+    fn registry_always_has_a_default_tenant() {
+        let reg = TenantRegistry::new(Vec::new());
+        assert_eq!(reg.default_tenant().id(), DEFAULT_TENANT);
+        // built-in mixture tenants map to their natural tiers
+        let reg = TenantRegistry::with_defaults();
+        assert_eq!(reg.get("chat").unwrap().tier(), SloTier::Latency);
+        assert_eq!(reg.get("summarize").unwrap().tier(), SloTier::Standard);
+        assert_eq!(reg.get("codegen").unwrap().tier(), SloTier::Batch);
+        assert_eq!(reg.all().len(), 4, "three tenants plus the fallback");
+    }
+
+    #[test]
+    fn per_tenant_bucket_throttles_only_its_owner() {
+        let mut throttled = TenantSpec::new("small", SloTier::Standard);
+        throttled.rate_limit = 1.0;
+        throttled.rate_burst = 2;
+        let reg = TenantRegistry::new(vec![throttled]);
+        let small = reg.get("small").unwrap();
+        assert!(small.try_admit());
+        assert!(small.try_admit());
+        assert!(!small.try_admit(), "burst of 2 exhausted");
+        // the default tenant has no private bucket and is never throttled
+        let default = reg.default_tenant();
+        for _ in 0..100 {
+            assert!(default.try_admit());
+        }
+    }
+
+    #[test]
+    fn ledger_and_counters_accumulate() {
+        let reg = TenantRegistry::with_defaults();
+        let t = reg.get("chat").unwrap();
+        t.note_admitted_at(0);
+        t.note_admitted_at(0);
+        t.note_rejected();
+        t.credit_gpu(0.5);
+        t.credit_gpu(1.25);
+        t.credit_gpu(f64::NAN); // poison is ignored
+        t.credit_gpu(-3.0);
+        assert_eq!(t.admitted_total(), 2);
+        assert_eq!(t.rejected_total(), 1);
+        assert!((t.gpu_seconds() - 1.75).abs() < 1e-6, "{}", t.gpu_seconds());
+        let snap = t.snapshot();
+        assert_eq!(snap.id, "chat");
+        assert_eq!(snap.tier, SloTier::Latency);
+        assert_eq!(snap.admitted, 2);
+        assert!((snap.gpu_seconds - 1.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rate_ring_tracks_trailing_arrivals() {
+        let reg = TenantRegistry::with_defaults();
+        let t = reg.get("summarize").unwrap();
+        // 3 arrivals/s for seconds 10..15
+        for sec in 10..15 {
+            for _ in 0..3 {
+                t.note_admitted_at(sec);
+            }
+        }
+        let rps = t.arrival_rps_at(14, 5);
+        assert!((rps - 3.0).abs() < 0.61, "trailing rate ~3: {rps}");
+        // a long quiet gap decays the rate to zero
+        let rps = t.arrival_rps_at(200, 5);
+        assert!(rps.abs() < 1e-9, "stale window decays: {rps}");
+        // clock going backwards must not panic or corrupt the ring
+        t.note_admitted_at(100);
+        t.note_admitted_at(50);
+        assert!(t.arrival_rps_at(100, 5) >= 0.0);
+    }
+
+    #[test]
+    fn queue_budget_inherits_default_when_unset() {
+        let mut strict = TenantSpec::new("strict", SloTier::Latency);
+        strict.queue_budget_ms = 40;
+        let reg = TenantRegistry::new(vec![strict]);
+        let default_budget = Duration::from_millis(500);
+        assert_eq!(
+            reg.get("strict").unwrap().queue_budget(default_budget),
+            Duration::from_millis(40)
+        );
+        assert_eq!(
+            reg.default_tenant().queue_budget(default_budget),
+            default_budget
+        );
     }
 
     #[test]

@@ -101,9 +101,17 @@ fn read_chunked_timed<R: BufRead>(
 
 /// The request head for one exchange. `close` asks the server to close
 /// the connection after responding; omitted, HTTP/1.1 defaults to
-/// keep-alive.
-fn request_head(method: &str, path: &str, addr: &str, body: Option<&str>, close: bool) -> String {
-    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\nAccept: */*\r\n");
+/// keep-alive. `extra` is a pre-rendered block of additional header
+/// lines, each `Name: value\r\n` (e.g. the `x-enova-tenant` identity).
+fn request_head(
+    method: &str,
+    path: &str,
+    addr: &str,
+    body: Option<&str>,
+    close: bool,
+    extra: &str,
+) -> String {
+    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\nAccept: */*\r\n{extra}");
     if close {
         head.push_str("Connection: close\r\n");
     }
@@ -204,13 +212,26 @@ pub fn request(
     body: Option<&str>,
     timeout: Duration,
 ) -> Result<HttpResponse> {
+    request_headed(addr, method, path, body, timeout, "")
+}
+
+/// [`request`] with a pre-rendered extra header block (each line
+/// `Name: value\r\n`) — how a caller sends a tenant identity.
+pub fn request_headed(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    timeout: Duration,
+    extra: &str,
+) -> Result<HttpResponse> {
     let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
     stream.set_read_timeout(Some(timeout))?;
     stream.set_write_timeout(Some(timeout))?;
     stream.set_nodelay(true)?;
 
     let mut w = &stream;
-    w.write_all(request_head(method, path, addr, body, true).as_bytes())?;
+    w.write_all(request_head(method, path, addr, body, true, extra).as_bytes())?;
     if let Some(b) = body {
         w.write_all(b.as_bytes())?;
     }
@@ -351,7 +372,20 @@ impl Client {
         path: &str,
         body: Option<&str>,
     ) -> Result<HttpResponse> {
-        self.request_inner(method, path, body, None)
+        self.request_inner(method, path, body, None, "")
+    }
+
+    /// [`Client::request`] with a pre-rendered extra header block (each
+    /// line `Name: value\r\n`) — how the scenario engine sends the
+    /// `x-enova-tenant` identity.
+    pub fn request_headed(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+        extra: &str,
+    ) -> Result<HttpResponse> {
+        self.request_inner(method, path, body, None, extra)
     }
 
     /// [`Client::request`] that also records the arrival instant of every
@@ -364,7 +398,19 @@ impl Client {
         body: Option<&str>,
         chunk_times: &mut Vec<Instant>,
     ) -> Result<HttpResponse> {
-        self.request_inner(method, path, body, Some(chunk_times))
+        self.request_inner(method, path, body, Some(chunk_times), "")
+    }
+
+    /// [`Client::request_timed`] with an extra header block.
+    pub fn request_timed_headed(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+        extra: &str,
+        chunk_times: &mut Vec<Instant>,
+    ) -> Result<HttpResponse> {
+        self.request_inner(method, path, body, Some(chunk_times), extra)
     }
 
     fn request_inner(
@@ -373,8 +419,10 @@ impl Client {
         path: &str,
         body: Option<&str>,
         mut chunk_times: Option<&mut Vec<Instant>>,
+        extra: &str,
     ) -> Result<HttpResponse> {
-        match self.try_request(method, path, body, chunk_times.as_mut().map(|t| &mut **t), false) {
+        match self.try_request(method, path, body, chunk_times.as_mut().map(|t| &mut **t), false, extra)
+        {
             Ok(resp) => Ok(resp),
             Err(e) => {
                 let was_reused = self.reused;
@@ -385,7 +433,7 @@ impl Client {
                     }
                     // retry on a guaranteed-fresh dial: popping another
                     // pooled socket could hand us a second stale one
-                    self.try_request(method, path, body, chunk_times, true)
+                    self.try_request(method, path, body, chunk_times, true, extra)
                 } else {
                     Err(e)
                 }
@@ -400,12 +448,13 @@ impl Client {
         body: Option<&str>,
         chunk_times: Option<&mut Vec<Instant>>,
         force_fresh: bool,
+        extra: &str,
     ) -> Result<HttpResponse> {
         self.connect(force_fresh)?;
         let resp = {
             let stream = self.stream.as_ref().expect("connected above");
             let mut w = stream;
-            w.write_all(request_head(method, path, &self.addr, body, false).as_bytes())?;
+            w.write_all(request_head(method, path, &self.addr, body, false, extra).as_bytes())?;
             if let Some(b) = body {
                 w.write_all(b.as_bytes())?;
             }
@@ -514,6 +563,26 @@ pub struct LoadgenReport {
     /// shape parameters of the scenario that generated this report
     /// (open-loop runs only)
     pub scenario: Option<Json>,
+    /// per-tenant outcome lines (mixture scenarios only): latency
+    /// percentiles and shed counts per co-located application, each
+    /// carrying its tier and p95 SLO budget so `--strict` can grade them
+    pub tenant_stats: Vec<TenantStat>,
+}
+
+/// Per-tenant slice of a scenario report.
+#[derive(Debug, Clone, Default)]
+pub struct TenantStat {
+    pub name: String,
+    /// SLO tier label of the tenant spec ("latency" | "standard" | "batch")
+    pub tier: String,
+    pub requests: usize,
+    pub ok: usize,
+    /// 429 + 503 responses — admission rejections and shed load
+    pub shed: usize,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    /// p95 budget from the tenant spec; 0 = ungraded
+    pub slo_p95_ms: f64,
 }
 
 impl LoadgenReport {
@@ -556,11 +625,49 @@ impl LoadgenReport {
         if let (Json::Obj(m), Some(scn)) = (&mut j, &self.scenario) {
             m.insert("scenario".to_string(), scn.clone());
         }
+        if !self.tenant_stats.is_empty() {
+            let stats = Json::Arr(
+                self.tenant_stats
+                    .iter()
+                    .map(|t| {
+                        obj([
+                            ("name", s(&t.name)),
+                            ("tier", s(&t.tier)),
+                            ("requests", num(t.requests as f64)),
+                            ("ok", num(t.ok as f64)),
+                            ("shed", num(t.shed as f64)),
+                            ("p50_ms", num(t.p50_ms)),
+                            ("p95_ms", num(t.p95_ms)),
+                            ("slo_p95_ms", num(t.slo_p95_ms)),
+                        ])
+                    })
+                    .collect(),
+            );
+            if let Json::Obj(m) = &mut j {
+                m.insert("tenant_stats".to_string(), stats);
+            }
+        }
         j
     }
 
+    /// Graded per-tenant SLO check: every tenant with a non-zero p95
+    /// budget and at least one completed request must be inside it.
+    /// Returns one human-readable line per violation (empty = pass).
+    pub fn slo_violations(&self) -> Vec<String> {
+        self.tenant_stats
+            .iter()
+            .filter(|t| t.slo_p95_ms > 0.0 && t.ok > 0 && t.p95_ms > t.slo_p95_ms)
+            .map(|t| {
+                format!(
+                    "tenant {} ({}): p95 {:.1}ms over its {:.0}ms SLO budget",
+                    t.name, t.tier, t.p95_ms, t.slo_p95_ms
+                )
+            })
+            .collect()
+    }
+
     pub fn summary(&self) -> String {
-        format!(
+        let mut out = format!(
             "{} requests in {:.2}s ({:.1} req/s) over {} connections: {} ok, {} errors, \
              statuses {:?}, {} completion tokens, {} SSE events, p50 {:.1}ms p95 {:.1}ms \
              p99 {:.1}ms, ttft p50 {:.1}ms p95 {:.1}ms, itl p50 {:.1}ms p95 {:.1}ms",
@@ -580,7 +687,25 @@ impl LoadgenReport {
             self.ttft_p95_ms,
             self.itl_p50_ms,
             self.itl_p95_ms,
-        )
+        );
+        for t in &self.tenant_stats {
+            out.push_str(&format!(
+                "\n  tenant {} ({}): {} requests, {} ok, {} shed, p50 {:.1}ms p95 {:.1}ms{}",
+                t.name,
+                t.tier,
+                t.requests,
+                t.ok,
+                t.shed,
+                t.p50_ms,
+                t.p95_ms,
+                if t.slo_p95_ms > 0.0 {
+                    format!(" (SLO {:.0}ms)", t.slo_p95_ms)
+                } else {
+                    String::new()
+                },
+            ));
+        }
+        out
     }
 }
 
@@ -593,23 +718,29 @@ struct OneResult {
     ttft: Option<f64>,
     /// streamed 200s only: gaps between consecutive content chunks
     inter_token_gaps: Vec<f64>,
+    /// tenant the request was issued as (mixture scenarios only)
+    tenant: Option<String>,
 }
 
 fn one_request(client: &mut Client, cfg: &LoadgenConfig, worker: usize, k: usize) -> OneResult {
     let stream = cfg.stream_every != 0 && (worker + k) % cfg.stream_every == 0;
     let chat = cfg.chat_every != 0 && (worker + k) % cfg.chat_every == 0;
     let prompt = format!("{} w{worker} r{k}", cfg.prompt_prefix);
-    exchange(client, &prompt, cfg.max_tokens, stream, chat)
+    exchange(client, &prompt, cfg.max_tokens, stream, chat, None)
 }
 
 /// One completion exchange (unary or streaming, completion or chat) with
 /// the same accounting the closed loop and the scenario engine share.
+/// `tenant` rides as an `x-enova-tenant` header, so the gateway's
+/// admission layer resolves the request to that tenant's SLO tier and
+/// budgets.
 fn exchange(
     client: &mut Client,
     prompt: &str,
     max_tokens: usize,
     stream: bool,
     chat: bool,
+    tenant: Option<&str>,
 ) -> OneResult {
     // build through util::json so arbitrary prompt content is escaped
     let body = if chat {
@@ -634,12 +765,16 @@ fn exchange(
     } else {
         "/v1/completions"
     };
+    let extra = match tenant {
+        Some(name) => format!("x-enova-tenant: {name}\r\n"),
+        None => String::new(),
+    };
     let t0 = Instant::now();
     let mut chunk_times: Vec<Instant> = Vec::new();
     let result = if stream {
-        client.request_timed("POST", path, Some(&body), &mut chunk_times)
+        client.request_timed_headed("POST", path, Some(&body), &extra, &mut chunk_times)
     } else {
-        client.post_json(path, &body)
+        client.request_headed("POST", path, Some(&body), &extra)
     };
     match result {
         Err(_) => OneResult {
@@ -649,6 +784,7 @@ fn exchange(
             completion_tokens: 0,
             ttft: None,
             inter_token_gaps: Vec::new(),
+            tenant: tenant.map(str::to_string),
         },
         Ok(resp) => {
             let mut sse_events = 0;
@@ -708,6 +844,7 @@ fn exchange(
                 completion_tokens,
                 ttft,
                 inter_token_gaps,
+                tenant: tenant.map(str::to_string),
             }
         }
     }
@@ -719,6 +856,16 @@ struct LatencySamples {
     latencies_ms: Vec<f64>,
     ttft_ms: Vec<f64>,
     inter_token_ms: Vec<f64>,
+    /// tenant name → (requests, ok, shed, sorted ok-latencies in ms)
+    tenants: BTreeMap<String, TenantSamples>,
+}
+
+#[derive(Default)]
+struct TenantSamples {
+    requests: usize,
+    ok: usize,
+    shed: usize,
+    latencies_ms: Vec<f64>,
 }
 
 /// Fold a stream of per-request results into a report; returns the sorted
@@ -728,14 +875,27 @@ fn collect_results(rx: mpsc::Receiver<OneResult>) -> (LoadgenReport, LatencySamp
     let mut samples = LatencySamples::default();
     for r in rx {
         report.requests += 1;
+        let latency_ms = r.latency.as_secs_f64() * 1e3;
         match r.status {
             None => report.errors += 1,
             Some(code) => {
                 *report.status_counts.entry(code).or_insert(0) += 1;
                 if code == 200 {
                     report.ok += 1;
-                    samples.latencies_ms.push(r.latency.as_secs_f64() * 1e3);
+                    samples.latencies_ms.push(latency_ms);
                 }
+            }
+        }
+        if let Some(name) = &r.tenant {
+            let t = samples.tenants.entry(name.clone()).or_default();
+            t.requests += 1;
+            match r.status {
+                Some(200) => {
+                    t.ok += 1;
+                    t.latencies_ms.push(latency_ms);
+                }
+                Some(429) | Some(503) => t.shed += 1,
+                _ => {}
             }
         }
         if let Some(ttft) = r.ttft {
@@ -750,6 +910,9 @@ fn collect_results(rx: mpsc::Receiver<OneResult>) -> (LoadgenReport, LatencySamp
     samples.latencies_ms.sort_by(f64::total_cmp);
     samples.ttft_ms.sort_by(f64::total_cmp);
     samples.inter_token_ms.sort_by(f64::total_cmp);
+    for t in samples.tenants.values_mut() {
+        t.latencies_ms.sort_by(f64::total_cmp);
+    }
     (report, samples)
 }
 
@@ -856,10 +1019,15 @@ impl ScenarioKind {
     }
 }
 
-/// One co-located application in a `mixture` scenario.
+/// One co-located application in a `mixture` scenario. The names line up
+/// with the gateway's built-in tenant registry, so requests issued as
+/// these tenants resolve to real SLO tiers and budgets server-side.
 #[derive(Debug, Clone)]
 pub struct TenantSpec {
     pub name: String,
+    /// SLO tier label ("latency" | "standard" | "batch") — sent for
+    /// report grading only; the *server's* registry decides the real tier
+    pub tier: String,
     /// share of the aggregate arrival rate (normalized over all tenants)
     pub weight: f64,
     /// approximate prompt length in words
@@ -868,33 +1036,42 @@ pub struct TenantSpec {
     pub max_tokens: usize,
     /// whether this tenant's requests stream
     pub stream: bool,
+    /// p95 end-to-end latency budget in ms graded by `--strict`; 0 =
+    /// ungraded (batch tenants have throughput, not latency, SLOs)
+    pub slo_p95_ms: f64,
 }
 
 /// The paper's co-location setting in miniature: an interactive chat app,
 /// a long-prompt/short-output summarizer, and a short-prompt/long-output
-/// code generator sharing one gateway.
+/// code generator sharing one gateway — one tenant per SLO tier.
 pub fn default_tenants() -> Vec<TenantSpec> {
     vec![
         TenantSpec {
             name: "chat".into(),
+            tier: "latency".into(),
             weight: 0.5,
             prompt_words: 24,
             max_tokens: 16,
             stream: true,
+            slo_p95_ms: 5_000.0,
         },
         TenantSpec {
             name: "summarize".into(),
+            tier: "standard".into(),
             weight: 0.3,
             prompt_words: 120,
             max_tokens: 6,
             stream: false,
+            slo_p95_ms: 10_000.0,
         },
         TenantSpec {
             name: "codegen".into(),
+            tier: "batch".into(),
             weight: 0.2,
             prompt_words: 40,
             max_tokens: 32,
             stream: false,
+            slo_p95_ms: 0.0,
         },
     ]
 }
@@ -953,6 +1130,8 @@ struct Arrival {
     max_tokens: usize,
     stream: bool,
     chat: bool,
+    /// tenant identity the request is issued as (mixture only)
+    tenant: Option<String>,
 }
 
 impl ScenarioConfig {
@@ -1031,10 +1210,12 @@ impl ScenarioConfig {
                     .map(|t| {
                         obj([
                             ("name", s(&t.name)),
+                            ("tier", s(&t.tier)),
                             ("weight", num(t.weight)),
                             ("prompt_words", num(t.prompt_words as f64)),
                             ("max_tokens", num(t.max_tokens as f64)),
                             ("stream", Json::Bool(t.stream)),
+                            ("slo_p95_ms", num(t.slo_p95_ms)),
                         ])
                     })
                     .collect(),
@@ -1083,6 +1264,7 @@ impl ScenarioConfig {
                     max_tokens: chosen.max_tokens,
                     stream: chosen.stream,
                     chat: false,
+                    tenant: Some(chosen.name.clone()),
                 }
             } else {
                 Arrival {
@@ -1091,6 +1273,7 @@ impl ScenarioConfig {
                     max_tokens: self.max_tokens,
                     stream: i % 4 == 0,
                     chat: i % 3 == 0,
+                    tenant: None,
                 }
             };
             out.push(arrival);
@@ -1135,8 +1318,14 @@ pub fn run_scenario(addr: &str, cfg: &ScenarioConfig) -> LoadgenReport {
                 let job = job_rx.lock().unwrap().recv();
                 match job {
                     Ok((a, due)) => {
-                        let mut r =
-                            exchange(&mut client, &a.prompt, a.max_tokens, a.stream, a.chat);
+                        let mut r = exchange(
+                            &mut client,
+                            &a.prompt,
+                            a.max_tokens,
+                            a.stream,
+                            a.chat,
+                            a.tenant.as_deref(),
+                        );
                         // open-loop latency: from the scheduled arrival,
                         // including any wait for a free worker
                         r.latency = due.elapsed().max(r.latency);
@@ -1171,8 +1360,32 @@ pub fn run_scenario(addr: &str, cfg: &ScenarioConfig) -> LoadgenReport {
     }
     report.elapsed_secs = t0.elapsed().as_secs_f64();
     fill_percentiles(&mut report, &samples);
+    fill_tenant_stats(&mut report, &samples, &cfg.tenants);
     report.scenario = Some(cfg.to_json(offered));
     report
+}
+
+/// Turn the per-tenant sample accumulators into report lines, attaching
+/// each tenant's tier and SLO budget from the scenario's specs. Tenants
+/// that sent no requests (zero weight, or a non-mixture run) are omitted.
+fn fill_tenant_stats(report: &mut LoadgenReport, samples: &LatencySamples, specs: &[TenantSpec]) {
+    report.tenant_stats = samples
+        .tenants
+        .iter()
+        .map(|(name, t)| {
+            let spec = specs.iter().find(|sp| &sp.name == name);
+            TenantStat {
+                name: name.clone(),
+                tier: spec.map(|sp| sp.tier.clone()).unwrap_or_default(),
+                requests: t.requests,
+                ok: t.ok,
+                shed: t.shed,
+                p50_ms: percentile(&t.latencies_ms, 0.50),
+                p95_ms: percentile(&t.latencies_ms, 0.95),
+                slo_p95_ms: spec.map(|sp| sp.slo_p95_ms).unwrap_or(0.0),
+            }
+        })
+        .collect();
 }
 
 #[cfg(test)]
@@ -1274,12 +1487,16 @@ mod tests {
 
     #[test]
     fn request_heads_differ_on_connection_policy() {
-        let one_shot = request_head("POST", "/x", "h:1", Some("{}"), true);
+        let one_shot = request_head("POST", "/x", "h:1", Some("{}"), true, "");
         assert!(one_shot.contains("Connection: close\r\n"));
         assert!(one_shot.contains("Content-Length: 2\r\n"));
-        let keep_alive = request_head("GET", "/x", "h:1", None, false);
+        let keep_alive = request_head("GET", "/x", "h:1", None, false, "");
         assert!(!keep_alive.contains("Connection:"));
         assert!(keep_alive.ends_with("\r\n\r\n"));
+        // an extra header block lands verbatim in the head section
+        let tenanted = request_head("POST", "/x", "h:1", None, false, "x-enova-tenant: chat\r\n");
+        assert!(tenanted.contains("\r\nx-enova-tenant: chat\r\n"));
+        assert!(tenanted.ends_with("\r\n\r\n"));
     }
 
     #[test]
@@ -1378,6 +1595,10 @@ mod tests {
             assert!(!of_tenant.is_empty(), "tenant {} missing", tenant.name);
             assert!(of_tenant.iter().all(|a| a.max_tokens == tenant.max_tokens));
             assert!(of_tenant.iter().all(|a| a.stream == tenant.stream));
+            assert!(
+                of_tenant.iter().all(|a| a.tenant.as_deref() == Some(tenant.name.as_str())),
+                "every arrival carries its tenant identity"
+            );
         }
         // the dominant tenant dominates
         let chat = arrivals
@@ -1427,5 +1648,50 @@ mod tests {
         };
         let mj = mix.to_json(0);
         assert_eq!(mj.get("tenants").and_then(Json::as_arr).map(<[Json]>::len), Some(3));
+        let first = &mj.get("tenants").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(first.get("tier").and_then(Json::as_str), Some("latency"));
+        assert_eq!(first.get("slo_p95_ms").and_then(Json::as_f64), Some(5_000.0));
+    }
+
+    #[test]
+    fn tenant_stats_grade_against_their_slo_budgets() {
+        let specs = default_tenants();
+        let mut samples = LatencySamples::default();
+        samples.tenants.insert(
+            "chat".into(),
+            TenantSamples {
+                requests: 4,
+                ok: 3,
+                shed: 1,
+                latencies_ms: vec![10.0, 20.0, 9_999.0],
+            },
+        );
+        samples.tenants.insert(
+            "codegen".into(),
+            TenantSamples {
+                requests: 2,
+                ok: 2,
+                shed: 0,
+                latencies_ms: vec![50_000.0, 60_000.0],
+            },
+        );
+        let mut report = LoadgenReport::default();
+        fill_tenant_stats(&mut report, &samples, &specs);
+        assert_eq!(report.tenant_stats.len(), 2);
+        let chat = report.tenant_stats.iter().find(|t| t.name == "chat").unwrap();
+        assert_eq!(chat.tier, "latency");
+        assert_eq!(chat.shed, 1);
+        assert_eq!(chat.p95_ms, 9_999.0);
+        // chat blew its 5000ms budget; codegen is batch-tier and ungraded
+        // no matter how slow
+        let violations = report.slo_violations();
+        assert_eq!(violations.len(), 1, "{violations:?}");
+        assert!(violations[0].contains("tenant chat"), "{violations:?}");
+        // stats land in the JSON artifact
+        let j = Json::parse(&report.to_json().to_string_compact()).unwrap();
+        let stats = j.get("tenant_stats").and_then(Json::as_arr).unwrap();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].get("name").and_then(Json::as_str), Some("chat"));
+        assert_eq!(stats[0].get("slo_p95_ms").and_then(Json::as_f64), Some(5_000.0));
     }
 }

@@ -4,6 +4,7 @@
 //! the paper's monitoring system scrapes). Also ships a small exposition
 //! parser so tests can verify the scrape body instead of substring-matching.
 
+use super::admission::TenantSnapshot;
 use super::supervisor::SupervisorSnapshot;
 use crate::metrics::{COLUMNS, N_RUNNING};
 use crate::tsdb::MetricStore;
@@ -165,6 +166,10 @@ pub struct GatewayMetrics {
     queue_shed: AtomicU64,
     /// live capacity mutations applied by replica workers
     reconfigure_applied: AtomicU64,
+    /// integral of live-replica count over wall time (micro-replica-seconds):
+    /// the denominator of the cost story — what the fleet *spent*, against
+    /// which the per-tenant GPU-seconds ledger is apportioned
+    replica_micros: AtomicU64,
     /// AddReplica latency, split by whether a warm standby was promoted
     promotion_warm: Histo,
     promotion_cold: Histo,
@@ -195,6 +200,7 @@ impl Default for GatewayMetrics {
             rejected_rate_limited: AtomicU64::new(0),
             queue_shed: AtomicU64::new(0),
             reconfigure_applied: AtomicU64::new(0),
+            replica_micros: AtomicU64::new(0),
             promotion_warm: Histo::new(&PROMOTION_BUCKETS),
             promotion_cold: Histo::new(&PROMOTION_BUCKETS),
             queue_wait: Histo::new(&QUEUE_WAIT_BUCKETS),
@@ -285,6 +291,20 @@ impl GatewayMetrics {
         self.inter_token.observe(secs);
     }
 
+    /// Accumulate `secs` of one live replica's wall time into the
+    /// replica-seconds integral (each worker contributes its own frame
+    /// windows, so N live replicas advance the integral N× real time).
+    pub fn add_replica_seconds(&self, secs: f64) {
+        if secs.is_finite() && secs > 0.0 {
+            self.replica_micros.fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Total replica-seconds spent since boot (the fleet's GPU-time cost).
+    pub fn replica_seconds(&self) -> f64 {
+        self.replica_micros.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
     /// A replica worker applied a live capacity mutation.
     pub fn note_reconfigure(&self) {
         self.reconfigure_applied.fetch_add(1, Ordering::Relaxed);
@@ -327,8 +347,9 @@ pub(crate) fn escape_label(v: &str) -> String {
 }
 
 /// Render the full `/metrics` body: gateway request metrics, the replica
-/// set + warm pool + supervisor state, and the last Table II frame of
-/// every replica instance in `store`.
+/// set + warm pool + supervisor state, the per-tenant admission/cost
+/// ledger, and the last Table II frame of every replica instance in
+/// `store`.
 #[allow(clippy::too_many_arguments)]
 pub fn render_prometheus(
     gw: &GatewayMetrics,
@@ -339,6 +360,7 @@ pub fn render_prometheus(
     warm_target: usize,
     uptime_secs: f64,
     sup: &SupervisorSnapshot,
+    tenants: &[TenantSnapshot],
 ) -> String {
     let live_replicas = live_instances.len();
     let mut out = String::with_capacity(4096);
@@ -605,6 +627,11 @@ pub fn render_prometheus(
             "1 while forecast error is over budget and the planner stands down to reactive.",
             sup.forecast_degraded as u64 as f64,
         ),
+        (
+            "enova_supervisor_tenant_forecast_rps",
+            "Sum of the per-tenant mixture forecasts at the planning horizon (requests/second).",
+            sup.last_tenant_forecast,
+        ),
     ] {
         let _ = writeln!(out, "# HELP {name} {help}");
         let _ = writeln!(out, "# TYPE {name} gauge");
@@ -638,6 +665,16 @@ pub fn render_prometheus(
         out,
         "enova_supervisor_scale_origin_total{{origin=\"reactive\"}} {}",
         sup.reactive_events
+    );
+    out.push_str(
+        "# HELP enova_supervisor_trough_scale_downs_total Forecast-triggered retires executed \
+         before the replicas went idle (cost-aware trough scale-down).\n",
+    );
+    out.push_str("# TYPE enova_supervisor_trough_scale_downs_total counter\n");
+    let _ = writeln!(
+        out,
+        "enova_supervisor_trough_scale_downs_total {}",
+        sup.trough_events
     );
     out.push_str(
         "# HELP enova_supervisor_reconfigure_total Reconfiguration verdicts the supervisor \
@@ -710,6 +747,71 @@ pub fn render_prometheus(
     out.push_str("# HELP enova_gateway_uptime_seconds Gateway uptime.\n");
     out.push_str("# TYPE enova_gateway_uptime_seconds gauge\n");
     let _ = writeln!(out, "enova_gateway_uptime_seconds {uptime_secs:.3}");
+
+    // fleet cost denominator: integral of live replicas over wall time
+    out.push_str(
+        "# HELP enova_replica_seconds_total Replica-seconds spent since boot (integral of \
+         live replicas over wall time; the fleet's GPU-time cost).\n",
+    );
+    out.push_str("# TYPE enova_replica_seconds_total counter\n");
+    let _ = writeln!(out, "enova_replica_seconds_total {}", gw.replica_seconds());
+
+    // per-tenant admission + cost ledger (the multi-tenant SLO surface)
+    out.push_str(
+        "# HELP enova_tenant_requests_total Requests admitted per tenant.\n",
+    );
+    out.push_str("# TYPE enova_tenant_requests_total counter\n");
+    for t in tenants {
+        let _ = writeln!(
+            out,
+            "enova_tenant_requests_total{{tenant=\"{}\",tier=\"{}\"}} {}",
+            escape_label(&t.id),
+            t.tier.as_str(),
+            t.admitted
+        );
+    }
+    out.push_str(
+        "# HELP enova_tenant_rejected_total Requests rejected per tenant (rate limit, \
+         admission gate, or global throttle).\n",
+    );
+    out.push_str("# TYPE enova_tenant_rejected_total counter\n");
+    for t in tenants {
+        let _ = writeln!(
+            out,
+            "enova_tenant_rejected_total{{tenant=\"{}\",tier=\"{}\"}} {}",
+            escape_label(&t.id),
+            t.tier.as_str(),
+            t.rejected
+        );
+    }
+    out.push_str(
+        "# HELP enova_tenant_gpu_seconds_total GPU-seconds of engine time attributed to \
+         each tenant's completed requests (the cost ledger).\n",
+    );
+    out.push_str("# TYPE enova_tenant_gpu_seconds_total counter\n");
+    for t in tenants {
+        let _ = writeln!(
+            out,
+            "enova_tenant_gpu_seconds_total{{tenant=\"{}\",tier=\"{}\"}} {}",
+            escape_label(&t.id),
+            t.tier.as_str(),
+            t.gpu_seconds
+        );
+    }
+    out.push_str(
+        "# HELP enova_tenant_arrival_rps Trailing per-tenant arrival rate \
+         (requests/second over the last few seconds).\n",
+    );
+    out.push_str("# TYPE enova_tenant_arrival_rps gauge\n");
+    for t in tenants {
+        let _ = writeln!(
+            out,
+            "enova_tenant_arrival_rps{{tenant=\"{}\",tier=\"{}\"}} {}",
+            escape_label(&t.id),
+            t.tier.as_str(),
+            t.arrival_rps
+        );
+    }
 
     // Table II per replica: the last recorded frame value of each column
     for metric in COLUMNS {
@@ -883,9 +985,31 @@ mod tests {
             forecast_degraded: false,
             proactive_events: 2,
             reactive_events: 1,
+            last_tenant_forecast: 12.0,
+            trough_events: 1,
         };
+        gw.add_replica_seconds(1.5);
+        gw.add_replica_seconds(2.5);
+        let tenants = vec![
+            TenantSnapshot {
+                id: "chat".to_string(),
+                tier: crate::gateway::admission::SloTier::Latency,
+                admitted: 7,
+                rejected: 2,
+                gpu_seconds: 1.25,
+                arrival_rps: 3.5,
+            },
+            TenantSnapshot {
+                id: "codegen".to_string(),
+                tier: crate::gateway::admission::SloTier::Batch,
+                admitted: 4,
+                rejected: 0,
+                gpu_seconds: 9.0,
+                arrival_rps: 0.5,
+            },
+        ];
         let live = vec!["replica-0".to_string(), "replica-1".to_string()];
-        let body = render_prometheus(&gw, &store, 3, &live, 1, 2, 12.5, &sup);
+        let body = render_prometheus(&gw, &store, 3, &live, 1, 2, 12.5, &sup, &tenants);
         let samples = parse_exposition(&body).expect("valid exposition");
         for col in COLUMNS {
             for replica in ["replica-0", "replica-1"] {
@@ -963,6 +1087,12 @@ mod tests {
             .any(|s| s.name == "enova_supervisor_forecast_degraded" && s.value == 0.0));
         assert!(samples
             .iter()
+            .any(|s| s.name == "enova_supervisor_tenant_forecast_rps" && s.value == 12.0));
+        assert!(samples
+            .iter()
+            .any(|s| s.name == "enova_supervisor_trough_scale_downs_total" && s.value == 1.0));
+        assert!(samples
+            .iter()
             .any(|s| s.name == "enova_supervisor_scale_origin_total"
                 && s.labels.get("origin").map(String::as_str) == Some("proactive")
                 && s.value == 2.0));
@@ -1016,6 +1146,28 @@ mod tests {
         assert_eq!(bucket("warm", "0.002"), 1.0);
         assert_eq!(bucket("cold", "0.002"), 0.0);
         assert_eq!(bucket("cold", "5"), 1.0);
+        // per-tenant ledger series carry tenant+tier labels and the
+        // fleet-wide replica-seconds integral sums the worker windows
+        assert!(samples
+            .iter()
+            .any(|s| s.name == "enova_replica_seconds_total" && (s.value - 4.0).abs() < 1e-9));
+        let tenant_sample = |name: &str, tenant: &str| {
+            samples
+                .iter()
+                .find(|s| s.name == name
+                    && s.labels.get("tenant").map(String::as_str) == Some(tenant))
+                .unwrap_or_else(|| panic!("missing {name} for {tenant}"))
+                .clone()
+        };
+        let chat_req = tenant_sample("enova_tenant_requests_total", "chat");
+        assert_eq!(chat_req.value, 7.0);
+        assert_eq!(chat_req.labels.get("tier").map(String::as_str), Some("latency"));
+        assert_eq!(tenant_sample("enova_tenant_rejected_total", "chat").value, 2.0);
+        let code_cost = tenant_sample("enova_tenant_gpu_seconds_total", "codegen");
+        assert_eq!(code_cost.value, 9.0);
+        assert_eq!(code_cost.labels.get("tier").map(String::as_str), Some("batch"));
+        assert_eq!(tenant_sample("enova_tenant_arrival_rps", "chat").value, 3.5);
+
         // live replicas are routable=1, the standby instance routable=0
         let routable = |instance: &str| {
             samples
@@ -1055,6 +1207,7 @@ mod tests {
             0,
             0.0,
             &SupervisorSnapshot::default(),
+            &[],
         );
         let samples = parse_exposition(&body).expect("valid exposition");
 
@@ -1145,6 +1298,7 @@ mod tests {
             0,
             0.0,
             &SupervisorSnapshot::default(),
+            &[],
         );
         let samples = parse_exposition(&body).unwrap();
         let bucket = |le: &str| {

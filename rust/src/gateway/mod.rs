@@ -45,7 +45,10 @@ use crate::trace::{
 };
 use crate::tsdb::MetricStore;
 use crate::util::json::Json;
-use admission::{AdmissionGate, AdmissionPermit, TokenBucket};
+use admission::{
+    AdmissionGate, AdmissionPermit, SloTier, TenantRegistry, TenantSnapshot, TenantSpec,
+    TenantState, TokenBucket,
+};
 use anyhow::{anyhow, Result};
 use metrics::GatewayMetrics;
 use std::collections::{BTreeMap, HashMap, VecDeque};
@@ -145,6 +148,11 @@ pub struct GatewayConfig {
     pub node: Option<crate::cluster::NodeIdentity>,
     /// request-tracing knobs: sampling rate, slow-trace SLO, ring capacity
     pub trace: TraceSettings,
+    /// tenant roster (id, SLO tier, budgets, API keys). Empty means the
+    /// built-in mixture roster ([`TenantRegistry::with_defaults`]): the
+    /// chat/summarize/codegen scenario tenants plus the `default`
+    /// fallback every unmatched request resolves to.
+    pub tenants: Vec<TenantSpec>,
 }
 
 impl Default for GatewayConfig {
@@ -165,6 +173,7 @@ impl Default for GatewayConfig {
             warm_pool: 0,
             node: None,
             trace: TraceSettings::default(),
+            tenants: Vec::new(),
         }
     }
 }
@@ -208,6 +217,12 @@ struct Job {
     first_token_at: Option<Instant>,
     /// when the engine produced the latest token (inter-token gaps)
     last_token_at: Option<Instant>,
+    /// SLO tier the job was admitted under: picks the worker lane
+    tier: SloTier,
+    /// resolved per-tenant queue-time budget (gateway default when unset)
+    queue_budget: Duration,
+    /// the tenant this job bills GPU time and counters to
+    tenant: Arc<TenantState>,
 }
 
 impl Job {
@@ -216,6 +231,14 @@ impl Job {
         self.handle.complete();
         drop(self.permit);
         self.tx
+    }
+
+    /// Credit engine busy time (submit → now) to the tenant cost ledger.
+    fn credit_tenant(&self, now: Instant) {
+        if let Some(submitted) = self.submitted_at {
+            self.tenant
+                .credit_gpu(now.saturating_duration_since(submitted).as_secs_f64());
+        }
     }
 }
 
@@ -280,6 +303,8 @@ struct GatewayState {
     tracer: TraceRecorder,
     /// autoscaling decision flight recorder (`/debug/decisions`)
     decisions: DecisionRecorder,
+    /// tenant roster resolved once per request at ingress
+    tenants: Arc<TenantRegistry>,
 }
 
 /// A replica worker mid-launch: the engine is constructed inside the
@@ -378,6 +403,11 @@ impl Gateway {
                 .unwrap_or_else(|| "gateway".to_string()),
             tracer: TraceRecorder::new(cfg.trace.clone()),
             decisions: DecisionRecorder::new(256),
+            tenants: if cfg.tenants.is_empty() {
+                TenantRegistry::with_defaults()
+            } else {
+                TenantRegistry::new(cfg.tenants.clone())
+            },
             cfg,
         });
 
@@ -620,6 +650,20 @@ impl Gateway {
     /// view of `/debug/decisions`.
     pub fn decisions(&self) -> Vec<crate::trace::Decision> {
         self.state.decisions.decisions()
+    }
+
+    /// Per-tenant counters, cost ledger, and arrival rates — the
+    /// programmatic view of the `enova_tenant_*` series on `/metrics`.
+    pub fn tenant_snapshots(&self) -> Vec<TenantSnapshot> {
+        self.state.tenants.snapshots()
+    }
+
+    /// Total replica-seconds this gateway has run live replicas for —
+    /// the denominator of the cost-aware scale-down comparison (the sum
+    /// of every live worker's wall-clock, integrated at each monitoring
+    /// flush).
+    pub fn replica_seconds(&self) -> f64 {
+        self.state.metrics.replica_seconds()
     }
 
     /// Stop accepting, fail outstanding jobs with 503s, join all threads.
@@ -1097,6 +1141,10 @@ impl FrameWindow {
             return;
         }
         let secs = elapsed.as_secs_f64().max(1e-9);
+        // integrate this replica's live wall-clock into the fleet-wide
+        // replica-seconds counter — the cost the trough scale-down is
+        // judged against
+        state.metrics.add_replica_seconds(secs);
         let stats = WindowStats {
             finished: self.finished as f64 / secs,
             arrived: self.arrived as f64 / secs,
@@ -1130,7 +1178,10 @@ fn replica_loop(
     state: &GatewayState,
 ) {
     let instance = format!("replica-{id}");
-    let mut queue: VecDeque<Job> = VecDeque::new();
+    // two priority lanes: latency/standard-tier jobs never queue behind
+    // batch-tier jobs — promote() drains `fast` to exhaustion first
+    let mut fast: VecDeque<Job> = VecDeque::new();
+    let mut slow: VecDeque<Job> = VecDeque::new();
     let mut jobs: HashMap<u64, Job> = HashMap::new();
     let mut window = FrameWindow::new();
 
@@ -1159,9 +1210,9 @@ fn replica_loop(
             // (terminal SSE event for streams) instead of silently
             // dropping them and leaving clients to hit their timeouts
             while let Ok(job) = rx.try_recv() {
-                queue.push_back(job);
+                enqueue_lane(&mut fast, &mut slow, job);
             }
-            for job in queue.drain(..) {
+            for job in fast.drain(..).chain(slow.drain(..)) {
                 shed(job, "gateway is shutting down");
             }
             for (_, job) in jobs.drain() {
@@ -1173,16 +1224,17 @@ fn replica_loop(
         // block while idle; drain opportunistically while busy
         if engine.idle()
             && jobs.is_empty()
-            && queue.is_empty()
+            && fast.is_empty()
+            && slow.is_empty()
             && !draining.load(Ordering::Acquire)
         {
             match rx.recv_timeout(Duration::from_millis(50)) {
                 Ok(job) => {
                     window.arrived += 1;
-                    queue.push_back(job);
+                    enqueue_lane(&mut fast, &mut slow, job);
                 }
                 Err(RecvTimeoutError::Timeout) => {
-                    window.maybe_flush(engine.as_ref(), state, &instance, queue.len());
+                    window.maybe_flush(engine.as_ref(), state, &instance, fast.len() + slow.len());
                     continue;
                 }
                 Err(RecvTimeoutError::Disconnected) => break,
@@ -1190,9 +1242,9 @@ fn replica_loop(
         }
         while let Ok(job) = rx.try_recv() {
             window.arrived += 1;
-            queue.push_back(job);
+            enqueue_lane(&mut fast, &mut slow, job);
         }
-        promote(engine.as_mut(), &mut queue, &mut jobs, state, &mut window);
+        promote(engine.as_mut(), &mut fast, &mut slow, &mut jobs, state, &mut window);
 
         // retire exit check. Observing `draining` here means retirement
         // already removed this replica from the live set, and every send
@@ -1200,20 +1252,21 @@ fn replica_loop(
         // but possibly *after* the opportunistic drain above. Re-drain
         // once more under that guarantee; only an empty channel may break.
         if draining.load(Ordering::Acquire)
-            && queue.is_empty()
+            && fast.is_empty()
+            && slow.is_empty()
             && jobs.is_empty()
             && engine.idle()
         {
             let mut late_arrival = false;
             while let Ok(job) = rx.try_recv() {
                 window.arrived += 1;
-                queue.push_back(job);
+                enqueue_lane(&mut fast, &mut slow, job);
                 late_arrival = true;
             }
             if !late_arrival {
                 break;
             }
-            promote(engine.as_mut(), &mut queue, &mut jobs, state, &mut window);
+            promote(engine.as_mut(), &mut fast, &mut slow, &mut jobs, state, &mut window);
         }
 
         match engine.step_stream() {
@@ -1258,6 +1311,9 @@ fn replica_loop(
                             .or(job.submitted_at)
                             .unwrap_or(job.enqueued_at);
                         trace_phase(state, &job.trace, PHASE_DECODE, from, now);
+                        // bill the engine time (submit → completion) to the
+                        // tenant's GPU-seconds ledger before releasing
+                        job.credit_tenant(now);
                         let tx = job.release();
                         let _ = tx.send(StreamItem::Done(c));
                     }
@@ -1275,30 +1331,43 @@ fn replica_loop(
             }
         }
 
-        window.maybe_flush(engine.as_ref(), state, &instance, queue.len());
+        window.maybe_flush(engine.as_ref(), state, &instance, fast.len() + slow.len());
     }
 }
 
-/// Promote queued jobs into free engine capacity. A job that overshot the
-/// queue-time budget or its deadline while waiting is shed with a 503 —
-/// the engine never spends compute on a request whose client has already
-/// been failed.
+/// Route an admitted job into its priority lane: latency/standard tiers
+/// ride `fast`, batch rides `slow`.
+fn enqueue_lane(fast: &mut VecDeque<Job>, slow: &mut VecDeque<Job>, job: Job) {
+    if job.tier.is_fast() {
+        fast.push_back(job);
+    } else {
+        slow.push_back(job);
+    }
+}
+
+/// Promote queued jobs into free engine capacity, draining the fast lane
+/// to exhaustion before the slow lane — a latency-tier request never
+/// queues behind batch work that arrived earlier. A job that overshot its
+/// (per-tenant) queue-time budget or its deadline while waiting is shed
+/// with a 503 — the engine never spends compute on a request whose client
+/// has already been failed.
 fn promote(
     engine: &mut dyn StreamEngine,
-    queue: &mut VecDeque<Job>,
+    fast: &mut VecDeque<Job>,
+    slow: &mut VecDeque<Job>,
     jobs: &mut HashMap<u64, Job>,
     state: &GatewayState,
     window: &mut FrameWindow,
 ) {
     while engine.pending_len() + engine.running_len() < engine.capacity() {
-        let Some(mut job) = queue.pop_front() else { break };
+        let Some(mut job) = fast.pop_front().or_else(|| slow.pop_front()) else { break };
         let waited = job.enqueued_at.elapsed();
         window.queue_wait_sum += waited.as_secs_f64();
         window.queue_wait_n += 1;
         state.metrics.observe_queue_wait(waited.as_secs_f64());
         let promoted_at = Instant::now();
         trace_phase(state, &job.trace, PHASE_QUEUE_WAIT, job.enqueued_at, promoted_at);
-        let budget = state.cfg.queue_budget;
+        let budget = job.queue_budget;
         let over_budget = budget > Duration::ZERO && waited > budget;
         if over_budget || promoted_at >= job.deadline {
             state.metrics.note_queue_shed();
@@ -1420,6 +1489,7 @@ fn route(
             let warm = state.warm.lock().unwrap().len();
             let warm_target = state.warm_target.load(Ordering::Acquire);
             let sup = state.supervisor.lock().unwrap().snapshot();
+            let tenants = state.tenants.snapshots();
             let body = {
                 let store = state.store.lock().unwrap();
                 metrics::render_prometheus(
@@ -1431,6 +1501,7 @@ fn route(
                     warm_target,
                     state.started.elapsed().as_secs_f64(),
                     &sup,
+                    &tenants,
                 )
             };
             finish(req, stream, state, "/metrics", t0, http::Response::prometheus(body))
@@ -1452,7 +1523,13 @@ fn route(
                 format!("{{\"ready\":{ready},\"replicas_ready\":{ready_n},\"replicas\":{live}}}");
             finish(req, stream, state, "/ready", t0, http::Response::json(status, body))
         }
-        ("POST", "/admin/scale") => admin_scale(req, stream, state, t0),
+        // versioned control API; the pre-v1 paths below stay as thin
+        // deprecated aliases for one release
+        ("POST", "/v1/admin/scale") => admin_scale(req, stream, state, t0, true),
+        ("GET", "/v1/admin/status") => admin_status(req, stream, state, t0),
+        ("POST", "/v1/admin/scale-up") => cluster_scale_up(req, stream, state, t0, true),
+        ("POST", "/v1/admin/scale-down") => cluster_scale_down(req, stream, state, t0, true),
+        ("POST", "/admin/scale") => admin_scale(req, stream, state, t0, false),
         ("GET", "/debug/traces") => {
             let body = state.tracer.export_json().to_string_compact();
             finish(req, stream, state, "/debug/traces", t0, http::Response::json(200, body))
@@ -1461,12 +1538,13 @@ fn route(
             let body = state.decisions.export_json().to_string_compact();
             finish(req, stream, state, "/debug/decisions", t0, http::Response::json(200, body))
         }
-        ("GET", "/cluster/status") => cluster_status(req, stream, state, t0),
-        ("POST", "/cluster/scale-up") => cluster_scale_up(req, stream, state, t0),
-        ("POST", "/cluster/scale-down") => cluster_scale_down(req, stream, state, t0),
+        ("GET", "/cluster/status") => cluster_status(req, stream, state, t0, false),
+        ("POST", "/cluster/scale-up") => cluster_scale_up(req, stream, state, t0, false),
+        ("POST", "/cluster/scale-down") => cluster_scale_down(req, stream, state, t0, false),
         (_, "/v1/completions" | "/v1/chat/completions" | "/admin/scale" | "/metrics" | "/healthz"
         | "/ready" | "/debug/traces" | "/debug/decisions" | "/cluster/status"
-        | "/cluster/scale-up" | "/cluster/scale-down") => {
+        | "/cluster/scale-up" | "/cluster/scale-down" | "/v1/admin/scale" | "/v1/admin/status"
+        | "/v1/admin/scale-up" | "/v1/admin/scale-down") => {
             let body = openai::to_wire(&openai::error_body(
                 "invalid_request_error",
                 &format!("method {} not allowed on {}", req.method, req.path),
@@ -1546,9 +1624,22 @@ fn serve_completion(
         .unwrap_or_else(|| TraceContext::mint(state.cfg.trace.sample_rate));
     let trace = ActiveTrace::begin(ctx, &state.service, endpoint);
 
-    // admission control: rate limiter, then the bounded in-flight gate
+    // tenant identity: explicit header, API key, then the OpenAI `user`
+    // field as a hint; unknown tenants fall back to the default roster
+    // entry, so anonymous traffic is served exactly as before
+    let api_key = req.header("authorization").and_then(|h| {
+        h.strip_prefix("Bearer ")
+            .or_else(|| h.strip_prefix("bearer "))
+    });
+    let tenant = state
+        .tenants
+        .resolve(req.header("x-enova-tenant"), api_key, params.user.as_deref());
+
+    // admission control: global rate limiter, the tenant's private
+    // bucket, then the bounded in-flight gate
     if let Some(bucket) = &state.bucket {
         if !bucket.lock().unwrap().try_take() {
+            tenant.note_rejected();
             state.metrics.note_rate_limited();
             trace_phase(state, &trace, PHASE_ADMISSION, trace.started(), Instant::now());
             let resp = http::Response::json(
@@ -1562,7 +1653,25 @@ fn serve_completion(
             return finish_traced(req, stream, state, endpoint, t0, &trace, resp);
         }
     }
+    if !tenant.try_admit() {
+        tenant.note_rejected();
+        state.metrics.note_rate_limited();
+        trace_phase(state, &trace, PHASE_ADMISSION, trace.started(), Instant::now());
+        let resp = http::Response::json(
+            429,
+            openai::to_wire(&openai::error_body(
+                "rate_limit_exceeded",
+                &format!(
+                    "tenant {} is over its configured rate limit; retry later",
+                    tenant.id()
+                ),
+            )),
+        )
+        .with_header("Retry-After", "1");
+        return finish_traced(req, stream, state, endpoint, t0, &trace, resp);
+    }
     let Some(permit) = AdmissionGate::try_acquire(&state.gate) else {
+        tenant.note_rejected();
         state.metrics.note_queue_full();
         trace_phase(state, &trace, PHASE_ADMISSION, trace.started(), Instant::now());
         let resp = http::Response::json(
@@ -1578,6 +1687,7 @@ fn serve_completion(
         .with_header("Retry-After", "1");
         return finish_traced(req, stream, state, endpoint, t0, &trace, resp);
     };
+    tenant.note_admitted();
     let admitted_at = Instant::now();
     trace_phase(state, &trace, PHASE_ADMISSION, trace.started(), admitted_at);
 
@@ -1614,6 +1724,9 @@ fn serve_completion(
             submitted_at: None,
             first_token_at: None,
             last_token_at: None,
+            tier: tenant.tier(),
+            queue_budget: tenant.queue_budget(state.cfg.queue_budget),
+            tenant: Arc::clone(&tenant),
         };
         // sending under the read lock is the drain invariant: retirement
         // removes the slot under the write lock *before* asking the worker
@@ -1867,19 +1980,25 @@ fn not_a_node(
     finish(req, stream, state, endpoint, t0, http::Response::json(404, body))
 }
 
-/// `GET /cluster/status` — the heartbeat row a cluster coordinator polls:
-/// replica counts, free GPU memory against the node's advertisement, and
-/// the node-aggregated Table II frame + arrival rate the cluster-wide
-/// supervisor scores.
-fn cluster_status(
-    req: &http::Request,
-    stream: &mut TcpStream,
-    state: &Arc<GatewayState>,
-    t0: Instant,
-) -> std::io::Result<()> {
-    let Some(identity) = state.cfg.node.clone() else {
-        return not_a_node(req, stream, state, "/cluster/status", t0);
-    };
+/// Sum of batch-tier tenants' trailing arrival rates — the numerator of
+/// the batch share the coordinator's tier-aware placement consumes.
+fn batch_arrival_rps(state: &GatewayState) -> f64 {
+    state
+        .tenants
+        .all()
+        .iter()
+        .filter(|t| t.tier() == SloTier::Batch)
+        .map(|t| t.arrival_rps(5))
+        .sum()
+}
+
+/// The status row served on `/v1/admin/status` and `/cluster/status`:
+/// replica counts, free GPU memory against the node's advertisement, the
+/// node-aggregated Table II frame + arrival rate the cluster-wide
+/// supervisor scores, and the batch-tier share for tier-aware placement.
+/// A plain (non-node) gateway reports a synthetic identity with no GPU
+/// advertisement.
+fn build_status(state: &Arc<GatewayState>) -> crate::cluster::proto::NodeStatus {
     let live = state.replicas.read().unwrap().len();
     let warm = state.warm.lock().unwrap().len();
     let ready_n = state.ready_replicas.load(Ordering::Acquire);
@@ -1887,38 +2006,93 @@ fn cluster_status(
         Some((f, w)) => (Some(f), w),
         None => (None, 0.0),
     };
-    let status = crate::cluster::proto::NodeStatus {
-        node_id: identity.node_id.clone(),
-        live_replicas: live,
-        warm_replicas: warm,
-        ready: live > 0 && ready_n >= live,
-        gpu_memory_total: identity.gpu_memory_total,
+    let (node_id, total, free) = match &state.cfg.node {
         // warm standbys hold fully initialized engines: their memory is
         // just as claimed as a live replica's, so the advertisement the
         // coordinator bin-packs on must count them
-        gpu_memory_free: (identity.gpu_memory_total
-            - (live + warm) as f64 * identity.replica_gpu_memory)
-            .max(0.0),
+        Some(id) => (
+            id.node_id.clone(),
+            id.gpu_memory_total,
+            (id.gpu_memory_total - (live + warm) as f64 * id.replica_gpu_memory).max(0.0),
+        ),
+        None => (state.service.clone(), 0.0, 0.0),
+    };
+    crate::cluster::proto::NodeStatus {
+        node_id,
+        live_replicas: live,
+        warm_replicas: warm,
+        ready: live > 0 && ready_n >= live,
+        gpu_memory_total: total,
+        gpu_memory_free: free,
         frame,
         arrival_rps: supervisor::forecast_sample(state, 3).unwrap_or(0.0),
         queue_wait,
-    };
-    let resp = http::Response::json(200, status.to_json().to_string_compact());
-    finish(req, stream, state, "/cluster/status", t0, resp)
+        batch_rps: batch_arrival_rps(state),
+    }
 }
 
-/// `POST /cluster/scale-up` — a coordinator placement landing on this
-/// node: bring one more replica live (warm promotion when the pool has a
-/// standby). `409` when the node is at its advertised ceiling, so the
-/// coordinator's inventory and the node's truth cannot drift silently.
-fn cluster_scale_up(
+/// `GET /v1/admin/status` — the versioned status row; unlike the
+/// node-only `/cluster/status` alias this answers on every role.
+fn admin_status(
     req: &http::Request,
     stream: &mut TcpStream,
     state: &Arc<GatewayState>,
     t0: Instant,
 ) -> std::io::Result<()> {
+    let body = build_status(state).to_json().to_string_compact();
+    finish(req, stream, state, "/v1/admin/status", t0, http::Response::json(200, body))
+}
+
+/// `GET /cluster/status` (deprecated alias of `/v1/admin/status`) — the
+/// heartbeat row a cluster coordinator polls; 404 off node mode, as the
+/// pre-v1 contract promised.
+fn cluster_status(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &Arc<GatewayState>,
+    t0: Instant,
+    _v1: bool,
+) -> std::io::Result<()> {
+    if state.cfg.node.is_none() {
+        return not_a_node(req, stream, state, "/cluster/status", t0);
+    }
+    let body = build_status(state).to_json().to_string_compact();
+    finish(req, stream, state, "/cluster/status", t0, http::Response::json(200, body))
+}
+
+/// A control-plane error rendered for the surface it was asked on: the
+/// versioned `/v1/admin/*` endpoints answer with the structured
+/// `{code, message, details}` body from [`crate::cluster::proto`], the
+/// deprecated aliases keep the OpenAI-style `{"error": {...}}` wrapper
+/// their existing callers parse.
+fn admin_error_response(v1: bool, status: u16, err: crate::cluster::proto::AdminError) -> http::Response {
+    if v1 {
+        http::Response::json(status, err.to_json().to_string_compact())
+    } else {
+        http::Response::json(status, openai::to_wire(&openai::error_body(&err.code, &err.message)))
+    }
+}
+
+/// `POST /v1/admin/scale-up` (alias `POST /cluster/scale-up`) — a
+/// coordinator placement landing on this node: bring one more replica
+/// live (warm promotion when the pool has a standby). `409` when the node
+/// is at its advertised ceiling, so the coordinator's inventory and the
+/// node's truth cannot drift silently.
+fn cluster_scale_up(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &Arc<GatewayState>,
+    t0: Instant,
+    v1: bool,
+) -> std::io::Result<()> {
+    use crate::cluster::proto::{AdminError, AdminNodeScaleResponse, ScaleDirection};
+    let endpoint = if v1 { "/v1/admin/scale-up" } else { "/cluster/scale-up" };
     let Some(identity) = state.cfg.node.clone() else {
-        return not_a_node(req, stream, state, "/cluster/scale-up", t0);
+        if v1 {
+            let err = AdminError::new("not_a_node", "this gateway is not running in cluster node mode");
+            return finish(req, stream, state, endpoint, t0, admin_error_response(true, 404, err));
+        }
+        return not_a_node(req, stream, state, endpoint, t0);
     };
     let live = state.replicas.read().unwrap().len();
     let warm = state.warm.lock().unwrap().len();
@@ -1928,15 +2102,18 @@ fn cluster_scale_up(
     // its advertisement fits
     let free = identity.gpu_memory_total - (live + warm) as f64 * identity.replica_gpu_memory;
     if live >= identity.max_replicas || free < identity.replica_gpu_memory || free <= 0.0 {
-        let body = openai::to_wire(&openai::error_body(
+        let err = AdminError::new(
             "node_full",
             &format!(
                 "node {} has no room: {live} live + {warm} warm replicas, {free:.2} \
                  gpu_memory free",
                 identity.node_id
             ),
-        ));
-        return finish(req, stream, state, "/cluster/scale-up", t0, http::Response::json(409, body));
+        )
+        .with_detail("node_id", &identity.node_id)
+        .with_detail("live_replicas", &live.to_string())
+        .with_detail("warm_replicas", &warm.to_string());
+        return finish(req, stream, state, endpoint, t0, admin_error_response(v1, 409, err));
     }
     match hot_add_replica(state) {
         Ok(id) => {
@@ -1950,31 +2127,42 @@ fn cluster_scale_up(
                     ("live_replicas", live.to_string()),
                 ],
             );
-            let body = format!(
-                "{{\"node_id\":{},\"replica_id\":{id},\"live_replicas\":{live}}}",
-                crate::util::json::s(&identity.node_id).to_string_compact()
-            );
-            finish(req, stream, state, "/cluster/scale-up", t0, http::Response::json(200, body))
+            let resp = AdminNodeScaleResponse {
+                node_id: identity.node_id.clone(),
+                direction: ScaleDirection::Up,
+                replica_id: id,
+                live_replicas: live,
+            };
+            let body = resp.to_json().to_string_compact();
+            finish(req, stream, state, endpoint, t0, http::Response::json(200, body))
         }
         Err(e) => {
-            let body = openai::to_wire(&openai::error_body("internal_error", &format!("{e}")));
-            finish(req, stream, state, "/cluster/scale-up", t0, http::Response::json(500, body))
+            let err = AdminError::new("internal_error", &format!("{e}"));
+            finish(req, stream, state, endpoint, t0, admin_error_response(v1, 500, err))
         }
     }
 }
 
-/// `POST /cluster/scale-down` — drain-then-retire this node's newest
-/// replica. `409` when only one replica is live: a node never retires its
-/// last routable replica (removing the whole node is the coordinator's
-/// call, not a drain's side effect).
+/// `POST /v1/admin/scale-down` (alias `POST /cluster/scale-down`) —
+/// drain-then-retire this node's newest replica. `409` when only one
+/// replica is live: a node never retires its last routable replica
+/// (removing the whole node is the coordinator's call, not a drain's
+/// side effect).
 fn cluster_scale_down(
     req: &http::Request,
     stream: &mut TcpStream,
     state: &Arc<GatewayState>,
     t0: Instant,
+    v1: bool,
 ) -> std::io::Result<()> {
+    use crate::cluster::proto::{AdminError, AdminNodeScaleResponse, ScaleDirection};
+    let endpoint = if v1 { "/v1/admin/scale-down" } else { "/cluster/scale-down" };
     let Some(identity) = state.cfg.node.clone() else {
-        return not_a_node(req, stream, state, "/cluster/scale-down", t0);
+        if v1 {
+            let err = AdminError::new("not_a_node", "this gateway is not running in cluster node mode");
+            return finish(req, stream, state, endpoint, t0, admin_error_response(true, 404, err));
+        }
+        return not_a_node(req, stream, state, endpoint, t0);
     };
     let newest = {
         let replicas = state.replicas.read().unwrap();
@@ -1985,11 +2173,12 @@ fn cluster_scale_down(
         }
     };
     let Some(id) = newest else {
-        let body = openai::to_wire(&openai::error_body(
+        let err = AdminError::new(
             "node_at_floor",
             &format!("node {} will not retire its last replica", identity.node_id),
-        ));
-        return finish(req, stream, state, "/cluster/scale-down", t0, http::Response::json(409, body));
+        )
+        .with_detail("node_id", &identity.node_id);
+        return finish(req, stream, state, endpoint, t0, admin_error_response(v1, 409, err));
     };
     match retire_replica(state, id) {
         Ok(()) => {
@@ -2003,78 +2192,104 @@ fn cluster_scale_down(
                     ("live_replicas", live.to_string()),
                 ],
             );
-            let body = format!(
-                "{{\"node_id\":{},\"retired\":{id},\"live_replicas\":{live}}}",
-                crate::util::json::s(&identity.node_id).to_string_compact()
-            );
-            finish(req, stream, state, "/cluster/scale-down", t0, http::Response::json(200, body))
+            let resp = AdminNodeScaleResponse {
+                node_id: identity.node_id.clone(),
+                direction: ScaleDirection::Down,
+                replica_id: id,
+                live_replicas: live,
+            };
+            let body = resp.to_json().to_string_compact();
+            finish(req, stream, state, endpoint, t0, http::Response::json(200, body))
         }
         Err(e) => {
-            let body = openai::to_wire(&openai::error_body("internal_error", &format!("{e}")));
-            finish(req, stream, state, "/cluster/scale-down", t0, http::Response::json(500, body))
+            let err = AdminError::new("internal_error", &format!("{e}"));
+            finish(req, stream, state, endpoint, t0, admin_error_response(v1, 500, err))
         }
     }
 }
 
+/// `POST /v1/admin/scale` (alias `POST /admin/scale`) — replace the
+/// router's replica weight table. The versioned surface validates through
+/// [`crate::cluster::proto::AdminScaleRequest`] and reports failures as
+/// structured `{code, message, details}` bodies; the deprecated alias
+/// keeps its original OpenAI-style error strings for one release.
 fn admin_scale(
     req: &http::Request,
     stream: &mut TcpStream,
     state: &GatewayState,
     t0: Instant,
+    v1: bool,
 ) -> std::io::Result<()> {
+    use crate::cluster::proto::{AdminError, AdminScaleRequest, AdminScaleResponse, ReplicaWeight};
+    let endpoint = if v1 { "/v1/admin/scale" } else { "/admin/scale" };
     let bad = |msg: &str| {
-        http::Response::json(
-            400,
-            openai::to_wire(&openai::error_body("invalid_request_error", msg)),
-        )
+        if v1 {
+            admin_error_response(true, 400, AdminError::new("invalid_request", msg))
+        } else {
+            http::Response::json(
+                400,
+                openai::to_wire(&openai::error_body("invalid_request_error", msg)),
+            )
+        }
     };
     let body = match req.body_str() {
         Ok(b) => b,
-        Err(e) => return finish(req, stream, state, "/admin/scale", t0, bad(&e.message)),
+        Err(e) => return finish(req, stream, state, endpoint, t0, bad(&e.message)),
     };
     let json = match Json::parse(body) {
         Ok(j) => j,
         Err(e) => {
-            return finish(req, stream, state, "/admin/scale", t0, bad(&format!("invalid JSON: {e}")))
+            return finish(req, stream, state, endpoint, t0, bad(&format!("invalid JSON: {e}")))
         }
     };
-    let Some(entries) = json.get("replicas").and_then(Json::as_arr) else {
-        return finish(
-            req,
-            stream,
-            state,
-            "/admin/scale",
-            t0,
-            bad("body must be {\"replicas\": [{\"id\": N, \"weight\": W}, ...]}"),
-        );
-    };
-    if entries.is_empty() {
-        return finish(req, stream, state, "/admin/scale", t0, bad("replica set must not be empty"));
-    }
-    let mut weights: Vec<(u64, f64)> = Vec::with_capacity(entries.len());
-    for e in entries {
-        let id = match e.get("id").and_then(Json::as_f64) {
-            Some(x) if x >= 0.0 && x.fract() == 0.0 => x as u64,
-            _ => {
-                return finish(
-                    req,
-                    stream,
-                    state,
-                    "/admin/scale",
-                    t0,
-                    bad("each replica needs a non-negative integer \"id\""),
-                )
+    let weights: Vec<(u64, f64)> = if v1 {
+        // versioned surface: one typed parser, shared with every client
+        match AdminScaleRequest::from_json(&json) {
+            Ok(r) => r.replicas.iter().map(|w| (w.id, w.weight)).collect(),
+            Err(e) => {
+                return finish(req, stream, state, endpoint, t0, admin_error_response(true, 400, e))
             }
-        };
-        let weight = match e.get("weight").and_then(Json::as_f64) {
-            Some(w) if w > 0.0 => w,
-            _ => return finish(req, stream, state, "/admin/scale", t0, bad("each replica needs a positive \"weight\"")),
-        };
-        if weights.iter().any(|&(seen, _)| seen == id) {
-            return finish(req, stream, state, "/admin/scale", t0, bad(&format!("duplicate replica id {id}")));
         }
-        weights.push((id, weight));
-    }
+    } else {
+        let Some(entries) = json.get("replicas").and_then(Json::as_arr) else {
+            return finish(
+                req,
+                stream,
+                state,
+                endpoint,
+                t0,
+                bad("body must be {\"replicas\": [{\"id\": N, \"weight\": W}, ...]}"),
+            );
+        };
+        if entries.is_empty() {
+            return finish(req, stream, state, endpoint, t0, bad("replica set must not be empty"));
+        }
+        let mut weights: Vec<(u64, f64)> = Vec::with_capacity(entries.len());
+        for e in entries {
+            let id = match e.get("id").and_then(Json::as_f64) {
+                Some(x) if x >= 0.0 && x.fract() == 0.0 => x as u64,
+                _ => {
+                    return finish(
+                        req,
+                        stream,
+                        state,
+                        endpoint,
+                        t0,
+                        bad("each replica needs a non-negative integer \"id\""),
+                    )
+                }
+            };
+            let weight = match e.get("weight").and_then(Json::as_f64) {
+                Some(w) if w > 0.0 => w,
+                _ => return finish(req, stream, state, endpoint, t0, bad("each replica needs a positive \"weight\"")),
+            };
+            if weights.iter().any(|&(seen, _)| seen == id) {
+                return finish(req, stream, state, endpoint, t0, bad(&format!("duplicate replica id {id}")));
+            }
+            weights.push((id, weight));
+        }
+        weights
+    };
     // validate the whole id set against *live workers*: weighting a
     // retired or never-spawned replica would route traffic into the void
     // (requests would hang until timeout with no worker to serve them)
@@ -2090,25 +2305,23 @@ fn admin_scale(
         )
     };
     if !unknown.is_empty() {
-        return finish(
-            req,
-            stream,
-            state,
-            "/admin/scale",
-            t0,
-            bad(&format!("unknown replica ids {unknown:?}; live replicas are {known:?}")),
-        );
+        let msg = format!("unknown replica ids {unknown:?}; live replicas are {known:?}");
+        let resp = if v1 {
+            let err = AdminError::new("unknown_replica", &msg)
+                .with_detail("unknown", &format!("{unknown:?}"))
+                .with_detail("live", &format!("{known:?}"));
+            admin_error_response(true, 400, err)
+        } else {
+            bad(&msg)
+        };
+        return finish(req, stream, state, endpoint, t0, resp);
     }
     state.router.write().unwrap().set_weights(&weights);
     crate::info!("gateway", "ingress update applied: {weights:?}");
-    let applied: Vec<String> = weights
-        .iter()
-        .map(|(id, w)| format!("{{\"id\":{id},\"weight\":{w}}}"))
-        .collect();
-    let body = format!(
-        "{{\"applied\":[{}],\"routable_replicas\":{}}}",
-        applied.join(","),
-        weights.len()
-    );
-    finish(req, stream, state, "/admin/scale", t0, http::Response::json(200, body))
+    let resp = AdminScaleResponse {
+        applied: weights.iter().map(|&(id, weight)| ReplicaWeight { id, weight }).collect(),
+        routable_replicas: weights.len(),
+    };
+    let body = resp.to_json().to_string_compact();
+    finish(req, stream, state, endpoint, t0, http::Response::json(200, body))
 }

@@ -17,6 +17,9 @@ pub struct CompletionParams {
     pub max_tokens: usize,
     pub stream: bool,
     pub model: String,
+    /// OpenAI's end-user identifier; the gateway treats it as a tenant
+    /// hint of last resort (header and API key take precedence)
+    pub user: Option<String>,
 }
 
 fn opt_usize(j: &Json, key: &str) -> Result<Option<usize>, String> {
@@ -43,6 +46,7 @@ fn common(j: &Json, prompt: String, default_max: usize) -> Result<CompletionPara
             .and_then(Json::as_str)
             .unwrap_or(DEFAULT_MODEL)
             .to_string(),
+        user: j.get("user").and_then(Json::as_str).map(str::to_string),
     })
 }
 
@@ -254,6 +258,17 @@ mod tests {
 
         let arr = Json::parse(r#"{"prompt": ["only one"]}"#).unwrap();
         assert_eq!(parse_completion(&arr, 64).unwrap().prompt, "only one");
+    }
+
+    #[test]
+    fn user_field_is_optional_and_carried_through() {
+        let j = Json::parse(r#"{"prompt": "hi", "user": "tenant-7"}"#).unwrap();
+        assert_eq!(parse_completion(&j, 64).unwrap().user.as_deref(), Some("tenant-7"));
+        let j = Json::parse(r#"{"prompt": "hi"}"#).unwrap();
+        assert_eq!(parse_completion(&j, 64).unwrap().user, None);
+        // a non-string user is ignored, not an error (OpenAI tolerates it)
+        let j = Json::parse(r#"{"prompt": "hi", "user": 9}"#).unwrap();
+        assert_eq!(parse_completion(&j, 64).unwrap().user, None);
     }
 
     #[test]

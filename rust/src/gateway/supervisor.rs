@@ -30,10 +30,11 @@
 use super::GatewayState;
 use crate::autoscaler::Action;
 use crate::detect::{Detection, ScaleDirection, ZscoreDetector};
-use crate::forecast::{ForecastConfig, Forecaster};
+use crate::forecast::{ForecastConfig, Forecaster, MultiForecaster};
 use crate::metrics::Frame;
 use crate::simulator::gpu::{GpuSpec, RTX4090_24G};
 use crate::simulator::modelcard::{ModelCard, MISTRAL_7B};
+use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -105,6 +106,11 @@ pub struct ForecastPolicy {
     /// warm standbys kept even when no promotions are anticipated, so the
     /// first proactive scale-up is always O(route-update)
     pub min_warm: usize,
+    /// cost-aware trough scale-down: retire replicas *before* they go
+    /// idle when both the cluster forecaster and the per-tenant mixture
+    /// forecast predict a demand trough at the horizon. Off, replicas are
+    /// only retired reactively (detector underload)
+    pub trough_scale_down: bool,
 }
 
 impl Default for ForecastPolicy {
@@ -116,6 +122,7 @@ impl Default for ForecastPolicy {
             replica_capacity_rps: 0.0,
             headroom: 0.15,
             min_warm: 1,
+            trough_scale_down: false,
         }
     }
 }
@@ -217,6 +224,11 @@ pub(super) struct SupervisorStatus {
     /// detector- or queue-guard-triggered
     pub proactive_events: u64,
     pub reactive_events: u64,
+    /// latest sum of the per-tenant mixture forecasts (0 until every
+    /// tenant's component can answer)
+    pub last_tenant_forecast: f64,
+    /// forecast-triggered retires executed before the replicas went idle
+    pub trough_events: u64,
 }
 
 impl SupervisorStatus {
@@ -245,6 +257,8 @@ impl SupervisorStatus {
             forecast_degraded: self.forecast_degraded,
             proactive_events: self.proactive_events,
             reactive_events: self.reactive_events,
+            last_tenant_forecast: self.last_tenant_forecast,
+            trough_events: self.trough_events,
         }
     }
 }
@@ -267,6 +281,8 @@ pub struct SupervisorSnapshot {
     pub forecast_degraded: bool,
     pub proactive_events: u64,
     pub reactive_events: u64,
+    pub last_tenant_forecast: f64,
+    pub trough_events: u64,
 }
 
 /// Consecutive-sample counters feeding the patience rule. Pure logic so
@@ -344,6 +360,13 @@ struct ForecastState {
     /// peak per-replica finish rate observed under pressure — the learned
     /// stand-in for service capacity when the policy does not configure one
     learned_capacity: f64,
+    /// one forecaster per tenant over its admitted-request rate; every
+    /// tenant is observed every tick (zeros included) so the mixture's
+    /// components mature in lockstep and `forecast_sum` can answer
+    tenants: MultiForecaster,
+    /// previous tick's admitted-counter reading per tenant, for the
+    /// per-interval delta that feeds the tenant forecasters
+    last_admitted: BTreeMap<String, u64>,
 }
 
 /// Run the supervisor until the gateway stops. Spawned by
@@ -361,13 +384,18 @@ pub(super) fn supervisor_loop(state: &Arc<GatewayState>, cfg: SupervisorConfig) 
         last_applied: None,
         last_target: None,
     });
-    let mut forecast_state = cfg.forecast.as_ref().map(|p| ForecastState {
-        forecaster: Forecaster::new(ForecastConfig {
+    let mut forecast_state = cfg.forecast.as_ref().map(|p| {
+        let fc = ForecastConfig {
             horizon: p.horizon_steps.max(1),
             season: p.season_steps,
             ..ForecastConfig::default()
-        }),
-        learned_capacity: 0.0,
+        };
+        ForecastState {
+            forecaster: Forecaster::new(fc.clone()),
+            learned_capacity: 0.0,
+            tenants: MultiForecaster::new(fc),
+            last_admitted: BTreeMap::new(),
+        }
     });
 
     crate::info!(
@@ -623,10 +651,12 @@ fn maybe_reconfigure(
     true
 }
 
-/// One tick of the proactive planner: feed the forecaster, publish the
-/// forecast gauges, size the warm pool for the anticipated promotions and
-/// pre-promote when predicted demand exceeds live capacity. Returns true
-/// when a proactive scale-up was executed.
+/// One tick of the proactive planner: feed the cluster forecaster and the
+/// per-tenant mixture, publish the forecast gauges, size the warm pool for
+/// the anticipated promotions, pre-promote when predicted demand exceeds
+/// live capacity — and, with [`ForecastPolicy::trough_scale_down`], retire
+/// replicas *before* they go idle when both forecasts agree a trough is
+/// ahead. Returns true when a proactive scale action was executed.
 fn maybe_forecast_scale(
     state: &Arc<GatewayState>,
     cfg: &SupervisorConfig,
@@ -650,14 +680,31 @@ fn maybe_forecast_scale(
     }
     fs.forecaster.observe(total);
 
-    let pred = fs.forecaster.forecast(policy.horizon_steps.max(1));
+    // per-tenant mixture feed: every tenant observed every tick, as the
+    // per-interval delta of its admitted counter (a rate in req/s). The
+    // first tick a tenant is seen contributes 0, not a counter-sized spike.
+    let interval = cfg.sample_interval.as_secs_f64().max(1e-3);
+    for t in state.tenants.all() {
+        let admitted = t.admitted_total();
+        let prev = fs
+            .last_admitted
+            .insert(t.id().to_string(), admitted)
+            .unwrap_or(admitted);
+        fs.tenants.observe(t.id(), admitted.saturating_sub(prev) as f64 / interval);
+    }
+
+    let horizon = policy.horizon_steps.max(1);
+    let pred = fs.forecaster.forecast(horizon);
     let err = fs.forecaster.error();
     let degraded = fs.forecaster.degraded(policy.err_budget);
+    let tenant_pred = fs.tenants.forecast_sum(horizon);
+    let tenant_ok = tenant_pred.is_some() && !fs.tenants.degraded(policy.err_budget);
     {
         let mut status = state.supervisor.lock().unwrap();
         status.last_forecast = pred.unwrap_or(0.0);
         status.forecast_error = err.unwrap_or(0.0);
         status.forecast_degraded = degraded;
+        status.last_tenant_forecast = tenant_pred.unwrap_or(0.0);
     }
 
     let capacity = if policy.replica_capacity_rps > 0.0 {
@@ -680,49 +727,102 @@ fn maybe_forecast_scale(
         }
     };
 
-    let needed = crate::forecast::replicas_for_rate(
-        pred,
-        capacity,
-        policy.headroom,
-        cfg.min_replicas,
-        cfg.max_replicas,
-    );
+    let replicas_for = |rate: f64| {
+        crate::forecast::replicas_for_rate(
+            rate,
+            capacity,
+            policy.headroom,
+            cfg.min_replicas,
+            cfg.max_replicas,
+        )
+    };
+    // plan capacity on the more pessimistic of the two views: the cluster
+    // aggregate or the sum of the per-tenant mixture components
+    let planning_rate = match tenant_pred {
+        Some(tp) if tenant_ok => pred.max(tp),
+        _ => pred,
+    };
+    let needed = replicas_for(planning_rate);
     // keep enough standbys that reaching `needed` stays O(route-update)
     let warm_target = needed.saturating_sub(live).max(policy.min_warm);
     super::set_warm_target(state, warm_target);
-    if needed <= live {
-        return false;
-    }
     let cooled = last_action
         .map(|t| t.elapsed() >= cfg.cooldown)
         .unwrap_or(true);
-    if !cooled || live >= cfg.max_replicas {
-        return false;
-    }
-    match super::hot_add_replica(state) {
-        Ok(id) => {
-            crate::info!(
-                "gateway",
-                "proactive scale-up: predicted {pred:.1} rps vs {capacity:.1} rps/replica \
-                 x{live} live -> target {needed} (err {:.3})",
-                err.unwrap_or(0.0)
-            );
-            record_event(
-                state,
-                0.0,
-                0.0,
-                ScaleDirection::Up,
-                Trigger::Forecast,
-                Action::AddReplica,
-                id,
-            );
-            *last_action = Some(Instant::now());
-            true
+    if needed > live {
+        if !cooled || live >= cfg.max_replicas {
+            return false;
         }
-        Err(e) => {
-            crate::error!("gateway", "proactive scale-up failed: {e}");
-            false
+        match super::hot_add_replica(state) {
+            Ok(id) => {
+                crate::info!(
+                    "gateway",
+                    "proactive scale-up: predicted {planning_rate:.1} rps vs {capacity:.1} \
+                     rps/replica x{live} live -> target {needed} (err {:.3})",
+                    err.unwrap_or(0.0)
+                );
+                record_event(
+                    state,
+                    0.0,
+                    0.0,
+                    ScaleDirection::Up,
+                    Trigger::Forecast,
+                    Action::AddReplica,
+                    id,
+                );
+                *last_action = Some(Instant::now());
+                true
+            }
+            Err(e) => {
+                crate::error!("gateway", "proactive scale-up failed: {e}");
+                false
+            }
         }
+    } else if policy.trough_scale_down && needed < live {
+        // cost-aware trough scale-down: retire *before* idle, but only
+        // when both views agree — a single forecaster predicting a trough
+        // the tenant mixture does not see is not enough evidence to give
+        // up paid-for capacity
+        if !cooled || live <= cfg.min_replicas {
+            return false;
+        }
+        let tenant_trough = match tenant_pred {
+            Some(tp) if tenant_ok => replicas_for(tp) < live,
+            _ => false,
+        };
+        if !tenant_trough {
+            return false;
+        }
+        let id = state.replicas.read().unwrap().keys().max().copied();
+        let Some(id) = id else { return false };
+        match super::retire_replica(state, id) {
+            Ok(()) => {
+                crate::info!(
+                    "gateway",
+                    "trough scale-down: predicted {planning_rate:.1} rps (tenant mixture \
+                     {:.1}) vs {capacity:.1} rps/replica x{live} live -> target {needed}",
+                    tenant_pred.unwrap_or(0.0)
+                );
+                record_event(
+                    state,
+                    0.0,
+                    0.0,
+                    ScaleDirection::Down,
+                    Trigger::Forecast,
+                    Action::ScaleDown,
+                    id,
+                );
+                state.supervisor.lock().unwrap().trough_events += 1;
+                *last_action = Some(Instant::now());
+                true
+            }
+            Err(e) => {
+                crate::error!("gateway", "trough scale-down failed: {e}");
+                false
+            }
+        }
+    } else {
+        false
     }
 }
 

@@ -67,6 +67,7 @@ pub mod metrics;
 pub mod router;
 #[cfg(feature = "xla-runtime")]
 pub mod runtime;
+pub mod settings;
 pub mod trace;
 pub mod tsdb;
 

@@ -9,6 +9,12 @@ enova — autoscaling towards cost-effective and stable serverless LLM serving
 
 USAGE: enova <COMMAND> [OPTIONS]
 
+  --config enova.toml layers file settings under the flags for the serving
+  roles (serve-http / node / serve-http --cluster): file values are
+  defaults, explicit flags win. `[tenants.NAME]` sections define the
+  multi-tenant roster (tier = latency|standard|batch, rate_limit,
+  rate_burst, queue_budget_ms, api_keys).
+
 COMMANDS:
   serve       serve prompts on the compiled tiny LM (options: --prompts N --max-tokens N)
   serve-http  OpenAI-compatible HTTP gateway (--port 8080 --replicas 2 --engine auto|lm|sim
@@ -23,7 +29,7 @@ COMMANDS:
               --reconfig-window N]
               --forecast [--forecast-horizon-ms N --forecast-err-budget F
               --forecast-season-ms N --forecast-capacity RPS --forecast-headroom F
-              --forecast-min-warm N])
+              --forecast-min-warm N --trough-scale-down])
               distributed plane: --cluster turns this process into the cluster
               coordinator (ingress + heartbeats + cross-node placement; no local
               engines): [--heartbeat-ms N --node-timeout-beats N
@@ -59,6 +65,7 @@ fn main() -> anyhow::Result<()> {
         "strict",
         "forecast",
         "cluster",
+        "trough-scale-down",
         "no-cluster-bench",
         "no-saturation-bench",
         "log-json",
@@ -67,10 +74,28 @@ fn main() -> anyhow::Result<()> {
         enova::util::log::set_json(true);
     }
     let cmd = args.subcommand();
+    // `--config enova.toml`: layered settings. File values become
+    // defaults for the serving roles, explicit flags always win; the
+    // process role itself (serve-http / --cluster / node) stays a
+    // command-line decision. `[tenants.*]` sections become the tenant
+    // registry of whichever role starts.
+    let settings = match args.get("config") {
+        Some(path) => enova::settings::EnovaConfig::load(path)?,
+        None => enova::settings::EnovaConfig::default(),
+    };
+    let role = match cmd.as_str() {
+        "serve-http" if args.flag("cluster") => "coordinator",
+        "serve-http" => "gateway",
+        "node" => "node",
+        _ => "",
+    };
+    if !role.is_empty() {
+        settings.apply(role, &mut args);
+    }
     match cmd.as_str() {
         "serve" => serve(&args),
-        "serve-http" => serve_http(&args),
-        "node" => node_cmd(&args),
+        "serve-http" => serve_http(&args, &settings.tenants),
+        "node" => node_cmd(&args, &settings.tenants),
         "loadgen" => loadgen_cmd(&args),
         "bench-gateway" => bench_gateway(&args),
         "recommend" => recommend(&args),
@@ -271,13 +296,16 @@ fn ingress_from_args(args: &Args) -> anyhow::Result<enova::gateway::IngressMode>
 ///
 /// `--trace-sample F --trace-slo-ms N`: the request-tracing knobs shared
 /// by the gateway, the node and the coordinator.
-fn serve_http(args: &Args) -> anyhow::Result<()> {
+///
+/// `tenants` is the `[tenants.*]` roster from `--config enova.toml`
+/// (empty -> the built-in default roster).
+fn serve_http(args: &Args, tenants: &[enova::gateway::admission::TenantSpec]) -> anyhow::Result<()> {
     use enova::gateway::supervisor::{ForecastPolicy, ReconfigPolicy, SupervisorConfig};
     use enova::gateway::{Gateway, GatewayConfig};
     use std::time::Duration;
 
     if args.flag("cluster") {
-        return serve_cluster(args);
+        return serve_cluster(args, tenants);
     }
 
     let replicas = args.get_usize("replicas", 2).max(1);
@@ -295,6 +323,7 @@ fn serve_http(args: &Args) -> anyhow::Result<()> {
         replica_capacity_rps: args.get_f64("forecast-capacity", 0.0),
         headroom: args.get_f64("forecast-headroom", 0.15),
         min_warm: args.get_usize("forecast-min-warm", 1),
+        trough_scale_down: args.flag("trough-scale-down"),
     });
     let reconfig_policy = reconfig.then(|| ReconfigPolicy {
         interval: Duration::from_millis(args.get_usize("reconfig-interval-ms", 10_000) as u64),
@@ -334,6 +363,7 @@ fn serve_http(args: &Args) -> anyhow::Result<()> {
         warm_pool: args.get_usize("warm-pool", 0),
         ingress: ingress_from_args(args)?,
         trace: trace_settings_from_args(args),
+        tenants: tenants.to_vec(),
         ..GatewayConfig::default()
     };
     let warm_pool = cfg.warm_pool;
@@ -356,7 +386,7 @@ fn serve_http(args: &Args) -> anyhow::Result<()> {
 /// with retry-on-node-death), heartbeats the registered node fleet, and
 /// runs the supervisor cluster-wide — scale decisions become placements
 /// (`/metrics` exports `enova_cluster_*`).
-fn serve_cluster(args: &Args) -> anyhow::Result<()> {
+fn serve_cluster(args: &Args, tenants: &[enova::gateway::admission::TenantSpec]) -> anyhow::Result<()> {
     use enova::cluster::coordinator::{ClusterPolicy, Coordinator, CoordinatorConfig};
     use enova::gateway::supervisor::ForecastPolicy;
     use std::time::Duration;
@@ -375,6 +405,7 @@ fn serve_cluster(args: &Args) -> anyhow::Result<()> {
         replica_capacity_rps: args.get_f64("forecast-capacity", 0.0),
         headroom: args.get_f64("forecast-headroom", 0.15),
         min_warm: args.get_usize("forecast-min-warm", 1),
+        trough_scale_down: args.flag("trough-scale-down"),
     });
     let port = args.get_usize("port", 8080);
     anyhow::ensure!(port <= u16::MAX as usize, "--port must be 0..=65535 (got {port})");
@@ -403,6 +434,7 @@ fn serve_cluster(args: &Args) -> anyhow::Result<()> {
         },
         ingress: ingress_from_args(args)?,
         trace: trace_settings_from_args(args),
+        tenants: tenants.to_vec(),
         ..CoordinatorConfig::default()
     };
     let coordinator = Coordinator::start(cfg)?;
@@ -420,7 +452,7 @@ fn serve_cluster(args: &Args) -> anyhow::Result<()> {
 /// `enova node`: one serving node of the distributed plane — the full
 /// gateway (engines, warm pool, `/metrics`) in node mode, registering
 /// with a coordinator and executing its placement decisions.
-fn node_cmd(args: &Args) -> anyhow::Result<()> {
+fn node_cmd(args: &Args, tenants: &[enova::gateway::admission::TenantSpec]) -> anyhow::Result<()> {
     use enova::cluster::node::{NodeConfig, NodeServer};
     use enova::cluster::NodeIdentity;
     use enova::gateway::GatewayConfig;
@@ -458,6 +490,7 @@ fn node_cmd(args: &Args) -> anyhow::Result<()> {
             warm_pool: args.get_usize("warm-pool", 0),
             ingress: ingress_from_args(args)?,
             trace: trace_settings_from_args(args),
+            tenants: tenants.to_vec(),
             ..GatewayConfig::default()
         },
         identity,
@@ -546,6 +579,14 @@ fn loadgen_cmd(args: &Args) -> anyhow::Result<()> {
             report.errors,
             non_2xx,
             report.status_counts
+        );
+        // graded per-tenant SLOs (mixture scenarios): every tenant with a
+        // p95 budget must be inside it
+        let violations = report.slo_violations();
+        anyhow::ensure!(
+            violations.is_empty(),
+            "strict loadgen failed per-tenant SLO grading:\n  {}",
+            violations.join("\n  ")
         );
     }
     Ok(())

@@ -249,6 +249,31 @@ impl NodeRouterSnapshot {
         let name = self.names.get(&handle.id)?.clone();
         Some((name, handle))
     }
+
+    /// Least-loaded dispatch restricted to `preferred` nodes (minus
+    /// `exclude`), falling back to the full set when no preferred node is
+    /// routable — a preference, never a filter, so SLO-tier affinity can
+    /// steer traffic without ever stranding a request. Used by the
+    /// coordinator to keep latency-tier tenants off batch-heavy nodes.
+    pub fn dispatch_preferring(
+        &self,
+        preferred: &[String],
+        exclude: &[String],
+    ) -> Option<(String, Arc<ReplicaHandle>)> {
+        let preferred_slots: Vec<u64> = preferred
+            .iter()
+            .filter(|n| !exclude.contains(n))
+            .filter_map(|n| self.slots.get(n).copied())
+            .collect();
+        if !preferred_slots.is_empty() {
+            if let Some(handle) = self.inner.dispatch_where(|id| preferred_slots.contains(&id)) {
+                if let Some(name) = self.names.get(&handle.id).cloned() {
+                    return Some((name, handle));
+                }
+            }
+        }
+        self.dispatch_excluding(exclude)
+    }
 }
 
 impl NodeRouter {
@@ -564,6 +589,30 @@ mod tests {
         let small = r.inflight_of("small") as f64;
         let ratio = big / small;
         assert!((1.8..2.2).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn snapshot_preferring_steers_but_never_strands() {
+        let r = node_router(&[("quiet", 1.0), ("batchy", 1.0)]);
+        let snap = r.snapshot();
+        // preference honored while the preferred node is routable
+        for _ in 0..4 {
+            let (name, h) = snap.dispatch_preferring(&["quiet".to_string()], &[]).unwrap();
+            assert_eq!(name, "quiet");
+            h.complete();
+        }
+        // preferred node excluded this attempt: fall back, don't strand
+        let (name, h) = snap
+            .dispatch_preferring(&["quiet".to_string()], &["quiet".to_string()])
+            .unwrap();
+        assert_eq!(name, "batchy");
+        h.complete();
+        // unknown preferred names fall back to the full set
+        let (name, h) = snap.dispatch_preferring(&["ghost".to_string()], &[]).unwrap();
+        assert!(name == "quiet" || name == "batchy");
+        h.complete();
+        // empty preference behaves exactly like dispatch_excluding
+        assert!(snap.dispatch_preferring(&[], &[]).is_some());
     }
 
     #[test]

@@ -1,0 +1,365 @@
+//! Layered run configuration: `--config enova.toml`.
+//!
+//! The CLI grew one flag per knob; a fleet deployment wants the knobs in
+//! a reviewable file instead of a 30-flag systemd unit. This module loads
+//! a *subset of TOML* (hand-parsed — the offline crate set has no toml
+//! crate) into an [`EnovaConfig`] and layers it **under** the parsed
+//! [`Args`]: file values become defaults, explicit CLI flags always win.
+//!
+//! Recognized shape:
+//!
+//! ```toml
+//! # keys before any section apply to every subcommand
+//! host = "0.0.0.0"
+//!
+//! [gateway]        # `enova serve-http`
+//! port = 8080
+//! replicas = 2
+//! autoscale = true # boolean true sets the --autoscale flag
+//!
+//! [coordinator]    # `enova serve-http --cluster`
+//! port = 8080
+//! forecast = true
+//!
+//! [node]           # `enova node`
+//! coordinator = "127.0.0.1:8080"
+//! gpu-memory = 24.0
+//!
+//! [tenants.chat]   # one section per tenant -> TenantRegistry
+//! tier = "latency"
+//! rate_limit = 50.0
+//! rate_burst = 100
+//! queue_budget_ms = 250
+//! api_keys = ["chat-key-1", "chat-key-2"]
+//! ```
+//!
+//! Key names map to flag names with `_` and `-` interchangeable
+//! (`queue_budget_ms` and `queue-budget-ms` are the same key). Booleans
+//! map to flags: `true` sets the flag, `false` is a no-op (the CLI has no
+//! negation spelling, so a file cannot un-set a flag the user passed).
+//! Values are kept as their source text and parsed by the same typed
+//! `Args` getters the flags use, so a file value and a flag value can
+//! never disagree on parsing rules.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::gateway::admission::{SloTier, TenantSpec};
+use crate::util::cli::Args;
+
+/// One parsed scalar from the config file. Numbers keep their source
+/// text so `port = 8080` reaches `Args::get_usize` as `"8080"`, not a
+/// float re-rendering.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    /// numeric literal, verbatim
+    Num(String),
+    Bool(bool),
+    /// array of strings (only used for `api_keys`)
+    List(Vec<String>),
+}
+
+impl Value {
+    fn as_flag_text(&self) -> Option<String> {
+        match self {
+            Value::Str(s) => Some(s.clone()),
+            Value::Num(n) => Some(n.clone()),
+            Value::Bool(_) | Value::List(_) => None,
+        }
+    }
+}
+
+/// The layered run configuration: top-level keys (every role), one
+/// key-map per `[section]`, and the `[tenants.*]` roster.
+#[derive(Debug, Default, Clone)]
+pub struct EnovaConfig {
+    /// keys before any `[section]` header — defaults for every subcommand
+    pub global: BTreeMap<String, Value>,
+    /// `[gateway]` / `[node]` / `[coordinator]` (anything else is an error)
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+    /// `[tenants.NAME]` sections, in file order
+    pub tenants: Vec<TenantSpec>,
+}
+
+/// The `[section]` names a config file may declare besides `[tenants.*]`.
+const ROLES: [&str; 3] = ["gateway", "node", "coordinator"];
+
+impl EnovaConfig {
+    /// Read and parse `path`; errors carry the file path and line number.
+    pub fn load(path: &str) -> Result<EnovaConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading --config {path}"))?;
+        EnovaConfig::parse(&text).with_context(|| format!("parsing --config {path}"))
+    }
+
+    /// Parse the TOML subset described in the module docs.
+    pub fn parse(text: &str) -> Result<EnovaConfig> {
+        let mut cfg = EnovaConfig::default();
+        // None = top-level; Some(role) = a role section; tenants are
+        // accumulated into `pending` until the next header closes them
+        let mut role: Option<String> = None;
+        let mut tenant: Option<TenantSpec> = None;
+        for (idx, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            let lineno = idx + 1;
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(header) = line.strip_prefix('[') {
+                let Some(name) = header.strip_suffix(']') else {
+                    bail!("line {lineno}: unterminated section header {line:?}");
+                };
+                if let Some(t) = tenant.take() {
+                    cfg.tenants.push(t);
+                }
+                let name = name.trim();
+                if let Some(tenant_id) = name.strip_prefix("tenants.") {
+                    let tenant_id = tenant_id.trim();
+                    if tenant_id.is_empty() {
+                        bail!("line {lineno}: [tenants.NAME] needs a tenant name");
+                    }
+                    tenant = Some(TenantSpec::new(tenant_id, SloTier::Standard));
+                    role = None;
+                } else if ROLES.contains(&name) {
+                    role = Some(name.to_string());
+                } else {
+                    bail!(
+                        "line {lineno}: unknown section [{name}]; expected [gateway], \
+                         [node], [coordinator] or [tenants.NAME]"
+                    );
+                }
+                continue;
+            }
+            let Some((key, val)) = line.split_once('=') else {
+                bail!("line {lineno}: expected `key = value`, got {line:?}");
+            };
+            let key = normalize_key(key.trim());
+            if key.is_empty() {
+                bail!("line {lineno}: empty key");
+            }
+            let value = parse_value(val.trim())
+                .with_context(|| format!("line {lineno}: bad value for {key:?}"))?;
+            if let Some(t) = tenant.as_mut() {
+                apply_tenant_key(t, &key, &value)
+                    .with_context(|| format!("line {lineno}: [tenants.{}]", t.id))?;
+            } else if let Some(r) = &role {
+                cfg.sections.entry(r.clone()).or_default().insert(key, value);
+            } else {
+                cfg.global.insert(key, value);
+            }
+        }
+        if let Some(t) = tenant.take() {
+            cfg.tenants.push(t);
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for t in &cfg.tenants {
+            if !seen.insert(t.id.clone()) {
+                bail!("duplicate tenant section [tenants.{}]", t.id);
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Layer this file under `args` for one role (`"gateway"`, `"node"`
+    /// or `"coordinator"`): top-level keys first, then the role's
+    /// section (a role key shadows a top-level key), both only where the
+    /// command line did not already set the option or flag.
+    pub fn apply(&self, role: &str, args: &mut Args) {
+        let mut merged: BTreeMap<&String, &Value> = self.global.iter().collect();
+        if let Some(section) = self.sections.get(role) {
+            for (k, v) in section {
+                merged.insert(k, v);
+            }
+        }
+        for (key, value) in merged {
+            let flag = key.replace('_', "-");
+            match value {
+                Value::Bool(true) => args.set_default_flag(&flag),
+                Value::Bool(false) | Value::List(_) => {}
+                other => {
+                    if let Some(text) = other.as_flag_text() {
+                        args.set_default(&flag, &text);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Normalize a key: `-` and `_` are interchangeable; stored with `_`.
+fn normalize_key(key: &str) -> String {
+    key.replace('-', "_")
+}
+
+/// Cut a `#` comment, respecting double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse one scalar: `"string"`, number, `true`/`false`, or a
+/// `["a", "b"]` array of strings.
+fn parse_value(val: &str) -> Result<Value> {
+    if val.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = val.strip_prefix('"') {
+        let Some(s) = inner.strip_suffix('"') else {
+            bail!("unterminated string {val:?}");
+        };
+        if s.contains('"') {
+            bail!("embedded quotes are not supported: {val:?}");
+        }
+        return Ok(Value::Str(s.to_string()));
+    }
+    if let Some(inner) = val.strip_prefix('[') {
+        let Some(body) = inner.strip_suffix(']') else {
+            bail!("unterminated array {val:?}");
+        };
+        let mut items = Vec::new();
+        for part in body.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            match parse_value(part)? {
+                Value::Str(s) => items.push(s),
+                other => bail!("arrays may only hold strings, got {other:?}"),
+            }
+        }
+        return Ok(Value::List(items));
+    }
+    match val {
+        "true" => Ok(Value::Bool(true)),
+        "false" => Ok(Value::Bool(false)),
+        _ if val.parse::<f64>().is_ok() => Ok(Value::Num(val.to_string())),
+        _ => bail!("unrecognized value {val:?} (strings need double quotes)"),
+    }
+}
+
+/// Apply one `key = value` inside a `[tenants.NAME]` section.
+fn apply_tenant_key(t: &mut TenantSpec, key: &str, value: &Value) -> Result<()> {
+    match (key, value) {
+        ("tier", Value::Str(s)) => {
+            t.tier = SloTier::parse(s)
+                .with_context(|| format!("unknown tier {s:?}; expected latency, standard or batch"))?;
+        }
+        ("rate_limit", Value::Num(n)) => {
+            t.rate_limit = n.parse().context("rate_limit must be a number")?;
+        }
+        ("rate_burst", Value::Num(n)) => {
+            t.rate_burst = n.parse().context("rate_burst must be a non-negative integer")?;
+        }
+        ("queue_budget_ms", Value::Num(n)) => {
+            t.queue_budget_ms = n.parse().context("queue_budget_ms must be a non-negative integer")?;
+        }
+        ("api_keys", Value::List(keys)) => t.api_keys = keys.clone(),
+        (other, _) => bail!(
+            "unknown or mistyped tenant key {other:?}; expected tier (string), rate_limit \
+             (number), rate_burst (integer), queue_budget_ms (integer) or api_keys (array)"
+        ),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# fleet defaults
+host = "0.0.0.0"   # applies to every role
+
+[gateway]
+port = 8080
+replicas = 2
+autoscale = true
+forecast-headroom = 0.25
+
+[coordinator]
+port = 9090
+
+[tenants.chat]
+tier = "latency"
+rate_limit = 50.0
+rate_burst = 100
+queue_budget_ms = 250
+api_keys = ["chat-key-1", "chat-key-2"]
+
+[tenants.codegen]
+tier = "batch"
+"#;
+
+    #[test]
+    fn parses_sections_tenants_and_comments() {
+        let cfg = EnovaConfig::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.global.get("host"), Some(&Value::Str("0.0.0.0".into())));
+        let gw = &cfg.sections["gateway"];
+        assert_eq!(gw.get("port"), Some(&Value::Num("8080".into())));
+        assert_eq!(gw.get("autoscale"), Some(&Value::Bool(true)));
+        // dashes and underscores are the same key
+        assert_eq!(gw.get("forecast_headroom"), Some(&Value::Num("0.25".into())));
+        assert_eq!(cfg.tenants.len(), 2);
+        let chat = &cfg.tenants[0];
+        assert_eq!(chat.id, "chat");
+        assert_eq!(chat.tier, SloTier::Latency);
+        assert_eq!(chat.rate_limit, 50.0);
+        assert_eq!(chat.rate_burst, 100);
+        assert_eq!(chat.queue_budget_ms, 250);
+        assert_eq!(chat.api_keys, vec!["chat-key-1", "chat-key-2"]);
+        // unset tenant keys keep TenantSpec::new defaults
+        assert_eq!(cfg.tenants[1].tier, SloTier::Batch);
+        assert_eq!(cfg.tenants[1].rate_limit, 0.0);
+    }
+
+    #[test]
+    fn flags_override_file_values() {
+        let cfg = EnovaConfig::parse(SAMPLE).unwrap();
+        let mut args = Args::parse(["--port".to_string(), "7070".to_string()]);
+        cfg.apply("gateway", &mut args);
+        // explicit flag wins; file fills the rest
+        assert_eq!(args.get_usize("port", 0), 7070);
+        assert_eq!(args.get_usize("replicas", 0), 2);
+        assert_eq!(args.get_or("host", ""), "0.0.0.0");
+        assert!(args.flag("autoscale"));
+        assert_eq!(args.get_f64("forecast-headroom", 0.0), 0.25);
+    }
+
+    #[test]
+    fn role_section_shadows_global_and_other_roles_are_ignored() {
+        let cfg = EnovaConfig::parse(SAMPLE).unwrap();
+        let mut args = Args::default();
+        cfg.apply("coordinator", &mut args);
+        assert_eq!(args.get_usize("port", 0), 9090);
+        assert_eq!(args.get_or("host", ""), "0.0.0.0");
+        // the gateway section's keys must not leak into the coordinator
+        assert_eq!(args.get("replicas"), None);
+        assert!(!args.flag("autoscale"));
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        assert!(EnovaConfig::parse("[what]").is_err());
+        assert!(EnovaConfig::parse("port 8080").is_err());
+        assert!(EnovaConfig::parse("port = ").is_err());
+        assert!(EnovaConfig::parse("name = unquoted").is_err());
+        assert!(EnovaConfig::parse("[tenants.a]\ntier = \"gold\"").is_err());
+        assert!(EnovaConfig::parse("[tenants.a]\n[tenants.a]").is_err());
+        assert!(EnovaConfig::parse("[tenants.]").is_err());
+    }
+
+    #[test]
+    fn comment_hash_inside_string_is_kept() {
+        let cfg = EnovaConfig::parse("host = \"h#1\" # real comment").unwrap();
+        assert_eq!(cfg.global.get("host"), Some(&Value::Str("h#1".into())));
+    }
+}

@@ -77,6 +77,23 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Insert a default for `--name` unless the command line already set
+    /// it — the layering seam for [`crate::settings::EnovaConfig`]: file
+    /// values become defaults, explicit flags always win.
+    pub fn set_default(&mut self, name: &str, value: &str) {
+        self.options
+            .entry(name.to_string())
+            .or_insert_with(|| value.to_string());
+    }
+
+    /// Set a boolean flag unless already present (file-layering seam;
+    /// flags are additive, so this can only turn a flag on).
+    pub fn set_default_flag(&mut self, name: &str) {
+        if !self.flag(name) {
+            self.flags.push(name.to_string());
+        }
+    }
+
     /// Pop the subcommand (first positional); returns "" if absent.
     pub fn subcommand(&mut self) -> String {
         if self.positional.is_empty() {

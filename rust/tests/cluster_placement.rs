@@ -85,6 +85,7 @@ fn spike_scale_up_lands_on_the_emptier_node() {
                 replica_capacity_rps: 6.0,
                 headroom: 0.0,
                 min_warm: 0,
+                trough_scale_down: false,
             }),
             ..ClusterPolicy::default()
         },

@@ -66,6 +66,7 @@ fn diurnal_forecast_prepromotes_warm_before_peak() {
             replica_capacity_rps: 30.0,
             headroom: 0.0,
             min_warm: 1,
+            trough_scale_down: false,
         }),
         ..Default::default()
     };
@@ -165,6 +166,7 @@ fn run_diurnal(forecast: bool, seed: u64) -> (f64, enova::gateway::supervisor::S
             replica_capacity_rps: 20.0,
             headroom: 0.1,
             min_warm: 1,
+            trough_scale_down: false,
         }),
     };
     // two 10ms-step slots ≈ 25 rps per replica at 8 tokens: one replica

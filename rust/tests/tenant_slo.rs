@@ -1,0 +1,359 @@
+//! End-to-end tests of multi-tenant SLO- and cost-aware serving on the
+//! live gateway: a latency-tier tenant rides the fast lane past a batch
+//! tenant's saturation, the per-tenant GPU-seconds ledger stays consistent
+//! with the gateway-wide replica-seconds meter and the `/metrics` scrape,
+//! the cost-aware trough scale-down retires paid-for capacity earlier than
+//! the keep-everything baseline, and the versioned `/v1/admin/*` control
+//! surface answers typed JSON while the deprecated aliases keep working.
+
+use enova::engine::sim::{SimEngine, SimEngineConfig};
+use enova::engine::StreamEngine;
+use enova::gateway::loadgen::{self, Client};
+use enova::gateway::metrics::parse_exposition;
+use enova::gateway::supervisor::{ForecastPolicy, SupervisorConfig};
+use enova::gateway::{EngineSpawner, Gateway, GatewayConfig};
+use enova::util::json::Json;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn sim_spawner(max_num_seqs: usize, step_delay_ms: u64) -> EngineSpawner {
+    Arc::new(move |_id| {
+        Ok(Box::new(SimEngine::new(SimEngineConfig {
+            max_num_seqs,
+            max_tokens: 64,
+            step_delay: Duration::from_millis(step_delay_ms),
+        })) as Box<dyn StreamEngine>)
+    })
+}
+
+fn tenant_header(tenant: &str) -> String {
+    format!("x-enova-tenant: {tenant}\r\n")
+}
+
+fn p95(mut xs: Vec<f64>) -> f64 {
+    assert!(!xs.is_empty(), "no samples to take a p95 of");
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[((xs.len() as f64 * 0.95) as usize).min(xs.len() - 1)]
+}
+
+/// The headline multi-tenant behavior: one 2-slot replica saturated by a
+/// batch tenant's closed loop, while a latency tenant's probes arrive on
+/// the side. The fast lane lets `chat` overtake the queued `codegen`
+/// backlog, so its p95 stays far below the batch tenant's.
+#[test]
+fn latency_tenant_holds_slo_under_batch_saturation() {
+    let cfg = GatewayConfig {
+        max_pending: 1024,
+        max_tokens_default: 8,
+        monitor_interval: Duration::from_millis(25),
+        ..Default::default()
+    };
+    let gw = Gateway::start_scalable(cfg, sim_spawner(2, 10), 1, None).unwrap();
+    let addr = gw.addr_string();
+    let body = r#"{"prompt": "tenants", "max_tokens": 8}"#;
+
+    // 12 closed-loop batch workers against 2 engine slots with 10ms steps:
+    // a standing slow-lane backlog for the whole probe window
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut workers = Vec::new();
+    for _ in 0..12 {
+        let addr = addr.clone();
+        let stop = Arc::clone(&stop);
+        workers.push(std::thread::spawn(move || {
+            let mut client = Client::new(&addr);
+            let hdr = tenant_header("codegen");
+            let mut lat_ms = Vec::new();
+            let mut non_200 = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let t0 = Instant::now();
+                match client.request_headed("POST", "/v1/completions", Some(body), &hdr) {
+                    Ok(r) if r.status == 200 => lat_ms.push(t0.elapsed().as_secs_f64() * 1e3),
+                    Ok(_) => non_200 += 1,
+                    Err(_) => non_200 += 1,
+                }
+            }
+            (lat_ms, non_200)
+        }));
+    }
+
+    // let the backlog build, then probe as the latency tenant
+    std::thread::sleep(Duration::from_millis(600));
+    let mut probe = Client::new(&addr);
+    let hdr = tenant_header("chat");
+    let mut chat_ms = Vec::new();
+    for _ in 0..60 {
+        let t0 = Instant::now();
+        let r = probe.request_headed("POST", "/v1/completions", Some(body), &hdr).unwrap();
+        assert_eq!(r.status, 200, "latency tenant never shed: {}", r.body_str());
+        chat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        std::thread::sleep(Duration::from_millis(30));
+    }
+    stop.store(true, Ordering::Relaxed);
+    let mut batch_ms = Vec::new();
+    for w in workers {
+        let (lat, non_200) = w.join().unwrap();
+        assert_eq!(non_200, 0, "nothing shed: headroom covers both tenants");
+        batch_ms.extend(lat);
+    }
+
+    let chat_p95 = p95(chat_ms);
+    let batch_p95 = p95(batch_ms);
+    assert!(
+        chat_p95 < batch_p95,
+        "fast lane: chat p95 {chat_p95:.0}ms must undercut batch p95 {batch_p95:.0}ms"
+    );
+    assert!(
+        chat_p95 < 1500.0,
+        "latency tier stays responsive under batch saturation: p95 {chat_p95:.0}ms"
+    );
+
+    // the tiers really were resolved from the header, not defaulted
+    let snaps = gw.tenant_snapshots();
+    let by_id = |id: &str| snaps.iter().find(|s| s.id == id).unwrap().clone();
+    assert!(by_id("chat").admitted >= 60);
+    assert!(by_id("codegen").admitted as usize >= 12);
+    assert_eq!(by_id("default").admitted, 0, "every request carried a tenant");
+
+    gw.shutdown();
+}
+
+/// Cost-ledger consistency, driven strictly sequentially so billed
+/// submit→completion windows never overlap: every active tenant accrues
+/// GPU-seconds, their sum never exceeds the gateway's replica-seconds
+/// meter, and the `/metrics` scrape tells the same story as the in-process
+/// snapshots.
+#[test]
+fn tenant_cost_ledger_is_consistent_with_replica_seconds_and_metrics() {
+    let cfg = GatewayConfig {
+        max_pending: 256,
+        max_tokens_default: 8,
+        monitor_interval: Duration::from_millis(25),
+        ..Default::default()
+    };
+    let gw = Gateway::start_scalable(cfg, sim_spawner(4, 2), 1, None).unwrap();
+    let addr = gw.addr_string();
+    let body = r#"{"prompt": "ledger", "max_tokens": 8}"#;
+
+    let mut client = Client::new(&addr);
+    for _ in 0..30 {
+        for tenant in ["chat", "codegen"] {
+            let r = client
+                .request_headed("POST", "/v1/completions", Some(body), &tenant_header(tenant))
+                .unwrap();
+            assert_eq!(r.status, 200, "{}", r.body_str());
+        }
+    }
+    // a few monitoring flushes so the replica-seconds integrator and the
+    // metric gauges catch up with the last completion
+    std::thread::sleep(Duration::from_millis(150));
+
+    let snaps = gw.tenant_snapshots();
+    let by_id = |id: &str| snaps.iter().find(|s| s.id == id).unwrap().clone();
+    assert_eq!(by_id("chat").admitted, 30);
+    assert_eq!(by_id("codegen").admitted, 30);
+    assert!(by_id("chat").gpu_seconds > 0.0, "chat accrued GPU time");
+    assert!(by_id("codegen").gpu_seconds > 0.0, "codegen accrued GPU time");
+
+    let billed: f64 = snaps.iter().map(|s| s.gpu_seconds).sum();
+    let ran = gw.replica_seconds();
+    assert!(ran > 0.0, "the replica-seconds meter moved");
+    assert!(
+        billed <= ran + 0.1,
+        "sequential billing cannot exceed replica wall-clock: {billed:.3}s billed vs \
+         {ran:.3}s run"
+    );
+
+    // the scrape speaks the same ledger
+    let scrape = loadgen::get(&addr, "/metrics").unwrap();
+    assert_eq!(scrape.status, 200);
+    let samples = parse_exposition(&scrape.body_str()).expect("valid exposition");
+    let tenant_sample = |name: &str, tenant: &str| {
+        samples
+            .iter()
+            .find(|s| {
+                s.name == name && s.labels.get("tenant").map(String::as_str) == Some(tenant)
+            })
+            .unwrap_or_else(|| panic!("missing {name}{{tenant=\"{tenant}\"}}"))
+    };
+    let chat_requests = tenant_sample("enova_tenant_requests_total", "chat");
+    assert_eq!(chat_requests.value, 30.0);
+    assert_eq!(
+        chat_requests.labels.get("tier").map(String::as_str),
+        Some("latency"),
+        "the tier label rides along"
+    );
+    assert!(tenant_sample("enova_tenant_gpu_seconds_total", "chat").value > 0.0);
+    assert!(tenant_sample("enova_tenant_gpu_seconds_total", "codegen").value > 0.0);
+    let meter = samples
+        .iter()
+        .find(|s| s.name == "enova_replica_seconds_total")
+        .expect("missing enova_replica_seconds_total");
+    assert!(meter.value > 0.0);
+
+    gw.shutdown();
+}
+
+/// One run of the trough comparison: 3 live replicas, light steady
+/// latency-tier traffic far under per-replica capacity, reactive loops
+/// off, forecast on. Only `trough_scale_down` differs between runs.
+fn run_trough(trough: bool) -> (f64, u64, usize) {
+    let cfg = GatewayConfig {
+        max_pending: 1024,
+        max_tokens_default: 8,
+        monitor_interval: Duration::from_millis(25),
+        ..Default::default()
+    };
+    let sup = SupervisorConfig {
+        sample_interval: Duration::from_millis(50),
+        cooldown: Duration::from_millis(300),
+        min_replicas: 1,
+        max_replicas: 3,
+        // this test must prove the *trough* path: reactive loops off
+        detector_scaling: false,
+        queue_wait_budget: Duration::from_secs(3600),
+        reconfig: None,
+        forecast: Some(ForecastPolicy {
+            horizon_steps: 4,
+            season_steps: 0,
+            err_budget: 50.0,
+            replica_capacity_rps: 30.0,
+            headroom: 0.0,
+            min_warm: 0,
+            trough_scale_down: trough,
+        }),
+        ..Default::default()
+    };
+    let gw = Gateway::start_scalable(cfg, sim_spawner(4, 2), 3, Some(sup)).unwrap();
+    let addr = gw.addr_string();
+    assert_eq!(gw.live_replicas().len(), 3);
+
+    // ~20 rps of latency-tier traffic against 3 x 30 rps of capacity: a
+    // standing trough both forecast views agree on
+    let mut client = Client::new(&addr);
+    let hdr = tenant_header("chat");
+    let body = r#"{"prompt": "trough", "max_tokens": 8}"#;
+    let deadline = Instant::now() + Duration::from_secs(4);
+    while Instant::now() < deadline {
+        let r = client.request_headed("POST", "/v1/completions", Some(body), &hdr).unwrap();
+        assert_eq!(r.status, 200, "{}", r.body_str());
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    std::thread::sleep(Duration::from_millis(150));
+
+    let snap = gw.supervisor_snapshot();
+    let replica_seconds = gw.replica_seconds();
+    let live = gw.live_replicas().len();
+    gw.shutdown();
+    (replica_seconds, snap.trough_events, live)
+}
+
+/// The cost story of the trough scale-down: with both forecast views
+/// agreeing demand fits fewer replicas, the trough run retires capacity
+/// the baseline keeps paying for — strictly fewer replica-seconds over the
+/// same traffic, while serving every request.
+#[test]
+fn trough_scale_down_spends_fewer_replica_seconds_than_keeping_capacity() {
+    let (base_rs, base_troughs, base_live) = run_trough(false);
+    let (trough_rs, troughs, live) = run_trough(true);
+
+    assert_eq!(base_troughs, 0, "baseline never trough-retires");
+    assert_eq!(base_live, 3, "baseline keeps all paid-for capacity");
+    assert!(troughs >= 1, "the trough counter moved");
+    assert!(live < 3, "the trough run really retired: {live} live");
+    assert!(
+        trough_rs < base_rs,
+        "trough run must be cheaper: {trough_rs:.2} vs {base_rs:.2} replica-seconds"
+    );
+}
+
+/// The versioned control surface on a plain gateway: `/v1/admin/status`
+/// and `/v1/admin/scale` answer the typed JSON bodies from
+/// `cluster::proto`, errors carry `{code, message, details}`, node-only
+/// endpoints refuse with a structured 404 — and every deprecated alias
+/// still answers its pre-v1 contract.
+#[test]
+fn versioned_admin_api_answers_typed_json_and_aliases_still_work() {
+    let cfg = GatewayConfig {
+        max_pending: 256,
+        max_tokens_default: 8,
+        monitor_interval: Duration::from_millis(25),
+        ..Default::default()
+    };
+    let gw = Gateway::start_scalable(cfg, sim_spawner(2, 2), 2, None).unwrap();
+    let addr = gw.addr_string();
+
+    // GET /v1/admin/status: the typed NodeStatus advertisement
+    let status = loadgen::get(&addr, "/v1/admin/status").unwrap();
+    assert_eq!(status.status, 200);
+    let j = status.json().unwrap();
+    assert_eq!(j.get("live_replicas").and_then(Json::as_usize), Some(2));
+    assert!(j.get("arrival_rps").is_some(), "status advertises arrival_rps");
+    assert!(j.get("batch_rps").is_some(), "status advertises batch_rps");
+    assert!(j.get("ready").is_some(), "status advertises readiness");
+
+    // POST /v1/admin/scale: typed request in, typed response out
+    let ok = loadgen::post_json(
+        &addr,
+        "/v1/admin/scale",
+        r#"{"replicas": [{"id": 0, "weight": 2.0}, {"id": 1, "weight": 1.0}]}"#,
+    )
+    .unwrap();
+    assert_eq!(ok.status, 200, "{}", ok.body_str());
+    let j = ok.json().unwrap();
+    assert_eq!(j.get("routable_replicas").and_then(Json::as_usize), Some(2));
+    assert_eq!(j.get("applied").and_then(Json::as_arr).map(Vec::len), Some(2));
+
+    // a v1 validation failure is the structured {code, message, details}
+    let bad = loadgen::post_json(&addr, "/v1/admin/scale", r#"{"replicas": []}"#).unwrap();
+    assert_eq!(bad.status, 400);
+    let j = bad.json().unwrap();
+    assert_eq!(j.get("code").and_then(Json::as_str), Some("invalid_request"));
+    assert!(j.get("message").and_then(Json::as_str).is_some());
+
+    let unknown = loadgen::post_json(
+        &addr,
+        "/v1/admin/scale",
+        r#"{"replicas": [{"id": 99, "weight": 1.0}]}"#,
+    )
+    .unwrap();
+    assert_eq!(unknown.status, 400);
+    let j = unknown.json().unwrap();
+    assert_eq!(j.get("code").and_then(Json::as_str), Some("unknown_replica"));
+
+    // the same failure on the deprecated alias keeps the OpenAI-style
+    // envelope its existing callers parse
+    let legacy_unknown = loadgen::post_json(
+        &addr,
+        "/admin/scale",
+        r#"{"replicas": [{"id": 99, "weight": 1.0}]}"#,
+    )
+    .unwrap();
+    assert_eq!(legacy_unknown.status, 400);
+    let j = legacy_unknown.json().unwrap();
+    assert!(j.get("error").is_some(), "legacy alias keeps the error envelope");
+    assert!(j.get("code").is_none(), "legacy alias does not leak the v1 shape");
+
+    // node-only surface off node mode: a structured 404 on v1
+    let not_node = loadgen::post_json(&addr, "/v1/admin/scale-up", "{}").unwrap();
+    assert_eq!(not_node.status, 404);
+    let j = not_node.json().unwrap();
+    assert_eq!(j.get("code").and_then(Json::as_str), Some("not_a_node"));
+
+    // the deprecated aliases still answer their pre-v1 contracts
+    let legacy_ok = loadgen::post_json(
+        &addr,
+        "/admin/scale",
+        r#"{"replicas": [{"id": 0, "weight": 1.0}, {"id": 1, "weight": 1.0}]}"#,
+    )
+    .unwrap();
+    assert_eq!(legacy_ok.status, 200, "{}", legacy_ok.body_str());
+    assert_eq!(
+        legacy_ok.json().unwrap().get("routable_replicas").and_then(Json::as_usize),
+        Some(2)
+    );
+    let legacy_status = loadgen::get(&addr, "/cluster/status").unwrap();
+    assert_eq!(legacy_status.status, 404, "status alias stays node-only off node mode");
+
+    gw.shutdown();
+}

@@ -97,6 +97,32 @@ if [[ "${PLACEMENTS:-0}" -lt 1 ]]; then
     exit 1
 fi
 
+echo "==> versioned admin API smoke (coordinator + surviving node)"
+# the coordinator's /v1/admin/status aggregates the fleet; node-a answers
+# its own typed advertisement on the same path the heartbeat polls
+CLUSTER_STATUS=$(mktemp)
+curl -fsS "http://127.0.0.1:$PORT/v1/admin/status" > "$CLUSTER_STATUS"
+NODE_STATUS=$(mktemp)
+curl -fsS "http://127.0.0.1:$NODE_A_PORT/v1/admin/status" > "$NODE_STATUS"
+python3 - "$CLUSTER_STATUS" "$NODE_STATUS" <<'PY'
+import json, sys
+
+cluster = json.load(open(sys.argv[1]))
+assert cluster["node_id"] == "coordinator", cluster
+assert cluster["live_replicas"] >= 1, cluster
+node = json.load(open(sys.argv[2]))
+assert node["node_id"] == "node-a", node
+assert node["live_replicas"] >= 1 and "gpu_memory_free" in node, node
+print(f"admin status OK: cluster {cluster['live_replicas']} live, node-a {node['live_replicas']} live")
+PY
+rm -f "$CLUSTER_STATUS" "$NODE_STATUS"
+# weights are a per-process concern: the coordinator refuses with a
+# structured error pointing at the node, not a bare 404
+curl -sS -X POST --data '{"replicas": [{"id": 0, "weight": 1.0}]}' \
+    "http://127.0.0.1:$PORT/v1/admin/scale" | grep -q '"unsupported"'
+# the deprecated alias still answers the heartbeat contract
+curl -fsS "http://127.0.0.1:$NODE_A_PORT/cluster/status" | grep -q '"node_id"'
+
 echo "==> trace + decision assertions (cross-node traces, flight recorder)"
 TRACES="${CLUSTER_TRACES:-cluster-traces.json}"
 DECISIONS="${CLUSTER_DECISIONS:-cluster-decisions.json}"

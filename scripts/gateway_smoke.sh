@@ -56,6 +56,64 @@ echo "$SCRAPE" | grep -q '^enova_supervisor_scale_origin_total{origin="proactive
 # the tracing surface is live: phase histograms counted the run
 echo "$SCRAPE" | grep -q '^enova_request_phase_seconds_count{phase="admission"}'
 echo "$SCRAPE" | grep -Eq '^enova_request_phase_seconds_count\{phase="decode"\} [1-9]'
+# the multi-tenant surface is always on the scrape (every unmatched
+# request bills the built-in default tenant)
+echo "$SCRAPE" | grep -q '^enova_tenant_requests_total{tenant='
+echo "$SCRAPE" | grep -q '^enova_tenant_gpu_seconds_total{tenant='
+echo "$SCRAPE" | grep -q '^enova_replica_seconds_total'
+
+if [[ "$SCENARIO" == "mixture" ]]; then
+    echo "==> tenant smoke (mixture traffic carries tenant identity end to end)"
+    # each mixture tenant resolved server-side: admission counters and the
+    # cost ledger moved under its own label, with the tier riding along
+    for tenant in chat summarize codegen; do
+        echo "$SCRAPE" | grep -q "^enova_tenant_requests_total{tenant=\"$tenant\"" \
+            || { echo "no admission counter for tenant $tenant" >&2; exit 1; }
+    done
+    echo "$SCRAPE" | grep -q '^enova_tenant_requests_total{tenant="chat",tier="latency"}'
+    echo "$SCRAPE" | grep -q '^enova_tenant_requests_total{tenant="codegen",tier="batch"}'
+    # the report graded every tenant against its own SLO budget (--strict
+    # above already failed on violations; here we assert grading happened)
+    python3 - "$REPORT" <<'PY'
+import json, sys
+
+r = json.load(open(sys.argv[1]))
+stats = {t["name"]: t for t in r.get("tenant_stats", [])}
+assert stats, "mixture report carries no tenant_stats"
+for name in ("chat", "summarize", "codegen"):
+    assert name in stats, f"tenant {name} missing from the report: {sorted(stats)}"
+    assert stats[name]["ok"] > 0, f"tenant {name} completed nothing: {stats[name]}"
+assert stats["chat"]["tier"] == "latency" and stats["chat"]["slo_p95_ms"] > 0, stats["chat"]
+assert stats["codegen"]["tier"] == "batch" and stats["codegen"]["slo_p95_ms"] == 0, stats["codegen"]
+graded = [n for n, t in stats.items() if t["slo_p95_ms"] > 0 and t["ok"] > 0]
+assert graded, "no tenant was graded against an SLO budget"
+for n in graded:
+    assert stats[n]["p95_ms"] <= stats[n]["slo_p95_ms"], f"{n} over budget: {stats[n]}"
+print(f"tenant grading OK: {graded} inside their SLO budgets")
+PY
+fi
+
+echo "==> versioned admin API smoke (/v1/admin/* + deprecated aliases)"
+ADMIN_STATUS=$(mktemp)
+curl -fsS "http://127.0.0.1:$PORT/v1/admin/status" > "$ADMIN_STATUS"
+python3 - "$ADMIN_STATUS" <<'PY'
+import json, sys
+
+s = json.load(open(sys.argv[1]))
+assert s["live_replicas"] >= 1, s
+for key in ("ready", "arrival_rps", "batch_rps", "warm_replicas"):
+    assert key in s, f"typed status missing {key}: {s}"
+print(f"admin status OK: {s['live_replicas']} live, {s['warm_replicas']} warm")
+PY
+rm -f "$ADMIN_STATUS"
+# v1 errors are the structured {code, message, details} body...
+V1_ERR=$(curl -sS -X POST --data '{"replicas": []}' "http://127.0.0.1:$PORT/v1/admin/scale")
+echo "$V1_ERR" | grep -q '"invalid_request"'
+curl -sS -X POST --data '{}' "http://127.0.0.1:$PORT/v1/admin/scale-up" \
+    | grep -q '"not_a_node"'
+# ...while the deprecated aliases keep their pre-v1 OpenAI-style envelope
+LEGACY_ERR=$(curl -sS -X POST --data '{"replicas": []}' "http://127.0.0.1:$PORT/admin/scale")
+echo "$LEGACY_ERR" | grep -q '"error"'
 
 echo "==> trace assertions (every request left a full-lifecycle trace)"
 TRACES="${SMOKE_TRACES:-gateway-traces${SCENARIO:+-$SCENARIO}.json}"
