@@ -1,0 +1,482 @@
+//! Seeded, deterministic fault injection for the serving path.
+//!
+//! Real fleets do not fail cleanly: nodes return elevated error rates,
+//! grow log-normal/Pareto latency tails, and oscillate between degraded
+//! and healthy without ever dying. This module makes those failure modes
+//! reproducible: a [`ChaosInjector`] sits on a node's serving path and —
+//! keyed off a single `--chaos-seed` — injects errors, latency spikes and
+//! mid-stream SSE aborts from a [`crate::util::rng::Pcg64`] stream, plus
+//! a wall-clock degrade-and-recover square wave that multiplies the
+//! injection rates while "degraded". Every knob is runtime-mutable via
+//! the typed `POST /v1/admin/chaos` endpoint (see
+//! [`crate::cluster::proto`]), so chaos-smoke can toggle faults without
+//! restarting processes.
+//!
+//! Determinism: given a seed, the sequence of draws is bit-for-bit
+//! reproducible. Concurrent requests contend for one mutex-guarded
+//! generator, so the *assignment* of draws to requests can vary with
+//! scheduling — but the multiset of injected faults over N decisions is
+//! fixed by the seed, which is what the chaos invariant tests rely on.
+
+use crate::util::json::{num, obj, Json};
+use crate::util::rng::Pcg64;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// The full injection configuration — plain data, JSON-serializable, and
+/// the body of the `/v1/admin/chaos` get/set surface. All-zero (the
+/// default) means chaos is disarmed and the injector is a no-op.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosConfig {
+    /// seed for the deterministic draw stream; re-seeding with the same
+    /// value replays the same fault sequence
+    pub seed: u64,
+    /// probability in [0,1] that a request is failed with an injected
+    /// 500 before reaching an engine
+    pub error_rate: f64,
+    /// probability in [0,1] that a request is delayed by a sampled spike
+    pub latency_rate: f64,
+    /// median of the log-normal spike body, in milliseconds
+    pub latency_ms: f64,
+    /// log-scale sigma of the spike body (0.5 ≈ mild skew, 1.5 ≈ heavy)
+    pub latency_sigma: f64,
+    /// probability in [0,1] that a spike additionally draws a
+    /// generalized-Pareto tail excess (the "Pareto tail" of the fault
+    /// model)
+    pub tail_ratio: f64,
+    /// GPD shape ξ of the tail excess (heavier as ξ → 1)
+    pub tail_xi: f64,
+    /// GPD scale of the tail excess, in milliseconds
+    pub tail_scale_ms: f64,
+    /// hard cap on any injected delay, in milliseconds (0 = 10s default)
+    pub max_delay_ms: f64,
+    /// probability in [0,1] that a streaming response is aborted
+    /// mid-stream (socket torn down after ≥1 SSE event, no clean close)
+    pub sse_abort_rate: f64,
+    /// period of the degrade-and-recover square wave, in seconds
+    /// (0 = no cycling)
+    pub degrade_period_s: f64,
+    /// fraction of each period spent degraded, in [0,1]
+    pub degrade_duty: f64,
+    /// multiplier applied to error/latency/abort rates while degraded
+    pub degrade_factor: f64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            seed: 0,
+            error_rate: 0.0,
+            latency_rate: 0.0,
+            latency_ms: 200.0,
+            latency_sigma: 0.8,
+            tail_ratio: 0.1,
+            tail_xi: 0.4,
+            tail_scale_ms: 500.0,
+            max_delay_ms: 0.0,
+            sse_abort_rate: 0.0,
+            degrade_period_s: 0.0,
+            degrade_duty: 0.0,
+            degrade_factor: 4.0,
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// Whether this config injects anything at all (directly or via the
+    /// degrade cycle).
+    pub fn armed(&self) -> bool {
+        self.error_rate > 0.0
+            || self.latency_rate > 0.0
+            || self.sse_abort_rate > 0.0
+            || (self.degrade_period_s > 0.0 && self.degrade_duty > 0.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("seed", num(self.seed as f64)),
+            ("error_rate", num(self.error_rate)),
+            ("latency_rate", num(self.latency_rate)),
+            ("latency_ms", num(self.latency_ms)),
+            ("latency_sigma", num(self.latency_sigma)),
+            ("tail_ratio", num(self.tail_ratio)),
+            ("tail_xi", num(self.tail_xi)),
+            ("tail_scale_ms", num(self.tail_scale_ms)),
+            ("max_delay_ms", num(self.max_delay_ms)),
+            ("sse_abort_rate", num(self.sse_abort_rate)),
+            ("degrade_period_s", num(self.degrade_period_s)),
+            ("degrade_duty", num(self.degrade_duty)),
+            ("degrade_factor", num(self.degrade_factor)),
+        ])
+    }
+
+    /// Parse a config from JSON. Absent fields keep their defaults, so a
+    /// `POST /v1/admin/chaos` body only names the knobs it changes.
+    /// Rejects out-of-range probabilities and negative magnitudes.
+    pub fn from_json(v: &Json) -> Result<ChaosConfig, String> {
+        let mut cfg = ChaosConfig::default();
+        let f = |key: &str, dst: &mut f64| -> Result<(), String> {
+            if let Some(x) = v.get(key) {
+                *dst = x.as_f64().ok_or_else(|| format!("{key} must be a number"))?;
+            }
+            Ok(())
+        };
+        if let Some(x) = v.get("seed") {
+            cfg.seed = x.as_f64().ok_or("seed must be a number")? as u64;
+        }
+        f("error_rate", &mut cfg.error_rate)?;
+        f("latency_rate", &mut cfg.latency_rate)?;
+        f("latency_ms", &mut cfg.latency_ms)?;
+        f("latency_sigma", &mut cfg.latency_sigma)?;
+        f("tail_ratio", &mut cfg.tail_ratio)?;
+        f("tail_xi", &mut cfg.tail_xi)?;
+        f("tail_scale_ms", &mut cfg.tail_scale_ms)?;
+        f("max_delay_ms", &mut cfg.max_delay_ms)?;
+        f("sse_abort_rate", &mut cfg.sse_abort_rate)?;
+        f("degrade_period_s", &mut cfg.degrade_period_s)?;
+        f("degrade_duty", &mut cfg.degrade_duty)?;
+        f("degrade_factor", &mut cfg.degrade_factor)?;
+        for (key, p) in [
+            ("error_rate", cfg.error_rate),
+            ("latency_rate", cfg.latency_rate),
+            ("tail_ratio", cfg.tail_ratio),
+            ("sse_abort_rate", cfg.sse_abort_rate),
+            ("degrade_duty", cfg.degrade_duty),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("{key} must be in [0,1] (got {p})"));
+            }
+        }
+        for (key, x) in [
+            ("latency_ms", cfg.latency_ms),
+            ("latency_sigma", cfg.latency_sigma),
+            ("tail_scale_ms", cfg.tail_scale_ms),
+            ("max_delay_ms", cfg.max_delay_ms),
+            ("degrade_period_s", cfg.degrade_period_s),
+            ("degrade_factor", cfg.degrade_factor),
+        ] {
+            if !x.is_finite() || x < 0.0 {
+                return Err(format!("{key} must be a finite non-negative number (got {x})"));
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// One injection verdict for one request, drawn in a fixed order so the
+/// stream is seed-deterministic regardless of which faults fire.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosDecision {
+    /// fail the request with an injected 500 before dispatch
+    pub fail: bool,
+    /// sleep this long before dispatch (zero = no spike)
+    pub delay: Duration,
+    /// tear the socket down mid-stream after ≥1 SSE event (streaming
+    /// requests only; ignored on the unary path)
+    pub abort_sse: bool,
+}
+
+impl ChaosDecision {
+    pub const NONE: ChaosDecision = ChaosDecision {
+        fail: false,
+        delay: Duration::ZERO,
+        abort_sse: false,
+    };
+}
+
+/// The runtime-mutable injector one gateway/node owns. Cheap when
+/// disarmed: a single relaxed atomic load per request.
+pub struct ChaosInjector {
+    cfg: Mutex<ChaosConfig>,
+    rng: Mutex<Pcg64>,
+    /// phase origin of the degrade square wave; reset on every set_config
+    epoch: Mutex<Instant>,
+    armed: AtomicBool,
+    /// bumped on every set_config, so operators can correlate scrapes
+    generation: AtomicU64,
+    pub injected_errors: AtomicU64,
+    pub injected_delays: AtomicU64,
+    pub injected_aborts: AtomicU64,
+    pub injected_delay_ms: AtomicU64,
+}
+
+impl ChaosInjector {
+    pub fn new(cfg: ChaosConfig) -> Self {
+        let armed = cfg.armed();
+        ChaosInjector {
+            rng: Mutex::new(Pcg64::new(cfg.seed)),
+            cfg: Mutex::new(cfg),
+            epoch: Mutex::new(Instant::now()),
+            armed: AtomicBool::new(armed),
+            generation: AtomicU64::new(0),
+            injected_errors: AtomicU64::new(0),
+            injected_delays: AtomicU64::new(0),
+            injected_aborts: AtomicU64::new(0),
+            injected_delay_ms: AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> ChaosConfig {
+        self.cfg.lock().unwrap().clone()
+    }
+
+    pub fn armed(&self) -> bool {
+        self.armed.load(Ordering::Relaxed)
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Relaxed)
+    }
+
+    /// Replace the live config. Reseeds the draw stream from the new
+    /// seed and restarts the degrade cycle at its healthy phase, so a
+    /// set is a reproducible experiment boundary.
+    pub fn set_config(&self, cfg: ChaosConfig) {
+        *self.rng.lock().unwrap() = Pcg64::new(cfg.seed);
+        *self.epoch.lock().unwrap() = Instant::now();
+        self.armed.store(cfg.armed(), Ordering::Relaxed);
+        *self.cfg.lock().unwrap() = cfg;
+        self.generation.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Whether the degrade square wave is currently in its degraded
+    /// phase (the first `duty` fraction of every period).
+    pub fn degraded_now(&self) -> bool {
+        let cfg = self.cfg.lock().unwrap();
+        if cfg.degrade_period_s <= 0.0 || cfg.degrade_duty <= 0.0 {
+            return false;
+        }
+        let elapsed = self.epoch.lock().unwrap().elapsed().as_secs_f64();
+        let phase = (elapsed / cfg.degrade_period_s).fract();
+        phase < cfg.degrade_duty
+    }
+
+    /// Draw one injection verdict. Draw order is fixed (error, latency
+    /// gate, spike body, tail gate, tail excess, sse gate) so the stream
+    /// stays aligned with the seed whatever the outcomes are.
+    pub fn decide(&self) -> ChaosDecision {
+        if !self.armed() {
+            return ChaosDecision::NONE;
+        }
+        let cfg = self.config();
+        let boost = if self.degraded_now() { cfg.degrade_factor.max(1.0) } else { 1.0 };
+        let mut rng = self.rng.lock().unwrap();
+        let fail = rng.f64() < (cfg.error_rate * boost).min(1.0);
+        let spike = rng.f64() < (cfg.latency_rate * boost).min(1.0);
+        // always burn the body/tail draws so the stream position does
+        // not depend on the gates' outcomes
+        let mu = cfg.latency_ms.max(0.0).max(1e-9).ln();
+        let mut delay_ms = rng.lognormal(mu, cfg.latency_sigma.max(0.0));
+        let tail = rng.f64() < cfg.tail_ratio;
+        let excess = rng.gpd(cfg.tail_xi, cfg.tail_scale_ms.max(0.0));
+        let abort_sse = rng.f64() < (cfg.sse_abort_rate * boost).min(1.0);
+        drop(rng);
+        if tail {
+            delay_ms += excess;
+        }
+        let cap = if cfg.max_delay_ms > 0.0 { cfg.max_delay_ms } else { 10_000.0 };
+        delay_ms = delay_ms.min(cap);
+        let delay = if spike {
+            Duration::from_secs_f64(delay_ms.max(0.0) / 1e3)
+        } else {
+            Duration::ZERO
+        };
+        if fail {
+            self.injected_errors.fetch_add(1, Ordering::Relaxed);
+        }
+        if spike {
+            self.injected_delays.fetch_add(1, Ordering::Relaxed);
+            self.injected_delay_ms.fetch_add(delay_ms as u64, Ordering::Relaxed);
+        }
+        if abort_sse {
+            self.injected_aborts.fetch_add(1, Ordering::Relaxed);
+        }
+        ChaosDecision { fail, delay, abort_sse }
+    }
+
+    /// Counters + live state, embedded in the `/v1/admin/chaos` response.
+    pub fn stats_json(&self) -> Json {
+        obj([
+            ("armed", Json::Bool(self.armed())),
+            ("degraded", Json::Bool(self.degraded_now())),
+            ("generation", num(self.generation() as f64)),
+            (
+                "injected_errors",
+                num(self.injected_errors.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "injected_delays",
+                num(self.injected_delays.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "injected_aborts",
+                num(self.injected_aborts.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "injected_delay_ms",
+                num(self.injected_delay_ms.load(Ordering::Relaxed) as f64),
+            ),
+        ])
+    }
+}
+
+impl std::fmt::Debug for ChaosInjector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ChaosInjector")
+            .field("cfg", &self.config())
+            .field("armed", &self.armed())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn armed_cfg() -> ChaosConfig {
+        ChaosConfig {
+            seed: 42,
+            error_rate: 0.3,
+            latency_rate: 0.2,
+            latency_ms: 50.0,
+            latency_sigma: 0.5,
+            sse_abort_rate: 0.1,
+            ..ChaosConfig::default()
+        }
+    }
+
+    #[test]
+    fn disarmed_is_a_noop() {
+        let inj = ChaosInjector::new(ChaosConfig::default());
+        assert!(!inj.armed());
+        for _ in 0..100 {
+            assert_eq!(inj.decide(), ChaosDecision::NONE);
+        }
+        assert_eq!(inj.injected_errors.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn same_seed_same_decisions() {
+        let a = ChaosInjector::new(armed_cfg());
+        let b = ChaosInjector::new(armed_cfg());
+        for _ in 0..500 {
+            assert_eq!(a.decide(), b.decide());
+        }
+        // set_config reseeds: a's stream restarts from the beginning,
+        // matching a freshly built injector draw-for-draw
+        a.set_config(armed_cfg());
+        let replayed: Vec<ChaosDecision> = (0..200).map(|_| a.decide()).collect();
+        let fresh = ChaosInjector::new(armed_cfg());
+        let expect: Vec<ChaosDecision> = (0..200).map(|_| fresh.decide()).collect();
+        assert_eq!(replayed, expect);
+    }
+
+    #[test]
+    fn rates_are_roughly_honored() {
+        let inj = ChaosInjector::new(armed_cfg());
+        let n = 20_000;
+        let mut fails = 0usize;
+        let mut spikes = 0usize;
+        for _ in 0..n {
+            let d = inj.decide();
+            if d.fail {
+                fails += 1;
+            }
+            if !d.delay.is_zero() {
+                spikes += 1;
+                assert!(d.delay <= Duration::from_secs(10));
+            }
+        }
+        let fail_rate = fails as f64 / n as f64;
+        let spike_rate = spikes as f64 / n as f64;
+        assert!((fail_rate - 0.3).abs() < 0.02, "fail rate {fail_rate}");
+        assert!((spike_rate - 0.2).abs() < 0.02, "spike rate {spike_rate}");
+    }
+
+    #[test]
+    fn degrade_cycle_boosts_rates() {
+        let cfg = ChaosConfig {
+            seed: 7,
+            error_rate: 0.1,
+            degrade_period_s: 3600.0, // degraded phase covers the whole test
+            degrade_duty: 0.99,
+            degrade_factor: 5.0,
+            ..ChaosConfig::default()
+        };
+        let inj = ChaosInjector::new(cfg);
+        assert!(inj.degraded_now());
+        let n = 10_000;
+        let fails = (0..n).filter(|_| inj.decide().fail).count();
+        let rate = fails as f64 / n as f64;
+        assert!((rate - 0.5).abs() < 0.03, "boosted fail rate {rate}");
+    }
+
+    #[test]
+    fn degrade_requires_period_and_duty() {
+        let inj = ChaosInjector::new(ChaosConfig {
+            degrade_period_s: 10.0,
+            degrade_duty: 0.0,
+            ..ChaosConfig::default()
+        });
+        assert!(!inj.degraded_now());
+        assert!(!inj.armed());
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        let cfg = ChaosConfig {
+            seed: 99,
+            error_rate: 0.25,
+            latency_rate: 0.5,
+            latency_ms: 120.0,
+            latency_sigma: 1.1,
+            tail_ratio: 0.2,
+            tail_xi: 0.3,
+            tail_scale_ms: 400.0,
+            max_delay_ms: 2000.0,
+            sse_abort_rate: 0.05,
+            degrade_period_s: 20.0,
+            degrade_duty: 0.5,
+            degrade_factor: 3.0,
+        };
+        let wire = cfg.to_json().to_string_compact();
+        let back = ChaosConfig::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn partial_config_keeps_defaults() {
+        let v = Json::parse(r#"{"error_rate":0.5,"seed":3}"#).unwrap();
+        let cfg = ChaosConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.seed, 3);
+        assert_eq!(cfg.error_rate, 0.5);
+        assert_eq!(cfg.latency_ms, ChaosConfig::default().latency_ms);
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_values() {
+        for body in [
+            r#"{"error_rate":1.5}"#,
+            r#"{"latency_rate":-0.1}"#,
+            r#"{"latency_ms":-5}"#,
+            r#"{"degrade_duty":2}"#,
+            r#"{"error_rate":"lots"}"#,
+        ] {
+            let v = Json::parse(body).unwrap();
+            assert!(ChaosConfig::from_json(&v).is_err(), "accepted {body}");
+        }
+    }
+
+    #[test]
+    fn set_config_updates_armed_and_generation() {
+        let inj = ChaosInjector::new(ChaosConfig::default());
+        assert!(!inj.armed());
+        inj.set_config(armed_cfg());
+        assert!(inj.armed());
+        assert_eq!(inj.generation(), 1);
+        inj.set_config(ChaosConfig::default());
+        assert!(!inj.armed());
+        assert_eq!(inj.generation(), 2);
+    }
+}

@@ -4,7 +4,12 @@
 //! format, same admission 429s — and it places every request on a node
 //! via node-aware weighted least-loaded routing, retrying on another node
 //! when the chosen one dies or sheds, so a node failure is a routing
-//! event rather than an error budget event.
+//! event rather than an error budget event. Between healthy and dead sits
+//! *degraded*: every node carries a [`super::pool::CircuitBreaker`] over
+//! its rolling proxy outcomes, so a slow-but-alive or error-spewing node
+//! is derouted (open → half-open probes → closed) while its heartbeats
+//! and replicas stay up — exported as `enova_cluster_breaker_*` metrics
+//! and recorded in `/v1/debug/decisions`.
 //!
 //! Three background loops:
 //!
@@ -28,9 +33,11 @@
 
 use super::metrics::{render_prometheus, ClusterMetrics, NodeSample};
 use super::placement;
-use super::pool::{ChunkFrameScanner, NodePool};
+use super::pool::{
+    BreakerConfig, BreakerTransition, ChunkFrameScanner, CircuitBreaker, NodePool,
+};
 use super::proto::{
-    AdminError, AdminNodeScaleResponse, NodeAnnounce, NodeStatus,
+    AdminError, AdminNodeScaleResponse, DebugExportResponse, NodeAnnounce, NodeStatus,
     ScaleDirection as AdminScaleDirection,
 };
 use crate::deployer::NodeInventory;
@@ -135,6 +142,10 @@ pub struct CoordinatorConfig {
     /// per-tenant admission and the cost ledger live on the nodes, which
     /// see the forwarded `x-enova-tenant` / `Authorization` headers.
     pub tenants: Vec<TenantSpec>,
+    /// per-node circuit-breaker tuning: rolling error/latency windows on
+    /// proxy outcomes that deroute a degraded node (open → half-open →
+    /// closed) without declaring it dead
+    pub breaker: BreakerConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -155,6 +166,7 @@ impl Default for CoordinatorConfig {
             policy: ClusterPolicy::default(),
             trace: TraceSettings::default(),
             tenants: Vec::new(),
+            breaker: BreakerConfig::default(),
         }
     }
 }
@@ -207,6 +219,9 @@ struct NodeEntry {
     status: Option<NodeStatus>,
     healthy: bool,
     failures: u32,
+    /// rolling proxy-outcome window; an open breaker deroutes the node
+    /// while heartbeats keep running (degraded ≠ dead)
+    breaker: CircuitBreaker,
 }
 
 struct CoordinatorState {
@@ -520,6 +535,7 @@ fn node_samples(state: &CoordinatorState) -> Vec<NodeSample> {
             queue_wait: e.status.as_ref().map(|s| s.queue_wait).unwrap_or(0.0),
             batch_rps: e.status.as_ref().map(|s| s.batch_rps).unwrap_or(0.0),
             inflight: router.inflight_of(&e.announce.node_id),
+            breaker_state: e.breaker.state(),
         })
         .collect()
 }
@@ -567,6 +583,57 @@ fn note_node_error(state: &CoordinatorState, node_id: &str) {
         state.metrics.note_node_death();
         crate::warn!("cluster", "node {node_id} declared dead after repeated failures");
         rebuild_router(state);
+    }
+}
+
+/// Feed one proxy-attempt outcome into the node's circuit breaker and
+/// surface any state transition. Only real dispatch outcomes feed the
+/// breaker — heartbeats poll a status endpoint and would mask a
+/// slow-but-alive serving path with fast, healthy-looking samples.
+fn note_breaker_outcome(state: &CoordinatorState, node_id: &str, ok: bool, latency: Duration) {
+    let transition = {
+        let mut nodes = state.nodes.write().unwrap();
+        let Some(e) = nodes.get_mut(node_id) else {
+            return;
+        };
+        e.breaker
+            .record(ok, latency, Instant::now())
+            .map(|t| (t, e.breaker.evidence()))
+    };
+    if let Some((t, evidence)) = transition {
+        note_breaker_transition(state, node_id, t, &evidence);
+    }
+}
+
+/// One breaker state change: metrics counter, flight-recorder entry, log
+/// line. The node stays registered and heartbeated throughout — an open
+/// breaker is a routing verdict, not a death certificate.
+fn note_breaker_transition(
+    state: &CoordinatorState,
+    node_id: &str,
+    t: BreakerTransition,
+    evidence: &str,
+) {
+    state.metrics.note_breaker_transition(t.as_str());
+    state.decisions.record(
+        "coordinator",
+        "breaker",
+        t.as_str(),
+        vec![
+            ("node", node_id.to_string()),
+            ("evidence", evidence.to_string()),
+        ],
+    );
+    match t {
+        BreakerTransition::Opened => {
+            crate::warn!("cluster", "breaker opened for node {node_id}: {evidence}")
+        }
+        BreakerTransition::HalfOpened => {
+            crate::info!("cluster", "breaker half-open for node {node_id}: probing")
+        }
+        BreakerTransition::Closed => {
+            crate::info!("cluster", "breaker closed for node {node_id}: recovered ({evidence})")
+        }
     }
 }
 
@@ -679,6 +746,39 @@ fn route(
             );
             finish(req, stream, state, "/metrics", http::Response::prometheus(body))
         }
+        // versioned observability API: the typed envelope wraps the same
+        // export the legacy aliases below still serve bare
+        ("GET", "/v1/debug/traces") => {
+            let resp =
+                DebugExportResponse::new("traces", "coordinator", aggregated_traces(state));
+            let body = resp.to_json().to_string_compact();
+            finish(req, stream, state, "/v1/debug/traces", http::Response::json(200, body))
+        }
+        ("GET", "/v1/debug/decisions") => {
+            let resp = DebugExportResponse::new(
+                "decisions",
+                "coordinator",
+                state.decisions.export_json(),
+            );
+            let body = resp.to_json().to_string_compact();
+            finish(req, stream, state, "/v1/debug/decisions", http::Response::json(200, body))
+        }
+        // fault injection runs on nodes, not on the routing layer: answer
+        // a structured error pointing at the right target
+        ("GET" | "POST", "/v1/admin/chaos") => {
+            let err = AdminError::new(
+                "unsupported",
+                "fault injection is node-local; send /v1/admin/chaos to a node's gateway",
+            )
+            .with_detail("role", "coordinator");
+            finish(
+                req,
+                stream,
+                state,
+                "/v1/admin/chaos",
+                http::Response::json(400, err.to_json().to_string_compact()),
+            )
+        }
         ("GET", "/debug/traces") => {
             let body = aggregated_traces(state).to_string_compact();
             finish(req, stream, state, "/debug/traces", http::Response::json(200, body))
@@ -708,7 +808,8 @@ fn route(
         (_, "/v1/completions" | "/v1/chat/completions" | "/cluster/join" | "/cluster/nodes"
         | "/cluster/status" | "/v1/admin/status" | "/v1/admin/scale" | "/v1/admin/scale-up"
         | "/v1/admin/scale-down" | "/metrics" | "/healthz" | "/ready" | "/debug/traces"
-        | "/debug/decisions") => {
+        | "/debug/decisions" | "/v1/debug/traces" | "/v1/debug/decisions"
+        | "/v1/admin/chaos") => {
             let body = openai::to_wire(&openai::error_body(
                 "invalid_request_error",
                 &format!("method {} not allowed on {}", req.method, req.path),
@@ -761,9 +862,14 @@ fn cluster_join(
         // restart at a new address) revives it. Status survives an
         // unchanged address; a node at a new address restarted, and its
         // old replica counts are history.
-        let (status, healthy, failures) = match prior {
-            Some(e) if !moved => (e.status.clone(), e.healthy, e.failures),
-            _ => (None, true, 0),
+        // the breaker survives a same-address re-announce for the same
+        // reason status does: degraded-node evidence is not erased by
+        // bookkeeping. A restart at a new address starts closed.
+        let (status, healthy, failures, breaker) = match prior {
+            Some(e) if !moved => {
+                (e.status.clone(), e.healthy, e.failures, e.breaker.clone())
+            }
+            _ => (None, true, 0, CircuitBreaker::new(state.cfg.breaker.clone())),
         };
         nodes.insert(
             announce.node_id.clone(),
@@ -772,6 +878,7 @@ fn cluster_join(
                 status,
                 healthy,
                 failures,
+                breaker,
             },
         );
         (fresh, moved)
@@ -1090,6 +1197,21 @@ fn serve_proxy(
 
     let mut excluded: Vec<String> = Vec::new();
     let mut last_failure = String::from("no serving nodes registered");
+    // circuit breakers: open (cooling-down) nodes and half-open nodes
+    // whose probe budget is spent are excluded from dispatch up front — a
+    // degraded node keeps its replicas and heartbeats, it just stops
+    // receiving traffic until probes prove it recovered. The read-only
+    // check never consumes probe budget (see `CircuitBreaker::would_block`).
+    {
+        let now = Instant::now();
+        let nodes = state.nodes.read().unwrap();
+        excluded.extend(
+            nodes
+                .values()
+                .filter(|e| e.breaker.would_block(now))
+                .map(|e| e.announce.node_id.clone()),
+        );
+    }
     for attempt in 0..state.cfg.dispatch_attempts.max(1) {
         // lock-free dispatch: hold the router lock only for the O(1)
         // snapshot clone, then scan without serializing against
@@ -1116,6 +1238,26 @@ fn serve_proxy(
             excluded.push(node_id);
             continue;
         };
+        // breaker gate on the actual pick: flips open → half-open once
+        // the cooldown elapsed and spends one probe admission while
+        // half-open — probe budget is only ever consumed here, for a
+        // request that really dispatches to the node
+        let gate = {
+            let mut nodes = state.nodes.write().unwrap();
+            nodes.get_mut(&node_id).map(|e| {
+                let (allowed, t) = e.breaker.allow(Instant::now());
+                (allowed, t.map(|t| (t, e.breaker.evidence())))
+            })
+        };
+        if let Some((_, Some((t, ev)))) = &gate {
+            note_breaker_transition(state, &node_id, *t, ev);
+        }
+        if !matches!(gate, Some((true, _))) {
+            handle.complete();
+            last_failure = format!("node {node_id} breaker open");
+            excluded.push(node_id);
+            continue;
+        }
         if attempt > 0 {
             state.metrics.note_proxy_retry();
         }
@@ -1142,18 +1284,22 @@ fn serve_proxy(
             attempt_end,
             vec![("node", node_id.clone()), ("attempt", attempt.to_string())],
         );
+        let attempt_latency = attempt_end.saturating_duration_since(attempt_start);
         match outcome {
             Attempt::Done(status) => {
+                note_breaker_outcome(state, &node_id, status < 500, attempt_latency);
                 record_trace(state, &trace, status);
                 state.metrics.observe(&endpoint, status);
                 return Ok(());
             }
             Attempt::ClientGone(e) => {
+                // the client went away; no verdict on the node's health
                 record_trace(state, &trace, 499);
                 state.metrics.observe(&endpoint, 499);
                 return Err(e);
             }
             Attempt::Retry { transport, status } => {
+                note_breaker_outcome(state, &node_id, false, attempt_latency);
                 last_failure = match status {
                     Some(code) => format!("node {node_id} answered {code}"),
                     None => format!("node {node_id} transport failure"),
@@ -1990,7 +2136,7 @@ fn supervisor_loop(state: &Arc<CoordinatorState>) {
                                 .target_replicas
                                 .store((live + 1).clamp(policy.min_replicas, policy.max_replicas), Ordering::Release);
                             last_action = Some(Instant::now());
-                            streaks.reset();
+                            streaks.note_fired(ScaleDirection::Up);
                             continue;
                         }
                         Err(e) => crate::warn!("cluster", "proactive placement failed: {e}"),
@@ -2051,6 +2197,7 @@ fn supervisor_loop(state: &Arc<CoordinatorState>) {
                             Ordering::Release,
                         );
                         last_action = Some(Instant::now());
+                        streaks.note_fired(direction);
                     }
                     Err(e) => crate::warn!("cluster", "reactive placement failed: {e}"),
                 }
@@ -2064,6 +2211,7 @@ fn supervisor_loop(state: &Arc<CoordinatorState>) {
                             Ordering::Release,
                         );
                         last_action = Some(Instant::now());
+                        streaks.note_fired(direction);
                     }
                     Err(e) => crate::warn!("cluster", "cluster drain failed: {e}"),
                 }

@@ -4,6 +4,7 @@
 //! [`crate::gateway::metrics::parse_exposition`], which the tests use).
 
 use super::coordinator::ClusterSupervisorSnapshot;
+use super::pool::BreakerState;
 use crate::gateway::metrics::{escape_label, StatusCounters};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -16,6 +17,10 @@ use std::sync::Mutex;
 pub const PLACEMENT_REASONS: [&str; 5] =
     ["forecast", "detector", "queue_wait", "backfill", "admin"];
 
+/// Circuit-breaker transitions that always appear on the scrape (at zero
+/// before the first state change) — CI greps for these by name.
+pub const BREAKER_TRANSITIONS: [&str; 3] = ["open", "half_open", "close"];
+
 #[derive(Debug, Default)]
 pub struct ClusterMetrics {
     /// coordinator ingress: (endpoint, status) -> count, relaxed so
@@ -25,6 +30,8 @@ pub struct ClusterMetrics {
     placement: Mutex<BTreeMap<String, u64>>,
     /// scale-down drains by reason
     retire: Mutex<BTreeMap<String, u64>>,
+    /// circuit-breaker state changes by transition kind
+    breaker_transitions: Mutex<BTreeMap<String, u64>>,
     proxy_retries: AtomicU64,
     node_deaths: AtomicU64,
     rejected_queue_full: AtomicU64,
@@ -64,6 +71,26 @@ impl ClusterMetrics {
             .unwrap()
             .entry(reason.to_string())
             .or_insert(0) += 1;
+    }
+
+    /// One circuit-breaker state change (`open`, `half_open`, `close`).
+    pub fn note_breaker_transition(&self, transition: &str) {
+        *self
+            .breaker_transitions
+            .lock()
+            .unwrap()
+            .entry(transition.to_string())
+            .or_insert(0) += 1;
+    }
+
+    /// Transitions recorded for one kind (test/report helper).
+    pub fn breaker_transitions_for(&self, transition: &str) -> u64 {
+        self.breaker_transitions
+            .lock()
+            .unwrap()
+            .get(transition)
+            .copied()
+            .unwrap_or(0)
     }
 
     pub fn note_proxy_retry(&self) {
@@ -131,6 +158,8 @@ pub struct NodeSample {
     pub batch_rps: f64,
     /// coordinator-side in-flight proxied requests on this node
     pub inflight: u64,
+    /// the node's circuit-breaker position (closed 0, half-open 1, open 2)
+    pub breaker_state: BreakerState,
 }
 
 /// Render the coordinator's `/metrics` body.
@@ -218,6 +247,11 @@ pub fn render_prometheus(
             "Coordinator-side in-flight proxied requests per node.",
             |n: &NodeSample| n.inflight as f64,
         ),
+        (
+            "enova_cluster_breaker_state",
+            "Per-node circuit-breaker position: 0 closed, 1 half-open, 2 open.",
+            |n: &NodeSample| n.breaker_state.gauge(),
+        ),
     ] {
         let _ = writeln!(out, "# HELP {name} {help}");
         let _ = writeln!(out, "# TYPE {name} gauge");
@@ -245,6 +279,29 @@ pub fn render_prometheus(
                 "enova_cluster_placement_total{{reason=\"{}\"}} {}",
                 escape_label(reason),
                 placement.get(reason).copied().unwrap_or(0)
+            );
+        }
+    }
+
+    out.push_str(
+        "# HELP enova_cluster_breaker_transitions_total Circuit-breaker state changes, by \
+         transition (open, half_open, close).\n",
+    );
+    out.push_str("# TYPE enova_cluster_breaker_transitions_total counter\n");
+    {
+        let transitions = m.breaker_transitions.lock().unwrap();
+        let mut kinds: Vec<&str> = BREAKER_TRANSITIONS.to_vec();
+        for k in transitions.keys() {
+            if !kinds.contains(&k.as_str()) {
+                kinds.push(k);
+            }
+        }
+        for kind in kinds {
+            let _ = writeln!(
+                out,
+                "enova_cluster_breaker_transitions_total{{transition=\"{}\"}} {}",
+                escape_label(kind),
+                transitions.get(kind).copied().unwrap_or(0)
             );
         }
     }
@@ -448,6 +505,11 @@ mod tests {
             queue_wait: 0.01,
             batch_rps: 1.5,
             inflight: 2,
+            breaker_state: if healthy {
+                BreakerState::Closed
+            } else {
+                BreakerState::Open
+            },
         }
     }
 
@@ -464,6 +526,9 @@ mod tests {
         m.note_node_death();
         m.note_queue_full();
         m.add_sse_chunks(7);
+        m.note_breaker_transition("open");
+        m.note_breaker_transition("open");
+        m.note_breaker_transition("half_open");
 
         let nodes = vec![sample("node-a", true, 2), sample("node-b", false, 1)];
         let sup = ClusterSupervisorSnapshot {
@@ -532,6 +597,29 @@ mod tests {
             find("enova_cluster_requests_total", Some(("code", "503"))),
             1.0
         );
+        // breaker: per-node state gauge plus zero-filled transition counters
+        assert_eq!(
+            find("enova_cluster_breaker_state", Some(("node", "node-a"))),
+            0.0
+        );
+        assert_eq!(
+            find("enova_cluster_breaker_state", Some(("node", "node-b"))),
+            2.0
+        );
+        assert_eq!(
+            find("enova_cluster_breaker_transitions_total", Some(("transition", "open"))),
+            2.0
+        );
+        assert_eq!(
+            find("enova_cluster_breaker_transitions_total", Some(("transition", "half_open"))),
+            1.0
+        );
+        assert_eq!(
+            find("enova_cluster_breaker_transitions_total", Some(("transition", "close"))),
+            0.0
+        );
+        assert_eq!(m.breaker_transitions_for("open"), 2);
+        assert_eq!(m.breaker_transitions_for("close"), 0);
         assert_eq!(find("enova_cluster_proxy_retries_total", None), 1.0);
         assert_eq!(find("enova_cluster_node_deaths_total", None), 1.0);
         assert_eq!(find("enova_cluster_sse_chunks_relayed_total", None), 7.0);

@@ -40,6 +40,16 @@
 //! structured `{code, message, details}` errors of [`proto`], under the
 //! versioned [`proto::ADMIN_API_PREFIX`].
 //!
+//! Observability exports follow the same versioning: `GET
+//! /v1/debug/traces` and `GET /v1/debug/decisions` serve the request
+//! tracer and the autoscaling flight recorder wrapped in a typed
+//! [`proto::DebugExportResponse`] envelope (the unversioned `/debug/*`
+//! paths remain as deprecated aliases serving the legacy bare shapes).
+//! Nodes additionally expose `GET|POST /v1/admin/chaos` to inspect or
+//! re-seed the node-local fault injector ([`crate::chaos`]); the
+//! coordinator's per-node circuit breakers ([`pool::CircuitBreaker`])
+//! are the defense that keeps injected faults invisible to clients.
+//!
 //! Placement policy lives in [`placement`] (pure math over
 //! [`crate::deployer::NodeInventory`]): scale-ups bin-pack by free
 //! `gpu_memory` with spread-by-default anti-affinity, retires drain the

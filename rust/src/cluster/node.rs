@@ -5,6 +5,11 @@
 //! and keeps the registration fresh. The node is deliberately dumb about
 //! the fleet: it advertises capacity and executes placement decisions;
 //! *where* replicas go is the coordinator's problem.
+//!
+//! Chaos drills ride in on the wrapped gateway: `gateway.chaos` arms the
+//! node's seeded fault injector at boot ([`crate::chaos`]), and the
+//! node's `/v1/admin/chaos` endpoint re-arms or disarms it at runtime —
+//! the coordinator's circuit breakers are exercised against exactly this.
 
 use super::proto::NodeAnnounce;
 use super::NodeIdentity;
@@ -97,6 +102,15 @@ impl NodeServer {
             cfg.identity.gpu_memory_total,
             cfg.coordinator.as_deref().unwrap_or("none")
         );
+        if cfg.gateway.chaos.armed() {
+            crate::warn!(
+                "cluster",
+                "node {} boots with chaos ARMED (seed {}): seeded fault injection is live \
+                 on this node's serving path",
+                announce.node_id,
+                cfg.gateway.chaos.seed
+            );
+        }
         Ok(NodeServer {
             gateway,
             announce,

@@ -10,6 +10,15 @@
 //!   few seconds, so the pool discards entries older than [`MAX_IDLE_AGE`]
 //!   on checkout rather than handing the caller a half-dead socket.
 //!
+//! * [`CircuitBreaker`] — the per-node defense the chaos layer attacks: a
+//!   rolling error/latency window with closed → open → half-open → closed
+//!   transitions. The coordinator keeps one per registered node and uses
+//!   it to *deroute* a slow-but-alive or error-spraying node without
+//!   declaring it dead: an open breaker removes the node from dispatch,
+//!   the cooldown admits a trickle of half-open probes, and enough probe
+//!   successes restore it. Pure state machine (callers pass `Instant`s),
+//!   so the transition logic is unit-testable without a clock.
+//!
 //! * [`ChunkFrameScanner`] — an incremental scanner over the upstream's
 //!   chunked transfer coding that lets the coordinator forward SSE bytes
 //!   to the client *verbatim*: no per-chunk decode, no re-framing through
@@ -20,7 +29,7 @@
 //!   the node dies mid-stream), and the terminal `0\r\n\r\n` passes through
 //!   unmodified to end the client's response exactly where the node's did.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::net::TcpStream;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -231,6 +240,260 @@ impl ChunkFrameScanner {
     }
 }
 
+/// Tuning of one per-node [`CircuitBreaker`].
+#[derive(Debug, Clone)]
+pub struct BreakerConfig {
+    /// whether the breaker participates in routing at all
+    pub enabled: bool,
+    /// rolling outcome window, in samples
+    pub window: usize,
+    /// evidence floor: no trip before this many samples are in the window
+    pub min_samples: usize,
+    /// error fraction over the window that opens the breaker
+    pub error_threshold: f64,
+    /// mean latency over the window that opens the breaker even with
+    /// all-2xx outcomes — the "slow-but-alive" axis (ZERO disables it)
+    pub latency_threshold: Duration,
+    /// how long an open breaker blocks dispatch before probing
+    pub cooldown: Duration,
+    /// successful half-open probes required to close again; also the
+    /// concurrent probe budget while half-open
+    pub half_open_probes: usize,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            enabled: true,
+            window: 20,
+            min_samples: 8,
+            error_threshold: 0.5,
+            latency_threshold: Duration::ZERO,
+            cooldown: Duration::from_secs(5),
+            half_open_probes: 3,
+        }
+    }
+}
+
+/// Where a breaker is in its lifecycle. Gauge encoding is
+/// severity-ordered: closed 0, half-open 1, open 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    HalfOpen,
+    Open,
+}
+
+impl BreakerState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::HalfOpen => "half_open",
+            BreakerState::Open => "open",
+        }
+    }
+
+    pub fn gauge(self) -> f64 {
+        match self {
+            BreakerState::Closed => 0.0,
+            BreakerState::HalfOpen => 1.0,
+            BreakerState::Open => 2.0,
+        }
+    }
+}
+
+/// A state change worth a metrics counter bump and a flight-recorder
+/// entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerTransition {
+    /// closed/half-open → open
+    Opened,
+    /// open → half-open (cooldown elapsed, probing begins)
+    HalfOpened,
+    /// half-open → closed (probes succeeded)
+    Closed,
+}
+
+impl BreakerTransition {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BreakerTransition::Opened => "open",
+            BreakerTransition::HalfOpened => "half_open",
+            BreakerTransition::Closed => "close",
+        }
+    }
+}
+
+/// Per-node circuit breaker: rolling error/latency window, closed →
+/// open → half-open → closed. All methods take `now` explicitly so tests
+/// drive the clock.
+#[derive(Debug, Clone)]
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    state: BreakerState,
+    /// (ok, latency) outcomes, newest at the back, capped at cfg.window
+    window: VecDeque<(bool, Duration)>,
+    opened_at: Option<Instant>,
+    probes_issued: usize,
+    probe_successes: usize,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: BreakerConfig) -> CircuitBreaker {
+        CircuitBreaker {
+            cfg,
+            state: BreakerState::Closed,
+            window: VecDeque::new(),
+            opened_at: None,
+            probes_issued: 0,
+            probe_successes: 0,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// Non-consuming routing check: would [`CircuitBreaker::allow`]
+    /// refuse right now? Exclusion sets are built from this so a
+    /// half-open node's probe budget is only spent on requests actually
+    /// dispatched to it, never on requests that route elsewhere.
+    pub fn would_block(&self, now: Instant) -> bool {
+        if !self.cfg.enabled {
+            return false;
+        }
+        match self.state {
+            BreakerState::Closed => false,
+            BreakerState::Open => self
+                .opened_at
+                .map(|t| now.saturating_duration_since(t) < self.cfg.cooldown)
+                .unwrap_or(false),
+            BreakerState::HalfOpen => self.probes_issued >= self.cfg.half_open_probes.max(1),
+        }
+    }
+
+    /// Error fraction over the current window (0 when empty).
+    pub fn error_fraction(&self) -> f64 {
+        if self.window.is_empty() {
+            return 0.0;
+        }
+        let errs = self.window.iter().filter(|(ok, _)| !ok).count();
+        errs as f64 / self.window.len() as f64
+    }
+
+    /// Mean latency over the current window.
+    pub fn mean_latency(&self) -> Duration {
+        if self.window.is_empty() {
+            return Duration::ZERO;
+        }
+        let total: Duration = self.window.iter().map(|(_, d)| *d).sum();
+        total / self.window.len() as u32
+    }
+
+    /// One-line evidence summary for decision records.
+    pub fn evidence(&self) -> String {
+        format!(
+            "err={:.2} mean_latency_ms={:.0} samples={}",
+            self.error_fraction(),
+            self.mean_latency().as_secs_f64() * 1e3,
+            self.window.len()
+        )
+    }
+
+    /// May a request be dispatched to this node right now? Open breakers
+    /// say no until the cooldown elapses (then flip to half-open and
+    /// admit this call as the first probe); half-open breakers admit up
+    /// to the probe budget.
+    pub fn allow(&mut self, now: Instant) -> (bool, Option<BreakerTransition>) {
+        if !self.cfg.enabled {
+            return (true, None);
+        }
+        match self.state {
+            BreakerState::Closed => (true, None),
+            BreakerState::Open => {
+                let elapsed = self
+                    .opened_at
+                    .map(|t| now.saturating_duration_since(t))
+                    .unwrap_or(Duration::ZERO);
+                if elapsed >= self.cfg.cooldown {
+                    self.state = BreakerState::HalfOpen;
+                    self.probes_issued = 1;
+                    self.probe_successes = 0;
+                    (true, Some(BreakerTransition::HalfOpened))
+                } else {
+                    (false, None)
+                }
+            }
+            BreakerState::HalfOpen => {
+                if self.probes_issued < self.cfg.half_open_probes.max(1) {
+                    self.probes_issued += 1;
+                    (true, None)
+                } else {
+                    (false, None)
+                }
+            }
+        }
+    }
+
+    /// Feed one request outcome (proxy attempt or heartbeat) into the
+    /// window and run the transition rules.
+    pub fn record(
+        &mut self,
+        ok: bool,
+        latency: Duration,
+        now: Instant,
+    ) -> Option<BreakerTransition> {
+        if !self.cfg.enabled {
+            return None;
+        }
+        self.window.push_back((ok, latency));
+        while self.window.len() > self.cfg.window.max(1) {
+            self.window.pop_front();
+        }
+        match self.state {
+            BreakerState::Closed => {
+                if self.window.len() < self.cfg.min_samples.max(1) {
+                    return None;
+                }
+                let slow = self.cfg.latency_threshold > Duration::ZERO
+                    && self.mean_latency() >= self.cfg.latency_threshold;
+                if self.error_fraction() >= self.cfg.error_threshold || slow {
+                    self.open(now);
+                    return Some(BreakerTransition::Opened);
+                }
+                None
+            }
+            BreakerState::HalfOpen => {
+                if !ok {
+                    // one failed probe re-opens: the node is still sick
+                    self.open(now);
+                    return Some(BreakerTransition::Opened);
+                }
+                self.probe_successes += 1;
+                if self.probe_successes >= self.cfg.half_open_probes.max(1) {
+                    self.state = BreakerState::Closed;
+                    self.opened_at = None;
+                    // fresh evidence only: pre-open samples must not
+                    // immediately re-trip a recovered node
+                    self.window.clear();
+                    return Some(BreakerTransition::Closed);
+                }
+                None
+            }
+            // late results from requests in flight when the breaker
+            // opened: keep them in the window, no transition
+            BreakerState::Open => None,
+        }
+    }
+
+    fn open(&mut self, now: Instant) {
+        self.state = BreakerState::Open;
+        self.opened_at = Some(now);
+        self.probes_issued = 0;
+        self.probe_successes = 0;
+    }
+}
+
 /// Parse one `\n`-terminated chunk-size line (chunk extensions after `;`
 /// are tolerated and ignored).
 fn parse_size_line(line: &[u8]) -> Result<usize, String> {
@@ -320,6 +583,155 @@ mod tests {
     fn malformed_size_line_is_an_error() {
         let mut scanner = ChunkFrameScanner::new();
         assert!(scanner.push(b"zz\r\npayload\r\n").is_err());
+    }
+
+    #[test]
+    fn would_block_mirrors_allow_without_consuming_probes() {
+        let mut b = fast_breaker();
+        let t0 = Instant::now();
+        for _ in 0..6 {
+            b.record(false, Duration::from_millis(1), t0);
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(b.would_block(t0));
+        // cooldown elapsed: routable again, but the read-only check must
+        // not flip to half-open or admit a probe by itself
+        let later = t0 + Duration::from_millis(60);
+        assert!(!b.would_block(later));
+        assert_eq!(b.state(), BreakerState::Open);
+        let (ok, tr) = b.allow(later);
+        assert!(ok);
+        assert_eq!(tr, Some(BreakerTransition::HalfOpened));
+    }
+
+    fn fast_breaker() -> CircuitBreaker {
+        CircuitBreaker::new(BreakerConfig {
+            window: 10,
+            min_samples: 4,
+            error_threshold: 0.5,
+            cooldown: Duration::from_millis(50),
+            half_open_probes: 2,
+            ..BreakerConfig::default()
+        })
+    }
+
+    #[test]
+    fn breaker_needs_evidence_before_opening() {
+        let mut b = fast_breaker();
+        let now = Instant::now();
+        // three straight failures: below the min_samples floor, no trip
+        for _ in 0..3 {
+            assert_eq!(b.record(false, Duration::from_millis(5), now), None);
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+        // fourth failure crosses the floor at 100% errors
+        assert_eq!(
+            b.record(false, Duration::from_millis(5), now),
+            Some(BreakerTransition::Opened)
+        );
+        assert_eq!(b.state(), BreakerState::Open);
+        let (allowed, _) = b.allow(now);
+        assert!(!allowed, "open breaker must block dispatch");
+    }
+
+    #[test]
+    fn breaker_recovers_through_half_open() {
+        let mut b = fast_breaker();
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            b.record(false, Duration::from_millis(5), t0);
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        // cooldown not elapsed: still blocked
+        assert!(!b.allow(t0 + Duration::from_millis(10)).0);
+        // cooldown elapsed: half-open, this call is probe #1
+        let (allowed, tr) = b.allow(t0 + Duration::from_millis(60));
+        assert!(allowed);
+        assert_eq!(tr, Some(BreakerTransition::HalfOpened));
+        // probe budget is 2: one more allowed, then blocked
+        assert!(b.allow(t0 + Duration::from_millis(61)).0);
+        assert!(!b.allow(t0 + Duration::from_millis(62)).0);
+        // two probe successes close it and clear the stale window
+        assert_eq!(b.record(true, Duration::from_millis(5), t0), None);
+        assert_eq!(
+            b.record(true, Duration::from_millis(5), t0),
+            Some(BreakerTransition::Closed)
+        );
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.error_fraction(), 0.0, "window cleared on close");
+    }
+
+    #[test]
+    fn failed_probe_reopens() {
+        let mut b = fast_breaker();
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            b.record(false, Duration::from_millis(5), t0);
+        }
+        let t1 = t0 + Duration::from_millis(60);
+        assert!(b.allow(t1).0);
+        assert_eq!(
+            b.record(false, Duration::from_millis(5), t1),
+            Some(BreakerTransition::Opened)
+        );
+        assert_eq!(b.state(), BreakerState::Open);
+        // the fresh open restarts the cooldown from t1
+        assert!(!b.allow(t1 + Duration::from_millis(10)).0);
+        assert!(b.allow(t1 + Duration::from_millis(60)).0);
+    }
+
+    #[test]
+    fn slow_but_alive_trips_latency_threshold() {
+        let mut b = CircuitBreaker::new(BreakerConfig {
+            window: 10,
+            min_samples: 4,
+            error_threshold: 0.5,
+            latency_threshold: Duration::from_millis(100),
+            ..BreakerConfig::default()
+        });
+        let now = Instant::now();
+        // all-2xx outcomes, but the rolling mean latency crosses 100ms
+        for i in 0..3 {
+            assert_eq!(b.record(true, Duration::from_millis(200), now), None, "i={i}");
+        }
+        assert_eq!(
+            b.record(true, Duration::from_millis(200), now),
+            Some(BreakerTransition::Opened)
+        );
+        assert_eq!(b.state(), BreakerState::Open);
+    }
+
+    #[test]
+    fn disabled_breaker_never_blocks() {
+        let mut b = CircuitBreaker::new(BreakerConfig {
+            enabled: false,
+            min_samples: 1,
+            window: 2,
+            ..BreakerConfig::default()
+        });
+        let now = Instant::now();
+        for _ in 0..20 {
+            assert_eq!(b.record(false, Duration::from_secs(5), now), None);
+            assert!(b.allow(now).0);
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn good_traffic_keeps_breaker_closed() {
+        let mut b = fast_breaker();
+        let now = Instant::now();
+        for _ in 0..50 {
+            assert_eq!(b.record(true, Duration::from_millis(10), now), None);
+        }
+        // sporadic failures below the threshold: stays closed
+        for _ in 0..50 {
+            b.record(true, Duration::from_millis(10), now);
+            b.record(true, Duration::from_millis(10), now);
+            b.record(true, Duration::from_millis(10), now);
+            assert_eq!(b.record(false, Duration::from_millis(10), now), None);
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! coordinator fail loudly at the protocol boundary.
 
 use super::NodeIdentity;
+use crate::chaos::ChaosConfig;
 use crate::metrics::Frame;
 use crate::util::json::{arr_f64, num, obj, s, Json};
 
@@ -424,6 +425,145 @@ impl AdminNodeScaleResponse {
     }
 }
 
+// ---------------------------------------------------------------------------
+// The versioned `/v1/debug/*` observability API and `/v1/admin/chaos`.
+//
+// PR 8 versioned the control surface; this extends the same pattern to the
+// read-only debug exports. `GET /v1/debug/traces` and `GET
+// /v1/debug/decisions` answer a typed [`DebugExportResponse`] envelope —
+// `{api_version, kind, service, data}` with the recorder's export embedded
+// under `data` — while the pre-v1 `/debug/*` paths keep serving the bare
+// export for one release as deprecated aliases. `GET|POST /v1/admin/chaos`
+// reads/replaces a node's live [`ChaosConfig`] so chaos-smoke toggles
+// faults without restarts; failures are structured [`AdminError`]s.
+// ---------------------------------------------------------------------------
+
+/// Path prefix of the versioned observability API.
+pub const DEBUG_API_PREFIX: &str = "/v1/debug";
+
+/// Version tag served in every `/v1/debug/*` and `/v1/admin/chaos` body.
+pub const DEBUG_API_VERSION: &str = "v1";
+
+/// Envelope of `GET /v1/debug/{traces,decisions}`: the recorder's legacy
+/// export object wrapped with enough typing that consumers can verify
+/// what they are holding (`kind`) and who served it (`service`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DebugExportResponse {
+    /// `"traces"` or `"decisions"`
+    pub kind: String,
+    /// serving role: `coordinator`, `gateway`, or `node:<id>`
+    pub service: String,
+    /// the full recorder export — identical to the deprecated `/debug/*`
+    /// alias body, so consumers migrate by unwrapping one level
+    pub data: Json,
+}
+
+impl DebugExportResponse {
+    pub fn new(kind: &str, service: &str, data: Json) -> DebugExportResponse {
+        DebugExportResponse {
+            kind: kind.to_string(),
+            service: service.to_string(),
+            data,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("api_version", s(DEBUG_API_VERSION)),
+            ("kind", s(&self.kind)),
+            ("service", s(&self.service)),
+            ("data", self.data.clone()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<DebugExportResponse, String> {
+        let version = j
+            .get("api_version")
+            .and_then(Json::as_str)
+            .ok_or("debug export needs a string \"api_version\"")?;
+        if version != DEBUG_API_VERSION {
+            return Err(format!("unsupported debug api_version {version:?}"));
+        }
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or("debug export needs a string \"kind\"")?
+            .to_string();
+        if kind != "traces" && kind != "decisions" {
+            return Err(format!("unknown debug export kind {kind:?}"));
+        }
+        let data = j.get("data").ok_or("debug export needs a \"data\" object")?;
+        if !matches!(data, Json::Obj(_)) {
+            return Err("debug export \"data\" must be an object".into());
+        }
+        Ok(DebugExportResponse {
+            kind,
+            service: j
+                .get("service")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            data: data.clone(),
+        })
+    }
+}
+
+/// `POST /v1/admin/chaos` body: the desired injection config. Fields not
+/// named keep their [`ChaosConfig`] defaults, so `{"error_rate":0}`
+/// disarms everything.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdminChaosRequest {
+    pub config: ChaosConfig,
+}
+
+impl AdminChaosRequest {
+    pub fn to_json(&self) -> Json {
+        self.config.to_json()
+    }
+
+    /// Parse and validate; errors are ready-to-serve [`AdminError`]s
+    /// with code `invalid_request`.
+    pub fn from_json(j: &Json) -> Result<AdminChaosRequest, AdminError> {
+        let config = ChaosConfig::from_json(j)
+            .map_err(|msg| AdminError::new("invalid_request", &msg))?;
+        Ok(AdminChaosRequest { config })
+    }
+}
+
+/// `GET|POST /v1/admin/chaos` success body: the live config plus the
+/// injector's counters (armed / degraded / injected totals).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdminChaosResponse {
+    pub service: String,
+    pub config: ChaosConfig,
+    /// [`crate::chaos::ChaosInjector::stats_json`] output
+    pub stats: Json,
+}
+
+impl AdminChaosResponse {
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("api_version", s(DEBUG_API_VERSION)),
+            ("service", s(&self.service)),
+            ("config", self.config.to_json()),
+            ("stats", self.stats.clone()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<AdminChaosResponse, String> {
+        let config = j.get("config").ok_or("chaos response needs a \"config\" object")?;
+        Ok(AdminChaosResponse {
+            service: j
+                .get("service")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            config: ChaosConfig::from_json(config)?,
+            stats: j.get("stats").cloned().unwrap_or(Json::Obj(Default::default())),
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -562,6 +702,59 @@ mod tests {
             AdminNodeScaleResponse::from_json(&Json::parse(&wire).unwrap()).unwrap(),
             down
         );
+    }
+
+    #[test]
+    fn debug_export_roundtrips_and_validates() {
+        let data = Json::parse(r#"{"recorded":3,"capacity":512,"traces":[]}"#).unwrap();
+        let resp = DebugExportResponse::new("traces", "coordinator", data.clone());
+        let wire = resp.to_json().to_string_compact();
+        assert!(wire.contains("\"api_version\":\"v1\""), "{wire}");
+        let back = DebugExportResponse::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, resp);
+        // the embedded data is the legacy alias body, verbatim
+        assert_eq!(back.data, data);
+
+        for bad in [
+            r#"{"kind":"traces","data":{}}"#,
+            r#"{"api_version":"v2","kind":"traces","data":{}}"#,
+            r#"{"api_version":"v1","kind":"spans","data":{}}"#,
+            r#"{"api_version":"v1","kind":"traces"}"#,
+            r#"{"api_version":"v1","kind":"traces","data":[]}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(DebugExportResponse::from_json(&v).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn chaos_request_surfaces_structured_errors() {
+        let ok = Json::parse(r#"{"seed":9,"error_rate":0.2}"#).unwrap();
+        let req = AdminChaosRequest::from_json(&ok).unwrap();
+        assert_eq!(req.config.seed, 9);
+        assert_eq!(req.config.error_rate, 0.2);
+        let again = AdminChaosRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(again, req);
+
+        let bad = Json::parse(r#"{"error_rate":7}"#).unwrap();
+        let err = AdminChaosRequest::from_json(&bad).unwrap_err();
+        assert_eq!(err.code, "invalid_request");
+    }
+
+    #[test]
+    fn chaos_response_roundtrips() {
+        let resp = AdminChaosResponse {
+            service: "node:node-a".into(),
+            config: ChaosConfig {
+                seed: 5,
+                error_rate: 0.1,
+                ..ChaosConfig::default()
+            },
+            stats: Json::parse(r#"{"armed":true,"injected_errors":4}"#).unwrap(),
+        };
+        let wire = resp.to_json().to_string_compact();
+        let back = AdminChaosResponse::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, resp);
     }
 
     #[test]

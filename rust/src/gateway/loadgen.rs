@@ -18,6 +18,12 @@
 //! against the gateway in real time. Each scenario emits its shape
 //! parameters into the JSON report, so a CI artifact says exactly what
 //! traffic produced its numbers.
+//!
+//! For chaos drills, [`run_adversarial`] adds deliberately *misbehaving*
+//! clients alongside the well-formed load: slow-loris writers that drip
+//! a request head byte-by-byte, and streaming readers that sever the
+//! socket mid-SSE. Both are seeded ([`AdversarialConfig::seed`]) so a
+//! failing CI run replays bit-identically.
 
 use crate::util::json::{num, obj, s, Json};
 use crate::util::rng::Pcg64;
@@ -1388,6 +1394,288 @@ fn fill_tenant_stats(report: &mut LoadgenReport, samples: &LatencySamples, specs
         .collect();
 }
 
+// ---------------------------------------------------------------------------
+// Adversarial clients
+// ---------------------------------------------------------------------------
+
+/// A deliberately misbehaving client persona for chaos drills.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdversarialKind {
+    /// drip the request head and body a few bytes at a time with seeded
+    /// pauses — the classic slow-loris connection squatter
+    SlowLoris,
+    /// start a streaming completion, read a few SSE chunks, then sever
+    /// the socket mid-stream without a clean close
+    SseDisconnect,
+}
+
+impl AdversarialKind {
+    pub const ALL: [AdversarialKind; 2] =
+        [AdversarialKind::SlowLoris, AdversarialKind::SseDisconnect];
+
+    pub fn parse(name: &str) -> Option<AdversarialKind> {
+        match name {
+            "slow-loris" => Some(AdversarialKind::SlowLoris),
+            "sse-disconnect" => Some(AdversarialKind::SseDisconnect),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AdversarialKind::SlowLoris => "slow-loris",
+            AdversarialKind::SseDisconnect => "sse-disconnect",
+        }
+    }
+}
+
+/// Parse a comma-separated persona list (`slow-loris,sse-disconnect`).
+/// An empty string selects every persona.
+pub fn parse_adversarial_list(list: &str) -> Result<Vec<AdversarialKind>> {
+    let names: Vec<&str> = list
+        .split(',')
+        .map(str::trim)
+        .filter(|n| !n.is_empty())
+        .collect();
+    if names.is_empty() {
+        return Ok(AdversarialKind::ALL.to_vec());
+    }
+    names
+        .iter()
+        .map(|n| {
+            AdversarialKind::parse(n).ok_or_else(|| {
+                anyhow!(
+                    "unknown adversarial persona {n:?} (expected one of: {})",
+                    AdversarialKind::ALL.map(|k| k.name()).join(", ")
+                )
+            })
+        })
+        .collect()
+}
+
+/// Shape of one adversarial run: `clients` misbehaving connections loop
+/// over the selected personas until `duration` elapses.
+#[derive(Debug, Clone)]
+pub struct AdversarialConfig {
+    pub kinds: Vec<AdversarialKind>,
+    pub clients: usize,
+    pub duration: Duration,
+    /// seeds every persona's byte pacing and disconnect points —
+    /// identical seeds replay identical misbehavior
+    pub seed: u64,
+    pub max_tokens: usize,
+}
+
+impl Default for AdversarialConfig {
+    fn default() -> Self {
+        AdversarialConfig {
+            kinds: AdversarialKind::ALL.to_vec(),
+            clients: 4,
+            duration: Duration::from_secs(10),
+            seed: 42,
+            max_tokens: 8,
+        }
+    }
+}
+
+/// Outcome counters of an adversarial run. "Defended" outcomes (the
+/// server cutting a loris, shedding with 4xx) are successes for the
+/// server; `errors` counts only transport failures on *our* side before
+/// the misbehavior even started.
+#[derive(Debug, Clone, Default)]
+pub struct AdversarialReport {
+    pub slow_loris_sent: usize,
+    /// the server waited out the drip and answered with a status
+    pub slow_loris_answered: usize,
+    /// the server severed the connection mid-drip (defense engaged)
+    pub slow_loris_cut: usize,
+    pub sse_attempts: usize,
+    /// streams we actually walked away from mid-flight
+    pub sse_abandoned: usize,
+    pub sse_chunks_consumed: usize,
+    pub errors: usize,
+}
+
+impl AdversarialReport {
+    fn merge(&mut self, other: &AdversarialReport) {
+        self.slow_loris_sent += other.slow_loris_sent;
+        self.slow_loris_answered += other.slow_loris_answered;
+        self.slow_loris_cut += other.slow_loris_cut;
+        self.sse_attempts += other.sse_attempts;
+        self.sse_abandoned += other.sse_abandoned;
+        self.sse_chunks_consumed += other.sse_chunks_consumed;
+        self.errors += other.errors;
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("slow_loris_sent", num(self.slow_loris_sent as f64)),
+            ("slow_loris_answered", num(self.slow_loris_answered as f64)),
+            ("slow_loris_cut", num(self.slow_loris_cut as f64)),
+            ("sse_attempts", num(self.sse_attempts as f64)),
+            ("sse_abandoned", num(self.sse_abandoned as f64)),
+            ("sse_chunks_consumed", num(self.sse_chunks_consumed as f64)),
+            ("errors", num(self.errors as f64)),
+        ])
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "adversarial: {} loris ({} answered, {} cut), {} sse streams \
+             ({} abandoned after {} chunks), {} errors",
+            self.slow_loris_sent,
+            self.slow_loris_answered,
+            self.slow_loris_cut,
+            self.sse_attempts,
+            self.sse_abandoned,
+            self.sse_chunks_consumed,
+            self.errors,
+        )
+    }
+}
+
+enum SlowLorisOutcome {
+    Answered(u16),
+    Cut,
+}
+
+/// One slow-loris exchange: a valid unary completion whose bytes arrive
+/// 1–3 at a time with seeded sub-10ms pauses. A server that tears the
+/// socket down mid-drip reports as `Cut`; one that waits us out and
+/// answers reports its status.
+fn slow_loris_once(addr: &str, rng: &mut Pcg64, max_tokens: usize) -> Result<SlowLorisOutcome> {
+    let body = obj([
+        ("prompt", s("adversarial slow loris")),
+        ("max_tokens", num(max_tokens as f64)),
+        ("stream", Json::Bool(false)),
+    ])
+    .to_string_compact();
+    let head = request_head("POST", "/v1/completions", addr, Some(&body), true, "");
+    let wire = format!("{head}{body}");
+    let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+    stream.set_nodelay(true)?;
+    let bytes = wire.as_bytes();
+    let mut sent = 0usize;
+    let mut w = &stream;
+    while sent < bytes.len() {
+        let take = rng.usize_in(1, 4).min(bytes.len() - sent);
+        match w.write_all(&bytes[sent..sent + take]).and_then(|()| w.flush()) {
+            Ok(()) => sent += take,
+            // reset/broken pipe mid-drip: the server's defense engaged
+            Err(_) => return Ok(SlowLorisOutcome::Cut),
+        }
+        std::thread::sleep(Duration::from_micros(rng.usize_in(500, 8_000) as u64));
+    }
+    match read_response(&stream) {
+        Ok(resp) => Ok(SlowLorisOutcome::Answered(resp.status)),
+        Err(_) => Ok(SlowLorisOutcome::Cut),
+    }
+}
+
+/// One mid-stream disconnect: start a streaming completion, consume a
+/// seeded 1–3 SSE chunks, then sever the socket with no clean close.
+/// Returns `(chunks_consumed, abandoned)` — not abandoned when the
+/// server answered unary/shed (nothing to walk away from) or the stream
+/// finished before the disconnect point.
+fn sse_disconnect_once(
+    addr: &str,
+    rng: &mut Pcg64,
+    max_tokens: usize,
+) -> Result<(usize, bool)> {
+    let body = obj([
+        ("prompt", s("adversarial mid-stream disconnect")),
+        ("max_tokens", num(max_tokens.max(2) as f64)),
+        ("stream", Json::Bool(true)),
+    ])
+    .to_string_compact();
+    let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+    stream.set_nodelay(true)?;
+    let mut w = &stream;
+    w.write_all(request_head("POST", "/v1/completions", addr, Some(&body), true, "").as_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()?;
+    let mut r = BufReader::new(&stream);
+    let (status, headers) = read_response_head(&mut r)?;
+    let chunked = headers
+        .get("transfer-encoding")
+        .map(|v| v.eq_ignore_ascii_case("chunked"))
+        .unwrap_or(false);
+    if status != 200 || !chunked {
+        // shed or error answer — drop the socket, nothing was streaming
+        return Ok((0, false));
+    }
+    let target = rng.usize_in(1, 4);
+    let mut consumed = 0usize;
+    while consumed < target {
+        match read_chunk(&mut r)? {
+            Some(_) => consumed += 1,
+            // the stream finished before we got to be rude
+            None => return Ok((consumed, false)),
+        }
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+    Ok((consumed, true))
+}
+
+/// Run the selected misbehaving personas against `addr` until the
+/// configured duration elapses. Runs alongside a normal loadgen/scenario
+/// (spawn it on its own thread) to answer: does hostile traffic degrade
+/// the well-behaved tenants?
+pub fn run_adversarial(addr: &str, cfg: &AdversarialConfig) -> AdversarialReport {
+    let deadline = Instant::now() + cfg.duration;
+    let (tx, rx) = mpsc::channel::<AdversarialReport>();
+    let mut handles = Vec::new();
+    let mut root = Pcg64::new(cfg.seed);
+    for worker in 0..cfg.clients.max(1) {
+        let tx = tx.clone();
+        let addr = addr.to_string();
+        let kinds = cfg.kinds.clone();
+        let max_tokens = cfg.max_tokens;
+        let mut rng = root.fork(worker as u64 + 1);
+        handles.push(std::thread::spawn(move || {
+            let mut local = AdversarialReport::default();
+            while !kinds.is_empty() && Instant::now() < deadline {
+                match *rng.choice(&kinds) {
+                    AdversarialKind::SlowLoris => {
+                        local.slow_loris_sent += 1;
+                        match slow_loris_once(&addr, &mut rng, max_tokens) {
+                            Ok(SlowLorisOutcome::Answered(_)) => local.slow_loris_answered += 1,
+                            Ok(SlowLorisOutcome::Cut) => local.slow_loris_cut += 1,
+                            Err(_) => local.errors += 1,
+                        }
+                    }
+                    AdversarialKind::SseDisconnect => {
+                        local.sse_attempts += 1;
+                        match sse_disconnect_once(&addr, &mut rng, max_tokens) {
+                            Ok((chunks, abandoned)) => {
+                                local.sse_chunks_consumed += chunks;
+                                if abandoned {
+                                    local.sse_abandoned += 1;
+                                }
+                            }
+                            Err(_) => local.errors += 1,
+                        }
+                    }
+                }
+            }
+            let _ = tx.send(local);
+        }));
+    }
+    drop(tx);
+    let mut report = AdversarialReport::default();
+    for part in rx {
+        report.merge(&part);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    report
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1651,6 +1939,124 @@ mod tests {
         let first = &mj.get("tenants").and_then(Json::as_arr).unwrap()[0];
         assert_eq!(first.get("tier").and_then(Json::as_str), Some("latency"));
         assert_eq!(first.get("slo_p95_ms").and_then(Json::as_f64), Some(5_000.0));
+    }
+
+    #[test]
+    fn adversarial_kind_names_and_lists_parse() {
+        for kind in AdversarialKind::ALL {
+            assert_eq!(AdversarialKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(AdversarialKind::parse("teapot"), None);
+        assert_eq!(
+            parse_adversarial_list("slow-loris, sse-disconnect").unwrap(),
+            AdversarialKind::ALL.to_vec()
+        );
+        assert_eq!(
+            parse_adversarial_list("").unwrap(),
+            AdversarialKind::ALL.to_vec(),
+            "empty list selects every persona"
+        );
+        assert!(parse_adversarial_list("slow-loris,teapot").is_err());
+    }
+
+    #[test]
+    fn adversarial_report_merges_and_serializes() {
+        let mut a = AdversarialReport {
+            slow_loris_sent: 2,
+            slow_loris_answered: 1,
+            slow_loris_cut: 1,
+            ..Default::default()
+        };
+        let b = AdversarialReport {
+            sse_attempts: 3,
+            sse_abandoned: 2,
+            sse_chunks_consumed: 5,
+            errors: 1,
+            ..Default::default()
+        };
+        a.merge(&b);
+        let j = Json::parse(&a.to_json().to_string_compact()).unwrap();
+        assert_eq!(j.get("slow_loris_sent").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("slow_loris_cut").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("sse_abandoned").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("sse_chunks_consumed").and_then(Json::as_usize), Some(5));
+        assert_eq!(j.get("errors").and_then(Json::as_usize), Some(1));
+        assert!(a.summary().contains("2 loris"));
+    }
+
+    /// Minimal HTTP server: read one full request (head + Content-Length
+    /// body), then answer a canned 200 and close.
+    fn canned_unary_server() -> String {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            if let Ok((mut s, _)) = listener.accept() {
+                let mut buf = Vec::new();
+                let mut tmp = [0u8; 256];
+                loop {
+                    match s.read(&mut tmp) {
+                        Ok(0) | Err(_) => break,
+                        Ok(n) => buf.extend_from_slice(&tmp[..n]),
+                    }
+                    let text = String::from_utf8_lossy(&buf);
+                    if let Some(head_end) = text.find("\r\n\r\n") {
+                        let clen = text
+                            .lines()
+                            .find_map(|l| l.to_ascii_lowercase().strip_prefix("content-length:")
+                                .and_then(|v| v.trim().parse::<usize>().ok()))
+                            .unwrap_or(0);
+                        if buf.len() >= head_end + 4 + clen {
+                            let _ = s.write_all(
+                                b"HTTP/1.1 200 OK\r\nContent-Length: 2\r\nConnection: close\r\n\r\nok",
+                            );
+                            break;
+                        }
+                    }
+                }
+            }
+        });
+        addr
+    }
+
+    #[test]
+    fn slow_loris_drips_a_parseable_request() {
+        let addr = canned_unary_server();
+        let mut rng = Pcg64::new(11);
+        match slow_loris_once(&addr, &mut rng, 4).unwrap() {
+            SlowLorisOutcome::Answered(status) => assert_eq!(status, 200),
+            SlowLorisOutcome::Cut => panic!("patient server must see the full request"),
+        }
+    }
+
+    #[test]
+    fn sse_disconnect_walks_away_mid_stream() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            if let Ok((mut s, _)) = listener.accept() {
+                // read the request head far enough to unblock the client
+                let mut tmp = [0u8; 2048];
+                let _ = s.read(&mut tmp);
+                let _ = s.write_all(
+                    b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+                      Transfer-Encoding: chunked\r\n\r\n",
+                );
+                // five content chunks, never a terminal chunk: the client
+                // must bail out on its own
+                for i in 0..5 {
+                    let event = format!("data: {{\"n\":{i}}}\n\n");
+                    let frame = format!("{:x}\r\n{event}\r\n", event.len());
+                    if s.write_all(frame.as_bytes()).is_err() {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        });
+        let mut rng = Pcg64::new(5);
+        let (consumed, abandoned) = sse_disconnect_once(&addr, &mut rng, 8).unwrap();
+        assert!(abandoned, "client must sever mid-stream");
+        assert!((1..=3).contains(&consumed), "consumed {consumed}");
     }
 
     #[test]

@@ -153,6 +153,11 @@ pub struct GatewayConfig {
     /// chat/summarize/codegen scenario tenants plus the `default`
     /// fallback every unmatched request resolves to.
     pub tenants: Vec<TenantSpec>,
+    /// seeded fault-injection config for the serving path. Disarmed by
+    /// default; armed configs fail or delay completions before dispatch
+    /// and can sever SSE streams mid-flight. Mutable at runtime through
+    /// `POST /v1/admin/chaos`.
+    pub chaos: crate::chaos::ChaosConfig,
 }
 
 impl Default for GatewayConfig {
@@ -174,6 +179,7 @@ impl Default for GatewayConfig {
             node: None,
             trace: TraceSettings::default(),
             tenants: Vec::new(),
+            chaos: crate::chaos::ChaosConfig::default(),
         }
     }
 }
@@ -305,6 +311,9 @@ struct GatewayState {
     decisions: DecisionRecorder,
     /// tenant roster resolved once per request at ingress
     tenants: Arc<TenantRegistry>,
+    /// seeded fault injector; always present (disarmed when no chaos
+    /// config was given) so `POST /v1/admin/chaos` can arm at runtime
+    chaos: Arc<crate::chaos::ChaosInjector>,
 }
 
 /// A replica worker mid-launch: the engine is constructed inside the
@@ -408,6 +417,7 @@ impl Gateway {
             } else {
                 TenantRegistry::new(cfg.tenants.clone())
             },
+            chaos: Arc::new(crate::chaos::ChaosInjector::new(cfg.chaos.clone())),
             cfg,
         });
 
@@ -1529,6 +1539,27 @@ fn route(
         ("GET", "/v1/admin/status") => admin_status(req, stream, state, t0),
         ("POST", "/v1/admin/scale-up") => cluster_scale_up(req, stream, state, t0, true),
         ("POST", "/v1/admin/scale-down") => cluster_scale_down(req, stream, state, t0, true),
+        ("GET" | "POST", "/v1/admin/chaos") => admin_chaos(req, stream, state, t0),
+        // versioned observability API: the typed envelope wraps the same
+        // recorder export the legacy aliases below still serve bare
+        ("GET", "/v1/debug/traces") => {
+            let resp = crate::cluster::proto::DebugExportResponse::new(
+                "traces",
+                &state.service,
+                state.tracer.export_json(),
+            );
+            let body = resp.to_json().to_string_compact();
+            finish(req, stream, state, "/v1/debug/traces", t0, http::Response::json(200, body))
+        }
+        ("GET", "/v1/debug/decisions") => {
+            let resp = crate::cluster::proto::DebugExportResponse::new(
+                "decisions",
+                &state.service,
+                state.decisions.export_json(),
+            );
+            let body = resp.to_json().to_string_compact();
+            finish(req, stream, state, "/v1/debug/decisions", t0, http::Response::json(200, body))
+        }
         ("POST", "/admin/scale") => admin_scale(req, stream, state, t0, false),
         ("GET", "/debug/traces") => {
             let body = state.tracer.export_json().to_string_compact();
@@ -1544,7 +1575,8 @@ fn route(
         (_, "/v1/completions" | "/v1/chat/completions" | "/admin/scale" | "/metrics" | "/healthz"
         | "/ready" | "/debug/traces" | "/debug/decisions" | "/cluster/status"
         | "/cluster/scale-up" | "/cluster/scale-down" | "/v1/admin/scale" | "/v1/admin/status"
-        | "/v1/admin/scale-up" | "/v1/admin/scale-down") => {
+        | "/v1/admin/scale-up" | "/v1/admin/scale-down" | "/v1/admin/chaos"
+        | "/v1/debug/traces" | "/v1/debug/decisions") => {
             let body = openai::to_wire(&openai::error_body(
                 "invalid_request_error",
                 &format!("method {} not allowed on {}", req.method, req.path),
@@ -1691,6 +1723,32 @@ fn serve_completion(
     let admitted_at = Instant::now();
     trace_phase(state, &trace, PHASE_ADMISSION, trace.started(), admitted_at);
 
+    // seeded fault injection, decided after admission but before dispatch
+    // so an injected failure never occupies an engine slot. The delay
+    // models a node-local latency spike (log-normal body, GPD tail); the
+    // failure answers 500, which a cluster coordinator's proxy treats as
+    // retryable on another node — chaos proves the retry path, it does
+    // not have to surface to end clients.
+    let chaos = if state.chaos.armed() {
+        state.chaos.decide()
+    } else {
+        crate::chaos::ChaosDecision::NONE
+    };
+    if !chaos.delay.is_zero() {
+        std::thread::sleep(chaos.delay);
+    }
+    if chaos.fail {
+        drop(permit);
+        let resp = http::Response::json(
+            500,
+            openai::to_wire(&openai::error_body(
+                "chaos_injected",
+                "seeded fault injection failed this request",
+            )),
+        );
+        return finish_traced(req, stream, state, endpoint, t0, &trace, resp);
+    }
+
     // weighted least-loaded dispatch with a stale-pick retry: a replica
     // can be retired between the router's choice and the live-set lookup
     let (tx, rx) = mpsc::channel::<StreamItem>();
@@ -1773,7 +1831,19 @@ fn serve_completion(
     // when the engine finishes this job, not here: responding early (504,
     // client gone) must not free capacity the engine is still using
     if params.stream {
-        stream_response(req, stream, state, &params, &req_id, &rx, chat, endpoint, t0, &trace)
+        stream_response(
+            req,
+            stream,
+            state,
+            &params,
+            &req_id,
+            &rx,
+            chat,
+            endpoint,
+            t0,
+            &trace,
+            chaos.abort_sse,
+        )
     } else {
         unary_response(req, stream, state, &params, &req_id, &rx, chat, endpoint, t0, &trace)
     }
@@ -1888,10 +1958,19 @@ fn stream_response(
     endpoint: &str,
     t0: Instant,
     trace: &ActiveTrace,
+    chaos_abort: bool,
 ) -> std::io::Result<()> {
     sse::write_sse_head(stream)?;
-    let mut writer = sse::SseWriter::new(stream);
+    // reborrow: the severed path below needs the raw socket back after
+    // the writer's last use to shut it down mid-body
+    let mut writer = sse::SseWriter::new(&mut *stream);
     let mut write_failed: Option<std::io::Error> = None;
+    // chaos: sever the socket after the first content event, with no
+    // terminal error event and no chunked terminator — the messiest
+    // mid-stream death a relay can observe. The coordinator's SSE relay
+    // must convert this into exactly one terminal error event for its
+    // own client (proven by chaos_resilience.rs).
+    let mut severed = false;
 
     if chat {
         let chunk = openai::chat_role_chunk(req_id, &params.model);
@@ -1912,6 +1991,10 @@ fn stream_response(
                     if let Err(e) = writer.event(&openai::to_wire(&chunk)) {
                         write_failed = Some(e);
                     }
+                }
+                if chaos_abort && write_failed.is_none() {
+                    severed = true;
+                    break;
                 }
             }
             Some(StreamItem::Done(c)) => {
@@ -1939,6 +2022,21 @@ fn stream_response(
                 break;
             }
         }
+    }
+
+    if severed {
+        state.metrics.add_sse_events(writer.events_written);
+        record_trace(state, trace, 500);
+        state
+            .metrics
+            .observe(endpoint, 500, t0.elapsed().as_secs_f64());
+        // no chunked terminator, no terminal event: hard-close both
+        // directions so the peer sees a truncated chunked body
+        let _ = stream.shutdown(std::net::Shutdown::Both);
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::ConnectionAborted,
+            "chaos: SSE stream severed mid-flight",
+        ));
     }
 
     // only a cleanly finished stream earns the `[DONE]` success marker; an
@@ -2071,6 +2169,68 @@ fn admin_error_response(v1: bool, status: u16, err: crate::cluster::proto::Admin
     } else {
         http::Response::json(status, openai::to_wire(&openai::error_body(&err.code, &err.message)))
     }
+}
+
+/// `GET`/`POST /v1/admin/chaos` — read or replace the seeded
+/// fault-injection config at runtime. Versioned surface only (this
+/// endpoint never had a pre-v1 spelling). A POST reseeds the injector's
+/// RNG from the new config's seed, so a scenario toggled on mid-run
+/// replays exactly like one armed at startup; both verbs answer with the
+/// resulting [`crate::cluster::proto::AdminChaosResponse`].
+fn admin_chaos(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &Arc<GatewayState>,
+    t0: Instant,
+) -> std::io::Result<()> {
+    use crate::cluster::proto::{AdminChaosRequest, AdminChaosResponse, AdminError};
+    let endpoint = "/v1/admin/chaos";
+    if req.method == "POST" {
+        let body = match req.body_str() {
+            Ok(b) => b,
+            Err(e) => {
+                let err = AdminError::new("invalid_request", &e.message);
+                return finish(req, stream, state, endpoint, t0, admin_error_response(true, 400, err));
+            }
+        };
+        let json = match Json::parse(body) {
+            Ok(j) => j,
+            Err(e) => {
+                let err = AdminError::new("invalid_request", &format!("invalid JSON: {e}"));
+                return finish(req, stream, state, endpoint, t0, admin_error_response(true, 400, err));
+            }
+        };
+        let parsed = match AdminChaosRequest::from_json(&json) {
+            Ok(r) => r,
+            Err(e) => {
+                return finish(req, stream, state, endpoint, t0, admin_error_response(true, 400, e))
+            }
+        };
+        state.chaos.set_config(parsed.config.clone());
+        state.decisions.record(
+            &state.service,
+            "chaos_config",
+            "admin",
+            vec![
+                ("armed", state.chaos.armed().to_string()),
+                ("seed", parsed.config.seed.to_string()),
+                ("generation", state.chaos.generation().to_string()),
+            ],
+        );
+        crate::info!(
+            "gateway",
+            "chaos config replaced: armed={} generation={}",
+            state.chaos.armed(),
+            state.chaos.generation()
+        );
+    }
+    let resp = AdminChaosResponse {
+        service: state.service.clone(),
+        config: state.chaos.config(),
+        stats: state.chaos.stats_json(),
+    };
+    let body = resp.to_json().to_string_compact();
+    finish(req, stream, state, endpoint, t0, http::Response::json(200, body))
 }
 
 /// `POST /v1/admin/scale-up` (alias `POST /cluster/scale-up`) — a

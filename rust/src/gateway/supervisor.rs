@@ -289,15 +289,26 @@ pub struct SupervisorSnapshot {
 /// the decision layer is testable without threads or sockets — and shared
 /// with the cluster-wide supervisor ([`crate::cluster::coordinator`]),
 /// which runs the same rule over cluster-mean rows.
+///
+/// Besides the raw streaks, the struct remembers the direction of the
+/// last action it fired. Reversing that direction within a short window
+/// (`2 × patience` observations) requires a doubled streak — hysteresis
+/// that keeps a degraded-but-noisy signal (e.g. a node tripping its
+/// circuit breaker and recovering) from flapping replica counts.
 #[derive(Debug, Default)]
 pub(crate) struct Streaks {
     up: usize,
     down: usize,
     wait: usize,
+    /// direction of the most recent *successful* scaling action
+    last_fired: Option<ScaleDirection>,
+    /// observations since that action (saturating)
+    since_fire: usize,
 }
 
 impl Streaks {
     pub(crate) fn observe(&mut self, d: &Detection, queue_wait: f64, wait_budget: f64) {
+        self.since_fire = self.since_fire.saturating_add(1);
         if d.is_anomaly && d.direction == ScaleDirection::Up {
             self.up += 1;
             self.down = 0;
@@ -315,24 +326,51 @@ impl Streaks {
         }
     }
 
+    /// Streak length demanded for `direction`: the configured patience,
+    /// doubled while we are inside the hysteresis window after firing the
+    /// opposite direction.
+    fn required(&self, patience: usize, direction: ScaleDirection) -> usize {
+        match self.last_fired {
+            Some(last) if last != direction && self.since_fire <= patience * 2 => patience * 2,
+            _ => patience,
+        }
+    }
+
     /// The action the patience rule asks for, if any. Scale-up wins ties:
     /// under genuine overload both the detector and the queue guard fire,
     /// and adding capacity is the safe direction.
     pub(crate) fn decide(&self, patience: usize) -> Option<(ScaleDirection, Trigger)> {
         let patience = patience.max(1);
-        if self.up >= patience {
+        let need_up = self.required(patience, ScaleDirection::Up);
+        let need_down = self.required(patience, ScaleDirection::Down);
+        if self.up >= need_up {
             Some((ScaleDirection::Up, Trigger::Detector))
-        } else if self.wait >= patience {
+        } else if self.wait >= need_up {
             Some((ScaleDirection::Up, Trigger::QueueWait))
-        } else if self.down >= patience {
+        } else if self.down >= need_down {
             Some((ScaleDirection::Down, Trigger::Detector))
         } else {
             None
         }
     }
 
+    /// Record that a scaling action in `direction` actually happened.
+    /// Clears the streaks and arms the reversal hysteresis.
+    pub(crate) fn note_fired(&mut self, direction: ScaleDirection) {
+        self.last_fired = Some(direction);
+        self.since_fire = 0;
+        self.up = 0;
+        self.down = 0;
+        self.wait = 0;
+    }
+
+    /// Clear the streak counters without touching the hysteresis memory:
+    /// an external event (reconfigure, calibration restart) invalidates
+    /// the streaks but not the fact that we recently scaled.
     pub(crate) fn reset(&mut self) {
-        *self = Streaks::default();
+        self.up = 0;
+        self.down = 0;
+        self.wait = 0;
     }
 }
 
@@ -518,6 +556,7 @@ pub(super) fn supervisor_loop(state: &Arc<GatewayState>, cfg: SupervisorConfig) 
                             id,
                         );
                         last_action = Some(Instant::now());
+                        streaks.note_fired(direction);
                     }
                     Err(e) => crate::error!("gateway", "supervisor scale-up failed: {e}"),
                 }
@@ -540,6 +579,7 @@ pub(super) fn supervisor_loop(state: &Arc<GatewayState>, cfg: SupervisorConfig) 
                                 id,
                             );
                             last_action = Some(Instant::now());
+                            streaks.note_fired(direction);
                         }
                         Err(e) => crate::error!("gateway", "supervisor scale-down failed: {e}"),
                     }
@@ -1053,6 +1093,67 @@ mod tests {
             s.observe(&det(false, ScaleDirection::Up), 100.0, 0.0);
         }
         assert_eq!(s.decide(2), None);
+    }
+
+    #[test]
+    fn reversal_after_firing_needs_double_patience() {
+        let mut s = Streaks::default();
+        // fire a scale-up, then watch an immediate underload signal
+        for _ in 0..2 {
+            s.observe(&det(true, ScaleDirection::Up), 0.0, 1.0);
+        }
+        assert_eq!(s.decide(2), Some((ScaleDirection::Up, Trigger::Detector)));
+        s.note_fired(ScaleDirection::Up);
+        for _ in 0..2 {
+            s.observe(&det(true, ScaleDirection::Down), 0.0, 1.0);
+        }
+        assert_eq!(
+            s.decide(2),
+            None,
+            "reversing right after a scale-up must clear doubled patience"
+        );
+        for _ in 0..2 {
+            s.observe(&det(true, ScaleDirection::Down), 0.0, 1.0);
+        }
+        assert_eq!(
+            s.decide(2),
+            Some((ScaleDirection::Down, Trigger::Detector)),
+            "a doubled streak overrides the hysteresis"
+        );
+        // repeating the same direction is never penalised
+        let mut s = Streaks::default();
+        s.note_fired(ScaleDirection::Up);
+        for _ in 0..2 {
+            s.observe(&det(true, ScaleDirection::Up), 0.0, 1.0);
+        }
+        assert_eq!(s.decide(2), Some((ScaleDirection::Up, Trigger::Detector)));
+    }
+
+    #[test]
+    fn hysteresis_window_expires() {
+        let mut s = Streaks::default();
+        s.note_fired(ScaleDirection::Up);
+        // burn through the 2×patience window with healthy samples
+        for _ in 0..5 {
+            s.observe(&det(false, ScaleDirection::Up), 0.0, 1.0);
+        }
+        for _ in 0..2 {
+            s.observe(&det(true, ScaleDirection::Down), 0.0, 1.0);
+        }
+        assert_eq!(
+            s.decide(2),
+            Some((ScaleDirection::Down, Trigger::Detector)),
+            "outside the window single patience suffices"
+        );
+        // reset() keeps the hysteresis memory, only the streaks clear
+        let mut s = Streaks::default();
+        s.note_fired(ScaleDirection::Up);
+        s.observe(&det(true, ScaleDirection::Down), 0.0, 1.0);
+        s.reset();
+        for _ in 0..2 {
+            s.observe(&det(true, ScaleDirection::Down), 0.0, 1.0);
+        }
+        assert_eq!(s.decide(2), None, "reset() must not forget the recent fire");
     }
 
     #[test]

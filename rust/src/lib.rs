@@ -55,6 +55,7 @@ pub mod stats {
 pub mod autoscaler;
 pub mod baselines;
 pub mod bench;
+pub mod chaos;
 pub mod cluster;
 pub mod clusterer;
 pub mod config;

@@ -30,22 +30,32 @@ COMMANDS:
               --forecast [--forecast-horizon-ms N --forecast-err-budget F
               --forecast-season-ms N --forecast-capacity RPS --forecast-headroom F
               --forecast-min-warm N --trough-scale-down])
+              seeded fault injection (chaos drills; see also POST /v1/admin/chaos):
+              [--chaos-seed N --chaos-error-rate F --chaos-latency-rate F
+              --chaos-latency-ms F --chaos-latency-sigma F --chaos-sse-abort-rate F
+              --chaos-degrade-period-s F --chaos-degrade-duty F --chaos-degrade-factor F]
               distributed plane: --cluster turns this process into the cluster
               coordinator (ingress + heartbeats + cross-node placement; no local
               engines): [--heartbeat-ms N --node-timeout-beats N
               --dispatch-attempts N] plus the --autoscale/--forecast supervisor
-              flags above, now scoped cluster-wide
+              flags above, now scoped cluster-wide, and per-node circuit
+              breakers [--breaker-window N (0 disables) --breaker-min-samples N
+              --breaker-error-threshold F --breaker-latency-ms N
+              --breaker-cooldown-ms N --breaker-probes N]
   node        one serving node of the distributed plane: the gateway plus the
               /cluster/* control surface, registering with a coordinator
               (--coordinator HOST:PORT --node-id NAME --gpu-memory F
               --replica-gpu-memory F --node-max-replicas N --capacity-rps F
               --announce-ms N --advertise HOST:PORT + the serve-http engine
-              flags: --engine --replicas --port --warm-pool ...)
+              flags: --engine --replicas --port --warm-pool ... and the
+              --chaos-* fault-injection flags above)
   loadgen     load against a gateway (--addr HOST:PORT [--report FILE] [--strict];
               closed loop: --concurrency N --requests N --max-tokens N;
               open-loop scenarios: --scenario steady|diurnal|spike|ramp|mixture
               --duration-s F --base-rps F --peak-rps F --period-s F --spike-start F
-              --spike-len F --seed N --workers N)
+              --spike-len F --seed N --workers N;
+              misbehaving clients alongside either mode: --adversarial
+              all|slow-loris,sse-disconnect --adversarial-clients N --chaos-seed N)
   bench-gateway  in-process scenario benchmark (--report FILE --baseline FILE
               --scenarios a,b,c --duration-s F --regression-pct F
               [--no-cluster-bench to skip the 2-node cluster scenario]
@@ -280,6 +290,49 @@ fn ingress_from_args(args: &Args) -> anyhow::Result<enova::gateway::IngressMode>
     })
 }
 
+/// The seeded fault-injection knobs (`--chaos-*`) shared by the gateway
+/// and the node. All rates default to 0, so the injector boots disarmed
+/// unless a flag (or a `chaos_*` key in the config file) arms it;
+/// `POST /v1/admin/chaos` can re-arm at runtime either way.
+fn chaos_from_args(args: &Args) -> enova::chaos::ChaosConfig {
+    let d = enova::chaos::ChaosConfig::default();
+    enova::chaos::ChaosConfig {
+        seed: args.get_usize("chaos-seed", d.seed as usize) as u64,
+        error_rate: args.get_f64("chaos-error-rate", d.error_rate),
+        latency_rate: args.get_f64("chaos-latency-rate", d.latency_rate),
+        latency_ms: args.get_f64("chaos-latency-ms", d.latency_ms),
+        latency_sigma: args.get_f64("chaos-latency-sigma", d.latency_sigma),
+        tail_ratio: args.get_f64("chaos-tail-ratio", d.tail_ratio),
+        tail_xi: args.get_f64("chaos-tail-xi", d.tail_xi),
+        tail_scale_ms: args.get_f64("chaos-tail-scale-ms", d.tail_scale_ms),
+        max_delay_ms: args.get_f64("chaos-max-delay-ms", d.max_delay_ms),
+        sse_abort_rate: args.get_f64("chaos-sse-abort-rate", d.sse_abort_rate),
+        degrade_period_s: args.get_f64("chaos-degrade-period-s", d.degrade_period_s),
+        degrade_duty: args.get_f64("chaos-degrade-duty", d.degrade_duty),
+        degrade_factor: args.get_f64("chaos-degrade-factor", d.degrade_factor),
+    }
+}
+
+/// The coordinator's per-node circuit-breaker knobs (`--breaker-*`).
+fn breaker_from_args(args: &Args) -> enova::cluster::pool::BreakerConfig {
+    use std::time::Duration;
+    let d = enova::cluster::pool::BreakerConfig::default();
+    enova::cluster::pool::BreakerConfig {
+        enabled: args.get_usize("breaker-window", d.window) > 0,
+        window: args.get_usize("breaker-window", d.window).max(1),
+        min_samples: args.get_usize("breaker-min-samples", d.min_samples).max(1),
+        error_threshold: args.get_f64("breaker-error-threshold", d.error_threshold),
+        latency_threshold: Duration::from_millis(args.get_usize(
+            "breaker-latency-ms",
+            d.latency_threshold.as_millis() as usize,
+        ) as u64),
+        cooldown: Duration::from_millis(
+            args.get_usize("breaker-cooldown-ms", d.cooldown.as_millis() as usize) as u64,
+        ),
+        half_open_probes: args.get_usize("breaker-probes", d.half_open_probes).max(1),
+    }
+}
+
 /// `enova serve-http`: the OpenAI-compatible serving gateway. `--engine
 /// auto` (default) uses the compiled LM when artifacts exist and falls
 /// back to the deterministic sim engine otherwise. With `--autoscale`,
@@ -364,8 +417,15 @@ fn serve_http(args: &Args, tenants: &[enova::gateway::admission::TenantSpec]) ->
         ingress: ingress_from_args(args)?,
         trace: trace_settings_from_args(args),
         tenants: tenants.to_vec(),
+        chaos: chaos_from_args(args),
         ..GatewayConfig::default()
     };
+    if cfg.chaos.armed() {
+        println!(
+            "  CHAOS ARMED (seed {}): seeded fault injection is live on this gateway",
+            cfg.chaos.seed
+        );
+    }
     let warm_pool = cfg.warm_pool;
     let gw = Gateway::start_scalable(cfg, spawner, replicas, supervisor)?;
     println!(
@@ -435,6 +495,7 @@ fn serve_cluster(args: &Args, tenants: &[enova::gateway::admission::TenantSpec])
         ingress: ingress_from_args(args)?,
         trace: trace_settings_from_args(args),
         tenants: tenants.to_vec(),
+        breaker: breaker_from_args(args),
         ..CoordinatorConfig::default()
     };
     let coordinator = Coordinator::start(cfg)?;
@@ -491,6 +552,7 @@ fn node_cmd(args: &Args, tenants: &[enova::gateway::admission::TenantSpec]) -> a
             ingress: ingress_from_args(args)?,
             trace: trace_settings_from_args(args),
             tenants: tenants.to_vec(),
+            chaos: chaos_from_args(args),
             ..GatewayConfig::default()
         },
         identity,
@@ -516,10 +578,40 @@ fn node_cmd(args: &Args, tenants: &[enova::gateway::admission::TenantSpec]) -> a
 /// FILE` the full report is written as JSON (the CI smoke/bench jobs'
 /// artifact); with `--strict` any transport error or non-2xx response
 /// makes the command fail.
+///
+/// `--adversarial PERSONAS` (e.g. `slow-loris,sse-disconnect`, or `all`)
+/// additionally runs seeded misbehaving clients *alongside* the
+/// well-formed load for the same `--duration-s`, seeded by
+/// `--chaos-seed`; their outcomes land under `"adversarial"` in the
+/// report. `--strict` still grades only the well-formed traffic — the
+/// point is to prove hostile clients cannot degrade it.
 fn loadgen_cmd(args: &Args) -> anyhow::Result<()> {
     use enova::gateway::loadgen::{self, ScenarioConfig, ScenarioKind};
     use std::time::Duration;
     let addr = args.get_or("addr", "127.0.0.1:8080").to_string();
+    let adversarial_handle = match args.get("adversarial") {
+        Some(list) => {
+            let kinds =
+                loadgen::parse_adversarial_list(if list == "all" { "" } else { list })?;
+            let cfg = loadgen::AdversarialConfig {
+                kinds,
+                clients: args.get_usize("adversarial-clients", 4).max(1),
+                duration: Duration::from_secs_f64(args.get_f64("duration-s", 10.0).max(0.1)),
+                seed: args.get_usize("chaos-seed", 42) as u64,
+                max_tokens: args.get_usize("max-tokens", 8),
+            };
+            println!(
+                "adversarial personas {:?} with {} clients for {:.1}s (seed {})",
+                cfg.kinds.iter().map(|k| k.name()).collect::<Vec<_>>(),
+                cfg.clients,
+                cfg.duration.as_secs_f64(),
+                cfg.seed
+            );
+            let addr = addr.clone();
+            Some(std::thread::spawn(move || loadgen::run_adversarial(&addr, &cfg)))
+        }
+        None => None,
+    };
     let report = match args.get("scenario") {
         Some(name) => {
             let kind = ScenarioKind::parse(name).ok_or_else(|| {
@@ -562,8 +654,16 @@ fn loadgen_cmd(args: &Args) -> anyhow::Result<()> {
         }
     };
     println!("{}", report.summary());
+    let adversarial_report = adversarial_handle.map(|h| h.join().unwrap_or_default());
+    if let Some(adv) = &adversarial_report {
+        println!("{}", adv.summary());
+    }
     if let Some(path) = args.get("report") {
-        std::fs::write(path, report.to_json().to_string_pretty())?;
+        let mut out = report.to_json();
+        if let (enova::util::json::Json::Obj(m), Some(adv)) = (&mut out, &adversarial_report) {
+            m.insert("adversarial".to_string(), adv.to_json());
+        }
+        std::fs::write(path, out.to_string_pretty())?;
         println!("report written to {path}");
     }
     if args.flag("strict") {

@@ -24,6 +24,8 @@
 //! [node]           # `enova node`
 //! coordinator = "127.0.0.1:8080"
 //! gpu-memory = 24.0
+//! chaos_seed = 7   # any scalar flag works, e.g. the --chaos-* /
+//! chaos_error_rate = 0.2   # --breaker-* chaos-drill knobs
 //!
 //! [tenants.chat]   # one section per tenant -> TenantRegistry
 //! tier = "latency"
@@ -344,6 +346,25 @@ tier = "batch"
         // the gateway section's keys must not leak into the coordinator
         assert_eq!(args.get("replicas"), None);
         assert!(!args.flag("autoscale"));
+    }
+
+    #[test]
+    fn chaos_and_breaker_keys_layer_like_any_flag() {
+        // the layering is generic: new scalar flags (here the chaos-drill
+        // and breaker knobs) work from a file with zero settings.rs code
+        let cfg = EnovaConfig::parse(
+            "[node]\nchaos_seed = 7\nchaos-error-rate = 0.2\n\
+             [coordinator]\nbreaker_window = 40\nbreaker-cooldown-ms = 250",
+        )
+        .unwrap();
+        let mut args = Args::default();
+        cfg.apply("node", &mut args);
+        assert_eq!(args.get_usize("chaos-seed", 0), 7);
+        assert_eq!(args.get_f64("chaos-error-rate", 0.0), 0.2);
+        let mut args = Args::parse(["--breaker-window".to_string(), "10".to_string()]);
+        cfg.apply("coordinator", &mut args);
+        assert_eq!(args.get_usize("breaker-window", 0), 10, "explicit flag wins");
+        assert_eq!(args.get_usize("breaker-cooldown-ms", 0), 250);
     }
 
     #[test]

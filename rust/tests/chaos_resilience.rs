@@ -1,0 +1,458 @@
+//! End-to-end chaos drills: a coordinator and two in-process nodes over
+//! real sockets, with the seeded fault injector armed on one node. The
+//! contract under test is the PR's headline invariant — injected faults
+//! stay invisible to clients: unary 500s are retried away (zero
+//! client-visible non-2xx, no double-commit), a severed SSE stream ends
+//! in exactly one terminal error event on a cleanly closed chunked body,
+//! and a slow-but-alive node trips its circuit breaker and recovers
+//! through half-open without ever being declared dead or backfilled.
+//! The typed `/v1/debug/*` and `/v1/admin/chaos` surfaces are asserted
+//! along the way.
+
+use enova::chaos::ChaosConfig;
+use enova::cluster::coordinator::{ClusterPolicy, Coordinator, CoordinatorConfig};
+use enova::cluster::node::{NodeConfig, NodeServer};
+use enova::cluster::pool::BreakerConfig;
+use enova::cluster::NodeIdentity;
+use enova::engine::sim::{SimEngine, SimEngineConfig};
+use enova::engine::StreamEngine;
+use enova::gateway::loadgen::{self, run_scenario, LoadgenReport, ScenarioConfig, ScenarioKind};
+use enova::gateway::metrics::parse_exposition;
+use enova::gateway::{EngineSpawner, GatewayConfig};
+use enova::trace::SpanKind;
+use enova::util::json::{num, obj, s, Json};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn sim_spawner() -> EngineSpawner {
+    Arc::new(|_id| {
+        Ok(Box::new(SimEngine::new(SimEngineConfig {
+            max_num_seqs: 4,
+            max_tokens: 64,
+            step_delay: Duration::from_millis(2),
+        })) as Box<dyn StreamEngine>)
+    })
+}
+
+/// A node whose wrapped gateway boots with the given chaos config armed
+/// (pass `ChaosConfig::default()` for a clean node).
+fn node_config(id: &str, coordinator: &str, chaos: ChaosConfig) -> NodeConfig {
+    NodeConfig {
+        gateway: GatewayConfig {
+            max_pending: 1024,
+            max_tokens_default: 8,
+            monitor_interval: Duration::from_millis(25),
+            warm_pool: 1,
+            chaos,
+            ..GatewayConfig::default()
+        },
+        identity: NodeIdentity {
+            node_id: id.to_string(),
+            gpu_memory_total: 24.0,
+            replica_gpu_memory: 8.0,
+            max_replicas: 3,
+            replica_capacity_rps: 0.0,
+        },
+        initial_replicas: 1,
+        coordinator: Some(coordinator.to_string()),
+        announce_interval: Duration::from_millis(100),
+        advertise_addr: None,
+    }
+}
+
+fn non_2xx(report: &LoadgenReport) -> usize {
+    report
+        .status_counts
+        .iter()
+        .filter(|&(&code, _)| !(200..300).contains(&code))
+        .map(|(_, &n)| n)
+        .sum()
+}
+
+fn completion_body(max_tokens: usize, stream: bool) -> String {
+    obj([
+        ("prompt", s("chaos drill")),
+        ("max_tokens", num(max_tokens as f64)),
+        ("stream", Json::Bool(stream)),
+    ])
+    .to_string_compact()
+}
+
+/// Sum of a labelled counter over a parsed exposition.
+fn counter(samples: &[enova::gateway::metrics::Sample], name: &str, label: (&str, &str)) -> f64 {
+    samples
+        .iter()
+        .filter(|s| s.name == name && s.labels.get(label.0).map(String::as_str) == Some(label.1))
+        .map(|s| s.value)
+        .sum()
+}
+
+/// Every request injected with a 500 on the chaos node re-dispatches to
+/// the healthy node: the client sees zero non-2xx and every request
+/// commits exactly one response. The chaos admin surface answers typed
+/// on the node and refuses typed on the coordinator.
+#[test]
+fn injected_errors_are_retried_away_without_double_commit() {
+    let coordinator = Coordinator::start(CoordinatorConfig {
+        heartbeat_interval: Duration::from_millis(50),
+        node_timeout_beats: 4,
+        max_pending: 2048,
+        dispatch_attempts: 4,
+        policy: ClusterPolicy {
+            detector_scaling: false,
+            forecast: None,
+            ..ClusterPolicy::default()
+        },
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let addr = coordinator.addr_string();
+
+    let node_a =
+        NodeServer::start(node_config("node-a", &addr, ChaosConfig::default()), sim_spawner())
+            .unwrap();
+    // node-b fails EVERY request it is dispatched — the worst case for
+    // the retry path, and a guaranteed breaker trip
+    let node_b = NodeServer::start(
+        node_config(
+            "node-b",
+            &addr,
+            ChaosConfig {
+                seed: 1234,
+                error_rate: 1.0,
+                ..ChaosConfig::default()
+            },
+        ),
+        sim_spawner(),
+    )
+    .unwrap();
+    assert!(coordinator.wait_for_nodes(2, Duration::from_secs(10)));
+    assert!(coordinator.wait_for_replicas(2, Duration::from_secs(10)));
+
+    // enough concurrency that least-loaded routing regularly lands on
+    // node-b (an idle tie always picks the first node)
+    let scn = ScenarioConfig {
+        kind: ScenarioKind::Steady,
+        duration: Duration::from_secs(5),
+        base_rps: 24.0,
+        peak_rps: 24.0,
+        seed: 21,
+        workers: 32,
+        max_tokens: 4,
+        ..ScenarioConfig::default()
+    };
+    let report = run_scenario(&addr, &scn);
+    assert_eq!(report.errors, 0, "no transport errors under chaos: {}", report.summary());
+    assert_eq!(non_2xx(&report), 0, "zero client-visible non-2xx: {:?}", report.status_counts);
+    // exactly one committed response per offered request — a retried
+    // unary never double-commits (completions are stateless server-side,
+    // and a response was never started on the failed attempt)
+    assert_eq!(
+        report.status_counts.get(&200).copied().unwrap_or(0),
+        report.requests,
+        "every request committed exactly one 200: {:?}",
+        report.status_counts
+    );
+
+    // the retries are visible on the traces: a shed_500 retry span on
+    // node-b followed by a successful proxy attempt elsewhere
+    let retried: Vec<_> = coordinator
+        .traces()
+        .into_iter()
+        .filter(|t| {
+            t.spans.iter().any(|sp| {
+                sp.kind == SpanKind::Retry
+                    && sp.attrs.iter().any(|(k, v)| *k == "cause" && v == "shed_500")
+                    && sp.attrs.iter().any(|(k, v)| *k == "node" && v == "node-b")
+            })
+        })
+        .collect();
+    assert!(!retried.is_empty(), "at least one trace recorded an injected-500 retry");
+    for t in &retried {
+        assert_eq!(t.status, 200, "the retried request still succeeded: {t:?}");
+        let proxies = t.spans.iter().filter(|sp| sp.kind == SpanKind::Proxy).count();
+        assert!(proxies >= 2, "a failed and a successful attempt: {t:?}");
+    }
+
+    // chaos is node-local state: the node answers the typed surface...
+    let chaos_view = loadgen::get(&node_b.addr_string(), "/v1/admin/chaos").unwrap();
+    assert_eq!(chaos_view.status, 200);
+    let body = chaos_view.json().unwrap();
+    assert_eq!(body.get("api_version").and_then(Json::as_str), Some("v1"));
+    assert_eq!(body.at(&["config", "error_rate"]).and_then(Json::as_f64), Some(1.0));
+    assert!(
+        body.at(&["stats", "injected_errors"]).and_then(Json::as_f64).unwrap_or(0.0) > 0.0,
+        "the injector counted its faults: {}",
+        body.to_string_compact()
+    );
+    // ...and the coordinator refuses it with a structured error
+    let refused = loadgen::get(&addr, "/v1/admin/chaos").unwrap();
+    assert_eq!(refused.status, 400);
+    let err = refused.json().unwrap();
+    assert_eq!(err.get("code").and_then(Json::as_str), Some("unsupported"));
+
+    // runtime disarm round-trips through the same endpoint: an empty
+    // body means "all defaults", and all-defaults is disarmed
+    let disarmed = loadgen::post_json(&node_b.addr_string(), "/v1/admin/chaos", "{}").unwrap();
+    assert_eq!(disarmed.status, 200);
+    let body = disarmed.json().unwrap();
+    assert_eq!(body.at(&["config", "error_rate"]).and_then(Json::as_f64), Some(0.0));
+    assert_eq!(body.at(&["stats", "armed"]), Some(&Json::Bool(false)));
+
+    coordinator.shutdown();
+    node_a.shutdown();
+    node_b.shutdown();
+}
+
+/// Arm mid-stream SSE aborts on one node at runtime (through the typed
+/// chaos API), then stream through the coordinator: a severed upstream
+/// yields exactly ONE terminal `service_unavailable` event as the last
+/// data event of a cleanly closed chunked 200 — never a torn client
+/// socket, never a second error event.
+#[test]
+fn severed_sse_streams_end_in_one_terminal_error_event() {
+    let coordinator = Coordinator::start(CoordinatorConfig {
+        heartbeat_interval: Duration::from_millis(50),
+        node_timeout_beats: 4,
+        max_pending: 2048,
+        dispatch_attempts: 4,
+        policy: ClusterPolicy {
+            detector_scaling: false,
+            forecast: None,
+            ..ClusterPolicy::default()
+        },
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let addr = coordinator.addr_string();
+
+    let node_a =
+        NodeServer::start(node_config("node-a", &addr, ChaosConfig::default()), sim_spawner())
+            .unwrap();
+    let node_b =
+        NodeServer::start(node_config("node-b", &addr, ChaosConfig::default()), sim_spawner())
+            .unwrap();
+    assert!(coordinator.wait_for_nodes(2, Duration::from_secs(10)));
+    assert!(coordinator.wait_for_replicas(2, Duration::from_secs(10)));
+
+    // arm BOTH nodes at runtime so the behavior is routing-independent:
+    // every stream is severed after at least one event, with no clean
+    // close on the node side
+    for node_addr in [node_a.addr_string(), node_b.addr_string()] {
+        let armed = loadgen::post_json(
+            &node_addr,
+            "/v1/admin/chaos",
+            &obj([("seed", num(99.0)), ("sse_abort_rate", num(1.0))]).to_string_compact(),
+        )
+        .unwrap();
+        assert_eq!(armed.status, 200);
+        let body = armed.json().unwrap();
+        assert_eq!(body.at(&["config", "sse_abort_rate"]).and_then(Json::as_f64), Some(1.0));
+    }
+
+    for _ in 0..10 {
+        let resp = loadgen::post_json(&addr, "/v1/completions", &completion_body(8, true))
+            .expect("a severed upstream must not tear the client socket");
+        assert_eq!(resp.status, 200, "the stream already committed 200: {}", resp.body_str());
+        let events = resp.sse_data();
+        assert!(!events.is_empty(), "at least one event relayed: {}", resp.body_str());
+        let errors = events.iter().filter(|e| e.contains("service_unavailable")).count();
+        assert_eq!(errors, 1, "exactly one terminal error event: {events:?}");
+        assert!(
+            events.last().unwrap().contains("service_unavailable"),
+            "the error event terminates the stream: {events:?}"
+        );
+        assert!(
+            !events.iter().any(|e| e.trim() == "[DONE]"),
+            "a severed stream must not also claim completion: {events:?}"
+        );
+    }
+
+    // a severed stream committed a 200 before dying — it is the client's
+    // problem to surface, not a node-health verdict: the breaker stays
+    // closed and nobody is declared dead or backfilled
+    assert_eq!(coordinator.healthy_nodes(), 2);
+    assert!(
+        !coordinator.decisions().iter().any(|d| d.kind == "breaker"),
+        "SSE aborts after commit must not trip the breaker"
+    );
+
+    coordinator.shutdown();
+    node_a.shutdown();
+    node_b.shutdown();
+}
+
+/// A slow-but-alive node (seeded latency spikes, heartbeats unaffected)
+/// trips its circuit breaker on the latency window, keeps its replicas
+/// and registration the whole time, and — once the chaos is disarmed —
+/// recovers through half-open probes back to closed. No death, no
+/// backfill, no replica flapping.
+#[test]
+fn slow_node_trips_the_breaker_and_recovers_through_half_open() {
+    let coordinator = Coordinator::start(CoordinatorConfig {
+        heartbeat_interval: Duration::from_millis(50),
+        node_timeout_beats: 8,
+        max_pending: 2048,
+        dispatch_attempts: 4,
+        breaker: BreakerConfig {
+            enabled: true,
+            window: 8,
+            min_samples: 4,
+            error_threshold: 0.5,
+            latency_threshold: Duration::from_millis(120),
+            cooldown: Duration::from_millis(400),
+            half_open_probes: 2,
+        },
+        policy: ClusterPolicy {
+            detector_scaling: false,
+            forecast: None,
+            ..ClusterPolicy::default()
+        },
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let addr = coordinator.addr_string();
+
+    let node_a =
+        NodeServer::start(node_config("node-a", &addr, ChaosConfig::default()), sim_spawner())
+            .unwrap();
+    // node-b answers everything — ~300ms late: alive by every health
+    // check, useless on the serving path
+    let node_b = NodeServer::start(
+        node_config(
+            "node-b",
+            &addr,
+            ChaosConfig {
+                seed: 7,
+                latency_rate: 1.0,
+                latency_ms: 300.0,
+                latency_sigma: 0.1,
+                tail_ratio: 0.0,
+                max_delay_ms: 600.0,
+                ..ChaosConfig::default()
+            },
+        ),
+        sim_spawner(),
+    )
+    .unwrap();
+    assert!(coordinator.wait_for_nodes(2, Duration::from_secs(10)));
+    assert!(coordinator.wait_for_replicas(2, Duration::from_secs(10)));
+
+    // enough offered load that the least-loaded scan regularly overflows
+    // onto node-b (idle ties always pick the first node) and its latency
+    // window fills past min_samples
+    let scn = ScenarioConfig {
+        kind: ScenarioKind::Steady,
+        duration: Duration::from_secs(4),
+        base_rps: 24.0,
+        peak_rps: 24.0,
+        seed: 31,
+        workers: 32,
+        max_tokens: 4,
+        ..ScenarioConfig::default()
+    };
+    let report = run_scenario(&addr, &scn);
+    assert_eq!(report.errors, 0, "slow is not broken: {}", report.summary());
+    assert_eq!(non_2xx(&report), 0, "zero non-2xx through the slow node: {:?}", report.status_counts);
+
+    // the breaker opened on latency evidence, attributed to node-b
+    let opened = coordinator
+        .decisions()
+        .into_iter()
+        .find(|d| d.kind == "breaker" && d.reason == "open")
+        .expect("the latency window tripped the breaker");
+    assert!(
+        opened.attrs.iter().any(|(k, v)| *k == "node" && v == "node-b"),
+        "the slow node was the one derouted: {opened:?}"
+    );
+    // ...but it is a routing verdict, not a death certificate
+    assert_eq!(coordinator.healthy_nodes(), 2, "node-b never declared dead");
+    assert!(
+        coordinator.wait_for_replicas(2, Duration::from_secs(2)),
+        "replica counts untouched: {:?}",
+        coordinator.nodes()
+    );
+    assert!(
+        !coordinator
+            .decisions()
+            .iter()
+            .any(|d| d.kind == "placement" && d.reason == "backfill"),
+        "a derouted node is not backfilled"
+    );
+
+    // cure the node, then drive probes until the breaker closes again.
+    // Traffic drives the state machine — and it must be CONCURRENT: an
+    // idle-tie pick always lands on node-a, so only overlapping requests
+    // reach node-b and spend its half-open probe budget.
+    let cured = loadgen::post_json(&node_b.addr_string(), "/v1/admin/chaos", "{}").unwrap();
+    assert_eq!(cured.status, 200);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let recovered = loop {
+        let batch: Vec<_> = (0..4)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    loadgen::post_json(&addr, "/v1/completions", &completion_body(4, false))
+                })
+            })
+            .collect();
+        for h in batch {
+            let resp = h.join().unwrap().expect("probe traffic flows");
+            assert!((200..300).contains(&resp.status), "probes stay 2xx: {}", resp.status);
+        }
+        let scrape = loadgen::get(&addr, "/metrics").unwrap();
+        let samples = parse_exposition(&scrape.body_str()).expect("valid exposition");
+        let closes =
+            counter(&samples, "enova_cluster_breaker_transitions_total", ("transition", "close"));
+        let state = counter(&samples, "enova_cluster_breaker_state", ("node", "node-b"));
+        if closes > 0.0 && state == 0.0 {
+            break true;
+        }
+        if Instant::now() >= deadline {
+            break false;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert!(recovered, "the cured node closed its breaker within the deadline");
+
+    // the full open → half-open → close cycle is on the scrape...
+    let scrape = loadgen::get(&addr, "/metrics").unwrap();
+    let samples = parse_exposition(&scrape.body_str()).expect("valid exposition");
+    for transition in ["open", "half_open", "close"] {
+        assert!(
+            counter(
+                &samples,
+                "enova_cluster_breaker_transitions_total",
+                ("transition", transition)
+            ) > 0.0,
+            "transition {transition} counted"
+        );
+    }
+    // ...and narrated in the flight recorder, served typed over HTTP
+    let v1 = loadgen::get(&addr, "/v1/debug/decisions").unwrap();
+    assert_eq!(v1.status, 200);
+    let envelope = v1.json().unwrap();
+    assert_eq!(envelope.get("api_version").and_then(Json::as_str), Some("v1"));
+    let decisions = envelope
+        .at(&["data", "decisions"])
+        .and_then(Json::as_arr)
+        .expect("decisions array in the typed envelope");
+    for reason in ["open", "half_open", "close"] {
+        assert!(
+            decisions.iter().any(|d| {
+                d.get("kind").and_then(Json::as_str) == Some("breaker")
+                    && d.get("reason").and_then(Json::as_str) == Some(reason)
+            }),
+            "breaker {reason} recorded: {}",
+            envelope.to_string_compact()
+        );
+    }
+
+    // still two healthy nodes, still two replicas: recovery flapped nothing
+    assert_eq!(coordinator.healthy_nodes(), 2);
+    assert!(coordinator.wait_for_replicas(2, Duration::from_secs(2)));
+
+    coordinator.shutdown();
+    node_a.shutdown();
+    node_b.shutdown();
+}

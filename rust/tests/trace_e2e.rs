@@ -122,6 +122,28 @@ fn cross_node_traces_share_one_id_and_phases_partition_the_latency() {
         "both nodes contributed spans: {}",
         view.to_string_compact()
     );
+    // the same export under the versioned API: typed envelope with the
+    // legacy payload verbatim under `data`; the old path stays an alias
+    let v1 = loadgen::get(&addr, "/v1/debug/traces").unwrap();
+    assert_eq!(v1.status, 200);
+    let envelope = v1.json().unwrap();
+    assert_eq!(envelope.get("api_version").and_then(Json::as_str), Some("v1"));
+    assert_eq!(envelope.get("kind").and_then(Json::as_str), Some("traces"));
+    assert_eq!(envelope.get("service").and_then(Json::as_str), Some("coordinator"));
+    assert_eq!(
+        envelope.at(&["data", "traces"]).and_then(Json::as_arr).map(<[Json]>::len),
+        Some(traces.len()),
+        "typed export carries the same trace payload"
+    );
+    // node gateways serve the same envelope
+    let node_v1 = loadgen::get(&node_a.addr_string(), "/v1/debug/traces").unwrap().json().unwrap();
+    assert_eq!(node_v1.get("api_version").and_then(Json::as_str), Some("v1"));
+    assert_eq!(node_v1.get("kind").and_then(Json::as_str), Some("traces"));
+    assert!(
+        node_v1.at(&["data", "traces"]).and_then(Json::as_arr).is_some(),
+        "node-side typed export: {}",
+        node_v1.to_string_compact()
+    );
     let mut cross_node = 0usize;
     for t in traces {
         let spans = t.get("spans").and_then(Json::as_arr).expect("spans array");
@@ -303,6 +325,25 @@ fn node_death_leaves_retry_spans_and_a_backfill_decision() {
         decisions.iter().any(|d| d.get("reason").and_then(Json::as_str) == Some("backfill")),
         "backfill visible at /debug/decisions: {}",
         body.to_string_compact()
+    );
+
+    // and under the versioned path, wrapped in the typed envelope
+    let v1 = loadgen::get(&addr, "/v1/debug/decisions").unwrap();
+    assert_eq!(v1.status, 200);
+    let envelope = v1.json().unwrap();
+    assert_eq!(envelope.get("api_version").and_then(Json::as_str), Some("v1"));
+    assert_eq!(envelope.get("kind").and_then(Json::as_str), Some("decisions"));
+    assert_eq!(envelope.get("service").and_then(Json::as_str), Some("coordinator"));
+    assert!(
+        envelope
+            .at(&["data", "decisions"])
+            .and_then(Json::as_arr)
+            .map(|ds| ds
+                .iter()
+                .any(|d| d.get("reason").and_then(Json::as_str) == Some("backfill")))
+            .unwrap_or(false),
+        "backfill visible at /v1/debug/decisions: {}",
+        envelope.to_string_compact()
     );
 
     coordinator.shutdown();

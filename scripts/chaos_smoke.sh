@@ -1,0 +1,186 @@
+#!/usr/bin/env bash
+# CI chaos smoke: seeded fault injection against the distributed plane,
+# with the circuit breakers as the defense under test.
+#
+#   1. boot `enova serve-http --cluster` (tight breaker windows) + two
+#      `enova node` processes on the sim engine; node-b boots with the
+#      seeded injector armed in degrade-and-recover mode (error rate
+#      0.25 rising 4x to 1.0 for half of every 2s period);
+#   2. assert the chaos admin surface: `GET /v1/admin/chaos` shows the
+#      CLI-armed config, `POST /v1/admin/chaos` round-trips it (and
+#      re-seeds the injector, so the drill replays deterministically);
+#   3. replay the `mixture` scenario through the coordinator with
+#      `--strict` — plus seeded adversarial clients (slow-loris writers,
+#      mid-stream SSE disconnects) riding alongside — any transport
+#      error, non-2xx, or tenant SLO violation fails the job: injected
+#      faults must stay invisible to well-formed clients;
+#   4. assert the breaker OPENED on node-b during the drill, while the
+#      node was never declared dead and no replica was backfilled
+#      (derouting is a routing verdict, not a death certificate);
+#   5. disarm node-b over the admin API, drive a recovery burst, and
+#      assert the breaker CLOSED again through half-open probes;
+#   6. assert the typed `/v1/debug/{traces,decisions}` envelopes and
+#      their deprecated `/debug/*` aliases serve the same payloads.
+#
+# Artifacts: the loadgen reports plus both scrapes and the debug exports.
+# Cleanup runs through scripts/smoke_common.sh (one EXIT trap kills and
+# reaps everything).
+#
+# Expects the release binary to be built already:
+#   cargo build --release --no-default-features  (or with default features)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+# shellcheck source=scripts/smoke_common.sh
+source scripts/smoke_common.sh
+
+BIN=rust/target/release/enova
+PORT="${CHAOS_PORT:-18600}"
+NODE_A_PORT="${CHAOS_NODE_A_PORT:-18601}"
+NODE_B_PORT="${CHAOS_NODE_B_PORT:-18602}"
+REPORT="${CHAOS_REPORT:-loadgen-chaos-report.json}"
+RECOVERY_REPORT="${CHAOS_RECOVERY_REPORT:-loadgen-chaos-recovery.json}"
+SCRAPE_DRILL="${CHAOS_SCRAPE_DRILL:-chaos-scrape-drill.txt}"
+SCRAPE_POST="${CHAOS_SCRAPE_POST:-chaos-scrape-post.txt}"
+
+if [[ ! -x "$BIN" ]]; then
+    echo "release binary missing at $BIN; build it first" >&2
+    exit 2
+fi
+
+# tight breaker tuning so an 8-second drill exercises the full
+# closed -> open -> half-open -> closed cycle
+start_bg "$BIN" serve-http --cluster --port "$PORT" \
+    --heartbeat-ms 100 --node-timeout-beats 5 --dispatch-attempts 4 \
+    --max-pending 2048 \
+    --breaker-window 6 --breaker-min-samples 3 --breaker-error-threshold 0.5 \
+    --breaker-cooldown-ms 300 --breaker-probes 2
+
+start_bg "$BIN" node --engine sim --port "$NODE_A_PORT" \
+    --coordinator "127.0.0.1:$PORT" --node-id node-a --replicas 1 --warm-pool 1 \
+    --gpu-memory 24 --replica-gpu-memory 8 --max-pending 1024 --announce-ms 200
+
+# node-b: seeded degrade-and-recover — base error rate 0.25, multiplied
+# 4x (to 1.0) for half of every 2s period. Heartbeats are NOT injected,
+# so the node looks alive the whole time; only its serving path degrades.
+start_bg "$BIN" node --engine sim --port "$NODE_B_PORT" \
+    --coordinator "127.0.0.1:$PORT" --node-id node-b --replicas 1 --warm-pool 1 \
+    --gpu-memory 24 --replica-gpu-memory 8 --max-pending 1024 --announce-ms 200 \
+    --chaos-seed 7 --chaos-error-rate 0.25 \
+    --chaos-degrade-period-s 2 --chaos-degrade-duty 0.5 --chaos-degrade-factor 4
+
+wait_http_ok "http://127.0.0.1:$PORT/ready"
+REPLICAS=0
+for _ in $(seq 1 100); do
+    REPLICAS=$(curl -fsS "http://127.0.0.1:$PORT/metrics" \
+        | sed -n 's/^enova_cluster_replicas \(.*\)$/\1/p')
+    [[ "$REPLICAS" == "2" ]] && break
+    sleep 0.1
+done
+if [[ "$REPLICAS" != "2" ]]; then
+    echo "cluster never reached 2 observed replicas (saw ${REPLICAS:-none})" >&2
+    exit 1
+fi
+
+echo "==> chaos admin surface (typed get/set on the node, refusal on the coordinator)"
+CHAOS_VIEW=$(mktemp)
+curl -fsS "http://127.0.0.1:$NODE_B_PORT/v1/admin/chaos" > "$CHAOS_VIEW"
+python3 - "$CHAOS_VIEW" <<'PY'
+import json, sys
+
+v = json.load(open(sys.argv[1]))
+assert v["api_version"] == "v1", v
+assert v["config"]["error_rate"] == 0.25, v["config"]
+assert v["config"]["degrade_period_s"] == 2, v["config"]
+assert v["stats"]["armed"] is True, v["stats"]
+print(f"chaos GET OK: armed seed={v['config']['seed']} on {v['service']}")
+PY
+# POST round-trips the same config (and re-seeds the injector's RNG, so
+# the drill that follows replays like one armed at boot)
+CONFIG=$(python3 -c "import json,sys; print(json.dumps(json.load(open(sys.argv[1]))['config']))" "$CHAOS_VIEW")
+curl -fsS -X POST --data "$CONFIG" "http://127.0.0.1:$NODE_B_PORT/v1/admin/chaos" \
+    | grep -q '"error_rate":0.25'
+rm -f "$CHAOS_VIEW"
+# fault injection is node-local: the coordinator refuses with a
+# structured error, not a bare 404
+curl -sS "http://127.0.0.1:$PORT/v1/admin/chaos" | grep -q '"unsupported"'
+
+echo "==> mixture drill under chaos (--strict) with adversarial clients alongside"
+"$BIN" loadgen --addr "127.0.0.1:$PORT" --scenario mixture \
+    --duration-s 10 --base-rps 12 --peak-rps 12 --seed 11 --workers 24 \
+    --max-tokens 8 --strict --report "$REPORT" \
+    --adversarial all --adversarial-clients 2 --chaos-seed 42
+
+echo "==> drill scrape assertions (breaker opened, nobody died, nothing backfilled)"
+curl -fsS "http://127.0.0.1:$PORT/metrics" > "$SCRAPE_DRILL"
+grep -q '^enova_cluster_nodes 2$' "$SCRAPE_DRILL"
+grep -q '^enova_cluster_node_deaths_total 0$' "$SCRAPE_DRILL"
+grep -q '^enova_cluster_replicas 2$' "$SCRAPE_DRILL"
+grep -q 'enova_cluster_breaker_state{node="node-b"}' "$SCRAPE_DRILL"
+OPENS=$(sed -n 's/^enova_cluster_breaker_transitions_total{transition="open"} //p' "$SCRAPE_DRILL")
+if [[ "${OPENS:-0}" -lt 1 ]]; then
+    echo "the drill never tripped a breaker (opens=${OPENS:-0})" >&2
+    exit 1
+fi
+# the injector actually fired (the zero-error report is retries, not luck)
+curl -fsS "http://127.0.0.1:$NODE_B_PORT/v1/admin/chaos" \
+    | python3 -c "import json,sys; s=json.load(sys.stdin)['stats']; assert s['injected_errors'] > 0, s; print(f\"injected_errors={s['injected_errors']}\")"
+
+echo "==> disarm node-b and drive the recovery burst"
+curl -fsS -X POST --data '{}' "http://127.0.0.1:$NODE_B_PORT/v1/admin/chaos" \
+    | grep -q '"armed":false'
+"$BIN" loadgen --addr "127.0.0.1:$PORT" --scenario steady \
+    --duration-s 4 --base-rps 16 --peak-rps 16 --seed 13 --workers 16 \
+    --max-tokens 4 --strict --report "$RECOVERY_REPORT"
+
+echo "==> post-recovery scrape assertions (half-open probed, breaker closed)"
+curl -fsS "http://127.0.0.1:$PORT/metrics" > "$SCRAPE_POST"
+for transition in open half_open close; do
+    COUNT=$(sed -n "s/^enova_cluster_breaker_transitions_total{transition=\"$transition\"} //p" "$SCRAPE_POST")
+    if [[ "${COUNT:-0}" -lt 1 ]]; then
+        echo "breaker transition '$transition' never fired (count=${COUNT:-0})" >&2
+        exit 1
+    fi
+done
+grep -q '^enova_cluster_breaker_state{node="node-b"} 0$' "$SCRAPE_POST"
+grep -q '^enova_cluster_nodes 2$' "$SCRAPE_POST"
+grep -q '^enova_cluster_node_deaths_total 0$' "$SCRAPE_POST"
+grep -q '^enova_cluster_replicas 2$' "$SCRAPE_POST"
+
+echo "==> debug exports: typed /v1/debug/* envelopes + deprecated /debug/* aliases"
+TRACES="${CHAOS_TRACES:-chaos-traces.json}"
+DECISIONS="${CHAOS_DECISIONS:-chaos-decisions.json}"
+curl -fsS "http://127.0.0.1:$PORT/v1/debug/traces" > "$TRACES"
+curl -fsS "http://127.0.0.1:$PORT/v1/debug/decisions" > "$DECISIONS"
+LEGACY_TRACES=$(mktemp)
+LEGACY_DECISIONS=$(mktemp)
+curl -fsS "http://127.0.0.1:$PORT/debug/traces" > "$LEGACY_TRACES"
+curl -fsS "http://127.0.0.1:$PORT/debug/decisions" > "$LEGACY_DECISIONS"
+python3 - "$TRACES" "$DECISIONS" "$LEGACY_TRACES" "$LEGACY_DECISIONS" <<'PY'
+import json, sys
+
+traces, decisions, legacy_traces, legacy_decisions = (json.load(open(p)) for p in sys.argv[1:5])
+for env, kind in ((traces, "traces"), (decisions, "decisions")):
+    assert env["api_version"] == "v1" and env["kind"] == kind, env.keys()
+    assert env["service"] == "coordinator", env["service"]
+# the envelope's data IS the legacy alias body (same recorder, one level
+# of wrapping) — modulo entries recorded between the two scrapes
+assert traces["data"]["traces"], "the drill left no traces"
+assert legacy_traces["traces"], "legacy alias serves no traces"
+assert traces["data"].keys() == legacy_traces.keys(), (traces["data"].keys(), legacy_traces.keys())
+
+ds = decisions["data"]["decisions"]
+breaker = {d["reason"] for d in ds if d["kind"] == "breaker"}
+assert {"open", "half_open", "close"} <= breaker, f"breaker lifecycle incomplete: {breaker}"
+opened = [d for d in ds if d["kind"] == "breaker" and d["reason"] == "open"]
+assert all(d["attrs"]["node"] == "node-b" for d in opened), opened
+assert all("evidence" in d["attrs"] for d in opened), opened
+# a derouted node is NOT a dead node: no backfill placements
+assert not [d for d in ds if d["kind"] == "placement" and d["reason"] == "backfill"], ds
+assert legacy_decisions["decisions"], "legacy alias serves no decisions"
+print(f"debug exports OK: {len(traces['data']['traces'])} traces, "
+      f"{len(opened)} breaker opens (all node-b), no backfills")
+PY
+rm -f "$LEGACY_TRACES" "$LEGACY_DECISIONS"
+
+echo "chaos smoke OK; reports at $REPORT + $RECOVERY_REPORT, scrapes at $SCRAPE_DRILL + $SCRAPE_POST"

@@ -128,6 +128,12 @@ TRACES="${CLUSTER_TRACES:-cluster-traces.json}"
 DECISIONS="${CLUSTER_DECISIONS:-cluster-decisions.json}"
 curl -fsS "http://127.0.0.1:$PORT/debug/traces" > "$TRACES"
 curl -fsS "http://127.0.0.1:$PORT/debug/decisions" > "$DECISIONS"
+# the versioned exports wrap the same recorders in the typed envelope;
+# the unversioned paths above stay deprecated aliases with the bare shapes
+curl -fsS "http://127.0.0.1:$PORT/v1/debug/traces" \
+    | python3 -c "import json,sys; e=json.load(sys.stdin); assert e['api_version']=='v1' and e['kind']=='traces' and e['service']=='coordinator' and e['data']['traces'], e.keys(); print('/v1/debug/traces OK')"
+curl -fsS "http://127.0.0.1:$PORT/v1/debug/decisions" \
+    | python3 -c "import json,sys; e=json.load(sys.stdin); assert e['api_version']=='v1' and e['kind']=='decisions' and e['data']['decisions'], e.keys(); print('/v1/debug/decisions OK')"
 python3 - "$TRACES" "$DECISIONS" <<'PY'
 import json, sys
 

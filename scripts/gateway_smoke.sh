@@ -118,6 +118,23 @@ echo "$LEGACY_ERR" | grep -q '"error"'
 echo "==> trace assertions (every request left a full-lifecycle trace)"
 TRACES="${SMOKE_TRACES:-gateway-traces${SCENARIO:+-$SCENARIO}.json}"
 curl -fsS "http://127.0.0.1:$PORT/debug/traces" > "$TRACES"
+# the versioned path serves the same export inside the typed envelope;
+# the unversioned path above stays a deprecated alias with the bare shape
+V1_TRACES=$(mktemp)
+curl -fsS "http://127.0.0.1:$PORT/v1/debug/traces" > "$V1_TRACES"
+python3 - "$V1_TRACES" "$TRACES" <<'PY'
+import json, sys
+
+env = json.load(open(sys.argv[1]))
+legacy = json.load(open(sys.argv[2]))
+assert env["api_version"] == "v1" and env["kind"] == "traces", env.keys()
+assert env["data"].keys() == legacy.keys(), (env["data"].keys(), legacy.keys())
+assert env["data"]["traces"], "typed trace export is empty"
+print(f"/v1/debug/traces OK: typed envelope wraps the legacy shape ({env['service']})")
+PY
+rm -f "$V1_TRACES"
+curl -fsS "http://127.0.0.1:$PORT/v1/debug/decisions" | grep -q '"api_version":"v1"'
+curl -fsS "http://127.0.0.1:$PORT/debug/decisions" | grep -q '"decisions"'
 python3 - "$TRACES" <<'PY'
 import json, sys
 
