@@ -37,8 +37,10 @@ use super::pool::{
     BreakerConfig, BreakerTransition, ChunkFrameScanner, CircuitBreaker, NodePool,
 };
 use super::proto::{
-    AdminError, AdminNodeScaleResponse, DebugExportResponse, NodeAnnounce, NodeStatus,
-    ScaleDirection as AdminScaleDirection,
+    AdminError, AdminNodeScaleResponse, DebugExportResponse, MigrationListResponse,
+    MigrationPhase, MigrationRequest, MigrationStatus, NodeAnnounce, NodeStatus,
+    ScaleDirection as AdminScaleDirection, SnapshotAction, SnapshotListResponse,
+    SnapshotRequest,
 };
 use crate::deployer::NodeInventory;
 use crate::detect::{ScaleDirection, ZscoreDetector};
@@ -95,6 +97,10 @@ pub struct ClusterPolicy {
     pub queue_wait_budget: Duration,
     pub detector_scaling: bool,
     pub forecast: Option<ForecastPolicy>,
+    /// opportunistic rebalancing: when the supervisor is otherwise idle
+    /// (no scale work, cooldowns clear), live-migrate a replica off the
+    /// most-fragmented node onto the placement policy's pick
+    pub defrag: bool,
 }
 
 impl Default for ClusterPolicy {
@@ -109,6 +115,7 @@ impl Default for ClusterPolicy {
             queue_wait_budget: Duration::from_millis(500),
             detector_scaling: false,
             forecast: None,
+            defrag: false,
         }
     }
 }
@@ -146,6 +153,15 @@ pub struct CoordinatorConfig {
     /// proxy outcomes that deroute a degraded node (open → half-open →
     /// closed) without declaring it dead
     pub breaker: BreakerConfig,
+    /// serve the pre-v1 alias paths (`/cluster/status`, `/debug/*`).
+    /// Default on for one release; aliases answer with `Deprecation` +
+    /// `Sunset` headers and count into
+    /// `enova_api_deprecated_requests_total`. Off ⇒ 410 Gone.
+    pub legacy_api: bool,
+    /// cadence of the coordinator's periodic per-node engine snapshots
+    /// (the frames that back near-instant dead-node backfill and live
+    /// migration). Zero disables capture.
+    pub snapshot_interval: Duration,
 }
 
 impl Default for CoordinatorConfig {
@@ -167,6 +183,8 @@ impl Default for CoordinatorConfig {
             trace: TraceSettings::default(),
             tenants: Vec::new(),
             breaker: BreakerConfig::default(),
+            legacy_api: true,
+            snapshot_interval: Duration::from_secs(3),
         }
     }
 }
@@ -200,7 +218,7 @@ pub struct ClusterSupervisorSnapshot {
 }
 
 #[derive(Debug, Default)]
-struct ClusterSupervisorStatus {
+pub(super) struct ClusterSupervisorStatus {
     enabled: bool,
     calibrated: bool,
     scale_ups: u64,
@@ -214,36 +232,41 @@ struct ClusterSupervisorStatus {
 
 /// One registered node as the coordinator tracks it.
 #[derive(Debug, Clone)]
-struct NodeEntry {
-    announce: NodeAnnounce,
-    status: Option<NodeStatus>,
-    healthy: bool,
-    failures: u32,
+pub(super) struct NodeEntry {
+    pub(super) announce: NodeAnnounce,
+    pub(super) status: Option<NodeStatus>,
+    pub(super) healthy: bool,
+    pub(super) failures: u32,
     /// rolling proxy-outcome window; an open breaker deroutes the node
     /// while heartbeats keep running (degraded ≠ dead)
-    breaker: CircuitBreaker,
+    pub(super) breaker: CircuitBreaker,
 }
 
-struct CoordinatorState {
-    cfg: CoordinatorConfig,
-    nodes: RwLock<BTreeMap<String, NodeEntry>>,
-    router: RwLock<crate::router::NodeRouter>,
+pub(super) struct CoordinatorState {
+    pub(super) cfg: CoordinatorConfig,
+    pub(super) nodes: RwLock<BTreeMap<String, NodeEntry>>,
+    pub(super) router: RwLock<crate::router::NodeRouter>,
     /// tenant identities, for SLO-tier-aware proxy steering
-    tenants: Arc<TenantRegistry>,
-    gate: Arc<AdmissionGate>,
-    bucket: Option<Mutex<TokenBucket>>,
+    pub(super) tenants: Arc<TenantRegistry>,
+    pub(super) gate: Arc<AdmissionGate>,
+    pub(super) bucket: Option<Mutex<TokenBucket>>,
     /// idle keep-alive connections to nodes, reused across proxy attempts
-    pool: NodePool,
-    metrics: ClusterMetrics,
-    tracer: TraceRecorder,
-    decisions: DecisionRecorder,
-    supervisor: Mutex<ClusterSupervisorStatus>,
+    pub(super) pool: NodePool,
+    pub(super) metrics: ClusterMetrics,
+    pub(super) tracer: TraceRecorder,
+    pub(super) decisions: DecisionRecorder,
+    pub(super) supervisor: Mutex<ClusterSupervisorStatus>,
     /// replica count the supervisor wants cluster-wide; node death leaves
     /// it unchanged, which is exactly what makes backfill fire. 0 = not
     /// yet initialized from the first observation.
-    target_replicas: AtomicUsize,
-    started: Instant,
-    stop: AtomicBool,
+    pub(super) target_replicas: AtomicUsize,
+    /// migration state machine records (`/v1/admin/migrations`)
+    pub(super) migrations: super::migrate::MigrationRegistry,
+    /// last periodic engine snapshot per node — a dead node's capacity is
+    /// restored from here instead of cold-spawned
+    pub(super) snapshots: Mutex<BTreeMap<String, super::migrate::StoredSnapshot>>,
+    pub(super) started: Instant,
+    pub(super) stop: AtomicBool,
 }
 
 /// Handle to a running coordinator.
@@ -282,6 +305,8 @@ impl Coordinator {
                 ..ClusterSupervisorStatus::default()
             }),
             target_replicas: AtomicUsize::new(0),
+            migrations: super::migrate::MigrationRegistry::new(),
+            snapshots: Mutex::new(BTreeMap::new()),
             started: Instant::now(),
             stop: AtomicBool::new(false),
             cfg,
@@ -425,6 +450,21 @@ impl Coordinator {
         self.state.supervisor.lock().unwrap().events.clone()
     }
 
+    /// Migration records, oldest first (the `/v1/admin/migrations` view).
+    pub fn migrations(&self) -> Vec<MigrationStatus> {
+        self.state.migrations.list()
+    }
+
+    /// Nodes whose engine snapshot the coordinator currently holds.
+    pub fn snapshotted_nodes(&self) -> Vec<String> {
+        self.state.snapshots.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Legacy-alias hits by path (test helper for the deprecation counter).
+    pub fn deprecated_hits(&self, path: &str) -> u64 {
+        self.state.metrics.deprecated_for(path)
+    }
+
     pub fn supervisor_snapshot(&self) -> ClusterSupervisorSnapshot {
         supervisor_snapshot(&self.state)
     }
@@ -512,7 +552,7 @@ fn supervisor_snapshot(state: &CoordinatorState) -> ClusterSupervisorSnapshot {
     }
 }
 
-fn node_samples(state: &CoordinatorState) -> Vec<NodeSample> {
+pub(super) fn node_samples(state: &CoordinatorState) -> Vec<NodeSample> {
     let router = state.router.read().unwrap();
     state
         .nodes
@@ -543,7 +583,7 @@ fn node_samples(state: &CoordinatorState) -> Vec<NodeSample> {
 /// Rebuild the node router from the registry: healthy nodes, weighted by
 /// live replica count (a node whose status is still unknown gets weight 1
 /// — it just announced, so its gateway is up).
-fn rebuild_router(state: &CoordinatorState) {
+pub(super) fn rebuild_router(state: &CoordinatorState) {
     let weights: Vec<(String, f64)> = state
         .nodes
         .read()
@@ -713,11 +753,41 @@ fn route(
         ("POST", "/cluster/join") => cluster_join(req, stream, state),
         // the versioned control API, served cluster-scoped by the
         // coordinator (nodes serve the same paths replica-scoped);
-        // `GET /cluster/status` stays as a deprecated alias
-        ("GET", "/v1/admin/status" | "/cluster/status") => admin_status(req, stream, state),
+        // `GET /cluster/status` stays as a deprecated alias on a sunset
+        // clock (counted, headered, gated by `--legacy-api`)
+        ("GET", "/v1/admin/status") => admin_status(req, stream, state),
+        ("GET", "/cluster/status") => legacy_alias(req, stream, state, "/cluster/status", || {
+            http::Response::json(200, cluster_status_body(state).to_json().to_string_compact())
+        }),
         ("POST", "/v1/admin/scale-up") => admin_scale_node(req, stream, state, true),
         ("POST", "/v1/admin/scale-down") => admin_scale_node(req, stream, state, false),
         ("POST", "/v1/admin/scale") => admin_scale_weights(req, stream, state),
+        // snapshot/restore + live migration control surface
+        ("POST", "/v1/admin/migrate") => admin_migrate(req, stream, state),
+        ("GET", "/v1/admin/migrations") => {
+            let resp = MigrationListResponse {
+                service: "coordinator".into(),
+                migrations: state.migrations.list(),
+            };
+            let body = resp.to_json().to_string_compact();
+            finish(req, stream, state, "/v1/admin/migrations", http::Response::json(200, body))
+        }
+        ("GET", "/v1/admin/snapshots") => {
+            let snapshots = state
+                .snapshots
+                .lock()
+                .unwrap()
+                .values()
+                .map(|s| s.info.clone())
+                .collect();
+            let resp = SnapshotListResponse {
+                service: "coordinator".into(),
+                snapshots,
+            };
+            let body = resp.to_json().to_string_compact();
+            finish(req, stream, state, "/v1/admin/snapshots", http::Response::json(200, body))
+        }
+        ("POST", "/v1/admin/snapshots") => admin_snapshot_capture(req, stream, state),
         ("GET", "/cluster/nodes") => {
             let rows: Vec<String> = node_samples(state)
                 .iter()
@@ -779,14 +849,12 @@ fn route(
                 http::Response::json(400, err.to_json().to_string_compact()),
             )
         }
-        ("GET", "/debug/traces") => {
-            let body = aggregated_traces(state).to_string_compact();
-            finish(req, stream, state, "/debug/traces", http::Response::json(200, body))
-        }
-        ("GET", "/debug/decisions") => {
-            let body = state.decisions.export_json().to_string_compact();
-            finish(req, stream, state, "/debug/decisions", http::Response::json(200, body))
-        }
+        ("GET", "/debug/traces") => legacy_alias(req, stream, state, "/debug/traces", || {
+            http::Response::json(200, aggregated_traces(state).to_string_compact())
+        }),
+        ("GET", "/debug/decisions") => legacy_alias(req, stream, state, "/debug/decisions", || {
+            http::Response::json(200, state.decisions.export_json().to_string_compact())
+        }),
         ("GET", "/healthz") => {
             let nodes = state.nodes.read().unwrap().len();
             let body = format!(
@@ -809,7 +877,8 @@ fn route(
         | "/cluster/status" | "/v1/admin/status" | "/v1/admin/scale" | "/v1/admin/scale-up"
         | "/v1/admin/scale-down" | "/metrics" | "/healthz" | "/ready" | "/debug/traces"
         | "/debug/decisions" | "/v1/debug/traces" | "/v1/debug/decisions"
-        | "/v1/admin/chaos") => {
+        | "/v1/admin/chaos" | "/v1/admin/migrate" | "/v1/admin/migrations"
+        | "/v1/admin/snapshots") => {
             let body = openai::to_wire(&openai::error_body(
                 "invalid_request_error",
                 &format!("method {} not allowed on {}", req.method, req.path),
@@ -941,6 +1010,253 @@ fn admin_status(
     let endpoint = req.path.clone();
     let body = cluster_status_body(state).to_json().to_string_compact();
     finish(req, stream, state, &endpoint, http::Response::json(200, body))
+}
+
+/// RFC 8594 sunset timestamp answered on every deprecated pre-v1 alias.
+pub(super) const LEGACY_SUNSET: &str = "Thu, 31 Dec 2026 00:00:00 GMT";
+
+/// Serve (or refuse) one deprecated pre-v1 alias: every hit counts into
+/// `enova_api_deprecated_requests_total{path}` and carries `Deprecation` +
+/// `Sunset` headers; with `--legacy-api off` the alias answers 410 Gone
+/// with a structured error instead of the legacy body.
+fn legacy_alias(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &Arc<CoordinatorState>,
+    path: &str,
+    build: impl FnOnce() -> http::Response,
+) -> std::io::Result<()> {
+    state.metrics.note_deprecated(path);
+    let resp = if state.cfg.legacy_api {
+        build()
+    } else {
+        let err = AdminError::new(
+            "deprecated",
+            "this pre-v1 path has been sunset; use the versioned /v1 API",
+        )
+        .with_detail("path", path);
+        http::Response::json(410, err.to_json().to_string_compact())
+    };
+    finish(
+        req,
+        stream,
+        state,
+        path,
+        resp.with_header("Deprecation", "true").with_header("Sunset", LEGACY_SUNSET),
+    )
+}
+
+/// `POST /v1/admin/migrate`: run one live migration to completion and
+/// answer its full [`MigrationStatus`] record — 200 when it lands, 409
+/// with the failed record (structured error embedded) when it does not.
+fn admin_migrate(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &Arc<CoordinatorState>,
+) -> std::io::Result<()> {
+    let endpoint = "/v1/admin/migrate";
+    let parsed = req
+        .body_str()
+        .map_err(|e| AdminError::new("invalid_request", &e.message))
+        .and_then(|b| {
+            Json::parse(b)
+                .map_err(|e| AdminError::new("invalid_request", &format!("invalid JSON: {e}")))
+        })
+        .and_then(|j| MigrationRequest::from_json(&j));
+    let mreq = match parsed {
+        Ok(r) => r,
+        Err(err) => {
+            let body = err.to_json().to_string_compact();
+            return finish(req, stream, state, endpoint, http::Response::json(400, body));
+        }
+    };
+    let status = super::migrate::execute(state, &mreq, "migration");
+    let http_status = if status.phase == MigrationPhase::Failed { 409 } else { 200 };
+    let body = status.to_json().to_string_compact();
+    finish(req, stream, state, endpoint, http::Response::json(http_status, body))
+}
+
+/// `POST /v1/admin/snapshots` at the coordinator: `capture` checkpoints a
+/// node's engine (the named one, else the first ready node) and caches
+/// the frame for backfill; `restore` is node-local and answers a
+/// structured `unsupported` pointing at the right target.
+fn admin_snapshot_capture(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &Arc<CoordinatorState>,
+) -> std::io::Result<()> {
+    let endpoint = "/v1/admin/snapshots";
+    let admin_err = |status: u16, err: AdminError| {
+        http::Response::json(status, err.to_json().to_string_compact())
+    };
+    let parsed = req
+        .body_str()
+        .map_err(|e| AdminError::new("invalid_request", &e.message))
+        .and_then(|b| {
+            Json::parse(b)
+                .map_err(|e| AdminError::new("invalid_request", &format!("invalid JSON: {e}")))
+        })
+        .and_then(|j| SnapshotRequest::from_json(&j));
+    let sreq = match parsed {
+        Ok(r) => r,
+        Err(err) => return finish(req, stream, state, endpoint, admin_err(400, err)),
+    };
+    if sreq.action == SnapshotAction::Restore {
+        let err = AdminError::new(
+            "unsupported",
+            "restore is node-local; POST the frame to a node's gateway, or use \
+             /v1/admin/migrate to move a live replica",
+        )
+        .with_detail("role", "coordinator");
+        return finish(req, stream, state, endpoint, admin_err(400, err));
+    }
+    let node_id = match &sreq.node {
+        Some(n) => n.clone(),
+        None => {
+            let picked = node_samples(state)
+                .into_iter()
+                .find(|n| n.healthy && n.ready && n.live_replicas > 0)
+                .map(|n| n.node_id);
+            match picked {
+                Some(id) => id,
+                None => {
+                    let err = AdminError::new(
+                        "no_target",
+                        "no ready node with a live replica to capture from",
+                    );
+                    return finish(req, stream, state, endpoint, admin_err(409, err));
+                }
+            }
+        }
+    };
+    match super::migrate::capture_from_node(state, &node_id) {
+        Ok(raw) => finish(req, stream, state, endpoint, http::Response::json(200, raw)),
+        Err(err) => {
+            let status = match err.code.as_str() {
+                "unknown_node" => 404,
+                "node_unhealthy" | "no_target" => 409,
+                _ => 502,
+            };
+            finish(req, stream, state, endpoint, admin_err(status, err))
+        }
+    }
+}
+
+/// Backfill lost capacity from the newest stored engine snapshot: restore
+/// onto the placement pick instead of cold-spawning, so a dead node's
+/// replica is back in milliseconds. `Ok(None)` means no frame is stored
+/// (the caller falls back to the cold path).
+fn snapshot_backfill(state: &Arc<CoordinatorState>) -> Result<Option<PlacementEvent>> {
+    let stored = {
+        let snaps = state.snapshots.lock().unwrap();
+        snaps
+            .iter()
+            .max_by(|a, b| a.1.info.taken_unix.total_cmp(&b.1.info.taken_unix))
+            .map(|(node, s)| (node.clone(), s.info.clone(), s.hex.clone()))
+    };
+    let Some((snap_source, info, hex)) = stored else {
+        return Ok(None);
+    };
+    let invs = inventories(state);
+    let chosen = placement::place_replica(&invs)
+        .ok_or_else(|| anyhow!("no node has room for the restored replica"))?
+        .node_id
+        .clone();
+    let addr = state
+        .nodes
+        .read()
+        .unwrap()
+        .get(&chosen)
+        .map(|e| e.announce.addr.clone())
+        .ok_or_else(|| anyhow!("node {chosen} vanished mid-restore"))?;
+    let body = SnapshotRequest::restore(&hex).to_json().to_string_compact();
+    let t0 = Instant::now();
+    let (status, raw) = super::migrate::pool_rpc(
+        &state.pool,
+        &addr,
+        "POST",
+        "/v1/admin/snapshots",
+        Some(&body),
+        SCALE_RPC_TIMEOUT,
+    )?;
+    if !(200..300).contains(&status) {
+        bail!("node {chosen} refused the snapshot restore with {status}: {raw}");
+    }
+    let replica_id = Json::parse(&raw)
+        .ok()
+        .and_then(|j| j.get("replica_id").and_then(Json::as_usize))
+        .unwrap_or(0) as u64;
+    let restore_seconds = t0.elapsed().as_secs_f64();
+    {
+        let mut nodes = state.nodes.write().unwrap();
+        if let Some(e) = nodes.get_mut(&chosen) {
+            if let Some(s) = e.status.as_mut() {
+                s.live_replicas += 1;
+                s.gpu_memory_free =
+                    (s.gpu_memory_free - e.announce.replica_gpu_memory).max(0.0);
+            }
+        }
+    }
+    rebuild_router(state);
+    state.metrics.note_placement("backfill");
+    let event = PlacementEvent {
+        at: state.started.elapsed().as_secs_f64(),
+        node_id: chosen.clone(),
+        replica_id,
+        reason: "backfill",
+        up: true,
+    };
+    {
+        let mut sup = state.supervisor.lock().unwrap();
+        sup.scale_ups += 1;
+        sup.events.push(event.clone());
+    }
+    state.decisions.record(
+        "coordinator",
+        "placement",
+        "backfill",
+        vec![
+            ("node", chosen.clone()),
+            ("replica_id", replica_id.to_string()),
+            ("mode", "snapshot".to_string()),
+            ("bin_packing", inventory_summary(&invs)),
+        ],
+    );
+    // the migration view of the same act: the lost node's capacity moved
+    // to a survivor by snapshot transfer rather than cold re-init
+    state.decisions.record(
+        "coordinator",
+        "migration",
+        "backfill",
+        vec![
+            ("source", snap_source.clone()),
+            ("target", chosen.clone()),
+            ("new_replica_id", replica_id.to_string()),
+            ("engine_kind", info.engine_kind.clone()),
+            ("restore_seconds", format!("{restore_seconds:.4}")),
+        ],
+    );
+    state.migrations.put(MigrationStatus {
+        id: state.migrations.allocate(),
+        source_node: snap_source.clone(),
+        target_node: chosen.clone(),
+        reason: "backfill".into(),
+        phase: MigrationPhase::Done,
+        new_replica_id: Some(replica_id),
+        error: None,
+        started_unix: super::migrate::unix_now(),
+        snapshot_seconds: 0.0,
+        restore_seconds,
+        retire_seconds: 0.0,
+        total_seconds: restore_seconds,
+    });
+    crate::info!(
+        "cluster",
+        "backfilled a replica on node {chosen} from node {snap_source}'s snapshot \
+         in {:.1}ms",
+        restore_seconds * 1e3
+    );
+    Ok(Some(event))
 }
 
 /// `POST /v1/admin/scale-{up,down}` at the cluster level: one placement
@@ -1794,7 +2110,7 @@ fn heartbeat_loop(state: &Arc<CoordinatorState>) {
 }
 
 /// Healthy-node inventories for the placement math.
-fn inventories(state: &CoordinatorState) -> Vec<NodeInventory> {
+pub(super) fn inventories(state: &CoordinatorState) -> Vec<NodeInventory> {
     state
         .nodes
         .read()
@@ -1818,7 +2134,7 @@ fn inventories(state: &CoordinatorState) -> Vec<NodeInventory> {
 /// Execute one scale-up placement: choose the node, ask it, and account
 /// optimistically so a second placement in the same heartbeat window sees
 /// the updated fill.
-fn scale_up(state: &Arc<CoordinatorState>, reason: &'static str) -> Result<PlacementEvent> {
+pub(super) fn scale_up(state: &Arc<CoordinatorState>, reason: &'static str) -> Result<PlacementEvent> {
     let invs = inventories(state);
     // tier-aware bin packing: the demand tier and per-node batch shares
     // come from the latest heartbeat statuses, so latency-driven growth
@@ -1906,7 +2222,7 @@ fn inventory_summary(invs: &[NodeInventory]) -> String {
 
 /// Execute one scale-down: drain the most-fragmented node's newest
 /// replica.
-fn scale_down(state: &Arc<CoordinatorState>, reason: &'static str) -> Result<PlacementEvent> {
+pub(super) fn scale_down(state: &Arc<CoordinatorState>, reason: &'static str) -> Result<PlacementEvent> {
     let invs = inventories(state);
     let chosen = placement::drain_node(&invs)
         .ok_or_else(|| anyhow!("no node can give up a replica"))?
@@ -1985,6 +2301,11 @@ fn supervisor_loop(state: &Arc<CoordinatorState>) {
     let mut streaks = Streaks::default();
     let mut last_action: Option<Instant> = None;
     let mut last_backfill: Option<Instant> = None;
+    let mut last_snapshot: Option<Instant> = None;
+    let mut last_defrag: Option<Instant> = None;
+    // defrag is the lowest-priority act: well outside any scaling
+    // cooldown, and never more than once per cooldown window
+    let defrag_every = policy.cooldown.max(policy.sample_interval * 5);
     let mut forecaster = policy.forecast.as_ref().map(|p| {
         Forecaster::new(ForecastConfig {
             horizon: p.horizon_steps.max(1),
@@ -2007,6 +2328,24 @@ fn supervisor_loop(state: &Arc<CoordinatorState>) {
             continue;
         }
 
+        // periodic engine checkpoints: keep one warm frame per serving
+        // node so a dead node's capacity restores in milliseconds instead
+        // of re-running engine init
+        if !state.cfg.snapshot_interval.is_zero() {
+            let due = last_snapshot
+                .map(|t| t.elapsed() >= state.cfg.snapshot_interval)
+                .unwrap_or(true);
+            if due {
+                let ids: Vec<&str> = samples
+                    .iter()
+                    .filter(|n| n.live_replicas > 0)
+                    .map(|n| n.node_id.as_str())
+                    .collect();
+                super::migrate::capture_sweep(state, &ids);
+                last_snapshot = Some(Instant::now());
+            }
+        }
+
         // the target ratchets up to the observed replica count (nodes may
         // register after the first tick) and is lowered only by explicit
         // scale-downs — so a node death leaves it high, which is exactly
@@ -2026,12 +2365,49 @@ fn supervisor_loop(state: &Arc<CoordinatorState>) {
                 .map(|t| t.elapsed() >= state.cfg.heartbeat_interval * 2)
                 .unwrap_or(true);
             if spaced {
-                match scale_up(state, "backfill") {
-                    Ok(_) => last_backfill = Some(Instant::now()),
-                    Err(e) => crate::warn!("cluster", "backfill placement failed: {e}"),
+                // snapshot-first: restoring from the last periodic frame
+                // beats a cold spawn by the whole engine-init time
+                match snapshot_backfill(state) {
+                    Ok(Some(_)) => last_backfill = Some(Instant::now()),
+                    other => {
+                        if let Err(e) = other {
+                            crate::warn!(
+                                "cluster",
+                                "snapshot backfill failed, falling back to cold spawn: {e}"
+                            );
+                        }
+                        match scale_up(state, "backfill") {
+                            Ok(_) => last_backfill = Some(Instant::now()),
+                            Err(e) => crate::warn!("cluster", "backfill placement failed: {e}"),
+                        }
+                    }
                 }
             }
             continue; // restore capacity before planning on top of it
+        }
+
+        // ---- defrag: opportunistic rebalancing while otherwise idle —
+        // capacity is whole (no backfill pending) and the fleet is
+        // outside every scaling cooldown
+        if policy.defrag {
+            let cooled = last_action
+                .map(|t| t.elapsed() >= policy.cooldown)
+                .unwrap_or(true);
+            let spaced = last_defrag.map(|t| t.elapsed() >= defrag_every).unwrap_or(true);
+            if cooled && spaced {
+                if let Some((source, target)) = placement::defrag_plan(&inventories(state)) {
+                    crate::info!(
+                        "cluster",
+                        "defrag: migrating a replica {source} -> {target}"
+                    );
+                    let req = MigrationRequest {
+                        source_node: source,
+                        target_node: Some(target),
+                    };
+                    super::migrate::execute(state, &req, "defrag");
+                    last_defrag = Some(Instant::now());
+                }
+            }
         }
 
         // cluster row: node frames (already per-replica means) weighted by

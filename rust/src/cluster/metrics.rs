@@ -14,8 +14,8 @@ use std::sync::Mutex;
 /// Placement reasons that always appear on the scrape (at zero before the
 /// first event), so dashboards and CI greps never miss a series that
 /// simply has not fired yet.
-pub const PLACEMENT_REASONS: [&str; 5] =
-    ["forecast", "detector", "queue_wait", "backfill", "admin"];
+pub const PLACEMENT_REASONS: [&str; 7] =
+    ["forecast", "detector", "queue_wait", "backfill", "admin", "migration", "defrag"];
 
 /// Circuit-breaker transitions that always appear on the scrape (at zero
 /// before the first state change) — CI greps for these by name.
@@ -32,6 +32,9 @@ pub struct ClusterMetrics {
     retire: Mutex<BTreeMap<String, u64>>,
     /// circuit-breaker state changes by transition kind
     breaker_transitions: Mutex<BTreeMap<String, u64>>,
+    /// hits on deprecated pre-v1 alias paths, by path — the sunset gauge:
+    /// when every series here flatlines, `--legacy-api off` is safe
+    deprecated: Mutex<BTreeMap<String, u64>>,
     proxy_retries: AtomicU64,
     node_deaths: AtomicU64,
     rejected_queue_full: AtomicU64,
@@ -71,6 +74,21 @@ impl ClusterMetrics {
             .unwrap()
             .entry(reason.to_string())
             .or_insert(0) += 1;
+    }
+
+    /// One request on a deprecated pre-v1 alias path.
+    pub fn note_deprecated(&self, path: &str) {
+        *self
+            .deprecated
+            .lock()
+            .unwrap()
+            .entry(path.to_string())
+            .or_insert(0) += 1;
+    }
+
+    /// Deprecated-alias hits recorded for one path (test/report helper).
+    pub fn deprecated_for(&self, path: &str) -> u64 {
+        self.deprecated.lock().unwrap().get(path).copied().unwrap_or(0)
     }
 
     /// One circuit-breaker state change (`open`, `half_open`, `close`).
@@ -319,6 +337,19 @@ pub fn render_prometheus(
         );
     }
 
+    out.push_str(
+        "# HELP enova_api_deprecated_requests_total Requests served on deprecated pre-v1 \
+         alias paths, by path.\n",
+    );
+    out.push_str("# TYPE enova_api_deprecated_requests_total counter\n");
+    for (path, count) in m.deprecated.lock().unwrap().iter() {
+        let _ = writeln!(
+            out,
+            "enova_api_deprecated_requests_total{{path=\"{}\"}} {count}",
+            escape_label(path)
+        );
+    }
+
     out.push_str("# HELP enova_cluster_requests_total Coordinator ingress requests, by endpoint and status code.\n");
     out.push_str("# TYPE enova_cluster_requests_total counter\n");
     for ((endpoint, status), count) in m.requests.snapshot() {
@@ -529,6 +560,9 @@ mod tests {
         m.note_breaker_transition("open");
         m.note_breaker_transition("open");
         m.note_breaker_transition("half_open");
+        m.note_deprecated("/cluster/status");
+        m.note_deprecated("/cluster/status");
+        m.note_deprecated("/debug/traces");
 
         let nodes = vec![sample("node-a", true, 2), sample("node-b", false, 1)];
         let sup = ClusterSupervisorSnapshot {
@@ -620,6 +654,32 @@ mod tests {
         );
         assert_eq!(m.breaker_transitions_for("open"), 2);
         assert_eq!(m.breaker_transitions_for("close"), 0);
+        // deprecated-alias hits render per path and zero out once unused
+        assert_eq!(
+            find(
+                "enova_api_deprecated_requests_total",
+                Some(("path", "/cluster/status"))
+            ),
+            2.0
+        );
+        assert_eq!(
+            find(
+                "enova_api_deprecated_requests_total",
+                Some(("path", "/debug/traces"))
+            ),
+            1.0
+        );
+        assert_eq!(m.deprecated_for("/cluster/status"), 2);
+        assert_eq!(m.deprecated_for("/admin/scale"), 0);
+        // new placement reasons are pre-registered on the scrape
+        assert_eq!(
+            find("enova_cluster_placement_total", Some(("reason", "migration"))),
+            0.0
+        );
+        assert_eq!(
+            find("enova_cluster_placement_total", Some(("reason", "defrag"))),
+            0.0
+        );
         assert_eq!(find("enova_cluster_proxy_retries_total", None), 1.0);
         assert_eq!(find("enova_cluster_node_deaths_total", None), 1.0);
         assert_eq!(find("enova_cluster_sse_chunks_relayed_total", None), 7.0);

@@ -1,0 +1,705 @@
+//! Coordinator-driven live migration: move one replica's capacity from a
+//! source node to a target node without dropping a request.
+//!
+//! The state machine (each phase timed and visible in `GET
+//! /v1/admin/migrations` while it runs):
+//!
+//! ```text
+//! pending → snapshotting → restoring → retiring → done
+//!                │             │           │
+//!                └─────────────┴───────────┴──→ failed {code, message}
+//! ```
+//!
+//! * **snapshotting** — `POST /v1/admin/snapshots {"action":"capture"}`
+//!   on the source node checkpoints one post-init engine
+//!   ([`super::snapshot::EngineSnapshot`]) without touching its in-flight
+//!   work.
+//! * **restoring** — the frame travels to the target inside a
+//!   `{"action":"restore"}` call over the coordinator's keep-alive
+//!   [`super::pool::NodePool`] connections, and the target spawns a
+//!   replica from it in milliseconds instead of re-running engine init.
+//!   The router is rebuilt the moment the restore lands — the route flip
+//!   is atomic because capacity is *added before* anything is removed.
+//! * **retiring** — the source drains its newest replica through the same
+//!   `POST /v1/admin/scale-down` the autoscaler uses (PR 2's
+//!   drain-then-retire: the replica leaves the router first, finishes
+//!   what it holds, then dies). Nothing is dropped because at every
+//!   instant at least the pre-migration capacity is routable.
+//!
+//! Ordering is the whole design: capture → restore → retire means the
+//! cluster briefly runs `n + 1` replicas, never `n - 1`. A failure after
+//! the restore leaves the extra replica in place (over-capacity heals via
+//! the supervisor's drain policy; under-capacity would drop requests).
+
+use super::coordinator::{self, CoordinatorState};
+use super::placement;
+use super::pool::NodePool;
+use super::proto::{
+    AdminError, MigrationPhase, MigrationRequest, MigrationStatus, SnapshotInfo,
+    SnapshotRequest, SnapshotResponse,
+};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant, SystemTime};
+
+/// Capture is config + counters, never weights re-load: it answers fast.
+const CAPTURE_RPC_TIMEOUT: Duration = Duration::from_secs(30);
+/// Restore spawns a replica from the frame — milliseconds for the sim
+/// engine, but bounded generously for a runtime-backed engine.
+const RESTORE_RPC_TIMEOUT: Duration = Duration::from_secs(120);
+/// Retire waits for the source replica's drain, like any scale-down.
+const RETIRE_RPC_TIMEOUT: Duration = Duration::from_secs(310);
+/// Largest control-RPC body `pool_rpc` will buffer (a snapshot frame in
+/// hex dominates; the sim engine's is tiny, a runtime engine's is capped
+/// here rather than trusted).
+const MAX_CONTROL_BODY: usize = 64 * 1024 * 1024;
+/// Migration records kept for `GET /v1/admin/migrations`.
+const MIGRATION_HISTORY_CAP: usize = 64;
+
+/// Bounded, id-allocating migration history — the backing store of
+/// `GET /v1/admin/migrations`. Phase transitions overwrite the record in
+/// place, so a poll mid-migration sees the live phase.
+#[derive(Debug, Default)]
+pub struct MigrationRegistry {
+    history: Mutex<Vec<MigrationStatus>>,
+    next_id: AtomicU64,
+}
+
+impl MigrationRegistry {
+    pub fn new() -> MigrationRegistry {
+        MigrationRegistry {
+            history: Mutex::new(Vec::new()),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Claim the next migration id (monotonic, never reused).
+    pub fn allocate(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Insert a record, or replace the record with the same id (phase
+    /// transitions). Oldest records fall off past the cap.
+    pub fn put(&self, status: MigrationStatus) {
+        let mut h = self.history.lock().unwrap();
+        if let Some(slot) = h.iter_mut().find(|m| m.id == status.id) {
+            *slot = status;
+            return;
+        }
+        h.push(status);
+        if h.len() > MIGRATION_HISTORY_CAP {
+            let overflow = h.len() - MIGRATION_HISTORY_CAP;
+            h.drain(..overflow);
+        }
+    }
+
+    /// All retained records, oldest first.
+    pub fn list(&self) -> Vec<MigrationStatus> {
+        self.history.lock().unwrap().clone()
+    }
+}
+
+/// A periodic engine checkpoint the coordinator holds per node, ready to
+/// back a near-instant dead-node backfill.
+#[derive(Debug, Clone)]
+pub struct StoredSnapshot {
+    pub info: SnapshotInfo,
+    /// the encoded frame, hex — exactly what a restore call carries
+    pub hex: String,
+}
+
+pub(super) fn unix_now() -> f64 {
+    SystemTime::now()
+        .duration_since(SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+/// Capture an engine snapshot from `node_id` and cache it as that node's
+/// latest stored frame (what backfill restores from). Returns the node's
+/// raw response body, relayed verbatim by the coordinator's
+/// `POST /v1/admin/snapshots`.
+pub(super) fn capture_from_node(
+    state: &Arc<CoordinatorState>,
+    node_id: &str,
+) -> Result<String, AdminError> {
+    let addr = {
+        let nodes = state.nodes.read().unwrap();
+        match nodes.get(node_id) {
+            None => {
+                return Err(AdminError::new("unknown_node", "node is not registered")
+                    .with_detail("node", node_id))
+            }
+            Some(e) if !e.healthy => {
+                return Err(AdminError::new(
+                    "node_unhealthy",
+                    "node is not answering heartbeats",
+                )
+                .with_detail("node", node_id))
+            }
+            Some(e) => e.announce.addr.clone(),
+        }
+    };
+    let body = SnapshotRequest::capture().to_json().to_string_compact();
+    match pool_rpc(
+        &state.pool,
+        &addr,
+        "POST",
+        "/v1/admin/snapshots",
+        Some(&body),
+        CAPTURE_RPC_TIMEOUT,
+    ) {
+        Ok((st, raw)) if (200..300).contains(&st) => {
+            let parsed = Json::parse(&raw)
+                .map_err(|e| e.to_string())
+                .and_then(|j| SnapshotResponse::from_json(&j));
+            match parsed {
+                Ok(resp) => {
+                    if let Some(hex) = &resp.snapshot_hex {
+                        state.snapshots.lock().unwrap().insert(
+                            node_id.to_string(),
+                            StoredSnapshot {
+                                info: resp.info.clone(),
+                                hex: hex.clone(),
+                            },
+                        );
+                    }
+                    Ok(raw)
+                }
+                Err(e) => Err(AdminError::new(
+                    "snapshot_failed",
+                    &format!("node answered a malformed capture response: {e}"),
+                )
+                .with_detail("node", node_id)),
+            }
+        }
+        Ok((st, raw)) => {
+            Err(rpc_error("snapshot_failed", "node refused the capture", st, &raw)
+                .with_detail("node", node_id))
+        }
+        Err(e) => Err(
+            AdminError::new("snapshot_failed", &format!("capture RPC failed: {e:#}"))
+                .with_detail("node", node_id),
+        ),
+    }
+}
+
+/// One periodic capture sweep across the serving nodes: refresh each
+/// node's stored frame, shrugging off individual failures (the next sweep
+/// retries).
+pub(super) fn capture_sweep(state: &Arc<CoordinatorState>, node_ids: &[&str]) {
+    for id in node_ids {
+        if let Err(e) = capture_from_node(state, id) {
+            crate::warn!(
+                "cluster",
+                "periodic snapshot of node {id} failed: {} ({})",
+                e.message,
+                e.code
+            );
+        }
+    }
+}
+
+/// Run one migration to completion (synchronously — the control API
+/// answers with the final record). `reason` labels the metrics and the
+/// flight-recorder entry: `migration` (operator API), `defrag`
+/// (idle-supervisor rebalancing).
+pub(crate) fn execute(
+    state: &Arc<CoordinatorState>,
+    req: &MigrationRequest,
+    reason: &'static str,
+) -> MigrationStatus {
+    let mut status = MigrationStatus {
+        id: state.migrations.allocate(),
+        source_node: req.source_node.clone(),
+        target_node: req.target_node.clone().unwrap_or_default(),
+        reason: reason.to_string(),
+        phase: MigrationPhase::Pending,
+        new_replica_id: None,
+        error: None,
+        started_unix: unix_now(),
+        snapshot_seconds: 0.0,
+        restore_seconds: 0.0,
+        retire_seconds: 0.0,
+        total_seconds: 0.0,
+    };
+    state.migrations.put(status.clone());
+    let t_total = Instant::now();
+
+    // -- resolve the source: registered, healthy, and able to give up a
+    // replica (a node's gateway refuses to retire its last routable one)
+    let source = {
+        let nodes = state.nodes.read().unwrap();
+        nodes.get(&req.source_node).map(|e| {
+            (
+                e.announce.addr.clone(),
+                e.healthy,
+                e.status.as_ref().map(|s| s.live_replicas).unwrap_or(0),
+            )
+        })
+    };
+    let Some((source_addr, source_healthy, source_live)) = source else {
+        let err = AdminError::new("unknown_node", "source node is not registered")
+            .with_detail("node", &req.source_node);
+        return fail(state, status, t_total, err);
+    };
+    if !source_healthy {
+        let err = AdminError::new("node_unhealthy", "source node is not answering heartbeats")
+            .with_detail("node", &req.source_node);
+        return fail(state, status, t_total, err);
+    }
+    if source_live < 2 {
+        let err = AdminError::new(
+            "source_at_floor",
+            "live migration drains the source replica after the restore; the source needs \
+             at least 2 live replicas so its gateway can retire one",
+        )
+        .with_detail("node", &req.source_node)
+        .with_detail("live_replicas", &source_live.to_string());
+        return fail(state, status, t_total, err);
+    }
+
+    // -- resolve the target: the named node (must have room), or the
+    // placement policy's pick among everyone else
+    let invs = coordinator::inventories(state);
+    let target_id = match &req.target_node {
+        Some(t) => {
+            let Some(inv) = invs.iter().find(|i| &i.node_id == t) else {
+                let err =
+                    AdminError::new("unknown_node", "target node is not registered and healthy")
+                        .with_detail("node", t);
+                return fail(state, status, t_total, err);
+            };
+            if !inv.has_room() {
+                let err = AdminError::new("no_target", "target node has no room for a replica")
+                    .with_detail("node", t)
+                    .with_detail("live_replicas", &inv.live_replicas.to_string())
+                    .with_detail("max_replicas", &inv.max_replicas.to_string());
+                return fail(state, status, t_total, err);
+            }
+            t.clone()
+        }
+        None => {
+            let candidates: Vec<_> = invs
+                .iter()
+                .filter(|i| i.node_id != req.source_node)
+                .cloned()
+                .collect();
+            match placement::place_replica(&candidates) {
+                Some(n) => n.node_id.clone(),
+                None => {
+                    let err = AdminError::new(
+                        "no_target",
+                        "no other node has room for the migrated replica",
+                    );
+                    return fail(state, status, t_total, err);
+                }
+            }
+        }
+    };
+    status.target_node = target_id.clone();
+    let target_addr = {
+        let nodes = state.nodes.read().unwrap();
+        nodes.get(&target_id).map(|e| e.announce.addr.clone())
+    };
+    let Some(target_addr) = target_addr else {
+        let err = AdminError::new("unknown_node", "target node vanished mid-migration")
+            .with_detail("node", &target_id);
+        return fail(state, status, t_total, err);
+    };
+
+    // -- phase: snapshotting (capture on the source, in-flight work untouched)
+    status.phase = MigrationPhase::Snapshotting;
+    state.migrations.put(status.clone());
+    let t0 = Instant::now();
+    let capture_body = SnapshotRequest::capture().to_json().to_string_compact();
+    let capture = pool_rpc(
+        &state.pool,
+        &source_addr,
+        "POST",
+        "/v1/admin/snapshots",
+        Some(&capture_body),
+        CAPTURE_RPC_TIMEOUT,
+    );
+    let (snap_hex, snap_info) = match capture {
+        Ok((st, body)) if (200..300).contains(&st) => {
+            match Json::parse(&body)
+                .map_err(|e| e.to_string())
+                .and_then(|j| SnapshotResponse::from_json(&j))
+            {
+                Ok(resp) => match resp.snapshot_hex {
+                    Some(hex) => (hex, resp.info),
+                    None => {
+                        let err = AdminError::new(
+                            "snapshot_failed",
+                            "source answered a capture without a snapshot frame",
+                        )
+                        .with_detail("node", &req.source_node);
+                        return fail(state, status, t_total, err);
+                    }
+                },
+                Err(e) => {
+                    let err = AdminError::new(
+                        "snapshot_failed",
+                        &format!("source answered a malformed capture response: {e}"),
+                    )
+                    .with_detail("node", &req.source_node);
+                    return fail(state, status, t_total, err);
+                }
+            }
+        }
+        Ok((st, body)) => {
+            let err = rpc_error("snapshot_failed", "source refused the capture", st, &body)
+                .with_detail("node", &req.source_node);
+            return fail(state, status, t_total, err);
+        }
+        Err(e) => {
+            let err = AdminError::new("snapshot_failed", &format!("capture RPC failed: {e:#}"))
+                .with_detail("node", &req.source_node);
+            return fail(state, status, t_total, err);
+        }
+    };
+    status.snapshot_seconds = t0.elapsed().as_secs_f64();
+
+    // -- phase: restoring (transfer + spawn on the target, then the route
+    // flip — capacity is added before anything is removed)
+    status.phase = MigrationPhase::Restoring;
+    state.migrations.put(status.clone());
+    let t1 = Instant::now();
+    let restore_body = SnapshotRequest::restore(&snap_hex).to_json().to_string_compact();
+    let restore = pool_rpc(
+        &state.pool,
+        &target_addr,
+        "POST",
+        "/v1/admin/snapshots",
+        Some(&restore_body),
+        RESTORE_RPC_TIMEOUT,
+    );
+    let new_replica_id = match restore {
+        Ok((st, body)) if (200..300).contains(&st) => Json::parse(&body)
+            .ok()
+            .and_then(|j| j.get("replica_id").and_then(Json::as_usize))
+            .unwrap_or(0) as u64,
+        Ok((st, body)) => {
+            let err = rpc_error("restore_failed", "target refused the restore", st, &body)
+                .with_detail("node", &target_id)
+                .with_detail("engine_kind", &snap_info.engine_kind);
+            return fail(state, status, t_total, err);
+        }
+        Err(e) => {
+            let err = AdminError::new("restore_failed", &format!("restore RPC failed: {e:#}"))
+                .with_detail("node", &target_id);
+            return fail(state, status, t_total, err);
+        }
+    };
+    status.new_replica_id = Some(new_replica_id);
+    status.restore_seconds = t1.elapsed().as_secs_f64();
+    {
+        let mut nodes = state.nodes.write().unwrap();
+        if let Some(e) = nodes.get_mut(&target_id) {
+            if let Some(s) = e.status.as_mut() {
+                s.live_replicas += 1;
+                s.gpu_memory_free =
+                    (s.gpu_memory_free - e.announce.replica_gpu_memory).max(0.0);
+            }
+        }
+    }
+    coordinator::rebuild_router(state);
+    state.metrics.note_placement(reason);
+
+    // -- phase: retiring (drain-then-retire on the source; the replica
+    // leaves the router first and finishes what it holds)
+    status.phase = MigrationPhase::Retiring;
+    state.migrations.put(status.clone());
+    let t2 = Instant::now();
+    let retire = pool_rpc(
+        &state.pool,
+        &source_addr,
+        "POST",
+        "/v1/admin/scale-down",
+        Some("{}"),
+        RETIRE_RPC_TIMEOUT,
+    );
+    let retired_id = match retire {
+        Ok((st, body)) if (200..300).contains(&st) => Json::parse(&body)
+            .ok()
+            .and_then(|j| j.get("retired").and_then(Json::as_usize))
+            .unwrap_or(0) as u64,
+        Ok((st, body)) => {
+            let err = rpc_error("retire_failed", "source refused the drain", st, &body)
+                .with_detail("node", &req.source_node)
+                .with_detail("surviving_replica", &new_replica_id.to_string());
+            return fail(state, status, t_total, err);
+        }
+        Err(e) => {
+            let err = AdminError::new("retire_failed", &format!("drain RPC failed: {e:#}"))
+                .with_detail("node", &req.source_node)
+                .with_detail("surviving_replica", &new_replica_id.to_string());
+            return fail(state, status, t_total, err);
+        }
+    };
+    {
+        let mut nodes = state.nodes.write().unwrap();
+        if let Some(e) = nodes.get_mut(&req.source_node) {
+            if let Some(s) = e.status.as_mut() {
+                s.live_replicas = s.live_replicas.saturating_sub(1);
+                s.gpu_memory_free = (s.gpu_memory_free + e.announce.replica_gpu_memory)
+                    .min(e.announce.gpu_memory_total);
+            }
+        }
+    }
+    coordinator::rebuild_router(state);
+    state.metrics.note_retire(reason);
+    status.retire_seconds = t2.elapsed().as_secs_f64();
+
+    status.phase = MigrationPhase::Done;
+    status.total_seconds = t_total.elapsed().as_secs_f64();
+    state.migrations.put(status.clone());
+    state.decisions.record(
+        "coordinator",
+        "migration",
+        reason,
+        vec![
+            ("source", req.source_node.clone()),
+            ("target", target_id.clone()),
+            ("new_replica_id", new_replica_id.to_string()),
+            ("retired_replica_id", retired_id.to_string()),
+            ("engine_kind", snap_info.engine_kind.clone()),
+            ("snapshot_seconds", format!("{:.4}", status.snapshot_seconds)),
+            ("restore_seconds", format!("{:.4}", status.restore_seconds)),
+            ("retire_seconds", format!("{:.4}", status.retire_seconds)),
+            ("total_seconds", format!("{:.4}", status.total_seconds)),
+        ],
+    );
+    crate::info!(
+        "cluster",
+        "migrated a replica {} -> {} (new {new_replica_id}, retired {retired_id}, \
+         snapshot {:.1}ms, restore {:.1}ms, total {:.2}s, reason {reason})",
+        req.source_node,
+        target_id,
+        status.snapshot_seconds * 1e3,
+        status.restore_seconds * 1e3,
+        status.total_seconds,
+    );
+    status
+}
+
+/// Mark a migration failed: final record, flight-recorder entry, log line.
+fn fail(
+    state: &Arc<CoordinatorState>,
+    mut status: MigrationStatus,
+    t_total: Instant,
+    err: AdminError,
+) -> MigrationStatus {
+    let failed_phase = status.phase.as_str();
+    status.phase = MigrationPhase::Failed;
+    status.total_seconds = t_total.elapsed().as_secs_f64();
+    status.error = Some(err.clone());
+    state.migrations.put(status.clone());
+    state.decisions.record(
+        "coordinator",
+        "migration",
+        &status.reason,
+        vec![
+            ("source", status.source_node.clone()),
+            ("target", status.target_node.clone()),
+            ("outcome", "failed".to_string()),
+            ("failed_phase", failed_phase.to_string()),
+            ("code", err.code.clone()),
+            ("message", err.message.clone()),
+        ],
+    );
+    crate::warn!(
+        "cluster",
+        "migration {} ({} -> {}) failed in {failed_phase}: {} ({})",
+        status.id,
+        status.source_node,
+        if status.target_node.is_empty() { "?" } else { &status.target_node },
+        err.message,
+        err.code
+    );
+    status
+}
+
+/// Fold a non-2xx control response into a structured error, preserving
+/// the node's own `{code, message}` when the body carries one.
+fn rpc_error(code: &str, context: &str, http_status: u16, body: &str) -> AdminError {
+    match Json::parse(body).ok().and_then(|j| AdminError::from_json(&j).ok()) {
+        Some(inner) => AdminError::new(code, &format!("{context}: {}", inner.message))
+            .with_detail("node_code", &inner.code)
+            .with_detail("http_status", &http_status.to_string()),
+        None => AdminError::new(code, &format!("{context}: HTTP {http_status}"))
+            .with_detail("http_status", &http_status.to_string()),
+    }
+}
+
+/// One control RPC over the coordinator's keep-alive node pool: checkout
+/// (or dial), exchange, park the connection back when the response ended
+/// at a clean framing boundary. A transport failure on a *reused* socket
+/// redials once on a fresh connection — the node may simply have reaped
+/// the idle socket, which is not the node's fault.
+pub(crate) fn pool_rpc(
+    pool: &NodePool,
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    timeout: Duration,
+) -> Result<(u16, String)> {
+    let mut force_fresh = false;
+    loop {
+        let pooled = if force_fresh { None } else { pool.checkout(addr) };
+        let reused = pooled.is_some();
+        let stream = match pooled {
+            Some(s) => s,
+            None => dial(addr, timeout)?,
+        };
+        match rpc_once(stream, addr, method, path, body, timeout) {
+            Ok((status, body, parked)) => {
+                if let Some(reader) = parked {
+                    if reader.buffer().is_empty() {
+                        pool.checkin(addr, reader.into_inner());
+                    }
+                }
+                return Ok((status, body));
+            }
+            Err(_) if reused && !force_fresh => force_fresh = true,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+fn dial(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let stream = match addr.parse::<SocketAddr>() {
+        Ok(sa) => TcpStream::connect_timeout(&sa, Duration::from_secs(2))
+            .with_context(|| format!("connect {addr}"))?,
+        Err(_) => TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?,
+    };
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    Ok(stream)
+}
+
+/// One request/response exchange on an already-open connection. Returns
+/// the reader when the response ended at a reusable framing boundary.
+fn rpc_once(
+    stream: TcpStream,
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    timeout: Duration,
+) -> Result<(u16, String, Option<BufReader<TcpStream>>)> {
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    {
+        let mut w = &stream;
+        let body = body.unwrap_or("");
+        // keep-alive head (no `Connection: close`): the node parks the
+        // connection after answering and the pool reuses it
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nAccept: */*\r\n\
+             Content-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        );
+        w.write_all(head.as_bytes())?;
+        w.write_all(body.as_bytes())?;
+        w.flush()?;
+    }
+    let mut reader = BufReader::new(stream);
+    let (status, headers) = crate::gateway::loadgen::read_response_head(&mut reader)?;
+    let keep_alive = !headers
+        .get("connection")
+        .map(|v| v.eq_ignore_ascii_case("close"))
+        .unwrap_or(false);
+    let mut out = Vec::new();
+    if headers
+        .get("transfer-encoding")
+        .map(|v| v.eq_ignore_ascii_case("chunked"))
+        .unwrap_or(false)
+    {
+        while let Some(chunk) = crate::gateway::loadgen::read_chunk(&mut reader)? {
+            out.extend_from_slice(&chunk);
+            if out.len() > MAX_CONTROL_BODY {
+                bail!("control response over the {MAX_CONTROL_BODY}-byte limit");
+            }
+        }
+    } else if let Some(len) = headers.get("content-length") {
+        let len: usize = len.parse().context("bad Content-Length")?;
+        if len > MAX_CONTROL_BODY {
+            bail!("control response of {len} bytes over the limit");
+        }
+        out = vec![0u8; len];
+        reader.read_exact(&mut out)?;
+    } else {
+        // unframed: the body runs to EOF, so the socket is not reusable
+        reader.read_to_end(&mut out)?;
+        if out.len() > MAX_CONTROL_BODY {
+            bail!("control response over the {MAX_CONTROL_BODY}-byte limit");
+        }
+        return Ok((status, String::from_utf8_lossy(&out).into_owned(), None));
+    }
+    let parked = keep_alive.then_some(reader);
+    Ok((status, String::from_utf8_lossy(&out).into_owned(), parked))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(id: u64, phase: MigrationPhase) -> MigrationStatus {
+        MigrationStatus {
+            id,
+            source_node: "node-a".into(),
+            target_node: "node-b".into(),
+            reason: "migration".into(),
+            phase,
+            new_replica_id: None,
+            error: None,
+            started_unix: 0.0,
+            snapshot_seconds: 0.0,
+            restore_seconds: 0.0,
+            retire_seconds: 0.0,
+            total_seconds: 0.0,
+        }
+    }
+
+    #[test]
+    fn registry_allocates_monotonic_ids() {
+        let r = MigrationRegistry::new();
+        let a = r.allocate();
+        let b = r.allocate();
+        assert!(b > a);
+    }
+
+    #[test]
+    fn registry_replaces_records_in_place_on_phase_transitions() {
+        let r = MigrationRegistry::new();
+        let id = r.allocate();
+        r.put(record(id, MigrationPhase::Pending));
+        r.put(record(id, MigrationPhase::Restoring));
+        r.put(record(id, MigrationPhase::Done));
+        let list = r.list();
+        assert_eq!(list.len(), 1);
+        assert_eq!(list[0].phase, MigrationPhase::Done);
+    }
+
+    #[test]
+    fn registry_history_is_bounded() {
+        let r = MigrationRegistry::new();
+        for _ in 0..(MIGRATION_HISTORY_CAP + 10) {
+            let id = r.allocate();
+            r.put(record(id, MigrationPhase::Done));
+        }
+        let list = r.list();
+        assert_eq!(list.len(), MIGRATION_HISTORY_CAP);
+        // oldest fell off, newest retained, order preserved
+        assert_eq!(list.first().unwrap().id, 11);
+        assert!(list.windows(2).all(|w| w[0].id < w[1].id));
+    }
+}

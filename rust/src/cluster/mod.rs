@@ -69,10 +69,12 @@
 
 pub mod coordinator;
 pub mod metrics;
+pub mod migrate;
 pub mod node;
 pub mod placement;
 pub mod pool;
 pub mod proto;
+pub mod snapshot;
 
 /// What a gateway in node mode knows about itself — set via
 /// [`crate::gateway::GatewayConfig::node`], it turns on the node-only

@@ -83,6 +83,30 @@ pub fn drain_node(nodes: &[NodeInventory]) -> Option<&NodeInventory> {
         })
 }
 
+/// One defragmentation move for the idle supervisor: `(source, target)`
+/// node ids such that live-migrating a replica off `source` onto `target`
+/// genuinely improves the spread. The source is the drain pick (most
+/// fragmented, ≥2 replicas so its gateway can retire one); the target is
+/// the placement pick among the *other* nodes; and the move only counts
+/// when the target ends up strictly below where the source started
+/// (`target.live + 1 < source.live`) — anything weaker just swaps two
+/// equally-loaded nodes forever. `None` means the fleet is already as
+/// balanced as one move can make it.
+pub fn defrag_plan(nodes: &[NodeInventory]) -> Option<(String, String)> {
+    let source = drain_node(nodes)?;
+    let others: Vec<NodeInventory> = nodes
+        .iter()
+        .filter(|n| n.node_id != source.node_id)
+        .cloned()
+        .collect();
+    let target = place_replica(&others)?;
+    if target.live_replicas + 1 < source.live_replicas {
+        Some((source.node_id.clone(), target.node_id.clone()))
+    } else {
+        None
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -194,6 +218,30 @@ mod tests {
         // node-a: 2/24 used ratio free 16/24; node-b: 3 replicas, free 0/24
         let nodes = vec![node("node-a", 2, 3, 24.0, 4.0), node("node-b", 3, 3, 24.0, 8.0)];
         assert_eq!(drain_node(&nodes).unwrap().node_id, "node-a");
+    }
+
+    #[test]
+    fn defrag_moves_toward_the_empty_node() {
+        // 3 replicas on node-a, an empty node-b: one move improves the
+        // spread, so the plan fires a->b
+        let nodes = vec![node("node-a", 3, 4, 32.0, 8.0), node("node-b", 0, 4, 32.0, 8.0)];
+        assert_eq!(
+            defrag_plan(&nodes),
+            Some(("node-a".to_string(), "node-b".to_string()))
+        );
+    }
+
+    #[test]
+    fn defrag_is_quiescent_on_a_balanced_fleet() {
+        // 2/2: any move just swaps the skew — no plan
+        let even = vec![node("node-a", 2, 4, 32.0, 8.0), node("node-b", 2, 4, 32.0, 8.0)];
+        assert_eq!(defrag_plan(&even), None);
+        // 2/1: moving lands 1/2 — mirror image, still no plan
+        let near = vec![node("node-a", 2, 4, 32.0, 8.0), node("node-b", 1, 4, 32.0, 8.0)];
+        assert_eq!(defrag_plan(&near), None);
+        // a single node can never defrag onto itself
+        let lone = vec![node("node-a", 3, 4, 32.0, 8.0)];
+        assert_eq!(defrag_plan(&lone), None);
     }
 
     #[test]

@@ -564,6 +564,529 @@ impl AdminChaosResponse {
     }
 }
 
+/// Reject payloads carrying keys a request type does not define — a
+/// typo'd field fails loudly at the protocol boundary instead of being
+/// silently ignored (the contract the new v1 request types share).
+fn reject_unknown_keys(j: &Json, allowed: &[&str], what: &str) -> Result<(), AdminError> {
+    if let Json::Obj(m) = j {
+        for key in m.keys() {
+            if !allowed.contains(&key.as_str()) {
+                return Err(AdminError::new(
+                    "invalid_request",
+                    &format!("unknown field {key:?} in {what}"),
+                )
+                .with_detail("field", key));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Metadata describing one engine snapshot — what `GET /v1/admin/snapshots`
+/// lists and every capture/restore exchange carries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotInfo {
+    pub engine_kind: String,
+    pub version: usize,
+    pub max_num_seqs: usize,
+    pub gpu_memory: f64,
+    /// config fingerprint, hex (restore fails closed on a mismatch)
+    pub fingerprint: String,
+    pub payload_bytes: usize,
+    /// where the checkpoint came from (`node-a` or `replica-3`)
+    pub source: String,
+    /// wall-clock capture time, unix seconds
+    pub taken_unix: f64,
+}
+
+impl SnapshotInfo {
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("engine_kind", s(&self.engine_kind)),
+            ("version", num(self.version as f64)),
+            ("max_num_seqs", num(self.max_num_seqs as f64)),
+            ("gpu_memory", num(self.gpu_memory)),
+            ("fingerprint", s(&self.fingerprint)),
+            ("payload_bytes", num(self.payload_bytes as f64)),
+            ("source", s(&self.source)),
+            ("taken_unix", num(self.taken_unix)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SnapshotInfo, String> {
+        Ok(SnapshotInfo {
+            engine_kind: j
+                .get("engine_kind")
+                .and_then(Json::as_str)
+                .ok_or("snapshot info needs a string \"engine_kind\"")?
+                .to_string(),
+            version: j
+                .get("version")
+                .and_then(Json::as_usize)
+                .ok_or("snapshot info needs an integer \"version\"")?,
+            max_num_seqs: j.get("max_num_seqs").and_then(Json::as_usize).unwrap_or(0),
+            gpu_memory: j.get("gpu_memory").and_then(Json::as_f64).unwrap_or(0.0),
+            fingerprint: j
+                .get("fingerprint")
+                .and_then(Json::as_str)
+                .ok_or("snapshot info needs a string \"fingerprint\"")?
+                .to_string(),
+            payload_bytes: j.get("payload_bytes").and_then(Json::as_usize).unwrap_or(0),
+            source: j
+                .get("source")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            taken_unix: j.get("taken_unix").and_then(Json::as_f64).unwrap_or(0.0),
+        })
+    }
+}
+
+/// `POST /v1/admin/snapshots` body: `capture` checkpoints a live replica
+/// (node; the coordinator proxies to one), `restore` spawns a replica
+/// from a hex-encoded snapshot frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotRequest {
+    pub action: SnapshotAction,
+    /// capture: which replica to checkpoint (default: lowest live)
+    pub replica_id: Option<u64>,
+    /// coordinator capture: which node to checkpoint from
+    pub node: Option<String>,
+    /// restore: the encoded snapshot frame, hex
+    pub snapshot_hex: Option<String>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SnapshotAction {
+    Capture,
+    Restore,
+}
+
+impl SnapshotAction {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SnapshotAction::Capture => "capture",
+            SnapshotAction::Restore => "restore",
+        }
+    }
+}
+
+impl SnapshotRequest {
+    pub fn capture() -> SnapshotRequest {
+        SnapshotRequest {
+            action: SnapshotAction::Capture,
+            replica_id: None,
+            node: None,
+            snapshot_hex: None,
+        }
+    }
+
+    pub fn restore(snapshot_hex: &str) -> SnapshotRequest {
+        SnapshotRequest {
+            action: SnapshotAction::Restore,
+            replica_id: None,
+            node: None,
+            snapshot_hex: Some(snapshot_hex.to_string()),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = obj([("action", s(self.action.as_str()))]);
+        if let Json::Obj(m) = &mut j {
+            if let Some(id) = self.replica_id {
+                m.insert("replica_id".into(), num(id as f64));
+            }
+            if let Some(node) = &self.node {
+                m.insert("node".into(), s(node));
+            }
+            if let Some(hex) = &self.snapshot_hex {
+                m.insert("snapshot_hex".into(), s(hex));
+            }
+        }
+        j
+    }
+
+    /// Parse and validate; errors are ready-to-serve [`AdminError`]s with
+    /// code `invalid_request`.
+    pub fn from_json(j: &Json) -> Result<SnapshotRequest, AdminError> {
+        let bad = |msg: &str| AdminError::new("invalid_request", msg);
+        reject_unknown_keys(j, &["action", "replica_id", "node", "snapshot_hex"], "snapshot request")?;
+        let action = match j.get("action").and_then(Json::as_str) {
+            Some("capture") => SnapshotAction::Capture,
+            Some("restore") => SnapshotAction::Restore,
+            Some(other) => {
+                return Err(bad(&format!(
+                    "unknown action {other:?}; expected \"capture\" or \"restore\""
+                )))
+            }
+            None => return Err(bad("body must be {\"action\": \"capture\"|\"restore\", ...}")),
+        };
+        let replica_id = match j.get("replica_id") {
+            None => None,
+            Some(v) => Some(
+                v.as_usize()
+                    .ok_or_else(|| bad("\"replica_id\" must be a non-negative integer"))?
+                    as u64,
+            ),
+        };
+        let node = match j.get("node") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| bad("\"node\" must be a string"))?
+                    .to_string(),
+            ),
+        };
+        let snapshot_hex = match j.get("snapshot_hex") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| bad("\"snapshot_hex\" must be a string"))?
+                    .to_string(),
+            ),
+        };
+        if action == SnapshotAction::Restore && snapshot_hex.is_none() {
+            return Err(bad("restore needs a \"snapshot_hex\" frame"));
+        }
+        if action == SnapshotAction::Capture && snapshot_hex.is_some() {
+            return Err(bad("capture does not take a \"snapshot_hex\" frame"));
+        }
+        Ok(SnapshotRequest {
+            action,
+            replica_id,
+            node,
+            snapshot_hex,
+        })
+    }
+}
+
+/// `POST /v1/admin/snapshots` success body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotResponse {
+    pub service: String,
+    pub action: SnapshotAction,
+    pub info: SnapshotInfo,
+    /// capture: the replica checkpointed; restore: the replica spawned
+    pub replica_id: u64,
+    /// capture only: the encoded frame, hex
+    pub snapshot_hex: Option<String>,
+    /// restore only: snapshot-promotion latency (the number that beats
+    /// cold spawn)
+    pub promote_seconds: Option<f64>,
+}
+
+impl SnapshotResponse {
+    pub fn to_json(&self) -> Json {
+        let mut j = obj([
+            ("service", s(&self.service)),
+            ("action", s(self.action.as_str())),
+            ("info", self.info.to_json()),
+            ("replica_id", num(self.replica_id as f64)),
+        ]);
+        if let Json::Obj(m) = &mut j {
+            if let Some(hex) = &self.snapshot_hex {
+                m.insert("snapshot_hex".into(), s(hex));
+            }
+            if let Some(secs) = self.promote_seconds {
+                m.insert("promote_seconds".into(), num(secs));
+            }
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<SnapshotResponse, String> {
+        let action = match j.get("action").and_then(Json::as_str) {
+            Some("capture") => SnapshotAction::Capture,
+            Some("restore") => SnapshotAction::Restore,
+            _ => return Err("snapshot response needs \"action\" capture|restore".into()),
+        };
+        Ok(SnapshotResponse {
+            service: j
+                .get("service")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            action,
+            info: SnapshotInfo::from_json(
+                j.get("info").ok_or("snapshot response needs an \"info\" object")?,
+            )?,
+            replica_id: j
+                .get("replica_id")
+                .and_then(Json::as_usize)
+                .ok_or("snapshot response needs an integer \"replica_id\"")? as u64,
+            snapshot_hex: j
+                .get("snapshot_hex")
+                .and_then(Json::as_str)
+                .map(str::to_string),
+            promote_seconds: j.get("promote_seconds").and_then(Json::as_f64),
+        })
+    }
+}
+
+/// `GET /v1/admin/snapshots` body: the snapshots a service is holding
+/// (a node's capture ledger; the coordinator's periodic backfill cache).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotListResponse {
+    pub service: String,
+    pub snapshots: Vec<SnapshotInfo>,
+}
+
+impl SnapshotListResponse {
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("api_version", s(DEBUG_API_VERSION)),
+            ("service", s(&self.service)),
+            (
+                "snapshots",
+                Json::Arr(self.snapshots.iter().map(SnapshotInfo::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SnapshotListResponse, String> {
+        let snapshots = j
+            .get("snapshots")
+            .and_then(Json::as_arr)
+            .ok_or("snapshot list needs an array \"snapshots\"")?
+            .iter()
+            .map(SnapshotInfo::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(SnapshotListResponse {
+            service: j
+                .get("service")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            snapshots,
+        })
+    }
+}
+
+/// `POST /v1/admin/migrate` body: move one replica's capacity from
+/// `source_node` to `target_node` (or the placement policy's choice) via
+/// snapshot → transfer → restore → route flip → drain-retire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MigrationRequest {
+    pub source_node: String,
+    /// empty → the coordinator's placement policy chooses
+    pub target_node: Option<String>,
+}
+
+impl MigrationRequest {
+    pub fn to_json(&self) -> Json {
+        let mut j = obj([("source_node", s(&self.source_node))]);
+        if let (Json::Obj(m), Some(t)) = (&mut j, &self.target_node) {
+            m.insert("target_node".into(), s(t));
+        }
+        j
+    }
+
+    /// Parse and validate; errors are ready-to-serve [`AdminError`]s with
+    /// code `invalid_request`.
+    pub fn from_json(j: &Json) -> Result<MigrationRequest, AdminError> {
+        let bad = |msg: &str| AdminError::new("invalid_request", msg);
+        reject_unknown_keys(j, &["source_node", "target_node"], "migration request")?;
+        let source_node = j
+            .get("source_node")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("body must be {\"source_node\": \"...\", \"target_node\"?: \"...\"}"))?
+            .to_string();
+        if source_node.is_empty() {
+            return Err(bad("\"source_node\" must be non-empty"));
+        }
+        let target_node = match j.get("target_node") {
+            None => None,
+            Some(v) => {
+                let t = v
+                    .as_str()
+                    .ok_or_else(|| bad("\"target_node\" must be a string"))?
+                    .to_string();
+                if t == source_node {
+                    return Err(bad("\"target_node\" must differ from \"source_node\""));
+                }
+                Some(t)
+            }
+        };
+        Ok(MigrationRequest {
+            source_node,
+            target_node,
+        })
+    }
+}
+
+/// Where a migration is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MigrationPhase {
+    Pending,
+    Snapshotting,
+    Restoring,
+    Retiring,
+    Done,
+    Failed,
+}
+
+impl MigrationPhase {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MigrationPhase::Pending => "pending",
+            MigrationPhase::Snapshotting => "snapshotting",
+            MigrationPhase::Restoring => "restoring",
+            MigrationPhase::Retiring => "retiring",
+            MigrationPhase::Done => "done",
+            MigrationPhase::Failed => "failed",
+        }
+    }
+
+    pub fn from_str(sv: &str) -> Result<MigrationPhase, String> {
+        Ok(match sv {
+            "pending" => MigrationPhase::Pending,
+            "snapshotting" => MigrationPhase::Snapshotting,
+            "restoring" => MigrationPhase::Restoring,
+            "retiring" => MigrationPhase::Retiring,
+            "done" => MigrationPhase::Done,
+            "failed" => MigrationPhase::Failed,
+            other => return Err(format!("unknown migration phase {other:?}")),
+        })
+    }
+}
+
+/// One migration's full record — returned by `POST /v1/admin/migrate`
+/// (synchronously, after the state machine runs) and listed by
+/// `GET /v1/admin/migrations`. Phase timings let an operator see where a
+/// slow migration spent its time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MigrationStatus {
+    pub id: u64,
+    pub source_node: String,
+    pub target_node: String,
+    /// why it ran: `admin` (API), `backfill` (dead node), `defrag`
+    pub reason: String,
+    pub phase: MigrationPhase,
+    /// replica spawned on the target (phase ≥ restoring)
+    pub new_replica_id: Option<u64>,
+    /// structured cause when `phase == failed`
+    pub error: Option<AdminError>,
+    pub started_unix: f64,
+    /// source checkpoint RPC, seconds
+    pub snapshot_seconds: f64,
+    /// transfer + restore on the target, seconds
+    pub restore_seconds: f64,
+    /// drain-then-retire of the source replica (the route flip's tail)
+    pub retire_seconds: f64,
+    pub total_seconds: f64,
+}
+
+impl MigrationStatus {
+    pub fn to_json(&self) -> Json {
+        let mut j = obj([
+            ("id", num(self.id as f64)),
+            ("source_node", s(&self.source_node)),
+            ("target_node", s(&self.target_node)),
+            ("reason", s(&self.reason)),
+            ("phase", s(self.phase.as_str())),
+            ("started_unix", num(self.started_unix)),
+            (
+                "timings",
+                obj([
+                    ("snapshot_seconds", num(self.snapshot_seconds)),
+                    ("restore_seconds", num(self.restore_seconds)),
+                    ("retire_seconds", num(self.retire_seconds)),
+                    ("total_seconds", num(self.total_seconds)),
+                ]),
+            ),
+        ]);
+        if let Json::Obj(m) = &mut j {
+            if let Some(id) = self.new_replica_id {
+                m.insert("new_replica_id".into(), num(id as f64));
+            }
+            if let Some(err) = &self.error {
+                m.insert("error".into(), err.to_json());
+            }
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<MigrationStatus, String> {
+        let phase = MigrationPhase::from_str(
+            j.get("phase")
+                .and_then(Json::as_str)
+                .ok_or("migration status needs a string \"phase\"")?,
+        )?;
+        let timing = |key: &str| j.at(&["timings", key]).and_then(Json::as_f64).unwrap_or(0.0);
+        Ok(MigrationStatus {
+            id: j
+                .get("id")
+                .and_then(Json::as_usize)
+                .ok_or("migration status needs an integer \"id\"")? as u64,
+            source_node: j
+                .get("source_node")
+                .and_then(Json::as_str)
+                .ok_or("migration status needs a string \"source_node\"")?
+                .to_string(),
+            target_node: j
+                .get("target_node")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            reason: j
+                .get("reason")
+                .and_then(Json::as_str)
+                .unwrap_or("admin")
+                .to_string(),
+            phase,
+            new_replica_id: j.get("new_replica_id").and_then(Json::as_usize).map(|v| v as u64),
+            error: match j.get("error") {
+                Some(e) => Some(AdminError::from_json(e)?),
+                None => None,
+            },
+            started_unix: j.get("started_unix").and_then(Json::as_f64).unwrap_or(0.0),
+            snapshot_seconds: timing("snapshot_seconds"),
+            restore_seconds: timing("restore_seconds"),
+            retire_seconds: timing("retire_seconds"),
+            total_seconds: timing("total_seconds"),
+        })
+    }
+}
+
+/// `GET /v1/admin/migrations` body: the coordinator's bounded migration
+/// history, newest last.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MigrationListResponse {
+    pub service: String,
+    pub migrations: Vec<MigrationStatus>,
+}
+
+impl MigrationListResponse {
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("api_version", s(DEBUG_API_VERSION)),
+            ("service", s(&self.service)),
+            (
+                "migrations",
+                Json::Arr(self.migrations.iter().map(MigrationStatus::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<MigrationListResponse, String> {
+        let migrations = j
+            .get("migrations")
+            .and_then(Json::as_arr)
+            .ok_or("migration list needs an array \"migrations\"")?
+            .iter()
+            .map(MigrationStatus::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(MigrationListResponse {
+            service: j
+                .get("service")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            migrations,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -766,5 +1289,358 @@ mod tests {
         )
         .unwrap();
         assert!(NodeStatus::from_json(&nan).is_err());
+    }
+
+    fn sample_snapshot_info() -> SnapshotInfo {
+        SnapshotInfo {
+            engine_kind: "sim".into(),
+            version: 1,
+            max_num_seqs: 4,
+            gpu_memory: 0.6,
+            fingerprint: "00deadbeef00cafe".into(),
+            payload_bytes: 48,
+            source: "node-a".into(),
+            taken_unix: 1754600000.0,
+        }
+    }
+
+    fn sample_migration_status() -> MigrationStatus {
+        MigrationStatus {
+            id: 3,
+            source_node: "node-a".into(),
+            target_node: "node-b".into(),
+            reason: "defrag".into(),
+            phase: MigrationPhase::Done,
+            new_replica_id: Some(11),
+            error: None,
+            started_unix: 1754600001.5,
+            snapshot_seconds: 0.004,
+            restore_seconds: 0.012,
+            retire_seconds: 0.25,
+            total_seconds: 0.27,
+        }
+    }
+
+    /// Satellite sweep: every v1 request/response/error type serializes to
+    /// the wire and parses back to an identical JSON shape. Each row is
+    /// `(label, to_json() output, from_json∘to_json)`; a type whose
+    /// re-serialization drifts from its own output is a wire bug.
+    #[test]
+    fn v1_wire_types_round_trip_sweep() {
+        type Reparse = Box<dyn Fn(&Json) -> Result<Json, String>>;
+        let rows: Vec<(&str, Json, Reparse)> = vec![
+            (
+                "node_announce",
+                NodeAnnounce {
+                    node_id: "node-a".into(),
+                    addr: "127.0.0.1:18501".into(),
+                    gpu_memory_total: 24.0,
+                    replica_gpu_memory: 8.0,
+                    max_replicas: 3,
+                    replica_capacity_rps: 12.5,
+                }
+                .to_json(),
+                Box::new(|j| NodeAnnounce::from_json(j).map(|v| v.to_json())),
+            ),
+            (
+                "node_status",
+                NodeStatus {
+                    node_id: "node-b".into(),
+                    live_replicas: 2,
+                    warm_replicas: 1,
+                    ready: true,
+                    gpu_memory_total: 24.0,
+                    gpu_memory_free: 8.0,
+                    frame: Some(Frame {
+                        n_finished: 3.0,
+                        gpu_util: 0.8,
+                        ..Default::default()
+                    }),
+                    arrival_rps: 7.5,
+                    queue_wait: 0.02,
+                    batch_rps: 2.5,
+                }
+                .to_json(),
+                Box::new(|j| NodeStatus::from_json(j).map(|v| v.to_json())),
+            ),
+            (
+                "admin_error",
+                AdminError::new("node_full", "no slot").with_detail("node_id", "node-a").to_json(),
+                Box::new(|j| AdminError::from_json(j).map(|v| v.to_json())),
+            ),
+            (
+                "admin_scale_request",
+                AdminScaleRequest {
+                    replicas: vec![
+                        ReplicaWeight { id: 0, weight: 1.5 },
+                        ReplicaWeight { id: 2, weight: 0.5 },
+                    ],
+                }
+                .to_json(),
+                Box::new(|j| {
+                    AdminScaleRequest::from_json(j)
+                        .map(|v| v.to_json())
+                        .map_err(|e| e.message)
+                }),
+            ),
+            (
+                "admin_scale_response",
+                AdminScaleResponse {
+                    applied: vec![ReplicaWeight { id: 0, weight: 1.0 }],
+                    routable_replicas: 2,
+                }
+                .to_json(),
+                Box::new(|j| AdminScaleResponse::from_json(j).map(|v| v.to_json())),
+            ),
+            (
+                "admin_node_scale_response_up",
+                AdminNodeScaleResponse {
+                    node_id: "node-a".into(),
+                    direction: ScaleDirection::Up,
+                    replica_id: 7,
+                    live_replicas: 3,
+                }
+                .to_json(),
+                Box::new(|j| AdminNodeScaleResponse::from_json(j).map(|v| v.to_json())),
+            ),
+            (
+                "admin_node_scale_response_down",
+                AdminNodeScaleResponse {
+                    node_id: "node-a".into(),
+                    direction: ScaleDirection::Down,
+                    replica_id: 4,
+                    live_replicas: 2,
+                }
+                .to_json(),
+                Box::new(|j| AdminNodeScaleResponse::from_json(j).map(|v| v.to_json())),
+            ),
+            (
+                "debug_export_response",
+                DebugExportResponse::new(
+                    "decisions",
+                    "coordinator",
+                    Json::parse(r#"{"recorded":2,"decisions":[]}"#).unwrap(),
+                )
+                .to_json(),
+                Box::new(|j| DebugExportResponse::from_json(j).map(|v| v.to_json())),
+            ),
+            (
+                "admin_chaos_request",
+                AdminChaosRequest {
+                    config: ChaosConfig {
+                        seed: 9,
+                        error_rate: 0.2,
+                        ..ChaosConfig::default()
+                    },
+                }
+                .to_json(),
+                Box::new(|j| {
+                    AdminChaosRequest::from_json(j)
+                        .map(|v| v.to_json())
+                        .map_err(|e| e.message)
+                }),
+            ),
+            (
+                "admin_chaos_response",
+                AdminChaosResponse {
+                    service: "node:node-a".into(),
+                    config: ChaosConfig::default(),
+                    stats: Json::parse(r#"{"armed":false}"#).unwrap(),
+                }
+                .to_json(),
+                Box::new(|j| AdminChaosResponse::from_json(j).map(|v| v.to_json())),
+            ),
+            (
+                "snapshot_info",
+                sample_snapshot_info().to_json(),
+                Box::new(|j| SnapshotInfo::from_json(j).map(|v| v.to_json())),
+            ),
+            (
+                "snapshot_request_capture",
+                SnapshotRequest {
+                    action: SnapshotAction::Capture,
+                    replica_id: Some(2),
+                    node: Some("node-a".into()),
+                    snapshot_hex: None,
+                }
+                .to_json(),
+                Box::new(|j| {
+                    SnapshotRequest::from_json(j)
+                        .map(|v| v.to_json())
+                        .map_err(|e| e.message)
+                }),
+            ),
+            (
+                "snapshot_request_restore",
+                SnapshotRequest::restore("454e534e0001").to_json(),
+                Box::new(|j| {
+                    SnapshotRequest::from_json(j)
+                        .map(|v| v.to_json())
+                        .map_err(|e| e.message)
+                }),
+            ),
+            (
+                "snapshot_response",
+                SnapshotResponse {
+                    service: "node:node-a".into(),
+                    action: SnapshotAction::Restore,
+                    info: sample_snapshot_info(),
+                    replica_id: 9,
+                    snapshot_hex: None,
+                    promote_seconds: Some(0.0021),
+                }
+                .to_json(),
+                Box::new(|j| SnapshotResponse::from_json(j).map(|v| v.to_json())),
+            ),
+            (
+                "snapshot_list_response",
+                SnapshotListResponse {
+                    service: "coordinator".into(),
+                    snapshots: vec![sample_snapshot_info()],
+                }
+                .to_json(),
+                Box::new(|j| SnapshotListResponse::from_json(j).map(|v| v.to_json())),
+            ),
+            (
+                "migration_request",
+                MigrationRequest {
+                    source_node: "node-a".into(),
+                    target_node: Some("node-b".into()),
+                }
+                .to_json(),
+                Box::new(|j| {
+                    MigrationRequest::from_json(j)
+                        .map(|v| v.to_json())
+                        .map_err(|e| e.message)
+                }),
+            ),
+            (
+                "migration_status_done",
+                sample_migration_status().to_json(),
+                Box::new(|j| MigrationStatus::from_json(j).map(|v| v.to_json())),
+            ),
+            (
+                "migration_status_failed",
+                MigrationStatus {
+                    phase: MigrationPhase::Failed,
+                    new_replica_id: None,
+                    error: Some(AdminError::new("no_target", "no node has room")),
+                    ..sample_migration_status()
+                }
+                .to_json(),
+                Box::new(|j| MigrationStatus::from_json(j).map(|v| v.to_json())),
+            ),
+            (
+                "migration_list_response",
+                MigrationListResponse {
+                    service: "coordinator".into(),
+                    migrations: vec![sample_migration_status()],
+                }
+                .to_json(),
+                Box::new(|j| MigrationListResponse::from_json(j).map(|v| v.to_json())),
+            ),
+        ];
+        for (label, wire, reparse) in rows {
+            // through real bytes, not just the in-memory tree
+            let text = wire.to_string_compact();
+            let parsed = Json::parse(&text).unwrap_or_else(|e| panic!("{label}: {e}"));
+            let back = reparse(&parsed).unwrap_or_else(|e| panic!("{label}: {e}"));
+            assert_eq!(
+                back.to_string_compact(),
+                text,
+                "{label} drifted through a round trip"
+            );
+        }
+    }
+
+    /// The rejection half of the sweep: malformed or unknown-field payloads
+    /// must fail with a structured `invalid_request` (requests) or an error
+    /// string (responses) — never parse loosely, never panic.
+    #[test]
+    fn v1_wire_types_reject_malformed_payloads() {
+        // (label, body, parse-attempt) — every row must error
+        type Attempt = Box<dyn Fn(&Json) -> Result<(), String>>;
+        let rows: Vec<(&str, &str, Attempt)> = vec![
+            (
+                "snapshot request without action",
+                r#"{"replica_id":1}"#,
+                Box::new(|j| SnapshotRequest::from_json(j).map(|_| ()).map_err(|e| e.code)),
+            ),
+            (
+                "snapshot request with unknown action",
+                r#"{"action":"freeze"}"#,
+                Box::new(|j| SnapshotRequest::from_json(j).map(|_| ()).map_err(|e| e.code)),
+            ),
+            (
+                "snapshot request with unknown field",
+                r#"{"action":"capture","replicaid":1}"#,
+                Box::new(|j| SnapshotRequest::from_json(j).map(|_| ()).map_err(|e| e.code)),
+            ),
+            (
+                "restore without a frame",
+                r#"{"action":"restore"}"#,
+                Box::new(|j| SnapshotRequest::from_json(j).map(|_| ()).map_err(|e| e.code)),
+            ),
+            (
+                "capture with a frame",
+                r#"{"action":"capture","snapshot_hex":"00"}"#,
+                Box::new(|j| SnapshotRequest::from_json(j).map(|_| ()).map_err(|e| e.code)),
+            ),
+            (
+                "snapshot request with non-integer replica_id",
+                r#"{"action":"capture","replica_id":"two"}"#,
+                Box::new(|j| SnapshotRequest::from_json(j).map(|_| ()).map_err(|e| e.code)),
+            ),
+            (
+                "migration request without source",
+                r#"{"target_node":"node-b"}"#,
+                Box::new(|j| MigrationRequest::from_json(j).map(|_| ()).map_err(|e| e.code)),
+            ),
+            (
+                "migration request with empty source",
+                r#"{"source_node":""}"#,
+                Box::new(|j| MigrationRequest::from_json(j).map(|_| ()).map_err(|e| e.code)),
+            ),
+            (
+                "migration onto itself",
+                r#"{"source_node":"node-a","target_node":"node-a"}"#,
+                Box::new(|j| MigrationRequest::from_json(j).map(|_| ()).map_err(|e| e.code)),
+            ),
+            (
+                "migration request with unknown field",
+                r#"{"source_node":"node-a","dest":"node-b"}"#,
+                Box::new(|j| MigrationRequest::from_json(j).map(|_| ()).map_err(|e| e.code)),
+            ),
+            (
+                "snapshot info without fingerprint",
+                r#"{"engine_kind":"sim","version":1}"#,
+                Box::new(|j| SnapshotInfo::from_json(j).map(|_| ())),
+            ),
+            (
+                "snapshot response without info",
+                r#"{"action":"capture","replica_id":1}"#,
+                Box::new(|j| SnapshotResponse::from_json(j).map(|_| ())),
+            ),
+            (
+                "migration status with unknown phase",
+                r#"{"id":1,"source_node":"a","phase":"paused"}"#,
+                Box::new(|j| MigrationStatus::from_json(j).map(|_| ())),
+            ),
+            (
+                "migration list without array",
+                r#"{"service":"coordinator","migrations":{}}"#,
+                Box::new(|j| MigrationListResponse::from_json(j).map(|_| ())),
+            ),
+        ];
+        for (label, body, attempt) in rows {
+            let parsed = Json::parse(body).unwrap();
+            let err = attempt(&parsed).expect_err(label);
+            // requests surface the stable machine-readable code
+            if label.contains("request") || label.contains("restore") || label.contains("capture")
+                || label.contains("onto itself")
+            {
+                assert_eq!(err, "invalid_request", "{label}");
+            }
+        }
     }
 }

@@ -1,0 +1,480 @@
+//! Versioned binary engine snapshots — the primitive that kills the cold
+//! start. A post-init engine checkpoints its weights handle + allocator
+//! layout (for the sim engine: its deterministic config + counters) into
+//! an [`EngineSnapshot`], serialized as a fixed little-endian frame with a
+//! magic, a format version, a config fingerprint and a trailing checksum.
+//! Restoring is **fail-closed**: any truncation, magic/version/checksum
+//! mismatch or fingerprint disagreement is a structured [`SnapshotError`]
+//! and the caller falls back to a cold spawn — a snapshot can make spawn
+//! fast, never wrong.
+//!
+//! Wire frame (all integers little-endian):
+//!
+//! ```text
+//! magic "ENSN" | version u16 | kind_len u16 | kind bytes
+//! | max_num_seqs u64 | gpu_memory f64-bits | fingerprint u64
+//! | payload_len u64 | payload bytes | fnv1a64 checksum of everything above
+//! ```
+//!
+//! Snapshots are small (config + counters, not model weights — those are
+//! re-mapped from the artifact files on restore), so they travel as hex
+//! inside the typed `/v1/admin/snapshots` JSON exchanges and are pinned
+//! locally in a memfd ([`persist`]) the way `memfd_create`-based model
+//! loading keeps a restored image warm.
+
+use super::proto::AdminError;
+use std::fmt;
+use std::io::{Read, Seek, SeekFrom, Write};
+
+pub const SNAPSHOT_MAGIC: [u8; 4] = *b"ENSN";
+pub const SNAPSHOT_VERSION: u16 = 1;
+
+/// A checkpointed post-init engine: enough to rebuild a serving replica
+/// without re-running init. `payload` is engine-kind-specific (the sim
+/// engine's deterministic counters; the PJRT engine's config — its weights
+/// re-map from the artifact directory on restore).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineSnapshot {
+    pub version: u16,
+    /// `"sim"` or `"lm"` — restore refuses a kind it cannot rebuild
+    pub engine_kind: String,
+    pub max_num_seqs: usize,
+    pub gpu_memory: f64,
+    /// fnv1a64 over the engine's config invariants (token budget, step
+    /// timing, compiled batch width); restoring onto an engine whose own
+    /// fingerprint disagrees fails closed
+    pub fingerprint: u64,
+    pub payload: Vec<u8>,
+}
+
+/// Why a snapshot could not be decoded or restored. Every variant maps to
+/// a structured admin error (code `bad_snapshot`) so the control API
+/// reports the cause instead of restoring garbage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SnapshotError {
+    Truncated,
+    BadMagic,
+    VersionMismatch { found: u16, expected: u16 },
+    ChecksumMismatch,
+    KindMismatch { found: String, expected: String },
+    FingerprintMismatch { found: u64, expected: u64 },
+    Malformed(String),
+}
+
+impl fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SnapshotError::Truncated => write!(f, "snapshot truncated"),
+            SnapshotError::BadMagic => write!(f, "not a snapshot (bad magic)"),
+            SnapshotError::VersionMismatch { found, expected } => {
+                write!(f, "snapshot version {found} != supported {expected}")
+            }
+            SnapshotError::ChecksumMismatch => write!(f, "snapshot checksum mismatch"),
+            SnapshotError::KindMismatch { found, expected } => {
+                write!(f, "snapshot is for engine {found:?}, not {expected:?}")
+            }
+            SnapshotError::FingerprintMismatch { found, expected } => write!(
+                f,
+                "snapshot config fingerprint {found:#018x} != engine {expected:#018x}"
+            ),
+            SnapshotError::Malformed(msg) => write!(f, "malformed snapshot: {msg}"),
+        }
+    }
+}
+
+impl SnapshotError {
+    /// Ready-to-serve structured error for the `/v1/admin/snapshots` API.
+    pub fn to_admin_error(&self) -> AdminError {
+        AdminError::new("bad_snapshot", &self.to_string())
+    }
+}
+
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Little-endian byte writer for snapshot payloads — shared by the frame
+/// encoder here and the engine-specific payload encoders.
+#[derive(Default)]
+pub struct SnapWriter {
+    buf: Vec<u8>,
+}
+
+impl SnapWriter {
+    pub fn new() -> SnapWriter {
+        SnapWriter::default()
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    /// Length-prefixed (u64) UTF-8 string.
+    pub fn put_str(&mut self, v: &str) {
+        self.put_u64(v.len() as u64);
+        self.buf.extend_from_slice(v.as_bytes());
+    }
+
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Fail-closed little-endian reader: every take checks bounds and returns
+/// [`SnapshotError::Truncated`] instead of panicking on a short buffer.
+pub struct SnapReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SnapReader<'a> {
+    pub fn new(buf: &'a [u8]) -> SnapReader<'a> {
+        SnapReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], SnapshotError> {
+        if self.pos + n > self.buf.len() {
+            return Err(SnapshotError::Truncated);
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn take_u16(&mut self) -> Result<u16, SnapshotError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn take_u64(&mut self) -> Result<u64, SnapshotError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn take_f64(&mut self) -> Result<f64, SnapshotError> {
+        Ok(f64::from_bits(self.take_u64()?))
+    }
+
+    pub fn take_str(&mut self) -> Result<String, SnapshotError> {
+        let len = self.take_u64()? as usize;
+        if len > self.buf.len() {
+            return Err(SnapshotError::Truncated);
+        }
+        String::from_utf8(self.take(len)?.to_vec())
+            .map_err(|_| SnapshotError::Malformed("string is not UTF-8".into()))
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+impl EngineSnapshot {
+    pub fn new(engine_kind: &str, max_num_seqs: usize, gpu_memory: f64, fingerprint: u64, payload: Vec<u8>) -> EngineSnapshot {
+        EngineSnapshot {
+            version: SNAPSHOT_VERSION,
+            engine_kind: engine_kind.to_string(),
+            max_num_seqs,
+            gpu_memory,
+            fingerprint,
+            payload,
+        }
+    }
+
+    /// Serialize to the versioned binary frame (with trailing checksum).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = SnapWriter::new();
+        w.put_bytes(&SNAPSHOT_MAGIC);
+        w.put_u16(self.version);
+        w.put_u16(self.engine_kind.len() as u16);
+        w.put_bytes(self.engine_kind.as_bytes());
+        w.put_u64(self.max_num_seqs as u64);
+        w.put_f64(self.gpu_memory);
+        w.put_u64(self.fingerprint);
+        w.put_u64(self.payload.len() as u64);
+        w.put_bytes(&self.payload);
+        let mut bytes = w.into_bytes();
+        let sum = fnv1a64(&bytes);
+        bytes.extend_from_slice(&sum.to_le_bytes());
+        bytes
+    }
+
+    /// Decode, failing closed on truncation, bad magic, an unsupported
+    /// version, or a checksum mismatch.
+    pub fn decode(bytes: &[u8]) -> Result<EngineSnapshot, SnapshotError> {
+        if bytes.len() < SNAPSHOT_MAGIC.len() + 8 {
+            return Err(SnapshotError::Truncated);
+        }
+        let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+        if body[..4] != SNAPSHOT_MAGIC {
+            return Err(SnapshotError::BadMagic);
+        }
+        let sum = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+        if fnv1a64(body) != sum {
+            return Err(SnapshotError::ChecksumMismatch);
+        }
+        let mut r = SnapReader::new(&body[4..]);
+        let version = r.take_u16()?;
+        if version != SNAPSHOT_VERSION {
+            return Err(SnapshotError::VersionMismatch {
+                found: version,
+                expected: SNAPSHOT_VERSION,
+            });
+        }
+        let kind_len = r.take_u16()? as usize;
+        let engine_kind = String::from_utf8(
+            r.take(kind_len)?.to_vec(),
+        )
+        .map_err(|_| SnapshotError::Malformed("engine kind is not UTF-8".into()))?;
+        let max_num_seqs = r.take_u64()? as usize;
+        let gpu_memory = r.take_f64()?;
+        if !gpu_memory.is_finite() {
+            return Err(SnapshotError::Malformed("non-finite gpu_memory".into()));
+        }
+        let fingerprint = r.take_u64()?;
+        let payload_len = r.take_u64()? as usize;
+        if payload_len != r.remaining() {
+            return Err(SnapshotError::Truncated);
+        }
+        let payload = r.take(payload_len)?.to_vec();
+        Ok(EngineSnapshot {
+            version,
+            engine_kind,
+            max_num_seqs,
+            gpu_memory,
+            fingerprint,
+            payload,
+        })
+    }
+}
+
+/// Lowercase hex encoding — how a snapshot travels inside the typed JSON
+/// control exchanges (std-only; snapshots are config-sized, not weights).
+pub fn to_hex(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        out.push_str(&format!("{b:02x}"));
+    }
+    out
+}
+
+pub fn from_hex(hex: &str) -> Result<Vec<u8>, SnapshotError> {
+    let hex = hex.trim();
+    if hex.len() % 2 != 0 {
+        return Err(SnapshotError::Malformed("odd-length hex".into()));
+    }
+    let mut out = Vec::with_capacity(hex.len() / 2);
+    let bytes = hex.as_bytes();
+    for pair in bytes.chunks(2) {
+        let hi = (pair[0] as char).to_digit(16);
+        let lo = (pair[1] as char).to_digit(16);
+        match (hi, lo) {
+            (Some(h), Some(l)) => out.push(((h << 4) | l) as u8),
+            _ => return Err(SnapshotError::Malformed("non-hex byte".into())),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(target_os = "linux")]
+extern "C" {
+    fn memfd_create(name: *const std::os::raw::c_char, flags: std::os::raw::c_uint) -> std::os::raw::c_int;
+}
+
+/// Pin snapshot bytes in an anonymous in-memory file (`memfd_create` on
+/// Linux, a tempdir file elsewhere) and return it positioned at the start
+/// — the restored-image-stays-warm trick serverless snapshot loaders use.
+pub fn persist(data: &[u8]) -> std::io::Result<std::fs::File> {
+    let mut file = create_backing_file()?;
+    file.write_all(data)?;
+    file.seek(SeekFrom::Start(0))?;
+    Ok(file)
+}
+
+#[cfg(target_os = "linux")]
+fn create_backing_file() -> std::io::Result<std::fs::File> {
+    use std::os::fd::FromRawFd;
+    const MFD_CLOEXEC: std::os::raw::c_uint = 1;
+    let name = b"enova-snapshot\0";
+    let fd = unsafe { memfd_create(name.as_ptr() as *const _, MFD_CLOEXEC) };
+    if fd >= 0 {
+        return Ok(unsafe { std::fs::File::from_raw_fd(fd) });
+    }
+    // older kernels/libcs: fall back to an unlinked temp file
+    tempdir_backing_file()
+}
+
+#[cfg(not(target_os = "linux"))]
+fn create_backing_file() -> std::io::Result<std::fs::File> {
+    tempdir_backing_file()
+}
+
+fn tempdir_backing_file() -> std::io::Result<std::fs::File> {
+    let path = std::env::temp_dir().join(format!(
+        "enova-snapshot-{}-{:x}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos())
+            .unwrap_or(0)
+    ));
+    let file = std::fs::OpenOptions::new()
+        .read(true)
+        .write(true)
+        .create_new(true)
+        .open(&path)?;
+    // unlink immediately: the fd is the only handle, like a memfd
+    let _ = std::fs::remove_file(&path);
+    Ok(file)
+}
+
+/// Read a persisted snapshot back from its backing file.
+pub fn read_back(file: &mut std::fs::File) -> std::io::Result<Vec<u8>> {
+    file.seek(SeekFrom::Start(0))?;
+    let mut out = Vec::new();
+    file.read_to_end(&mut out)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::sim::{SimEngine, SimEngineConfig};
+    use crate::engine::StreamEngine;
+    use std::time::Duration;
+
+    fn sample() -> EngineSnapshot {
+        EngineSnapshot::new("sim", 8, 0.9, 0xdead_beef_cafe_f00d, vec![1, 2, 3, 4, 5])
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let snap = sample();
+        let decoded = EngineSnapshot::decode(&snap.encode()).unwrap();
+        assert_eq!(decoded, snap);
+    }
+
+    #[test]
+    fn truncation_fails_closed() {
+        let bytes = sample().encode();
+        for cut in [0, 3, 7, bytes.len() / 2, bytes.len() - 1] {
+            let err = EngineSnapshot::decode(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(err, SnapshotError::Truncated | SnapshotError::ChecksumMismatch),
+                "cut at {cut}: {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_fails_closed() {
+        let mut bytes = sample().encode();
+        bytes[0] = b'X';
+        assert_eq!(EngineSnapshot::decode(&bytes).unwrap_err(), SnapshotError::BadMagic);
+    }
+
+    #[test]
+    fn version_mismatch_fails_closed() {
+        let mut snap = sample();
+        snap.version = SNAPSHOT_VERSION + 1;
+        let err = EngineSnapshot::decode(&snap.encode()).unwrap_err();
+        assert_eq!(
+            err,
+            SnapshotError::VersionMismatch {
+                found: SNAPSHOT_VERSION + 1,
+                expected: SNAPSHOT_VERSION
+            }
+        );
+        // and the structured error names the cause
+        let admin = err.to_admin_error();
+        assert_eq!(admin.code, "bad_snapshot");
+        assert!(admin.message.contains("version"), "{}", admin.message);
+    }
+
+    #[test]
+    fn corruption_fails_the_checksum() {
+        let mut bytes = sample().encode();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        let err = EngineSnapshot::decode(&bytes).unwrap_err();
+        assert!(
+            matches!(err, SnapshotError::ChecksumMismatch | SnapshotError::BadMagic),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn hex_round_trip_and_rejection() {
+        let bytes = sample().encode();
+        assert_eq!(from_hex(&to_hex(&bytes)).unwrap(), bytes);
+        assert!(from_hex("abc").is_err(), "odd length rejected");
+        assert!(from_hex("zz").is_err(), "non-hex rejected");
+        assert_eq!(from_hex("").unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn memfd_persist_reads_back_verbatim() {
+        let bytes = sample().encode();
+        let mut file = persist(&bytes).expect("snapshot backing file");
+        assert_eq!(read_back(&mut file).unwrap(), bytes);
+    }
+
+    /// The tentpole fail-closed contract: a snapshot from a differently-
+    /// configured engine (different token budget → different fingerprint)
+    /// must refuse to restore, with a structured error — the caller falls
+    /// back to a cold spawn instead of restoring garbage.
+    #[test]
+    fn config_fingerprint_mismatch_refuses_restore() {
+        let src = SimEngine::new(SimEngineConfig {
+            max_num_seqs: 4,
+            max_tokens: 64,
+            step_delay: Duration::ZERO,
+        });
+        let snap = src.snapshot().unwrap();
+        let mut other = SimEngine::new(SimEngineConfig {
+            max_num_seqs: 4,
+            max_tokens: 16, // different budget → different fingerprint
+            step_delay: Duration::ZERO,
+        });
+        let err = other.restore(&snap).unwrap_err();
+        assert!(
+            err.to_string().contains("fingerprint"),
+            "restore must name the fingerprint mismatch: {err}"
+        );
+
+        // matching config restores fine
+        let mut twin = SimEngine::new(SimEngineConfig {
+            max_num_seqs: 2, // ceiling comes from the snapshot
+            max_tokens: 64,
+            step_delay: Duration::ZERO,
+        });
+        twin.restore(&snap).unwrap();
+        assert_eq!(twin.capacity(), 4, "restored ceiling");
+    }
+
+    /// A garbage payload inside a structurally-valid frame is rejected by
+    /// the engine-side payload parser, not restored.
+    #[test]
+    fn garbage_payload_refuses_restore() {
+        let src = SimEngine::new(SimEngineConfig::default());
+        let mut snap = src.snapshot().unwrap();
+        snap.payload = vec![0xff; 3];
+        let mut dst = SimEngine::new(SimEngineConfig::default());
+        assert!(dst.restore(&snap).is_err(), "truncated payload rejected");
+    }
+}

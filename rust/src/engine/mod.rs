@@ -12,6 +12,7 @@ pub mod sampler;
 pub mod sim;
 pub mod tokenizer;
 
+use crate::cluster::snapshot::EngineSnapshot;
 use crate::metrics::Frame;
 #[cfg(feature = "xla-runtime")]
 use crate::runtime::lm::LmRuntime;
@@ -135,6 +136,21 @@ pub trait StreamEngine {
     fn reconfigure(&mut self, max_num_seqs: usize, gpu_memory: f64) -> Result<ReconfigOutcome>;
     /// Snapshot the Table II monitoring frame.
     fn frame(&self, finished_in_window: f64, arrived_in_window: f64, mean_latency: f64) -> Frame;
+    /// Checkpoint the post-init engine (config knobs, allocator/KV arena
+    /// shape, deterministic counters — not in-flight work, which drains on
+    /// the source) into a versioned binary snapshot, so a replica can be
+    /// spawned from it in milliseconds instead of re-running init. Engines
+    /// that cannot checkpoint keep the default refusal.
+    fn snapshot(&self) -> Result<EngineSnapshot> {
+        Err(anyhow::anyhow!("this engine does not support snapshots"))
+    }
+    /// Rebuild engine state from a snapshot. **Fail-closed**: a version,
+    /// kind or config-fingerprint mismatch must be an error (the caller
+    /// falls back to a cold spawn), never a partial restore.
+    fn restore(&mut self, snapshot: &EngineSnapshot) -> Result<()> {
+        let _ = snapshot;
+        Err(anyhow::anyhow!("this engine does not support snapshot restore"))
+    }
 }
 
 /// Pop every complete UTF-8 sequence off the front of `pending`, replacing
@@ -224,6 +240,19 @@ impl Engine {
 
     pub fn now(&self) -> f64 {
         self.clock.elapsed().as_secs_f64()
+    }
+
+    /// fnv1a over the invariants a snapshot must agree on to restore into
+    /// this engine: the compiled program shape (batch width, vocab,
+    /// context length) — the parts that cannot be changed live.
+    pub fn config_fingerprint(&self) -> u64 {
+        use crate::cluster::snapshot::{fnv1a64, SnapWriter};
+        let mut w = SnapWriter::new();
+        w.put_str("lm");
+        w.put_u64(self.lm.spec.batch as u64);
+        w.put_u64(self.lm.spec.vocab as u64);
+        w.put_u64(self.lm.spec.max_seq as u64);
+        fnv1a64(&w.into_bytes())
     }
 
     pub fn tokenizer(&self) -> &Tokenizer {
@@ -529,5 +558,59 @@ impl StreamEngine for Engine {
 
     fn frame(&self, finished_in_window: f64, arrived_in_window: f64, mean_latency: f64) -> Frame {
         Engine::frame(self, finished_in_window, arrived_in_window, mean_latency)
+    }
+
+    /// The PJRT snapshot records the config + compiled-program shape
+    /// (weights re-map from the artifact directory on restore — the
+    /// expensive part a restore skips is tokenizer/sampler/slot init and
+    /// the config derivation, not the mmap).
+    fn snapshot(&self) -> Result<EngineSnapshot> {
+        use crate::cluster::snapshot::SnapWriter;
+        let mut w = SnapWriter::new();
+        w.put_u64(self.cfg.max_tokens as u64);
+        w.put_f64(self.cfg.temperature);
+        w.put_u64(self.arrived);
+        w.put_u64(self.finished_count);
+        Ok(EngineSnapshot::new(
+            "lm",
+            self.cfg.max_num_seqs,
+            self.gpu_memory,
+            self.config_fingerprint(),
+            w.into_bytes(),
+        ))
+    }
+
+    fn restore(&mut self, snapshot: &EngineSnapshot) -> Result<()> {
+        use crate::cluster::snapshot::{SnapReader, SnapshotError};
+        if snapshot.engine_kind != "lm" {
+            return Err(anyhow::anyhow!(
+                "{}",
+                SnapshotError::KindMismatch {
+                    found: snapshot.engine_kind.clone(),
+                    expected: "lm".into(),
+                }
+            ));
+        }
+        let expected = self.config_fingerprint();
+        if snapshot.fingerprint != expected {
+            return Err(anyhow::anyhow!(
+                "{}",
+                SnapshotError::FingerprintMismatch {
+                    found: snapshot.fingerprint,
+                    expected,
+                }
+            ));
+        }
+        let mut r = SnapReader::new(&snapshot.payload);
+        let max_tokens = r.take_u64().map_err(|e| anyhow::anyhow!("{e}"))? as usize;
+        let temperature = r.take_f64().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let arrived = r.take_u64().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let finished = r.take_u64().map_err(|e| anyhow::anyhow!("{e}"))?;
+        self.cfg.max_tokens = max_tokens;
+        self.cfg.temperature = temperature;
+        self.arrived = arrived;
+        self.finished_count = finished;
+        Engine::reconfigure(self, snapshot.max_num_seqs, snapshot.gpu_memory);
+        Ok(())
     }
 }

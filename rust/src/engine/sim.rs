@@ -9,6 +9,7 @@
 use super::{
     Completion, EngineRequest, FinishReason, ReconfigOutcome, StepOutput, StreamEngine, TokenDelta,
 };
+use crate::cluster::snapshot::{fnv1a64, EngineSnapshot, SnapReader, SnapWriter, SnapshotError};
 use crate::metrics::Frame;
 use anyhow::Result;
 use std::collections::VecDeque;
@@ -95,6 +96,54 @@ impl SimEngine {
 
     fn now(&self) -> f64 {
         self.clock.elapsed().as_secs_f64()
+    }
+
+    /// fnv1a over the deterministic-generation invariants: a snapshot from
+    /// an engine with a different token budget or step timing would be a
+    /// *different* engine, so restore refuses it.
+    pub fn config_fingerprint(cfg: &SimEngineConfig) -> u64 {
+        let mut w = SnapWriter::new();
+        w.put_str("sim");
+        w.put_u64(cfg.max_tokens as u64);
+        w.put_u64(cfg.step_delay.as_nanos() as u64);
+        fnv1a64(&w.into_bytes())
+    }
+
+    fn decode_payload(snap: &EngineSnapshot) -> Result<(SimEngineConfig, f64, u64), SnapshotError> {
+        if snap.engine_kind != "sim" {
+            return Err(SnapshotError::KindMismatch {
+                found: snap.engine_kind.clone(),
+                expected: "sim".into(),
+            });
+        }
+        let mut r = SnapReader::new(&snap.payload);
+        let max_tokens = r.take_u64()? as usize;
+        let step_delay = Duration::from_nanos(r.take_u64()?);
+        let arrived = r.take_u64()?;
+        let cfg = SimEngineConfig {
+            max_num_seqs: snap.max_num_seqs.clamp(1, MAX_SIM_SLOTS),
+            max_tokens,
+            step_delay,
+        };
+        let expected = SimEngine::config_fingerprint(&cfg);
+        if snap.fingerprint != expected {
+            return Err(SnapshotError::FingerprintMismatch {
+                found: snap.fingerprint,
+                expected,
+            });
+        }
+        Ok((cfg, snap.gpu_memory.clamp(0.05, 0.98), arrived))
+    }
+
+    /// Build a serving-ready engine directly from a snapshot — the
+    /// restore-beats-cold-spawn path: no spawner, no init work, just the
+    /// checkpointed config + counters. Fail-closed on any mismatch.
+    pub fn from_snapshot(snap: &EngineSnapshot) -> Result<SimEngine, SnapshotError> {
+        let (cfg, gpu_memory, arrived) = SimEngine::decode_payload(snap)?;
+        let mut engine = SimEngine::new(cfg);
+        engine.gpu_memory = gpu_memory;
+        engine.arrived = arrived;
+        Ok(engine)
     }
 }
 
@@ -211,6 +260,52 @@ impl StreamEngine for SimEngine {
             max_num_seqs: self.limit,
             gpu_memory: self.gpu_memory,
         })
+    }
+
+    /// The sim's deterministic state is its config + counters: generation
+    /// is a pure function of the prompt hash, so in-flight work needs no
+    /// serializing — it drains on the source replica before retirement
+    /// (the migration contract), and the restored engine regenerates any
+    /// resubmitted prompt byte-for-byte.
+    fn snapshot(&self) -> Result<EngineSnapshot> {
+        let mut w = SnapWriter::new();
+        w.put_u64(self.cfg.max_tokens as u64);
+        w.put_u64(self.cfg.step_delay.as_nanos() as u64);
+        w.put_u64(self.arrived);
+        Ok(EngineSnapshot::new(
+            "sim",
+            self.limit,
+            self.gpu_memory,
+            SimEngine::config_fingerprint(&self.cfg),
+            w.into_bytes(),
+        ))
+    }
+
+    fn restore(&mut self, snapshot: &EngineSnapshot) -> Result<()> {
+        let (cfg, gpu_memory, arrived) =
+            SimEngine::decode_payload(snapshot).map_err(|e| anyhow::anyhow!("{e}"))?;
+        // fingerprint verified against the snapshot's own recorded config;
+        // it must also match THIS engine's invariants or the restore would
+        // silently change what the replica generates
+        let mine = SimEngine::config_fingerprint(&self.cfg);
+        if snapshot.fingerprint != mine {
+            return Err(anyhow::anyhow!(
+                "{}",
+                SnapshotError::FingerprintMismatch {
+                    found: snapshot.fingerprint,
+                    expected: mine,
+                }
+            ));
+        }
+        self.cfg = cfg;
+        self.gpu_memory = gpu_memory;
+        self.arrived = arrived;
+        let target = cfg.max_num_seqs;
+        if target > self.slots.len() {
+            self.slots.resize_with(target, || None);
+        }
+        self.limit = target;
+        Ok(())
     }
 
     fn frame(&self, finished_in_window: f64, arrived_in_window: f64, mean_latency: f64) -> Frame {
@@ -357,6 +452,44 @@ mod tests {
             peak_after_drain <= 1,
             "post-drain occupancy exceeded the shrunk limit: {peak_after_drain}"
         );
+    }
+
+    #[test]
+    fn snapshot_restores_an_identical_engine() {
+        let mut src = SimEngine::new(SimEngineConfig {
+            max_num_seqs: 3,
+            max_tokens: 32,
+            step_delay: Duration::ZERO,
+        });
+        src.submit("warm it up", 4);
+        let _ = drain(&mut src);
+        let _ = src.reconfigure(5, 0.8).unwrap();
+        let snap = src.snapshot().unwrap();
+        assert_eq!(snap.engine_kind, "sim");
+        assert_eq!(snap.max_num_seqs, 5);
+
+        // the frame survives the wire
+        let decoded =
+            crate::cluster::snapshot::EngineSnapshot::decode(&snap.encode()).unwrap();
+        let mut restored = SimEngine::from_snapshot(&decoded).unwrap();
+        assert_eq!(restored.capacity(), 5);
+        assert_eq!(restored.cfg.max_tokens, 32);
+
+        // determinism carries over: same prompt, same completion
+        src.submit("does the clone agree?", 6);
+        restored.submit("does the clone agree?", 6);
+        let a = drain(&mut src);
+        let b = drain(&mut restored);
+        assert_eq!(a[0].text, b[0].text);
+        assert_eq!(a[0].tokens, b[0].tokens);
+    }
+
+    #[test]
+    fn restore_refuses_a_foreign_kind() {
+        let snap = crate::cluster::snapshot::EngineSnapshot::new("lm", 4, 0.9, 1, Vec::new());
+        assert!(SimEngine::from_snapshot(&snap).is_err());
+        let mut e = SimEngine::new(SimEngineConfig::default());
+        assert!(e.restore(&snap).is_err());
     }
 
     #[test]

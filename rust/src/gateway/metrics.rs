@@ -170,9 +170,13 @@ pub struct GatewayMetrics {
     /// the denominator of the cost story — what the fleet *spent*, against
     /// which the per-tenant GPU-seconds ledger is apportioned
     replica_micros: AtomicU64,
-    /// AddReplica latency, split by whether a warm standby was promoted
+    /// AddReplica latency, split by how the replica came up: warm-pool
+    /// promotion, cold hot-spawn, or snapshot restore
     promotion_warm: Histo,
     promotion_cold: Histo,
+    promotion_snapshot: Histo,
+    /// legacy (pre-/v1) alias hits by path — the deprecation-sunset meter
+    deprecated: std::sync::Mutex<BTreeMap<String, u64>>,
     /// time admitted jobs spent in replica worker queues
     queue_wait: Histo,
     /// per-lifecycle-phase durations, indexed parallel to
@@ -203,6 +207,8 @@ impl Default for GatewayMetrics {
             replica_micros: AtomicU64::new(0),
             promotion_warm: Histo::new(&PROMOTION_BUCKETS),
             promotion_cold: Histo::new(&PROMOTION_BUCKETS),
+            promotion_snapshot: Histo::new(&PROMOTION_BUCKETS),
+            deprecated: std::sync::Mutex::new(BTreeMap::new()),
             queue_wait: Histo::new(&QUEUE_WAIT_BUCKETS),
             phases: std::array::from_fn(|_| Histo::new(&PHASE_BUCKETS)),
             ttft: Histo::new(&TTFT_BUCKETS),
@@ -320,6 +326,22 @@ impl GatewayMetrics {
         }
     }
 
+    /// Record a replica brought live by restoring an engine snapshot —
+    /// the third `kind` of `enova_gateway_promotion_seconds`, sitting
+    /// between `warm` (no init at all) and `cold` (full init).
+    pub fn observe_promotion_snapshot(&self, secs: f64) {
+        self.promotion_snapshot.observe(secs);
+    }
+
+    fn promotion_histo(&self, kind: &str) -> Option<&Histo> {
+        match kind {
+            "warm" => Some(&self.promotion_warm),
+            "cold" => Some(&self.promotion_cold),
+            "snapshot" => Some(&self.promotion_snapshot),
+            _ => None,
+        }
+    }
+
     /// `(count, mean seconds)` of promotions by kind — test/report helper
     /// mirroring the `enova_gateway_promotion_seconds` histogram.
     pub fn promotion_stats(&self, warm: bool) -> (u64, f64) {
@@ -335,6 +357,36 @@ impl GatewayMetrics {
             0.0
         };
         (count, mean)
+    }
+
+    /// Upper-bound `q`-quantile of the promotion histogram for one `kind`
+    /// (`"warm"`, `"cold"`, `"snapshot"`); 0 for unknown kinds or when no
+    /// promotion of that kind has been observed.
+    pub fn promotion_quantile(&self, kind: &str, q: f64) -> f64 {
+        self.promotion_histo(kind).map(|h| h.quantile(q)).unwrap_or(0.0)
+    }
+
+    /// Observations recorded for one promotion kind.
+    pub fn promotion_count(&self, kind: &str) -> u64 {
+        self.promotion_histo(kind)
+            .map(|h| h.count.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Count one hit on a legacy (pre-/v1) alias path — the meter behind
+    /// the `Deprecation`/`Sunset` headers.
+    pub fn note_deprecated(&self, path: &str) {
+        *self
+            .deprecated
+            .lock()
+            .unwrap()
+            .entry(path.to_string())
+            .or_insert(0) += 1;
+    }
+
+    /// Hits recorded for one legacy alias path.
+    pub fn deprecated_for(&self, path: &str) -> u64 {
+        self.deprecated.lock().unwrap().get(path).copied().unwrap_or(0)
     }
 
     pub fn requests_total(&self) -> u64 {
@@ -559,10 +611,14 @@ pub fn render_prometheus(
 
     out.push_str(
         "# HELP enova_gateway_promotion_seconds Latency of bringing one more replica live, \
-         by promotion kind (warm pool vs cold hot-spawn).\n",
+         by promotion kind (warm pool, cold hot-spawn, or snapshot restore).\n",
     );
     out.push_str("# TYPE enova_gateway_promotion_seconds histogram\n");
-    for (kind, histo) in [("warm", &gw.promotion_warm), ("cold", &gw.promotion_cold)] {
+    for (kind, histo) in [
+        ("warm", &gw.promotion_warm),
+        ("cold", &gw.promotion_cold),
+        ("snapshot", &gw.promotion_snapshot),
+    ] {
         let total = histo.count.load(Ordering::Relaxed);
         for (i, &le) in PROMOTION_BUCKETS.iter().enumerate() {
             let _ = writeln!(
@@ -583,6 +639,20 @@ pub fn render_prometheus(
         let _ = writeln!(
             out,
             "enova_gateway_promotion_seconds_count{{kind=\"{kind}\"}} {total}"
+        );
+    }
+
+    // legacy alias hits (only recorded paths render — zero hits, no series)
+    out.push_str(
+        "# HELP enova_api_deprecated_requests_total Requests served via deprecated pre-/v1 \
+         alias paths (answered with Deprecation/Sunset headers).\n",
+    );
+    out.push_str("# TYPE enova_api_deprecated_requests_total counter\n");
+    for (path, count) in gw.deprecated.lock().unwrap().iter() {
+        let _ = writeln!(
+            out,
+            "enova_api_deprecated_requests_total{{path=\"{}\"}} {count}",
+            escape_label(path)
         );
     }
 
@@ -965,6 +1035,10 @@ mod tests {
         gw.note_reconfigure();
         gw.observe_promotion(true, 0.001);
         gw.observe_promotion(false, 2.0);
+        gw.observe_promotion_snapshot(0.03);
+        gw.note_deprecated("/cluster/status");
+        gw.note_deprecated("/cluster/status");
+        gw.note_deprecated("/debug/traces");
 
         gw.observe_queue_wait(0.002);
         gw.observe_queue_wait(0.3);
@@ -1120,9 +1194,9 @@ mod tests {
         assert_eq!(qw_bucket("0.0025"), 1.0);
         assert_eq!(qw_bucket("0.5"), 2.0);
         assert_eq!(qw_bucket("+Inf"), 2.0);
-        // the promotion histogram carries both kinds, and the warm sample
-        // lands in a strictly lower bucket than the cold one
-        for kind in ["warm", "cold"] {
+        // the promotion histogram carries all three kinds, and the warm
+        // sample lands in a strictly lower bucket than the cold one
+        for kind in ["warm", "cold", "snapshot"] {
             assert!(
                 samples.iter().any(|s| {
                     s.name == "enova_gateway_promotion_seconds_count"
@@ -1146,6 +1220,26 @@ mod tests {
         assert_eq!(bucket("warm", "0.002"), 1.0);
         assert_eq!(bucket("cold", "0.002"), 0.0);
         assert_eq!(bucket("cold", "5"), 1.0);
+        // snapshot restore sits between warm and cold, and the bucketed
+        // quantile helper agrees with the rendered histogram
+        assert_eq!(bucket("snapshot", "0.002"), 0.0);
+        assert_eq!(bucket("snapshot", "0.05"), 1.0);
+        assert_eq!(gw.promotion_quantile("snapshot", 0.95), 0.05);
+        assert_eq!(gw.promotion_count("snapshot"), 1);
+        assert_eq!(gw.promotion_quantile("nope", 0.95), 0.0);
+        // deprecated alias hits render per path with their counts
+        let dep = |path: &str| {
+            samples
+                .iter()
+                .find(|s| s.name == "enova_api_deprecated_requests_total"
+                    && s.labels.get("path").map(String::as_str) == Some(path))
+                .unwrap_or_else(|| panic!("missing deprecated counter for {path}"))
+                .value
+        };
+        assert_eq!(dep("/cluster/status"), 2.0);
+        assert_eq!(dep("/debug/traces"), 1.0);
+        assert_eq!(gw.deprecated_for("/cluster/status"), 2);
+        assert_eq!(gw.deprecated_for("/never-hit"), 0);
         // per-tenant ledger series carry tenant+tier labels and the
         // fleet-wide replica-seconds integral sums the worker windows
         assert!(samples

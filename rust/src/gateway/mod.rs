@@ -87,6 +87,37 @@ const ENGINE_INIT_TIMEOUT: Duration = Duration::from_secs(300);
 /// (until the next scale event re-triggers it).
 const WARM_FILL_MAX_FAILURES: u32 = 5;
 
+/// How long a snapshot capture may wait for the replica worker to answer
+/// its mailbox (the worker services it between engine steps, so this only
+/// trips when the worker is wedged).
+const SNAPSHOT_REPLY_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// The deprecated pre-/v1 alias paths still served (behind
+/// [`GatewayConfig::legacy_api`]) for one release. Every response on these
+/// paths carries `Deprecation`/`Sunset` headers and bumps
+/// `enova_api_deprecated_requests_total{path}`.
+const LEGACY_PATHS: [&str; 6] = [
+    "/admin/scale",
+    "/cluster/status",
+    "/cluster/scale-up",
+    "/cluster/scale-down",
+    "/debug/traces",
+    "/debug/decisions",
+];
+
+/// `Sunset` header value announced on every deprecated alias response —
+/// the date the pre-/v1 paths stop being served.
+pub const LEGACY_SUNSET: &str = "Thu, 31 Dec 2026 00:00:00 GMT";
+
+/// How many capture/restore [`crate::cluster::proto::SnapshotInfo`]
+/// records the gateway keeps for `GET /v1/admin/snapshots`.
+const SNAPSHOT_LEDGER_CAP: usize = 16;
+
+/// Reply channel a snapshot capture parks in a replica's mailbox; the
+/// worker answers with the checkpoint (or why it could not make one).
+type SnapshotReply =
+    Sender<std::result::Result<crate::cluster::snapshot::EngineSnapshot, String>>;
+
 /// How the serving surface accepts and parses connections.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum IngressMode {
@@ -158,6 +189,12 @@ pub struct GatewayConfig {
     /// and can sever SSE streams mid-flight. Mutable at runtime through
     /// `POST /v1/admin/chaos`.
     pub chaos: crate::chaos::ChaosConfig,
+    /// serve the deprecated pre-/v1 alias paths (`/admin/scale`,
+    /// `/cluster/*`, `/debug/*`). Default on for one release; every alias
+    /// hit is counted in `enova_api_deprecated_requests_total` and
+    /// answered with `Deprecation`/`Sunset` headers either way. Off, the
+    /// aliases answer 410 Gone with a structured error.
+    pub legacy_api: bool,
 }
 
 impl Default for GatewayConfig {
@@ -180,6 +217,7 @@ impl Default for GatewayConfig {
             trace: TraceSettings::default(),
             tenants: Vec::new(),
             chaos: crate::chaos::ChaosConfig::default(),
+            legacy_api: true,
         }
     }
 }
@@ -258,6 +296,10 @@ struct ReplicaSlot {
     /// mailbox for a pending live capacity mutation `(max_num_seqs,
     /// gpu_memory)`; the worker applies it between engine steps
     reconfig: Arc<Mutex<Option<(usize, f64)>>>,
+    /// mailbox for a pending snapshot capture: the worker checkpoints its
+    /// engine between steps (a consistent point — no step in flight) and
+    /// answers on the parked channel
+    snapshot_req: Arc<Mutex<Option<SnapshotReply>>>,
     /// engine concurrency as last applied by the worker (gauge + tests)
     applied_max_num_seqs: Arc<AtomicUsize>,
     join: Mutex<Option<JoinHandle<()>>>,
@@ -314,6 +356,9 @@ struct GatewayState {
     /// seeded fault injector; always present (disarmed when no chaos
     /// config was given) so `POST /v1/admin/chaos` can arm at runtime
     chaos: Arc<crate::chaos::ChaosInjector>,
+    /// capture/restore ledger served by `GET /v1/admin/snapshots`
+    /// (bounded; newest last)
+    snapshots: Mutex<Vec<crate::cluster::proto::SnapshotInfo>>,
 }
 
 /// A replica worker mid-launch: the engine is constructed inside the
@@ -418,6 +463,7 @@ impl Gateway {
                 TenantRegistry::new(cfg.tenants.clone())
             },
             chaos: Arc::new(crate::chaos::ChaosInjector::new(cfg.chaos.clone())),
+            snapshots: Mutex::new(Vec::new()),
             cfg,
         });
 
@@ -611,6 +657,29 @@ impl Gateway {
         self.state.metrics.promotion_stats(warm)
     }
 
+    /// Upper-bound `q`-quantile (seconds) of the promotion histogram for
+    /// one kind (`"warm"`, `"cold"`, `"snapshot"`); 0 for an unknown kind
+    /// or no observations.
+    pub fn promotion_quantile(&self, kind: &str, q: f64) -> f64 {
+        self.state.metrics.promotion_quantile(kind, q)
+    }
+
+    /// Observation count of the promotion histogram for one kind.
+    pub fn promotion_count(&self, kind: &str) -> u64 {
+        self.state.metrics.promotion_count(kind)
+    }
+
+    /// Hits recorded against one legacy (pre-`/v1`) alias — the
+    /// programmatic view of `enova_api_deprecated_requests_total{path}`.
+    pub fn deprecated_hits(&self, path: &str) -> u64 {
+        self.state.metrics.deprecated_for(path)
+    }
+
+    /// The bounded capture/restore ledger behind `GET /v1/admin/snapshots`.
+    pub fn snapshot_ledger(&self) -> Vec<crate::cluster::proto::SnapshotInfo> {
+        self.state.snapshots.lock().unwrap().clone()
+    }
+
     /// Post a live capacity mutation to one replica's worker; it is
     /// applied between engine steps without dropping queued or in-flight
     /// work.
@@ -716,11 +785,13 @@ fn launch_replica(state: &Arc<GatewayState>, id: u64, factory: EngineFactory) ->
     let (tx, rx) = mpsc::channel::<Job>();
     let draining = Arc::new(AtomicBool::new(false));
     let reconfig: Arc<Mutex<Option<(usize, f64)>>> = Arc::new(Mutex::new(None));
+    let snapshot_req: Arc<Mutex<Option<SnapshotReply>>> = Arc::new(Mutex::new(None));
     let applied = Arc::new(AtomicUsize::new(0));
     let (init_tx, init_rx) = mpsc::channel::<std::result::Result<(), String>>();
     let thread_state = Arc::clone(state);
     let thread_draining = Arc::clone(&draining);
     let thread_reconfig = Arc::clone(&reconfig);
+    let thread_snapshot = Arc::clone(&snapshot_req);
     let thread_applied = Arc::clone(&applied);
     let join = std::thread::spawn(move || {
         let engine = match factory() {
@@ -747,6 +818,7 @@ fn launch_replica(state: &Arc<GatewayState>, id: u64, factory: EngineFactory) ->
             rx,
             &thread_draining,
             &thread_reconfig,
+            &thread_snapshot,
             &thread_applied,
             &thread_state,
         );
@@ -758,6 +830,7 @@ fn launch_replica(state: &Arc<GatewayState>, id: u64, factory: EngineFactory) ->
             tx: Mutex::new(tx),
             draining,
             reconfig,
+            snapshot_req,
             applied_max_num_seqs: applied,
             join: Mutex::new(Some(join)),
         }),
@@ -948,6 +1021,112 @@ fn hot_add_replica(state: &Arc<GatewayState>) -> Result<u64> {
     let live = state.replicas.read().unwrap().len();
     crate::info!("gateway", "replica {id} hot-added cold ({live} live)");
     Ok(id)
+}
+
+/// Checkpoint one live replica's engine: park a reply channel in its
+/// snapshot mailbox and wait for the worker to answer between steps.
+/// In-flight work is NOT serialized — the migration contract drains it on
+/// the source before retirement — so the snapshot is config + counters,
+/// restorable in milliseconds.
+fn snapshot_replica(
+    state: &Arc<GatewayState>,
+    id: u64,
+) -> std::result::Result<crate::cluster::snapshot::EngineSnapshot, String> {
+    let slot = state
+        .replicas
+        .read()
+        .unwrap()
+        .get(&id)
+        .cloned()
+        .ok_or_else(|| format!("unknown replica id {id}"))?;
+    let (tx, rx) = mpsc::channel();
+    *slot.snapshot_req.lock().unwrap() = Some(tx);
+    match rx.recv_timeout(SNAPSHOT_REPLY_TIMEOUT) {
+        Ok(Ok(snap)) => Ok(snap),
+        Ok(Err(e)) => Err(e),
+        Err(_) => Err(format!(
+            "replica {id} did not answer the snapshot request within {SNAPSHOT_REPLY_TIMEOUT:?}"
+        )),
+    }
+}
+
+/// Spawn a replica *from a snapshot* instead of a cold init — the
+/// restore-beats-cold-spawn path measured under
+/// `enova_gateway_promotion_seconds{kind="snapshot"}`. A `sim` snapshot
+/// rebuilds directly ([`crate::engine::sim::SimEngine::from_snapshot`],
+/// bypassing the spawner and whatever init cost it models); any other
+/// kind builds through the spawner and then fail-closed-restores into the
+/// fresh engine. Returns `(replica_id, promote_seconds)`.
+fn restore_replica_from_snapshot(
+    state: &Arc<GatewayState>,
+    snap: crate::cluster::snapshot::EngineSnapshot,
+) -> Result<(u64, f64)> {
+    let t0 = Instant::now();
+    let id = state.next_replica_id.fetch_add(1, Ordering::Relaxed);
+    let factory: EngineFactory = if snap.engine_kind == "sim" {
+        Box::new(move || {
+            let engine =
+                crate::engine::sim::SimEngine::from_snapshot(&snap).map_err(|e| anyhow!("{e}"))?;
+            Ok(Box::new(engine) as Box<dyn StreamEngine>)
+        })
+    } else {
+        let spawner = state
+            .spawner
+            .as_ref()
+            .ok_or_else(|| {
+                anyhow!(
+                    "cannot restore a {:?} snapshot without an engine spawner",
+                    snap.engine_kind
+                )
+            })?
+            .clone();
+        Box::new(move || {
+            let mut engine = spawner(id)?;
+            engine.restore(&snap)?;
+            Ok(engine)
+        })
+    };
+    let p = launch_replica(state, id, factory);
+    await_replica(&p)?;
+    replay_last_reconfig(state, &p.slot);
+    register_replica(state, id, p.slot, 1.0);
+    let secs = t0.elapsed().as_secs_f64();
+    state.metrics.observe_promotion_snapshot(secs);
+    let live = state.replicas.read().unwrap().len();
+    crate::info!("gateway", "replica {id} restored from snapshot in {secs:.4}s ({live} live)");
+    Ok((id, secs))
+}
+
+/// Describe a snapshot for the typed control API (`info` in the
+/// `/v1/admin/snapshots` exchanges and the gateway's capture ledger).
+fn snapshot_info(
+    snap: &crate::cluster::snapshot::EngineSnapshot,
+    source: &str,
+) -> crate::cluster::proto::SnapshotInfo {
+    crate::cluster::proto::SnapshotInfo {
+        engine_kind: snap.engine_kind.clone(),
+        version: snap.version as usize,
+        max_num_seqs: snap.max_num_seqs,
+        gpu_memory: snap.gpu_memory,
+        fingerprint: format!("{:016x}", snap.fingerprint),
+        payload_bytes: snap.payload.len(),
+        source: source.to_string(),
+        taken_unix: std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0),
+    }
+}
+
+/// Append to the bounded capture/restore ledger behind
+/// `GET /v1/admin/snapshots`.
+fn remember_snapshot(state: &GatewayState, info: crate::cluster::proto::SnapshotInfo) {
+    let mut ledger = state.snapshots.lock().unwrap();
+    ledger.push(info);
+    let excess = ledger.len().saturating_sub(SNAPSHOT_LEDGER_CAP);
+    if excess > 0 {
+        ledger.drain(..excess);
+    }
 }
 
 /// Post a live capacity mutation to every live replica's worker mailbox
@@ -1184,6 +1363,7 @@ fn replica_loop(
     rx: Receiver<Job>,
     draining: &AtomicBool,
     reconfig: &Mutex<Option<(usize, f64)>>,
+    snapshot_req: &Mutex<Option<SnapshotReply>>,
     applied: &AtomicUsize,
     state: &GatewayState,
 ) {
@@ -1213,6 +1393,13 @@ fn replica_loop(
                 }
                 Err(e) => crate::error!("gateway", "replica {id} reconfigure failed: {e}"),
             }
+        }
+
+        // answer a pending snapshot capture between steps: the engine is
+        // at a consistent point (no step in flight), so the checkpoint is
+        // exactly what a restored twin will resume from
+        if let Some(reply) = snapshot_req.lock().unwrap().take() {
+            let _ = reply.send(engine.snapshot().map_err(|e| e.to_string()));
         }
 
         if state.stop.load(Ordering::Acquire) {
@@ -1540,6 +1727,14 @@ fn route(
         ("POST", "/v1/admin/scale-up") => cluster_scale_up(req, stream, state, t0, true),
         ("POST", "/v1/admin/scale-down") => cluster_scale_down(req, stream, state, t0, true),
         ("GET" | "POST", "/v1/admin/chaos") => admin_chaos(req, stream, state, t0),
+        ("GET" | "POST", "/v1/admin/snapshots") => admin_snapshots(req, stream, state, t0),
+        // migration is coordinated by the cluster control plane; a node
+        // (or standalone gateway) answers the typed refusal instead of a
+        // bare 404 so clients learn where to ask
+        ("POST", "/v1/admin/migrate") => migrate_unsupported(req, stream, state, t0, "/v1/admin/migrate"),
+        ("GET", "/v1/admin/migrations") => {
+            migrate_unsupported(req, stream, state, t0, "/v1/admin/migrations")
+        }
         // versioned observability API: the typed envelope wraps the same
         // recorder export the legacy aliases below still serve bare
         ("GET", "/v1/debug/traces") => {
@@ -1560,22 +1755,47 @@ fn route(
             let body = resp.to_json().to_string_compact();
             finish(req, stream, state, "/v1/debug/decisions", t0, http::Response::json(200, body))
         }
-        ("POST", "/admin/scale") => admin_scale(req, stream, state, t0, false),
-        ("GET", "/debug/traces") => {
-            let body = state.tracer.export_json().to_string_compact();
-            finish(req, stream, state, "/debug/traces", t0, http::Response::json(200, body))
-        }
+        ("POST", "/admin/scale") => match legacy_gate(req, stream, state, t0, "/admin/scale") {
+            Some(done) => done,
+            None => admin_scale(req, stream, state, t0, false),
+        },
+        ("GET", "/debug/traces") => match legacy_gate(req, stream, state, t0, "/debug/traces") {
+            Some(done) => done,
+            None => {
+                let body = state.tracer.export_json().to_string_compact();
+                finish(req, stream, state, "/debug/traces", t0, http::Response::json(200, body))
+            }
+        },
         ("GET", "/debug/decisions") => {
-            let body = state.decisions.export_json().to_string_compact();
-            finish(req, stream, state, "/debug/decisions", t0, http::Response::json(200, body))
+            match legacy_gate(req, stream, state, t0, "/debug/decisions") {
+                Some(done) => done,
+                None => {
+                    let body = state.decisions.export_json().to_string_compact();
+                    finish(req, stream, state, "/debug/decisions", t0, http::Response::json(200, body))
+                }
+            }
         }
-        ("GET", "/cluster/status") => cluster_status(req, stream, state, t0, false),
-        ("POST", "/cluster/scale-up") => cluster_scale_up(req, stream, state, t0, false),
-        ("POST", "/cluster/scale-down") => cluster_scale_down(req, stream, state, t0, false),
+        ("GET", "/cluster/status") => match legacy_gate(req, stream, state, t0, "/cluster/status") {
+            Some(done) => done,
+            None => cluster_status(req, stream, state, t0, false),
+        },
+        ("POST", "/cluster/scale-up") => {
+            match legacy_gate(req, stream, state, t0, "/cluster/scale-up") {
+                Some(done) => done,
+                None => cluster_scale_up(req, stream, state, t0, false),
+            }
+        }
+        ("POST", "/cluster/scale-down") => {
+            match legacy_gate(req, stream, state, t0, "/cluster/scale-down") {
+                Some(done) => done,
+                None => cluster_scale_down(req, stream, state, t0, false),
+            }
+        }
         (_, "/v1/completions" | "/v1/chat/completions" | "/admin/scale" | "/metrics" | "/healthz"
         | "/ready" | "/debug/traces" | "/debug/decisions" | "/cluster/status"
         | "/cluster/scale-up" | "/cluster/scale-down" | "/v1/admin/scale" | "/v1/admin/status"
         | "/v1/admin/scale-up" | "/v1/admin/scale-down" | "/v1/admin/chaos"
+        | "/v1/admin/snapshots" | "/v1/admin/migrate" | "/v1/admin/migrations"
         | "/v1/debug/traces" | "/v1/debug/decisions") => {
             let body = openai::to_wire(&openai::error_body(
                 "invalid_request_error",
@@ -1593,7 +1813,9 @@ fn route(
     }
 }
 
-/// Write the response and record request metrics.
+/// Write the response and record request metrics. Responses on a
+/// deprecated alias path pick up the `Deprecation`/`Sunset` headers here,
+/// so every legacy answer carries them no matter which handler built it.
 fn finish(
     req: &http::Request,
     stream: &mut TcpStream,
@@ -1602,10 +1824,48 @@ fn finish(
     t0: Instant,
     resp: http::Response,
 ) -> std::io::Result<()> {
+    let resp = if LEGACY_PATHS.contains(&endpoint) {
+        resp.with_header("Deprecation", "true").with_header("Sunset", LEGACY_SUNSET)
+    } else {
+        resp
+    };
     state
         .metrics
         .observe(endpoint, resp.status, t0.elapsed().as_secs_f64());
     resp.write_to(stream, req.keep_alive())
+}
+
+/// Deprecation machinery for the pre-/v1 alias paths: every hit bumps
+/// `enova_api_deprecated_requests_total{path}`; with the legacy surface
+/// disabled (`--legacy-api off`) the alias is answered `410 Gone` with a
+/// structured error pointing at the `/v1` replacement. `None` means the
+/// caller should serve the alias as before (headers are attached in
+/// [`finish`]).
+fn legacy_gate(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &Arc<GatewayState>,
+    t0: Instant,
+    path: &'static str,
+) -> Option<std::io::Result<()>> {
+    state.metrics.note_deprecated(path);
+    if state.cfg.legacy_api {
+        return None;
+    }
+    let err = crate::cluster::proto::AdminError::new(
+        "deprecated",
+        &format!("{path} was sunset; use the /v1 control API"),
+    )
+    .with_detail("path", path)
+    .with_detail("sunset", LEGACY_SUNSET);
+    Some(finish(
+        req,
+        stream,
+        state,
+        path,
+        t0,
+        http::Response::json(410, err.to_json().to_string_compact()),
+    ))
 }
 
 fn serve_completion(
@@ -2231,6 +2491,192 @@ fn admin_chaos(
     };
     let body = resp.to_json().to_string_compact();
     finish(req, stream, state, endpoint, t0, http::Response::json(200, body))
+}
+
+/// `GET`/`POST /v1/admin/snapshots` — the node-side snapshot surface.
+/// `GET` lists the bounded capture/restore ledger. `POST {"action":
+/// "capture"}` checkpoints a live replica (between engine steps) and
+/// returns the hex-encoded frame; `POST {"action": "restore",
+/// "snapshot_hex": ...}` spawns a replica from a frame and reports the
+/// promotion latency that beats a cold spawn. Restore failures are
+/// fail-closed structured errors (`bad_snapshot`) — the caller falls back
+/// to a cold spawn, never serves a half-restored engine.
+fn admin_snapshots(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &Arc<GatewayState>,
+    t0: Instant,
+) -> std::io::Result<()> {
+    use crate::cluster::proto::{
+        AdminError, SnapshotAction, SnapshotListResponse, SnapshotRequest, SnapshotResponse,
+    };
+    use crate::cluster::snapshot::{from_hex, to_hex, EngineSnapshot};
+    let endpoint = "/v1/admin/snapshots";
+    if req.method == "GET" {
+        let resp = SnapshotListResponse {
+            service: state.service.clone(),
+            snapshots: state.snapshots.lock().unwrap().clone(),
+        };
+        let body = resp.to_json().to_string_compact();
+        return finish(req, stream, state, endpoint, t0, http::Response::json(200, body));
+    }
+    let body = match req.body_str() {
+        Ok(b) => b,
+        Err(e) => {
+            let err = AdminError::new("invalid_request", &e.message);
+            return finish(req, stream, state, endpoint, t0, admin_error_response(true, 400, err));
+        }
+    };
+    let json = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => {
+            let err = AdminError::new("invalid_request", &format!("invalid JSON: {e}"));
+            return finish(req, stream, state, endpoint, t0, admin_error_response(true, 400, err));
+        }
+    };
+    let sreq = match SnapshotRequest::from_json(&json) {
+        Ok(r) => r,
+        Err(e) => return finish(req, stream, state, endpoint, t0, admin_error_response(true, 400, e)),
+    };
+    match sreq.action {
+        SnapshotAction::Capture => {
+            // default to the lowest live replica: deterministic, and on a
+            // draining source it is the replica that has been up longest
+            let id = match sreq.replica_id {
+                Some(id) => id,
+                None => match state.replicas.read().unwrap().keys().next().copied() {
+                    Some(id) => id,
+                    None => {
+                        let err = AdminError::new("no_replicas", "no live replica to checkpoint");
+                        return finish(
+                            req, stream, state, endpoint, t0,
+                            admin_error_response(true, 409, err),
+                        );
+                    }
+                },
+            };
+            match snapshot_replica(state, id) {
+                Ok(snap) => {
+                    let info = snapshot_info(&snap, &format!("replica-{id}"));
+                    remember_snapshot(state, info.clone());
+                    state.decisions.record(
+                        &state.service,
+                        "snapshot",
+                        "capture",
+                        vec![
+                            ("replica_id", id.to_string()),
+                            ("engine_kind", snap.engine_kind.clone()),
+                            ("payload_bytes", snap.payload.len().to_string()),
+                        ],
+                    );
+                    let resp = SnapshotResponse {
+                        service: state.service.clone(),
+                        action: SnapshotAction::Capture,
+                        info,
+                        replica_id: id,
+                        snapshot_hex: Some(to_hex(&snap.encode())),
+                        promote_seconds: None,
+                    };
+                    let body = resp.to_json().to_string_compact();
+                    finish(req, stream, state, endpoint, t0, http::Response::json(200, body))
+                }
+                Err(e) => {
+                    let err = AdminError::new("snapshot_failed", &e)
+                        .with_detail("replica_id", &id.to_string());
+                    let status = if e.starts_with("unknown replica") { 404 } else { 500 };
+                    finish(req, stream, state, endpoint, t0, admin_error_response(true, status, err))
+                }
+            }
+        }
+        SnapshotAction::Restore => {
+            // presence validated by SnapshotRequest::from_json
+            let hex = sreq.snapshot_hex.as_deref().unwrap_or_default();
+            let snap = match from_hex(hex).and_then(|bytes| EngineSnapshot::decode(&bytes)) {
+                Ok(s) => s,
+                Err(e) => {
+                    return finish(
+                        req, stream, state, endpoint, t0,
+                        admin_error_response(true, 400, e.to_admin_error()),
+                    )
+                }
+            };
+            // a node honors its advertised capacity on the restore path
+            // exactly like on scale-up, so coordinator inventory and node
+            // truth cannot drift through migrations
+            if let Some(identity) = state.cfg.node.clone() {
+                let live = state.replicas.read().unwrap().len();
+                let warm = state.warm.lock().unwrap().len();
+                let free =
+                    identity.gpu_memory_total - (live + warm) as f64 * identity.replica_gpu_memory;
+                if live >= identity.max_replicas || free < identity.replica_gpu_memory || free <= 0.0
+                {
+                    let err = AdminError::new(
+                        "node_full",
+                        &format!(
+                            "node {} has no room to restore: {live} live + {warm} warm replicas, \
+                             {free:.2} gpu_memory free",
+                            identity.node_id
+                        ),
+                    )
+                    .with_detail("node_id", &identity.node_id);
+                    return finish(
+                        req, stream, state, endpoint, t0,
+                        admin_error_response(true, 409, err),
+                    );
+                }
+            }
+            let info = snapshot_info(&snap, &format!("restore:{}", snap.engine_kind));
+            match restore_replica_from_snapshot(state, snap) {
+                Ok((id, secs)) => {
+                    remember_snapshot(state, info.clone());
+                    state.decisions.record(
+                        &state.service,
+                        "snapshot",
+                        "restore",
+                        vec![
+                            ("replica_id", id.to_string()),
+                            ("engine_kind", info.engine_kind.clone()),
+                            ("promote_seconds", format!("{secs:.6}")),
+                        ],
+                    );
+                    let resp = SnapshotResponse {
+                        service: state.service.clone(),
+                        action: SnapshotAction::Restore,
+                        info,
+                        replica_id: id,
+                        snapshot_hex: None,
+                        promote_seconds: Some(secs),
+                    };
+                    let body = resp.to_json().to_string_compact();
+                    finish(req, stream, state, endpoint, t0, http::Response::json(200, body))
+                }
+                Err(e) => {
+                    let err = AdminError::new("bad_snapshot", &format!("restore failed: {e}"));
+                    finish(req, stream, state, endpoint, t0, admin_error_response(true, 400, err))
+                }
+            }
+        }
+    }
+}
+
+/// `POST /v1/admin/migrate` / `GET /v1/admin/migrations` on a node or
+/// standalone gateway: migration is the coordinator's lifecycle, so this
+/// surface answers the typed `unsupported` refusal (with the role in the
+/// details) instead of a bare 404 — clients learn where to ask.
+fn migrate_unsupported(
+    req: &http::Request,
+    stream: &mut TcpStream,
+    state: &Arc<GatewayState>,
+    t0: Instant,
+    endpoint: &'static str,
+) -> std::io::Result<()> {
+    let role = if state.cfg.node.is_some() { "node" } else { "gateway" };
+    let err = crate::cluster::proto::AdminError::new(
+        "unsupported",
+        "live migration is driven by the cluster coordinator; call its /v1/admin/migrate",
+    )
+    .with_detail("role", role);
+    finish(req, stream, state, endpoint, t0, admin_error_response(true, 400, err))
 }
 
 /// `POST /v1/admin/scale-up` (alias `POST /cluster/scale-up`) — a

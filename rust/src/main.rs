@@ -34,6 +34,11 @@ COMMANDS:
               [--chaos-seed N --chaos-error-rate F --chaos-latency-rate F
               --chaos-latency-ms F --chaos-latency-sigma F --chaos-sse-abort-rate F
               --chaos-degrade-period-s F --chaos-degrade-duty F --chaos-degrade-factor F]
+              --legacy-api on|off keeps (default) or sunsets the pre-/v1 alias
+              routes; sunset aliases answer 410 with a structured error, and
+              every alias hit is counted in enova_api_deprecated_requests_total
+              --sim-spawn-delay-ms N adds an artificial engine-init delay to
+              sim-engine cold spawns (makes snapshot restores measurably faster)
               distributed plane: --cluster turns this process into the cluster
               coordinator (ingress + heartbeats + cross-node placement; no local
               engines): [--heartbeat-ms N --node-timeout-beats N
@@ -41,7 +46,10 @@ COMMANDS:
               flags above, now scoped cluster-wide, and per-node circuit
               breakers [--breaker-window N (0 disables) --breaker-min-samples N
               --breaker-error-threshold F --breaker-latency-ms N
-              --breaker-cooldown-ms N --breaker-probes N]
+              --breaker-cooldown-ms N --breaker-probes N]; snapshot/migration
+              lifecycle (/v1/admin/{snapshots,migrate,migrations}):
+              [--snapshot-interval-ms N (0 disables the periodic capture sweep)
+              --defrag (idle-time live-migration defragmentation)]
   node        one serving node of the distributed plane: the gateway plus the
               /cluster/* control surface, registering with a coordinator
               (--coordinator HOST:PORT --node-id NAME --gpu-memory F
@@ -76,6 +84,7 @@ fn main() -> anyhow::Result<()> {
         "forecast",
         "cluster",
         "trough-scale-down",
+        "defrag",
         "no-cluster-bench",
         "no-saturation-bench",
         "log-json",
@@ -242,6 +251,7 @@ fn spawner_from_args(
     let max_tokens = args.get_usize("max-tokens", 64);
     let temperature = args.get_f64("temperature", 0.7);
     let sim_delay = Duration::from_millis(args.get_usize("sim-delay-ms", 0) as u64);
+    let spawn_delay = Duration::from_millis(args.get_usize("sim-spawn-delay-ms", 0) as u64);
 
     let engine_kind = match args.get_or("engine", "auto") {
         "auto" => auto_engine_kind(),
@@ -261,6 +271,12 @@ fn spawner_from_args(
         lm_spawner(max_num_seqs, max_tokens, temperature)
     } else {
         Arc::new(move |_id| {
+            // an artificial engine-init cost for the sim engine, so cold
+            // spawns are measurably slower than snapshot restores (which
+            // rebuild from the frame and never pay this)
+            if !spawn_delay.is_zero() {
+                std::thread::sleep(spawn_delay);
+            }
             Ok(Box::new(SimEngine::new(SimEngineConfig {
                 max_num_seqs,
                 max_tokens,
@@ -269,6 +285,18 @@ fn spawner_from_args(
         })
     };
     Ok((spawner, engine_kind))
+}
+
+/// `--legacy-api on|off` (default on): whether the pre-`/v1` alias routes
+/// still answer. Off turns them into 410 structured errors; either way
+/// every alias hit is counted and answered with `Deprecation`/`Sunset`
+/// headers.
+fn legacy_api_from_args(args: &Args) -> anyhow::Result<bool> {
+    match args.get_or("legacy-api", "on") {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        other => anyhow::bail!("--legacy-api must be on or off (got {other:?})"),
+    }
 }
 
 /// The request-tracing knobs (`--trace-sample F --trace-slo-ms N`) shared
@@ -418,6 +446,7 @@ fn serve_http(args: &Args, tenants: &[enova::gateway::admission::TenantSpec]) ->
         trace: trace_settings_from_args(args),
         tenants: tenants.to_vec(),
         chaos: chaos_from_args(args),
+        legacy_api: legacy_api_from_args(args)?,
         ..GatewayConfig::default()
     };
     if cfg.chaos.armed() {
@@ -491,11 +520,17 @@ fn serve_cluster(args: &Args, tenants: &[enova::gateway::admission::TenantSpec])
             ),
             detector_scaling: autoscale,
             forecast: forecast_policy,
+            defrag: args.flag("defrag"),
+            ..ClusterPolicy::default()
         },
         ingress: ingress_from_args(args)?,
         trace: trace_settings_from_args(args),
         tenants: tenants.to_vec(),
         breaker: breaker_from_args(args),
+        legacy_api: legacy_api_from_args(args)?,
+        snapshot_interval: Duration::from_millis(
+            args.get_usize("snapshot-interval-ms", 3000) as u64
+        ),
         ..CoordinatorConfig::default()
     };
     let coordinator = Coordinator::start(cfg)?;
@@ -553,6 +588,7 @@ fn node_cmd(args: &Args, tenants: &[enova::gateway::admission::TenantSpec]) -> a
             trace: trace_settings_from_args(args),
             tenants: tenants.to_vec(),
             chaos: chaos_from_args(args),
+            legacy_api: legacy_api_from_args(args)?,
             ..GatewayConfig::default()
         },
         identity,

@@ -1,0 +1,477 @@
+//! End-to-end tests of replica snapshot/restore and live migration: a
+//! coordinator and in-process nodes over real sockets. A live migration
+//! under steady load drops nothing and lands the capacity on the target;
+//! a snapshot restore is measurably faster than a cold spawn in the same
+//! run; a dead node is backfilled from its last periodic snapshot; and
+//! the whole lifecycle speaks the typed `/v1` control API while the
+//! pre-v1 aliases answer with deprecation headers and counters.
+
+use enova::cluster::coordinator::{ClusterPolicy, Coordinator, CoordinatorConfig};
+use enova::cluster::node::{NodeConfig, NodeServer};
+use enova::cluster::NodeIdentity;
+use enova::engine::sim::{SimEngine, SimEngineConfig};
+use enova::engine::StreamEngine;
+use enova::gateway::loadgen::{self, run_scenario, LoadgenReport, ScenarioConfig, ScenarioKind};
+use enova::gateway::metrics::parse_exposition;
+use enova::gateway::{EngineSpawner, GatewayConfig};
+use enova::util::json::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn sim_spawner() -> EngineSpawner {
+    Arc::new(|_id| {
+        Ok(Box::new(SimEngine::new(SimEngineConfig {
+            max_num_seqs: 4,
+            max_tokens: 64,
+            step_delay: Duration::from_millis(2),
+        })) as Box<dyn StreamEngine>)
+    })
+}
+
+/// A spawner with an artificial engine-init cost, so cold spawns are
+/// measurably slower than snapshot restores (which skip the spawner on
+/// the sim path entirely).
+fn slow_spawner(init: Duration) -> EngineSpawner {
+    Arc::new(move |_id| {
+        std::thread::sleep(init);
+        Ok(Box::new(SimEngine::new(SimEngineConfig {
+            max_num_seqs: 4,
+            max_tokens: 64,
+            step_delay: Duration::from_millis(2),
+        })) as Box<dyn StreamEngine>)
+    })
+}
+
+fn node_config(id: &str, coordinator: &str, initial_replicas: usize) -> NodeConfig {
+    NodeConfig {
+        gateway: GatewayConfig {
+            max_pending: 1024,
+            max_tokens_default: 8,
+            monitor_interval: Duration::from_millis(25),
+            ..GatewayConfig::default()
+        },
+        identity: NodeIdentity {
+            node_id: id.to_string(),
+            gpu_memory_total: 24.0,
+            replica_gpu_memory: 8.0,
+            max_replicas: 3,
+            replica_capacity_rps: 0.0,
+        },
+        initial_replicas,
+        coordinator: Some(coordinator.to_string()),
+        announce_interval: Duration::from_millis(100),
+        advertise_addr: None,
+    }
+}
+
+fn quiet_policy() -> ClusterPolicy {
+    ClusterPolicy {
+        sample_interval: Duration::from_millis(50),
+        detector_scaling: false,
+        forecast: None,
+        cooldown: Duration::from_secs(30),
+        min_replicas: 1,
+        max_replicas: 6,
+        ..ClusterPolicy::default()
+    }
+}
+
+fn non_2xx(report: &LoadgenReport) -> usize {
+    report
+        .status_counts
+        .iter()
+        .filter(|&(&code, _)| !(200..300).contains(&code))
+        .map(|(_, &n)| n)
+        .sum()
+}
+
+/// The headline: a live migration under steady load. The operator posts
+/// `/v1/admin/migrate` mid-run; the replica's capacity moves from the
+/// loaded node to the emptier one through snapshot → restore → retire,
+/// the loadgen report stays clean (zero transport errors, zero non-2xx —
+/// nothing dropped), and the cluster serves from the target afterwards.
+#[test]
+fn live_migration_under_load_drops_nothing() {
+    let coordinator = Coordinator::start(CoordinatorConfig {
+        heartbeat_interval: Duration::from_millis(50),
+        node_timeout_beats: 4,
+        max_pending: 2048,
+        // periodic snapshots off: this test exercises the operator API's
+        // own capture, not the sweep
+        snapshot_interval: Duration::ZERO,
+        policy: quiet_policy(),
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let addr = coordinator.addr_string();
+
+    // node-a carries 2 replicas (so its gateway can retire one after the
+    // restore), node-b has room — the placement pick for the target
+    let node_a = NodeServer::start(node_config("node-a", &addr, 2), sim_spawner()).unwrap();
+    let node_b = NodeServer::start(node_config("node-b", &addr, 1), sim_spawner()).unwrap();
+    assert!(coordinator.wait_for_nodes(2, Duration::from_secs(10)));
+    assert!(coordinator.wait_for_replicas(3, Duration::from_secs(10)));
+
+    // steady traffic through the whole migration
+    let scn = ScenarioConfig {
+        kind: ScenarioKind::Steady,
+        duration: Duration::from_secs(6),
+        base_rps: 6.0,
+        peak_rps: 6.0,
+        seed: 17,
+        workers: 32,
+        max_tokens: 4,
+        ..ScenarioConfig::default()
+    };
+    let loadgen_addr = addr.clone();
+    let driver = std::thread::spawn(move || run_scenario(&loadgen_addr, &scn));
+
+    std::thread::sleep(Duration::from_millis(1500));
+    let resp = loadgen::post_json(&addr, "/v1/admin/migrate", "{\"source_node\":\"node-a\"}")
+        .unwrap();
+    assert_eq!(resp.status, 200, "migration landed: {}", resp.body_str());
+    let j = resp.json().unwrap();
+    assert_eq!(j.get("phase").and_then(Json::as_str), Some("done"));
+    assert_eq!(j.get("source_node").and_then(Json::as_str), Some("node-a"));
+    assert_eq!(
+        j.get("target_node").and_then(Json::as_str),
+        Some("node-b"),
+        "the placement policy picked the emptier node"
+    );
+    assert!(j.get("new_replica_id").and_then(Json::as_usize).is_some());
+    let timing = |key: &str| j.at(&["timings", key]).and_then(Json::as_f64).unwrap_or(-1.0);
+    assert!(timing("snapshot_seconds") > 0.0, "snapshot phase was timed");
+    assert!(timing("restore_seconds") > 0.0, "restore phase was timed");
+    assert!(timing("retire_seconds") > 0.0, "retire phase was timed");
+    assert!(timing("total_seconds") >= timing("restore_seconds"));
+
+    let report = driver.join().unwrap();
+    assert_eq!(
+        report.errors, 0,
+        "zero transport errors through the migration: {}",
+        report.summary()
+    );
+    assert_eq!(
+        non_2xx(&report),
+        0,
+        "zero non-2xx through the migration: {:?}",
+        report.status_counts
+    );
+
+    // the capacity really moved: node-b grew to 2, node-a drained to 1
+    assert!(node_b.gateway().live_replicas().len() >= 2, "target grew");
+    assert_eq!(node_a.gateway().live_replicas().len(), 1, "source drained");
+    assert!(coordinator.replicas_on("node-b") >= 2, "{:?}", coordinator.nodes());
+
+    // ...and the cluster still serves (from the target among others)
+    let ok = loadgen::post_json(&addr, "/v1/completions", "{\"prompt\":\"after\",\"max_tokens\":2}")
+        .unwrap();
+    assert_eq!(ok.status, 200, "serving after the route flip: {}", ok.body_str());
+
+    // the lifecycle is on the record: the typed list view and the flight
+    // recorder both carry the migration
+    let list = loadgen::get(&addr, "/v1/admin/migrations").unwrap();
+    assert_eq!(list.status, 200);
+    let migrations = list.json().unwrap();
+    let rows = migrations.get("migrations").and_then(Json::as_arr).unwrap().clone();
+    assert!(
+        rows.iter().any(|m| m.get("phase").and_then(Json::as_str) == Some("done")
+            && m.get("reason").and_then(Json::as_str) == Some("migration")),
+        "migration record retained: {}",
+        migrations.to_string_compact()
+    );
+    assert!(
+        coordinator
+            .decisions()
+            .iter()
+            .any(|d| d.kind == "migration" && d.reason == "migration"),
+        "flight recorder saw the migration"
+    );
+
+    coordinator.shutdown();
+    node_a.shutdown();
+    node_b.shutdown();
+}
+
+/// Snapshot restore beats cold spawn in the same run: with an artificial
+/// 120ms engine-init cost, a cold `/v1/admin/scale-up` pays it while a
+/// restore from a captured frame does not — visible in the
+/// `enova_gateway_promotion_seconds{kind}` histogram on the same scrape.
+#[test]
+fn snapshot_restore_beats_cold_spawn() {
+    let node = NodeServer::start(
+        NodeConfig {
+            identity: NodeIdentity {
+                node_id: "solo".into(),
+                gpu_memory_total: 32.0,
+                replica_gpu_memory: 8.0,
+                max_replicas: 4,
+                replica_capacity_rps: 0.0,
+            },
+            initial_replicas: 1,
+            coordinator: None,
+            ..NodeConfig::default()
+        },
+        slow_spawner(Duration::from_millis(120)),
+    )
+    .unwrap();
+    let addr = node.addr_string();
+
+    // cold spawn: pays the 120ms engine init
+    let up = loadgen::post_json(&addr, "/v1/admin/scale-up", "{}").unwrap();
+    assert_eq!(up.status, 200, "{}", up.body_str());
+    assert_eq!(node.gateway().promotion_count("cold"), 1);
+
+    // capture a frame from a live replica...
+    let cap = loadgen::post_json(&addr, "/v1/admin/snapshots", "{\"action\":\"capture\"}")
+        .unwrap();
+    assert_eq!(cap.status, 200, "{}", cap.body_str());
+    let cap_json = cap.json().unwrap();
+    let hex = cap_json
+        .get("snapshot_hex")
+        .and_then(Json::as_str)
+        .expect("capture returns the encoded frame")
+        .to_string();
+    assert_eq!(cap_json.at(&["info", "engine_kind"]).and_then(Json::as_str), Some("sim"));
+
+    // ...and restore it: a new replica without the engine-init cost
+    let body = format!("{{\"action\":\"restore\",\"snapshot_hex\":\"{hex}\"}}");
+    let restore = loadgen::post_json(&addr, "/v1/admin/snapshots", &body).unwrap();
+    assert_eq!(restore.status, 200, "{}", restore.body_str());
+    let restore_json = restore.json().unwrap();
+    let promote = restore_json
+        .get("promote_seconds")
+        .and_then(Json::as_f64)
+        .expect("restore reports its promotion latency");
+    assert!(promote < 0.120, "restore skipped the init cost: {promote}s");
+    assert_eq!(node.gateway().live_replicas().len(), 3);
+
+    // same-run comparison on the histogram: snapshot p95 under cold p50
+    let snap_p95 = node.gateway().promotion_quantile("snapshot", 0.95);
+    let cold_p50 = node.gateway().promotion_quantile("cold", 0.50);
+    assert_eq!(node.gateway().promotion_count("snapshot"), 1);
+    assert!(
+        snap_p95 < cold_p50,
+        "snapshot promotion (p95 {snap_p95}s) beats cold spawn (p50 {cold_p50}s)"
+    );
+
+    // the new kind is on the scrape next to warm and cold
+    let scrape = loadgen::get(&addr, "/metrics").unwrap();
+    let samples = parse_exposition(&scrape.body_str()).expect("valid exposition");
+    assert!(
+        samples.iter().any(|s| {
+            s.name == "enova_gateway_promotion_seconds_count"
+                && s.labels.get("kind").map(String::as_str) == Some("snapshot")
+                && s.value == 1.0
+        }),
+        "promotion_seconds{{kind=snapshot}} exported"
+    );
+
+    // the capture/restore ledger retained both acts
+    let ledger = node.gateway().snapshot_ledger();
+    assert!(ledger.len() >= 2, "capture + restore remembered: {ledger:?}");
+
+    node.shutdown();
+}
+
+/// Dead-node backfill from the last periodic snapshot: the coordinator's
+/// capture sweep keeps a warm frame per node, so when a node dies its
+/// capacity is restored on the survivor through the snapshot path —
+/// recorded as a `migration` with reason `backfill` in the flight
+/// recorder and the migrations history.
+#[test]
+fn dead_node_backfill_uses_the_snapshot_path() {
+    let coordinator = Coordinator::start(CoordinatorConfig {
+        heartbeat_interval: Duration::from_millis(50),
+        node_timeout_beats: 2,
+        max_pending: 2048,
+        dispatch_attempts: 4,
+        // fast periodic sweep: a frame is stored within the first ticks
+        snapshot_interval: Duration::from_millis(200),
+        policy: quiet_policy(),
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let addr = coordinator.addr_string();
+
+    let node_a = NodeServer::start(node_config("node-a", &addr, 1), sim_spawner()).unwrap();
+    let node_b = NodeServer::start(node_config("node-b", &addr, 1), sim_spawner()).unwrap();
+    assert!(coordinator.wait_for_nodes(2, Duration::from_secs(10)));
+    assert!(coordinator.wait_for_replicas(2, Duration::from_secs(10)));
+
+    // wait until the sweep has stored at least one frame
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while coordinator.snapshotted_nodes().is_empty() && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(
+        !coordinator.snapshotted_nodes().is_empty(),
+        "the periodic sweep captured a frame"
+    );
+
+    // the stored frames are visible on the typed list API
+    let list = loadgen::get(&addr, "/v1/admin/snapshots").unwrap();
+    assert_eq!(list.status, 200);
+    assert!(
+        !list.json().unwrap().get("snapshots").and_then(Json::as_arr).unwrap().is_empty(),
+        "{}",
+        list.body_str()
+    );
+
+    node_b.shutdown();
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while coordinator.healthy_nodes() != 1 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(coordinator.healthy_nodes(), 1, "node-b declared dead");
+    assert!(
+        coordinator.wait_for_replicas(2, Duration::from_secs(10)),
+        "backfill restored 2 replicas: {:?}",
+        coordinator.nodes()
+    );
+
+    // the backfill went through the snapshot path, not a cold spawn: the
+    // placement decision says mode=snapshot and the migration view records
+    // reason=backfill
+    assert!(coordinator.placements_for("backfill") >= 1, "backfill counter moved");
+    let decisions = coordinator.decisions();
+    let placement = decisions
+        .iter()
+        .find(|d| d.kind == "placement" && d.reason == "backfill")
+        .expect("a backfill placement decision exists");
+    assert!(
+        placement.attrs.iter().any(|(k, v)| *k == "mode" && v == "snapshot"),
+        "backfill restored from a frame: {placement:?}"
+    );
+    assert!(
+        decisions.iter().any(|d| d.kind == "migration" && d.reason == "backfill"),
+        "the flight recorder carries the migration view of the backfill"
+    );
+    assert!(
+        coordinator.migrations().iter().any(|m| m.reason == "backfill"),
+        "the migrations history carries the backfill: {:?}",
+        coordinator.migrations()
+    );
+    // the survivor observed a snapshot-kind promotion
+    assert!(
+        node_a.gateway().promotion_count("snapshot") >= 1,
+        "the restore landed on the survivor's snapshot histogram"
+    );
+
+    coordinator.shutdown();
+    node_a.shutdown();
+}
+
+/// The control surface is typed end to end: structured requests and
+/// `{code, message, details}` errors on `/v1`, `unsupported` where a role
+/// cannot answer, and the pre-v1 aliases counted + marked with
+/// `Deprecation`/`Sunset` headers — 410 Gone once `--legacy-api off`.
+#[test]
+fn typed_api_structured_errors_and_deprecated_aliases() {
+    let node = NodeServer::start(
+        NodeConfig {
+            identity: NodeIdentity {
+                node_id: "solo".into(),
+                gpu_memory_total: 16.0,
+                replica_gpu_memory: 8.0,
+                max_replicas: 2,
+                replica_capacity_rps: 0.0,
+            },
+            initial_replicas: 1,
+            coordinator: None,
+            ..NodeConfig::default()
+        },
+        sim_spawner(),
+    )
+    .unwrap();
+    let addr = node.addr_string();
+    let code_of = |resp: &loadgen::HttpResponse| {
+        resp.json().unwrap().get("code").and_then(Json::as_str).map(str::to_string)
+    };
+
+    // the typed list view, empty at boot
+    let list = loadgen::get(&addr, "/v1/admin/snapshots").unwrap();
+    assert_eq!(list.status, 200);
+    let j = list.json().unwrap();
+    assert!(j.get("snapshots").and_then(Json::as_arr).unwrap().is_empty());
+
+    // structured validation errors: unknown action, missing frame, bad frame
+    let bad = loadgen::post_json(&addr, "/v1/admin/snapshots", "{\"action\":\"clone\"}").unwrap();
+    assert_eq!(bad.status, 400);
+    assert_eq!(code_of(&bad).as_deref(), Some("invalid_request"));
+    let no_frame =
+        loadgen::post_json(&addr, "/v1/admin/snapshots", "{\"action\":\"restore\"}").unwrap();
+    assert_eq!(no_frame.status, 400);
+    assert_eq!(code_of(&no_frame).as_deref(), Some("invalid_request"));
+    let bad_frame = loadgen::post_json(
+        &addr,
+        "/v1/admin/snapshots",
+        "{\"action\":\"restore\",\"snapshot_hex\":\"zz\"}",
+    )
+    .unwrap();
+    assert_eq!(bad_frame.status, 400);
+    assert_eq!(code_of(&bad_frame).as_deref(), Some("bad_snapshot"));
+
+    // migration is the coordinator's lifecycle: a node answers the typed
+    // refusal, naming its role
+    let migrate =
+        loadgen::post_json(&addr, "/v1/admin/migrate", "{\"source_node\":\"x\"}").unwrap();
+    assert_eq!(migrate.status, 400);
+    let mj = migrate.json().unwrap();
+    assert_eq!(mj.get("code").and_then(Json::as_str), Some("unsupported"));
+    assert_eq!(mj.at(&["details", "role"]).and_then(Json::as_str), Some("node"));
+
+    // a deprecated alias still answers, but marked and counted
+    let legacy = loadgen::get(&addr, "/cluster/status").unwrap();
+    assert_eq!(legacy.status, 200);
+    assert_eq!(legacy.headers.get("deprecation").map(String::as_str), Some("true"));
+    assert!(legacy.headers.contains_key("sunset"), "{:?}", legacy.headers);
+    assert!(node.gateway().deprecated_hits("/cluster/status") >= 1);
+    let scrape = loadgen::get(&addr, "/metrics").unwrap();
+    let samples = parse_exposition(&scrape.body_str()).expect("valid exposition");
+    assert!(
+        samples.iter().any(|s| {
+            s.name == "enova_api_deprecated_requests_total"
+                && s.labels.get("path").map(String::as_str) == Some("/cluster/status")
+                && s.value >= 1.0
+        }),
+        "deprecated alias hits are exported"
+    );
+    // the /v1 twin is untouched by the deprecation machinery
+    let v1 = loadgen::get(&addr, "/v1/admin/status").unwrap();
+    assert_eq!(v1.status, 200);
+    assert!(!v1.headers.contains_key("deprecation"));
+    node.shutdown();
+
+    // --legacy-api off: the alias is gone (410, structured error, still
+    // marked) while the /v1 surface keeps serving
+    let strict = NodeServer::start(
+        NodeConfig {
+            gateway: GatewayConfig {
+                legacy_api: false,
+                ..GatewayConfig::default()
+            },
+            identity: NodeIdentity {
+                node_id: "strict".into(),
+                gpu_memory_total: 16.0,
+                replica_gpu_memory: 8.0,
+                max_replicas: 2,
+                replica_capacity_rps: 0.0,
+            },
+            initial_replicas: 1,
+            coordinator: None,
+            ..NodeConfig::default()
+        },
+        sim_spawner(),
+    )
+    .unwrap();
+    let addr = strict.addr_string();
+    let gone = loadgen::get(&addr, "/cluster/status").unwrap();
+    assert_eq!(gone.status, 410, "{}", gone.body_str());
+    assert_eq!(code_of(&gone).as_deref(), Some("deprecated"));
+    assert_eq!(gone.headers.get("deprecation").map(String::as_str), Some("true"));
+    assert!(strict.gateway().deprecated_hits("/cluster/status") >= 1);
+    let v1 = loadgen::get(&addr, "/v1/admin/status").unwrap();
+    assert_eq!(v1.status, 200, "the versioned surface outlives the sunset");
+    strict.shutdown();
+}

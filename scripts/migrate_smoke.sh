@@ -1,0 +1,143 @@
+#!/usr/bin/env bash
+# CI migration smoke: snapshot/restore + live migration on one runner.
+#
+#   1. boot a coordinator (fast periodic snapshot sweep) + two sim-engine
+#      nodes, with --sim-spawn-delay-ms making cold engine init expensive
+#      so the snapshot path has something real to beat;
+#   2. run steady `--strict` load through the coordinator and, mid-run,
+#      drive one live migration node-a -> node-b over POST
+#      /v1/admin/migrate — the typed record must come back phase=done,
+#      and --strict fails the job on ANY non-2xx during the move;
+#   3. assert the route flip is on the flight recorder
+#      (/v1/debug/decisions carries a kind=migration entry) and the
+#      target's scrape exports promotion_seconds{kind="snapshot"};
+#   4. kill the drained source node; the coordinator backfills from its
+#      last periodic snapshot, and the backfill's restore_seconds must
+#      beat the cold-spawn init floor.
+#
+# Cleanup runs through scripts/smoke_common.sh (one EXIT trap kills and
+# reaps everything). Expects the release binary to be built already.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+# shellcheck source=scripts/smoke_common.sh
+source scripts/smoke_common.sh
+
+BIN=rust/target/release/enova
+PORT="${MIGRATE_PORT:-18600}"
+NODE_A_PORT="${MIGRATE_NODE_A_PORT:-18601}"
+NODE_B_PORT="${MIGRATE_NODE_B_PORT:-18602}"
+REPORT="${MIGRATE_REPORT:-loadgen-migrate-report.json}"
+SCRAPE="${MIGRATE_SCRAPE:-migrate-scrape.txt}"
+# artificial sim engine-init cost (ms): what a cold spawn pays and a
+# snapshot restore skips
+SPAWN_DELAY_MS=150
+
+if [[ ! -x "$BIN" ]]; then
+    echo "release binary missing at $BIN; build it first" >&2
+    exit 2
+fi
+
+start_bg "$BIN" serve-http --cluster --port "$PORT" \
+    --heartbeat-ms 100 --node-timeout-beats 3 --dispatch-attempts 4 \
+    --scale-interval-ms 200 --cooldown-ms 30000 --max-replicas 6 \
+    --snapshot-interval-ms 300 --max-pending 2048
+
+# node-a starts with 2 replicas so its gateway can retire one after the
+# restore lands on node-b
+start_bg "$BIN" node --engine sim --port "$NODE_A_PORT" \
+    --coordinator "127.0.0.1:$PORT" --node-id node-a --replicas 2 \
+    --sim-spawn-delay-ms "$SPAWN_DELAY_MS" \
+    --gpu-memory 24 --replica-gpu-memory 8 --max-pending 1024 --announce-ms 200
+NODE_A_PID=$SMOKE_LAST_PID
+
+start_bg "$BIN" node --engine sim --port "$NODE_B_PORT" \
+    --coordinator "127.0.0.1:$PORT" --node-id node-b --replicas 1 \
+    --sim-spawn-delay-ms "$SPAWN_DELAY_MS" \
+    --gpu-memory 24 --replica-gpu-memory 8 --max-pending 1024 --announce-ms 200
+
+wait_http_ok "http://127.0.0.1:$PORT/ready"
+REPLICAS=0
+for _ in $(seq 1 100); do
+    REPLICAS=$(curl -fsS "http://127.0.0.1:$PORT/metrics" \
+        | sed -n 's/^enova_cluster_replicas \(.*\)$/\1/p')
+    [[ "$REPLICAS" == "3" ]] && break
+    sleep 0.1
+done
+if [[ "$REPLICAS" != "3" ]]; then
+    echo "cluster never reached 3 observed replicas (saw ${REPLICAS:-none})" >&2
+    exit 1
+fi
+
+# steady strict load through the whole migration: any dropped or non-2xx
+# request fails the job at the `wait` below
+start_bg "$BIN" loadgen --addr "127.0.0.1:$PORT" --scenario steady \
+    --duration-s 8 --base-rps 6 --peak-rps 6 --seed 17 --workers 16 \
+    --max-tokens 4 --strict --report "$REPORT"
+LOADGEN_PID=$SMOKE_LAST_PID
+
+sleep 2
+echo "==> live migration node-a -> node-b under load"
+MIGRATION=$(mktemp)
+curl -sS -X POST --data '{"source_node": "node-a"}' \
+    "http://127.0.0.1:$PORT/v1/admin/migrate" > "$MIGRATION"
+python3 - "$MIGRATION" <<'PY'
+import json, sys
+
+m = json.load(open(sys.argv[1]))
+assert m["phase"] == "done", m
+assert m["source_node"] == "node-a" and m["target_node"] == "node-b", m
+assert m.get("new_replica_id") is not None, m
+t = m["timings"]
+assert t["snapshot_seconds"] > 0 and t["restore_seconds"] > 0 and t["retire_seconds"] > 0, t
+print(f"migration {m['id']} done: snapshot {t['snapshot_seconds']*1e3:.1f}ms, "
+      f"restore {t['restore_seconds']*1e3:.1f}ms, total {t['total_seconds']:.2f}s")
+PY
+rm -f "$MIGRATION"
+
+wait "$LOADGEN_PID"
+
+echo "==> route flip on the flight recorder, snapshot promotion on the scrape"
+curl -fsS "http://127.0.0.1:$PORT/v1/debug/decisions" \
+    | python3 -c "
+import json, sys
+e = json.load(sys.stdin)
+assert e['api_version'] == 'v1', e.keys()
+ds = e['data']['decisions']
+moves = [d for d in ds if d['kind'] == 'migration' and d['reason'] == 'migration']
+assert moves, f'no migration decision recorded: {[d[\"kind\"] for d in ds]}'
+assert moves[-1]['attrs']['source'] == 'node-a' and moves[-1]['attrs']['target'] == 'node-b', moves[-1]
+print('/v1/debug/decisions carries the migration route flip')
+"
+curl -fsS "http://127.0.0.1:$NODE_B_PORT/metrics" > "$SCRAPE"
+grep -Eq 'enova_gateway_promotion_seconds_count\{kind="snapshot"\} [1-9]' "$SCRAPE"
+echo "node-b exports promotion_seconds{kind=snapshot}"
+
+echo "==> killing the drained source (pid $NODE_A_PID); backfill restores from its snapshot"
+kill "$NODE_A_PID" 2>/dev/null || true
+BACKFILL=""
+for _ in $(seq 1 100); do
+    BACKFILL=$(curl -fsS "http://127.0.0.1:$PORT/v1/admin/migrations" \
+        | python3 -c "
+import json, sys
+ms = json.load(sys.stdin)['migrations']
+hits = [m for m in ms if m['reason'] == 'backfill' and m['phase'] == 'done']
+print(hits[-1]['timings']['restore_seconds'] if hits else '')
+" 2>/dev/null) || BACKFILL=""
+    [[ -n "$BACKFILL" ]] && break
+    sleep 0.2
+done
+if [[ -z "$BACKFILL" ]]; then
+    echo "coordinator never recorded a snapshot backfill" >&2
+    curl -fsS "http://127.0.0.1:$PORT/v1/admin/migrations" >&2 || true
+    exit 1
+fi
+# the whole point: restoring from the frame skips the cold engine-init
+python3 -c "
+restore = float('$BACKFILL')
+floor = $SPAWN_DELAY_MS / 1e3
+assert restore < floor, f'backfill restore {restore:.3f}s did not beat the {floor:.3f}s cold init'
+print(f'snapshot backfill restored in {restore*1e3:.1f}ms (cold init floor {floor*1e3:.0f}ms)')
+"
+
+echo "migrate smoke OK; report at $REPORT, node-b scrape at $SCRAPE"
